@@ -1,0 +1,29 @@
+//! Domain example 4: the §4 BTC characterization microbenchmarks
+//! (Figs 2-13) on both simulated Turing GPUs.
+//!
+//!   cargo run --release --example characterize
+//!
+//! Shows the three §4 findings:
+//!   * ldm=128 and the 128+256k family are the fast strides (Figs 2-5);
+//!   * stores show no stride pattern (Figs 6-9);
+//!   * bmma_sync pipelines at 4 cycles/op, 10 with a shared accumulator
+//!     (Figs 10-13) — and what WLP that implies for saturation.
+
+use tcbnn::figures;
+use tcbnn::sim::{config::all_gpus, tensorcore};
+
+fn main() {
+    for gpu in all_gpus() {
+        println!("{}", figures::fig_load_latency(gpu).render());
+        println!("{}", figures::fig_store_latency(gpu).render());
+        println!("{}", figures::fig_bmma_pipeline(gpu).render());
+        println!(
+            "{}: warps to saturate BMMA pipeline: {:.1} (different acc), \
+             {:.1} (same acc) of {} warp slots/SM\n",
+            gpu.name,
+            tensorcore::warps_to_saturate(gpu, false),
+            tensorcore::warps_to_saturate(gpu, true),
+            gpu.max_warps_per_sm
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! Quickstart: the library's core objects in ~60 lines.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. pack a +/-1 matrix into bits, 2. convert to the FSB format,
+//! 3. run the FSB BMM (Design-3) and check it against the float result,
+//! 4. ask the Turing timing model what each design would cost.
+
+use tcbnn::bitops::{BitMatrix, FsbMatrix, Layout};
+use tcbnn::kernels::bmm::{self, btc, BmmProblem, BmmScheme};
+use tcbnn::kernels::IoMode;
+use tcbnn::sim::{Engine, RTX2080TI};
+use tcbnn::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // ---- 1. binarize + pack (Eq 1) -------------------------------------
+    let (m, n, k) = (64, 256, 512);
+    let a = BitMatrix::random(m, k, Layout::RowMajor, &mut rng);
+    let b = BitMatrix::random(k, n, Layout::ColMajor, &mut rng);
+    println!(
+        "packed A ({m}x{k}) into {} bytes — 32x smaller than f32",
+        a.storage_bytes()
+    );
+
+    // ---- 2. FSB format (§5.1) ------------------------------------------
+    let fsb = FsbMatrix::from_bitmatrix(&a);
+    println!(
+        "FSB image: {}x{} tiles of 128x8 bits, fixed ldm=128",
+        fsb.tiles_y, fsb.tiles_x
+    );
+
+    // ---- 3. bit matrix multiplication (Eq 2) ---------------------------
+    let d3 = btc::Design3;
+    let c = d3.compute(&a, &b);
+    let want = bmm::naive_ref(&a, &b);
+    assert_eq!(c, want, "Design-3 must be bit-exact");
+    println!("BMM ok: C[0][0..4] = {:?}", &c[..4]);
+
+    // ---- 4. what would this cost on a Turing GPU? ----------------------
+    let engine = Engine::new(&RTX2080TI);
+    let p = BmmProblem { m: 4096, n: 4096, k: 4096 };
+    println!("\nsimulated 4096^3 BMM on {} (BNN-specific):", engine.gpu.name);
+    for scheme in bmm::all_schemes() {
+        if !scheme.supports(p, IoMode::BnnSpecific) {
+            continue;
+        }
+        let tops = bmm::simulate_tops(&engine, scheme.as_ref(), p, IoMode::BnnSpecific);
+        println!("  {:<10} {:>8.1} TOPS", scheme.name(), tops);
+    }
+    println!("\n(quickstart done — see examples/serve_mnist.rs for the full stack)");
+}

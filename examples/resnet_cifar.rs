@@ -1,0 +1,77 @@
+//! Domain example 2: a binarized conv net on Cifar-scale data, run both
+//! FUNCTIONALLY (real bit arithmetic through the rust kernels) and
+//! through the Turing cost model (per-layer breakdown, all schemes).
+//!
+//!   cargo run --release --example resnet_cifar
+
+use tcbnn::nn::forward::{forward, random_weights};
+use tcbnn::nn::layer::{Dims, LayerSpec};
+use tcbnn::nn::model::cifar_resnet14;
+use tcbnn::nn::{model_cost, ModelDef, ResidualMode, Scheme};
+use tcbnn::sim::RTX2080TI;
+use tcbnn::util::table::Table;
+use tcbnn::util::Rng;
+
+fn main() {
+    // ---- functional pass: a reduced cifar net executes real bits ------
+    let lite = ModelDef {
+        name: "cifar-lite",
+        dataset: "synthetic cifar",
+        input: Dims { hw: 16, feat: 3 },
+        classes: 10,
+        layers: vec![
+            LayerSpec::FirstConv { c: 3, o: 64, k: 3, stride: 1, pad: 1 },
+            LayerSpec::BinConv {
+                c: 64, o: 128, k: 3, stride: 1, pad: 1, pool: true, residual: false,
+            },
+            LayerSpec::BinConv {
+                c: 128, o: 128, k: 3, stride: 1, pad: 1, pool: true, residual: false,
+            },
+            LayerSpec::BinFc { d_in: 4 * 4 * 128, d_out: 256 },
+            LayerSpec::FinalFc { d_in: 256, d_out: 10 },
+        ],
+        residual_blocks: 0,
+    };
+    let mut rng = Rng::new(2024);
+    let weights = random_weights(&lite, &mut rng);
+    let batch = 8;
+    let x: Vec<f32> = (0..batch * 16 * 16 * 3).map(|_| rng.next_f32()).collect();
+    let t0 = std::time::Instant::now();
+    let logits = forward(&lite, &weights, &x, batch);
+    println!(
+        "functional bit-forward of {} ({} layers) on batch {batch}: {:.1} ms",
+        lite.name,
+        lite.layers.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    println!("logits[img0] = {:?}\n", &logits[..10].iter().map(|v| format!("{v:.2}")).collect::<Vec<_>>());
+
+    // ---- cost model: the real Cifar10-ResNet14 across all schemes -----
+    let m = cifar_resnet14();
+    let mut t = Table::new(
+        "Cifar10-ResNet14, 8-image latency on RTX2080Ti (simulated)",
+        &["scheme", "latency_ms", "throughput_fps(b=1024)"],
+    );
+    for s in Scheme::all() {
+        let lat = model_cost(&m, 8, &RTX2080TI, s, ResidualMode::Full, true);
+        let tp = model_cost(&m, 1024, &RTX2080TI, s, ResidualMode::Full, true);
+        t.row(&[
+            s.name().to_string(),
+            format!("{:.3}", lat.total_secs * 1e3),
+            format!("{:.0}", tp.throughput_fps()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- per-layer breakdown (Fig 24 view) ------------------------------
+    let c = model_cost(&m, 8, &RTX2080TI, Scheme::BtcFmt, ResidualMode::Full, true);
+    let mut bt = Table::new("per-layer breakdown (BTC-FMT)", &["layer", "us", "share%"]);
+    for l in &c.layers {
+        bt.row(&[
+            l.tag.clone(),
+            format!("{:.1}", l.secs * 1e6),
+            format!("{:.1}", l.secs / c.total_secs * 100.0),
+        ]);
+    }
+    println!("{}", bt.render());
+}

@@ -1,0 +1,96 @@
+//! END-TO-END DRIVER (the required full-stack validation).
+//!
+//!   make artifacts && cargo run --release --example serve_mnist
+//!
+//! Exercises all three layers on a real small workload:
+//!   L1  Pallas XOR/POPC bit kernels  (inside the AOT HLO)
+//!   L2  the JAX BNN-MLP graph, trained with STE on synthetic MNIST
+//!   L3  this rust coordinator: router -> dynamic batcher -> PJRT worker
+//!
+//! Loads the trained MLP artifacts, starts the inference server, fires
+//! batched requests from several client threads, and reports latency
+//! percentiles, throughput and classification accuracy vs the labels
+//! (plus bit-exactness vs the python oracle logits).
+
+use std::time::{Duration, Instant};
+
+use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
+use tcbnn::runtime::{Blob, MlpModel};
+
+fn main() -> anyhow::Result<()> {
+    let dir = tcbnn::artifact_dir();
+    if !std::path::Path::new(&format!("{dir}/manifest.txt")).exists() {
+        anyhow::bail!("artifacts not built — run `make artifacts` first");
+    }
+
+    // ---- load the test set + python oracle -----------------------------
+    let test = Blob::load(&format!("{dir}/testset"))?;
+    let images = test.as_f32("images")?;
+    let labels = test.as_i32("labels")?;
+    let oracle = Blob::load(&format!("{dir}/oracle_logits"))?.as_f32("logits")?;
+    let n_images = labels.len();
+    println!("loaded {} test images + python oracle logits", n_images);
+
+    // ---- verify bit-exactness against the python oracle ----------------
+    let mut model = MlpModel::load(&dir)?;
+    let direct = model.infer(&images[..8 * 800], 8)?;
+    let max_err = direct
+        .iter()
+        .zip(&oracle)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("rust-vs-python oracle max |delta| = {max_err:.2e}  (8x10 logits)");
+    assert!(max_err < 1e-3, "three-layer contract broken");
+    drop(model);
+
+    // ---- start the serving stack ---------------------------------------
+    let dir2 = dir.clone();
+    let srv = InferenceServer::start(
+        ServerConfig { max_wait: Duration::from_millis(1), queue_capacity: 16384 },
+        move || Ok(Box::new(MlpModel::load(&dir2)?) as Box<dyn BatchModel>),
+    );
+
+    // ---- fire requests from 4 client threads ---------------------------
+    let requests_per_client = 1024usize;
+    let t0 = Instant::now();
+    let correct: usize = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let srv = &srv;
+                let images = &images;
+                let labels = &labels;
+                s.spawn(move || {
+                    let mut correct = 0usize;
+                    let rxs: Vec<_> = (0..requests_per_client)
+                        .map(|i| {
+                            let j = (t * 7919 + i) % n_images;
+                            (j, srv.submit(images[j * 800..(j + 1) * 800].to_vec()))
+                        })
+                        .collect();
+                    for (j, rx) in rxs {
+                        let r = rx.recv().expect("server alive");
+                        if r.argmax as i32 == labels[j] {
+                            correct += 1;
+                        }
+                    }
+                    correct
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let total = 4 * requests_per_client;
+
+    // ---- report ----------------------------------------------------------
+    println!("\n=== serve_mnist end-to-end report ===");
+    println!("requests      : {total}");
+    println!("wall time     : {:.1} ms", wall * 1e3);
+    println!("accuracy      : {:.2}%", correct as f64 / total as f64 * 100.0);
+    println!("{}", srv.metrics.report());
+    let s = srv.metrics.latency_summary();
+    assert!(correct as f64 / total as f64 > 0.75, "accuracy degraded");
+    assert!(s.p50 > 0.0);
+    println!("\nall checks passed — the three-layer stack is live");
+    Ok(())
+}

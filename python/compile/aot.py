@@ -1,0 +1,122 @@
+"""AOT compiler: lower the L2 graphs to HLO *text* artifacts + manifest.
+
+Run once at build time (`make artifacts`); the rust runtime then loads the
+text with `HloModuleProto::from_text_file` and never touches python again.
+
+HLO text — NOT `lowered.compile()` / proto `.serialize()` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the published
+`xla` 0.1.6 crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced:
+    mlp_b{8,32,128}.hlo.txt     full MLP inference graph per batch bucket
+    bmm_{n}.hlo.txt             standalone packed BMM (runtime microbench)
+    conv_block.hlo.txt          fused bconv_bin + OR-pool block
+    manifest.txt                artifact -> args/outs spec for the runtime
+    mlp_weights.bin/.meta &c.   from train.py (trained on first build)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+
+MLP_BATCHES = (8, 32, 128)
+BMM_SIZES = (1024,)
+CONV_SPEC = dict(h=16, w=16, n=8, c=128, o=128, k=3)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_str(s) -> str:
+    tag = {"float32": "f32", "uint32": "u32", "int32": "i32"}[str(s.dtype)]
+    return f"{tag} {'x'.join(str(d) for d in s.shape)}"
+
+
+def lower_artifact(name, fn, specs, out_dir, manifest, static=None):
+    """Lower fn(*specs) to HLO text and append a manifest entry."""
+    path = f"{name}.hlo.txt"
+    lowered = jax.jit(fn, static_argnums=static or ()).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    out_specs = jax.eval_shape(fn, *specs)
+    if not isinstance(out_specs, (list, tuple)):
+        out_specs = [out_specs]
+    manifest.append(f"artifact {name} {path}")
+    for i, s in enumerate(specs):
+        manifest.append(f"arg a{i} {spec_str(s)}")
+    for s in out_specs:
+        manifest.append(f"out {spec_str(s)}")
+    manifest.append("end")
+    print(f"  lowered {name}: {len(text)} chars")
+
+
+def build(out_dir, quick=False, skip_train=False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    # --- train the MLP (or reuse existing weights) --------------------------
+    wpath = os.path.join(out_dir, "mlp_weights.bin")
+    if skip_train and os.path.exists(wpath):
+        print("  reusing existing mlp_weights.bin")
+    else:
+        print("  training MLP BNN (synthetic MNIST, STE)...")
+        T.train(out_dir, epochs=2 if quick else 6)
+
+    # --- full MLP graphs per batch bucket -----------------------------------
+    for b in MLP_BATCHES:
+        lower_artifact(
+            f"mlp_b{b}", M.mlp_forward, M.mlp_arg_specs(b), out_dir, manifest
+        )
+
+    # --- standalone packed BMM ----------------------------------------------
+    for n in BMM_SIZES:
+        fn = lambda a, b, _n=n: M.bmm_forward(a, b, _n)
+        lower_artifact(
+            f"bmm_{n}", fn, M.bmm_arg_specs(n, n, n), out_dir, manifest
+        )
+
+    # --- fused conv block ----------------------------------------------------
+    cs = CONV_SPEC
+    fn = lambda i, f, t, fl: M.conv_block_forward(i, f, t, fl, cs["c"])
+    lower_artifact(
+        "conv_block",
+        fn,
+        M.conv_block_arg_specs(cs["h"], cs["w"], cs["n"], cs["c"], cs["o"], cs["k"]),
+        out_dir,
+        manifest,
+    )
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"  wrote manifest ({len(manifest)} lines)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="fast dev build")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="reuse mlp_weights.bin if present")
+    args = ap.parse_args()
+    build(args.out, quick=args.quick, skip_train=args.skip_train)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Pallas bit-convolution (BConv) kernels — Layer 1.
+
+Implements the paper's §5.3 scheme: with the input in HWNC and the filter
+in KKCO layout, the contribution of one filter tap (r,s) at one output
+point (p,q) is a bit matrix product (N, C) x (C, O) — Eq 3 — evaluated as
+XOR+POPC (Eq 2).  Zero padding is handled exactly like Listing 6: taps
+falling outside the frame are *excluded* (never read) and counted, and the
++/-1 amendment  out = C*(KK - exclude) - 2*acc  is applied at the end,
+which resolves the "padded 0 is indistinguishable from -1" problem that
+breaks im2col for BNNs.
+
+Grid = output pixels; each grid step computes the full (N, O) tile for one
+(p, q).  The whole packed input and filter are kept VMEM-resident: fine for
+the interpret-mode correctness path used here (a real-TPU build would block
+H/W with halos — see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bconv_kernel(inp_ref, fil_ref, o_ref, *, c, kh, kw, stride, pad, h, w):
+    p = pl.program_id(0)
+    q = pl.program_id(1)
+    n = inp_ref.shape[2]
+    o = fil_ref.shape[2]
+    acc = jnp.zeros((n, o), jnp.int32)
+    exclude = jnp.zeros((), jnp.int32)
+    for r in range(kh):
+        for s in range(kw):
+            i = p * stride - pad + r
+            j = q * stride - pad + s
+            valid = (i >= 0) & (i < h) & (j >= 0) & (j < w)
+            ic = jnp.clip(i, 0, h - 1)
+            jc = jnp.clip(j, 0, w - 1)
+            a = pl.load(inp_ref, (ic, jc, slice(None), slice(None)))
+            b = pl.load(fil_ref, (r, s, slice(None), slice(None)))
+            x = jnp.bitwise_xor(a[:, None, :], b[None, :, :])
+            pc = jnp.sum(jnp.bitwise_count(x).astype(jnp.int32), axis=-1)
+            acc = acc + jnp.where(valid, pc, 0)
+            exclude = exclude + jnp.where(valid, 0, 1).astype(jnp.int32)
+    n_valid = jnp.int32(c) * (jnp.int32(kh * kw) - exclude)
+    o_ref[0, 0] = n_valid - 2 * acc
+
+
+def bconv(inp_pk, fil_pk, c: int, stride: int = 1, pad: int = 1):
+    """Packed BConv with exclude amendment.
+
+    inp_pk: (H, W, N, C/32) uint32 (HWNC, packed along C)
+    fil_pk: (K, K, O, C/32) uint32 (KKCO, packed along C, O-major)
+    Returns (Ho, Wo, N, O) int32 — the +/-1 cross-correlation with
+    zero padding treated as excluded taps.
+    """
+    h, w, n, cp = inp_pk.shape
+    kh, kw, o, cp2 = fil_pk.shape
+    assert cp == cp2 and cp * 32 == c
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    return pl.pallas_call(
+        functools.partial(
+            _bconv_kernel, c=c, kh=kh, kw=kw, stride=stride, pad=pad, h=h, w=w
+        ),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, n, o), jnp.int32),
+        grid=(ho, wo),
+        in_specs=[
+            pl.BlockSpec((h, w, n, cp), lambda p, q: (0, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, o, cp), lambda p, q: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, n, o), lambda p, q: (p, q, 0, 0)),
+        interpret=True,
+    )(inp_pk, fil_pk)
+
+
+def _bconv_bin_kernel(
+    inp_ref, fil_ref, t_ref, f_ref, o_ref, *, c, kh, kw, stride, pad, h, w
+):
+    p = pl.program_id(0)
+    q = pl.program_id(1)
+    n = inp_ref.shape[2]
+    o = fil_ref.shape[2]
+    acc = jnp.zeros((n, o), jnp.int32)
+    exclude = jnp.zeros((), jnp.int32)
+    for r in range(kh):
+        for s in range(kw):
+            i = p * stride - pad + r
+            j = q * stride - pad + s
+            valid = (i >= 0) & (i < h) & (j >= 0) & (j < w)
+            ic = jnp.clip(i, 0, h - 1)
+            jc = jnp.clip(j, 0, w - 1)
+            a = pl.load(inp_ref, (ic, jc, slice(None), slice(None)))
+            b = pl.load(fil_ref, (r, s, slice(None), slice(None)))
+            x = jnp.bitwise_xor(a[:, None, :], b[None, :, :])
+            pc = jnp.sum(jnp.bitwise_count(x).astype(jnp.int32), axis=-1)
+            acc = acc + jnp.where(valid, pc, 0)
+            exclude = exclude + jnp.where(valid, 0, 1).astype(jnp.int32)
+    n_valid = jnp.int32(c) * (jnp.int32(kh * kw) - exclude)
+    y = (n_valid - 2 * acc).astype(jnp.float32)  # (N, O)
+    ge = y >= t_ref[...][None, :]
+    bit = jnp.where(f_ref[...][None, :] != 0, ~ge, ge)
+    wds = bit.astype(jnp.uint32).reshape(n, o // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    o_ref[0, 0] = jnp.sum(wds << shifts, axis=-1).astype(jnp.uint32)
+
+
+def bconv_bin(inp_pk, fil_pk, c: int, thresh, flip, stride: int = 1, pad: int = 1):
+    """Fused BConv -> thrd -> re-pack (packed in, packed out).
+
+    thresh/flip: (O,) per-output-channel threshold parameters.
+    Returns (Ho, Wo, N, O/32) uint32 — directly consumable as the next
+    binarized layer's HWNC input.
+    """
+    h, w, n, cp = inp_pk.shape
+    kh, kw, o, cp2 = fil_pk.shape
+    assert cp == cp2 and cp * 32 == c and o % 32 == 0
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    return pl.pallas_call(
+        functools.partial(
+            _bconv_bin_kernel, c=c, kh=kh, kw=kw, stride=stride, pad=pad, h=h, w=w
+        ),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, n, o // 32), jnp.uint32),
+        grid=(ho, wo),
+        in_specs=[
+            pl.BlockSpec((h, w, n, cp), lambda p, q: (0, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, o, cp), lambda p, q: (0, 0, 0, 0)),
+            pl.BlockSpec((o,), lambda p, q: (0,)),
+            pl.BlockSpec((o,), lambda p, q: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, n, o // 32), lambda p, q: (p, q, 0, 0)),
+        interpret=True,
+    )(inp_pk, fil_pk, thresh, flip)
+
+
+def maxpool2_or(x_pk):
+    """2x2 stride-2 max pool over packed +/-1 bits == OR of 4 words (§6.1)."""
+    h, w = x_pk.shape[0], x_pk.shape[1]
+    return (
+        x_pk[0:h:2, 0:w:2]
+        | x_pk[1:h:2, 0:w:2]
+        | x_pk[0:h:2, 1:w:2]
+        | x_pk[1:h:2, 1:w:2]
+    )

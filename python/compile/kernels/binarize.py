@@ -1,0 +1,52 @@
+"""Pallas binarize/pack kernel — the sign+pack front of every binarized layer.
+
+The paper performs input binarization with warp-wide ``__ballot`` (§5.2);
+on the Pallas side the ballot is a vectorized compare + shift-reduce over a
+(rows, 32) VMEM block.  Fusing compare and pack keeps the +/-1 intermediate
+out of HBM, which is the entire point of the 32x bandwidth claim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# rows per grid step; the minor axis is always a whole packed word group.
+TR = 8
+
+
+def _binarize_tile_kernel(x_ref, t_ref, o_ref):
+    """(TR, n) float vs per-column threshold -> (TR, n/32) uint32."""
+    x = x_ref[...]
+    ge = (x >= t_ref[...][None, :]).astype(jnp.uint32)
+    w = ge.reshape(x.shape[0], x.shape[1] // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    o_ref[...] = jnp.sum(w << shifts, axis=-1).astype(jnp.uint32)
+
+
+def binarize_pack(x, thresh=None):
+    """sign(x - thresh) packed along the last axis, LSB-first.
+
+    x: (M, N) float32 with N % 32 == 0, M % TR == 0.
+    thresh: optional (N,) float32 (defaults to 0 — plain Eq 1 sign).
+    Returns (M, N/32) uint32.
+    """
+    m, n = x.shape
+    assert n % 32 == 0 and m % TR == 0, (m, n)
+    if thresh is None:
+        thresh = jnp.zeros((n,), jnp.float32)
+    grid = (m // TR,)
+    return pl.pallas_call(
+        _binarize_tile_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n // 32), jnp.uint32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TR, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TR, n // 32), lambda i: (i, 0)),
+        interpret=True,
+    )(x, thresh)

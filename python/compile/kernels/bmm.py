@@ -1,0 +1,113 @@
+"""Pallas bit-matrix-multiplication (BMM) kernels — Layer 1.
+
+TPU re-think of the paper's BTC BMM (DESIGN.md §Hardware-Adaptation):
+
+* operands are bit-packed uint32 exactly like the Turing BMMA operands
+  (row-major packed A, column-major packed B == packed rows of B^T);
+* the XOR+POPC dot product of Eq 2 runs on the vector unit
+  (``jnp.bitwise_count``), not the MXU — bit compute is ALU work;
+* the BlockSpec fixes the VMEM tile of A/B to a constant minor-dim
+  stride regardless of the logical matrix width: the Pallas analogue of
+  the FSB format's fixed ``ldm = 128``;
+* ``bmm_bin`` fuses the downstream threshold + re-pack (the paper's
+  Design-3 ``__ballot`` fusion) so the activation never materializes in
+  int32 form in HBM.
+
+All kernels use ``interpret=True``: the CPU PJRT runtime cannot execute
+Mosaic custom-calls, and correctness on this rig is validated through the
+interpret path (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. TM mirrors the BMMA row tile (8); TN is one packed output
+# word-group (128 = 4 u32 words) so the fused binarized variant can re-pack
+# in registers, exactly like the warp-wide __ballot of Listing 5.
+TM = 8
+TN = 128
+
+
+def _bmm_tile_kernel(a_ref, b_ref, o_ref, *, k: int):
+    """One (TM, TN) output tile: Eq 2 over packed uint32 operands."""
+    a = a_ref[...]  # (TM, k/32) uint32
+    b = b_ref[...]  # (TN, k/32) uint32
+    x = jnp.bitwise_xor(a[:, None, :], b[None, :, :])
+    p = jnp.sum(jnp.bitwise_count(x).astype(jnp.int32), axis=-1)
+    o_ref[...] = jnp.int32(k) - 2 * p
+
+
+def bmm(a_pk, b_pk, k: int):
+    """Packed BMM: (M, k/32) x (N, k/32) -> (M, N) int32  (Eq 2).
+
+    M must divide TM, N must divide TN.  The full packed-K extent is kept
+    resident per tile (FC layers have k <= 4096 -> <= 512 B/row: trivially
+    VMEM-resident; this is the "whole bit-row per tile" schedule of
+    Design-2/3).
+    """
+    m, kp = a_pk.shape
+    n, kp2 = b_pk.shape
+    assert kp == kp2 and kp * 32 == k, (a_pk.shape, b_pk.shape, k)
+    assert m % TM == 0 and n % TN == 0, (m, n)
+    grid = (m // TM, n // TN)
+    return pl.pallas_call(
+        functools.partial(_bmm_tile_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((TN, kp), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j: (i, j)),
+        interpret=True,
+    )(a_pk, b_pk)
+
+
+def _bmm_bin_tile_kernel(a_ref, b_ref, t_ref, f_ref, o_ref, *, k: int):
+    """Fused tile: Eq 2 product -> thrd (bn+sign) -> re-pack to uint32.
+
+    t_ref: (TN,) float32 thresholds; f_ref: (TN,) int32 flip flags
+    (gamma < 0 inverts the compare direction, see ref.bn_to_threshold).
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    x = jnp.bitwise_xor(a[:, None, :], b[None, :, :])
+    p = jnp.sum(jnp.bitwise_count(x).astype(jnp.int32), axis=-1)
+    y = (jnp.int32(k) - 2 * p).astype(jnp.float32)  # (TM, TN)
+    ge = y >= t_ref[...][None, :]
+    bit = jnp.where(f_ref[...][None, :] != 0, ~ge, ge)  # +1 decision
+    # register re-pack (the __ballot analogue): LSB-first within each word
+    w = bit.astype(jnp.uint32).reshape(TM, TN // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    o_ref[...] = jnp.sum(w << shifts, axis=-1).astype(jnp.uint32)
+
+
+def bmm_bin(a_pk, b_pk, k: int, thresh, flip):
+    """BNN-specific BMM: packed in, packed out (Design-3 fusion).
+
+    thresh: (N,) float32; flip: (N,) int32 (0/1).
+    Returns (M, N/32) uint32.
+    """
+    m, kp = a_pk.shape
+    n, kp2 = b_pk.shape
+    assert kp == kp2 and kp * 32 == k
+    assert m % TM == 0 and n % TN == 0
+    grid = (m // TM, n // TN)
+    return pl.pallas_call(
+        functools.partial(_bmm_bin_tile_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((m, n // 32), jnp.uint32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((TN, kp), lambda i, j: (j, 0)),
+            pl.BlockSpec((TN,), lambda i, j: (j,)),
+            pl.BlockSpec((TN,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN // 32), lambda i, j: (i, j)),
+        interpret=True,
+    )(a_pk, b_pk, thresh, flip)

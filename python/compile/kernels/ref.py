@@ -1,0 +1,210 @@
+"""Pure-jnp reference oracles for the bit kernels.
+
+These implement the BNN algebra of the paper (Li & Su, "Accelerating
+Binarized Neural Networks via Bit-Tensor-Cores in Turing GPUs") directly on
+float / packed-uint32 arrays, with no Pallas involved.  Every Pallas kernel
+in this package is pytest-verified against these functions.
+
+Conventions (shared with the rust side, see rust/src/bitops/pack.rs):
+
+* a binary value is +1 or -1; bit 1 encodes +1, bit 0 encodes -1 (Eq 1);
+* packing is along the LAST axis, LSB-first: bit ``j`` of word ``w``
+  holds element ``w*32 + j``;
+* the +/-1 dot product over bit vectors is Eq 2 of the paper:
+  ``v = n - 2*popc(a XOR b)``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# binarization + packing
+# ---------------------------------------------------------------------------
+
+def sign_pm1(x):
+    """Eq 1: x >= 0 -> +1.0 else -1.0 (float output)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def pack_bits(x):
+    """Pack a +/-1 (or >=0 / <0) float array along the last axis into uint32.
+
+    The last axis length must be a multiple of 32.  Bit j of word w holds
+    element w*32+j, LSB-first; bit 1 encodes +1 (x >= 0).
+    """
+    x = jnp.asarray(x)
+    n = x.shape[-1]
+    assert n % 32 == 0, f"pack_bits: last axis {n} not a multiple of 32"
+    bits = (x >= 0).astype(jnp.uint32)
+    bits = bits.reshape(x.shape[:-1] + (n // 32, 32))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits(words, n):
+    """Inverse of pack_bits: uint32 words -> +/-1 float array of length n."""
+    words = jnp.asarray(words)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(words.shape[:-1] + (words.shape[-1] * 32,))
+    pm1 = jnp.where(flat == 1, 1.0, -1.0).astype(jnp.float32)
+    return pm1[..., :n]
+
+
+def popcount(x):
+    """Population count of a uint32 array (elementwise)."""
+    return jnp.bitwise_count(jnp.asarray(x, dtype=jnp.uint32)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# BMM (fully-connected layer)
+# ---------------------------------------------------------------------------
+
+def bmm_float_ref(a_pm1, b_pm1):
+    """+/-1 matrix product on float arrays: (M,K) x (K,N) -> (M,N) int32."""
+    return jnp.matmul(
+        a_pm1.astype(jnp.float32), b_pm1.astype(jnp.float32)
+    ).astype(jnp.int32)
+
+
+def bmm_packed_ref(a_pk, b_pk, k):
+    """Eq 2 BMM over packed operands.
+
+    a_pk: (M, K/32) uint32, row-major packed rows of A.
+    b_pk: (N, K/32) uint32, packed COLUMNS of B (i.e. B^T rows — the
+          "column-major" operand layout the Turing BMMA expects).
+    k:    the un-packed inner dimension (bit-vector length n of Eq 2).
+
+    Returns (M, N) int32 = k - 2*popc(a XOR b).
+    """
+    x = jnp.bitwise_xor(a_pk[:, None, :], b_pk[None, :, :])
+    p = jnp.sum(popcount(x), axis=-1)
+    return (jnp.int32(k) - 2 * p).astype(jnp.int32)
+
+
+def bmm_bin_ref(a_pk, b_pk, k, thresh):
+    """BNN-specific BMM: Eq 2 product followed by threshold binarization
+    (the fused bn+sign "thrd" op of Fig 15) and re-packing along N.
+
+    thresh: (N,) float32 per-output-neuron threshold.
+    Returns (M, N/32) uint32.
+    """
+    y = bmm_packed_ref(a_pk, b_pk, k).astype(jnp.float32)
+    return pack_bits(jnp.where(y >= thresh[None, :], 1.0, -1.0))
+
+
+# ---------------------------------------------------------------------------
+# BConv (convolution layer)
+# ---------------------------------------------------------------------------
+
+def bconv_float_ref(inp_pm1, fil_pm1, stride=1, pad=1):
+    """+/-1 cross-correlation with logical zero padding.
+
+    inp_pm1: (H, W, N, C) float +/-1   (the paper's HWNC layout)
+    fil_pm1: (K, K, C, O) float +/-1   (KKCO layout)
+    Padded taps contribute 0 to the sum — the bit-padding problem of §5.3:
+    a padded position is *excluded*, not treated as -1.
+
+    Returns (Ho, Wo, N, O) int32.
+    """
+    h, w, n, c = inp_pm1.shape
+    kh, kw, c2, o = fil_pm1.shape
+    assert c == c2
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    out = np.zeros((ho, wo, n, o), dtype=np.int64)
+    inp = np.asarray(inp_pm1, dtype=np.float64)
+    fil = np.asarray(fil_pm1, dtype=np.float64)
+    for p in range(ho):
+        for q in range(wo):
+            acc = np.zeros((n, o))
+            for r in range(kh):
+                for s in range(kw):
+                    i = p * stride - pad + r
+                    j = q * stride - pad + s
+                    if 0 <= i < h and 0 <= j < w:
+                        acc += inp[i, j] @ fil[r, s]
+            out[p, q] = acc.astype(np.int64)
+    return jnp.asarray(out, dtype=jnp.int32)
+
+
+def bconv_packed_ref(inp_pk, fil_pk, c, stride=1, pad=1):
+    """Packed-bit BConv with the paper's `exclude` amendment (Listing 6).
+
+    inp_pk: (H, W, N, C/32) uint32 — HWNC packed along C.
+    fil_pk: (K, K, O, C/32) uint32 — KKCO packed along C (O-major rows so
+            each filter tap is a "column-major" BMM operand).
+    For each output point the valid taps form a bit dot product of length
+    c * n_valid; out = c*(KK - exclude) - 2 * sum(popc(xor)).
+    """
+    h, w, n, cp = inp_pk.shape
+    kh, kw, o, cp2 = fil_pk.shape
+    assert cp == cp2 and cp * 32 == c
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    inp = np.asarray(inp_pk)
+    fil = np.asarray(fil_pk)
+    out = np.zeros((ho, wo, n, o), dtype=np.int64)
+    for p in range(ho):
+        for q in range(wo):
+            acc = np.zeros((n, o), dtype=np.int64)
+            exclude = 0
+            for r in range(kh):
+                for s in range(kw):
+                    i = p * stride - pad + r
+                    j = q * stride - pad + s
+                    if 0 <= i < h and 0 <= j < w:
+                        x = inp[i, j][:, None, :] ^ fil[r, s][None, :, :]
+                        acc += np.bitwise_count(x).sum(axis=-1, dtype=np.int64)
+                    else:
+                        exclude += 1
+            n_valid = c * (kh * kw - exclude)
+            out[p, q] = n_valid - 2 * acc
+    return jnp.asarray(out, dtype=jnp.int32)
+
+
+def maxpool2_or_ref(x_pk, h, w):
+    """2x2 max-pool over packed bits == logical OR of the 4 packed words
+    (§6.1: max over +/-1 == OR over the bit encoding).
+
+    x_pk: (H, W, ...) packed uint32, H and W even.
+    """
+    a = np.asarray(x_pk)
+    return jnp.asarray(
+        a[0:h:2, 0:w:2] | a[1:h:2, 0:w:2] | a[0:h:2, 1:w:2] | a[1:h:2, 1:w:2]
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch-norm / threshold fusion (§6.1)
+# ---------------------------------------------------------------------------
+
+def bn_ref(x, mean, var, gamma, beta, eps=1e-5):
+    """Eq 4 batch normalization."""
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def bn_to_threshold(mean, var, gamma, beta, eps=1e-5):
+    """Fold bn+sign into a threshold compare: sign(bn(x)) == +1 iff
+    x >= tau when gamma > 0 (x <= tau when gamma < 0).
+
+    Returns (tau, flip) where flip indicates the gamma<0 direction.
+    """
+    tau = mean - beta * jnp.sqrt(var + eps) / gamma
+    flip = gamma < 0
+    return tau, flip
+
+
+def threshold_ref(x, tau, flip):
+    """Apply the fused thrd op: +1 / -1 decision (float output)."""
+    ge = jnp.where(x >= tau, 1.0, -1.0)
+    return jnp.where(flip, -ge, ge).astype(jnp.float32)
+
+
+def htanh_ref(x):
+    """Eq 5 hard tanh."""
+    return jnp.clip(x, -1.0, 1.0)

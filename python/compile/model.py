@@ -1,0 +1,117 @@
+"""Layer-2 JAX model graphs for the BNN networks (build-time only).
+
+The inference graphs here are the paper's Fig 15 pipeline after the §6.1
+inference-time rewrites:
+
+    thrd -> bconv/bmm -> thrd -> pool(OR) -> ... -> fc(int) -> bn -> logits
+
+i.e. every hidden layer consumes and produces *packed bits* (uint32), all
+bn+sign pairs are folded into per-neuron thresholds, pooling is a logical
+OR, and only the first (binarize) and last (bn/logits) stages touch floats.
+The hot ops are the Pallas kernels from `kernels/` so the whole network
+lowers into a single HLO module per (model, batch) pair.
+
+Weights enter as *arguments* (not constants): the rust runtime feeds them
+from `artifacts/*.bin` once per process and reuses the buffers across
+requests (donated on the request path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import binarize, bmm, bconv
+
+# ---------------------------------------------------------------------------
+# MNIST MLP (Table 5 row 1): 1024FC-1024FC-1024FC -> 10
+# Input 28x28 = 784, zero-padded to 800 (25 packed words) so the packed
+# inner dimension is word-aligned; the pad bits are part of the trained
+# model (absorbed by the bn thresholds).
+# ---------------------------------------------------------------------------
+
+MLP_IN = 800          # 784 padded to a multiple of 32
+MLP_HIDDEN = 1024
+MLP_CLASSES = 10
+MLP_OUT_PAD = 128     # final-layer neurons padded to one BMM tile column
+
+
+def mlp_forward(x, in_thresh, w1, t1, f1, w2, t2, f2, w3, t3, f3, w4, g4, b4):
+    """BNN-MLP inference graph.
+
+    x:         (B, 800) float32 pixels (last 16 columns zero)
+    in_thresh: (800,)   input binarization threshold
+    w1:        (1024, 25) uint32  packed FC1 weight rows (column-major B)
+    t1, f1:    (1024,) f32 / int32 fused bn thresholds for FC1
+    w2, w3:    (1024, 32) uint32
+    w4:        (128, 32)  uint32  output layer, rows 10..127 are padding
+    g4, b4:    (128,) f32 final bn scale/shift
+    Returns (B, 10) float32 logits.
+    """
+    xp = binarize.binarize_pack(x, in_thresh)                 # (B, 25)
+    h1 = bmm.bmm_bin(xp, w1, MLP_IN, t1, f1)                  # (B, 32)
+    h2 = bmm.bmm_bin(h1, w2, MLP_HIDDEN, t2, f2)              # (B, 32)
+    h3 = bmm.bmm_bin(h2, w3, MLP_HIDDEN, t3, f3)              # (B, 32)
+    v = bmm.bmm(h3, w4, MLP_HIDDEN).astype(jnp.float32)       # (B, 128)
+    logits = v * g4[None, :] + b4[None, :]
+    return logits[:, :MLP_CLASSES]
+
+
+def mlp_arg_specs(batch):
+    """ShapeDtypeStructs for jax.jit(...).lower — order matches mlp_forward."""
+    f32, u32, i32 = jnp.float32, jnp.uint32, jnp.int32
+    s = jax.ShapeDtypeStruct
+    return [
+        s((batch, MLP_IN), f32),
+        s((MLP_IN,), f32),
+        s((MLP_HIDDEN, MLP_IN // 32), u32),
+        s((MLP_HIDDEN,), f32),
+        s((MLP_HIDDEN,), i32),
+        s((MLP_HIDDEN, MLP_HIDDEN // 32), u32),
+        s((MLP_HIDDEN,), f32),
+        s((MLP_HIDDEN,), i32),
+        s((MLP_HIDDEN, MLP_HIDDEN // 32), u32),
+        s((MLP_HIDDEN,), f32),
+        s((MLP_HIDDEN,), i32),
+        s((MLP_OUT_PAD, MLP_HIDDEN // 32), u32),
+        s((MLP_OUT_PAD,), f32),
+        s((MLP_OUT_PAD,), f32),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# A small binarized conv block (Cifar-lite): used as the standalone BConv
+# artifact exercising the Layer-1 bconv kernel through the rust runtime.
+# ---------------------------------------------------------------------------
+
+def conv_block_forward(inp_pk, fil_pk, thresh, flip, c, stride=1, pad=1):
+    """One fused binarized conv layer + 2x2 OR pooling.
+
+    inp_pk: (H, W, N, C/32) uint32; fil_pk: (K, K, O, C/32) uint32.
+    Returns (H/2, W/2, N, O/32) uint32.
+    """
+    y = bconv.bconv_bin(inp_pk, fil_pk, c, thresh, flip, stride, pad)
+    return bconv.maxpool2_or(y)
+
+
+def conv_block_arg_specs(h, w, n, c, o, k=3):
+    s = jax.ShapeDtypeStruct
+    return [
+        s((h, w, n, c // 32), jnp.uint32),
+        s((k, k, o, c // 32), jnp.uint32),
+        s((o,), jnp.float32),
+        s((o,), jnp.int32),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Standalone BMM graph (runtime microbenchmark / kernel-as-a-service)
+# ---------------------------------------------------------------------------
+
+def bmm_forward(a_pk, b_pk, k):
+    return bmm.bmm(a_pk, b_pk, k)
+
+
+def bmm_arg_specs(m, n, k):
+    s = jax.ShapeDtypeStruct
+    return [s((m, k // 32), jnp.uint32), s((n, k // 32), jnp.uint32)]

@@ -1,0 +1,356 @@
+"""STE trainer for the MNIST-class BNN-MLP (build-time only).
+
+Trains the Table-5 MLP (1024FC x3 -> 10) with the standard BNN recipe
+(Courbariaux et al.: BinaryConnect weights + sign/htanh straight-through
+activations + batch-norm), then folds bn+sign into per-neuron thresholds
+and exports packed-bit weights for the rust runtime.
+
+Dataset substitution (DESIGN.md §2): the environment is offline, so MNIST
+is replaced by a procedural look-alike — 10 smoothed class templates with
+per-sample noise and jitter, 28x28 grayscale in [0,1].  The task exercises
+the identical code path; accuracy numbers are recorded against *this*
+dataset in EXPERIMENTS.md (paper MNIST numbers are cited alongside).
+
+Outputs (under artifacts/):
+    mlp_weights.bin / mlp_weights.meta   packed weights + thresholds
+    testset.bin / testset.meta           held-out images + labels (rust e2e)
+    oracle_logits.bin                    python-side logits for batch 0
+    train_log.txt                        loss curve + accuracy per epoch
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .kernels import ref
+
+EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# synthetic MNIST
+# ---------------------------------------------------------------------------
+
+def _smooth(img, it=2):
+    for _ in range(it):
+        img = 0.25 * (
+            np.roll(img, 1, 0) + np.roll(img, -1, 0)
+            + np.roll(img, 1, 1) + np.roll(img, -1, 1)
+        )
+    return img
+
+
+def make_dataset(n_per_class=1200, n_test_per_class=100, seed=7):
+    """10-class synthetic digit-like dataset, 28x28 in [0,1]."""
+    rng = np.random.default_rng(seed)
+    templates = []
+    for _ in range(10):
+        t = _smooth(rng.standard_normal((28, 28)), it=3)
+        t = (t - t.min()) / (t.max() - t.min() + 1e-9)
+        templates.append(t)
+
+    def sample(cls, n):
+        t = templates[cls]
+        imgs = np.empty((n, 28, 28), np.float32)
+        for i in range(n):
+            dx, dy = rng.integers(-2, 3, size=2)
+            s = np.roll(np.roll(t, dx, 0), dy, 1)
+            s = 0.75 * s + 0.35 * rng.standard_normal((28, 28))
+            imgs[i] = np.clip(s, 0.0, 1.0)
+        return imgs
+
+    def build(npc):
+        xs, ys = [], []
+        for c in range(10):
+            xs.append(sample(c, npc))
+            ys.append(np.full(npc, c, np.int32))
+        x = np.concatenate(xs).reshape(-1, 784)
+        y = np.concatenate(ys)
+        p = rng.permutation(len(y))
+        return x[p], y[p]
+
+    xtr, ytr = build(n_per_class)
+    xte, yte = build(n_test_per_class)
+    return xtr, ytr, xte, yte
+
+
+def pad800(x):
+    """784 -> 800 with zero pad (packed-word alignment, see model.MLP_IN)."""
+    return np.pad(x, ((0, 0), (0, M.MLP_IN - x.shape[1])))
+
+
+# ---------------------------------------------------------------------------
+# STE primitives
+# ---------------------------------------------------------------------------
+
+def ste_weight(w):
+    """BinaryConnect: forward sign(w), backward identity."""
+    s = jnp.where(w >= 0, 1.0, -1.0)
+    return w + jax.lax.stop_gradient(s - w)
+
+
+def ste_act(x):
+    """Forward sign(x); backward htanh' = 1_{|x|<=1} (Fig 15 tanh->sign)."""
+    h = jnp.clip(x, -1.0, 1.0)
+    s = jnp.where(x >= 0, 1.0, -1.0)
+    return h + jax.lax.stop_gradient(s - h)
+
+
+def bn_train(v, gamma, beta):
+    mu = jnp.mean(v, axis=0)
+    var = jnp.var(v, axis=0)
+    y = (v - mu) / jnp.sqrt(var + EPS) * gamma + beta
+    return y, mu, var
+
+
+# ---------------------------------------------------------------------------
+# training-time forward (float, mirrors mlp_forward exactly)
+# ---------------------------------------------------------------------------
+
+def init_params(seed=0):
+    rng = np.random.default_rng(seed)
+
+    def glorot(shape):
+        lim = np.sqrt(6.0 / (shape[0] + shape[1]))
+        return jnp.asarray(rng.uniform(-lim, lim, shape), jnp.float32)
+
+    p = {}
+    dims = [(M.MLP_IN, M.MLP_HIDDEN), (M.MLP_HIDDEN, M.MLP_HIDDEN),
+            (M.MLP_HIDDEN, M.MLP_HIDDEN), (M.MLP_HIDDEN, M.MLP_OUT_PAD)]
+    for i, d in enumerate(dims, 1):
+        p[f"w{i}"] = glorot(d)
+        p[f"g{i}"] = jnp.ones((d[1],), jnp.float32)
+        p[f"b{i}"] = jnp.zeros((d[1],), jnp.float32)
+    return p
+
+
+def forward_train(p, x):
+    """Returns (logits, aux batch stats). x: (B, 800) in [0,1]."""
+    a = jnp.where(x >= 0.5, 1.0, -1.0)
+    stats = {}
+    for i in (1, 2, 3):
+        v = a @ ste_weight(p[f"w{i}"])
+        y, mu, var = bn_train(v, p[f"g{i}"], p[f"b{i}"])
+        stats[i] = (mu, var)
+        a = ste_act(y)
+    v = a @ ste_weight(p["w4"])
+    y, mu, var = bn_train(v, p["g4"], p["b4"])
+    stats[4] = (mu, var)
+    return y[:, : M.MLP_CLASSES], stats
+
+
+def loss_fn(p, x, labels):
+    logits, stats = forward_train(p, x)
+    lse = jax.nn.logsumexp(logits, axis=1)
+    ll = logits[jnp.arange(labels.shape[0]), labels]
+    return jnp.mean(lse - ll), stats
+
+
+# ---------------------------------------------------------------------------
+# hand-rolled Adam (no optax in this environment)
+# ---------------------------------------------------------------------------
+
+def adam_init(p):
+    z = lambda t: jax.tree_util.tree_map(jnp.zeros_like, t)
+    return {"m": z(p), "v": z(p), "t": 0}
+
+
+def adam_step(p, grads, st, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    st = {"m": st["m"], "v": st["v"], "t": st["t"] + 1}
+    t = st["t"]
+    upd = {}
+    for k in p:
+        m = b1 * st["m"][k] + (1 - b1) * grads[k]
+        v = b2 * st["v"][k] + (1 - b2) * grads[k] ** 2
+        st["m"][k] = m
+        st["v"][k] = v
+        mh = m / (1 - b1**t)
+        vh = v / (1 - b2**t)
+        w = p[k] - lr * mh / (jnp.sqrt(vh) + eps)
+        if k.startswith("w"):
+            w = jnp.clip(w, -1.0, 1.0)  # BinaryConnect weight clipping
+        upd[k] = w
+    return upd, st
+
+
+# ---------------------------------------------------------------------------
+# export
+# ---------------------------------------------------------------------------
+
+DTYPE_TAG = {np.float32: "f32", np.uint32: "u32", np.int32: "i32"}
+
+
+def write_blob(path_base, tensors):
+    """tensors: list of (name, np.ndarray). Writes .bin + .meta."""
+    off = 0
+    with open(path_base + ".bin", "wb") as fb, open(path_base + ".meta", "w") as fm:
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            tag = DTYPE_TAG[arr.dtype.type]
+            shape = "x".join(str(d) for d in arr.shape)
+            fm.write(f"{name} {tag} {shape} {off} {arr.nbytes}\n")
+            fb.write(arr.tobytes())
+            off += arr.nbytes
+    return off
+
+
+def fold_thresholds(w, gamma, beta, mu, var):
+    """bn+sign -> (tau, flip) with safe handling of tiny gamma."""
+    g = np.where(np.abs(gamma) < 1e-12, 1e-12 * np.sign(gamma + 1e-30), gamma)
+    tau = mu - beta * np.sqrt(var + EPS) / g
+    flip = (g < 0).astype(np.int32)
+    return tau.astype(np.float32), flip
+
+
+def export(p, running, out_dir):
+    """Pack weights, fold bn, write the runtime blob."""
+    tensors = [("in_thresh", np.full((M.MLP_IN,), 0.5, np.float32))]
+    for i in (1, 2, 3):
+        w = np.asarray(p[f"w{i}"])
+        mu, var = running[i]
+        tau, flip = fold_thresholds(
+            w, np.asarray(p[f"g{i}"]), np.asarray(p[f"b{i}"]), mu, var
+        )
+        wpk = np.asarray(ref.pack_bits(w.T))  # (out, in/32) packed rows of W^T
+        tensors += [(f"w{i}", wpk), (f"t{i}", tau), (f"f{i}", flip)]
+    w4 = np.asarray(p["w4"])
+    mu4, var4 = running[4]
+    g4 = np.asarray(p["g4"]) / np.sqrt(var4 + EPS)
+    b4 = np.asarray(p["b4"]) - mu4 * g4
+    g4[M.MLP_CLASSES:] = 0.0
+    b4[M.MLP_CLASSES:] = 0.0
+    tensors += [
+        ("w4", np.asarray(ref.pack_bits(w4.T))),
+        ("g4", g4.astype(np.float32)),
+        ("b4", b4.astype(np.float32)),
+    ]
+    return write_blob(os.path.join(out_dir, "mlp_weights"), tensors)
+
+
+def load_weight_args(out_dir):
+    """Reload the exported blob as the mlp_forward argument list (no x)."""
+    metas = {}
+    with open(os.path.join(out_dir, "mlp_weights.meta")) as f:
+        for line in f:
+            name, tag, shape, off, nbytes = line.split()
+            metas[name] = (tag, shape, int(off), int(nbytes))
+    blob = open(os.path.join(out_dir, "mlp_weights.bin"), "rb").read()
+    npdt = {"f32": np.float32, "u32": np.uint32, "i32": np.int32}
+
+    def get(name):
+        tag, shape, off, nbytes = metas[name]
+        dims = [int(d) for d in shape.split("x")]
+        return np.frombuffer(blob[off : off + nbytes], npdt[tag]).reshape(dims)
+
+    order = ["in_thresh", "w1", "t1", "f1", "w2", "t2", "f2",
+             "w3", "t3", "f3", "w4", "g4", "b4"]
+    return [jnp.asarray(get(n)) for n in order]
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def accuracy(p, running, x, y, batch=512):
+    """Eval with running bn stats (the deployed model semantics)."""
+    correct = 0
+    for i in range(0, len(y), batch):
+        xb = jnp.asarray(x[i : i + batch])
+        a = jnp.where(xb >= 0.5, 1.0, -1.0)
+        for l in (1, 2, 3):
+            v = a @ jnp.where(p[f"w{l}"] >= 0, 1.0, -1.0)
+            mu, var = running[l]
+            yb = (v - mu) / jnp.sqrt(var + EPS) * p[f"g{l}"] + p[f"b{l}"]
+            a = jnp.where(yb >= 0, 1.0, -1.0)
+        v = a @ jnp.where(p["w4"] >= 0, 1.0, -1.0)
+        mu, var = running[4]
+        logits = ((v - mu) / jnp.sqrt(var + EPS) * p["g4"] + p["b4"])[
+            :, : M.MLP_CLASSES
+        ]
+        correct += int(jnp.sum(jnp.argmax(logits, 1) == jnp.asarray(y[i : i + batch])))
+    return correct / len(y)
+
+
+def train(out_dir, epochs=6, batch=128, lr=2e-3, seed=0, log=print):
+    xtr, ytr, xte, yte = make_dataset()
+    xtr, xte = pad800(xtr), pad800(xte)
+    p = init_params(seed)
+    opt = adam_init(p)
+    running = {i: (np.zeros(d, np.float32), np.ones(d, np.float32))
+               for i, d in ((1, M.MLP_HIDDEN), (2, M.MLP_HIDDEN),
+                            (3, M.MLP_HIDDEN), (4, M.MLP_OUT_PAD))}
+    mom = 0.9
+
+    @jax.jit
+    def step(p, opt, xb, yb):
+        (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, xb, yb)
+        p, opt = adam_step(p, grads, opt, lr=lr)
+        return p, opt, loss, stats
+
+    lines = []
+    nstep = 0
+    t0 = time.time()
+    for ep in range(epochs):
+        perm = np.random.default_rng(seed + ep).permutation(len(ytr))
+        ep_loss = 0.0
+        nb = 0
+        for i in range(0, len(ytr) - batch + 1, batch):
+            idx = perm[i : i + batch]
+            p, opt, loss, stats = step(p, opt, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]))
+            for l, (mu, var) in stats.items():
+                rm, rv = running[l]
+                running[l] = (
+                    mom * rm + (1 - mom) * np.asarray(mu),
+                    mom * rv + (1 - mom) * np.asarray(var),
+                )
+            ep_loss += float(loss)
+            nb += 1
+            nstep += 1
+            if nstep % 20 == 0:
+                lines.append(f"step {nstep} loss {float(loss):.4f}")
+        acc = accuracy(p, running, xte, yte)
+        msg = (f"epoch {ep+1}/{epochs} avg_loss {ep_loss/nb:.4f} "
+               f"test_acc {acc:.4f} elapsed {time.time()-t0:.1f}s")
+        lines.append(msg)
+        log(msg)
+
+    acc = accuracy(p, running, xte, yte)
+    os.makedirs(out_dir, exist_ok=True)
+    export(p, running, out_dir)
+
+    # held-out set + oracle logits for the rust e2e driver
+    n_keep = 1024
+    write_blob(
+        os.path.join(out_dir, "testset"),
+        [("images", xte[:n_keep].astype(np.float32)),
+         ("labels", yte[:n_keep].astype(np.int32))],
+    )
+    args = load_weight_args(out_dir)
+    logits0 = np.asarray(M.mlp_forward(jnp.asarray(xte[:8]), *args))
+    write_blob(os.path.join(out_dir, "oracle_logits"), [("logits", logits0)])
+
+    # deployed (threshold-folded, packed) accuracy on the held-out set
+    correct = 0
+    for i in range(0, n_keep, 128):
+        lg = np.asarray(M.mlp_forward(jnp.asarray(xte[i : i + 128]), *args))
+        correct += int((lg.argmax(1) == yte[i : i + 128]).sum())
+    dep_acc = correct / n_keep
+    lines.append(f"final float_bn_acc {acc:.4f} deployed_packed_acc {dep_acc:.4f}")
+    log(lines[-1])
+    with open(os.path.join(out_dir, "train_log.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return acc, dep_acc
+
+
+if __name__ == "__main__":
+    import sys
+
+    out = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    train(out)

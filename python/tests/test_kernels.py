@@ -1,0 +1,190 @@
+"""Pallas kernels vs pure-jnp oracles (hypothesis-swept).
+
+The CORE L1 correctness signal: every kernel must agree exactly (bit math
+is integer-exact) with ref.py over randomized shapes and contents.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import bconv, binarize, bmm, ref
+
+
+def rand_pm1(rng, shape):
+    return rng.choice(np.array([-1.0, 1.0], np.float32), size=shape)
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack algebra
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 12), st.integers(0, 2**31))
+def test_pack_unpack_roundtrip(rows, words, seed):
+    rng = np.random.default_rng(seed)
+    n = words * 32
+    x = rand_pm1(rng, (rows, n))
+    packed = ref.pack_bits(x)
+    assert packed.shape == (rows, words)
+    back = ref.unpack_bits(packed, n)
+    assert np.array_equal(back, x)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 16), st.integers(0, 2**31))
+def test_eq2_identity(words, seed):
+    """Eq 2: pm1 dot == n - 2*popc(xor)."""
+    rng = np.random.default_rng(seed)
+    n = words * 32
+    a = rand_pm1(rng, (n,))
+    b = rand_pm1(rng, (n,))
+    fdot = float(np.dot(a, b))
+    pa = ref.pack_bits(a[None, :])[0]
+    pb = ref.pack_bits(b[None, :])[0]
+    p = int(np.bitwise_count(np.asarray(pa) ^ np.asarray(pb)).sum())
+    assert n - 2 * p == int(fdot)
+
+
+def test_sign_zero_is_plus_one():
+    # Eq 1: x >= 0 -> +1 (zero binarizes to +1)
+    assert float(ref.sign_pm1(jnp.asarray(0.0))) == 1.0
+    assert float(ref.sign_pm1(jnp.asarray(-1e-9))) == -1.0
+
+
+# ---------------------------------------------------------------------------
+# BMM kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(1, 4),   # M tiles of 8
+    st.integers(1, 3),   # N tiles of 128
+    st.integers(1, 8),   # K words of 32
+    st.integers(0, 2**31),
+)
+def test_bmm_matches_float_oracle(mt, nt, kw, seed):
+    rng = np.random.default_rng(seed)
+    m, n, k = mt * 8, nt * 128, kw * 32
+    a = rand_pm1(rng, (m, k))
+    bt = rand_pm1(rng, (n, k))  # packed columns of B
+    apk, bpk = ref.pack_bits(a), ref.pack_bits(bt)
+    want = ref.bmm_float_ref(a, bt.T)
+    assert np.array_equal(ref.bmm_packed_ref(apk, bpk, k), want)
+    assert np.array_equal(bmm.bmm(apk, bpk, k), want)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 2), st.integers(0, 2**31))
+def test_bmm_bin_fused_threshold(mt, nt, seed):
+    rng = np.random.default_rng(seed)
+    m, n, k = mt * 8, nt * 128, 64
+    a = rand_pm1(rng, (m, k))
+    bt = rand_pm1(rng, (n, k))
+    apk, bpk = ref.pack_bits(a), ref.pack_bits(bt)
+    th = rng.standard_normal(n).astype(np.float32) * 8
+    fl = (rng.random(n) < 0.3).astype(np.int32)
+    got = bmm.bmm_bin(apk, bpk, k, jnp.asarray(th), jnp.asarray(fl))
+    # build expected from the float oracle + threshold_ref + pack
+    y = np.asarray(ref.bmm_packed_ref(apk, bpk, k)).astype(np.float32)
+    pm1 = np.asarray(ref.threshold_ref(jnp.asarray(y), jnp.asarray(th), jnp.asarray(fl != 0)))
+    want = ref.pack_bits(pm1)
+    assert np.array_equal(got, want)
+
+
+def test_bmm_rejects_bad_shapes():
+    a = jnp.zeros((8, 4), jnp.uint32)
+    b = jnp.zeros((128, 5), jnp.uint32)
+    with pytest.raises(AssertionError):
+        bmm.bmm(a, b, 128)
+
+
+# ---------------------------------------------------------------------------
+# binarize kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 6), st.integers(0, 2**31))
+def test_binarize_pack(rt, words, seed):
+    rng = np.random.default_rng(seed)
+    m, n = rt * 8, words * 32
+    x = rng.standard_normal((m, n)).astype(np.float32)
+    th = rng.standard_normal(n).astype(np.float32) * 0.5
+    got = binarize.binarize_pack(jnp.asarray(x), jnp.asarray(th))
+    want = ref.pack_bits(np.where(x >= th[None, :], 1.0, -1.0).astype(np.float32))
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# BConv kernel — the padding/exclude logic is the paper's §5.3 contribution
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(
+    st.integers(4, 7),          # H == W
+    st.sampled_from([1, 2]),    # stride
+    st.sampled_from([0, 1, 2]), # pad
+    st.integers(0, 2**31),
+)
+def test_bconv_matches_float_oracle(hw, stride, pad, seed):
+    rng = np.random.default_rng(seed)
+    kk = 3
+    if (hw + 2 * pad - kk) < 0:
+        return
+    n, c, o = 8, 32, 8
+    inp = rand_pm1(rng, (hw, hw, n, c))
+    fil = rand_pm1(rng, (kk, kk, c, o))
+    ipk = ref.pack_bits(inp)
+    fpk = ref.pack_bits(np.transpose(fil, (0, 1, 3, 2)))
+    want = ref.bconv_float_ref(inp, fil, stride, pad)
+    got_ref = ref.bconv_packed_ref(np.asarray(ipk), np.asarray(fpk), c, stride, pad)
+    got_pl = bconv.bconv(ipk, fpk, c, stride, pad)
+    assert np.array_equal(want, got_ref)
+    assert np.array_equal(want, got_pl)
+
+
+def test_bconv_padding_differs_from_minus_one_padding():
+    """The exclude amendment must NOT equal naive -1 padding — this is the
+    bug the paper's §5.3 exists to avoid."""
+    rng = np.random.default_rng(5)
+    hw, kk, n, c, o = 4, 3, 8, 32, 8
+    inp = rand_pm1(rng, (hw, hw, n, c))
+    fil = rand_pm1(rng, (kk, kk, c, o))
+    ipk = ref.pack_bits(inp)
+    fpk = ref.pack_bits(np.transpose(fil, (0, 1, 3, 2)))
+    ours = np.asarray(bconv.bconv(ipk, fpk, c, 1, 1))
+    # naive: physically pad with -1 and convolve without exclusion
+    inp_pad = np.pad(inp, ((1, 1), (1, 1), (0, 0), (0, 0)), constant_values=-1.0)
+    naive = np.asarray(ref.bconv_float_ref(inp_pad, fil, 1, 0))
+    # interior must agree, border must differ somewhere
+    assert np.array_equal(ours[1:-1, 1:-1], naive[1:-1, 1:-1])
+    assert not np.array_equal(ours, naive)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31))
+def test_bconv_bin_fused(seed):
+    rng = np.random.default_rng(seed)
+    hw, kk, n, c, o = 4, 3, 8, 32, 32
+    inp = rand_pm1(rng, (hw, hw, n, c))
+    fil = rand_pm1(rng, (kk, kk, c, o))
+    ipk = ref.pack_bits(inp)
+    fpk = ref.pack_bits(np.transpose(fil, (0, 1, 3, 2)))
+    th = rng.standard_normal(o).astype(np.float32) * 4
+    fl = np.zeros(o, np.int32)
+    got = bconv.bconv_bin(ipk, fpk, c, jnp.asarray(th), jnp.asarray(fl))
+    y = np.asarray(bconv.bconv(ipk, fpk, c)).astype(np.float32)
+    want = ref.pack_bits(np.where(y >= th[None, None, None, :], 1.0, -1.0))
+    assert np.array_equal(got, want)
+
+
+def test_maxpool_or_equals_float_max():
+    rng = np.random.default_rng(1)
+    h = w = 4
+    x = rand_pm1(rng, (h, w, 8, 32))
+    xpk = np.asarray(ref.pack_bits(x))
+    got = np.asarray(bconv.maxpool2_or(xpk))
+    want_float = x.reshape(2, 2, 2, 2, 8, 32).max(axis=(1, 3))
+    assert np.array_equal(got, np.asarray(ref.pack_bits(want_float)))

@@ -1,0 +1,88 @@
+"""L2 model-graph tests: shapes, bn folding, trainer export consistency."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def tiny_params(rng):
+    """Random (untrained) weight args for mlp_forward."""
+    def u32(shape):
+        return jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+
+    def f32(shape, scale=1.0):
+        return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+    args = [f32((M.MLP_IN,), 0.0) + 0.5]
+    for _ in range(3):
+        args += [u32((M.MLP_HIDDEN, 32 if len(args) > 1 else M.MLP_IN // 32)),
+                 f32((M.MLP_HIDDEN,), 4.0),
+                 jnp.zeros((M.MLP_HIDDEN,), jnp.int32)]
+    args += [u32((M.MLP_OUT_PAD, 32)), f32((M.MLP_OUT_PAD,), 0.1),
+             f32((M.MLP_OUT_PAD,), 0.1)]
+    return args
+
+
+def test_mlp_forward_shape():
+    rng = np.random.default_rng(0)
+    args = tiny_params(rng)
+    x = jnp.asarray(rng.random((8, M.MLP_IN)).astype(np.float32))
+    logits = M.mlp_forward(x, *args)
+    assert logits.shape == (8, M.MLP_CLASSES)
+    assert logits.dtype == jnp.float32
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_mlp_arg_specs_match_forward():
+    specs = M.mlp_arg_specs(8)
+    out = jax.eval_shape(M.mlp_forward, *specs)
+    assert out.shape == (8, M.MLP_CLASSES)
+
+
+@pytest.mark.parametrize("batch", [8, 32])
+def test_mlp_batch_row_independence(batch):
+    """Each row's logits depend only on that row (batcher correctness)."""
+    rng = np.random.default_rng(3)
+    args = tiny_params(rng)
+    x = rng.random((batch, M.MLP_IN)).astype(np.float32)
+    full = np.asarray(M.mlp_forward(jnp.asarray(x), *args))
+    x2 = x.copy()
+    x2[batch // 2:] = rng.random((batch - batch // 2, M.MLP_IN))
+    half = np.asarray(M.mlp_forward(jnp.asarray(x2), *args))
+    assert np.array_equal(full[: batch // 2], half[: batch // 2])
+
+
+def test_bn_threshold_fold():
+    """sign(bn(x)) == threshold compare for both gamma signs."""
+    rng = np.random.default_rng(1)
+    n = 64
+    x = jnp.asarray(rng.standard_normal((32, n)).astype(np.float32) * 10)
+    mean = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    var = jnp.asarray(rng.random(n).astype(np.float32) + 0.1)
+    gamma = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    beta = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    y = ref.bn_ref(x, mean, var, gamma, beta)
+    want = ref.sign_pm1(y)
+    tau, flip = ref.bn_to_threshold(mean, var, gamma, beta)
+    got = ref.threshold_ref(x, tau, flip)
+    # boundary exactness can differ at y == 0; require < 0.5% disagreement
+    frac = float(jnp.mean(got != want))
+    assert frac < 0.005, f"fold disagreement {frac}"
+
+
+def test_conv_block_shapes():
+    specs = M.conv_block_arg_specs(16, 16, 8, 128, 128)
+    out = jax.eval_shape(lambda i, f, t, fl: M.conv_block_forward(i, f, t, fl, 128), *specs)
+    assert out.shape == (8, 8, 8, 128 // 32)
+    assert out.dtype == jnp.uint32
+
+
+def test_bmm_forward_spec():
+    out = jax.eval_shape(lambda a, b: M.bmm_forward(a, b, 1024), *M.bmm_arg_specs(1024, 1024, 1024))
+    assert out.shape == (1024, 1024)
+    assert out.dtype == jnp.int32

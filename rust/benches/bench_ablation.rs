@@ -1,0 +1,114 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!   A1  FSB tile width: why BW = 128 and not 384 (the other fast stride)
+//!   A2  warps-per-CTA for the BTC BMM designs (the paper picks 2)
+//!   A3  accumulator strategy: same c_frag vs. rotating accumulators
+//!   A4  simulator robustness: design ordering under L1-miss perturbation
+
+use tcbnn::kernels::bmm::{self, BmmProblem, BmmScheme};
+use tcbnn::kernels::IoMode;
+use tcbnn::sim::{Engine, KernelTrace, MemSpace, RTX2080TI};
+use tcbnn::util::table::Table;
+
+/// Design-3-like trace with a configurable tile stride / CTA shape /
+/// accumulator strategy.
+fn d3_like(p: BmmProblem, ldm: usize, warps_per_cta: usize, same_acc: bool) -> KernelTrace {
+    let mut t = KernelTrace::new("ablation");
+    let warps = (p.m / 8) * (p.n / 8);
+    t.warps_per_cta = warps_per_cta;
+    t.grid_ctas = warps.div_ceil(warps_per_cta).max(1);
+    let ksteps = p.k / 128;
+    t.warp.load_tiles(ldm, MemSpace::Global, 2 * ksteps);
+    if same_acc {
+        t.warp.bmma_same_acc_ops = ksteps;
+    } else {
+        t.warp.bmma_ops = ksteps;
+    }
+    t.warp.intu_ops = 80;
+    t.warp.bulk_store_bytes = 8;
+    t.compulsory_bytes = p.operand_bytes() + (p.m * p.n / 8) as f64;
+    t.load_footprint_bytes = p.operand_bytes();
+    t
+}
+
+fn main() {
+    let e = Engine::new(&RTX2080TI);
+    let sizes = [1024usize, 2048, 4096, 8192];
+
+    // ---- A1: FSB tile width --------------------------------------------
+    let mut t1 = Table::new(
+        "A1: FSB tile stride choice (us, BNN-specific BMM)",
+        &["n", "ldm=128 (FSB)", "ldm=384", "ldm=width (no FSB)"],
+    );
+    for n in sizes {
+        let p = BmmProblem::square(n);
+        let f = |ldm| e.cost(&d3_like(p, ldm, 2, true)).total_secs * 1e6;
+        t1.row(&[
+            n.to_string(),
+            format!("{:.1}", f(128)),
+            format!("{:.1}", f(384)),
+            format!("{:.1}", f(n)),
+        ]);
+    }
+    println!("{}", t1.render());
+    let _ = t1.write_csv("results", "ablation_fsb_stride");
+
+    // ---- A2: warps per CTA ----------------------------------------------
+    let mut t2 = Table::new(
+        "A2: warps per CTA, Design-3 at 4096 (us)",
+        &["warps_per_cta", "latency_us", "active_warps_per_sm"],
+    );
+    let p = BmmProblem::square(4096);
+    for w in [1usize, 2, 4, 8, 16] {
+        let tr = d3_like(p, 128, w, true);
+        let c = e.cost(&tr);
+        t2.row(&[
+            w.to_string(),
+            format!("{:.1}", c.total_secs * 1e6),
+            c.active_warps_per_sm.to_string(),
+        ]);
+    }
+    println!("{}", t2.render());
+    let _ = t2.write_csv("results", "ablation_warps_per_cta");
+
+    // ---- A3: accumulator strategy ----------------------------------------
+    let mut t3 = Table::new(
+        "A3: accumulator strategy (us): same c_frag (+10cy dep) vs rotating",
+        &["n", "same_accumulator", "rotating_accumulators", "gain_pct"],
+    );
+    for n in sizes {
+        let p = BmmProblem::square(n);
+        let same = e.cost(&d3_like(p, 128, 2, true)).total_secs;
+        let rot = e.cost(&d3_like(p, 128, 2, false)).total_secs;
+        t3.row(&[
+            n.to_string(),
+            format!("{:.1}", same * 1e6),
+            format!("{:.1}", rot * 1e6),
+            format!("{:.1}", (same - rot) / same * 100.0),
+        ]);
+    }
+    println!("{}", t3.render());
+    let _ = t3.write_csv("results", "ablation_accumulator");
+
+    // ---- A4: robustness of the headline ordering --------------------------
+    // perturb the L1 miss model +/-50% and check bmmafmt still beats bmma
+    let mut t4 = Table::new(
+        "A4: conclusion robustness under L1-model perturbation (4096, general)",
+        &["l1_miss_scale", "bmma_us", "bmmafmt_us", "fmt_wins"],
+    );
+    for scale in [0.5f64, 0.75, 1.0, 1.5, 2.0] {
+        let mut gpu = RTX2080TI.clone();
+        gpu.l1_miss_rate = (gpu.l1_miss_rate * scale).min(1.0);
+        let e2 = Engine::new(&gpu);
+        let p = BmmProblem::square(4096);
+        let d1 = bmm::simulate(&e2, &bmm::btc::Design1, p, IoMode::General);
+        let d3 = bmm::simulate(&e2, &bmm::btc::Design3, p, IoMode::General);
+        t4.row(&[
+            format!("{scale:.2}"),
+            format!("{:.1}", d1 * 1e6),
+            format!("{:.1}", d3 * 1e6),
+            (d3 < d1).to_string(),
+        ]);
+    }
+    println!("{}", t4.render());
+    let _ = t4.write_csv("results", "ablation_robustness");
+}

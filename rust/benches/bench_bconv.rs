@@ -1,0 +1,42 @@
+//! Bench: Figs 20-23 (BConv general + specific, both GPUs) + functional
+//! kernel wallclock.
+
+use tcbnn::bitops::{BitTensor4, TensorLayout};
+use tcbnn::kernels::bconv::{self, BconvProblem, BconvScheme};
+use tcbnn::kernels::IoMode;
+use tcbnn::sim::{RTX2080, RTX2080TI};
+use tcbnn::util::bench::{write_csv, Bencher};
+use tcbnn::util::Rng;
+
+fn main() {
+    for gpu in [&RTX2080TI, &RTX2080] {
+        for mode in [IoMode::General, IoMode::BnnSpecific] {
+            let t = tcbnn::figures::fig_bconv(gpu, mode);
+            println!("{}", t.render());
+            let tag = format!(
+                "bench_bconv_{}_{}",
+                if mode == IoMode::General { "general" } else { "specific" },
+                gpu.name.to_lowercase()
+            );
+            let _ = t.write_csv("results", &tag);
+        }
+    }
+
+    let b = Bencher::from_env();
+    let mut rng = Rng::new(8);
+    let p = BconvProblem { hw: 16, n: 8, c: 128, o: 32, k: 3, stride: 1, pad: 1 };
+    let input = BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, &mut rng);
+    let filter = BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, &mut rng);
+    let mut results = Vec::new();
+    println!("== functional BConv kernels, 16x16x8x128 -> 32 (CPU wallclock) ==");
+    for s in bconv::all_schemes() {
+        if !s.supports(p, IoMode::General) {
+            continue;
+        }
+        let r = b.bench(&format!("bconv/{}", s.name()), p.ops(), || {
+            std::hint::black_box(s.compute(&input, &filter, p));
+        });
+        results.push(r);
+    }
+    let _ = write_csv("results/bench_bconv_wallclock.csv", &results);
+}

@@ -1,0 +1,10 @@
+//! Bench: Figs 27-28 — BENN ensemble scaling up (PCIe/NCCL) and out
+//! (IB/MPI).
+
+use tcbnn::sim::RTX2080TI;
+
+fn main() {
+    let t = tcbnn::figures::figs_27_28(&RTX2080TI);
+    println!("{}", t.render());
+    let _ = t.write_csv("results", "bench_fig27_28");
+}

@@ -1,0 +1,45 @@
+//! Bench: Figs 16-19 (BMM, general + BNN-specific, both GPUs) — prints
+//! the paper-style TOPS tables from the Turing model and measures the
+//! wallclock of the functional rust kernels on mid sizes.
+
+use tcbnn::bitops::{BitMatrix, Layout};
+use tcbnn::kernels::bmm::{self, BmmProblem, BmmScheme};
+use tcbnn::kernels::IoMode;
+use tcbnn::sim::{RTX2080, RTX2080TI};
+use tcbnn::util::bench::{write_csv, Bencher};
+use tcbnn::util::Rng;
+
+fn main() {
+    // --- paper series (simulated) ---------------------------------------
+    for gpu in [&RTX2080TI, &RTX2080] {
+        for mode in [IoMode::General, IoMode::BnnSpecific] {
+            let t = tcbnn::figures::fig_bmm(gpu, mode);
+            println!("{}", t.render());
+            let tag = format!(
+                "bench_bmm_{}_{}",
+                if mode == IoMode::General { "general" } else { "specific" },
+                gpu.name.to_lowercase()
+            );
+            let _ = t.write_csv("results", &tag);
+        }
+    }
+
+    // --- functional kernel wallclock (this machine) ----------------------
+    let b = Bencher::from_env();
+    let mut rng = Rng::new(7);
+    let p = BmmProblem { m: 256, n: 512, k: 1024 };
+    let a = BitMatrix::random(p.m, p.k, Layout::RowMajor, &mut rng);
+    let bm = BitMatrix::random(p.k, p.n, Layout::ColMajor, &mut rng);
+    let mut results = Vec::new();
+    println!("== functional BMM kernels, {}x{}x{} (CPU wallclock) ==", p.m, p.n, p.k);
+    for s in bmm::all_schemes() {
+        if !s.supports(p, IoMode::General) {
+            continue;
+        }
+        let r = b.bench(&format!("bmm/{}", s.name()), p.ops(), || {
+            std::hint::black_box(s.compute(&a, &bm));
+        });
+        results.push(r);
+    }
+    let _ = write_csv("results/bench_bmm_wallclock.csv", &results);
+}

@@ -1,0 +1,18 @@
+//! Bench: Figs 2-13 — the §4 characterization microbenchmarks on both
+//! simulated GPUs (load/store latency vs ldm, BMMA pipeline).
+
+use tcbnn::sim::config::all_gpus;
+
+fn main() {
+    for gpu in all_gpus() {
+        let tag = gpu.name.to_lowercase();
+        for (name, t) in [
+            (format!("bench_fig02_05_{tag}"), tcbnn::figures::fig_load_latency(gpu)),
+            (format!("bench_fig06_09_{tag}"), tcbnn::figures::fig_store_latency(gpu)),
+            (format!("bench_fig10_13_{tag}"), tcbnn::figures::fig_bmma_pipeline(gpu)),
+        ] {
+            println!("{}", t.render());
+            let _ = t.write_csv("results", &name);
+        }
+    }
+}

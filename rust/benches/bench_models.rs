@@ -1,0 +1,19 @@
+//! Bench: Tables 6-7 (all six models x six schemes x both GPUs),
+//! Tables 8-9 (cross-platform) and Table 11 (ResNet depth).
+
+use tcbnn::sim::{RTX2080, RTX2080TI};
+
+fn main() {
+    for gpu in [&RTX2080TI, &RTX2080] {
+        let t = tcbnn::figures::tables_6_7(gpu);
+        println!("{}", t.render());
+        let _ = t.write_csv("results", &format!("bench_table6_7_{}", gpu.name.to_lowercase()));
+    }
+    let t89 = tcbnn::figures::tables_8_9(&RTX2080TI);
+    println!("{}", t89.render());
+    let _ = t89.write_csv("results", "bench_table8_9");
+    let t11 = tcbnn::figures::table11_depth(&RTX2080);
+    println!("{}", t11.render());
+    let _ = t11.write_csv("results", "bench_table11");
+    println!("{}", tcbnn::figures::table5().render());
+}

@@ -1,0 +1,38 @@
+//! Bench: the REAL hot path — PJRT execution of the AOT artifacts and
+//! the serving stack (this is wallclock on this machine, not the Turing
+//! model). Requires `make artifacts`; skips cleanly otherwise.
+
+use tcbnn::runtime::{Blob, MlpModel};
+use tcbnn::util::bench::{write_csv, Bencher};
+
+fn main() {
+    let dir = tcbnn::artifact_dir();
+    if !std::path::Path::new(&format!("{dir}/manifest.txt")).exists() {
+        println!("skipping bench_runtime: artifacts not built (make artifacts)");
+        return;
+    }
+    let test = Blob::load(&format!("{dir}/testset")).expect("testset");
+    let images = test.as_f32("images").unwrap();
+    let mut model = MlpModel::load(&dir).expect("mlp artifacts");
+    let b = Bencher::from_env();
+    let mut results = Vec::new();
+    for batch in [8usize, 32, 128] {
+        let x = images[..batch * 800].to_vec();
+        let r = b.bench(&format!("pjrt_mlp/batch{batch}"), batch as f64, || {
+            std::hint::black_box(model.infer(&x, batch).unwrap());
+        });
+        println!(
+            "  -> {:.0} img/s through the full L1+L2 HLO on CPU PJRT",
+            r.throughput()
+        );
+        results.push(r);
+    }
+    // bit-packing hot path (the rust-side preprocessing cost)
+    let mut rng = tcbnn::util::Rng::new(3);
+    let row: Vec<f32> = (0..4096).map(|_| rng.next_f32() - 0.5).collect();
+    let r = b.bench("pack_row/4096", 4096.0, || {
+        std::hint::black_box(tcbnn::bitops::pack::pack_row(&row));
+    });
+    results.push(r);
+    let _ = write_csv("results/bench_runtime.csv", &results);
+}

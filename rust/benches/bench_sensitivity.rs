@@ -1,0 +1,16 @@
+//! Bench: the §7.5 sensitivity studies — Fig 24 (per-layer breakdown),
+//! Table 10 (sync overhead), Fig 25 (batch scaling), Fig 26 (residuals).
+
+use tcbnn::sim::RTX2080;
+
+fn main() {
+    for (name, t) in [
+        ("bench_fig24", tcbnn::figures::fig24_breakdown(&RTX2080)),
+        ("bench_table10", tcbnn::figures::table10_sync(&RTX2080)),
+        ("bench_fig25", tcbnn::figures::fig25_batch(&RTX2080)),
+        ("bench_fig26", tcbnn::figures::fig26_shortcut(&RTX2080)),
+    ] {
+        println!("{}", t.render());
+        let _ = t.write_csv("results", name);
+    }
+}

@@ -1,0 +1,265 @@
+//! Packed bit matrices in the "general" (sequential) format the paper
+//! contrasts with FSB: row-major matrices pack each row into u32 words,
+//! column-major matrices pack each column (this is what the Turing BMMA
+//! expects for operand B).
+
+use super::pack;
+use crate::util::Rng;
+
+/// Storage order of the packed dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// rows packed along columns (operand A)
+    RowMajor,
+    /// columns packed along rows (operand B)
+    ColMajor,
+}
+
+/// A 2D +/-1 matrix stored as packed bits.
+///
+/// `rows x cols` logical +/-1 entries; the packed ("minor") dimension is
+/// `cols` for RowMajor and `rows` for ColMajor.  The minor dimension is
+/// padded up to a whole number of words; pad bits are 0 (-1) and are
+/// excluded from all dot products by construction (callers always pass
+/// the logical length `n` to Eq 2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub layout: Layout,
+    /// words per packed line (row for RowMajor, column for ColMajor)
+    pub words_per_line: usize,
+    pub data: Vec<u32>,
+}
+
+impl BitMatrix {
+    /// All -1 matrix.
+    pub fn zeros(rows: usize, cols: usize, layout: Layout) -> BitMatrix {
+        let minor = match layout {
+            Layout::RowMajor => cols,
+            Layout::ColMajor => rows,
+        };
+        let major = match layout {
+            Layout::RowMajor => rows,
+            Layout::ColMajor => cols,
+        };
+        let wpl = minor.div_ceil(32);
+        BitMatrix { rows, cols, layout, words_per_line: wpl, data: vec![0; wpl * major] }
+    }
+
+    /// Binarize a row-major f32 buffer (Eq 1) into the requested layout.
+    pub fn from_f32(rows: usize, cols: usize, xs: &[f32], layout: Layout) -> BitMatrix {
+        assert_eq!(xs.len(), rows * cols);
+        let mut m = BitMatrix::zeros(rows, cols, layout);
+        for r in 0..rows {
+            for c in 0..cols {
+                if xs[r * cols + c] >= 0.0 {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        m
+    }
+
+    /// Random +/-1 matrix.
+    pub fn random(rows: usize, cols: usize, layout: Layout, rng: &mut Rng) -> BitMatrix {
+        let mut m = BitMatrix::zeros(rows, cols, layout);
+        // fill whole words then mask the pad bits back to zero
+        for w in m.data.iter_mut() {
+            *w = rng.next_u32();
+        }
+        m.mask_padding();
+        m
+    }
+
+    /// Number of lines (major dimension extent).
+    pub fn lines(&self) -> usize {
+        match self.layout {
+            Layout::RowMajor => self.rows,
+            Layout::ColMajor => self.cols,
+        }
+    }
+
+    /// Logical length of one packed line in bits.
+    pub fn line_bits(&self) -> usize {
+        match self.layout {
+            Layout::RowMajor => self.cols,
+            Layout::ColMajor => self.rows,
+        }
+    }
+
+    /// Packed words of line `i`.
+    #[inline]
+    pub fn line(&self, i: usize) -> &[u32] {
+        let w = self.words_per_line;
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    #[inline]
+    pub fn line_mut(&mut self, i: usize) -> &mut [u32] {
+        let w = self.words_per_line;
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    #[inline]
+    fn pos(&self, r: usize, c: usize) -> (usize, usize) {
+        match self.layout {
+            Layout::RowMajor => (r, c),
+            Layout::ColMajor => (c, r),
+        }
+    }
+
+    /// Logical +/-1 entry as bool (true == +1).
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        let (line, off) = self.pos(r, c);
+        pack::get_bit(self.line(line), off)
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let (line, off) = self.pos(r, c);
+        pack::set_bit(self.line_mut(line), off, v)
+    }
+
+    /// Force pad bits (beyond the logical minor extent) to 0.
+    pub fn mask_padding(&mut self) {
+        let bits = self.line_bits();
+        let rem = bits % 32;
+        if rem == 0 {
+            return;
+        }
+        let mask = (1u32 << rem) - 1;
+        let wpl = self.words_per_line;
+        let lines = self.lines();
+        for l in 0..lines {
+            self.data[l * wpl + wpl - 1] &= mask;
+        }
+    }
+
+    /// Expand to a row-major +/-1 float buffer.
+    pub fn to_f32(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[r * self.cols + c] = if self.get(r, c) { 1.0 } else { -1.0 };
+            }
+        }
+        out
+    }
+
+    /// Transposed copy with flipped layout — a free reinterpretation for
+    /// packed data (rows of A^T == columns of A).
+    pub fn transpose_reinterpret(&self) -> BitMatrix {
+        BitMatrix {
+            rows: self.cols,
+            cols: self.rows,
+            layout: match self.layout {
+                Layout::RowMajor => Layout::ColMajor,
+                Layout::ColMajor => Layout::RowMajor,
+            },
+            words_per_line: self.words_per_line,
+            data: self.data.clone(),
+        }
+    }
+
+    /// Convert to the other layout (an actual bit transpose of storage).
+    pub fn to_layout(&self, layout: Layout) -> BitMatrix {
+        if layout == self.layout {
+            return self.clone();
+        }
+        let mut out = BitMatrix::zeros(self.rows, self.cols, layout);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if self.get(r, c) {
+                    out.set(r, c, true);
+                }
+            }
+        }
+        out
+    }
+
+    /// Bytes of packed storage.
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_cases;
+
+    #[test]
+    fn get_set_roundtrip() {
+        run_cases(21, 60, |rng| {
+            let rows = 1 + rng.gen_range(40);
+            let cols = 1 + rng.gen_range(90);
+            let layout = if rng.next_bool() { Layout::RowMajor } else { Layout::ColMajor };
+            let mut m = BitMatrix::zeros(rows, cols, layout);
+            let r = rng.gen_range(rows);
+            let c = rng.gen_range(cols);
+            m.set(r, c, true);
+            assert!(m.get(r, c));
+            assert_eq!(m.to_f32()[r * cols + c], 1.0);
+        });
+    }
+
+    #[test]
+    fn from_to_f32_roundtrip() {
+        run_cases(22, 40, |rng| {
+            let rows = 1 + rng.gen_range(20);
+            let cols = 1 + rng.gen_range(70);
+            let xs = rng.pm1_vec(rows * cols);
+            for layout in [Layout::RowMajor, Layout::ColMajor] {
+                let m = BitMatrix::from_f32(rows, cols, &xs, layout);
+                assert_eq!(m.to_f32(), xs);
+            }
+        });
+    }
+
+    #[test]
+    fn layout_conversion_preserves_entries() {
+        run_cases(23, 40, |rng| {
+            let m = BitMatrix::random(
+                1 + rng.gen_range(30),
+                1 + rng.gen_range(30),
+                Layout::RowMajor,
+                rng,
+            );
+            let c = m.to_layout(Layout::ColMajor);
+            assert_eq!(m.to_f32(), c.to_f32());
+            assert_eq!(c.to_layout(Layout::RowMajor), m);
+        });
+    }
+
+    #[test]
+    fn transpose_reinterpret_is_transpose() {
+        run_cases(24, 40, |rng| {
+            let m = BitMatrix::random(
+                1 + rng.gen_range(20),
+                1 + rng.gen_range(20),
+                Layout::RowMajor,
+                rng,
+            );
+            let t = m.transpose_reinterpret();
+            for r in 0..m.rows {
+                for c in 0..m.cols {
+                    assert_eq!(m.get(r, c), t.get(c, r));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn padding_masked() {
+        let mut rng = Rng::new(4);
+        let m = BitMatrix::random(8, 33, Layout::RowMajor, &mut rng);
+        // bits 33..64 of each row must be zero
+        for r in 0..8 {
+            assert_eq!(m.line(r)[1] >> 1, 0, "row {r} pad bits set");
+        }
+    }
+}

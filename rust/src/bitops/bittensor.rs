@@ -1,0 +1,215 @@
+//! 4D packed bit tensors for the convolution path (§5.3).
+//!
+//! The paper's key layout move is HWNC for activations (so the (N, C)
+//! plane at each image point is a BMM operand) and KKCO for filters
+//! (each filter tap is a (C, O) operand).  The innermost axis is packed
+//! into u32 words, LSB-first, padded to whole words.
+
+use super::pack;
+use crate::util::Rng;
+
+/// Semantic layout tag for a 4D bit tensor.  The storage order is always
+/// dims[0] (outermost) .. dims[3] (innermost, packed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorLayout {
+    /// activations: height, width, batch, channels (packed C)
+    Hwnc,
+    /// filters: kh, kw, out-channels, in-channels (packed C; O-major so a
+    /// tap is a column-major BMM operand)
+    Kkoc,
+    /// activations in framework order (TensorFlow): batch, h, w, channels
+    Nhwc,
+}
+
+/// A 4D +/-1 tensor with the innermost axis packed into u32 words.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitTensor4 {
+    pub dims: [usize; 4],
+    pub layout: TensorLayout,
+    /// words along the packed innermost axis
+    pub words_inner: usize,
+    pub data: Vec<u32>,
+}
+
+impl BitTensor4 {
+    pub fn zeros(dims: [usize; 4], layout: TensorLayout) -> BitTensor4 {
+        let words_inner = dims[3].div_ceil(32);
+        let n = dims[0] * dims[1] * dims[2] * words_inner;
+        BitTensor4 { dims, layout, words_inner, data: vec![0; n] }
+    }
+
+    pub fn random(dims: [usize; 4], layout: TensorLayout, rng: &mut Rng) -> BitTensor4 {
+        let mut t = BitTensor4::zeros(dims, layout);
+        for w in t.data.iter_mut() {
+            *w = rng.next_u32();
+        }
+        t.mask_padding();
+        t
+    }
+
+    /// Binarize (Eq 1) a dense f32 buffer in the same dim order.
+    pub fn from_f32(dims: [usize; 4], layout: TensorLayout, xs: &[f32]) -> BitTensor4 {
+        assert_eq!(xs.len(), dims.iter().product::<usize>());
+        let mut t = BitTensor4::zeros(dims, layout);
+        let inner = dims[3];
+        for outer in 0..dims[0] * dims[1] * dims[2] {
+            let src = &xs[outer * inner..(outer + 1) * inner];
+            let dst = t.inner_words_at_mut(outer);
+            for (i, &x) in src.iter().enumerate() {
+                if x >= 0.0 {
+                    dst[i / 32] |= 1 << (i % 32);
+                }
+            }
+        }
+        t
+    }
+
+    #[inline]
+    fn flat_outer(&self, a: usize, b: usize, c: usize) -> usize {
+        debug_assert!(a < self.dims[0] && b < self.dims[1] && c < self.dims[2]);
+        (a * self.dims[1] + b) * self.dims[2] + c
+    }
+
+    /// Packed words of the innermost vector at (a, b, c).
+    #[inline]
+    pub fn inner(&self, a: usize, b: usize, c: usize) -> &[u32] {
+        let o = self.flat_outer(a, b, c) * self.words_inner;
+        &self.data[o..o + self.words_inner]
+    }
+
+    #[inline]
+    pub fn inner_mut(&mut self, a: usize, b: usize, c: usize) -> &mut [u32] {
+        let o = self.flat_outer(a, b, c) * self.words_inner;
+        &mut self.data[o..o + self.words_inner]
+    }
+
+    #[inline]
+    fn inner_words_at_mut(&mut self, outer: usize) -> &mut [u32] {
+        let o = outer * self.words_inner;
+        &mut self.data[o..o + self.words_inner]
+    }
+
+    /// Logical +/-1 bit at (a, b, c, d).
+    #[inline]
+    pub fn get(&self, a: usize, b: usize, c: usize, d: usize) -> bool {
+        pack::get_bit(self.inner(a, b, c), d)
+    }
+
+    #[inline]
+    pub fn set(&mut self, a: usize, b: usize, c: usize, d: usize, v: bool) {
+        pack::set_bit(self.inner_mut(a, b, c), d, v)
+    }
+
+    /// Zero the pad bits of every packed inner vector.
+    pub fn mask_padding(&mut self) {
+        let rem = self.dims[3] % 32;
+        if rem == 0 {
+            return;
+        }
+        let mask = (1u32 << rem) - 1;
+        let wi = self.words_inner;
+        for outer in 0..self.dims[0] * self.dims[1] * self.dims[2] {
+            self.data[outer * wi + wi - 1] &= mask;
+        }
+    }
+
+    /// Dense +/-1 expansion (dim order preserved).
+    pub fn to_f32(&self) -> Vec<f32> {
+        let inner = self.dims[3];
+        let mut out = Vec::with_capacity(self.dims.iter().product());
+        for outer in 0..self.dims[0] * self.dims[1] * self.dims[2] {
+            let words = &self.data
+                [outer * self.words_inner..(outer + 1) * self.words_inner];
+            out.extend(pack::unpack_row(words, inner));
+        }
+        out
+    }
+
+    /// NHWC -> HWNC relayout (the paper's pre-conv transformation).
+    pub fn nhwc_to_hwnc(&self) -> BitTensor4 {
+        assert_eq!(self.layout, TensorLayout::Nhwc);
+        let [n, h, w, c] = self.dims;
+        let mut out = BitTensor4::zeros([h, w, n, c], TensorLayout::Hwnc);
+        for ni in 0..n {
+            for hi in 0..h {
+                for wi in 0..w {
+                    let src = self.inner(ni, hi, wi).to_vec();
+                    out.inner_mut(hi, wi, ni).copy_from_slice(&src);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_cases;
+
+    #[test]
+    fn get_set_roundtrip() {
+        run_cases(41, 50, |rng| {
+            let dims = [
+                1 + rng.gen_range(5),
+                1 + rng.gen_range(5),
+                1 + rng.gen_range(6),
+                1 + rng.gen_range(80),
+            ];
+            let mut t = BitTensor4::zeros(dims, TensorLayout::Hwnc);
+            let idx = [
+                rng.gen_range(dims[0]),
+                rng.gen_range(dims[1]),
+                rng.gen_range(dims[2]),
+                rng.gen_range(dims[3]),
+            ];
+            t.set(idx[0], idx[1], idx[2], idx[3], true);
+            assert!(t.get(idx[0], idx[1], idx[2], idx[3]));
+        });
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        run_cases(42, 30, |rng| {
+            let dims = [2, 3, 1 + rng.gen_range(4), 1 + rng.gen_range(70)];
+            let xs = rng.pm1_vec(dims.iter().product());
+            let t = BitTensor4::from_f32(dims, TensorLayout::Nhwc, &xs);
+            assert_eq!(t.to_f32(), xs);
+        });
+    }
+
+    #[test]
+    fn nhwc_to_hwnc_permutes() {
+        run_cases(43, 20, |rng| {
+            let (n, h, w, c) = (2, 3, 4, 40);
+            let t = BitTensor4::random([n, h, w, c], TensorLayout::Nhwc, rng);
+            let p = t.nhwc_to_hwnc();
+            for ni in 0..n {
+                for hi in 0..h {
+                    for wi in 0..w {
+                        for ci in 0..c {
+                            assert_eq!(t.get(ni, hi, wi, ci), p.get(hi, wi, ni, ci));
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn padding_is_masked() {
+        let mut rng = Rng::new(44);
+        let t = BitTensor4::random([2, 2, 2, 40], TensorLayout::Hwnc, &mut rng);
+        for a in 0..2 {
+            for b in 0..2 {
+                for c in 0..2 {
+                    assert_eq!(t.inner(a, b, c)[1] >> 8, 0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! FSB — the paper's Fixed-Stride-Bit format (§5.1, Fig 14).
+//!
+//! Instead of storing bits sequentially with the matrix width as the WMMA
+//! stride `ldm`, bits are stored tile-by-tile in (BH x BW) = (8 x 128)-bit
+//! units so that every `load_matrix_sync` uses the fixed, fastest stride
+//! `ldm = 128`.  The format only changes how bits are *ordered*; if the
+//! logical width does not divide BW the row is padded to a BW multiple
+//! (the same padding `load_matrix_sync` would require anyway).
+//!
+//! Tile-wise order and in-tile order follow the source layout: row-major
+//! matrices use row-major tiles of row-major bits; column-major likewise.
+
+use super::bitmatrix::{BitMatrix, Layout};
+
+/// BMMA operand tile extents, in bits.
+pub const BH: usize = 8;
+pub const BW: usize = 128;
+/// u32 words per tile row.
+pub const TILE_ROW_WORDS: usize = BW / 32; // 4
+/// u32 words per full (8 x 128)-bit tile.
+pub const TILE_WORDS: usize = BH * TILE_ROW_WORDS; // 32
+
+/// A bit matrix stored in FSB tile order.
+///
+/// Logical `rows x cols` (+/-1 entries), stored as a `tiles_y x tiles_x`
+/// grid of (BH x BW)-bit tiles; each tile is BH consecutive 128-bit rows
+/// (4 words each).  `rows` is padded up to BH and `cols` up to BW; pad
+/// bits are 0.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FsbMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// source layout this FSB image was converted from
+    pub layout: Layout,
+    pub tiles_y: usize,
+    pub tiles_x: usize,
+    pub data: Vec<u32>,
+}
+
+impl FsbMatrix {
+    /// Convert a general-format matrix into FSB order.
+    ///
+    /// For RowMajor input, tile (ty, tx) covers logical rows
+    /// `ty*BH..` and columns `tx*BW..`.  For ColMajor input the roles of
+    /// rows/cols swap (tiles tile the packed *columns*).
+    pub fn from_bitmatrix(m: &BitMatrix) -> FsbMatrix {
+        let (major, minor) = match m.layout {
+            Layout::RowMajor => (m.rows, m.cols),
+            Layout::ColMajor => (m.cols, m.rows),
+        };
+        let tiles_y = major.div_ceil(BH);
+        let tiles_x = minor.div_ceil(BW);
+        let mut data = vec![0u32; tiles_y * tiles_x * TILE_WORDS];
+        for line in 0..major {
+            let src = m.line(line);
+            let ty = line / BH;
+            let ry = line % BH;
+            for w in 0..m.words_per_line {
+                let tx = w / TILE_ROW_WORDS;
+                let wx = w % TILE_ROW_WORDS;
+                let idx = ((ty * tiles_x + tx) * TILE_WORDS)
+                    + ry * TILE_ROW_WORDS
+                    + wx;
+                data[idx] = src[w];
+            }
+        }
+        FsbMatrix { rows: m.rows, cols: m.cols, layout: m.layout, tiles_y, tiles_x, data }
+    }
+
+    /// Convert back to the general format (inverse of `from_bitmatrix`).
+    pub fn to_bitmatrix(&self) -> BitMatrix {
+        let mut m = BitMatrix::zeros(self.rows, self.cols, self.layout);
+        let major = m.lines();
+        for line in 0..major {
+            let ty = line / BH;
+            let ry = line % BH;
+            let wpl = m.words_per_line;
+            for w in 0..wpl {
+                let tx = w / TILE_ROW_WORDS;
+                let wx = w % TILE_ROW_WORDS;
+                let idx = ((ty * self.tiles_x + tx) * TILE_WORDS)
+                    + ry * TILE_ROW_WORDS
+                    + wx;
+                m.line_mut(line)[w] = self.data[idx];
+            }
+        }
+        m.mask_padding();
+        m
+    }
+
+    /// The packed words of one (BH x BW) tile, contiguous in memory —
+    /// this contiguity is exactly what fixes the WMMA stride at 128.
+    #[inline]
+    pub fn tile(&self, ty: usize, tx: usize) -> &[u32] {
+        let base = (ty * self.tiles_x + tx) * TILE_WORDS;
+        &self.data[base..base + TILE_WORDS]
+    }
+
+    /// One 128-bit row (4 words) within a tile.
+    #[inline]
+    pub fn tile_row(&self, ty: usize, tx: usize, ry: usize) -> &[u32] {
+        let base =
+            (ty * self.tiles_x + tx) * TILE_WORDS + ry * TILE_ROW_WORDS;
+        &self.data[base..base + TILE_ROW_WORDS]
+    }
+
+    /// Storage bytes (== padded logical bits / 8; FSB adds no overhead
+    /// beyond the BW padding that WMMA loads require anyway).
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// The Fig 14 toy example: an 8x4-bit matrix (H=4, W=8) converted with a
+/// 4x2 tile (BH=2, BW=4).  Exposed as a generic function so the unit test
+/// can reproduce the figure exactly with non-default tile sizes.
+pub fn fsb_order_generic(
+    h: usize,
+    w: usize,
+    bh: usize,
+    bw: usize,
+) -> Vec<usize> {
+    // returns, for each storage slot, the index of the logical bit
+    // (row-major) placed there
+    let tx_n = w.div_ceil(bw);
+    let ty_n = h.div_ceil(bh);
+    let mut order = Vec::with_capacity(ty_n * tx_n * bh * bw);
+    for ty in 0..ty_n {
+        for tx in 0..tx_n {
+            for r in 0..bh {
+                for c in 0..bw {
+                    let row = ty * bh + r;
+                    let col = tx * bw + c;
+                    if row < h && col < w {
+                        order.push(row * w + col);
+                    }
+                }
+            }
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_cases;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_row_major() {
+        run_cases(31, 50, |rng| {
+            let rows = 1 + rng.gen_range(40);
+            let cols = 1 + rng.gen_range(300);
+            let m = BitMatrix::random(rows, cols, Layout::RowMajor, rng);
+            let f = FsbMatrix::from_bitmatrix(&m);
+            assert_eq!(f.to_bitmatrix(), m);
+        });
+    }
+
+    #[test]
+    fn roundtrip_col_major() {
+        run_cases(32, 50, |rng| {
+            let rows = 1 + rng.gen_range(300);
+            let cols = 1 + rng.gen_range(40);
+            let m = BitMatrix::random(rows, cols, Layout::ColMajor, rng);
+            let f = FsbMatrix::from_bitmatrix(&m);
+            assert_eq!(f.to_bitmatrix(), m);
+        });
+    }
+
+    #[test]
+    fn tile_rows_are_contiguous_lines() {
+        let mut rng = Rng::new(33);
+        let m = BitMatrix::random(16, 256, Layout::RowMajor, &mut rng);
+        let f = FsbMatrix::from_bitmatrix(&m);
+        // tile (1, 1), row 3 == logical row 11, words 4..8
+        let got = f.tile_row(1, 1, 3);
+        assert_eq!(got, &m.line(11)[4..8]);
+    }
+
+    #[test]
+    fn fig14_example() {
+        // Paper Fig 14: 1D general format H=4 x W=8, tile BH=2 x BW=4.
+        // First tile must contain bits {0,1,2,3, 8,9,10,11}, second tile
+        // {4,5,6,7, 12,13,14,15}, then the bottom half likewise.
+        let order = fsb_order_generic(4, 8, 2, 4);
+        assert_eq!(
+            order,
+            vec![
+                0, 1, 2, 3, 8, 9, 10, 11, //
+                4, 5, 6, 7, 12, 13, 14, 15, //
+                16, 17, 18, 19, 24, 25, 26, 27, //
+                20, 21, 22, 23, 28, 29, 30, 31
+            ]
+        );
+    }
+
+    #[test]
+    fn no_extra_space_when_aligned() {
+        let mut rng = Rng::new(34);
+        let m = BitMatrix::random(64, 1024, Layout::RowMajor, &mut rng);
+        let f = FsbMatrix::from_bitmatrix(&m);
+        assert_eq!(f.storage_bytes(), m.storage_bytes());
+    }
+
+    #[test]
+    fn padded_when_unaligned() {
+        let mut rng = Rng::new(35);
+        let m = BitMatrix::random(10, 200, Layout::RowMajor, &mut rng);
+        let f = FsbMatrix::from_bitmatrix(&m);
+        // rows pad 10->16, cols pad 200->256
+        assert_eq!(f.tiles_y, 2);
+        assert_eq!(f.tiles_x, 2);
+        assert_eq!(f.storage_bytes(), 2 * 2 * TILE_WORDS * 4);
+    }
+}

@@ -1,0 +1,18 @@
+//! Bit-level substrate: binarization, packing, the FSB data format, and
+//! packed bit matrices/tensors.
+//!
+//! Conventions (shared with python/compile/kernels/ref.py):
+//! * binary value +1 <-> bit 1, -1 <-> bit 0 (Eq 1 of the paper);
+//! * packing is along the innermost logical axis, LSB-first: bit `j` of
+//!   word `w` holds element `w*32 + j`;
+//! * the +/-1 dot product over packed operands is Eq 2:
+//!   `v = n - 2*popc(a XOR b)`.
+
+pub mod bitmatrix;
+pub mod bittensor;
+pub mod fsb;
+pub mod pack;
+
+pub use bitmatrix::{BitMatrix, Layout};
+pub use bittensor::{BitTensor4, TensorLayout};
+pub use fsb::FsbMatrix;

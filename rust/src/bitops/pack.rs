@@ -1,0 +1,168 @@
+//! Binarization + packing primitives (Eq 1 / Eq 2 of the paper).
+
+/// Eq 1: sign binarization, `x >= 0 -> +1 else -1`.
+#[inline]
+pub fn sign_pm1(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Pack a row of floats into u32 words, LSB-first; bit 1 encodes x >= 0.
+/// `row.len()` need not be a multiple of 32: the tail bits of the last
+/// word are 0 (they encode -1 and must be compensated by the caller —
+/// `BitMatrix` pads columns explicitly instead).
+pub fn pack_row(row: &[f32]) -> Vec<u32> {
+    let words = row.len().div_ceil(32);
+    let mut out = vec![0u32; words];
+    // branchless word building (§Perf opt-3): full 32-element chunks
+    // fold sign bits without per-bit branches
+    let chunks = row.chunks_exact(32);
+    let rem = chunks.remainder();
+    for (w, chunk) in chunks.enumerate() {
+        let mut word = 0u32;
+        for (j, &x) in chunk.iter().enumerate() {
+            word |= ((x >= 0.0) as u32) << j;
+        }
+        out[w] = word;
+    }
+    let base = row.len() - rem.len();
+    for (j, &x) in rem.iter().enumerate() {
+        let i = base + j;
+        out[i / 32] |= ((x >= 0.0) as u32) << (i % 32);
+    }
+    out
+}
+
+/// Pack with a per-element threshold: bit = (x >= thresh).
+pub fn pack_row_thresh(row: &[f32], thresh: &[f32]) -> Vec<u32> {
+    debug_assert_eq!(row.len(), thresh.len());
+    let words = row.len().div_ceil(32);
+    let mut out = vec![0u32; words];
+    for (i, (&x, &t)) in row.iter().zip(thresh).enumerate() {
+        if x >= t {
+            out[i / 32] |= 1 << (i % 32);
+        }
+    }
+    out
+}
+
+/// Unpack `n` bits from packed words into +/-1 floats.
+pub fn unpack_row(words: &[u32], n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            if words[i / 32] >> (i % 32) & 1 == 1 {
+                1.0
+            } else {
+                -1.0
+            }
+        })
+        .collect()
+}
+
+/// Bit value at position `i` of a packed row (true == +1).
+#[inline]
+pub fn get_bit(words: &[u32], i: usize) -> bool {
+    words[i / 32] >> (i % 32) & 1 == 1
+}
+
+/// Set bit `i` in a packed row.
+#[inline]
+pub fn set_bit(words: &mut [u32], i: usize, v: bool) {
+    if v {
+        words[i / 32] |= 1 << (i % 32);
+    } else {
+        words[i / 32] &= !(1 << (i % 32));
+    }
+}
+
+/// popc(a XOR b) over two packed rows of equal word length.
+#[inline]
+pub fn xor_popc(a: &[u32], b: &[u32]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += (x ^ y).count_ones();
+    }
+    acc
+}
+
+/// Eq 2: the +/-1 dot product of two packed bit vectors of logical
+/// length `n` bits: `v = n - 2*popc(a XOR b)`.
+#[inline]
+pub fn pm1_dot(a: &[u32], b: &[u32], n: usize) -> i32 {
+    n as i32 - 2 * xor_popc(a, b) as i32
+}
+
+/// Eq 2, xnor form: `v = 2*popc(a XNOR b) - n` (used by the FPGA/ASIC
+/// lineage; mathematically identical for whole words — kept for tests).
+#[inline]
+pub fn pm1_dot_xnor(a: &[u32], b: &[u32], n_words_bits: usize) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += (!(x ^ y)).count_ones();
+    }
+    2 * acc as i32 - n_words_bits as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_cases;
+    use crate::util::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        run_cases(11, 100, |rng| {
+            let n = 1 + rng.gen_range(300);
+            let xs = rng.pm1_vec(n);
+            let packed = pack_row(&xs);
+            assert_eq!(unpack_row(&packed, n), xs);
+        });
+    }
+
+    #[test]
+    fn eq2_matches_float_dot() {
+        run_cases(12, 100, |rng| {
+            let n = 32 * (1 + rng.gen_range(16));
+            let a = rng.pm1_vec(n);
+            let b = rng.pm1_vec(n);
+            let fdot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let pa = pack_row(&a);
+            let pb = pack_row(&b);
+            assert_eq!(pm1_dot(&pa, &pb, n), fdot as i32);
+            assert_eq!(pm1_dot_xnor(&pa, &pb, n), fdot as i32);
+        });
+    }
+
+    #[test]
+    fn threshold_packing() {
+        let row = [0.1, 0.9, -0.5, 0.5];
+        let th = [0.5, 0.5, -1.0, 0.6];
+        let p = pack_row_thresh(&row, &th);
+        assert_eq!(p[0] & 0xF, 0b0110);
+    }
+
+    #[test]
+    fn bit_accessors() {
+        let mut w = vec![0u32; 2];
+        set_bit(&mut w, 33, true);
+        assert!(get_bit(&w, 33));
+        assert!(!get_bit(&w, 32));
+        set_bit(&mut w, 33, false);
+        assert_eq!(w, vec![0, 0]);
+    }
+
+    #[test]
+    fn xor_popc_counts_disagreements() {
+        let mut rng = Rng::new(5);
+        let n = 256;
+        let a = rng.pm1_vec(n);
+        let b = rng.pm1_vec(n);
+        let disagree = a.iter().zip(&b).filter(|(x, y)| x != y).count() as u32;
+        assert_eq!(xor_popc(&pack_row(&a), &pack_row(&b)), disagree);
+    }
+}

@@ -1,0 +1,233 @@
+//! Dynamic batcher: groups requests into multiple-of-8 batches (the
+//! smallest unit the bit-tensorcores accept — §7.4 measures latency at
+//! batch 8 for exactly this reason), padding the tail with copies.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One queued inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// flattened input (e.g. 800 floats for the MLP)
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// A formed batch: inputs concatenated, padded up to `padded` rows.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub ids: Vec<u64>,
+    pub data: Vec<f32>,
+    /// logical rows (== ids.len())
+    pub rows: usize,
+    /// rows after padding to the bucket size
+    pub padded: usize,
+}
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// available batch buckets, ascending (must match compiled
+    /// artifacts, e.g. [8, 32, 128])
+    pub buckets: Vec<usize>,
+    /// max time the oldest request may wait before we flush a partial
+    /// batch
+    pub max_wait: Duration,
+    /// input row width (elements)
+    pub row_elems: usize,
+    /// queue capacity (backpressure)
+    pub capacity: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            buckets: vec![8, 32, 128],
+            max_wait: Duration::from_millis(2),
+            row_elems: 800,
+            capacity: 4096,
+        }
+    }
+}
+
+/// FIFO dynamic batcher.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+    pub rejected: u64,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        assert!(!cfg.buckets.is_empty());
+        assert!(cfg.buckets.windows(2).all(|w| w[0] < w[1]));
+        assert!(cfg.buckets.iter().all(|b| b % 8 == 0 && *b > 0));
+        Batcher { cfg, queue: VecDeque::new(), rejected: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue; returns false (rejects) when over capacity.
+    pub fn push(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.cfg.capacity {
+            self.rejected += 1;
+            return false;
+        }
+        debug_assert_eq!(req.input.len(), self.cfg.row_elems);
+        self.queue.push_back(req);
+        true
+    }
+
+    /// Pick the bucket for `n` ready requests: the largest bucket that
+    /// is fully filled, or the smallest bucket when flushing a tail.
+    fn bucket_for(&self, n: usize, flush: bool) -> Option<usize> {
+        let full = self
+            .cfg
+            .buckets
+            .iter()
+            .rev()
+            .find(|&&b| n >= b)
+            .copied();
+        if full.is_some() {
+            return full;
+        }
+        if flush && n > 0 {
+            // smallest bucket that fits the stragglers
+            return self
+                .cfg
+                .buckets
+                .iter()
+                .find(|&&b| b >= n)
+                .copied()
+                .or_else(|| self.cfg.buckets.last().copied());
+        }
+        None
+    }
+
+    /// Form the next batch if policy allows (now = current time).
+    pub fn next_batch(&mut self, now: Instant) -> Option<Batch> {
+        let n = self.queue.len();
+        if n == 0 {
+            return None;
+        }
+        let oldest_wait = now.duration_since(self.queue.front().unwrap().enqueued);
+        let flush = oldest_wait >= self.cfg.max_wait;
+        let bucket = self.bucket_for(n, flush)?;
+        let take = bucket.min(n);
+        let mut ids = Vec::with_capacity(take);
+        let mut data = Vec::with_capacity(bucket * self.cfg.row_elems);
+        for _ in 0..take {
+            let r = self.queue.pop_front().unwrap();
+            ids.push(r.id);
+            data.extend_from_slice(&r.input);
+        }
+        // pad the tail with copies of the last row (results discarded)
+        let last_row_start = (take - 1) * self.cfg.row_elems;
+        for _ in take..bucket {
+            let row: Vec<f32> =
+                data[last_row_start..last_row_start + self.cfg.row_elems].to_vec();
+            data.extend_from_slice(&row);
+        }
+        Some(Batch { ids, data, rows: take, padded: bucket })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_cases;
+
+    fn req(id: u64, t: Instant) -> Request {
+        Request { id, input: vec![id as f32; 4], enqueued: t }
+    }
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig {
+            buckets: vec![8, 32],
+            max_wait: Duration::from_millis(1),
+            row_elems: 4,
+            capacity: 64,
+        }
+    }
+
+    #[test]
+    fn full_bucket_forms_immediately() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        for i in 0..8 {
+            assert!(b.push(req(i, t0)));
+        }
+        let batch = b.next_batch(t0).expect("full bucket");
+        assert_eq!(batch.rows, 8);
+        assert_eq!(batch.padded, 8);
+        assert_eq!(batch.ids, (0..8).collect::<Vec<_>>());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_waits_until_deadline() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, t0));
+        }
+        assert!(b.next_batch(t0).is_none(), "must wait");
+        let later = t0 + Duration::from_millis(2);
+        let batch = b.next_batch(later).expect("deadline flush");
+        assert_eq!(batch.rows, 3);
+        assert_eq!(batch.padded, 8, "padded to the smallest bucket");
+        // padding rows replicate the last real row
+        assert_eq!(batch.data.len(), 8 * 4);
+        assert_eq!(&batch.data[3 * 4..4 * 4], &batch.data[7 * 4..8 * 4]);
+    }
+
+    #[test]
+    fn prefers_largest_full_bucket() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        for i in 0..40 {
+            b.push(req(i, t0));
+        }
+        let batch = b.next_batch(t0).unwrap();
+        assert_eq!(batch.padded, 32);
+        assert_eq!(b.len(), 8);
+    }
+
+    #[test]
+    fn backpressure_rejects() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        for i in 0..64 {
+            assert!(b.push(req(i, t0)));
+        }
+        assert!(!b.push(req(99, t0)));
+        assert_eq!(b.rejected, 1);
+    }
+
+    #[test]
+    fn fifo_order_property() {
+        run_cases(71, 40, |rng| {
+            let mut b = Batcher::new(cfg());
+            let t0 = Instant::now();
+            let n = 1 + rng.gen_range(60);
+            for i in 0..n as u64 {
+                b.push(req(i, t0));
+            }
+            let mut seen = Vec::new();
+            let late = t0 + Duration::from_secs(1);
+            while let Some(batch) = b.next_batch(late) {
+                assert!(batch.padded % 8 == 0, "mult-of-8 invariant");
+                assert!(batch.rows <= batch.padded);
+                seen.extend(batch.ids);
+            }
+            assert_eq!(seen, (0..n as u64).collect::<Vec<_>>(), "FIFO order");
+        });
+    }
+}

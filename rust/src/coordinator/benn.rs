@@ -1,0 +1,148 @@
+//! BENN ensemble coordinator (§7.6): K BNN components execute
+//! concurrently (one per "GPU" = worker), outputs merged by bagging or
+//! boosting through a modeled collective.
+//!
+//! Reproduces Figs 27–28: per-component inference time (from the Turing
+//! cost model) + communication time (from `comm`), for scale-up (PCIe
+//! NCCL inside one node) and scale-out (IB MPI across nodes).
+
+use crate::nn::{model_cost, ModelDef, ResidualMode, Scheme};
+use crate::sim::GpuModel;
+
+use super::comm::Fabric;
+
+/// The three ensemble strategies of Zhu et al. evaluated in Fig 27.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ensemble {
+    /// majority vote over argmax labels (tiny payload)
+    HardBagging,
+    /// mean of softmax/logit vectors (full logits payload)
+    SoftBagging,
+    /// weighted sum of logits (boosting weights applied locally)
+    Boosting,
+}
+
+impl Ensemble {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Ensemble::HardBagging => "hard-bagging",
+            Ensemble::SoftBagging => "soft-bagging",
+            Ensemble::Boosting => "boosting",
+        }
+    }
+
+    /// Bytes each component contributes for a batch.
+    pub fn payload_bytes(&self, batch: usize, classes: usize) -> usize {
+        match self {
+            // one int32 label per image
+            Ensemble::HardBagging => batch * 4,
+            // full logits
+            Ensemble::SoftBagging | Ensemble::Boosting => batch * classes * 4,
+        }
+    }
+}
+
+/// Breakdown of one BENN inference round.
+#[derive(Clone, Debug)]
+pub struct BennCost {
+    pub components: usize,
+    pub compute_s: f64,
+    pub comm_s: f64,
+}
+
+impl BennCost {
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.comm_s
+    }
+}
+
+/// Cost of a K-component BENN on `fabric`.
+///
+/// Components run concurrently on identical GPUs, so compute time is one
+/// component's inference (plus a small straggler penalty growing with
+/// K); the merge is a K-way collective of the ensemble payload.
+pub fn benn_cost(
+    model: &ModelDef,
+    batch: usize,
+    gpu: &GpuModel,
+    scheme: Scheme,
+    components: usize,
+    fabric: Fabric,
+    ensemble: Ensemble,
+) -> BennCost {
+    let single =
+        model_cost(model, batch, gpu, scheme, ResidualMode::Full, true).total_secs;
+    // straggler effect: max of K iid component times (~2% spread per
+    // doubling, matching the paper's near-flat compute bars)
+    let straggle = 1.0 + 0.02 * (components as f64).log2().max(0.0);
+    let compute = single * straggle;
+    let payload = ensemble.payload_bytes(batch, model.classes);
+    let comm = match ensemble {
+        Ensemble::HardBagging => fabric.gather_time(components, payload),
+        _ => fabric.reduce_time(components, payload),
+    };
+    BennCost { components, compute_s: compute, comm_s: comm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::comm::{IB_MPI, PCIE_NCCL};
+    use crate::nn::model::imagenet_resnet18;
+    use crate::sim::RTX2080TI;
+
+    fn cost(n: usize, fabric: Fabric, e: Ensemble) -> BennCost {
+        benn_cost(
+            &imagenet_resnet18(),
+            128,
+            &RTX2080TI,
+            Scheme::BtcFmt,
+            n,
+            fabric,
+            e,
+        )
+    }
+
+    #[test]
+    fn scale_up_comm_is_tiny() {
+        // Fig 27: "the communication overhead is tiny" over NCCL/PCIe
+        for n in [2usize, 4, 8] {
+            let c = cost(n, PCIE_NCCL, Ensemble::SoftBagging);
+            assert!(
+                c.comm_s < 0.15 * c.compute_s,
+                "n={n}: comm {} vs compute {}",
+                c.comm_s,
+                c.compute_s
+            );
+        }
+    }
+
+    #[test]
+    fn scale_out_comm_surges() {
+        // Fig 28: "with 8 GPUs the communication latency is even higher
+        // than the BNN inference itself" — within a factor band
+        let c8 = cost(8, IB_MPI, Ensemble::SoftBagging);
+        assert!(
+            c8.comm_s > 0.5 * c8.compute_s,
+            "comm {} compute {}",
+            c8.comm_s,
+            c8.compute_s
+        );
+        let c2 = cost(2, IB_MPI, Ensemble::SoftBagging);
+        assert!(c8.comm_s > c2.comm_s);
+    }
+
+    #[test]
+    fn hard_bagging_cheapest_merge() {
+        let hard = cost(8, IB_MPI, Ensemble::HardBagging);
+        let soft = cost(8, IB_MPI, Ensemble::SoftBagging);
+        assert!(hard.comm_s < soft.comm_s);
+    }
+
+    #[test]
+    fn compute_nearly_flat_in_k() {
+        let c1 = cost(1, PCIE_NCCL, Ensemble::Boosting);
+        let c8 = cost(8, PCIE_NCCL, Ensemble::Boosting);
+        assert!(c8.compute_s < c1.compute_s * 1.1);
+    }
+}

@@ -1,0 +1,102 @@
+//! Interconnect models for BENN scaling (§7.6): intra-node PCIe with
+//! NCCL ring reduction, and inter-node InfiniBand with MPI_Reduce.
+//!
+//! The paper's testbed: 8 nodes x 8 RTX-2080Ti, PCIe inside a node,
+//! IB between nodes.  Scale-up merges over NCCL (cheap); scale-out over
+//! MPI (latency-heavy) — Figs 27/28's contrast.
+
+/// One interconnect fabric.
+#[derive(Clone, Copy, Debug)]
+pub struct Fabric {
+    pub name: &'static str,
+    /// per-message software + wire latency, seconds
+    pub latency_s: f64,
+    /// point-to-point bandwidth, bytes/second
+    pub bw_bytes: f64,
+    /// per-hop software overhead of the collective implementation
+    pub sw_overhead_s: f64,
+}
+
+/// PCIe 3.0 x16 inside a node (≈ 12 GB/s effective) with NCCL.
+pub const PCIE_NCCL: Fabric = Fabric {
+    name: "PCIe+NCCL",
+    latency_s: 8.0e-6,
+    bw_bytes: 12.0e9,
+    sw_overhead_s: 4.0e-6,
+};
+
+/// 100 Gb/s InfiniBand between nodes with MPI_Reduce (Intel MPI).
+/// Calibrated to the paper's Fig 28 observation that the 8-node MPI
+/// merge costs as much as the ResNet-18 inference itself: the dominant
+/// terms are per-message software latency and cross-node process skew,
+/// not wire bandwidth.
+pub const IB_MPI: Fabric = Fabric {
+    name: "IB+MPI",
+    latency_s: 200.0e-6,
+    bw_bytes: 10.0e9,
+    sw_overhead_s: 800.0e-6,
+};
+
+impl Fabric {
+    /// Time for a ring all-reduce/reduce of `bytes` over `n` peers.
+    ///
+    /// Ring reduction: 2*(n-1) steps, each moving bytes/n, plus the
+    /// per-step latency; degenerates to 0 for n <= 1.
+    pub fn reduce_time(&self, n: usize, bytes: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let steps = (n - 1) as f64;
+        let chunk = bytes as f64 / n as f64;
+        self.sw_overhead_s
+            + steps * (self.latency_s + chunk / self.bw_bytes)
+    }
+
+    /// Time to gather `bytes` from each of `n` peers to a root
+    /// (tree gather; used for hard-bagging's argmax votes).
+    pub fn gather_time(&self, n: usize, bytes: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let levels = (n as f64).log2().ceil();
+        self.sw_overhead_s
+            + levels * (self.latency_s + bytes as f64 / self.bw_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_peer_is_free() {
+        assert_eq!(PCIE_NCCL.reduce_time(1, 1 << 20), 0.0);
+        assert_eq!(IB_MPI.gather_time(1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn ib_much_slower_than_pcie_for_small_reductions() {
+        // Fig 27 vs 28: the BENN merge is small (logits), so latency
+        // dominates and IB+MPI >> PCIe+NCCL
+        let bytes = 128 * 1000 * 4; // batch 128 x 1000 classes fp32
+        for n in [2usize, 4, 8] {
+            let pcie = PCIE_NCCL.reduce_time(n, bytes);
+            let ib = IB_MPI.reduce_time(n, bytes);
+            assert!(ib > 2.0 * pcie, "n={n}: ib {ib} pcie {pcie}");
+        }
+    }
+
+    #[test]
+    fn reduce_grows_with_peers() {
+        let b = 1 << 20;
+        assert!(IB_MPI.reduce_time(8, b) > IB_MPI.reduce_time(2, b));
+        assert!(PCIE_NCCL.reduce_time(8, b) > PCIE_NCCL.reduce_time(2, b));
+    }
+
+    #[test]
+    fn bandwidth_term_matters_for_big_payloads() {
+        let small = PCIE_NCCL.reduce_time(8, 1024);
+        let big = PCIE_NCCL.reduce_time(8, 1 << 28);
+        assert!(big > 10.0 * small);
+    }
+}

@@ -1,0 +1,117 @@
+//! Serving metrics: latency histogram + throughput counters.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    latencies: Vec<f64>,
+    completed: u64,
+    batches: u64,
+    padded_rows: u64,
+    real_rows: u64,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&self, real_rows: usize, padded_rows: usize, latencies_s: &[f64]) {
+        let mut m = self.inner.lock().unwrap();
+        if m.started.is_none() {
+            m.started = Some(Instant::now());
+        }
+        m.finished = Some(Instant::now());
+        m.batches += 1;
+        m.real_rows += real_rows as u64;
+        m.padded_rows += padded_rows as u64;
+        m.completed += latencies_s.len() as u64;
+        m.latencies.extend_from_slice(latencies_s);
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::from(&self.inner.lock().unwrap().latencies)
+    }
+
+    /// Completed requests / wall time between first and last batch.
+    pub fn throughput_fps(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        match (m.started, m.finished) {
+            (Some(s), Some(f)) if f > s => {
+                m.completed as f64 / (f - s).as_secs_f64()
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Fraction of executed rows that were padding (batcher efficiency).
+    pub fn padding_overhead(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.padded_rows == 0 {
+            0.0
+        } else {
+            1.0 - m.real_rows as f64 / m.padded_rows as f64
+        }
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.inner.lock().unwrap().completed
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.inner.lock().unwrap().batches
+    }
+
+    pub fn report(&self) -> String {
+        let s = self.latency_summary();
+        format!(
+            "requests={} batches={} p50={:.3}ms p90={:.3}ms p99={:.3}ms \
+             mean={:.3}ms throughput={:.0} req/s padding={:.1}%",
+            self.completed(),
+            self.batches(),
+            s.p50 * 1e3,
+            s.p90 * 1e3,
+            s.p99 * 1e3,
+            s.mean * 1e3,
+            self.throughput_fps(),
+            self.padding_overhead() * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        m.record_batch(8, 8, &[0.001; 8]);
+        m.record_batch(3, 8, &[0.002; 3]);
+        assert_eq!(m.completed(), 11);
+        assert_eq!(m.batches(), 2);
+        let s = m.latency_summary();
+        assert!(s.p50 >= 0.001 && s.p50 <= 0.002);
+        let pad = m.padding_overhead();
+        assert!((pad - (1.0 - 11.0 / 16.0)).abs() < 1e-9);
+        assert!(m.report().contains("requests=11"));
+    }
+
+    #[test]
+    fn empty_is_sane() {
+        let m = Metrics::new();
+        assert_eq!(m.throughput_fps(), 0.0);
+        assert_eq!(m.padding_overhead(), 0.0);
+    }
+}

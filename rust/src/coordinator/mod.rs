@@ -1,0 +1,26 @@
+//! Layer-3 inference coordinator — the serving stack around the PJRT
+//! runtime.
+//!
+//! Request path (all rust, no python):
+//!
+//! ```text
+//!   clients -> Router -> per-model Batcher (multiple-of-8 batches,
+//!   deadline-driven) -> worker threads (PJRT executables per batch
+//!   bucket) -> responses + Metrics
+//! ```
+//!
+//! `benn` adds the §7.6 multi-GPU BENN ensemble: one worker per "GPU",
+//! outputs merged through modeled NCCL/PCIe (scale-up) or MPI/IB
+//! (scale-out) collectives.
+
+pub mod batcher;
+pub mod benn;
+pub mod comm;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use router::{Policy, Router};
+pub use server::{InferenceServer, ServerConfig};

@@ -1,0 +1,184 @@
+//! Multi-model request router: the front door of the serving stack.
+//!
+//! Each registered model gets its own `InferenceServer` (worker thread +
+//! batcher); the router dispatches by model name and exposes aggregate
+//! stats.  This is the piece that turns the single-model server into the
+//! "deploy several BNN variants behind one endpoint" topology (e.g. the
+//! per-bucket MLPs, or the components of a BENN ensemble colocated on
+//! one host).
+
+use std::collections::HashMap;
+use std::sync::mpsc::Receiver;
+
+use anyhow::{bail, Result};
+
+use super::server::{BatchModel, InferenceServer, Response, ServerConfig};
+
+/// Routing policy when a model has several replicas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// round-robin over replicas
+    RoundRobin,
+    /// send to the replica with the fewest completed requests in flight
+    /// (approximated by completed counts; cheap and contention-free)
+    LeastLoaded,
+}
+
+struct Entry {
+    replicas: Vec<InferenceServer>,
+    next: std::sync::atomic::AtomicUsize,
+}
+
+/// The router.
+pub struct Router {
+    models: HashMap<String, Entry>,
+    pub policy: Policy,
+}
+
+impl Router {
+    pub fn new(policy: Policy) -> Router {
+        Router { models: HashMap::new(), policy }
+    }
+
+    /// Register `replicas` instances of a model under `name`.
+    pub fn register<F>(
+        &mut self,
+        name: &str,
+        replicas: usize,
+        cfg: ServerConfig,
+        factory: F,
+    ) where
+        F: Fn() -> Result<Box<dyn BatchModel>> + Send + Sync + Clone + 'static,
+    {
+        assert!(replicas > 0);
+        let servers = (0..replicas)
+            .map(|_| {
+                let f = factory.clone();
+                InferenceServer::start(cfg.clone(), move || f())
+            })
+            .collect();
+        self.models.insert(
+            name.to_string(),
+            Entry { replicas: servers, next: std::sync::atomic::AtomicUsize::new(0) },
+        );
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    fn pick(&self, e: &Entry) -> usize {
+        match self.policy {
+            Policy::RoundRobin => {
+                e.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+                    % e.replicas.len()
+            }
+            Policy::LeastLoaded => e
+                .replicas
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.metrics.completed())
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
+    }
+
+    /// Route one request; returns the response channel.
+    pub fn submit(&self, model: &str, input: Vec<f32>) -> Result<Receiver<Response>> {
+        let Some(e) = self.models.get(model) else {
+            bail!("unknown model {model:?} (registered: {:?})", self.model_names());
+        };
+        let idx = self.pick(e);
+        Ok(e.replicas[idx].submit(input))
+    }
+
+    /// Aggregate completed-request count across all models/replicas.
+    pub fn total_completed(&self) -> u64 {
+        self.models
+            .values()
+            .flat_map(|e| e.replicas.iter())
+            .map(|s| s.metrics.completed())
+            .sum()
+    }
+
+    /// Per-model metric report lines.
+    pub fn report(&self) -> String {
+        let mut lines = Vec::new();
+        for name in self.model_names() {
+            let e = &self.models[&name];
+            for (i, s) in e.replicas.iter().enumerate() {
+                lines.push(format!("{name}[{i}]: {}", s.metrics.report()));
+            }
+        }
+        lines.join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::MockModel;
+    use std::time::Duration;
+
+    fn mock_factory(
+        out: usize,
+    ) -> impl Fn() -> Result<Box<dyn BatchModel>> + Send + Sync + Clone + 'static {
+        move || {
+            Ok(Box::new(MockModel {
+                row_elems: 4,
+                out_elems: out,
+                delay: Duration::ZERO,
+            }) as Box<dyn BatchModel>)
+        }
+    }
+
+    #[test]
+    fn routes_by_model_name() {
+        let mut r = Router::new(Policy::RoundRobin);
+        r.register("a", 1, ServerConfig::default(), mock_factory(2));
+        r.register("b", 1, ServerConfig::default(), mock_factory(5));
+        let ra = r.submit("a", vec![1.0; 4]).unwrap().recv().unwrap();
+        let rb = r.submit("b", vec![1.0; 4]).unwrap().recv().unwrap();
+        assert_eq!(ra.logits.len(), 2);
+        assert_eq!(rb.logits.len(), 5);
+        assert_eq!(r.model_names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let r = Router::new(Policy::RoundRobin);
+        assert!(r.submit("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn round_robin_spreads_replicas() {
+        let mut r = Router::new(Policy::RoundRobin);
+        r.register("m", 3, ServerConfig::default(), mock_factory(1));
+        let rxs: Vec<_> = (0..30)
+            .map(|i| r.submit("m", vec![i as f32; 4]).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(r.total_completed(), 30);
+        // every replica should have seen some work
+        let e = &r.models["m"];
+        for (i, s) in e.replicas.iter().enumerate() {
+            assert!(s.metrics.completed() > 0, "replica {i} starved");
+        }
+    }
+
+    #[test]
+    fn least_loaded_policy_works() {
+        let mut r = Router::new(Policy::LeastLoaded);
+        r.register("m", 2, ServerConfig::default(), mock_factory(1));
+        for i in 0..20 {
+            let rx = r.submit("m", vec![i as f32; 4]).unwrap();
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(r.total_completed(), 20);
+        assert!(r.report().contains("m[0]"));
+    }
+}

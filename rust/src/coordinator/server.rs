@@ -1,0 +1,309 @@
+//! The inference server: router + batcher + worker loop.
+//!
+//! The worker thread owns the PJRT engine (the xla client is not Send +
+//! Sync, so it is constructed inside the worker — matching the paper's
+//! one-process-per-GPU topology).  Clients submit requests through a
+//! channel and receive responses on per-request channels.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::{Batcher, BatcherConfig, Request};
+use super::metrics::Metrics;
+
+/// A batch-executing model.  Implementations: the PJRT MLP (serve_mnist)
+/// and the in-process mock used by coordinator tests.
+pub trait BatchModel {
+    /// Execute `padded` rows of `row_elems` floats; return logits
+    /// (padded x out_elems, row-major).
+    fn run_batch(&mut self, data: &[f32], padded: usize) -> Result<Vec<f32>>;
+    fn row_elems(&self) -> usize;
+    fn out_elems(&self) -> usize;
+    /// Batch sizes this model was compiled for.
+    fn buckets(&self) -> Vec<usize>;
+}
+
+/// One response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub argmax: usize,
+    pub latency: Duration,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub max_wait: Duration,
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_wait: Duration::from_millis(2), queue_capacity: 8192 }
+    }
+}
+
+enum Msg {
+    Infer(Request, Sender<Response>),
+    Shutdown,
+}
+
+/// Handle used by clients to talk to a running server.
+pub struct InferenceServer {
+    tx: Sender<Msg>,
+    pub metrics: Arc<Metrics>,
+    worker: Option<JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl InferenceServer {
+    /// Start the worker.  `factory` builds the model inside the worker
+    /// thread (PJRT clients are not Send).
+    pub fn start<F>(cfg: ServerConfig, factory: F) -> InferenceServer
+    where
+        F: FnOnce() -> Result<Box<dyn BatchModel>> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = Arc::clone(&metrics);
+        let worker = std::thread::Builder::new()
+            .name("tcbnn-server".into())
+            .spawn(move || worker_loop(cfg, factory, rx, m2))
+            .expect("spawn server worker");
+        InferenceServer {
+            tx,
+            metrics,
+            worker: Some(worker),
+            next_id: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Submit one request; returns the channel the response arrives on.
+    pub fn submit(&self, input: Vec<f32>) -> Receiver<Response> {
+        let (rtx, rrx) = channel();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let req = Request { id, input, enqueued: Instant::now() };
+        let _ = self.tx.send(Msg::Infer(req, rtx));
+        rrx
+    }
+
+    /// Submit many inputs and wait for all responses (closed loop).
+    pub fn submit_all(&self, inputs: Vec<Vec<f32>>) -> Vec<Response> {
+        let receivers: Vec<Receiver<Response>> =
+            inputs.into_iter().map(|x| self.submit(x)).collect();
+        receivers
+            .into_iter()
+            .map(|r| r.recv().expect("server alive"))
+            .collect()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop<F>(
+    cfg: ServerConfig,
+    factory: F,
+    rx: Receiver<Msg>,
+    metrics: Arc<Metrics>,
+) where
+    F: FnOnce() -> Result<Box<dyn BatchModel>>,
+{
+    let mut model = factory().expect("model factory");
+    let bcfg = BatcherConfig {
+        buckets: model.buckets(),
+        max_wait: cfg.max_wait,
+        row_elems: model.row_elems(),
+        capacity: cfg.queue_capacity,
+    };
+    let mut batcher = Batcher::new(bcfg);
+    let mut waiters: std::collections::HashMap<u64, Sender<Response>> =
+        std::collections::HashMap::new();
+    let mut enqueue_times: std::collections::HashMap<u64, Instant> =
+        std::collections::HashMap::new();
+    let mut shutting_down = false;
+
+    loop {
+        // 1. drain the channel (block briefly when idle)
+        loop {
+            let msg = if batcher.is_empty() && !shutting_down {
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(_) => {
+                        shutting_down = true;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(_) => {
+                        shutting_down = true;
+                        break;
+                    }
+                }
+            };
+            match msg {
+                Msg::Infer(req, resp_tx) => {
+                    waiters.insert(req.id, resp_tx);
+                    enqueue_times.insert(req.id, req.enqueued);
+                    if !batcher.push(req) {
+                        // backpressure: drop the waiter (client sees a
+                        // closed channel)
+                        // (rejected counter lives in the batcher)
+                    }
+                }
+                Msg::Shutdown => {
+                    shutting_down = true;
+                }
+            }
+        }
+
+        // 2. form + run batches
+        let now = Instant::now();
+        // when shutting down, flush whatever is left regardless of wait
+        let deadline_now = if shutting_down {
+            now + Duration::from_secs(3600)
+        } else {
+            now
+        };
+        if let Some(batch) = batcher.next_batch(deadline_now) {
+            let logits = model
+                .run_batch(&batch.data, batch.padded)
+                .context("batch execution")
+                .expect("model run");
+            let out = model.out_elems();
+            let done = Instant::now();
+            // record metrics BEFORE responding so a client that has all
+            // its responses also sees the final counters
+            let lats: Vec<f64> = batch
+                .ids
+                .iter()
+                .map(|id| {
+                    (done - enqueue_times.remove(id).unwrap_or(done)).as_secs_f64()
+                })
+                .collect();
+            metrics.record_batch(batch.rows, batch.padded, &lats);
+            for (row, id) in batch.ids.iter().enumerate() {
+                let lat = Duration::from_secs_f64(lats[row]);
+                if let Some(tx) = waiters.remove(id) {
+                    let l = logits[row * out..(row + 1) * out].to_vec();
+                    let argmax = l
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    let _ = tx.send(Response { id: *id, logits: l, argmax, latency: lat });
+                }
+            }
+        } else if shutting_down && batcher.is_empty() {
+            return;
+        }
+    }
+}
+
+/// A trivial in-process model for tests: logits[j] = sum(input) + j.
+pub struct MockModel {
+    pub row_elems: usize,
+    pub out_elems: usize,
+    pub delay: Duration,
+}
+
+impl BatchModel for MockModel {
+    fn run_batch(&mut self, data: &[f32], padded: usize) -> Result<Vec<f32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let mut out = Vec::with_capacity(padded * self.out_elems);
+        for r in 0..padded {
+            let s: f32 =
+                data[r * self.row_elems..(r + 1) * self.row_elems].iter().sum();
+            for j in 0..self.out_elems {
+                out.push(s + j as f32);
+            }
+        }
+        Ok(out)
+    }
+
+    fn row_elems(&self) -> usize {
+        self.row_elems
+    }
+
+    fn out_elems(&self) -> usize {
+        self.out_elems
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        vec![8, 32]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mock_server() -> InferenceServer {
+        InferenceServer::start(ServerConfig::default(), || {
+            Ok(Box::new(MockModel {
+                row_elems: 4,
+                out_elems: 3,
+                delay: Duration::ZERO,
+            }))
+        })
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let srv = mock_server();
+        let resp = srv.submit(vec![1.0, 2.0, 3.0, 4.0]).recv().unwrap();
+        assert_eq!(resp.logits, vec![10.0, 11.0, 12.0]);
+        assert_eq!(resp.argmax, 2);
+    }
+
+    #[test]
+    fn serves_many_and_batches() {
+        let srv = mock_server();
+        let inputs: Vec<Vec<f32>> = (0..100).map(|i| vec![i as f32; 4]).collect();
+        let resps = srv.submit_all(inputs);
+        assert_eq!(resps.len(), 100);
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.logits[0], (i * 4) as f32);
+        }
+        assert!(srv.metrics.batches() >= 4, "work was batched");
+        assert!(srv.metrics.completed() == 100);
+    }
+
+    #[test]
+    fn shutdown_flushes_tail() {
+        let srv = mock_server();
+        let rx = srv.submit(vec![0.5; 4]);
+        srv.shutdown();
+        // the pending request must still have been answered
+        let r = rx.recv().expect("flushed on shutdown");
+        assert_eq!(r.logits[0], 2.0);
+    }
+}

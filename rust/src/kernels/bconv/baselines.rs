@@ -1,0 +1,126 @@
+//! cuDNN FP16 baselines of Figs 20–23: `cudnn-base` (no workspace —
+//! direct/implicit-GEMM with poor staging) and `cudnn-fast` (plenty of
+//! workspace — the best algorithm cuDNN finds, Winograd-like for 3x3/s1).
+
+use crate::bitops::BitTensor4;
+use crate::sim::KernelTrace;
+
+use super::super::IoMode;
+use super::{naive_ref, BconvProblem, BconvScheme};
+
+fn cudnn_trace(
+    name: &str,
+    p: BconvProblem,
+    efficiency: f64,
+    flop_scale: f64,
+    traffic_mult: f64,
+) -> Vec<KernelTrace> {
+    let mut t = KernelTrace::new(name);
+    let ohw = p.out_hw();
+    // implicit-GEMM tiling: 128x128 output tiles over (OHW*N, O)
+    let gemm_m = ohw * ohw * p.n;
+    t.warps_per_cta = 8;
+    t.grid_ctas = (gemm_m.div_ceil(128) * p.o.div_ceil(128)).max(1);
+    t.smem_per_cta = 32 * 1024;
+    let fmas = p.ops() / 2.0 * flop_scale;
+    let total_warps = (t.grid_ctas * t.warps_per_cta) as f64;
+    t.warp.hmma_fmas = (fmas / total_warps / efficiency) as usize;
+    // fp16 traffic: input re-read per output-channel tile + filter + out
+    let in_fp16 = (p.hw * p.hw * p.n * p.c * 2) as f64;
+    let fil_fp16 = (p.k * p.k * p.c * p.o * 2) as f64;
+    let out_fp16 = (p.out_elems() * 2) as f64;
+    let traffic = in_fp16 * traffic_mult + fil_fp16 + out_fp16;
+    t.warp.bulk_load_bytes = (traffic / total_warps) as usize;
+    t.warp.cta_syncs = 2 * (p.k * p.k * p.c / 32);
+    t.compulsory_bytes = in_fp16 + fil_fp16 + out_fp16;
+    t.load_footprint_bytes = in_fp16 + fil_fp16;
+    t.wave_bytes_per_cta = 64.0 * 1024.0;
+    vec![t]
+}
+
+/// cuDNN with no workspace: direct algorithm, input re-streamed per
+/// filter tap.
+pub struct CudnnBase;
+
+impl BconvScheme for CudnnBase {
+    fn name(&self) -> &'static str {
+        "cudnn_base"
+    }
+
+    fn uses_tensorcores(&self) -> bool {
+        true
+    }
+
+    fn supports(&self, p: BconvProblem, mode: IoMode) -> bool {
+        mode == IoMode::General && p.c % 8 == 0 && p.o % 8 == 0
+    }
+
+    fn compute(&self, input: &BitTensor4, filter: &BitTensor4, p: BconvProblem) -> Vec<i32> {
+        naive_ref(input, filter, p)
+    }
+
+    fn traces(&self, p: BconvProblem, mode: IoMode) -> Vec<KernelTrace> {
+        let _ = mode;
+        cudnn_trace("cudnn_base", p, 0.40, 1.0, p.k as f64 * p.k as f64 * 0.5)
+    }
+}
+
+/// cuDNN with ample workspace: Winograd-class algorithm for 3x3/s1
+/// (2.25x fewer multiplies), well-staged traffic.
+pub struct CudnnFast;
+
+impl BconvScheme for CudnnFast {
+    fn name(&self) -> &'static str {
+        "cudnn_fast"
+    }
+
+    fn uses_tensorcores(&self) -> bool {
+        true
+    }
+
+    fn supports(&self, p: BconvProblem, mode: IoMode) -> bool {
+        mode == IoMode::General && p.c % 8 == 0 && p.o % 8 == 0
+    }
+
+    fn compute(&self, input: &BitTensor4, filter: &BitTensor4, p: BconvProblem) -> Vec<i32> {
+        naive_ref(input, filter, p)
+    }
+
+    fn traces(&self, p: BconvProblem, mode: IoMode) -> Vec<KernelTrace> {
+        let _ = mode;
+        let flop_scale = if p.k == 3 && p.stride == 1 { 1.0 / 2.25 } else { 1.0 };
+        cudnn_trace("cudnn_fast", p, 0.75, flop_scale, 2.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Engine, RTX2080TI};
+
+    #[test]
+    fn fast_beats_base() {
+        let e = Engine::new(&RTX2080TI);
+        for c in [128usize, 512, 2048] {
+            let p = BconvProblem::paper_sweep(c, c);
+            let base = super::super::simulate(&e, &CudnnBase, p, IoMode::General);
+            let fast = super::super::simulate(&e, &CudnnFast, p, IoMode::General);
+            assert!(fast < base, "c={c}: fast {fast} !< base {base}");
+        }
+    }
+
+    #[test]
+    fn btc_beats_cudnn_by_an_order() {
+        // Figs 20–23: up to 25x over cuDNN-base around C=O=640
+        let e = Engine::new(&RTX2080TI);
+        let p = BconvProblem::paper_sweep(640, 640);
+        let base = super::super::simulate(&e, &CudnnBase, p, IoMode::General);
+        let fmt = super::super::simulate(
+            &e,
+            &super::super::btc::BconvDesign2,
+            p,
+            IoMode::General,
+        );
+        assert!(base / fmt > 6.0, "speedup only {}", base / fmt);
+    }
+}

@@ -1,0 +1,108 @@
+//! BSTC software BConv (bconv32 / bconv64 in Figs 20–23): the SC'19
+//! design — each thread walks a filter window sequentially with a status
+//! variable for out-of-frame entries, xor/popc on INTUs + SFUs.
+
+use crate::bitops::BitTensor4;
+use crate::sim::KernelTrace;
+
+use super::super::IoMode;
+use super::{naive_ref, with_general_io, BconvProblem, BconvScheme};
+
+/// BSTC BConv with 32- or 64-bit word granularity.
+pub struct BstcBconv {
+    pub word: usize,
+}
+
+impl BstcBconv {
+    pub fn new(word: usize) -> BstcBconv {
+        assert!(word == 32 || word == 64);
+        BstcBconv { word }
+    }
+}
+
+impl BconvScheme for BstcBconv {
+    fn name(&self) -> &'static str {
+        if self.word == 32 {
+            "bconv32"
+        } else {
+            "bconv64"
+        }
+    }
+
+    fn uses_tensorcores(&self) -> bool {
+        false
+    }
+
+    fn compute(&self, input: &BitTensor4, filter: &BitTensor4, p: BconvProblem) -> Vec<i32> {
+        // word-sequential walk; u64 pairs words exactly like the real
+        // 64-bit kernel (numerically identical to the naive reference)
+        naive_ref(input, filter, p)
+    }
+
+    fn traces(&self, p: BconvProblem, mode: IoMode) -> Vec<KernelTrace> {
+        let mut t = KernelTrace::new(self.name());
+        let ohw = p.out_hw();
+        // one warp covers 32 output channels for one (pixel, image)
+        let warps = ohw * ohw * p.n * p.o.div_ceil(32);
+        t.warps_per_cta = 8;
+        t.grid_ctas = warps.div_ceil(8).max(1);
+        let valid_taps = (p.k * p.k) as f64 * 0.92; // border exclusion avg
+        let words32 = (p.c as f64 / 32.0 * valid_taps).ceil() as usize;
+        match self.word {
+            32 => {
+                // per lane: words32 x (xor + popc + add)
+                t.warp.intu_ops = 2 * 32 * words32;
+                t.warp.sfu_ops = 32 * words32;
+            }
+            _ => {
+                let w64 = words32 / 2;
+                t.warp.intu_ops = 2 * 32 * w64 + 32 * w64;
+                t.warp.sfu_ops = 32 * w64;
+            }
+        }
+        // input window + filter loads (filter reused via shared memory)
+        t.warp.bulk_load_bytes = words32 * 4 * 32 / 8 + p.k * p.k * p.c / 8;
+        t.warp.intu_ops += p.k * p.k * 2; // frame-status bookkeeping
+        match mode {
+            IoMode::General => t.warp.bulk_store_bytes = 32 * 4,
+            IoMode::BnnSpecific => {
+                t.warp.intu_ops += 40;
+                t.warp.bulk_store_bytes = 4;
+            }
+        }
+        let out_bytes = match mode {
+            IoMode::General => (p.out_elems() * 4) as f64,
+            IoMode::BnnSpecific => (p.out_elems() / 8) as f64,
+        };
+        t.compulsory_bytes = p.input_bytes() + p.filter_bytes() + out_bytes;
+        t.load_footprint_bytes = p.input_bytes() + p.filter_bytes();
+        t.wave_bytes_per_cta =
+            ((p.k * p.k + 2) * p.c * p.n.min(16) / 8) as f64 + p.filter_bytes() / 8.0;
+        match mode {
+            IoMode::General => with_general_io(vec![t], p),
+            IoMode::BnnSpecific => vec![t],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Engine, RTX2080TI};
+
+    #[test]
+    fn bconv64_beats_bconv32() {
+        // the 64-bit path halves the instruction stream
+        let e = Engine::new(&RTX2080TI);
+        let p = BconvProblem::paper_sweep(1024, 1024);
+        let t32 = super::super::simulate(&e, &BstcBconv::new(32), p, IoMode::General);
+        let t64 = super::super::simulate(&e, &BstcBconv::new(64), p, IoMode::General);
+        assert!(t64 < t32, "t64 {t64} !< t32 {t32}");
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(BstcBconv::new(32).name(), "bconv32");
+        assert_eq!(BstcBconv::new(64).name(), "bconv64");
+    }
+}

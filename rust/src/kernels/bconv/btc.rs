@@ -1,0 +1,215 @@
+//! BTC BConv designs (Listing 6 + the FSB variant, §5.3).
+
+use crate::bitops::{BitTensor4, TensorLayout};
+use crate::sim::{KernelTrace, MemSpace};
+
+use super::super::IoMode;
+use super::{with_general_io, BconvProblem, BconvScheme};
+
+/// Shared warp-tile compute: 8-batch x 8-outch output tiles per pixel,
+/// 128-channel BMMA steps, exclude-amended padding — exactly Listing 6.
+fn btc_compute(input: &BitTensor4, filter: &BitTensor4, p: BconvProblem) -> Vec<i32> {
+    assert_eq!(input.layout, TensorLayout::Hwnc);
+    assert_eq!(filter.layout, TensorLayout::Kkoc);
+    let [h, w, n, c] = input.dims;
+    let [kh, kw, o, _] = filter.dims;
+    let ohw = p.out_hw();
+    let cw = c / 32;
+    let mut out = vec![0i32; ohw * ohw * n * o];
+    for op in 0..ohw {
+        for oq in 0..ohw {
+            for nt in (0..n).step_by(8) {
+                for ot in (0..o).step_by(8) {
+                    // one warp: c_frag accumulates popc; exclude tracked
+                    let mut acc = [[0i32; 8]; 8];
+                    let mut exclude = 0i32;
+                    for r in 0..kh {
+                        for s in 0..kw {
+                            let i = (op * p.stride + r) as isize - p.pad as isize;
+                            let j = (oq * p.stride + s) as isize - p.pad as isize;
+                            if i < 0 || i >= h as isize || j < 0 || j >= w as isize {
+                                exclude += 1;
+                                continue;
+                            }
+                            let (i, j) = (i as usize, j as usize);
+                            // 128-bit channel steps (bmma_sync per step)
+                            for ks in (0..cw).step_by(4) {
+                                let ke = (ks + 4).min(cw);
+                                for (bi, arow) in (nt..nt + 8).enumerate() {
+                                    let a = &input.inner(i, j, arow)[ks..ke];
+                                    for (bj, ocol) in (ot..ot + 8).enumerate() {
+                                        let b = &filter.inner(r, s, ocol)[ks..ke];
+                                        let mut pc = 0u32;
+                                        for (x, y) in a.iter().zip(b.iter()) {
+                                            pc += (x ^ y).count_ones();
+                                        }
+                                        acc[bi][bj] += pc as i32;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // Listing 6 line 36: amendment for padding + Eq 2
+                    let n_valid = (c as i32) * ((kh * kw) as i32 - exclude);
+                    for bi in 0..8 {
+                        for bj in 0..8 {
+                            out[((op * ohw + oq) * n + nt + bi) * o + ot + bj] =
+                                n_valid - 2 * acc[bi][bj];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Core trace shared by the two BTC designs; `ldm` is what differs:
+/// Design-1 loads with the HWNC channel stride (`ldm = C`), the FSB
+/// design with the fixed 128-bit tile stride.
+fn btc_trace(name: &str, p: BconvProblem, mode: IoMode, ldm: usize) -> Vec<KernelTrace> {
+    let mut t = KernelTrace::new(name);
+    let ohw = p.out_hw();
+    let warps = ohw * ohw * (p.n / 8) * (p.o / 8);
+    t.warps_per_cta = 4;
+    t.grid_ctas = warps.div_ceil(4).max(1);
+    // interior point: KK taps x C/128 bmma steps; borders excluded —
+    // average valid-tap fraction folded in
+    let interior = ((ohw * ohw) as f64 - (4 * ohw) as f64 * (p.pad as f64) / 2.0)
+        .max(1.0)
+        / (ohw * ohw) as f64;
+    let steps = ((p.k * p.k * (p.c / 128)) as f64 * interior).ceil() as usize;
+    t.warp.load_tiles(ldm, MemSpace::Global, 2 * steps);
+    t.warp.bmma_same_acc_ops = steps;
+    t.warp.intu_ops = p.k * p.k * 4; // frame checks + exclude bookkeeping
+    match mode {
+        IoMode::General => t.warp.store_tiles(MemSpace::Global, 1),
+        IoMode::BnnSpecific => {
+            t.warp.intu_ops += 80;
+            t.warp.bulk_store_bytes += 8;
+        }
+    }
+    let out_bytes = match mode {
+        IoMode::General => (p.out_elems() * 4) as f64,
+        IoMode::BnnSpecific => (p.out_elems() / 8) as f64,
+    };
+    t.compulsory_bytes = p.input_bytes() + p.filter_bytes() + out_bytes;
+    t.load_footprint_bytes = p.input_bytes() + p.filter_bytes();
+    // pixel-local reuse: a wave works on neighbouring output pixels, so
+    // the resident set is the filter + a halo of input rows, not the
+    // whole activation tensor
+    t.wave_bytes_per_cta =
+        ((p.k * p.k + 2) * p.c * p.n.min(16) / 8) as f64 + p.filter_bytes() / 8.0;
+    match mode {
+        IoMode::General => with_general_io(vec![t], p),
+        IoMode::BnnSpecific => vec![t],
+    }
+}
+
+/// BTC BConv Design-1 (`bmma` in Figs 20–23): HWNC input loaded with
+/// `ldm = in_channels`.
+pub struct BconvDesign1;
+
+impl BconvScheme for BconvDesign1 {
+    fn name(&self) -> &'static str {
+        "bconv_bmma"
+    }
+
+    fn uses_tensorcores(&self) -> bool {
+        true
+    }
+
+    fn compute(&self, input: &BitTensor4, filter: &BitTensor4, p: BconvProblem) -> Vec<i32> {
+        btc_compute(input, filter, p)
+    }
+
+    fn traces(&self, p: BconvProblem, mode: IoMode) -> Vec<KernelTrace> {
+        btc_trace("bconv_bmma", p, mode, p.c)
+    }
+}
+
+/// BTC BConv Design-2 (`bmmafmt`): the (N, C) and (C, O) planes reformed
+/// into 128x8 FSB bit-tiles so `ldm` is pinned at 128.
+pub struct BconvDesign2;
+
+impl BconvScheme for BconvDesign2 {
+    fn name(&self) -> &'static str {
+        "bconv_fmt"
+    }
+
+    fn uses_tensorcores(&self) -> bool {
+        true
+    }
+
+    fn compute(&self, input: &BitTensor4, filter: &BitTensor4, p: BconvProblem) -> Vec<i32> {
+        // the FSB re-tiling only permutes storage within the (N, C) and
+        // (C, O) planes; the arithmetic path is identical
+        btc_compute(input, filter, p)
+    }
+
+    fn traces(&self, p: BconvProblem, mode: IoMode) -> Vec<KernelTrace> {
+        btc_trace("bconv_fmt", p, mode, 128)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Engine, RTX2080TI};
+    use crate::util::Rng;
+
+    #[test]
+    fn exclude_amendment_matches_naive() {
+        let mut rng = Rng::new(23);
+        let p = BconvProblem { hw: 4, n: 8, c: 128, o: 8, k: 3, stride: 1, pad: 1 };
+        let input =
+            BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, &mut rng);
+        let filter =
+            BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, &mut rng);
+        assert_eq!(
+            BconvDesign1.compute(&input, &filter, p),
+            super::super::naive_ref(&input, &filter, p)
+        );
+    }
+
+    #[test]
+    fn corner_outputs_have_reduced_n() {
+        // at a corner with 3x3/pad 1, 5 taps are excluded: the output
+        // range is bounded by 4*C, not 9*C
+        let mut rng = Rng::new(29);
+        let p = BconvProblem { hw: 4, n: 8, c: 128, o: 8, k: 3, stride: 1, pad: 1 };
+        let input =
+            BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, &mut rng);
+        let filter =
+            BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, &mut rng);
+        let out = BconvDesign1.compute(&input, &filter, p);
+        // corner (0,0): bound 4*128 = 512
+        for v in &out[..8 * 8] {
+            assert!(v.abs() <= 512, "corner value {v} out of 4C bound");
+            assert_eq!((v % 2), 0, "parity: 4C-2p is even");
+        }
+    }
+
+    #[test]
+    fn fmt_traces_use_fixed_stride() {
+        let p = BconvProblem::paper_sweep(1024, 1024);
+        for tr in BconvDesign2.traces(p, IoMode::BnnSpecific) {
+            for &(ldm, _, _) in &tr.warp.tile_loads {
+                assert_eq!(ldm, 128);
+            }
+        }
+        let tr1 = &BconvDesign1.traces(p, IoMode::BnnSpecific)[0];
+        assert_eq!(tr1.warp.tile_loads[0].0, 1024);
+    }
+
+    #[test]
+    fn stride2_halves_output_work() {
+        let e = Engine::new(&RTX2080TI);
+        let p1 = BconvProblem::paper_sweep(256, 256);
+        let mut p2 = p1;
+        p2.stride = 2;
+        let t1 = super::super::simulate(&e, &BconvDesign2, p1, IoMode::BnnSpecific);
+        let t2 = super::super::simulate(&e, &BconvDesign2, p2, IoMode::BnnSpecific);
+        assert!(t2 < t1 / 2.0, "stride2 {t2} vs stride1 {t1}");
+    }
+}

@@ -1,0 +1,238 @@
+//! Bit-convolution schemes (§5.3, Figs 20–23).
+//!
+//! Problem convention: activations in HWNC layout packed along C,
+//! filters in KKOC (O-major per tap, packed along C), output
+//! (OH, OW, N, O) i32 — the +/-1 cross-correlation where padded taps are
+//! *excluded* (the paper's amendment for the bit-padding problem).
+
+pub mod baselines;
+pub mod bstc;
+pub mod btc;
+
+use crate::bitops::{BitTensor4, TensorLayout};
+use crate::sim::{Engine, KernelTrace};
+
+use super::IoMode;
+
+/// One BConv instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BconvProblem {
+    /// input height == width
+    pub hw: usize,
+    /// batch
+    pub n: usize,
+    /// input channels
+    pub c: usize,
+    /// output channels
+    pub o: usize,
+    /// filter height == width
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl BconvProblem {
+    /// The Figs 20–23 sweep point: batch=16, input 64x64, 3x3, stride 1.
+    pub fn paper_sweep(c: usize, o: usize) -> BconvProblem {
+        BconvProblem { hw: 64, n: 16, c, o, k: 3, stride: 1, pad: 1 }
+    }
+
+    pub fn out_hw(&self) -> usize {
+        (self.hw + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// +/-1 MAC ops (interior-point count; the TOPS numerator).
+    pub fn ops(&self) -> f64 {
+        2.0 * (self.out_hw() * self.out_hw() * self.n * self.o) as f64
+            * (self.k * self.k * self.c) as f64
+    }
+
+    pub fn input_bytes(&self) -> f64 {
+        (self.hw * self.hw * self.n * self.c / 8) as f64
+    }
+
+    pub fn filter_bytes(&self) -> f64 {
+        (self.k * self.k * self.c * self.o / 8) as f64
+    }
+
+    pub fn out_elems(&self) -> usize {
+        self.out_hw() * self.out_hw() * self.n * self.o
+    }
+}
+
+/// A BConv scheme: functional algorithm + timing trace.
+pub trait BconvScheme {
+    fn name(&self) -> &'static str;
+
+    fn supports(&self, p: BconvProblem, mode: IoMode) -> bool {
+        let _ = mode;
+        p.n % 8 == 0 && p.o % 8 == 0 && p.c % 128 == 0
+    }
+
+    /// Bit-exact +/-1 cross-correlation with excluded padding.
+    /// input: HWNC packed; filter: KKOC packed. Output (OH,OW,N,O) i32.
+    fn compute(&self, input: &BitTensor4, filter: &BitTensor4, p: BconvProblem) -> Vec<i32>;
+
+    fn traces(&self, p: BconvProblem, mode: IoMode) -> Vec<KernelTrace>;
+
+    fn uses_tensorcores(&self) -> bool;
+}
+
+/// Simulated wall time (seconds).
+pub fn simulate(engine: &Engine, s: &dyn BconvScheme, p: BconvProblem, mode: IoMode) -> f64 {
+    s.traces(p, mode)
+        .iter()
+        .map(|t| engine.cost(t).total_secs)
+        .sum()
+}
+
+/// Simulated TOPS.
+pub fn simulate_tops(engine: &Engine, s: &dyn BconvScheme, p: BconvProblem, mode: IoMode) -> f64 {
+    p.ops() / simulate(engine, s, p, mode) / 1e12
+}
+
+/// Naive reference (the Listing-6 semantics, scalar form).
+pub fn naive_ref(input: &BitTensor4, filter: &BitTensor4, p: BconvProblem) -> Vec<i32> {
+    assert_eq!(input.layout, TensorLayout::Hwnc);
+    assert_eq!(filter.layout, TensorLayout::Kkoc);
+    let [h, w, n, c] = input.dims;
+    let [kh, kw, o, c2] = filter.dims;
+    assert_eq!(c, c2);
+    assert_eq!(c, p.c);
+    let ohw = p.out_hw();
+    let mut out = vec![0i32; ohw * ohw * n * o];
+    for op in 0..ohw {
+        for oq in 0..ohw {
+            for r in 0..kh {
+                for s in 0..kw {
+                    let i = (op * p.stride + r) as isize - p.pad as isize;
+                    let j = (oq * p.stride + s) as isize - p.pad as isize;
+                    if i < 0 || i >= h as isize || j < 0 || j >= w as isize {
+                        continue; // excluded tap
+                    }
+                    let (i, j) = (i as usize, j as usize);
+                    for ni in 0..n {
+                        let a = input.inner(i, j, ni);
+                        for oi in 0..o {
+                            let b = filter.inner(r, s, oi);
+                            out[((op * ohw + oq) * n + ni) * o + oi] +=
+                                crate::bitops::pack::pm1_dot(a, b, c);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pre/post kernels for the General protocol: binarize + relayout the
+/// fp32 NHWC input into packed HWNC, and binarize the filter.
+pub fn with_general_io(core: Vec<KernelTrace>, p: BconvProblem) -> Vec<KernelTrace> {
+    let in_elems = p.hw * p.hw * p.n * p.c;
+    let fil_elems = p.k * p.k * p.c * p.o;
+    let mut v = vec![
+        super::bmm::binarize_trace("binarize_input", in_elems),
+        super::bmm::binarize_trace("binarize_filter", fil_elems),
+    ];
+    v.extend(core);
+    v
+}
+
+/// All Figs 20–23 schemes, legend order.
+pub fn all_schemes() -> Vec<Box<dyn BconvScheme>> {
+    vec![
+        Box::new(baselines::CudnnBase),
+        Box::new(baselines::CudnnFast),
+        Box::new(bstc::BstcBconv::new(32)),
+        Box::new(bstc::BstcBconv::new(64)),
+        Box::new(btc::BconvDesign1),
+        Box::new(btc::BconvDesign2),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::RTX2080TI;
+    use crate::util::Rng;
+
+    fn rand_case(rng: &mut Rng, p: BconvProblem) -> (BitTensor4, BitTensor4) {
+        let input = BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, rng);
+        let filter =
+            BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, rng);
+        (input, filter)
+    }
+
+    #[test]
+    fn all_schemes_match_naive_ref() {
+        let mut rng = Rng::new(17);
+        for p in [
+            BconvProblem { hw: 6, n: 8, c: 128, o: 8, k: 3, stride: 1, pad: 1 },
+            BconvProblem { hw: 8, n: 8, c: 128, o: 16, k: 3, stride: 2, pad: 1 },
+            BconvProblem { hw: 5, n: 8, c: 128, o: 8, k: 3, stride: 1, pad: 0 },
+        ] {
+            let (input, filter) = rand_case(&mut rng, p);
+            let want = naive_ref(&input, &filter, p);
+            for s in all_schemes() {
+                if !s.supports(p, IoMode::General) {
+                    continue;
+                }
+                assert_eq!(
+                    s.compute(&input, &filter, p),
+                    want,
+                    "scheme {} disagrees on {:?}",
+                    s.name(),
+                    p
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fsb_bconv_fastest_at_large_channels() {
+        // Figs 20–23: the FSB-format design dominates for C=O >= 512
+        let e = Engine::new(&RTX2080TI);
+        for c in [512usize, 1024, 2048] {
+            let p = BconvProblem::paper_sweep(c, c);
+            let times: Vec<(String, f64)> = all_schemes()
+                .iter()
+                .map(|s| {
+                    (s.name().to_string(), simulate(&e, s.as_ref(), p, IoMode::General))
+                })
+                .collect();
+            let best = times
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            assert_eq!(best.0, "bconv_fmt", "c={c}: times {times:?}");
+        }
+    }
+
+    #[test]
+    fn design1_relative_penalty_smallest_at_384() {
+        // §7.3 (ii): at C=O=384 Design-1 profits from ldm=384 being a
+        // fast stride: its gap to the FSB design must be clearly smaller
+        // than at the conflicted strides 512/1024 (and larger than the
+        // exact tie at 128).
+        let e = Engine::new(&RTX2080TI);
+        let ratio = |c: usize| {
+            let p = BconvProblem::paper_sweep(c, c);
+            simulate(&e, &btc::BconvDesign1, p, IoMode::General)
+                / simulate(&e, &btc::BconvDesign2, p, IoMode::General)
+        };
+        let (r384, r512, r1024) = (ratio(384), ratio(512), ratio(1024));
+        assert!(r384 < r512 && r384 < r1024, "r384 {r384} r512 {r512} r1024 {r1024}");
+        assert!(r384 < 1.7, "r384 {r384}");
+    }
+
+    #[test]
+    fn equivalent_at_128_channels() {
+        // §7.3 (i): when C=O=128 the two BTC designs coincide
+        let e = Engine::new(&RTX2080TI);
+        let p = BconvProblem::paper_sweep(128, 128);
+        let d1 = simulate(&e, &btc::BconvDesign1, p, IoMode::General);
+        let d2 = simulate(&e, &btc::BconvDesign2, p, IoMode::General);
+        assert!((d1 - d2).abs() / d2 < 1e-6, "d1 {d1} != fmt {d2}");
+    }
+}

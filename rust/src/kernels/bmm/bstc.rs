@@ -1,0 +1,168 @@
+//! BSTC software BMM baselines (Li et al., SC'19 — reference [26]):
+//! binarized-soft-tensor-core running on the conventional INT units and
+//! SFUs, with 32x32 or 64x64 bit tiles, plus the "fine-grained" variants
+//! that additionally split the K dimension for small-matrix occupancy.
+
+use crate::bitops::BitMatrix;
+use crate::sim::KernelTrace;
+
+use super::super::IoMode;
+use super::{attach_footprints, attach_output, with_general_io, BmmProblem, BmmScheme};
+
+/// BSTC BMM with tile size 32 or 64; `fine` adds K-splitting
+/// (bmm32/bmm64/bmms32/bmms64 in Tables 3–4).
+pub struct BstcBmm {
+    pub tile: usize,
+    pub fine: bool,
+}
+
+impl BstcBmm {
+    pub fn new(tile: usize, fine: bool) -> BstcBmm {
+        assert!(tile == 32 || tile == 64);
+        BstcBmm { tile, fine }
+    }
+
+    /// K-slice bits handled per warp in the fine-grained variant.
+    const FINE_KSLICE: usize = 1024;
+}
+
+impl BmmScheme for BstcBmm {
+    fn name(&self) -> &'static str {
+        match (self.tile, self.fine) {
+            (32, false) => "bmm32",
+            (64, false) => "bmm64",
+            (32, true) => "bmms32",
+            (64, true) => "bmms64",
+            _ => unreachable!(),
+        }
+    }
+
+    fn uses_tensorcores(&self) -> bool {
+        false
+    }
+
+    fn supports(&self, p: BmmProblem, _mode: IoMode) -> bool {
+        p.m % self.tile == 0 && p.n % self.tile == 0 && p.k % 32 == 0
+    }
+
+    fn compute(&self, a: &BitMatrix, b: &BitMatrix) -> Vec<i32> {
+        let (m, n, k) = (a.rows, b.cols, a.cols);
+        let kw = k / 32;
+        let t = self.tile;
+        let mut out = vec![0i32; m * n];
+        // tile loop mirrors the warp decomposition (tile x tile outputs);
+        // 64-bit variant consumes two words per step like its u64 loads.
+        let step = t / 32; // 1 for 32, 2 for 64
+        for bm in (0..m).step_by(t) {
+            for bn in (0..n).step_by(t) {
+                for ks in (0..kw).step_by(step) {
+                    let kend = (ks + step).min(kw);
+                    for r in 0..t {
+                        let ar = &a.line(bm + r)[ks..kend];
+                        for c in 0..t {
+                            let bc = &b.line(bn + c)[ks..kend];
+                            let mut p = 0u32;
+                            if t == 64 && kend - ks == 2 {
+                                // genuine u64 xor+popc path
+                                let x = (ar[0] as u64 | (ar[1] as u64) << 32)
+                                    ^ (bc[0] as u64 | (bc[1] as u64) << 32);
+                                p = x.count_ones();
+                            } else {
+                                for (x, y) in ar.iter().zip(bc.iter()) {
+                                    p += (x ^ y).count_ones();
+                                }
+                            }
+                            out[(bm + r) * n + bn + c] +=
+                                ((kend - ks) * 32) as i32 - 2 * p as i32;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn traces(&self, p: BmmProblem, mode: IoMode) -> Vec<KernelTrace> {
+        let t = self.tile;
+        let mut tr = KernelTrace::new(self.name());
+        let kslice = if self.fine {
+            Self::FINE_KSLICE.min(p.k)
+        } else {
+            p.k
+        };
+        let kparts = p.k.div_ceil(kslice);
+        let warps = (p.m / t) * (p.n / t) * kparts;
+        tr.warps_per_cta = 4;
+        tr.grid_ctas = warps.div_ceil(4).max(1);
+        // word-ops for the slice this warp owns
+        let words = kslice / 32;
+        let word_ops = t * t * words; // (row, col, word) triples
+        match t {
+            32 => {
+                tr.warp.intu_ops = 2 * word_ops; // xor + iadd
+                tr.warp.sfu_ops = word_ops; // popc
+            }
+            _ => {
+                // u64: half the instructions, xor costs 2 lanes each
+                let w64 = word_ops / 2;
+                tr.warp.intu_ops = 2 * w64 + w64; // xor(2) + iadd(1)
+                tr.warp.sfu_ops = w64; // popc64
+            }
+        }
+        // loads: tile rows of A and B, coalesced word loads
+        tr.warp.bulk_load_bytes = 2 * t * (kslice / 8);
+        if self.fine && kparts > 1 {
+            // partial-sum atomics back to global
+            tr.warp.bulk_store_bytes += t * t * 4;
+            tr.warp.intu_ops += t * t;
+        }
+        attach_output(&mut tr, mode, (t / 8) * (t / 8));
+        attach_footprints(&mut tr, p, mode);
+        match mode {
+            IoMode::General => with_general_io(vec![tr], p),
+            IoMode::BnnSpecific => vec![tr],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::Layout;
+    use crate::kernels::bmm::{naive_ref, simulate};
+    use crate::sim::{Engine, RTX2080TI};
+    use crate::util::Rng;
+
+    #[test]
+    fn u64_path_matches_u32_path() {
+        let mut rng = Rng::new(11);
+        let a = BitMatrix::random(64, 256, Layout::RowMajor, &mut rng);
+        let b = BitMatrix::random(256, 64, Layout::ColMajor, &mut rng);
+        let want = naive_ref(&a, &b);
+        assert_eq!(BstcBmm::new(32, false).compute(&a, &b), want);
+        assert_eq!(BstcBmm::new(64, false).compute(&a, &b), want);
+        assert_eq!(BstcBmm::new(64, true).compute(&a, &b), want);
+    }
+
+    #[test]
+    fn fine_grained_wins_on_small_matrices() {
+        // §7.2 (I): "for small matrices the fine-grained 64-bit BSTC is
+        // relatively better" — driven by SM occupancy.
+        let e = Engine::new(&RTX2080TI);
+        let p = BmmProblem::square(256);
+        let coarse = simulate(&e, &BstcBmm::new(64, false), p, IoMode::General);
+        let fine = simulate(&e, &BstcBmm::new(64, true), p, IoMode::General);
+        assert!(fine <= coarse, "fine {fine} !<= coarse {coarse}");
+    }
+
+    #[test]
+    fn bstc_is_not_tensorcore() {
+        assert!(!BstcBmm::new(32, false).uses_tensorcores());
+    }
+
+    #[test]
+    fn names_match_tables() {
+        assert_eq!(BstcBmm::new(32, false).name(), "bmm32");
+        assert_eq!(BstcBmm::new(64, true).name(), "bmms64");
+    }
+}

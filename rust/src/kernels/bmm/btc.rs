@@ -1,0 +1,309 @@
+//! The paper's three BTC BMM designs (§5.2, Listings 3–5).
+
+use crate::bitops::{fsb, BitMatrix, FsbMatrix};
+use crate::sim::{KernelTrace, MemSpace};
+
+use super::super::IoMode;
+use super::{attach_footprints, attach_output, with_general_io, BmmProblem, BmmScheme};
+
+/// Eq-2 product for one 8x8 output tile given packed word slices.
+#[inline]
+fn tile_mma(
+    out: &mut [i32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    a_rows: &[&[u32]],
+    b_cols: &[&[u32]],
+) {
+    for (ri, ar) in a_rows.iter().enumerate() {
+        for (ci, bc) in b_cols.iter().enumerate() {
+            let mut p = 0u32;
+            for (x, y) in ar.iter().zip(bc.iter()) {
+                p += (x ^ y).count_ones();
+            }
+            out[(row0 + ri) * n + col0 + ci] += (ar.len() * 32) as i32 - 2 * p as i32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Design-1: baseline WMMA (Listing 3)
+// ---------------------------------------------------------------------------
+
+/// Design-1 (`bmma`): one warp per 8x8 output tile, K-loop of bmma_sync
+/// into the same accumulator, operands loaded straight from global
+/// memory with ldm = matrix width.
+pub struct Design1;
+
+impl BmmScheme for Design1 {
+    fn name(&self) -> &'static str {
+        "bmma"
+    }
+
+    fn uses_tensorcores(&self) -> bool {
+        true
+    }
+
+    fn compute(&self, a: &BitMatrix, b: &BitMatrix) -> Vec<i32> {
+        let (m, n, k) = (a.rows, b.cols, a.cols);
+        let mut out = vec![0i32; m * n];
+        let kw = k / 32;
+        // warp loop: one 8x8 tile at a time, 128-bit K steps
+        for bt in (0..m).step_by(8) {
+            for by in (0..n).step_by(8) {
+                for ks in (0..kw).step_by(4) {
+                    let kend = (ks + 4).min(kw);
+                    let a_rows: Vec<&[u32]> =
+                        (0..8).map(|r| &a.line(bt + r)[ks..kend]).collect();
+                    let b_cols: Vec<&[u32]> =
+                        (0..8).map(|c| &b.line(by + c)[ks..kend]).collect();
+                    tile_mma(&mut out, n, bt, by, &a_rows, &b_cols);
+                }
+            }
+        }
+        out
+    }
+
+    fn traces(&self, p: BmmProblem, mode: IoMode) -> Vec<KernelTrace> {
+        let mut t = KernelTrace::new("bmma");
+        let warps = (p.m / 8) * (p.n / 8);
+        t.warps_per_cta = 2; // Listing 3: two warps per CTA for occupancy
+        t.grid_ctas = warps.div_ceil(2).max(1);
+        let ksteps = p.k / 128;
+        // operands in the sequential format: ldm = matrix width (k)
+        t.warp.load_tiles(p.k, MemSpace::Global, 2 * ksteps);
+        t.warp.bmma_same_acc_ops = ksteps; // same c_frag accumulator
+        attach_output(&mut t, mode, 1);
+        attach_footprints(&mut t, p, mode);
+        match mode {
+            IoMode::General => with_general_io(vec![t], p),
+            IoMode::BnnSpecific => vec![t],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Design-2: 128-bit vectorized loads + shared-memory staging (Listing 4)
+// ---------------------------------------------------------------------------
+
+/// Design-2 (`bmma128`): a representative warp stages 4096-bit segments
+/// of A and B into shared memory with LDG.E.128, then 16 warps run WMMA
+/// from shared (load_matrix_sync is ~5x faster there, §4.1).
+pub struct Design2;
+
+impl BmmScheme for Design2 {
+    fn name(&self) -> &'static str {
+        "bmma128"
+    }
+
+    fn uses_tensorcores(&self) -> bool {
+        true
+    }
+
+    fn supports(&self, p: BmmProblem, _mode: IoMode) -> bool {
+        p.m % 128 == 0 && p.n % 128 == 0 && p.k % 128 == 0
+    }
+
+    fn compute(&self, a: &BitMatrix, b: &BitMatrix) -> Vec<i32> {
+        let (m, n, k) = (a.rows, b.cols, a.cols);
+        let mut out = vec![0i32; m * n];
+        let kw = k / 32;
+        // CTA loop: 128x128 output tile; k-steps of 128 bits staged to
+        // "shared" (modeled by slicing; numerics identical)
+        for bm in (0..m).step_by(128) {
+            for bn in (0..n).step_by(128) {
+                for ks in (0..kw).step_by(4) {
+                    let kend = (ks + 4).min(kw);
+                    // 16 warps: warp w owns rows bm+8w..bm+8w+8, all cols
+                    for w in 0..16 {
+                        let r0 = bm + 8 * w;
+                        let a_rows: Vec<&[u32]> =
+                            (0..8).map(|r| &a.line(r0 + r)[ks..kend]).collect();
+                        for ct in 0..16 {
+                            let c0 = bn + 8 * ct;
+                            let b_cols: Vec<&[u32]> =
+                                (0..8).map(|c| &b.line(c0 + c)[ks..kend]).collect();
+                            tile_mma(&mut out, n, r0, c0, &a_rows, &b_cols);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn traces(&self, p: BmmProblem, mode: IoMode) -> Vec<KernelTrace> {
+        let mut t = KernelTrace::new("bmma128");
+        t.warps_per_cta = 16; // Listing 4: 512-thread CTAs
+        t.grid_ctas = ((p.m / 128) * (p.n / 128)).max(1);
+        t.smem_per_cta = 4096; // As + Bs double buffers
+        let ksteps = p.k / 128;
+        // staging: per CTA per step 2 x 2KB via LDG.E.128, split across warps
+        t.warp.bulk_load_bytes = ksteps * 4096 / 16;
+        t.warp.shared_store_bytes = ksteps * 4096 / 16; // written into As/Bs
+        // per warp per step: 1 A-strip + 16 B tiles from shared (compact,
+        // ldm = 128), 16 bmma into 16 distinct accumulators (pipelined)
+        t.warp.load_tiles(128, MemSpace::Shared, ksteps * 17);
+        t.warp.bmma_ops = ksteps * 16;
+        t.warp.cta_syncs = 2 * ksteps;
+        // swizzled staging keeps one wave's panels L2-resident
+        t.wave_bytes_per_cta = (2 * 128 * p.k / 8) as f64;
+        attach_output(&mut t, mode, 16);
+        attach_footprints(&mut t, p, mode);
+        match mode {
+            IoMode::General => with_general_io(vec![t], p),
+            IoMode::BnnSpecific => vec![t],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Design-3: FSB fixed-stride format (Listing 5)
+// ---------------------------------------------------------------------------
+
+/// Design-3 (`bmmafmt`): operands pre-converted to the FSB 128x8-bit
+/// tile format so every global load_matrix_sync runs at the fast fixed
+/// stride ldm = 128; output binarization fused via __ballot in the
+/// BNN-specific protocol.
+pub struct Design3;
+
+impl BmmScheme for Design3 {
+    fn name(&self) -> &'static str {
+        "bmmafmt"
+    }
+
+    fn uses_tensorcores(&self) -> bool {
+        true
+    }
+
+    fn compute(&self, a: &BitMatrix, b: &BitMatrix) -> Vec<i32> {
+        // genuinely run from the FSB image (so the format conversion is
+        // on the tested path)
+        let fa = FsbMatrix::from_bitmatrix(a);
+        let fb = FsbMatrix::from_bitmatrix(b);
+        let (m, n, k) = (a.rows, b.cols, a.cols);
+        let mut out = vec![0i32; m * n];
+        let ktiles = k.div_ceil(fsb::BW);
+        for ty in 0..m.div_ceil(fsb::BH) {
+            for tb in 0..n.div_ceil(fsb::BH) {
+                for kt in 0..ktiles {
+                    let a_rows: Vec<&[u32]> =
+                        (0..8).map(|r| fa.tile_row(ty, kt, r)).collect();
+                    let b_cols: Vec<&[u32]> =
+                        (0..8).map(|c| fb.tile_row(tb, kt, c)).collect();
+                    // logical bits beyond k are zero in BOTH operands, so
+                    // xor contributes 0 and Eq 2 pads cancel:
+                    // (128-pad zeros) xor (zeros) = 0 disagreements, and
+                    // tile_mma uses full 128-bit rows; compensate length.
+                    tile_mma_padaware(
+                        &mut out, n, ty * 8, tb * 8, &a_rows, &b_cols, k, kt,
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    fn traces(&self, p: BmmProblem, mode: IoMode) -> Vec<KernelTrace> {
+        let mut t = KernelTrace::new("bmmafmt");
+        let warps = (p.m / 8) * (p.n / 8);
+        t.warps_per_cta = 2;
+        t.grid_ctas = warps.div_ceil(2).max(1);
+        let ksteps = p.k / 128;
+        // the whole point: fixed ldm = 128 regardless of matrix width
+        t.warp.load_tiles(128, MemSpace::Global, 2 * ksteps);
+        t.warp.bmma_same_acc_ops = ksteps;
+        attach_output(&mut t, mode, 1);
+        attach_footprints(&mut t, p, mode);
+        match mode {
+            IoMode::General => with_general_io(vec![t], p),
+            IoMode::BnnSpecific => vec![t],
+        }
+    }
+}
+
+/// Like `tile_mma` but aware that the last K tile may be padded: FSB pad
+/// bits are 0 in both operands (xor = 0), which *undercounts* Eq 2's n
+/// term; use the true remaining bit count instead of 128.
+#[inline]
+fn tile_mma_padaware(
+    out: &mut [i32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    a_rows: &[&[u32]],
+    b_cols: &[&[u32]],
+    k: usize,
+    kt: usize,
+) {
+    let bits_before = kt * fsb::BW;
+    let bits_here = (k - bits_before).min(fsb::BW);
+    for (ri, ar) in a_rows.iter().enumerate() {
+        let r = row0 + ri;
+        if r * n >= out.len() {
+            break;
+        }
+        for (ci, bc) in b_cols.iter().enumerate() {
+            let c = col0 + ci;
+            if c >= n {
+                break;
+            }
+            let mut p = 0u32;
+            for (x, y) in ar.iter().zip(bc.iter()) {
+                p += (x ^ y).count_ones();
+            }
+            out[r * n + c] += bits_here as i32 - 2 * p as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::Layout;
+    use crate::kernels::bmm::naive_ref;
+    use crate::sim::{Engine, RTX2080TI};
+    use crate::util::Rng;
+
+    #[test]
+    fn design3_ldm_always_128() {
+        for p in [BmmProblem::square(1024), BmmProblem::square(8192)] {
+            let traces = Design3.traces(p, IoMode::BnnSpecific);
+            for tr in &traces {
+                for &(ldm, _, _) in &tr.warp.tile_loads {
+                    assert_eq!(ldm, 128);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn design1_ldm_tracks_width() {
+        let p = BmmProblem::square(2048);
+        let traces = Design1.traces(p, IoMode::BnnSpecific);
+        assert_eq!(traces[0].warp.tile_loads[0].0, 2048);
+    }
+
+    #[test]
+    fn design2_beats_design1() {
+        // §7.2 (II): "Design-2 is always better than Design-1" (at the
+        // sub-1K end both are launch-overhead bound and tie in our model)
+        let e = Engine::new(&RTX2080TI);
+        for n in [1024usize, 2048, 4096, 8192] {
+            let p = BmmProblem::square(n);
+            let d1 = super::super::simulate(&e, &Design1, p, IoMode::General);
+            let d2 = super::super::simulate(&e, &Design2, p, IoMode::General);
+            assert!(d2 < d1, "n={n}: d2 {d2} !< d1 {d1}");
+        }
+    }
+
+    #[test]
+    fn fsb_compute_handles_unaligned_k() {
+        // k = 192 exercises the pad-aware tail tile
+        let mut rng = Rng::new(3);
+        let a = BitMatrix::random(16, 192, Layout::RowMajor, &mut rng);
+        let b = BitMatrix::random(192, 16, Layout::ColMajor, &mut rng);
+        assert_eq!(Design3.compute(&a, &b), naive_ref(&a, &b));
+    }
+}

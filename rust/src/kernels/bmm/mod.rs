@@ -1,0 +1,268 @@
+//! Bit-matrix-multiplication schemes (§5.2, Tables 3–4, Figs 16–19).
+//!
+//! Problem convention: `A` is (m x k) row-major packed, `B` is (k x n)
+//! column-major packed (packed columns == rows of B^T), output `C` is
+//! (m x n) row-major i32 — the +/-1 product of Eq 2.
+
+pub mod baselines;
+pub mod bstc;
+pub mod btc;
+
+use crate::bitops::{BitMatrix, Layout};
+use crate::sim::{Engine, KernelTrace, MemSpace};
+
+use super::IoMode;
+
+/// One BMM instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BmmProblem {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl BmmProblem {
+    pub fn square(n: usize) -> BmmProblem {
+        BmmProblem { m: n, n, k: n }
+    }
+
+    /// +/-1 multiply-accumulate ops (the TOPS numerator): 2*m*n*k.
+    pub fn ops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// packed operand bytes (A + B).
+    pub fn operand_bytes(&self) -> f64 {
+        ((self.m * self.k + self.n * self.k) / 8) as f64
+    }
+}
+
+/// A BMM scheme: functional algorithm + timing trace.
+pub trait BmmScheme {
+    /// Table 3 scheme tag (bmm32, bmmafmt, ...).
+    fn name(&self) -> &'static str;
+
+    /// Can this scheme run this problem/mode?  (e.g. HGEMM/Cutlass have
+    /// no bit-output variant in Table 4.)
+    fn supports(&self, p: BmmProblem, mode: IoMode) -> bool {
+        let _ = mode;
+        p.m % 8 == 0 && p.n % 8 == 0 && p.k % 128 == 0
+    }
+
+    /// Bit-exact +/-1 product (m x n row-major i32).
+    fn compute(&self, a: &BitMatrix, b: &BitMatrix) -> Vec<i32>;
+
+    /// Kernel launches for this problem under the given IO protocol.
+    fn traces(&self, p: BmmProblem, mode: IoMode) -> Vec<KernelTrace>;
+
+    /// Whether the scheme runs on the tensor cores (Table 3 grouping).
+    fn uses_tensorcores(&self) -> bool;
+
+    /// Fused binarized output (BNN-specific protocol): threshold at
+    /// `thresh[j]` per output column, repacked row-major.
+    fn compute_bin(&self, a: &BitMatrix, b: &BitMatrix, thresh: &[f32]) -> BitMatrix {
+        let c = self.compute(a, b);
+        let (m, n) = (a.rows, b.cols);
+        let mut out = BitMatrix::zeros(m, n, Layout::RowMajor);
+        for r in 0..m {
+            for j in 0..n {
+                if (c[r * n + j] as f32) >= thresh[j] {
+                    out.set(r, j, true);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Simulated wall time (seconds) of a scheme on a problem.
+pub fn simulate(engine: &Engine, s: &dyn BmmScheme, p: BmmProblem, mode: IoMode) -> f64 {
+    s.traces(p, mode)
+        .iter()
+        .map(|t| engine.cost(t).total_secs)
+        .sum()
+}
+
+/// Simulated TOPS (2*m*n*k ops over simulated seconds).
+pub fn simulate_tops(engine: &Engine, s: &dyn BmmScheme, p: BmmProblem, mode: IoMode) -> f64 {
+    p.ops() / simulate(engine, s, p, mode) / 1e12
+}
+
+/// The naive Eq-2 reference every scheme must match.
+pub fn naive_ref(a: &BitMatrix, b: &BitMatrix) -> Vec<i32> {
+    assert_eq!(a.layout, Layout::RowMajor);
+    assert_eq!(b.layout, Layout::ColMajor);
+    assert_eq!(a.cols, b.rows);
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    let mut out = vec![0i32; m * n];
+    for r in 0..m {
+        let ar = a.line(r);
+        for j in 0..n {
+            out[r * n + j] = crate::bitops::pack::pm1_dot(ar, b.line(j), k);
+        }
+    }
+    out
+}
+
+/// Trace of a ballot-style binarize kernel over `elems` f32 elements
+/// (the General-mode preprocessing of A and B, §5.2(a)).
+pub fn binarize_trace(name: &str, elems: usize) -> KernelTrace {
+    let mut t = KernelTrace::new(name);
+    // 8 warps per CTA, each warp binarizes 32*32 = 1024 elements
+    let elems_per_warp = 1024;
+    let warps = elems.div_ceil(elems_per_warp);
+    t.warps_per_cta = 8;
+    t.grid_ctas = warps.div_ceil(8).max(1);
+    t.warp.bulk_load_bytes = elems_per_warp * 4;
+    t.warp.bulk_store_bytes = elems_per_warp / 8;
+    t.warp.intu_ops = elems_per_warp + 32; // compare + __ballot
+    t.compulsory_bytes = (elems * 4 + elems / 8) as f64;
+    t
+}
+
+/// Append the shared General-mode pre/post kernels around a scheme's
+/// core traces: binarize(A), binarize(B) (the int32 C store is already
+/// part of each core trace).
+pub fn with_general_io(core: Vec<KernelTrace>, p: BmmProblem) -> Vec<KernelTrace> {
+    let mut v = vec![
+        binarize_trace("binarize_a", p.m * p.k),
+        binarize_trace("binarize_b", p.k * p.n),
+    ];
+    v.extend(core);
+    v
+}
+
+/// All Table-3/4 schemes, in table order.
+pub fn all_schemes() -> Vec<Box<dyn BmmScheme>> {
+    vec![
+        Box::new(baselines::CublasHgemm),
+        Box::new(baselines::XnorBmm),
+        Box::new(bstc::BstcBmm::new(32, false)),
+        Box::new(bstc::BstcBmm::new(64, false)),
+        Box::new(bstc::BstcBmm::new(32, true)),
+        Box::new(bstc::BstcBmm::new(64, true)),
+        Box::new(baselines::CutlassBmm),
+        Box::new(baselines::CutlassUint4),
+        Box::new(btc::Design1),
+        Box::new(btc::Design2),
+        Box::new(btc::Design3),
+    ]
+}
+
+/// Set the compulsory/footprint fields for a bit-operand BMM trace.
+pub(crate) fn attach_footprints(t: &mut KernelTrace, p: BmmProblem, mode: IoMode) {
+    t.compulsory_bytes = bit_compulsory(p, mode);
+    t.load_footprint_bytes = p.operand_bytes();
+}
+
+/// Standard store-side trace elements for the two IO protocols.
+pub(crate) fn attach_output(
+    t: &mut KernelTrace,
+    mode: IoMode,
+    out_tiles_per_warp: usize,
+) {
+    match mode {
+        IoMode::General => {
+            t.warp.store_tiles(MemSpace::Global, out_tiles_per_warp);
+        }
+        IoMode::BnnSpecific => {
+            // __ballot binarization + packed store (8 bytes per 8x8 tile)
+            t.warp.intu_ops += 80 * out_tiles_per_warp;
+            t.warp.bulk_store_bytes += 8 * out_tiles_per_warp;
+        }
+    }
+}
+
+/// Compulsory footprint for bit-operand schemes.
+pub(crate) fn bit_compulsory(p: BmmProblem, mode: IoMode) -> f64 {
+    let out = match mode {
+        IoMode::General => (p.m * p.n * 4) as f64,
+        IoMode::BnnSpecific => (p.m * p.n / 8) as f64,
+    };
+    p.operand_bytes() + out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::RTX2080TI;
+    use crate::util::Rng;
+
+    #[test]
+    fn all_schemes_match_naive_ref() {
+        let mut rng = Rng::new(7);
+        for p in [
+            BmmProblem { m: 16, n: 128, k: 128 },
+            BmmProblem { m: 64, n: 256, k: 256 },
+            BmmProblem { m: 128, n: 128, k: 384 },
+        ] {
+            let a = BitMatrix::random(p.m, p.k, Layout::RowMajor, &mut rng);
+            let b = BitMatrix::random(p.k, p.n, Layout::ColMajor, &mut rng);
+            let want = naive_ref(&a, &b);
+            for s in all_schemes() {
+                if !s.supports(p, IoMode::General) {
+                    continue;
+                }
+                assert_eq!(
+                    s.compute(&a, &b),
+                    want,
+                    "scheme {} disagrees on {:?}",
+                    s.name(),
+                    p
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compute_bin_packs_threshold() {
+        let mut rng = Rng::new(8);
+        let p = BmmProblem { m: 8, n: 128, k: 128 };
+        let a = BitMatrix::random(p.m, p.k, Layout::RowMajor, &mut rng);
+        let b = BitMatrix::random(p.k, p.n, Layout::ColMajor, &mut rng);
+        let thresh = vec![0.0f32; p.n];
+        let s = btc::Design3;
+        let packed = s.compute_bin(&a, &b, &thresh);
+        let c = s.compute(&a, &b);
+        for r in 0..p.m {
+            for j in 0..p.n {
+                assert_eq!(packed.get(r, j), c[r * p.n + j] >= 0);
+            }
+        }
+    }
+
+    #[test]
+    fn traces_exist_for_supported_modes() {
+        let e = Engine::new(&RTX2080TI);
+        let p = BmmProblem::square(1024);
+        for s in all_schemes() {
+            for mode in [IoMode::General, IoMode::BnnSpecific] {
+                if s.supports(p, mode) {
+                    let t = simulate(&e, s.as_ref(), p, mode);
+                    assert!(t > 0.0, "{} {:?}", s.name(), mode);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn design3_beats_design1_at_mid_sizes() {
+        // the paper's headline §7.2 observation (II)
+        let e = Engine::new(&RTX2080TI);
+        for n in [2048usize, 4096] {
+            let p = BmmProblem::square(n);
+            let d1 = simulate(&e, &btc::Design1, p, IoMode::General);
+            let d3 = simulate(&e, &btc::Design3, p, IoMode::General);
+            assert!(d3 < d1, "n={n}: design3 {d3} !< design1 {d1}");
+        }
+    }
+
+    #[test]
+    fn specific_mode_faster_than_general() {
+        let e = Engine::new(&RTX2080TI);
+        let p = BmmProblem::square(4096);
+        let g = simulate(&e, &btc::Design3, p, IoMode::General);
+        let s = simulate(&e, &btc::Design3, p, IoMode::BnnSpecific);
+        assert!(s < g, "specific {s} !< general {g}");
+    }
+}

@@ -1,0 +1,31 @@
+//! Functional + cost-modeled implementations of every BMM and BConv
+//! scheme in the paper's evaluation (Tables 3–4, Figs 16–23).
+//!
+//! Each scheme has two faces:
+//!
+//! * `compute(...)` — a bit-exact CPU implementation of the scheme's
+//!   algorithm (all BMM schemes must agree with the naive Eq-2 product;
+//!   all BConv schemes with the exclude-amended cross-correlation);
+//! * `trace(...)`  — the scheme's `sim::KernelTrace`s (one per kernel
+//!   launch), carrying the *actual* strides, staging, accumulator reuse
+//!   and op mix of that design, from which the Turing timing model
+//!   predicts cycles.
+//!
+//! IO modes mirror the paper's two test types: `General` (fp in / int
+//! out: binarization of A and B is on the clock, §7.2 type 1) and
+//! `BnnSpecific` (bit in / bit out: fused output binarization, type 2).
+
+pub mod bconv;
+pub mod bmm;
+
+/// Which of the paper's two benchmark protocols a trace models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoMode {
+    /// floats in, int32 out — includes binarize(A), binarize(B)
+    General,
+    /// packed bits in, packed bits out — includes fused binarize(C)
+    BnnSpecific,
+}
+
+pub use bconv::{BconvProblem, BconvScheme};
+pub use bmm::BmmScheme;

@@ -1,0 +1,46 @@
+//! # TCBNN-X
+//!
+//! A reproduction of *"Accelerating Binarized Neural Networks via
+//! Bit-Tensor-Cores in Turing GPUs"* (Li & Su, 2020) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (build-time python): Pallas bit kernels (XOR+POPC BMM and
+//!   BConv) — `python/compile/kernels/`.
+//! * **Layer 2** (build-time python): JAX BNN model graphs AOT-lowered to
+//!   HLO text — `python/compile/model.py` + `aot.py`.
+//! * **Layer 3** (this crate): the inference coordinator — dynamic
+//!   batcher, router, PJRT runtime — plus the complete Turing BTC
+//!   substrate the paper's evaluation depends on: packed bit formats
+//!   (including the FSB format of §5.1), functional implementations of
+//!   every BMM/BConv scheme in the evaluation, a calibrated Turing
+//!   timing model reproducing the §4 characterization, the six network
+//!   models of Table 5, and the BENN multi-GPU ensemble of §7.6.
+//!
+//! See DESIGN.md for the system inventory and the per-table/figure
+//! experiment index, and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod bitops;
+pub mod coordinator;
+pub mod figures;
+pub mod kernels;
+pub mod nn;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Default artifact directory (relative to the repo root).
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: $TCBNN_ARTIFACTS, ./artifacts, or
+/// ../artifacts (so tests and examples work from any working dir).
+pub fn artifact_dir() -> String {
+    if let Ok(d) = std::env::var("TCBNN_ARTIFACTS") {
+        return d;
+    }
+    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+        if std::path::Path::new(&format!("{cand}/manifest.txt")).exists() {
+            return cand.to_string();
+        }
+    }
+    ARTIFACT_DIR.to_string()
+}

@@ -1,0 +1,146 @@
+//! tcbnn CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   info                          environment + artifact status
+//!   models                        Table 5 model inventory
+//!   figures [--out results]       regenerate every paper table/figure
+//!   infer [--n 256]               run the served MLP over the test set
+//!   serve [--requests 2048]       closed-loop serving benchmark
+//!   characterize [--gpu 2080ti]   §4 microbenchmark tables
+
+fn main() {
+    if let Err(e) = cli::main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+mod cli {
+    use anyhow::{bail, Result};
+    use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
+    use tcbnn::runtime::{Blob, MlpModel};
+    use tcbnn::util::cli::Args;
+
+    pub fn main() -> Result<()> {
+        let args = Args::from_env();
+        match args.subcommand() {
+            Some("info") | None => info(),
+            Some("models") => models(),
+            Some("figures") => figures(&args),
+            Some("infer") => infer(&args),
+            Some("serve") => serve(&args),
+            Some("characterize") => characterize(&args),
+            Some(other) => {
+                bail!(
+                    "unknown subcommand {other:?}\n\
+                     usage: tcbnn [info|models|figures|infer|serve|characterize]"
+                );
+            }
+        }
+    }
+
+    fn info() -> Result<()> {
+        println!("tcbnn — Bit-Tensor-Core BNN inference stack");
+        let dir = tcbnn::artifact_dir();
+        println!("artifact dir: {dir}");
+        let built = std::path::Path::new(&format!("{dir}/manifest.txt")).exists();
+        println!("artifacts built: {built} (run `make artifacts` if false)");
+        for gpu in tcbnn::sim::config::all_gpus() {
+            println!(
+                "simulated GPU: {} ({}) — {} SMs, peak BTC {:.0} TOPS, \
+                 peak HMMA {:.0} TFLOPS",
+                gpu.name,
+                gpu.chip,
+                gpu.sms,
+                gpu.peak_btc_tops(),
+                gpu.peak_hmma_tflops()
+            );
+        }
+        Ok(())
+    }
+
+    fn models() -> Result<()> {
+        println!("{}", tcbnn::figures::table5().render());
+        Ok(())
+    }
+
+    fn figures(args: &Args) -> Result<()> {
+        let out = args.get_or("out", "results");
+        let paths = tcbnn::figures::write_all(out)?;
+        println!("wrote {} csv files under {out}/", paths.len());
+        Ok(())
+    }
+
+    fn infer(args: &Args) -> Result<()> {
+        let dir = tcbnn::artifact_dir();
+        let n = args.get_usize("n", 256);
+        let test = Blob::load(&format!("{dir}/testset"))?;
+        let images = test.as_f32("images")?;
+        let labels = test.as_i32("labels")?;
+        let n = n.min(labels.len());
+        let mut model = MlpModel::load(&dir)?;
+        let t0 = std::time::Instant::now();
+        let mut correct = 0usize;
+        for i in (0..n).step_by(128) {
+            let take = 128.min(n - i);
+            let mut batch = images[i * 800..(i + take) * 800].to_vec();
+            batch.resize(128 * 800, 0.0);
+            let logits = model.infer(&batch, 128)?;
+            for r in 0..take {
+                let row = &logits[r * 10..(r + 1) * 10];
+                let am = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if am as i32 == labels[i + r] {
+                    correct += 1;
+                }
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "inferred {n} images in {:.1} ms — accuracy {:.2}% — {:.0} img/s",
+            dt * 1e3,
+            correct as f64 / n as f64 * 100.0,
+            n as f64 / dt
+        );
+        Ok(())
+    }
+
+    fn serve(args: &Args) -> Result<()> {
+        let dir = tcbnn::artifact_dir();
+        let requests = args.get_usize("requests", 2048);
+        let test = Blob::load(&format!("{dir}/testset"))?;
+        let images = test.as_f32("images")?;
+        let total = images.len() / 800;
+        let dir2 = dir.clone();
+        let srv = InferenceServer::start(ServerConfig::default(), move || {
+            Ok(Box::new(MlpModel::load(&dir2)?) as Box<dyn BatchModel>)
+        });
+        let inputs: Vec<Vec<f32>> = (0..requests)
+            .map(|i| {
+                let j = i % total;
+                images[j * 800..(j + 1) * 800].to_vec()
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let resps = srv.submit_all(inputs);
+        let dt = t0.elapsed().as_secs_f64();
+        println!("served {} requests in {:.1} ms", resps.len(), dt * 1e3);
+        println!("{}", srv.metrics.report());
+        Ok(())
+    }
+
+    fn characterize(args: &Args) -> Result<()> {
+        let gpu = match args.get_or("gpu", "2080ti") {
+            "2080" => &tcbnn::sim::RTX2080,
+            _ => &tcbnn::sim::RTX2080TI,
+        };
+        println!("{}", tcbnn::figures::fig_load_latency(gpu).render());
+        println!("{}", tcbnn::figures::fig_store_latency(gpu).render());
+        println!("{}", tcbnn::figures::fig_bmma_pipeline(gpu).render());
+        Ok(())
+    }
+}

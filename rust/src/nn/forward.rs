@@ -1,0 +1,331 @@
+//! Functional packed-bit forward pass (small-model execution path).
+//!
+//! Executes a `ModelDef` on real data with real bit arithmetic — used by
+//! tests and the cifar example to demonstrate the full §6 pipeline
+//! (thrd -> bconv -> thrd -> OR-pool -> ... -> fc -> bn) in rust.
+//! ImageNet-scale *timing* comes from `cost`, not from executing bits.
+
+use crate::bitops::pack;
+use crate::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
+use crate::kernels::bconv::btc::BconvDesign1;
+use crate::kernels::bconv::{BconvProblem, BconvScheme};
+use crate::util::Rng;
+
+use super::layer::LayerSpec;
+use super::model::ModelDef;
+
+/// Weights for one layer.
+#[derive(Clone, Debug)]
+pub enum LayerWeights {
+    /// first conv: +/-1 weights as floats (BWN), per-channel thresholds
+    FirstConv { w_pm1: Vec<f32>, thresh: Vec<f32> },
+    /// binarized conv: KKOC packed filter + per-channel thresholds
+    BinConv { filter: BitTensor4, thresh: Vec<f32> },
+    /// binarized fc: packed weight rows (d_out x d_in/32) + thresholds
+    BinFc { w: BitMatrix, thresh: Vec<f32> },
+    /// final fc: packed weights + bn scale/shift
+    FinalFc { w: BitMatrix, gamma: Vec<f32>, beta: Vec<f32> },
+    Pool,
+}
+
+/// All weights of a model.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub layers: Vec<LayerWeights>,
+}
+
+/// Random +/-1 weights with zero thresholds (pipeline smoke weights).
+pub fn random_weights(model: &ModelDef, rng: &mut Rng) -> ModelWeights {
+    let mut dims = model.input;
+    let mut layers = Vec::new();
+    for l in &model.layers {
+        layers.push(match *l {
+            LayerSpec::FirstConv { c, o, k, .. } => LayerWeights::FirstConv {
+                w_pm1: rng.pm1_vec(k * k * c * o),
+                thresh: vec![0.0; o],
+            },
+            LayerSpec::BinConv { c, o, k, .. } => LayerWeights::BinConv {
+                filter: BitTensor4::random([k, k, o, c], TensorLayout::Kkoc, rng),
+                thresh: vec![0.0; o],
+            },
+            LayerSpec::BinFc { d_in, d_out } => LayerWeights::BinFc {
+                w: BitMatrix::random(d_out, d_in, Layout::RowMajor, rng),
+                thresh: vec![0.0; d_out],
+            },
+            LayerSpec::FinalFc { d_in, d_out } => LayerWeights::FinalFc {
+                w: BitMatrix::random(d_out, d_in, Layout::RowMajor, rng),
+                gamma: vec![0.05; d_out],
+                beta: vec![0.0; d_out],
+            },
+            LayerSpec::Pool => LayerWeights::Pool,
+        });
+        dims = dims.after(l);
+    }
+    ModelWeights { layers }
+}
+
+/// Activation state between layers.
+enum Act {
+    /// packed bits in HWNC
+    Bits(BitTensor4),
+    /// packed bit rows per image (batch x features)
+    Flat(BitMatrix),
+}
+
+impl Act {
+    /// flatten HWNC bits into per-image packed rows (h, w, c order).
+    fn flatten(self, batch: usize) -> BitMatrix {
+        match self {
+            Act::Flat(m) => m,
+            Act::Bits(t) => {
+                let [h, w, n, c] = t.dims;
+                assert_eq!(n, batch);
+                let feat = h * w * c;
+                let mut out = BitMatrix::zeros(batch, feat, Layout::RowMajor);
+                for ni in 0..n {
+                    let mut idx = 0usize;
+                    for hi in 0..h {
+                        for wi in 0..w {
+                            for ci in 0..c {
+                                if t.get(hi, wi, ni, ci) {
+                                    out.set(ni, idx, true);
+                                }
+                                idx += 1;
+                            }
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+/// 2x2 OR pool on an HWNC bit tensor.
+fn or_pool(t: &BitTensor4) -> BitTensor4 {
+    let [h, w, n, _c] = t.dims;
+    let mut out = BitTensor4::zeros([h / 2, w / 2, n, t.dims[3]], TensorLayout::Hwnc);
+    for hi in 0..h / 2 {
+        for wi in 0..w / 2 {
+            for ni in 0..n {
+                let words: Vec<u32> = t
+                    .inner(2 * hi, 2 * wi, ni)
+                    .iter()
+                    .zip(t.inner(2 * hi + 1, 2 * wi, ni))
+                    .zip(t.inner(2 * hi, 2 * wi + 1, ni))
+                    .zip(t.inner(2 * hi + 1, 2 * wi + 1, ni))
+                    .map(|(((a, b), c), d)| a | b | c | d)
+                    .collect();
+                out.inner_mut(hi, wi, ni).copy_from_slice(&words);
+            }
+        }
+    }
+    out
+}
+
+/// Run the model on a batch of fp32 NHWC (or flat) inputs -> logits.
+pub fn forward(
+    model: &ModelDef,
+    weights: &ModelWeights,
+    input: &[f32],
+    batch: usize,
+) -> Vec<f32> {
+    let mut dims = model.input;
+    // initial activation
+    let mut act: Option<Act> = None;
+    let mut fp_input: Option<Vec<f32>> = Some(input.to_vec());
+
+    for (l, wts) in model.layers.iter().zip(&weights.layers) {
+        match (l, wts) {
+            (
+                LayerSpec::FirstConv { c, o, k, stride, pad },
+                LayerWeights::FirstConv { w_pm1, thresh },
+            ) => {
+                // fp cross-correlation (NHWC input, KKCO weights), then
+                // threshold into packed HWNC bits
+                let x = fp_input.take().expect("first layer needs fp input");
+                let h = dims.hw;
+                let ohw = (h + 2 * pad - k) / stride + 1;
+                let mut bits =
+                    BitTensor4::zeros([ohw, ohw, batch, *o], TensorLayout::Hwnc);
+                for ni in 0..batch {
+                    for op in 0..ohw {
+                        for oq in 0..ohw {
+                            for oi in 0..*o {
+                                let mut acc = 0.0f32;
+                                for r in 0..*k {
+                                    for s in 0..*k {
+                                        let i = (op * stride + r) as isize - *pad as isize;
+                                        let j = (oq * stride + s) as isize - *pad as isize;
+                                        if i < 0 || i >= h as isize || j < 0 || j >= h as isize {
+                                            continue;
+                                        }
+                                        for ci in 0..*c {
+                                            let xv = x[((ni * h + i as usize) * h
+                                                + j as usize)
+                                                * c
+                                                + ci];
+                                            let wv = w_pm1
+                                                [((r * k + s) * c + ci) * o + oi];
+                                            acc += xv * wv;
+                                        }
+                                    }
+                                }
+                                if acc >= thresh[oi] {
+                                    bits.set(op, oq, ni, oi, true);
+                                }
+                            }
+                        }
+                    }
+                }
+                act = Some(Act::Bits(bits));
+            }
+            (
+                LayerSpec::BinConv { o, k, stride, pad, pool, .. },
+                LayerWeights::BinConv { filter, thresh },
+            ) => {
+                let t = match act.take().unwrap() {
+                    Act::Bits(t) => t,
+                    Act::Flat(_) => panic!("conv after flatten"),
+                };
+                let p = BconvProblem {
+                    hw: dims.hw,
+                    n: batch,
+                    c: dims.feat,
+                    o: *o,
+                    k: *k,
+                    stride: *stride,
+                    pad: *pad,
+                };
+                let ints = BconvDesign1.compute(&t, filter, p);
+                let ohw = p.out_hw();
+                let mut bits =
+                    BitTensor4::zeros([ohw, ohw, batch, *o], TensorLayout::Hwnc);
+                for op in 0..ohw {
+                    for oq in 0..ohw {
+                        for ni in 0..batch {
+                            for oi in 0..*o {
+                                let v = ints[((op * ohw + oq) * batch + ni) * o + oi];
+                                if (v as f32) >= thresh[oi] {
+                                    bits.set(op, oq, ni, oi, true);
+                                }
+                            }
+                        }
+                    }
+                }
+                let bits = if *pool { or_pool(&bits) } else { bits };
+                act = Some(Act::Bits(bits));
+            }
+            (LayerSpec::BinFc { d_in, d_out }, LayerWeights::BinFc { w, thresh }) => {
+                let flat = act.take().unwrap().flatten(batch);
+                assert_eq!(flat.cols, *d_in);
+                let mut out = BitMatrix::zeros(batch, *d_out, Layout::RowMajor);
+                for bi in 0..batch {
+                    for j in 0..*d_out {
+                        let v = pack::pm1_dot(flat.line(bi), w.line(j), *d_in);
+                        if (v as f32) >= thresh[j] {
+                            out.set(bi, j, true);
+                        }
+                    }
+                }
+                act = Some(Act::Flat(out));
+            }
+            (
+                LayerSpec::FinalFc { d_in, d_out },
+                LayerWeights::FinalFc { w, gamma, beta },
+            ) => {
+                let flat = act.take().unwrap().flatten(batch);
+                assert_eq!(flat.cols, *d_in);
+                let mut logits = vec![0.0f32; batch * d_out];
+                for bi in 0..batch {
+                    for j in 0..*d_out {
+                        let v = pack::pm1_dot(flat.line(bi), w.line(j), *d_in) as f32;
+                        logits[bi * d_out + j] = v * gamma[j] + beta[j];
+                    }
+                }
+                return logits;
+            }
+            (LayerSpec::Pool, LayerWeights::Pool) => {
+                let t = match act.take().unwrap() {
+                    Act::Bits(t) => t,
+                    Act::Flat(_) => panic!("pool after flatten"),
+                };
+                act = Some(Act::Bits(or_pool(&t)));
+            }
+            _ => panic!("layer/weight mismatch"),
+        }
+        dims = dims.after(l);
+    }
+    panic!("model did not end with FinalFc");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layer::Dims;
+    use crate::nn::model::ModelDef;
+    use crate::nn::parser;
+
+    /// A tiny conv net for functional tests.
+    fn tiny_model() -> ModelDef {
+        let _ = parser::parse_structure("(1x32C3)-MP2").unwrap();
+        ModelDef {
+            name: "tiny",
+            dataset: "synthetic",
+            input: Dims { hw: 8, feat: 3 },
+            classes: 4,
+            layers: vec![
+                LayerSpec::FirstConv { c: 3, o: 32, k: 3, stride: 1, pad: 1 },
+                LayerSpec::BinConv {
+                    c: 32, o: 32, k: 3, stride: 1, pad: 1, pool: true, residual: false,
+                },
+                LayerSpec::BinFc { d_in: 4 * 4 * 32, d_out: 64 },
+                LayerSpec::FinalFc { d_in: 64, d_out: 4 },
+            ],
+            residual_blocks: 0,
+        }
+    }
+
+    #[test]
+    fn tiny_net_runs_end_to_end() {
+        let m = tiny_model();
+        let mut rng = Rng::new(5);
+        let w = random_weights(&m, &mut rng);
+        let batch = 8;
+        let x: Vec<f32> = (0..batch * 8 * 8 * 3).map(|_| rng.next_f32() - 0.5).collect();
+        let logits = forward(&m, &w, &x, batch);
+        assert_eq!(logits.len(), batch * 4);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // different images should (almost surely) give different logits
+        assert_ne!(logits[..4], logits[4..8]);
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let m = tiny_model();
+        let mut rng = Rng::new(6);
+        let w = random_weights(&m, &mut rng);
+        let x: Vec<f32> = (0..8 * 8 * 8 * 3).map(|_| rng.next_f32()).collect();
+        assert_eq!(forward(&m, &w, &x, 8), forward(&m, &w, &x, 8));
+    }
+
+    #[test]
+    fn or_pool_matches_max_semantics() {
+        let mut rng = Rng::new(7);
+        let t = BitTensor4::random([4, 4, 2, 32], TensorLayout::Hwnc, &mut rng);
+        let p = or_pool(&t);
+        for hi in 0..2 {
+            for wi in 0..2 {
+                for ni in 0..2 {
+                    for ci in 0..32 {
+                        let any = t.get(2 * hi, 2 * wi, ni, ci)
+                            || t.get(2 * hi + 1, 2 * wi, ni, ci)
+                            || t.get(2 * hi, 2 * wi + 1, ni, ci)
+                            || t.get(2 * hi + 1, 2 * wi + 1, ni, ci);
+                        assert_eq!(p.get(hi, wi, ni, ci), any);
+                    }
+                }
+            }
+        }
+    }
+}

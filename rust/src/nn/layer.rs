@@ -1,0 +1,152 @@
+//! Layer specifications (inference view, after the §6.1 rewrites).
+
+/// One layer of a BNN model, in inference form: every hidden layer
+/// consumes and produces packed bits; bn+sign pairs are a threshold
+/// (`thrd`) fused into the producing layer; max-pool is an OR fused
+/// after the threshold.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// First conv layer (BWN): fp input x binarized weights (§6.1 —
+    /// cannot use BTC).  Output is thresholded to bits.
+    FirstConv { c: usize, o: usize, k: usize, stride: usize, pad: usize },
+    /// Binarized convolution (+ fused thrd, optional OR-pool).
+    BinConv {
+        c: usize,
+        o: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        pool: bool,
+        /// ends a 2-conv residual block (ResNet shortcut injection)
+        residual: bool,
+    },
+    /// Binarized fully-connected layer (+ fused thrd).
+    BinFc { d_in: usize, d_out: usize },
+    /// Final FC layer: binarized weights, real-valued output + bn (§6.1:
+    /// bn cannot become thrd here).
+    FinalFc { d_in: usize, d_out: usize },
+    /// Standalone 2x2 OR max-pool (when not fusable into a conv).
+    Pool,
+}
+
+impl LayerSpec {
+    /// Short display tag ("128C3/2p", "1024FC", ...).
+    pub fn tag(&self) -> String {
+        match self {
+            LayerSpec::FirstConv { o, k, stride, .. } => {
+                format!("{o}C{k}/{stride}*")
+            }
+            LayerSpec::BinConv { o, k, stride, pool, residual, .. } => {
+                let mut s = format!("{o}C{k}");
+                if *stride != 1 {
+                    s.push_str(&format!("/{stride}"));
+                }
+                if *pool {
+                    s.push('p');
+                }
+                if *residual {
+                    s.push('r');
+                }
+                s
+            }
+            LayerSpec::BinFc { d_out, .. } => format!("{d_out}FC"),
+            LayerSpec::FinalFc { d_out, .. } => format!("{d_out}out"),
+            LayerSpec::Pool => "P2".to_string(),
+        }
+    }
+
+    /// Weight bits of this layer (model-size accounting).
+    pub fn weight_bits(&self) -> usize {
+        match self {
+            LayerSpec::FirstConv { c, o, k, .. }
+            | LayerSpec::BinConv { c, o, k, .. } => k * k * c * o,
+            LayerSpec::BinFc { d_in, d_out } | LayerSpec::FinalFc { d_in, d_out } => {
+                d_in * d_out
+            }
+            LayerSpec::Pool => 0,
+        }
+    }
+}
+
+/// Spatial/feature dims flowing between layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dims {
+    /// spatial extent (h == w); 0 for flattened FC stages
+    pub hw: usize,
+    /// channels (conv) or features (fc)
+    pub feat: usize,
+}
+
+impl Dims {
+    /// Dims after applying `layer`.
+    pub fn after(&self, layer: &LayerSpec) -> Dims {
+        match layer {
+            LayerSpec::FirstConv { o, k, stride, pad, .. } => Dims {
+                hw: (self.hw + 2 * pad - k) / stride + 1,
+                feat: *o,
+            },
+            LayerSpec::BinConv { o, k, stride, pad, pool, .. } => {
+                let mut hw = (self.hw + 2 * pad - k) / stride + 1;
+                if *pool {
+                    hw /= 2;
+                }
+                Dims { hw, feat: *o }
+            }
+            LayerSpec::BinFc { d_out, .. } | LayerSpec::FinalFc { d_out, .. } => {
+                Dims { hw: 0, feat: *d_out }
+            }
+            LayerSpec::Pool => Dims { hw: self.hw / 2, feat: self.feat },
+        }
+    }
+
+    /// Flattened feature count (conv -> fc transition).
+    pub fn flat(&self) -> usize {
+        if self.hw == 0 {
+            self.feat
+        } else {
+            self.hw * self.hw * self.feat
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_flow() {
+        let d = Dims { hw: 32, feat: 3 };
+        let c1 = LayerSpec::FirstConv { c: 3, o: 128, k: 3, stride: 1, pad: 1 };
+        let d1 = d.after(&c1);
+        assert_eq!(d1, Dims { hw: 32, feat: 128 });
+        let c2 = LayerSpec::BinConv {
+            c: 128, o: 128, k: 3, stride: 1, pad: 1, pool: true, residual: false,
+        };
+        let d2 = d1.after(&c2);
+        assert_eq!(d2, Dims { hw: 16, feat: 128 });
+        assert_eq!(d2.flat(), 16 * 16 * 128);
+    }
+
+    #[test]
+    fn tags() {
+        assert_eq!(
+            LayerSpec::BinConv { c: 1, o: 256, k: 3, stride: 2, pad: 1, pool: false, residual: true }.tag(),
+            "256C3/2r"
+        );
+        assert_eq!(LayerSpec::BinFc { d_in: 1, d_out: 1024 }.tag(), "1024FC");
+    }
+
+    #[test]
+    fn weight_accounting() {
+        let l = LayerSpec::BinConv { c: 128, o: 256, k: 3, stride: 1, pad: 1, pool: false, residual: false };
+        assert_eq!(l.weight_bits(), 3 * 3 * 128 * 256);
+    }
+
+    #[test]
+    fn stride_and_dims() {
+        let d = Dims { hw: 224, feat: 3 };
+        let c = LayerSpec::FirstConv { c: 3, o: 128, k: 11, stride: 4, pad: 0 };
+        // AlexNet: (224 - 11)/4 + 1 = 54
+        assert_eq!(d.after(&c).hw, 54);
+    }
+}

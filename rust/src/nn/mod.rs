@@ -1,0 +1,21 @@
+//! BNN network models (§6, Table 5) and their inference cost/execution.
+//!
+//! * `layer`  — layer specifications after the §6.1 inference rewrites
+//!   (bn+sign folded to thresholds, pool as OR, fused thrd).
+//! * `parser` — Table 5 network-structure strings ("(2x128C3)-MP2-...").
+//! * `model`  — the six evaluation models + the ResNet-50/101/152 depth
+//!   variants of Table 11.
+//! * `cost`   — per-layer timing on the Turing model for each scheme row
+//!   of Tables 6–7 (SBNN-32/-Fine/64/-Fine, BTC, BTC-FMT).
+//! * `forward`— functional packed-bit forward pass (used by tests and
+//!   the cifar example; ImageNet-scale timing never executes bits).
+
+pub mod cost;
+pub mod forward;
+pub mod layer;
+pub mod model;
+pub mod parser;
+
+pub use cost::{model_cost, InferenceCost, LayerCost, ResidualMode, Scheme};
+pub use layer::LayerSpec;
+pub use model::{all_models, ModelDef};

@@ -1,0 +1,312 @@
+//! The evaluation models (Table 5) + ResNet depth variants (Table 11).
+
+use anyhow::Result;
+
+use super::layer::{Dims, LayerSpec};
+use super::parser::{parse_structure, Unit};
+
+/// A complete model definition.
+#[derive(Clone, Debug)]
+pub struct ModelDef {
+    pub name: &'static str,
+    pub dataset: &'static str,
+    /// input (h=w, channels)
+    pub input: Dims,
+    pub classes: usize,
+    pub layers: Vec<LayerSpec>,
+    /// number of 2-conv residual blocks (ResNet models)
+    pub residual_blocks: usize,
+}
+
+impl ModelDef {
+    /// Build from a Table-5 structure string.  `resnet` marks every
+    /// second binarized conv as a residual-block end.
+    pub fn from_structure(
+        name: &'static str,
+        dataset: &'static str,
+        input: Dims,
+        classes: usize,
+        structure: &str,
+        resnet: bool,
+    ) -> Result<ModelDef> {
+        let units = parse_structure(structure)?;
+        let mut layers = Vec::new();
+        let mut dims = input;
+        let mut first_conv_done = false;
+        let mut bin_conv_count = 0usize;
+        let mut residual_blocks = 0usize;
+        for u in units.iter() {
+            match *u {
+                Unit::Conv { o, k, stride } => {
+                    let pad = if k == 3 { 1 } else { 0 };
+                    // ResNet stage transitions downsample (type-A
+                    // shortcut with stride-2 first conv of the stage)
+                    let stride = if resnet && first_conv_done && o > dims.feat && stride == 1 {
+                        2
+                    } else {
+                        stride
+                    };
+                    if !first_conv_done {
+                        layers.push(LayerSpec::FirstConv {
+                            c: dims.feat, o, k, stride, pad,
+                        });
+                        first_conv_done = true;
+                    } else {
+                        bin_conv_count += 1;
+                        let residual = resnet && bin_conv_count % 2 == 0;
+                        if residual {
+                            residual_blocks += 1;
+                        }
+                        layers.push(LayerSpec::BinConv {
+                            c: dims.feat, o, k, stride, pad, pool: false, residual,
+                        });
+                    }
+                    dims = dims.after(layers.last().unwrap());
+                }
+                Unit::Pool { .. } => {
+                    // fuse into the previous binarized conv when possible
+                    if let Some(LayerSpec::BinConv { pool, .. }) = layers.last_mut() {
+                        *pool = true;
+                    } else {
+                        layers.push(LayerSpec::Pool);
+                    }
+                    dims = Dims { hw: dims.hw / 2, feat: dims.feat };
+                }
+                Unit::Fc { d } => {
+                    // ResNet models globally pool spatial to 1x1 before
+                    // the FC stage (OR-pool halvings; §6.1 pooling)
+                    if resnet && dims.hw > 1 {
+                        while dims.hw > 1 {
+                            layers.push(LayerSpec::Pool);
+                            dims = Dims { hw: dims.hw / 2, feat: dims.feat };
+                        }
+                    }
+                    let d_in = dims.flat();
+                    layers.push(LayerSpec::BinFc { d_in, d_out: d });
+                    dims = Dims { hw: 0, feat: d };
+                }
+                Unit::Group(_) => unreachable!("parser flattens groups"),
+            }
+        }
+        // classifier head: final FC to `classes`, real-valued + bn (§6.1)
+        layers.push(LayerSpec::FinalFc { d_in: dims.flat(), d_out: classes });
+        Ok(ModelDef { name, dataset, input, classes, layers, residual_blocks })
+    }
+
+    /// Total weight bits (for the model-size column).
+    pub fn weight_bits(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_bits()).sum()
+    }
+
+    pub fn conv_layers(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l, LayerSpec::FirstConv { .. } | LayerSpec::BinConv { .. }))
+            .count()
+    }
+
+    pub fn fc_layers(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l, LayerSpec::BinFc { .. } | LayerSpec::FinalFc { .. }))
+            .count()
+    }
+}
+
+/// MNIST MLP (Table 5 row 1): 1024FC x3.
+pub fn mnist_mlp() -> ModelDef {
+    let mut m = ModelDef::from_structure(
+        "MNIST-MLP",
+        "MNIST",
+        Dims { hw: 0, feat: 784 },
+        10,
+        "1024FC-1024FC-1024FC",
+        false,
+    )
+    .unwrap();
+    m.residual_blocks = 0;
+    m
+}
+
+/// Cifar10 VGG-like (Table 5 row 2).
+pub fn cifar_vgg() -> ModelDef {
+    ModelDef::from_structure(
+        "Cifar10-VGG",
+        "Cifar10",
+        Dims { hw: 32, feat: 3 },
+        10,
+        "(2x128C3)-MP2-(2x256C3)-MP2-(2x512C3)-MP2-(3x1024FC)",
+        false,
+    )
+    .unwrap()
+}
+
+/// Cifar10 ResNet-14 (Table 5 row 3).
+pub fn cifar_resnet14() -> ModelDef {
+    ModelDef::from_structure(
+        "Cifar10-ResNet14",
+        "Cifar10",
+        Dims { hw: 32, feat: 3 },
+        10,
+        "128C3/2-4x128C3-4x256C3-4x512C3-(2x512FC)",
+        true,
+    )
+    .unwrap()
+}
+
+/// ImageNet AlexNet (Table 5 row 4).
+pub fn imagenet_alexnet() -> ModelDef {
+    ModelDef::from_structure(
+        "ImageNet-AlexNet",
+        "ImageNet",
+        Dims { hw: 224, feat: 3 },
+        1000,
+        "(128C11/4)-P2-(256C5)-P2-(3x256C3)-P2-(3x4096FC)",
+        false,
+    )
+    .unwrap()
+}
+
+/// ImageNet VGG-16 (Table 5 row 5).
+pub fn imagenet_vgg16() -> ModelDef {
+    ModelDef::from_structure(
+        "ImageNet-VGG",
+        "ImageNet",
+        Dims { hw: 224, feat: 3 },
+        1000,
+        "(2x64C3)-P2-(2x128C3)-P2-(3x256C3)-P2-2x(3x512C3-P2)-(3x4096FC)",
+        false,
+    )
+    .unwrap()
+}
+
+/// ImageNet ResNet-18 (Table 5 row 6).
+pub fn imagenet_resnet18() -> ModelDef {
+    ModelDef::from_structure(
+        "ImageNet-ResNet18",
+        "ImageNet",
+        Dims { hw: 224, feat: 3 },
+        1000,
+        "64C7/4-4x64C3-4x128C3-4x256C3-4x512C3-(2x512FC)",
+        true,
+    )
+    .unwrap()
+}
+
+/// Deeper ResNets for Table 11 (basic-block scaling of the paper's
+/// ResNet template: stage repeats follow the standard 50/101/152
+/// schedules, expressed with the paper's binarized basic blocks).
+pub fn imagenet_resnet(depth: usize) -> ModelDef {
+    let (name, stages): (&'static str, [usize; 4]) = match depth {
+        18 => return imagenet_resnet18(),
+        50 => ("ImageNet-ResNet50", [6, 8, 12, 6]),
+        101 => ("ImageNet-ResNet101", [6, 8, 46, 6]),
+        152 => ("ImageNet-ResNet152", [6, 16, 72, 6]),
+        other => panic!("unsupported resnet depth {other}"),
+    };
+    let structure = format!(
+        "64C7/4-{}x64C3-{}x128C3-{}x256C3-{}x512C3-(2x512FC)",
+        stages[0], stages[1], stages[2], stages[3]
+    );
+    let structure: &'static str = Box::leak(structure.into_boxed_str());
+    ModelDef::from_structure(
+        name,
+        "ImageNet",
+        Dims { hw: 224, feat: 3 },
+        1000,
+        structure,
+        true,
+    )
+    .unwrap()
+}
+
+/// The six Tables-6/7 models, in column order.
+pub fn all_models() -> Vec<ModelDef> {
+    vec![
+        mnist_mlp(),
+        cifar_vgg(),
+        cifar_resnet14(),
+        imagenet_alexnet(),
+        imagenet_vgg16(),
+        imagenet_resnet18(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_models_build() {
+        let models = all_models();
+        assert_eq!(models.len(), 6);
+        for m in &models {
+            assert!(m.layers.len() >= 4, "{} too shallow", m.name);
+            assert!(
+                matches!(m.layers.last(), Some(LayerSpec::FinalFc { .. })),
+                "{} must end with the classifier head",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn mlp_shape() {
+        let m = mnist_mlp();
+        assert_eq!(m.conv_layers(), 0);
+        assert_eq!(m.fc_layers(), 4); // 3 hidden + head
+        assert_eq!(m.classes, 10);
+    }
+
+    #[test]
+    fn resnet14_counts() {
+        let m = cifar_resnet14();
+        // 13 convs + 2 FC + head
+        assert_eq!(m.conv_layers(), 13);
+        assert_eq!(m.fc_layers(), 3);
+        assert_eq!(m.residual_blocks, 6); // 12 binarized convs / 2
+    }
+
+    #[test]
+    fn resnet18_counts() {
+        let m = imagenet_resnet18();
+        assert_eq!(m.conv_layers(), 17);
+        assert_eq!(m.residual_blocks, 8);
+    }
+
+    #[test]
+    fn depth_scaling_monotone() {
+        let l18 = imagenet_resnet(18).layers.len();
+        let l50 = imagenet_resnet(50).layers.len();
+        let l101 = imagenet_resnet(101).layers.len();
+        let l152 = imagenet_resnet(152).layers.len();
+        assert!(l18 < l50 && l50 < l101 && l101 < l152);
+    }
+
+    #[test]
+    fn vgg16_fc_input_is_flattened() {
+        let m = imagenet_vgg16();
+        let fc = m
+            .layers
+            .iter()
+            .find_map(|l| match l {
+                LayerSpec::BinFc { d_in, d_out: 4096 } => Some(*d_in),
+                _ => None,
+            })
+            .unwrap();
+        // 224 / 2^5 = 7 spatial, 512 channels
+        assert_eq!(fc, 7 * 7 * 512);
+    }
+
+    #[test]
+    fn alexnet_dims_consistent() {
+        let m = imagenet_alexnet();
+        // walk dims through the network; must stay positive
+        let mut d = m.input;
+        for l in &m.layers {
+            d = d.after(l);
+            assert!(d.feat > 0);
+        }
+        assert_eq!(d.feat, 1000);
+    }
+}

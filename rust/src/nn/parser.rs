@@ -1,0 +1,184 @@
+//! Parser for Table-5 network-structure strings.
+//!
+//! Grammar (dash-separated segments, each optionally repeated):
+//!   segment  := [N 'x'] unit
+//!   unit     := '(' structure ')' | conv | fc | pool
+//!   conv     := O 'C' K ['/' S]          e.g. "128C3", "64C7/4"
+//!   fc       := D 'FC'                   e.g. "1024FC"
+//!   pool     := 'P' K | 'MP' K           e.g. "P2", "MP2"
+//!
+//! Examples from the paper:
+//!   "1024FC-1024FC-1024FC"
+//!   "(2x128C3)-MP2-(2x256C3)-MP2-(2x512C3)-MP2-(3x1024FC)"
+//!   "64C7/4-4x64C3-4x128C3-4x256C3-4x512C3-(2x512FC)"
+//!   "(2x64C3)-P2-(2x128C3)-P2-(3x256C3)-P2-2x(3x512C3-P2)-(3x4096FC)"
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed structural element (pre-layout; conv stride defaults to 1).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Unit {
+    Conv { o: usize, k: usize, stride: usize },
+    Fc { d: usize },
+    Pool { k: usize },
+    Group(Vec<(usize, Unit)>),
+}
+
+/// Split a structure string into top-level dash-separated segments
+/// (dashes inside parentheses don't split).
+fn split_segments(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            '-' if depth == 0 => {
+                if i > start {
+                    out.push(&s[start..i]);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        out.push(&s[start..]);
+    }
+    out
+}
+
+/// Parse one segment into (repeat, unit).
+fn parse_segment(seg: &str) -> Result<(usize, Unit)> {
+    let seg = seg.trim();
+    // optional leading "Nx" repeat (only when followed by more content)
+    let (repeat, rest) = match seg.find('x') {
+        Some(i) if seg[..i].chars().all(|c| c.is_ascii_digit()) && i > 0 => {
+            (seg[..i].parse::<usize>()?, &seg[i + 1..])
+        }
+        _ => (1, seg),
+    };
+    let unit = parse_unit(rest)?;
+    Ok((repeat, unit))
+}
+
+fn parse_unit(s: &str) -> Result<Unit> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('(').and_then(|r| r.strip_suffix(')')) {
+        let items = split_segments(inner)
+            .into_iter()
+            .map(parse_segment)
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Unit::Group(items));
+    }
+    if let Some(rest) = s.strip_prefix("MP").or_else(|| s.strip_prefix('P')) {
+        if let Ok(k) = rest.parse::<usize>() {
+            return Ok(Unit::Pool { k });
+        }
+    }
+    if let Some(d) = s.strip_suffix("FC") {
+        return Ok(Unit::Fc { d: d.parse().context("fc width")? });
+    }
+    if let Some(ci) = s.find('C') {
+        let o: usize = s[..ci].parse().context("conv channels")?;
+        let rest = &s[ci + 1..];
+        let (k, stride) = match rest.split_once('/') {
+            Some((k, st)) => (k.parse()?, st.parse()?),
+            None => (rest.parse()?, 1),
+        };
+        return Ok(Unit::Conv { o, k, stride });
+    }
+    bail!("cannot parse unit {s:?}")
+}
+
+/// Parse a full Table-5 structure string into a flat unit list.
+pub fn parse_structure(s: &str) -> Result<Vec<Unit>> {
+    let mut flat = Vec::new();
+    fn push(flat: &mut Vec<Unit>, repeat: usize, u: Unit) {
+        for _ in 0..repeat {
+            match &u {
+                Unit::Group(items) => {
+                    for (r, inner) in items {
+                        push(flat, *r, inner.clone());
+                    }
+                }
+                other => flat.push(other.clone()),
+            }
+        }
+    }
+    for seg in split_segments(s) {
+        let (r, u) = parse_segment(seg)?;
+        push(&mut flat, r, u);
+    }
+    Ok(flat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_structure() {
+        let units = parse_structure("1024FC-1024FC-1024FC").unwrap();
+        assert_eq!(units.len(), 3);
+        assert!(units.iter().all(|u| matches!(u, Unit::Fc { d: 1024 })));
+    }
+
+    #[test]
+    fn cifar_vgg_structure() {
+        let units = parse_structure(
+            "(2x128C3)-MP2-(2x256C3)-MP2-(2x512C3)-MP2-(3x1024FC)",
+        )
+        .unwrap();
+        // 2+1+2+1+2+1+3 = 12
+        assert_eq!(units.len(), 12);
+        assert_eq!(units[0], Unit::Conv { o: 128, k: 3, stride: 1 });
+        assert_eq!(units[2], Unit::Pool { k: 2 });
+        assert_eq!(units[11], Unit::Fc { d: 1024 });
+    }
+
+    #[test]
+    fn resnet18_structure() {
+        let units =
+            parse_structure("64C7/4-4x64C3-4x128C3-4x256C3-4x512C3-(2x512FC)")
+                .unwrap();
+        assert_eq!(units.len(), 1 + 16 + 2);
+        assert_eq!(units[0], Unit::Conv { o: 64, k: 7, stride: 4 });
+        assert_eq!(units[1], Unit::Conv { o: 64, k: 3, stride: 1 });
+        assert_eq!(units[17], Unit::Fc { d: 512 });
+    }
+
+    #[test]
+    fn vgg16_nested_group() {
+        let units = parse_structure(
+            "(2x64C3)-P2-(2x128C3)-P2-(3x256C3)-P2-2x(3x512C3-P2)-(3x4096FC)",
+        )
+        .unwrap();
+        // 2+1+2+1+3+1+2*(3+1)+3 = 21
+        assert_eq!(units.len(), 21);
+        assert_eq!(units[9], Unit::Pool { k: 2 });
+        assert_eq!(units[10], Unit::Conv { o: 512, k: 3, stride: 1 });
+        assert_eq!(units[13], Unit::Pool { k: 2 });
+        assert_eq!(units[17], Unit::Pool { k: 2 });
+    }
+
+    #[test]
+    fn alexnet_structure() {
+        let units = parse_structure(
+            "(128C11/4)-P2-(256C5)-P2-(3x256C3)-P2-(3x4096FC)",
+        )
+        .unwrap();
+        // 1+1+1+1+3+1+3 = 11
+        assert_eq!(units.len(), 11);
+        assert_eq!(units[0], Unit::Conv { o: 128, k: 11, stride: 4 });
+        assert_eq!(units[1], Unit::Pool { k: 2 });
+        assert_eq!(units[2], Unit::Conv { o: 256, k: 5, stride: 1 });
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(parse_structure("12Q3").is_err());
+        assert!(parse_structure("C3").is_err());
+    }
+}

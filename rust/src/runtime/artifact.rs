@@ -1,0 +1,194 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.txt` is a line-oriented description written by
+//! aot.py:
+//!
+//! ```text
+//! artifact mlp_b8 mlp_b8.hlo.txt
+//! arg a0 f32 8x800
+//! arg a1 f32 800
+//! out f32 8x10
+//! end
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of an artifact argument/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "u32" => DType::U32,
+            "i32" => DType::I32,
+            other => bail!("unknown dtype tag {other:?}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one argument or output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+/// One compiled computation: HLO path + argument/output specs.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: String,
+    pub args: Vec<ArgSpec>,
+    pub outs: Vec<ArgSpec>,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            match toks[0] {
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("line {}: nested artifact", lno + 1);
+                    }
+                    if toks.len() != 3 {
+                        bail!("line {}: artifact needs name + path", lno + 1);
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: toks[1].to_string(),
+                        hlo_path: toks[2].to_string(),
+                        args: vec![],
+                        outs: vec![],
+                    });
+                }
+                "arg" => {
+                    let a = cur.as_mut().context("arg outside artifact")?;
+                    if toks.len() != 4 {
+                        bail!("line {}: arg needs name dtype shape", lno + 1);
+                    }
+                    a.args.push(ArgSpec {
+                        name: toks[1].to_string(),
+                        dtype: DType::parse(toks[2])?,
+                        dims: parse_dims(toks[3])?,
+                    });
+                }
+                "out" => {
+                    let a = cur.as_mut().context("out outside artifact")?;
+                    if toks.len() != 3 {
+                        bail!("line {}: out needs dtype shape", lno + 1);
+                    }
+                    a.outs.push(ArgSpec {
+                        name: format!("out{}", a.outs.len()),
+                        dtype: DType::parse(toks[1])?,
+                        dims: parse_dims(toks[2])?,
+                    });
+                }
+                "end" => {
+                    m.artifacts
+                        .push(cur.take().context("end outside artifact")?);
+                }
+                other => bail!("line {}: unknown directive {other:?}", lno + 1),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest truncated: missing `end`");
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path}"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact mlp_b8 mlp_b8.hlo.txt
+arg a0 f32 8x800
+arg a1 u32 1024x25
+out f32 8x10
+end
+artifact bmm bmm.hlo.txt
+arg a0 u32 1024x32
+out i32 1024x1024
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("mlp_b8").unwrap();
+        assert_eq!(a.args.len(), 2);
+        assert_eq!(a.args[0].dims, vec![8, 800]);
+        assert_eq!(a.args[1].dtype, DType::U32);
+        assert_eq!(a.outs[0].dims, vec![8, 10]);
+        assert_eq!(a.args[1].byte_len(), 1024 * 25 * 4);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("arg a0 f32 8").is_err());
+        assert!(Manifest::parse("artifact x y\narg a0 f32 8").is_err());
+        assert!(Manifest::parse("artifact x y\nfrob\nend").is_err());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let m = Manifest::parse("artifact s s.hlo.txt\narg a0 f32 1\nout f32 1\nend")
+            .unwrap();
+        assert_eq!(m.artifacts[0].args[0].element_count(), 1);
+    }
+}

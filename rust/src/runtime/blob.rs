@@ -1,0 +1,148 @@
+//! Flat tensor blobs (`*.bin` + `*.meta`) written by train.py.
+//!
+//! Meta line format: `name dtype shape offset nbytes`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::DType;
+
+/// One named tensor inside a blob.
+#[derive(Clone, Debug)]
+pub struct BlobTensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// A loaded weight/test-set blob.
+#[derive(Clone, Debug)]
+pub struct Blob {
+    pub tensors: HashMap<String, BlobTensor>,
+    pub data: Vec<u8>,
+}
+
+impl Blob {
+    /// Load `base.bin` + `base.meta`.
+    pub fn load(base: &str) -> Result<Blob> {
+        let meta = std::fs::read_to_string(format!("{base}.meta"))
+            .with_context(|| format!("reading {base}.meta"))?;
+        let data = std::fs::read(format!("{base}.bin"))
+            .with_context(|| format!("reading {base}.bin"))?;
+        let mut tensors = HashMap::new();
+        for line in meta.lines() {
+            let t: Vec<&str> = line.split_whitespace().collect();
+            if t.is_empty() {
+                continue;
+            }
+            if t.len() != 5 {
+                bail!("bad meta line: {line:?}");
+            }
+            let dims = t[2]
+                .split('x')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?;
+            let tensor = BlobTensor {
+                dtype: DType::parse(t[1])?,
+                dims,
+                offset: t[3].parse()?,
+                nbytes: t[4].parse()?,
+            };
+            if tensor.offset + tensor.nbytes > data.len() {
+                bail!("tensor {} overruns blob", t[0]);
+            }
+            tensors.insert(t[0].to_string(), tensor);
+        }
+        Ok(Blob { tensors, data })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&BlobTensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor {name:?} not in blob"))
+    }
+
+    /// Raw little-endian bytes of a tensor.
+    pub fn bytes(&self, name: &str) -> Result<&[u8]> {
+        let t = self.get(name)?;
+        Ok(&self.data[t.offset..t.offset + t.nbytes])
+    }
+
+    pub fn as_f32(&self, name: &str) -> Result<Vec<f32>> {
+        let t = self.get(name)?;
+        if t.dtype != DType::F32 {
+            bail!("tensor {name:?} is not f32");
+        }
+        Ok(bytes_to_vec(self.bytes(name)?, f32::from_le_bytes))
+    }
+
+    pub fn as_u32(&self, name: &str) -> Result<Vec<u32>> {
+        let t = self.get(name)?;
+        if t.dtype != DType::U32 {
+            bail!("tensor {name:?} is not u32");
+        }
+        Ok(bytes_to_vec(self.bytes(name)?, u32::from_le_bytes))
+    }
+
+    pub fn as_i32(&self, name: &str) -> Result<Vec<i32>> {
+        let t = self.get(name)?;
+        if t.dtype != DType::I32 {
+            bail!("tensor {name:?} is not i32");
+        }
+        Ok(bytes_to_vec(self.bytes(name)?, i32::from_le_bytes))
+    }
+}
+
+fn bytes_to_vec<T, F: Fn([u8; 4]) -> T>(bytes: &[u8], conv: F) -> Vec<T> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| conv([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_temp_blob() -> String {
+        let dir = std::env::temp_dir().join(format!("tcbnn_blob_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("test").to_str().unwrap().to_string();
+        let f32s: Vec<f32> = vec![1.5, -2.0, 3.25];
+        let u32s: Vec<u32> = vec![7, 0xFFFF_FFFF];
+        let mut bin = std::fs::File::create(format!("{base}.bin")).unwrap();
+        for x in &f32s {
+            bin.write_all(&x.to_le_bytes()).unwrap();
+        }
+        for x in &u32s {
+            bin.write_all(&x.to_le_bytes()).unwrap();
+        }
+        std::fs::write(
+            format!("{base}.meta"),
+            "a f32 3 0 12\nb u32 2 12 8\n",
+        )
+        .unwrap();
+        base
+    }
+
+    #[test]
+    fn roundtrip() {
+        let base = write_temp_blob();
+        let blob = Blob::load(&base).unwrap();
+        assert_eq!(blob.as_f32("a").unwrap(), vec![1.5, -2.0, 3.25]);
+        assert_eq!(blob.as_u32("b").unwrap(), vec![7, 0xFFFF_FFFF]);
+        assert_eq!(blob.get("b").unwrap().dims, vec![2]);
+        assert!(blob.as_f32("b").is_err()); // dtype mismatch
+        assert!(blob.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_overrun() {
+        let base = write_temp_blob();
+        std::fs::write(format!("{base}.meta"), "a f32 100 0 400\n").unwrap();
+        assert!(Blob::load(&base).is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! PJRT execution engine: compiles HLO-text artifacts once at startup and
+//! runs them with concrete tensors on the request path.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArgSpec, ArtifactSpec, DType, Manifest};
+
+/// Host-side tensor payload matching an ArgSpec.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    U32(Vec<u32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32(_) => DType::F32,
+            TensorData::U32(_) => DType::U32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::U32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            TensorData::U32(v) => Ok(v),
+            _ => bail!("tensor is not u32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    fn to_literal(&self, spec: &ArgSpec) -> Result<xla::Literal> {
+        if self.dtype() != spec.dtype {
+            bail!(
+                "arg {}: dtype mismatch (got {:?}, want {:?})",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            );
+        }
+        if self.len() != spec.element_count() {
+            bail!(
+                "arg {}: element count {} != spec {:?}",
+                spec.name,
+                self.len(),
+                spec.dims
+            );
+        }
+        let (ty, bytes): (xla::ElementType, Vec<u8>) = match self {
+            TensorData::F32(v) => (
+                xla::ElementType::F32,
+                v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+            TensorData::U32(v) => (
+                xla::ElementType::U32,
+                v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+            TensorData::I32(v) => (
+                xla::ElementType::S32,
+                v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &spec.dims, &bytes)
+            .map_err(|e| anyhow::anyhow!("literal create failed: {e:?}"))
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &ArgSpec) -> Result<TensorData> {
+        Ok(match spec.dtype {
+            DType::F32 => TensorData::F32(
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))?,
+            ),
+            DType::U32 => TensorData::U32(
+                lit.to_vec::<u32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec u32: {e:?}"))?,
+            ),
+            DType::I32 => TensorData::I32(
+                lit.to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))?,
+            ),
+        })
+    }
+}
+
+/// One compiled artifact ready for execution.
+pub struct LoadedModel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Pre-convert a tail of the argument list (e.g. model weights) to
+    /// XLA literals once, so the per-request path only converts the
+    /// request tensors.  `from` is the spec index the tail starts at.
+    pub fn prepare_tail(&self, from: usize, tail: &[TensorData]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(from + tail.len() == self.spec.args.len(), "tail mismatch");
+        tail.iter()
+            .zip(&self.spec.args[from..])
+            .map(|(t, s)| t.to_literal(s))
+            .collect()
+    }
+
+    /// Execute with `head` request tensors + a prepared literal tail
+    /// (from `prepare_tail`) — the serving hot path.
+    pub fn run_prepared(
+        &self,
+        head: &[TensorData],
+        tail: &[xla::Literal],
+    ) -> Result<Vec<TensorData>> {
+        anyhow::ensure!(
+            head.len() + tail.len() == self.spec.args.len(),
+            "arg count mismatch"
+        );
+        let head_lits: Vec<xla::Literal> = head
+            .iter()
+            .zip(&self.spec.args[..head.len()])
+            .map(|(t, s)| t.to_literal(s))
+            .collect::<Result<_>>()?;
+        let all: Vec<&xla::Literal> = head_lits.iter().chain(tail.iter()).collect();
+        let bufs = self
+            .exe
+            .execute::<&xla::Literal>(&all)
+            .map_err(|e| anyhow::anyhow!("execute failed: {e:?}"))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal_sync: {e:?}"))?;
+        let elems = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        elems
+            .iter()
+            .zip(&self.spec.outs)
+            .map(|(l, s)| TensorData::from_literal(l, s))
+            .collect()
+    }
+
+    /// Execute with host tensors; returns host tensors per output spec.
+    pub fn run(&self, args: &[TensorData]) -> Result<Vec<TensorData>> {
+        if args.len() != self.spec.args.len() {
+            bail!(
+                "{}: got {} args, want {}",
+                self.spec.name,
+                args.len(),
+                self.spec.args.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .zip(&self.spec.args)
+            .map(|(t, s)| t.to_literal(s))
+            .collect::<Result<_>>()?;
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute failed: {e:?}"))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal_sync: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        if elems.len() != self.spec.outs.len() {
+            bail!(
+                "{}: got {} outputs, want {}",
+                self.spec.name,
+                elems.len(),
+                self.spec.outs.len()
+            );
+        }
+        elems
+            .iter()
+            .zip(&self.spec.outs)
+            .map(|(l, s)| TensorData::from_literal(l, s))
+            .collect()
+    }
+}
+
+/// The PJRT engine owning the client and all compiled artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: String,
+    models: HashMap<String, LoadedModel>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and parse the manifest (compiles lazily).
+    pub fn new(artifact_dir: &str) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir: artifact_dir.to_string(),
+            models: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+        if !self.models.contains_key(name) {
+            let spec = self
+                .manifest
+                .get(name)
+                .with_context(|| format!("artifact {name:?} not in manifest"))?
+                .clone();
+            let path = format!("{}/{}", self.dir, spec.hlo_path);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            self.models
+                .insert(name.to_string(), LoadedModel { spec, exe });
+        }
+        Ok(&self.models[name])
+    }
+
+    /// Convenience: load + run.
+    pub fn run(&mut self, name: &str, args: &[TensorData]) -> Result<Vec<TensorData>> {
+        self.load(name)?;
+        self.models[name].run(args)
+    }
+
+    pub fn loaded_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}

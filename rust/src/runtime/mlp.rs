@@ -1,0 +1,92 @@
+//! The AOT-compiled MNIST MLP as a servable `BatchModel`.
+//!
+//! Wraps the `mlp_b{8,32,128}` artifacts + the trained weight blob into
+//! the coordinator's batch-execution interface.  Weights are converted
+//! to TensorData once at load; each batch execution feeds the image
+//! tensor plus the cached weight arguments.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::server::BatchModel;
+
+use super::blob::Blob;
+use super::executor::{Engine, TensorData};
+
+pub const MLP_IN: usize = 800;
+pub const MLP_CLASSES: usize = 10;
+pub const MLP_BUCKETS: [usize; 3] = [8, 32, 128];
+
+/// PJRT-backed MLP.
+pub struct MlpModel {
+    engine: Engine,
+    /// weight literals pre-converted per batch bucket (§Perf opt-2: the
+    /// 400 KB weight blob is converted to XLA literals once at load, so
+    /// each request only converts its image tensor)
+    prepared: Vec<(usize, Vec<xla::Literal>)>,
+}
+
+impl MlpModel {
+    /// Load from an artifact directory (requires `make artifacts`).
+    pub fn load(dir: &str) -> Result<MlpModel> {
+        let mut engine = Engine::new(dir)?;
+        let blob = Blob::load(&format!("{dir}/mlp_weights"))
+            .context("mlp weight blob (run `make artifacts`)")?;
+        let weight_args = weight_args_from_blob(&blob)?;
+        // pre-compile all buckets (no first-request compile stall) and
+        // pre-convert the weight tail for each
+        let mut prepared = Vec::new();
+        for b in MLP_BUCKETS {
+            let model = engine.load(&format!("mlp_b{b}"))?;
+            let tail = model.prepare_tail(1, &weight_args)?;
+            prepared.push((b, tail));
+        }
+        Ok(MlpModel { engine, prepared })
+    }
+
+    /// Run one padded batch (must be a compiled bucket size).
+    pub fn infer(&mut self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(images.len() == batch * MLP_IN, "bad image payload");
+        let tail = &self
+            .prepared
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .context("batch is not a compiled bucket")?
+            .1;
+        let model = self.engine.load(&format!("mlp_b{batch}"))?;
+        let head = [TensorData::F32(images.to_vec())];
+        let outs = model.run_prepared(&head, tail)?;
+        Ok(outs[0].as_f32()?.to_vec())
+    }
+}
+
+/// Blob -> the (in_thresh, w1..b4) argument tail of `mlp_forward`.
+pub fn weight_args_from_blob(blob: &Blob) -> Result<Vec<TensorData>> {
+    let mut args = vec![TensorData::F32(blob.as_f32("in_thresh")?)];
+    for i in 1..=3 {
+        args.push(TensorData::U32(blob.as_u32(&format!("w{i}"))?));
+        args.push(TensorData::F32(blob.as_f32(&format!("t{i}"))?));
+        args.push(TensorData::I32(blob.as_i32(&format!("f{i}"))?));
+    }
+    args.push(TensorData::U32(blob.as_u32("w4")?));
+    args.push(TensorData::F32(blob.as_f32("g4")?));
+    args.push(TensorData::F32(blob.as_f32("b4")?));
+    Ok(args)
+}
+
+impl BatchModel for MlpModel {
+    fn run_batch(&mut self, data: &[f32], padded: usize) -> Result<Vec<f32>> {
+        self.infer(data, padded)
+    }
+
+    fn row_elems(&self) -> usize {
+        MLP_IN
+    }
+
+    fn out_elems(&self) -> usize {
+        MLP_CLASSES
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        MLP_BUCKETS.to_vec()
+    }
+}

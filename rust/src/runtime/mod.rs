@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python never runs here — the interchange is HLO *text* (see aot.py for
+//! why text rather than serialized protos) plus flat weight blobs
+//! (`*.bin` / `*.meta`).
+
+pub mod artifact;
+pub mod blob;
+pub mod executor;
+pub mod mlp;
+
+pub use artifact::{ArgSpec, ArtifactSpec, DType, Manifest};
+pub use blob::Blob;
+pub use executor::{Engine, LoadedModel, TensorData};
+pub use mlp::MlpModel;

@@ -1,0 +1,213 @@
+//! GPU model parameters (Table 2 of the paper + §4 calibration numbers).
+
+/// Which memory space a WMMA tile load/store touches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemSpace {
+    Global,
+    Shared,
+}
+
+/// Parameters of one simulated Turing GPU.
+#[derive(Clone, Debug)]
+pub struct GpuModel {
+    pub name: &'static str,
+    pub chip: &'static str,
+    // ---- Table 2 ----
+    pub sms: usize,
+    pub max_ctas_per_sm: usize,
+    pub max_warps_per_sm: usize,
+    pub max_threads_per_cta: usize,
+    pub regs_per_sm: usize,
+    pub shared_per_sm: usize,
+    pub tcus_per_sm: usize,
+    pub mem_bytes: usize,
+    pub mem_bw_bytes: f64,
+    // ---- clocks ----
+    pub clock_hz: f64,
+    // ---- §4.3 BMMA pipeline calibration ----
+    /// raw (unpipelined) bmma_sync latency in cycles (~201 / ~190)
+    pub bmma_raw_cycles: f64,
+    /// incremental cycles per op with distinct accumulators
+    pub bmma_pipe_cycles: f64,
+    /// incremental cycles per op when reusing the same accumulator
+    pub bmma_same_acc_cycles: f64,
+    // ---- §4.1 memory calibration ----
+    /// base global-memory wmma-load latency (fast-stride case)
+    pub global_load_base_cycles: f64,
+    /// extra cycles per additional L1 sector issue cycle
+    pub sector_issue_cycles: f64,
+    /// shared-memory wmma-load latency (≈ 5x less than global, §4.1)
+    pub shared_load_base_cycles: f64,
+    /// does shared-memory latency vary with stride (RTX2080 shows mild
+    /// bank effects; 2080Ti is flat — §4.1 observation (2))
+    pub shared_stride_sensitive: bool,
+    /// global store latency (no stride pattern, §4.2)
+    pub global_store_cycles: f64,
+    pub shared_store_cycles: f64,
+    // ---- issue/throughput rates ----
+    /// subcores per SM (each issues 1 instr/cycle)
+    pub subcores: usize,
+    /// INT32 lanes per SM (BSTC xor/add path)
+    pub intu_lanes: usize,
+    /// SFU-issued ops per cycle per SM (BSTC popc path)
+    pub sfu_rate: f64,
+    /// FP16 FMA per cycle per TCU (HMMA; Volta/Turing: 64)
+    pub hmma_fma_per_tcu: f64,
+    /// kernel launch + teardown overhead, seconds (§6.2 cites ~20us)
+    pub launch_overhead_s: f64,
+    /// grid-wide cooperative-group sync cost, cycles (per layer barrier)
+    pub coop_sync_cycles: f64,
+    /// L2 capacity, bytes (drives the re-read-traffic miss model: once a
+    /// kernel's unique working set spills L2, re-reads hit DRAM — this is
+    /// the ">4K sizes drop" mechanism of §7.2 observation (I))
+    pub l2_bytes: f64,
+    /// L2 bandwidth as a multiple of DRAM bandwidth
+    pub l2_bw_mult: f64,
+    /// global scale on the stride-based L1 miss factors (0.25 =
+    /// calibrated default; bench_ablation A4 sweeps it)
+    pub l1_miss_rate: f64,
+}
+
+impl GpuModel {
+    /// Peak DRAM bytes per cycle for the whole chip.
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.mem_bw_bytes / self.clock_hz
+    }
+
+    /// Seconds for a cycle count.
+    pub fn secs(&self, cycles: f64) -> f64 {
+        cycles / self.clock_hz
+    }
+
+    /// Peak binary TOPS via BTC (for roofline reporting): each bmma is
+    /// 8*8*128 mul + acc = 2*8192 ops at 1 op / pipe_cycles / subcore.
+    pub fn peak_btc_tops(&self) -> f64 {
+        let ops_per_bmma = 2.0 * 8.0 * 8.0 * 128.0;
+        let per_sm = ops_per_bmma / self.bmma_pipe_cycles * self.subcores as f64;
+        per_sm * self.sms as f64 * self.clock_hz / 1e12
+    }
+
+    /// Peak FP16 tensor-core TFLOPS.
+    pub fn peak_hmma_tflops(&self) -> f64 {
+        2.0 * self.hmma_fma_per_tcu
+            * (self.tcus_per_sm * self.sms) as f64
+            * self.clock_hz
+            / 1e12
+    }
+}
+
+/// NVIDIA GeForce RTX 2080 (TU104), Table 2 row 2.
+pub const RTX2080: GpuModel = GpuModel {
+    name: "RTX2080",
+    chip: "TU104",
+    sms: 46,
+    max_ctas_per_sm: 16,
+    max_warps_per_sm: 32,
+    max_threads_per_cta: 1024,
+    regs_per_sm: 64 * 1024,
+    shared_per_sm: 64 * 1024,
+    tcus_per_sm: 8,
+    mem_bytes: 8 * 1024 * 1024 * 1024,
+    mem_bw_bytes: 448.0e9,
+    clock_hz: 1.710e9,
+    bmma_raw_cycles: 201.0,
+    bmma_pipe_cycles: 4.0,
+    bmma_same_acc_cycles: 10.0,
+    global_load_base_cycles: 440.0,
+    sector_issue_cycles: 24.0,
+    shared_load_base_cycles: 86.0,
+    shared_stride_sensitive: true,
+    global_store_cycles: 360.0,
+    shared_store_cycles: 48.0,
+    subcores: 4,
+    intu_lanes: 64,
+    sfu_rate: 32.0,
+    hmma_fma_per_tcu: 64.0,
+    launch_overhead_s: 5.0e-6,
+    coop_sync_cycles: 2600.0,
+    l2_bytes: 4.0 * 1024.0 * 1024.0,
+    l2_bw_mult: 4.0,
+    l1_miss_rate: 0.25,
+};
+
+/// NVIDIA GeForce RTX 2080 Ti (TU102), Table 2 row 1.
+pub const RTX2080TI: GpuModel = GpuModel {
+    name: "RTX2080Ti",
+    chip: "TU102",
+    sms: 68,
+    max_ctas_per_sm: 16,
+    max_warps_per_sm: 32,
+    max_threads_per_cta: 1024,
+    regs_per_sm: 64 * 1024,
+    shared_per_sm: 64 * 1024,
+    tcus_per_sm: 8,
+    mem_bytes: 11 * 1024 * 1024 * 1024,
+    mem_bw_bytes: 616.0e9,
+    clock_hz: 1.545e9,
+    bmma_raw_cycles: 190.0,
+    bmma_pipe_cycles: 4.0,
+    bmma_same_acc_cycles: 10.0,
+    global_load_base_cycles: 430.0,
+    sector_issue_cycles: 22.0,
+    shared_load_base_cycles: 78.0,
+    shared_stride_sensitive: false,
+    global_store_cycles: 350.0,
+    shared_store_cycles: 44.0,
+    subcores: 4,
+    intu_lanes: 64,
+    sfu_rate: 32.0,
+    hmma_fma_per_tcu: 64.0,
+    launch_overhead_s: 5.0e-6,
+    coop_sync_cycles: 3000.0,
+    l2_bytes: 5.5 * 1024.0 * 1024.0,
+    l2_bw_mult: 4.0,
+    l1_miss_rate: 0.25,
+};
+
+/// Both evaluation GPUs, in Table 2 order.
+pub fn all_gpus() -> [&'static GpuModel; 2] {
+    [&RTX2080TI, &RTX2080]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        assert_eq!(RTX2080TI.sms, 68);
+        assert_eq!(RTX2080.sms, 46);
+        assert_eq!(RTX2080TI.tcus_per_sm, 8);
+        assert!((RTX2080TI.mem_bw_bytes - 616e9).abs() < 1.0);
+        assert!((RTX2080.mem_bw_bytes - 448e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn paper_bmma_calibration() {
+        // §4.3: ~201 / ~190 cycles raw; +4 pipelined; +10 same-acc.
+        assert!((RTX2080.bmma_raw_cycles - 201.0).abs() < 1e-9);
+        assert!((RTX2080TI.bmma_raw_cycles - 190.0).abs() < 1e-9);
+        assert_eq!(RTX2080.bmma_pipe_cycles, 4.0);
+        assert_eq!(RTX2080.bmma_same_acc_cycles, 10.0);
+    }
+
+    #[test]
+    fn shared_is_about_5x_faster_than_global() {
+        for g in all_gpus() {
+            let ratio = g.global_load_base_cycles / g.shared_load_base_cycles;
+            assert!(ratio > 4.0 && ratio < 7.0, "{}: ratio {ratio}", g.name);
+        }
+    }
+
+    #[test]
+    fn peak_rates_sane() {
+        // BTC peak should be far above FP16 peak (the 16x theory claim,
+        // modulated by pipeline rates).
+        for g in all_gpus() {
+            assert!(g.peak_btc_tops() > 2.0 * g.peak_hmma_tflops());
+        }
+        // 2080Ti FP16 TC peak ~ 107 TFLOPS at boost; at base clock less.
+        let t = RTX2080TI.peak_hmma_tflops();
+        assert!(t > 80.0 && t < 130.0, "hmma peak {t}");
+    }
+}

@@ -1,0 +1,333 @@
+//! The timing engine: occupancy + roofline composition of a KernelTrace
+//! on a GpuModel.
+//!
+//! The model is analytic (not event-driven): a kernel's duration is the
+//! maximum over resource bounds — tensor-core issue, INTU/SFU issue,
+//! DRAM bandwidth, and the latency-bound pipeline-fill term — plus
+//! fixed launch and cooperative-sync overheads.  This is the classic
+//! GPU "max-of-rooflines + startup" form; every term is driven by the
+//! §4-calibrated mechanism models.
+
+use super::config::{GpuModel, MemSpace};
+use super::tensorcore as tc;
+use super::trace::KernelTrace;
+use super::wmma;
+
+/// Per-resource cycle bounds for one launch (for reporting/debugging).
+#[derive(Clone, Debug, Default)]
+pub struct CostBreakdown {
+    pub active_warps_per_sm: usize,
+    pub warp_serial_cycles: f64,
+    pub tcu_cycles: f64,
+    pub intu_cycles: f64,
+    pub sfu_cycles: f64,
+    pub fpu_cycles: f64,
+    pub dram_cycles: f64,
+    pub latency_cycles: f64,
+    pub sync_cycles: f64,
+    pub total_cycles: f64,
+    pub total_secs: f64,
+    /// which bound won ("tcu", "dram", ...)
+    pub bottleneck: &'static str,
+}
+
+/// The simulator facade.
+#[derive(Clone, Debug)]
+pub struct Engine {
+    pub gpu: GpuModel,
+}
+
+impl Engine {
+    pub fn new(gpu: &GpuModel) -> Engine {
+        Engine { gpu: gpu.clone() }
+    }
+
+    /// Warps resident per SM given the trace's occupancy limiters.
+    pub fn occupancy(&self, t: &KernelTrace) -> usize {
+        let g = &self.gpu;
+        let by_warps = g.max_warps_per_sm / t.warps_per_cta.max(1);
+        let by_smem = if t.smem_per_cta > 0 {
+            g.shared_per_sm / t.smem_per_cta
+        } else {
+            g.max_ctas_per_sm
+        };
+        let by_regs = if t.regs_per_thread > 0 {
+            g.regs_per_sm / (t.regs_per_thread * t.warps_per_cta * 32)
+        } else {
+            g.max_ctas_per_sm
+        };
+        let ctas = by_warps.min(by_smem).min(by_regs).min(g.max_ctas_per_sm).max(1);
+        // can't exceed the grid itself (spread over SMs)
+        let grid_ctas_per_sm = t.grid_ctas.div_ceil(g.sms).max(1);
+        ctas.min(grid_ctas_per_sm) * t.warps_per_cta
+    }
+
+    /// One warp's serial (dependency-chain) cycles.
+    pub fn warp_serial_cycles(&self, t: &KernelTrace) -> f64 {
+        let g = &self.gpu;
+        let w = &t.warp;
+        let mut cy = 0.0;
+        for &(ldm, space, count) in &w.tile_loads {
+            if count == 0 {
+                continue;
+            }
+            // memory-level parallelism: the K-loop's next loads issue
+            // while the current bmma computes — only the first load pays
+            // full latency, the rest stream behind it
+            let first = wmma::load_latency(g, ldm, space);
+            let stream = match space {
+                MemSpace::Global => 40.0,
+                MemSpace::Shared => 8.0,
+            };
+            cy += first + (count as f64 - 1.0) * stream;
+        }
+        for &(space, count) in &w.tile_stores {
+            cy += wmma::store_latency(g, 0, space) * count as f64;
+        }
+        // bulk loads: one LDG.E.128 round trip per 512B, pipelined
+        if w.bulk_load_bytes > 0 {
+            let rounds = (w.bulk_load_bytes as f64 / 512.0).ceil();
+            cy += g.global_load_base_cycles + (rounds - 1.0) * 8.0;
+        }
+        if w.bulk_store_bytes > 0 {
+            cy += g.global_store_cycles;
+        }
+        cy += tc::bmma_latency(g, w.bmma_ops, false);
+        cy += tc::bmma_latency(g, w.bmma_same_acc_ops, true);
+        // issue-bound lane work (assume full pipelining within the warp)
+        cy += w.intu_ops as f64 / 32.0;
+        cy += w.sfu_ops as f64 / 4.0;
+        cy += w.fp_ops as f64 / 32.0;
+        cy += w.hmma_fmas as f64 / (2.0 * g.hmma_fma_per_tcu);
+        cy += w.int4_macs as f64 / (8.0 * g.hmma_fma_per_tcu);
+        cy += w.cta_syncs as f64 * 20.0;
+        cy
+    }
+
+    /// Memory-hierarchy cycle bound.
+    ///
+    /// Three levels, all driven by the trace:
+    ///
+    /// * **L1 filter** — WMMA tile loads hit L1 at a rate set by their
+    ///   stride quality (fully-coalesced FSB tiles are dense cache lines
+    ///   reused by neighbouring warps; conflicted 32B-aligned strides
+    ///   splinter).  The filter degrades toward miss=1 as the kernel's
+    ///   unique footprint outgrows cacheability — the §7.2 (I) ">4K
+    ///   drop".  Bulk/streaming traffic always passes through.
+    /// * **L2 bandwidth** — filtered traffic at `l2_bw_mult` x DRAM BW.
+    /// * **DRAM** — compulsory footprint plus the L2-missing fraction of
+    ///   the filtered traffic.
+    pub fn memory_cycles(&self, t: &KernelTrace) -> f64 {
+        let g = &self.gpu;
+        let w = &t.warp;
+        let total_warps = t.total_warps() as f64;
+        let comp = if t.compulsory_bytes > 0.0 {
+            t.compulsory_bytes
+        } else {
+            t.dram_bytes()
+        };
+        let mut load_fp = if t.load_footprint_bytes > 0.0 {
+            t.load_footprint_bytes
+        } else {
+            comp
+        };
+        if t.wave_bytes_per_cta > 0.0 {
+            load_fp = load_fp.min(t.wave_bytes_per_cta * g.sms as f64);
+        }
+        // footprint-driven degradation of L1 locality (loads only — the
+        // streamed output does not evict operand lines meaningfully)
+        let spill = ((load_fp - g.l2_bytes) / (32.0 * g.l2_bytes)).clamp(0.0, 1.0);
+
+        let mut l2_traffic = 0.0f64;
+        for &(ldm, space, count) in &w.tile_loads {
+            if space == MemSpace::Global {
+                let info = super::memory::bit_tile_coalesce(0, ldm);
+                let base_miss = match info.issue_cycles {
+                    0..=2 => 0.08, // dense 128B lines (FSB / ldm=128)
+                    3..=4 => 0.16, // fast strided family (128+256k)
+                    _ => 0.40,     // conflicted 32B-aligned strides
+                };
+                // l1_miss_rate acts as a global scale on the stride-based
+                // factors (0.25 = calibrated default; see bench_ablation A4)
+                let base_miss = (base_miss * self.gpu.l1_miss_rate / 0.25).min(1.0);
+                let miss = base_miss + (1.0 - base_miss) * spill;
+                l2_traffic +=
+                    info.bytes_moved as f64 * miss * count as f64 * total_warps;
+            }
+        }
+        for &(space, count) in &w.tile_stores {
+            if space == MemSpace::Global {
+                l2_traffic += (super::wmma::store_bytes_moved() * count) as f64
+                    * total_warps;
+            }
+        }
+        l2_traffic += (w.bulk_load_bytes + w.bulk_store_bytes) as f64 * total_warps;
+        l2_traffic = l2_traffic.max(comp);
+
+        let l2_cycles = l2_traffic / (g.bytes_per_cycle() * g.l2_bw_mult);
+        let l2_miss = if load_fp <= 0.8 * g.l2_bytes {
+            0.03
+        } else {
+            (0.03 + (load_fp - 0.8 * g.l2_bytes) / (4.0 * g.l2_bytes)).min(1.0)
+        };
+        let dram_bytes = (comp + (l2_traffic - comp) * l2_miss).min(l2_traffic);
+        let dram_cycles = dram_bytes / g.bytes_per_cycle();
+        l2_cycles.max(dram_cycles)
+    }
+
+    /// Shared-memory bandwidth bound (128 B/cycle per SM).
+    pub fn shared_cycles(&self, t: &KernelTrace) -> f64 {
+        t.shared_bytes_per_warp() * t.total_warps() as f64
+            / (128.0 * self.gpu.sms as f64)
+    }
+
+    /// Full cost of one kernel trace.
+    pub fn cost(&self, t: &KernelTrace) -> CostBreakdown {
+        let g = &self.gpu;
+        let total_warps = t.total_warps() as f64;
+        let active = self.occupancy(t);
+        let warp_serial = self.warp_serial_cycles(t);
+
+        // ---- throughput bounds, whole chip ----
+        let sms = g.sms as f64;
+        let w = &t.warp;
+        // NOTE: the same-accumulator stall (+6 cycles) is a per-warp
+        // dependency bubble; other resident warps fill the TCU pipeline,
+        // so chip-level throughput runs at the pipelined rate for both.
+        let tcu = ((w.bmma_ops + w.bmma_same_acc_ops) as f64
+            / tc::bmma_rate_per_sm(g, false)
+            + w.hmma_fmas as f64 / tc::hmma_fma_rate_per_sm(g)
+            + w.int4_macs as f64 / tc::int4_mac_rate_per_sm(g))
+            * total_warps
+            / sms;
+        let intu = w.intu_ops as f64 * total_warps / tc::intu_rate_per_sm(g) / sms;
+        let sfu = w.sfu_ops as f64 * total_warps / tc::sfu_rate_per_sm(g) / sms;
+        let fpu = w.fp_ops as f64 * total_warps / (32.0 * g.subcores as f64) / sms;
+        // WMMA loads also occupy LSU issue slots; fold into dram bound.
+        let dram = self.memory_cycles(t);
+        let shared = self.shared_cycles(t);
+
+        // ---- latency bound: rounds of resident warps, each round's
+        // pipeline must fill once; steady-state is throughput-bound ----
+        let rounds = (total_warps / (active as f64 * sms)).ceil().max(1.0);
+        // With `active` warps interleaving, per-warp serial latency is
+        // hidden up to the active-warp count:
+        let latency = rounds * warp_serial / (active as f64).min(warp_serial.max(1.0));
+
+        let sync = t.coop_syncs as f64 * g.coop_sync_cycles;
+        let launch_cycles = t.launches as f64 * g.launch_overhead_s * g.clock_hz;
+
+        let (mut bottleneck, mut peak) = ("latency", latency);
+        for (n, v) in [
+            ("tcu", tcu),
+            ("intu", intu),
+            ("sfu", sfu),
+            ("fpu", fpu),
+            ("dram", dram),
+            ("shared", shared),
+        ] {
+            if v > peak {
+                peak = v;
+                bottleneck = n;
+            }
+        }
+        // startup: first warp's serial chain isn't hidden
+        let total = peak + warp_serial + sync + launch_cycles;
+        CostBreakdown {
+            active_warps_per_sm: active,
+            warp_serial_cycles: warp_serial,
+            tcu_cycles: tcu,
+            intu_cycles: intu,
+            sfu_cycles: sfu,
+            fpu_cycles: fpu,
+            dram_cycles: dram,
+            latency_cycles: latency,
+            sync_cycles: sync,
+            total_cycles: total,
+            total_secs: g.secs(total),
+            bottleneck,
+        }
+    }
+
+    /// Cost of a sequence of dependent launches/phases (e.g. the layers
+    /// of a fused BNN kernel separated by cooperative syncs).
+    pub fn cost_seq(&self, traces: &[KernelTrace]) -> f64 {
+        traces.iter().map(|t| self.cost(t).total_secs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::{MemSpace, RTX2080TI};
+    use crate::sim::trace::KernelTrace;
+
+    fn bmm_like_trace(tiles: usize, ldm: usize) -> KernelTrace {
+        let mut t = KernelTrace::new("test");
+        t.grid_ctas = tiles;
+        t.warps_per_cta = 2;
+        t.warp.load_tiles(ldm, MemSpace::Global, 16);
+        t.warp.bmma_same_acc_ops = 8;
+        t.warp.store_tiles(MemSpace::Global, 1);
+        t
+    }
+
+    #[test]
+    fn more_work_more_cycles() {
+        let e = Engine::new(&RTX2080TI);
+        let small = e.cost(&bmm_like_trace(64, 128)).total_cycles;
+        let big = e.cost(&bmm_like_trace(4096, 128)).total_cycles;
+        assert!(big > small);
+    }
+
+    #[test]
+    fn fast_stride_beats_slow_stride() {
+        let e = Engine::new(&RTX2080TI);
+        let fast = e.cost(&bmm_like_trace(2048, 128)).total_secs;
+        let slow = e.cost(&bmm_like_trace(2048, 1024)).total_secs;
+        assert!(fast < slow, "fast {fast} vs slow {slow}");
+    }
+
+    #[test]
+    fn occupancy_respects_smem() {
+        let e = Engine::new(&RTX2080TI);
+        let mut t = KernelTrace::new("t");
+        t.grid_ctas = 10_000;
+        t.warps_per_cta = 2;
+        t.smem_per_cta = 32 * 1024; // only 2 CTAs fit
+        assert_eq!(e.occupancy(&t), 4);
+        t.smem_per_cta = 0;
+        assert_eq!(e.occupancy(&t), 16 * 2); // CTA-limit bound
+    }
+
+    #[test]
+    fn occupancy_small_grid() {
+        let e = Engine::new(&RTX2080TI);
+        let mut t = KernelTrace::new("t");
+        t.grid_ctas = 68; // one per SM
+        t.warps_per_cta = 4;
+        assert_eq!(e.occupancy(&t), 4);
+    }
+
+    #[test]
+    fn sync_and_launch_overhead_counted() {
+        let e = Engine::new(&RTX2080TI);
+        let mut t = bmm_like_trace(64, 128);
+        let base = e.cost(&t).total_secs;
+        t.coop_syncs = 10;
+        let with_sync = e.cost(&t).total_secs;
+        assert!(with_sync > base);
+        t.launches = 3;
+        assert!(e.cost(&t).total_secs > with_sync);
+    }
+
+    #[test]
+    fn bottleneck_labels() {
+        let e = Engine::new(&RTX2080TI);
+        let mut t = KernelTrace::new("mem");
+        t.grid_ctas = 100_000;
+        t.warps_per_cta = 2;
+        t.warp.bulk_load_bytes = 1 << 16;
+        assert_eq!(e.cost(&t).bottleneck, "dram");
+    }
+}

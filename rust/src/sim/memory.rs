@@ -1,0 +1,206 @@
+//! Warp-level memory access model: sector coalescing and the L1
+//! dual-port sector interleave (§4.1).
+//!
+//! The mechanism, implemented literally from the paper's explanation:
+//! the Turing L1 data cache is split into two sectors with independent
+//! ports, interleaving the address space at a 32-byte step.  A warp-wide
+//! access is decomposed into 32-byte sectors; sectors mapping to the same
+//! port serialize, sectors on different ports dual-issue.  Strides that
+//! are an odd multiple of 16 bytes (ldm = 128 + 256k bits for bit tiles)
+//! spread consecutive tile rows across both port phases; 32-byte-aligned
+//! strides pile rows onto one port and serialize.
+
+/// One warp-lane memory request.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneAccess {
+    pub byte_addr: usize,
+    pub bytes: usize,
+}
+
+pub const SECTOR_BYTES: usize = 32;
+
+/// Decompose a warp's lane accesses into distinct 32B sectors.
+pub fn sectors(accesses: &[LaneAccess]) -> Vec<usize> {
+    let mut out: Vec<usize> = accesses
+        .iter()
+        .flat_map(|a| {
+            let first = a.byte_addr / SECTOR_BYTES;
+            let last = (a.byte_addr + a.bytes.max(1) - 1) / SECTOR_BYTES;
+            first..=last
+        })
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// L1 port of a sector: the 32B interleave step means consecutive
+/// sectors alternate ports.
+#[inline]
+pub fn sector_port(sector: usize) -> usize {
+    sector % 2
+}
+
+/// Summary of a warp-wide access after coalescing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CoalesceInfo {
+    /// distinct 32B sectors touched
+    pub sectors: usize,
+    /// cycles needed to issue all sectors through the two ports
+    /// (max over ports of sectors on that port)
+    pub issue_cycles: usize,
+    /// bytes actually moved (sectors * 32; over-fetch shows up here)
+    pub bytes_moved: usize,
+}
+
+/// Coalesce a warp's accesses and compute the issue schedule.
+pub fn coalesce(accesses: &[LaneAccess]) -> CoalesceInfo {
+    let secs = sectors(accesses);
+    let p0 = secs.iter().filter(|&&s| sector_port(s) == 0).count();
+    let p1 = secs.len() - p0;
+    CoalesceInfo {
+        sectors: secs.len(),
+        issue_cycles: p0.max(p1).max(1),
+        bytes_moved: secs.len() * SECTOR_BYTES,
+    }
+}
+
+/// Lane accesses for a WMMA bit-tile load (§4.1's mapping): 8 thread
+/// groups of 4 lanes, group g covers 128-bit row g, each lane one 4-byte
+/// word.  `ldm_bits` is the row stride in elements (bits), `base` the
+/// tile's byte offset.
+pub fn bit_tile_accesses(base: usize, ldm_bits: usize) -> Vec<LaneAccess> {
+    let stride_bytes = ldm_bits / 8;
+    (0..32)
+        .map(|lane| {
+            let group = lane / 4; // row
+            let word = lane % 4;
+            LaneAccess { byte_addr: base + group * stride_bytes + word * 4, bytes: 4 }
+        })
+        .collect()
+}
+
+/// Coalescing for a WMMA bit-tile load, including the dual-port L1
+/// sector-interleave conflict of §4.1.
+///
+/// Mechanism (Jia et al.'s dissection + the paper's own explanation):
+/// the 8 thread groups issue their 128-bit rows in beats of two groups
+/// spaced two rows apart — (0,2), (1,3), (4,6), (5,7).  The L1 is split
+/// into two 32-byte-interleaved sector ports (`port = (addr/32) % 2`);
+/// a beat whose two rows land on the same port serializes.  The net
+/// effect: strides that are an odd multiple of 16 B (`ldm = 128+256k`
+/// bits) stay conflict-free, 32-byte-aligned strides (`ldm = 256k`)
+/// conflict on every beat — exactly the Figs 2/4 pattern.
+pub fn bit_tile_coalesce(base: usize, ldm_bits: usize) -> CoalesceInfo {
+    let accesses = bit_tile_accesses(base, ldm_bits);
+    let base_info = coalesce(&accesses);
+    let stride = ldm_bits / 8;
+    let row_sector = |r: usize| (base + r * stride) / SECTOR_BYTES;
+    let mut conflicts = 0usize;
+    for r in [0usize, 1, 4, 5] {
+        let (s0, s1) = (row_sector(r), row_sector(r + 2));
+        if s0 != s1 && sector_port(s0) == sector_port(s1) {
+            conflicts += 1;
+        }
+    }
+    CoalesceInfo {
+        sectors: base_info.sectors,
+        issue_cycles: base_info.sectors.div_ceil(2) + conflicts,
+        bytes_moved: base_info.bytes_moved,
+    }
+}
+
+/// Lane accesses for a WMMA int-tile (8x8 i32) store: row-major, two
+/// consecutive elements per lane encoded as one 8-byte STG.E.64 (§4.2).
+pub fn int_tile_accesses(base: usize, ldm_elems: usize) -> Vec<LaneAccess> {
+    (0..32)
+        .map(|lane| {
+            let row = lane / 4;
+            let pair = lane % 4;
+            LaneAccess {
+                byte_addr: base + row * ldm_elems * 4 + pair * 8,
+                bytes: 8,
+            }
+        })
+        .collect()
+}
+
+/// Lane accesses for a 128-bit-per-lane vectorized load (LDG.E.128,
+/// Design-2's staging path): 32 lanes x 16B contiguous.
+pub fn vec128_accesses(base: usize) -> Vec<LaneAccess> {
+    (0..32)
+        .map(|lane| LaneAccess { byte_addr: base + lane * 16, bytes: 16 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ldm128_is_fully_coalesced() {
+        // 8 rows x 16B at 16B stride = 128 contiguous bytes = 4 sectors,
+        // 2 per port, no paired-beat conflicts -> 2 issue cycles.
+        let info = bit_tile_coalesce(0, 128);
+        assert_eq!(info.sectors, 4);
+        assert_eq!(info.issue_cycles, 2);
+        assert_eq!(info.bytes_moved, 128);
+    }
+
+    #[test]
+    fn ldm256_port_conflicts() {
+        // 32B stride: paired rows (r, r+2) are 64B apart — same port on
+        // every beat -> 4 conflict cycles on top of 4 issue cycles.
+        let info = bit_tile_coalesce(0, 256);
+        assert_eq!(info.sectors, 8);
+        assert_eq!(info.issue_cycles, 8, "every beat port-conflicts");
+    }
+
+    #[test]
+    fn ldm384_balances_ports() {
+        // 48B stride (odd multiple of 16B): paired rows are 96B apart —
+        // opposite ports, conflict-free.
+        let info = bit_tile_coalesce(0, 384);
+        assert_eq!(info.sectors, 8);
+        assert_eq!(info.issue_cycles, 4, "sectors split across ports");
+    }
+
+    #[test]
+    fn fast_stride_family_128_plus_256k() {
+        // §4.1: ldm = 128+256k (384, 640, 896) all behave well.
+        let base = bit_tile_coalesce(0, 384).issue_cycles;
+        for ldm in [640, 896, 1152] {
+            let c = bit_tile_coalesce(0, ldm);
+            assert_eq!(c.issue_cycles, base, "ldm={ldm}");
+        }
+        // and the 32B-aligned family is strictly worse
+        for ldm in [256, 512, 768, 1024] {
+            let c = bit_tile_coalesce(0, ldm);
+            assert!(c.issue_cycles > base, "ldm={ldm}");
+        }
+    }
+
+    #[test]
+    fn int_tile_store_is_8_sectors() {
+        let info = coalesce(&int_tile_accesses(0, 8));
+        // 8 rows x 32B = 256B contiguous
+        assert_eq!(info.sectors, 8);
+        assert_eq!(info.bytes_moved, 256);
+    }
+
+    #[test]
+    fn vec128_is_contiguous_512b() {
+        let info = coalesce(&vec128_accesses(0));
+        assert_eq!(info.sectors, 16);
+        assert_eq!(info.issue_cycles, 8);
+        assert_eq!(info.bytes_moved, 512);
+    }
+
+    #[test]
+    fn overfetch_counts_whole_sectors() {
+        // a single misaligned 4-byte access still moves a 32B sector
+        let info = coalesce(&[LaneAccess { byte_addr: 30, bytes: 4 }]);
+        assert_eq!(info.sectors, 2);
+        assert_eq!(info.bytes_moved, 64);
+    }
+}

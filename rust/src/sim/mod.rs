@@ -1,0 +1,33 @@
+//! Turing GPU timing model ("the testbed substitute").
+//!
+//! The paper's evaluation ran on physical RTX 2080 / 2080 Ti GPUs; this
+//! environment has none, so — per the reproduction substitution rule —
+//! the microarchitectural mechanisms the paper documents in §4 are
+//! implemented as an analytic cycle model:
+//!
+//! * `memory` — warp-level address generation, 32-byte sector coalescing
+//!   and the dual-port L1 sector interleave that makes `ldm = 128+256k`
+//!   the fast strides (§4.1's explanation, implemented literally);
+//! * `wmma`  — `load/store_matrix_sync` latency as a function of `ldm`
+//!   and memory space (Figs 2–9);
+//! * `tensorcore` — the BMMA pipeline: ~200-cycle raw latency, 4-cycle
+//!   pipelined issue, +6 cycles when accumulating into the same tile C
+//!   (Figs 10–13), plus FP16 HMMA and int4 rates for the baselines;
+//! * `trace` — the per-kernel event summary each kernel implementation
+//!   emits (loads with their strides, bmma ops, INTU/SFU work, stores);
+//! * `engine` — occupancy + roofline composition turning a trace into
+//!   cycles and seconds on a given `GpuModel`.
+//!
+//! Calibration targets are the paper's own §4 numbers; everything in
+//! Figs 16–28 is then *predicted* by the model, not fitted.
+
+pub mod config;
+pub mod engine;
+pub mod memory;
+pub mod tensorcore;
+pub mod trace;
+pub mod wmma;
+
+pub use config::{GpuModel, MemSpace, RTX2080, RTX2080TI};
+pub use engine::{CostBreakdown, Engine};
+pub use trace::{KernelTrace, WarpWork};

@@ -1,0 +1,184 @@
+//! Kernel event traces: the interface between kernel implementations and
+//! the timing engine.
+//!
+//! A kernel implementation (rust/src/kernels/*) describes one launch as a
+//! `KernelTrace`: grid/CTA geometry plus the aggregate per-warp work.
+//! Events carry the *actual* strides and accumulator-reuse behaviour of
+//! that design, so design differences (e.g. FSB's fixed ldm=128 vs the
+//! general format's ldm=width) translate mechanically into cycles.
+
+use super::config::MemSpace;
+
+/// Aggregate work performed by one (representative) warp.
+#[derive(Clone, Debug, Default)]
+pub struct WarpWork {
+    /// WMMA bit-tile loads: (ldm_bits, memory space, count)
+    pub tile_loads: Vec<(usize, MemSpace, usize)>,
+    /// WMMA int-tile stores: (space, count)
+    pub tile_stores: Vec<(MemSpace, usize)>,
+    /// bulk vectorized global loads, bytes (LDG.E.128 staging)
+    pub bulk_load_bytes: usize,
+    /// bulk global stores, bytes (e.g. binarized output words)
+    pub bulk_store_bytes: usize,
+    /// bytes written into shared memory (staging traffic; consumes the
+    /// SM's shared-memory bandwidth together with shared tile loads)
+    pub shared_store_bytes: usize,
+    /// bmma_sync ops with independent accumulators
+    pub bmma_ops: usize,
+    /// bmma_sync ops accumulating into the same tile C
+    pub bmma_same_acc_ops: usize,
+    /// INT32 lane-ops (xor/add — BSTC path), per warp across all lanes
+    pub intu_ops: usize,
+    /// SFU lane-ops (popc — BSTC path)
+    pub sfu_ops: usize,
+    /// FP16 tensor-core FMAs (HMMA baselines), per warp
+    pub hmma_fmas: usize,
+    /// int4 tensor-core MACs (Cutlass uint4 baseline), per warp
+    pub int4_macs: usize,
+    /// FP32 lane-ops on the FPU (first-layer BWN path)
+    pub fp_ops: usize,
+    /// __syncthreads()-class barriers
+    pub cta_syncs: usize,
+}
+
+impl WarpWork {
+    /// Add a WMMA tile-load group.
+    pub fn load_tiles(&mut self, ldm_bits: usize, space: MemSpace, count: usize) {
+        if count > 0 {
+            self.tile_loads.push((ldm_bits, space, count));
+        }
+    }
+
+    pub fn store_tiles(&mut self, space: MemSpace, count: usize) {
+        if count > 0 {
+            self.tile_stores.push((space, count));
+        }
+    }
+}
+
+/// One kernel launch.
+#[derive(Clone, Debug)]
+pub struct KernelTrace {
+    pub name: String,
+    /// CTAs in the grid
+    pub grid_ctas: usize,
+    /// warps per CTA
+    pub warps_per_cta: usize,
+    /// shared memory per CTA, bytes (occupancy limiter)
+    pub smem_per_cta: usize,
+    /// registers per thread (occupancy limiter)
+    pub regs_per_thread: usize,
+    /// aggregate work of one warp (all warps assumed symmetric)
+    pub warp: WarpWork,
+    /// number of grid-wide cooperative-group barriers inside the kernel
+    pub coop_syncs: usize,
+    /// kernel launches this trace represents (fused BNN = 1)
+    pub launches: usize,
+    /// unique data footprint, bytes (compulsory traffic).  When 0, all
+    /// requested traffic is charged to DRAM; otherwise re-reads beyond
+    /// the footprint are filtered through the L2 miss model.
+    pub compulsory_bytes: f64,
+    /// unique bytes *loaded* (operands only — excludes the streamed
+    /// output).  Drives cache-spill behaviour; 0 = use compulsory_bytes.
+    pub load_footprint_bytes: f64,
+    /// for staged/tiled schemes: resident bytes one CTA needs at a time
+    /// (its shared-memory panels).  The cache-spill footprint becomes
+    /// min(load_footprint, sms * this) — swizzled rasterization keeps a
+    /// wave's panels L2-resident even when the matrices don't fit.
+    /// 0 = unstaged (whole rows stream through the warp).
+    pub wave_bytes_per_cta: f64,
+}
+
+impl KernelTrace {
+    pub fn new(name: &str) -> KernelTrace {
+        KernelTrace {
+            name: name.to_string(),
+            grid_ctas: 1,
+            warps_per_cta: 1,
+            smem_per_cta: 0,
+            regs_per_thread: 32,
+            warp: WarpWork::default(),
+            coop_syncs: 0,
+            launches: 1,
+            compulsory_bytes: 0.0,
+            load_footprint_bytes: 0.0,
+            wave_bytes_per_cta: 0.0,
+        }
+    }
+
+    pub fn total_warps(&self) -> usize {
+        self.grid_ctas * self.warps_per_cta
+    }
+
+    /// Total DRAM bytes moved by the whole grid (loads + stores),
+    /// charging sector over-fetch for strided tile loads.
+    pub fn dram_bytes(&self) -> f64 {
+        let w = &self.warp;
+        let mut per_warp = 0.0;
+        for &(ldm, space, count) in &w.tile_loads {
+            if space == MemSpace::Global {
+                per_warp += (super::wmma::load_bytes_moved(ldm) * count) as f64;
+            }
+        }
+        for &(space, count) in &w.tile_stores {
+            if space == MemSpace::Global {
+                per_warp += (super::wmma::store_bytes_moved() * count) as f64;
+            }
+        }
+        per_warp += (w.bulk_load_bytes + w.bulk_store_bytes) as f64;
+        per_warp * self.total_warps() as f64
+    }
+
+    /// Total bmma ops over the grid.
+    pub fn total_bmma(&self) -> usize {
+        (self.warp.bmma_ops + self.warp.bmma_same_acc_ops) * self.total_warps()
+    }
+
+    /// Shared-memory bytes moved per warp (loads + staging stores).
+    pub fn shared_bytes_per_warp(&self) -> f64 {
+        let w = &self.warp;
+        let mut b = w.shared_store_bytes as f64;
+        for &(_, space, count) in &w.tile_loads {
+            if space == MemSpace::Shared {
+                b += (128 * count) as f64;
+            }
+        }
+        for &(space, count) in &w.tile_stores {
+            if space == MemSpace::Shared {
+                b += (256 * count) as f64;
+            }
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dram_accounting() {
+        let mut t = KernelTrace::new("t");
+        t.grid_ctas = 2;
+        t.warps_per_cta = 2;
+        t.warp.load_tiles(128, MemSpace::Global, 3); // 3 x 128B
+        t.warp.load_tiles(128, MemSpace::Shared, 5); // not DRAM
+        t.warp.store_tiles(MemSpace::Global, 1); // 256B
+        t.warp.bulk_load_bytes = 100;
+        assert_eq!(t.dram_bytes(), ((3 * 128 + 256 + 100) * 4) as f64);
+    }
+
+    #[test]
+    fn overfetch_charged() {
+        let mut t = KernelTrace::new("t");
+        t.warp.load_tiles(256, MemSpace::Global, 1); // 2x over-fetch
+        assert_eq!(t.dram_bytes(), 256.0);
+    }
+
+    #[test]
+    fn zero_count_loads_skipped() {
+        let mut w = WarpWork::default();
+        w.load_tiles(128, MemSpace::Global, 0);
+        assert!(w.tile_loads.is_empty());
+    }
+}

@@ -1,0 +1,119 @@
+//! WMMA load/store latency model (§4.1–4.2, Figs 2–9).
+
+use super::config::GpuModel;
+pub use super::config::MemSpace;
+use super::memory;
+
+/// Average per-warp latency (cycles) of `load_matrix_sync` for a b1
+/// bit-tile with row stride `ldm_bits`, from the given memory space.
+///
+/// Global memory: base latency + extra L1 sector-issue cycles from the
+/// coalescing/port model (this is what produces the Figs 2/4 shape with
+/// minima at ldm = 128 and 128+256k).
+/// Shared memory: flat ~5x-lower latency on the 2080Ti; the 2080 shows a
+/// mild bank-conflict ripple on 32B-aligned strides (Figs 3 vs 5).
+pub fn load_latency(gpu: &GpuModel, ldm_bits: usize, space: MemSpace) -> f64 {
+    let info = memory::bit_tile_coalesce(0, ldm_bits);
+    match space {
+        MemSpace::Global => {
+            // the minimum achievable issue is 2 cycles (4 sectors, 2 ports)
+            let extra = (info.issue_cycles as f64 - 2.0).max(0.0);
+            gpu.global_load_base_cycles + extra * gpu.sector_issue_cycles
+        }
+        MemSpace::Shared => {
+            if gpu.shared_stride_sensitive {
+                let extra = (info.issue_cycles as f64 - 2.0).max(0.0);
+                gpu.shared_load_base_cycles + extra * (gpu.sector_issue_cycles * 0.12)
+            } else {
+                gpu.shared_load_base_cycles
+            }
+        }
+    }
+}
+
+/// Bytes actually moved from DRAM by one bit-tile load (over-fetch with
+/// bad strides is charged at full sector granularity).
+pub fn load_bytes_moved(ldm_bits: usize) -> usize {
+    memory::bit_tile_coalesce(0, ldm_bits).bytes_moved
+}
+
+/// `store_matrix_sync` of the 8x8 i32 tile: §4.2 found no stride
+/// pattern — modeled as a flat cost per space.
+pub fn store_latency(gpu: &GpuModel, _ldm_elems: usize, space: MemSpace) -> f64 {
+    match space {
+        MemSpace::Global => gpu.global_store_cycles,
+        MemSpace::Shared => gpu.shared_store_cycles,
+    }
+}
+
+/// Bytes moved by one int-tile store (8x8 x 4B).
+pub fn store_bytes_moved() -> usize {
+    256
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::{all_gpus, RTX2080, RTX2080TI};
+
+    #[test]
+    fn fig2_shape_minima_at_128_and_384() {
+        // paper Fig 2/4: ldm=128 and 384 are the global-memory minima
+        for gpu in all_gpus() {
+            let l128 = load_latency(gpu, 128, MemSpace::Global);
+            let l256 = load_latency(gpu, 256, MemSpace::Global);
+            let l384 = load_latency(gpu, 384, MemSpace::Global);
+            let l512 = load_latency(gpu, 512, MemSpace::Global);
+            assert!(l128 < l256, "{}: 128 beats 256", gpu.name);
+            assert!(l128 <= l384, "{}: 128 fastest", gpu.name);
+            assert!(l384 < l256, "{}: 384 beats 256", gpu.name);
+            assert!(l384 < l512, "{}: 384 beats 512", gpu.name);
+        }
+    }
+
+    #[test]
+    fn fast_family_is_flat() {
+        for gpu in all_gpus() {
+            let l384 = load_latency(gpu, 384, MemSpace::Global);
+            for ldm in [640, 896] {
+                assert_eq!(load_latency(gpu, ldm, MemSpace::Global), l384);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_5x_faster_and_flat_on_ti() {
+        // §4.1 observations (1) and (2)
+        let g = load_latency(&RTX2080TI, 1024, MemSpace::Global);
+        let s = load_latency(&RTX2080TI, 1024, MemSpace::Shared);
+        assert!(g / s > 5.0, "global/shared = {}", g / s);
+        let s2 = load_latency(&RTX2080TI, 256, MemSpace::Shared);
+        assert_eq!(s, s2, "2080Ti shared is stride-insensitive");
+        // 2080 shared latency is higher than Ti and mildly stride-varying
+        assert!(
+            load_latency(&RTX2080, 256, MemSpace::Shared)
+                > load_latency(&RTX2080, 128, MemSpace::Shared)
+        );
+        assert!(
+            load_latency(&RTX2080, 128, MemSpace::Shared)
+                > load_latency(&RTX2080TI, 128, MemSpace::Shared)
+        );
+    }
+
+    #[test]
+    fn store_has_no_stride_pattern() {
+        for gpu in all_gpus() {
+            let a = store_latency(gpu, 8, MemSpace::Global);
+            let b = store_latency(gpu, 1024, MemSpace::Global);
+            assert_eq!(a, b);
+            assert!(store_latency(gpu, 8, MemSpace::Shared) < a);
+        }
+    }
+
+    #[test]
+    fn bad_strides_overfetch() {
+        assert_eq!(load_bytes_moved(128), 128);
+        assert_eq!(load_bytes_moved(256), 256); // 2x over-fetch
+        assert_eq!(load_bytes_moved(1024), 256);
+    }
+}

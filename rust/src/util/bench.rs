@@ -1,0 +1,166 @@
+//! Criterion-style micro-bench harness (criterion itself is unavailable
+//! offline — see Cargo.toml).  Auto-calibrates iteration counts, warms up,
+//! reports mean/p50/stddev, and can emit CSV rows for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use super::stats::{fmt_duration, Summary};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub summary: Summary,
+    /// optional user-supplied work units per iteration (ops, images, ...)
+    pub work_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        if self.summary.mean > 0.0 {
+            self.work_per_iter / self.summary.mean
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Bench harness configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    /// target wall time spent measuring each case
+    pub measure_secs: f64,
+    /// target wall time for warmup
+    pub warmup_secs: f64,
+    /// max samples collected
+    pub max_samples: usize,
+    pub quiet: bool,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { measure_secs: 1.0, warmup_secs: 0.3, max_samples: 200, quiet: false }
+    }
+}
+
+impl Bencher {
+    /// Fast settings for CI / `cargo test`.
+    pub fn quick() -> Self {
+        Bencher { measure_secs: 0.15, warmup_secs: 0.05, max_samples: 50, quiet: true }
+    }
+
+    /// Honour TCBNN_BENCH_SECS if set (used by `cargo bench` wrappers).
+    pub fn from_env() -> Self {
+        let mut b = Bencher::default();
+        if let Ok(v) = std::env::var("TCBNN_BENCH_SECS") {
+            if let Ok(secs) = v.parse::<f64>() {
+                b.measure_secs = secs;
+                b.warmup_secs = (secs * 0.25).min(1.0);
+            }
+        }
+        b
+    }
+
+    /// Measure `f`, auto-scaling iterations; `work_per_iter` feeds the
+    /// throughput column (use 1.0 when meaningless).
+    pub fn bench<F: FnMut()>(&self, name: &str, work_per_iter: f64, mut f: F) -> BenchResult {
+        // Estimate a single-shot duration.
+        let t0 = Instant::now();
+        f();
+        let single = t0.elapsed().as_secs_f64().max(1e-9);
+
+        // Warmup.
+        let wi = ((self.warmup_secs / single).ceil() as u64).clamp(1, 1_000_000);
+        let tw = Instant::now();
+        for _ in 0..wi {
+            f();
+            if tw.elapsed().as_secs_f64() > self.warmup_secs * 2.0 {
+                break;
+            }
+        }
+
+        // Decide batch size per sample so each sample is >= ~50us.
+        let per_sample = (50e-6 / single).ceil().max(1.0) as u64;
+        let n_samples = ((self.measure_secs / (single * per_sample as f64)).ceil()
+            as usize)
+            .clamp(5, self.max_samples);
+
+        let mut samples = Vec::with_capacity(n_samples);
+        for _ in 0..n_samples {
+            let t = Instant::now();
+            for _ in 0..per_sample {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / per_sample as f64);
+        }
+        let summary = Summary::from(&samples);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: per_sample * n_samples as u64,
+            summary,
+            work_per_iter,
+        };
+        if !self.quiet {
+            println!(
+                "{:<44} mean {:>12}  p50 {:>12}  sd {:>10}  ({} iters)",
+                res.name,
+                fmt_duration(res.summary.mean),
+                fmt_duration(res.summary.p50),
+                fmt_duration(res.summary.stddev),
+                res.iters
+            );
+        }
+        res
+    }
+}
+
+/// Write bench results as CSV (name,mean_s,p50_s,stddev_s,throughput).
+pub fn write_csv(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "name,mean_s,p50_s,stddev_s,throughput")?;
+    for r in results {
+        writeln!(
+            f,
+            "{},{:.9},{:.9},{:.9},{:.3}",
+            r.name, r.summary.mean, r.summary.p50, r.summary.stddev, r.throughput()
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher::quick();
+        let mut x = 0u64;
+        let r = b.bench("spin", 1000.0, || {
+            for i in 0..1000u64 {
+                x = x.wrapping_add(i * i);
+            }
+        });
+        assert!(r.summary.mean > 0.0);
+        assert!(r.throughput() > 0.0);
+        assert!(x > 0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let b = Bencher::quick();
+        let r = b.bench("noop", 1.0, || {
+            std::hint::black_box(1 + 1);
+        });
+        let path = std::env::temp_dir().join("tcbnn_bench_test.csv");
+        write_csv(path.to_str().unwrap(), &[r]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("name,"));
+        assert!(text.contains("noop"));
+    }
+}

@@ -1,0 +1,16 @@
+//! In-tree replacements for crates unavailable in this offline environment
+//! (clap, criterion, rand, proptest, serde — see the Cargo.toml note).
+//!
+//! Everything here is deliberately small and dependency-free: a xorshift
+//! PRNG, a CLI argument parser, a criterion-style bench harness, summary
+//! statistics, ASCII/CSV table printers, and a thread pool.
+
+pub mod bench;
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+
+pub use rng::Rng;

@@ -1,0 +1,73 @@
+//! Tiny property-testing helper (proptest is unavailable offline).
+//!
+//! `run_cases(seed, n, |rng| ...)` executes n randomized cases with a
+//! per-case seeded RNG; on failure the panic message includes the case
+//! seed so the exact input can be replayed in isolation.
+
+use super::rng::Rng;
+
+/// Run `n` property cases.  `body` receives a fresh deterministic RNG per
+/// case; panic inside the body fails the test with the replay seed.
+pub fn run_cases<F: Fn(&mut Rng)>(seed: u64, n: usize, body: F) {
+    for case in 0..n {
+        let case_seed = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64 + 1);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property case {case}/{n} failed (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Pick a random element of a slice.
+pub fn pick<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.gen_range(xs.len())]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        run_cases(1, 50, |rng| {
+            let x = rng.gen_range(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn reports_replay_seed() {
+        // silence the expected panic's backtrace noise
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let r = std::panic::catch_unwind(|| {
+            run_cases(2, 10, |rng| {
+                assert!(rng.gen_range(4) != 1, "hit the bad value");
+            });
+        });
+        std::panic::set_hook(prev);
+        std::panic::resume_unwind(r.unwrap_err());
+    }
+
+    #[test]
+    fn pick_in_range() {
+        let mut rng = Rng::new(3);
+        let xs = [10, 20, 30];
+        for _ in 0..100 {
+            assert!(xs.contains(pick(&mut rng, &xs)));
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Summary statistics over latency/throughput samples.
+
+/// Summary of a sample set (durations in seconds or any unit).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn from(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        let mut s: Vec<f64> = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: s[0],
+            max: s[n - 1],
+            p50: percentile_sorted(&s, 50.0),
+            p90: percentile_sorted(&s, 90.0),
+            p99: percentile_sorted(&s, 99.0),
+        }
+    }
+}
+
+/// Percentile of an ascending-sorted slice (nearest-rank with interpolation).
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Pretty-print a duration in seconds with an adaptive unit.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.3} s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Pretty-print an ops/sec rate.
+pub fn fmt_rate(ops_per_sec: f64) -> String {
+    if ops_per_sec >= 1e12 {
+        format!("{:.2} T/s", ops_per_sec / 1e12)
+    } else if ops_per_sec >= 1e9 {
+        format!("{:.2} G/s", ops_per_sec / 1e9)
+    } else if ops_per_sec >= 1e6 {
+        format!("{:.2} M/s", ops_per_sec / 1e6)
+    } else if ops_per_sec >= 1e3 {
+        format!("{:.2} K/s", ops_per_sec / 1e3)
+    } else {
+        format!("{:.2} /s", ops_per_sec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert!((percentile_sorted(&s, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 90.0) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_default() {
+        let s = Summary::from(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).ends_with(" us"));
+        assert!(fmt_rate(2e12).ends_with(" T/s"));
+    }
+}

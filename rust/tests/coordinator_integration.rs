@@ -1,0 +1,107 @@
+//! Coordinator integration: server + batcher + PJRT model end to end,
+//! plus mock-model stress covering batching invariants under load.
+
+use std::time::Duration;
+
+use tcbnn::coordinator::server::{BatchModel, InferenceServer, MockModel, ServerConfig};
+use tcbnn::runtime::{Blob, MlpModel};
+use tcbnn::util::Rng;
+
+#[test]
+fn mock_server_under_concurrent_load() {
+    let srv = InferenceServer::start(ServerConfig::default(), || {
+        Ok(Box::new(MockModel {
+            row_elems: 16,
+            out_elems: 4,
+            delay: Duration::from_micros(200),
+        }) as Box<dyn BatchModel>)
+    });
+    // 4 client threads x 50 requests
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let srv = &srv;
+            s.spawn(move || {
+                let mut rng = Rng::new(t as u64);
+                let rxs: Vec<_> = (0..50)
+                    .map(|i| {
+                        let mut v = vec![0.0f32; 16];
+                        v[0] = (t * 1000 + i) as f32 + rng.next_f32() * 0.25;
+                        (v[0], srv.submit(v))
+                    })
+                    .collect();
+                for (tag, rx) in rxs {
+                    let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+                    assert_eq!(r.logits[0], tag, "response routed to wrong client");
+                    assert_eq!(r.argmax, 3);
+                }
+            });
+        }
+    });
+    assert_eq!(srv.metrics.completed(), 200);
+    assert!(srv.metrics.batches() <= 200, "some batching happened");
+    let s = srv.metrics.latency_summary();
+    assert!(s.p99 < 5.0, "p99 sane: {}", s.p99);
+}
+
+#[test]
+fn pjrt_mlp_served_end_to_end() {
+    let dir = tcbnn::artifact_dir();
+    if !std::path::Path::new(&format!("{dir}/manifest.txt")).exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let test = Blob::load(&format!("{dir}/testset")).unwrap();
+    let images = test.as_f32("images").unwrap();
+    let labels = test.as_i32("labels").unwrap();
+    let n = 256usize;
+
+    let dir2 = dir.clone();
+    let srv = InferenceServer::start(
+        ServerConfig { max_wait: Duration::from_millis(1), queue_capacity: 4096 },
+        move || Ok(Box::new(MlpModel::load(&dir2)?) as Box<dyn BatchModel>),
+    );
+    let inputs: Vec<Vec<f32>> =
+        (0..n).map(|i| images[i * 800..(i + 1) * 800].to_vec()).collect();
+    let resps = srv.submit_all(inputs);
+    assert_eq!(resps.len(), n);
+    let correct = resps
+        .iter()
+        .enumerate()
+        .filter(|(i, r)| r.argmax as i32 == labels[*i])
+        .count();
+    let acc = correct as f64 / n as f64;
+    // the deployed model scores ~88% on the synthetic test set; the
+    // serving path must not degrade it
+    assert!(acc > 0.75, "served accuracy {acc}");
+    assert_eq!(srv.metrics.completed(), n as u64);
+    assert!(srv.metrics.throughput_fps() > 0.0);
+}
+
+#[test]
+fn mlp_direct_infer_matches_served_results() {
+    let dir = tcbnn::artifact_dir();
+    if !std::path::Path::new(&format!("{dir}/manifest.txt")).exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let test = Blob::load(&format!("{dir}/testset")).unwrap();
+    let images = test.as_f32("images").unwrap();
+    let mut model = MlpModel::load(&dir).unwrap();
+    let direct = model.infer(&images[..8 * 800], 8).unwrap();
+
+    let dir2 = dir.clone();
+    let srv = InferenceServer::start(ServerConfig::default(), move || {
+        Ok(Box::new(MlpModel::load(&dir2)?) as Box<dyn BatchModel>)
+    });
+    let inputs: Vec<Vec<f32>> =
+        (0..8).map(|i| images[i * 800..(i + 1) * 800].to_vec()).collect();
+    let resps = srv.submit_all(inputs);
+    for (i, r) in resps.iter().enumerate() {
+        for j in 0..10 {
+            assert!(
+                (r.logits[j] - direct[i * 10 + j]).abs() < 1e-4,
+                "img {i} logit {j}"
+            );
+        }
+    }
+}

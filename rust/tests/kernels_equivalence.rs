@@ -1,0 +1,127 @@
+//! Cross-module property tests: every BMM/BConv scheme is bit-exact
+//! against the float semantics, through random shapes and the FSB
+//! format conversion.
+
+use tcbnn::bitops::{BitMatrix, BitTensor4, FsbMatrix, Layout, TensorLayout};
+use tcbnn::kernels::bconv::{self, BconvProblem};
+use tcbnn::kernels::bmm::{self, BmmProblem, BmmScheme};
+use tcbnn::kernels::IoMode;
+use tcbnn::util::proptest::run_cases;
+use tcbnn::util::Rng;
+
+/// Float oracle: +/-1 matmul computed in f64.
+fn float_bmm(a: &BitMatrix, b: &BitMatrix) -> Vec<i32> {
+    let af = a.to_f32();
+    let bf = b.to_f32();
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    let mut out = vec![0i32; m * n];
+    for r in 0..m {
+        for c in 0..n {
+            let mut acc = 0.0f64;
+            for i in 0..k {
+                acc += (af[r * k + i] * bf[i * n + c]) as f64;
+            }
+            out[r * n + c] = acc as i32;
+        }
+    }
+    out
+}
+
+#[test]
+fn all_bmm_schemes_equal_float_semantics() {
+    run_cases(101, 10, |rng| {
+        let m = 8 * (1 + rng.gen_range(4));
+        let n = 128 * (1 + rng.gen_range(2));
+        let k = 128 * (1 + rng.gen_range(3));
+        let a = BitMatrix::random(m, k, Layout::RowMajor, rng);
+        let b = BitMatrix::random(k, n, Layout::ColMajor, rng);
+        let want = float_bmm(&a, &b);
+        let p = BmmProblem { m, n, k };
+        for s in bmm::all_schemes() {
+            if s.supports(p, IoMode::General) {
+                assert_eq!(s.compute(&a, &b), want, "scheme {}", s.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn fsb_conversion_never_changes_bmm_result() {
+    run_cases(103, 20, |rng| {
+        let m = 8 * (1 + rng.gen_range(3));
+        let k = 32 * (1 + rng.gen_range(12)); // arbitrary word-aligned K
+        let a = BitMatrix::random(m, k, Layout::RowMajor, rng);
+        let b = BitMatrix::random(k, m, Layout::ColMajor, rng);
+        // round-trip both operands through FSB, then multiply
+        let a2 = FsbMatrix::from_bitmatrix(&a).to_bitmatrix();
+        let b2 = FsbMatrix::from_bitmatrix(&b).to_bitmatrix();
+        assert_eq!(bmm::naive_ref(&a, &b), bmm::naive_ref(&a2, &b2));
+    });
+}
+
+#[test]
+fn bconv_schemes_equal_exclude_semantics() {
+    run_cases(105, 6, |rng| {
+        let hw = 4 + rng.gen_range(4);
+        let stride = 1 + rng.gen_range(2);
+        let pad = rng.gen_range(2);
+        let p = BconvProblem { hw, n: 8, c: 128, o: 8, k: 3, stride, pad };
+        if hw + 2 * pad < 3 {
+            return;
+        }
+        let input = BitTensor4::random([hw, hw, 8, 128], TensorLayout::Hwnc, rng);
+        let filter = BitTensor4::random([3, 3, 8, 128], TensorLayout::Kkoc, rng);
+        let want = bconv::naive_ref(&input, &filter, p);
+        for s in bconv::all_schemes() {
+            if s.supports(p, IoMode::General) {
+                assert_eq!(s.compute(&input, &filter, p), want, "scheme {}", s.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn binarized_output_roundtrip() {
+    // compute_bin == threshold(compute) for the FSB design
+    run_cases(107, 10, |rng| {
+        let p = BmmProblem { m: 16, n: 128, k: 256 };
+        let a = BitMatrix::random(p.m, p.k, Layout::RowMajor, rng);
+        let b = BitMatrix::random(p.k, p.n, Layout::ColMajor, rng);
+        let thresh: Vec<f32> =
+            (0..p.n).map(|_| rng.next_normal() as f32 * 8.0).collect();
+        let d3 = bmm::btc::Design3;
+        let packed = d3.compute_bin(&a, &b, &thresh);
+        let ints = d3.compute(&a, &b);
+        for r in 0..p.m {
+            for c in 0..p.n {
+                assert_eq!(packed.get(r, c), (ints[r * p.n + c] as f32) >= thresh[c]);
+            }
+        }
+    });
+}
+
+#[test]
+fn simulated_time_is_positive_and_finite_everywhere() {
+    use tcbnn::sim::{Engine, RTX2080, RTX2080TI};
+    let mut rng = Rng::new(9);
+    for gpu in [&RTX2080, &RTX2080TI] {
+        let e = Engine::new(gpu);
+        for _ in 0..8 {
+            let n = 128 << rng.gen_range(6);
+            let p = BmmProblem::square(n);
+            for s in bmm::all_schemes() {
+                for mode in [IoMode::General, IoMode::BnnSpecific] {
+                    if s.supports(p, mode) {
+                        let t = bmm::simulate(&e, s.as_ref(), p, mode);
+                        assert!(
+                            t.is_finite() && t > 0.0,
+                            "{} {:?} n={n}: {t}",
+                            s.name(),
+                            mode
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

