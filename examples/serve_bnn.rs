@@ -1,0 +1,95 @@
+//! END-TO-END ENGINE DRIVER: serve a Table-5 BNN model through the
+//! coordinator, backed by the planning + arena-execution engine (no
+//! PJRT artifacts needed — weights are synthesized in process).
+//!
+//!   cargo run --release --example serve_bnn
+//!   cargo run --release --example serve_bnn -- --requests 4096 --cache plan_cache
+//!
+//! Flow: Planner (Turing cost model, per-layer scheme selection)
+//!   -> persistent JSON plan cache -> arena executor (zero per-request
+//!   allocation) -> EngineModel (BatchModel) -> InferenceServer
+//!   (dynamic batcher) -> metrics.
+
+use std::time::Instant;
+
+use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
+use tcbnn::engine::{EngineModel, PlanCache, Planner};
+use tcbnn::nn::forward::random_weights;
+use tcbnn::nn::model::mnist_mlp;
+use tcbnn::sim::RTX2080TI;
+use tcbnn::util::cli::Args;
+use tcbnn::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let requests = args.get_usize("requests", 2048);
+    let cache_dir = args.get_or("cache", "plan_cache").to_string();
+
+    // ---- plan (or load the cached plan) for the Table-5 MNIST MLP ----
+    let model = mnist_mlp();
+    let planner = Planner::new(&RTX2080TI);
+    let cache = PlanCache::open(&cache_dir)?;
+    let buckets = vec![8usize, 32, 128];
+    let t0 = Instant::now();
+    let plan = cache.get_or_plan(&planner, &model, 128);
+    println!(
+        "planned {} at b128 in {:.2} ms (cache: {} hit / {} miss, dir {cache_dir}/)",
+        model.name,
+        t0.elapsed().as_secs_f64() * 1e3,
+        cache.hits(),
+        cache.misses()
+    );
+    println!(
+        "  simulated {:.0} img/s on {}; per-layer scheme mix: {}",
+        plan.throughput_fps(),
+        plan.gpu,
+        plan.scheme_histogram()
+            .iter()
+            .map(|(n, c)| format!("{n}x{c}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+
+    // ---- build the engine-backed served model ------------------------
+    let mut rng = Rng::new(1234);
+    let weights = random_weights(&model, &mut rng);
+    let em = EngineModel::new(&planner, &model, &weights, buckets, Some(&cache))?;
+    println!(
+        "  arena: {:.1} KB pre-allocated (constant across requests)",
+        em.arena_bytes() as f64 / 1024.0
+    );
+    let engine_metrics = em.metrics_handle();
+    let mut slot = Some(em);
+    let srv = InferenceServer::start(ServerConfig::default(), move || {
+        Ok(Box::new(slot.take().expect("factory runs once")) as Box<dyn BatchModel>)
+    });
+
+    // ---- closed-loop load ------------------------------------------
+    let inputs: Vec<Vec<f32>> = (0..requests)
+        .map(|_| (0..784).map(|_| rng.next_f32() - 0.5).collect())
+        .collect();
+    let t1 = Instant::now();
+    let resps = srv.submit_all(inputs);
+    let dt = t1.elapsed().as_secs_f64();
+    println!(
+        "\nserved {} requests in {:.1} ms ({:.0} req/s end-to-end)",
+        resps.len(),
+        dt * 1e3,
+        resps.len() as f64 / dt
+    );
+    println!("server  : {}", srv.metrics.report());
+    println!(
+        "engine  : {:.0} img/s over {} executed rows (padding included)",
+        engine_metrics.engine_images_per_sec(),
+        engine_metrics.engine_rows()
+    );
+    let hist = {
+        let mut h = [0usize; 10];
+        for r in &resps {
+            h[r.argmax] += 1;
+        }
+        h
+    };
+    println!("argmax histogram: {hist:?}");
+    Ok(())
+}

@@ -111,6 +111,26 @@ impl Batcher {
         None
     }
 
+    /// Would `next_batch(now)` produce a batch?  Used by the server
+    /// worker to decide between draining and sleeping.
+    pub fn ready(&self, now: Instant) -> bool {
+        let Some(front) = self.queue.front() else {
+            return false;
+        };
+        let flush = now.duration_since(front.enqueued) >= self.cfg.max_wait;
+        self.bucket_for(self.queue.len(), flush).is_some()
+    }
+
+    /// Time until the oldest waiter's partial-flush deadline (zero when
+    /// already due; None when the queue is empty).  Lets the worker
+    /// sleep exactly long enough instead of busy-polling — so a burst
+    /// larger than the largest bucket splits across batches and the
+    /// tail still flushes on the *original* enqueue deadline.
+    pub fn time_until_flush(&self, now: Instant) -> Option<Duration> {
+        let front = self.queue.front()?;
+        Some((front.enqueued + self.cfg.max_wait).saturating_duration_since(now))
+    }
+
     /// Form the next batch if policy allows (now = current time).
     pub fn next_batch(&mut self, now: Instant) -> Option<Batch> {
         let n = self.queue.len();
@@ -209,6 +229,40 @@ mod tests {
         }
         assert!(!b.push(req(99, t0)));
         assert_eq!(b.rejected, 1);
+    }
+
+    #[test]
+    fn burst_larger_than_largest_bucket_splits_without_starving_flush() {
+        // regression: a 100-request burst with buckets [8, 32] must
+        // split into full 32-batches immediately, and the 4-request
+        // tail must flush on the ORIGINAL enqueue deadline (t0 +
+        // max_wait), not a deadline reset by the earlier splits.
+        let mut b = Batcher::new(BatcherConfig { capacity: 256, ..cfg() });
+        let t0 = Instant::now();
+        for i in 0..100 {
+            assert!(b.push(req(i, t0)));
+        }
+        assert!(b.ready(t0), "full buckets form without waiting");
+        for _ in 0..3 {
+            let batch = b.next_batch(t0).expect("full 32-bucket");
+            assert_eq!(batch.rows, 32);
+            assert_eq!(batch.padded, 32);
+        }
+        // 4 stragglers: not formable yet...
+        assert_eq!(b.len(), 4);
+        assert!(!b.ready(t0));
+        assert!(b.next_batch(t0).is_none());
+        // ...but the flush clock still reads from the burst's arrival
+        let wait = b.time_until_flush(t0).unwrap();
+        assert!(wait <= Duration::from_millis(1), "deadline not reset: {wait:?}");
+        let due = t0 + Duration::from_millis(1);
+        assert!(b.ready(due));
+        assert_eq!(b.time_until_flush(due), Some(Duration::ZERO));
+        let tail = b.next_batch(due).expect("tail flushes at the deadline");
+        assert_eq!(tail.rows, 4);
+        assert_eq!(tail.padded, 8);
+        assert!(b.is_empty());
+        assert_eq!(b.time_until_flush(due), None);
     }
 
     #[test]

@@ -20,6 +20,10 @@ struct Inner {
     real_rows: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
+    /// rows executed by an engine-backed model (padding included)
+    engine_rows: u64,
+    /// wall time the engine spent inside `run_batch`
+    engine_busy_s: f64,
 }
 
 impl Metrics {
@@ -38,6 +42,30 @@ impl Metrics {
         m.padded_rows += padded_rows as u64;
         m.completed += latencies_s.len() as u64;
         m.latencies.extend_from_slice(latencies_s);
+    }
+
+    /// Record one engine batch execution: `rows` images in `secs` of
+    /// model wall time.  This is the engine's images/sec feed — it
+    /// measures executor throughput (busy time), while `throughput_fps`
+    /// measures end-to-end request throughput (incl. queueing).
+    pub fn record_engine_batch(&self, rows: usize, secs: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.engine_rows += rows as u64;
+        m.engine_busy_s += secs;
+    }
+
+    /// Engine executor throughput: images per busy-second.
+    pub fn engine_images_per_sec(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.engine_busy_s > 0.0 {
+            m.engine_rows as f64 / m.engine_busy_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn engine_rows(&self) -> u64 {
+        self.inner.lock().unwrap().engine_rows
     }
 
     pub fn latency_summary(&self) -> Summary {
@@ -75,7 +103,7 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         let s = self.latency_summary();
-        format!(
+        let mut out = format!(
             "requests={} batches={} p50={:.3}ms p90={:.3}ms p99={:.3}ms \
              mean={:.3}ms throughput={:.0} req/s padding={:.1}%",
             self.completed(),
@@ -86,7 +114,14 @@ impl Metrics {
             s.mean * 1e3,
             self.throughput_fps(),
             self.padding_overhead() * 100.0
-        )
+        );
+        if self.engine_rows() > 0 {
+            out.push_str(&format!(
+                " engine={:.0} img/s",
+                self.engine_images_per_sec()
+            ));
+        }
+        out
     }
 }
 
@@ -113,5 +148,17 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.throughput_fps(), 0.0);
         assert_eq!(m.padding_overhead(), 0.0);
+        assert_eq!(m.engine_images_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn engine_throughput_tracks_busy_time() {
+        let m = Metrics::new();
+        m.record_engine_batch(32, 0.004);
+        m.record_engine_batch(8, 0.001);
+        assert_eq!(m.engine_rows(), 40);
+        let fps = m.engine_images_per_sec();
+        assert!((fps - 40.0 / 0.005).abs() < 1e-6, "fps {fps}");
+        assert!(m.report().contains("engine="));
     }
 }

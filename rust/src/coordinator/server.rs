@@ -145,18 +145,20 @@ fn worker_loop<F>(
     let mut shutting_down = false;
 
     loop {
-        // 1. drain the channel (block briefly when idle)
+        // 1. drain the channel.  Three modes:
+        //    * a batch is ready (or we're shutting down): non-blocking
+        //      drain, bounded so a sustained flood cannot starve batch
+        //      formation;
+        //    * partial batch pending: sleep until its flush deadline
+        //      (no busy-spin), waking early on new arrivals;
+        //    * idle: block briefly.
+        let mut drained = 0usize;
         loop {
-            let msg = if batcher.is_empty() && !shutting_down {
-                match rx.recv_timeout(Duration::from_millis(50)) {
-                    Ok(m) => m,
-                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(_) => {
-                        shutting_down = true;
-                        break;
-                    }
-                }
-            } else {
+            let batch_due = shutting_down || batcher.ready(Instant::now());
+            if batch_due && drained >= 4096 {
+                break; // bounded drain: go run the ready batch
+            }
+            let msg = if batch_due {
                 match rx.try_recv() {
                     Ok(m) => m,
                     Err(std::sync::mpsc::TryRecvError::Empty) => break,
@@ -165,16 +167,38 @@ fn worker_loop<F>(
                         break;
                     }
                 }
+            } else {
+                // empty queue: idle poll; partial batch: sleep exactly
+                // until the oldest request's flush deadline
+                let wait = batcher
+                    .time_until_flush(Instant::now())
+                    .unwrap_or(Duration::from_millis(50))
+                    .min(Duration::from_millis(50));
+                match rx.recv_timeout(wait) {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        if batcher.is_empty() {
+                            break;
+                        }
+                        continue; // deadline reached: re-check readiness
+                    }
+                    Err(_) => {
+                        shutting_down = true;
+                        break;
+                    }
+                }
             };
             match msg {
                 Msg::Infer(req, resp_tx) => {
-                    waiters.insert(req.id, resp_tx);
-                    enqueue_times.insert(req.id, req.enqueued);
-                    if !batcher.push(req) {
-                        // backpressure: drop the waiter (client sees a
-                        // closed channel)
-                        // (rejected counter lives in the batcher)
+                    let (id, enqueued) = (req.id, req.enqueued);
+                    if batcher.push(req) {
+                        waiters.insert(id, resp_tx);
+                        enqueue_times.insert(id, enqueued);
+                        drained += 1;
                     }
+                    // else backpressure: resp_tx drops here, so the
+                    // client sees a closed channel instead of hanging
+                    // (rejected counter lives in the batcher)
                 }
                 Msg::Shutdown => {
                     shutting_down = true;
@@ -295,6 +319,54 @@ mod tests {
         }
         assert!(srv.metrics.batches() >= 4, "work was batched");
         assert!(srv.metrics.completed() == 100);
+    }
+
+    #[test]
+    fn burst_larger_than_largest_bucket_is_fully_served() {
+        // regression: a burst bigger than the largest bucket (32 for
+        // MockModel) must split across batches and the tail must flush
+        // via the partial-flush timer — every request gets an answer.
+        let srv = mock_server();
+        let inputs: Vec<Vec<f32>> = (0..100).map(|i| vec![i as f32; 4]).collect();
+        let resps = srv.submit_all(inputs);
+        assert_eq!(resps.len(), 100);
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.logits[0], (i * 4) as f32, "request {i} answered wrongly");
+        }
+        // 100 requests over buckets [8, 32] needs at least 4 batches
+        assert!(srv.metrics.batches() >= 4);
+        assert_eq!(srv.metrics.completed(), 100);
+    }
+
+    #[test]
+    fn overflow_rejects_with_closed_channel_instead_of_hanging() {
+        // regression: a rejected (over-capacity) request used to leak
+        // its waiter, so the client blocked forever.  Now the response
+        // sender drops and the client sees a closed channel.
+        let srv = InferenceServer::start(
+            ServerConfig { max_wait: Duration::from_millis(2), queue_capacity: 8 },
+            || {
+                Ok(Box::new(MockModel {
+                    row_elems: 4,
+                    out_elems: 3,
+                    // slow model so the queue genuinely backs up
+                    delay: Duration::from_millis(20),
+                }) as Box<dyn BatchModel>)
+            },
+        );
+        let rxs: Vec<_> = (0..60).map(|i| srv.submit(vec![i as f32; 4])).collect();
+        let mut served = 0usize;
+        let mut rejected = 0usize;
+        for rx in rxs {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(_) => served += 1,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => rejected += 1,
+                Err(e) => panic!("request neither served nor rejected: {e:?}"),
+            }
+        }
+        assert_eq!(served + rejected, 60);
+        assert!(served >= 8, "some requests must be served (got {served})");
+        assert_eq!(srv.metrics.completed(), served as u64);
     }
 
     #[test]

@@ -1,0 +1,116 @@
+//! The execution arena: every buffer the packed-bit forward pass ever
+//! touches, allocated once from the model shape at build time so the
+//! request hot path performs zero heap allocation.
+
+use crate::nn::layer::LayerSpec;
+use crate::nn::ModelDef;
+
+/// Words needed for an HWNC packed activation.
+fn bits_words(hw: usize, n: usize, c: usize) -> usize {
+    hw * hw * n * c.div_ceil(32)
+}
+
+/// Words needed for a row-packed flat activation.
+fn flat_words(n: usize, feat: usize) -> usize {
+    n * feat.div_ceil(32)
+}
+
+/// Pre-allocated buffers for one executor.
+///
+/// * `bits_a` / `bits_b` — ping-pong packed activations.  Each is large
+///   enough for the biggest intermediate in either representation
+///   (HWNC bit tensor before pooling, or row-packed flat rows).
+/// * `ints` — i32 staging for the convolution accumulator pass.
+/// * `logits` — the classifier output.
+pub struct Arena {
+    pub bits_a: Vec<u32>,
+    pub bits_b: Vec<u32>,
+    pub ints: Vec<i32>,
+    pub logits: Vec<f32>,
+}
+
+impl Arena {
+    /// Size every buffer for `model` at batch capacity `batch`.
+    pub fn for_model(model: &ModelDef, batch: usize) -> Arena {
+        let mut dims = model.input;
+        let mut max_words = 0usize;
+        let mut max_ints = 0usize;
+        // the first binarization of a flat fp input also lands in a buffer
+        if dims.hw == 0 {
+            max_words = max_words.max(flat_words(batch, dims.feat));
+        }
+        for l in &model.layers {
+            match *l {
+                LayerSpec::FirstConv { o, k, stride, pad, .. } => {
+                    let ohw = (dims.hw + 2 * pad - k) / stride + 1;
+                    max_words = max_words.max(bits_words(ohw, batch, o));
+                }
+                LayerSpec::BinConv { o, k, stride, pad, .. } => {
+                    // pre-pool extent (the conv writes this; pooling shrinks)
+                    let opre = (dims.hw + 2 * pad - k) / stride + 1;
+                    max_words = max_words.max(bits_words(opre, batch, o));
+                    max_ints = max_ints.max(opre * opre * batch * o);
+                }
+                LayerSpec::BinFc { d_in, d_out } => {
+                    // flatten staging + the packed output rows
+                    max_words = max_words.max(flat_words(batch, d_in));
+                    max_words = max_words.max(flat_words(batch, d_out));
+                }
+                LayerSpec::FinalFc { d_in, .. } => {
+                    max_words = max_words.max(flat_words(batch, d_in));
+                }
+                LayerSpec::Pool => {
+                    max_words = max_words.max(bits_words(dims.hw, batch, dims.feat));
+                }
+            }
+            dims = dims.after(l);
+        }
+        Arena {
+            bits_a: vec![0u32; max_words],
+            bits_b: vec![0u32; max_words],
+            ints: vec![0i32; max_ints],
+            logits: vec![0f32; batch * model.classes],
+        }
+    }
+
+    /// Total allocated bytes — the arena's high-water mark.  Constant
+    /// after construction; benches assert it never grows across requests.
+    pub fn bytes(&self) -> usize {
+        self.bits_a.len() * 4 + self.bits_b.len() * 4 + self.ints.len() * 4
+            + self.logits.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::{cifar_vgg, mnist_mlp};
+
+    #[test]
+    fn mlp_arena_has_no_conv_staging() {
+        let a = Arena::for_model(&mnist_mlp(), 32);
+        assert!(a.ints.is_empty());
+        // biggest flat activation: 32 rows x 1024 bits
+        assert!(a.bits_a.len() >= 32 * (1024 / 32));
+        assert_eq!(a.logits.len(), 32 * 10);
+    }
+
+    #[test]
+    fn conv_arena_covers_prepool_extent() {
+        let m = cifar_vgg();
+        let a = Arena::for_model(&m, 8);
+        // layer 2 (first BinConv) pre-pool: 32x32 x 8 x 128ch packed
+        assert!(a.bits_a.len() >= 32 * 32 * 8 * (128 / 32));
+        assert!(a.ints.len() >= 32 * 32 * 8 * 128);
+        assert_eq!(a.bits_a.len(), a.bits_b.len());
+    }
+
+    #[test]
+    fn bytes_reports_total() {
+        let a = Arena::for_model(&mnist_mlp(), 8);
+        assert_eq!(
+            a.bytes(),
+            4 * (a.bits_a.len() + a.bits_b.len() + a.ints.len() + a.logits.len())
+        );
+    }
+}

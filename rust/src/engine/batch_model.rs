@@ -1,0 +1,149 @@
+//! `EngineModel`: the bridge from the arena executor to the serving
+//! stack — any Table-5 BNN model becomes a `coordinator::server`
+//! `BatchModel`, with executor throughput surfaced through
+//! `coordinator::metrics`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::server::BatchModel;
+use crate::coordinator::Metrics;
+use crate::nn::forward::ModelWeights;
+use crate::nn::ModelDef;
+
+use super::executor::EngineExecutor;
+use super::plan_cache::PlanCache;
+use super::planner::Planner;
+
+/// A served engine-backed model.
+pub struct EngineModel {
+    exec: EngineExecutor,
+    buckets: Vec<usize>,
+    row_elems: usize,
+    out_elems: usize,
+    /// executor-side metrics (images/sec over busy time); the serving
+    /// `InferenceServer` keeps its own end-to-end metrics
+    pub metrics: Arc<Metrics>,
+}
+
+impl EngineModel {
+    /// Build from an explicit plan-per-max-bucket: plans (or fetches
+    /// from `cache`) at the largest bucket, which also sizes the arena.
+    pub fn new(
+        planner: &Planner,
+        model: &ModelDef,
+        weights: &ModelWeights,
+        buckets: Vec<usize>,
+        cache: Option<&PlanCache>,
+    ) -> Result<EngineModel> {
+        ensure!(!buckets.is_empty(), "need at least one batch bucket");
+        ensure!(
+            buckets.windows(2).all(|w| w[0] < w[1]),
+            "buckets must be ascending"
+        );
+        ensure!(
+            buckets.iter().all(|b| b % 8 == 0),
+            "buckets must be multiples of 8 (bit-tensor-core batch unit)"
+        );
+        let max_bucket = *buckets.last().unwrap();
+        let plan = match cache {
+            Some(c) => c.get_or_plan(planner, model, max_bucket),
+            None => planner.plan(model, max_bucket),
+        };
+        let row_elems = model.input.flat();
+        let out_elems = model.classes;
+        let exec = EngineExecutor::new(model.clone(), weights, plan)?;
+        Ok(EngineModel {
+            exec,
+            buckets,
+            row_elems,
+            out_elems,
+            metrics: Arc::new(Metrics::new()),
+        })
+    }
+
+    /// Share the metrics sink (e.g. to read images/sec from outside the
+    /// server worker thread).
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    pub fn plan(&self) -> &super::plan::ModelPlan {
+        self.exec.plan()
+    }
+
+    pub fn arena_bytes(&self) -> usize {
+        self.exec.arena_bytes()
+    }
+}
+
+impl BatchModel for EngineModel {
+    fn run_batch(&mut self, data: &[f32], padded: usize) -> Result<Vec<f32>> {
+        ensure!(
+            self.buckets.contains(&padded),
+            "batch {padded} is not a configured bucket"
+        );
+        let t0 = Instant::now();
+        let logits = self.exec.forward(data, padded);
+        let out = logits.to_vec();
+        self.metrics
+            .record_engine_batch(padded, t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    fn row_elems(&self) -> usize {
+        self.row_elems
+    }
+
+    fn out_elems(&self) -> usize {
+        self.out_elems
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::forward::random_weights;
+    use crate::nn::model::mnist_mlp;
+    use crate::sim::RTX2080TI;
+    use crate::util::Rng;
+
+    #[test]
+    fn runs_every_bucket() {
+        let m = mnist_mlp();
+        let mut rng = Rng::new(3);
+        let w = random_weights(&m, &mut rng);
+        let planner = Planner::new(&RTX2080TI);
+        let mut em =
+            EngineModel::new(&planner, &m, &w, vec![8, 32], None).unwrap();
+        assert_eq!(em.row_elems(), 784);
+        assert_eq!(em.out_elems(), 10);
+        for b in em.buckets() {
+            let x: Vec<f32> = (0..b * 784).map(|_| rng.next_f32() - 0.5).collect();
+            let out = em.run_batch(&x, b).unwrap();
+            assert_eq!(out.len(), b * 10);
+        }
+        assert_eq!(em.metrics.engine_rows(), 8 + 32);
+        assert!(em.metrics.engine_images_per_sec() > 0.0);
+        // not a bucket -> refused
+        let x: Vec<f32> = (0..16 * 784).map(|_| 0.0).collect();
+        assert!(em.run_batch(&x, 16).is_err());
+    }
+
+    #[test]
+    fn bucket_validation() {
+        let m = mnist_mlp();
+        let mut rng = Rng::new(4);
+        let w = random_weights(&m, &mut rng);
+        let planner = Planner::new(&RTX2080TI);
+        assert!(EngineModel::new(&planner, &m, &w, vec![], None).is_err());
+        assert!(EngineModel::new(&planner, &m, &w, vec![32, 8], None).is_err());
+        assert!(EngineModel::new(&planner, &m, &w, vec![12], None).is_err());
+    }
+}

@@ -1,0 +1,884 @@
+//! The arena executor: a packed-bit forward pass with zero heap
+//! allocation on the request path.
+//!
+//! Construction takes a `ModelDef`, its weights, and a `ModelPlan`
+//! (validated against the definition), prepares execution-friendly
+//! weight layouts, and sizes an `Arena` for the plan's batch capacity.
+//! `forward` then runs every layer in place over the arena's ping-pong
+//! buffers, parallelized across output rows with
+//! `util::threadpool::scoped_chunks`.
+//!
+//! Semantics are bit-identical to `nn::forward::forward` (the naive
+//! path): the same tap ordering for the first layer's f32 accumulation,
+//! the same Eq-2 integer math for binarized layers, the same threshold
+//! comparisons.  The plan's per-layer scheme selection affects the
+//! *cost/serving* decisions (and on a Turing GPU would select the
+//! kernel); the CPU functional semantics of every scheme are identical,
+//! which is exactly what the kernels-equivalence tests guarantee.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::bitops::pack;
+use crate::bitops::BitTensor4;
+use crate::nn::forward::{LayerWeights, ModelWeights};
+use crate::nn::layer::LayerSpec;
+use crate::nn::ModelDef;
+use crate::util::threadpool::scoped_chunks;
+
+use super::arena::Arena;
+use super::plan::ModelPlan;
+
+/// Execution-friendly per-layer weights.
+enum PreparedLayer {
+    FirstConv {
+        /// +/-1 filter transposed to one contiguous row per output
+        /// channel: `w[oi][(r*k + s)*c + ci]`
+        w_t: Vec<f32>,
+        thresh: Vec<f32>,
+    },
+    BinConv {
+        filter: BitTensor4,
+        thresh: Vec<f32>,
+    },
+    BinFc {
+        w: crate::bitops::BitMatrix,
+        thresh: Vec<f32>,
+    },
+    FinalFc {
+        w: crate::bitops::BitMatrix,
+        gamma: Vec<f32>,
+        beta: Vec<f32>,
+    },
+    Pool,
+}
+
+/// Activation representation between layers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Repr {
+    /// caller-provided fp32 input, not yet binarized
+    Fp,
+    /// HWNC packed bits in the current arena buffer
+    Bits { hw: usize, c: usize },
+    /// row-packed bits (batch x feat) in the current arena buffer
+    Flat { feat: usize },
+}
+
+/// The arena executor.
+pub struct EngineExecutor {
+    model: ModelDef,
+    plan: ModelPlan,
+    prepared: Vec<PreparedLayer>,
+    arena: Arena,
+    batch_cap: usize,
+    threads: usize,
+}
+
+impl EngineExecutor {
+    /// Build an executor for `plan.batch` rows at a time.
+    pub fn new(model: ModelDef, weights: &ModelWeights, plan: ModelPlan) -> Result<Self> {
+        ensure!(
+            plan.layers.len() == model.layers.len(),
+            "plan has {} layers, model {} has {}",
+            plan.layers.len(),
+            model.name,
+            model.layers.len()
+        );
+        for (lp, l) in plan.layers.iter().zip(&model.layers) {
+            ensure!(
+                lp.tag == l.tag(),
+                "plan layer {:?} does not match model layer {:?}",
+                lp.tag,
+                l.tag()
+            );
+        }
+        ensure!(
+            weights.layers.len() == model.layers.len(),
+            "weights have {} layers, model has {}",
+            weights.layers.len(),
+            model.layers.len()
+        );
+        if let Some(LayerSpec::FinalFc { d_out, .. }) = model.layers.last() {
+            ensure!(*d_out == model.classes, "classifier head width mismatch");
+        } else {
+            bail!("model must end with a FinalFc classifier head");
+        }
+        let prepared = prepare_weights(&model, weights)?;
+        let batch_cap = plan.batch;
+        let arena = Arena::for_model(&model, batch_cap);
+        Ok(EngineExecutor {
+            model,
+            plan,
+            prepared,
+            arena,
+            batch_cap,
+            threads: crate::util::threadpool::default_threads(),
+        })
+    }
+
+    /// Override the scoped-worker count (1 = fully serial).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn plan(&self) -> &ModelPlan {
+        &self.plan
+    }
+
+    pub fn batch_capacity(&self) -> usize {
+        self.batch_cap
+    }
+
+    /// Arena bytes (constant after construction — the zero-allocation
+    /// invariant benches assert on).
+    pub fn arena_bytes(&self) -> usize {
+        self.arena.bytes()
+    }
+
+    /// Run `batch` rows of fp32 input (NHWC for conv models, flat rows
+    /// otherwise); returns the logits slice (batch x classes).
+    pub fn forward(&mut self, input: &[f32], batch: usize) -> &[f32] {
+        assert!(batch > 0 && batch <= self.batch_cap, "batch {batch} over capacity");
+        assert_eq!(
+            input.len(),
+            batch * self.model.input.flat(),
+            "input payload size"
+        );
+        let mut repr = Repr::Fp;
+        let mut cur_in_a = true;
+        let threads = self.threads;
+        let n_layers = self.model.layers.len();
+        for li in 0..n_layers {
+            let layer = self.model.layers[li].clone();
+            let pw = &self.prepared[li];
+            let Arena { bits_a, bits_b, ints, logits } = &mut self.arena;
+            let (src, dst): (&mut Vec<u32>, &mut Vec<u32>) = if cur_in_a {
+                (bits_a, bits_b)
+            } else {
+                (bits_b, bits_a)
+            };
+            match (&layer, pw) {
+                (
+                    LayerSpec::FirstConv { c, o, k, stride, pad },
+                    PreparedLayer::FirstConv { w_t, thresh },
+                ) => {
+                    assert_eq!(repr, Repr::Fp, "FirstConv must be the first layer");
+                    let h = self.model.input.hw;
+                    let ohw = (h + 2 * pad - k) / stride + 1;
+                    let wio = o.div_ceil(32);
+                    let chunk = ohw * batch * wio;
+                    let t = par_threads(threads, ohw * chunk);
+                    first_conv_rows(
+                        input,
+                        &mut dst[..ohw * chunk],
+                        chunk,
+                        t,
+                        FirstConvParams {
+                            h,
+                            c: *c,
+                            o: *o,
+                            k: *k,
+                            stride: *stride,
+                            pad: *pad,
+                            batch,
+                            ohw,
+                            wio,
+                        },
+                        w_t,
+                        thresh,
+                    );
+                    repr = Repr::Bits { hw: ohw, c: *o };
+                    cur_in_a = !cur_in_a;
+                }
+                (
+                    LayerSpec::BinConv { o, k, stride, pad, pool, .. },
+                    PreparedLayer::BinConv { filter, thresh },
+                ) => {
+                    let Repr::Bits { hw, c } = repr else {
+                        panic!("BinConv needs packed HWNC input");
+                    };
+                    let wi = c.div_ceil(32);
+                    let wio = o.div_ceil(32);
+                    let ohw = (hw + 2 * pad - k) / stride + 1;
+                    let p = BinConvParams {
+                        hw,
+                        c,
+                        wi,
+                        o: *o,
+                        k: *k,
+                        stride: *stride,
+                        pad: *pad,
+                        batch,
+                        ohw,
+                        wio,
+                    };
+                    let int_chunk = ohw * batch * o;
+                    let t1 = par_threads(threads, ohw * int_chunk);
+                    bin_conv_ints(
+                        &src[..hw * hw * batch * wi],
+                        &mut ints[..ohw * int_chunk],
+                        int_chunk,
+                        t1,
+                        p,
+                        filter,
+                    );
+                    let bit_chunk = ohw * batch * wio;
+                    pack_conv_ints(
+                        &ints[..ohw * int_chunk],
+                        &mut dst[..ohw * bit_chunk],
+                        bit_chunk,
+                        t1,
+                        p,
+                        thresh,
+                    );
+                    if *pool {
+                        let poh = ohw / 2;
+                        let pool_chunk = poh * batch * wio;
+                        or_pool_rows(
+                            &dst[..ohw * bit_chunk],
+                            &mut src[..poh * pool_chunk],
+                            pool_chunk,
+                            par_threads(threads, poh * pool_chunk),
+                            ohw,
+                            batch,
+                            wio,
+                        );
+                        repr = Repr::Bits { hw: poh, c: *o };
+                        // pooled result landed back in the src buffer
+                    } else {
+                        repr = Repr::Bits { hw: ohw, c: *o };
+                        cur_in_a = !cur_in_a;
+                    }
+                }
+                (LayerSpec::Pool, PreparedLayer::Pool) => {
+                    let Repr::Bits { hw, c } = repr else {
+                        panic!("Pool needs packed HWNC input");
+                    };
+                    let wi = c.div_ceil(32);
+                    let poh = hw / 2;
+                    let chunk = poh * batch * wi;
+                    or_pool_rows(
+                        &src[..hw * hw * batch * wi],
+                        &mut dst[..poh * chunk],
+                        chunk,
+                        par_threads(threads, poh * chunk),
+                        hw,
+                        batch,
+                        wi,
+                    );
+                    repr = Repr::Bits { hw: poh, c };
+                    cur_in_a = !cur_in_a;
+                }
+                (LayerSpec::BinFc { d_in, d_out }, PreparedLayer::BinFc { w, thresh }) => {
+                    // 1. materialize row-packed input bits in `dst`
+                    let feat =
+                        flatten_into(input, repr, batch, src, dst, *d_in, threads);
+                    assert_eq!(feat, *d_in, "fc input width");
+                    // 2. dot + threshold back into `src`
+                    let wpl_in = d_in.div_ceil(32);
+                    let wpl_out = d_out.div_ceil(32);
+                    let t = par_threads(threads, batch * d_out * wpl_in / 8);
+                    bin_fc_rows(
+                        &dst[..batch * wpl_in],
+                        &mut src[..batch * wpl_out],
+                        wpl_out,
+                        t,
+                        *d_in,
+                        *d_out,
+                        w,
+                        thresh,
+                    );
+                    repr = Repr::Flat { feat: *d_out };
+                    // two hops: result is back in the original buffer
+                }
+                (
+                    LayerSpec::FinalFc { d_in, d_out },
+                    PreparedLayer::FinalFc { w, gamma, beta },
+                ) => {
+                    let feat =
+                        flatten_into(input, repr, batch, src, dst, *d_in, threads);
+                    assert_eq!(feat, *d_in, "classifier input width");
+                    let wpl_in = d_in.div_ceil(32);
+                    let t = par_threads(threads, batch * d_out * wpl_in / 8);
+                    final_fc_rows(
+                        &dst[..batch * wpl_in],
+                        &mut logits[..batch * d_out],
+                        *d_out,
+                        t,
+                        *d_in,
+                        w,
+                        gamma,
+                        beta,
+                    );
+                    repr = Repr::Flat { feat: *d_out };
+                }
+                _ => panic!("layer/weight kind mismatch at layer {li}"),
+            }
+        }
+        let classes = self.model.classes;
+        &self.arena.logits[..batch * classes]
+    }
+}
+
+/// Serial cutoff shared by all parallel sections.
+fn par_threads(threads: usize, work_words: usize) -> usize {
+    if work_words < 4096 {
+        1
+    } else {
+        threads
+    }
+}
+
+/// Convert `nn::forward::ModelWeights` into execution layouts.
+fn prepare_weights(model: &ModelDef, weights: &ModelWeights) -> Result<Vec<PreparedLayer>> {
+    let mut out = Vec::with_capacity(model.layers.len());
+    for (li, (l, w)) in model.layers.iter().zip(&weights.layers).enumerate() {
+        out.push(match (l, w) {
+            (
+                LayerSpec::FirstConv { c, o, k, .. },
+                LayerWeights::FirstConv { w_pm1, thresh },
+            ) => {
+                ensure!(
+                    w_pm1.len() == k * k * c * o,
+                    "layer {li}: first-conv filter size"
+                );
+                ensure!(thresh.len() == *o, "layer {li}: threshold table size");
+                // [((r*k+s)*c + ci)*o + oi] -> [oi][(r*k+s)*c + ci]
+                let taps = k * k * c;
+                let mut w_t = vec![0f32; o * taps];
+                for t in 0..taps {
+                    for oi in 0..*o {
+                        w_t[oi * taps + t] = w_pm1[t * o + oi];
+                    }
+                }
+                PreparedLayer::FirstConv { w_t, thresh: thresh.clone() }
+            }
+            (
+                LayerSpec::BinConv { c, o, k, .. },
+                LayerWeights::BinConv { filter, thresh },
+            ) => {
+                ensure!(
+                    filter.dims == [*k, *k, *o, *c],
+                    "layer {li}: filter dims {:?}",
+                    filter.dims
+                );
+                ensure!(thresh.len() == *o, "layer {li}: threshold table size");
+                PreparedLayer::BinConv { filter: filter.clone(), thresh: thresh.clone() }
+            }
+            (LayerSpec::BinFc { d_in, d_out }, LayerWeights::BinFc { w, thresh }) => {
+                ensure!(
+                    w.rows == *d_out && w.cols == *d_in,
+                    "layer {li}: fc weight shape {}x{}",
+                    w.rows,
+                    w.cols
+                );
+                ensure!(thresh.len() == *d_out, "layer {li}: threshold table size");
+                PreparedLayer::BinFc { w: w.clone(), thresh: thresh.clone() }
+            }
+            (
+                LayerSpec::FinalFc { d_in, d_out },
+                LayerWeights::FinalFc { w, gamma, beta },
+            ) => {
+                ensure!(
+                    w.rows == *d_out && w.cols == *d_in,
+                    "layer {li}: classifier weight shape"
+                );
+                ensure!(
+                    gamma.len() == *d_out && beta.len() == *d_out,
+                    "layer {li}: bn table size"
+                );
+                PreparedLayer::FinalFc {
+                    w: w.clone(),
+                    gamma: gamma.clone(),
+                    beta: beta.clone(),
+                }
+            }
+            (LayerSpec::Pool, LayerWeights::Pool) => PreparedLayer::Pool,
+            _ => bail!("layer {li}: weight kind does not match layer spec"),
+        });
+    }
+    Ok(out)
+}
+
+#[derive(Clone, Copy)]
+struct FirstConvParams {
+    h: usize,
+    c: usize,
+    o: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    batch: usize,
+    ohw: usize,
+    wio: usize,
+}
+
+/// First layer: fp32 NHWC x +/-1 filter -> thresholded HWNC bits.
+/// Accumulation order (r, s, ci) matches `nn::forward` exactly, so the
+/// f32 rounding — and therefore every output bit — is identical.
+#[allow(clippy::too_many_arguments)]
+fn first_conv_rows(
+    input: &[f32],
+    dst: &mut [u32],
+    chunk: usize,
+    threads: usize,
+    p: FirstConvParams,
+    w_t: &[f32],
+    thresh: &[f32],
+) {
+    let taps = p.k * p.k * p.c;
+    scoped_chunks(dst, chunk, threads, |op, row| {
+        for oq in 0..p.ohw {
+            for ni in 0..p.batch {
+                for wo in 0..p.wio {
+                    let mut word = 0u32;
+                    for bit in 0..32 {
+                        let oi = wo * 32 + bit;
+                        if oi >= p.o {
+                            break;
+                        }
+                        let wrow = &w_t[oi * taps..(oi + 1) * taps];
+                        let mut acc = 0.0f32;
+                        for r in 0..p.k {
+                            for s in 0..p.k {
+                                let i = (op * p.stride + r) as isize - p.pad as isize;
+                                let j = (oq * p.stride + s) as isize - p.pad as isize;
+                                if i < 0
+                                    || i >= p.h as isize
+                                    || j < 0
+                                    || j >= p.h as isize
+                                {
+                                    continue;
+                                }
+                                let xbase =
+                                    ((ni * p.h + i as usize) * p.h + j as usize) * p.c;
+                                let wbase = (r * p.k + s) * p.c;
+                                for ci in 0..p.c {
+                                    acc += input[xbase + ci] * wrow[wbase + ci];
+                                }
+                            }
+                        }
+                        if acc >= thresh[oi] {
+                            word |= 1 << bit;
+                        }
+                    }
+                    row[(oq * p.batch + ni) * p.wio + wo] = word;
+                }
+            }
+        }
+    });
+}
+
+#[derive(Clone, Copy)]
+struct BinConvParams {
+    hw: usize,
+    c: usize,
+    wi: usize,
+    o: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    batch: usize,
+    ohw: usize,
+    wio: usize,
+}
+
+/// Binarized conv accumulator pass: Eq-2 cross-correlation with the
+/// paper's exclude-amended padding, written as i32 into the staging
+/// buffer (layout `((op*ohw + oq)*batch + ni)*o + oi`).
+fn bin_conv_ints(
+    src: &[u32],
+    ints: &mut [i32],
+    chunk: usize,
+    threads: usize,
+    p: BinConvParams,
+    filter: &BitTensor4,
+) {
+    scoped_chunks(ints, chunk, threads, |op, row| {
+        for oq in 0..p.ohw {
+            let seg = &mut row[oq * p.batch * p.o..(oq + 1) * p.batch * p.o];
+            seg.fill(0);
+            let mut exclude = 0usize;
+            for r in 0..p.k {
+                for s in 0..p.k {
+                    let i = (op * p.stride + r) as isize - p.pad as isize;
+                    let j = (oq * p.stride + s) as isize - p.pad as isize;
+                    if i < 0 || i >= p.hw as isize || j < 0 || j >= p.hw as isize {
+                        exclude += 1;
+                        continue;
+                    }
+                    let (i, j) = (i as usize, j as usize);
+                    for ni in 0..p.batch {
+                        let abase = ((i * p.hw + j) * p.batch + ni) * p.wi;
+                        let a = &src[abase..abase + p.wi];
+                        let out_row = &mut seg[ni * p.o..(ni + 1) * p.o];
+                        for (oi, out) in out_row.iter_mut().enumerate() {
+                            let b = filter.inner(r, s, oi);
+                            let mut pc = 0u32;
+                            for (x, y) in a.iter().zip(b.iter()) {
+                                pc += (x ^ y).count_ones();
+                            }
+                            *out += pc as i32;
+                        }
+                    }
+                }
+            }
+            // Eq 2 with the padding amendment: n_valid - 2*popc
+            let n_valid = (p.c * (p.k * p.k - exclude)) as i32;
+            for v in seg.iter_mut() {
+                *v = n_valid - 2 * *v;
+            }
+        }
+    });
+}
+
+/// Threshold + repack the conv accumulators into HWNC bits.
+fn pack_conv_ints(
+    ints: &[i32],
+    dst: &mut [u32],
+    chunk: usize,
+    threads: usize,
+    p: BinConvParams,
+    thresh: &[f32],
+) {
+    scoped_chunks(dst, chunk, threads, |op, row| {
+        for oq in 0..p.ohw {
+            for ni in 0..p.batch {
+                let ibase = ((op * p.ohw + oq) * p.batch + ni) * p.o;
+                for wo in 0..p.wio {
+                    let mut word = 0u32;
+                    for bit in 0..32 {
+                        let oi = wo * 32 + bit;
+                        if oi >= p.o {
+                            break;
+                        }
+                        if (ints[ibase + oi] as f32) >= thresh[oi] {
+                            word |= 1 << bit;
+                        }
+                    }
+                    row[(oq * p.batch + ni) * p.wio + wo] = word;
+                }
+            }
+        }
+    });
+}
+
+/// 2x2 OR pool over an HWNC bit buffer (`ihw` is the input extent).
+fn or_pool_rows(
+    src: &[u32],
+    dst: &mut [u32],
+    chunk: usize,
+    threads: usize,
+    ihw: usize,
+    batch: usize,
+    wi: usize,
+) {
+    let ohw = ihw / 2;
+    scoped_chunks(dst, chunk, threads, |hi, row| {
+        for wj in 0..ohw {
+            for ni in 0..batch {
+                let base = |a: usize, b: usize| ((a * ihw + b) * batch + ni) * wi;
+                let s00 = base(2 * hi, 2 * wj);
+                let s01 = base(2 * hi, 2 * wj + 1);
+                let s10 = base(2 * hi + 1, 2 * wj);
+                let s11 = base(2 * hi + 1, 2 * wj + 1);
+                let out = &mut row[(wj * batch + ni) * wi..(wj * batch + ni + 1) * wi];
+                for t in 0..wi {
+                    out[t] = src[s00 + t] | src[s01 + t] | src[s10 + t] | src[s11 + t];
+                }
+            }
+        }
+    });
+}
+
+/// Materialize the current activation as row-packed bits in `dst`
+/// (batch x ceil(d_in/32) words); returns the logical feature count.
+///
+/// * `Fp`   — binarize the caller's flat fp input (first-layer MLPs)
+/// * `Bits` — flatten HWNC in (h, w, c) feature order, word-aligned
+///   copies when the channel count is a word multiple
+/// * `Flat` — copy the rows across (the previous FC left them in `src`)
+fn flatten_into(
+    input: &[f32],
+    repr: Repr,
+    batch: usize,
+    src: &[u32],
+    dst: &mut [u32],
+    d_in: usize,
+    threads: usize,
+) -> usize {
+    let wpl = d_in.div_ceil(32);
+    match repr {
+        Repr::Fp => {
+            scoped_chunks(
+                &mut dst[..batch * wpl],
+                wpl,
+                par_threads(threads, batch * wpl),
+                |ni, row| {
+                    for (wo, out) in row.iter_mut().enumerate() {
+                        let mut word = 0u32;
+                        for bit in 0..32 {
+                            let idx = wo * 32 + bit;
+                            if idx >= d_in {
+                                break;
+                            }
+                            if input[ni * d_in + idx] >= 0.0 {
+                                word |= 1 << bit;
+                            }
+                        }
+                        *out = word;
+                    }
+                },
+            );
+            d_in
+        }
+        Repr::Bits { hw, c } => {
+            let wi = c.div_ceil(32);
+            let feat = hw * hw * c;
+            if c % 32 == 0 {
+                scoped_chunks(
+                    &mut dst[..batch * wpl],
+                    wpl,
+                    par_threads(threads, batch * wpl),
+                    |ni, row| {
+                        for pix in 0..hw * hw {
+                            let sbase = (pix * batch + ni) * wi;
+                            let dbase = pix * wi;
+                            row[dbase..dbase + wi]
+                                .copy_from_slice(&src[sbase..sbase + wi]);
+                        }
+                    },
+                );
+            } else {
+                scoped_chunks(
+                    &mut dst[..batch * wpl],
+                    wpl,
+                    par_threads(threads, batch * wpl),
+                    |ni, row| {
+                        row.fill(0);
+                        let mut idx = 0usize;
+                        for pix in 0..hw * hw {
+                            let sbase = (pix * batch + ni) * wi;
+                            for ci in 0..c {
+                                if pack::get_bit(&src[sbase..sbase + wi], ci) {
+                                    row[idx / 32] |= 1 << (idx % 32);
+                                }
+                                idx += 1;
+                            }
+                        }
+                    },
+                );
+            }
+            feat
+        }
+        Repr::Flat { feat } => {
+            dst[..batch * wpl].copy_from_slice(&src[..batch * wpl]);
+            feat
+        }
+    }
+}
+
+/// Binarized FC: per-row Eq-2 dots + threshold, packed output rows.
+#[allow(clippy::too_many_arguments)]
+fn bin_fc_rows(
+    src: &[u32],
+    dst: &mut [u32],
+    wpl_out: usize,
+    threads: usize,
+    d_in: usize,
+    d_out: usize,
+    w: &crate::bitops::BitMatrix,
+    thresh: &[f32],
+) {
+    let wpl_in = d_in.div_ceil(32);
+    scoped_chunks(dst, wpl_out, threads, |ni, row| {
+        let a = &src[ni * wpl_in..(ni + 1) * wpl_in];
+        for (wo, out) in row.iter_mut().enumerate() {
+            let mut word = 0u32;
+            for bit in 0..32 {
+                let j = wo * 32 + bit;
+                if j >= d_out {
+                    break;
+                }
+                let v = pack::pm1_dot(a, w.line(j), d_in);
+                if (v as f32) >= thresh[j] {
+                    word |= 1 << bit;
+                }
+            }
+            *out = word;
+        }
+    });
+}
+
+/// Classifier head: Eq-2 dots + batch-norm scale/shift into fp logits.
+#[allow(clippy::too_many_arguments)]
+fn final_fc_rows(
+    src: &[u32],
+    logits: &mut [f32],
+    d_out: usize,
+    threads: usize,
+    d_in: usize,
+    w: &crate::bitops::BitMatrix,
+    gamma: &[f32],
+    beta: &[f32],
+) {
+    let wpl_in = d_in.div_ceil(32);
+    scoped_chunks(logits, d_out, threads, |ni, row| {
+        let a = &src[ni * wpl_in..(ni + 1) * wpl_in];
+        for (j, out) in row.iter_mut().enumerate() {
+            let v = pack::pm1_dot(a, w.line(j), d_in) as f32;
+            *out = v * gamma[j] + beta[j];
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::planner::Planner;
+    use crate::nn::forward::{forward, random_weights};
+    use crate::nn::layer::Dims;
+    use crate::sim::RTX2080TI;
+    use crate::util::Rng;
+
+    fn conv_model() -> ModelDef {
+        ModelDef {
+            name: "engine-conv-test",
+            dataset: "synthetic",
+            input: Dims { hw: 8, feat: 3 },
+            classes: 4,
+            layers: vec![
+                LayerSpec::FirstConv { c: 3, o: 32, k: 3, stride: 1, pad: 1 },
+                LayerSpec::BinConv {
+                    c: 32,
+                    o: 32,
+                    k: 3,
+                    stride: 1,
+                    pad: 1,
+                    pool: true,
+                    residual: false,
+                },
+                LayerSpec::BinFc { d_in: 4 * 4 * 32, d_out: 64 },
+                LayerSpec::FinalFc { d_in: 64, d_out: 4 },
+            ],
+            residual_blocks: 0,
+        }
+    }
+
+    fn pool_model() -> ModelDef {
+        ModelDef {
+            name: "engine-pool-test",
+            dataset: "synthetic",
+            input: Dims { hw: 8, feat: 3 },
+            classes: 4,
+            layers: vec![
+                LayerSpec::FirstConv { c: 3, o: 32, k: 3, stride: 1, pad: 1 },
+                LayerSpec::Pool,
+                LayerSpec::BinConv {
+                    c: 32,
+                    o: 32,
+                    k: 3,
+                    stride: 2,
+                    pad: 1,
+                    pool: false,
+                    residual: false,
+                },
+                LayerSpec::BinFc { d_in: 2 * 2 * 32, d_out: 32 },
+                LayerSpec::FinalFc { d_in: 32, d_out: 4 },
+            ],
+            residual_blocks: 0,
+        }
+    }
+
+    fn build(model: ModelDef, seed: u64, batch: usize) -> (EngineExecutor, ModelWeights) {
+        let mut rng = Rng::new(seed);
+        let weights = random_weights(&model, &mut rng);
+        let plan = Planner::new(&RTX2080TI).plan(&model, batch);
+        let exec = EngineExecutor::new(model, &weights, plan).unwrap();
+        (exec, weights)
+    }
+
+    #[test]
+    fn matches_naive_forward_bit_for_bit() {
+        for (m, seed) in [(conv_model(), 5u64), (pool_model(), 9u64)] {
+            let batch = 8;
+            let (mut exec, weights) = build(m.clone(), seed, batch);
+            let mut rng = Rng::new(seed + 100);
+            let x: Vec<f32> = (0..batch * m.input.flat())
+                .map(|_| rng.next_f32() - 0.5)
+                .collect();
+            let want = forward(&m, &weights, &x, batch);
+            let got = exec.forward(&x, batch);
+            assert_eq!(got, &want[..], "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let m = conv_model();
+        let batch = 8;
+        let (exec, weights) = build(m.clone(), 7, batch);
+        let mut serial = EngineExecutor::new(
+            m.clone(),
+            &weights,
+            Planner::new(&RTX2080TI).plan(&m, batch),
+        )
+        .unwrap()
+        .with_threads(1);
+        let mut parallel = exec.with_threads(4);
+        let mut rng = Rng::new(77);
+        let x: Vec<f32> =
+            (0..batch * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
+        assert_eq!(serial.forward(&x, batch), parallel.forward(&x, batch));
+    }
+
+    #[test]
+    fn smaller_batches_on_same_arena() {
+        let m = conv_model();
+        let (mut exec, weights) = build(m.clone(), 11, 8);
+        let mut rng = Rng::new(13);
+        let x8: Vec<f32> =
+            (0..8 * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
+        let want8 = forward(&m, &weights, &x8, 8);
+        // run batch 3 (subset rows) on the batch-8 arena.  The naive
+        // path only supports multiple-of-8 batches (btc_compute tiles
+        // rows in blocks of 8), so ground truth for the shared rows is
+        // the batch-8 run — per-row independence makes them comparable.
+        let x3 = x8[..3 * m.input.flat()].to_vec();
+        let got3 = exec.forward(&x3, 3).to_vec();
+        assert_eq!(got3.len(), 3 * 4);
+        assert_eq!(&got3[..], &want8[..3 * 4]);
+        // and the arena never grew
+        let before = exec.arena_bytes();
+        let _ = exec.forward(&x8, 8);
+        assert_eq!(exec.arena_bytes(), before);
+    }
+
+    #[test]
+    fn mlp_from_fp_input_is_deterministic() {
+        let m = crate::nn::model::mnist_mlp();
+        let batch = 8;
+        let mut rng = Rng::new(21);
+        let weights = random_weights(&m, &mut rng);
+        let plan = Planner::new(&RTX2080TI).plan(&m, batch);
+        let mut exec = EngineExecutor::new(m.clone(), &weights, plan).unwrap();
+        let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32() - 0.5).collect();
+        let a = exec.forward(&x, batch).to_vec();
+        let b = exec.forward(&x, batch).to_vec();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), batch * 10);
+        assert!(a.iter().all(|v| v.is_finite()));
+        // different rows should (almost surely) differ
+        assert_ne!(a[..10], a[10..20]);
+    }
+
+    #[test]
+    fn rejects_mismatched_plan() {
+        let m = conv_model();
+        let mut rng = Rng::new(31);
+        let weights = random_weights(&m, &mut rng);
+        let other = pool_model();
+        let plan = Planner::new(&RTX2080TI).plan(&other, 8);
+        assert!(EngineExecutor::new(m, &weights, plan).is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! The inference engine: planning + execution for high-throughput
+//! packed-bit serving.
+//!
+//! This subsystem turns the repo's functional pieces (bit formats,
+//! scheme implementations, the calibrated Turing cost model, the
+//! coordinator) into a servable engine:
+//!
+//! * `planner` — for a `ModelDef` and batch bucket, simulates every
+//!   Tables-6/7 scheme per layer with `nn::cost::layer_secs` (the exact
+//!   machinery behind `model_cost`) and picks the cheapest, emitting an
+//!   executable [`plan::ModelPlan`].  This is the paper's central lesson
+//!   operationalized: scheme and data-format choice is a per-layer-shape
+//!   decision, not a global one.
+//! * `plan` / `plan_cache` — plans serialize to JSON and persist in a
+//!   directory cache keyed by (model, batch shape, gpu), with hit/miss
+//!   counters for observability.
+//! * `arena` / `executor` — the execution side: every buffer is
+//!   allocated once up front from the model shape, and the packed-bit
+//!   forward pass then runs with zero heap allocation per request,
+//!   parallelized across output rows via
+//!   `util::threadpool::scoped_chunks`.  Results are bit-identical to
+//!   the naive `nn::forward` path.
+//! * `weights` — weight persistence through the runtime's flat blob
+//!   format (`*.bin` + `*.meta`).
+//! * `batch_model` — [`EngineModel`] implements the coordinator's
+//!   `BatchModel`, so `coordinator::server`/`router` can serve any
+//!   Table-5 model end to end (not just the PJRT MLP), with engine
+//!   images/sec exposed through `coordinator::metrics`.
+//!
+//! See `docs/ENGINE.md` for the planner -> plan cache -> arena executor
+//! flow and `examples/serve_bnn.rs` for an end-to-end serving demo.
+
+pub mod arena;
+pub mod batch_model;
+pub mod executor;
+pub mod json;
+pub mod plan;
+pub mod plan_cache;
+pub mod planner;
+pub mod weights;
+
+pub use arena::Arena;
+pub use batch_model::EngineModel;
+pub use executor::EngineExecutor;
+pub use plan::{LayerPlan, ModelPlan};
+pub use plan_cache::PlanCache;
+pub use planner::Planner;
+pub use weights::{weights_from_blob, weights_to_blob};

@@ -1,0 +1,217 @@
+//! Executable model plans: the planner's output, serializable to JSON
+//! for the persistent plan cache.
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::Scheme;
+
+use super::json::Value;
+
+/// One layer's planned execution: the winning scheme and its simulated
+/// cost on the plan's GPU.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPlan {
+    /// index into `ModelDef::layers`
+    pub index: usize,
+    /// display tag ("128C3p", "1024FC", ...) — also a consistency check
+    /// when a cached plan is applied to a model definition
+    pub tag: String,
+    /// the scheme the planner selected for this layer
+    pub scheme: Scheme,
+    /// simulated compute seconds (excl. per-layer sync)
+    pub secs: f64,
+}
+
+/// A complete plan for (model, batch bucket, gpu).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelPlan {
+    pub model: String,
+    pub dataset: String,
+    pub gpu: String,
+    pub batch: usize,
+    pub classes: usize,
+    pub layers: Vec<LayerPlan>,
+    /// simulated end-to-end seconds (launch + per-layer compute + sync),
+    /// directly comparable to `nn::cost::model_cost(...).total_secs`
+    pub total_secs: f64,
+}
+
+impl ModelPlan {
+    /// Simulated images/second at this plan's batch.
+    pub fn throughput_fps(&self) -> f64 {
+        self.batch as f64 / self.total_secs
+    }
+
+    /// The filename this plan lives under in a plan cache — the cache
+    /// key is exactly (model, batch shape, gpu).
+    pub fn cache_file(model: &str, batch: usize, gpu: &str) -> String {
+        let sane = |s: &str| -> String {
+            s.chars()
+                .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' {
+                    c
+                } else {
+                    '_'
+                })
+                .collect()
+        };
+        format!("{}_b{batch}_{}.plan.json", sane(model), sane(gpu))
+    }
+
+    /// Serialize to the plan-cache JSON document.
+    pub fn to_json(&self) -> String {
+        let layers: Vec<Value> = self
+            .layers
+            .iter()
+            .map(|l| {
+                Value::Obj(vec![
+                    ("index".to_string(), Value::Num(l.index as f64)),
+                    ("tag".to_string(), Value::Str(l.tag.clone())),
+                    (
+                        "scheme".to_string(),
+                        Value::Str(l.scheme.name().to_string()),
+                    ),
+                    ("secs".to_string(), Value::Num(l.secs)),
+                ])
+            })
+            .collect();
+        Value::Obj(vec![
+            ("model".to_string(), Value::Str(self.model.clone())),
+            ("dataset".to_string(), Value::Str(self.dataset.clone())),
+            ("gpu".to_string(), Value::Str(self.gpu.clone())),
+            ("batch".to_string(), Value::Num(self.batch as f64)),
+            ("classes".to_string(), Value::Num(self.classes as f64)),
+            ("total_secs".to_string(), Value::Num(self.total_secs)),
+            ("layers".to_string(), Value::Arr(layers)),
+        ])
+        .to_string()
+    }
+
+    /// Parse a plan-cache JSON document.
+    pub fn from_json(text: &str) -> Result<ModelPlan> {
+        let v = Value::parse(text).map_err(|e| anyhow::anyhow!("plan json: {e}"))?;
+        let str_field = |key: &str| -> Result<String> {
+            Ok(v.get(key)
+                .and_then(Value::as_str)
+                .with_context(|| format!("plan field {key:?}"))?
+                .to_string())
+        };
+        let num_field = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(Value::as_usize)
+                .with_context(|| format!("plan field {key:?}"))
+        };
+        let mut layers = Vec::new();
+        for (i, lv) in v
+            .get("layers")
+            .and_then(Value::as_arr)
+            .context("plan field \"layers\"")?
+            .iter()
+            .enumerate()
+        {
+            let scheme_name = lv
+                .get("scheme")
+                .and_then(Value::as_str)
+                .with_context(|| format!("layer {i} scheme"))?;
+            let Some(scheme) = Scheme::from_name(scheme_name) else {
+                bail!("layer {i}: unknown scheme {scheme_name:?}");
+            };
+            layers.push(LayerPlan {
+                index: lv
+                    .get("index")
+                    .and_then(Value::as_usize)
+                    .with_context(|| format!("layer {i} index"))?,
+                tag: lv
+                    .get("tag")
+                    .and_then(Value::as_str)
+                    .with_context(|| format!("layer {i} tag"))?
+                    .to_string(),
+                scheme,
+                secs: lv
+                    .get("secs")
+                    .and_then(Value::as_f64)
+                    .with_context(|| format!("layer {i} secs"))?,
+            });
+        }
+        Ok(ModelPlan {
+            model: str_field("model")?,
+            dataset: str_field("dataset")?,
+            gpu: str_field("gpu")?,
+            batch: num_field("batch")?,
+            classes: num_field("classes")?,
+            layers,
+            total_secs: v
+                .get("total_secs")
+                .and_then(Value::as_f64)
+                .context("plan field \"total_secs\"")?,
+        })
+    }
+
+    /// Per-scheme layer counts (for reporting).
+    pub fn scheme_histogram(&self) -> Vec<(&'static str, usize)> {
+        let mut out: Vec<(&'static str, usize)> = Vec::new();
+        for l in &self.layers {
+            match out.iter_mut().find(|(n, _)| *n == l.scheme.name()) {
+                Some((_, c)) => *c += 1,
+                None => out.push((l.scheme.name(), 1)),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ModelPlan {
+        ModelPlan {
+            model: "MNIST-MLP".to_string(),
+            dataset: "MNIST".to_string(),
+            gpu: "RTX2080Ti".to_string(),
+            batch: 32,
+            classes: 10,
+            layers: vec![
+                LayerPlan {
+                    index: 0,
+                    tag: "1024FC".to_string(),
+                    scheme: Scheme::BtcFmt,
+                    secs: 1.25e-5,
+                },
+                LayerPlan {
+                    index: 1,
+                    tag: "10out".to_string(),
+                    scheme: Scheme::Sbnn64Fine,
+                    secs: 3.0e-6,
+                },
+            ],
+            total_secs: 2.05e-5,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let p = sample();
+        let back = ModelPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn rejects_unknown_scheme() {
+        let text = sample().to_json().replace("BTC-FMT", "WARP-9");
+        assert!(ModelPlan::from_json(&text).is_err());
+    }
+
+    #[test]
+    fn cache_file_is_sane() {
+        let f = ModelPlan::cache_file("ImageNet-ResNet18", 128, "RTX2080Ti");
+        assert_eq!(f, "ImageNet-ResNet18_b128_RTX2080Ti.plan.json");
+        let odd = ModelPlan::cache_file("a b/c", 8, "g pu");
+        assert!(!odd.contains(' ') && !odd.contains('/'));
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = sample().scheme_histogram();
+        assert_eq!(h, vec![("BTC-FMT", 1), ("SBNN-64-Fine", 1)]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Persistent JSON plan cache keyed by (model, batch shape, gpu).
+//!
+//! Planning is cheap but not free (six scheme simulations per layer);
+//! serving stacks restart often and re-plan the same shapes.  The cache
+//! stores one JSON document per key under a directory and counts
+//! hits/misses so benches can report cache effectiveness.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::nn::ModelDef;
+
+use super::plan::ModelPlan;
+use super::planner::Planner;
+
+/// A directory of `*.plan.json` files + hit/miss counters.
+pub struct PlanCache {
+    dir: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: impl AsRef<Path>) -> std::io::Result<PlanCache> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        Ok(PlanCache { dir, hits: AtomicU64::new(0), misses: AtomicU64::new(0) })
+    }
+
+    /// Path of the entry for a key.
+    pub fn entry_path(&self, model: &str, batch: usize, gpu: &str) -> PathBuf {
+        self.dir.join(ModelPlan::cache_file(model, batch, gpu))
+    }
+
+    /// Read + validate an entry without touching the counters.
+    fn read(&self, model: &str, batch: usize, gpu: &str) -> Option<ModelPlan> {
+        let path = self.entry_path(model, batch, gpu);
+        std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| ModelPlan::from_json(&text).ok())
+            .filter(|p| p.model == model && p.batch == batch && p.gpu == gpu)
+    }
+
+    /// Look up a cached plan.  A missing or malformed entry counts as a
+    /// miss.  (Callers with the live `ModelDef` should prefer
+    /// `get_or_plan`, which additionally rejects stale entries whose
+    /// layer tags drifted — those count as misses there too.)
+    pub fn get(&self, model: &str, batch: usize, gpu: &str) -> Option<ModelPlan> {
+        match self.read(model, batch, gpu) {
+            Some(p) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(p)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store a plan (overwrites any existing entry for its key).
+    pub fn put(&self, plan: &ModelPlan) -> std::io::Result<PathBuf> {
+        let path = self.entry_path(&plan.model, plan.batch, &plan.gpu);
+        std::fs::write(&path, plan.to_json())?;
+        Ok(path)
+    }
+
+    /// Cached plan, or plan now and persist.  A failed write is not
+    /// fatal (the fresh plan is still returned); it will simply re-plan
+    /// next time.
+    pub fn get_or_plan(
+        &self,
+        planner: &Planner,
+        model: &ModelDef,
+        batch: usize,
+    ) -> ModelPlan {
+        if let Some(p) = self.read(model.name, batch, planner.gpu.name) {
+            // validate against the live model definition; shape drift
+            // (e.g. a renamed layer) is a MISS that falls back to fresh
+            // planning (and re-persists below, self-healing the entry)
+            let tags_match = p.layers.len() == model.layers.len()
+                && p.layers.iter().zip(&model.layers).all(|(lp, l)| lp.tag == l.tag());
+            if tags_match {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return p;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = planner.plan(model, batch);
+        if let Err(e) = self.put(&plan) {
+            eprintln!(
+                "plan cache: could not persist {}/b{}: {e}",
+                plan.model, plan.batch
+            );
+        }
+        plan
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::mnist_mlp;
+    use crate::sim::RTX2080TI;
+
+    fn temp_cache(tag: &str) -> PlanCache {
+        let dir = std::env::temp_dir()
+            .join(format!("tcbnn_plan_cache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        PlanCache::open(dir).unwrap()
+    }
+
+    #[test]
+    fn miss_then_hit_roundtrips() {
+        let cache = temp_cache("roundtrip");
+        let planner = Planner::new(&RTX2080TI);
+        let m = mnist_mlp();
+        let p1 = cache.get_or_plan(&planner, &m, 32);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 0);
+        let p2 = cache.get_or_plan(&planner, &m, 32);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(p1, p2, "cached plan must round-trip bit-exactly");
+        // a different batch bucket is a different key
+        let _ = cache.get_or_plan(&planner, &m, 8);
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn corrupt_entry_is_a_miss() {
+        let cache = temp_cache("corrupt");
+        let planner = Planner::new(&RTX2080TI);
+        let m = mnist_mlp();
+        let p = cache.get_or_plan(&planner, &m, 8);
+        std::fs::write(cache.entry_path(&p.model, 8, &p.gpu), "{not json").unwrap();
+        assert!(cache.get(&p.model, 8, &p.gpu).is_none());
+        // and get_or_plan self-heals the entry
+        let healed = cache.get_or_plan(&planner, &m, 8);
+        assert_eq!(healed, p);
+        assert!(cache.get(&p.model, 8, &p.gpu).is_some());
+    }
+}

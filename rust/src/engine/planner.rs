@@ -1,0 +1,144 @@
+//! The planner: per-layer scheme selection driven by the calibrated
+//! Turing cost model.
+//!
+//! For every layer of a `ModelDef` (at a given batch bucket) the planner
+//! simulates each Tables-6/7 scheme with `nn::cost::layer_secs` — the
+//! exact same machinery `nn::cost::model_cost` uses — and selects the
+//! cheapest.  Ties resolve to the first scheme in `Scheme::all()` order,
+//! so planning is fully deterministic.
+
+use crate::nn::cost::layer_secs;
+use crate::nn::{ModelDef, ResidualMode, Scheme};
+use crate::sim::{Engine, GpuModel};
+
+use super::plan::{LayerPlan, ModelPlan};
+
+/// Planner configuration: the target GPU plus the same knobs
+/// `model_cost` exposes.
+#[derive(Clone, Debug)]
+pub struct Planner {
+    pub gpu: GpuModel,
+    pub residual: ResidualMode,
+    pub layer_sync: bool,
+}
+
+impl Planner {
+    /// Planner with the paper's default operating point (full residual
+    /// traffic, per-layer cooperative sync).
+    pub fn new(gpu: &GpuModel) -> Planner {
+        Planner { gpu: gpu.clone(), residual: ResidualMode::Full, layer_sync: true }
+    }
+
+    /// The cheapest scheme for one layer, with its simulated seconds.
+    /// `dims` is the layer's input dims (walk them with `Dims::after`).
+    pub fn best_scheme(
+        &self,
+        engine: &Engine,
+        model: &ModelDef,
+        layer_index: usize,
+        dims: crate::nn::layer::Dims,
+        batch: usize,
+    ) -> (Scheme, f64) {
+        let layer = &model.layers[layer_index];
+        let mut best = Scheme::all()[0];
+        let mut best_secs = f64::INFINITY;
+        for s in Scheme::all() {
+            let secs = layer_secs(
+                engine,
+                s,
+                layer,
+                dims,
+                batch,
+                self.residual,
+                model.residual_blocks > 0,
+            );
+            if secs < best_secs {
+                best = s;
+                best_secs = secs;
+            }
+        }
+        (best, best_secs)
+    }
+
+    /// Plan a whole model at one batch bucket.
+    pub fn plan(&self, model: &ModelDef, batch: usize) -> ModelPlan {
+        let engine = Engine::new(&self.gpu);
+        let sync_secs = if self.layer_sync {
+            self.gpu.secs(self.gpu.coop_sync_cycles)
+        } else {
+            0.0
+        };
+        let mut dims = model.input;
+        let mut layers = Vec::with_capacity(model.layers.len());
+        // one fused kernel launch, same accounting as model_cost
+        let mut total = self.gpu.launch_overhead_s;
+        for (i, l) in model.layers.iter().enumerate() {
+            let (scheme, secs) = self.best_scheme(&engine, model, i, dims, batch);
+            total += secs + sync_secs;
+            layers.push(LayerPlan { index: i, tag: l.tag(), scheme, secs });
+            dims = dims.after(l);
+        }
+        ModelPlan {
+            model: model.name.to_string(),
+            dataset: model.dataset.to_string(),
+            gpu: self.gpu.name.to_string(),
+            batch,
+            classes: model.classes,
+            layers,
+            total_secs: total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::{all_models, mnist_mlp};
+    use crate::nn::model_cost;
+    use crate::sim::RTX2080TI;
+
+    #[test]
+    fn plan_covers_every_layer() {
+        let p = Planner::new(&RTX2080TI);
+        for m in all_models() {
+            let plan = p.plan(&m, 8);
+            assert_eq!(plan.layers.len(), m.layers.len(), "{}", m.name);
+            for (i, (lp, l)) in plan.layers.iter().zip(&m.layers).enumerate() {
+                assert_eq!(lp.index, i);
+                assert_eq!(lp.tag, l.tag());
+                assert!(lp.secs.is_finite() && lp.secs > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn planned_total_never_beats_best_fixed_scheme_by_construction() {
+        // the per-layer optimum is at most the best whole-model fixed
+        // scheme (it can only improve by mixing)
+        let p = Planner::new(&RTX2080TI);
+        for m in all_models() {
+            let plan = p.plan(&m, 8);
+            let best_fixed = Scheme::all()
+                .iter()
+                .map(|s| {
+                    model_cost(&m, 8, &RTX2080TI, *s, ResidualMode::Full, true)
+                        .total_secs
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                plan.total_secs <= best_fixed * (1.0 + 1e-12),
+                "{}: planned {} vs best fixed {}",
+                m.name,
+                plan.total_secs,
+                best_fixed
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = Planner::new(&RTX2080TI);
+        let m = mnist_mlp();
+        assert_eq!(p.plan(&m, 32), p.plan(&m, 32));
+    }
+}

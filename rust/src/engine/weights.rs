@@ -1,0 +1,181 @@
+//! Model-weight persistence: `nn::forward::ModelWeights` <-> the flat
+//! blob format (`*.bin` + `*.meta`) the runtime already speaks.
+//!
+//! Naming convention, one prefix per layer index:
+//!
+//! ```text
+//!   l{i}_w       f32  k*k*c*o      first-conv +/-1 filter (KKCO order)
+//!   l{i}_thresh  f32  o            fused thresholds
+//!   l{i}_filter  u32  packed words binarized conv filter (KKOC packed C)
+//!   l{i}_wbits   u32  packed words fc weight rows (d_out x d_in bits)
+//!   l{i}_gamma   f32  d_out        classifier bn scale
+//!   l{i}_beta    f32  d_out        classifier bn shift
+//! ```
+
+use anyhow::{bail, ensure, Result};
+
+use crate::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
+use crate::nn::forward::{LayerWeights, ModelWeights};
+use crate::nn::layer::LayerSpec;
+use crate::nn::ModelDef;
+use crate::runtime::{Blob, BlobWriter};
+
+/// Serialize weights into a `BlobWriter` (call `.write(base)` after).
+pub fn weights_to_blob(model: &ModelDef, weights: &ModelWeights) -> Result<BlobWriter> {
+    ensure!(
+        weights.layers.len() == model.layers.len(),
+        "weights/model layer count mismatch"
+    );
+    let mut w = BlobWriter::new();
+    for (i, (l, lw)) in model.layers.iter().zip(&weights.layers).enumerate() {
+        match (l, lw) {
+            (LayerSpec::FirstConv { .. }, LayerWeights::FirstConv { w_pm1, thresh }) => {
+                w.push_f32(&format!("l{i}_w"), &[w_pm1.len()], w_pm1);
+                w.push_f32(&format!("l{i}_thresh"), &[thresh.len()], thresh);
+            }
+            (LayerSpec::BinConv { .. }, LayerWeights::BinConv { filter, thresh }) => {
+                w.push_u32(&format!("l{i}_filter"), &[filter.data.len()], &filter.data);
+                w.push_f32(&format!("l{i}_thresh"), &[thresh.len()], thresh);
+            }
+            (LayerSpec::BinFc { .. }, LayerWeights::BinFc { w: m, thresh }) => {
+                w.push_u32(&format!("l{i}_wbits"), &[m.data.len()], &m.data);
+                w.push_f32(&format!("l{i}_thresh"), &[thresh.len()], thresh);
+            }
+            (LayerSpec::FinalFc { .. }, LayerWeights::FinalFc { w: m, gamma, beta }) => {
+                w.push_u32(&format!("l{i}_wbits"), &[m.data.len()], &m.data);
+                w.push_f32(&format!("l{i}_gamma"), &[gamma.len()], gamma);
+                w.push_f32(&format!("l{i}_beta"), &[beta.len()], beta);
+            }
+            (LayerSpec::Pool, LayerWeights::Pool) => {}
+            _ => bail!("layer {i}: weight kind does not match layer spec"),
+        }
+    }
+    Ok(w)
+}
+
+/// Reconstruct `ModelWeights` from a blob written by `weights_to_blob`
+/// (shapes come from the `ModelDef`, values from the blob — the same
+/// split the PJRT path uses between manifest and weight blob).
+pub fn weights_from_blob(model: &ModelDef, blob: &Blob) -> Result<ModelWeights> {
+    let mut layers = Vec::with_capacity(model.layers.len());
+    for (i, l) in model.layers.iter().enumerate() {
+        layers.push(match *l {
+            LayerSpec::FirstConv { c, o, k, .. } => {
+                let w_pm1 = blob.as_f32(&format!("l{i}_w"))?;
+                ensure!(w_pm1.len() == k * k * c * o, "layer {i}: filter size");
+                let thresh = blob.as_f32(&format!("l{i}_thresh"))?;
+                ensure!(thresh.len() == o, "layer {i}: threshold size");
+                LayerWeights::FirstConv { w_pm1, thresh }
+            }
+            LayerSpec::BinConv { c, o, k, .. } => {
+                let data = blob.as_u32(&format!("l{i}_filter"))?;
+                let mut filter =
+                    BitTensor4::zeros([k, k, o, c], TensorLayout::Kkoc);
+                ensure!(
+                    data.len() == filter.data.len(),
+                    "layer {i}: packed filter word count"
+                );
+                filter.data = data;
+                let thresh = blob.as_f32(&format!("l{i}_thresh"))?;
+                ensure!(thresh.len() == o, "layer {i}: threshold size");
+                LayerWeights::BinConv { filter, thresh }
+            }
+            LayerSpec::BinFc { d_in, d_out } => {
+                let data = blob.as_u32(&format!("l{i}_wbits"))?;
+                let mut m = BitMatrix::zeros(d_out, d_in, Layout::RowMajor);
+                ensure!(data.len() == m.data.len(), "layer {i}: packed fc word count");
+                m.data = data;
+                let thresh = blob.as_f32(&format!("l{i}_thresh"))?;
+                ensure!(thresh.len() == d_out, "layer {i}: threshold size");
+                LayerWeights::BinFc { w: m, thresh }
+            }
+            LayerSpec::FinalFc { d_in, d_out } => {
+                let data = blob.as_u32(&format!("l{i}_wbits"))?;
+                let mut m = BitMatrix::zeros(d_out, d_in, Layout::RowMajor);
+                ensure!(data.len() == m.data.len(), "layer {i}: packed fc word count");
+                m.data = data;
+                LayerWeights::FinalFc {
+                    w: m,
+                    gamma: blob.as_f32(&format!("l{i}_gamma"))?,
+                    beta: blob.as_f32(&format!("l{i}_beta"))?,
+                }
+            }
+            LayerSpec::Pool => LayerWeights::Pool,
+        });
+    }
+    Ok(ModelWeights { layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::forward::{forward, random_weights};
+    use crate::nn::layer::Dims;
+    use crate::util::Rng;
+
+    fn model() -> ModelDef {
+        ModelDef {
+            name: "blob-rt",
+            dataset: "synthetic",
+            input: Dims { hw: 6, feat: 3 },
+            classes: 3,
+            layers: vec![
+                LayerSpec::FirstConv { c: 3, o: 32, k: 3, stride: 1, pad: 1 },
+                LayerSpec::BinConv {
+                    c: 32,
+                    o: 32,
+                    k: 3,
+                    stride: 1,
+                    pad: 1,
+                    pool: true,
+                    residual: false,
+                },
+                LayerSpec::BinFc { d_in: 3 * 3 * 32, d_out: 32 },
+                LayerSpec::FinalFc { d_in: 32, d_out: 3 },
+            ],
+            residual_blocks: 0,
+        }
+    }
+
+    #[test]
+    fn weights_roundtrip_through_blob_files() {
+        let m = model();
+        let mut rng = Rng::new(41);
+        let w = random_weights(&m, &mut rng);
+        let base = std::env::temp_dir()
+            .join(format!("tcbnn_weights_{}", std::process::id()))
+            .join("m")
+            .to_str()
+            .unwrap()
+            .to_string();
+        weights_to_blob(&m, &w).unwrap().write(&base).unwrap();
+        let blob = Blob::load(&base).unwrap();
+        let w2 = weights_from_blob(&m, &blob).unwrap();
+        // loaded weights must drive an identical forward pass
+        let x: Vec<f32> = (0..4 * 6 * 6 * 3).map(|_| rng.next_f32() - 0.5).collect();
+        assert_eq!(forward(&m, &w, &x, 4), forward(&m, &w2, &x, 4));
+    }
+
+    #[test]
+    fn missing_tensor_is_an_error() {
+        let m = model();
+        let mut rng = Rng::new(43);
+        let w = random_weights(&m, &mut rng);
+        let base = std::env::temp_dir()
+            .join(format!("tcbnn_weights_missing_{}", std::process::id()))
+            .join("m")
+            .to_str()
+            .unwrap()
+            .to_string();
+        let mut writer = weights_to_blob(&m, &w).unwrap();
+        // clobber: write an unrelated extra tensor, then load against a
+        // model whose first layer wants a different name
+        writer.push_f32("unrelated", &[1], &[0.0]);
+        writer.write(&base).unwrap();
+        let blob = Blob::load(&base).unwrap();
+        assert!(weights_from_blob(&m, &blob).is_ok());
+        let mut bigger = m.clone();
+        bigger.layers.push(LayerSpec::BinFc { d_in: 3, d_out: 8 });
+        assert!(weights_from_blob(&bigger, &blob).is_err());
+    }
+}

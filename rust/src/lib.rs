@@ -16,11 +16,24 @@
 //!   timing model reproducing the §4 characterization, the six network
 //!   models of Table 5, and the BENN multi-GPU ensemble of §7.6.
 //!
+//! ## Engine
+//!
+//! The `engine` module is the serving layer that connects the kernel
+//! study to the coordinator: a **planner** queries the calibrated
+//! Turing cost model for every Tables-6/7 scheme per layer shape and
+//! emits an executable `ModelPlan` (persisted in a JSON plan cache
+//! keyed by model x batch x gpu); an **arena executor** pre-allocates
+//! every buffer from the plan and runs the packed-bit forward pass with
+//! zero per-request heap allocation, parallelized across rows; and
+//! `EngineModel` plugs the executor into `coordinator::server` so any
+//! Table-5 model is servable end to end.  See `docs/ENGINE.md`.
+//!
 //! See DESIGN.md for the system inventory and the per-table/figure
 //! experiment index, and EXPERIMENTS.md for paper-vs-measured results.
 
 pub mod bitops;
 pub mod coordinator;
+pub mod engine;
 pub mod figures;
 pub mod kernels;
 pub mod nn;

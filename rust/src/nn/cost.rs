@@ -49,6 +49,11 @@ impl Scheme {
         ]
     }
 
+    /// Inverse of `name` (used by the engine's plan serialization).
+    pub fn from_name(s: &str) -> Option<Scheme> {
+        Scheme::all().into_iter().find(|sc| sc.name() == s)
+    }
+
     fn is_fine(&self) -> bool {
         matches!(self, Scheme::Sbnn32Fine | Scheme::Sbnn64Fine)
     }
@@ -250,6 +255,80 @@ fn fc_traces(scheme: Scheme, batch: usize, d_in: usize, d_out: usize) -> Vec<Ker
     }
 }
 
+/// The kernel traces of one layer under `scheme`, in the fused-kernel
+/// view (no per-layer launches).  `dims` is the layer's *input* dims;
+/// `model_has_residuals` gates residual traffic exactly like
+/// `model_cost` does for ResNet models.  This is the single source of
+/// truth shared by `model_cost` and `engine::Planner`.
+pub fn layer_traces(
+    scheme: Scheme,
+    layer: &LayerSpec,
+    dims: Dims,
+    batch: usize,
+    residual: ResidualMode,
+    model_has_residuals: bool,
+) -> Vec<KernelTrace> {
+    let mut traces: Vec<KernelTrace> = match *layer {
+        LayerSpec::FirstConv { o, k, stride, pad, .. } => {
+            vec![first_conv_trace(dims, batch, o, k, stride, pad)]
+        }
+        LayerSpec::BinConv { o, k, stride, pad, residual: is_res, pool: _, .. } => {
+            let mut v = bin_conv_traces(scheme, dims, batch, o, k, stride, pad);
+            if is_res && model_has_residuals {
+                let out_dims = dims.after(layer);
+                let elems = out_dims.flat() * batch;
+                if let Some(rt) = residual_trace(elems, residual) {
+                    v.push(rt);
+                }
+            }
+            v
+        }
+        LayerSpec::BinFc { d_in, d_out } => fc_traces(scheme, batch, d_in, d_out),
+        LayerSpec::FinalFc { d_in, d_out } => {
+            // real-valued output: int store + bn, no output binarize
+            let mut v = fc_traces(scheme, batch, d_in, round_up(d_out, 8));
+            for t in &mut v {
+                t.warp.bulk_store_bytes += 8 * 4; // int32 out per tile
+                t.warp.fp_ops += 64; // bn scale/shift
+            }
+            v
+        }
+        LayerSpec::Pool => {
+            let mut t = KernelTrace::new("pool");
+            let elems = dims.flat() * batch / 8; // packed bytes
+            t.grid_ctas = (elems / 4096).max(1);
+            t.warps_per_cta = 8;
+            t.warp.bulk_load_bytes = 4096;
+            t.warp.bulk_store_bytes = 1024;
+            t.warp.intu_ops = 3 * 1024;
+            vec![t]
+        }
+    };
+    // the fused kernel has no per-layer launches
+    for t in &mut traces {
+        t.launches = 0;
+    }
+    traces
+}
+
+/// Simulated seconds of one layer under `scheme` (compute only — the
+/// per-layer cooperative sync and the one-off kernel launch overhead are
+/// accounted at the model level).
+pub fn layer_secs(
+    engine: &Engine,
+    scheme: Scheme,
+    layer: &LayerSpec,
+    dims: Dims,
+    batch: usize,
+    residual: ResidualMode,
+    model_has_residuals: bool,
+) -> f64 {
+    layer_traces(scheme, layer, dims, batch, residual, model_has_residuals)
+        .iter()
+        .map(|t| engine.cost(t).total_secs)
+        .sum()
+}
+
 /// Simulate one model under a scheme.
 pub fn model_cost(
     model: &ModelDef,
@@ -273,47 +352,15 @@ pub fn model_cost(
     total += gpu.launch_overhead_s;
 
     for l in &model.layers {
-        let mut traces: Vec<KernelTrace> = match *l {
-            LayerSpec::FirstConv { o, k, stride, pad, .. } => {
-                vec![first_conv_trace(dims, batch, o, k, stride, pad)]
-            }
-            LayerSpec::BinConv { o, k, stride, pad, residual: is_res, pool: _, .. } => {
-                let mut v = bin_conv_traces(scheme, dims, batch, o, k, stride, pad);
-                if is_res && model.residual_blocks > 0 {
-                    let out_dims = dims.after(l);
-                    let elems = out_dims.flat() * batch;
-                    if let Some(rt) = residual_trace(elems, residual) {
-                        v.push(rt);
-                    }
-                }
-                v
-            }
-            LayerSpec::BinFc { d_in, d_out } => fc_traces(scheme, batch, d_in, d_out),
-            LayerSpec::FinalFc { d_in, d_out } => {
-                // real-valued output: int store + bn, no output binarize
-                let mut v = fc_traces(scheme, batch, d_in, round_up(d_out, 8));
-                for t in &mut v {
-                    t.warp.bulk_store_bytes += 8 * 4; // int32 out per tile
-                    t.warp.fp_ops += 64; // bn scale/shift
-                }
-                v
-            }
-            LayerSpec::Pool => {
-                let mut t = KernelTrace::new("pool");
-                let elems = dims.flat() * batch / 8; // packed bytes
-                t.grid_ctas = (elems / 4096).max(1);
-                t.warps_per_cta = 8;
-                t.warp.bulk_load_bytes = 4096;
-                t.warp.bulk_store_bytes = 1024;
-                t.warp.intu_ops = 3 * 1024;
-                vec![t]
-            }
-        };
-        // the fused kernel has no per-layer launches
-        for t in &mut traces {
-            t.launches = 0;
-        }
-        let secs: f64 = traces.iter().map(|t| engine.cost(t).total_secs).sum();
+        let secs = layer_secs(
+            &engine,
+            scheme,
+            l,
+            dims,
+            batch,
+            residual,
+            model.residual_blocks > 0,
+        );
         total += secs + sync_secs_each;
         sync_total += sync_secs_each;
         layers.push(LayerCost { tag: l.tag(), secs, sync_secs: sync_secs_each });

@@ -95,6 +95,65 @@ impl Blob {
     }
 }
 
+/// Builder for `*.bin` + `*.meta` blobs (the writer side of `Blob`,
+/// used by the engine's weight persistence and by tests; train.py is
+/// the other producer of this format).
+#[derive(Default)]
+pub struct BlobWriter {
+    meta: String,
+    data: Vec<u8>,
+}
+
+impl BlobWriter {
+    pub fn new() -> BlobWriter {
+        BlobWriter::default()
+    }
+
+    fn push_raw(&mut self, name: &str, dtype: &str, dims: &[usize], bytes: &[u8]) {
+        assert!(!name.contains(char::is_whitespace), "tensor name {name:?}");
+        let dims_s = if dims.is_empty() {
+            "1".to_string()
+        } else {
+            dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+        };
+        let offset = self.data.len();
+        self.meta.push_str(&format!(
+            "{name} {dtype} {dims_s} {offset} {}\n",
+            bytes.len()
+        ));
+        self.data.extend_from_slice(bytes);
+    }
+
+    pub fn push_f32(&mut self, name: &str, dims: &[usize], xs: &[f32]) {
+        assert_eq!(xs.len(), dims.iter().product::<usize>().max(1));
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        self.push_raw(name, "f32", dims, &bytes);
+    }
+
+    pub fn push_u32(&mut self, name: &str, dims: &[usize], xs: &[u32]) {
+        assert_eq!(xs.len(), dims.iter().product::<usize>().max(1));
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        self.push_raw(name, "u32", dims, &bytes);
+    }
+
+    pub fn push_i32(&mut self, name: &str, dims: &[usize], xs: &[i32]) {
+        assert_eq!(xs.len(), dims.iter().product::<usize>().max(1));
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        self.push_raw(name, "i32", dims, &bytes);
+    }
+
+    /// Write `base.bin` + `base.meta`.
+    pub fn write(&self, base: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(base).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(format!("{base}.bin"), &self.data)?;
+        std::fs::write(format!("{base}.meta"), &self.meta)
+    }
+}
+
 fn bytes_to_vec<T, F: Fn([u8; 4]) -> T>(bytes: &[u8], conv: F) -> Vec<T> {
     bytes
         .chunks_exact(4)
@@ -137,6 +196,23 @@ mod tests {
         assert_eq!(blob.get("b").unwrap().dims, vec![2]);
         assert!(blob.as_f32("b").is_err()); // dtype mismatch
         assert!(blob.get("missing").is_err());
+    }
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("tcbnn_blobw_{}", std::process::id()));
+        let base = dir.join("rt").to_str().unwrap().to_string();
+        let mut w = BlobWriter::new();
+        w.push_f32("a", &[2, 2], &[1.0, -2.0, 0.5, 4.0]);
+        w.push_u32("b", &[3], &[1, 2, 0xDEAD_BEEF]);
+        w.push_i32("c", &[1], &[-7]);
+        w.write(&base).unwrap();
+        let blob = Blob::load(&base).unwrap();
+        assert_eq!(blob.as_f32("a").unwrap(), vec![1.0, -2.0, 0.5, 4.0]);
+        assert_eq!(blob.as_u32("b").unwrap(), vec![1, 2, 0xDEAD_BEEF]);
+        assert_eq!(blob.as_i32("c").unwrap(), vec![-7]);
+        assert_eq!(blob.get("a").unwrap().dims, vec![2, 2]);
     }
 
     #[test]

@@ -11,6 +11,6 @@ pub mod executor;
 pub mod mlp;
 
 pub use artifact::{ArgSpec, ArtifactSpec, DType, Manifest};
-pub use blob::Blob;
+pub use blob::{Blob, BlobWriter};
 pub use executor::{Engine, LoadedModel, TensorData};
 pub use mlp::MlpModel;

@@ -78,6 +78,53 @@ impl ThreadPool {
     }
 }
 
+/// Run `f(chunk_index, chunk)` over consecutive `chunk`-sized pieces of
+/// `data`, spread across up to `threads` scoped worker threads.
+///
+/// This is the engine executor's row-parallelism primitive: unlike
+/// `ThreadPool::map` it borrows (no `'static` bound, no per-job boxing,
+/// no channel traffic), so the hot path stays allocation-free — each
+/// worker writes its disjoint `&mut` slice of a pre-allocated arena
+/// buffer in place.  `data.len()` must be a multiple of `chunk`.
+pub fn scoped_chunks<T, F>(data: &mut [T], chunk: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    assert_eq!(data.len() % chunk, 0, "data must split into whole chunks");
+    let n_chunks = data.len() / chunk;
+    let threads = threads.max(1).min(n_chunks.max(1));
+    if threads <= 1 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    // contiguous bands of whole chunks per worker
+    let band = n_chunks.div_ceil(threads) * chunk;
+    let chunks_per_band = band / chunk;
+    std::thread::scope(|s| {
+        for (b, band_slice) in data.chunks_mut(band).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, c) in band_slice.chunks_mut(chunk).enumerate() {
+                    f(b * chunks_per_band + j, c);
+                }
+            });
+        }
+    });
+}
+
+/// Default worker count for scoped parallel sections: the machine's
+/// available parallelism, capped to keep thread-spawn overhead sane.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         for _ in 0..self.handles.len() {
@@ -118,6 +165,41 @@ mod tests {
         let pool = ThreadPool::new(3);
         let out = pool.map(50, |i| i * i);
         assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_chunks_covers_all_chunks() {
+        let mut data = vec![0u32; 12 * 5];
+        scoped_chunks(&mut data, 5, 3, |i, c| {
+            for v in c.iter_mut() {
+                *v = i as u32 + 1;
+            }
+        });
+        for i in 0..12 {
+            assert!(data[i * 5..(i + 1) * 5].iter().all(|&v| v == i as u32 + 1));
+        }
+    }
+
+    #[test]
+    fn scoped_chunks_single_thread_and_oversubscribed() {
+        let mut a = vec![0usize; 8];
+        scoped_chunks(&mut a, 1, 1, |i, c| c[0] = i * i);
+        let mut b = vec![0usize; 8];
+        scoped_chunks(&mut b, 1, 64, |i, c| c[0] = i * i);
+        assert_eq!(a, b);
+        assert_eq!(a[7], 49);
+    }
+
+    #[test]
+    fn scoped_chunks_reads_shared_state() {
+        let src: Vec<u32> = (0..64).collect();
+        let mut dst = vec![0u32; 64];
+        scoped_chunks(&mut dst, 8, 4, |i, c| {
+            for (j, v) in c.iter_mut().enumerate() {
+                *v = src[i * 8 + j] * 2;
+            }
+        });
+        assert_eq!(dst[63], 126);
     }
 
     #[test]

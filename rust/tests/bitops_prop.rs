@@ -1,0 +1,139 @@
+//! Property tests (via `util::proptest`) for the packing primitives and
+//! the FSB format at awkward widths — especially non-multiple-of-32
+//! widths, where pad-bit handling is easiest to get wrong.
+
+use tcbnn::bitops::{pack, BitMatrix, FsbMatrix, Layout};
+use tcbnn::util::proptest::run_cases;
+
+/// A width that is deliberately NOT a multiple of 32.
+fn odd_width(rng: &mut tcbnn::util::Rng, max: usize) -> usize {
+    loop {
+        let n = 1 + rng.gen_range(max);
+        if n % 32 != 0 {
+            return n;
+        }
+    }
+}
+
+#[test]
+fn pack_unpack_roundtrip_at_odd_widths() {
+    run_cases(201, 200, |rng| {
+        let n = odd_width(rng, 500);
+        let xs = rng.pm1_vec(n);
+        let packed = pack::pack_row(&xs);
+        assert_eq!(packed.len(), n.div_ceil(32));
+        assert_eq!(pack::unpack_row(&packed, n), xs);
+        // pad bits of the tail word must be zero (-1 encoding)
+        let rem = n % 32;
+        assert_eq!(packed[n / 32] >> rem, 0, "tail pad bits set at n={n}");
+    });
+}
+
+#[test]
+fn pack_row_thresh_matches_scalar_rule() {
+    run_cases(202, 100, |rng| {
+        let n = odd_width(rng, 300);
+        let xs: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let th: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let packed = pack::pack_row_thresh(&xs, &th);
+        for i in 0..n {
+            assert_eq!(
+                pack::get_bit(&packed, i),
+                xs[i] >= th[i],
+                "bit {i} of {n}"
+            );
+        }
+    });
+}
+
+#[test]
+fn eq2_dot_correct_at_odd_widths() {
+    // pm1_dot must agree with the float dot even when the last word is
+    // partially filled (pad bits are 0 in BOTH operands and cancel)
+    run_cases(203, 100, |rng| {
+        let n = odd_width(rng, 400);
+        let a = rng.pm1_vec(n);
+        let b = rng.pm1_vec(n);
+        let fdot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let pa = pack::pack_row(&a);
+        let pb = pack::pack_row(&b);
+        assert_eq!(pack::pm1_dot(&pa, &pb, n), fdot as i32);
+    });
+}
+
+#[test]
+fn set_get_bit_roundtrip_with_neighbours_intact() {
+    run_cases(204, 100, |rng| {
+        let n = odd_width(rng, 200);
+        let mut words = vec![0u32; n.div_ceil(32)];
+        let i = rng.gen_range(n);
+        pack::set_bit(&mut words, i, true);
+        assert!(pack::get_bit(&words, i));
+        let total: u32 = words.iter().map(|w| w.count_ones()).sum();
+        assert_eq!(total, 1, "exactly one bit set");
+        pack::set_bit(&mut words, i, false);
+        assert!(words.iter().all(|&w| w == 0));
+    });
+}
+
+#[test]
+fn fsb_roundtrip_at_odd_dims_row_major() {
+    run_cases(205, 150, |rng| {
+        let rows = odd_width(rng, 50);
+        let cols = odd_width(rng, 300);
+        let m = BitMatrix::random(rows, cols, Layout::RowMajor, rng);
+        let f = FsbMatrix::from_bitmatrix(&m);
+        assert_eq!(f.to_bitmatrix(), m, "{rows}x{cols} row-major");
+    });
+}
+
+#[test]
+fn fsb_roundtrip_at_odd_dims_col_major() {
+    run_cases(206, 150, |rng| {
+        let rows = odd_width(rng, 300);
+        let cols = odd_width(rng, 50);
+        let m = BitMatrix::random(rows, cols, Layout::ColMajor, rng);
+        let f = FsbMatrix::from_bitmatrix(&m);
+        assert_eq!(f.to_bitmatrix(), m, "{rows}x{cols} col-major");
+    });
+}
+
+#[test]
+fn fsb_preserves_every_logical_bit() {
+    // spot-check individual logical entries through the tile reorder
+    run_cases(207, 60, |rng| {
+        let rows = 1 + rng.gen_range(40);
+        let cols = odd_width(rng, 200);
+        let m = BitMatrix::random(rows, cols, Layout::RowMajor, rng);
+        let f = FsbMatrix::from_bitmatrix(&m);
+        let back = f.to_bitmatrix();
+        for _ in 0..20 {
+            let r = rng.gen_range(rows);
+            let c = rng.gen_range(cols);
+            assert_eq!(m.get(r, c), back.get(r, c), "({r},{c}) of {rows}x{cols}");
+        }
+    });
+}
+
+#[test]
+fn fsb_padding_is_invisible_to_eq2() {
+    // an FSB round-trip must never change a BMM result, including at
+    // K widths that leave a partially-filled tail word
+    run_cases(208, 40, |rng| {
+        let m = 8 * (1 + rng.gen_range(3));
+        let k = odd_width(rng, 300);
+        let a = BitMatrix::random(m, k, Layout::RowMajor, rng);
+        let b = BitMatrix::random(k, m, Layout::ColMajor, rng);
+        let a2 = FsbMatrix::from_bitmatrix(&a).to_bitmatrix();
+        let b2 = FsbMatrix::from_bitmatrix(&b).to_bitmatrix();
+        for r in 0..m {
+            for c in 0..m {
+                assert_eq!(
+                    pack::pm1_dot(a.line(r), b.line(c), k),
+                    pack::pm1_dot(a2.line(r), b2.line(c), k),
+                    "entry ({r},{c}) at k={k}"
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,269 @@
+//! Engine acceptance tests: planner-vs-cost-model agreement on the six
+//! Table-5 models, plan-cache JSON round-trips, executor equivalence
+//! with the naive forward path, and end-to-end serving through
+//! `coordinator::server` backed by the engine.
+
+use std::time::Duration;
+
+use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
+use tcbnn::engine::{EngineModel, ModelPlan, PlanCache, Planner};
+use tcbnn::nn::cost::{layer_secs, model_cost};
+use tcbnn::nn::forward::{forward, random_weights};
+use tcbnn::nn::layer::{Dims, LayerSpec};
+use tcbnn::nn::model::{all_models, mnist_mlp};
+use tcbnn::nn::{ModelDef, ResidualMode, Scheme};
+use tcbnn::sim::{Engine, RTX2080, RTX2080TI};
+use tcbnn::util::Rng;
+
+/// Acceptance: for each layer of the six Table-5 models the planner
+/// must pick exactly the scheme `nn::cost` ranks cheapest.
+#[test]
+fn planner_picks_cost_model_winner_per_layer() {
+    for gpu in [&RTX2080TI, &RTX2080] {
+        let engine = Engine::new(gpu);
+        let planner = Planner::new(gpu);
+        for m in all_models() {
+            for batch in [8usize, 128] {
+                let plan = planner.plan(&m, batch);
+                let mut dims = m.input;
+                for (li, l) in m.layers.iter().enumerate() {
+                    // brute-force the cheapest scheme with the cost model
+                    let mut best = Scheme::all()[0];
+                    let mut best_secs = f64::INFINITY;
+                    for s in Scheme::all() {
+                        let secs = layer_secs(
+                            &engine,
+                            s,
+                            l,
+                            dims,
+                            batch,
+                            ResidualMode::Full,
+                            m.residual_blocks > 0,
+                        );
+                        if secs < best_secs {
+                            best = s;
+                            best_secs = secs;
+                        }
+                    }
+                    assert_eq!(
+                        plan.layers[li].scheme,
+                        best,
+                        "{} layer {li} ({}) on {} at batch {batch}",
+                        m.name,
+                        l.tag(),
+                        gpu.name
+                    );
+                    assert!((plan.layers[li].secs - best_secs).abs() <= 1e-18);
+                    dims = dims.after(l);
+                }
+            }
+        }
+    }
+}
+
+/// The refactored per-layer costing must reproduce `model_cost` exactly
+/// (same traces, same totals) — the planner and the paper tables stay
+/// on one source of truth.
+#[test]
+fn layer_costs_sum_to_model_cost() {
+    let gpu = &RTX2080TI;
+    let engine = Engine::new(gpu);
+    for m in all_models() {
+        for scheme in Scheme::all() {
+            let want = model_cost(&m, 8, gpu, scheme, ResidualMode::Full, true);
+            let sync = gpu.secs(gpu.coop_sync_cycles);
+            let mut dims = m.input;
+            let mut total = gpu.launch_overhead_s;
+            for l in &m.layers {
+                total += layer_secs(
+                    &engine,
+                    scheme,
+                    l,
+                    dims,
+                    8,
+                    ResidualMode::Full,
+                    m.residual_blocks > 0,
+                ) + sync;
+                dims = dims.after(l);
+            }
+            let rel = (total - want.total_secs).abs() / want.total_secs;
+            assert!(rel < 1e-12, "{} {}: rel err {rel}", m.name, scheme.name());
+        }
+    }
+}
+
+/// Acceptance: a ModelPlan round-trips through the JSON plan cache for
+/// every Table-5 model.
+#[test]
+fn plans_roundtrip_through_json_and_cache() {
+    let planner = Planner::new(&RTX2080TI);
+    let dir = std::env::temp_dir()
+        .join(format!("tcbnn_engine_it_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = PlanCache::open(&dir).unwrap();
+    let mut planned = 0u64;
+    for m in all_models() {
+        let plan = planner.plan(&m, 32);
+        // plain JSON round-trip
+        let back = ModelPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan, "{} JSON round-trip", m.name);
+        // through the on-disk cache
+        let first = cache.get_or_plan(&planner, &m, 32);
+        assert_eq!(first, plan, "{} fresh plan", m.name);
+        let second = cache.get_or_plan(&planner, &m, 32);
+        assert_eq!(second, plan, "{} cached plan", m.name);
+        planned += 1;
+    }
+    assert_eq!(cache.misses(), planned);
+    assert_eq!(cache.hits(), planned);
+}
+
+fn cifar_lite() -> ModelDef {
+    ModelDef {
+        name: "cifar-lite",
+        dataset: "synthetic",
+        input: Dims { hw: 16, feat: 3 },
+        classes: 10,
+        layers: vec![
+            LayerSpec::FirstConv { c: 3, o: 32, k: 3, stride: 1, pad: 1 },
+            LayerSpec::BinConv {
+                c: 32,
+                o: 64,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                pool: true,
+                residual: false,
+            },
+            LayerSpec::BinConv {
+                c: 64,
+                o: 64,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                pool: true,
+                residual: false,
+            },
+            LayerSpec::BinFc { d_in: 4 * 4 * 64, d_out: 128 },
+            LayerSpec::FinalFc { d_in: 128, d_out: 10 },
+        ],
+        residual_blocks: 0,
+    }
+}
+
+/// The arena executor must be bit-identical to the naive nn::forward
+/// path on a conv model, across batch sizes on one arena.  The naive
+/// path only accepts multiple-of-8 batches (its conv tiles rows in
+/// blocks of 8), so odd batches are checked against the batch-8 run's
+/// row prefix (rows are independent in both paths).
+#[test]
+fn engine_executor_matches_naive_forward() {
+    let m = cifar_lite();
+    let mut rng = Rng::new(2024);
+    let weights = random_weights(&m, &mut rng);
+    let plan = Planner::new(&RTX2080TI).plan(&m, 8);
+    let mut exec =
+        tcbnn::engine::EngineExecutor::new(m.clone(), &weights, plan).unwrap();
+    let x8: Vec<f32> = (0..8 * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
+    let want8 = forward(&m, &weights, &x8, 8);
+    let got8 = exec.forward(&x8, 8).to_vec();
+    assert_eq!(got8, want8, "batch 8");
+    for batch in [5usize, 1] {
+        let x = x8[..batch * m.input.flat()].to_vec();
+        let got = exec.forward(&x, batch);
+        assert_eq!(got, &want8[..batch * 10], "batch {batch} vs batch-8 prefix");
+    }
+}
+
+/// Acceptance: a Table-5 model served end-to-end through
+/// `coordinator::server` backed by the engine, with engine images/sec
+/// visible through the metrics.
+#[test]
+fn table5_model_served_through_coordinator() {
+    let m = mnist_mlp();
+    let mut rng = Rng::new(7);
+    let weights = random_weights(&m, &mut rng);
+
+    // direct executor pass for ground truth
+    let planner = Planner::new(&RTX2080TI);
+    let mut direct =
+        EngineModel::new(&planner, &m, &weights, vec![8, 32], None).unwrap();
+    let n = 48usize;
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..784).map(|_| rng.next_f32() - 0.5).collect())
+        .collect();
+    let mut want = Vec::new();
+    for x in &inputs {
+        // batch-1 padded to bucket 8 by replicating the row, like the
+        // batcher does
+        let mut padded = Vec::with_capacity(8 * 784);
+        for _ in 0..8 {
+            padded.extend_from_slice(x);
+        }
+        let out = direct.run_batch(&padded, 8).unwrap();
+        want.push(out[..10].to_vec());
+    }
+
+    // now through the full serving stack
+    let m2 = m.clone();
+    let srv = InferenceServer::start(
+        ServerConfig { max_wait: Duration::from_millis(1), queue_capacity: 4096 },
+        move || {
+            let planner = Planner::new(&RTX2080TI);
+            Ok(Box::new(EngineModel::new(
+                &planner,
+                &m2,
+                &weights,
+                vec![8, 32],
+                None,
+            )?) as Box<dyn BatchModel>)
+        },
+    );
+    let resps = srv.submit_all(inputs);
+    assert_eq!(resps.len(), n);
+    for (i, r) in resps.iter().enumerate() {
+        assert_eq!(r.logits, want[i], "request {i} logits");
+    }
+    assert_eq!(srv.metrics.completed(), n as u64);
+    assert!(srv.metrics.throughput_fps() > 0.0);
+}
+
+/// Engine metrics surface images/sec from inside the served model.
+#[test]
+fn engine_metrics_visible_through_server() {
+    let m = mnist_mlp();
+    let mut rng = Rng::new(9);
+    let weights = random_weights(&m, &mut rng);
+    let planner = Planner::new(&RTX2080TI);
+    let em = EngineModel::new(&planner, &m, &weights, vec![8, 32], None).unwrap();
+    let engine_metrics = em.metrics_handle();
+    let mut slot = Some(em);
+    let srv = InferenceServer::start(ServerConfig::default(), move || {
+        Ok(Box::new(slot.take().expect("single factory call")) as Box<dyn BatchModel>)
+    });
+    let inputs: Vec<Vec<f32>> =
+        (0..32).map(|i| vec![(i as f32) / 32.0 - 0.5; 784]).collect();
+    let _ = srv.submit_all(inputs);
+    assert!(engine_metrics.engine_rows() >= 32);
+    assert!(engine_metrics.engine_images_per_sec() > 0.0);
+    assert!(engine_metrics.report().contains("engine="));
+}
+
+/// The executor arena never grows after warmup — the zero-allocation
+/// invariant the bench reports on.
+#[test]
+fn arena_stays_constant_across_requests() {
+    let m = cifar_lite();
+    let mut rng = Rng::new(55);
+    let weights = random_weights(&m, &mut rng);
+    let plan = Planner::new(&RTX2080TI).plan(&m, 32);
+    let mut exec =
+        tcbnn::engine::EngineExecutor::new(m.clone(), &weights, plan).unwrap();
+    let x: Vec<f32> = (0..32 * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
+    let _ = exec.forward(&x, 32);
+    let watermark = exec.arena_bytes();
+    for _ in 0..5 {
+        let _ = exec.forward(&x, 32);
+        assert_eq!(exec.arena_bytes(), watermark);
+    }
+}

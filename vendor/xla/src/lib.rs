@@ -1,0 +1,210 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The real crate links the XLA runtime, which is unavailable in this
+//! offline build environment.  This stub keeps the `runtime::executor`
+//! module compiling: every entry point that would touch PJRT returns a
+//! descriptive error at *runtime*, and all code paths that need it are
+//! already gated behind artifact-presence checks (tests skip when
+//! `artifacts/manifest.txt` is absent).  Host-side `Literal` containers
+//! are implemented for real so data-marshalling code can be exercised.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type matching the shape of the real bindings' error.
+#[derive(Clone, Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>(what: &str) -> Result<T, XlaError> {
+    Err(XlaError(format!(
+        "{what}: PJRT runtime unavailable in this offline build \
+         (the `xla` crate is stubbed; see vendor/xla)"
+    )))
+}
+
+/// Element types used by the tcbnn artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    U32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Conversion from little-endian bytes for the supported host types.
+pub trait NativeType: Sized + Copy {
+    const TYPE: ElementType;
+    fn from_le(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TYPE: ElementType = ElementType::F32;
+    fn from_le(b: [u8; 4]) -> f32 {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for u32 {
+    const TYPE: ElementType = ElementType::U32;
+    fn from_le(b: [u8; 4]) -> u32 {
+        u32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TYPE: ElementType = ElementType::S32;
+    fn from_le(b: [u8; 4]) -> i32 {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// A host-side literal: dtype + shape + raw little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    pub ty: ElementType,
+    pub dims: Vec<usize>,
+    pub bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal, XlaError> {
+        let want = dims.iter().product::<usize>() * ty.byte_size();
+        if want != data.len() {
+            return Err(XlaError(format!(
+                "literal shape {dims:?} needs {want} bytes, got {}",
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        if T::TYPE != self.ty {
+            return Err(XlaError(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TYPE
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Unpack a tuple literal.  The stub never produces tuples (nothing
+    /// executes), so this only ever reports the runtime's absence.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module handle (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation handle (opaque in the stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (opaque in the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (opaque in the stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle.  `cpu()` fails in the stub, so nothing
+/// downstream of it can ever be reached.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let xs: Vec<f32> = vec![1.0, -2.5, 3.25];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes)
+                .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        assert!(lit.to_vec::<u32>().is_err());
+    }
+
+    #[test]
+    fn runtime_paths_report_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[4],
+            &[0u8; 8]
+        )
+        .is_err());
+    }
+}
