@@ -4,6 +4,10 @@
 //! at batch 32 on multi-core hosts).
 //!
 //!   cargo bench --bench bench_engine
+//!
+//! The machine-readable successor of this harness is `bench_kernels`
+//! (img/s + GB/s JSON per model x scheme x batch, fastpath kernel
+//! speedups, and the CI regression gate) — see docs/BENCH.md.
 
 use tcbnn::engine::{EngineExecutor, PlanCache, Planner};
 use tcbnn::nn::forward::{forward, random_weights};

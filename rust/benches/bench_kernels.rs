@@ -1,0 +1,421 @@
+//! Bench: the kernel/model throughput harness behind the CI regression
+//! gate.  Measures img/s and GB/s per (model x scheme x batch) on this
+//! machine, plus fastpath-vs-scalar kernel speedups on ResNet-18 block
+//! shapes, and emits a machine-readable JSON document
+//! (`BENCH_PR2.json`) that CI diffs against `benches/baseline.json`.
+//!
+//!   cargo bench --bench bench_kernels -- \
+//!       [--quick]                    # CI settings (short measurements)
+//!       [--out BENCH_PR2.json]      # where to write the JSON document
+//!       [--check benches/baseline.json]   # regression gate (exit 1)
+//!       [--write-baseline benches/baseline.json]  # refresh baseline
+//!
+//! Absolute img/s is machine-dependent, so the gate runs on *relative*
+//! throughput: every scheme is normalized against an in-run reference
+//! (the naive forward for conv models, the scalar engine for the MLP,
+//! the best scalar scheme for kernel shapes).  See docs/BENCH.md.
+
+use tcbnn::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
+use tcbnn::engine::json::Value;
+use tcbnn::engine::{EngineExecutor, Planner};
+use tcbnn::kernels::bconv::btc::BconvDesign1;
+use tcbnn::kernels::bconv::bstc::BstcBconv;
+use tcbnn::kernels::bconv::{BconvProblem, BconvScheme};
+use tcbnn::kernels::bmm::btc::{Design1, Design3};
+use tcbnn::kernels::bmm::{BmmProblem, BmmScheme};
+use tcbnn::kernels::fastpath;
+use tcbnn::nn::forward::{forward, random_weights};
+use tcbnn::nn::layer::{Dims, LayerSpec};
+use tcbnn::nn::model::mnist_mlp;
+use tcbnn::nn::{ModelDef, Scheme};
+use tcbnn::sim::RTX2080TI;
+use tcbnn::util::bench::Bencher;
+use tcbnn::util::cli::Args;
+use tcbnn::util::threadpool::default_threads;
+use tcbnn::util::Rng;
+
+/// One measured cell of the model x scheme x batch grid.
+struct Entry {
+    name: String,
+    model: String,
+    scheme: String,
+    batch: usize,
+    img_s: f64,
+    gb_s: f64,
+}
+
+fn cifar_lite() -> ModelDef {
+    ModelDef {
+        name: "cifar-lite",
+        dataset: "synthetic",
+        input: Dims { hw: 16, feat: 3 },
+        classes: 10,
+        layers: vec![
+            LayerSpec::FirstConv { c: 3, o: 32, k: 3, stride: 1, pad: 1 },
+            LayerSpec::BinConv {
+                c: 32,
+                o: 64,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                pool: true,
+                residual: false,
+            },
+            LayerSpec::BinConv {
+                c: 64,
+                o: 64,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                pool: true,
+                residual: false,
+            },
+            LayerSpec::BinFc { d_in: 4 * 4 * 64, d_out: 128 },
+            LayerSpec::FinalFc { d_in: 128, d_out: 10 },
+        ],
+        residual_blocks: 0,
+    }
+}
+
+/// Streamed bytes per image for the GB/s column: fp input + packed
+/// weights (re-read each batch).
+fn bytes_per_img(m: &ModelDef) -> f64 {
+    (m.input.flat() * 4) as f64 + m.weight_bits() as f64 / 8.0
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let out_path = args.get_or("out", "BENCH_PR2.json");
+    let b = if quick { Bencher::quick() } else { Bencher::from_env() };
+    let threads = default_threads();
+    let planner = Planner::new(&RTX2080TI);
+    let batches: &[usize] = if quick { &[8] } else { &[8, 32] };
+
+    let mut entries: Vec<Entry> = Vec::new();
+    let mut ratios: Vec<(String, f64)> = Vec::new();
+
+    // ---- model x scheme x batch: executed img/s on this machine ----
+    for model in [mnist_mlp(), cifar_lite()] {
+        let mut rng = Rng::new(99);
+        let weights = random_weights(&model, &mut rng);
+        let bpi = bytes_per_img(&model);
+        for &batch in batches {
+            let x: Vec<f32> = (0..batch * model.input.flat())
+                .map(|_| rng.next_f32() - 0.5)
+                .collect();
+            let has_naive =
+                matches!(model.layers.first(), Some(LayerSpec::FirstConv { .. }));
+
+            let mut cell = |scheme: &str, img_s: f64| {
+                entries.push(Entry {
+                    name: format!("model/{}/{}/b{batch}", model.name, scheme),
+                    model: model.name.to_string(),
+                    scheme: scheme.to_string(),
+                    batch,
+                    img_s,
+                    gb_s: img_s * bpi / 1e9,
+                });
+                img_s
+            };
+
+            let naive_fps = if has_naive {
+                let r = b.bench(
+                    &format!("naive/{}/b{batch}", model.name),
+                    batch as f64,
+                    || {
+                        std::hint::black_box(forward(&model, &weights, &x, batch));
+                    },
+                );
+                Some(cell("naive", r.throughput()))
+            } else {
+                None
+            };
+
+            let mut engine = EngineExecutor::new(
+                model.clone(),
+                &weights,
+                planner.plan(&model, batch),
+            )
+            .expect("scalar engine executor");
+            let r = b.bench(
+                &format!("engine/{}/b{batch}", model.name),
+                batch as f64,
+                || {
+                    std::hint::black_box(engine.forward(&x, batch));
+                },
+            );
+            let engine_fps = cell("engine", r.throughput());
+
+            let mut fast = EngineExecutor::new(
+                model.clone(),
+                &weights,
+                planner.plan_fixed(&model, batch, Scheme::Fastpath),
+            )
+            .expect("fastpath engine executor");
+            let r = b.bench(
+                &format!("fastpath/{}/b{batch}", model.name),
+                batch as f64,
+                || {
+                    std::hint::black_box(fast.forward(&x, batch));
+                },
+            );
+            let fast_fps = cell("fastpath", r.throughput());
+
+            match naive_fps {
+                Some(n) => {
+                    ratios.push((
+                        format!("model/{}/b{batch}/engine_vs_naive", model.name),
+                        engine_fps / n,
+                    ));
+                    ratios.push((
+                        format!("model/{}/b{batch}/fastpath_vs_naive", model.name),
+                        fast_fps / n,
+                    ));
+                }
+                None => ratios.push((
+                    format!("model/{}/b{batch}/fastpath_vs_engine", model.name),
+                    fast_fps / engine_fps,
+                )),
+            }
+        }
+    }
+
+    // ---- ResNet-18 block shapes: fastpath vs best scalar scheme ----
+    // bconv at the paper's ResNet-18 interior stages (c=o=256 @14x14,
+    // c=o=512 @7x7, 3x3/s1/p1), batch 8
+    let mut rng = Rng::new(7);
+    let conv_shapes =
+        [("r18-bconv-c256-hw14", 14usize, 256usize), ("r18-bconv-c512-hw7", 7, 512)];
+    for (tag, hw, c) in conv_shapes {
+        let p = BconvProblem { hw, n: 8, c, o: c, k: 3, stride: 1, pad: 1 };
+        let input =
+            BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, &mut rng);
+        let filter =
+            BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, &mut rng);
+        let op_bytes = p.input_bytes() + p.filter_bytes() + (p.out_elems() * 4) as f64;
+
+        let mut best_scalar = 0.0f64;
+        for (sname, scheme) in [
+            ("bmma", &BconvDesign1 as &dyn BconvScheme),
+            ("sbnn64", &BstcBconv::new(64) as &dyn BconvScheme),
+        ] {
+            let r = b.bench(&format!("kernel/{tag}/{sname}"), p.n as f64, || {
+                std::hint::black_box(scheme.compute(&input, &filter, p));
+            });
+            let fps = r.throughput();
+            best_scalar = best_scalar.max(fps);
+            entries.push(Entry {
+                name: format!("kernel/{tag}/{sname}"),
+                model: tag.to_string(),
+                scheme: sname.to_string(),
+                batch: p.n,
+                img_s: fps,
+                gb_s: fps / p.n as f64 * op_bytes / 1e9,
+            });
+        }
+        let r = b.bench(&format!("kernel/{tag}/fastpath"), p.n as f64, || {
+            std::hint::black_box(fastpath::bconv::bconv(&input, &filter, p, threads));
+        });
+        let fast_fps = r.throughput();
+        entries.push(Entry {
+            name: format!("kernel/{tag}/fastpath"),
+            model: tag.to_string(),
+            scheme: "fastpath".to_string(),
+            batch: p.n,
+            img_s: fast_fps,
+            gb_s: fast_fps / p.n as f64 * op_bytes / 1e9,
+        });
+        ratios.push((
+            format!("kernel/{tag}/fastpath_vs_scalar"),
+            fast_fps / best_scalar,
+        ));
+    }
+
+    // bmm at the ResNet-18 FC shape (512 -> 512) over a 64-row batch
+    {
+        let tag = "r18-bmm-m64-n512-k512";
+        let p = BmmProblem { m: 64, n: 512, k: 512 };
+        let a = BitMatrix::random(p.m, p.k, Layout::RowMajor, &mut rng);
+        let bm = BitMatrix::random(p.k, p.n, Layout::ColMajor, &mut rng);
+        let op_bytes = p.operand_bytes() + (p.m * p.n * 4) as f64;
+        let mut best_scalar = 0.0f64;
+        for (sname, scheme) in [
+            ("bmma", &Design1 as &dyn BmmScheme),
+            ("bmmafmt", &Design3 as &dyn BmmScheme),
+        ] {
+            let r = b.bench(&format!("kernel/{tag}/{sname}"), p.m as f64, || {
+                std::hint::black_box(scheme.compute(&a, &bm));
+            });
+            let fps = r.throughput();
+            best_scalar = best_scalar.max(fps);
+            entries.push(Entry {
+                name: format!("kernel/{tag}/{sname}"),
+                model: tag.to_string(),
+                scheme: sname.to_string(),
+                batch: p.m,
+                img_s: fps,
+                gb_s: fps / p.m as f64 * op_bytes / 1e9,
+            });
+        }
+        let r = b.bench(&format!("kernel/{tag}/fastpath"), p.m as f64, || {
+            std::hint::black_box(fastpath::bmm::bmm(&a, &bm, threads));
+        });
+        let fast_fps = r.throughput();
+        entries.push(Entry {
+            name: format!("kernel/{tag}/fastpath"),
+            model: tag.to_string(),
+            scheme: "fastpath".to_string(),
+            batch: p.m,
+            img_s: fast_fps,
+            gb_s: fast_fps / p.m as f64 * op_bytes / 1e9,
+        });
+        ratios.push((
+            format!("kernel/{tag}/fastpath_vs_scalar"),
+            fast_fps / best_scalar,
+        ));
+    }
+
+    // ---- report + JSON ----
+    let min_kernel_speedup = ratios
+        .iter()
+        .filter(|(n, _)| n.starts_with("kernel/"))
+        .map(|(_, v)| *v)
+        .fold(f64::INFINITY, f64::min);
+    println!("\n{:<52} {:>12} {:>10}", "entry", "img/s", "GB/s");
+    for e in &entries {
+        println!("{:<52} {:>12.1} {:>10.3}", e.name, e.img_s, e.gb_s);
+    }
+    println!("\nratios (current run):");
+    for (n, v) in &ratios {
+        println!("  {n:<58} {v:.2}x");
+    }
+    println!(
+        "\nfastpath speedup over best scalar scheme on ResNet-18 shapes: \
+         >= {min_kernel_speedup:.2}x (target: >= 2x)"
+    );
+
+    let doc = Value::Obj(vec![
+        ("schema".to_string(), Value::Num(1.0)),
+        (
+            "mode".to_string(),
+            Value::Str(if quick { "quick" } else { "full" }.to_string()),
+        ),
+        ("threads".to_string(), Value::Num(threads as f64)),
+        (
+            "entries".to_string(),
+            Value::Arr(
+                entries
+                    .iter()
+                    .map(|e| {
+                        Value::Obj(vec![
+                            ("name".to_string(), Value::Str(e.name.clone())),
+                            ("model".to_string(), Value::Str(e.model.clone())),
+                            ("scheme".to_string(), Value::Str(e.scheme.clone())),
+                            ("batch".to_string(), Value::Num(e.batch as f64)),
+                            ("img_s".to_string(), Value::Num(e.img_s)),
+                            ("gb_s".to_string(), Value::Num(e.gb_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "ratios".to_string(),
+            Value::Arr(
+                ratios
+                    .iter()
+                    .map(|(n, v)| {
+                        Value::Obj(vec![
+                            ("name".to_string(), Value::Str(n.clone())),
+                            ("value".to_string(), Value::Num(*v)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(out_path, format!("{doc}\n")).expect("write bench JSON");
+    println!("\nwrote {out_path}");
+
+    if let Some(path) = args.get("write-baseline") {
+        // 0.9x headroom so run-to-run noise does not trip the gate
+        let base = Value::Obj(vec![
+            ("schema".to_string(), Value::Num(1.0)),
+            ("threshold".to_string(), Value::Num(0.8)),
+            (
+                "ratios".to_string(),
+                Value::Arr(
+                    ratios
+                        .iter()
+                        .map(|(n, v)| {
+                            Value::Obj(vec![
+                                ("name".to_string(), Value::Str(n.clone())),
+                                ("value".to_string(), Value::Num(v * 0.9)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(path, format!("{base}\n")).expect("write baseline");
+        println!("wrote baseline {path}");
+    }
+
+    if let Some(path) = args.get("check") {
+        match check_baseline(path, &ratios) {
+            Ok(n) => println!("regression gate: {n} baseline ratios OK"),
+            Err(msg) => {
+                eprintln!("regression gate FAILED:\n{msg}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// Compare current ratios against the committed baseline.  A scheme
+/// regresses when its relative throughput drops below
+/// `baseline * threshold` (default 0.8, i.e. a >20% regression).
+fn check_baseline(path: &str, ratios: &[(String, f64)]) -> Result<usize, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read baseline {path}: {e}"))?;
+    let doc = Value::parse(&text).map_err(|e| format!("baseline {path}: {e}"))?;
+    let threshold = doc
+        .get("threshold")
+        .and_then(Value::as_f64)
+        .unwrap_or(0.8);
+    let base = doc
+        .get("ratios")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| format!("baseline {path}: no \"ratios\" array"))?;
+    let mut failures = Vec::new();
+    let mut checked = 0usize;
+    for item in base {
+        let name = item
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or("baseline ratio without name")?;
+        let want = item
+            .get("value")
+            .and_then(Value::as_f64)
+            .ok_or("baseline ratio without value")?;
+        match ratios.iter().find(|(n, _)| n == name) {
+            None => failures.push(format!("  {name}: missing from this run")),
+            Some((_, got)) => {
+                checked += 1;
+                if *got < want * threshold {
+                    failures.push(format!(
+                        "  {name}: {got:.2}x < baseline {want:.2}x * {threshold} \
+                         (>{:.0}% regression)",
+                        (1.0 - threshold) * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    if failures.is_empty() {
+        Ok(checked)
+    } else {
+        Err(failures.join("\n"))
+    }
+}

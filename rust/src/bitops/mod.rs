@@ -12,7 +12,9 @@ pub mod bitmatrix;
 pub mod bittensor;
 pub mod fsb;
 pub mod pack;
+pub mod pack64;
 
 pub use bitmatrix::{BitMatrix, Layout};
 pub use bittensor::{BitTensor4, TensorLayout};
 pub use fsb::FsbMatrix;
+pub use pack64::BitMatrix64;

@@ -1,0 +1,217 @@
+//! u64-word repacking — the fastpath backend's native word size.
+//!
+//! `BitMatrix`/`FsbMatrix` pack along u32 words (the CUDA-facing unit:
+//! BMMA consumes 32-bit fragments).  A host CPU popcounts fastest on
+//! 64-bit words, so `kernels::fastpath` repacks lines into u64 before
+//! compute.  Repacking is a pure pairing: u64 word `w` of a line holds
+//! u32 words `2w` (low half) and `2w + 1` (high half), preserving the
+//! LSB-first element order — element `e` lives at u64 word `e/64`, bit
+//! `e%64`.  An odd u32 line width leaves the final high half zero,
+//! which Eq 2 ignores by construction (pad bits are 0 in both
+//! operands, so they XOR to 0 disagreements).
+
+use super::bitmatrix::BitMatrix;
+use super::fsb::FsbMatrix;
+
+/// u64 words needed to hold a line of `w32` u32 words.
+#[inline]
+pub fn words64(w32: usize) -> usize {
+    w32.div_ceil(2)
+}
+
+/// Repack one packed u32 line into u64 words.
+/// `dst.len()` must equal `words64(src.len())`.
+pub fn repack64_into(src: &[u32], dst: &mut [u64]) {
+    debug_assert_eq!(dst.len(), words64(src.len()));
+    let pairs = src.chunks_exact(2);
+    let rem = pairs.remainder();
+    for (d, pair) in dst.iter_mut().zip(pairs) {
+        *d = pair[0] as u64 | ((pair[1] as u64) << 32);
+    }
+    if let Some(&last) = rem.first() {
+        dst[src.len() / 2] = last as u64;
+    }
+}
+
+/// Inverse of [`repack64_into`]: split u64 words back into u32 words.
+/// `src.len()` must equal `words64(dst.len())`.
+pub fn unpack64_into(src: &[u64], dst: &mut [u32]) {
+    debug_assert_eq!(src.len(), words64(dst.len()));
+    for (w, d) in dst.iter_mut().enumerate() {
+        let v = src[w / 2];
+        *d = if w % 2 == 0 { v as u32 } else { (v >> 32) as u32 };
+    }
+}
+
+/// popc(a XOR b) over two u64-packed lines of equal word length, with a
+/// 4-way `chunks_exact` unroll the compiler autovectorizes.
+#[inline]
+pub fn xor_popc64(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    let mut acc = 0u32;
+    for (x, y) in ca.zip(cb) {
+        acc += (x[0] ^ y[0]).count_ones()
+            + (x[1] ^ y[1]).count_ones()
+            + (x[2] ^ y[2]).count_ones()
+            + (x[3] ^ y[3]).count_ones();
+    }
+    for (x, y) in ra.iter().zip(rb) {
+        acc += (x ^ y).count_ones();
+    }
+    acc
+}
+
+/// Eq 2 over u64-packed lines of logical length `n` bits.
+#[inline]
+pub fn pm1_dot64(a: &[u64], b: &[u64], n: usize) -> i32 {
+    n as i32 - 2 * xor_popc64(a, b) as i32
+}
+
+/// A bit matrix with lines repacked into u64 words — the fastpath
+/// operand form.  `rows`/`cols`/`layout` carry the same meaning as in
+/// [`BitMatrix`]; only the word size of a packed line changes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitMatrix64 {
+    pub rows: usize,
+    pub cols: usize,
+    pub layout: super::bitmatrix::Layout,
+    /// u64 words per packed line
+    pub words_per_line: usize,
+    pub data: Vec<u64>,
+}
+
+impl BitMatrix64 {
+    /// Repack a u32 bit matrix line-by-line into u64 words.
+    pub fn from_bitmatrix(m: &BitMatrix) -> BitMatrix64 {
+        let wpl = words64(m.words_per_line);
+        let lines = m.lines();
+        let mut data = vec![0u64; wpl * lines];
+        for l in 0..lines {
+            repack64_into(m.line(l), &mut data[l * wpl..(l + 1) * wpl]);
+        }
+        BitMatrix64 {
+            rows: m.rows,
+            cols: m.cols,
+            layout: m.layout,
+            words_per_line: wpl,
+            data,
+        }
+    }
+
+    /// Repack an FSB image.  The FSB tile order exists to fix the WMMA
+    /// stride at 128 on a Turing GPU — on the host it buys nothing, so
+    /// the image is first normalized back to plain packed lines.
+    pub fn from_fsb(f: &FsbMatrix) -> BitMatrix64 {
+        BitMatrix64::from_bitmatrix(&f.to_bitmatrix())
+    }
+
+    /// Inverse of `from_bitmatrix` (round-trip tested property).
+    pub fn to_bitmatrix(&self) -> BitMatrix {
+        let mut m = BitMatrix::zeros(self.rows, self.cols, self.layout);
+        let lines = m.lines();
+        for l in 0..lines {
+            unpack64_into(self.line(l), m.line_mut(l));
+        }
+        m
+    }
+
+    /// Number of packed lines (major dimension extent).
+    pub fn lines(&self) -> usize {
+        self.data.len() / self.words_per_line.max(1)
+    }
+
+    /// Packed u64 words of line `i`.
+    #[inline]
+    pub fn line(&self, i: usize) -> &[u64] {
+        let w = self.words_per_line;
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Bytes of packed storage.
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::bitmatrix::Layout;
+    use crate::bitops::pack;
+    use crate::util::proptest::run_cases;
+
+    #[test]
+    fn repack_preserves_every_bit() {
+        run_cases(61, 80, |rng| {
+            let n = 1 + rng.gen_range(300);
+            let xs = rng.pm1_vec(n);
+            let w32 = pack::pack_row(&xs);
+            let mut w64 = vec![0u64; words64(w32.len())];
+            repack64_into(&w32, &mut w64);
+            for (i, &x) in xs.iter().enumerate() {
+                let bit = (w64[i / 64] >> (i % 64)) & 1 == 1;
+                assert_eq!(bit, x >= 0.0, "bit {i} of {n}");
+            }
+            let mut back = vec![0u32; w32.len()];
+            unpack64_into(&w64, &mut back);
+            assert_eq!(back, w32);
+        });
+    }
+
+    #[test]
+    fn dot64_matches_dot32() {
+        run_cases(62, 80, |rng| {
+            let n = 1 + rng.gen_range(500);
+            let a = rng.pm1_vec(n);
+            let b = rng.pm1_vec(n);
+            let (pa, pb) = (pack::pack_row(&a), pack::pack_row(&b));
+            let mut a64 = vec![0u64; words64(pa.len())];
+            let mut b64 = vec![0u64; words64(pb.len())];
+            repack64_into(&pa, &mut a64);
+            repack64_into(&pb, &mut b64);
+            assert_eq!(pm1_dot64(&a64, &b64, n), pack::pm1_dot(&pa, &pb, n));
+        });
+    }
+
+    #[test]
+    fn bitmatrix_roundtrip_both_layouts() {
+        run_cases(63, 60, |rng| {
+            let rows = 1 + rng.gen_range(40);
+            let cols = 1 + rng.gen_range(200);
+            for layout in [Layout::RowMajor, Layout::ColMajor] {
+                let m = BitMatrix::random(rows, cols, layout, rng);
+                let m64 = BitMatrix64::from_bitmatrix(&m);
+                assert_eq!(m64.to_bitmatrix(), m);
+            }
+        });
+    }
+
+    #[test]
+    fn fsb_repack_matches_direct_repack() {
+        run_cases(64, 30, |rng| {
+            let m = BitMatrix::random(
+                1 + rng.gen_range(30),
+                1 + rng.gen_range(300),
+                Layout::RowMajor,
+                rng,
+            );
+            let via_fsb = BitMatrix64::from_fsb(&FsbMatrix::from_bitmatrix(&m));
+            assert_eq!(via_fsb, BitMatrix64::from_bitmatrix(&m));
+        });
+    }
+
+    #[test]
+    fn odd_word_width_leaves_high_half_zero() {
+        let mut rng = crate::util::Rng::new(65);
+        // 3 u32 words per line -> 2 u64 words, high half of the last zero
+        let m = BitMatrix::random(4, 96, Layout::RowMajor, &mut rng);
+        let m64 = BitMatrix64::from_bitmatrix(&m);
+        assert_eq!(m64.words_per_line, 2);
+        for l in 0..4 {
+            assert_eq!(m64.line(l)[1] >> 32, 0, "line {l} high half set");
+        }
+    }
+}

@@ -2,8 +2,9 @@
 //! touches, allocated once from the model shape at build time so the
 //! request hot path performs zero heap allocation.
 
+use crate::bitops::pack64::words64;
 use crate::nn::layer::LayerSpec;
-use crate::nn::ModelDef;
+use crate::nn::{ModelDef, Scheme};
 
 /// Words needed for an HWNC packed activation.
 fn bits_words(hw: usize, n: usize, c: usize) -> usize {
@@ -20,26 +21,46 @@ fn flat_words(n: usize, feat: usize) -> usize {
 /// * `bits_a` / `bits_b` — ping-pong packed activations.  Each is large
 ///   enough for the biggest intermediate in either representation
 ///   (HWNC bit tensor before pooling, or row-packed flat rows).
-/// * `ints` — i32 staging for the convolution accumulator pass.
+/// * `ints` — i32 staging for the convolution accumulator pass (and
+///   the fastpath FC dot staging, when a plan routes FC layers there).
+/// * `words64` — u64 operand scratch for fastpath layers (im2row image
+///   for bconv, repacked input rows for FC); empty unless the plan
+///   selects `Scheme::Fastpath` somewhere.
 /// * `logits` — the classifier output.
 pub struct Arena {
     pub bits_a: Vec<u32>,
     pub bits_b: Vec<u32>,
     pub ints: Vec<i32>,
+    pub words64: Vec<u64>,
     pub logits: Vec<f32>,
 }
 
 impl Arena {
-    /// Size every buffer for `model` at batch capacity `batch`.
+    /// Size every buffer for `model` at batch capacity `batch`, with no
+    /// fastpath layers (no u64 scratch).
     pub fn for_model(model: &ModelDef, batch: usize) -> Arena {
+        Arena::for_model_with_schemes(model, batch, &[])
+    }
+
+    /// Size every buffer for `model` at batch capacity `batch`.
+    /// `schemes` is the plan's per-layer scheme choice (missing entries
+    /// mean "not fastpath"); layers routed to `Scheme::Fastpath` add
+    /// their u64 operand scratch and FC dot staging to the arena.
+    pub fn for_model_with_schemes(
+        model: &ModelDef,
+        batch: usize,
+        schemes: &[Scheme],
+    ) -> Arena {
         let mut dims = model.input;
         let mut max_words = 0usize;
         let mut max_ints = 0usize;
+        let mut max_w64 = 0usize;
         // the first binarization of a flat fp input also lands in a buffer
         if dims.hw == 0 {
             max_words = max_words.max(flat_words(batch, dims.feat));
         }
-        for l in &model.layers {
+        for (li, l) in model.layers.iter().enumerate() {
+            let fast = schemes.get(li) == Some(&Scheme::Fastpath);
             match *l {
                 LayerSpec::FirstConv { o, k, stride, pad, .. } => {
                     let ohw = (dims.hw + 2 * pad - k) / stride + 1;
@@ -50,14 +71,27 @@ impl Arena {
                     let opre = (dims.hw + 2 * pad - k) / stride + 1;
                     max_words = max_words.max(bits_words(opre, batch, o));
                     max_ints = max_ints.max(opre * opre * batch * o);
+                    if fast {
+                        let tap_words = words64(dims.feat.div_ceil(32));
+                        max_w64 = max_w64
+                            .max(opre * opre * batch * k * k * tap_words);
+                    }
                 }
                 LayerSpec::BinFc { d_in, d_out } => {
                     // flatten staging + the packed output rows
                     max_words = max_words.max(flat_words(batch, d_in));
                     max_words = max_words.max(flat_words(batch, d_out));
+                    if fast {
+                        max_w64 = max_w64.max(batch * words64(d_in.div_ceil(32)));
+                        max_ints = max_ints.max(batch * d_out);
+                    }
                 }
-                LayerSpec::FinalFc { d_in, .. } => {
+                LayerSpec::FinalFc { d_in, d_out } => {
                     max_words = max_words.max(flat_words(batch, d_in));
+                    if fast {
+                        max_w64 = max_w64.max(batch * words64(d_in.div_ceil(32)));
+                        max_ints = max_ints.max(batch * d_out);
+                    }
                 }
                 LayerSpec::Pool => {
                     max_words = max_words.max(bits_words(dims.hw, batch, dims.feat));
@@ -69,6 +103,7 @@ impl Arena {
             bits_a: vec![0u32; max_words],
             bits_b: vec![0u32; max_words],
             ints: vec![0i32; max_ints],
+            words64: vec![0u64; max_w64],
             logits: vec![0f32; batch * model.classes],
         }
     }
@@ -76,7 +111,10 @@ impl Arena {
     /// Total allocated bytes — the arena's high-water mark.  Constant
     /// after construction; benches assert it never grows across requests.
     pub fn bytes(&self) -> usize {
-        self.bits_a.len() * 4 + self.bits_b.len() * 4 + self.ints.len() * 4
+        self.bits_a.len() * 4
+            + self.bits_b.len() * 4
+            + self.ints.len() * 4
+            + self.words64.len() * 8
             + self.logits.len() * 4
     }
 }
@@ -103,6 +141,20 @@ mod tests {
         assert!(a.bits_a.len() >= 32 * 32 * 8 * (128 / 32));
         assert!(a.ints.len() >= 32 * 32 * 8 * 128);
         assert_eq!(a.bits_a.len(), a.bits_b.len());
+    }
+
+    #[test]
+    fn fastpath_schemes_add_u64_scratch() {
+        let m = mnist_mlp();
+        let schemes = vec![Scheme::Fastpath; m.layers.len()];
+        let a = Arena::for_model_with_schemes(&m, 8, &schemes);
+        // repacked input rows for the widest FC + dot staging
+        assert!(!a.words64.is_empty());
+        assert!(a.ints.len() >= 8 * 1024);
+        // without fastpath layers the scratch stays empty
+        let plain = Arena::for_model(&m, 8);
+        assert!(plain.words64.is_empty());
+        assert!(plain.ints.is_empty());
     }
 
     #[test]

@@ -38,20 +38,36 @@ impl EngineModel {
         buckets: Vec<usize>,
         cache: Option<&PlanCache>,
     ) -> Result<EngineModel> {
-        ensure!(!buckets.is_empty(), "need at least one batch bucket");
-        ensure!(
-            buckets.windows(2).all(|w| w[0] < w[1]),
-            "buckets must be ascending"
-        );
-        ensure!(
-            buckets.iter().all(|b| b % 8 == 0),
-            "buckets must be multiples of 8 (bit-tensor-core batch unit)"
-        );
-        let max_bucket = *buckets.last().unwrap();
+        let max_bucket = validate_buckets(&buckets)?;
         let plan = match cache {
             Some(c) => c.get_or_plan(planner, model, max_bucket),
             None => planner.plan(model, max_bucket),
         };
+        EngineModel::from_plan(model, weights, buckets, plan)
+    }
+
+    /// Build with every layer pinned to `scheme` — e.g.
+    /// `Scheme::Fastpath` to serve the blocked-u64 host backend on a
+    /// machine without a Turing GPU.
+    pub fn new_fixed(
+        planner: &Planner,
+        model: &ModelDef,
+        weights: &ModelWeights,
+        buckets: Vec<usize>,
+        scheme: crate::nn::Scheme,
+    ) -> Result<EngineModel> {
+        let max_bucket = validate_buckets(&buckets)?;
+        let plan = planner.plan_fixed(model, max_bucket, scheme);
+        EngineModel::from_plan(model, weights, buckets, plan)
+    }
+
+    /// Build from an explicit plan (sized for the largest bucket).
+    fn from_plan(
+        model: &ModelDef,
+        weights: &ModelWeights,
+        buckets: Vec<usize>,
+        plan: super::plan::ModelPlan,
+    ) -> Result<EngineModel> {
         let row_elems = model.input.flat();
         let out_elems = model.classes;
         let exec = EngineExecutor::new(model.clone(), weights, plan)?;
@@ -77,6 +93,21 @@ impl EngineModel {
     pub fn arena_bytes(&self) -> usize {
         self.exec.arena_bytes()
     }
+}
+
+/// Shared bucket invariants; returns the largest bucket (which sizes
+/// the arena).
+fn validate_buckets(buckets: &[usize]) -> Result<usize> {
+    ensure!(!buckets.is_empty(), "need at least one batch bucket");
+    ensure!(
+        buckets.windows(2).all(|w| w[0] < w[1]),
+        "buckets must be ascending"
+    );
+    ensure!(
+        buckets.iter().all(|b| b % 8 == 0),
+        "buckets must be multiples of 8 (bit-tensor-core batch unit)"
+    );
+    Ok(*buckets.last().unwrap())
 }
 
 impl BatchModel for EngineModel {

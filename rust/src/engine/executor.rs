@@ -19,16 +19,21 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::bitops::pack;
+use crate::bitops::pack64::{self, BitMatrix64};
 use crate::bitops::BitTensor4;
+use crate::kernels::bconv::BconvProblem;
+use crate::kernels::fastpath::{self, FastConvFilter};
 use crate::nn::forward::{LayerWeights, ModelWeights};
 use crate::nn::layer::LayerSpec;
-use crate::nn::ModelDef;
+use crate::nn::{ModelDef, Scheme};
 use crate::util::threadpool::scoped_chunks;
 
 use super::arena::Arena;
 use super::plan::ModelPlan;
 
-/// Execution-friendly per-layer weights.
+/// Execution-friendly per-layer weights.  Layers the plan routes to
+/// `Scheme::Fastpath` additionally carry their u64-repacked weight
+/// image (`fast`/`w64`), prepared once at build time.
 enum PreparedLayer {
     FirstConv {
         /// +/-1 filter transposed to one contiguous row per output
@@ -39,15 +44,18 @@ enum PreparedLayer {
     BinConv {
         filter: BitTensor4,
         thresh: Vec<f32>,
+        fast: Option<FastConvFilter>,
     },
     BinFc {
         w: crate::bitops::BitMatrix,
         thresh: Vec<f32>,
+        w64: Option<BitMatrix64>,
     },
     FinalFc {
         w: crate::bitops::BitMatrix,
         gamma: Vec<f32>,
         beta: Vec<f32>,
+        w64: Option<BitMatrix64>,
     },
     Pool,
 }
@@ -102,9 +110,10 @@ impl EngineExecutor {
         } else {
             bail!("model must end with a FinalFc classifier head");
         }
-        let prepared = prepare_weights(&model, weights)?;
+        let prepared = prepare_weights(&model, weights, &plan)?;
         let batch_cap = plan.batch;
-        let arena = Arena::for_model(&model, batch_cap);
+        let schemes: Vec<Scheme> = plan.layers.iter().map(|l| l.scheme).collect();
+        let arena = Arena::for_model_with_schemes(&model, batch_cap, &schemes);
         Ok(EngineExecutor {
             model,
             plan,
@@ -151,7 +160,7 @@ impl EngineExecutor {
         for li in 0..n_layers {
             let layer = self.model.layers[li].clone();
             let pw = &self.prepared[li];
-            let Arena { bits_a, bits_b, ints, logits } = &mut self.arena;
+            let Arena { bits_a, bits_b, ints, words64, logits } = &mut self.arena;
             let (src, dst): (&mut Vec<u32>, &mut Vec<u32>) = if cur_in_a {
                 (bits_a, bits_b)
             } else {
@@ -192,7 +201,7 @@ impl EngineExecutor {
                 }
                 (
                     LayerSpec::BinConv { o, k, stride, pad, pool, .. },
-                    PreparedLayer::BinConv { filter, thresh },
+                    PreparedLayer::BinConv { filter, thresh, fast },
                 ) => {
                     let Repr::Bits { hw, c } = repr else {
                         panic!("BinConv needs packed HWNC input");
@@ -214,14 +223,38 @@ impl EngineExecutor {
                     };
                     let int_chunk = ohw * batch * o;
                     let t1 = par_threads(threads, ohw * int_chunk);
-                    bin_conv_ints(
-                        &src[..hw * hw * batch * wi],
-                        &mut ints[..ohw * int_chunk],
-                        int_chunk,
-                        t1,
-                        p,
-                        filter,
-                    );
+                    if let Some(ff) = fast {
+                        // fastpath: bit-im2row + blocked u64 BMM into the
+                        // same i32 staging layout (exact integer math, so
+                        // the packed bits below are identical either way)
+                        let pb = BconvProblem {
+                            hw,
+                            n: batch,
+                            c,
+                            o: *o,
+                            k: *k,
+                            stride: *stride,
+                            pad: *pad,
+                        };
+                        let rows = ohw * ohw * batch;
+                        fastpath::bconv::bconv_into(
+                            &src[..hw * hw * batch * wi],
+                            pb,
+                            ff,
+                            &mut words64[..rows * ff.row_words],
+                            &mut ints[..ohw * int_chunk],
+                            t1,
+                        );
+                    } else {
+                        bin_conv_ints(
+                            &src[..hw * hw * batch * wi],
+                            &mut ints[..ohw * int_chunk],
+                            int_chunk,
+                            t1,
+                            p,
+                            filter,
+                        );
+                    }
                     let bit_chunk = ohw * batch * wio;
                     pack_conv_ints(
                         &ints[..ohw * int_chunk],
@@ -269,7 +302,10 @@ impl EngineExecutor {
                     repr = Repr::Bits { hw: poh, c };
                     cur_in_a = !cur_in_a;
                 }
-                (LayerSpec::BinFc { d_in, d_out }, PreparedLayer::BinFc { w, thresh }) => {
+                (
+                    LayerSpec::BinFc { d_in, d_out },
+                    PreparedLayer::BinFc { w, thresh, w64 },
+                ) => {
                     // 1. materialize row-packed input bits in `dst`
                     let feat =
                         flatten_into(input, repr, batch, src, dst, *d_in, threads);
@@ -278,38 +314,78 @@ impl EngineExecutor {
                     let wpl_in = d_in.div_ceil(32);
                     let wpl_out = d_out.div_ceil(32);
                     let t = par_threads(threads, batch * d_out * wpl_in / 8);
-                    bin_fc_rows(
-                        &dst[..batch * wpl_in],
-                        &mut src[..batch * wpl_out],
-                        wpl_out,
-                        t,
-                        *d_in,
-                        *d_out,
-                        w,
-                        thresh,
-                    );
+                    if let Some(w64) = w64 {
+                        fc_dots_fast(
+                            &dst[..batch * wpl_in],
+                            w64,
+                            words64,
+                            &mut ints[..batch * d_out],
+                            batch,
+                            *d_in,
+                            *d_out,
+                            t,
+                        );
+                        pack_fc_ints(
+                            &ints[..batch * d_out],
+                            &mut src[..batch * wpl_out],
+                            wpl_out,
+                            t,
+                            *d_out,
+                            thresh,
+                        );
+                    } else {
+                        bin_fc_rows(
+                            &dst[..batch * wpl_in],
+                            &mut src[..batch * wpl_out],
+                            wpl_out,
+                            t,
+                            *d_in,
+                            *d_out,
+                            w,
+                            thresh,
+                        );
+                    }
                     repr = Repr::Flat { feat: *d_out };
                     // two hops: result is back in the original buffer
                 }
                 (
                     LayerSpec::FinalFc { d_in, d_out },
-                    PreparedLayer::FinalFc { w, gamma, beta },
+                    PreparedLayer::FinalFc { w, gamma, beta, w64 },
                 ) => {
                     let feat =
                         flatten_into(input, repr, batch, src, dst, *d_in, threads);
                     assert_eq!(feat, *d_in, "classifier input width");
                     let wpl_in = d_in.div_ceil(32);
                     let t = par_threads(threads, batch * d_out * wpl_in / 8);
-                    final_fc_rows(
-                        &dst[..batch * wpl_in],
-                        &mut logits[..batch * d_out],
-                        *d_out,
-                        t,
-                        *d_in,
-                        w,
-                        gamma,
-                        beta,
-                    );
+                    if let Some(w64) = w64 {
+                        fc_dots_fast(
+                            &dst[..batch * wpl_in],
+                            w64,
+                            words64,
+                            &mut ints[..batch * d_out],
+                            batch,
+                            *d_in,
+                            *d_out,
+                            t,
+                        );
+                        let seg = &ints[..batch * d_out];
+                        scoped_chunks(&mut logits[..batch * d_out], *d_out, t, |ni, row| {
+                            for (j, out) in row.iter_mut().enumerate() {
+                                *out = seg[ni * d_out + j] as f32 * gamma[j] + beta[j];
+                            }
+                        });
+                    } else {
+                        final_fc_rows(
+                            &dst[..batch * wpl_in],
+                            &mut logits[..batch * d_out],
+                            *d_out,
+                            t,
+                            *d_in,
+                            w,
+                            gamma,
+                            beta,
+                        );
+                    }
                     repr = Repr::Flat { feat: *d_out };
                 }
                 _ => panic!("layer/weight kind mismatch at layer {li}"),
@@ -329,10 +405,21 @@ fn par_threads(threads: usize, work_words: usize) -> usize {
     }
 }
 
-/// Convert `nn::forward::ModelWeights` into execution layouts.
-fn prepare_weights(model: &ModelDef, weights: &ModelWeights) -> Result<Vec<PreparedLayer>> {
+/// Convert `nn::forward::ModelWeights` into execution layouts.  Layers
+/// the plan routes to `Scheme::Fastpath` also get their u64 weight
+/// image prepared here, once, off the request path.
+fn prepare_weights(
+    model: &ModelDef,
+    weights: &ModelWeights,
+    plan: &ModelPlan,
+) -> Result<Vec<PreparedLayer>> {
     let mut out = Vec::with_capacity(model.layers.len());
     for (li, (l, w)) in model.layers.iter().zip(&weights.layers).enumerate() {
+        let fast = plan
+            .layers
+            .get(li)
+            .map(|lp| lp.scheme == Scheme::Fastpath)
+            .unwrap_or(false);
         out.push(match (l, w) {
             (
                 LayerSpec::FirstConv { c, o, k, .. },
@@ -363,7 +450,21 @@ fn prepare_weights(model: &ModelDef, weights: &ModelWeights) -> Result<Vec<Prepa
                     filter.dims
                 );
                 ensure!(thresh.len() == *o, "layer {li}: threshold table size");
-                PreparedLayer::BinConv { filter: filter.clone(), thresh: thresh.clone() }
+                if fast {
+                    // reject here, at build time, instead of panicking on
+                    // the first request inside the serving worker
+                    ensure!(
+                        k * k <= crate::kernels::fastpath::bconv::MAX_TAPS,
+                        "layer {li}: {k}x{k} filter exceeds the fastpath tap \
+                         limit ({} taps)",
+                        crate::kernels::fastpath::bconv::MAX_TAPS
+                    );
+                }
+                PreparedLayer::BinConv {
+                    fast: fast.then(|| FastConvFilter::prepare(filter)),
+                    filter: filter.clone(),
+                    thresh: thresh.clone(),
+                }
             }
             (LayerSpec::BinFc { d_in, d_out }, LayerWeights::BinFc { w, thresh }) => {
                 ensure!(
@@ -373,7 +474,11 @@ fn prepare_weights(model: &ModelDef, weights: &ModelWeights) -> Result<Vec<Prepa
                     w.cols
                 );
                 ensure!(thresh.len() == *d_out, "layer {li}: threshold table size");
-                PreparedLayer::BinFc { w: w.clone(), thresh: thresh.clone() }
+                PreparedLayer::BinFc {
+                    w64: fast.then(|| BitMatrix64::from_bitmatrix(w)),
+                    w: w.clone(),
+                    thresh: thresh.clone(),
+                }
             }
             (
                 LayerSpec::FinalFc { d_in, d_out },
@@ -388,6 +493,7 @@ fn prepare_weights(model: &ModelDef, weights: &ModelWeights) -> Result<Vec<Prepa
                     "layer {li}: bn table size"
                 );
                 PreparedLayer::FinalFc {
+                    w64: fast.then(|| BitMatrix64::from_bitmatrix(w)),
                     w: w.clone(),
                     gamma: gamma.clone(),
                     beta: beta.clone(),
@@ -678,6 +784,58 @@ fn flatten_into(
     }
 }
 
+/// Fastpath FC dot pass: repack the row-packed u32 input into the u64
+/// arena scratch, then run the blocked BMM against the prepared u64
+/// weights.  `ints` receives the Eq-2 values in `batch x d_out` layout
+/// — exactly what `bin_fc_rows`/`final_fc_rows` compute per entry.
+#[allow(clippy::too_many_arguments)]
+fn fc_dots_fast(
+    src: &[u32],
+    w64: &BitMatrix64,
+    scratch: &mut [u64],
+    ints: &mut [i32],
+    batch: usize,
+    d_in: usize,
+    d_out: usize,
+    threads: usize,
+) {
+    let wpl_in = d_in.div_ceil(32);
+    let w64in = pack64::words64(wpl_in);
+    debug_assert_eq!(w64.words_per_line, w64in, "weight repack width");
+    let rows = &mut scratch[..batch * w64in];
+    for (ni, row) in rows.chunks_exact_mut(w64in).enumerate() {
+        pack64::repack64_into(&src[ni * wpl_in..(ni + 1) * wpl_in], row);
+    }
+    fastpath::bmm::dot_lines(rows, &w64.data, w64in, batch, d_out, d_in, ints, threads);
+}
+
+/// Threshold + repack fastpath FC dots into packed output rows —
+/// bitwise the same rule as the tail of `bin_fc_rows`.
+fn pack_fc_ints(
+    ints: &[i32],
+    dst: &mut [u32],
+    wpl_out: usize,
+    threads: usize,
+    d_out: usize,
+    thresh: &[f32],
+) {
+    scoped_chunks(dst, wpl_out, threads, |ni, row| {
+        for (wo, out) in row.iter_mut().enumerate() {
+            let mut word = 0u32;
+            for bit in 0..32 {
+                let j = wo * 32 + bit;
+                if j >= d_out {
+                    break;
+                }
+                if (ints[ni * d_out + j] as f32) >= thresh[j] {
+                    word |= 1 << bit;
+                }
+            }
+            *out = word;
+        }
+    });
+}
+
 /// Binarized FC: per-row Eq-2 dots + threshold, packed output rows.
 #[allow(clippy::too_many_arguments)]
 fn bin_fc_rows(
@@ -811,6 +969,50 @@ mod tests {
             let got = exec.forward(&x, batch);
             assert_eq!(got, &want[..], "{}", m.name);
         }
+    }
+
+    #[test]
+    fn fastpath_plan_matches_naive_forward_bit_for_bit() {
+        for (m, seed) in [(conv_model(), 15u64), (pool_model(), 19u64)] {
+            let batch = 8;
+            let mut rng = Rng::new(seed);
+            let weights = random_weights(&m, &mut rng);
+            let plan =
+                Planner::new(&RTX2080TI).plan_fixed(&m, batch, Scheme::Fastpath);
+            let mut exec = EngineExecutor::new(m.clone(), &weights, plan).unwrap();
+            let x: Vec<f32> = (0..batch * m.input.flat())
+                .map(|_| rng.next_f32() - 0.5)
+                .collect();
+            let want = forward(&m, &weights, &x, batch);
+            assert_eq!(exec.forward(&x, batch), &want[..], "{}", m.name);
+            // the u64 scratch was sized at build time and never grows
+            let watermark = exec.arena_bytes();
+            let _ = exec.forward(&x, batch);
+            assert_eq!(exec.arena_bytes(), watermark);
+        }
+    }
+
+    #[test]
+    fn fastpath_mlp_matches_scalar_engine() {
+        let m = crate::nn::model::mnist_mlp();
+        let batch = 8;
+        let mut rng = Rng::new(23);
+        let weights = random_weights(&m, &mut rng);
+        let planner = Planner::new(&RTX2080TI);
+        let mut scalar = EngineExecutor::new(
+            m.clone(),
+            &weights,
+            planner.plan(&m, batch),
+        )
+        .unwrap();
+        let mut fast = EngineExecutor::new(
+            m.clone(),
+            &weights,
+            planner.plan_fixed(&m, batch, Scheme::Fastpath),
+        )
+        .unwrap();
+        let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32() - 0.5).collect();
+        assert_eq!(scalar.forward(&x, batch), fast.forward(&x, batch));
     }
 
     #[test]

@@ -92,7 +92,11 @@ impl fmt::Display for Value {
         match self {
             Value::Null => write!(f, "null"),
             Value::Bool(b) => write!(f, "{b}"),
-            // shortest-roundtrip decimal; NaN/inf never occur in plans
+            // shortest-roundtrip decimal.  JSON has no NaN/inf tokens:
+            // emitting `{x}` for them would produce invalid documents
+            // ("NaN", "inf"), so non-finite values serialize as null —
+            // and the parser below rejects them on the way back in.
+            Value::Num(x) if !x.is_finite() => write!(f, "null"),
             Value::Num(x) => write!(f, "{x}"),
             Value::Str(s) => write_escaped(f, s),
             Value::Arr(items) => {
@@ -250,9 +254,15 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Value::Num)
-            .map_err(|_| format!("bad number {text:?} at byte {start}"))
+        let x: f64 = text
+            .parse()
+            .map_err(|_| format!("bad number {text:?} at byte {start}"))?;
+        // overflow literals like 1e999 parse to inf; cost fields must
+        // stay finite, so reject instead of smuggling inf through
+        if !x.is_finite() {
+            return Err(format!("non-finite number {text:?} at byte {start}"));
+        }
+        Ok(Value::Num(x))
     }
 
     fn array(&mut self) -> Result<Value, String> {
@@ -345,6 +355,27 @@ mod tests {
         .unwrap();
         assert_eq!(v.get("aA").unwrap().as_arr().unwrap().len(), 3);
         assert_eq!(v.get("b"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null_and_parse_rejects() {
+        // NaN/inf would otherwise print as "NaN"/"inf" — invalid JSON
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Value::Num(x).to_string(), "null");
+        }
+        let doc = Value::Obj(vec![
+            ("ok".to_string(), Value::Num(1.5)),
+            ("bad".to_string(), Value::Num(f64::NAN)),
+        ]);
+        let text = doc.to_string();
+        assert_eq!(text, "{\"ok\":1.5,\"bad\":null}");
+        // the document stays parseable; the NaN degraded to null
+        let back = Value::parse(&text).unwrap();
+        assert_eq!(back.get("bad"), Some(&Value::Null));
+        // numeric literals that overflow to inf are rejected outright
+        assert!(Value::parse("1e999").is_err());
+        assert!(Value::parse("[-1e999]").is_err());
+        assert!(Value::parse("{\"x\":1e999}").is_err());
     }
 
     #[test]

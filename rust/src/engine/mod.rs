@@ -6,11 +6,13 @@
 //! coordinator) into a servable engine:
 //!
 //! * `planner` — for a `ModelDef` and batch bucket, simulates every
-//!   Tables-6/7 scheme per layer with `nn::cost::layer_secs` (the exact
-//!   machinery behind `model_cost`) and picks the cheapest, emitting an
+//!   scheme per layer with `nn::cost::layer_secs` (the exact machinery
+//!   behind `model_cost`) — the six Tables-6/7 rows plus the host
+//!   `FASTPATH` backend — and picks the cheapest, emitting an
 //!   executable [`plan::ModelPlan`].  This is the paper's central lesson
 //!   operationalized: scheme and data-format choice is a per-layer-shape
-//!   decision, not a global one.
+//!   decision, not a global one.  `Planner::plan_fixed` pins one scheme
+//!   everywhere (how a GPU-less host serves `kernels::fastpath`).
 //! * `plan` / `plan_cache` — plans serialize to JSON and persist in a
 //!   directory cache keyed by (model, batch shape, gpu), with hit/miss
 //!   counters for observability.

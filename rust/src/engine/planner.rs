@@ -62,6 +62,18 @@ impl Planner {
 
     /// Plan a whole model at one batch bucket.
     pub fn plan(&self, model: &ModelDef, batch: usize) -> ModelPlan {
+        self.plan_with(model, batch, None)
+    }
+
+    /// Plan with every layer pinned to `scheme` (no per-layer search).
+    /// This is how a host without a Turing GPU serves the blocked-u64
+    /// backend: `plan_fixed(model, batch, Scheme::Fastpath)` routes the
+    /// whole model through `kernels::fastpath` in the executor.
+    pub fn plan_fixed(&self, model: &ModelDef, batch: usize, scheme: Scheme) -> ModelPlan {
+        self.plan_with(model, batch, Some(scheme))
+    }
+
+    fn plan_with(&self, model: &ModelDef, batch: usize, force: Option<Scheme>) -> ModelPlan {
         let engine = Engine::new(&self.gpu);
         let sync_secs = if self.layer_sync {
             self.gpu.secs(self.gpu.coop_sync_cycles)
@@ -73,7 +85,21 @@ impl Planner {
         // one fused kernel launch, same accounting as model_cost
         let mut total = self.gpu.launch_overhead_s;
         for (i, l) in model.layers.iter().enumerate() {
-            let (scheme, secs) = self.best_scheme(&engine, model, i, dims, batch);
+            let (scheme, secs) = match force {
+                Some(s) => (
+                    s,
+                    layer_secs(
+                        &engine,
+                        s,
+                        l,
+                        dims,
+                        batch,
+                        self.residual,
+                        model.residual_blocks > 0,
+                    ),
+                ),
+                None => self.best_scheme(&engine, model, i, dims, batch),
+            };
             total += secs + sync_secs;
             layers.push(LayerPlan { index: i, tag: l.tag(), scheme, secs });
             dims = dims.after(l);
@@ -140,5 +166,20 @@ mod tests {
         let p = Planner::new(&RTX2080TI);
         let m = mnist_mlp();
         assert_eq!(p.plan(&m, 32), p.plan(&m, 32));
+    }
+
+    #[test]
+    fn fixed_plan_pins_every_layer() {
+        let p = Planner::new(&RTX2080TI);
+        for m in all_models() {
+            let plan = p.plan_fixed(&m, 8, Scheme::Fastpath);
+            assert_eq!(plan.layers.len(), m.layers.len());
+            for lp in &plan.layers {
+                assert_eq!(lp.scheme, Scheme::Fastpath, "{} {}", m.name, lp.tag);
+                assert!(lp.secs.is_finite() && lp.secs > 0.0);
+            }
+            // a fixed plan costs at least the searched optimum
+            assert!(plan.total_secs >= p.plan(&m, 8).total_secs * (1.0 - 1e-12));
+        }
     }
 }

@@ -1,0 +1,276 @@
+//! BConv lowering onto the blocked u64 BMM via bit-im2row.
+//!
+//! Each output sample `(op, oq, ni)` becomes one im2row line: the k*k
+//! input taps concatenated tap-by-tap, each tap padded to whole u64
+//! words (`tap_words`).  Out-of-bounds taps are written as all-zero
+//! words, so the whole line multiplies against a filter line with ONE
+//! full-length popcount — and the paper's exclude-amended padding is
+//! restored afterwards with a per-tap filter popcount correction:
+//!
+//! ```text
+//! P          = popc(line ^ filter)            (what the BMM computes)
+//! popc_valid = P - sum_{invalid taps} popc(filter_tap)
+//! v          = c * valid_taps - 2 * popc_valid      (Eq 2, amended)
+//! ```
+//!
+//! All quantities are exact integers, so the result is bit-identical
+//! to `kernels::bconv::naive_ref` / `BconvDesign1` for every shape.
+//!
+//! The input slice layout is the executor's HWNC arena layout,
+//! `((i*hw + j)*batch + ni) * wi` u32 words — which is exactly
+//! `BitTensor4`'s HWNC storage, so both callers share one code path.
+
+use crate::bitops::pack64::{self, words64};
+use crate::bitops::{BitTensor4, TensorLayout};
+use crate::kernels::bconv::BconvProblem;
+use crate::util::threadpool::scoped_chunks;
+
+use super::bmm;
+
+/// Filter prepared for the fastpath: one u64 line per output channel
+/// (taps concatenated in (r, s) order, each padded to `tap_words`),
+/// plus per-tap popcounts for the excluded-padding correction.
+#[derive(Clone, Debug)]
+pub struct FastConvFilter {
+    pub o: usize,
+    pub k: usize,
+    pub c: usize,
+    /// u64 words per tap: `words64(ceil(c/32))`
+    pub tap_words: usize,
+    /// u64 words per filter line: `k*k*tap_words`
+    pub row_words: usize,
+    /// `o` lines x `row_words` words
+    pub data: Vec<u64>,
+    /// `popc(filter tap)` indexed `[(r*k + s)*o + oi]`
+    pub tap_popc: Vec<u32>,
+}
+
+impl FastConvFilter {
+    /// Repack a KKOC packed filter into fastpath lines.
+    pub fn prepare(filter: &BitTensor4) -> FastConvFilter {
+        assert_eq!(filter.layout, TensorLayout::Kkoc);
+        let [kh, kw, o, c] = filter.dims;
+        assert_eq!(kh, kw, "square filters only");
+        let k = kh;
+        let wi = filter.words_inner;
+        let tap_words = words64(wi);
+        let row_words = k * k * tap_words;
+        let mut data = vec![0u64; o * row_words];
+        let mut tap_popc = vec![0u32; k * k * o];
+        for r in 0..k {
+            for s in 0..k {
+                let tap = r * k + s;
+                for oi in 0..o {
+                    let src = filter.inner(r, s, oi);
+                    let dst = &mut data
+                        [oi * row_words + tap * tap_words..][..tap_words];
+                    pack64::repack64_into(src, dst);
+                    tap_popc[tap * o + oi] =
+                        src.iter().map(|w| w.count_ones()).sum();
+                }
+            }
+        }
+        FastConvFilter { o, k, c, tap_words, row_words, data, tap_popc }
+    }
+}
+
+/// u64 words of one im2row line for problem `p`.
+pub fn row_words(p: BconvProblem) -> usize {
+    p.k * p.k * words64(p.c.div_ceil(32))
+}
+
+/// im2row lines for problem `p` (one per output sample).
+pub fn rows(p: BconvProblem) -> usize {
+    p.out_hw() * p.out_hw() * p.n
+}
+
+/// Build the bit-im2row image of an HWNC packed input into `a64`
+/// (`rows(p) x row_words(p)` u64 words), parallel over output pixels.
+/// Out-of-bounds taps become zero words.
+pub fn im2row_into(src: &[u32], p: BconvProblem, a64: &mut [u64], threads: usize) {
+    let wi = p.c.div_ceil(32);
+    let tap_words = words64(wi);
+    let rw = p.k * p.k * tap_words;
+    let ohw = p.out_hw();
+    assert!(src.len() >= p.hw * p.hw * p.n * wi, "input buffer size");
+    assert_eq!(a64.len(), ohw * ohw * p.n * rw, "im2row buffer size");
+    scoped_chunks(a64, p.n * rw, threads, |pix, lines| {
+        let (op, oq) = (pix / ohw, pix % ohw);
+        for r in 0..p.k {
+            for s in 0..p.k {
+                let tap = r * p.k + s;
+                let i = (op * p.stride + r) as isize - p.pad as isize;
+                let j = (oq * p.stride + s) as isize - p.pad as isize;
+                let valid = i >= 0
+                    && i < p.hw as isize
+                    && j >= 0
+                    && j < p.hw as isize;
+                for ni in 0..p.n {
+                    let dst = &mut lines[ni * rw + tap * tap_words..][..tap_words];
+                    if valid {
+                        let base =
+                            ((i as usize * p.hw + j as usize) * p.n + ni) * wi;
+                        pack64::repack64_into(&src[base..base + wi], dst);
+                    } else {
+                        dst.fill(0);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Full fastpath bconv: im2row + blocked BMM + excluded-padding
+/// correction.  Output layout `((op*ohw + oq)*n + ni)*o + oi`, exactly
+/// `kernels::bconv::naive_ref`.  `a64` is caller-provided scratch of
+/// `rows(p) * row_words(p)` words (the executor's arena slice).
+pub fn bconv_into(
+    src: &[u32],
+    p: BconvProblem,
+    f: &FastConvFilter,
+    a64: &mut [u64],
+    out: &mut [i32],
+    threads: usize,
+) {
+    assert_eq!(f.c, p.c, "filter channels");
+    assert_eq!(f.k, p.k, "filter extent");
+    assert_eq!(f.o, p.o, "output channels");
+    assert!(p.k * p.k <= MAX_TAPS, "filter extent over fastpath limit");
+    let ohw = p.out_hw();
+    let m = ohw * ohw * p.n;
+    assert_eq!(out.len(), m * p.o, "output buffer size");
+    im2row_into(src, p, a64, threads);
+    bmm::popc_lines(a64, &f.data, f.row_words, m, p.o, out, threads);
+    // restore the exclude-amended Eq 2 per output pixel
+    let taps = p.k * p.k;
+    scoped_chunks(out, p.n * p.o, threads, |pix, seg| {
+        let (op, oq) = (pix / ohw, pix % ohw);
+        let mut inv = [0usize; MAX_TAPS];
+        let mut ninv = 0usize;
+        for r in 0..p.k {
+            for s in 0..p.k {
+                let i = (op * p.stride + r) as isize - p.pad as isize;
+                let j = (oq * p.stride + s) as isize - p.pad as isize;
+                if i < 0 || i >= p.hw as isize || j < 0 || j >= p.hw as isize {
+                    inv[ninv] = r * p.k + s;
+                    ninv += 1;
+                }
+            }
+        }
+        let n_valid = (p.c * (taps - ninv)) as i32;
+        for ni in 0..p.n {
+            let row = &mut seg[ni * p.o..(ni + 1) * p.o];
+            if ninv == 0 {
+                for v in row.iter_mut() {
+                    *v = n_valid - 2 * *v;
+                }
+            } else {
+                for (oi, v) in row.iter_mut().enumerate() {
+                    let mut corr = 0i32;
+                    for &tap in &inv[..ninv] {
+                        corr += f.tap_popc[tap * p.o + oi] as i32;
+                    }
+                    *v = n_valid - 2 * (*v - corr);
+                }
+            }
+        }
+    });
+}
+
+/// Largest supported filter tap count (k*k); BinConv filters in the
+/// Table-5 models are at most 5x5.
+pub const MAX_TAPS: usize = 32;
+
+/// Allocating convenience wrapper (the naive fastpath forward, tests).
+pub fn bconv(
+    input: &BitTensor4,
+    filter: &BitTensor4,
+    p: BconvProblem,
+    threads: usize,
+) -> Vec<i32> {
+    assert_eq!(input.layout, TensorLayout::Hwnc);
+    assert_eq!(input.dims, [p.hw, p.hw, p.n, p.c], "input dims");
+    let f = FastConvFilter::prepare(filter);
+    let mut a64 = vec![0u64; rows(p) * row_words(p)];
+    let mut out = vec![0i32; rows(p) * p.o];
+    bconv_into(&input.data, p, &f, &mut a64, &mut out, threads);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::bconv::naive_ref;
+    use crate::util::proptest::run_cases;
+    use crate::util::Rng;
+
+    fn rand_case(rng: &mut Rng, p: BconvProblem) -> (BitTensor4, BitTensor4) {
+        let input =
+            BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, rng);
+        let filter =
+            BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, rng);
+        (input, filter)
+    }
+
+    #[test]
+    fn matches_naive_ref_with_padding() {
+        let mut rng = Rng::new(81);
+        for p in [
+            BconvProblem { hw: 6, n: 8, c: 128, o: 8, k: 3, stride: 1, pad: 1 },
+            BconvProblem { hw: 8, n: 4, c: 96, o: 16, k: 3, stride: 2, pad: 1 },
+            BconvProblem { hw: 5, n: 3, c: 40, o: 7, k: 3, stride: 1, pad: 0 },
+            BconvProblem { hw: 9, n: 2, c: 64, o: 5, k: 5, stride: 1, pad: 2 },
+        ] {
+            let (input, filter) = rand_case(&mut rng, p);
+            assert_eq!(
+                bconv(&input, &filter, p, 2),
+                naive_ref(&input, &filter, p),
+                "{p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn random_odd_channel_widths() {
+        run_cases(82, 25, |rng| {
+            let p = BconvProblem {
+                hw: 3 + rng.gen_range(5),
+                n: 1 + rng.gen_range(6),
+                c: 1 + rng.gen_range(150),
+                o: 1 + rng.gen_range(20),
+                k: 3,
+                stride: 1,
+                pad: 1,
+            };
+            let (input, filter) = rand_case(rng, p);
+            assert_eq!(
+                bconv(&input, &filter, p, 1),
+                naive_ref(&input, &filter, p),
+                "{p:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let mut rng = Rng::new(83);
+        let p = BconvProblem { hw: 8, n: 8, c: 64, o: 16, k: 3, stride: 1, pad: 1 };
+        let (input, filter) = rand_case(&mut rng, p);
+        assert_eq!(bconv(&input, &filter, p, 1), bconv(&input, &filter, p, 4));
+    }
+
+    #[test]
+    fn tap_popc_counts_plus_ones() {
+        let mut rng = Rng::new(84);
+        let filter = BitTensor4::random([3, 3, 4, 40], TensorLayout::Kkoc, &mut rng);
+        let f = FastConvFilter::prepare(&filter);
+        for r in 0..3 {
+            for s in 0..3 {
+                for oi in 0..4 {
+                    let want = (0..40).filter(|&ci| filter.get(r, s, oi, ci)).count();
+                    assert_eq!(f.tap_popc[(r * 3 + s) * 4 + oi] as usize, want);
+                }
+            }
+        }
+    }
+}

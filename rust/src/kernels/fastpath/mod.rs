@@ -1,0 +1,29 @@
+//! The host fastpath backend: blocked u64 XNOR-popcount kernels.
+//!
+//! The paper's lesson (§4–5) is that BNN throughput is decided by
+//! bit-level data layout and memory stride; PhoneBit shows the same
+//! XNOR-popcount kernels dominate end-to-end latency on CPU-class
+//! hardware.  This module is the repo's genuinely fast *host* path —
+//! the backend `nn::cost::Scheme::Fastpath` selects and the engine
+//! executor routes to:
+//!
+//! * [`bmm`] — cache-blocked (`MC x NC x KC`), 4x4-register-tiled
+//!   XNOR-popcount BMM over u64-repacked operands
+//!   (`bitops::pack64`), row-parallel over contiguous scoped-thread
+//!   row bands;
+//! * [`bconv`] — the convolution lowering: bit-im2row (out-of-bounds
+//!   taps as zero words) feeding the same blocked BMM, with a per-tap
+//!   filter-popcount correction restoring the paper's exclude-amended
+//!   padding.
+//!
+//! Every kernel is exact integer arithmetic, bit-identical to the
+//! naive Eq-2 references (`kernels::bmm::naive_ref`,
+//! `kernels::bconv::naive_ref`) and the Design-1/2/3 scheme computes —
+//! asserted by `tests/fastpath_equivalence.rs`.  Unlike the Table-3/4
+//! schemes there is no GPU `KernelTrace` face: the fastpath's cost
+//! model lives in `nn::cost` as calibrated host constants.
+
+pub mod bconv;
+pub mod bmm;
+
+pub use bconv::FastConvFilter;

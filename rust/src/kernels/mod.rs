@@ -14,9 +14,13 @@
 //! IO modes mirror the paper's two test types: `General` (fp in / int
 //! out: binarization of A and B is on the clock, §7.2 type 1) and
 //! `BnnSpecific` (bit in / bit out: fused output binarization, type 2).
+//!
+//! `fastpath` is the odd one out: the blocked u64 *host* backend
+//! (`Scheme::Fastpath`) — bit-identical compute, no GPU trace face.
 
 pub mod bconv;
 pub mod bmm;
+pub mod fastpath;
 
 /// Which of the paper's two benchmark protocols a trace models.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

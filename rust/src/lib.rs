@@ -28,6 +28,13 @@
 //! `EngineModel` plugs the executor into `coordinator::server` so any
 //! Table-5 model is servable end to end.  See `docs/ENGINE.md`.
 //!
+//! The seventh scheme, `nn::cost::Scheme::Fastpath`, is the blocked
+//! u64 XNOR-popcount **host** backend (`kernels::fastpath`, operands
+//! repacked via `bitops::pack64`): bit-identical to the naive
+//! references, >= 2x the scalar schemes on ResNet-18 shapes, and
+//! regression-gated in CI by `cargo bench --bench bench_kernels`
+//! against `benches/baseline.json` (see `docs/BENCH.md`).
+//!
 //! See DESIGN.md for the system inventory and the per-table/figure
 //! experiment index, and EXPERIMENTS.md for paper-vs-measured results.
 

@@ -24,6 +24,9 @@ pub enum Scheme {
     Btc,
     /// BTC with the FSB format (§5.1)
     BtcFmt,
+    /// host blocked-u64 XNOR-popcount backend (`kernels::fastpath`) —
+    /// no GPU traces; costed by the calibrated host model below
+    Fastpath,
 }
 
 impl Scheme {
@@ -35,10 +38,11 @@ impl Scheme {
             Scheme::Sbnn64Fine => "SBNN-64-Fine",
             Scheme::Btc => "BTC",
             Scheme::BtcFmt => "BTC-FMT",
+            Scheme::Fastpath => "FASTPATH",
         }
     }
 
-    pub fn all() -> [Scheme; 6] {
+    pub fn all() -> [Scheme; 7] {
         [
             Scheme::Sbnn32,
             Scheme::Sbnn32Fine,
@@ -46,6 +50,7 @@ impl Scheme {
             Scheme::Sbnn64Fine,
             Scheme::Btc,
             Scheme::BtcFmt,
+            Scheme::Fastpath,
         ]
     }
 
@@ -255,11 +260,88 @@ fn fc_traces(scheme: Scheme, batch: usize, d_in: usize, d_out: usize) -> Vec<Ker
     }
 }
 
+/// Calibrated host constants for the `Scheme::Fastpath` cost model —
+/// the blocked u64 backend in `kernels::fastpath` runs on the serving
+/// host's cores, not the GPU, so its cost is modeled analytically
+/// instead of through `sim::KernelTrace`.  Constants are deliberately
+/// conservative multi-core laptop/server numbers; refresh them against
+/// `cargo bench --bench bench_kernels` when the host class changes.
+pub mod host {
+    /// u64 XOR+POPC+accumulate word ops per second (all cores, blocked).
+    pub const WORD_OPS_PER_SEC: f64 = 6.0e9;
+    /// f32 multiply-accumulates per second (the first BWN layer).
+    pub const FP_OPS_PER_SEC: f64 = 8.0e9;
+    /// streamed bytes per second (packing, pooling, residual traffic).
+    pub const BYTES_PER_SEC: f64 = 1.2e10;
+    /// scoped fork/join + repack latency per parallel section.
+    pub const DISPATCH_SECS: f64 = 3.0e-6;
+}
+
+/// Host-model seconds for one layer under `Scheme::Fastpath`.
+fn fastpath_layer_secs(
+    layer: &LayerSpec,
+    dims: Dims,
+    batch: usize,
+    residual: ResidualMode,
+    model_has_residuals: bool,
+) -> f64 {
+    let out_hw = |k: usize, stride: usize, pad: usize| -> usize {
+        (dims.hw + 2 * pad - k) / stride + 1
+    };
+    match *layer {
+        LayerSpec::FirstConv { c, o, k, stride, pad } => {
+            let ohw = out_hw(k, stride, pad);
+            let fp = (ohw * ohw * batch * o * k * k * c) as f64;
+            fp / host::FP_OPS_PER_SEC + host::DISPATCH_SECS
+        }
+        LayerSpec::BinConv { o, k, stride, pad, residual: is_res, .. } => {
+            // filters beyond the fastpath tap limit cannot run there:
+            // cost them infinite so no plan ever selects the scheme
+            if k * k > crate::kernels::fastpath::bconv::MAX_TAPS {
+                return f64::INFINITY;
+            }
+            let c = dims.feat;
+            let ohw = out_hw(k, stride, pad);
+            let words = (ohw * ohw * batch * o * k * k * c.div_ceil(64)) as f64;
+            // im2row build + output repack are streamed bytes
+            let stream = (ohw * ohw * batch * (k * k * c.div_ceil(8) + o)) as f64;
+            let mut secs = words / host::WORD_OPS_PER_SEC
+                + stream / host::BYTES_PER_SEC
+                + host::DISPATCH_SECS;
+            if is_res && model_has_residuals && residual != ResidualMode::None {
+                let out_dims = dims.after(layer);
+                // fp16 residual save/fetch, same accounting as the GPU path
+                let xfers = match residual {
+                    ResidualMode::Full => 2,
+                    ResidualMode::SaveOnly | ResidualMode::FetchOnly => 1,
+                    ResidualMode::None => 0,
+                };
+                secs += (out_dims.flat() * batch * 2 * xfers) as f64
+                    / host::BYTES_PER_SEC;
+            }
+            secs
+        }
+        LayerSpec::BinFc { d_in, d_out } | LayerSpec::FinalFc { d_in, d_out } => {
+            let words = (batch * d_out * d_in.div_ceil(64)) as f64;
+            words / host::WORD_OPS_PER_SEC + host::DISPATCH_SECS
+        }
+        LayerSpec::Pool => {
+            // 4 packed loads + 1 store per output word
+            let bytes = (dims.flat() * batch).div_ceil(8) as f64;
+            bytes * 5.0 / host::BYTES_PER_SEC + host::DISPATCH_SECS
+        }
+    }
+}
+
 /// The kernel traces of one layer under `scheme`, in the fused-kernel
 /// view (no per-layer launches).  `dims` is the layer's *input* dims;
 /// `model_has_residuals` gates residual traffic exactly like
 /// `model_cost` does for ResNet models.  This is the single source of
 /// truth shared by `model_cost` and `engine::Planner`.
+///
+/// `Scheme::Fastpath` runs on the host, not the GPU: it has no kernel
+/// traces (this returns empty) and is costed analytically — see
+/// [`layer_secs`].
 pub fn layer_traces(
     scheme: Scheme,
     layer: &LayerSpec,
@@ -268,6 +350,9 @@ pub fn layer_traces(
     residual: ResidualMode,
     model_has_residuals: bool,
 ) -> Vec<KernelTrace> {
+    if scheme == Scheme::Fastpath {
+        return Vec::new();
+    }
     let mut traces: Vec<KernelTrace> = match *layer {
         LayerSpec::FirstConv { o, k, stride, pad, .. } => {
             vec![first_conv_trace(dims, batch, o, k, stride, pad)]
@@ -323,6 +408,9 @@ pub fn layer_secs(
     residual: ResidualMode,
     model_has_residuals: bool,
 ) -> f64 {
+    if scheme == Scheme::Fastpath {
+        return fastpath_layer_secs(layer, dims, batch, residual, model_has_residuals);
+    }
     layer_traces(scheme, layer, dims, batch, residual, model_has_residuals)
         .iter()
         .map(|t| engine.cost(t).total_secs)
@@ -384,6 +472,60 @@ mod tests {
 
     fn latency(m: &ModelDef, s: Scheme) -> f64 {
         model_cost(m, 8, &RTX2080TI, s, ResidualMode::Full, true).total_secs
+    }
+
+    #[test]
+    fn fastpath_costs_finite_and_batch_scalable() {
+        // the host scheme has no GPU traces but must still produce
+        // sane, monotone costs for every Table-5 model
+        for m in model::all_models() {
+            let lat =
+                model_cost(&m, 8, &RTX2080TI, Scheme::Fastpath, ResidualMode::Full, true);
+            assert!(
+                lat.total_secs.is_finite() && lat.total_secs > 0.0,
+                "{}",
+                m.name
+            );
+            let tp = model_cost(
+                &m,
+                128,
+                &RTX2080TI,
+                Scheme::Fastpath,
+                ResidualMode::Full,
+                true,
+            );
+            assert!(
+                tp.throughput_fps() > lat.throughput_fps(),
+                "{}: fastpath fps must grow with batch",
+                m.name
+            );
+        }
+        assert_eq!(Scheme::from_name("FASTPATH"), Some(Scheme::Fastpath));
+        for s in Scheme::all() {
+            if s != Scheme::Fastpath {
+                assert!(
+                    !layer_traces(
+                        s,
+                        &LayerSpec::BinFc { d_in: 1024, d_out: 1024 },
+                        crate::nn::layer::Dims { hw: 0, feat: 1024 },
+                        8,
+                        ResidualMode::Full,
+                        false,
+                    )
+                    .is_empty()
+                );
+            }
+        }
+        // fastpath has no GPU kernel traces by construction
+        assert!(layer_traces(
+            Scheme::Fastpath,
+            &LayerSpec::BinFc { d_in: 1024, d_out: 1024 },
+            crate::nn::layer::Dims { hw: 0, feat: 1024 },
+            8,
+            ResidualMode::Full,
+            false,
+        )
+        .is_empty());
     }
 
     #[test]

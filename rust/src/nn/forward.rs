@@ -6,9 +6,12 @@
 //! ImageNet-scale *timing* comes from `cost`, not from executing bits.
 
 use crate::bitops::pack;
+use crate::bitops::pack64::BitMatrix64;
 use crate::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
 use crate::kernels::bconv::btc::BconvDesign1;
 use crate::kernels::bconv::{BconvProblem, BconvScheme};
+use crate::kernels::fastpath;
+use crate::util::threadpool::default_threads;
 use crate::util::Rng;
 
 use super::layer::LayerSpec;
@@ -101,6 +104,42 @@ impl Act {
     }
 }
 
+/// Eq-2 dot of every (input row, weight row) pair — the shared FC core.
+/// The scalar and fastpath variants are exact integer arithmetic over
+/// the same bits, so they agree on every entry.
+fn fc_dots(
+    flat: &BitMatrix,
+    w: &BitMatrix,
+    d_in: usize,
+    d_out: usize,
+    batch: usize,
+    use_fastpath: bool,
+    threads: usize,
+) -> Vec<i32> {
+    let mut v = vec![0i32; batch * d_out];
+    if use_fastpath {
+        let a64 = BitMatrix64::from_bitmatrix(flat);
+        let w64 = BitMatrix64::from_bitmatrix(w);
+        fastpath::bmm::dot_lines(
+            &a64.data,
+            &w64.data,
+            a64.words_per_line,
+            batch,
+            d_out,
+            d_in,
+            &mut v,
+            threads,
+        );
+    } else {
+        for bi in 0..batch {
+            for j in 0..d_out {
+                v[bi * d_out + j] = pack::pm1_dot(flat.line(bi), w.line(j), d_in);
+            }
+        }
+    }
+    v
+}
+
 /// 2x2 OR pool on an HWNC bit tensor.
 fn or_pool(t: &BitTensor4) -> BitTensor4 {
     let [h, w, n, _c] = t.dims;
@@ -130,6 +169,31 @@ pub fn forward(
     input: &[f32],
     batch: usize,
 ) -> Vec<f32> {
+    forward_impl(model, weights, input, batch, false)
+}
+
+/// Like [`forward`], but binarized layers run through the blocked u64
+/// backend (`kernels::fastpath`): bconv lowers onto the blocked BMM via
+/// bit-im2row, FC layers multiply u64-repacked rows.  The first (BWN)
+/// layer keeps the exact f32 accumulation order, so the output is
+/// bit-identical to `forward` on every input.
+pub fn forward_fastpath(
+    model: &ModelDef,
+    weights: &ModelWeights,
+    input: &[f32],
+    batch: usize,
+) -> Vec<f32> {
+    forward_impl(model, weights, input, batch, true)
+}
+
+fn forward_impl(
+    model: &ModelDef,
+    weights: &ModelWeights,
+    input: &[f32],
+    batch: usize,
+    use_fastpath: bool,
+) -> Vec<f32> {
+    let threads = if use_fastpath { default_threads() } else { 1 };
     let mut dims = model.input;
     // initial activation
     let mut act: Option<Act> = None;
@@ -197,7 +261,11 @@ pub fn forward(
                     stride: *stride,
                     pad: *pad,
                 };
-                let ints = BconvDesign1.compute(&t, filter, p);
+                let ints = if use_fastpath {
+                    fastpath::bconv::bconv(&t, filter, p, threads)
+                } else {
+                    BconvDesign1.compute(&t, filter, p)
+                };
                 let ohw = p.out_hw();
                 let mut bits =
                     BitTensor4::zeros([ohw, ohw, batch, *o], TensorLayout::Hwnc);
@@ -219,11 +287,11 @@ pub fn forward(
             (LayerSpec::BinFc { d_in, d_out }, LayerWeights::BinFc { w, thresh }) => {
                 let flat = act.take().unwrap().flatten(batch);
                 assert_eq!(flat.cols, *d_in);
+                let v = fc_dots(&flat, w, *d_in, *d_out, batch, use_fastpath, threads);
                 let mut out = BitMatrix::zeros(batch, *d_out, Layout::RowMajor);
                 for bi in 0..batch {
                     for j in 0..*d_out {
-                        let v = pack::pm1_dot(flat.line(bi), w.line(j), *d_in);
-                        if (v as f32) >= thresh[j] {
+                        if (v[bi * d_out + j] as f32) >= thresh[j] {
                             out.set(bi, j, true);
                         }
                     }
@@ -236,11 +304,12 @@ pub fn forward(
             ) => {
                 let flat = act.take().unwrap().flatten(batch);
                 assert_eq!(flat.cols, *d_in);
+                let v = fc_dots(&flat, w, *d_in, *d_out, batch, use_fastpath, threads);
                 let mut logits = vec![0.0f32; batch * d_out];
                 for bi in 0..batch {
                     for j in 0..*d_out {
-                        let v = pack::pm1_dot(flat.line(bi), w.line(j), *d_in) as f32;
-                        logits[bi * d_out + j] = v * gamma[j] + beta[j];
+                        logits[bi * d_out + j] =
+                            v[bi * d_out + j] as f32 * gamma[j] + beta[j];
                     }
                 }
                 return logits;
@@ -298,6 +367,15 @@ mod tests {
         assert!(logits.iter().all(|v| v.is_finite()));
         // different images should (almost surely) give different logits
         assert_ne!(logits[..4], logits[4..8]);
+    }
+
+    #[test]
+    fn fastpath_forward_is_bit_identical() {
+        let m = tiny_model();
+        let mut rng = Rng::new(8);
+        let w = random_weights(&m, &mut rng);
+        let x: Vec<f32> = (0..8 * 8 * 8 * 3).map(|_| rng.next_f32() - 0.5).collect();
+        assert_eq!(forward(&m, &w, &x, 8), forward_fastpath(&m, &w, &x, 8));
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! the FSB format at awkward widths — especially non-multiple-of-32
 //! widths, where pad-bit handling is easiest to get wrong.
 
-use tcbnn::bitops::{pack, BitMatrix, FsbMatrix, Layout};
+use tcbnn::bitops::{pack, pack64, BitMatrix, BitMatrix64, FsbMatrix, Layout};
 use tcbnn::util::proptest::run_cases;
 
 /// A width that is deliberately NOT a multiple of 32.
@@ -73,6 +73,61 @@ fn set_get_bit_roundtrip_with_neighbours_intact() {
         assert_eq!(total, 1, "exactly one bit set");
         pack::set_bit(&mut words, i, false);
         assert!(words.iter().all(|&w| w == 0));
+    });
+}
+
+#[test]
+fn pack64_roundtrip_at_odd_widths() {
+    // u32 -> u64 -> u32 repacking must preserve every word, including
+    // lines with an odd u32 word count (lone low half in the last u64)
+    run_cases(209, 200, |rng| {
+        let n = odd_width(rng, 600);
+        let xs = rng.pm1_vec(n);
+        let w32 = pack::pack_row(&xs);
+        let mut w64 = vec![0u64; pack64::words64(w32.len())];
+        pack64::repack64_into(&w32, &mut w64);
+        let mut back = vec![0u32; w32.len()];
+        pack64::unpack64_into(&w64, &mut back);
+        assert_eq!(back, w32, "u32 word round-trip at n={n}");
+        // and the u64 image sees the same logical bits
+        for i in 0..n {
+            assert_eq!(
+                (w64[i / 64] >> (i % 64)) & 1 == 1,
+                pack::get_bit(&w32, i),
+                "bit {i} of {n}"
+            );
+        }
+    });
+}
+
+#[test]
+fn pack64_matrix_roundtrip_and_dot_agreement() {
+    run_cases(210, 100, |rng| {
+        let rows = 1 + rng.gen_range(30);
+        let cols = odd_width(rng, 400);
+        for layout in [Layout::RowMajor, Layout::ColMajor] {
+            let m = BitMatrix::random(rows, cols, layout, rng);
+            let m64 = BitMatrix64::from_bitmatrix(&m);
+            assert_eq!(m64.to_bitmatrix(), m, "{rows}x{cols} {layout:?}");
+        }
+        // Eq 2 agrees across word sizes on odd widths
+        let a = BitMatrix::random(2, cols, Layout::RowMajor, rng);
+        let a64 = BitMatrix64::from_bitmatrix(&a);
+        assert_eq!(
+            pack64::pm1_dot64(a64.line(0), a64.line(1), cols),
+            pack::pm1_dot(a.line(0), a.line(1), cols),
+        );
+    });
+}
+
+#[test]
+fn pack64_fsb_normalizes_to_line_order() {
+    run_cases(211, 60, |rng| {
+        let rows = 1 + rng.gen_range(40);
+        let cols = odd_width(rng, 300);
+        let m = BitMatrix::random(rows, cols, Layout::RowMajor, rng);
+        let f = FsbMatrix::from_bitmatrix(&m);
+        assert_eq!(BitMatrix64::from_fsb(&f), BitMatrix64::from_bitmatrix(&m));
     });
 }
 

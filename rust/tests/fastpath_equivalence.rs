@@ -1,0 +1,229 @@
+//! Fastpath acceptance tests: the blocked u64 backend must be
+//! bit-identical to the naive Eq-2 references and the paper-scheme
+//! computes on every shape — including the awkward ones (widths that
+//! are not multiples of 64, single-row/single-column matrices) — and
+//! servable end to end through `coordinator::server`.
+
+use std::time::Duration;
+
+use tcbnn::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
+use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
+use tcbnn::engine::{EngineExecutor, EngineModel, Planner};
+use tcbnn::kernels::bconv::btc::BconvDesign1;
+use tcbnn::kernels::bconv::{self, BconvProblem, BconvScheme};
+use tcbnn::kernels::bmm::btc::Design1;
+use tcbnn::kernels::bmm::{self, BmmScheme};
+use tcbnn::kernels::fastpath;
+use tcbnn::nn::forward::{forward, forward_fastpath, random_weights};
+use tcbnn::nn::layer::{Dims, LayerSpec};
+use tcbnn::nn::model::mnist_mlp;
+use tcbnn::nn::{ModelDef, Scheme};
+use tcbnn::sim::RTX2080TI;
+use tcbnn::util::proptest::run_cases;
+use tcbnn::util::Rng;
+
+/// A width that is deliberately NOT a multiple of 64.
+fn off64(rng: &mut Rng, max: usize) -> usize {
+    loop {
+        let n = 1 + rng.gen_range(max);
+        if n % 64 != 0 {
+            return n;
+        }
+    }
+}
+
+#[test]
+fn bmm_matches_naive_at_odd_shapes() {
+    run_cases(301, 60, |rng| {
+        let m = off64(rng, 90);
+        let n = off64(rng, 90);
+        let k = off64(rng, 400);
+        let a = BitMatrix::random(m, k, Layout::RowMajor, rng);
+        let b = BitMatrix::random(k, n, Layout::ColMajor, rng);
+        assert_eq!(
+            fastpath::bmm::bmm(&a, &b, 2),
+            bmm::naive_ref(&a, &b),
+            "{m}x{n}x{k}"
+        );
+    });
+}
+
+#[test]
+fn bmm_matches_design1_at_tile_aligned_but_not_64_shapes() {
+    // Design-1 needs m,n % 8 and k % 32; k = 96/160/224 are aligned for
+    // it but NOT multiples of 64 — the fastpath tail-word path
+    let mut rng = Rng::new(302);
+    for (m, n, k) in [(8, 16, 96), (16, 8, 160), (24, 24, 224), (8, 8, 32)] {
+        let a = BitMatrix::random(m, k, Layout::RowMajor, &mut rng);
+        let b = BitMatrix::random(k, n, Layout::ColMajor, &mut rng);
+        let want = Design1.compute(&a, &b);
+        assert_eq!(fastpath::bmm::bmm(&a, &b, 2), want, "{m}x{n}x{k}");
+        assert_eq!(bmm::naive_ref(&a, &b), want, "{m}x{n}x{k} naive");
+    }
+}
+
+#[test]
+fn bmm_single_row_and_single_column() {
+    run_cases(303, 40, |rng| {
+        let n = 1 + rng.gen_range(150);
+        let k = off64(rng, 300);
+        // 1 x N
+        let a = BitMatrix::random(1, k, Layout::RowMajor, rng);
+        let b = BitMatrix::random(k, n, Layout::ColMajor, rng);
+        assert_eq!(fastpath::bmm::bmm(&a, &b, 2), bmm::naive_ref(&a, &b), "1x{n}");
+        // N x 1
+        let a = BitMatrix::random(n, k, Layout::RowMajor, rng);
+        let b = BitMatrix::random(k, 1, Layout::ColMajor, rng);
+        assert_eq!(fastpath::bmm::bmm(&a, &b, 2), bmm::naive_ref(&a, &b), "{n}x1");
+    });
+}
+
+#[test]
+fn bconv_matches_naive_at_odd_channels() {
+    run_cases(304, 30, |rng| {
+        let p = BconvProblem {
+            hw: 3 + rng.gen_range(6),
+            n: 1 + rng.gen_range(8),
+            c: off64(rng, 140),
+            o: 1 + rng.gen_range(24),
+            k: 3,
+            stride: 1 + rng.gen_range(2),
+            pad: rng.gen_range(2),
+        };
+        let input =
+            BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, rng);
+        let filter =
+            BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, rng);
+        assert_eq!(
+            fastpath::bconv::bconv(&input, &filter, p, 2),
+            bconv::naive_ref(&input, &filter, p),
+            "{p:?}"
+        );
+    });
+}
+
+#[test]
+fn bconv_matches_design1_at_aligned_channels() {
+    let mut rng = Rng::new(305);
+    for p in [
+        BconvProblem { hw: 6, n: 8, c: 128, o: 8, k: 3, stride: 1, pad: 1 },
+        BconvProblem { hw: 8, n: 8, c: 128, o: 16, k: 3, stride: 2, pad: 1 },
+        BconvProblem { hw: 5, n: 8, c: 128, o: 8, k: 3, stride: 1, pad: 0 },
+    ] {
+        let input =
+            BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, &mut rng);
+        let filter =
+            BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, &mut rng);
+        let want = BconvDesign1.compute(&input, &filter, p);
+        assert_eq!(fastpath::bconv::bconv(&input, &filter, p, 2), want, "{p:?}");
+    }
+}
+
+fn odd_conv_model() -> ModelDef {
+    // deliberately non-64-multiple widths end to end (96, 40, 640, 72);
+    // channel counts stay multiples of 32 because the naive reference
+    // path (`BconvDesign1`) walks whole u32 channel words
+    ModelDef {
+        name: "fastpath-odd",
+        dataset: "synthetic",
+        input: Dims { hw: 8, feat: 3 },
+        classes: 5,
+        layers: vec![
+            LayerSpec::FirstConv { c: 3, o: 96, k: 3, stride: 1, pad: 1 },
+            LayerSpec::BinConv {
+                c: 96,
+                o: 40,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                pool: true,
+                residual: false,
+            },
+            LayerSpec::BinFc { d_in: 4 * 4 * 40, d_out: 72 },
+            LayerSpec::FinalFc { d_in: 72, d_out: 5 },
+        ],
+        residual_blocks: 0,
+    }
+}
+
+#[test]
+fn forward_fastpath_is_bit_identical_to_forward() {
+    let m = odd_conv_model();
+    let mut rng = Rng::new(306);
+    let w = random_weights(&m, &mut rng);
+    // the naive reference path tiles conv rows in blocks of 8, so the
+    // comparison batch must be a multiple of 8
+    let batch = 8;
+    let x: Vec<f32> =
+        (0..batch * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
+    assert_eq!(
+        forward(&m, &w, &x, batch),
+        forward_fastpath(&m, &w, &x, batch)
+    );
+}
+
+#[test]
+fn executor_fastpath_plan_matches_naive_on_odd_model() {
+    let m = odd_conv_model();
+    let mut rng = Rng::new(307);
+    let w = random_weights(&m, &mut rng);
+    let batch = 8;
+    let plan = Planner::new(&RTX2080TI).plan_fixed(&m, batch, Scheme::Fastpath);
+    for lp in &plan.layers {
+        assert_eq!(lp.scheme, Scheme::Fastpath);
+    }
+    let mut exec = EngineExecutor::new(m.clone(), &w, plan).unwrap();
+    let x: Vec<f32> =
+        (0..batch * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
+    let want = forward(&m, &w, &x, batch);
+    assert_eq!(exec.forward(&x, batch), &want[..]);
+}
+
+/// Acceptance: a fastpath-pinned Table-5 model served end to end
+/// through `coordinator::server`, logits identical to a scalar-engine
+/// model of the same weights.
+#[test]
+fn fastpath_model_served_through_coordinator() {
+    let m = mnist_mlp();
+    let mut rng = Rng::new(308);
+    let weights = random_weights(&m, &mut rng);
+    let planner = Planner::new(&RTX2080TI);
+
+    // ground truth from the scalar engine
+    let mut scalar =
+        EngineModel::new(&planner, &m, &weights, vec![8], None).unwrap();
+    let n = 24usize;
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..784).map(|_| rng.next_f32() - 0.5).collect())
+        .collect();
+    let mut want = Vec::new();
+    for x in &inputs {
+        let mut padded = Vec::with_capacity(8 * 784);
+        for _ in 0..8 {
+            padded.extend_from_slice(x);
+        }
+        let out = scalar.run_batch(&padded, 8).unwrap();
+        want.push(out[..10].to_vec());
+    }
+
+    let m2 = m.clone();
+    let srv = InferenceServer::start(
+        ServerConfig { max_wait: Duration::from_millis(1), queue_capacity: 4096 },
+        move || {
+            let planner = Planner::new(&RTX2080TI);
+            Ok(Box::new(EngineModel::new_fixed(
+                &planner,
+                &m2,
+                &weights,
+                vec![8],
+                Scheme::Fastpath,
+            )?) as Box<dyn BatchModel>)
+        },
+    );
+    let resps = srv.submit_all(inputs);
+    assert_eq!(resps.len(), n);
+    for (i, r) in resps.iter().enumerate() {
+        assert_eq!(r.logits, want[i], "request {i} logits");
+    }
+    assert_eq!(srv.metrics.completed(), n as u64);
+}
