@@ -52,7 +52,9 @@ fn main() {
         "Cifar10-ResNet14, 8-image latency on RTX2080Ti (simulated)",
         &["scheme", "latency_ms", "throughput_fps(b=1024)"],
     );
-    for s in Scheme::all() {
+    // FASTPATH is costed by the CPU host model, not the Turing
+    // simulator — it has no place in a GPU-simulated table
+    for s in Scheme::all().into_iter().filter(|s| *s != Scheme::Fastpath) {
         let lat = model_cost(&m, 8, &RTX2080TI, s, ResidualMode::Full, true);
         let tp = model_cost(&m, 1024, &RTX2080TI, s, ResidualMode::Full, true);
         t.row(&[

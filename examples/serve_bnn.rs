@@ -13,7 +13,7 @@
 use std::time::Instant;
 
 use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
-use tcbnn::engine::{EngineModel, PlanCache, Planner};
+use tcbnn::engine::{EngineModel, PlanCache, PlanPolicy, Planner};
 use tcbnn::nn::forward::random_weights;
 use tcbnn::nn::model::mnist_mlp;
 use tcbnn::sim::RTX2080TI;
@@ -53,7 +53,11 @@ fn main() -> anyhow::Result<()> {
     // ---- build the engine-backed served model ------------------------
     let mut rng = Rng::new(1234);
     let weights = random_weights(&model, &mut rng);
-    let em = EngineModel::new(&planner, &model, &weights, buckets, Some(&cache))?;
+    let em = EngineModel::builder(&planner, &model, &weights)
+        .buckets(buckets)
+        .policy(PlanPolicy::Cached)
+        .cache(&cache)
+        .build()?;
     println!(
         "  arena: {:.1} KB pre-allocated (constant across requests)",
         em.arena_bytes() as f64 / 1024.0

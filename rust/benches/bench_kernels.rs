@@ -1,10 +1,12 @@
 //! Bench: the kernel/model throughput harness behind the CI regression
-//! gate.  Measures img/s and GB/s per (model x scheme x batch) on this
-//! machine, plus fastpath-vs-scalar kernel speedups on ResNet-18 block
-//! shapes, and emits a machine-readable JSON document
-//! (`BENCH_PR2.json`) that CI diffs against `benches/baseline.json`.
+//! gate.  Measures img/s, GB/s, and per-iteration latency percentiles
+//! (p50/p95/p99) per (model x scheme x batch) on this machine, plus
+//! fastpath-vs-scalar kernel speedups on ResNet-18 block shapes, and
+//! emits a machine-readable JSON document (`BENCH_PR2.json`) that CI
+//! diffs against `benches/baseline.json`.
 //!
 //!   cargo bench --bench bench_kernels -- \
+//!       [--list-schemes]             # print BackendRegistry names, exit
 //!       [--quick]                    # CI settings (short measurements)
 //!       [--out BENCH_PR2.json]      # where to write the JSON document
 //!       [--check benches/baseline.json]   # regression gate (exit 1)
@@ -13,11 +15,15 @@
 //! Absolute img/s is machine-dependent, so the gate runs on *relative*
 //! throughput: every scheme is normalized against an in-run reference
 //! (the naive forward for conv models, the scalar engine for the MLP,
-//! the best scalar scheme for kernel shapes).  See docs/BENCH.md.
+//! the best scalar scheme for kernel shapes).  The per-scheme section
+//! runs one fixed plan per registered backend; the run aborts (failing
+//! `bench-smoke`) if the emitted scheme list does not match
+//! `BackendRegistry::names()`.  See docs/BENCH.md.
 
 use tcbnn::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
 use tcbnn::engine::json::Value;
 use tcbnn::engine::{EngineExecutor, Planner};
+use tcbnn::kernels::backend::BackendRegistry;
 use tcbnn::kernels::bconv::btc::BconvDesign1;
 use tcbnn::kernels::bconv::bstc::BstcBconv;
 use tcbnn::kernels::bconv::{BconvProblem, BconvScheme};
@@ -27,9 +33,9 @@ use tcbnn::kernels::fastpath;
 use tcbnn::nn::forward::{forward, random_weights};
 use tcbnn::nn::layer::{Dims, LayerSpec};
 use tcbnn::nn::model::mnist_mlp;
-use tcbnn::nn::{ModelDef, Scheme};
+use tcbnn::nn::ModelDef;
 use tcbnn::sim::RTX2080TI;
-use tcbnn::util::bench::Bencher;
+use tcbnn::util::bench::{BenchResult, Bencher};
 use tcbnn::util::cli::Args;
 use tcbnn::util::threadpool::default_threads;
 use tcbnn::util::Rng;
@@ -42,6 +48,34 @@ struct Entry {
     batch: usize,
     img_s: f64,
     gb_s: f64,
+    /// per-iteration latency percentiles (seconds)
+    lat_p50_s: f64,
+    lat_p95_s: f64,
+    lat_p99_s: f64,
+}
+
+impl Entry {
+    fn from_result(
+        name: String,
+        model: &str,
+        scheme: &str,
+        batch: usize,
+        r: &BenchResult,
+        bytes_per_unit: f64,
+    ) -> Entry {
+        let img_s = r.throughput();
+        Entry {
+            name,
+            model: model.to_string(),
+            scheme: scheme.to_string(),
+            batch,
+            img_s,
+            gb_s: img_s * bytes_per_unit / 1e9,
+            lat_p50_s: r.summary.p50,
+            lat_p95_s: r.summary.p95,
+            lat_p99_s: r.summary.p99,
+        }
+    }
 }
 
 fn cifar_lite() -> ModelDef {
@@ -85,6 +119,14 @@ fn bytes_per_img(m: &ModelDef) -> f64 {
 
 fn main() {
     let args = Args::from_env();
+    let registry = BackendRegistry::global();
+    if args.flag("list-schemes") {
+        // the satellite CLI face of BackendRegistry::names()
+        for name in registry.names() {
+            println!("{name}");
+        }
+        return;
+    }
     let quick = args.flag("quick");
     let out_path = args.get_or("out", "BENCH_PR2.json");
     let b = if quick { Bencher::quick() } else { Bencher::from_env() };
@@ -107,18 +149,6 @@ fn main() {
             let has_naive =
                 matches!(model.layers.first(), Some(LayerSpec::FirstConv { .. }));
 
-            let mut cell = |scheme: &str, img_s: f64| {
-                entries.push(Entry {
-                    name: format!("model/{}/{}/b{batch}", model.name, scheme),
-                    model: model.name.to_string(),
-                    scheme: scheme.to_string(),
-                    batch,
-                    img_s,
-                    gb_s: img_s * bpi / 1e9,
-                });
-                img_s
-            };
-
             let naive_fps = if has_naive {
                 let r = b.bench(
                     &format!("naive/{}/b{batch}", model.name),
@@ -127,7 +157,15 @@ fn main() {
                         std::hint::black_box(forward(&model, &weights, &x, batch));
                     },
                 );
-                Some(cell("naive", r.throughput()))
+                entries.push(Entry::from_result(
+                    format!("model/{}/naive/b{batch}", model.name),
+                    model.name,
+                    "naive",
+                    batch,
+                    &r,
+                    bpi,
+                ));
+                Some(r.throughput())
             } else {
                 None
             };
@@ -137,7 +175,7 @@ fn main() {
                 &weights,
                 planner.plan(&model, batch),
             )
-            .expect("scalar engine executor");
+            .expect("searched-plan engine executor");
             let r = b.bench(
                 &format!("engine/{}/b{batch}", model.name),
                 batch as f64,
@@ -145,22 +183,50 @@ fn main() {
                     std::hint::black_box(engine.forward(&x, batch));
                 },
             );
-            let engine_fps = cell("engine", r.throughput());
+            entries.push(Entry::from_result(
+                format!("model/{}/engine/b{batch}", model.name),
+                model.name,
+                "engine",
+                batch,
+                &r,
+                bpi,
+            ));
+            let engine_fps = r.throughput();
 
-            let mut fast = EngineExecutor::new(
-                model.clone(),
-                &weights,
-                planner.plan_fixed(&model, batch, Scheme::Fastpath),
-            )
-            .expect("fastpath engine executor");
-            let r = b.bench(
-                &format!("fastpath/{}/b{batch}", model.name),
-                batch as f64,
-                || {
-                    std::hint::black_box(fast.forward(&x, batch));
-                },
-            );
-            let fast_fps = cell("fastpath", r.throughput());
+            // one fixed plan per REGISTERED backend: per-scheme img/s +
+            // latency percentiles, and the scheme-list completeness
+            // check below
+            let mut fast_fps = 0.0f64;
+            for scheme in registry.schemes() {
+                let mut exec = EngineExecutor::new(
+                    model.clone(),
+                    &weights,
+                    planner.plan_fixed(&model, batch, scheme),
+                )
+                .unwrap_or_else(|e| {
+                    panic!("{} executor for {}: {e}", scheme.name(), model.name)
+                });
+                let r = b.bench(
+                    &format!("scheme/{}/{}/b{batch}", model.name, scheme.name()),
+                    batch as f64,
+                    || {
+                        std::hint::black_box(exec.forward(&x, batch));
+                    },
+                );
+                if scheme == tcbnn::nn::Scheme::Fastpath {
+                    // feeds the fastpath_vs_* gate ratios below (the
+                    // baseline gate compares ratio names, not entries)
+                    fast_fps = r.throughput();
+                }
+                entries.push(Entry::from_result(
+                    format!("model/{}/scheme/{}/b{batch}", model.name, scheme.name()),
+                    model.name,
+                    scheme.name(),
+                    batch,
+                    &r,
+                    bpi,
+                ));
+            }
 
             match naive_fps {
                 Some(n) => {
@@ -179,6 +245,24 @@ fn main() {
                 )),
             }
         }
+    }
+
+    // the emitted per-scheme list must match the registry exactly —
+    // bench-smoke runs this binary, so a drift fails CI
+    {
+        let mut emitted: Vec<&str> = entries
+            .iter()
+            .filter(|e| e.name.contains("/scheme/"))
+            .map(|e| e.scheme.as_str())
+            .collect();
+        emitted.sort();
+        emitted.dedup();
+        let mut want: Vec<&str> = registry.names();
+        want.sort();
+        assert_eq!(
+            emitted, want,
+            "emitted scheme list does not match BackendRegistry::names()"
+        );
     }
 
     // ---- ResNet-18 block shapes: fastpath vs best scalar scheme ----
@@ -203,29 +287,28 @@ fn main() {
             let r = b.bench(&format!("kernel/{tag}/{sname}"), p.n as f64, || {
                 std::hint::black_box(scheme.compute(&input, &filter, p));
             });
-            let fps = r.throughput();
-            best_scalar = best_scalar.max(fps);
-            entries.push(Entry {
-                name: format!("kernel/{tag}/{sname}"),
-                model: tag.to_string(),
-                scheme: sname.to_string(),
-                batch: p.n,
-                img_s: fps,
-                gb_s: fps / p.n as f64 * op_bytes / 1e9,
-            });
+            best_scalar = best_scalar.max(r.throughput());
+            entries.push(Entry::from_result(
+                format!("kernel/{tag}/{sname}"),
+                tag,
+                sname,
+                p.n,
+                &r,
+                op_bytes / p.n as f64,
+            ));
         }
         let r = b.bench(&format!("kernel/{tag}/fastpath"), p.n as f64, || {
             std::hint::black_box(fastpath::bconv::bconv(&input, &filter, p, threads));
         });
         let fast_fps = r.throughput();
-        entries.push(Entry {
-            name: format!("kernel/{tag}/fastpath"),
-            model: tag.to_string(),
-            scheme: "fastpath".to_string(),
-            batch: p.n,
-            img_s: fast_fps,
-            gb_s: fast_fps / p.n as f64 * op_bytes / 1e9,
-        });
+        entries.push(Entry::from_result(
+            format!("kernel/{tag}/fastpath"),
+            tag,
+            "fastpath",
+            p.n,
+            &r,
+            op_bytes / p.n as f64,
+        ));
         ratios.push((
             format!("kernel/{tag}/fastpath_vs_scalar"),
             fast_fps / best_scalar,
@@ -247,29 +330,28 @@ fn main() {
             let r = b.bench(&format!("kernel/{tag}/{sname}"), p.m as f64, || {
                 std::hint::black_box(scheme.compute(&a, &bm));
             });
-            let fps = r.throughput();
-            best_scalar = best_scalar.max(fps);
-            entries.push(Entry {
-                name: format!("kernel/{tag}/{sname}"),
-                model: tag.to_string(),
-                scheme: sname.to_string(),
-                batch: p.m,
-                img_s: fps,
-                gb_s: fps / p.m as f64 * op_bytes / 1e9,
-            });
+            best_scalar = best_scalar.max(r.throughput());
+            entries.push(Entry::from_result(
+                format!("kernel/{tag}/{sname}"),
+                tag,
+                sname,
+                p.m,
+                &r,
+                op_bytes / p.m as f64,
+            ));
         }
         let r = b.bench(&format!("kernel/{tag}/fastpath"), p.m as f64, || {
             std::hint::black_box(fastpath::bmm::bmm(&a, &bm, threads));
         });
         let fast_fps = r.throughput();
-        entries.push(Entry {
-            name: format!("kernel/{tag}/fastpath"),
-            model: tag.to_string(),
-            scheme: "fastpath".to_string(),
-            batch: p.m,
-            img_s: fast_fps,
-            gb_s: fast_fps / p.m as f64 * op_bytes / 1e9,
-        });
+        entries.push(Entry::from_result(
+            format!("kernel/{tag}/fastpath"),
+            tag,
+            "fastpath",
+            p.m,
+            &r,
+            op_bytes / p.m as f64,
+        ));
         ratios.push((
             format!("kernel/{tag}/fastpath_vs_scalar"),
             fast_fps / best_scalar,
@@ -282,9 +364,19 @@ fn main() {
         .filter(|(n, _)| n.starts_with("kernel/"))
         .map(|(_, v)| *v)
         .fold(f64::INFINITY, f64::min);
-    println!("\n{:<52} {:>12} {:>10}", "entry", "img/s", "GB/s");
+    println!(
+        "\n{:<52} {:>12} {:>10} {:>11} {:>11}",
+        "entry", "img/s", "GB/s", "p50 (us)", "p99 (us)"
+    );
     for e in &entries {
-        println!("{:<52} {:>12.1} {:>10.3}", e.name, e.img_s, e.gb_s);
+        println!(
+            "{:<52} {:>12.1} {:>10.3} {:>11.1} {:>11.1}",
+            e.name,
+            e.img_s,
+            e.gb_s,
+            e.lat_p50_s * 1e6,
+            e.lat_p99_s * 1e6
+        );
     }
     println!("\nratios (current run):");
     for (n, v) in &ratios {
@@ -296,12 +388,22 @@ fn main() {
     );
 
     let doc = Value::Obj(vec![
-        ("schema".to_string(), Value::Num(1.0)),
+        ("schema".to_string(), Value::Num(2.0)),
         (
             "mode".to_string(),
             Value::Str(if quick { "quick" } else { "full" }.to_string()),
         ),
         ("threads".to_string(), Value::Num(threads as f64)),
+        (
+            "schemes".to_string(),
+            Value::Arr(
+                registry
+                    .names()
+                    .iter()
+                    .map(|n| Value::Str(n.to_string()))
+                    .collect(),
+            ),
+        ),
         (
             "entries".to_string(),
             Value::Arr(
@@ -315,6 +417,9 @@ fn main() {
                             ("batch".to_string(), Value::Num(e.batch as f64)),
                             ("img_s".to_string(), Value::Num(e.img_s)),
                             ("gb_s".to_string(), Value::Num(e.gb_s)),
+                            ("lat_p50_s".to_string(), Value::Num(e.lat_p50_s)),
+                            ("lat_p95_s".to_string(), Value::Num(e.lat_p95_s)),
+                            ("lat_p99_s".to_string(), Value::Num(e.lat_p99_s)),
                         ])
                     })
                     .collect(),
@@ -343,6 +448,18 @@ fn main() {
         let base = Value::Obj(vec![
             ("schema".to_string(), Value::Num(1.0)),
             ("threshold".to_string(), Value::Num(0.8)),
+            (
+                "note".to_string(),
+                Value::Str(
+                    "Relative-throughput baseline for the bench_kernels CI \
+                     gate; a run fails when any ratio drops below \
+                     value*threshold. Refresh: cargo bench --bench \
+                     bench_kernels -- --quick --write-baseline \
+                     benches/baseline.json (0.9x headroom applied); review \
+                     the diff before committing. See docs/BENCH.md."
+                        .to_string(),
+                ),
+            ),
             (
                 "ratios".to_string(),
                 Value::Arr(

@@ -2,9 +2,8 @@
 //! touches, allocated once from the model shape at build time so the
 //! request hot path performs zero heap allocation.
 
-use crate::bitops::pack64::words64;
 use crate::nn::layer::LayerSpec;
-use crate::nn::{ModelDef, Scheme};
+use crate::nn::ModelDef;
 
 /// Words needed for an HWNC packed activation.
 fn bits_words(hw: usize, n: usize, c: usize) -> usize {
@@ -21,11 +20,14 @@ fn flat_words(n: usize, feat: usize) -> usize {
 /// * `bits_a` / `bits_b` — ping-pong packed activations.  Each is large
 ///   enough for the biggest intermediate in either representation
 ///   (HWNC bit tensor before pooling, or row-packed flat rows).
-/// * `ints` — i32 staging for the convolution accumulator pass (and
-///   the fastpath FC dot staging, when a plan routes FC layers there).
-/// * `words64` — u64 operand scratch for fastpath layers (im2row image
-///   for bconv, repacked input rows for FC); empty unless the plan
-///   selects `Scheme::Fastpath` somewhere.
+/// * `ints` — i32 staging for every binarized layer's Eq-2
+///   accumulators: the conv accumulator pass and the FC dot pass both
+///   stage here before threshold packing.
+/// * `words64` — u64 operand scratch for backends that need it (the
+///   fastpath's im2row image / repacked input rows); sized by the
+///   executor from the prepared layers' reported `scratch_words`, so
+///   the arena stays backend-agnostic.  Empty when no prepared layer
+///   asks for scratch.
 /// * `logits` — the classifier output.
 pub struct Arena {
     pub bits_a: Vec<u32>,
@@ -36,31 +38,18 @@ pub struct Arena {
 }
 
 impl Arena {
-    /// Size every buffer for `model` at batch capacity `batch`, with no
-    /// fastpath layers (no u64 scratch).
+    /// Size the structural buffers for `model` at batch capacity
+    /// `batch` (no u64 scratch — chain [`Arena::with_scratch_words`]
+    /// for backends that need it).
     pub fn for_model(model: &ModelDef, batch: usize) -> Arena {
-        Arena::for_model_with_schemes(model, batch, &[])
-    }
-
-    /// Size every buffer for `model` at batch capacity `batch`.
-    /// `schemes` is the plan's per-layer scheme choice (missing entries
-    /// mean "not fastpath"); layers routed to `Scheme::Fastpath` add
-    /// their u64 operand scratch and FC dot staging to the arena.
-    pub fn for_model_with_schemes(
-        model: &ModelDef,
-        batch: usize,
-        schemes: &[Scheme],
-    ) -> Arena {
         let mut dims = model.input;
         let mut max_words = 0usize;
         let mut max_ints = 0usize;
-        let mut max_w64 = 0usize;
         // the first binarization of a flat fp input also lands in a buffer
         if dims.hw == 0 {
             max_words = max_words.max(flat_words(batch, dims.feat));
         }
-        for (li, l) in model.layers.iter().enumerate() {
-            let fast = schemes.get(li) == Some(&Scheme::Fastpath);
+        for l in &model.layers {
             match *l {
                 LayerSpec::FirstConv { o, k, stride, pad, .. } => {
                     let ohw = (dims.hw + 2 * pad - k) / stride + 1;
@@ -71,27 +60,16 @@ impl Arena {
                     let opre = (dims.hw + 2 * pad - k) / stride + 1;
                     max_words = max_words.max(bits_words(opre, batch, o));
                     max_ints = max_ints.max(opre * opre * batch * o);
-                    if fast {
-                        let tap_words = words64(dims.feat.div_ceil(32));
-                        max_w64 = max_w64
-                            .max(opre * opre * batch * k * k * tap_words);
-                    }
                 }
                 LayerSpec::BinFc { d_in, d_out } => {
-                    // flatten staging + the packed output rows
+                    // flatten staging + the packed output rows + dots
                     max_words = max_words.max(flat_words(batch, d_in));
                     max_words = max_words.max(flat_words(batch, d_out));
-                    if fast {
-                        max_w64 = max_w64.max(batch * words64(d_in.div_ceil(32)));
-                        max_ints = max_ints.max(batch * d_out);
-                    }
+                    max_ints = max_ints.max(batch * d_out);
                 }
                 LayerSpec::FinalFc { d_in, d_out } => {
                     max_words = max_words.max(flat_words(batch, d_in));
-                    if fast {
-                        max_w64 = max_w64.max(batch * words64(d_in.div_ceil(32)));
-                        max_ints = max_ints.max(batch * d_out);
-                    }
+                    max_ints = max_ints.max(batch * d_out);
                 }
                 LayerSpec::Pool => {
                     max_words = max_words.max(bits_words(dims.hw, batch, dims.feat));
@@ -103,9 +81,16 @@ impl Arena {
             bits_a: vec![0u32; max_words],
             bits_b: vec![0u32; max_words],
             ints: vec![0i32; max_ints],
-            words64: vec![0u64; max_w64],
+            words64: Vec::new(),
             logits: vec![0f32; batch * model.classes],
         }
+    }
+
+    /// Attach `words` u64 words of backend scratch (the maximum any
+    /// prepared layer reported for the batch capacity).
+    pub fn with_scratch_words(mut self, words: usize) -> Arena {
+        self.words64 = vec![0u64; words];
+        self
     }
 
     /// Total allocated bytes — the arena's high-water mark.  Constant
@@ -125,12 +110,15 @@ mod tests {
     use crate::nn::model::{cifar_vgg, mnist_mlp};
 
     #[test]
-    fn mlp_arena_has_no_conv_staging() {
+    fn mlp_arena_sizes_fc_dot_staging() {
         let a = Arena::for_model(&mnist_mlp(), 32);
-        assert!(a.ints.is_empty());
         // biggest flat activation: 32 rows x 1024 bits
         assert!(a.bits_a.len() >= 32 * (1024 / 32));
+        // dot staging covers the widest FC layer
+        assert!(a.ints.len() >= 32 * 1024);
         assert_eq!(a.logits.len(), 32 * 10);
+        // no backend asked for u64 scratch
+        assert!(a.words64.is_empty());
     }
 
     #[test]
@@ -144,25 +132,20 @@ mod tests {
     }
 
     #[test]
-    fn fastpath_schemes_add_u64_scratch() {
-        let m = mnist_mlp();
-        let schemes = vec![Scheme::Fastpath; m.layers.len()];
-        let a = Arena::for_model_with_schemes(&m, 8, &schemes);
-        // repacked input rows for the widest FC + dot staging
-        assert!(!a.words64.is_empty());
-        assert!(a.ints.len() >= 8 * 1024);
-        // without fastpath layers the scratch stays empty
-        let plain = Arena::for_model(&m, 8);
+    fn scratch_words_attach_u64_buffer() {
+        let a = Arena::for_model(&mnist_mlp(), 8).with_scratch_words(1024);
+        assert_eq!(a.words64.len(), 1024);
+        let plain = Arena::for_model(&mnist_mlp(), 8);
         assert!(plain.words64.is_empty());
-        assert!(plain.ints.is_empty());
     }
 
     #[test]
     fn bytes_reports_total() {
-        let a = Arena::for_model(&mnist_mlp(), 8);
+        let a = Arena::for_model(&mnist_mlp(), 8).with_scratch_words(16);
         assert_eq!(
             a.bytes(),
             4 * (a.bits_a.len() + a.bits_b.len() + a.ints.len() + a.logits.len())
+                + 8 * a.words64.len()
         );
     }
 }

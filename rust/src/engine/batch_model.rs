@@ -2,20 +2,44 @@
 //! stack — any Table-5 BNN model becomes a `coordinator::server`
 //! `BatchModel`, with executor throughput surfaced through
 //! `coordinator::metrics`.
+//!
+//! Construction goes through [`EngineModel::builder`] with a
+//! [`PlanPolicy`] — `Search` (per-layer cost search over the planner's
+//! registry), `Fixed(scheme)` (pin one scheme everywhere, e.g.
+//! `Scheme::Fastpath` on a GPU-less host), or `Cached` (consult a
+//! [`PlanCache`], search on miss).  The executor is built against the
+//! planner's registry, so custom backends serve end to end with no
+//! changes here.  (The old `EngineModel::new` / `new_fixed`
+//! constructors collapsed into this builder.)
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::server::BatchModel;
 use crate::coordinator::Metrics;
 use crate::nn::forward::ModelWeights;
-use crate::nn::ModelDef;
+use crate::nn::{ModelDef, Scheme};
 
 use super::executor::EngineExecutor;
 use super::plan_cache::PlanCache;
 use super::planner::Planner;
+
+/// How the builder obtains the model's execution plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanPolicy {
+    /// Per-layer cost search over every backend in the planner's
+    /// registry (the default).
+    Search,
+    /// Pin every layer to one scheme — e.g. `Scheme::Fastpath` to
+    /// serve the blocked-u64 host backend on a machine without a
+    /// Turing GPU.
+    Fixed(Scheme),
+    /// Look the plan up in the builder's [`PlanCache`] (search + persist
+    /// on miss).  Requires [`EngineModelBuilder::cache`].
+    Cached,
+}
 
 /// A served engine-backed model.
 pub struct EngineModel {
@@ -28,56 +52,91 @@ pub struct EngineModel {
     pub metrics: Arc<Metrics>,
 }
 
-impl EngineModel {
-    /// Build from an explicit plan-per-max-bucket: plans (or fetches
-    /// from `cache`) at the largest bucket, which also sizes the arena.
-    pub fn new(
-        planner: &Planner,
-        model: &ModelDef,
-        weights: &ModelWeights,
-        buckets: Vec<usize>,
-        cache: Option<&PlanCache>,
-    ) -> Result<EngineModel> {
-        let max_bucket = validate_buckets(&buckets)?;
-        let plan = match cache {
-            Some(c) => c.get_or_plan(planner, model, max_bucket),
-            None => planner.plan(model, max_bucket),
+/// Builder for [`EngineModel`] — see [`PlanPolicy`].
+pub struct EngineModelBuilder<'a> {
+    planner: &'a Planner,
+    model: &'a ModelDef,
+    weights: &'a ModelWeights,
+    buckets: Vec<usize>,
+    policy: PlanPolicy,
+    cache: Option<&'a PlanCache>,
+}
+
+impl<'a> EngineModelBuilder<'a> {
+    /// Batch buckets the served model accepts (ascending multiples of
+    /// 8); the largest sizes the arena.  Required.
+    pub fn buckets(mut self, buckets: Vec<usize>) -> Self {
+        self.buckets = buckets;
+        self
+    }
+
+    /// The plan policy (default [`PlanPolicy::Search`]).
+    pub fn policy(mut self, policy: PlanPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Attach a plan cache (required for [`PlanPolicy::Cached`]).
+    pub fn cache(mut self, cache: &'a PlanCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Plan per the policy and build the executor + metrics sink.
+    pub fn build(self) -> Result<EngineModel> {
+        let max_bucket = validate_buckets(&self.buckets)?;
+        let plan = match self.policy {
+            PlanPolicy::Search => self.planner.plan(self.model, max_bucket),
+            PlanPolicy::Fixed(scheme) => {
+                // surface a bad configuration as a build Result instead
+                // of reaching plan_fixed's panic (which would kill a
+                // serving worker running this builder in its factory)
+                ensure!(
+                    self.planner.registry().get(scheme).is_some(),
+                    "PlanPolicy::Fixed({}): scheme has no backend in the \
+                     planner's registry",
+                    scheme.name()
+                );
+                self.planner.plan_fixed(self.model, max_bucket, scheme)
+            }
+            PlanPolicy::Cached => self
+                .cache
+                .context("PlanPolicy::Cached requires .cache(..)")?
+                .get_or_plan(self.planner, self.model, max_bucket),
         };
-        EngineModel::from_plan(model, weights, buckets, plan)
-    }
-
-    /// Build with every layer pinned to `scheme` — e.g.
-    /// `Scheme::Fastpath` to serve the blocked-u64 host backend on a
-    /// machine without a Turing GPU.
-    pub fn new_fixed(
-        planner: &Planner,
-        model: &ModelDef,
-        weights: &ModelWeights,
-        buckets: Vec<usize>,
-        scheme: crate::nn::Scheme,
-    ) -> Result<EngineModel> {
-        let max_bucket = validate_buckets(&buckets)?;
-        let plan = planner.plan_fixed(model, max_bucket, scheme);
-        EngineModel::from_plan(model, weights, buckets, plan)
-    }
-
-    /// Build from an explicit plan (sized for the largest bucket).
-    fn from_plan(
-        model: &ModelDef,
-        weights: &ModelWeights,
-        buckets: Vec<usize>,
-        plan: super::plan::ModelPlan,
-    ) -> Result<EngineModel> {
-        let row_elems = model.input.flat();
-        let out_elems = model.classes;
-        let exec = EngineExecutor::new(model.clone(), weights, plan)?;
+        let row_elems = self.model.input.flat();
+        let out_elems = self.model.classes;
+        let exec = EngineExecutor::with_registry(
+            self.model.clone(),
+            self.weights,
+            plan,
+            self.planner.registry(),
+        )?;
         Ok(EngineModel {
             exec,
-            buckets,
+            buckets: self.buckets,
             row_elems,
             out_elems,
             metrics: Arc::new(Metrics::new()),
         })
+    }
+}
+
+impl EngineModel {
+    /// Start building a served model (see [`EngineModelBuilder`]).
+    pub fn builder<'a>(
+        planner: &'a Planner,
+        model: &'a ModelDef,
+        weights: &'a ModelWeights,
+    ) -> EngineModelBuilder<'a> {
+        EngineModelBuilder {
+            planner,
+            model,
+            weights,
+            buckets: Vec::new(),
+            policy: PlanPolicy::Search,
+            cache: None,
+        }
     }
 
     /// Share the metrics sink (e.g. to read images/sec from outside the
@@ -151,8 +210,10 @@ mod tests {
         let mut rng = Rng::new(3);
         let w = random_weights(&m, &mut rng);
         let planner = Planner::new(&RTX2080TI);
-        let mut em =
-            EngineModel::new(&planner, &m, &w, vec![8, 32], None).unwrap();
+        let mut em = EngineModel::builder(&planner, &m, &w)
+            .buckets(vec![8, 32])
+            .build()
+            .unwrap();
         assert_eq!(em.row_elems(), 784);
         assert_eq!(em.out_elems(), 10);
         for b in em.buckets() {
@@ -168,13 +229,66 @@ mod tests {
     }
 
     #[test]
+    fn fixed_policy_pins_the_scheme() {
+        let m = mnist_mlp();
+        let mut rng = Rng::new(5);
+        let w = random_weights(&m, &mut rng);
+        let planner = Planner::new(&RTX2080TI);
+        let em = EngineModel::builder(&planner, &m, &w)
+            .buckets(vec![8])
+            .policy(PlanPolicy::Fixed(Scheme::Fastpath))
+            .build()
+            .unwrap();
+        for lp in &em.plan().layers {
+            assert_eq!(lp.scheme, Scheme::Fastpath);
+        }
+    }
+
+    #[test]
+    fn fixed_policy_rejects_unregistered_scheme() {
+        let m = mnist_mlp();
+        let mut rng = Rng::new(7);
+        let w = random_weights(&m, &mut rng);
+        let mut reg = crate::kernels::backend::BackendRegistry::empty();
+        reg.register(Box::new(
+            crate::kernels::backends::fastpath::FastpathBackend,
+        ));
+        let planner = Planner::with_registry(&RTX2080TI, std::sync::Arc::new(reg));
+        let err = EngineModel::builder(&planner, &m, &w)
+            .buckets(vec![8])
+            .policy(PlanPolicy::Fixed(Scheme::Btc))
+            .build()
+            .err()
+            .expect("unregistered fixed scheme must be a build error, not a panic");
+        assert!(format!("{err:#}").contains("no backend"), "{err:#}");
+    }
+
+    #[test]
+    fn cached_policy_requires_a_cache() {
+        let m = mnist_mlp();
+        let mut rng = Rng::new(6);
+        let w = random_weights(&m, &mut rng);
+        let planner = Planner::new(&RTX2080TI);
+        let err = EngineModel::builder(&planner, &m, &w)
+            .buckets(vec![8])
+            .policy(PlanPolicy::Cached)
+            .build()
+            .err()
+            .expect("no cache attached");
+        assert!(format!("{err:#}").contains("cache"), "{err:#}");
+    }
+
+    #[test]
     fn bucket_validation() {
         let m = mnist_mlp();
         let mut rng = Rng::new(4);
         let w = random_weights(&m, &mut rng);
         let planner = Planner::new(&RTX2080TI);
-        assert!(EngineModel::new(&planner, &m, &w, vec![], None).is_err());
-        assert!(EngineModel::new(&planner, &m, &w, vec![32, 8], None).is_err());
-        assert!(EngineModel::new(&planner, &m, &w, vec![12], None).is_err());
+        let build = |buckets: Vec<usize>| {
+            EngineModel::builder(&planner, &m, &w).buckets(buckets).build()
+        };
+        assert!(build(vec![]).is_err());
+        assert!(build(vec![32, 8]).is_err());
+        assert!(build(vec![12]).is_err());
     }
 }

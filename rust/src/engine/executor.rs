@@ -2,38 +2,45 @@
 //! allocation on the request path.
 //!
 //! Construction takes a `ModelDef`, its weights, and a `ModelPlan`
-//! (validated against the definition), prepares execution-friendly
-//! weight layouts, and sizes an `Arena` for the plan's batch capacity.
-//! `forward` then runs every layer in place over the arena's ping-pong
-//! buffers, parallelized across output rows with
-//! `util::threadpool::scoped_chunks`.
+//! (validated against the definition), then asks the
+//! [`BackendRegistry`] for each plan layer's backend to *prepare* the
+//! weights: every binarized layer holds an opaque prepared-layer
+//! handle (`Box<dyn PreparedFc>` / `Box<dyn PreparedConv>`) that owns
+//! its scheme-specific packed weight image — u64 lines and im2row
+//! filter images for the fastpath, plain packed clones for the scalar
+//! schemes.  The arena (including each backend's reported u64 scratch)
+//! is sized once from the plan's batch capacity; `forward` then runs
+//! every layer in place over the arena's ping-pong buffers,
+//! parallelized across output rows with
+//! `util::threadpool::scoped_chunks`.  There is no `match` on `Scheme`
+//! anywhere in this module — backend dispatch is entirely
+//! registry-driven.
 //!
-//! Semantics are bit-identical to `nn::forward::forward` (the naive
-//! path): the same tap ordering for the first layer's f32 accumulation,
-//! the same Eq-2 integer math for binarized layers, the same threshold
-//! comparisons.  The plan's per-layer scheme selection affects the
-//! *cost/serving* decisions (and on a Turing GPU would select the
-//! kernel); the CPU functional semantics of every scheme are identical,
-//! which is exactly what the kernels-equivalence tests guarantee.
+//! Semantics are bit-identical to `nn::forward::forward` (the
+//! reference path): the same tap ordering for the first layer's f32
+//! accumulation, the same Eq-2 integer math for binarized layers, the
+//! same threshold comparisons.  The plan's per-layer scheme selection
+//! affects the *cost/serving* decisions (and on a Turing GPU would
+//! select the kernel); the CPU functional semantics of every scheme
+//! are identical, which is exactly what the kernels-equivalence tests
+//! guarantee.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::bitops::pack;
-use crate::bitops::pack64::{self, BitMatrix64};
-use crate::bitops::BitTensor4;
+use crate::kernels::backend::{BackendRegistry, ExecCtx, PreparedConv, PreparedFc};
 use crate::kernels::bconv::BconvProblem;
-use crate::kernels::fastpath::{self, FastConvFilter};
 use crate::nn::forward::{LayerWeights, ModelWeights};
 use crate::nn::layer::LayerSpec;
-use crate::nn::{ModelDef, Scheme};
+use crate::nn::ModelDef;
 use crate::util::threadpool::scoped_chunks;
 
 use super::arena::Arena;
 use super::plan::ModelPlan;
 
-/// Execution-friendly per-layer weights.  Layers the plan routes to
-/// `Scheme::Fastpath` additionally carry their u64-repacked weight
-/// image (`fast`/`w64`), prepared once at build time.
+/// Execution-ready per-layer state: structural weights for the
+/// scheme-independent layers, opaque backend handles for the binarized
+/// ones.
 enum PreparedLayer {
     FirstConv {
         /// +/-1 filter transposed to one contiguous row per output
@@ -42,20 +49,17 @@ enum PreparedLayer {
         thresh: Vec<f32>,
     },
     BinConv {
-        filter: BitTensor4,
+        conv: Box<dyn PreparedConv>,
         thresh: Vec<f32>,
-        fast: Option<FastConvFilter>,
     },
     BinFc {
-        w: crate::bitops::BitMatrix,
+        fc: Box<dyn PreparedFc>,
         thresh: Vec<f32>,
-        w64: Option<BitMatrix64>,
     },
     FinalFc {
-        w: crate::bitops::BitMatrix,
+        fc: Box<dyn PreparedFc>,
         gamma: Vec<f32>,
         beta: Vec<f32>,
-        w64: Option<BitMatrix64>,
     },
     Pool,
 }
@@ -82,8 +86,21 @@ pub struct EngineExecutor {
 }
 
 impl EngineExecutor {
-    /// Build an executor for `plan.batch` rows at a time.
+    /// Build an executor for `plan.batch` rows at a time, dispatching
+    /// through the global builtin registry.
     pub fn new(model: ModelDef, weights: &ModelWeights, plan: ModelPlan) -> Result<Self> {
+        EngineExecutor::with_registry(model, weights, plan, BackendRegistry::global())
+    }
+
+    /// Build against an explicit registry (custom/test backends).  The
+    /// registry is only consulted at build time — the prepared handles
+    /// own everything the request path needs.
+    pub fn with_registry(
+        model: ModelDef,
+        weights: &ModelWeights,
+        plan: ModelPlan,
+        registry: &BackendRegistry,
+    ) -> Result<Self> {
         ensure!(
             plan.layers.len() == model.layers.len(),
             "plan has {} layers, model {} has {}",
@@ -110,10 +127,10 @@ impl EngineExecutor {
         } else {
             bail!("model must end with a FinalFc classifier head");
         }
-        let prepared = prepare_weights(&model, weights, &plan)?;
         let batch_cap = plan.batch;
-        let schemes: Vec<Scheme> = plan.layers.iter().map(|l| l.scheme).collect();
-        let arena = Arena::for_model_with_schemes(&model, batch_cap, &schemes);
+        let (prepared, scratch_words) =
+            prepare_weights(&model, weights, &plan, registry, batch_cap)?;
+        let arena = Arena::for_model(&model, batch_cap).with_scratch_words(scratch_words);
         Ok(EngineExecutor {
             model,
             plan,
@@ -201,7 +218,7 @@ impl EngineExecutor {
                 }
                 (
                     LayerSpec::BinConv { o, k, stride, pad, pool, .. },
-                    PreparedLayer::BinConv { filter, thresh, fast },
+                    PreparedLayer::BinConv { conv, thresh },
                 ) => {
                     let Repr::Bits { hw, c } = repr else {
                         panic!("BinConv needs packed HWNC input");
@@ -209,59 +226,40 @@ impl EngineExecutor {
                     let wi = c.div_ceil(32);
                     let wio = o.div_ceil(32);
                     let ohw = (hw + 2 * pad - k) / stride + 1;
-                    let p = BinConvParams {
+                    let p = BconvProblem {
                         hw,
+                        n: batch,
                         c,
-                        wi,
                         o: *o,
                         k: *k,
                         stride: *stride,
                         pad: *pad,
-                        batch,
-                        ohw,
-                        wio,
                     };
                     let int_chunk = ohw * batch * o;
                     let t1 = par_threads(threads, ohw * int_chunk);
-                    if let Some(ff) = fast {
-                        // fastpath: bit-im2row + blocked u64 BMM into the
-                        // same i32 staging layout (exact integer math, so
-                        // the packed bits below are identical either way)
-                        let pb = BconvProblem {
-                            hw,
-                            n: batch,
-                            c,
-                            o: *o,
-                            k: *k,
-                            stride: *stride,
-                            pad: *pad,
-                        };
-                        let rows = ohw * ohw * batch;
-                        fastpath::bconv::bconv_into(
+                    {
+                        // backend-opaque Eq-2 accumulator pass into the
+                        // shared i32 staging (exact integer math, so the
+                        // packed bits below are identical for every
+                        // registered backend)
+                        let scratch = conv.scratch_words(p);
+                        let mut ctx =
+                            ExecCtx { words64: &mut words64[..scratch], threads: t1 };
+                        conv.bconv(
                             &src[..hw * hw * batch * wi],
-                            pb,
-                            ff,
-                            &mut words64[..rows * ff.row_words],
-                            &mut ints[..ohw * int_chunk],
-                            t1,
-                        );
-                    } else {
-                        bin_conv_ints(
-                            &src[..hw * hw * batch * wi],
-                            &mut ints[..ohw * int_chunk],
-                            int_chunk,
-                            t1,
                             p,
-                            filter,
+                            &mut ints[..ohw * int_chunk],
+                            &mut ctx,
                         );
                     }
+                    let pp = PackConvParams { ohw, batch, o: *o, wio };
                     let bit_chunk = ohw * batch * wio;
                     pack_conv_ints(
                         &ints[..ohw * int_chunk],
                         &mut dst[..ohw * bit_chunk],
                         bit_chunk,
                         t1,
-                        p,
+                        pp,
                         thresh,
                     );
                     if *pool {
@@ -304,88 +302,65 @@ impl EngineExecutor {
                 }
                 (
                     LayerSpec::BinFc { d_in, d_out },
-                    PreparedLayer::BinFc { w, thresh, w64 },
+                    PreparedLayer::BinFc { fc, thresh },
                 ) => {
                     // 1. materialize row-packed input bits in `dst`
                     let feat =
                         flatten_into(input, repr, batch, src, dst, *d_in, threads);
                     assert_eq!(feat, *d_in, "fc input width");
-                    // 2. dot + threshold back into `src`
+                    // 2. backend dot pass into the i32 staging, then
+                    //    threshold back into `src`
                     let wpl_in = d_in.div_ceil(32);
                     let wpl_out = d_out.div_ceil(32);
                     let t = par_threads(threads, batch * d_out * wpl_in / 8);
-                    if let Some(w64) = w64 {
-                        fc_dots_fast(
+                    {
+                        let scratch = fc.scratch_words(batch);
+                        let mut ctx =
+                            ExecCtx { words64: &mut words64[..scratch], threads: t };
+                        fc.bmm(
                             &dst[..batch * wpl_in],
-                            w64,
-                            words64,
-                            &mut ints[..batch * d_out],
                             batch,
-                            *d_in,
-                            *d_out,
-                            t,
-                        );
-                        pack_fc_ints(
-                            &ints[..batch * d_out],
-                            &mut src[..batch * wpl_out],
-                            wpl_out,
-                            t,
-                            *d_out,
-                            thresh,
-                        );
-                    } else {
-                        bin_fc_rows(
-                            &dst[..batch * wpl_in],
-                            &mut src[..batch * wpl_out],
-                            wpl_out,
-                            t,
-                            *d_in,
-                            *d_out,
-                            w,
-                            thresh,
+                            &mut ints[..batch * d_out],
+                            &mut ctx,
                         );
                     }
+                    pack_fc_ints(
+                        &ints[..batch * d_out],
+                        &mut src[..batch * wpl_out],
+                        wpl_out,
+                        t,
+                        *d_out,
+                        thresh,
+                    );
                     repr = Repr::Flat { feat: *d_out };
                     // two hops: result is back in the original buffer
                 }
                 (
                     LayerSpec::FinalFc { d_in, d_out },
-                    PreparedLayer::FinalFc { w, gamma, beta, w64 },
+                    PreparedLayer::FinalFc { fc, gamma, beta },
                 ) => {
                     let feat =
                         flatten_into(input, repr, batch, src, dst, *d_in, threads);
                     assert_eq!(feat, *d_in, "classifier input width");
                     let wpl_in = d_in.div_ceil(32);
                     let t = par_threads(threads, batch * d_out * wpl_in / 8);
-                    if let Some(w64) = w64 {
-                        fc_dots_fast(
+                    {
+                        let scratch = fc.scratch_words(batch);
+                        let mut ctx =
+                            ExecCtx { words64: &mut words64[..scratch], threads: t };
+                        fc.bmm(
                             &dst[..batch * wpl_in],
-                            w64,
-                            words64,
-                            &mut ints[..batch * d_out],
                             batch,
-                            *d_in,
-                            *d_out,
-                            t,
-                        );
-                        let seg = &ints[..batch * d_out];
-                        scoped_chunks(&mut logits[..batch * d_out], *d_out, t, |ni, row| {
-                            for (j, out) in row.iter_mut().enumerate() {
-                                *out = seg[ni * d_out + j] as f32 * gamma[j] + beta[j];
-                            }
-                        });
-                    } else {
-                        final_fc_rows(
-                            &dst[..batch * wpl_in],
-                            &mut logits[..batch * d_out],
-                            *d_out,
-                            t,
-                            *d_in,
-                            w,
-                            gamma,
-                            beta,
+                            &mut ints[..batch * d_out],
+                            &mut ctx,
                         );
                     }
+                    let seg = &ints[..batch * d_out];
+                    scoped_chunks(&mut logits[..batch * d_out], *d_out, t, |ni, row| {
+                        for (j, out) in row.iter_mut().enumerate() {
+                            *out = seg[ni * d_out + j] as f32 * gamma[j] + beta[j];
+                        }
+                    });
                     repr = Repr::Flat { feat: *d_out };
                 }
                 _ => panic!("layer/weight kind mismatch at layer {li}"),
@@ -405,21 +380,31 @@ fn par_threads(threads: usize, work_words: usize) -> usize {
     }
 }
 
-/// Convert `nn::forward::ModelWeights` into execution layouts.  Layers
-/// the plan routes to `Scheme::Fastpath` also get their u64 weight
-/// image prepared here, once, off the request path.
+/// Convert `nn::forward::ModelWeights` into execution state: validate
+/// shapes, transpose the first-conv filter, and ask each plan layer's
+/// registered backend to prepare its scheme-specific weight image —
+/// once, off the request path.  Returns the prepared layers plus the
+/// largest u64 scratch any of them needs at batch capacity (which
+/// sizes the arena's `words64` buffer).
 fn prepare_weights(
     model: &ModelDef,
     weights: &ModelWeights,
     plan: &ModelPlan,
-) -> Result<Vec<PreparedLayer>> {
+    registry: &BackendRegistry,
+    batch_cap: usize,
+) -> Result<(Vec<PreparedLayer>, usize)> {
     let mut out = Vec::with_capacity(model.layers.len());
+    let mut scratch_words = 0usize;
+    let mut dims = model.input;
     for (li, (l, w)) in model.layers.iter().zip(&weights.layers).enumerate() {
-        let fast = plan
-            .layers
-            .get(li)
-            .map(|lp| lp.scheme == Scheme::Fastpath)
-            .unwrap_or(false);
+        let backend = |scheme: crate::nn::Scheme| {
+            registry.get(scheme).ok_or_else(|| {
+                anyhow!(
+                    "layer {li}: plan scheme {} has no registered backend",
+                    scheme.name()
+                )
+            })
+        };
         out.push(match (l, w) {
             (
                 LayerSpec::FirstConv { c, o, k, .. },
@@ -441,7 +426,7 @@ fn prepare_weights(
                 PreparedLayer::FirstConv { w_t, thresh: thresh.clone() }
             }
             (
-                LayerSpec::BinConv { c, o, k, .. },
+                LayerSpec::BinConv { c, o, k, stride, pad, .. },
                 LayerWeights::BinConv { filter, thresh },
             ) => {
                 ensure!(
@@ -450,21 +435,23 @@ fn prepare_weights(
                     filter.dims
                 );
                 ensure!(thresh.len() == *o, "layer {li}: threshold table size");
-                if fast {
-                    // reject here, at build time, instead of panicking on
-                    // the first request inside the serving worker
-                    ensure!(
-                        k * k <= crate::kernels::fastpath::bconv::MAX_TAPS,
-                        "layer {li}: {k}x{k} filter exceeds the fastpath tap \
-                         limit ({} taps)",
-                        crate::kernels::fastpath::bconv::MAX_TAPS
-                    );
-                }
-                PreparedLayer::BinConv {
-                    fast: fast.then(|| FastConvFilter::prepare(filter)),
-                    filter: filter.clone(),
-                    thresh: thresh.clone(),
-                }
+                ensure!(dims.feat == *c, "layer {li}: input channel walk mismatch");
+                // the problem at batch capacity: scratch needs are
+                // monotone in batch, so this covers every request
+                let p = BconvProblem {
+                    hw: dims.hw,
+                    n: batch_cap,
+                    c: *c,
+                    o: *o,
+                    k: *k,
+                    stride: *stride,
+                    pad: *pad,
+                };
+                let conv = backend(plan.layers[li].scheme)?
+                    .prepare_conv(filter, p)
+                    .map_err(|e| anyhow!("layer {li}: {e}"))?;
+                scratch_words = scratch_words.max(conv.scratch_words(p));
+                PreparedLayer::BinConv { conv, thresh: thresh.clone() }
             }
             (LayerSpec::BinFc { d_in, d_out }, LayerWeights::BinFc { w, thresh }) => {
                 ensure!(
@@ -474,11 +461,11 @@ fn prepare_weights(
                     w.cols
                 );
                 ensure!(thresh.len() == *d_out, "layer {li}: threshold table size");
-                PreparedLayer::BinFc {
-                    w64: fast.then(|| BitMatrix64::from_bitmatrix(w)),
-                    w: w.clone(),
-                    thresh: thresh.clone(),
-                }
+                let fc = backend(plan.layers[li].scheme)?
+                    .prepare_fc(w)
+                    .map_err(|e| anyhow!("layer {li}: {e}"))?;
+                scratch_words = scratch_words.max(fc.scratch_words(batch_cap));
+                PreparedLayer::BinFc { fc, thresh: thresh.clone() }
             }
             (
                 LayerSpec::FinalFc { d_in, d_out },
@@ -492,9 +479,12 @@ fn prepare_weights(
                     gamma.len() == *d_out && beta.len() == *d_out,
                     "layer {li}: bn table size"
                 );
+                let fc = backend(plan.layers[li].scheme)?
+                    .prepare_fc(w)
+                    .map_err(|e| anyhow!("layer {li}: {e}"))?;
+                scratch_words = scratch_words.max(fc.scratch_words(batch_cap));
                 PreparedLayer::FinalFc {
-                    w64: fast.then(|| BitMatrix64::from_bitmatrix(w)),
-                    w: w.clone(),
+                    fc,
                     gamma: gamma.clone(),
                     beta: beta.clone(),
                 }
@@ -502,8 +492,9 @@ fn prepare_weights(
             (LayerSpec::Pool, LayerWeights::Pool) => PreparedLayer::Pool,
             _ => bail!("layer {li}: weight kind does not match layer spec"),
         });
+        dims = dims.after(l);
     }
-    Ok(out)
+    Ok((out, scratch_words))
 }
 
 #[derive(Clone, Copy)]
@@ -575,67 +566,13 @@ fn first_conv_rows(
     });
 }
 
+/// Shape of one conv threshold-packing pass.
 #[derive(Clone, Copy)]
-struct BinConvParams {
-    hw: usize,
-    c: usize,
-    wi: usize,
-    o: usize,
-    k: usize,
-    stride: usize,
-    pad: usize,
-    batch: usize,
+struct PackConvParams {
     ohw: usize,
+    batch: usize,
+    o: usize,
     wio: usize,
-}
-
-/// Binarized conv accumulator pass: Eq-2 cross-correlation with the
-/// paper's exclude-amended padding, written as i32 into the staging
-/// buffer (layout `((op*ohw + oq)*batch + ni)*o + oi`).
-fn bin_conv_ints(
-    src: &[u32],
-    ints: &mut [i32],
-    chunk: usize,
-    threads: usize,
-    p: BinConvParams,
-    filter: &BitTensor4,
-) {
-    scoped_chunks(ints, chunk, threads, |op, row| {
-        for oq in 0..p.ohw {
-            let seg = &mut row[oq * p.batch * p.o..(oq + 1) * p.batch * p.o];
-            seg.fill(0);
-            let mut exclude = 0usize;
-            for r in 0..p.k {
-                for s in 0..p.k {
-                    let i = (op * p.stride + r) as isize - p.pad as isize;
-                    let j = (oq * p.stride + s) as isize - p.pad as isize;
-                    if i < 0 || i >= p.hw as isize || j < 0 || j >= p.hw as isize {
-                        exclude += 1;
-                        continue;
-                    }
-                    let (i, j) = (i as usize, j as usize);
-                    for ni in 0..p.batch {
-                        let abase = ((i * p.hw + j) * p.batch + ni) * p.wi;
-                        let a = &src[abase..abase + p.wi];
-                        let out_row = &mut seg[ni * p.o..(ni + 1) * p.o];
-                        for (oi, out) in out_row.iter_mut().enumerate() {
-                            let b = filter.inner(r, s, oi);
-                            let mut pc = 0u32;
-                            for (x, y) in a.iter().zip(b.iter()) {
-                                pc += (x ^ y).count_ones();
-                            }
-                            *out += pc as i32;
-                        }
-                    }
-                }
-            }
-            // Eq 2 with the padding amendment: n_valid - 2*popc
-            let n_valid = (p.c * (p.k * p.k - exclude)) as i32;
-            for v in seg.iter_mut() {
-                *v = n_valid - 2 * *v;
-            }
-        }
-    });
 }
 
 /// Threshold + repack the conv accumulators into HWNC bits.
@@ -644,7 +581,7 @@ fn pack_conv_ints(
     dst: &mut [u32],
     chunk: usize,
     threads: usize,
-    p: BinConvParams,
+    p: PackConvParams,
     thresh: &[f32],
 ) {
     scoped_chunks(dst, chunk, threads, |op, row| {
@@ -784,33 +721,8 @@ fn flatten_into(
     }
 }
 
-/// Fastpath FC dot pass: repack the row-packed u32 input into the u64
-/// arena scratch, then run the blocked BMM against the prepared u64
-/// weights.  `ints` receives the Eq-2 values in `batch x d_out` layout
-/// — exactly what `bin_fc_rows`/`final_fc_rows` compute per entry.
-#[allow(clippy::too_many_arguments)]
-fn fc_dots_fast(
-    src: &[u32],
-    w64: &BitMatrix64,
-    scratch: &mut [u64],
-    ints: &mut [i32],
-    batch: usize,
-    d_in: usize,
-    d_out: usize,
-    threads: usize,
-) {
-    let wpl_in = d_in.div_ceil(32);
-    let w64in = pack64::words64(wpl_in);
-    debug_assert_eq!(w64.words_per_line, w64in, "weight repack width");
-    let rows = &mut scratch[..batch * w64in];
-    for (ni, row) in rows.chunks_exact_mut(w64in).enumerate() {
-        pack64::repack64_into(&src[ni * wpl_in..(ni + 1) * wpl_in], row);
-    }
-    fastpath::bmm::dot_lines(rows, &w64.data, w64in, batch, d_out, d_in, ints, threads);
-}
-
-/// Threshold + repack fastpath FC dots into packed output rows —
-/// bitwise the same rule as the tail of `bin_fc_rows`.
+/// Threshold + repack FC dots into packed output rows — bitwise the
+/// same rule for every backend.
 fn pack_fc_ints(
     ints: &[i32],
     dst: &mut [u32],
@@ -836,66 +748,13 @@ fn pack_fc_ints(
     });
 }
 
-/// Binarized FC: per-row Eq-2 dots + threshold, packed output rows.
-#[allow(clippy::too_many_arguments)]
-fn bin_fc_rows(
-    src: &[u32],
-    dst: &mut [u32],
-    wpl_out: usize,
-    threads: usize,
-    d_in: usize,
-    d_out: usize,
-    w: &crate::bitops::BitMatrix,
-    thresh: &[f32],
-) {
-    let wpl_in = d_in.div_ceil(32);
-    scoped_chunks(dst, wpl_out, threads, |ni, row| {
-        let a = &src[ni * wpl_in..(ni + 1) * wpl_in];
-        for (wo, out) in row.iter_mut().enumerate() {
-            let mut word = 0u32;
-            for bit in 0..32 {
-                let j = wo * 32 + bit;
-                if j >= d_out {
-                    break;
-                }
-                let v = pack::pm1_dot(a, w.line(j), d_in);
-                if (v as f32) >= thresh[j] {
-                    word |= 1 << bit;
-                }
-            }
-            *out = word;
-        }
-    });
-}
-
-/// Classifier head: Eq-2 dots + batch-norm scale/shift into fp logits.
-#[allow(clippy::too_many_arguments)]
-fn final_fc_rows(
-    src: &[u32],
-    logits: &mut [f32],
-    d_out: usize,
-    threads: usize,
-    d_in: usize,
-    w: &crate::bitops::BitMatrix,
-    gamma: &[f32],
-    beta: &[f32],
-) {
-    let wpl_in = d_in.div_ceil(32);
-    scoped_chunks(logits, d_out, threads, |ni, row| {
-        let a = &src[ni * wpl_in..(ni + 1) * wpl_in];
-        for (j, out) in row.iter_mut().enumerate() {
-            let v = pack::pm1_dot(a, w.line(j), d_in) as f32;
-            *out = v * gamma[j] + beta[j];
-        }
-    });
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::engine::planner::Planner;
     use crate::nn::forward::{forward, random_weights};
     use crate::nn::layer::Dims;
+    use crate::nn::Scheme;
     use crate::sim::RTX2080TI;
     use crate::util::Rng;
 
@@ -972,23 +831,33 @@ mod tests {
     }
 
     #[test]
-    fn fastpath_plan_matches_naive_forward_bit_for_bit() {
+    fn every_scheme_plan_matches_naive_forward_bit_for_bit() {
+        // one fixed plan per registered scheme: all backends must
+        // produce identical bits through the executor
         for (m, seed) in [(conv_model(), 15u64), (pool_model(), 19u64)] {
             let batch = 8;
             let mut rng = Rng::new(seed);
             let weights = random_weights(&m, &mut rng);
-            let plan =
-                Planner::new(&RTX2080TI).plan_fixed(&m, batch, Scheme::Fastpath);
-            let mut exec = EngineExecutor::new(m.clone(), &weights, plan).unwrap();
             let x: Vec<f32> = (0..batch * m.input.flat())
                 .map(|_| rng.next_f32() - 0.5)
                 .collect();
             let want = forward(&m, &weights, &x, batch);
-            assert_eq!(exec.forward(&x, batch), &want[..], "{}", m.name);
-            // the u64 scratch was sized at build time and never grows
-            let watermark = exec.arena_bytes();
-            let _ = exec.forward(&x, batch);
-            assert_eq!(exec.arena_bytes(), watermark);
+            for scheme in BackendRegistry::global().schemes() {
+                let plan = Planner::new(&RTX2080TI).plan_fixed(&m, batch, scheme);
+                let mut exec =
+                    EngineExecutor::new(m.clone(), &weights, plan).unwrap();
+                assert_eq!(
+                    exec.forward(&x, batch),
+                    &want[..],
+                    "{} under {}",
+                    m.name,
+                    scheme.name()
+                );
+                // the scratch was sized at build time and never grows
+                let watermark = exec.arena_bytes();
+                let _ = exec.forward(&x, batch);
+                assert_eq!(exec.arena_bytes(), watermark);
+            }
         }
     }
 
@@ -1042,10 +911,9 @@ mod tests {
         let x8: Vec<f32> =
             (0..8 * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
         let want8 = forward(&m, &weights, &x8, 8);
-        // run batch 3 (subset rows) on the batch-8 arena.  The naive
-        // path only supports multiple-of-8 batches (btc_compute tiles
-        // rows in blocks of 8), so ground truth for the shared rows is
-        // the batch-8 run — per-row independence makes them comparable.
+        // run batch 3 (subset rows) on the batch-8 arena; rows are
+        // independent in both paths, so the batch-8 prefix is ground
+        // truth for the shared rows
         let x3 = x8[..3 * m.input.flat()].to_vec();
         let got3 = exec.forward(&x3, 3).to_vec();
         assert_eq!(got3.len(), 3 * 4);
@@ -1082,5 +950,18 @@ mod tests {
         let other = pool_model();
         let plan = Planner::new(&RTX2080TI).plan(&other, 8);
         assert!(EngineExecutor::new(m, &weights, plan).is_err());
+    }
+
+    #[test]
+    fn rejects_plan_scheme_missing_from_registry() {
+        let m = conv_model();
+        let mut rng = Rng::new(33);
+        let weights = random_weights(&m, &mut rng);
+        let plan = Planner::new(&RTX2080TI).plan(&m, 8);
+        let empty = BackendRegistry::empty();
+        let err = EngineExecutor::with_registry(m, &weights, plan, &empty)
+            .err()
+            .expect("empty registry cannot prepare");
+        assert!(err.to_string().contains("no registered backend"), "{err}");
     }
 }

@@ -2,35 +2,44 @@
 //! packed-bit serving.
 //!
 //! This subsystem turns the repo's functional pieces (bit formats,
-//! scheme implementations, the calibrated Turing cost model, the
-//! coordinator) into a servable engine:
+//! the `kernels::backend::KernelBackend` providers, the calibrated
+//! Turing cost model, the coordinator) into a servable engine:
 //!
-//! * `planner` — for a `ModelDef` and batch bucket, simulates every
-//!   scheme per layer with `nn::cost::layer_secs` (the exact machinery
-//!   behind `model_cost`) — the six Tables-6/7 rows plus the host
-//!   `FASTPATH` backend — and picks the cheapest, emitting an
-//!   executable [`plan::ModelPlan`].  This is the paper's central lesson
-//!   operationalized: scheme and data-format choice is a per-layer-shape
-//!   decision, not a global one.  `Planner::plan_fixed` pins one scheme
-//!   everywhere (how a GPU-less host serves `kernels::fastpath`).
-//! * `plan` / `plan_cache` — plans serialize to JSON and persist in a
-//!   directory cache keyed by (model, batch shape, gpu), with hit/miss
-//!   counters for observability.
-//! * `arena` / `executor` — the execution side: every buffer is
-//!   allocated once up front from the model shape, and the packed-bit
-//!   forward pass then runs with zero heap allocation per request,
-//!   parallelized across output rows via
+//! * `planner` — for a `ModelDef` and batch bucket, asks every backend
+//!   in a `BackendRegistry` for its `layer_secs` cost face — the six
+//!   Tables-6/7 rows plus the host `FASTPATH` backend, or any custom
+//!   registration — and picks the cheapest per layer, emitting an
+//!   executable [`plan::ModelPlan`].  This is the paper's central
+//!   lesson operationalized: scheme and data-format choice is a
+//!   per-layer-shape decision, not a global one.  `Planner::plan_fixed`
+//!   pins one scheme everywhere (how a GPU-less host serves
+//!   `kernels::fastpath`).
+//! * `plan` / `plan_cache` — plans serialize to JSON (schema-versioned,
+//!   embedding the searched scheme set) and persist in a directory
+//!   cache keyed by (model, batch shape, gpu), with hit/miss counters
+//!   for observability.  Entries from an older schema or a different
+//!   backend set are stale → re-planned.
+//! * `arena` / `executor` — the execution side: each plan layer holds
+//!   an opaque prepared-weight handle from its backend
+//!   (`Box<dyn PreparedFc>` / `Box<dyn PreparedConv>` owning u64
+//!   lines, im2row filter images, ...), every buffer — including
+//!   backend-reported u64 scratch — is allocated once up front, and
+//!   the packed-bit forward pass then runs with zero heap allocation
+//!   per request, parallelized across output rows via
 //!   `util::threadpool::scoped_chunks`.  Results are bit-identical to
-//!   the naive `nn::forward` path.
+//!   the `nn::forward` reference for every backend.
 //! * `weights` — weight persistence through the runtime's flat blob
 //!   format (`*.bin` + `*.meta`).
 //! * `batch_model` — [`EngineModel`] implements the coordinator's
-//!   `BatchModel`, so `coordinator::server`/`router` can serve any
-//!   Table-5 model end to end (not just the PJRT MLP), with engine
-//!   images/sec exposed through `coordinator::metrics`.
+//!   `BatchModel`; built through [`EngineModel::builder`] with a
+//!   [`PlanPolicy`] (`Search` | `Fixed(scheme)` | `Cached`), so
+//!   `coordinator::server`/`router` can serve any Table-5 model end to
+//!   end, with engine images/sec exposed through
+//!   `coordinator::metrics`.
 //!
-//! See `docs/ENGINE.md` for the planner -> plan cache -> arena executor
-//! flow and `examples/serve_bnn.rs` for an end-to-end serving demo.
+//! See `docs/ENGINE.md` for the backend -> planner -> plan cache ->
+//! arena executor flow (and the "Adding a backend" walkthrough) and
+//! `examples/serve_bnn.rs` for an end-to-end serving demo.
 
 pub mod arena;
 pub mod batch_model;
@@ -42,9 +51,9 @@ pub mod planner;
 pub mod weights;
 
 pub use arena::Arena;
-pub use batch_model::EngineModel;
+pub use batch_model::{EngineModel, EngineModelBuilder, PlanPolicy};
 pub use executor::EngineExecutor;
-pub use plan::{LayerPlan, ModelPlan};
+pub use plan::{LayerPlan, ModelPlan, PLAN_SCHEMA};
 pub use plan_cache::PlanCache;
 pub use planner::Planner;
 pub use weights::{weights_from_blob, weights_to_blob};

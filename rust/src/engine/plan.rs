@@ -7,6 +7,15 @@ use crate::nn::Scheme;
 
 use super::json::Value;
 
+/// Version of the plan JSON document.  Bump whenever the document
+/// layout changes; `from_json` rejects any other version, so stale
+/// cache entries degrade to a re-plan instead of silently parsing.
+///
+/// v2: the `KernelBackend` registry redesign — plans embed the scheme
+/// set they were searched over (`schemes`), so a plan cached before a
+/// new backend registered is detectably stale.
+pub const PLAN_SCHEMA: usize = 2;
+
 /// One layer's planned execution: the winning scheme and its simulated
 /// cost on the plan's GPU.
 #[derive(Clone, Debug, PartialEq)]
@@ -30,6 +39,11 @@ pub struct ModelPlan {
     pub gpu: String,
     pub batch: usize,
     pub classes: usize,
+    /// the scheme names the emitting planner's registry searched, in
+    /// search order.  A cached plan whose set differs from the serving
+    /// registry is stale: a newly registered backend never competed
+    /// for these layers, so the cache must re-plan.
+    pub scheme_set: Vec<String>,
     pub layers: Vec<LayerPlan>,
     /// simulated end-to-end seconds (launch + per-layer compute + sync),
     /// directly comparable to `nn::cost::model_cost(...).total_secs`
@@ -74,21 +88,37 @@ impl ModelPlan {
                 ])
             })
             .collect();
+        let schemes: Vec<Value> = self
+            .scheme_set
+            .iter()
+            .map(|s| Value::Str(s.clone()))
+            .collect();
         Value::Obj(vec![
+            ("schema".to_string(), Value::Num(PLAN_SCHEMA as f64)),
             ("model".to_string(), Value::Str(self.model.clone())),
             ("dataset".to_string(), Value::Str(self.dataset.clone())),
             ("gpu".to_string(), Value::Str(self.gpu.clone())),
             ("batch".to_string(), Value::Num(self.batch as f64)),
             ("classes".to_string(), Value::Num(self.classes as f64)),
+            ("schemes".to_string(), Value::Arr(schemes)),
             ("total_secs".to_string(), Value::Num(self.total_secs)),
             ("layers".to_string(), Value::Arr(layers)),
         ])
         .to_string()
     }
 
-    /// Parse a plan-cache JSON document.
+    /// Parse a plan-cache JSON document.  Documents from any other
+    /// [`PLAN_SCHEMA`] version (including pre-versioning ones without a
+    /// `schema` field) are rejected — the cache treats that as a miss.
     pub fn from_json(text: &str) -> Result<ModelPlan> {
         let v = Value::parse(text).map_err(|e| anyhow::anyhow!("plan json: {e}"))?;
+        let schema = v
+            .get("schema")
+            .and_then(Value::as_usize)
+            .context("plan field \"schema\" (pre-versioning document?)")?;
+        if schema != PLAN_SCHEMA {
+            bail!("plan schema {schema} (this build reads {PLAN_SCHEMA}); stale entry");
+        }
         let str_field = |key: &str| -> Result<String> {
             Ok(v.get(key)
                 .and_then(Value::as_str)
@@ -100,6 +130,20 @@ impl ModelPlan {
                 .and_then(Value::as_usize)
                 .with_context(|| format!("plan field {key:?}"))
         };
+        let mut scheme_set = Vec::new();
+        for (i, sv) in v
+            .get("schemes")
+            .and_then(Value::as_arr)
+            .context("plan field \"schemes\"")?
+            .iter()
+            .enumerate()
+        {
+            scheme_set.push(
+                sv.as_str()
+                    .with_context(|| format!("schemes[{i}]"))?
+                    .to_string(),
+            );
+        }
         let mut layers = Vec::new();
         for (i, lv) in v
             .get("layers")
@@ -112,9 +156,8 @@ impl ModelPlan {
                 .get("scheme")
                 .and_then(Value::as_str)
                 .with_context(|| format!("layer {i} scheme"))?;
-            let Some(scheme) = Scheme::from_name(scheme_name) else {
-                bail!("layer {i}: unknown scheme {scheme_name:?}");
-            };
+            let scheme = Scheme::from_name(scheme_name)
+                .map_err(|e| anyhow::anyhow!("layer {i}: {e}"))?;
             layers.push(LayerPlan {
                 index: lv
                     .get("index")
@@ -138,6 +181,7 @@ impl ModelPlan {
             gpu: str_field("gpu")?,
             batch: num_field("batch")?,
             classes: num_field("classes")?,
+            scheme_set,
             layers,
             total_secs: v
                 .get("total_secs")
@@ -170,6 +214,7 @@ mod tests {
             gpu: "RTX2080Ti".to_string(),
             batch: 32,
             classes: 10,
+            scheme_set: Scheme::all().iter().map(|s| s.name().to_string()).collect(),
             layers: vec![
                 LayerPlan {
                     index: 0,
@@ -198,7 +243,20 @@ mod tests {
     #[test]
     fn rejects_unknown_scheme() {
         let text = sample().to_json().replace("BTC-FMT", "WARP-9");
+        let err = ModelPlan::from_json(&text).unwrap_err();
+        // the error names the valid schemes (from Scheme::from_name)
+        assert!(format!("{err:#}").contains("valid schemes"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_other_schema_versions() {
+        let text = sample()
+            .to_json()
+            .replace("\"schema\":2", "\"schema\":1");
         assert!(ModelPlan::from_json(&text).is_err());
+        // a pre-versioning document (no schema field at all) also fails
+        let legacy = sample().to_json().replace("\"schema\":2,", "");
+        assert!(ModelPlan::from_json(&legacy).is_err());
     }
 
     #[test]

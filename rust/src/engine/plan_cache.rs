@@ -1,13 +1,22 @@
 //! Persistent JSON plan cache keyed by (model, batch shape, gpu).
 //!
-//! Planning is cheap but not free (six scheme simulations per layer);
-//! serving stacks restart often and re-plan the same shapes.  The cache
-//! stores one JSON document per key under a directory and counts
-//! hits/misses so benches can report cache effectiveness.
+//! Planning is cheap but not free (one cost simulation per registered
+//! backend per layer); serving stacks restart often and re-plan the
+//! same shapes.  The cache stores one JSON document per key under a
+//! directory and counts hits/misses so benches can report cache
+//! effectiveness.
+//!
+//! Staleness: every plan embeds its JSON schema version and the scheme
+//! set it was searched over.  An entry written by an older build
+//! (schema mismatch) or planned before a new backend registered
+//! (scheme-set mismatch) is treated as a miss and re-planned — cached
+//! winners never silently pin out a backend they were never compared
+//! against.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::kernels::backend::BackendRegistry;
 use crate::nn::ModelDef;
 
 use super::plan::ModelPlan;
@@ -34,20 +43,40 @@ impl PlanCache {
     }
 
     /// Read + validate an entry without touching the counters.
-    fn read(&self, model: &str, batch: usize, gpu: &str) -> Option<ModelPlan> {
+    /// `scheme_names` is the serving registry's scheme set — an entry
+    /// planned over a different set is stale and filtered out.
+    fn read(
+        &self,
+        model: &str,
+        batch: usize,
+        gpu: &str,
+        scheme_names: &[String],
+    ) -> Option<ModelPlan> {
         let path = self.entry_path(model, batch, gpu);
         std::fs::read_to_string(&path)
             .ok()
             .and_then(|text| ModelPlan::from_json(&text).ok())
-            .filter(|p| p.model == model && p.batch == batch && p.gpu == gpu)
+            .filter(|p| {
+                p.model == model
+                    && p.batch == batch
+                    && p.gpu == gpu
+                    && p.scheme_set == scheme_names
+            })
     }
 
-    /// Look up a cached plan.  A missing or malformed entry counts as a
-    /// miss.  (Callers with the live `ModelDef` should prefer
-    /// `get_or_plan`, which additionally rejects stale entries whose
-    /// layer tags drifted — those count as misses there too.)
-    pub fn get(&self, model: &str, batch: usize, gpu: &str) -> Option<ModelPlan> {
-        match self.read(model, batch, gpu) {
+    /// Look up a cached plan, validated against `scheme_names` — pass
+    /// the serving registry's scheme set (`planner.scheme_names()`)
+    /// so `get_for` and [`PlanCache::get_or_plan`] agree on what is
+    /// stale.  A missing, malformed, old-schema, or
+    /// stale-scheme-set entry counts as a miss.
+    pub fn get_for(
+        &self,
+        model: &str,
+        batch: usize,
+        gpu: &str,
+        scheme_names: &[String],
+    ) -> Option<ModelPlan> {
+        match self.read(model, batch, gpu, scheme_names) {
             Some(p) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(p)
@@ -57,6 +86,19 @@ impl PlanCache {
                 None
             }
         }
+    }
+
+    /// [`PlanCache::get_for`] against the *global* builtin registry's
+    /// scheme set.  Callers serving a custom registry must use
+    /// `get_for`/`get_or_plan` instead, or hits and misses will
+    /// disagree with what their planner considers stale.
+    pub fn get(&self, model: &str, batch: usize, gpu: &str) -> Option<ModelPlan> {
+        let names: Vec<String> = BackendRegistry::global()
+            .names()
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        self.get_for(model, batch, gpu, &names)
     }
 
     /// Store a plan (overwrites any existing entry for its key).
@@ -75,7 +117,8 @@ impl PlanCache {
         model: &ModelDef,
         batch: usize,
     ) -> ModelPlan {
-        if let Some(p) = self.read(model.name, batch, planner.gpu.name) {
+        let names = planner.scheme_names();
+        if let Some(p) = self.read(model.name, batch, planner.gpu.name, &names) {
             // validate against the live model definition; shape drift
             // (e.g. a renamed layer) is a MISS that falls back to fresh
             // planning (and re-persists below, self-healing the entry)
@@ -147,5 +190,41 @@ mod tests {
         let healed = cache.get_or_plan(&planner, &m, 8);
         assert_eq!(healed, p);
         assert!(cache.get(&p.model, 8, &p.gpu).is_some());
+    }
+
+    #[test]
+    fn stale_scheme_set_is_a_miss_and_self_heals() {
+        // a plan cached before a new backend registered must not pin
+        // its old winners: the scheme-set mismatch forces a re-plan
+        let cache = temp_cache("stale_schemes");
+        let planner = Planner::new(&RTX2080TI);
+        let m = mnist_mlp();
+        let fresh = cache.get_or_plan(&planner, &m, 8);
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        // simulate an entry written when one backend fewer existed
+        let mut stale = fresh.clone();
+        stale.scheme_set.pop();
+        cache.put(&stale).unwrap();
+        let replanned = cache.get_or_plan(&planner, &m, 8);
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        assert_eq!(replanned, fresh, "re-plan restores the full-set plan");
+        // the entry self-healed: next lookup is a hit again
+        let again = cache.get_or_plan(&planner, &m, 8);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(again, fresh);
+    }
+
+    #[test]
+    fn old_schema_entry_is_a_miss() {
+        let cache = temp_cache("old_schema");
+        let planner = Planner::new(&RTX2080TI);
+        let m = mnist_mlp();
+        let p = cache.get_or_plan(&planner, &m, 8);
+        // rewrite the entry claiming an older document version
+        let old = p.to_json().replace("\"schema\":2", "\"schema\":1");
+        std::fs::write(cache.entry_path(&p.model, 8, &p.gpu), old).unwrap();
+        assert!(cache.get(&p.model, 8, &p.gpu).is_none());
+        let healed = cache.get_or_plan(&planner, &m, 8);
+        assert_eq!(healed, p);
     }
 }

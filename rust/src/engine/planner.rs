@@ -1,32 +1,67 @@
-//! The planner: per-layer scheme selection driven by the calibrated
-//! Turing cost model.
+//! The planner: per-layer scheme selection driven by the backends'
+//! cost faces.
 //!
-//! For every layer of a `ModelDef` (at a given batch bucket) the planner
-//! simulates each Tables-6/7 scheme with `nn::cost::layer_secs` — the
-//! exact same machinery `nn::cost::model_cost` uses — and selects the
-//! cheapest.  Ties resolve to the first scheme in `Scheme::all()` order,
-//! so planning is fully deterministic.
+//! For every layer of a `ModelDef` (at a given batch bucket) the
+//! planner asks each backend in its [`BackendRegistry`] for
+//! `layer_secs` — the exact same cost face `nn::cost::model_cost`
+//! sums — and selects the cheapest.  Ties resolve to the
+//! first-registered backend (the builtin registry registers in
+//! `Scheme::all()` order), so planning is fully deterministic.  A
+//! backend registered at runtime joins the search automatically — no
+//! planner changes needed.
 
-use crate::nn::cost::layer_secs;
+use std::sync::Arc;
+
+use crate::kernels::backend::BackendRegistry;
 use crate::nn::{ModelDef, ResidualMode, Scheme};
 use crate::sim::{Engine, GpuModel};
 
 use super::plan::{LayerPlan, ModelPlan};
 
 /// Planner configuration: the target GPU plus the same knobs
-/// `model_cost` exposes.
+/// `model_cost` exposes, searching over a backend registry.
 #[derive(Clone, Debug)]
 pub struct Planner {
     pub gpu: GpuModel,
     pub residual: ResidualMode,
     pub layer_sync: bool,
+    registry: Arc<BackendRegistry>,
 }
 
 impl Planner {
     /// Planner with the paper's default operating point (full residual
-    /// traffic, per-layer cooperative sync).
+    /// traffic, per-layer cooperative sync) over the builtin backends.
     pub fn new(gpu: &GpuModel) -> Planner {
-        Planner { gpu: gpu.clone(), residual: ResidualMode::Full, layer_sync: true }
+        Planner::with_registry(gpu, Arc::new(BackendRegistry::builtin()))
+    }
+
+    /// Planner over an explicit registry (custom/test backends).  The
+    /// registry is shared with the executor build through
+    /// [`Planner::registry`].
+    pub fn with_registry(gpu: &GpuModel, registry: Arc<BackendRegistry>) -> Planner {
+        Planner {
+            gpu: gpu.clone(),
+            residual: ResidualMode::Full,
+            layer_sync: true,
+            registry,
+        }
+    }
+
+    /// The registry this planner searches.
+    pub fn registry(&self) -> &BackendRegistry {
+        &self.registry
+    }
+
+    /// A shared handle to the registry (e.g. for a second planner).
+    pub fn registry_handle(&self) -> Arc<BackendRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// The registered scheme names, in search order — embedded in every
+    /// emitted plan so the plan cache can invalidate entries planned
+    /// against a different backend set.
+    pub fn scheme_names(&self) -> Vec<String> {
+        self.registry.names().iter().map(|s| s.to_string()).collect()
     }
 
     /// The cheapest scheme for one layer, with its simulated seconds.
@@ -40,27 +75,26 @@ impl Planner {
         batch: usize,
     ) -> (Scheme, f64) {
         let layer = &model.layers[layer_index];
-        let mut best = Scheme::all()[0];
+        let mut best: Option<Scheme> = None;
         let mut best_secs = f64::INFINITY;
-        for s in Scheme::all() {
-            let secs = layer_secs(
+        for b in self.registry.backends() {
+            let secs = b.layer_secs(
                 engine,
-                s,
                 layer,
                 dims,
                 batch,
                 self.residual,
                 model.residual_blocks > 0,
             );
-            if secs < best_secs {
-                best = s;
+            if secs < best_secs || best.is_none() {
+                best = Some(b.scheme());
                 best_secs = secs;
             }
         }
-        (best, best_secs)
+        (best.expect("planner registry must not be empty"), best_secs)
     }
 
-    /// Plan a whole model at one batch bucket.
+    /// Plan a whole model at one batch bucket (per-layer search).
     pub fn plan(&self, model: &ModelDef, batch: usize) -> ModelPlan {
         self.plan_with(model, batch, None)
     }
@@ -69,12 +103,19 @@ impl Planner {
     /// This is how a host without a Turing GPU serves the blocked-u64
     /// backend: `plan_fixed(model, batch, Scheme::Fastpath)` routes the
     /// whole model through `kernels::fastpath` in the executor.
+    ///
+    /// Panics if `scheme` has no backend in this planner's registry.
     pub fn plan_fixed(&self, model: &ModelDef, batch: usize, scheme: Scheme) -> ModelPlan {
         self.plan_with(model, batch, Some(scheme))
     }
 
     fn plan_with(&self, model: &ModelDef, batch: usize, force: Option<Scheme>) -> ModelPlan {
         let engine = Engine::new(&self.gpu);
+        let forced = force.map(|s| {
+            self.registry.get(s).unwrap_or_else(|| {
+                panic!("scheme {} has no registered backend", s.name())
+            })
+        });
         let sync_secs = if self.layer_sync {
             self.gpu.secs(self.gpu.coop_sync_cycles)
         } else {
@@ -85,12 +126,11 @@ impl Planner {
         // one fused kernel launch, same accounting as model_cost
         let mut total = self.gpu.launch_overhead_s;
         for (i, l) in model.layers.iter().enumerate() {
-            let (scheme, secs) = match force {
-                Some(s) => (
-                    s,
-                    layer_secs(
+            let (scheme, secs) = match &forced {
+                Some(b) => (
+                    b.scheme(),
+                    b.layer_secs(
                         &engine,
-                        s,
                         l,
                         dims,
                         batch,
@@ -110,6 +150,7 @@ impl Planner {
             gpu: self.gpu.name.to_string(),
             batch,
             classes: model.classes,
+            scheme_set: self.scheme_names(),
             layers,
             total_secs: total,
         }
@@ -134,6 +175,10 @@ mod tests {
                 assert_eq!(lp.tag, l.tag());
                 assert!(lp.secs.is_finite() && lp.secs > 0.0);
             }
+            // the plan records the searched backend set
+            let want: Vec<String> =
+                Scheme::all().iter().map(|s| s.name().to_string()).collect();
+            assert_eq!(plan.scheme_set, want);
         }
     }
 
@@ -181,5 +226,21 @@ mod tests {
             // a fixed plan costs at least the searched optimum
             assert!(plan.total_secs >= p.plan(&m, 8).total_secs * (1.0 - 1e-12));
         }
+    }
+
+    #[test]
+    fn search_is_restricted_to_the_registry() {
+        // a planner over a single-backend registry can only ever pick
+        // that backend's scheme
+        let mut reg = BackendRegistry::empty();
+        reg.register(Box::new(
+            crate::kernels::backends::fastpath::FastpathBackend,
+        ));
+        let p = Planner::with_registry(&RTX2080TI, Arc::new(reg));
+        let plan = p.plan(&mnist_mlp(), 8);
+        for lp in &plan.layers {
+            assert_eq!(lp.scheme, Scheme::Fastpath);
+        }
+        assert_eq!(plan.scheme_set, vec!["FASTPATH".to_string()]);
     }
 }

@@ -1,0 +1,303 @@
+//! The `KernelBackend` trait: one kernel-provider abstraction behind
+//! every scheme the engine can plan or execute.
+//!
+//! The paper's core finding is that per-scheme *data-format co-design*
+//! (the FSB packing of §5.1, the u64 line repacking of the host
+//! fastpath) is what unlocks throughput — which means every scheme
+//! carries scheme-specific packed weights, scratch shapes, and a cost
+//! model.  Before this module those concerns were wired through four
+//! independent dispatch sites (the forward-path layer match, ad-hoc
+//! `BmmScheme`/`BconvScheme` boxing in `nn::cost`, fastpath
+//! special-cases in `engine::executor`, and the `EngineModel`
+//! constructors).  `KernelBackend` folds them into one trait with
+//! three faces:
+//!
+//! * **prepare** — `prepare_fc` / `prepare_conv` turn raw packed
+//!   weights into opaque prepared-layer handles ([`PreparedFc`],
+//!   [`PreparedConv`]) that own whatever scheme-specific weight image
+//!   the backend wants (u64 lines, per-tap popcounts, plain clones)
+//!   and report their u64 scratch needs so the arena can be sized
+//!   up front;
+//! * **execute** — `PreparedFc::bmm` / `PreparedConv::bconv` run the
+//!   bit-exact Eq-2 kernels over caller-owned buffers and an
+//!   [`ExecCtx`] (arena scratch slice + scoped-worker count), keeping
+//!   the request path allocation-free;
+//! * **cost** — `layer_secs` / `layer_traces` expose the scheme's
+//!   simulated timing (GPU `KernelTrace`s for the Tables-6/7 rows, an
+//!   analytic host model for the fastpath), which is what
+//!   `engine::Planner` and `nn::cost` rank.
+//!
+//! [`BackendRegistry`] keyed by [`Scheme`] is the single dispatch
+//! point.  `nn::forward`, `nn::cost`, `engine::planner`, and
+//! `engine::executor` all consult a registry instead of matching on
+//! `Scheme`, so a new backend (an AVX-512 `vpopcntdq` path, a
+//! NUMA-sharded host, a test double) drops in by implementing the
+//! trait and registering — no dispatch-site edits.  See
+//! `docs/ENGINE.md` ("Adding a backend") and
+//! `rust/tests/backend_equivalence.rs` for a registry-extension proof.
+
+use std::sync::OnceLock;
+
+use anyhow::Result;
+
+use crate::bitops::{BitMatrix, BitTensor4};
+use crate::kernels::bconv::BconvProblem;
+use crate::nn::cost::{ResidualMode, Scheme};
+use crate::nn::layer::{Dims, LayerSpec};
+use crate::sim::{Engine, KernelTrace};
+
+/// Per-call execution context handed to prepared layers: a slice of
+/// the caller's pre-sized u64 scratch arena and the scoped-worker
+/// count for this parallel section (>= 1; callers apply their own
+/// small-work serial cutoff before building the context).
+pub struct ExecCtx<'a> {
+    /// u64 operand scratch — at least the prepared layer's
+    /// `scratch_words` for the executing shape.
+    pub words64: &'a mut [u64],
+    /// scoped worker threads for this section (1 = serial).
+    pub threads: usize,
+}
+
+/// Opaque prepared weights for one binarized FC layer.  Owns whatever
+/// packed weight image its backend needs; built once off the request
+/// path by [`KernelBackend::prepare_fc`].
+pub trait PreparedFc: Send + Sync {
+    /// u64 scratch words needed to execute a batch of `batch` rows
+    /// (monotone in `batch`, so sizing at batch capacity covers every
+    /// smaller request).
+    fn scratch_words(&self, batch: usize) -> usize {
+        let _ = batch;
+        0
+    }
+
+    /// Eq-2 dots of every (input row, weight row) pair:
+    /// `ints[bi * d_out + j] = dot(src row bi, weight row j)`.
+    ///
+    /// `src` holds `batch` row-packed lines of `d_in` bits
+    /// (`ceil(d_in/32)` u32 words per line); `ints.len()` must be
+    /// exactly `batch * d_out`.  Exact integer arithmetic: every
+    /// backend produces bit-identical values.
+    fn bmm(&self, src: &[u32], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>);
+}
+
+/// Opaque prepared weights for one binarized conv layer.
+pub trait PreparedConv: Send + Sync {
+    /// u64 scratch words needed to execute problem `p` (monotone in
+    /// `p.n`, the batch).
+    fn scratch_words(&self, p: BconvProblem) -> usize {
+        let _ = p;
+        0
+    }
+
+    /// Exclude-amended Eq-2 cross-correlation (the paper's bit-padding
+    /// amendment): `ints[((op*ohw + oq)*n + ni)*o + oi]`, the
+    /// `kernels::bconv::naive_ref` layout.  `src` is the HWNC packed
+    /// input (`((i*hw + j)*n + ni) * ceil(c/32)` u32 word layout —
+    /// exactly `BitTensor4`'s HWNC storage, shared with the arena);
+    /// `ints.len()` must be exactly `out_hw^2 * n * o`.
+    fn bconv(&self, src: &[u32], p: BconvProblem, ints: &mut [i32], ctx: &mut ExecCtx<'_>);
+}
+
+/// A kernel provider for one scheme: weight preparation, bit-exact
+/// execution, and the cost/trace face the planner ranks.
+pub trait KernelBackend: Send + Sync {
+    /// The scheme this backend serves — its key in a [`BackendRegistry`].
+    fn scheme(&self) -> Scheme;
+
+    /// Registry/reporting name (defaults to the scheme name).
+    fn name(&self) -> &'static str {
+        self.scheme().name()
+    }
+
+    /// Prepare a binarized FC weight matrix (`d_out x d_in` row-major
+    /// packed) into this backend's execution form.
+    fn prepare_fc(&self, w: &BitMatrix) -> Result<Box<dyn PreparedFc>>;
+
+    /// Prepare a KKOC packed conv filter for problems shaped like `p`
+    /// (`p.n` is the batch *capacity*; execution may use any smaller
+    /// batch).  Backends reject unsupported shapes here, at build
+    /// time, instead of panicking on the first request.
+    fn prepare_conv(&self, filter: &BitTensor4, p: BconvProblem) -> Result<Box<dyn PreparedConv>>;
+
+    /// The scheme's kernel traces for one layer in the fused-kernel
+    /// view (no per-layer launches).  `dims` is the layer's *input*
+    /// dims.  Host backends with no GPU face return an empty vec and
+    /// override [`KernelBackend::layer_secs`] instead.
+    fn layer_traces(
+        &self,
+        layer: &LayerSpec,
+        dims: Dims,
+        batch: usize,
+        residual: ResidualMode,
+        model_has_residuals: bool,
+    ) -> Vec<KernelTrace>;
+
+    /// Simulated seconds of one layer (compute only — per-layer sync
+    /// and the one-off launch overhead are accounted at the model
+    /// level).  Default: sum the trace costs on `engine`.
+    fn layer_secs(
+        &self,
+        engine: &Engine,
+        layer: &LayerSpec,
+        dims: Dims,
+        batch: usize,
+        residual: ResidualMode,
+        model_has_residuals: bool,
+    ) -> f64 {
+        self.layer_traces(layer, dims, batch, residual, model_has_residuals)
+            .iter()
+            .map(|t| engine.cost(t).total_secs)
+            .sum()
+    }
+}
+
+/// The single dispatch point: an ordered set of backends keyed by
+/// [`Scheme`].  Order is registration order and drives planner
+/// tie-breaking (first-registered wins a cost tie), so the builtin
+/// registry registers in `Scheme::all()` order.
+pub struct BackendRegistry {
+    entries: Vec<Box<dyn KernelBackend>>,
+}
+
+impl BackendRegistry {
+    /// An empty registry (test harnesses that want full control).
+    pub fn empty() -> BackendRegistry {
+        BackendRegistry { entries: Vec::new() }
+    }
+
+    /// All builtin backends, in `Scheme::all()` order: the six
+    /// Tables-6/7 GPU schemes plus the blocked-u64 host fastpath.
+    pub fn builtin() -> BackendRegistry {
+        let mut r = BackendRegistry::empty();
+        for b in crate::kernels::backends::builtin() {
+            r.register(b);
+        }
+        r
+    }
+
+    /// The shared process-wide builtin registry — what the
+    /// registry-less convenience entry points (`nn::forward::forward`,
+    /// `nn::cost::layer_secs`, `EngineExecutor::new`) dispatch
+    /// through.  Custom registries are passed explicitly.
+    pub fn global() -> &'static BackendRegistry {
+        static GLOBAL: OnceLock<BackendRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(BackendRegistry::builtin)
+    }
+
+    /// Register a backend under its `scheme()` key: replaces an
+    /// existing entry for that scheme in place (keeping its order),
+    /// appends otherwise.
+    pub fn register(&mut self, backend: Box<dyn KernelBackend>) {
+        let key = backend.scheme();
+        match self.entries.iter_mut().find(|b| b.scheme() == key) {
+            Some(slot) => *slot = backend,
+            None => self.entries.push(backend),
+        }
+    }
+
+    /// The backend registered for `scheme`, if any.
+    pub fn get(&self, scheme: Scheme) -> Option<&dyn KernelBackend> {
+        self.entries
+            .iter()
+            .find(|b| b.scheme() == scheme)
+            .map(|b| b.as_ref())
+    }
+
+    /// All registered backends, in registration order.
+    pub fn backends(&self) -> impl Iterator<Item = &dyn KernelBackend> {
+        self.entries.iter().map(|b| b.as_ref())
+    }
+
+    /// Registered schemes, in registration order.
+    pub fn schemes(&self) -> Vec<Scheme> {
+        self.entries.iter().map(|b| b.scheme()).collect()
+    }
+
+    /// Registered scheme names, in registration order — the list
+    /// `bench_kernels --list-schemes` prints and the plan cache embeds
+    /// for staleness detection.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|b| b.scheme().name()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl std::fmt::Debug for BackendRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("BackendRegistry").field(&self.names()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_covers_every_scheme_in_order() {
+        let r = BackendRegistry::builtin();
+        let want: Vec<&'static str> = Scheme::all().iter().map(|s| s.name()).collect();
+        assert_eq!(r.names(), want);
+        assert_eq!(r.schemes(), Scheme::all().to_vec());
+        for s in Scheme::all() {
+            let b = r.get(s).expect("builtin backend");
+            assert_eq!(b.scheme(), s);
+            assert_eq!(b.name(), s.name());
+        }
+        assert_eq!(r.len(), Scheme::all().len());
+    }
+
+    #[test]
+    fn global_registry_is_builtin() {
+        assert_eq!(
+            BackendRegistry::global().names(),
+            BackendRegistry::builtin().names()
+        );
+    }
+
+    #[test]
+    fn register_replaces_in_place() {
+        struct Stub(Scheme);
+        impl KernelBackend for Stub {
+            fn scheme(&self) -> Scheme {
+                self.0
+            }
+            fn prepare_fc(&self, _: &BitMatrix) -> Result<Box<dyn PreparedFc>> {
+                anyhow::bail!("stub")
+            }
+            fn prepare_conv(
+                &self,
+                _: &BitTensor4,
+                _: BconvProblem,
+            ) -> Result<Box<dyn PreparedConv>> {
+                anyhow::bail!("stub")
+            }
+            fn layer_traces(
+                &self,
+                _: &LayerSpec,
+                _: Dims,
+                _: usize,
+                _: ResidualMode,
+                _: bool,
+            ) -> Vec<KernelTrace> {
+                Vec::new()
+            }
+        }
+        let mut r = BackendRegistry::builtin();
+        let order_before = r.names();
+        r.register(Box::new(Stub(Scheme::Sbnn64)));
+        // same keys, same order; the entry itself was swapped
+        assert_eq!(r.names(), order_before);
+        assert!(r
+            .get(Scheme::Sbnn64)
+            .unwrap()
+            .prepare_fc(&BitMatrix::zeros(1, 1, crate::bitops::Layout::RowMajor))
+            .is_err());
+    }
+}

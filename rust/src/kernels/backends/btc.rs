@@ -1,0 +1,108 @@
+//! The two bit-tensor-core backends: BTC (Design-1, sequential bit
+//! format) and BTC-FMT (the FSB format of §5.1, Design-2 conv /
+//! Design-3 BMM traces).  Host execution is the shared scalar path.
+
+use anyhow::Result;
+
+use crate::bitops::{BitMatrix, BitTensor4};
+use crate::kernels::backend::{KernelBackend, PreparedConv, PreparedFc};
+use crate::kernels::bconv::{self, BconvProblem, BconvScheme};
+use crate::kernels::bmm::{self, BmmProblem, BmmScheme};
+use crate::kernels::IoMode;
+use crate::nn::cost::{ResidualMode, Scheme};
+use crate::nn::layer::{Dims, LayerSpec};
+use crate::sim::KernelTrace;
+
+use super::scalar::{ScalarConv, ScalarFc};
+use super::{assemble_gpu_traces, round_up};
+
+/// One BTC scheme row: the default sequential bit format, or the FSB
+/// format (§5.1) that makes the WMMA leading dimension stride-friendly.
+pub struct BtcBackend {
+    fmt: bool,
+}
+
+impl BtcBackend {
+    pub fn new(fmt: bool) -> BtcBackend {
+        BtcBackend { fmt }
+    }
+
+    fn conv_traces(
+        &self,
+        dims: Dims,
+        batch: usize,
+        o: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Vec<KernelTrace> {
+        let p = BconvProblem {
+            hw: dims.hw,
+            n: round_up(batch, 8),
+            c: round_up(dims.feat, 128),
+            o: round_up(o, 8),
+            k,
+            stride,
+            pad,
+        };
+        if self.fmt {
+            bconv::btc::BconvDesign2.traces(p, IoMode::BnnSpecific)
+        } else {
+            bconv::btc::BconvDesign1.traces(p, IoMode::BnnSpecific)
+        }
+    }
+
+    fn fc_traces(&self, batch: usize, d_in: usize, d_out: usize) -> Vec<KernelTrace> {
+        let p = BmmProblem {
+            m: round_up(batch, 8),
+            n: round_up(d_out, 128),
+            k: round_up(d_in, 128),
+        };
+        if self.fmt {
+            bmm::btc::Design3.traces(p, IoMode::BnnSpecific)
+        } else {
+            bmm::btc::Design1.traces(p, IoMode::BnnSpecific)
+        }
+    }
+}
+
+impl KernelBackend for BtcBackend {
+    fn scheme(&self) -> Scheme {
+        if self.fmt {
+            Scheme::BtcFmt
+        } else {
+            Scheme::Btc
+        }
+    }
+
+    fn prepare_fc(&self, w: &BitMatrix) -> Result<Box<dyn PreparedFc>> {
+        Ok(Box::new(ScalarFc::new(w)))
+    }
+
+    fn prepare_conv(
+        &self,
+        filter: &BitTensor4,
+        _p: BconvProblem,
+    ) -> Result<Box<dyn PreparedConv>> {
+        Ok(Box::new(ScalarConv::new(filter)))
+    }
+
+    fn layer_traces(
+        &self,
+        layer: &LayerSpec,
+        dims: Dims,
+        batch: usize,
+        residual: ResidualMode,
+        model_has_residuals: bool,
+    ) -> Vec<KernelTrace> {
+        assemble_gpu_traces(
+            layer,
+            dims,
+            batch,
+            residual,
+            model_has_residuals,
+            |o, k, stride, pad| self.conv_traces(dims, batch, o, k, stride, pad),
+            |d_in, d_out| self.fc_traces(batch, d_in, d_out),
+        )
+    }
+}

@@ -1,0 +1,205 @@
+//! The blocked-u64 host backend (`Scheme::Fastpath`): prepared weights
+//! are u64-repacked lines (`bitops::pack64`) and `FastConvFilter`
+//! images; execution runs the cache-blocked XNOR-popcount kernels of
+//! `kernels::fastpath`; the cost face is an analytic host model (no
+//! GPU traces — the backend runs on the serving host's cores).
+
+use anyhow::{ensure, Result};
+
+use crate::bitops::pack64::{self, BitMatrix64};
+use crate::bitops::{BitMatrix, BitTensor4};
+use crate::kernels::backend::{ExecCtx, KernelBackend, PreparedConv, PreparedFc};
+use crate::kernels::bconv::BconvProblem;
+use crate::kernels::fastpath::{self, FastConvFilter};
+use crate::nn::cost::{ResidualMode, Scheme};
+use crate::nn::layer::{Dims, LayerSpec};
+use crate::sim::{Engine, KernelTrace};
+
+/// Calibrated host constants for the fastpath cost model — the blocked
+/// u64 backend runs on the serving host's cores, not the GPU, so its
+/// cost is modeled analytically instead of through `sim::KernelTrace`.
+/// Constants are deliberately conservative multi-core laptop/server
+/// numbers; refresh them against `cargo bench --bench bench_kernels`
+/// when the host class changes.
+pub mod host {
+    /// u64 XOR+POPC+accumulate word ops per second (all cores, blocked).
+    pub const WORD_OPS_PER_SEC: f64 = 6.0e9;
+    /// f32 multiply-accumulates per second (the first BWN layer).
+    pub const FP_OPS_PER_SEC: f64 = 8.0e9;
+    /// streamed bytes per second (packing, pooling, residual traffic).
+    pub const BYTES_PER_SEC: f64 = 1.2e10;
+    /// scoped fork/join + repack latency per parallel section.
+    pub const DISPATCH_SECS: f64 = 3.0e-6;
+}
+
+/// The blocked-u64 host backend.
+pub struct FastpathBackend;
+
+/// FC weights repacked to u64 lines once, off the request path.
+struct FastpathFc {
+    w64: BitMatrix64,
+}
+
+impl PreparedFc for FastpathFc {
+    fn scratch_words(&self, batch: usize) -> usize {
+        batch * self.w64.words_per_line
+    }
+
+    fn bmm(&self, src: &[u32], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let d_in = self.w64.cols;
+        let d_out = self.w64.rows;
+        let wpl_in = d_in.div_ceil(32);
+        let w64in = self.w64.words_per_line;
+        debug_assert_eq!(pack64::words64(wpl_in), w64in, "weight repack width");
+        assert!(src.len() >= batch * wpl_in, "input row buffer size");
+        assert_eq!(ints.len(), batch * d_out, "dot staging size");
+        // repack the u32 input rows into the u64 scratch, then run the
+        // blocked BMM against the prepared u64 weight lines
+        let rows = &mut ctx.words64[..batch * w64in];
+        for (ni, row) in rows.chunks_exact_mut(w64in).enumerate() {
+            pack64::repack64_into(&src[ni * wpl_in..(ni + 1) * wpl_in], row);
+        }
+        fastpath::bmm::dot_lines(
+            rows,
+            &self.w64.data,
+            w64in,
+            batch,
+            d_out,
+            d_in,
+            ints,
+            ctx.threads,
+        );
+    }
+}
+
+/// Conv filter repacked to fastpath u64 lines (+ per-tap popcounts for
+/// the excluded-padding correction) once, off the request path.
+struct FastpathConv {
+    f: FastConvFilter,
+}
+
+impl PreparedConv for FastpathConv {
+    fn scratch_words(&self, p: BconvProblem) -> usize {
+        // the bit-im2row image: one u64 line per output sample
+        fastpath::bconv::rows(p) * self.f.row_words
+    }
+
+    fn bconv(&self, src: &[u32], p: BconvProblem, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let need = fastpath::bconv::rows(p) * self.f.row_words;
+        fastpath::bconv::bconv_into(
+            src,
+            p,
+            &self.f,
+            &mut ctx.words64[..need],
+            ints,
+            ctx.threads,
+        );
+    }
+}
+
+/// Host-model seconds for one layer under the fastpath.
+fn fastpath_layer_secs(
+    layer: &LayerSpec,
+    dims: Dims,
+    batch: usize,
+    residual: ResidualMode,
+    model_has_residuals: bool,
+) -> f64 {
+    let out_hw = |k: usize, stride: usize, pad: usize| -> usize {
+        (dims.hw + 2 * pad - k) / stride + 1
+    };
+    match *layer {
+        LayerSpec::FirstConv { c, o, k, stride, pad } => {
+            let ohw = out_hw(k, stride, pad);
+            let fp = (ohw * ohw * batch * o * k * k * c) as f64;
+            fp / host::FP_OPS_PER_SEC + host::DISPATCH_SECS
+        }
+        LayerSpec::BinConv { o, k, stride, pad, residual: is_res, .. } => {
+            // filters beyond the fastpath tap limit cannot run there:
+            // cost them infinite so no plan ever selects the scheme
+            if k * k > fastpath::bconv::MAX_TAPS {
+                return f64::INFINITY;
+            }
+            let c = dims.feat;
+            let ohw = out_hw(k, stride, pad);
+            let words = (ohw * ohw * batch * o * k * k * c.div_ceil(64)) as f64;
+            // im2row build + output repack are streamed bytes
+            let stream = (ohw * ohw * batch * (k * k * c.div_ceil(8) + o)) as f64;
+            let mut secs = words / host::WORD_OPS_PER_SEC
+                + stream / host::BYTES_PER_SEC
+                + host::DISPATCH_SECS;
+            if is_res && model_has_residuals && residual != ResidualMode::None {
+                let out_dims = dims.after(layer);
+                // fp16 residual save/fetch, same accounting as the GPU path
+                let xfers = match residual {
+                    ResidualMode::Full => 2,
+                    ResidualMode::SaveOnly | ResidualMode::FetchOnly => 1,
+                    ResidualMode::None => 0,
+                };
+                secs += (out_dims.flat() * batch * 2 * xfers) as f64
+                    / host::BYTES_PER_SEC;
+            }
+            secs
+        }
+        LayerSpec::BinFc { d_in, d_out } | LayerSpec::FinalFc { d_in, d_out } => {
+            let words = (batch * d_out * d_in.div_ceil(64)) as f64;
+            words / host::WORD_OPS_PER_SEC + host::DISPATCH_SECS
+        }
+        LayerSpec::Pool => {
+            // 4 packed loads + 1 store per output word
+            let bytes = (dims.flat() * batch).div_ceil(8) as f64;
+            bytes * 5.0 / host::BYTES_PER_SEC + host::DISPATCH_SECS
+        }
+    }
+}
+
+impl KernelBackend for FastpathBackend {
+    fn scheme(&self) -> Scheme {
+        Scheme::Fastpath
+    }
+
+    fn prepare_fc(&self, w: &BitMatrix) -> Result<Box<dyn PreparedFc>> {
+        Ok(Box::new(FastpathFc { w64: BitMatrix64::from_bitmatrix(w) }))
+    }
+
+    fn prepare_conv(
+        &self,
+        filter: &BitTensor4,
+        p: BconvProblem,
+    ) -> Result<Box<dyn PreparedConv>> {
+        // reject here, at build time, instead of panicking on the
+        // first request inside the serving worker
+        ensure!(
+            p.k * p.k <= fastpath::bconv::MAX_TAPS,
+            "{}x{} filter exceeds the fastpath tap limit ({} taps)",
+            p.k,
+            p.k,
+            fastpath::bconv::MAX_TAPS
+        );
+        Ok(Box::new(FastpathConv { f: FastConvFilter::prepare(filter) }))
+    }
+
+    /// The fastpath has no GPU trace face.
+    fn layer_traces(
+        &self,
+        _layer: &LayerSpec,
+        _dims: Dims,
+        _batch: usize,
+        _residual: ResidualMode,
+        _model_has_residuals: bool,
+    ) -> Vec<KernelTrace> {
+        Vec::new()
+    }
+
+    fn layer_secs(
+        &self,
+        _engine: &Engine,
+        layer: &LayerSpec,
+        dims: Dims,
+        batch: usize,
+        residual: ResidualMode,
+        model_has_residuals: bool,
+    ) -> f64 {
+        fastpath_layer_secs(layer, dims, batch, residual, model_has_residuals)
+    }
+}

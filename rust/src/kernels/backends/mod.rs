@@ -1,0 +1,169 @@
+//! Builtin [`KernelBackend`](crate::kernels::backend::KernelBackend)
+//! implementations — one per scheme row of Tables 6–7 plus the blocked
+//! u64 host fastpath — and the trace plumbing they share.
+//!
+//! * [`sbnn`] — the four software-BNN rows (SBNN-32/-Fine, SBNN-64/
+//!   -Fine): BSTC-style word kernels, cost-modeled through
+//!   `kernels::{bmm,bconv}::bstc` traces.
+//! * [`btc`] — the two bit-tensor-core rows (BTC, BTC-FMT): Design-1
+//!   vs the FSB-format Design-2/3 traces.
+//! * [`scalar`] — the shared *host execution* face of all six GPU
+//!   schemes.  On the serving CPU their functional semantics are
+//!   identical exact integer Eq-2 math (that is what the
+//!   kernels-equivalence tests guarantee); the scheme choice drives
+//!   cost accounting, and on a Turing GPU would select the kernel.
+//! * [`fastpath`] — the blocked-u64 XNOR-popcount host backend
+//!   (`kernels::fastpath`): u64-repacked prepared weights, bit-im2row
+//!   conv lowering, and an analytic host cost model instead of GPU
+//!   traces.
+//!
+//! The free functions here assemble per-layer traces from a backend's
+//! conv/FC cores: the scheme-independent pieces (first-layer BWN
+//! trace, residual save/fetch traffic, OR-pool, the FinalFc int-store
+//! + batch-norm adjustment, the fused-kernel zero-launch rule) live in
+//! one place so every backend prices them identically — exactly as the
+//! pre-registry `nn::cost` did.
+
+pub mod btc;
+pub mod fastpath;
+pub mod scalar;
+pub mod sbnn;
+
+use crate::kernels::backend::KernelBackend;
+use crate::nn::cost::ResidualMode;
+use crate::nn::layer::{Dims, LayerSpec};
+use crate::sim::KernelTrace;
+
+/// The builtin backends, in `Scheme::all()` order.
+pub fn builtin() -> Vec<Box<dyn KernelBackend>> {
+    vec![
+        Box::new(sbnn::SbnnBackend::new(32, false)),
+        Box::new(sbnn::SbnnBackend::new(32, true)),
+        Box::new(sbnn::SbnnBackend::new(64, false)),
+        Box::new(sbnn::SbnnBackend::new(64, true)),
+        Box::new(btc::BtcBackend::new(false)),
+        Box::new(btc::BtcBackend::new(true)),
+        Box::new(fastpath::FastpathBackend),
+    ]
+}
+
+pub(crate) fn round_up(x: usize, to: usize) -> usize {
+    x.div_ceil(to) * to
+}
+
+/// First-layer BWN trace (same for every GPU scheme — BTC can't run it).
+fn first_conv_trace(
+    dims: Dims,
+    batch: usize,
+    o: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> KernelTrace {
+    let c = dims.feat;
+    let ohw = (dims.hw + 2 * pad - k) / stride + 1;
+    let outputs = ohw * ohw * o * batch;
+    let mut t = KernelTrace::new("first_conv");
+    let warps = outputs.div_ceil(32).max(1);
+    t.warps_per_cta = 8;
+    t.grid_ctas = warps.div_ceil(8).max(1);
+    // per warp: 32 outputs; per output K*K*C adds with bit extraction
+    // from the shared-memory weight buffer (§6.1: extract each weight
+    // bit, add or subtract the fp input element)
+    let taps = k * k * c;
+    t.warp.fp_ops = 32 * taps * 3; // extract + select + add/sub per tap
+    // fp32 input window loads, partially cached across channel warps
+    t.warp.bulk_load_bytes = (taps * 4 * 32 / 8).max(128);
+    t.warp.bulk_store_bytes = 32 / 8; // thresholded bits out
+    t.warp.cta_syncs = 1;
+    let in_bytes = (dims.hw * dims.hw * c * batch * 4) as f64;
+    t.compulsory_bytes = in_bytes + (outputs / 8) as f64;
+    t.load_footprint_bytes = in_bytes;
+    // the window walk is pixel-tiled: resident set stays small
+    t.wave_bytes_per_cta = 64.0 * 1024.0;
+    t
+}
+
+/// Residual save/fetch traffic for one block boundary (real-valued
+/// residuals, §6.1: "these residuals are real-valued").
+fn residual_trace(elems: usize, mode: ResidualMode) -> Option<KernelTrace> {
+    let (save, fetch) = match mode {
+        ResidualMode::Full => (true, true),
+        ResidualMode::SaveOnly => (true, false),
+        ResidualMode::FetchOnly => (false, true),
+        ResidualMode::None => return None,
+    };
+    let mut t = KernelTrace::new("residual");
+    let warps = (elems / 1024).max(1);
+    t.warps_per_cta = 8;
+    t.grid_ctas = warps.div_ceil(8).max(1);
+    let per_warp = 1024 * 2; // residuals kept in fp16 (half the traffic)
+    if save {
+        t.warp.bulk_store_bytes += per_warp;
+    }
+    if fetch {
+        t.warp.bulk_load_bytes += per_warp;
+        t.warp.fp_ops += 1024; // add into the activation
+    }
+    t.compulsory_bytes = (elems * 2 * ((save as usize) + (fetch as usize))) as f64;
+    Some(t)
+}
+
+/// The OR-pool trace (scheme-independent packed-byte streaming).
+fn pool_trace(dims: Dims, batch: usize) -> KernelTrace {
+    let mut t = KernelTrace::new("pool");
+    let elems = dims.flat() * batch / 8; // packed bytes
+    t.grid_ctas = (elems / 4096).max(1);
+    t.warps_per_cta = 8;
+    t.warp.bulk_load_bytes = 4096;
+    t.warp.bulk_store_bytes = 1024;
+    t.warp.intu_ops = 3 * 1024;
+    t
+}
+
+/// Assemble one layer's traces for a GPU scheme from its conv/FC trace
+/// cores, in the fused-kernel view (no per-layer launches): the
+/// scheme-independent first-conv/pool/residual/classifier-head pieces
+/// are shared here so every backend prices them identically.
+pub(crate) fn assemble_gpu_traces(
+    layer: &LayerSpec,
+    dims: Dims,
+    batch: usize,
+    residual: ResidualMode,
+    model_has_residuals: bool,
+    conv_core: impl Fn(usize, usize, usize, usize) -> Vec<KernelTrace>,
+    fc_core: impl Fn(usize, usize) -> Vec<KernelTrace>,
+) -> Vec<KernelTrace> {
+    let mut traces: Vec<KernelTrace> = match *layer {
+        LayerSpec::FirstConv { o, k, stride, pad, .. } => {
+            vec![first_conv_trace(dims, batch, o, k, stride, pad)]
+        }
+        LayerSpec::BinConv { o, k, stride, pad, residual: is_res, pool: _, .. } => {
+            let mut v = conv_core(o, k, stride, pad);
+            if is_res && model_has_residuals {
+                let out_dims = dims.after(layer);
+                let elems = out_dims.flat() * batch;
+                if let Some(rt) = residual_trace(elems, residual) {
+                    v.push(rt);
+                }
+            }
+            v
+        }
+        LayerSpec::BinFc { d_in, d_out } => fc_core(d_in, d_out),
+        LayerSpec::FinalFc { d_in, d_out } => {
+            // real-valued output: int store + bn, no output binarize
+            let mut v = fc_core(d_in, round_up(d_out, 8));
+            for t in &mut v {
+                t.warp.bulk_store_bytes += 8 * 4; // int32 out per tile
+                t.warp.fp_ops += 64; // bn scale/shift
+            }
+            v
+        }
+        LayerSpec::Pool => vec![pool_trace(dims, batch)],
+    };
+    // the fused kernel has no per-layer launches
+    for t in &mut traces {
+        t.launches = 0;
+    }
+    traces
+}

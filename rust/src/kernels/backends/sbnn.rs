@@ -1,0 +1,118 @@
+//! The four software-BNN backends (SBNN-32, SBNN-32-Fine, SBNN-64,
+//! SBNN-64-Fine): BSTC-style word kernels on the GPU cost model,
+//! scalar u32 execution on the host.
+
+use anyhow::Result;
+
+use crate::bitops::{BitMatrix, BitTensor4};
+use crate::kernels::backend::{KernelBackend, PreparedConv, PreparedFc};
+use crate::kernels::bconv::{self, BconvProblem, BconvScheme};
+use crate::kernels::bmm::{self, BmmProblem, BmmScheme};
+use crate::kernels::IoMode;
+use crate::nn::cost::{ResidualMode, Scheme};
+use crate::nn::layer::{Dims, LayerSpec};
+use crate::sim::KernelTrace;
+
+use super::scalar::{ScalarConv, ScalarFc};
+use super::{assemble_gpu_traces, round_up};
+
+/// One SBNN scheme row: word size 32 or 64, optionally the
+/// fine-grained (4-way split) occupancy variant.
+pub struct SbnnBackend {
+    word: usize,
+    fine: bool,
+}
+
+impl SbnnBackend {
+    pub fn new(word: usize, fine: bool) -> SbnnBackend {
+        assert!(word == 32 || word == 64, "SBNN word size is 32 or 64");
+        SbnnBackend { word, fine }
+    }
+
+    fn conv_traces(
+        &self,
+        dims: Dims,
+        batch: usize,
+        o: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Vec<KernelTrace> {
+        let p = BconvProblem {
+            hw: dims.hw,
+            n: batch,
+            c: round_up(dims.feat, self.word),
+            o: round_up(o, 32),
+            k,
+            stride,
+            pad,
+        };
+        let mut traces =
+            bconv::bstc::BstcBconv::new(self.word).traces(p, IoMode::BnnSpecific);
+        if self.fine {
+            traces.iter_mut().for_each(make_fine);
+        }
+        traces
+    }
+
+    fn fc_traces(&self, batch: usize, d_in: usize, d_out: usize) -> Vec<KernelTrace> {
+        let p = BmmProblem {
+            m: round_up(batch, self.word),
+            n: round_up(d_out, self.word),
+            k: round_up(d_in, self.word),
+        };
+        bmm::bstc::BstcBmm::new(self.word, self.fine).traces(p, IoMode::BnnSpecific)
+    }
+}
+
+/// Fine-grained SBNN: split each warp's work 4 ways for occupancy (the
+/// "-Fine" rows): more, lighter warps plus atomic combine overhead.
+fn make_fine(t: &mut KernelTrace) {
+    t.grid_ctas *= 4;
+    t.warp.intu_ops = t.warp.intu_ops / 4 + 32;
+    t.warp.sfu_ops /= 4;
+    t.warp.bulk_load_bytes /= 4;
+    t.warp.bulk_store_bytes += 64; // partial-sum atomics
+}
+
+impl KernelBackend for SbnnBackend {
+    fn scheme(&self) -> Scheme {
+        match (self.word, self.fine) {
+            (32, false) => Scheme::Sbnn32,
+            (32, true) => Scheme::Sbnn32Fine,
+            (64, false) => Scheme::Sbnn64,
+            _ => Scheme::Sbnn64Fine,
+        }
+    }
+
+    fn prepare_fc(&self, w: &BitMatrix) -> Result<Box<dyn PreparedFc>> {
+        Ok(Box::new(ScalarFc::new(w)))
+    }
+
+    fn prepare_conv(
+        &self,
+        filter: &BitTensor4,
+        _p: BconvProblem,
+    ) -> Result<Box<dyn PreparedConv>> {
+        Ok(Box::new(ScalarConv::new(filter)))
+    }
+
+    fn layer_traces(
+        &self,
+        layer: &LayerSpec,
+        dims: Dims,
+        batch: usize,
+        residual: ResidualMode,
+        model_has_residuals: bool,
+    ) -> Vec<KernelTrace> {
+        assemble_gpu_traces(
+            layer,
+            dims,
+            batch,
+            residual,
+            model_has_residuals,
+            |o, k, stride, pad| self.conv_traces(dims, batch, o, k, stride, pad),
+            |d_in, d_out| self.fc_traces(batch, d_in, d_out),
+        )
+    }
+}

@@ -1,0 +1,160 @@
+//! Shared host execution for the six GPU schemes: plain u32 word
+//! kernels, bit-exact Eq-2 with the paper's exclude-amended padding.
+//!
+//! On the serving CPU the functional semantics of every GPU scheme
+//! are identical exact integer arithmetic (asserted by the
+//! kernels-equivalence tests), so the SBNN and BTC backends all share
+//! these prepared-layer implementations; what differs per scheme is
+//! the cost face.  On a Turing GPU the scheme choice would select the
+//! actual kernel.
+
+use crate::bitops::{pack, BitMatrix, BitTensor4, Layout, TensorLayout};
+use crate::kernels::backend::{ExecCtx, PreparedConv, PreparedFc};
+use crate::kernels::bconv::BconvProblem;
+use crate::util::threadpool::scoped_chunks;
+
+/// Scalar FC: a plain clone of the packed weight rows; Eq-2 dots via
+/// `pack::pm1_dot` per (row, weight-row) pair, row-parallel.
+pub struct ScalarFc {
+    w: BitMatrix,
+}
+
+impl ScalarFc {
+    pub fn new(w: &BitMatrix) -> ScalarFc {
+        assert_eq!(w.layout, Layout::RowMajor, "FC weights are row-major packed");
+        ScalarFc { w: w.clone() }
+    }
+}
+
+impl PreparedFc for ScalarFc {
+    fn bmm(&self, src: &[u32], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let d_in = self.w.cols;
+        let d_out = self.w.rows;
+        let wpl_in = d_in.div_ceil(32);
+        assert!(src.len() >= batch * wpl_in, "input row buffer size");
+        assert_eq!(ints.len(), batch * d_out, "dot staging size");
+        scoped_chunks(ints, d_out, ctx.threads, |ni, row| {
+            let a = &src[ni * wpl_in..(ni + 1) * wpl_in];
+            for (j, out) in row.iter_mut().enumerate() {
+                *out = pack::pm1_dot(a, self.w.line(j), d_in);
+            }
+        });
+    }
+}
+
+/// Scalar conv: a plain clone of the KKOC packed filter; direct
+/// XOR-popcount cross-correlation over the HWNC input words with the
+/// exclude-amended Eq-2 correction, parallel over output rows.
+pub struct ScalarConv {
+    filter: BitTensor4,
+}
+
+impl ScalarConv {
+    pub fn new(filter: &BitTensor4) -> ScalarConv {
+        assert_eq!(filter.layout, TensorLayout::Kkoc, "conv filters are KKOC packed");
+        ScalarConv { filter: filter.clone() }
+    }
+}
+
+impl PreparedConv for ScalarConv {
+    fn bconv(&self, src: &[u32], p: BconvProblem, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let [kh, kw, o, c] = self.filter.dims;
+        assert_eq!(kh, p.k, "filter extent");
+        assert_eq!(kw, p.k, "filter extent");
+        assert_eq!(o, p.o, "output channels");
+        assert_eq!(c, p.c, "input channels");
+        let wi = p.c.div_ceil(32);
+        let ohw = p.out_hw();
+        assert!(src.len() >= p.hw * p.hw * p.n * wi, "input buffer size");
+        assert_eq!(ints.len(), ohw * ohw * p.n * p.o, "output buffer size");
+        let chunk = ohw * p.n * p.o;
+        scoped_chunks(ints, chunk, ctx.threads, |op, row| {
+            for oq in 0..ohw {
+                let seg = &mut row[oq * p.n * p.o..(oq + 1) * p.n * p.o];
+                seg.fill(0);
+                let mut exclude = 0usize;
+                for r in 0..p.k {
+                    for s in 0..p.k {
+                        let i = (op * p.stride + r) as isize - p.pad as isize;
+                        let j = (oq * p.stride + s) as isize - p.pad as isize;
+                        if i < 0 || i >= p.hw as isize || j < 0 || j >= p.hw as isize {
+                            exclude += 1;
+                            continue;
+                        }
+                        let (i, j) = (i as usize, j as usize);
+                        for ni in 0..p.n {
+                            let abase = ((i * p.hw + j) * p.n + ni) * wi;
+                            let a = &src[abase..abase + wi];
+                            let out_row = &mut seg[ni * p.o..(ni + 1) * p.o];
+                            for (oi, out) in out_row.iter_mut().enumerate() {
+                                let b = self.filter.inner(r, s, oi);
+                                let mut pc = 0u32;
+                                for (x, y) in a.iter().zip(b.iter()) {
+                                    pc += (x ^ y).count_ones();
+                                }
+                                *out += pc as i32;
+                            }
+                        }
+                    }
+                }
+                // Eq 2 with the padding amendment: n_valid - 2*popc
+                let n_valid = (p.c * (p.k * p.k - exclude)) as i32;
+                for v in seg.iter_mut() {
+                    *v = n_valid - 2 * *v;
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{bconv, bmm};
+    use crate::util::Rng;
+
+    #[test]
+    fn scalar_fc_matches_naive_bmm() {
+        let mut rng = Rng::new(41);
+        for (m, n, k) in [(8, 16, 96), (5, 7, 130), (1, 9, 33)] {
+            let a = BitMatrix::random(m, k, Layout::RowMajor, &mut rng);
+            let w = BitMatrix::random(n, k, Layout::RowMajor, &mut rng);
+            // naive_ref wants B column-major; weight rows ARE packed
+            // columns of B, so rebuild the same bits column-major
+            let mut b = BitMatrix::zeros(k, n, Layout::ColMajor);
+            for j in 0..n {
+                for i in 0..k {
+                    if w.get(j, i) {
+                        b.set(i, j, true);
+                    }
+                }
+            }
+            let want = bmm::naive_ref(&a, &b);
+            let fc = ScalarFc::new(&w);
+            let mut ints = vec![0i32; m * n];
+            let mut ctx = ExecCtx { words64: &mut [], threads: 2 };
+            fc.bmm(&a.data, m, &mut ints, &mut ctx);
+            assert_eq!(ints, want, "{m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn scalar_conv_matches_naive_ref() {
+        let mut rng = Rng::new(42);
+        for p in [
+            BconvProblem { hw: 6, n: 4, c: 40, o: 5, k: 3, stride: 1, pad: 1 },
+            BconvProblem { hw: 5, n: 2, c: 128, o: 8, k: 3, stride: 2, pad: 0 },
+        ] {
+            let input =
+                BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, &mut rng);
+            let filter =
+                BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, &mut rng);
+            let want = bconv::naive_ref(&input, &filter, p);
+            let conv = ScalarConv::new(&filter);
+            let mut ints = vec![0i32; p.out_elems()];
+            let mut ctx = ExecCtx { words64: &mut [], threads: 2 };
+            conv.bconv(&input.data, p, &mut ints, &mut ctx);
+            assert_eq!(ints, want, "{p:?}");
+        }
+    }
+}

@@ -19,9 +19,12 @@
 //! Every kernel is exact integer arithmetic, bit-identical to the
 //! naive Eq-2 references (`kernels::bmm::naive_ref`,
 //! `kernels::bconv::naive_ref`) and the Design-1/2/3 scheme computes —
-//! asserted by `tests/fastpath_equivalence.rs`.  Unlike the Table-3/4
-//! schemes there is no GPU `KernelTrace` face: the fastpath's cost
-//! model lives in `nn::cost` as calibrated host constants.
+//! asserted by `tests/backend_equivalence.rs` (every registered
+//! backend) and `tests/fastpath_equivalence.rs`.  Unlike the Table-3/4
+//! schemes there is no GPU `KernelTrace` face: the cost model is the
+//! analytic host model in `kernels::backends::fastpath` (its `host`
+//! constants re-export as `nn::cost::host`), wired through the
+//! `KernelBackend` registry.
 
 pub mod bconv;
 pub mod bmm;

@@ -17,7 +17,16 @@
 //!
 //! `fastpath` is the odd one out: the blocked u64 *host* backend
 //! (`Scheme::Fastpath`) — bit-identical compute, no GPU trace face.
+//!
+//! `backend` is the unifying layer above all of this: the
+//! [`backend::KernelBackend`] trait (prepare / execute / cost faces)
+//! and the [`backend::BackendRegistry`] that `nn::forward`,
+//! `nn::cost`, and the engine dispatch through — one registration per
+//! scheme instead of per-consumer `match` arms.  The builtin
+//! implementations live in `backends`.
 
+pub mod backend;
+pub mod backends;
 pub mod bconv;
 pub mod bmm;
 pub mod fastpath;
@@ -31,5 +40,6 @@ pub enum IoMode {
     BnnSpecific,
 }
 
+pub use backend::{BackendRegistry, ExecCtx, KernelBackend, PreparedConv, PreparedFc};
 pub use bconv::{BconvProblem, BconvScheme};
 pub use bmm::BmmScheme;

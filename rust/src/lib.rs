@@ -16,17 +16,30 @@
 //!   timing model reproducing the §4 characterization, the six network
 //!   models of Table 5, and the BENN multi-GPU ensemble of §7.6.
 //!
-//! ## Engine
+//! ## Backends + engine
 //!
-//! The `engine` module is the serving layer that connects the kernel
-//! study to the coordinator: a **planner** queries the calibrated
-//! Turing cost model for every Tables-6/7 scheme per layer shape and
-//! emits an executable `ModelPlan` (persisted in a JSON plan cache
-//! keyed by model x batch x gpu); an **arena executor** pre-allocates
-//! every buffer from the plan and runs the packed-bit forward pass with
+//! Every scheme is provided through one abstraction:
+//! `kernels::backend::KernelBackend` — weight *preparation* (opaque
+//! prepared-layer handles owning scheme-specific packed weights),
+//! bit-exact *execution* over an `ExecCtx` (arena scratch +
+//! threadpool), and the *cost face* (`layer_secs`/`layer_traces`) the
+//! planner ranks.  A `BackendRegistry` keyed by `nn::cost::Scheme` is
+//! the single dispatch point: `nn::forward`, `nn::cost`, and the
+//! engine consult a registry instead of matching on `Scheme`, so new
+//! host backends (SIMD, NUMA-sharded, test doubles) drop in by
+//! registering — proven by the toy backend in
+//! `tests/backend_equivalence.rs`.
+//!
+//! The `engine` module is the serving layer on top: a **planner**
+//! asks every registered backend for its per-layer cost and emits an
+//! executable `ModelPlan` (persisted in a schema-versioned JSON plan
+//! cache keyed by model x batch x gpu, invalidated when the backend
+//! set changes); an **arena executor** holds one prepared-layer
+//! handle per plan layer and runs the packed-bit forward pass with
 //! zero per-request heap allocation, parallelized across rows; and
-//! `EngineModel` plugs the executor into `coordinator::server` so any
-//! Table-5 model is servable end to end.  See `docs/ENGINE.md`.
+//! `EngineModel::builder` (+ `PlanPolicy`) plugs the executor into
+//! `coordinator::server` so any Table-5 model is servable end to end.
+//! See `docs/ENGINE.md`.
 //!
 //! The seventh scheme, `nn::cost::Scheme::Fastpath`, is the blocked
 //! u64 XNOR-popcount **host** backend (`kernels::fastpath`, operands

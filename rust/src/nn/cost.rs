@@ -4,14 +4,25 @@
 //! The whole network runs as ONE fused kernel (§6.2): a single launch,
 //! with a cooperative-group grid barrier after every layer.  Each layer
 //! contributes the kernel trace of its scheme-specific implementation.
+//!
+//! Since the `KernelBackend` redesign the scheme-specific trace and
+//! host-model code lives with each backend in `kernels::backends`;
+//! this module keeps the [`Scheme`] key type, the model-level
+//! accounting ([`model_cost`]), and thin [`layer_secs`] /
+//! [`layer_traces`] wrappers that dispatch through
+//! `BackendRegistry::global()` — no per-scheme `match` remains here.
 
-use crate::kernels::bconv::{self, BconvProblem, BconvScheme};
-use crate::kernels::bmm::{self, BmmProblem, BmmScheme};
-use crate::kernels::IoMode;
+use std::fmt;
+
+use crate::kernels::backend::BackendRegistry;
 use crate::sim::{Engine, GpuModel, KernelTrace};
 
 use super::layer::{Dims, LayerSpec};
 use super::model::ModelDef;
+
+/// Calibrated host constants for the `Scheme::Fastpath` cost model
+/// (re-exported from the fastpath backend for compatibility).
+pub use crate::kernels::backends::fastpath::host;
 
 /// Tables-6/7 scheme rows.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,7 +36,7 @@ pub enum Scheme {
     /// BTC with the FSB format (§5.1)
     BtcFmt,
     /// host blocked-u64 XNOR-popcount backend (`kernels::fastpath`) —
-    /// no GPU traces; costed by the calibrated host model below
+    /// no GPU traces; costed by the backend's analytic host model
     Fastpath,
 }
 
@@ -54,15 +65,34 @@ impl Scheme {
         ]
     }
 
-    /// Inverse of `name` (used by the engine's plan serialization).
-    pub fn from_name(s: &str) -> Option<Scheme> {
-        Scheme::all().into_iter().find(|sc| sc.name() == s)
-    }
-
-    fn is_fine(&self) -> bool {
-        matches!(self, Scheme::Sbnn32Fine | Scheme::Sbnn64Fine)
+    /// Inverse of `name` (used by the engine's plan serialization and
+    /// CLI flags).  Case-insensitive; an unknown name errors with the
+    /// full list of valid scheme names.
+    pub fn from_name(s: &str) -> Result<Scheme, UnknownScheme> {
+        Scheme::all()
+            .into_iter()
+            .find(|sc| sc.name().eq_ignore_ascii_case(s))
+            .ok_or_else(|| UnknownScheme(s.to_string()))
     }
 }
+
+/// Error from [`Scheme::from_name`]: the offending name, displayed with
+/// every valid scheme name.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownScheme(pub String);
+
+impl fmt::Display for UnknownScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown scheme {:?}; valid schemes: {}",
+            self.0,
+            Scheme::all().map(|s| s.name()).join(", ")
+        )
+    }
+}
+
+impl std::error::Error for UnknownScheme {}
 
 /// Fig-26 residual-handling scenarios for the ResNet models.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -102,246 +132,12 @@ impl InferenceCost {
     }
 }
 
-fn round_up(x: usize, to: usize) -> usize {
-    x.div_ceil(to) * to
-}
-
-/// Fine-grained SBNN: split each warp's work 4 ways for occupancy (the
-/// "-Fine" rows): more, lighter warps plus atomic combine overhead.
-fn make_fine(t: &mut KernelTrace) {
-    t.grid_ctas *= 4;
-    t.warp.intu_ops = t.warp.intu_ops / 4 + 32;
-    t.warp.sfu_ops /= 4;
-    t.warp.bulk_load_bytes /= 4;
-    t.warp.bulk_store_bytes += 64; // partial-sum atomics
-}
-
-/// First-layer BWN trace (same for every scheme — BTC can't run it).
-fn first_conv_trace(
-    dims: Dims,
-    batch: usize,
-    o: usize,
-    k: usize,
-    stride: usize,
-    pad: usize,
-) -> KernelTrace {
-    let c = dims.feat;
-    let ohw = (dims.hw + 2 * pad - k) / stride + 1;
-    let outputs = ohw * ohw * o * batch;
-    let mut t = KernelTrace::new("first_conv");
-    let warps = outputs.div_ceil(32).max(1);
-    t.warps_per_cta = 8;
-    t.grid_ctas = warps.div_ceil(8).max(1);
-    // per warp: 32 outputs; per output K*K*C adds with bit extraction
-    // from the shared-memory weight buffer (§6.1: extract each weight
-    // bit, add or subtract the fp input element)
-    let taps = k * k * c;
-    t.warp.fp_ops = 32 * taps * 3; // extract + select + add/sub per tap
-    // fp32 input window loads, partially cached across channel warps
-    t.warp.bulk_load_bytes = (taps * 4 * 32 / 8).max(128);
-    t.warp.bulk_store_bytes = 32 / 8; // thresholded bits out
-    t.warp.cta_syncs = 1;
-    let in_bytes = (dims.hw * dims.hw * c * batch * 4) as f64;
-    t.compulsory_bytes = in_bytes + (outputs / 8) as f64;
-    t.load_footprint_bytes = in_bytes;
-    // the window walk is pixel-tiled: resident set stays small
-    t.wave_bytes_per_cta = 64.0 * 1024.0;
-    t
-}
-
-/// Residual save/fetch traffic for one block boundary (real-valued
-/// residuals, §6.1: "these residuals are real-valued").
-fn residual_trace(elems: usize, mode: ResidualMode) -> Option<KernelTrace> {
-    let (save, fetch) = match mode {
-        ResidualMode::Full => (true, true),
-        ResidualMode::SaveOnly => (true, false),
-        ResidualMode::FetchOnly => (false, true),
-        ResidualMode::None => return None,
-    };
-    let mut t = KernelTrace::new("residual");
-    let warps = (elems / 1024).max(1);
-    t.warps_per_cta = 8;
-    t.grid_ctas = warps.div_ceil(8).max(1);
-    let per_warp = 1024 * 2; // residuals kept in fp16 (half the traffic)
-    if save {
-        t.warp.bulk_store_bytes += per_warp;
-    }
-    if fetch {
-        t.warp.bulk_load_bytes += per_warp;
-        t.warp.fp_ops += 1024; // add into the activation
-    }
-    t.compulsory_bytes = (elems * 2 * ((save as usize) + (fetch as usize))) as f64;
-    Some(t)
-}
-
-/// The scheme-specific BinConv traces.
-fn bin_conv_traces(
-    scheme: Scheme,
-    dims: Dims,
-    batch: usize,
-    o: usize,
-    k: usize,
-    stride: usize,
-    pad: usize,
-) -> Vec<KernelTrace> {
-    match scheme {
-        Scheme::Btc | Scheme::BtcFmt => {
-            let p = BconvProblem {
-                hw: dims.hw,
-                n: round_up(batch, 8),
-                c: round_up(dims.feat, 128),
-                o: round_up(o, 8),
-                k,
-                stride,
-                pad,
-            };
-            let s: Box<dyn BconvScheme> = if scheme == Scheme::Btc {
-                Box::new(bconv::btc::BconvDesign1)
-            } else {
-                Box::new(bconv::btc::BconvDesign2)
-            };
-            s.traces(p, IoMode::BnnSpecific)
-        }
-        _ => {
-            let word = if matches!(scheme, Scheme::Sbnn32 | Scheme::Sbnn32Fine) {
-                32
-            } else {
-                64
-            };
-            let p = BconvProblem {
-                hw: dims.hw,
-                n: batch,
-                c: round_up(dims.feat, word),
-                o: round_up(o, 32),
-                k,
-                stride,
-                pad,
-            };
-            let mut traces =
-                bconv::bstc::BstcBconv::new(word).traces(p, IoMode::BnnSpecific);
-            if scheme.is_fine() {
-                traces.iter_mut().for_each(make_fine);
-            }
-            traces
-        }
-    }
-}
-
-/// The scheme-specific FC traces.
-fn fc_traces(scheme: Scheme, batch: usize, d_in: usize, d_out: usize) -> Vec<KernelTrace> {
-    match scheme {
-        Scheme::Btc | Scheme::BtcFmt => {
-            let p = BmmProblem {
-                m: round_up(batch, 8),
-                n: round_up(d_out, 128),
-                k: round_up(d_in, 128),
-            };
-            let s: Box<dyn BmmScheme> = if scheme == Scheme::Btc {
-                Box::new(bmm::btc::Design1)
-            } else {
-                Box::new(bmm::btc::Design3)
-            };
-            s.traces(p, IoMode::BnnSpecific)
-        }
-        _ => {
-            let word = if matches!(scheme, Scheme::Sbnn32 | Scheme::Sbnn32Fine) {
-                32
-            } else {
-                64
-            };
-            let p = BmmProblem {
-                m: round_up(batch, word),
-                n: round_up(d_out, word),
-                k: round_up(d_in, word),
-            };
-            let fine = scheme.is_fine();
-            bmm::bstc::BstcBmm::new(word, fine).traces(p, IoMode::BnnSpecific)
-        }
-    }
-}
-
-/// Calibrated host constants for the `Scheme::Fastpath` cost model —
-/// the blocked u64 backend in `kernels::fastpath` runs on the serving
-/// host's cores, not the GPU, so its cost is modeled analytically
-/// instead of through `sim::KernelTrace`.  Constants are deliberately
-/// conservative multi-core laptop/server numbers; refresh them against
-/// `cargo bench --bench bench_kernels` when the host class changes.
-pub mod host {
-    /// u64 XOR+POPC+accumulate word ops per second (all cores, blocked).
-    pub const WORD_OPS_PER_SEC: f64 = 6.0e9;
-    /// f32 multiply-accumulates per second (the first BWN layer).
-    pub const FP_OPS_PER_SEC: f64 = 8.0e9;
-    /// streamed bytes per second (packing, pooling, residual traffic).
-    pub const BYTES_PER_SEC: f64 = 1.2e10;
-    /// scoped fork/join + repack latency per parallel section.
-    pub const DISPATCH_SECS: f64 = 3.0e-6;
-}
-
-/// Host-model seconds for one layer under `Scheme::Fastpath`.
-fn fastpath_layer_secs(
-    layer: &LayerSpec,
-    dims: Dims,
-    batch: usize,
-    residual: ResidualMode,
-    model_has_residuals: bool,
-) -> f64 {
-    let out_hw = |k: usize, stride: usize, pad: usize| -> usize {
-        (dims.hw + 2 * pad - k) / stride + 1
-    };
-    match *layer {
-        LayerSpec::FirstConv { c, o, k, stride, pad } => {
-            let ohw = out_hw(k, stride, pad);
-            let fp = (ohw * ohw * batch * o * k * k * c) as f64;
-            fp / host::FP_OPS_PER_SEC + host::DISPATCH_SECS
-        }
-        LayerSpec::BinConv { o, k, stride, pad, residual: is_res, .. } => {
-            // filters beyond the fastpath tap limit cannot run there:
-            // cost them infinite so no plan ever selects the scheme
-            if k * k > crate::kernels::fastpath::bconv::MAX_TAPS {
-                return f64::INFINITY;
-            }
-            let c = dims.feat;
-            let ohw = out_hw(k, stride, pad);
-            let words = (ohw * ohw * batch * o * k * k * c.div_ceil(64)) as f64;
-            // im2row build + output repack are streamed bytes
-            let stream = (ohw * ohw * batch * (k * k * c.div_ceil(8) + o)) as f64;
-            let mut secs = words / host::WORD_OPS_PER_SEC
-                + stream / host::BYTES_PER_SEC
-                + host::DISPATCH_SECS;
-            if is_res && model_has_residuals && residual != ResidualMode::None {
-                let out_dims = dims.after(layer);
-                // fp16 residual save/fetch, same accounting as the GPU path
-                let xfers = match residual {
-                    ResidualMode::Full => 2,
-                    ResidualMode::SaveOnly | ResidualMode::FetchOnly => 1,
-                    ResidualMode::None => 0,
-                };
-                secs += (out_dims.flat() * batch * 2 * xfers) as f64
-                    / host::BYTES_PER_SEC;
-            }
-            secs
-        }
-        LayerSpec::BinFc { d_in, d_out } | LayerSpec::FinalFc { d_in, d_out } => {
-            let words = (batch * d_out * d_in.div_ceil(64)) as f64;
-            words / host::WORD_OPS_PER_SEC + host::DISPATCH_SECS
-        }
-        LayerSpec::Pool => {
-            // 4 packed loads + 1 store per output word
-            let bytes = (dims.flat() * batch).div_ceil(8) as f64;
-            bytes * 5.0 / host::BYTES_PER_SEC + host::DISPATCH_SECS
-        }
-    }
-}
-
 /// The kernel traces of one layer under `scheme`, in the fused-kernel
 /// view (no per-layer launches).  `dims` is the layer's *input* dims;
 /// `model_has_residuals` gates residual traffic exactly like
-/// `model_cost` does for ResNet models.  This is the single source of
-/// truth shared by `model_cost` and `engine::Planner`.
-///
-/// `Scheme::Fastpath` runs on the host, not the GPU: it has no kernel
-/// traces (this returns empty) and is costed analytically — see
-/// [`layer_secs`].
+/// `model_cost` does for ResNet models.  Dispatches through the global
+/// [`BackendRegistry`]; host backends (e.g. `Scheme::Fastpath`) have
+/// no GPU trace face and return empty — see [`layer_secs`].
 pub fn layer_traces(
     scheme: Scheme,
     layer: &LayerSpec,
@@ -350,55 +146,17 @@ pub fn layer_traces(
     residual: ResidualMode,
     model_has_residuals: bool,
 ) -> Vec<KernelTrace> {
-    if scheme == Scheme::Fastpath {
-        return Vec::new();
-    }
-    let mut traces: Vec<KernelTrace> = match *layer {
-        LayerSpec::FirstConv { o, k, stride, pad, .. } => {
-            vec![first_conv_trace(dims, batch, o, k, stride, pad)]
-        }
-        LayerSpec::BinConv { o, k, stride, pad, residual: is_res, pool: _, .. } => {
-            let mut v = bin_conv_traces(scheme, dims, batch, o, k, stride, pad);
-            if is_res && model_has_residuals {
-                let out_dims = dims.after(layer);
-                let elems = out_dims.flat() * batch;
-                if let Some(rt) = residual_trace(elems, residual) {
-                    v.push(rt);
-                }
-            }
-            v
-        }
-        LayerSpec::BinFc { d_in, d_out } => fc_traces(scheme, batch, d_in, d_out),
-        LayerSpec::FinalFc { d_in, d_out } => {
-            // real-valued output: int store + bn, no output binarize
-            let mut v = fc_traces(scheme, batch, d_in, round_up(d_out, 8));
-            for t in &mut v {
-                t.warp.bulk_store_bytes += 8 * 4; // int32 out per tile
-                t.warp.fp_ops += 64; // bn scale/shift
-            }
-            v
-        }
-        LayerSpec::Pool => {
-            let mut t = KernelTrace::new("pool");
-            let elems = dims.flat() * batch / 8; // packed bytes
-            t.grid_ctas = (elems / 4096).max(1);
-            t.warps_per_cta = 8;
-            t.warp.bulk_load_bytes = 4096;
-            t.warp.bulk_store_bytes = 1024;
-            t.warp.intu_ops = 3 * 1024;
-            vec![t]
-        }
-    };
-    // the fused kernel has no per-layer launches
-    for t in &mut traces {
-        t.launches = 0;
-    }
-    traces
+    BackendRegistry::global()
+        .get(scheme)
+        .expect("every builtin scheme has a registered backend")
+        .layer_traces(layer, dims, batch, residual, model_has_residuals)
 }
 
 /// Simulated seconds of one layer under `scheme` (compute only — the
 /// per-layer cooperative sync and the one-off kernel launch overhead are
-/// accounted at the model level).
+/// accounted at the model level).  This is the single source of truth
+/// shared by [`model_cost`] and `engine::Planner`, dispatched through
+/// the global [`BackendRegistry`].
 pub fn layer_secs(
     engine: &Engine,
     scheme: Scheme,
@@ -408,13 +166,10 @@ pub fn layer_secs(
     residual: ResidualMode,
     model_has_residuals: bool,
 ) -> f64 {
-    if scheme == Scheme::Fastpath {
-        return fastpath_layer_secs(layer, dims, batch, residual, model_has_residuals);
-    }
-    layer_traces(scheme, layer, dims, batch, residual, model_has_residuals)
-        .iter()
-        .map(|t| engine.cost(t).total_secs)
-        .sum()
+    BackendRegistry::global()
+        .get(scheme)
+        .expect("every builtin scheme has a registered backend")
+        .layer_secs(engine, layer, dims, batch, residual, model_has_residuals)
 }
 
 /// Simulate one model under a scheme.
@@ -475,6 +230,22 @@ mod tests {
     }
 
     #[test]
+    fn from_name_is_case_insensitive_inverse_of_name() {
+        for s in Scheme::all() {
+            assert_eq!(Scheme::from_name(s.name()), Ok(s));
+            assert_eq!(Scheme::from_name(&s.name().to_lowercase()), Ok(s));
+        }
+        assert_eq!(Scheme::from_name("fastpath"), Ok(Scheme::Fastpath));
+        assert_eq!(Scheme::from_name("btc-fmt"), Ok(Scheme::BtcFmt));
+        let err = Scheme::from_name("WARP-9").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("WARP-9"), "{msg}");
+        for s in Scheme::all() {
+            assert!(msg.contains(s.name()), "{msg} missing {}", s.name());
+        }
+    }
+
+    #[test]
     fn fastpath_costs_finite_and_batch_scalable() {
         // the host scheme has no GPU traces but must still produce
         // sane, monotone costs for every Table-5 model
@@ -500,7 +271,6 @@ mod tests {
                 m.name
             );
         }
-        assert_eq!(Scheme::from_name("FASTPATH"), Some(Scheme::Fastpath));
         for s in Scheme::all() {
             if s != Scheme::Fastpath {
                 assert!(

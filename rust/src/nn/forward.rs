@@ -4,16 +4,21 @@
 //! tests and the cifar example to demonstrate the full §6 pipeline
 //! (thrd -> bconv -> thrd -> OR-pool -> ... -> fc -> bn) in rust.
 //! ImageNet-scale *timing* comes from `cost`, not from executing bits.
+//!
+//! There is ONE entry point, [`forward_with`], dispatched through a
+//! [`BackendRegistry`]: the binarized conv/FC kernels come from the
+//! registered backend of the chosen [`Scheme`].  Every backend computes
+//! exact integer Eq-2 arithmetic, so the output bits are identical for
+//! every scheme — [`forward`] is just the convenience wrapper over the
+//! global registry.  (The old `forward_fastpath` is gone; call
+//! `forward_with(.., Scheme::Fastpath)` instead.)
 
-use crate::bitops::pack;
-use crate::bitops::pack64::BitMatrix64;
 use crate::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
-use crate::kernels::bconv::btc::BconvDesign1;
-use crate::kernels::bconv::{BconvProblem, BconvScheme};
-use crate::kernels::fastpath;
-use crate::util::threadpool::default_threads;
+use crate::kernels::backend::{BackendRegistry, ExecCtx};
+use crate::kernels::bconv::BconvProblem;
 use crate::util::Rng;
 
+use super::cost::Scheme;
 use super::layer::LayerSpec;
 use super::model::ModelDef;
 
@@ -104,40 +109,23 @@ impl Act {
     }
 }
 
-/// Eq-2 dot of every (input row, weight row) pair — the shared FC core.
-/// The scalar and fastpath variants are exact integer arithmetic over
-/// the same bits, so they agree on every entry.
-fn fc_dots(
-    flat: &BitMatrix,
-    w: &BitMatrix,
-    d_in: usize,
-    d_out: usize,
+/// The current activation as packed rows: flatten HWNC bits, pass flat
+/// rows through, or binarize a flat fp input (first-layer MLPs — the
+/// same `>= 0` rule the engine executor applies).
+fn flat_rows(
+    act: Option<Act>,
+    fp_input: &mut Option<Vec<f32>>,
     batch: usize,
-    use_fastpath: bool,
-    threads: usize,
-) -> Vec<i32> {
-    let mut v = vec![0i32; batch * d_out];
-    if use_fastpath {
-        let a64 = BitMatrix64::from_bitmatrix(flat);
-        let w64 = BitMatrix64::from_bitmatrix(w);
-        fastpath::bmm::dot_lines(
-            &a64.data,
-            &w64.data,
-            a64.words_per_line,
-            batch,
-            d_out,
-            d_in,
-            &mut v,
-            threads,
-        );
-    } else {
-        for bi in 0..batch {
-            for j in 0..d_out {
-                v[bi * d_out + j] = pack::pm1_dot(flat.line(bi), w.line(j), d_in);
-            }
+    d_in: usize,
+) -> BitMatrix {
+    match act {
+        Some(a) => a.flatten(batch),
+        None => {
+            let x = fp_input.take().expect("first layer needs fp input");
+            assert_eq!(x.len(), batch * d_in, "flat input size");
+            BitMatrix::from_f32(batch, d_in, &x, Layout::RowMajor)
         }
     }
-    v
 }
 
 /// 2x2 OR pool on an HWNC bit tensor.
@@ -162,38 +150,47 @@ fn or_pool(t: &BitTensor4) -> BitTensor4 {
     out
 }
 
-/// Run the model on a batch of fp32 NHWC (or flat) inputs -> logits.
+/// Run the model on a batch of fp32 NHWC (or flat) inputs -> logits,
+/// through the global registry's default scheme backend.
 pub fn forward(
     model: &ModelDef,
     weights: &ModelWeights,
     input: &[f32],
     batch: usize,
 ) -> Vec<f32> {
-    forward_impl(model, weights, input, batch, false)
+    forward_with(model, weights, input, batch, BackendRegistry::global(), Scheme::Btc)
 }
 
-/// Like [`forward`], but binarized layers run through the blocked u64
-/// backend (`kernels::fastpath`): bconv lowers onto the blocked BMM via
-/// bit-im2row, FC layers multiply u64-repacked rows.  The first (BWN)
-/// layer keeps the exact f32 accumulation order, so the output is
-/// bit-identical to `forward` on every input.
-pub fn forward_fastpath(
+/// The single registry-driven forward entry point: binarized conv/FC
+/// layers execute through `registry`'s backend for `scheme`.  All
+/// backends are exact integer Eq-2 arithmetic over the same bits (and
+/// the first BWN layer keeps one fixed f32 accumulation order), so the
+/// output is bit-identical for every registered scheme.
+///
+/// This is the *reference* path: weights are re-prepared through the
+/// backend on every call (clones/repacks included) and layers run
+/// serial.  Hot paths build an `EngineExecutor`, which prepares once
+/// and executes allocation-free.
+///
+/// Panics if `scheme` has no registered backend or a layer shape is
+/// rejected by the backend's `prepare_*` (the serving path surfaces
+/// these as `Result`s at `EngineExecutor` build time instead).
+pub fn forward_with(
     model: &ModelDef,
     weights: &ModelWeights,
     input: &[f32],
     batch: usize,
+    registry: &BackendRegistry,
+    scheme: Scheme,
 ) -> Vec<f32> {
-    forward_impl(model, weights, input, batch, true)
-}
-
-fn forward_impl(
-    model: &ModelDef,
-    weights: &ModelWeights,
-    input: &[f32],
-    batch: usize,
-    use_fastpath: bool,
-) -> Vec<f32> {
-    let threads = if use_fastpath { default_threads() } else { 1 };
+    let backend = registry.get(scheme).unwrap_or_else(|| {
+        panic!("scheme {} has no registered backend", scheme.name())
+    });
+    // the reference path runs serial: it is the slow, obvious oracle
+    // the engine executor (and the bench ratios normalized against
+    // "naive") are measured against — results are thread-count
+    // independent anyway, since every backend is exact integer math
+    let threads = 1;
     let mut dims = model.input;
     // initial activation
     let mut act: Option<Act> = None;
@@ -261,11 +258,13 @@ fn forward_impl(
                     stride: *stride,
                     pad: *pad,
                 };
-                let ints = if use_fastpath {
-                    fastpath::bconv::bconv(&t, filter, p, threads)
-                } else {
-                    BconvDesign1.compute(&t, filter, p)
-                };
+                let prepared = backend
+                    .prepare_conv(filter, p)
+                    .unwrap_or_else(|e| panic!("{}: prepare conv: {e}", scheme.name()));
+                let mut scratch = vec![0u64; prepared.scratch_words(p)];
+                let mut ints = vec![0i32; p.out_elems()];
+                let mut ctx = ExecCtx { words64: &mut scratch, threads };
+                prepared.bconv(&t.data, p, &mut ints, &mut ctx);
                 let ohw = p.out_hw();
                 let mut bits =
                     BitTensor4::zeros([ohw, ohw, batch, *o], TensorLayout::Hwnc);
@@ -285,9 +284,15 @@ fn forward_impl(
                 act = Some(Act::Bits(bits));
             }
             (LayerSpec::BinFc { d_in, d_out }, LayerWeights::BinFc { w, thresh }) => {
-                let flat = act.take().unwrap().flatten(batch);
+                let flat = flat_rows(act.take(), &mut fp_input, batch, *d_in);
                 assert_eq!(flat.cols, *d_in);
-                let v = fc_dots(&flat, w, *d_in, *d_out, batch, use_fastpath, threads);
+                let prepared = backend
+                    .prepare_fc(w)
+                    .unwrap_or_else(|e| panic!("{}: prepare fc: {e}", scheme.name()));
+                let mut scratch = vec![0u64; prepared.scratch_words(batch)];
+                let mut v = vec![0i32; batch * d_out];
+                let mut ctx = ExecCtx { words64: &mut scratch, threads };
+                prepared.bmm(&flat.data, batch, &mut v, &mut ctx);
                 let mut out = BitMatrix::zeros(batch, *d_out, Layout::RowMajor);
                 for bi in 0..batch {
                     for j in 0..*d_out {
@@ -302,9 +307,15 @@ fn forward_impl(
                 LayerSpec::FinalFc { d_in, d_out },
                 LayerWeights::FinalFc { w, gamma, beta },
             ) => {
-                let flat = act.take().unwrap().flatten(batch);
+                let flat = flat_rows(act.take(), &mut fp_input, batch, *d_in);
                 assert_eq!(flat.cols, *d_in);
-                let v = fc_dots(&flat, w, *d_in, *d_out, batch, use_fastpath, threads);
+                let prepared = backend
+                    .prepare_fc(w)
+                    .unwrap_or_else(|e| panic!("{}: prepare fc: {e}", scheme.name()));
+                let mut scratch = vec![0u64; prepared.scratch_words(batch)];
+                let mut v = vec![0i32; batch * d_out];
+                let mut ctx = ExecCtx { words64: &mut scratch, threads };
+                prepared.bmm(&flat.data, batch, &mut v, &mut ctx);
                 let mut logits = vec![0.0f32; batch * d_out];
                 for bi in 0..batch {
                     for j in 0..*d_out {
@@ -370,12 +381,36 @@ mod tests {
     }
 
     #[test]
-    fn fastpath_forward_is_bit_identical() {
+    fn every_registered_scheme_is_bit_identical() {
         let m = tiny_model();
         let mut rng = Rng::new(8);
         let w = random_weights(&m, &mut rng);
         let x: Vec<f32> = (0..8 * 8 * 8 * 3).map(|_| rng.next_f32() - 0.5).collect();
-        assert_eq!(forward(&m, &w, &x, 8), forward_fastpath(&m, &w, &x, 8));
+        let reg = BackendRegistry::global();
+        let want = forward(&m, &w, &x, 8);
+        for s in reg.schemes() {
+            assert_eq!(
+                forward_with(&m, &w, &x, 8, reg, s),
+                want,
+                "scheme {}",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn mlp_forward_binarizes_flat_fp_input() {
+        let m = crate::nn::model::mnist_mlp();
+        let mut rng = Rng::new(12);
+        let w = random_weights(&m, &mut rng);
+        let batch = 4;
+        let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32() - 0.5).collect();
+        let a = forward(&m, &w, &x, batch);
+        assert_eq!(a.len(), batch * 10);
+        assert!(a.iter().all(|v| v.is_finite()));
+        // registry-uniform here too
+        let reg = BackendRegistry::global();
+        assert_eq!(forward_with(&m, &w, &x, batch, reg, Scheme::Fastpath), a);
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! * `parser` — Table 5 network-structure strings ("(2x128C3)-MP2-...").
 //! * `model`  — the six evaluation models + the ResNet-50/101/152 depth
 //!   variants of Table 11.
-//! * `cost`   — per-layer timing on the Turing model for each scheme row
-//!   of Tables 6–7 (SBNN-32/-Fine/64/-Fine, BTC, BTC-FMT).
-//! * `forward`— functional packed-bit forward pass (used by tests and
-//!   the cifar example; ImageNet-scale timing never executes bits).
+//! * `cost`   — the `Scheme` key type and per-layer/model timing,
+//!   dispatched through `kernels::backend::BackendRegistry` (each
+//!   backend owns its Tables-6/7 trace face or host cost model).
+//! * `forward`— functional packed-bit forward pass, registry-driven
+//!   (`forward_with` picks the backend; used by tests and the cifar
+//!   example; ImageNet-scale timing never executes bits).
 
 pub mod cost;
 pub mod forward;

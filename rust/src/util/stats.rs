@@ -10,6 +10,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
 }
 
@@ -31,6 +32,7 @@ impl Summary {
             max: s[n - 1],
             p50: percentile_sorted(&s, 50.0),
             p90: percentile_sorted(&s, 90.0),
+            p95: percentile_sorted(&s, 95.0),
             p99: percentile_sorted(&s, 99.0),
         }
     }
@@ -91,6 +93,7 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99);
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! Backend-generic acceptance tests for the `KernelBackend` registry.
+//!
+//! 1. **Equivalence harness** — for EVERY registered backend,
+//!    property-test bit-exact agreement with the naive Eq-2 BMM and
+//!    the exclude-amended BConv reference on random odd shapes
+//!    (non-multiple-of-32/64 widths, 1xN, Nx1).  This replaces the
+//!    per-scheme test copies that used to live in
+//!    `kernels_equivalence.rs` / `fastpath_equivalence.rs`: a new
+//!    backend is covered the moment it registers.
+//! 2. **Registry extension proof** — a toy backend defined HERE, in a
+//!    test crate, is registered over the builtin set and served end to
+//!    end (planner -> executor -> coordinator) without touching any
+//!    `match` on `Scheme` in `nn::forward`, `nn::cost`, or
+//!    `engine::executor`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use tcbnn::bitops::{pack, BitMatrix, BitTensor4, Layout, TensorLayout};
+use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
+use tcbnn::engine::{EngineExecutor, EngineModel, PlanPolicy, Planner};
+use tcbnn::kernels::backend::{
+    BackendRegistry, ExecCtx, KernelBackend, PreparedConv, PreparedFc,
+};
+use tcbnn::kernels::backends::scalar::{ScalarConv, ScalarFc};
+use tcbnn::kernels::bconv::{self, BconvProblem};
+use tcbnn::nn::forward::{forward, forward_with, random_weights};
+use tcbnn::nn::layer::{Dims, LayerSpec};
+use tcbnn::nn::model::mnist_mlp;
+use tcbnn::nn::{ModelDef, ResidualMode, Scheme};
+use tcbnn::sim::{Engine, KernelTrace, RTX2080TI};
+use tcbnn::util::proptest::run_cases;
+use tcbnn::util::Rng;
+
+/// A width that is deliberately NOT a multiple of 64 (and usually not
+/// of 32 either).
+fn off64(rng: &mut Rng, max: usize) -> usize {
+    loop {
+        let n = 1 + rng.gen_range(max);
+        if n % 64 != 0 {
+            return n;
+        }
+    }
+}
+
+/// Naive Eq-2 FC reference: pm1 dot of every (input row, weight row).
+fn naive_fc(a: &BitMatrix, w: &BitMatrix) -> Vec<i32> {
+    let (batch, d_in, d_out) = (a.rows, a.cols, w.rows);
+    assert_eq!(w.cols, d_in);
+    let mut out = vec![0i32; batch * d_out];
+    for bi in 0..batch {
+        for j in 0..d_out {
+            out[bi * d_out + j] = pack::pm1_dot(a.line(bi), w.line(j), d_in);
+        }
+    }
+    out
+}
+
+fn run_fc_backend(b: &dyn KernelBackend, a: &BitMatrix, w: &BitMatrix) -> Vec<i32> {
+    let batch = a.rows;
+    let d_out = w.rows;
+    let fc = b.prepare_fc(w).expect("prepare_fc");
+    let mut scratch = vec![0u64; fc.scratch_words(batch)];
+    let mut ints = vec![0i32; batch * d_out];
+    let mut ctx = ExecCtx { words64: &mut scratch, threads: 2 };
+    fc.bmm(&a.data, batch, &mut ints, &mut ctx);
+    ints
+}
+
+#[test]
+fn every_backend_fc_matches_naive_eq2_at_odd_shapes() {
+    let reg = BackendRegistry::builtin();
+    run_cases(501, 25, |rng| {
+        let batch = 1 + rng.gen_range(20);
+        let d_out = 1 + rng.gen_range(40);
+        let d_in = off64(rng, 300);
+        let a = BitMatrix::random(batch, d_in, Layout::RowMajor, rng);
+        let w = BitMatrix::random(d_out, d_in, Layout::RowMajor, rng);
+        let want = naive_fc(&a, &w);
+        for b in reg.backends() {
+            assert_eq!(
+                run_fc_backend(b, &a, &w),
+                want,
+                "{} at {batch}x{d_out}x{d_in}",
+                b.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn every_backend_fc_single_row_and_single_column() {
+    let reg = BackendRegistry::builtin();
+    run_cases(502, 15, |rng| {
+        let n = 1 + rng.gen_range(120);
+        let k = off64(rng, 260);
+        // 1 x N
+        let a = BitMatrix::random(1, k, Layout::RowMajor, rng);
+        let w = BitMatrix::random(n, k, Layout::RowMajor, rng);
+        let want = naive_fc(&a, &w);
+        for b in reg.backends() {
+            assert_eq!(run_fc_backend(b, &a, &w), want, "{} 1x{n}x{k}", b.name());
+        }
+        // N x 1
+        let a = BitMatrix::random(n, k, Layout::RowMajor, rng);
+        let w = BitMatrix::random(1, k, Layout::RowMajor, rng);
+        let want = naive_fc(&a, &w);
+        for b in reg.backends() {
+            assert_eq!(run_fc_backend(b, &a, &w), want, "{} {n}x1x{k}", b.name());
+        }
+    });
+}
+
+#[test]
+fn every_backend_bconv_matches_exclude_amended_ref_at_odd_shapes() {
+    let reg = BackendRegistry::builtin();
+    run_cases(503, 15, |rng| {
+        let p = BconvProblem {
+            hw: 3 + rng.gen_range(6),
+            n: 1 + rng.gen_range(8),
+            c: off64(rng, 140),
+            o: 1 + rng.gen_range(24),
+            k: 3,
+            stride: 1 + rng.gen_range(2),
+            pad: rng.gen_range(2),
+        };
+        let input =
+            BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, rng);
+        let filter =
+            BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, rng);
+        let want = bconv::naive_ref(&input, &filter, p);
+        for b in reg.backends() {
+            let conv = b.prepare_conv(&filter, p).expect("prepare_conv");
+            let mut scratch = vec![0u64; conv.scratch_words(p)];
+            let mut ints = vec![0i32; p.out_elems()];
+            let mut ctx = ExecCtx { words64: &mut scratch, threads: 2 };
+            conv.bconv(&input.data, p, &mut ints, &mut ctx);
+            assert_eq!(ints, want, "{} at {p:?}", b.name());
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Registry extension proof: the toy backend
+// ---------------------------------------------------------------------
+
+static TOY_PREPARES: AtomicUsize = AtomicUsize::new(0);
+static TOY_KERNEL_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+/// A test-only backend registered over `Scheme::Sbnn32`: execution
+/// delegates to the shared scalar kernels (so results stay bit-exact)
+/// while counting invocations, and the cost face claims to be
+/// essentially free so the planner must pick it for every layer.
+struct ToyBackend;
+
+struct ToyFc(ScalarFc);
+
+impl PreparedFc for ToyFc {
+    fn scratch_words(&self, batch: usize) -> usize {
+        self.0.scratch_words(batch)
+    }
+    fn bmm(&self, src: &[u32], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        TOY_KERNEL_CALLS.fetch_add(1, Ordering::SeqCst);
+        self.0.bmm(src, batch, ints, ctx)
+    }
+}
+
+struct ToyConv(ScalarConv);
+
+impl PreparedConv for ToyConv {
+    fn scratch_words(&self, p: BconvProblem) -> usize {
+        self.0.scratch_words(p)
+    }
+    fn bconv(&self, src: &[u32], p: BconvProblem, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        TOY_KERNEL_CALLS.fetch_add(1, Ordering::SeqCst);
+        self.0.bconv(src, p, ints, ctx)
+    }
+}
+
+impl KernelBackend for ToyBackend {
+    fn scheme(&self) -> Scheme {
+        Scheme::Sbnn32
+    }
+
+    fn prepare_fc(&self, w: &BitMatrix) -> Result<Box<dyn PreparedFc>> {
+        TOY_PREPARES.fetch_add(1, Ordering::SeqCst);
+        Ok(Box::new(ToyFc(ScalarFc::new(w))))
+    }
+
+    fn prepare_conv(
+        &self,
+        filter: &BitTensor4,
+        _p: BconvProblem,
+    ) -> Result<Box<dyn PreparedConv>> {
+        TOY_PREPARES.fetch_add(1, Ordering::SeqCst);
+        Ok(Box::new(ToyConv(ScalarConv::new(filter))))
+    }
+
+    fn layer_traces(
+        &self,
+        _layer: &LayerSpec,
+        _dims: Dims,
+        _batch: usize,
+        _residual: ResidualMode,
+        _model_has_residuals: bool,
+    ) -> Vec<KernelTrace> {
+        Vec::new()
+    }
+
+    /// Essentially free: the planner must rank the toy first everywhere.
+    fn layer_secs(
+        &self,
+        _engine: &Engine,
+        _layer: &LayerSpec,
+        _dims: Dims,
+        _batch: usize,
+        _residual: ResidualMode,
+        _model_has_residuals: bool,
+    ) -> f64 {
+        1e-12
+    }
+}
+
+fn toy_conv_model() -> ModelDef {
+    ModelDef {
+        name: "toy-backend-conv",
+        dataset: "synthetic",
+        input: Dims { hw: 8, feat: 3 },
+        classes: 5,
+        layers: vec![
+            LayerSpec::FirstConv { c: 3, o: 40, k: 3, stride: 1, pad: 1 },
+            LayerSpec::BinConv {
+                c: 40,
+                o: 40,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                pool: true,
+                residual: false,
+            },
+            LayerSpec::BinFc { d_in: 4 * 4 * 40, d_out: 72 },
+            LayerSpec::FinalFc { d_in: 72, d_out: 5 },
+        ],
+        residual_blocks: 0,
+    }
+}
+
+/// The toy registry: builtin backends with the toy registered over
+/// `Scheme::Sbnn32`.
+fn toy_registry() -> Arc<BackendRegistry> {
+    let mut reg = BackendRegistry::builtin();
+    reg.register(Box::new(ToyBackend));
+    Arc::new(reg)
+}
+
+#[test]
+fn toy_backend_wins_the_plan_and_executes_bit_exactly() {
+    let reg = toy_registry();
+    let planner = Planner::with_registry(&RTX2080TI, Arc::clone(&reg));
+    let m = toy_conv_model();
+    let batch = 8;
+
+    // the planner must hand every layer to the (free) toy backend
+    let plan = planner.plan(&m, batch);
+    for lp in &plan.layers {
+        assert_eq!(lp.scheme, Scheme::Sbnn32, "layer {} not routed to toy", lp.tag);
+    }
+
+    // executor prepares through the toy and stays bit-identical to the
+    // registry-less reference forward
+    let mut rng = Rng::new(601);
+    let w = random_weights(&m, &mut rng);
+    let x: Vec<f32> =
+        (0..batch * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
+    let want = forward(&m, &w, &x, batch);
+
+    let prepares_before = TOY_PREPARES.load(Ordering::SeqCst);
+    let mut exec = EngineExecutor::with_registry(m.clone(), &w, plan, &reg).unwrap();
+    assert!(
+        TOY_PREPARES.load(Ordering::SeqCst) > prepares_before,
+        "executor must prepare weights through the toy backend"
+    );
+    let calls_before = TOY_KERNEL_CALLS.load(Ordering::SeqCst);
+    assert_eq!(exec.forward(&x, batch), &want[..]);
+    assert!(
+        TOY_KERNEL_CALLS.load(Ordering::SeqCst) > calls_before,
+        "the toy kernels must actually run"
+    );
+
+    // the reference forward also routes through the registry
+    assert_eq!(forward_with(&m, &w, &x, batch, &reg, Scheme::Sbnn32), want);
+}
+
+/// Acceptance: the toy backend served end to end through
+/// `coordinator::server`, logits identical to the builtin engine.
+#[test]
+fn toy_backend_served_through_coordinator() {
+    let m = mnist_mlp();
+    let mut rng = Rng::new(602);
+    let weights = random_weights(&m, &mut rng);
+
+    // ground truth from the builtin-registry engine
+    let planner = Planner::new(&RTX2080TI);
+    let mut builtin = EngineModel::builder(&planner, &m, &weights)
+        .buckets(vec![8])
+        .build()
+        .unwrap();
+    let n = 24usize;
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..784).map(|_| rng.next_f32() - 0.5).collect())
+        .collect();
+    let mut want = Vec::new();
+    for x in &inputs {
+        let mut padded = Vec::with_capacity(8 * 784);
+        for _ in 0..8 {
+            padded.extend_from_slice(x);
+        }
+        let out = builtin.run_batch(&padded, 8).unwrap();
+        want.push(out[..10].to_vec());
+    }
+
+    let calls_before = TOY_KERNEL_CALLS.load(Ordering::SeqCst);
+    let m2 = m.clone();
+    let srv = InferenceServer::start(
+        ServerConfig { max_wait: Duration::from_millis(1), queue_capacity: 4096 },
+        move || {
+            let planner = Planner::with_registry(&RTX2080TI, toy_registry());
+            // Search policy: the toy's free cost face must win the plan
+            Ok(Box::new(
+                EngineModel::builder(&planner, &m2, &weights)
+                    .buckets(vec![8])
+                    .policy(PlanPolicy::Search)
+                    .build()?,
+            ) as Box<dyn BatchModel>)
+        },
+    );
+    let resps = srv.submit_all(inputs);
+    assert_eq!(resps.len(), n);
+    for (i, r) in resps.iter().enumerate() {
+        assert_eq!(r.logits, want[i], "request {i} logits");
+    }
+    assert_eq!(srv.metrics.completed(), n as u64);
+    assert!(
+        TOY_KERNEL_CALLS.load(Ordering::SeqCst) > calls_before,
+        "served batches must run on the toy backend"
+    );
+}

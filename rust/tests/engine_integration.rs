@@ -6,7 +6,7 @@
 use std::time::Duration;
 
 use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
-use tcbnn::engine::{EngineModel, ModelPlan, PlanCache, Planner};
+use tcbnn::engine::{EngineModel, ModelPlan, PlanCache, PlanPolicy, Planner};
 use tcbnn::nn::cost::{layer_secs, model_cost};
 use tcbnn::nn::forward::{forward, random_weights};
 use tcbnn::nn::layer::{Dims, LayerSpec};
@@ -186,8 +186,10 @@ fn table5_model_served_through_coordinator() {
 
     // direct executor pass for ground truth
     let planner = Planner::new(&RTX2080TI);
-    let mut direct =
-        EngineModel::new(&planner, &m, &weights, vec![8, 32], None).unwrap();
+    let mut direct = EngineModel::builder(&planner, &m, &weights)
+        .buckets(vec![8, 32])
+        .build()
+        .unwrap();
     let n = 48usize;
     let inputs: Vec<Vec<f32>> = (0..n)
         .map(|_| (0..784).map(|_| rng.next_f32() - 0.5).collect())
@@ -210,13 +212,12 @@ fn table5_model_served_through_coordinator() {
         ServerConfig { max_wait: Duration::from_millis(1), queue_capacity: 4096 },
         move || {
             let planner = Planner::new(&RTX2080TI);
-            Ok(Box::new(EngineModel::new(
-                &planner,
-                &m2,
-                &weights,
-                vec![8, 32],
-                None,
-            )?) as Box<dyn BatchModel>)
+            Ok(Box::new(
+                EngineModel::builder(&planner, &m2, &weights)
+                    .buckets(vec![8, 32])
+                    .policy(PlanPolicy::Search)
+                    .build()?,
+            ) as Box<dyn BatchModel>)
         },
     );
     let resps = srv.submit_all(inputs);
@@ -235,7 +236,10 @@ fn engine_metrics_visible_through_server() {
     let mut rng = Rng::new(9);
     let weights = random_weights(&m, &mut rng);
     let planner = Planner::new(&RTX2080TI);
-    let em = EngineModel::new(&planner, &m, &weights, vec![8, 32], None).unwrap();
+    let em = EngineModel::builder(&planner, &m, &weights)
+        .buckets(vec![8, 32])
+        .build()
+        .unwrap();
     let engine_metrics = em.metrics_handle();
     let mut slot = Some(em);
     let srv = InferenceServer::start(ServerConfig::default(), move || {

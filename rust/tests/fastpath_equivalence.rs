@@ -1,52 +1,28 @@
-//! Fastpath acceptance tests: the blocked u64 backend must be
-//! bit-identical to the naive Eq-2 references and the paper-scheme
-//! computes on every shape — including the awkward ones (widths that
-//! are not multiples of 64, single-row/single-column matrices) — and
-//! servable end to end through `coordinator::server`.
+//! Fastpath acceptance tests: the blocked u64 backend must agree with
+//! the paper-scheme computes on aligned shapes and be servable end to
+//! end through `coordinator::server`.
+//!
+//! (The odd-shape property coverage — non-multiple-of-64 widths, 1xN,
+//! Nx1 — lives in `backend_equivalence.rs` now, where it runs against
+//! EVERY registered backend instead of a per-scheme copy here.)
 
 use std::time::Duration;
 
 use tcbnn::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
 use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
-use tcbnn::engine::{EngineExecutor, EngineModel, Planner};
+use tcbnn::engine::{EngineExecutor, EngineModel, PlanPolicy, Planner};
+use tcbnn::kernels::backend::BackendRegistry;
 use tcbnn::kernels::bconv::btc::BconvDesign1;
-use tcbnn::kernels::bconv::{self, BconvProblem, BconvScheme};
+use tcbnn::kernels::bconv::{BconvProblem, BconvScheme};
 use tcbnn::kernels::bmm::btc::Design1;
 use tcbnn::kernels::bmm::{self, BmmScheme};
 use tcbnn::kernels::fastpath;
-use tcbnn::nn::forward::{forward, forward_fastpath, random_weights};
+use tcbnn::nn::forward::{forward, forward_with, random_weights};
 use tcbnn::nn::layer::{Dims, LayerSpec};
 use tcbnn::nn::model::mnist_mlp;
 use tcbnn::nn::{ModelDef, Scheme};
 use tcbnn::sim::RTX2080TI;
-use tcbnn::util::proptest::run_cases;
 use tcbnn::util::Rng;
-
-/// A width that is deliberately NOT a multiple of 64.
-fn off64(rng: &mut Rng, max: usize) -> usize {
-    loop {
-        let n = 1 + rng.gen_range(max);
-        if n % 64 != 0 {
-            return n;
-        }
-    }
-}
-
-#[test]
-fn bmm_matches_naive_at_odd_shapes() {
-    run_cases(301, 60, |rng| {
-        let m = off64(rng, 90);
-        let n = off64(rng, 90);
-        let k = off64(rng, 400);
-        let a = BitMatrix::random(m, k, Layout::RowMajor, rng);
-        let b = BitMatrix::random(k, n, Layout::ColMajor, rng);
-        assert_eq!(
-            fastpath::bmm::bmm(&a, &b, 2),
-            bmm::naive_ref(&a, &b),
-            "{m}x{n}x{k}"
-        );
-    });
-}
 
 #[test]
 fn bmm_matches_design1_at_tile_aligned_but_not_64_shapes() {
@@ -60,46 +36,6 @@ fn bmm_matches_design1_at_tile_aligned_but_not_64_shapes() {
         assert_eq!(fastpath::bmm::bmm(&a, &b, 2), want, "{m}x{n}x{k}");
         assert_eq!(bmm::naive_ref(&a, &b), want, "{m}x{n}x{k} naive");
     }
-}
-
-#[test]
-fn bmm_single_row_and_single_column() {
-    run_cases(303, 40, |rng| {
-        let n = 1 + rng.gen_range(150);
-        let k = off64(rng, 300);
-        // 1 x N
-        let a = BitMatrix::random(1, k, Layout::RowMajor, rng);
-        let b = BitMatrix::random(k, n, Layout::ColMajor, rng);
-        assert_eq!(fastpath::bmm::bmm(&a, &b, 2), bmm::naive_ref(&a, &b), "1x{n}");
-        // N x 1
-        let a = BitMatrix::random(n, k, Layout::RowMajor, rng);
-        let b = BitMatrix::random(k, 1, Layout::ColMajor, rng);
-        assert_eq!(fastpath::bmm::bmm(&a, &b, 2), bmm::naive_ref(&a, &b), "{n}x1");
-    });
-}
-
-#[test]
-fn bconv_matches_naive_at_odd_channels() {
-    run_cases(304, 30, |rng| {
-        let p = BconvProblem {
-            hw: 3 + rng.gen_range(6),
-            n: 1 + rng.gen_range(8),
-            c: off64(rng, 140),
-            o: 1 + rng.gen_range(24),
-            k: 3,
-            stride: 1 + rng.gen_range(2),
-            pad: rng.gen_range(2),
-        };
-        let input =
-            BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, rng);
-        let filter =
-            BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, rng);
-        assert_eq!(
-            fastpath::bconv::bconv(&input, &filter, p, 2),
-            bconv::naive_ref(&input, &filter, p),
-            "{p:?}"
-        );
-    });
 }
 
 #[test]
@@ -120,9 +56,7 @@ fn bconv_matches_design1_at_aligned_channels() {
 }
 
 fn odd_conv_model() -> ModelDef {
-    // deliberately non-64-multiple widths end to end (96, 40, 640, 72);
-    // channel counts stay multiples of 32 because the naive reference
-    // path (`BconvDesign1`) walks whole u32 channel words
+    // deliberately non-64-multiple widths end to end (96, 40, 640, 72)
     ModelDef {
         name: "fastpath-odd",
         dataset: "synthetic",
@@ -147,18 +81,17 @@ fn odd_conv_model() -> ModelDef {
 }
 
 #[test]
-fn forward_fastpath_is_bit_identical_to_forward() {
+fn fastpath_forward_is_bit_identical_to_default() {
+    // the merged entry point: same registry, fastpath scheme
     let m = odd_conv_model();
     let mut rng = Rng::new(306);
     let w = random_weights(&m, &mut rng);
-    // the naive reference path tiles conv rows in blocks of 8, so the
-    // comparison batch must be a multiple of 8
     let batch = 8;
     let x: Vec<f32> =
         (0..batch * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
     assert_eq!(
         forward(&m, &w, &x, batch),
-        forward_fastpath(&m, &w, &x, batch)
+        forward_with(&m, &w, &x, batch, BackendRegistry::global(), Scheme::Fastpath)
     );
 }
 
@@ -180,8 +113,8 @@ fn executor_fastpath_plan_matches_naive_on_odd_model() {
 }
 
 /// Acceptance: a fastpath-pinned Table-5 model served end to end
-/// through `coordinator::server`, logits identical to a scalar-engine
-/// model of the same weights.
+/// through `coordinator::server` (builder + `PlanPolicy::Fixed`),
+/// logits identical to a search-planned model of the same weights.
 #[test]
 fn fastpath_model_served_through_coordinator() {
     let m = mnist_mlp();
@@ -189,9 +122,11 @@ fn fastpath_model_served_through_coordinator() {
     let weights = random_weights(&m, &mut rng);
     let planner = Planner::new(&RTX2080TI);
 
-    // ground truth from the scalar engine
-    let mut scalar =
-        EngineModel::new(&planner, &m, &weights, vec![8], None).unwrap();
+    // ground truth from the search-planned engine
+    let mut scalar = EngineModel::builder(&planner, &m, &weights)
+        .buckets(vec![8])
+        .build()
+        .unwrap();
     let n = 24usize;
     let inputs: Vec<Vec<f32>> = (0..n)
         .map(|_| (0..784).map(|_| rng.next_f32() - 0.5).collect())
@@ -211,13 +146,12 @@ fn fastpath_model_served_through_coordinator() {
         ServerConfig { max_wait: Duration::from_millis(1), queue_capacity: 4096 },
         move || {
             let planner = Planner::new(&RTX2080TI);
-            Ok(Box::new(EngineModel::new_fixed(
-                &planner,
-                &m2,
-                &weights,
-                vec![8],
-                Scheme::Fastpath,
-            )?) as Box<dyn BatchModel>)
+            Ok(Box::new(
+                EngineModel::builder(&planner, &m2, &weights)
+                    .buckets(vec![8])
+                    .policy(PlanPolicy::Fixed(Scheme::Fastpath))
+                    .build()?,
+            ) as Box<dyn BatchModel>)
         },
     );
     let resps = srv.submit_all(inputs);

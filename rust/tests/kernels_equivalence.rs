@@ -1,6 +1,8 @@
-//! Cross-module property tests: every BMM/BConv scheme is bit-exact
-//! against the float semantics, through random shapes and the FSB
-//! format conversion.
+//! Cross-module property tests: every BMM/BConv scheme *compute* is
+//! bit-exact against the float semantics, through random shapes and
+//! the FSB format conversion.  (Backend-level equivalence — every
+//! registered `KernelBackend` against the naive Eq-2/exclude-amended
+//! references at odd shapes — lives in `backend_equivalence.rs`.)
 
 use tcbnn::bitops::{BitMatrix, BitTensor4, FsbMatrix, Layout, TensorLayout};
 use tcbnn::kernels::bconv::{self, BconvProblem};
