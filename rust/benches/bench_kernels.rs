@@ -8,6 +8,7 @@
 //!   cargo bench --bench bench_kernels -- \
 //!       [--list-schemes]             # print BackendRegistry names, exit
 //!       [--quick]                    # CI settings (short measurements)
+//!       [--seed 99]                  # input-generation seed (default 99)
 //!       [--out BENCH_PR2.json]      # where to write the JSON document
 //!       [--check benches/baseline.json]   # regression gate (exit 1)
 //!       [--write-baseline benches/baseline.json]  # refresh baseline
@@ -128,6 +129,10 @@ fn main() {
         return;
     }
     let quick = args.flag("quick");
+    // --seed threads through ALL input generation (model weights,
+    // activations, kernel operands) so any run — in particular --quick
+    // CI runs — is reproducible end to end and perturbable on demand
+    let seed = args.get_usize("seed", 99) as u64;
     let out_path = args.get_or("out", "BENCH_PR2.json");
     let b = if quick { Bencher::quick() } else { Bencher::from_env() };
     let threads = default_threads();
@@ -139,7 +144,7 @@ fn main() {
 
     // ---- model x scheme x batch: executed img/s on this machine ----
     for model in [mnist_mlp(), cifar_lite()] {
-        let mut rng = Rng::new(99);
+        let mut rng = Rng::new(seed);
         let weights = random_weights(&model, &mut rng);
         let bpi = bytes_per_img(&model);
         for &batch in batches {
@@ -268,7 +273,7 @@ fn main() {
     // ---- ResNet-18 block shapes: fastpath vs best scalar scheme ----
     // bconv at the paper's ResNet-18 interior stages (c=o=256 @14x14,
     // c=o=512 @7x7, 3x3/s1/p1), batch 8
-    let mut rng = Rng::new(7);
+    let mut rng = Rng::new(seed.wrapping_mul(31).wrapping_add(7));
     let conv_shapes =
         [("r18-bconv-c256-hw14", 14usize, 256usize), ("r18-bconv-c512-hw7", 7, 512)];
     for (tag, hw, c) in conv_shapes {
@@ -394,6 +399,7 @@ fn main() {
             Value::Str(if quick { "quick" } else { "full" }.to_string()),
         ),
         ("threads".to_string(), Value::Num(threads as f64)),
+        ("seed".to_string(), Value::Num(seed as f64)),
         (
             "schemes".to_string(),
             Value::Arr(

@@ -1,0 +1,186 @@
+//! tuner — measured calibration of the planner's host cost models.
+//!
+//! Runs every registered *host* backend's `bmm`/`bconv` kernels over a
+//! fixed grid of layer shapes, least-squares-fits the backend's
+//! cost-model coefficients, and emits a schema-versioned
+//! `CalibrationProfile` JSON artifact keyed by this host's
+//! fingerprint.  The emitted profile is validated by re-loading it,
+//! and planner choices under `CostSource::Calibrated` are checked
+//! against the analytic baseline on every unambiguous (>3x margin)
+//! layer of the Table-5 models — a mismatch there means the fit is
+//! broken, not that the host is interesting, so the run fails.
+//!
+//!   cargo run --release --bin tuner -- \
+//!       [--quick]                 # CI settings (short measurements)
+//!       [--out tuner-profile.json]
+//!       [--cache-dir <dir>]       # also persist next to a PlanCache
+//!       [--seed 42]               # input-generation seed
+//!       [--margin 3.0]            # consistency-check margin
+//!       [--skip-consistency]
+//!
+//! CI runs `tuner --quick` in the `tuner-smoke` job and uploads the
+//! profile artifact.  See docs/ENGINE.md ("Calibration & CostSource").
+
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use tcbnn::engine::PlanCache;
+use tcbnn::kernels::backend::BackendRegistry;
+use tcbnn::nn::model::all_models;
+use tcbnn::sim::RTX2080TI;
+use tcbnn::tuner::{
+    consistency_vs_analytic, fit_profile, microbench, CalibrationProfile, CostSource,
+    HostFingerprint, MicrobenchConfig,
+};
+use tcbnn::util::cli::Args;
+use tcbnn::util::stats::fmt_rate;
+use tcbnn::util::threadpool::default_threads;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let out = args.get_or("out", "tuner-profile.json");
+    let cfg = MicrobenchConfig {
+        quick,
+        seed: args.get_usize("seed", 42) as u64,
+        threads: default_threads(),
+    };
+    let registry = BackendRegistry::global();
+    // fingerprint the parallelism the measurements actually run with
+    let fingerprint = HostFingerprint::detect_with_cores(registry, cfg.threads);
+    println!(
+        "tuner: host fingerprint cores={} cache_line={} schemes={:?}",
+        fingerprint.cores, fingerprint.cache_line, fingerprint.schemes
+    );
+    let host_backends: Vec<&str> = registry
+        .backends()
+        .filter(|b| microbench::is_host_backend(*b))
+        .map(|b| b.name())
+        .collect();
+    println!(
+        "calibratable host backends: {host_backends:?} (GPU schemes keep their \
+         simulated cost faces)"
+    );
+
+    // ---- measure + fit --------------------------------------------------
+    let measurements = microbench::run(registry, &cfg);
+    if measurements.is_empty() {
+        eprintln!("tuner: no host backend produced measurements");
+        return ExitCode::FAILURE;
+    }
+    println!("measured {} grid cells ({} mode)", measurements.len(), mode(quick));
+    for m in &measurements {
+        println!(
+            "  {:<10} {:<6} batch {:<3} {:<28} p50 {:>10.1} us",
+            m.scheme.name(),
+            m.kind,
+            m.batch,
+            m.layer.tag(),
+            m.secs * 1e6
+        );
+    }
+    let profile = fit_profile(fingerprint, &measurements);
+    if profile.schemes.is_empty() {
+        eprintln!("tuner: fit produced no scheme coefficients");
+        return ExitCode::FAILURE;
+    }
+    println!("\nfitted coefficients (vs analytic constants):");
+    let analytic = tcbnn::tuner::SchemeCoeffs::analytic();
+    for (name, c) in &profile.schemes {
+        println!(
+            "  {name}: word {} (analytic {}), bytes {}, dispatch {:.2} us, \
+             rel RMSE {:.1}% over {} cells",
+            fmt_rate(recip(c.secs_per_word_op)),
+            fmt_rate(recip(analytic.secs_per_word_op)),
+            fmt_rate(recip(c.secs_per_byte)),
+            c.dispatch_secs * 1e6,
+            c.rel_rmse * 100.0,
+            c.samples
+        );
+    }
+
+    // ---- persist + validate the artifact --------------------------------
+    if let Err(e) = profile.save(out) {
+        eprintln!("tuner: cannot write profile {out}: {e}");
+        return ExitCode::FAILURE;
+    }
+    let reloaded = match CalibrationProfile::load(out) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("tuner: emitted profile does not re-load: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if reloaded != profile || reloaded.id() != profile.id() {
+        eprintln!("tuner: emitted profile does not round-trip bit-exactly");
+        return ExitCode::FAILURE;
+    }
+    println!("\nwrote {out} (profile id {})", profile.id());
+    if let Some(dir) = args.get("cache-dir") {
+        match PlanCache::open(dir) {
+            Ok(cache) => {
+                let path = cache.profile_path();
+                if let Err(e) = profile.save(&path) {
+                    eprintln!("tuner: cannot persist profile in {path:?}: {e}");
+                    return ExitCode::FAILURE;
+                }
+                println!(
+                    "persisted next to the plan cache: {path:?} (cached plans \
+                     under other profiles are now stale)"
+                );
+            }
+            Err(e) => {
+                eprintln!("tuner: cannot open plan cache {dir}: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    // ---- consistency: Calibrated vs Analytic on unambiguous layers ------
+    if args.flag("skip-consistency") {
+        println!("consistency check skipped (--skip-consistency)");
+        return ExitCode::SUCCESS;
+    }
+    let margin = args.get_f64("margin", 3.0);
+    let source = CostSource::Calibrated(Arc::new(profile));
+    let models = all_models();
+    let report =
+        consistency_vs_analytic(registry, &RTX2080TI, &source, &models, 8, margin);
+    println!(
+        "consistency: {} layers, {} unambiguous (> {margin}x analytic margin), \
+         {} mismatches",
+        report.layers,
+        report.unambiguous,
+        report.mismatches.len()
+    );
+    if !report.ok() {
+        for m in &report.mismatches {
+            eprintln!("  MISMATCH {m}");
+        }
+        eprintln!(
+            "tuner: calibrated planner disagrees with the analytic baseline on \
+             unambiguous layers — the fit is not trustworthy"
+        );
+        return ExitCode::FAILURE;
+    }
+    println!("tuner: OK");
+    ExitCode::SUCCESS
+}
+
+fn mode(quick: bool) -> &'static str {
+    if quick {
+        "quick"
+    } else {
+        "full"
+    }
+}
+
+/// 1/x with 0 mapping to 0 (a clamped coefficient prints as a 0 rate,
+/// not inf).
+fn recip(x: f64) -> f64 {
+    if x > 0.0 {
+        1.0 / x
+    } else {
+        0.0
+    }
+}

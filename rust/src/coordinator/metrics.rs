@@ -24,6 +24,15 @@ struct Inner {
     engine_rows: u64,
     /// wall time the engine spent inside `run_batch`
     engine_busy_s: f64,
+    /// latest plan-cache counter snapshot from the serving model's
+    /// builder (cumulative over the cache, not per model)
+    plan_cache_hits: u64,
+    plan_cache_misses: u64,
+    /// live-feedback re-plans the served engine model performed
+    replans: u64,
+    /// latest per-scheme measured/predicted EWMA cost ratios from the
+    /// tuner's live feedback loop (scheme name, ratio, samples)
+    cost_drift: Vec<(String, f64, u64)>,
 }
 
 impl Metrics {
@@ -66,6 +75,44 @@ impl Metrics {
 
     pub fn engine_rows(&self) -> u64 {
         self.inner.lock().unwrap().engine_rows
+    }
+
+    /// Record the serving plan cache's cumulative hit/miss counters
+    /// (latest snapshot wins — the counters live on the `PlanCache`,
+    /// this surfaces them next to the serving metrics).
+    pub fn record_plan_cache(&self, hits: u64, misses: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.plan_cache_hits = hits;
+        m.plan_cache_misses = misses;
+    }
+
+    pub fn plan_cache_hits(&self) -> u64 {
+        self.inner.lock().unwrap().plan_cache_hits
+    }
+
+    pub fn plan_cache_misses(&self) -> u64 {
+        self.inner.lock().unwrap().plan_cache_misses
+    }
+
+    /// Count one live-feedback re-plan of the served engine model.
+    pub fn record_replan(&self) {
+        self.inner.lock().unwrap().replans += 1;
+    }
+
+    pub fn replans(&self) -> u64 {
+        self.inner.lock().unwrap().replans
+    }
+
+    /// Publish the latest per-scheme measured/predicted cost ratios
+    /// from the tuner's live feedback sink.
+    pub fn set_cost_drift(&self, drift: Vec<(String, f64, u64)>) {
+        self.inner.lock().unwrap().cost_drift = drift;
+    }
+
+    /// `(scheme name, EWMA measured/predicted ratio, samples)` per
+    /// scheme with live data.
+    pub fn cost_drift(&self) -> Vec<(String, f64, u64)> {
+        self.inner.lock().unwrap().cost_drift.clone()
     }
 
     pub fn latency_summary(&self) -> Summary {
@@ -121,6 +168,26 @@ impl Metrics {
                 self.engine_images_per_sec()
             ));
         }
+        let (h, mi) = (self.plan_cache_hits(), self.plan_cache_misses());
+        if h + mi > 0 {
+            out.push_str(&format!(" plan_cache={h}h/{mi}m"));
+        }
+        let replans = self.replans();
+        if replans > 0 {
+            out.push_str(&format!(" replans={replans}"));
+        }
+        // the worst live drift (ratio furthest from 1x in either
+        // direction) is the one worth a glance
+        if let Some((name, ratio, _)) = self
+            .cost_drift()
+            .into_iter()
+            .max_by(|a, b| {
+                let d = |r: f64| r.max(1.0 / r);
+                d(a.1).partial_cmp(&d(b.1)).unwrap()
+            })
+        {
+            out.push_str(&format!(" drift[{name}]={ratio:.2}x"));
+        }
         out
     }
 }
@@ -149,6 +216,36 @@ mod tests {
         assert_eq!(m.throughput_fps(), 0.0);
         assert_eq!(m.padding_overhead(), 0.0);
         assert_eq!(m.engine_images_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn plan_cache_counters_surface_in_the_report() {
+        let m = Metrics::new();
+        assert_eq!((m.plan_cache_hits(), m.plan_cache_misses()), (0, 0));
+        assert!(!m.report().contains("plan_cache="));
+        m.record_plan_cache(3, 5);
+        assert_eq!((m.plan_cache_hits(), m.plan_cache_misses()), (3, 5));
+        assert!(m.report().contains("plan_cache=3h/5m"), "{}", m.report());
+        // latest snapshot wins (the counters are cumulative on the cache)
+        m.record_plan_cache(10, 6);
+        assert_eq!((m.plan_cache_hits(), m.plan_cache_misses()), (10, 6));
+    }
+
+    #[test]
+    fn replans_and_drift_surface_in_the_report() {
+        let m = Metrics::new();
+        assert_eq!(m.replans(), 0);
+        assert!(!m.report().contains("replans="));
+        m.record_replan();
+        m.record_replan();
+        assert_eq!(m.replans(), 2);
+        assert!(m.report().contains("replans=2"));
+        m.set_cost_drift(vec![
+            ("FASTPATH".to_string(), 1.1, 12),
+            ("SBNN-64".to_string(), 0.2, 4), // 5x off, worst
+        ]);
+        assert_eq!(m.cost_drift().len(), 2);
+        assert!(m.report().contains("drift[SBNN-64]=0.20x"), "{}", m.report());
     }
 
     #[test]

@@ -11,6 +11,16 @@
 //! planner's registry, so custom backends serve end to end with no
 //! changes here.  (The old `EngineModel::new` / `new_fixed`
 //! constructors collapsed into this builder.)
+//!
+//! A planner with `CostSource::Live` turns the served model into a
+//! closed loop: the executor records per-layer measured latencies into
+//! the source's [`LiveCosts`](crate::tuner::LiveCosts) sink, the drift
+//! snapshot is published through `Metrics`, and when a scheme in the
+//! active plan drifts past the threshold (default 2x, either
+//! direction) the model re-plans against the now-corrected costs and
+//! rebuilds its executor in place — outputs stay bit-identical across
+//! re-plans because every backend computes the same exact integer
+//! math.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -21,8 +31,11 @@ use crate::coordinator::server::BatchModel;
 use crate::coordinator::Metrics;
 use crate::nn::forward::ModelWeights;
 use crate::nn::{ModelDef, Scheme};
+use crate::sim::Engine;
+use crate::tuner::LiveCosts;
 
 use super::executor::EngineExecutor;
+use super::plan::ModelPlan;
 use super::plan_cache::PlanCache;
 use super::planner::Planner;
 
@@ -50,6 +63,30 @@ pub struct EngineModel {
     /// executor-side metrics (images/sec over busy time); the serving
     /// `InferenceServer` keeps its own end-to-end metrics
     pub metrics: Arc<Metrics>,
+    /// live-feedback state (present iff the planner's cost source is
+    /// `CostSource::Live`)
+    replan: Option<ReplanState>,
+}
+
+/// Everything a live re-plan needs: the model can rebuild its executor
+/// without the builder's borrows.
+struct ReplanState {
+    planner: Planner,
+    model: ModelDef,
+    weights: ModelWeights,
+    live: Arc<LiveCosts>,
+    /// the builder's plan policy: a `Fixed(..)` pin is honored — drift
+    /// is still measured and published, but never re-plans away from
+    /// the operator's pinned scheme
+    policy: PlanPolicy,
+    drift_threshold: f64,
+    /// samples a scheme needs before its drift counts (EWMA warmup)
+    min_samples: u64,
+    batches: u64,
+    /// batch index before which no re-plan attempt happens (backoff
+    /// after an attempt, so a persistent uniform drift does not re-plan
+    /// every batch)
+    next_attempt: u64,
 }
 
 /// Builder for [`EngineModel`] — see [`PlanPolicy`].
@@ -60,6 +97,7 @@ pub struct EngineModelBuilder<'a> {
     buckets: Vec<usize>,
     policy: PlanPolicy,
     cache: Option<&'a PlanCache>,
+    drift_threshold: f64,
 }
 
 impl<'a> EngineModelBuilder<'a> {
@@ -82,8 +120,17 @@ impl<'a> EngineModelBuilder<'a> {
         self
     }
 
+    /// Override the live re-plan drift threshold (default 2.0: re-plan
+    /// when a scheme's measured cost is over 2x — or under half — its
+    /// prediction).  Only meaningful with a `CostSource::Live` planner.
+    pub fn drift_threshold(mut self, threshold: f64) -> Self {
+        self.drift_threshold = threshold.max(1.0);
+        self
+    }
+
     /// Plan per the policy and build the executor + metrics sink.
     pub fn build(self) -> Result<EngineModel> {
+        let metrics = Arc::new(Metrics::new());
         let max_bucket = validate_buckets(&self.buckets)?;
         let plan = match self.policy {
             PlanPolicy::Search => self.planner.plan(self.model, max_bucket),
@@ -99,25 +146,53 @@ impl<'a> EngineModelBuilder<'a> {
                 );
                 self.planner.plan_fixed(self.model, max_bucket, scheme)
             }
-            PlanPolicy::Cached => self
-                .cache
-                .context("PlanPolicy::Cached requires .cache(..)")?
-                .get_or_plan(self.planner, self.model, max_bucket),
+            PlanPolicy::Cached => {
+                let cache =
+                    self.cache.context("PlanPolicy::Cached requires .cache(..)")?;
+                let plan = cache.get_or_plan(self.planner, self.model, max_bucket);
+                // satellite: the cache counts hits/misses — surface them
+                metrics.record_plan_cache(cache.hits(), cache.misses());
+                plan
+            }
         };
         let row_elems = self.model.input.flat();
         let out_elems = self.model.classes;
-        let exec = EngineExecutor::with_registry(
+        let mut exec = EngineExecutor::with_registry(
             self.model.clone(),
             self.weights,
             plan,
             self.planner.registry(),
         )?;
+        // a Live cost source closes the feedback loop: the executor
+        // feeds the sink, and the model re-plans on drift
+        let live = self.planner.cost_source().live_handle();
+        if let Some(l) = &live {
+            // record ratios against the ratio-free prior, never the
+            // live-blended plan secs (which already contain the EWMA:
+            // feeding them back would converge on sqrt(true drift))
+            let baselines = live_baselines(self.planner, self.model, exec.plan());
+            exec = exec
+                .with_latency_sink(Arc::clone(l))
+                .with_latency_baselines(baselines);
+        }
+        let replan = live.map(|live| ReplanState {
+            planner: self.planner.clone(),
+            model: self.model.clone(),
+            weights: self.weights.clone(),
+            live,
+            policy: self.policy,
+            drift_threshold: self.drift_threshold,
+            min_samples: 2,
+            batches: 0,
+            next_attempt: 0,
+        });
         Ok(EngineModel {
             exec,
             buckets: self.buckets,
             row_elems,
             out_elems,
-            metrics: Arc::new(Metrics::new()),
+            metrics,
+            replan,
         })
     }
 }
@@ -136,6 +211,7 @@ impl EngineModel {
             buckets: Vec::new(),
             policy: PlanPolicy::Search,
             cache: None,
+            drift_threshold: 2.0,
         }
     }
 
@@ -152,6 +228,97 @@ impl EngineModel {
     pub fn arena_bytes(&self) -> usize {
         self.exec.arena_bytes()
     }
+
+    /// After each batch under a `CostSource::Live` planner: publish the
+    /// drift snapshot and, when a scheme in the active plan has drifted
+    /// past the threshold, re-plan against the corrected costs and
+    /// rebuild the executor in place.  Outputs are bit-identical across
+    /// re-plans (every backend computes the same exact integer math),
+    /// so a swap mid-serving is invisible except in latency.
+    fn maybe_replan(&mut self) {
+        let Some(st) = self.replan.as_mut() else { return };
+        st.batches += 1;
+        self.metrics.set_cost_drift(
+            st.live
+                .snapshot()
+                .into_iter()
+                .map(|(n, r, s)| (n.to_string(), r, s))
+                .collect(),
+        );
+        if st.batches < st.next_attempt {
+            return;
+        }
+        // an operator-pinned scheme is never re-planned away: the
+        // drift stays visible in the metrics, the pin stands
+        if matches!(st.policy, PlanPolicy::Fixed(_)) {
+            return;
+        }
+        let drifted = self.exec.plan().layers.iter().any(|lp| {
+            st.live.samples(lp.scheme) >= st.min_samples
+                && st.live.drift(lp.scheme) > st.drift_threshold
+        });
+        if !drifted {
+            return;
+        }
+        // back off either way: planning is cheap but not free, and a
+        // uniform drift (same ratio everywhere) re-plans onto the same
+        // schemes repeatedly
+        st.next_attempt = st.batches + 8;
+        let new_plan = st.planner.plan(&st.model, self.exec.batch_capacity());
+        let same_schemes = new_plan.layers.len() == self.exec.plan().layers.len()
+            && new_plan
+                .layers
+                .iter()
+                .zip(&self.exec.plan().layers)
+                .all(|(a, b)| a.scheme == b.scheme);
+        if same_schemes {
+            return;
+        }
+        let baselines = live_baselines(&st.planner, &st.model, &new_plan);
+        match EngineExecutor::with_registry(
+            st.model.clone(),
+            &st.weights,
+            new_plan,
+            st.planner.registry(),
+        ) {
+            Ok(exec) => {
+                self.exec = exec
+                    .with_latency_sink(Arc::clone(&st.live))
+                    .with_latency_baselines(baselines);
+                self.metrics.record_replan();
+            }
+            // keep serving on the old plan; the drift stays visible in
+            // the metrics and the next attempt may succeed
+            Err(e) => eprintln!("engine live re-plan failed (plan kept): {e:#}"),
+        }
+    }
+}
+
+/// The ratio-free per-layer baseline predictions of `plan` at its
+/// batch capacity (`CostSource::prior_layer_secs` of each planned
+/// layer's backend) — what the executor's latency sink records
+/// measured ratios against.
+fn live_baselines(planner: &Planner, model: &ModelDef, plan: &ModelPlan) -> Vec<f64> {
+    let engine = Engine::new(&planner.gpu);
+    let mut dims = model.input;
+    let mut out = Vec::with_capacity(plan.layers.len());
+    for (lp, l) in plan.layers.iter().zip(&model.layers) {
+        let backend = planner
+            .registry()
+            .get(lp.scheme)
+            .expect("planned scheme has a registered backend");
+        out.push(planner.cost_source().prior_layer_secs(
+            backend,
+            &engine,
+            l,
+            dims,
+            plan.batch,
+            planner.residual,
+            model.residual_blocks > 0,
+        ));
+        dims = dims.after(l);
+    }
+    out
 }
 
 /// Shared bucket invariants; returns the largest bucket (which sizes
@@ -180,6 +347,7 @@ impl BatchModel for EngineModel {
         let out = logits.to_vec();
         self.metrics
             .record_engine_batch(padded, t0.elapsed().as_secs_f64());
+        self.maybe_replan();
         Ok(out)
     }
 
@@ -264,6 +432,36 @@ mod tests {
     }
 
     #[test]
+    fn cached_policy_surfaces_plan_cache_counters_in_metrics() {
+        // satellite regression: the cache counts hits/misses but never
+        // exported them — the served model's metrics now carry them
+        let m = mnist_mlp();
+        let mut rng = Rng::new(8);
+        let w = random_weights(&m, &mut rng);
+        let planner = Planner::new(&RTX2080TI);
+        let dir = std::env::temp_dir()
+            .join(format!("tcbnn_bm_cache_metrics_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = super::PlanCache::open(&dir).unwrap();
+        let em = EngineModel::builder(&planner, &m, &w)
+            .buckets(vec![8])
+            .policy(PlanPolicy::Cached)
+            .cache(&cache)
+            .build()
+            .unwrap();
+        assert_eq!(em.metrics.plan_cache_misses(), 1, "cold build misses");
+        assert_eq!(em.metrics.plan_cache_hits(), 0);
+        let em2 = EngineModel::builder(&planner, &m, &w)
+            .buckets(vec![8])
+            .policy(PlanPolicy::Cached)
+            .cache(&cache)
+            .build()
+            .unwrap();
+        assert_eq!(em2.metrics.plan_cache_hits(), 1, "warm build hits");
+        assert!(em2.metrics.report().contains("plan_cache=1h/1m"));
+    }
+
+    #[test]
     fn cached_policy_requires_a_cache() {
         let m = mnist_mlp();
         let mut rng = Rng::new(6);
@@ -276,6 +474,38 @@ mod tests {
             .err()
             .expect("no cache attached");
         assert!(format!("{err:#}").contains("cache"), "{err:#}");
+    }
+
+    #[test]
+    fn live_cost_source_records_drift_and_keeps_outputs_bit_identical() {
+        use crate::kernels::backend::BackendRegistry;
+        use crate::tuner::{
+            CalibrationProfile, CostSource, HostFingerprint, LiveCosts, SchemeCoeffs,
+        };
+        let m = mnist_mlp();
+        let mut rng = Rng::new(77);
+        let w = random_weights(&m, &mut rng);
+        let prior = Arc::new(CalibrationProfile {
+            fingerprint: HostFingerprint::detect(BackendRegistry::global()),
+            schemes: vec![("FASTPATH".to_string(), SchemeCoeffs::analytic())],
+        });
+        let live = Arc::new(LiveCosts::new());
+        let planner = Planner::new(&RTX2080TI)
+            .with_cost_source(CostSource::Live { prior, live: Arc::clone(&live) });
+        let mut em = EngineModel::builder(&planner, &m, &w)
+            .buckets(vec![8])
+            .build()
+            .unwrap();
+        let x: Vec<f32> = (0..8 * 784).map(|_| rng.next_f32() - 0.5).collect();
+        let first = em.run_batch(&x, 8).unwrap();
+        // the loop may re-plan (simulated GPU predictions vs real CPU
+        // time drift wildly) — outputs must stay bit-identical anyway
+        for _ in 0..6 {
+            assert_eq!(em.run_batch(&x, 8).unwrap(), first);
+        }
+        // the executor fed the sink and the drift surfaced in metrics
+        assert!(!em.metrics.cost_drift().is_empty());
+        assert!(em.metrics.report().contains("drift["));
     }
 
     #[test]

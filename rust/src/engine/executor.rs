@@ -25,6 +25,9 @@
 //! are identical, which is exactly what the kernels-equivalence tests
 //! guarantee.
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::bitops::pack;
@@ -33,6 +36,7 @@ use crate::kernels::bconv::BconvProblem;
 use crate::nn::forward::{LayerWeights, ModelWeights};
 use crate::nn::layer::LayerSpec;
 use crate::nn::ModelDef;
+use crate::tuner::LiveCosts;
 use crate::util::threadpool::scoped_chunks;
 
 use super::arena::Arena;
@@ -83,6 +87,15 @@ pub struct EngineExecutor {
     arena: Arena,
     batch_cap: usize,
     threads: usize,
+    /// optional tuner feedback: per-backend-layer measured latencies
+    /// recorded against per-layer baseline predictions (see
+    /// `tuner::LiveCosts`)
+    latency_sink: Option<Arc<LiveCosts>>,
+    /// per-layer baseline seconds at batch capacity the sink records
+    /// ratios against; `None` = the plan's own secs.  Callers planning
+    /// under `CostSource::Live` MUST override with the ratio-free prior
+    /// (`CostSource::prior_layer_secs`), or the EWMA feeds on itself.
+    latency_baselines: Option<Vec<f64>>,
 }
 
 impl EngineExecutor {
@@ -138,12 +151,48 @@ impl EngineExecutor {
             arena,
             batch_cap,
             threads: crate::util::threadpool::default_threads(),
+            latency_sink: None,
+            latency_baselines: None,
         })
     }
 
     /// Override the scoped-worker count (1 = fully serial).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Record each backend layer's measured wall seconds (against a
+    /// per-layer baseline prediction, scaled to the executing batch)
+    /// into a lock-free [`LiveCosts`] sink — the executor side of the
+    /// tuner's live feedback loop.  Scheme-independent layers (first
+    /// conv, pooling) are not recorded; they never drive a scheme
+    /// choice.
+    ///
+    /// The default baseline is the plan's own per-layer secs — correct
+    /// when the plan was ranked by an `Analytic`/`Calibrated` source.
+    /// A plan ranked under `CostSource::Live` embeds ratio-*scaled*
+    /// secs; recording against those would feed the EWMA its own
+    /// output (fixed point `sqrt(true drift)`), so such callers must
+    /// also set [`EngineExecutor::with_latency_baselines`] to the
+    /// ratio-free prior predictions.
+    pub fn with_latency_sink(mut self, sink: Arc<LiveCosts>) -> Self {
+        self.latency_sink = Some(sink);
+        self
+    }
+
+    /// Override the per-layer baseline seconds (at batch capacity) the
+    /// latency sink records ratios against — one entry per model layer,
+    /// typically `CostSource::prior_layer_secs` of each planned layer.
+    ///
+    /// Panics if the length does not match the model's layer count.
+    pub fn with_latency_baselines(mut self, baselines: Vec<f64>) -> Self {
+        assert_eq!(
+            baselines.len(),
+            self.model.layers.len(),
+            "one baseline per model layer"
+        );
+        self.latency_baselines = Some(baselines);
         self
     }
 
@@ -176,6 +225,20 @@ impl EngineExecutor {
         let n_layers = self.model.layers.len();
         for li in 0..n_layers {
             let layer = self.model.layers[li].clone();
+            // live-feedback timing covers only backend-dispatched layers
+            let timed = self.latency_sink.is_some()
+                && matches!(
+                    layer,
+                    LayerSpec::BinConv { .. }
+                        | LayerSpec::BinFc { .. }
+                        | LayerSpec::FinalFc { .. }
+                );
+            let t0 = if timed { Some(Instant::now()) } else { None };
+            let plan_scheme = self.plan.layers[li].scheme;
+            let baseline_secs = self
+                .latency_baselines
+                .as_ref()
+                .map_or(self.plan.layers[li].secs, |b| b[li]);
             let pw = &self.prepared[li];
             let Arena { bits_a, bits_b, ints, words64, logits } = &mut self.arena;
             let (src, dst): (&mut Vec<u32>, &mut Vec<u32>) = if cur_in_a {
@@ -364,6 +427,13 @@ impl EngineExecutor {
                     repr = Repr::Flat { feat: *d_out };
                 }
                 _ => panic!("layer/weight kind mismatch at layer {li}"),
+            }
+            if let (Some(t0), Some(sink)) = (t0, self.latency_sink.as_deref()) {
+                // baselines are at batch capacity; scale linearly to the
+                // executing batch (exact for the word-ops term, within
+                // EWMA tolerance for the fixed dispatch term)
+                let predicted = baseline_secs * batch as f64 / self.batch_cap as f64;
+                sink.record(plan_scheme, predicted, t0.elapsed().as_secs_f64());
             }
         }
         let classes = self.model.classes;
@@ -940,6 +1010,30 @@ mod tests {
         assert!(a.iter().all(|v| v.is_finite()));
         // different rows should (almost surely) differ
         assert_ne!(a[..10], a[10..20]);
+    }
+
+    #[test]
+    fn latency_sink_records_backend_layers_only() {
+        let m = conv_model();
+        let batch = 8;
+        let (exec, _weights) = build(m.clone(), 41, batch);
+        let sink = Arc::new(LiveCosts::new());
+        let mut exec = exec.with_latency_sink(Arc::clone(&sink));
+        let mut rng = Rng::new(42);
+        let x: Vec<f32> =
+            (0..batch * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
+        let _ = exec.forward(&x, batch);
+        // conv_model has 3 backend-dispatched layers (BinConv, BinFc,
+        // FinalFc); FirstConv is scheme-independent and never recorded
+        let total: u64 = Scheme::all().iter().map(|s| sink.samples(*s)).sum();
+        assert_eq!(total, 3);
+        let _ = exec.forward(&x, batch);
+        let total: u64 = Scheme::all().iter().map(|s| sink.samples(*s)).sum();
+        assert_eq!(total, 6);
+        // the recorded schemes are exactly the plan's backend-layer ones
+        for lp in &exec.plan().layers[1..] {
+            assert!(sink.samples(lp.scheme) > 0, "{:?}", lp.scheme);
+        }
     }
 
     #[test]

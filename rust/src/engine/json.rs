@@ -299,7 +299,14 @@ impl<'a> Parser<'a> {
         }
         loop {
             self.skip_ws();
+            let key_at = self.pos;
             let key = self.string()?;
+            // duplicate keys are ambiguous (readers keep whichever they
+            // find first) — all our writers emit each key once, so a
+            // duplicate means a corrupt or hand-edited document
+            if fields.iter().any(|(k, _)| *k == key) {
+                return Err(format!("duplicate object key {key:?} at byte {key_at}"));
+            }
             self.skip_ws();
             self.expect(b':')?;
             let v = self.value()?;
@@ -384,6 +391,87 @@ mod tests {
         assert!(Value::parse("[1,]").is_err());
         assert!(Value::parse("12 34").is_err());
         assert!(Value::parse("\"abc").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_object_keys() {
+        let err = Value::parse("{\"a\":1,\"a\":2}").unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        // escape-equivalent keys decode to the same string: rejected too
+        assert!(Value::parse("{\"a\":1,\"\\u0061\":2}").is_err());
+        // duplicates nested anywhere fail the whole document
+        assert!(Value::parse("[{\"x\":{\"k\":1,\"k\":1}}]").is_err());
+        // same key in *different* objects is fine
+        let ok = Value::parse("[{\"k\":1},{\"k\":2}]").unwrap();
+        assert_eq!(ok.as_arr().unwrap().len(), 2);
+    }
+
+    /// Characters the writer must escape (or pass through) correctly.
+    fn tricky_char(rng: &mut crate::util::Rng) -> char {
+        match rng.gen_range(10) {
+            0 => '"',
+            1 => '\\',
+            2 => '\n',
+            3 => '\r',
+            4 => '\t',
+            5 => char::from_u32(rng.gen_range(0x20) as u32).unwrap(), // control
+            6 => 'é',
+            7 => '線',
+            8 => '🦀',
+            _ => (b'a' + rng.gen_range(26) as u8) as char,
+        }
+    }
+
+    #[test]
+    fn prop_escaped_strings_roundtrip() {
+        crate::util::proptest::run_cases(71, 200, |rng| {
+            let len = rng.gen_range(24);
+            let s: String = (0..len).map(|_| tricky_char(rng)).collect();
+            let v = Value::Obj(vec![
+                (s.clone(), Value::Str(s.clone())),
+                ("plain".to_string(), Value::Num(1.0)),
+            ]);
+            let text = v.to_string();
+            let back = Value::parse(&text)
+                .unwrap_or_else(|e| panic!("{e} parsing {text:?}"));
+            assert_eq!(back, v, "via {text:?}");
+        });
+    }
+
+    /// Random value tree: arrays/objects down to `depth`, scalar leaves.
+    fn random_value(rng: &mut crate::util::Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.gen_range(4) } else { 4 + rng.gen_range(2) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.next_bool()),
+            2 => Value::Num((rng.next_f64() - 0.5) * 1e6),
+            3 => Value::Str((0..rng.gen_range(8)).map(|_| tricky_char(rng)).collect()),
+            4 => Value::Arr(
+                (0..rng.gen_range(4)).map(|_| random_value(rng, depth - 1)).collect(),
+            ),
+            _ => Value::Obj(
+                (0..rng.gen_range(4))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn prop_deeply_nested_documents_roundtrip() {
+        crate::util::proptest::run_cases(72, 100, |rng| {
+            let v = random_value(rng, 5);
+            assert_eq!(Value::parse(&v.to_string()).unwrap(), v);
+        });
+        // and a pathological 300-deep chain parses without issue
+        let mut v = Value::Num(1.0);
+        for i in 0..300 {
+            v = if i % 2 == 0 {
+                Value::Arr(vec![v])
+            } else {
+                Value::Obj(vec![("d".to_string(), v)])
+            };
+        }
+        assert_eq!(Value::parse(&v.to_string()).unwrap(), v);
     }
 
     #[test]

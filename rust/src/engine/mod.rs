@@ -15,10 +15,14 @@
 //!   pins one scheme everywhere (how a GPU-less host serves
 //!   `kernels::fastpath`).
 //! * `plan` / `plan_cache` — plans serialize to JSON (schema-versioned,
-//!   embedding the searched scheme set) and persist in a directory
-//!   cache keyed by (model, batch shape, gpu), with hit/miss counters
-//!   for observability.  Entries from an older schema or a different
-//!   backend set are stale → re-planned.
+//!   embedding the searched scheme set and the cost-profile id they
+//!   were ranked under) and persist in a directory cache keyed by
+//!   (model, batch shape, gpu), with hit/miss counters surfaced
+//!   through the served model's `Metrics`.  Entries from an older
+//!   schema, a different backend set, or a different calibration
+//!   profile are stale → re-planned.  The planner's costs come from a
+//!   `tuner::CostSource` (analytic, calibrated per-host profile, or
+//!   live executor feedback — see the `tuner` module).
 //! * `arena` / `executor` — the execution side: each plan layer holds
 //!   an opaque prepared-weight handle from its backend
 //!   (`Box<dyn PreparedFc>` / `Box<dyn PreparedConv>` owning u64

@@ -14,7 +14,13 @@ use super::json::Value;
 /// v2: the `KernelBackend` registry redesign — plans embed the scheme
 /// set they were searched over (`schemes`), so a plan cached before a
 /// new backend registered is detectably stale.
-pub const PLAN_SCHEMA: usize = 2;
+///
+/// v3: the tuner's measured-calibration subsystem — plans embed the
+/// `cost_profile` id of the `CostSource` they were planned under
+/// (`"analytic"`, a calibration-profile digest, or `"live:<digest>"`),
+/// so a plan cached under one calibration is detectably stale once the
+/// active profile changes.
+pub const PLAN_SCHEMA: usize = 3;
 
 /// One layer's planned execution: the winning scheme and its simulated
 /// cost on the plan's GPU.
@@ -44,6 +50,13 @@ pub struct ModelPlan {
     /// registry is stale: a newly registered backend never competed
     /// for these layers, so the cache must re-plan.
     pub scheme_set: Vec<String>,
+    /// the id of the cost source the plan was searched under
+    /// (`Planner::cost_profile_id`): `"analytic"` for the backends' own
+    /// cost faces, a `CalibrationProfile` digest for a fitted per-host
+    /// profile, `"live:<digest>"` for the live blend.  A cached plan
+    /// whose id differs from the serving planner's is stale: its
+    /// winners were ranked by different costs.
+    pub cost_profile: String,
     pub layers: Vec<LayerPlan>,
     /// simulated end-to-end seconds (launch + per-layer compute + sync),
     /// directly comparable to `nn::cost::model_cost(...).total_secs`
@@ -101,6 +114,10 @@ impl ModelPlan {
             ("batch".to_string(), Value::Num(self.batch as f64)),
             ("classes".to_string(), Value::Num(self.classes as f64)),
             ("schemes".to_string(), Value::Arr(schemes)),
+            (
+                "cost_profile".to_string(),
+                Value::Str(self.cost_profile.clone()),
+            ),
             ("total_secs".to_string(), Value::Num(self.total_secs)),
             ("layers".to_string(), Value::Arr(layers)),
         ])
@@ -182,6 +199,7 @@ impl ModelPlan {
             batch: num_field("batch")?,
             classes: num_field("classes")?,
             scheme_set,
+            cost_profile: str_field("cost_profile")?,
             layers,
             total_secs: v
                 .get("total_secs")
@@ -215,6 +233,7 @@ mod tests {
             batch: 32,
             classes: 10,
             scheme_set: Scheme::all().iter().map(|s| s.name().to_string()).collect(),
+            cost_profile: "analytic".to_string(),
             layers: vec![
                 LayerPlan {
                     index: 0,
@@ -252,11 +271,16 @@ mod tests {
     fn rejects_other_schema_versions() {
         let text = sample()
             .to_json()
-            .replace("\"schema\":2", "\"schema\":1");
+            .replace("\"schema\":3", "\"schema\":2");
         assert!(ModelPlan::from_json(&text).is_err());
         // a pre-versioning document (no schema field at all) also fails
-        let legacy = sample().to_json().replace("\"schema\":2,", "");
+        let legacy = sample().to_json().replace("\"schema\":3,", "");
         assert!(ModelPlan::from_json(&legacy).is_err());
+        // a v2 document (no cost_profile field) is also unreadable
+        let v2 = sample()
+            .to_json()
+            .replace("\"cost_profile\":\"analytic\",", "");
+        assert!(ModelPlan::from_json(&v2).is_err());
     }
 
     #[test]

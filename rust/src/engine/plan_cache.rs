@@ -6,12 +6,19 @@
 //! directory and counts hits/misses so benches can report cache
 //! effectiveness.
 //!
-//! Staleness: every plan embeds its JSON schema version and the scheme
-//! set it was searched over.  An entry written by an older build
-//! (schema mismatch) or planned before a new backend registered
-//! (scheme-set mismatch) is treated as a miss and re-planned — cached
-//! winners never silently pin out a backend they were never compared
-//! against.
+//! Staleness: every plan embeds its JSON schema version, the scheme
+//! set it was searched over, and the cost-profile id it was ranked
+//! under.  An entry written by an older build (schema mismatch),
+//! planned before a new backend registered (scheme-set mismatch), or
+//! planned under a different calibration profile (cost-profile
+//! mismatch — see `tuner::CostSource`) is treated as a miss and
+//! re-planned — cached winners never silently pin out a backend they
+//! were never compared against, nor survive a calibration change that
+//! re-priced the competition.
+//!
+//! The active `CalibrationProfile` itself persists next to the entries
+//! ([`PlanCache::profile_path`]), so a serving process reopens both
+//! the plans and the calibration they were priced under.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -42,15 +49,24 @@ impl PlanCache {
         self.dir.join(ModelPlan::cache_file(model, batch, gpu))
     }
 
+    /// Where the active calibration profile lives, next to the plan
+    /// entries it prices (`tuner::CalibrationProfile::save`/`load`).
+    pub fn profile_path(&self) -> PathBuf {
+        self.dir.join("calibration.profile.json")
+    }
+
     /// Read + validate an entry without touching the counters.
-    /// `scheme_names` is the serving registry's scheme set — an entry
-    /// planned over a different set is stale and filtered out.
+    /// `scheme_names` is the serving registry's scheme set and
+    /// `cost_profile` the serving planner's cost-source id — an entry
+    /// planned over a different set or under a different calibration
+    /// is stale and filtered out.
     fn read(
         &self,
         model: &str,
         batch: usize,
         gpu: &str,
         scheme_names: &[String],
+        cost_profile: &str,
     ) -> Option<ModelPlan> {
         let path = self.entry_path(model, batch, gpu);
         std::fs::read_to_string(&path)
@@ -61,22 +77,26 @@ impl PlanCache {
                     && p.batch == batch
                     && p.gpu == gpu
                     && p.scheme_set == scheme_names
+                    && p.cost_profile == cost_profile
             })
     }
 
-    /// Look up a cached plan, validated against `scheme_names` — pass
-    /// the serving registry's scheme set (`planner.scheme_names()`)
-    /// so `get_for` and [`PlanCache::get_or_plan`] agree on what is
-    /// stale.  A missing, malformed, old-schema, or
-    /// stale-scheme-set entry counts as a miss.
+    /// Look up a cached plan, validated against `scheme_names` and
+    /// `cost_profile` — pass the serving planner's scheme set
+    /// (`planner.scheme_names()`) and cost-source id
+    /// (`planner.cost_profile_id()`) so `get_for` and
+    /// [`PlanCache::get_or_plan`] agree on what is stale.  A missing,
+    /// malformed, old-schema, stale-scheme-set, or stale-cost-profile
+    /// entry counts as a miss.
     pub fn get_for(
         &self,
         model: &str,
         batch: usize,
         gpu: &str,
         scheme_names: &[String],
+        cost_profile: &str,
     ) -> Option<ModelPlan> {
-        match self.read(model, batch, gpu, scheme_names) {
+        match self.read(model, batch, gpu, scheme_names, cost_profile) {
             Some(p) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(p)
@@ -89,7 +109,8 @@ impl PlanCache {
     }
 
     /// [`PlanCache::get_for`] against the *global* builtin registry's
-    /// scheme set.  Callers serving a custom registry must use
+    /// scheme set and the analytic cost source.  Callers serving a
+    /// custom registry or a calibrated planner must use
     /// `get_for`/`get_or_plan` instead, or hits and misses will
     /// disagree with what their planner considers stale.
     pub fn get(&self, model: &str, batch: usize, gpu: &str) -> Option<ModelPlan> {
@@ -98,7 +119,7 @@ impl PlanCache {
             .iter()
             .map(|s| s.to_string())
             .collect();
-        self.get_for(model, batch, gpu, &names)
+        self.get_for(model, batch, gpu, &names, crate::tuner::ANALYTIC_PROFILE_ID)
     }
 
     /// Store a plan (overwrites any existing entry for its key).
@@ -118,7 +139,9 @@ impl PlanCache {
         batch: usize,
     ) -> ModelPlan {
         let names = planner.scheme_names();
-        if let Some(p) = self.read(model.name, batch, planner.gpu.name, &names) {
+        let profile = planner.cost_profile_id();
+        if let Some(p) = self.read(model.name, batch, planner.gpu.name, &names, &profile)
+        {
             // validate against the live model definition; shape drift
             // (e.g. a renamed layer) is a MISS that falls back to fresh
             // planning (and re-persists below, self-healing the entry)
@@ -221,10 +244,78 @@ mod tests {
         let m = mnist_mlp();
         let p = cache.get_or_plan(&planner, &m, 8);
         // rewrite the entry claiming an older document version
-        let old = p.to_json().replace("\"schema\":2", "\"schema\":1");
+        let old = p.to_json().replace("\"schema\":3", "\"schema\":2");
         std::fs::write(cache.entry_path(&p.model, 8, &p.gpu), old).unwrap();
         assert!(cache.get(&p.model, 8, &p.gpu).is_none());
         let healed = cache.get_or_plan(&planner, &m, 8);
         assert_eq!(healed, p);
+    }
+
+    #[test]
+    fn stale_cost_profile_is_a_miss_and_self_heals() {
+        // a plan cached under one calibration profile must not survive a
+        // profile change: the entry's winners were ranked by costs the
+        // serving planner no longer uses
+        let cache = temp_cache("stale_profile");
+        let planner = Planner::new(&RTX2080TI);
+        let m = mnist_mlp();
+        let fresh = cache.get_or_plan(&planner, &m, 8);
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        // simulate an entry planned under a (now replaced) calibration
+        let mut stale = fresh.clone();
+        stale.cost_profile = "cal1-00000000deadbeef".to_string();
+        cache.put(&stale).unwrap();
+        let replanned = cache.get_or_plan(&planner, &m, 8);
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        assert_eq!(replanned, fresh, "re-plan restores the analytic-profile plan");
+        // the entry self-healed: next lookup is a hit again
+        let again = cache.get_or_plan(&planner, &m, 8);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(again, fresh);
+    }
+
+    #[test]
+    fn calibrated_and_analytic_planners_do_not_share_entries() {
+        use crate::tuner::{
+            CalibrationProfile, CostSource, HostFingerprint, SchemeCoeffs,
+        };
+        use std::sync::Arc;
+
+        let cache = temp_cache("profile_split");
+        let analytic = Planner::new(&RTX2080TI);
+        let profile = Arc::new(CalibrationProfile {
+            fingerprint: HostFingerprint::detect(
+                crate::kernels::backend::BackendRegistry::global(),
+            ),
+            schemes: vec![("FASTPATH".to_string(), SchemeCoeffs::analytic())],
+        });
+        let calibrated = Planner::new(&RTX2080TI)
+            .with_cost_source(CostSource::Calibrated(Arc::clone(&profile)));
+        let m = mnist_mlp();
+        let _ = cache.get_or_plan(&analytic, &m, 8);
+        // the calibrated planner sees the analytic entry as stale
+        let cal_plan = cache.get_or_plan(&calibrated, &m, 8);
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        assert_eq!(cal_plan.cost_profile, profile.id());
+        // ... and its re-persisted entry now hits for the calibrated
+        // planner but is stale again for the analytic one
+        assert!(cache
+            .get_for(
+                m.name,
+                8,
+                calibrated.gpu.name,
+                &calibrated.scheme_names(),
+                &calibrated.cost_profile_id(),
+            )
+            .is_some());
+        assert!(cache.get(m.name, 8, analytic.gpu.name).is_none());
+    }
+
+    #[test]
+    fn profile_path_sits_next_to_the_entries() {
+        let cache = temp_cache("profile_path");
+        let p = cache.profile_path();
+        assert_eq!(p.file_name().unwrap(), "calibration.profile.json");
+        assert_eq!(p.parent().unwrap(), cache.entry_path("m", 8, "g").parent().unwrap());
     }
 }

@@ -2,19 +2,27 @@
 //! cost faces.
 //!
 //! For every layer of a `ModelDef` (at a given batch bucket) the
-//! planner asks each backend in its [`BackendRegistry`] for
-//! `layer_secs` — the exact same cost face `nn::cost::model_cost`
-//! sums — and selects the cheapest.  Ties resolve to the
-//! first-registered backend (the builtin registry registers in
-//! `Scheme::all()` order), so planning is fully deterministic.  A
-//! backend registered at runtime joins the search automatically — no
-//! planner changes needed.
+//! planner asks its [`CostSource`] for each registered backend's
+//! per-layer seconds — by default the backends' own `layer_secs` cost
+//! faces, the exact same face `nn::cost::model_cost` sums — and
+//! selects the cheapest.  Ties resolve to the first-registered backend
+//! (the builtin registry registers in `Scheme::all()` order), so
+//! planning is fully deterministic.  A backend registered at runtime
+//! joins the search automatically — no planner changes needed.
+//!
+//! [`Planner::with_cost_source`] swaps the analytic faces for a fitted
+//! per-host [`CalibrationProfile`](crate::tuner::CalibrationProfile)
+//! (`CostSource::Calibrated`) or the live executor-fed blend
+//! (`CostSource::Live`); every emitted plan records the source's
+//! `profile_id` so the plan cache can invalidate entries planned under
+//! a different calibration.
 
 use std::sync::Arc;
 
 use crate::kernels::backend::BackendRegistry;
 use crate::nn::{ModelDef, ResidualMode, Scheme};
 use crate::sim::{Engine, GpuModel};
+use crate::tuner::CostSource;
 
 use super::plan::{LayerPlan, ModelPlan};
 
@@ -26,6 +34,7 @@ pub struct Planner {
     pub residual: ResidualMode,
     pub layer_sync: bool,
     registry: Arc<BackendRegistry>,
+    cost: CostSource,
 }
 
 impl Planner {
@@ -44,7 +53,27 @@ impl Planner {
             residual: ResidualMode::Full,
             layer_sync: true,
             registry,
+            cost: CostSource::Analytic,
         }
+    }
+
+    /// Replace the cost source the search queries (default
+    /// [`CostSource::Analytic`]): `Calibrated` for a fitted per-host
+    /// profile, `Live` for the executor-fed drift blend.
+    pub fn with_cost_source(mut self, cost: CostSource) -> Planner {
+        self.cost = cost;
+        self
+    }
+
+    /// The cost source this planner queries.
+    pub fn cost_source(&self) -> &CostSource {
+        &self.cost
+    }
+
+    /// The cost source's stable id — what emitted plans record as
+    /// `cost_profile` and the plan cache validates against.
+    pub fn cost_profile_id(&self) -> String {
+        self.cost.profile_id()
     }
 
     /// The registry this planner searches.
@@ -78,7 +107,8 @@ impl Planner {
         let mut best: Option<Scheme> = None;
         let mut best_secs = f64::INFINITY;
         for b in self.registry.backends() {
-            let secs = b.layer_secs(
+            let secs = self.cost.layer_secs(
+                b,
                 engine,
                 layer,
                 dims,
@@ -129,7 +159,8 @@ impl Planner {
             let (scheme, secs) = match &forced {
                 Some(b) => (
                     b.scheme(),
-                    b.layer_secs(
+                    self.cost.layer_secs(
+                        *b,
                         &engine,
                         l,
                         dims,
@@ -151,6 +182,7 @@ impl Planner {
             batch,
             classes: model.classes,
             scheme_set: self.scheme_names(),
+            cost_profile: self.cost.profile_id(),
             layers,
             total_secs: total,
         }
@@ -226,6 +258,35 @@ mod tests {
             // a fixed plan costs at least the searched optimum
             assert!(plan.total_secs >= p.plan(&m, 8).total_secs * (1.0 - 1e-12));
         }
+    }
+
+    #[test]
+    fn default_plans_record_the_analytic_cost_profile() {
+        let p = Planner::new(&RTX2080TI);
+        assert_eq!(p.cost_profile_id(), crate::tuner::ANALYTIC_PROFILE_ID);
+        let plan = p.plan(&mnist_mlp(), 8);
+        assert_eq!(plan.cost_profile, "analytic");
+    }
+
+    #[test]
+    fn calibrated_source_changes_the_recorded_profile_not_the_search_space() {
+        use crate::tuner::{
+            CalibrationProfile, CostSource, HostFingerprint, SchemeCoeffs,
+        };
+        let reg = Arc::new(BackendRegistry::builtin());
+        let profile = Arc::new(CalibrationProfile {
+            fingerprint: HostFingerprint::detect(&reg),
+            schemes: vec![("FASTPATH".to_string(), SchemeCoeffs::analytic())],
+        });
+        let p = Planner::with_registry(&RTX2080TI, Arc::clone(&reg))
+            .with_cost_source(CostSource::Calibrated(Arc::clone(&profile)));
+        let plan = p.plan(&mnist_mlp(), 8);
+        assert_eq!(plan.cost_profile, profile.id());
+        // analytic coefficients => identical per-layer choices
+        let analytic = Planner::with_registry(&RTX2080TI, reg).plan(&mnist_mlp(), 8);
+        let schemes: Vec<_> = plan.layers.iter().map(|l| l.scheme).collect();
+        let want: Vec<_> = analytic.layers.iter().map(|l| l.scheme).collect();
+        assert_eq!(schemes, want);
     }
 
     #[test]

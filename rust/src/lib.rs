@@ -48,6 +48,19 @@
 //! regression-gated in CI by `cargo bench --bench bench_kernels`
 //! against `benches/baseline.json` (see `docs/BENCH.md`).
 //!
+//! The `tuner` module closes the loop between those cost models and
+//! reality: a microbench runner measures each registered host
+//! backend's kernels over a shape grid and least-squares-fits its
+//! cost-model coefficients into a schema-versioned, host-fingerprinted
+//! `CalibrationProfile` (persisted next to the plan cache, which
+//! invalidates entries when the active profile changes).  Planner cost
+//! queries go through a `tuner::CostSource` — `Analytic`,
+//! `Calibrated(profile)`, or `Live` (the calibrated prior blended with
+//! the executor's lock-free per-scheme latency EWMA, letting a served
+//! `EngineModel` re-plan when measured costs drift >2x from
+//! prediction).  Run `cargo run --release --bin tuner -- --quick`; the
+//! CI `tuner-smoke` job gates on it.
+//!
 //! See DESIGN.md for the system inventory and the per-table/figure
 //! experiment index, and EXPERIMENTS.md for paper-vs-measured results.
 
@@ -59,6 +72,7 @@ pub mod kernels;
 pub mod nn;
 pub mod runtime;
 pub mod sim;
+pub mod tuner;
 pub mod util;
 
 /// Default artifact directory (relative to the repo root).

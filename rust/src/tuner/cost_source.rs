@@ -1,0 +1,244 @@
+//! `CostSource`: where the planner's per-layer costs come from.
+//!
+//! Before the tuner, every planner query went straight to the
+//! backends' `layer_secs` faces (analytic host constants for the
+//! fastpath, simulated Turing traces for the GPU rows).  `CostSource`
+//! makes that pluggable:
+//!
+//! * [`CostSource::Analytic`] — the backends' own cost faces,
+//!   unchanged (the default; plans carry the id `"analytic"`).
+//! * [`CostSource::Calibrated`] — fitted per-host coefficients from a
+//!   [`CalibrationProfile`] for every scheme the profile covers;
+//!   uncovered schemes fall back to their analytic face.  An analytic
+//!   cost of infinity (a backend rejecting a shape, e.g. the fastpath
+//!   tap limit) stays infinite: calibration must never rank a backend
+//!   onto a shape it cannot execute.
+//! * [`CostSource::Live`] — the calibrated prior scaled per scheme by
+//!   the [`LiveCosts`] EWMA of measured-over-predicted ratios the
+//!   executor records, so a serving process converges on true host
+//!   costs and can re-plan on drift.
+//!
+//! Every source has a stable [`CostSource::profile_id`]; plans embed
+//! it, and the plan cache treats an id mismatch as a miss.
+
+use std::sync::Arc;
+
+use crate::kernels::backend::KernelBackend;
+use crate::nn::cost::ResidualMode;
+use crate::nn::layer::{Dims, LayerSpec};
+use crate::sim::Engine;
+
+use super::live::LiveCosts;
+use super::profile::CalibrationProfile;
+
+/// The id `CostSource::Analytic` plans carry (and the id
+/// `PlanCache::get` validates against).
+pub const ANALYTIC_PROFILE_ID: &str = "analytic";
+
+/// Where planner cost queries are answered from.
+#[derive(Clone, Debug)]
+pub enum CostSource {
+    /// The backends' own cost faces (analytic host models / simulated
+    /// GPU traces) — the default.
+    Analytic,
+    /// Fitted per-host coefficients; schemes without a profile entry
+    /// fall back to their analytic face.
+    Calibrated(Arc<CalibrationProfile>),
+    /// The calibrated `prior` scaled by the executor-fed `live` EWMA
+    /// ratio per scheme.
+    Live { prior: Arc<CalibrationProfile>, live: Arc<LiveCosts> },
+}
+
+impl CostSource {
+    /// Seconds of one layer under `backend`, answered by this source.
+    #[allow(clippy::too_many_arguments)]
+    pub fn layer_secs(
+        &self,
+        backend: &dyn KernelBackend,
+        engine: &Engine,
+        layer: &LayerSpec,
+        dims: Dims,
+        batch: usize,
+        residual: ResidualMode,
+        model_has_residuals: bool,
+    ) -> f64 {
+        let analytic =
+            backend.layer_secs(engine, layer, dims, batch, residual, model_has_residuals);
+        match self {
+            CostSource::Analytic => analytic,
+            // an infinite analytic cost marks a shape the backend
+            // cannot execute — calibration never overrides that
+            _ if !analytic.is_finite() => analytic,
+            CostSource::Calibrated(p) => p
+                .layer_secs(backend.scheme(), layer, dims, batch, residual, model_has_residuals)
+                .unwrap_or(analytic),
+            CostSource::Live { prior, live } => {
+                let base = prior
+                    .layer_secs(
+                        backend.scheme(),
+                        layer,
+                        dims,
+                        batch,
+                        residual,
+                        model_has_residuals,
+                    )
+                    .unwrap_or(analytic);
+                base * live.ratio(backend.scheme())
+            }
+        }
+    }
+
+    /// The *ratio-free* prediction of this source: identical to
+    /// [`CostSource::layer_secs`] for `Analytic`/`Calibrated`, and the
+    /// calibrated prior (without the live EWMA factor) for `Live`.
+    ///
+    /// Live feedback must be recorded against THIS value, never the
+    /// blended one: recording `measured / (prior * ratio)` into the
+    /// same EWMA that holds `ratio` has the fixed point
+    /// `ratio = sqrt(true_drift)`, which under-corrects forever —
+    /// recording against the constant prior converges the EWMA on the
+    /// true measured/prior ratio.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prior_layer_secs(
+        &self,
+        backend: &dyn KernelBackend,
+        engine: &Engine,
+        layer: &LayerSpec,
+        dims: Dims,
+        batch: usize,
+        residual: ResidualMode,
+        model_has_residuals: bool,
+    ) -> f64 {
+        match self {
+            CostSource::Live { prior, .. } => {
+                CostSource::Calibrated(Arc::clone(prior)).layer_secs(
+                    backend,
+                    engine,
+                    layer,
+                    dims,
+                    batch,
+                    residual,
+                    model_has_residuals,
+                )
+            }
+            _ => self.layer_secs(
+                backend,
+                engine,
+                layer,
+                dims,
+                batch,
+                residual,
+                model_has_residuals,
+            ),
+        }
+    }
+
+    /// The stable identity plans embed as `cost_profile`.
+    pub fn profile_id(&self) -> String {
+        match self {
+            CostSource::Analytic => ANALYTIC_PROFILE_ID.to_string(),
+            CostSource::Calibrated(p) => p.id(),
+            CostSource::Live { prior, .. } => format!("live:{}", prior.id()),
+        }
+    }
+
+    /// The live feedback sink, when this source has one.
+    pub fn live_handle(&self) -> Option<Arc<LiveCosts>> {
+        match self {
+            CostSource::Live { live, .. } => Some(Arc::clone(live)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::backend::BackendRegistry;
+    use crate::nn::Scheme;
+    use crate::sim::RTX2080TI;
+    use crate::tuner::fingerprint::HostFingerprint;
+    use crate::tuner::profile::SchemeCoeffs;
+
+    fn profile_with(coeffs: SchemeCoeffs) -> Arc<CalibrationProfile> {
+        Arc::new(CalibrationProfile {
+            fingerprint: HostFingerprint::detect(BackendRegistry::global()),
+            schemes: vec![("FASTPATH".to_string(), coeffs)],
+        })
+    }
+
+    fn query(src: &CostSource, scheme: Scheme, layer: &LayerSpec, dims: Dims) -> f64 {
+        let engine = Engine::new(&RTX2080TI);
+        let b = BackendRegistry::global().get(scheme).unwrap();
+        src.layer_secs(b, &engine, layer, dims, 8, ResidualMode::None, false)
+    }
+
+    #[test]
+    fn analytic_constants_make_calibrated_equal_analytic() {
+        let layer = LayerSpec::BinFc { d_in: 1024, d_out: 512 };
+        let dims = Dims { hw: 0, feat: 1024 };
+        let cal = CostSource::Calibrated(profile_with(SchemeCoeffs::analytic()));
+        let a = query(&CostSource::Analytic, Scheme::Fastpath, &layer, dims);
+        let c = query(&cal, Scheme::Fastpath, &layer, dims);
+        assert!((a - c).abs() / a < 1e-12, "analytic {a} vs calibrated {c}");
+        // GPU schemes are not in the profile -> analytic fallback
+        let a_btc = query(&CostSource::Analytic, Scheme::Btc, &layer, dims);
+        let c_btc = query(&cal, Scheme::Btc, &layer, dims);
+        assert_eq!(a_btc, c_btc);
+    }
+
+    #[test]
+    fn calibration_never_overrides_unsupported_shapes() {
+        // a 7x7 filter exceeds the fastpath tap limit: analytic cost is
+        // infinite and must stay infinite under any profile
+        let layer = LayerSpec::BinConv {
+            c: 64,
+            o: 64,
+            k: 7,
+            stride: 1,
+            pad: 3,
+            pool: false,
+            residual: false,
+        };
+        let dims = Dims { hw: 14, feat: 64 };
+        let mut cheap = SchemeCoeffs::analytic();
+        cheap.secs_per_word_op = 1e-15;
+        for src in [
+            CostSource::Calibrated(profile_with(cheap)),
+            CostSource::Live {
+                prior: profile_with(cheap),
+                live: Arc::new(LiveCosts::new()),
+            },
+        ] {
+            assert!(query(&src, Scheme::Fastpath, &layer, dims).is_infinite());
+        }
+    }
+
+    #[test]
+    fn live_scales_the_prior_by_the_ewma_ratio() {
+        let layer = LayerSpec::BinFc { d_in: 512, d_out: 512 };
+        let dims = Dims { hw: 0, feat: 512 };
+        let prior = profile_with(SchemeCoeffs::analytic());
+        let live = Arc::new(LiveCosts::new());
+        let src = CostSource::Live { prior: Arc::clone(&prior), live: Arc::clone(&live) };
+        let base = query(&src, Scheme::Fastpath, &layer, dims);
+        for _ in 0..50 {
+            live.record(Scheme::Fastpath, 1e-4, 3e-4);
+        }
+        let scaled = query(&src, Scheme::Fastpath, &layer, dims);
+        assert!((scaled / base - 3.0).abs() < 1e-6, "{scaled} vs {base}");
+    }
+
+    #[test]
+    fn profile_ids_distinguish_sources() {
+        let p = profile_with(SchemeCoeffs::analytic());
+        let analytic = CostSource::Analytic.profile_id();
+        let cal = CostSource::Calibrated(Arc::clone(&p)).profile_id();
+        let live = CostSource::Live { prior: p, live: Arc::new(LiveCosts::new()) }
+            .profile_id();
+        assert_eq!(analytic, ANALYTIC_PROFILE_ID);
+        assert_ne!(analytic, cal);
+        assert_ne!(cal, live);
+        assert!(live.starts_with("live:"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Shape features of one layer's host execution — the regressors every
+//! fitted cost model is expressed over.
+//!
+//! The analytic fastpath host model (`nn::cost::host`) prices a layer
+//! as `word_ops / WORD_OPS_PER_SEC + stream_bytes / BYTES_PER_SEC +
+//! DISPATCH_SECS` (plus an fp term for the first BWN layer).  The
+//! tuner keeps exactly that parameterization but *fits* the
+//! coefficients per backend from measured microbench runs, so the
+//! feature extraction here must mirror the analytic model's shape math
+//! precisely: a calibrated profile is the analytic model with its
+//! constants replaced, never a different curve.
+
+use crate::nn::cost::ResidualMode;
+use crate::nn::layer::{Dims, LayerSpec};
+
+/// The regressors of one layer execution at one batch size.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Features {
+    /// f32 multiply-accumulates (first BWN layer only).
+    pub fp_ops: f64,
+    /// u64 XOR+POPC+accumulate word operations (binarized layers).
+    pub word_ops: f64,
+    /// streamed bytes (im2row build, output repack, pooling, residual
+    /// save/fetch traffic).
+    pub stream_bytes: f64,
+}
+
+/// Extract the cost-model features of one layer.  `dims` is the
+/// layer's *input* dims; `residual`/`model_has_residuals` gate the
+/// residual traffic exactly like the analytic host model does.
+pub fn layer_features(
+    layer: &LayerSpec,
+    dims: Dims,
+    batch: usize,
+    residual: ResidualMode,
+    model_has_residuals: bool,
+) -> Features {
+    let out_hw = |k: usize, stride: usize, pad: usize| -> usize {
+        (dims.hw + 2 * pad - k) / stride + 1
+    };
+    match *layer {
+        LayerSpec::FirstConv { c, o, k, stride, pad } => {
+            let ohw = out_hw(k, stride, pad);
+            Features {
+                fp_ops: (ohw * ohw * batch * o * k * k * c) as f64,
+                ..Features::default()
+            }
+        }
+        LayerSpec::BinConv { o, k, stride, pad, residual: is_res, .. } => {
+            let c = dims.feat;
+            let ohw = out_hw(k, stride, pad);
+            let word_ops = (ohw * ohw * batch * o * k * k * c.div_ceil(64)) as f64;
+            // im2row build + output repack are streamed bytes
+            let mut stream_bytes =
+                (ohw * ohw * batch * (k * k * c.div_ceil(8) + o)) as f64;
+            if is_res && model_has_residuals && residual != ResidualMode::None {
+                let out_dims = dims.after(layer);
+                // fp16 residual save/fetch, same accounting as the
+                // analytic host model
+                let xfers = match residual {
+                    ResidualMode::Full => 2,
+                    ResidualMode::SaveOnly | ResidualMode::FetchOnly => 1,
+                    ResidualMode::None => 0,
+                };
+                stream_bytes += (out_dims.flat() * batch * 2 * xfers) as f64;
+            }
+            Features { fp_ops: 0.0, word_ops, stream_bytes }
+        }
+        LayerSpec::BinFc { d_in, d_out } | LayerSpec::FinalFc { d_in, d_out } => {
+            Features {
+                word_ops: (batch * d_out * d_in.div_ceil(64)) as f64,
+                ..Features::default()
+            }
+        }
+        LayerSpec::Pool => Features {
+            // 4 packed loads + 1 store per output word
+            stream_bytes: (dims.flat() * batch).div_ceil(8) as f64 * 5.0,
+            ..Features::default()
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::cost::host;
+
+    /// The feature extraction must reproduce the analytic fastpath host
+    /// model exactly when evaluated with the analytic constants — the
+    /// calibrated model is the same curve with fitted coefficients.
+    #[test]
+    fn features_reproduce_analytic_fastpath_model() {
+        use crate::kernels::backend::BackendRegistry;
+        use crate::nn::Scheme;
+        use crate::sim::{Engine, RTX2080TI};
+
+        let engine = Engine::new(&RTX2080TI);
+        let backend = BackendRegistry::global().get(Scheme::Fastpath).unwrap();
+        let cases: Vec<(LayerSpec, Dims)> = vec![
+            (
+                LayerSpec::FirstConv { c: 3, o: 64, k: 3, stride: 1, pad: 1 },
+                Dims { hw: 16, feat: 3 },
+            ),
+            (
+                LayerSpec::BinConv {
+                    c: 70,
+                    o: 40,
+                    k: 3,
+                    stride: 1,
+                    pad: 1,
+                    pool: false,
+                    residual: false,
+                },
+                Dims { hw: 14, feat: 70 },
+            ),
+            (
+                LayerSpec::BinConv {
+                    c: 64,
+                    o: 64,
+                    k: 3,
+                    stride: 2,
+                    pad: 1,
+                    pool: false,
+                    residual: true,
+                },
+                Dims { hw: 8, feat: 64 },
+            ),
+            (LayerSpec::BinFc { d_in: 500, d_out: 300 }, Dims { hw: 0, feat: 500 }),
+            (LayerSpec::FinalFc { d_in: 128, d_out: 10 }, Dims { hw: 0, feat: 128 }),
+            (LayerSpec::Pool, Dims { hw: 8, feat: 64 }),
+        ];
+        for (layer, dims) in &cases {
+            for (residual, has_res) in
+                [(ResidualMode::Full, true), (ResidualMode::None, false)]
+            {
+                let f = layer_features(layer, *dims, 8, residual, has_res);
+                let predicted = f.fp_ops / host::FP_OPS_PER_SEC
+                    + f.word_ops / host::WORD_OPS_PER_SEC
+                    + f.stream_bytes / host::BYTES_PER_SEC
+                    + host::DISPATCH_SECS;
+                let analytic =
+                    backend.layer_secs(&engine, layer, *dims, 8, residual, has_res);
+                let rel = (predicted - analytic).abs() / analytic;
+                assert!(
+                    rel < 1e-12,
+                    "{layer:?} {residual:?}: features {predicted} vs analytic {analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn features_scale_with_batch() {
+        let l = LayerSpec::BinFc { d_in: 512, d_out: 512 };
+        let d = Dims { hw: 0, feat: 512 };
+        let f8 = layer_features(&l, d, 8, ResidualMode::None, false);
+        let f32x = layer_features(&l, d, 32, ResidualMode::None, false);
+        assert_eq!(f32x.word_ops, 4.0 * f8.word_ops);
+    }
+}

@@ -1,0 +1,138 @@
+//! Host fingerprinting for calibration profiles.
+//!
+//! A fitted cost profile is only meaningful on hosts that look like the
+//! one it was measured on: PhoneBit-style per-device tuning exists
+//! precisely because analytic models mispredict across hosts.  The
+//! fingerprint captures the coarse host shape (worker parallelism,
+//! cache line) plus the backend set the profile was fitted over, so a
+//! profile carried to a different machine — or loaded after a new
+//! backend registered — is detectably stale instead of silently wrong.
+
+use crate::engine::json::Value;
+use crate::kernels::backend::BackendRegistry;
+use crate::util::threadpool::default_threads;
+
+/// The coarse host + registry shape a profile was calibrated on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostFingerprint {
+    /// scoped-worker parallelism the microbenches ran with
+    /// (`util::threadpool::default_threads`, not raw core count — it is
+    /// the parallelism the executor will actually use).
+    pub cores: usize,
+    /// cache line size in bytes (sysfs when readable, 64 otherwise).
+    pub cache_line: usize,
+    /// registered scheme names at calibration time, in registration
+    /// order (same staleness role as the plan cache's scheme set).
+    pub schemes: Vec<String>,
+}
+
+impl HostFingerprint {
+    /// Fingerprint of this host against `registry`, at the default
+    /// scoped-worker parallelism (what a serving executor uses).
+    pub fn detect(registry: &BackendRegistry) -> HostFingerprint {
+        HostFingerprint::detect_with_cores(registry, default_threads())
+    }
+
+    /// Fingerprint with an explicit worker count — pass the
+    /// `MicrobenchConfig::threads` the measurements actually ran with.
+    /// A profile fitted at a non-default parallelism then (correctly)
+    /// fails [`HostFingerprint::matches_host`] on a host that would
+    /// serve with a different worker count: its coefficients describe
+    /// a different machine shape.
+    pub fn detect_with_cores(registry: &BackendRegistry, cores: usize) -> HostFingerprint {
+        HostFingerprint {
+            cores,
+            cache_line: detect_cache_line(),
+            schemes: registry.names().iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("cores".to_string(), Value::Num(self.cores as f64)),
+            ("cache_line".to_string(), Value::Num(self.cache_line as f64)),
+            (
+                "schemes".to_string(),
+                Value::Arr(self.schemes.iter().map(|s| Value::Str(s.clone())).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<HostFingerprint, String> {
+        let cores = v
+            .get("cores")
+            .and_then(Value::as_usize)
+            .ok_or("fingerprint field \"cores\"")?;
+        let cache_line = v
+            .get("cache_line")
+            .and_then(Value::as_usize)
+            .ok_or("fingerprint field \"cache_line\"")?;
+        let mut schemes = Vec::new();
+        for (i, s) in v
+            .get("schemes")
+            .and_then(Value::as_arr)
+            .ok_or("fingerprint field \"schemes\"")?
+            .iter()
+            .enumerate()
+        {
+            schemes.push(
+                s.as_str()
+                    .ok_or_else(|| format!("fingerprint schemes[{i}]"))?
+                    .to_string(),
+            );
+        }
+        Ok(HostFingerprint { cores, cache_line, schemes })
+    }
+
+    /// Whether a profile with this fingerprint is usable on the current
+    /// host serving `registry`.
+    pub fn matches_host(&self, registry: &BackendRegistry) -> bool {
+        *self == HostFingerprint::detect(registry)
+    }
+}
+
+/// Cache line size: sysfs on Linux, 64 bytes otherwise (every x86-64
+/// and almost every aarch64 serving host).
+fn detect_cache_line() -> usize {
+    std::fs::read_to_string(
+        "/sys/devices/system/cpu/cpu0/cache/index0/coherency_line_size",
+    )
+    .ok()
+    .and_then(|s| s.trim().parse::<usize>().ok())
+    .filter(|&n| n > 0)
+    .unwrap_or(64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_through_json_value() {
+        let fp = HostFingerprint::detect(BackendRegistry::global());
+        assert!(fp.cores >= 1);
+        assert!(fp.cache_line >= 16);
+        assert_eq!(fp.schemes.len(), BackendRegistry::global().len());
+        let back = HostFingerprint::from_value(&fp.to_value()).unwrap();
+        assert_eq!(back, fp);
+    }
+
+    #[test]
+    fn matches_only_the_same_registry_shape() {
+        let fp = HostFingerprint::detect(BackendRegistry::global());
+        assert!(fp.matches_host(BackendRegistry::global()));
+        let empty = BackendRegistry::empty();
+        assert!(!fp.matches_host(&empty));
+    }
+
+    #[test]
+    fn non_default_worker_count_does_not_match_the_serving_host() {
+        // a profile measured at a different parallelism than the host
+        // serves with must be detectably stale, not silently valid
+        let reg = BackendRegistry::global();
+        let odd = default_threads() + 1;
+        let fp = HostFingerprint::detect_with_cores(reg, odd);
+        assert_eq!(fp.cores, odd);
+        assert!(!fp.matches_host(reg));
+    }
+}

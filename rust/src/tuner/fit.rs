@@ -1,0 +1,259 @@
+//! Least-squares fitting of per-backend cost-model coefficients from
+//! microbench measurements.
+//!
+//! Each measurement is `(Features, measured seconds)`; the model is
+//! `secs = word_ops*a + stream_bytes*b + c` (the fp coefficient is not
+//! fit — the first BWN layer is scheme-independent and never runs
+//! through a backend kernel, so it keeps the analytic seed).  The fit
+//! minimizes *relative* squared error (every row scaled by its
+//! measured seconds), so microsecond FC layers and millisecond conv
+//! layers weigh equally, and clamps coefficients to be non-negative
+//! with a tiny active-set loop: a negative rate has no physical
+//! meaning and would let the planner extrapolate below zero.
+
+use super::features::Features;
+use super::profile::SchemeCoeffs;
+
+/// One fit input row: the layer's features and its measured seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct FitRow {
+    pub features: Features,
+    pub secs: f64,
+}
+
+/// Fit one backend's coefficients.  Returns `None` with fewer than 3
+/// usable rows (the model has 3 free parameters) or when every row is
+/// degenerate.
+pub fn fit_coeffs(rows: &[FitRow]) -> Option<SchemeCoeffs> {
+    let rows: Vec<FitRow> = rows
+        .iter()
+        .copied()
+        .filter(|r| r.secs.is_finite() && r.secs > 0.0)
+        .collect();
+    if rows.len() < 3 {
+        return None;
+    }
+    // relative-error scaling: design row [w, s, 1]/secs, target 1
+    let design: Vec<([f64; 3], f64)> = rows
+        .iter()
+        .map(|r| {
+            (
+                [
+                    r.features.word_ops / r.secs,
+                    r.features.stream_bytes / r.secs,
+                    1.0 / r.secs,
+                ],
+                1.0,
+            )
+        })
+        .collect();
+    let mut active = [true; 3];
+    let mut x = [0.0f64; 3];
+    // active-set loop: solve, drop the most negative coefficient, repeat
+    for _ in 0..3 {
+        x = solve_normal(&design, active)?;
+        let mut worst = None;
+        for (i, &xi) in x.iter().enumerate() {
+            if active[i] && xi < 0.0 {
+                match worst {
+                    Some((_, w)) if xi >= w => {}
+                    _ => worst = Some((i, xi)),
+                }
+            }
+        }
+        match worst {
+            Some((i, _)) => {
+                active[i] = false;
+                x[i] = 0.0;
+            }
+            None => break,
+        }
+    }
+    for (i, xi) in x.iter_mut().enumerate() {
+        if !active[i] || !xi.is_finite() || *xi < 0.0 {
+            *xi = 0.0;
+        }
+    }
+    let coeffs = SchemeCoeffs {
+        secs_per_word_op: x[0],
+        secs_per_byte: x[1],
+        dispatch_secs: x[2],
+        secs_per_fp_op: SchemeCoeffs::analytic().secs_per_fp_op,
+        samples: rows.len(),
+        rel_rmse: rel_rmse(&rows, x),
+    };
+    coeffs.is_sane().then_some(coeffs)
+}
+
+fn rel_rmse(rows: &[FitRow], x: [f64; 3]) -> f64 {
+    let sum: f64 = rows
+        .iter()
+        .map(|r| {
+            let pred = r.features.word_ops * x[0]
+                + r.features.stream_bytes * x[1]
+                + x[2];
+            let rel = (pred - r.secs) / r.secs;
+            rel * rel
+        })
+        .sum();
+    (sum / rows.len() as f64).sqrt()
+}
+
+/// Solve the normal equations of a 3-column weighted least-squares
+/// problem, restricted to `active` columns (inactive columns are pinned
+/// to 0).  Columns are rescaled to unit magnitude before elimination so
+/// the wildly different feature scales (word ops ~1e6, constant ~1e5)
+/// do not wreck conditioning, and a tiny relative ridge keeps a
+/// collinear grid solvable instead of exploding.
+fn solve_normal(design: &[([f64; 3], f64)], active: [bool; 3]) -> Option<[f64; 3]> {
+    // column scales
+    let mut scale = [0.0f64; 3];
+    for (row, _) in design {
+        for j in 0..3 {
+            scale[j] = scale[j].max(row[j].abs());
+        }
+    }
+    for s in &mut scale {
+        if *s <= 0.0 {
+            *s = 1.0;
+        }
+    }
+    // normal matrix + rhs over scaled columns
+    let mut a = [[0.0f64; 3]; 3];
+    let mut b = [0.0f64; 3];
+    for (row, y) in design {
+        let r = [row[0] / scale[0], row[1] / scale[1], row[2] / scale[2]];
+        for i in 0..3 {
+            for j in 0..3 {
+                a[i][j] += r[i] * r[j];
+            }
+            b[i] += r[i] * y;
+        }
+    }
+    let ridge = 1e-12 * (a[0][0] + a[1][1] + a[2][2]).max(1e-300);
+    for (i, row) in a.iter_mut().enumerate() {
+        row[i] += ridge;
+        if !active[i] {
+            // pin the column: identity row, zero rhs
+            *row = [0.0; 3];
+            row[i] = 1.0;
+            b[i] = 0.0;
+        }
+    }
+    for (j, on) in active.iter().enumerate() {
+        if !*on {
+            for (i, row) in a.iter_mut().enumerate() {
+                if i != j {
+                    row[j] = 0.0;
+                }
+            }
+        }
+    }
+    // Gaussian elimination with partial pivoting
+    let mut x = b;
+    for col in 0..3 {
+        let (pivot, max) = (col..3)
+            .map(|r| (r, a[r][col].abs()))
+            .fold((col, 0.0), |acc, v| if v.1 > acc.1 { v } else { acc });
+        if max <= 0.0 {
+            return None;
+        }
+        a.swap(col, pivot);
+        x.swap(col, pivot);
+        for r in (col + 1)..3 {
+            let f = a[r][col] / a[col][col];
+            for c in col..3 {
+                a[r][c] -= f * a[col][c];
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    for col in (0..3).rev() {
+        for r in 0..col {
+            let f = a[r][col] / a[col][col];
+            x[r] -= f * x[col];
+        }
+        x[col] /= a[col][col];
+    }
+    // unscale
+    Some([x[0] / scale[0], x[1] / scale[1], x[2] / scale[2]])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(word: f64, bytes: f64, secs: f64) -> FitRow {
+        FitRow {
+            features: Features { fp_ops: 0.0, word_ops: word, stream_bytes: bytes },
+            secs,
+        }
+    }
+
+    #[test]
+    fn recovers_exact_synthetic_coefficients() {
+        // secs = w*2e-10 + s*5e-11 + 3e-6 over a mixed fc/conv-like grid
+        let (a, b, c) = (2e-10, 5e-11, 3e-6);
+        let shapes = [
+            (1.6e4, 0.0),
+            (6.6e4, 0.0),
+            (2.6e5, 0.0),
+            (1.2e5, 2.1e5),
+            (9.4e5, 9.0e5),
+            (3.7e6, 2.4e6),
+        ];
+        let rows: Vec<FitRow> = shapes
+            .iter()
+            .map(|&(w, s)| row(w, s, w * a + s * b + c))
+            .collect();
+        let got = fit_coeffs(&rows).expect("fit");
+        assert!((got.secs_per_word_op - a).abs() / a < 1e-6, "{got:?}");
+        assert!((got.secs_per_byte - b).abs() / b < 1e-6, "{got:?}");
+        assert!((got.dispatch_secs - c).abs() / c < 1e-6, "{got:?}");
+        assert!(got.rel_rmse < 1e-9, "{got:?}");
+        assert_eq!(got.samples, rows.len());
+    }
+
+    #[test]
+    fn tolerates_measurement_noise() {
+        let (a, c) = (1e-10, 2e-6);
+        let mut rng = crate::util::Rng::new(11);
+        let rows: Vec<FitRow> = (0..12)
+            .map(|i| {
+                let w = 1e4 * (1 << (i % 6)) as f64;
+                let noise = 1.0 + 0.05 * (rng.next_f64() - 0.5);
+                row(w, 0.0, (w * a + c) * noise)
+            })
+            .collect();
+        let got = fit_coeffs(&rows).expect("fit");
+        assert!((got.secs_per_word_op - a).abs() / a < 0.2, "{got:?}");
+        assert!(got.rel_rmse < 0.1, "{got:?}");
+    }
+
+    #[test]
+    fn clamps_to_non_negative() {
+        // a grid engineered so an unconstrained fit would want a
+        // negative byte rate: decreasing secs as bytes grow
+        let rows = vec![
+            row(1e5, 1e3, 3e-5),
+            row(1e5, 5e5, 2.6e-5),
+            row(2e5, 1e6, 5.2e-5),
+            row(4e5, 4e6, 1.0e-4),
+        ];
+        let got = fit_coeffs(&rows).expect("fit");
+        assert!(got.is_sane(), "{got:?}");
+        assert!(got.secs_per_byte >= 0.0);
+    }
+
+    #[test]
+    fn needs_three_rows() {
+        assert!(fit_coeffs(&[row(1e5, 0.0, 1e-5), row(2e5, 0.0, 2e-5)]).is_none());
+        // non-finite rows are filtered before the count
+        assert!(fit_coeffs(&[
+            row(1e5, 0.0, 1e-5),
+            row(2e5, 0.0, f64::NAN),
+            row(3e5, 0.0, 0.0),
+        ])
+        .is_none());
+    }
+}

@@ -1,0 +1,191 @@
+//! `LiveCosts`: the lock-free online feedback sink between the arena
+//! executor and the planner.
+//!
+//! The executor records each backend layer's `(predicted, measured)`
+//! seconds; the sink keeps one exponentially-weighted moving average of
+//! the `measured / predicted` ratio per scheme.  `CostSource::Live`
+//! multiplies the calibrated prior by this ratio, so a long-running
+//! server converges on true host costs, and `EngineModel` re-plans
+//! when a scheme's ratio drifts past its threshold (default 2x either
+//! way).
+//!
+//! The sink sits on the request path, so it is wait-free for readers
+//! and lock-free for writers: one `AtomicU64` of f64 bits per scheme,
+//! updated with a compare-exchange loop.  A torn EWMA update under
+//! contention costs at most one lost sample — irrelevant to a smoothed
+//! drift estimate — and no executor thread ever blocks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::nn::cost::Scheme;
+
+/// One slot per `Scheme` variant (fixed: registries key backends by
+/// scheme, and `register` replaces in place, so the universe of keys is
+/// `Scheme::all()`).
+const N_SCHEMES: usize = 7;
+
+/// Lock-free per-scheme EWMA of measured-over-predicted cost ratios.
+#[derive(Debug)]
+pub struct LiveCosts {
+    /// f64 bits of the EWMA ratio; only meaningful once samples > 0
+    ratios: [AtomicU64; N_SCHEMES],
+    samples: [AtomicU64; N_SCHEMES],
+    alpha: f64,
+}
+
+impl Default for LiveCosts {
+    fn default() -> Self {
+        LiveCosts::new()
+    }
+}
+
+impl LiveCosts {
+    /// Default smoothing (alpha = 0.25: ~4-sample memory, fast enough
+    /// to cross a 2x drift threshold within a handful of batches).
+    pub fn new() -> LiveCosts {
+        LiveCosts::with_alpha(0.25)
+    }
+
+    pub fn with_alpha(alpha: f64) -> LiveCosts {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha in (0, 1]");
+        LiveCosts {
+            ratios: std::array::from_fn(|_| AtomicU64::new(0)),
+            samples: std::array::from_fn(|_| AtomicU64::new(0)),
+            alpha,
+        }
+    }
+
+    /// Record one executed layer: `predicted` seconds from the plan,
+    /// `measured` wall seconds.  Degenerate inputs (non-finite or
+    /// non-positive) are dropped; ratios clamp to [1e-6, 1e6] so a
+    /// absurd prediction cannot poison the average with infinities.
+    pub fn record(&self, scheme: Scheme, predicted: f64, measured: f64) {
+        if !(predicted.is_finite() && predicted > 0.0)
+            || !(measured.is_finite() && measured > 0.0)
+        {
+            return;
+        }
+        let r = (measured / predicted).clamp(1e-6, 1e6);
+        let i = idx(scheme);
+        let n = self.samples[i].fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.ratios[i].load(Ordering::Relaxed);
+        loop {
+            let old = f64::from_bits(cur);
+            let new = if n == 0 { r } else { old + self.alpha * (r - old) };
+            match self.ratios[i].compare_exchange_weak(
+                cur,
+                new.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// The EWMA measured/predicted ratio (1.0 until a sample arrives).
+    pub fn ratio(&self, scheme: Scheme) -> f64 {
+        let i = idx(scheme);
+        if self.samples[i].load(Ordering::Relaxed) == 0 {
+            1.0
+        } else {
+            f64::from_bits(self.ratios[i].load(Ordering::Relaxed))
+        }
+    }
+
+    /// Samples recorded for `scheme`.
+    pub fn samples(&self, scheme: Scheme) -> u64 {
+        self.samples[idx(scheme)].load(Ordering::Relaxed)
+    }
+
+    /// Symmetric drift of `scheme`: `max(ratio, 1/ratio)` — 1.0 means
+    /// the prediction is exact, 2.0 means off by 2x in either direction.
+    pub fn drift(&self, scheme: Scheme) -> f64 {
+        let r = self.ratio(scheme);
+        r.max(1.0 / r)
+    }
+
+    /// `(scheme name, ewma ratio, samples)` for every scheme with data.
+    pub fn snapshot(&self) -> Vec<(&'static str, f64, u64)> {
+        Scheme::all()
+            .into_iter()
+            .filter(|s| self.samples(*s) > 0)
+            .map(|s| (s.name(), self.ratio(s), self.samples(s)))
+            .collect()
+    }
+}
+
+fn idx(scheme: Scheme) -> usize {
+    Scheme::all()
+        .iter()
+        .position(|s| *s == scheme)
+        .expect("every scheme has a slot")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_count_matches_scheme_universe() {
+        assert_eq!(N_SCHEMES, Scheme::all().len());
+    }
+
+    #[test]
+    fn empty_reads_as_exact() {
+        let l = LiveCosts::new();
+        for s in Scheme::all() {
+            assert_eq!(l.ratio(s), 1.0);
+            assert_eq!(l.drift(s), 1.0);
+            assert_eq!(l.samples(s), 0);
+        }
+        assert!(l.snapshot().is_empty());
+    }
+
+    #[test]
+    fn ewma_converges_to_the_true_ratio() {
+        let l = LiveCosts::new();
+        for _ in 0..50 {
+            l.record(Scheme::Fastpath, 1e-4, 3e-4); // consistently 3x slow
+        }
+        let r = l.ratio(Scheme::Fastpath);
+        assert!((r - 3.0).abs() < 1e-9, "ratio {r}");
+        assert!((l.drift(Scheme::Fastpath) - 3.0).abs() < 1e-9);
+        // faster-than-predicted drifts symmetrically
+        for _ in 0..200 {
+            l.record(Scheme::Btc, 4e-4, 1e-4);
+        }
+        assert!((l.drift(Scheme::Btc) - 4.0).abs() < 1e-6);
+        assert_eq!(l.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn degenerate_samples_are_dropped_and_ratios_clamped() {
+        let l = LiveCosts::new();
+        l.record(Scheme::Btc, 0.0, 1e-3);
+        l.record(Scheme::Btc, f64::NAN, 1e-3);
+        l.record(Scheme::Btc, 1e-3, f64::INFINITY);
+        l.record(Scheme::Btc, 1e-3, -1.0);
+        assert_eq!(l.samples(Scheme::Btc), 0);
+        l.record(Scheme::Btc, 1e-30, 1e30);
+        assert_eq!(l.ratio(Scheme::Btc), 1e6);
+    }
+
+    #[test]
+    fn concurrent_recording_stays_sane() {
+        let l = std::sync::Arc::new(LiveCosts::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let l = std::sync::Arc::clone(&l);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        l.record(Scheme::Sbnn32, 1e-4, 2e-4);
+                    }
+                });
+            }
+        });
+        assert_eq!(l.samples(Scheme::Sbnn32), 4000);
+        assert!((l.ratio(Scheme::Sbnn32) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,265 @@
+//! The microbench runner: measures each registered *host* backend's
+//! `bmm`/`bconv` kernels over a fixed grid of layer shapes, producing
+//! the `(Features, seconds)` rows the fitter turns into a
+//! [`CalibrationProfile`](super::profile::CalibrationProfile).
+//!
+//! Only host backends are measured — backends whose cost face is an
+//! analytic host model (empty `layer_traces`, like the fastpath or any
+//! future SIMD/NUMA backend).  The six GPU schemes keep their
+//! simulated-Turing cost face: their scalar host execution here is a
+//! semantic reference, not the thing the planner prices, so fitting a
+//! host profile to them would silently replace GPU economics with CPU
+//! economics.  A new host backend is picked up automatically the
+//! moment it registers — no tuner changes needed.
+//!
+//! Timing reuses `util::bench::Bencher` (warmup + auto-scaled
+//! iteration counts) and records the p50 of the sample summary
+//! (`util::stats`): the median is robust against scheduler noise that
+//! would otherwise leak into fitted rates.
+
+use crate::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
+use crate::kernels::backend::{
+    BackendRegistry, ExecCtx, KernelBackend, PreparedConv as _, PreparedFc as _,
+};
+use crate::kernels::bconv::BconvProblem;
+use crate::nn::cost::{ResidualMode, Scheme};
+use crate::nn::layer::{Dims, LayerSpec};
+use crate::util::bench::Bencher;
+use crate::util::threadpool::default_threads;
+use crate::util::Rng;
+
+use super::features::layer_features;
+use super::fit::FitRow;
+
+/// One measured grid cell.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub scheme: Scheme,
+    /// "bmm" | "bconv"
+    pub kind: &'static str,
+    /// the equivalent layer spec (feeds feature extraction)
+    pub layer: LayerSpec,
+    /// the layer's input dims
+    pub dims: Dims,
+    pub batch: usize,
+    /// measured p50 seconds per kernel call
+    pub secs: f64,
+}
+
+impl Measurement {
+    /// The fit row of this measurement.
+    pub fn fit_row(&self) -> FitRow {
+        FitRow {
+            features: layer_features(
+                &self.layer,
+                self.dims,
+                self.batch,
+                ResidualMode::None,
+                false,
+            ),
+            secs: self.secs,
+        }
+    }
+}
+
+/// Microbench configuration.
+#[derive(Clone, Debug)]
+pub struct MicrobenchConfig {
+    /// short CI-friendly measurements + the reduced grid
+    pub quick: bool,
+    /// input-generation seed (deterministic workloads)
+    pub seed: u64,
+    /// scoped-worker count the kernels run with (what the executor will
+    /// use in production)
+    pub threads: usize,
+}
+
+impl Default for MicrobenchConfig {
+    fn default() -> Self {
+        MicrobenchConfig { quick: false, seed: 42, threads: default_threads() }
+    }
+}
+
+impl MicrobenchConfig {
+    pub fn quick() -> Self {
+        MicrobenchConfig { quick: true, ..MicrobenchConfig::default() }
+    }
+
+    fn bencher(&self) -> Bencher {
+        if self.quick {
+            Bencher::quick()
+        } else {
+            Bencher { measure_secs: 0.5, warmup_secs: 0.1, max_samples: 100, quiet: true }
+        }
+    }
+}
+
+/// FC grid: (batch, d_out, d_in).  Chosen to spread `word_ops` over
+/// ~2.5 orders of magnitude so the dispatch constant and the word rate
+/// separate cleanly in the fit.
+fn fc_grid(quick: bool) -> Vec<(usize, usize, usize)> {
+    let mut g = vec![(8, 128, 256), (8, 512, 512), (32, 512, 512), (8, 1024, 1024)];
+    if !quick {
+        g.push((32, 1024, 1024));
+        g.push((64, 1024, 2048));
+    }
+    g
+}
+
+/// Conv grid: (hw, c, o) at batch 8, k=3/s=1/p=1 — ResNet-18-interior
+/// and CIFAR-interior shapes, where the byte-heavy im2row traffic makes
+/// the byte rate observable.
+fn conv_grid(quick: bool) -> Vec<(usize, usize, usize)> {
+    let mut g = vec![(8, 32, 32), (14, 64, 64), (7, 128, 128)];
+    if !quick {
+        g.push((14, 128, 128));
+        g.push((7, 256, 256));
+    }
+    g
+}
+
+/// Whether `backend` is a *host* backend — no GPU trace face, costed by
+/// an analytic host model — and therefore calibratable.
+pub fn is_host_backend(backend: &dyn KernelBackend) -> bool {
+    let probe = LayerSpec::BinFc { d_in: 256, d_out: 256 };
+    backend
+        .layer_traces(&probe, Dims { hw: 0, feat: 256 }, 8, ResidualMode::None, false)
+        .is_empty()
+}
+
+/// Run the microbench grid over every host backend in `registry`.
+/// Shapes a backend rejects at prepare time are skipped (a backend
+/// with shape limits calibrates over the shapes it supports).
+pub fn run(registry: &BackendRegistry, cfg: &MicrobenchConfig) -> Vec<Measurement> {
+    let b = cfg.bencher();
+    let mut out = Vec::new();
+    for backend in registry.backends() {
+        if !is_host_backend(backend) {
+            continue;
+        }
+        out.extend(bench_fc(backend, cfg, &b));
+        out.extend(bench_conv(backend, cfg, &b));
+    }
+    out
+}
+
+fn bench_fc(
+    backend: &dyn KernelBackend,
+    cfg: &MicrobenchConfig,
+    b: &Bencher,
+) -> Vec<Measurement> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut out = Vec::new();
+    for (batch, d_out, d_in) in fc_grid(cfg.quick) {
+        let w = BitMatrix::random(d_out, d_in, Layout::RowMajor, &mut rng);
+        let a = BitMatrix::random(batch, d_in, Layout::RowMajor, &mut rng);
+        let Ok(fc) = backend.prepare_fc(&w) else { continue };
+        let mut scratch = vec![0u64; fc.scratch_words(batch)];
+        let mut ints = vec![0i32; batch * d_out];
+        let threads = cfg.threads;
+        let r = b.bench(
+            &format!("tuner/{}/bmm/b{batch}x{d_out}x{d_in}", backend.name()),
+            1.0,
+            || {
+                let mut ctx = ExecCtx { words64: &mut scratch, threads };
+                fc.bmm(&a.data, batch, &mut ints, &mut ctx);
+                std::hint::black_box(&mut ints);
+            },
+        );
+        out.push(Measurement {
+            scheme: backend.scheme(),
+            kind: "bmm",
+            layer: LayerSpec::BinFc { d_in, d_out },
+            dims: Dims { hw: 0, feat: d_in },
+            batch,
+            secs: r.summary.p50,
+        });
+    }
+    out
+}
+
+fn bench_conv(
+    backend: &dyn KernelBackend,
+    cfg: &MicrobenchConfig,
+    b: &Bencher,
+) -> Vec<Measurement> {
+    let mut rng = Rng::new(cfg.seed.wrapping_add(0x5eed));
+    let mut out = Vec::new();
+    for (hw, c, o) in conv_grid(cfg.quick) {
+        let p = BconvProblem { hw, n: 8, c, o, k: 3, stride: 1, pad: 1 };
+        let input =
+            BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, &mut rng);
+        let filter =
+            BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, &mut rng);
+        let Ok(conv) = backend.prepare_conv(&filter, p) else { continue };
+        let mut scratch = vec![0u64; conv.scratch_words(p)];
+        let mut ints = vec![0i32; p.out_elems()];
+        let threads = cfg.threads;
+        let r = b.bench(
+            &format!("tuner/{}/bconv/hw{hw}c{c}o{o}", backend.name()),
+            1.0,
+            || {
+                let mut ctx = ExecCtx { words64: &mut scratch, threads };
+                conv.bconv(&input.data, p, &mut ints, &mut ctx);
+                std::hint::black_box(&mut ints);
+            },
+        );
+        out.push(Measurement {
+            scheme: backend.scheme(),
+            kind: "bconv",
+            layer: LayerSpec::BinConv {
+                c,
+                o,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                pool: false,
+                residual: false,
+            },
+            dims: Dims { hw, feat: c },
+            batch: p.n,
+            secs: r.summary.p50,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn only_the_fastpath_is_a_host_backend_among_builtins() {
+        for b in BackendRegistry::global().backends() {
+            assert_eq!(
+                is_host_backend(b),
+                b.scheme() == Scheme::Fastpath,
+                "{}",
+                b.name()
+            );
+        }
+    }
+
+    #[test]
+    fn quick_run_measures_the_fastpath_grid() {
+        let cfg = MicrobenchConfig {
+            quick: true,
+            seed: 7,
+            // serial keeps this unit test cheap and deterministic-ish
+            threads: 1,
+        };
+        let ms = run(BackendRegistry::global(), &cfg);
+        // fastpath supports every grid shape: full quick grid measured
+        let want = fc_grid(true).len() + conv_grid(true).len();
+        assert_eq!(ms.len(), want);
+        for m in &ms {
+            assert_eq!(m.scheme, Scheme::Fastpath);
+            assert!(m.secs.is_finite() && m.secs > 0.0, "{m:?}");
+            let row = m.fit_row();
+            assert!(row.features.word_ops > 0.0);
+        }
+        // both kernel kinds present
+        assert!(ms.iter().any(|m| m.kind == "bmm"));
+        assert!(ms.iter().any(|m| m.kind == "bconv"));
+    }
+}

@@ -1,0 +1,227 @@
+//! The measured-calibration subsystem: fitted per-host cost profiles
+//! and a live planner feedback loop.
+//!
+//! The paper's core finding is that which bit-kernel wins is *not*
+//! analytically obvious — memory-access stride and data format flip
+//! the ranking between schemes — and PhoneBit ships a per-device
+//! tuning pass for the same reason: analytic models mispredict on real
+//! hosts.  This module replaces the planner's hard-coded host cost
+//! constants with measured, fitted, per-host profiles, in three parts:
+//!
+//! 1. **Microbench runner** ([`microbench`]) — runs each registered
+//!    *host* backend's `bmm`/`bconv` kernels over a fixed grid of
+//!    layer shapes (reusing `util::bench` timing and `util::stats`
+//!    percentiles) and [`fit`]s the backend's cost-model coefficients
+//!    by weighted least squares over the [`features`] regressors.
+//! 2. **[`CalibrationProfile`]** ([`profile`]) — a schema-versioned
+//!    JSON artifact keyed by a [`HostFingerprint`], persisted next to
+//!    the engine's `PlanCache` (`PlanCache::profile_path`).  Planner
+//!    cost queries go through a [`CostSource`] (`Analytic` |
+//!    `Calibrated` | `Live`) instead of the registry's raw
+//!    `layer_secs`; every plan embeds its source's `profile_id`, so
+//!    cached plans are invalidated whenever the active profile
+//!    changes.
+//! 3. **Online feedback** ([`live`]) — the arena executor records
+//!    per-layer measured latencies into the lock-free [`LiveCosts`]
+//!    EWMA sink; `EngineModel` exposes the drift through coordinator
+//!    `Metrics` and re-plans when a scheme's measured cost drifts past
+//!    2x its prediction, converging a long-running server onto true
+//!    host costs.
+//!
+//! A future backend (SIMD, NUMA) is self-calibrating on arrival: it
+//! registers, the tuner detects its analytic host cost face
+//! ([`microbench::is_host_backend`]), and the next `tuner` run fits it
+//! a profile entry — no tuner changes.
+//!
+//! Run it: `cargo run --release --bin tuner -- --quick` (the CI
+//! `tuner-smoke` job does exactly this and uploads the profile
+//! artifact).  See `docs/ENGINE.md` ("Calibration & CostSource").
+
+pub mod cost_source;
+pub mod features;
+pub mod fingerprint;
+pub mod fit;
+pub mod live;
+pub mod microbench;
+pub mod profile;
+
+pub use cost_source::{CostSource, ANALYTIC_PROFILE_ID};
+pub use features::{layer_features, Features};
+pub use fingerprint::HostFingerprint;
+pub use fit::{fit_coeffs, FitRow};
+pub use live::LiveCosts;
+pub use microbench::{Measurement, MicrobenchConfig};
+pub use profile::{CalibrationProfile, SchemeCoeffs, PROFILE_SCHEMA};
+
+use crate::kernels::backend::BackendRegistry;
+use crate::nn::cost::ResidualMode;
+use crate::nn::ModelDef;
+use crate::sim::{Engine, GpuModel};
+
+/// Fit a [`CalibrationProfile`] from microbench measurements: one
+/// coefficient set per scheme with at least 3 usable grid rows.
+pub fn fit_profile(
+    fingerprint: HostFingerprint,
+    measurements: &[Measurement],
+) -> CalibrationProfile {
+    let mut schemes: Vec<(String, SchemeCoeffs)> = Vec::new();
+    for m in measurements {
+        let name = m.scheme.name().to_string();
+        if schemes.iter().any(|(n, _)| *n == name) {
+            continue;
+        }
+        let rows: Vec<FitRow> = measurements
+            .iter()
+            .filter(|x| x.scheme == m.scheme)
+            .map(Measurement::fit_row)
+            .collect();
+        if let Some(coeffs) = fit_coeffs(&rows) {
+            schemes.push((name, coeffs));
+        }
+    }
+    CalibrationProfile { fingerprint, schemes }
+}
+
+/// Outcome of comparing planner choices under two cost sources.
+#[derive(Clone, Debug, Default)]
+pub struct ConsistencyReport {
+    /// layers examined
+    pub layers: usize,
+    /// layers where the analytic best beat the second best by > margin
+    pub unambiguous: usize,
+    /// unambiguous layers where the calibrated winner differed
+    pub mismatches: Vec<String>,
+}
+
+impl ConsistencyReport {
+    pub fn ok(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+}
+
+/// Compare per-layer planner choices under `source` against the
+/// analytic baseline, over `models` at one batch size.  Only
+/// *unambiguous* layers count — those where the analytic best beats
+/// the analytic second-best by more than `margin` (e.g. 3.0): on those
+/// a sane calibration must agree, while close calls are exactly where
+/// measured data is allowed to flip the ranking.
+pub fn consistency_vs_analytic(
+    registry: &BackendRegistry,
+    gpu: &GpuModel,
+    source: &CostSource,
+    models: &[ModelDef],
+    batch: usize,
+    margin: f64,
+) -> ConsistencyReport {
+    let engine = Engine::new(gpu);
+    let mut report = ConsistencyReport::default();
+    for m in models {
+        let residual = ResidualMode::Full;
+        let has_res = m.residual_blocks > 0;
+        let mut dims = m.input;
+        for (li, l) in m.layers.iter().enumerate() {
+            report.layers += 1;
+            let mut ranked: Vec<(crate::nn::Scheme, f64)> = registry
+                .backends()
+                .map(|b| {
+                    (
+                        b.scheme(),
+                        b.layer_secs(&engine, l, dims, batch, residual, has_res),
+                    )
+                })
+                .collect();
+            ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let (best, best_secs) = ranked[0];
+            // a single-backend registry has nothing to compare
+            let second_secs = ranked.get(1).map(|r| r.1).unwrap_or(f64::NAN);
+            if ranked.len() >= 2
+                && best_secs > 0.0
+                && best_secs.is_finite()
+                && second_secs / best_secs > margin
+            {
+                report.unambiguous += 1;
+                let (cal_best, _) = registry
+                    .backends()
+                    .map(|b| {
+                        (
+                            b.scheme(),
+                            source.layer_secs(
+                                b, &engine, l, dims, batch, residual, has_res,
+                            ),
+                        )
+                    })
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .expect("non-empty registry");
+                if cal_best != best {
+                    report.mismatches.push(format!(
+                        "{} layer {li} ({}): analytic {} (margin {:.1}x) vs \
+                         calibrated {}",
+                        m.name,
+                        l.tag(),
+                        best.name(),
+                        second_secs / best_secs,
+                        cal_best.name(),
+                    ));
+                }
+            }
+            dims = dims.after(l);
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::all_models;
+    use crate::sim::RTX2080TI;
+    use std::sync::Arc;
+
+    #[test]
+    fn analytic_constants_are_self_consistent() {
+        // a profile that IS the analytic model must agree with the
+        // analytic source on every unambiguous layer of every model
+        let reg = BackendRegistry::global();
+        let profile = Arc::new(CalibrationProfile {
+            fingerprint: HostFingerprint::detect(reg),
+            schemes: vec![("FASTPATH".to_string(), SchemeCoeffs::analytic())],
+        });
+        let source = CostSource::Calibrated(profile);
+        let models = all_models();
+        let r = consistency_vs_analytic(reg, &RTX2080TI, &source, &models, 8, 3.0);
+        assert!(r.layers > 0);
+        assert!(r.ok(), "mismatches: {:?}", r.mismatches);
+    }
+
+    #[test]
+    fn fit_profile_groups_by_scheme() {
+        use crate::nn::layer::{Dims, LayerSpec};
+        use crate::nn::Scheme;
+        let fp = HostFingerprint::detect(BackendRegistry::global());
+        let mk = |scheme, d_in: usize, secs| Measurement {
+            scheme,
+            kind: "bmm",
+            layer: LayerSpec::BinFc { d_in, d_out: 128 },
+            dims: Dims { hw: 0, feat: d_in },
+            batch: 8,
+            secs,
+        };
+        // fastpath: consistent synthetic curve -> fitted; btc-fmt: only
+        // two rows -> skipped
+        let coeff = 2e-10;
+        let ms = vec![
+            mk(Scheme::Fastpath, 256, (8 * 128 * 4) as f64 * coeff + 1e-6),
+            mk(Scheme::Fastpath, 512, (8 * 128 * 8) as f64 * coeff + 1e-6),
+            mk(Scheme::Fastpath, 1024, (8 * 128 * 16) as f64 * coeff + 1e-6),
+            mk(Scheme::Fastpath, 2048, (8 * 128 * 32) as f64 * coeff + 1e-6),
+            mk(Scheme::BtcFmt, 256, 1e-5),
+            mk(Scheme::BtcFmt, 512, 2e-5),
+        ];
+        let p = fit_profile(fp, &ms);
+        assert_eq!(p.schemes.len(), 1);
+        assert_eq!(p.schemes[0].0, "FASTPATH");
+        let c = p.coeffs(Scheme::Fastpath).unwrap();
+        assert!((c.secs_per_word_op - coeff).abs() / coeff < 1e-6, "{c:?}");
+        assert_eq!(c.samples, 4);
+    }
+}

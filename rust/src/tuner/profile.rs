@@ -1,0 +1,320 @@
+//! `CalibrationProfile`: the schema-versioned JSON artifact a tuner run
+//! emits — fitted per-backend cost-model coefficients keyed by a host
+//! fingerprint.
+//!
+//! The profile is persisted next to the `PlanCache`
+//! (`PlanCache::profile_path`) and identified by a stable content
+//! digest ([`CalibrationProfile::id`]).  Every plan embeds the id of
+//! the cost source it was planned under, so cached plans from a
+//! different profile (or from the analytic source) are invalidated the
+//! moment the active profile changes.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::json::Value;
+use crate::nn::cost::{host, ResidualMode, Scheme};
+use crate::nn::layer::{Dims, LayerSpec};
+
+use super::features::layer_features;
+use super::fingerprint::HostFingerprint;
+
+/// Version of the profile JSON document.  Bump whenever the layout (or
+/// the meaning of a fitted coefficient) changes; `from_json` rejects
+/// any other version, and because the profile id embeds the schema,
+/// cached plans from an old profile schema are invalidated too.
+pub const PROFILE_SCHEMA: usize = 1;
+
+/// Fitted cost-model coefficients of one backend: the analytic host
+/// model's parameterization (`tuner::features`) with measured values.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SchemeCoeffs {
+    /// seconds per u64 XOR+POPC+accumulate word op (1 / word-ops-per-sec).
+    pub secs_per_word_op: f64,
+    /// seconds per streamed byte (1 / bytes-per-sec).
+    pub secs_per_byte: f64,
+    /// fixed fork/join + repack latency per layer dispatch.
+    pub dispatch_secs: f64,
+    /// seconds per f32 multiply-accumulate (first BWN layer).  Not fit
+    /// by the microbench (the first layer is scheme-independent); the
+    /// fitter seeds it from the analytic constant.
+    pub secs_per_fp_op: f64,
+    /// microbench measurements behind the fit.
+    pub samples: usize,
+    /// relative RMS error of the fit over its own measurements.
+    pub rel_rmse: f64,
+}
+
+impl SchemeCoeffs {
+    /// The analytic fastpath host constants expressed as coefficients —
+    /// the prior a fit starts from, and a convenient test fixture.
+    pub fn analytic() -> SchemeCoeffs {
+        SchemeCoeffs {
+            secs_per_word_op: 1.0 / host::WORD_OPS_PER_SEC,
+            secs_per_byte: 1.0 / host::BYTES_PER_SEC,
+            dispatch_secs: host::DISPATCH_SECS,
+            secs_per_fp_op: 1.0 / host::FP_OPS_PER_SEC,
+            samples: 0,
+            rel_rmse: 0.0,
+        }
+    }
+
+    /// Predicted seconds for a feature vector.
+    pub fn predict(&self, f: super::features::Features) -> f64 {
+        f.fp_ops * self.secs_per_fp_op
+            + f.word_ops * self.secs_per_word_op
+            + f.stream_bytes * self.secs_per_byte
+            + self.dispatch_secs
+    }
+
+    /// All coefficients finite and non-negative, with a sane dispatch.
+    pub fn is_sane(&self) -> bool {
+        let nonneg = |x: f64| x.is_finite() && x >= 0.0;
+        nonneg(self.secs_per_word_op)
+            && nonneg(self.secs_per_byte)
+            && nonneg(self.dispatch_secs)
+            && nonneg(self.secs_per_fp_op)
+            && self.dispatch_secs < 1.0
+    }
+}
+
+/// A fitted per-host calibration: fingerprint + one coefficient set per
+/// calibrated scheme (backends without an entry fall back to their
+/// analytic cost face under `CostSource::Calibrated`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationProfile {
+    pub fingerprint: HostFingerprint,
+    /// `(scheme name, coefficients)` in registration order.
+    pub schemes: Vec<(String, SchemeCoeffs)>,
+}
+
+impl CalibrationProfile {
+    /// Coefficients for `scheme`, if it was calibrated.
+    pub fn coeffs(&self, scheme: Scheme) -> Option<&SchemeCoeffs> {
+        self.schemes
+            .iter()
+            .find(|(n, _)| n == scheme.name())
+            .map(|(_, c)| c)
+    }
+
+    /// Fitted seconds of one layer under `scheme`; `None` when the
+    /// scheme was not calibrated (caller falls back to analytic).
+    pub fn layer_secs(
+        &self,
+        scheme: Scheme,
+        layer: &LayerSpec,
+        dims: Dims,
+        batch: usize,
+        residual: ResidualMode,
+        model_has_residuals: bool,
+    ) -> Option<f64> {
+        self.coeffs(scheme).map(|c| {
+            c.predict(layer_features(layer, dims, batch, residual, model_has_residuals))
+        })
+    }
+
+    /// Stable content digest: `cal<schema>-<fnv64 of the JSON form>`.
+    /// This is the id plans embed as their `cost_profile`, so any
+    /// change to the fingerprint, the coefficient values, or the
+    /// profile schema invalidates cached plans.
+    pub fn id(&self) -> String {
+        format!("cal{PROFILE_SCHEMA}-{:016x}", fnv1a64(self.to_json().as_bytes()))
+    }
+
+    pub fn to_json(&self) -> String {
+        let schemes: Vec<Value> = self
+            .schemes
+            .iter()
+            .map(|(name, c)| {
+                Value::Obj(vec![
+                    ("scheme".to_string(), Value::Str(name.clone())),
+                    (
+                        "secs_per_word_op".to_string(),
+                        Value::Num(c.secs_per_word_op),
+                    ),
+                    ("secs_per_byte".to_string(), Value::Num(c.secs_per_byte)),
+                    ("dispatch_secs".to_string(), Value::Num(c.dispatch_secs)),
+                    ("secs_per_fp_op".to_string(), Value::Num(c.secs_per_fp_op)),
+                    ("samples".to_string(), Value::Num(c.samples as f64)),
+                    ("rel_rmse".to_string(), Value::Num(c.rel_rmse)),
+                ])
+            })
+            .collect();
+        Value::Obj(vec![
+            ("schema".to_string(), Value::Num(PROFILE_SCHEMA as f64)),
+            ("fingerprint".to_string(), self.fingerprint.to_value()),
+            ("schemes".to_string(), Value::Arr(schemes)),
+        ])
+        .to_string()
+    }
+
+    pub fn from_json(text: &str) -> Result<CalibrationProfile> {
+        let v = Value::parse(text).map_err(|e| anyhow::anyhow!("profile json: {e}"))?;
+        let schema = v
+            .get("schema")
+            .and_then(Value::as_usize)
+            .context("profile field \"schema\"")?;
+        if schema != PROFILE_SCHEMA {
+            bail!(
+                "profile schema {schema} (this build reads {PROFILE_SCHEMA}); \
+                 re-run the tuner"
+            );
+        }
+        let fingerprint = HostFingerprint::from_value(
+            v.get("fingerprint").context("profile field \"fingerprint\"")?,
+        )
+        .map_err(|e| anyhow::anyhow!("profile {e}"))?;
+        let mut schemes = Vec::new();
+        for (i, sv) in v
+            .get("schemes")
+            .and_then(Value::as_arr)
+            .context("profile field \"schemes\"")?
+            .iter()
+            .enumerate()
+        {
+            let name = sv
+                .get("scheme")
+                .and_then(Value::as_str)
+                .with_context(|| format!("profile schemes[{i}] name"))?
+                .to_string();
+            let num = |key: &str| -> Result<f64> {
+                sv.get(key)
+                    .and_then(Value::as_f64)
+                    .with_context(|| format!("profile schemes[{i}] field {key:?}"))
+            };
+            let coeffs = SchemeCoeffs {
+                secs_per_word_op: num("secs_per_word_op")?,
+                secs_per_byte: num("secs_per_byte")?,
+                dispatch_secs: num("dispatch_secs")?,
+                secs_per_fp_op: num("secs_per_fp_op")?,
+                samples: sv
+                    .get("samples")
+                    .and_then(Value::as_usize)
+                    .with_context(|| format!("profile schemes[{i}] samples"))?,
+                rel_rmse: num("rel_rmse")?,
+            };
+            ensure_sane(&name, &coeffs)?;
+            schemes.push((name, coeffs));
+        }
+        Ok(CalibrationProfile { fingerprint, schemes })
+    }
+
+    /// Persist to `path` (creating parent directories).
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+
+    /// Load a previously saved profile.
+    pub fn load(path: impl AsRef<Path>) -> Result<CalibrationProfile> {
+        let text = std::fs::read_to_string(path.as_ref()).with_context(|| {
+            format!("read calibration profile {:?}", path.as_ref())
+        })?;
+        CalibrationProfile::from_json(&text)
+    }
+}
+
+fn ensure_sane(name: &str, c: &SchemeCoeffs) -> Result<()> {
+    if !c.is_sane() {
+        bail!("profile scheme {name:?}: non-finite or negative coefficients");
+    }
+    Ok(())
+}
+
+/// FNV-1a 64-bit — stable, dependency-free content hash for profile ids.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::backend::BackendRegistry;
+
+    fn sample() -> CalibrationProfile {
+        CalibrationProfile {
+            fingerprint: HostFingerprint::detect(BackendRegistry::global()),
+            schemes: vec![(
+                "FASTPATH".to_string(),
+                SchemeCoeffs {
+                    secs_per_word_op: 8.5e-11,
+                    secs_per_byte: 6.0e-11,
+                    dispatch_secs: 2.5e-6,
+                    secs_per_fp_op: 1.25e-10,
+                    samples: 9,
+                    rel_rmse: 0.07,
+                },
+            )],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_id() {
+        let p = sample();
+        let back = CalibrationProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.id(), p.id());
+        assert!(p.id().starts_with("cal1-"));
+    }
+
+    #[test]
+    fn id_changes_with_coefficients() {
+        let p = sample();
+        let mut q = p.clone();
+        q.schemes[0].1.dispatch_secs *= 2.0;
+        assert_ne!(p.id(), q.id());
+        let mut r = p.clone();
+        r.fingerprint.cores += 1;
+        assert_ne!(p.id(), r.id());
+    }
+
+    #[test]
+    fn predicts_with_analytic_constants_exactly() {
+        use crate::nn::Scheme;
+        let p = CalibrationProfile {
+            fingerprint: HostFingerprint::detect(BackendRegistry::global()),
+            schemes: vec![("FASTPATH".to_string(), SchemeCoeffs::analytic())],
+        };
+        let layer = LayerSpec::BinFc { d_in: 1024, d_out: 512 };
+        let dims = Dims { hw: 0, feat: 1024 };
+        let got = p
+            .layer_secs(Scheme::Fastpath, &layer, dims, 8, ResidualMode::None, false)
+            .unwrap();
+        let want = (8 * 512 * 16) as f64 / host::WORD_OPS_PER_SEC + host::DISPATCH_SECS;
+        assert!((got - want).abs() / want < 1e-12);
+        // uncalibrated scheme -> None (caller falls back to analytic)
+        assert!(p
+            .layer_secs(Scheme::Btc, &layer, dims, 8, ResidualMode::None, false)
+            .is_none());
+    }
+
+    #[test]
+    fn rejects_other_schemas_and_bad_coeffs() {
+        let p = sample();
+        let old = p.to_json().replace("\"schema\":1", "\"schema\":99");
+        assert!(CalibrationProfile::from_json(&old).is_err());
+        let neg = p.to_json().replace("8.5e-11", "-8.5e-11");
+        assert!(CalibrationProfile::from_json(&neg).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("tcbnn_profile_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("calibration.profile.json");
+        let p = sample();
+        p.save(&path).unwrap();
+        let back = CalibrationProfile::load(&path).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.id(), p.id());
+    }
+}
