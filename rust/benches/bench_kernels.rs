@@ -25,6 +25,7 @@ use tcbnn::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
 use tcbnn::engine::json::Value;
 use tcbnn::engine::{EngineExecutor, Planner};
 use tcbnn::kernels::backend::BackendRegistry;
+use tcbnn::layout::{repack, LayoutDesc, LayoutKind};
 use tcbnn::kernels::bconv::btc::BconvDesign1;
 use tcbnn::kernels::bconv::bstc::BstcBconv;
 use tcbnn::kernels::bconv::{BconvProblem, BconvScheme};
@@ -363,6 +364,58 @@ fn main() {
         ));
     }
 
+    // ---- layout repack bandwidth (GB/s per pair) ----
+    // every registered conversion pair over one mid-size image, plus an
+    // in-run u32 copy reference so the gate runs on a *relative* ratio
+    // (repack bandwidth vs plain copy bandwidth transfers across hosts)
+    let mut repack_cells: Vec<(String, f64)> = Vec::new();
+    {
+        let (lines, bits) = (128usize, 4096usize);
+        let m = BitMatrix::random(lines, bits, Layout::RowMajor, &mut rng);
+        let base = repack::BitImage::from_rows32(lines, bits, m.data);
+        let base_words = match &base.words {
+            tcbnn::layout::Words::W32(v) => v.clone(),
+            _ => unreachable!("Row32 is u32-worded"),
+        };
+        let copy_bytes = 2.0 * (base_words.len() * 4) as f64; // read + write
+        let r = b.bench("repack/copy-row32", 1.0, || {
+            std::hint::black_box(base_words.to_vec());
+        });
+        let copy_gbs = copy_bytes / r.summary.p50 / 1e9;
+        for (src, dst) in repack::all_pairs() {
+            let src_img = repack::convert(&base, src);
+            let pair = repack::pair_name(src, dst);
+            let r = b.bench(&format!("repack/{pair}"), 1.0, || {
+                std::hint::black_box(repack::convert(&src_img, dst));
+            });
+            let bytes = (src_img.desc.storage_bytes()
+                + LayoutDesc::new(dst, lines, bits).storage_bytes())
+                as f64;
+            let gbs = bytes / r.summary.p50 / 1e9;
+            entries.push(Entry {
+                name: format!("repack/{pair}"),
+                model: "repack".to_string(),
+                scheme: pair.clone(),
+                batch: lines,
+                img_s: 1.0 / r.summary.p50,
+                gb_s: gbs,
+                lat_p50_s: r.summary.p50,
+                lat_p95_s: r.summary.p95,
+                lat_p99_s: r.summary.p99,
+            });
+            repack_cells.push((pair.clone(), gbs));
+            // gate only the hot executor pairs (word pairing should run
+            // near copy speed; the tiled FSB paths are informational)
+            if matches!(
+                (src, dst),
+                (LayoutKind::Row32, LayoutKind::Blocked64)
+                    | (LayoutKind::Blocked64, LayoutKind::Row32)
+            ) {
+                ratios.push((format!("repack/{pair}_vs_copy"), gbs / copy_gbs));
+            }
+        }
+    }
+
     // ---- report + JSON ----
     let min_kernel_speedup = ratios
         .iter()
@@ -393,7 +446,7 @@ fn main() {
     );
 
     let doc = Value::Obj(vec![
-        ("schema".to_string(), Value::Num(2.0)),
+        ("schema".to_string(), Value::Num(3.0)),
         (
             "mode".to_string(),
             Value::Str(if quick { "quick" } else { "full" }.to_string()),
@@ -426,6 +479,20 @@ fn main() {
                             ("lat_p50_s".to_string(), Value::Num(e.lat_p50_s)),
                             ("lat_p95_s".to_string(), Value::Num(e.lat_p95_s)),
                             ("lat_p99_s".to_string(), Value::Num(e.lat_p99_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "repacks".to_string(),
+            Value::Arr(
+                repack_cells
+                    .iter()
+                    .map(|(pair, gbs)| {
+                        Value::Obj(vec![
+                            ("pair".to_string(), Value::Str(pair.clone())),
+                            ("gb_s".to_string(), Value::Num(*gbs)),
                         ])
                     })
                     .collect(),

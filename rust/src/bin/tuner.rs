@@ -1,14 +1,18 @@
 //! tuner — measured calibration of the planner's host cost models.
 //!
 //! Runs every registered *host* backend's `bmm`/`bconv` kernels over a
-//! fixed grid of layer shapes, least-squares-fits the backend's
-//! cost-model coefficients, and emits a schema-versioned
+//! fixed grid of layer shapes, measures layout-conversion bandwidth
+//! for every registered repack pair (`layout::repack::all_pairs()`),
+//! least-squares-fits the backend's cost-model coefficients plus the
+//! per-pair repack rates, and emits a schema-versioned
 //! `CalibrationProfile` JSON artifact keyed by this host's
-//! fingerprint.  The emitted profile is validated by re-loading it,
-//! and planner choices under `CostSource::Calibrated` are checked
-//! against the analytic baseline on every unambiguous (>3x margin)
-//! layer of the Table-5 models — a mismatch there means the fit is
-//! broken, not that the host is interesting, so the run fails.
+//! fingerprint.  The emitted profile is validated by re-loading it, it
+//! must contain repack coefficients for EVERY registered layout pair
+//! (so a backend adding a layout fails the run until the pair is
+//! measurable), and planner choices under `CostSource::Calibrated` are
+//! checked against the analytic baseline on every unambiguous (>3x
+//! margin) layer of the Table-5 models — a mismatch there means the
+//! fit is broken, not that the host is interesting, so the run fails.
 //!
 //!   cargo run --release --bin tuner -- \
 //!       [--quick]                 # CI settings (short measurements)
@@ -79,7 +83,14 @@ fn main() -> ExitCode {
             m.secs * 1e6
         );
     }
-    let profile = fit_profile(fingerprint, &measurements);
+    // layout-conversion bandwidth per registered repack pair
+    let repack_measurements = microbench::run_repacks(&cfg);
+    println!(
+        "measured {} repack grid cells over {} layout pairs",
+        repack_measurements.len(),
+        tcbnn::layout::repack::all_pairs().len()
+    );
+    let profile = fit_profile(fingerprint, &measurements, &repack_measurements);
     if profile.schemes.is_empty() {
         eprintln!("tuner: fit produced no scheme coefficients");
         return ExitCode::FAILURE;
@@ -97,6 +108,31 @@ fn main() -> ExitCode {
             c.rel_rmse * 100.0,
             c.samples
         );
+    }
+    println!("\nfitted repack bandwidth per layout pair:");
+    for (pair, c) in &profile.repacks {
+        println!(
+            "  {pair:<28} {}/s, dispatch {:.2} us, rel RMSE {:.1}% over {} cells",
+            fmt_rate(recip(c.secs_per_byte)),
+            c.dispatch_secs * 1e6,
+            c.rel_rmse * 100.0,
+            c.samples
+        );
+    }
+    // coverage gate (CI tuner-smoke): the profile must price EVERY
+    // registered layout pair — when a backend adds a LayoutKind, the
+    // pair set widens and this fails until the microbench covers it
+    let missing: Vec<String> = tcbnn::layout::repack::all_pairs()
+        .into_iter()
+        .filter(|(s, d)| profile.repack_coeffs(*s, *d).is_none())
+        .map(|(s, d)| tcbnn::layout::repack::pair_name(s, d))
+        .collect();
+    if !missing.is_empty() {
+        eprintln!(
+            "tuner: emitted profile is missing repack coefficients for \
+             registered layout pairs: {missing:?}"
+        );
+        return ExitCode::FAILURE;
     }
 
     // ---- persist + validate the artifact --------------------------------

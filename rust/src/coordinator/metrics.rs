@@ -33,6 +33,9 @@ struct Inner {
     /// latest per-scheme measured/predicted EWMA cost ratios from the
     /// tuner's live feedback loop (scheme name, ratio, samples)
     cost_drift: Vec<(String, f64, u64)>,
+    /// latest cumulative explicit layout-repack counters from the
+    /// serving executor: (consuming scheme name, ops, streamed bytes)
+    repacks: Vec<(String, u64, u64)>,
 }
 
 impl Metrics {
@@ -115,6 +118,19 @@ impl Metrics {
         self.inner.lock().unwrap().cost_drift.clone()
     }
 
+    /// Publish the serving executor's cumulative explicit layout-repack
+    /// counters (latest snapshot wins — the counters live on the
+    /// executor, this surfaces them next to the serving metrics).
+    pub fn set_repacks(&self, repacks: Vec<(String, u64, u64)>) {
+        self.inner.lock().unwrap().repacks = repacks;
+    }
+
+    /// `(consuming scheme name, explicit repack ops, streamed bytes)`
+    /// per scheme the executor has converted activations for.
+    pub fn repack_stats(&self) -> Vec<(String, u64, u64)> {
+        self.inner.lock().unwrap().repacks.clone()
+    }
+
     pub fn latency_summary(&self) -> Summary {
         Summary::from(&self.inner.lock().unwrap().latencies)
     }
@@ -171,6 +187,14 @@ impl Metrics {
         let (h, mi) = (self.plan_cache_hits(), self.plan_cache_misses());
         if h + mi > 0 {
             out.push_str(&format!(" plan_cache={h}h/{mi}m"));
+        }
+        // explicit layout-repack traffic, totalled across schemes
+        let repacks = self.repack_stats();
+        let (ops, bytes) = repacks
+            .iter()
+            .fold((0u64, 0u64), |(o, b), (_, ro, rb)| (o + ro, b + rb));
+        if ops > 0 {
+            out.push_str(&format!(" repack={ops}ops/{bytes}B"));
         }
         let replans = self.replans();
         if replans > 0 {
@@ -246,6 +270,26 @@ mod tests {
         ]);
         assert_eq!(m.cost_drift().len(), 2);
         assert!(m.report().contains("drift[SBNN-64]=0.20x"), "{}", m.report());
+    }
+
+    #[test]
+    fn repack_counters_surface_in_the_report() {
+        let m = Metrics::new();
+        assert!(m.repack_stats().is_empty());
+        assert!(!m.report().contains("repack="));
+        m.set_repacks(vec![
+            ("FASTPATH".to_string(), 3, 12288),
+            ("SBNN-64".to_string(), 1, 4096),
+        ]);
+        assert_eq!(m.repack_stats().len(), 2);
+        // shown next to the plan-cache counters, totalled
+        m.record_plan_cache(2, 1);
+        let report = m.report();
+        assert!(report.contains("plan_cache=2h/1m"), "{report}");
+        assert!(report.contains("repack=4ops/16384B"), "{report}");
+        // latest snapshot wins (counters are cumulative on the executor)
+        m.set_repacks(vec![("FASTPATH".to_string(), 5, 20480)]);
+        assert_eq!(m.repack_stats(), vec![("FASTPATH".to_string(), 5, 20480)]);
     }
 
     #[test]

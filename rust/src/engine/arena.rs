@@ -28,12 +28,18 @@ fn flat_words(n: usize, feat: usize) -> usize {
 ///   executor from the prepared layers' reported `scratch_words`, so
 ///   the arena stays backend-agnostic.  Empty when no prepared layer
 ///   asks for scratch.
+/// * `flat64` — the `Blocked64` flat-activation buffer: planned layout
+///   edges materialize explicit repacks here, and `Blocked64`-chained
+///   FC layers ping through it without touching the u32 buffers.
+///   Sized by the executor from the plan's layout edges; empty for
+///   all-`Row32` plans.
 /// * `logits` — the classifier output.
 pub struct Arena {
     pub bits_a: Vec<u32>,
     pub bits_b: Vec<u32>,
     pub ints: Vec<i32>,
     pub words64: Vec<u64>,
+    pub flat64: Vec<u64>,
     pub logits: Vec<f32>,
 }
 
@@ -82,6 +88,7 @@ impl Arena {
             bits_b: vec![0u32; max_words],
             ints: vec![0i32; max_ints],
             words64: Vec::new(),
+            flat64: Vec::new(),
             logits: vec![0f32; batch * model.classes],
         }
     }
@@ -93,6 +100,13 @@ impl Arena {
         self
     }
 
+    /// Attach `words` u64 words of `Blocked64` flat-activation buffer
+    /// (the maximum any planned layout edge needs at batch capacity).
+    pub fn with_flat64_words(mut self, words: usize) -> Arena {
+        self.flat64 = vec![0u64; words];
+        self
+    }
+
     /// Total allocated bytes — the arena's high-water mark.  Constant
     /// after construction; benches assert it never grows across requests.
     pub fn bytes(&self) -> usize {
@@ -100,6 +114,7 @@ impl Arena {
             + self.bits_b.len() * 4
             + self.ints.len() * 4
             + self.words64.len() * 8
+            + self.flat64.len() * 8
             + self.logits.len() * 4
     }
 }
@@ -137,15 +152,25 @@ mod tests {
         assert_eq!(a.words64.len(), 1024);
         let plain = Arena::for_model(&mnist_mlp(), 8);
         assert!(plain.words64.is_empty());
+        assert!(plain.flat64.is_empty());
+    }
+
+    #[test]
+    fn flat64_words_attach_layout_buffer() {
+        let a = Arena::for_model(&mnist_mlp(), 8).with_flat64_words(8 * 16);
+        assert_eq!(a.flat64.len(), 128);
+        assert!(a.words64.is_empty());
     }
 
     #[test]
     fn bytes_reports_total() {
-        let a = Arena::for_model(&mnist_mlp(), 8).with_scratch_words(16);
+        let a = Arena::for_model(&mnist_mlp(), 8)
+            .with_scratch_words(16)
+            .with_flat64_words(32);
         assert_eq!(
             a.bytes(),
             4 * (a.bits_a.len() + a.bits_b.len() + a.ints.len() + a.logits.len())
-                + 8 * a.words64.len()
+                + 8 * (a.words64.len() + a.flat64.len())
         );
     }
 }

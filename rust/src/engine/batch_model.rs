@@ -32,7 +32,7 @@ use crate::coordinator::Metrics;
 use crate::nn::forward::ModelWeights;
 use crate::nn::{ModelDef, Scheme};
 use crate::sim::Engine;
-use crate::tuner::LiveCosts;
+use crate::tuner::{CalibrationProfile, CostSource, LiveCosts};
 
 use super::executor::EngineExecutor;
 use super::plan::ModelPlan;
@@ -229,6 +229,50 @@ impl EngineModel {
         self.exec.arena_bytes()
     }
 
+    /// The prior `CalibrationProfile` corrected by the live loop's
+    /// converged EWMA ratios — `None` when the planner has no
+    /// `CostSource::Live` source or no scheme has enough samples yet.
+    /// The corrected profile's content id differs from the prior's, so
+    /// persisting it (see [`EngineModel::shutdown`]) invalidates every
+    /// cached plan priced under the stale prior: the next start begins
+    /// corrected and re-plans immediately.
+    pub fn converged_profile(&self) -> Option<CalibrationProfile> {
+        let st = self.replan.as_ref()?;
+        let CostSource::Live { prior, live } = st.planner.cost_source() else {
+            return None;
+        };
+        let ratios: Vec<(String, f64)> = live
+            .snapshot()
+            .into_iter()
+            .filter(|(_, _, samples)| *samples >= st.min_samples)
+            .map(|(name, ratio, _)| (name.to_string(), ratio))
+            .collect();
+        if ratios.is_empty() {
+            return None;
+        }
+        let corrected = prior.scaled_by(&ratios);
+        // nothing the profile covers drifted -> nothing to persist
+        (corrected != **prior).then_some(corrected)
+    }
+
+    /// Clean shutdown (ROADMAP tuner follow-up): persist the
+    /// live-converged profile next to the plan cache
+    /// (`PlanCache::profile_path`) so the next serving process starts
+    /// from corrected costs.  Returns the persisted profile's id, or
+    /// `None` when there was nothing to persist (not a Live model, no
+    /// converged samples, or no drift recorded against the prior).
+    pub fn shutdown(self, cache: &super::plan_cache::PlanCache) -> Result<Option<String>> {
+        match self.converged_profile() {
+            Some(p) => {
+                p.save(cache.profile_path()).with_context(|| {
+                    format!("persist converged profile {:?}", cache.profile_path())
+                })?;
+                Ok(Some(p.id()))
+            }
+            None => Ok(None),
+        }
+    }
+
     /// After each batch under a `CostSource::Live` planner: publish the
     /// drift snapshot and, when a scheme in the active plan has drifted
     /// past the threshold, re-plan against the corrected costs and
@@ -265,13 +309,19 @@ impl EngineModel {
         // schemes repeatedly
         st.next_attempt = st.batches + 8;
         let new_plan = st.planner.plan(&st.model, self.exec.batch_capacity());
-        let same_schemes = new_plan.layers.len() == self.exec.plan().layers.len()
+        // a re-plan is only worth an executor rebuild when the scheme
+        // mix OR the layout edges actually changed
+        let same_routing = new_plan.layers.len() == self.exec.plan().layers.len()
             && new_plan
                 .layers
                 .iter()
                 .zip(&self.exec.plan().layers)
-                .all(|(a, b)| a.scheme == b.scheme);
-        if same_schemes {
+                .all(|(a, b)| {
+                    a.scheme == b.scheme
+                        && a.in_layout == b.in_layout
+                        && a.out_layout == b.out_layout
+                });
+        if same_routing {
             return;
         }
         let baselines = live_baselines(&st.planner, &st.model, &new_plan);
@@ -298,6 +348,13 @@ impl EngineModel {
 /// batch capacity (`CostSource::prior_layer_secs` of each planned
 /// layer's backend) — what the executor's latency sink records
 /// measured ratios against.
+///
+/// The baselines mirror the planner's layout accounting: a layer fed
+/// its native (chained) layout skips the internal conversion its cost
+/// face prices, and a layer behind an explicit repack edge pays that
+/// conversion inside its timed region — pricing neither would make
+/// layout choices read as per-scheme cost drift and leak into the
+/// EWMA (and from there into [`EngineModel::converged_profile`]).
 fn live_baselines(planner: &Planner, model: &ModelDef, plan: &ModelPlan) -> Vec<f64> {
     let engine = Engine::new(&planner.gpu);
     let mut dims = model.input;
@@ -307,7 +364,7 @@ fn live_baselines(planner: &Planner, model: &ModelDef, plan: &ModelPlan) -> Vec<
             .registry()
             .get(lp.scheme)
             .expect("planned scheme has a registered backend");
-        out.push(planner.cost_source().prior_layer_secs(
+        let raw = planner.cost_source().prior_layer_secs(
             backend,
             &engine,
             l,
@@ -315,8 +372,24 @@ fn live_baselines(planner: &Planner, model: &ModelDef, plan: &ModelPlan) -> Vec<
             plan.batch,
             planner.residual,
             model.residual_blocks > 0,
-        ));
+        );
+        let discount = planner.native_discount(
+            backend,
+            l,
+            dims.flat(),
+            plan.batch,
+            lp.in_layout,
+            raw,
+        );
+        out.push(raw - discount);
         dims = dims.after(l);
+    }
+    // explicit repack ops execute inside the consuming layer's timed
+    // region, so their (ratio-free) prior cost belongs in its baseline
+    for r in &plan.repacks {
+        if let Some(slot) = out.get_mut(r.layer) {
+            *slot += planner.cost_source().repack_secs(r.src, r.dst, r.bytes);
+        }
     }
     out
 }
@@ -347,6 +420,16 @@ impl BatchModel for EngineModel {
         let out = logits.to_vec();
         self.metrics
             .record_engine_batch(padded, t0.elapsed().as_secs_f64());
+        // surface the executor's explicit layout-repack counters —
+        // unconditionally, so a re-plan onto an edge-free plan resets
+        // the published snapshot instead of pinning the stale one
+        self.metrics.set_repacks(
+            self.exec
+                .repack_stats()
+                .into_iter()
+                .map(|(name, ops, bytes)| (name.to_string(), ops, bytes))
+                .collect(),
+        );
         self.maybe_replan();
         Ok(out)
     }
@@ -488,6 +571,7 @@ mod tests {
         let prior = Arc::new(CalibrationProfile {
             fingerprint: HostFingerprint::detect(BackendRegistry::global()),
             schemes: vec![("FASTPATH".to_string(), SchemeCoeffs::analytic())],
+            repacks: Vec::new(),
         });
         let live = Arc::new(LiveCosts::new());
         let planner = Planner::new(&RTX2080TI)
@@ -506,6 +590,115 @@ mod tests {
         // the executor fed the sink and the drift surfaced in metrics
         assert!(!em.metrics.cost_drift().is_empty());
         assert!(em.metrics.report().contains("drift["));
+    }
+
+    #[test]
+    fn fixed_fastpath_surfaces_repack_counters_when_edges_convert() {
+        // a fastpath-pinned MLP chains Blocked64 edges (no explicit
+        // conversions), so craft a model whose conv->FC boundary keeps
+        // the executor counting: pin the whole model to a GPU scheme
+        // but hand the classifier to the fastpath via a doctored plan
+        use crate::engine::EngineExecutor;
+        use crate::layout::LayoutKind;
+        let m = mnist_mlp();
+        let mut rng = Rng::new(91);
+        let w = random_weights(&m, &mut rng);
+        let planner = Planner::new(&RTX2080TI);
+        let mut plan = planner
+            .clone()
+            .with_layout_search(false)
+            .plan_fixed(&m, 8, Scheme::Sbnn32);
+        let last = plan.layers.len() - 1;
+        plan.layers[last].scheme = Scheme::Fastpath;
+        plan.layers[last].in_layout = LayoutKind::Blocked64;
+        let mut exec = EngineExecutor::new(m.clone(), &w, plan).unwrap();
+        let x: Vec<f32> = (0..8 * 784).map(|_| rng.next_f32() - 0.5).collect();
+        let _ = exec.forward(&x, 8);
+        let stats = exec.repack_stats();
+        assert_eq!(stats.len(), 1, "{stats:?}");
+        assert_eq!(stats[0].0, "FASTPATH");
+        assert_eq!(stats[0].1, 1, "one explicit edge per pass");
+        assert!(stats[0].2 > 0, "bytes counted");
+        let _ = exec.forward(&x, 8);
+        assert_eq!(exec.repack_stats()[0].1, 2, "counters accumulate");
+    }
+
+    #[test]
+    fn live_model_persists_converged_profile_and_restart_replans() {
+        // ROADMAP tuner follow-up: the live EWMA ratios are written
+        // back into the profile on clean shutdown (new content id), so
+        // cached plans priced under the stale prior miss immediately
+        use crate::kernels::backend::BackendRegistry;
+        use crate::tuner::{
+            CalibrationProfile, CostSource, HostFingerprint, LiveCosts, SchemeCoeffs,
+        };
+        let m = mnist_mlp();
+        let mut rng = Rng::new(93);
+        let w = random_weights(&m, &mut rng);
+        let prior = Arc::new(CalibrationProfile {
+            fingerprint: HostFingerprint::detect(BackendRegistry::global()),
+            schemes: vec![("FASTPATH".to_string(), SchemeCoeffs::analytic())],
+            repacks: Vec::new(),
+        });
+        let live = Arc::new(LiveCosts::new());
+        let planner = Planner::new(&RTX2080TI).with_cost_source(CostSource::Live {
+            prior: Arc::clone(&prior),
+            live: Arc::clone(&live),
+        });
+        let dir = std::env::temp_dir()
+            .join(format!("tcbnn_bm_live_persist_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = super::PlanCache::open(&dir).unwrap();
+        // pin to the fastpath so the (calibrated) scheme is the one
+        // executing — its measured/prior ratios are what converge
+        let mut em = EngineModel::builder(&planner, &m, &w)
+            .buckets(vec![8])
+            .policy(PlanPolicy::Fixed(Scheme::Fastpath))
+            .build()
+            .unwrap();
+        // seed a cached plan under the live prior's id
+        let live_plan = cache.get_or_plan(&planner, &m, 8);
+        assert_eq!(live_plan.cost_profile, planner.cost_profile_id());
+        let x: Vec<f32> = (0..8 * 784).map(|_| rng.next_f32() - 0.5).collect();
+        for _ in 0..4 {
+            let _ = em.run_batch(&x, 8).unwrap();
+        }
+        let converged = em.converged_profile().expect("fastpath samples recorded");
+        assert_ne!(converged.id(), prior.id(), "content id must bump");
+        let persisted = em.shutdown(&cache).unwrap().expect("profile persisted");
+        assert_eq!(persisted, converged.id());
+        let reloaded = CalibrationProfile::load(cache.profile_path()).unwrap();
+        assert_eq!(reloaded.id(), converged.id());
+        // a restarted process plans under the corrected profile: the
+        // old live-prior entry is stale, so the cache re-plans at once
+        let restarted = Planner::new(&RTX2080TI).with_cost_source(CostSource::Live {
+            prior: Arc::new(reloaded),
+            live: Arc::new(LiveCosts::new()),
+        });
+        let (h0, m0) = (cache.hits(), cache.misses());
+        let replanned = cache.get_or_plan(&restarted, &m, 8);
+        assert_eq!(cache.hits(), h0, "stale prior entry must not hit");
+        assert_eq!(cache.misses(), m0 + 1, "restart re-plans immediately");
+        assert_ne!(replanned.cost_profile, live_plan.cost_profile);
+    }
+
+    #[test]
+    fn non_live_models_have_nothing_to_persist() {
+        let m = mnist_mlp();
+        let mut rng = Rng::new(95);
+        let w = random_weights(&m, &mut rng);
+        let planner = Planner::new(&RTX2080TI);
+        let em = EngineModel::builder(&planner, &m, &w)
+            .buckets(vec![8])
+            .build()
+            .unwrap();
+        assert!(em.converged_profile().is_none());
+        let dir = std::env::temp_dir()
+            .join(format!("tcbnn_bm_nolive_persist_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = super::PlanCache::open(&dir).unwrap();
+        assert!(em.shutdown(&cache).unwrap().is_none());
+        assert!(!cache.profile_path().exists());
     }
 
     #[test]

@@ -24,6 +24,18 @@
 //! select the kernel); the CPU functional semantics of every scheme
 //! are identical, which is exactly what the kernels-equivalence tests
 //! guarantee.
+//!
+//! Since the layout co-design subsystem (`crate::layout`) the plan
+//! also carries explicit layout edges: flat FC activations may ride
+//! `Blocked64` u64 words (the fastpath's native operand form) through
+//! the arena's `flat64` buffer — packed directly by `pack_fc_ints64`
+//! on chained edges, or materialized by an explicit repack op
+//! (`layout::repack::rows32_to_rows64` / `rows64_to_rows32`) through
+//! pre-sized scratch when an edge's layouts disagree.  Every explicit
+//! repack is counted per scheme ([`EngineExecutor::repack_stats`]) and
+//! surfaced through coordinator `Metrics`.  Layout never changes a
+//! bit: the u64 packing is exactly the `bitops::pack64` pairing of the
+//! u32 words, asserted end to end in `rust/tests/layout_equivalence.rs`.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -33,9 +45,11 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::bitops::pack;
 use crate::kernels::backend::{BackendRegistry, ExecCtx, PreparedConv, PreparedFc};
 use crate::kernels::bconv::BconvProblem;
+use crate::layout::{repack, LayoutKind};
 use crate::nn::forward::{LayerWeights, ModelWeights};
 use crate::nn::layer::LayerSpec;
 use crate::nn::ModelDef;
+use crate::nn::Scheme;
 use crate::tuner::LiveCosts;
 use crate::util::threadpool::scoped_chunks;
 
@@ -77,6 +91,9 @@ enum Repr {
     Bits { hw: usize, c: usize },
     /// row-packed bits (batch x feat) in the current arena buffer
     Flat { feat: usize },
+    /// row-packed bits in `Blocked64` u64 words, living in the arena's
+    /// `flat64` buffer (a planned layout edge — see `crate::layout`)
+    Flat64 { feat: usize },
 }
 
 /// The arena executor.
@@ -96,6 +113,9 @@ pub struct EngineExecutor {
     /// under `CostSource::Live` MUST override with the ratio-free prior
     /// (`CostSource::prior_layer_secs`), or the EWMA feeds on itself.
     latency_baselines: Option<Vec<f64>>,
+    /// cumulative explicit repack ops materialized on layout edges,
+    /// keyed by the consuming layer's scheme: (scheme, ops, bytes)
+    repacks: Vec<(Scheme, u64, u64)>,
 }
 
 impl EngineExecutor {
@@ -141,9 +161,12 @@ impl EngineExecutor {
             bail!("model must end with a FinalFc classifier head");
         }
         let batch_cap = plan.batch;
+        validate_layouts(&model, &plan)?;
         let (prepared, scratch_words) =
             prepare_weights(&model, weights, &plan, registry, batch_cap)?;
-        let arena = Arena::for_model(&model, batch_cap).with_scratch_words(scratch_words);
+        let arena = Arena::for_model(&model, batch_cap)
+            .with_scratch_words(scratch_words)
+            .with_flat64_words(plan_flat64_words(&model, &plan, batch_cap));
         Ok(EngineExecutor {
             model,
             plan,
@@ -153,6 +176,7 @@ impl EngineExecutor {
             threads: crate::util::threadpool::default_threads(),
             latency_sink: None,
             latency_baselines: None,
+            repacks: Vec::new(),
         })
     }
 
@@ -210,6 +234,14 @@ impl EngineExecutor {
         self.arena.bytes()
     }
 
+    /// Cumulative explicit repack ops this executor has materialized on
+    /// planned layout edges: `(consuming layer's scheme name, ops,
+    /// streamed bytes)`.  Zero-cost chained edges (layouts already
+    /// agreeing) are not counted — nothing moved.
+    pub fn repack_stats(&self) -> Vec<(&'static str, u64, u64)> {
+        self.repacks.iter().map(|(s, c, b)| (s.name(), *c, *b)).collect()
+    }
+
     /// Run `batch` rows of fp32 input (NHWC for conv models, flat rows
     /// otherwise); returns the logits slice (batch x classes).
     pub fn forward(&mut self, input: &[f32], batch: usize) -> &[f32] {
@@ -223,6 +255,10 @@ impl EngineExecutor {
         let mut cur_in_a = true;
         let threads = self.threads;
         let n_layers = self.model.layers.len();
+        // explicit repack ops materialized this pass (merged into the
+        // cumulative per-scheme counters after the layer loop, when the
+        // arena borrows have ended)
+        let mut repack_log: Vec<(Scheme, u64)> = Vec::new();
         for li in 0..n_layers {
             let layer = self.model.layers[li].clone();
             // live-feedback timing covers only backend-dispatched layers
@@ -240,7 +276,8 @@ impl EngineExecutor {
                 .as_ref()
                 .map_or(self.plan.layers[li].secs, |b| b[li]);
             let pw = &self.prepared[li];
-            let Arena { bits_a, bits_b, ints, words64, logits } = &mut self.arena;
+            let Arena { bits_a, bits_b, ints, words64, flat64, logits } =
+                &mut self.arena;
             let (src, dst): (&mut Vec<u32>, &mut Vec<u32>) = if cur_in_a {
                 (bits_a, bits_b)
             } else {
@@ -367,56 +404,82 @@ impl EngineExecutor {
                     LayerSpec::BinFc { d_in, d_out },
                     PreparedLayer::BinFc { fc, thresh },
                 ) => {
-                    // 1. materialize row-packed input bits in `dst`
-                    let feat =
-                        flatten_into(input, repr, batch, src, dst, *d_in, threads);
-                    assert_eq!(feat, *d_in, "fc input width");
-                    // 2. backend dot pass into the i32 staging, then
-                    //    threshold back into `src`
+                    let in_l = self.plan.layers[li].in_layout;
+                    let out_l = self.plan.layers[li].out_layout;
                     let wpl_in = d_in.div_ceil(32);
                     let wpl_out = d_out.div_ceil(32);
+                    let w64_out = d_out.div_ceil(64);
                     let t = par_threads(threads, batch * d_out * wpl_in / 8);
-                    {
-                        let scratch = fc.scratch_words(batch);
-                        let mut ctx =
-                            ExecCtx { words64: &mut words64[..scratch], threads: t };
-                        fc.bmm(
-                            &dst[..batch * wpl_in],
-                            batch,
-                            &mut ints[..batch * d_out],
-                            &mut ctx,
-                        );
-                    }
-                    pack_fc_ints(
-                        &ints[..batch * d_out],
-                        &mut src[..batch * wpl_out],
-                        wpl_out,
+                    // 1. materialize the input in the planned layout and
+                    //    run the backend dot pass into the i32 staging
+                    let scratch = fc.scratch_words(batch);
+                    if let Some(bytes) = fc_input_and_dot(
+                        fc.as_ref(),
+                        in_l,
+                        repr,
+                        input,
+                        batch,
+                        *d_in,
+                        src,
+                        dst,
+                        flat64,
+                        &mut words64[..scratch],
+                        &mut ints[..batch * d_out],
                         t,
-                        *d_out,
-                        thresh,
-                    );
-                    repr = Repr::Flat { feat: *d_out };
-                    // two hops: result is back in the original buffer
+                        threads,
+                    ) {
+                        repack_log.push((plan_scheme, bytes));
+                    }
+                    // 2. threshold-pack into the planned output layout —
+                    //    the same comparison rule either way, so the bits
+                    //    are identical across layouts
+                    if out_l == LayoutKind::Blocked64 {
+                        pack_fc_ints64(
+                            &ints[..batch * d_out],
+                            &mut flat64[..batch * w64_out],
+                            w64_out,
+                            t,
+                            *d_out,
+                            thresh,
+                        );
+                        repr = Repr::Flat64 { feat: *d_out };
+                    } else {
+                        pack_fc_ints(
+                            &ints[..batch * d_out],
+                            &mut src[..batch * wpl_out],
+                            wpl_out,
+                            t,
+                            *d_out,
+                            thresh,
+                        );
+                        repr = Repr::Flat { feat: *d_out };
+                        // two hops: result is back in the original buffer
+                    }
                 }
                 (
                     LayerSpec::FinalFc { d_in, d_out },
                     PreparedLayer::FinalFc { fc, gamma, beta },
                 ) => {
-                    let feat =
-                        flatten_into(input, repr, batch, src, dst, *d_in, threads);
-                    assert_eq!(feat, *d_in, "classifier input width");
+                    let in_l = self.plan.layers[li].in_layout;
                     let wpl_in = d_in.div_ceil(32);
                     let t = par_threads(threads, batch * d_out * wpl_in / 8);
-                    {
-                        let scratch = fc.scratch_words(batch);
-                        let mut ctx =
-                            ExecCtx { words64: &mut words64[..scratch], threads: t };
-                        fc.bmm(
-                            &dst[..batch * wpl_in],
-                            batch,
-                            &mut ints[..batch * d_out],
-                            &mut ctx,
-                        );
+                    let scratch = fc.scratch_words(batch);
+                    if let Some(bytes) = fc_input_and_dot(
+                        fc.as_ref(),
+                        in_l,
+                        repr,
+                        input,
+                        batch,
+                        *d_in,
+                        src,
+                        dst,
+                        flat64,
+                        &mut words64[..scratch],
+                        &mut ints[..batch * d_out],
+                        t,
+                        threads,
+                    ) {
+                        repack_log.push((plan_scheme, bytes));
                     }
                     let seg = &ints[..batch * d_out];
                     scoped_chunks(&mut logits[..batch * d_out], *d_out, t, |ni, row| {
@@ -436,6 +499,15 @@ impl EngineExecutor {
                 sink.record(plan_scheme, predicted, t0.elapsed().as_secs_f64());
             }
         }
+        for (scheme, bytes) in repack_log {
+            match self.repacks.iter_mut().find(|(s, _, _)| *s == scheme) {
+                Some((_, ops, total)) => {
+                    *ops += 1;
+                    *total += bytes;
+                }
+                None => self.repacks.push((scheme, 1, bytes)),
+            }
+        }
         let classes = self.model.classes;
         &self.arena.logits[..batch * classes]
     }
@@ -448,6 +520,159 @@ fn par_threads(threads: usize, work_words: usize) -> usize {
     } else {
         threads
     }
+}
+
+/// The shared FC/classifier input ladder: materialize the planned
+/// input layout (zero-cost chained edge, explicit repack through the
+/// pre-sized `flat64` buffer, or a plain flatten) and run the
+/// backend's dot pass into `ints`.  Returns the streamed bytes of an
+/// explicit repack op when one was materialized (the caller counts it
+/// against the consuming layer's scheme).
+#[allow(clippy::too_many_arguments)]
+fn fc_input_and_dot(
+    fc: &dyn PreparedFc,
+    in_l: LayoutKind,
+    repr: Repr,
+    input: &[f32],
+    batch: usize,
+    d_in: usize,
+    src: &[u32],
+    dst: &mut [u32],
+    flat64: &mut [u64],
+    scratch: &mut [u64],
+    ints: &mut [i32],
+    t: usize,
+    threads: usize,
+) -> Option<u64> {
+    let wpl_in = d_in.div_ceil(32);
+    let w64_in = d_in.div_ceil(64);
+    let edge_bytes = (batch * (wpl_in * 4 + w64_in * 8)) as u64;
+    let mut repacked = None;
+    if in_l == LayoutKind::Blocked64 {
+        match repr {
+            Repr::Flat64 { feat } => {
+                // chained edge: the previous layer already packed
+                // Blocked64 — nothing moves
+                assert_eq!(feat, d_in, "fc input width");
+            }
+            Repr::Flat { feat } => {
+                // explicit planned repack op straight from the packed
+                // rows the previous layer left in `src` — no staging
+                // copy through `dst`
+                assert_eq!(feat, d_in, "fc input width");
+                repack::rows32_to_rows64(
+                    &src[..batch * wpl_in],
+                    wpl_in,
+                    &mut flat64[..batch * w64_in],
+                );
+                repacked = Some(edge_bytes);
+            }
+            _ => {
+                let feat = flatten_into(input, repr, batch, src, dst, d_in, threads);
+                assert_eq!(feat, d_in, "fc input width");
+                // explicit planned repack op, through the flat64 buffer
+                repack::rows32_to_rows64(
+                    &dst[..batch * wpl_in],
+                    wpl_in,
+                    &mut flat64[..batch * w64_in],
+                );
+                repacked = Some(edge_bytes);
+            }
+        }
+        let mut ctx = ExecCtx { words64: scratch, threads: t };
+        fc.bmm64(&flat64[..batch * w64_in], batch, ints, &mut ctx);
+    } else {
+        if let Repr::Flat64 { feat } = repr {
+            // explicit back-conversion for a Row32-native consumer of
+            // a Blocked64 activation
+            assert_eq!(feat, d_in, "fc input width");
+            repack::rows64_to_rows32(
+                &flat64[..batch * w64_in],
+                wpl_in,
+                &mut dst[..batch * wpl_in],
+            );
+            repacked = Some(edge_bytes);
+        } else {
+            let feat = flatten_into(input, repr, batch, src, dst, d_in, threads);
+            assert_eq!(feat, d_in, "fc input width");
+        }
+        let mut ctx = ExecCtx { words64: scratch, threads: t };
+        fc.bmm(&dst[..batch * wpl_in], batch, ints, &mut ctx);
+    }
+    repacked
+}
+
+/// Validate the plan's layout edges against what this executor can
+/// materialize: HWNC (conv/pool) activations are `Row32`-only, flat FC
+/// activations may ride `Row32` or `Blocked64`, and the classifier
+/// emits logits (`Row32` nominal).  Anything else is a plan from a
+/// foreign executor — rejected at build time, not mid-request.
+fn validate_layouts(model: &ModelDef, plan: &ModelPlan) -> Result<()> {
+    let mut prev_out = LayoutKind::Row32;
+    for (li, (l, lp)) in model.layers.iter().zip(&plan.layers).enumerate() {
+        let flat = matches!(l, LayerSpec::BinFc { .. } | LayerSpec::FinalFc { .. });
+        if !flat {
+            // HWNC layers can neither consume nor emit a non-Row32
+            // activation — and nothing upstream may hand them one (the
+            // executor has no flat64 -> HWNC conversion to materialize)
+            ensure!(
+                prev_out == LayoutKind::Row32,
+                "layer {li} ({}): HWNC layer cannot consume a {} activation",
+                lp.tag,
+                prev_out
+            );
+            ensure!(
+                lp.in_layout == LayoutKind::Row32 && lp.out_layout == LayoutKind::Row32,
+                "layer {li} ({}): HWNC layers are Row32-only, plan says {} -> {}",
+                lp.tag,
+                lp.in_layout,
+                lp.out_layout
+            );
+            prev_out = lp.out_layout;
+            continue;
+        }
+        ensure!(
+            matches!(lp.in_layout, LayoutKind::Row32 | LayoutKind::Blocked64),
+            "layer {li} ({}): unsupported planned input layout {}",
+            lp.tag,
+            lp.in_layout
+        );
+        let out_ok = match l {
+            LayerSpec::BinFc { .. } => {
+                matches!(lp.out_layout, LayoutKind::Row32 | LayoutKind::Blocked64)
+            }
+            _ => lp.out_layout == LayoutKind::Row32,
+        };
+        ensure!(
+            out_ok,
+            "layer {li} ({}): unsupported planned output layout {}",
+            lp.tag,
+            lp.out_layout
+        );
+        prev_out = lp.out_layout;
+    }
+    Ok(())
+}
+
+/// u64 words of `Blocked64` flat-activation buffer the plan's layout
+/// edges need at batch capacity (0 for all-`Row32` plans).
+fn plan_flat64_words(model: &ModelDef, plan: &ModelPlan, batch_cap: usize) -> usize {
+    let mut words = 0usize;
+    let mut prev_out = LayoutKind::Row32;
+    for (l, lp) in model.layers.iter().zip(&plan.layers) {
+        if let LayerSpec::BinFc { d_in, d_out } | LayerSpec::FinalFc { d_in, d_out } = l
+        {
+            if lp.in_layout == LayoutKind::Blocked64 || prev_out == LayoutKind::Blocked64
+            {
+                words = words.max(batch_cap * d_in.div_ceil(64));
+            }
+            if lp.out_layout == LayoutKind::Blocked64 {
+                words = words.max(batch_cap * d_out.div_ceil(64));
+            }
+        }
+        prev_out = lp.out_layout;
+    }
+    words
 }
 
 /// Convert `nn::forward::ModelWeights` into execution state: validate
@@ -534,6 +759,12 @@ fn prepare_weights(
                 let fc = backend(plan.layers[li].scheme)?
                     .prepare_fc(w)
                     .map_err(|e| anyhow!("layer {li}: {e}"))?;
+                ensure!(
+                    fc.supports_input_layout(plan.layers[li].in_layout),
+                    "layer {li}: backend {} cannot execute planned input layout {}",
+                    plan.layers[li].scheme.name(),
+                    plan.layers[li].in_layout
+                );
                 scratch_words = scratch_words.max(fc.scratch_words(batch_cap));
                 PreparedLayer::BinFc { fc, thresh: thresh.clone() }
             }
@@ -552,6 +783,12 @@ fn prepare_weights(
                 let fc = backend(plan.layers[li].scheme)?
                     .prepare_fc(w)
                     .map_err(|e| anyhow!("layer {li}: {e}"))?;
+                ensure!(
+                    fc.supports_input_layout(plan.layers[li].in_layout),
+                    "layer {li}: backend {} cannot execute planned input layout {}",
+                    plan.layers[li].scheme.name(),
+                    plan.layers[li].in_layout
+                );
                 scratch_words = scratch_words.max(fc.scratch_words(batch_cap));
                 PreparedLayer::FinalFc {
                     fc,
@@ -788,7 +1025,39 @@ fn flatten_into(
             dst[..batch * wpl].copy_from_slice(&src[..batch * wpl]);
             feat
         }
+        // Blocked64 activations are converted by the caller through the
+        // explicit repack path, never flattened here
+        Repr::Flat64 { .. } => unreachable!("Flat64 repacks through layout::repack"),
     }
+}
+
+/// Threshold + pack FC dots straight into `Blocked64` u64 rows — the
+/// layout-chained twin of [`pack_fc_ints`].  Bit `j` lands at u64 word
+/// `j/64`, bit `j%64`: exactly the `bitops::pack64` pairing of the u32
+/// packing, so a chained consumer sees bit-identical activations.
+fn pack_fc_ints64(
+    ints: &[i32],
+    dst: &mut [u64],
+    wpl64_out: usize,
+    threads: usize,
+    d_out: usize,
+    thresh: &[f32],
+) {
+    scoped_chunks(dst, wpl64_out, threads, |ni, row| {
+        for (wo, out) in row.iter_mut().enumerate() {
+            let mut word = 0u64;
+            for bit in 0..64 {
+                let j = wo * 64 + bit;
+                if j >= d_out {
+                    break;
+                }
+                if (ints[ni * d_out + j] as f32) >= thresh[j] {
+                    word |= 1 << bit;
+                }
+            }
+            *out = word;
+        }
+    });
 }
 
 /// Threshold + repack FC dots into packed output rows — bitwise the

@@ -5,15 +5,21 @@
 //! the `kernels::backend::KernelBackend` providers, the calibrated
 //! Turing cost model, the coordinator) into a servable engine:
 //!
-//! * `planner` — for a `ModelDef` and batch bucket, asks every backend
-//!   in a `BackendRegistry` for its `layer_secs` cost face — the six
-//!   Tables-6/7 rows plus the host `FASTPATH` backend, or any custom
-//!   registration — and picks the cheapest per layer, emitting an
-//!   executable [`plan::ModelPlan`].  This is the paper's central
-//!   lesson operationalized: scheme and data-format choice is a
-//!   per-layer-shape decision, not a global one.  `Planner::plan_fixed`
-//!   pins one scheme everywhere (how a GPU-less host serves
-//!   `kernels::fastpath`).
+//! * `planner` — for a `ModelDef` and batch bucket, runs a dynamic
+//!   program over per-layer (scheme, layout) pairs: every backend in a
+//!   `BackendRegistry` contributes its `layer_secs` cost face — the
+//!   six Tables-6/7 rows plus the host `FASTPATH` backend, or any
+//!   custom registration — plus its layout face
+//!   (`preferred_input_layout`), and edges whose activation layouts
+//!   disagree are charged a modeled repack cost
+//!   (`tuner::CostSource::repack_secs` over `crate::layout`).  This is
+//!   the paper's central lesson operationalized: scheme AND
+//!   data-format choice is a per-layer-shape decision, not a global
+//!   one.  `Planner::plan_fixed` pins one scheme everywhere (how a
+//!   GPU-less host serves `kernels::fastpath` — with its FC layers
+//!   chained in `Blocked64`); `Planner::with_layout_search(false)`
+//!   keeps the historical scheme-only search as the DP's regression
+//!   baseline.
 //! * `plan` / `plan_cache` — plans serialize to JSON (schema-versioned,
 //!   embedding the searched scheme set and the cost-profile id they
 //!   were ranked under) and persist in a directory cache keyed by
@@ -57,7 +63,7 @@ pub mod weights;
 pub use arena::Arena;
 pub use batch_model::{EngineModel, EngineModelBuilder, PlanPolicy};
 pub use executor::EngineExecutor;
-pub use plan::{LayerPlan, ModelPlan, PLAN_SCHEMA};
+pub use plan::{LayerPlan, ModelPlan, PlanRepack, PLAN_SCHEMA};
 pub use plan_cache::PlanCache;
 pub use planner::Planner;
 pub use weights::{weights_from_blob, weights_to_blob};

@@ -3,6 +3,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::layout::LayoutKind;
 use crate::nn::Scheme;
 
 use super::json::Value;
@@ -20,10 +21,15 @@ use super::json::Value;
 /// (`"analytic"`, a calibration-profile digest, or `"live:<digest>"`),
 /// so a plan cached under one calibration is detectably stale once the
 /// active profile changes.
-pub const PLAN_SCHEMA: usize = 3;
+///
+/// v4: the layout co-design subsystem — every layer carries explicit
+/// layout edges (`in_layout` / `out_layout`) and the plan lists the
+/// explicit repack ops the executor must materialize (`repacks`), so
+/// v3 plans (which never chose layouts) are detectably stale.
+pub const PLAN_SCHEMA: usize = 4;
 
-/// One layer's planned execution: the winning scheme and its simulated
-/// cost on the plan's GPU.
+/// One layer's planned execution: the winning scheme, the activation
+/// layout edges around it, and its simulated cost on the plan's GPU.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LayerPlan {
     /// index into `ModelDef::layers`
@@ -33,7 +39,31 @@ pub struct LayerPlan {
     pub tag: String,
     /// the scheme the planner selected for this layer
     pub scheme: Scheme,
-    /// simulated compute seconds (excl. per-layer sync)
+    /// the activation layout this layer consumes (one endpoint of the
+    /// incoming layout edge; when it differs from the previous layer's
+    /// `out_layout` the executor materializes an explicit repack op)
+    pub in_layout: LayoutKind,
+    /// the layout the executor packs this layer's thresholded output
+    /// into (`Row32` unless a `Blocked64` chain pays off)
+    pub out_layout: LayoutKind,
+    /// simulated compute seconds (excl. per-layer sync and edge
+    /// repacks; includes the native-layout discount when `in_layout`
+    /// is the backend's preferred form)
+    pub secs: f64,
+}
+
+/// One explicit repack op the executor materializes through arena
+/// scratch: converts the activation entering `layer` from `src` to
+/// `dst` layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanRepack {
+    /// index of the consuming layer (the conversion runs just before it)
+    pub layer: usize,
+    pub src: LayoutKind,
+    pub dst: LayoutKind,
+    /// streamed bytes (source image + destination image)
+    pub bytes: usize,
+    /// modeled conversion seconds (already included in `total_secs`)
     pub secs: f64,
 }
 
@@ -58,8 +88,12 @@ pub struct ModelPlan {
     /// winners were ranked by different costs.
     pub cost_profile: String,
     pub layers: Vec<LayerPlan>,
-    /// simulated end-to-end seconds (launch + per-layer compute + sync),
-    /// directly comparable to `nn::cost::model_cost(...).total_secs`
+    /// explicit layout conversions along layer edges (empty when every
+    /// edge's layouts already agree)
+    pub repacks: Vec<PlanRepack>,
+    /// simulated end-to-end seconds (launch + per-layer compute + sync
+    /// + edge repacks), directly comparable to
+    /// `nn::cost::model_cost(...).total_secs`
     pub total_secs: f64,
 }
 
@@ -97,7 +131,28 @@ impl ModelPlan {
                         "scheme".to_string(),
                         Value::Str(l.scheme.name().to_string()),
                     ),
+                    (
+                        "in_layout".to_string(),
+                        Value::Str(l.in_layout.name().to_string()),
+                    ),
+                    (
+                        "out_layout".to_string(),
+                        Value::Str(l.out_layout.name().to_string()),
+                    ),
                     ("secs".to_string(), Value::Num(l.secs)),
+                ])
+            })
+            .collect();
+        let repacks: Vec<Value> = self
+            .repacks
+            .iter()
+            .map(|r| {
+                Value::Obj(vec![
+                    ("layer".to_string(), Value::Num(r.layer as f64)),
+                    ("src".to_string(), Value::Str(r.src.name().to_string())),
+                    ("dst".to_string(), Value::Str(r.dst.name().to_string())),
+                    ("bytes".to_string(), Value::Num(r.bytes as f64)),
+                    ("secs".to_string(), Value::Num(r.secs)),
                 ])
             })
             .collect();
@@ -120,6 +175,7 @@ impl ModelPlan {
             ),
             ("total_secs".to_string(), Value::Num(self.total_secs)),
             ("layers".to_string(), Value::Arr(layers)),
+            ("repacks".to_string(), Value::Arr(repacks)),
         ])
         .to_string()
     }
@@ -175,6 +231,14 @@ impl ModelPlan {
                 .with_context(|| format!("layer {i} scheme"))?;
             let scheme = Scheme::from_name(scheme_name)
                 .map_err(|e| anyhow::anyhow!("layer {i}: {e}"))?;
+            let layout_field = |key: &str| -> Result<LayoutKind> {
+                let name = lv
+                    .get(key)
+                    .and_then(Value::as_str)
+                    .with_context(|| format!("layer {i} {key}"))?;
+                LayoutKind::from_name(name)
+                    .map_err(|e| anyhow::anyhow!("layer {i}: {e}"))
+            };
             layers.push(LayerPlan {
                 index: lv
                     .get("index")
@@ -186,10 +250,45 @@ impl ModelPlan {
                     .with_context(|| format!("layer {i} tag"))?
                     .to_string(),
                 scheme,
+                in_layout: layout_field("in_layout")?,
+                out_layout: layout_field("out_layout")?,
                 secs: lv
                     .get("secs")
                     .and_then(Value::as_f64)
                     .with_context(|| format!("layer {i} secs"))?,
+            });
+        }
+        let mut repacks = Vec::new();
+        for (i, rv) in v
+            .get("repacks")
+            .and_then(Value::as_arr)
+            .context("plan field \"repacks\"")?
+            .iter()
+            .enumerate()
+        {
+            let layout_field = |key: &str| -> Result<LayoutKind> {
+                let name = rv
+                    .get(key)
+                    .and_then(Value::as_str)
+                    .with_context(|| format!("repack {i} {key}"))?;
+                LayoutKind::from_name(name)
+                    .map_err(|e| anyhow::anyhow!("repack {i}: {e}"))
+            };
+            repacks.push(PlanRepack {
+                layer: rv
+                    .get("layer")
+                    .and_then(Value::as_usize)
+                    .with_context(|| format!("repack {i} layer"))?,
+                src: layout_field("src")?,
+                dst: layout_field("dst")?,
+                bytes: rv
+                    .get("bytes")
+                    .and_then(Value::as_usize)
+                    .with_context(|| format!("repack {i} bytes"))?,
+                secs: rv
+                    .get("secs")
+                    .and_then(Value::as_f64)
+                    .with_context(|| format!("repack {i} secs"))?,
             });
         }
         Ok(ModelPlan {
@@ -201,6 +300,7 @@ impl ModelPlan {
             scheme_set,
             cost_profile: str_field("cost_profile")?,
             layers,
+            repacks,
             total_secs: v
                 .get("total_secs")
                 .and_then(Value::as_f64)
@@ -239,15 +339,26 @@ mod tests {
                     index: 0,
                     tag: "1024FC".to_string(),
                     scheme: Scheme::BtcFmt,
+                    in_layout: LayoutKind::Row32,
+                    out_layout: LayoutKind::Row32,
                     secs: 1.25e-5,
                 },
                 LayerPlan {
                     index: 1,
                     tag: "10out".to_string(),
-                    scheme: Scheme::Sbnn64Fine,
+                    scheme: Scheme::Fastpath,
+                    in_layout: LayoutKind::Blocked64,
+                    out_layout: LayoutKind::Row32,
                     secs: 3.0e-6,
                 },
             ],
+            repacks: vec![PlanRepack {
+                layer: 1,
+                src: LayoutKind::Row32,
+                dst: LayoutKind::Blocked64,
+                bytes: 8192,
+                secs: 3.1e-6,
+            }],
             total_secs: 2.05e-5,
         }
     }
@@ -271,16 +382,48 @@ mod tests {
     fn rejects_other_schema_versions() {
         let text = sample()
             .to_json()
-            .replace("\"schema\":3", "\"schema\":2");
-        assert!(ModelPlan::from_json(&text).is_err());
+            .replace("\"schema\":4", "\"schema\":3");
+        assert!(ModelPlan::from_json(&text).is_err(), "v3 documents are stale");
         // a pre-versioning document (no schema field at all) also fails
-        let legacy = sample().to_json().replace("\"schema\":3,", "");
+        let legacy = sample().to_json().replace("\"schema\":4,", "");
         assert!(ModelPlan::from_json(&legacy).is_err());
-        // a v2 document (no cost_profile field) is also unreadable
-        let v2 = sample()
+        // a v3 document (no cost_profile-era layout edges) is unreadable:
+        // claiming schema 4 without layout fields fails the parse
+        let no_layouts = sample()
             .to_json()
-            .replace("\"cost_profile\":\"analytic\",", "");
-        assert!(ModelPlan::from_json(&v2).is_err());
+            .replace("\"in_layout\":\"Row32\",", "")
+            .replace("\"in_layout\":\"Blocked64\",", "");
+        assert!(ModelPlan::from_json(&no_layouts).is_err());
+        // ... and so does a document without the repacks list
+        let no_repacks = {
+            let p = sample().to_json();
+            let start = p.find(",\"repacks\":").unwrap();
+            let mut depth = 0usize;
+            let bytes = p.as_bytes();
+            let mut end = start;
+            for (off, &b) in bytes.iter().enumerate().skip(start) {
+                match b {
+                    b'[' => depth += 1,
+                    b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = off + 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            format!("{}{}", &p[..start], &p[end..])
+        };
+        assert!(ModelPlan::from_json(&no_repacks).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_layout_names() {
+        let text = sample().to_json().replace("Blocked64", "Blocked128");
+        let err = ModelPlan::from_json(&text).unwrap_err();
+        assert!(format!("{err:#}").contains("valid layouts"), "{err:#}");
     }
 
     #[test]
@@ -294,6 +437,6 @@ mod tests {
     #[test]
     fn histogram_counts() {
         let h = sample().scheme_histogram();
-        assert_eq!(h, vec![("BTC-FMT", 1), ("SBNN-64-Fine", 1)]);
+        assert_eq!(h, vec![("BTC-FMT", 1), ("FASTPATH", 1)]);
     }
 }

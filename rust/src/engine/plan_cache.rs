@@ -243,8 +243,10 @@ mod tests {
         let planner = Planner::new(&RTX2080TI);
         let m = mnist_mlp();
         let p = cache.get_or_plan(&planner, &m, 8);
-        // rewrite the entry claiming an older document version
-        let old = p.to_json().replace("\"schema\":3", "\"schema\":2");
+        // rewrite the entry claiming an older document version — a v3
+        // (pre-layout) plan never chose layout edges, so it must be a
+        // miss even if everything else matches
+        let old = p.to_json().replace("\"schema\":4", "\"schema\":3");
         std::fs::write(cache.entry_path(&p.model, 8, &p.gpu), old).unwrap();
         assert!(cache.get(&p.model, 8, &p.gpu).is_none());
         let healed = cache.get_or_plan(&planner, &m, 8);
@@ -288,6 +290,7 @@ mod tests {
                 crate::kernels::backend::BackendRegistry::global(),
             ),
             schemes: vec![("FASTPATH".to_string(), SchemeCoeffs::analytic())],
+            repacks: Vec::new(),
         });
         let calibrated = Planner::new(&RTX2080TI)
             .with_cost_source(CostSource::Calibrated(Arc::clone(&profile)));

@@ -1,30 +1,54 @@
-//! The planner: per-layer scheme selection driven by the backends'
-//! cost faces.
+//! The planner: a dynamic program over per-layer (scheme, layout)
+//! pairs, driven by the backends' cost faces plus a modeled repack
+//! cost along layer edges.
 //!
 //! For every layer of a `ModelDef` (at a given batch bucket) the
 //! planner asks its [`CostSource`] for each registered backend's
 //! per-layer seconds — by default the backends' own `layer_secs` cost
-//! faces, the exact same face `nn::cost::model_cost` sums — and
-//! selects the cheapest.  Ties resolve to the first-registered backend
-//! (the builtin registry registers in `Scheme::all()` order), so
-//! planning is fully deterministic.  A backend registered at runtime
-//! joins the search automatically — no planner changes needed.
+//! faces, the exact same face `nn::cost::model_cost` sums.  Since the
+//! layout co-design subsystem (`crate::layout`) the search is no
+//! longer independent per layer: each candidate also picks the
+//! activation layout it consumes (`Row32`, or the backend's preferred
+//! native form) and the layout the executor packs its output into,
+//! and the DP charges [`CostSource::repack_secs`] on every edge whose
+//! layouts disagree.  Feeding a backend its native layout earns a
+//! *discount* (the internal conversion its analytic cost face already
+//! prices goes away), so chains of same-native-layout layers — e.g.
+//! consecutive fastpath FC layers exchanging `Blocked64` activations —
+//! genuinely beat the all-`Row32` plan, while an isolated native edge
+//! ties with `Row32` and loses the deterministic tie-break.
+//!
+//! By construction the DP never predicts a plan worse than the
+//! scheme-only search ([`Planner::with_layout_search`]`(false)`, the
+//! pre-layout behavior): the all-`Row32` path is always in its search
+//! space at exactly the old cost.
+//!
+//! Ties resolve to the earliest (prev-layout, backend, in-layout,
+//! out-layout) candidate in iteration order — prev layouts and layout
+//! options in `LayoutKind::all()` order, backends in registration
+//! order — so planning is fully deterministic.  A backend registered
+//! at runtime joins the search automatically, and its layout face
+//! ([`crate::kernels::backend::KernelBackend::preferred_input_layout`])
+//! widens the DP with no planner changes.
 //!
 //! [`Planner::with_cost_source`] swaps the analytic faces for a fitted
 //! per-host [`CalibrationProfile`](crate::tuner::CalibrationProfile)
 //! (`CostSource::Calibrated`) or the live executor-fed blend
 //! (`CostSource::Live`); every emitted plan records the source's
 //! `profile_id` so the plan cache can invalidate entries planned under
-//! a different calibration.
+//! a different calibration.  Calibrated profiles price repack edges
+//! from measured per-pair bandwidth (`CalibrationProfile::repacks`).
 
 use std::sync::Arc;
 
-use crate::kernels::backend::BackendRegistry;
+use crate::kernels::backend::{BackendRegistry, KernelBackend};
+use crate::layout::{LayoutDesc, LayoutKind};
+use crate::nn::layer::LayerSpec;
 use crate::nn::{ModelDef, ResidualMode, Scheme};
 use crate::sim::{Engine, GpuModel};
 use crate::tuner::CostSource;
 
-use super::plan::{LayerPlan, ModelPlan};
+use super::plan::{LayerPlan, ModelPlan, PlanRepack};
 
 /// Planner configuration: the target GPU plus the same knobs
 /// `model_cost` exposes, searching over a backend registry.
@@ -35,6 +59,26 @@ pub struct Planner {
     pub layer_sync: bool,
     registry: Arc<BackendRegistry>,
     cost: CostSource,
+    /// search (scheme, layout) pairs (default); `false` restricts the
+    /// DP to all-`Row32` edges — exactly the pre-layout scheme-only
+    /// planner, kept for comparison and for the regression guarantee.
+    layout_search: bool,
+}
+
+/// One DP transition choice, recorded per layer for reconstruction.
+#[derive(Clone, Copy)]
+struct Choice {
+    scheme: Scheme,
+    in_layout: LayoutKind,
+    out_layout: LayoutKind,
+    /// compute seconds (incl. native-layout discount)
+    secs: f64,
+    /// layout the previous state handed over
+    edge_from: LayoutKind,
+    /// modeled seconds of the edge conversion (0 when layouts agree)
+    edge_secs: f64,
+    /// streamed bytes of the edge conversion
+    edge_bytes: usize,
 }
 
 impl Planner {
@@ -54,6 +98,7 @@ impl Planner {
             layer_sync: true,
             registry,
             cost: CostSource::Analytic,
+            layout_search: true,
         }
     }
 
@@ -63,6 +108,20 @@ impl Planner {
     pub fn with_cost_source(mut self, cost: CostSource) -> Planner {
         self.cost = cost;
         self
+    }
+
+    /// Toggle the layout dimension of the search (default on).  With
+    /// `false` the planner degenerates to the scheme-only per-layer
+    /// search over all-`Row32` edges — byte-identical plans to the
+    /// pre-layout planner, useful as the DP's regression baseline.
+    pub fn with_layout_search(mut self, on: bool) -> Planner {
+        self.layout_search = on;
+        self
+    }
+
+    /// Whether the (scheme, layout) DP is enabled.
+    pub fn layout_search(&self) -> bool {
+        self.layout_search
     }
 
     /// The cost source this planner queries.
@@ -93,7 +152,8 @@ impl Planner {
         self.registry.names().iter().map(|s| s.to_string()).collect()
     }
 
-    /// The cheapest scheme for one layer, with its simulated seconds.
+    /// The cheapest scheme for one layer in isolation (all-`Row32`
+    /// edges), with its simulated seconds — the scheme-only view.
     /// `dims` is the layer's input dims (walk them with `Dims::after`).
     pub fn best_scheme(
         &self,
@@ -124,19 +184,86 @@ impl Planner {
         (best.expect("planner registry must not be empty"), best_secs)
     }
 
-    /// Plan a whole model at one batch bucket (per-layer search).
+    /// Plan a whole model at one batch bucket: the (scheme, layout) DP.
     pub fn plan(&self, model: &ModelDef, batch: usize) -> ModelPlan {
         self.plan_with(model, batch, None)
     }
 
-    /// Plan with every layer pinned to `scheme` (no per-layer search).
-    /// This is how a host without a Turing GPU serves the blocked-u64
-    /// backend: `plan_fixed(model, batch, Scheme::Fastpath)` routes the
-    /// whole model through `kernels::fastpath` in the executor.
+    /// Plan with every layer pinned to `scheme` (the layout DP still
+    /// runs within that scheme).  This is how a host without a Turing
+    /// GPU serves the blocked-u64 backend:
+    /// `plan_fixed(model, batch, Scheme::Fastpath)` routes the whole
+    /// model through `kernels::fastpath` in the executor — chaining
+    /// consecutive FC layers in `Blocked64`.
     ///
     /// Panics if `scheme` has no backend in this planner's registry.
     pub fn plan_fixed(&self, model: &ModelDef, batch: usize, scheme: Scheme) -> ModelPlan {
         self.plan_with(model, batch, Some(scheme))
+    }
+
+    /// The input layouts a backend may consume for `layer` (native
+    /// form last so `Row32` wins exact ties deterministically).  Only
+    /// flat (FC) activations have a layout choice — HWNC conv/pool
+    /// buffers are `Row32` by executor construction.
+    fn input_options(&self, b: &dyn KernelBackend, layer: &LayerSpec) -> Vec<LayoutKind> {
+        let mut v = vec![LayoutKind::Row32];
+        if self.layout_search
+            && matches!(layer, LayerSpec::BinFc { .. } | LayerSpec::FinalFc { .. })
+        {
+            let pref = b.preferred_input_layout(layer);
+            if pref != LayoutKind::Row32 {
+                v.push(pref);
+            }
+        }
+        v
+    }
+
+    /// The output layouts the executor can pack `layer`'s result into
+    /// under `b`.  Only `BinFc` produces a packed flat activation with
+    /// a choice; everything else (HWNC buffers, the classifier's
+    /// logits) is `Row32` by construction.
+    fn output_options(&self, b: &dyn KernelBackend, layer: &LayerSpec) -> Vec<LayoutKind> {
+        let mut v = vec![LayoutKind::Row32];
+        if self.layout_search && matches!(layer, LayerSpec::BinFc { .. }) {
+            let out = b.output_layout(layer);
+            if out != LayoutKind::Row32 {
+                v.push(out);
+            }
+        }
+        v
+    }
+
+    /// Streamed bytes of converting the flat activation entering
+    /// `layer` (batch rows of `d_in` bits) from `src` to `dst`.
+    fn edge_bytes(src: LayoutKind, dst: LayoutKind, batch: usize, d_in: usize) -> usize {
+        LayoutDesc::new(src, batch, d_in).storage_bytes()
+            + LayoutDesc::new(dst, batch, d_in).storage_bytes()
+    }
+
+    /// The native-layout discount the DP grants for feeding `b` its
+    /// preferred (non-`Row32`) form: the internal `Row32 -> native`
+    /// conversion its cost face prices goes away, capped so a
+    /// discounted layer always keeps most of its compute cost.  Zero
+    /// for `Row32` or non-preferred layouts.  Shared with
+    /// `EngineModel`'s live baselines so chained layers are not
+    /// misread as cost drift.
+    pub fn native_discount(
+        &self,
+        b: &dyn KernelBackend,
+        layer: &LayerSpec,
+        d_in_bits: usize,
+        batch: usize,
+        in_layout: LayoutKind,
+        raw_secs: f64,
+    ) -> f64 {
+        if in_layout == LayoutKind::Row32 || in_layout != b.preferred_input_layout(layer)
+        {
+            return 0.0;
+        }
+        let bytes = Planner::edge_bytes(LayoutKind::Row32, in_layout, batch, d_in_bits);
+        self.cost
+            .repack_secs(LayoutKind::Row32, in_layout, bytes)
+            .min(raw_secs * 0.9)
     }
 
     fn plan_with(&self, model: &ModelDef, batch: usize, force: Option<Scheme>) -> ModelPlan {
@@ -151,30 +278,139 @@ impl Planner {
         } else {
             0.0
         };
+        let kinds = LayoutKind::all();
+        // dp[k] = cheapest (total secs, choice path) reaching an
+        // activation in layout k after the layers processed so far.
+        // One fused kernel launch, same accounting as model_cost.
+        let mut dp: Vec<Option<(f64, Vec<Choice>)>> = vec![None; kinds.len()];
+        dp[LayoutKind::Row32.index()] = Some((self.gpu.launch_overhead_s, Vec::new()));
+        // candidate (scheme, in-layout, discounted secs, outs) rows —
+        // none of this depends on the previous DP state, so the cost
+        // faces are queried once per backend per layer, not once per
+        // prev-layout.  The discount removes the internal Row32 ->
+        // native conversion the cost face prices when the backend is
+        // fed its preferred form directly.
+        struct Candidate {
+            scheme: Scheme,
+            in_layout: LayoutKind,
+            secs: f64,
+            outs: Vec<LayoutKind>,
+        }
         let mut dims = model.input;
-        let mut layers = Vec::with_capacity(model.layers.len());
-        // one fused kernel launch, same accounting as model_cost
-        let mut total = self.gpu.launch_overhead_s;
-        for (i, l) in model.layers.iter().enumerate() {
-            let (scheme, secs) = match &forced {
-                Some(b) => (
-                    b.scheme(),
-                    self.cost.layer_secs(
-                        *b,
-                        &engine,
-                        l,
-                        dims,
-                        batch,
-                        self.residual,
-                        model.residual_blocks > 0,
-                    ),
-                ),
-                None => self.best_scheme(&engine, model, i, dims, batch),
+        for l in &model.layers {
+            let mut next: Vec<Option<(f64, Vec<Choice>)>> = vec![None; kinds.len()];
+            let backends: Vec<&dyn KernelBackend> = match &forced {
+                Some(b) => vec![*b],
+                None => self.registry.backends().collect(),
             };
-            total += secs + sync_secs;
-            layers.push(LayerPlan { index: i, tag: l.tag(), scheme, secs });
+            let d_in_bits = dims.flat();
+            let mut candidates: Vec<Candidate> = Vec::new();
+            for b in &backends {
+                let raw = self.cost.layer_secs(
+                    *b,
+                    &engine,
+                    l,
+                    dims,
+                    batch,
+                    self.residual,
+                    model.residual_blocks > 0,
+                );
+                let outs = self.output_options(*b, l);
+                for in_layout in self.input_options(*b, l) {
+                    let secs =
+                        raw - self.native_discount(*b, l, d_in_bits, batch, in_layout, raw);
+                    candidates.push(Candidate {
+                        scheme: b.scheme(),
+                        in_layout,
+                        secs,
+                        outs: outs.clone(),
+                    });
+                }
+            }
+            for prev_kind in kinds {
+                let Some((prev_total, prev_path)) = dp[prev_kind.index()].as_ref()
+                else {
+                    continue;
+                };
+                for c in &candidates {
+                    let (edge_secs, edge_bytes) = if c.in_layout == prev_kind {
+                        (0.0, 0)
+                    } else {
+                        let bytes =
+                            Planner::edge_bytes(prev_kind, c.in_layout, batch, d_in_bits);
+                        (self.cost.repack_secs(prev_kind, c.in_layout, bytes), bytes)
+                    };
+                    for &out_layout in &c.outs {
+                        let total = prev_total + edge_secs + c.secs + sync_secs;
+                        let slot = &mut next[out_layout.index()];
+                        // strictly-better-with-margin: an exact tie
+                        // (e.g. edge repack cancelling the native
+                        // discount to the last ulp) must go to the
+                        // earlier candidate deterministically.  The
+                        // multiplicative form stays NaN-free when the
+                        // held total is infinite (a rejected shape), so
+                        // a finite candidate replaces it.
+                        let better = match slot {
+                            None => true,
+                            Some((t, _)) => total * (1.0 + 1e-12) < *t,
+                        };
+                        if better {
+                            let mut path = prev_path.clone();
+                            path.push(Choice {
+                                scheme: c.scheme,
+                                in_layout: c.in_layout,
+                                out_layout,
+                                secs: c.secs,
+                                edge_from: prev_kind,
+                                edge_secs,
+                                edge_bytes,
+                            });
+                            *slot = Some((total, path));
+                        }
+                    }
+                }
+            }
+            dp = next;
             dims = dims.after(l);
         }
+        // best end state; iterate in LayoutKind order with a strict <
+        // so ties resolve to the earliest kind (Row32 first)
+        let mut best: Option<(f64, Vec<Choice>)> = None;
+        for state in dp.into_iter().flatten() {
+            let better = match &best {
+                None => true,
+                Some((t, _)) => state.0 * (1.0 + 1e-12) < *t,
+            };
+            if better {
+                best = Some(state);
+            }
+        }
+        let (total, path) =
+            best.expect("planner registry must not be empty (no DP state survived)");
+        let layers: Vec<LayerPlan> = path
+            .iter()
+            .enumerate()
+            .map(|(i, c)| LayerPlan {
+                index: i,
+                tag: model.layers[i].tag(),
+                scheme: c.scheme,
+                in_layout: c.in_layout,
+                out_layout: c.out_layout,
+                secs: c.secs,
+            })
+            .collect();
+        let repacks: Vec<PlanRepack> = path
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.edge_from != c.in_layout)
+            .map(|(i, c)| PlanRepack {
+                layer: i,
+                src: c.edge_from,
+                dst: c.in_layout,
+                bytes: c.edge_bytes,
+                secs: c.edge_secs,
+            })
+            .collect();
         ModelPlan {
             model: model.name.to_string(),
             dataset: model.dataset.to_string(),
@@ -184,6 +420,7 @@ impl Planner {
             scheme_set: self.scheme_names(),
             cost_profile: self.cost.profile_id(),
             layers,
+            repacks,
             total_secs: total,
         }
     }
@@ -217,7 +454,7 @@ mod tests {
     #[test]
     fn planned_total_never_beats_best_fixed_scheme_by_construction() {
         // the per-layer optimum is at most the best whole-model fixed
-        // scheme (it can only improve by mixing)
+        // scheme (it can only improve by mixing and layout-chaining)
         let p = Planner::new(&RTX2080TI);
         for m in all_models() {
             let plan = p.plan(&m, 8);
@@ -235,6 +472,51 @@ mod tests {
                 plan.total_secs,
                 best_fixed
             );
+        }
+    }
+
+    #[test]
+    fn layout_dp_never_predicts_worse_than_scheme_only() {
+        // the all-Row32 path is always in the DP's search space at the
+        // old scheme-only cost, so the DP total can only be <=
+        let dp = Planner::new(&RTX2080TI);
+        let scheme_only = Planner::new(&RTX2080TI).with_layout_search(false);
+        for m in all_models() {
+            for batch in [8usize, 128] {
+                let a = dp.plan(&m, batch);
+                let b = scheme_only.plan(&m, batch);
+                assert!(
+                    a.total_secs <= b.total_secs * (1.0 + 1e-12),
+                    "{} b{batch}: DP {} vs scheme-only {}",
+                    m.name,
+                    a.total_secs,
+                    b.total_secs
+                );
+                // the scheme-only plan has no layout edges or repacks
+                assert!(b.repacks.is_empty());
+                for lp in &b.layers {
+                    assert_eq!(lp.in_layout, LayoutKind::Row32);
+                    assert_eq!(lp.out_layout, LayoutKind::Row32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scheme_only_planner_matches_the_per_layer_brute_force() {
+        // with the layout dimension off, the DP degenerates to the
+        // historical independent per-layer argmin over layer_secs
+        let p = Planner::new(&RTX2080TI).with_layout_search(false);
+        let engine = Engine::new(&RTX2080TI);
+        for m in all_models() {
+            let plan = p.plan(&m, 8);
+            let mut dims = m.input;
+            for (li, l) in m.layers.iter().enumerate() {
+                let (want, want_secs) = p.best_scheme(&engine, &m, li, dims, 8);
+                assert_eq!(plan.layers[li].scheme, want, "{} layer {li}", m.name);
+                assert!((plan.layers[li].secs - want_secs).abs() <= 1e-18);
+                dims = dims.after(l);
+            }
         }
     }
 
@@ -261,6 +543,38 @@ mod tests {
     }
 
     #[test]
+    fn fixed_fastpath_chains_consecutive_fc_layers_in_blocked64() {
+        // the MLP is all FC: a fastpath-pinned plan must hand every
+        // layer after the first its native Blocked64 form over
+        // zero-cost edges, beating the Row32-only fixed plan strictly
+        let p = Planner::new(&RTX2080TI);
+        let m = mnist_mlp();
+        let plan = p.plan_fixed(&m, 8, Scheme::Fastpath);
+        for (i, lp) in plan.layers.iter().enumerate() {
+            if i == 0 {
+                // first layer consumes the freshly binarized Row32 rows
+                assert_eq!(lp.in_layout, LayoutKind::Row32, "{}", lp.tag);
+            } else {
+                assert_eq!(lp.in_layout, LayoutKind::Blocked64, "{}", lp.tag);
+            }
+            if i + 1 < plan.layers.len() {
+                assert_eq!(lp.out_layout, LayoutKind::Blocked64, "{}", lp.tag);
+            }
+        }
+        // chained edges already agree — no explicit repack ops needed
+        assert!(plan.repacks.is_empty(), "{:?}", plan.repacks);
+        let row32 = Planner::new(&RTX2080TI)
+            .with_layout_search(false)
+            .plan_fixed(&m, 8, Scheme::Fastpath);
+        assert!(
+            plan.total_secs < row32.total_secs,
+            "chained {} vs row32 {}",
+            plan.total_secs,
+            row32.total_secs
+        );
+    }
+
+    #[test]
     fn default_plans_record_the_analytic_cost_profile() {
         let p = Planner::new(&RTX2080TI);
         assert_eq!(p.cost_profile_id(), crate::tuner::ANALYTIC_PROFILE_ID);
@@ -277,6 +591,7 @@ mod tests {
         let profile = Arc::new(CalibrationProfile {
             fingerprint: HostFingerprint::detect(&reg),
             schemes: vec![("FASTPATH".to_string(), SchemeCoeffs::analytic())],
+            repacks: Vec::new(),
         });
         let p = Planner::with_registry(&RTX2080TI, Arc::clone(&reg))
             .with_cost_source(CostSource::Calibrated(Arc::clone(&profile)));

@@ -42,6 +42,7 @@ use anyhow::Result;
 
 use crate::bitops::{BitMatrix, BitTensor4};
 use crate::kernels::bconv::BconvProblem;
+use crate::layout::LayoutKind;
 use crate::nn::cost::{ResidualMode, Scheme};
 use crate::nn::layer::{Dims, LayerSpec};
 use crate::sim::{Engine, KernelTrace};
@@ -70,6 +71,23 @@ pub trait PreparedFc: Send + Sync {
         0
     }
 
+    /// The activation layout this handle consumes *natively* — with no
+    /// internal conversion.  The planner prices feeding any other
+    /// layout as an (implicit or explicit) repack; the executor feeds
+    /// whatever the plan's layout edge says, validated against
+    /// [`PreparedFc::supports_input_layout`] at build time.
+    fn input_layout(&self) -> LayoutKind {
+        LayoutKind::Row32
+    }
+
+    /// The input layouts this handle can execute from.  `Row32` is the
+    /// universal default every backend must accept; a handle that
+    /// also executes its native form directly (see
+    /// [`PreparedFc::bmm64`]) additionally reports it here.
+    fn supports_input_layout(&self, layout: LayoutKind) -> bool {
+        layout == LayoutKind::Row32
+    }
+
     /// Eq-2 dots of every (input row, weight row) pair:
     /// `ints[bi * d_out + j] = dot(src row bi, weight row j)`.
     ///
@@ -78,6 +96,20 @@ pub trait PreparedFc: Send + Sync {
     /// exactly `batch * d_out`.  Exact integer arithmetic: every
     /// backend produces bit-identical values.
     fn bmm(&self, src: &[u32], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>);
+
+    /// [`PreparedFc::bmm`] from a pre-repacked `Blocked64` input:
+    /// `src64` holds `batch` lines of `ceil(d_in/64)` u64 words each
+    /// (the `bitops::pack64` pairing of the `Row32` rows).  Only
+    /// called when `supports_input_layout(Blocked64)` — the executor
+    /// validates that at build time, so the default is unreachable for
+    /// `Row32`-only backends.
+    fn bmm64(&self, src64: &[u64], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let _ = (src64, batch, ints, ctx);
+        unreachable!(
+            "backend does not execute Blocked64 input; \
+             override supports_input_layout + bmm64 together"
+        );
+    }
 }
 
 /// Opaque prepared weights for one binarized conv layer.
@@ -87,6 +119,21 @@ pub trait PreparedConv: Send + Sync {
     fn scratch_words(&self, p: BconvProblem) -> usize {
         let _ = p;
         0
+    }
+
+    /// The HWNC activation layout this handle consumes.  Conv inputs
+    /// are `Row32` for every current backend (the fastpath's staged
+    /// im2row image is built *inside* the kernel from `Row32` words —
+    /// its `Im2rowStaged` staging layout is reported through the
+    /// backend's cost face, not consumed across a layer edge).
+    fn input_layout(&self) -> LayoutKind {
+        LayoutKind::Row32
+    }
+
+    /// The input layouts this handle can execute from (`Row32` only
+    /// for every current conv implementation).
+    fn supports_input_layout(&self, layout: LayoutKind) -> bool {
+        layout == LayoutKind::Row32
     }
 
     /// Exclude-amended Eq-2 cross-correlation (the paper's bit-padding
@@ -107,6 +154,35 @@ pub trait KernelBackend: Send + Sync {
     /// Registry/reporting name (defaults to the scheme name).
     fn name(&self) -> &'static str {
         self.scheme().name()
+    }
+
+    /// The activation layout this backend natively consumes for
+    /// `layer` — the planning-time face of the prepared handles'
+    /// `input_layout` (queried before any weights exist).  The planner
+    /// prices feeding any other layout as a repack, and prefers edges
+    /// that hand the backend its native form.  Default: `Row32`, the
+    /// universal format every backend accepts.
+    ///
+    /// CONTRACT: declaring a non-`Row32` preference commits this
+    /// backend's prepared handles to executing it — the planner emits
+    /// layout edges from this answer alone, and the executor then
+    /// validates `PreparedFc::supports_input_layout` at build time and
+    /// errors on a mismatch.  Override the two together (as the
+    /// fastpath does), or override neither.
+    fn preferred_input_layout(&self, layer: &LayerSpec) -> LayoutKind {
+        let _ = layer;
+        LayoutKind::Row32
+    }
+
+    /// The activation layout this backend's layers chain *from* most
+    /// cheaply — i.e. the layout the executor should pack `layer`'s
+    /// thresholded output into when the next layer runs on this
+    /// backend too.  Default `Row32`; the fastpath returns `Blocked64`
+    /// for FC layers so consecutive fastpath FC layers skip the u32
+    /// round-trip entirely.
+    fn output_layout(&self, layer: &LayerSpec) -> LayoutKind {
+        let _ = layer;
+        LayoutKind::Row32
     }
 
     /// Prepare a binarized FC weight matrix (`d_out x d_in` row-major
@@ -259,6 +335,31 @@ mod tests {
             BackendRegistry::global().names(),
             BackendRegistry::builtin().names()
         );
+    }
+
+    #[test]
+    fn layout_face_defaults_to_row32_except_fastpath_fc() {
+        let fc = LayerSpec::BinFc { d_in: 512, d_out: 512 };
+        let conv = LayerSpec::BinConv {
+            c: 64,
+            o: 64,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            pool: false,
+            residual: false,
+        };
+        for b in BackendRegistry::builtin().backends() {
+            let want_fc = if b.scheme() == Scheme::Fastpath {
+                LayoutKind::Blocked64
+            } else {
+                LayoutKind::Row32
+            };
+            assert_eq!(b.preferred_input_layout(&fc), want_fc, "{}", b.name());
+            assert_eq!(b.output_layout(&fc), want_fc, "{}", b.name());
+            // conv activations stay Row32 everywhere
+            assert_eq!(b.preferred_input_layout(&conv), LayoutKind::Row32);
+        }
     }
 
     #[test]

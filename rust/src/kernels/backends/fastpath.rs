@@ -11,6 +11,7 @@ use crate::bitops::{BitMatrix, BitTensor4};
 use crate::kernels::backend::{ExecCtx, KernelBackend, PreparedConv, PreparedFc};
 use crate::kernels::bconv::BconvProblem;
 use crate::kernels::fastpath::{self, FastConvFilter};
+use crate::layout::LayoutKind;
 use crate::nn::cost::{ResidualMode, Scheme};
 use crate::nn::layer::{Dims, LayerSpec};
 use crate::sim::{Engine, KernelTrace};
@@ -45,6 +46,17 @@ impl PreparedFc for FastpathFc {
         batch * self.w64.words_per_line
     }
 
+    /// Native operand form: u64 lines.  Fed `Blocked64` directly (a
+    /// planned layout edge), `bmm64` skips the per-call u32 -> u64
+    /// repack below entirely.
+    fn input_layout(&self) -> LayoutKind {
+        LayoutKind::Blocked64
+    }
+
+    fn supports_input_layout(&self, layout: LayoutKind) -> bool {
+        matches!(layout, LayoutKind::Row32 | LayoutKind::Blocked64)
+    }
+
     fn bmm(&self, src: &[u32], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
         let d_in = self.w64.cols;
         let d_out = self.w64.rows;
@@ -61,6 +73,27 @@ impl PreparedFc for FastpathFc {
         }
         fastpath::bmm::dot_lines(
             rows,
+            &self.w64.data,
+            w64in,
+            batch,
+            d_out,
+            d_in,
+            ints,
+            ctx.threads,
+        );
+    }
+
+    /// The native-layout path: the caller (an executor materializing a
+    /// planned `Blocked64` edge) already holds the u64 input image, so
+    /// the blocked BMM runs with no conversion and no scratch.
+    fn bmm64(&self, src64: &[u64], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let d_in = self.w64.cols;
+        let d_out = self.w64.rows;
+        let w64in = self.w64.words_per_line;
+        assert!(src64.len() >= batch * w64in, "u64 input row buffer size");
+        assert_eq!(ints.len(), batch * d_out, "dot staging size");
+        fastpath::bmm::dot_lines(
+            &src64[..batch * w64in],
             &self.w64.data,
             w64in,
             batch,
@@ -156,6 +189,27 @@ fn fastpath_layer_secs(
 impl KernelBackend for FastpathBackend {
     fn scheme(&self) -> Scheme {
         Scheme::Fastpath
+    }
+
+    /// FC layers natively consume `Blocked64` (the u64 operand form
+    /// the blocked BMM runs on); conv layers consume `Row32` HWNC
+    /// words and stage their own `Im2rowStaged` image internally.
+    fn preferred_input_layout(&self, layer: &LayerSpec) -> LayoutKind {
+        match layer {
+            LayerSpec::BinFc { .. } | LayerSpec::FinalFc { .. } => LayoutKind::Blocked64,
+            _ => LayoutKind::Row32,
+        }
+    }
+
+    /// Chain FC activations in `Blocked64`: when the next layer is
+    /// also fastpath the executor packs thresholded bits straight into
+    /// u64 words and no conversion happens on the edge at all.
+    /// (`FinalFc` emits real-valued logits — no packed output layout.)
+    fn output_layout(&self, layer: &LayerSpec) -> LayoutKind {
+        match layer {
+            LayerSpec::BinFc { .. } => LayoutKind::Blocked64,
+            _ => LayoutKind::Row32,
+        }
     }
 
     fn prepare_fc(&self, w: &BitMatrix) -> Result<Box<dyn PreparedFc>> {

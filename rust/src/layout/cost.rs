@@ -1,0 +1,70 @@
+//! The analytic repack cost model — what `CostSource::Analytic` (and
+//! every calibrated source, as its fallback) answers for a layout edge.
+//!
+//! A repack is pure streaming: read the source image, write the
+//! destination image, plus one dispatch for the parallel section.  The
+//! word-pairing conversions (`Row32 <-> Blocked64/Im2rowStaged`) run at
+//! the host's streaming bandwidth; anything touching the FSB tile
+//! order is an index-mapped word copy with a strided access pattern,
+//! priced at a conservative fraction of it.  The tuner replaces these
+//! constants with measured per-pair bandwidth
+//! (`CalibrationProfile::repacks`, profile schema v2) on calibrated
+//! hosts.
+
+use crate::nn::cost::host;
+
+use super::LayoutKind;
+
+/// Bandwidth derating for conversions through the FSB tile order
+/// (index-mapped strided word copies vs straight-line streaming).
+pub const FSB_DERATE: f64 = 4.0;
+
+/// Analytic seconds to convert `bytes` of total traffic (source bytes
+/// + destination bytes) from `src` to `dst`.  Zero for the identity.
+pub fn analytic_repack_secs(src: LayoutKind, dst: LayoutKind, bytes: usize) -> f64 {
+    if src == dst {
+        return 0.0;
+    }
+    let tiled = |k: LayoutKind| k == LayoutKind::Fsb;
+    let rate = if tiled(src) || tiled(dst) {
+        host::BYTES_PER_SEC / FSB_DERATE
+    } else {
+        host::BYTES_PER_SEC
+    };
+    bytes as f64 / rate + host::DISPATCH_SECS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_free_and_edges_cost_dispatch_plus_bytes() {
+        assert_eq!(
+            analytic_repack_secs(LayoutKind::Row32, LayoutKind::Row32, 1 << 20),
+            0.0
+        );
+        let s = analytic_repack_secs(LayoutKind::Row32, LayoutKind::Blocked64, 0);
+        assert_eq!(s, host::DISPATCH_SECS);
+        let big = analytic_repack_secs(LayoutKind::Row32, LayoutKind::Blocked64, 1 << 30);
+        assert!(big > s);
+    }
+
+    #[test]
+    fn fsb_conversions_are_derated() {
+        let plain =
+            analytic_repack_secs(LayoutKind::Row32, LayoutKind::Blocked64, 1 << 20);
+        let tiled = analytic_repack_secs(LayoutKind::Row32, LayoutKind::Fsb, 1 << 20);
+        assert!(tiled > plain);
+    }
+
+    #[test]
+    fn monotone_in_bytes_for_every_pair() {
+        for (s, d) in super::super::repack::all_pairs() {
+            let a = analytic_repack_secs(s, d, 1024);
+            let b = analytic_repack_secs(s, d, 1 << 22);
+            assert!(b > a, "{s}->{d}");
+            assert!(a.is_finite() && a > 0.0);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Tensor-layout co-design: first-class bit-tensor layouts, explicit
+//! repack conversions, and the cost face the planner prices them with.
+//!
+//! The paper's central characterization finding is that "the stride of
+//! memory access can significantly affect performance delivery and a
+//! data-format co-design is highly desired" (§4): the FSB format of
+//! §5.1 exists purely to pin the WMMA stride at 128, and the host
+//! fastpath repacks everything into u64 lines for the same reason.
+//! Before this module those conversions happened *implicitly* — u32
+//! activation rows repacked to u64 inside every fastpath `bmm` call,
+//! FSB images normalized on entry — with zero cost attribution, so the
+//! planner optimized compute while silently paying un-modeled
+//! conversion time between layers (PhoneBit's layout-aware operator
+//! chaining is the same lesson on ARM hosts).
+//!
+//! This module makes layout a planned quantity:
+//!
+//! * [`LayoutKind`] — the closed set of packed-bit layouts the stack
+//!   speaks: `Row32` (sequential u32 lines, the CUDA-facing general
+//!   format), `Blocked64` (u32 word pairs fused into u64 lines, the
+//!   host fastpath operand form), `Fsb` (the paper's fixed-stride
+//!   8x128 tile format), and `Im2rowStaged` (u64 lines padded to
+//!   128-bit stride boundaries — the alignment the fastpath's staged
+//!   bit-im2row image uses).
+//! * [`LayoutDesc`] — the concrete shape of one layout instance
+//!   (lines x bits): word width, words per line / total words,
+//!   alignment, storage bytes.  This is what repack costs are priced
+//!   from.
+//! * [`repack`] — exact, word-level converters between every ordered
+//!   pair of kinds (the generalization of `bitops::pack64` into a
+//!   registry), plus the hot-path row helpers the executor uses to
+//!   materialize explicit repack ops through arena scratch.
+//! * [`cost`] — the analytic repack bandwidth model
+//!   (`CostSource::Analytic`'s answer for a layout edge); the tuner
+//!   microbenches real conversion bandwidth per pair and fits it into
+//!   the `CalibrationProfile` (schema v2), so `Calibrated`/`Live`
+//!   sources price conversions from measurement.
+//!
+//! The planner's per-layer search is now a small dynamic program over
+//! (scheme, layout) pairs: plans embed explicit layout edges and
+//! repack ops (`PLAN_SCHEMA` v4), and the arena executor materializes
+//! them — see `docs/ENGINE.md` ("Layouts & repack").
+
+pub mod cost;
+pub mod repack;
+
+pub use repack::{BitImage, Words};
+
+use std::fmt;
+
+/// The packed-bit layouts the stack can plan, execute, and convert
+/// between.  Order is significant: planner tie-breaks prefer the
+/// earliest kind, so `Row32` (the universal default every backend
+/// accepts) comes first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayoutKind {
+    /// Sequential u32-packed lines (LSB-first) — the general format of
+    /// `bitops::BitMatrix` / the executor's activation buffers.
+    Row32,
+    /// u32 word pairs fused into u64 words per line
+    /// (`bitops::pack64::BitMatrix64`) — the host fastpath operand
+    /// form; element order is unchanged, only the word width doubles.
+    Blocked64,
+    /// The paper's Fixed-Stride-Bit format (§5.1): (8 x 128)-bit tiles
+    /// stored contiguously so every WMMA load uses `ldm = 128`.
+    Fsb,
+    /// u64 lines padded to 128-bit stride boundaries — the alignment
+    /// the fastpath's staged bit-im2row image uses (`tap_words`
+    /// padding), exposed as a first-class layout so staging buffers
+    /// are priceable like any other conversion target.
+    Im2rowStaged,
+}
+
+impl LayoutKind {
+    /// Every kind, in planner tie-break order.
+    pub fn all() -> [LayoutKind; 4] {
+        [
+            LayoutKind::Row32,
+            LayoutKind::Blocked64,
+            LayoutKind::Fsb,
+            LayoutKind::Im2rowStaged,
+        ]
+    }
+
+    /// Stable name (plan JSON v4, profile repack keys, bench entries).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayoutKind::Row32 => "Row32",
+            LayoutKind::Blocked64 => "Blocked64",
+            LayoutKind::Fsb => "Fsb",
+            LayoutKind::Im2rowStaged => "Im2rowStaged",
+        }
+    }
+
+    /// Inverse of [`LayoutKind::name`] (case-insensitive; unknown names
+    /// error with the full valid list, mirroring `Scheme::from_name`).
+    pub fn from_name(s: &str) -> Result<LayoutKind, UnknownLayout> {
+        LayoutKind::all()
+            .into_iter()
+            .find(|k| k.name().eq_ignore_ascii_case(s))
+            .ok_or_else(|| UnknownLayout(s.to_string()))
+    }
+
+    /// Width of one packed word in bits.
+    pub fn word_bits(&self) -> usize {
+        match self {
+            LayoutKind::Row32 | LayoutKind::Fsb => 32,
+            LayoutKind::Blocked64 | LayoutKind::Im2rowStaged => 64,
+        }
+    }
+
+    /// Required alignment of one line (or tile row) in bits — the
+    /// stride unit the layout was designed around.
+    pub fn align_bits(&self) -> usize {
+        match self {
+            LayoutKind::Row32 => 32,
+            LayoutKind::Blocked64 => 64,
+            // FSB tiles and the im2row staging both fix a 128-bit stride
+            LayoutKind::Fsb | LayoutKind::Im2rowStaged => 128,
+        }
+    }
+
+    /// The index of this kind in [`LayoutKind::all`] (planner DP slot).
+    pub fn index(&self) -> usize {
+        LayoutKind::all()
+            .iter()
+            .position(|k| k == self)
+            .expect("every kind is in all()")
+    }
+}
+
+impl fmt::Display for LayoutKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Error from [`LayoutKind::from_name`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownLayout(pub String);
+
+impl fmt::Display for UnknownLayout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown layout {:?}; valid layouts: {}",
+            self.0,
+            LayoutKind::all().map(|k| k.name()).join(", ")
+        )
+    }
+}
+
+impl std::error::Error for UnknownLayout {}
+
+/// The concrete shape of one layout instance: a logical `lines x bits`
+/// bit tensor stored under `kind`.  Pad bits (beyond `bits` in a line,
+/// beyond `lines` in an FSB tile column) are 0 by invariant — Eq 2
+/// ignores them by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayoutDesc {
+    pub kind: LayoutKind,
+    /// major extent (packed lines / activation rows)
+    pub lines: usize,
+    /// logical bits per line
+    pub bits: usize,
+}
+
+impl LayoutDesc {
+    pub fn new(kind: LayoutKind, lines: usize, bits: usize) -> LayoutDesc {
+        LayoutDesc { kind, lines, bits }
+    }
+
+    /// Packed words per line for the line-contiguous kinds; for `Fsb`
+    /// this is the words of one tile *row band* (tiles_x * TILE_WORDS —
+    /// 8 logical lines share it, so prefer [`LayoutDesc::total_words`]
+    /// for sizing).
+    pub fn words_per_line(&self) -> usize {
+        match self.kind {
+            LayoutKind::Row32 => self.bits.div_ceil(32),
+            LayoutKind::Blocked64 => self.bits.div_ceil(64),
+            // full 128-bit (2-word) stride units per line
+            LayoutKind::Im2rowStaged => self.bits.div_ceil(128) * 2,
+            LayoutKind::Fsb => {
+                self.bits.div_ceil(crate::bitops::fsb::BW)
+                    * crate::bitops::fsb::TILE_WORDS
+            }
+        }
+    }
+
+    /// Total packed words of the image (u32 words for 32-bit kinds,
+    /// u64 words for 64-bit kinds).
+    pub fn total_words(&self) -> usize {
+        match self.kind {
+            LayoutKind::Fsb => {
+                let ty = self.lines.div_ceil(crate::bitops::fsb::BH);
+                let tx = self.bits.div_ceil(crate::bitops::fsb::BW);
+                ty * tx * crate::bitops::fsb::TILE_WORDS
+            }
+            _ => self.lines * self.words_per_line(),
+        }
+    }
+
+    /// Bytes of packed storage — the quantity repack costs stream.
+    pub fn storage_bytes(&self) -> usize {
+        self.total_words() * self.kind.word_bits() / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for k in LayoutKind::all() {
+            assert_eq!(LayoutKind::from_name(k.name()).unwrap(), k);
+            assert_eq!(LayoutKind::from_name(&k.name().to_lowercase()).unwrap(), k);
+        }
+        let err = LayoutKind::from_name("Col13").unwrap_err();
+        assert!(err.to_string().contains("valid layouts"), "{err}");
+        assert!(err.to_string().contains("Blocked64"), "{err}");
+    }
+
+    #[test]
+    fn order_puts_row32_first() {
+        assert_eq!(LayoutKind::all()[0], LayoutKind::Row32);
+        for (i, k) in LayoutKind::all().into_iter().enumerate() {
+            assert_eq!(k.index(), i);
+        }
+    }
+
+    #[test]
+    fn desc_sizes_match_the_concrete_formats() {
+        // Row32 == BitMatrix row-major, Blocked64 == BitMatrix64
+        let d32 = LayoutDesc::new(LayoutKind::Row32, 5, 70);
+        assert_eq!(d32.words_per_line(), 3);
+        assert_eq!(d32.total_words(), 15);
+        assert_eq!(d32.storage_bytes(), 60);
+        let d64 = LayoutDesc::new(LayoutKind::Blocked64, 5, 70);
+        assert_eq!(d64.words_per_line(), 2);
+        assert_eq!(d64.storage_bytes(), 80);
+        // Fsb == FsbMatrix: 10x200 pads to 2x2 tiles of 32 words
+        let df = LayoutDesc::new(LayoutKind::Fsb, 10, 200);
+        assert_eq!(df.total_words(), 2 * 2 * crate::bitops::fsb::TILE_WORDS);
+        assert_eq!(df.storage_bytes(), 512);
+        // Im2rowStaged: 70 bits -> one 128-bit unit = 2 u64 words/line
+        let ds = LayoutDesc::new(LayoutKind::Im2rowStaged, 5, 70);
+        assert_eq!(ds.words_per_line(), 2);
+        assert_eq!(ds.storage_bytes(), 80);
+        // 129 bits -> two units = 4 words
+        assert_eq!(
+            LayoutDesc::new(LayoutKind::Im2rowStaged, 1, 129).words_per_line(),
+            4
+        );
+    }
+
+    #[test]
+    fn alignment_and_word_width() {
+        assert_eq!(LayoutKind::Row32.word_bits(), 32);
+        assert_eq!(LayoutKind::Blocked64.word_bits(), 64);
+        assert_eq!(LayoutKind::Fsb.align_bits(), 128);
+        assert_eq!(LayoutKind::Im2rowStaged.align_bits(), 128);
+    }
+}

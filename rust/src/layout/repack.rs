@@ -1,0 +1,414 @@
+//! Exact repack conversions between every pair of [`LayoutKind`]s —
+//! the generalization of `bitops::pack64`'s u32↔u64 pairing into a
+//! registry of converters.
+//!
+//! All conversions are word-level (pairing, splitting, or index-mapped
+//! word copies — never per-bit loops on the common paths) and exact:
+//! converting an image to any kind and back reproduces it bit for bit,
+//! and pad bits stay 0 everywhere so Eq 2 is unaffected by any chain
+//! of conversions (property-tested here and in
+//! `rust/tests/bitops_prop.rs`).
+//!
+//! Non-adjacent pairs (e.g. `Blocked64 -> Fsb`) compose through the
+//! `Row32` hub — the sequential general format every other layout is
+//! defined against — so the registry covers every ordered pair in
+//! [`all_pairs`] with two word-level passes at most.  The executor's
+//! hot path uses the row-slice helpers ([`rows32_to_rows64`] /
+//! [`rows64_to_rows32`]) directly over arena scratch, with no
+//! allocation.
+
+use crate::bitops::fsb::{BH, BW, TILE_ROW_WORDS, TILE_WORDS};
+use crate::bitops::pack64::{repack64_into, unpack64_into, words64};
+
+use super::{LayoutDesc, LayoutKind};
+
+/// Packed storage of one image: u32 words for the 32-bit kinds, u64
+/// words for the 64-bit kinds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Words {
+    W32(Vec<u32>),
+    W64(Vec<u64>),
+}
+
+impl Words {
+    /// The u32 view (panics on a 64-bit image).
+    pub fn as_w32(&self) -> &[u32] {
+        match self {
+            Words::W32(v) => v,
+            Words::W64(_) => panic!("expected a 32-bit word image"),
+        }
+    }
+
+    /// The u64 view (panics on a 32-bit image).
+    pub fn as_w64(&self) -> &[u64] {
+        match self {
+            Words::W64(v) => v,
+            Words::W32(_) => panic!("expected a 64-bit word image"),
+        }
+    }
+}
+
+/// One packed bit image: a logical `lines x bits` tensor stored under
+/// a concrete [`LayoutKind`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitImage {
+    pub desc: LayoutDesc,
+    pub words: Words,
+}
+
+impl BitImage {
+    /// Wrap sequential u32 lines (the `BitMatrix` row-major / arena
+    /// activation form) as a `Row32` image.  Pad bits of each tail
+    /// word are masked to 0 to uphold the layout invariant.
+    pub fn from_rows32(lines: usize, bits: usize, mut data: Vec<u32>) -> BitImage {
+        let desc = LayoutDesc::new(LayoutKind::Row32, lines, bits);
+        assert_eq!(data.len(), desc.total_words(), "row32 payload size");
+        let wpl = desc.words_per_line();
+        let rem = bits % 32;
+        if rem != 0 {
+            let mask = (1u32 << rem) - 1;
+            for l in 0..lines {
+                data[l * wpl + wpl - 1] &= mask;
+            }
+        }
+        BitImage { desc, words: Words::W32(data) }
+    }
+
+    /// Logical bit `(line, bit)` — per-kind index math, used by tests
+    /// to cross-check the word-level converters.
+    pub fn get_bit(&self, line: usize, bit: usize) -> bool {
+        debug_assert!(line < self.desc.lines && bit < self.desc.bits);
+        match (&self.words, self.desc.kind) {
+            (Words::W32(v), LayoutKind::Row32) => {
+                let wpl = self.desc.words_per_line();
+                (v[line * wpl + bit / 32] >> (bit % 32)) & 1 == 1
+            }
+            (Words::W64(v), LayoutKind::Blocked64) => {
+                let wpl = self.desc.words_per_line();
+                (v[line * wpl + bit / 64] >> (bit % 64)) & 1 == 1
+            }
+            (Words::W64(v), LayoutKind::Im2rowStaged) => {
+                let wpl = self.desc.words_per_line();
+                (v[line * wpl + bit / 64] >> (bit % 64)) & 1 == 1
+            }
+            (Words::W32(v), LayoutKind::Fsb) => {
+                let tiles_x = self.desc.bits.div_ceil(BW);
+                let (ty, ry) = (line / BH, line % BH);
+                let (tx, cx) = (bit / BW, bit % BW);
+                let idx = (ty * tiles_x + tx) * TILE_WORDS
+                    + ry * TILE_ROW_WORDS
+                    + cx / 32;
+                (v[idx] >> (cx % 32)) & 1 == 1
+            }
+            _ => unreachable!("word width always matches the kind"),
+        }
+    }
+}
+
+/// Every ordered (src, dst) pair of distinct layout kinds, in
+/// `LayoutKind::all()` order — the converter registry's key set.  The
+/// tuner microbenches each pair and the `tuner` bin fails if the
+/// emitted profile is missing coefficients for any of them, so a new
+/// `LayoutKind` variant automatically widens the required coverage.
+pub fn all_pairs() -> Vec<(LayoutKind, LayoutKind)> {
+    let mut out = Vec::new();
+    for src in LayoutKind::all() {
+        for dst in LayoutKind::all() {
+            if src != dst {
+                out.push((src, dst));
+            }
+        }
+    }
+    out
+}
+
+/// Stable key of one conversion direction (`"Row32->Blocked64"`) —
+/// used by `CalibrationProfile` repack entries and bench names.
+pub fn pair_name(src: LayoutKind, dst: LayoutKind) -> String {
+    format!("{}->{}", src.name(), dst.name())
+}
+
+/// Convert an image to `dst` (identity conversions clone).  Exact:
+/// `convert(&convert(&img, k), img.desc.kind) == img` for every kind.
+pub fn convert(src: &BitImage, dst: LayoutKind) -> BitImage {
+    if src.desc.kind == dst {
+        return src.clone();
+    }
+    match src.desc.kind {
+        LayoutKind::Row32 => from_row32(src, dst),
+        _ => {
+            let hub = to_row32(src);
+            if dst == LayoutKind::Row32 {
+                hub
+            } else {
+                from_row32(&hub, dst)
+            }
+        }
+    }
+}
+
+fn from_row32(src: &BitImage, dst: LayoutKind) -> BitImage {
+    debug_assert_eq!(src.desc.kind, LayoutKind::Row32);
+    let (lines, bits) = (src.desc.lines, src.desc.bits);
+    let wpl32 = src.desc.words_per_line();
+    let data = src.words.as_w32();
+    let ddesc = LayoutDesc::new(dst, lines, bits);
+    match dst {
+        LayoutKind::Blocked64 => {
+            let wpl64 = ddesc.words_per_line();
+            let mut out = vec![0u64; ddesc.total_words()];
+            for l in 0..lines {
+                repack64_into(
+                    &data[l * wpl32..(l + 1) * wpl32],
+                    &mut out[l * wpl64..(l + 1) * wpl64],
+                );
+            }
+            BitImage { desc: ddesc, words: Words::W64(out) }
+        }
+        LayoutKind::Im2rowStaged => {
+            // same u64 pairing, but each line is padded to a whole
+            // number of 128-bit stride units (trailing words stay 0)
+            let stride = ddesc.words_per_line();
+            let used = words64(wpl32);
+            let mut out = vec![0u64; ddesc.total_words()];
+            for l in 0..lines {
+                repack64_into(
+                    &data[l * wpl32..(l + 1) * wpl32],
+                    &mut out[l * stride..l * stride + used],
+                );
+            }
+            BitImage { desc: ddesc, words: Words::W64(out) }
+        }
+        LayoutKind::Fsb => {
+            // tile-order word copy, exactly FsbMatrix::from_bitmatrix
+            let tiles_x = bits.div_ceil(BW);
+            let mut out = vec![0u32; ddesc.total_words()];
+            for l in 0..lines {
+                let (ty, ry) = (l / BH, l % BH);
+                for w in 0..wpl32 {
+                    let (tx, wx) = (w / TILE_ROW_WORDS, w % TILE_ROW_WORDS);
+                    out[(ty * tiles_x + tx) * TILE_WORDS + ry * TILE_ROW_WORDS + wx] =
+                        data[l * wpl32 + w];
+                }
+            }
+            BitImage { desc: ddesc, words: Words::W32(out) }
+        }
+        LayoutKind::Row32 => src.clone(),
+    }
+}
+
+fn to_row32(src: &BitImage) -> BitImage {
+    let (lines, bits) = (src.desc.lines, src.desc.bits);
+    let ddesc = LayoutDesc::new(LayoutKind::Row32, lines, bits);
+    let wpl32 = ddesc.words_per_line();
+    let mut out = vec![0u32; ddesc.total_words()];
+    match src.desc.kind {
+        LayoutKind::Row32 => return src.clone(),
+        LayoutKind::Blocked64 => {
+            let wpl64 = src.desc.words_per_line();
+            let data = src.words.as_w64();
+            for l in 0..lines {
+                unpack64_into(
+                    &data[l * wpl64..(l + 1) * wpl64],
+                    &mut out[l * wpl32..(l + 1) * wpl32],
+                );
+            }
+        }
+        LayoutKind::Im2rowStaged => {
+            let stride = src.desc.words_per_line();
+            let used = words64(wpl32);
+            let data = src.words.as_w64();
+            for l in 0..lines {
+                unpack64_into(
+                    &data[l * stride..l * stride + used],
+                    &mut out[l * wpl32..(l + 1) * wpl32],
+                );
+            }
+        }
+        LayoutKind::Fsb => {
+            let tiles_x = bits.div_ceil(BW);
+            let data = src.words.as_w32();
+            for l in 0..lines {
+                let (ty, ry) = (l / BH, l % BH);
+                for w in 0..wpl32 {
+                    let (tx, wx) = (w / TILE_ROW_WORDS, w % TILE_ROW_WORDS);
+                    out[l * wpl32 + w] = data
+                        [(ty * tiles_x + tx) * TILE_WORDS + ry * TILE_ROW_WORDS + wx];
+                }
+            }
+        }
+    }
+    BitImage { desc: ddesc, words: Words::W32(out) }
+}
+
+/// Hot-path `Row32 -> Blocked64` over raw row slices (the executor's
+/// explicit repack op, run through pre-sized arena scratch with no
+/// allocation).  `src` holds rows of `wpl32` u32 words; `dst` receives
+/// the same rows as `words64(wpl32)` u64 words each.
+pub fn rows32_to_rows64(src: &[u32], wpl32: usize, dst: &mut [u64]) {
+    assert!(wpl32 > 0, "empty lines");
+    let wpl64 = words64(wpl32);
+    let rows = src.len() / wpl32;
+    assert_eq!(src.len(), rows * wpl32, "whole rows only");
+    assert_eq!(dst.len(), rows * wpl64, "dst row count");
+    for (s, d) in src.chunks_exact(wpl32).zip(dst.chunks_exact_mut(wpl64)) {
+        repack64_into(s, d);
+    }
+}
+
+/// Hot-path `Blocked64 -> Row32` over raw row slices (the executor's
+/// explicit back-conversion when a planned edge hands a u64 activation
+/// to a `Row32`-native backend).
+pub fn rows64_to_rows32(src: &[u64], wpl32: usize, dst: &mut [u32]) {
+    assert!(wpl32 > 0, "empty lines");
+    let wpl64 = words64(wpl32);
+    let rows = dst.len() / wpl32;
+    assert_eq!(dst.len(), rows * wpl32, "whole rows only");
+    assert_eq!(src.len(), rows * wpl64, "src row count");
+    for (s, d) in src.chunks_exact(wpl64).zip(dst.chunks_exact_mut(wpl32)) {
+        unpack64_into(s, d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::{BitMatrix, BitMatrix64, FsbMatrix, Layout};
+    use crate::util::proptest::run_cases;
+
+    fn random_image(rng: &mut crate::util::Rng, lines: usize, bits: usize) -> BitImage {
+        let m = BitMatrix::random(lines, bits, Layout::RowMajor, rng);
+        BitImage::from_rows32(lines, bits, m.data)
+    }
+
+    #[test]
+    fn registry_covers_every_ordered_pair() {
+        let pairs = all_pairs();
+        let n = LayoutKind::all().len();
+        assert_eq!(pairs.len(), n * (n - 1));
+        for (s, d) in &pairs {
+            assert_ne!(s, d);
+            assert!(pair_name(*s, *d).contains("->"));
+        }
+        assert_eq!(
+            pair_name(LayoutKind::Row32, LayoutKind::Blocked64),
+            "Row32->Blocked64"
+        );
+    }
+
+    #[test]
+    fn every_pair_roundtrips_exactly() {
+        run_cases(301, 40, |rng| {
+            let lines = 1 + rng.gen_range(40);
+            let bits = 1 + rng.gen_range(300);
+            let img = random_image(rng, lines, bits);
+            for (src_k, dst_k) in all_pairs() {
+                let there = convert(&convert(&img, src_k), dst_k);
+                assert_eq!(there.desc.kind, dst_k);
+                let back = convert(&there, LayoutKind::Row32);
+                assert_eq!(back, img, "{} via {}", pair_name(src_k, dst_k), bits);
+            }
+        });
+    }
+
+    #[test]
+    fn blocked64_matches_bitmatrix64_reference() {
+        run_cases(302, 40, |rng| {
+            let lines = 1 + rng.gen_range(30);
+            let bits = 1 + rng.gen_range(260);
+            let m = BitMatrix::random(lines, bits, Layout::RowMajor, rng);
+            let img = BitImage::from_rows32(lines, bits, m.data.clone());
+            let b64 = convert(&img, LayoutKind::Blocked64);
+            assert_eq!(b64.words.as_w64(), &BitMatrix64::from_bitmatrix(&m).data[..]);
+        });
+    }
+
+    #[test]
+    fn fsb_matches_fsbmatrix_reference() {
+        run_cases(303, 40, |rng| {
+            let lines = 1 + rng.gen_range(30);
+            let bits = 1 + rng.gen_range(260);
+            let m = BitMatrix::random(lines, bits, Layout::RowMajor, rng);
+            let img = BitImage::from_rows32(lines, bits, m.data.clone());
+            let fsb = convert(&img, LayoutKind::Fsb);
+            assert_eq!(fsb.words.as_w32(), &FsbMatrix::from_bitmatrix(&m).data[..]);
+        });
+    }
+
+    #[test]
+    fn staged_lines_are_stride_padded_and_zero_tailed() {
+        let mut rng = crate::util::Rng::new(304);
+        let img = random_image(&mut rng, 4, 96); // 96 bits: 2 used u64, 2-word stride
+        let staged = convert(&img, LayoutKind::Im2rowStaged);
+        assert_eq!(staged.desc.words_per_line(), 2);
+        // 70 bits: 2 used of a 2-word stride (tail bits of word 1 zero)
+        let img70 = random_image(&mut rng, 4, 70);
+        let st70 = convert(&img70, LayoutKind::Im2rowStaged);
+        for l in 0..4 {
+            let line = &st70.words.as_w64()[l * 2..(l + 1) * 2];
+            assert_eq!(line[1] >> 6, 0, "line {l} pad bits set");
+        }
+        // 129 bits: 3 used u64 words of a 4-word stride, last word zero
+        let img129 = random_image(&mut rng, 3, 129);
+        let st = convert(&img129, LayoutKind::Im2rowStaged);
+        assert_eq!(st.desc.words_per_line(), 4);
+        for l in 0..3 {
+            assert_eq!(st.words.as_w64()[l * 4 + 3], 0, "line {l} stride pad set");
+        }
+        assert_eq!(convert(&st, LayoutKind::Row32), img129);
+    }
+
+    #[test]
+    fn get_bit_agrees_with_row32_across_kinds() {
+        run_cases(305, 25, |rng| {
+            let lines = 1 + rng.gen_range(20);
+            let bits = 1 + rng.gen_range(200);
+            let img = random_image(rng, lines, bits);
+            for k in LayoutKind::all() {
+                let c = convert(&img, k);
+                for _ in 0..20 {
+                    let l = rng.gen_range(lines);
+                    let b = rng.gen_range(bits);
+                    assert_eq!(
+                        c.get_bit(l, b),
+                        img.get_bit(l, b),
+                        "({l},{b}) under {k}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn row_slice_helpers_match_the_image_converters() {
+        run_cases(306, 40, |rng| {
+            let rows = 1 + rng.gen_range(20);
+            let bits = 1 + rng.gen_range(300);
+            let img = random_image(rng, rows, bits);
+            let wpl32 = img.desc.words_per_line();
+            let wpl64 = words64(wpl32);
+            let mut d64 = vec![0u64; rows * wpl64];
+            rows32_to_rows64(img.words.as_w32(), wpl32, &mut d64);
+            assert_eq!(
+                &d64[..],
+                convert(&img, LayoutKind::Blocked64).words.as_w64(),
+                "{rows}x{bits}"
+            );
+            let mut back = vec![0u32; rows * wpl32];
+            rows64_to_rows32(&d64, wpl32, &mut back);
+            assert_eq!(&back[..], img.words.as_w32());
+        });
+    }
+
+    #[test]
+    fn degenerate_shapes_roundtrip() {
+        let mut rng = crate::util::Rng::new(307);
+        for (lines, bits) in [(1, 1), (1, 257), (257, 1), (8, 128), (9, 129)] {
+            let img = random_image(&mut rng, lines, bits);
+            for k in LayoutKind::all() {
+                let back = convert(&convert(&img, k), LayoutKind::Row32);
+                assert_eq!(back, img, "{lines}x{bits} via {k}");
+            }
+        }
+    }
+}

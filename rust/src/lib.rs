@@ -48,6 +48,16 @@
 //! regression-gated in CI by `cargo bench --bench bench_kernels`
 //! against `benches/baseline.json` (see `docs/BENCH.md`).
 //!
+//! The `layout` module makes the paper's data-format co-design a
+//! planned quantity: `LayoutKind` (`Row32` | `Blocked64` | `Fsb` |
+//! `Im2rowStaged`) + exact repack converters between every pair
+//! (`layout::repack`), a layout face on `KernelBackend`, and a planner
+//! dynamic program over (scheme, layout) pairs that prices explicit
+//! repack edges (plan schema v4) which the arena executor then
+//! materializes through pre-sized scratch — so conversions that used
+//! to happen implicitly inside kernels are chosen, costed, and counted
+//! (`Metrics` repack ops/bytes).
+//!
 //! The `tuner` module closes the loop between those cost models and
 //! reality: a microbench runner measures each registered host
 //! backend's kernels over a shape grid and least-squares-fits its
@@ -69,6 +79,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod figures;
 pub mod kernels;
+pub mod layout;
 pub mod nn;
 pub mod runtime;
 pub mod sim;

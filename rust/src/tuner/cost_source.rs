@@ -24,6 +24,7 @@
 use std::sync::Arc;
 
 use crate::kernels::backend::KernelBackend;
+use crate::layout::LayoutKind;
 use crate::nn::cost::ResidualMode;
 use crate::nn::layer::{Dims, LayerSpec};
 use crate::sim::Engine;
@@ -133,6 +134,30 @@ impl CostSource {
         }
     }
 
+    /// Seconds to convert `bytes` of total layout-edge traffic (source
+    /// image + destination image) from `src` to `dst`, answered by this
+    /// source: the analytic repack model for `Analytic`, the profile's
+    /// fitted per-pair bandwidth for `Calibrated`/`Live` (falling back
+    /// to analytic for uncalibrated pairs).  This is what the planner's
+    /// (scheme, layout) DP charges on every edge whose layouts
+    /// disagree — and the discount it grants for native-layout
+    /// consumption.
+    pub fn repack_secs(&self, src: LayoutKind, dst: LayoutKind, bytes: usize) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        let analytic = crate::layout::cost::analytic_repack_secs(src, dst, bytes);
+        match self {
+            CostSource::Analytic => analytic,
+            CostSource::Calibrated(p) => {
+                p.repack_secs(src, dst, bytes).unwrap_or(analytic)
+            }
+            CostSource::Live { prior, .. } => {
+                prior.repack_secs(src, dst, bytes).unwrap_or(analytic)
+            }
+        }
+    }
+
     /// The stable identity plans embed as `cost_profile`.
     pub fn profile_id(&self) -> String {
         match self {
@@ -164,6 +189,7 @@ mod tests {
         Arc::new(CalibrationProfile {
             fingerprint: HostFingerprint::detect(BackendRegistry::global()),
             schemes: vec![("FASTPATH".to_string(), coeffs)],
+            repacks: Vec::new(),
         })
     }
 
@@ -227,6 +253,44 @@ mod tests {
         }
         let scaled = query(&src, Scheme::Fastpath, &layer, dims);
         assert!((scaled / base - 3.0).abs() < 1e-6, "{scaled} vs {base}");
+    }
+
+    #[test]
+    fn repack_secs_prefers_fitted_pairs_and_falls_back_to_analytic() {
+        let pair = (LayoutKind::Row32, LayoutKind::Blocked64);
+        let analytic = CostSource::Analytic.repack_secs(pair.0, pair.1, 4096);
+        assert_eq!(
+            analytic,
+            crate::layout::cost::analytic_repack_secs(pair.0, pair.1, 4096)
+        );
+        // identity edges are free under every source
+        assert_eq!(CostSource::Analytic.repack_secs(pair.0, pair.0, 4096), 0.0);
+        // a profile with a fitted pair overrides; others fall back
+        let mut fitted = SchemeCoeffs::analytic();
+        fitted.secs_per_word_op = 0.0;
+        fitted.secs_per_byte = 1e-12;
+        fitted.dispatch_secs = 1e-7;
+        fitted.secs_per_fp_op = 0.0;
+        let p = Arc::new(CalibrationProfile {
+            fingerprint: HostFingerprint::detect(BackendRegistry::global()),
+            schemes: Vec::new(),
+            repacks: vec![(crate::tuner::repack_key(pair.0, pair.1), fitted)],
+        });
+        let cal = CostSource::Calibrated(Arc::clone(&p));
+        let got = cal.repack_secs(pair.0, pair.1, 4096);
+        assert!((got - (4096.0 * 1e-12 + 1e-7)).abs() < 1e-15, "{got}");
+        let fallback = cal.repack_secs(LayoutKind::Blocked64, LayoutKind::Row32, 4096);
+        assert_eq!(
+            fallback,
+            crate::layout::cost::analytic_repack_secs(
+                LayoutKind::Blocked64,
+                LayoutKind::Row32,
+                4096
+            )
+        );
+        // Live prices edges from its prior
+        let live = CostSource::Live { prior: p, live: Arc::new(LiveCosts::new()) };
+        assert_eq!(live.repack_secs(pair.0, pair.1, 4096), got);
     }
 
     #[test]

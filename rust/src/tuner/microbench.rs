@@ -22,13 +22,14 @@ use crate::kernels::backend::{
     BackendRegistry, ExecCtx, KernelBackend, PreparedConv as _, PreparedFc as _,
 };
 use crate::kernels::bconv::BconvProblem;
+use crate::layout::{repack, LayoutDesc, LayoutKind};
 use crate::nn::cost::{ResidualMode, Scheme};
 use crate::nn::layer::{Dims, LayerSpec};
 use crate::util::bench::Bencher;
 use crate::util::threadpool::default_threads;
 use crate::util::Rng;
 
-use super::features::layer_features;
+use super::features::{layer_features, Features};
 use super::fit::FitRow;
 
 /// One measured grid cell.
@@ -57,6 +58,36 @@ impl Measurement {
                 ResidualMode::None,
                 false,
             ),
+            secs: self.secs,
+        }
+    }
+}
+
+/// One measured layout-conversion grid cell.
+#[derive(Clone, Debug)]
+pub struct RepackMeasurement {
+    pub src: LayoutKind,
+    pub dst: LayoutKind,
+    /// image shape the conversion ran over
+    pub lines: usize,
+    pub bits: usize,
+    /// streamed bytes (source image + destination image)
+    pub bytes: usize,
+    /// measured p50 seconds per conversion
+    pub secs: f64,
+}
+
+impl RepackMeasurement {
+    /// The fit row of this measurement (pure byte-streaming model:
+    /// `secs = bytes * b + dispatch`, word/fp regressors identically 0
+    /// so the fitter pins their coefficients to 0).
+    pub fn fit_row(&self) -> FitRow {
+        FitRow {
+            features: Features {
+                fp_ops: 0.0,
+                word_ops: 0.0,
+                stream_bytes: self.bytes as f64,
+            },
             secs: self.secs,
         }
     }
@@ -116,6 +147,77 @@ fn conv_grid(quick: bool) -> Vec<(usize, usize, usize)> {
         g.push((7, 256, 256));
     }
     g
+}
+
+/// Repack grid: (lines, bits) image shapes spreading total bytes over
+/// ~1.5 orders of magnitude so the byte rate and the dispatch constant
+/// separate in the fit.
+fn repack_grid(quick: bool) -> Vec<(usize, usize)> {
+    let mut g = vec![(64, 1024), (128, 2048), (256, 4096)];
+    if !quick {
+        g.push((256, 8192));
+    }
+    g
+}
+
+/// Measure real conversion bandwidth for every registered layout pair
+/// (`layout::repack::all_pairs()`) over the repack grid — the
+/// measurements `fit_profile` turns into the profile's `repacks`
+/// coefficients, so `Calibrated`/`Live` planners price layout edges
+/// from this host's streaming speed instead of the analytic constants.
+pub fn run_repacks(cfg: &MicrobenchConfig) -> Vec<RepackMeasurement> {
+    let b = cfg.bencher();
+    let mut rng = Rng::new(cfg.seed.wrapping_add(0x4c41_594f)); // "LAYO"
+    let mut out = Vec::new();
+    for (src, dst) in repack::all_pairs() {
+        for (lines, bits) in repack_grid(cfg.quick) {
+            let m = BitMatrix::random(lines, bits, Layout::RowMajor, &mut rng);
+            let base = repack::BitImage::from_rows32(lines, bits, m.data);
+            let src_img = repack::convert(&base, src);
+            let name =
+                format!("tuner/repack/{}/{lines}x{bits}", repack::pair_name(src, dst));
+            let wpl32 = LayoutDesc::new(LayoutKind::Row32, lines, bits).words_per_line();
+            // the hot executor pairs are measured over the no-alloc
+            // row-slice helpers into pre-sized buffers — exactly the
+            // arena path the fitted coefficients will price; the tiled
+            // pairs (no executor hot path) measure the allocating
+            // converter API, a conservative upper bound
+            let r = match (src, dst) {
+                (LayoutKind::Row32, LayoutKind::Blocked64) => {
+                    let s32 = src_img.words.as_w32();
+                    let mut d64 =
+                        vec![0u64; LayoutDesc::new(dst, lines, bits).total_words()];
+                    b.bench(&name, 1.0, || {
+                        repack::rows32_to_rows64(s32, wpl32, &mut d64);
+                        std::hint::black_box(&mut d64);
+                    })
+                }
+                (LayoutKind::Blocked64, LayoutKind::Row32) => {
+                    let s64 = src_img.words.as_w64();
+                    let mut d32 =
+                        vec![0u32; LayoutDesc::new(dst, lines, bits).total_words()];
+                    b.bench(&name, 1.0, || {
+                        repack::rows64_to_rows32(s64, wpl32, &mut d32);
+                        std::hint::black_box(&mut d32);
+                    })
+                }
+                _ => b.bench(&name, 1.0, || {
+                    std::hint::black_box(repack::convert(&src_img, dst));
+                }),
+            };
+            let bytes = src_img.desc.storage_bytes()
+                + LayoutDesc::new(dst, lines, bits).storage_bytes();
+            out.push(RepackMeasurement {
+                src,
+                dst,
+                lines,
+                bits,
+                bytes,
+                secs: r.summary.p50,
+            });
+        }
+    }
+    out
 }
 
 /// Whether `backend` is a *host* backend — no GPU trace face, costed by
@@ -261,5 +363,25 @@ mod tests {
         // both kernel kinds present
         assert!(ms.iter().any(|m| m.kind == "bmm"));
         assert!(ms.iter().any(|m| m.kind == "bconv"));
+    }
+
+    #[test]
+    fn repack_run_covers_every_pair_with_fittable_rows() {
+        let cfg = MicrobenchConfig { quick: true, seed: 7, threads: 1 };
+        let ms = run_repacks(&cfg);
+        let grid = repack_grid(true).len();
+        assert_eq!(ms.len(), repack::all_pairs().len() * grid);
+        for (src, dst) in repack::all_pairs() {
+            let rows: Vec<_> =
+                ms.iter().filter(|m| m.src == src && m.dst == dst).collect();
+            assert_eq!(rows.len(), grid, "{}", repack::pair_name(src, dst));
+            for m in rows {
+                assert!(m.secs.is_finite() && m.secs > 0.0, "{m:?}");
+                assert!(m.bytes > 0);
+                let row = m.fit_row();
+                assert_eq!(row.features.word_ops, 0.0);
+                assert!(row.features.stream_bytes > 0.0);
+            }
+        }
     }
 }

@@ -50,8 +50,8 @@ pub use features::{layer_features, Features};
 pub use fingerprint::HostFingerprint;
 pub use fit::{fit_coeffs, FitRow};
 pub use live::LiveCosts;
-pub use microbench::{Measurement, MicrobenchConfig};
-pub use profile::{CalibrationProfile, SchemeCoeffs, PROFILE_SCHEMA};
+pub use microbench::{Measurement, MicrobenchConfig, RepackMeasurement};
+pub use profile::{repack_key, CalibrationProfile, SchemeCoeffs, PROFILE_SCHEMA};
 
 use crate::kernels::backend::BackendRegistry;
 use crate::nn::cost::ResidualMode;
@@ -59,10 +59,12 @@ use crate::nn::ModelDef;
 use crate::sim::{Engine, GpuModel};
 
 /// Fit a [`CalibrationProfile`] from microbench measurements: one
-/// coefficient set per scheme with at least 3 usable grid rows.
+/// coefficient set per scheme (and per layout-conversion pair, from
+/// [`microbench::run_repacks`]) with at least 3 usable grid rows.
 pub fn fit_profile(
     fingerprint: HostFingerprint,
     measurements: &[Measurement],
+    repack_measurements: &[RepackMeasurement],
 ) -> CalibrationProfile {
     let mut schemes: Vec<(String, SchemeCoeffs)> = Vec::new();
     for m in measurements {
@@ -79,7 +81,26 @@ pub fn fit_profile(
             schemes.push((name, coeffs));
         }
     }
-    CalibrationProfile { fingerprint, schemes }
+    let mut repacks: Vec<(String, SchemeCoeffs)> = Vec::new();
+    for m in repack_measurements {
+        let key = repack_key(m.src, m.dst);
+        if repacks.iter().any(|(n, _)| *n == key) {
+            continue;
+        }
+        let rows: Vec<FitRow> = repack_measurements
+            .iter()
+            .filter(|x| x.src == m.src && x.dst == m.dst)
+            .map(RepackMeasurement::fit_row)
+            .collect();
+        if let Some(mut coeffs) = fit_coeffs(&rows) {
+            // a repack has no kernel terms: the word regressor is
+            // identically 0 in every row (fitted to 0), and the fp
+            // seed the kernel fitter carries is meaningless here
+            coeffs.secs_per_fp_op = 0.0;
+            repacks.push((key, coeffs));
+        }
+    }
+    CalibrationProfile { fingerprint, schemes, repacks }
 }
 
 /// Outcome of comparing planner choices under two cost sources.
@@ -185,6 +206,7 @@ mod tests {
         let profile = Arc::new(CalibrationProfile {
             fingerprint: HostFingerprint::detect(reg),
             schemes: vec![("FASTPATH".to_string(), SchemeCoeffs::analytic())],
+            repacks: Vec::new(),
         });
         let source = CostSource::Calibrated(profile);
         let models = all_models();
@@ -217,11 +239,50 @@ mod tests {
             mk(Scheme::BtcFmt, 256, 1e-5),
             mk(Scheme::BtcFmt, 512, 2e-5),
         ];
-        let p = fit_profile(fp, &ms);
+        let p = fit_profile(fp, &ms, &[]);
         assert_eq!(p.schemes.len(), 1);
         assert_eq!(p.schemes[0].0, "FASTPATH");
+        assert!(p.repacks.is_empty());
         let c = p.coeffs(Scheme::Fastpath).unwrap();
         assert!((c.secs_per_word_op - coeff).abs() / coeff < 1e-6, "{c:?}");
         assert_eq!(c.samples, 4);
+    }
+
+    #[test]
+    fn fit_profile_recovers_synthetic_repack_bandwidth() {
+        use crate::layout::LayoutKind;
+        let fp = HostFingerprint::detect(BackendRegistry::global());
+        // secs = bytes * 8e-11 + 1.2e-6 over three image sizes
+        let (b_rate, disp) = (8e-11, 1.2e-6);
+        let mk = |lines: usize, bits: usize| {
+            let bytes = lines * bits / 8 * 2; // approx src+dst traffic
+            microbench::RepackMeasurement {
+                src: LayoutKind::Row32,
+                dst: LayoutKind::Blocked64,
+                lines,
+                bits,
+                bytes,
+                secs: bytes as f64 * b_rate + disp,
+            }
+        };
+        let ms = vec![mk(64, 1024), mk(128, 2048), mk(256, 4096), mk(256, 8192)];
+        let p = fit_profile(fp, &[], &ms);
+        assert!(p.schemes.is_empty());
+        assert_eq!(p.repacks.len(), 1);
+        let c = p
+            .repack_coeffs(LayoutKind::Row32, LayoutKind::Blocked64)
+            .unwrap();
+        assert!((c.secs_per_byte - b_rate).abs() / b_rate < 1e-6, "{c:?}");
+        assert!((c.dispatch_secs - disp).abs() / disp < 1e-6, "{c:?}");
+        assert_eq!(c.secs_per_word_op, 0.0, "word regressor is identically 0");
+        assert_eq!(c.secs_per_fp_op, 0.0, "repacks have no fp term");
+        // the fitted pair prices an edge; the reverse pair falls back
+        let priced = p
+            .repack_secs(LayoutKind::Row32, LayoutKind::Blocked64, 10_000)
+            .unwrap();
+        assert!((priced - (10_000.0 * b_rate + disp)).abs() / priced < 1e-9);
+        assert!(p
+            .repack_secs(LayoutKind::Blocked64, LayoutKind::Row32, 10_000)
+            .is_none());
     }
 }

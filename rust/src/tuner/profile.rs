@@ -14,6 +14,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::engine::json::Value;
+use crate::layout::LayoutKind;
 use crate::nn::cost::{host, ResidualMode, Scheme};
 use crate::nn::layer::{Dims, LayerSpec};
 
@@ -24,7 +25,11 @@ use super::fingerprint::HostFingerprint;
 /// the meaning of a fitted coefficient) changes; `from_json` rejects
 /// any other version, and because the profile id embeds the schema,
 /// cached plans from an old profile schema are invalidated too.
-pub const PROFILE_SCHEMA: usize = 1;
+///
+/// v2: the layout co-design subsystem — profiles additionally carry
+/// fitted repack-bandwidth coefficients per layout pair (`repacks`),
+/// so calibrated planners price layout edges from measurement.
+pub const PROFILE_SCHEMA: usize = 2;
 
 /// Fitted cost-model coefficients of one backend: the analytic host
 /// model's parameterization (`tuner::features`) with measured values.
@@ -81,12 +86,23 @@ impl SchemeCoeffs {
 
 /// A fitted per-host calibration: fingerprint + one coefficient set per
 /// calibrated scheme (backends without an entry fall back to their
-/// analytic cost face under `CostSource::Calibrated`).
+/// analytic cost face under `CostSource::Calibrated`), plus fitted
+/// repack bandwidth per layout pair (pairs without an entry fall back
+/// to `layout::cost::analytic_repack_secs`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct CalibrationProfile {
     pub fingerprint: HostFingerprint,
     /// `(scheme name, coefficients)` in registration order.
     pub schemes: Vec<(String, SchemeCoeffs)>,
+    /// `("Src->Dst" layout pair, coefficients)` in `all_pairs` order —
+    /// only `secs_per_byte` and `dispatch_secs` are meaningful for a
+    /// repack (the word/fp terms are fitted to exactly 0).
+    pub repacks: Vec<(String, SchemeCoeffs)>,
+}
+
+/// The profile key of one conversion direction (`"Row32->Blocked64"`).
+pub fn repack_key(src: LayoutKind, dst: LayoutKind) -> String {
+    crate::layout::repack::pair_name(src, dst)
 }
 
 impl CalibrationProfile {
@@ -114,6 +130,48 @@ impl CalibrationProfile {
         })
     }
 
+    /// Fitted repack coefficients for one layout pair, if calibrated.
+    pub fn repack_coeffs(&self, src: LayoutKind, dst: LayoutKind) -> Option<&SchemeCoeffs> {
+        let key = repack_key(src, dst);
+        self.repacks.iter().find(|(n, _)| *n == key).map(|(_, c)| c)
+    }
+
+    /// Fitted seconds of converting `bytes` of total traffic from
+    /// `src` to `dst` layout; `None` when the pair was not calibrated
+    /// (caller falls back to the analytic repack model).
+    pub fn repack_secs(&self, src: LayoutKind, dst: LayoutKind, bytes: usize) -> Option<f64> {
+        if src == dst {
+            return Some(0.0);
+        }
+        self.repack_coeffs(src, dst)
+            .map(|c| bytes as f64 * c.secs_per_byte + c.dispatch_secs)
+    }
+
+    /// A copy with each named scheme's fitted rates scaled by its live
+    /// EWMA measured/predicted ratio — how a cleanly shut down
+    /// `EngineModel` persists what its `CostSource::Live` loop learned
+    /// (see `EngineModel::converged_profile`).  Scaling every additive
+    /// term by the ratio scales the predicted seconds by exactly that
+    /// ratio, matching the EWMA's semantics; schemes without a ratio
+    /// (or absent from the profile) are left untouched.  The content
+    /// id changes with the coefficients, so cached plans priced under
+    /// the old profile are invalidated on the next start.
+    pub fn scaled_by(&self, ratios: &[(String, f64)]) -> CalibrationProfile {
+        let mut out = self.clone();
+        for (name, c) in out.schemes.iter_mut() {
+            if let Some((_, r)) = ratios
+                .iter()
+                .find(|(n, r)| n == name && r.is_finite() && *r > 0.0)
+            {
+                c.secs_per_word_op *= r;
+                c.secs_per_byte *= r;
+                c.dispatch_secs *= r;
+                c.secs_per_fp_op *= r;
+            }
+        }
+        out
+    }
+
     /// Stable content digest: `cal<schema>-<fnv64 of the JSON form>`.
     /// This is the id plans embed as their `cost_profile`, so any
     /// change to the fingerprint, the coefficient values, or the
@@ -123,28 +181,35 @@ impl CalibrationProfile {
     }
 
     pub fn to_json(&self) -> String {
+        let coeff_obj = |key: &str, name: &str, c: &SchemeCoeffs| {
+            Value::Obj(vec![
+                (key.to_string(), Value::Str(name.to_string())),
+                (
+                    "secs_per_word_op".to_string(),
+                    Value::Num(c.secs_per_word_op),
+                ),
+                ("secs_per_byte".to_string(), Value::Num(c.secs_per_byte)),
+                ("dispatch_secs".to_string(), Value::Num(c.dispatch_secs)),
+                ("secs_per_fp_op".to_string(), Value::Num(c.secs_per_fp_op)),
+                ("samples".to_string(), Value::Num(c.samples as f64)),
+                ("rel_rmse".to_string(), Value::Num(c.rel_rmse)),
+            ])
+        };
         let schemes: Vec<Value> = self
             .schemes
             .iter()
-            .map(|(name, c)| {
-                Value::Obj(vec![
-                    ("scheme".to_string(), Value::Str(name.clone())),
-                    (
-                        "secs_per_word_op".to_string(),
-                        Value::Num(c.secs_per_word_op),
-                    ),
-                    ("secs_per_byte".to_string(), Value::Num(c.secs_per_byte)),
-                    ("dispatch_secs".to_string(), Value::Num(c.dispatch_secs)),
-                    ("secs_per_fp_op".to_string(), Value::Num(c.secs_per_fp_op)),
-                    ("samples".to_string(), Value::Num(c.samples as f64)),
-                    ("rel_rmse".to_string(), Value::Num(c.rel_rmse)),
-                ])
-            })
+            .map(|(name, c)| coeff_obj("scheme", name, c))
+            .collect();
+        let repacks: Vec<Value> = self
+            .repacks
+            .iter()
+            .map(|(pair, c)| coeff_obj("pair", pair, c))
             .collect();
         Value::Obj(vec![
             ("schema".to_string(), Value::Num(PROFILE_SCHEMA as f64)),
             ("fingerprint".to_string(), self.fingerprint.to_value()),
             ("schemes".to_string(), Value::Arr(schemes)),
+            ("repacks".to_string(), Value::Arr(repacks)),
         ])
         .to_string()
     }
@@ -165,39 +230,46 @@ impl CalibrationProfile {
             v.get("fingerprint").context("profile field \"fingerprint\"")?,
         )
         .map_err(|e| anyhow::anyhow!("profile {e}"))?;
-        let mut schemes = Vec::new();
-        for (i, sv) in v
-            .get("schemes")
-            .and_then(Value::as_arr)
-            .context("profile field \"schemes\"")?
-            .iter()
-            .enumerate()
-        {
-            let name = sv
-                .get("scheme")
-                .and_then(Value::as_str)
-                .with_context(|| format!("profile schemes[{i}] name"))?
-                .to_string();
-            let num = |key: &str| -> Result<f64> {
-                sv.get(key)
-                    .and_then(Value::as_f64)
-                    .with_context(|| format!("profile schemes[{i}] field {key:?}"))
-            };
-            let coeffs = SchemeCoeffs {
-                secs_per_word_op: num("secs_per_word_op")?,
-                secs_per_byte: num("secs_per_byte")?,
-                dispatch_secs: num("dispatch_secs")?,
-                secs_per_fp_op: num("secs_per_fp_op")?,
-                samples: sv
-                    .get("samples")
-                    .and_then(Value::as_usize)
-                    .with_context(|| format!("profile schemes[{i}] samples"))?,
-                rel_rmse: num("rel_rmse")?,
-            };
-            ensure_sane(&name, &coeffs)?;
-            schemes.push((name, coeffs));
-        }
-        Ok(CalibrationProfile { fingerprint, schemes })
+        let parse_coeffs = |section: &str, key: &str| -> Result<Vec<(String, SchemeCoeffs)>> {
+            let mut out = Vec::new();
+            for (i, sv) in v
+                .get(section)
+                .and_then(Value::as_arr)
+                .with_context(|| format!("profile field {section:?}"))?
+                .iter()
+                .enumerate()
+            {
+                let name = sv
+                    .get(key)
+                    .and_then(Value::as_str)
+                    .with_context(|| format!("profile {section}[{i}] {key}"))?
+                    .to_string();
+                let num = |k: &str| -> Result<f64> {
+                    sv.get(k)
+                        .and_then(Value::as_f64)
+                        .with_context(|| format!("profile {section}[{i}] field {k:?}"))
+                };
+                let coeffs = SchemeCoeffs {
+                    secs_per_word_op: num("secs_per_word_op")?,
+                    secs_per_byte: num("secs_per_byte")?,
+                    dispatch_secs: num("dispatch_secs")?,
+                    secs_per_fp_op: num("secs_per_fp_op")?,
+                    samples: sv
+                        .get("samples")
+                        .and_then(Value::as_usize)
+                        .with_context(|| format!("profile {section}[{i}] samples"))?,
+                    rel_rmse: num("rel_rmse")?,
+                };
+                ensure_sane(&name, &coeffs)?;
+                out.push((name, coeffs));
+            }
+            Ok(out)
+        };
+        Ok(CalibrationProfile {
+            fingerprint,
+            schemes: parse_coeffs("schemes", "scheme")?,
+            repacks: parse_coeffs("repacks", "pair")?,
+        })
     }
 
     /// Persist to `path` (creating parent directories).
@@ -253,6 +325,17 @@ mod tests {
                     rel_rmse: 0.07,
                 },
             )],
+            repacks: vec![(
+                "Row32->Blocked64".to_string(),
+                SchemeCoeffs {
+                    secs_per_word_op: 0.0,
+                    secs_per_byte: 9.0e-11,
+                    dispatch_secs: 1.5e-6,
+                    secs_per_fp_op: 0.0,
+                    samples: 3,
+                    rel_rmse: 0.02,
+                },
+            )],
         }
     }
 
@@ -262,7 +345,51 @@ mod tests {
         let back = CalibrationProfile::from_json(&p.to_json()).unwrap();
         assert_eq!(back, p);
         assert_eq!(back.id(), p.id());
-        assert!(p.id().starts_with("cal1-"));
+        assert!(p.id().starts_with("cal2-"));
+    }
+
+    #[test]
+    fn repack_secs_uses_fitted_coefficients_or_falls_back() {
+        let p = sample();
+        let c = p
+            .repack_coeffs(LayoutKind::Row32, LayoutKind::Blocked64)
+            .expect("pair calibrated");
+        let got = p
+            .repack_secs(LayoutKind::Row32, LayoutKind::Blocked64, 4096)
+            .unwrap();
+        let want = 4096.0 * c.secs_per_byte + c.dispatch_secs;
+        assert!((got - want).abs() / want < 1e-12);
+        // identity is free, uncalibrated pair is None (analytic fallback)
+        assert_eq!(
+            p.repack_secs(LayoutKind::Fsb, LayoutKind::Fsb, 4096),
+            Some(0.0)
+        );
+        assert!(p
+            .repack_secs(LayoutKind::Blocked64, LayoutKind::Row32, 4096)
+            .is_none());
+    }
+
+    #[test]
+    fn scaled_by_scales_predictions_and_changes_the_id() {
+        use crate::nn::Scheme;
+        let p = sample();
+        let q = p.scaled_by(&[("FASTPATH".to_string(), 3.0)]);
+        assert_ne!(q.id(), p.id(), "converged profile must invalidate plans");
+        let layer = LayerSpec::BinFc { d_in: 1024, d_out: 512 };
+        let dims = Dims { hw: 0, feat: 1024 };
+        let base = p
+            .layer_secs(Scheme::Fastpath, &layer, dims, 8, ResidualMode::None, false)
+            .unwrap();
+        let scaled = q
+            .layer_secs(Scheme::Fastpath, &layer, dims, 8, ResidualMode::None, false)
+            .unwrap();
+        assert!((scaled / base - 3.0).abs() < 1e-9, "{scaled} vs {base}");
+        // unknown scheme names and degenerate ratios are ignored
+        let same = p.scaled_by(&[
+            ("BTC".to_string(), 5.0),
+            ("FASTPATH".to_string(), f64::NAN),
+        ]);
+        assert_eq!(same, p);
     }
 
     #[test]
@@ -282,6 +409,7 @@ mod tests {
         let p = CalibrationProfile {
             fingerprint: HostFingerprint::detect(BackendRegistry::global()),
             schemes: vec![("FASTPATH".to_string(), SchemeCoeffs::analytic())],
+            repacks: Vec::new(),
         };
         let layer = LayerSpec::BinFc { d_in: 1024, d_out: 512 };
         let dims = Dims { hw: 0, feat: 1024 };
@@ -299,8 +427,11 @@ mod tests {
     #[test]
     fn rejects_other_schemas_and_bad_coeffs() {
         let p = sample();
-        let old = p.to_json().replace("\"schema\":1", "\"schema\":99");
+        let old = p.to_json().replace("\"schema\":2", "\"schema\":99");
         assert!(CalibrationProfile::from_json(&old).is_err());
+        // a v1 (pre-repack) document is stale too
+        let v1 = p.to_json().replace("\"schema\":2", "\"schema\":1");
+        assert!(CalibrationProfile::from_json(&v1).is_err());
         let neg = p.to_json().replace("8.5e-11", "-8.5e-11");
         assert!(CalibrationProfile::from_json(&neg).is_err());
     }

@@ -3,6 +3,8 @@
 //! widths, where pad-bit handling is easiest to get wrong.
 
 use tcbnn::bitops::{pack, pack64, BitMatrix, BitMatrix64, FsbMatrix, Layout};
+use tcbnn::layout::repack::{convert, BitImage};
+use tcbnn::layout::LayoutKind;
 use tcbnn::util::proptest::run_cases;
 
 /// A width that is deliberately NOT a multiple of 32.
@@ -128,6 +130,82 @@ fn pack64_fsb_normalizes_to_line_order() {
         let m = BitMatrix::random(rows, cols, Layout::RowMajor, rng);
         let f = FsbMatrix::from_bitmatrix(&m);
         assert_eq!(BitMatrix64::from_fsb(&f), BitMatrix64::from_bitmatrix(&m));
+    });
+}
+
+/// Wrap a random BitMatrix as a Row32 layout image.
+fn random_image(rng: &mut tcbnn::util::Rng, lines: usize, bits: usize) -> BitImage {
+    let m = BitMatrix::random(lines, bits, Layout::RowMajor, rng);
+    BitImage::from_rows32(lines, bits, m.data)
+}
+
+#[test]
+fn cross_layout_roundtrips_at_odd_widths() {
+    // Row32 <-> Blocked64 <-> Fsb (and back) must reproduce every bit,
+    // especially at non-multiple-of-32/64 widths where pad handling in
+    // tail words / tail tiles is easiest to get wrong
+    run_cases(212, 120, |rng| {
+        let lines = 1 + rng.gen_range(40);
+        let bits = odd_width(rng, 300);
+        let img = random_image(rng, lines, bits);
+        // single hops there and back
+        for k in [LayoutKind::Blocked64, LayoutKind::Fsb, LayoutKind::Im2rowStaged] {
+            let back = convert(&convert(&img, k), LayoutKind::Row32);
+            assert_eq!(back, img, "{lines}x{bits} via {k}");
+        }
+        // the full chain Row32 -> Blocked64 -> Fsb -> Blocked64 -> Row32
+        let chained = convert(
+            &convert(
+                &convert(&convert(&img, LayoutKind::Blocked64), LayoutKind::Fsb),
+                LayoutKind::Blocked64,
+            ),
+            LayoutKind::Row32,
+        );
+        assert_eq!(chained, img, "{lines}x{bits} chained");
+    });
+}
+
+#[test]
+fn cross_layout_roundtrips_at_degenerate_shapes() {
+    // 1xN and Nx1 images: a single line, and a single bit per line
+    run_cases(213, 80, |rng| {
+        let n = odd_width(rng, 400);
+        for (lines, bits) in [(1, n), (n, 1)] {
+            let img = random_image(rng, lines, bits);
+            for (src, dst) in tcbnn::layout::repack::all_pairs() {
+                let staged = convert(&convert(&img, src), dst);
+                assert_eq!(staged.desc.kind, dst);
+                assert_eq!(
+                    convert(&staged, LayoutKind::Row32),
+                    img,
+                    "{lines}x{bits} via {src}->{dst}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn cross_layout_conversion_is_invisible_to_eq2() {
+    // converting operands through any layout chain never changes a dot
+    // product — pad bits stay 0 in every representation
+    run_cases(214, 60, |rng| {
+        let k = odd_width(rng, 300);
+        let a = BitMatrix::random(2, k, Layout::RowMajor, rng);
+        let img = BitImage::from_rows32(2, k, a.data.clone());
+        for kind in [LayoutKind::Blocked64, LayoutKind::Fsb, LayoutKind::Im2rowStaged] {
+            let back = convert(&convert(&img, kind), LayoutKind::Row32);
+            let words = match &back.words {
+                tcbnn::layout::Words::W32(v) => v.clone(),
+                _ => unreachable!("Row32 is u32-worded"),
+            };
+            let wpl = k.div_ceil(32);
+            assert_eq!(
+                pack::pm1_dot(&words[..wpl], &words[wpl..2 * wpl], k),
+                pack::pm1_dot(a.line(0), a.line(1), k),
+                "k={k} via {kind}"
+            );
+        }
     });
 }
 

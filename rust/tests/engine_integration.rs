@@ -15,13 +15,17 @@ use tcbnn::nn::{ModelDef, ResidualMode, Scheme};
 use tcbnn::sim::{Engine, RTX2080, RTX2080TI};
 use tcbnn::util::Rng;
 
-/// Acceptance: for each layer of the six Table-5 models the planner
-/// must pick exactly the scheme `nn::cost` ranks cheapest.
+/// Acceptance: for each layer of the six Table-5 models the
+/// *scheme-only* planner (`with_layout_search(false)` — the historical
+/// per-layer search the layout DP generalizes) must pick exactly the
+/// scheme `nn::cost` ranks cheapest.  The full DP's guarantee is
+/// separate: it never predicts worse than this baseline
+/// (`rust/tests/layout_equivalence.rs`).
 #[test]
 fn planner_picks_cost_model_winner_per_layer() {
     for gpu in [&RTX2080TI, &RTX2080] {
         let engine = Engine::new(gpu);
-        let planner = Planner::new(gpu);
+        let planner = Planner::new(gpu).with_layout_search(false);
         for m in all_models() {
             for batch in [8usize, 128] {
                 let plan = planner.plan(&m, batch);

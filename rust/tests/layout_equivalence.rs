@@ -1,0 +1,281 @@
+//! Layout co-design acceptance tests (ISSUE 5):
+//!
+//! 1. the layout-aware arena executor is **bit-identical** to the
+//!    serial `nn::forward` reference for every registered backend —
+//!    including the fastpath's `Blocked64`-chained FC plans — and for
+//!    mixed-scheme plans that force explicit repack edges in both
+//!    directions;
+//! 2. the planner's (scheme, layout) DP **never predicts a plan worse
+//!    than the scheme-only planner** on the Table-5 model set;
+//! 3. the plan cache treats v3 (pre-layout) plans and v4 documents
+//!    with missing/unknown layout edges as a **miss**;
+//! 4. explicit repack ops are **counted** (executor `repack_stats`)
+//!    and surfaced through coordinator `Metrics` when served.
+
+use tcbnn::coordinator::server::BatchModel;
+use tcbnn::engine::{EngineExecutor, EngineModel, PlanCache, PlanPolicy, Planner};
+use tcbnn::kernels::backend::BackendRegistry;
+use tcbnn::layout::LayoutKind;
+use tcbnn::nn::forward::{forward, random_weights};
+use tcbnn::nn::layer::{Dims, LayerSpec};
+use tcbnn::nn::model::{all_models, mnist_mlp};
+use tcbnn::nn::{ModelDef, Scheme};
+use tcbnn::sim::RTX2080TI;
+use tcbnn::util::Rng;
+
+fn conv_model() -> ModelDef {
+    ModelDef {
+        name: "layout-conv-test",
+        dataset: "synthetic",
+        input: Dims { hw: 8, feat: 3 },
+        classes: 4,
+        layers: vec![
+            LayerSpec::FirstConv { c: 3, o: 32, k: 3, stride: 1, pad: 1 },
+            LayerSpec::BinConv {
+                c: 32,
+                o: 32,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                pool: true,
+                residual: false,
+            },
+            LayerSpec::BinFc { d_in: 4 * 4 * 32, d_out: 96 },
+            LayerSpec::FinalFc { d_in: 96, d_out: 4 },
+        ],
+        residual_blocks: 0,
+    }
+}
+
+/// Acceptance: every registered backend's fixed plan — now carrying
+/// the DP's layout edges (the fastpath chains FC layers in Blocked64)
+/// — executes bit-identically to the serial reference forward.
+#[test]
+fn every_backend_fixed_plan_matches_forward_bit_for_bit() {
+    let planner = Planner::new(&RTX2080TI);
+    for (m, seed) in [(conv_model(), 31u64), (mnist_mlp(), 33u64)] {
+        let batch = 8;
+        let mut rng = Rng::new(seed);
+        let weights = random_weights(&m, &mut rng);
+        let x: Vec<f32> =
+            (0..batch * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
+        let want = forward(&m, &weights, &x, batch);
+        for scheme in BackendRegistry::global().schemes() {
+            let plan = planner.plan_fixed(&m, batch, scheme);
+            if scheme == Scheme::Fastpath {
+                // the layout DP must have chained at least one edge
+                assert!(
+                    plan.layers
+                        .iter()
+                        .any(|lp| lp.in_layout == LayoutKind::Blocked64),
+                    "{}: fastpath plan never uses its native layout",
+                    m.name
+                );
+            }
+            let mut exec = EngineExecutor::new(m.clone(), &weights, plan).unwrap();
+            assert_eq!(
+                exec.forward(&x, batch),
+                &want[..],
+                "{} under {}",
+                m.name,
+                scheme.name()
+            );
+            // chained edges move nothing: no explicit repack ops
+            assert!(exec.repack_stats().is_empty(), "{}", scheme.name());
+        }
+    }
+}
+
+/// Acceptance: mixed-scheme plans that force explicit repack edges in
+/// BOTH directions stay bit-identical to the reference, and the
+/// executor counts every materialized conversion.
+#[test]
+fn forced_repack_edges_are_bit_identical_and_counted() {
+    let batch = 8;
+
+    // Row32 -> Blocked64 at a conv->FC boundary: scalar convs, then the
+    // fastpath classifier fed its native u64 form via an explicit edge
+    let m = conv_model();
+    let mut rng = Rng::new(41);
+    let weights = random_weights(&m, &mut rng);
+    let x: Vec<f32> =
+        (0..batch * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
+    let want = forward(&m, &weights, &x, batch);
+    let mut plan = Planner::new(&RTX2080TI)
+        .with_layout_search(false)
+        .plan_fixed(&m, batch, Scheme::Sbnn32);
+    plan.layers[2].scheme = Scheme::Fastpath; // BinFc
+    plan.layers[2].in_layout = LayoutKind::Blocked64;
+    let mut exec = EngineExecutor::new(m.clone(), &weights, plan).unwrap();
+    assert_eq!(exec.forward(&x, batch), &want[..], "32->64 edge");
+    let stats = exec.repack_stats();
+    assert_eq!(stats.len(), 1, "{stats:?}");
+    assert_eq!(stats[0].0, "FASTPATH");
+    assert_eq!(stats[0].1, 1, "one explicit conversion per pass");
+    assert!(stats[0].2 > 0);
+
+    // Blocked64 -> Row32 between FC layers: a fastpath layer emits its
+    // native u64 output, the next (Row32-only scalar) layer forces the
+    // executor to convert back on the edge
+    let m = mnist_mlp();
+    let mut rng = Rng::new(43);
+    let weights = random_weights(&m, &mut rng);
+    let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32() - 0.5).collect();
+    let want = forward(&m, &weights, &x, batch);
+    let mut plan = Planner::new(&RTX2080TI)
+        .with_layout_search(false)
+        .plan_fixed(&m, batch, Scheme::Sbnn32);
+    plan.layers[1].scheme = Scheme::Fastpath;
+    plan.layers[1].out_layout = LayoutKind::Blocked64;
+    let mut exec = EngineExecutor::new(m.clone(), &weights, plan).unwrap();
+    assert_eq!(exec.forward(&x, batch), &want[..], "64->32 edge");
+    let stats = exec.repack_stats();
+    // the consuming layer (layer 2, still Sbnn32) did the conversion
+    assert_eq!(stats.len(), 1, "{stats:?}");
+    assert_eq!(stats[0].0, "SBNN-32");
+    assert_eq!(stats[0].1, 1);
+    // counters accumulate across passes
+    assert_eq!(exec.forward(&x, batch), &want[..]);
+    assert_eq!(exec.repack_stats()[0].1, 2);
+}
+
+/// Acceptance: a plan whose layout edge names a backend that cannot
+/// execute it is rejected at build time, not mid-request.
+#[test]
+fn unexecutable_layout_edge_is_a_build_error() {
+    let m = mnist_mlp();
+    let mut rng = Rng::new(45);
+    let weights = random_weights(&m, &mut rng);
+    let mut plan = Planner::new(&RTX2080TI)
+        .with_layout_search(false)
+        .plan_fixed(&m, 8, Scheme::Sbnn32);
+    // scalar backends are Row32-only: feeding one Blocked64 must fail
+    plan.layers[1].in_layout = LayoutKind::Blocked64;
+    let err = EngineExecutor::new(m, &weights, plan)
+        .err()
+        .expect("scalar backend cannot execute Blocked64");
+    assert!(
+        format!("{err:#}").contains("cannot execute planned input layout"),
+        "{err:#}"
+    );
+}
+
+/// Acceptance: the (scheme, layout) DP with repack costs never
+/// predicts a plan worse than the scheme-only planner on the Table-5
+/// model set — the all-Row32 path is always in its search space.
+#[test]
+fn dp_never_predicts_worse_than_scheme_only_on_table5() {
+    let dp = Planner::new(&RTX2080TI);
+    let scheme_only = Planner::new(&RTX2080TI).with_layout_search(false);
+    for m in all_models() {
+        for batch in [8usize, 128] {
+            let a = dp.plan(&m, batch);
+            let b = scheme_only.plan(&m, batch);
+            assert!(
+                a.total_secs <= b.total_secs * (1.0 + 1e-12),
+                "{} b{batch}: DP {} vs scheme-only {}",
+                m.name,
+                a.total_secs,
+                b.total_secs
+            );
+        }
+    }
+    // and on an all-FC model pinned to the fastpath the chain is a
+    // strict win, with the savings attributed to the layout edges
+    let m = mnist_mlp();
+    let chained = dp.plan_fixed(&m, 8, Scheme::Fastpath);
+    let row32 = scheme_only.plan_fixed(&m, 8, Scheme::Fastpath);
+    assert!(chained.total_secs < row32.total_secs);
+}
+
+/// Acceptance: the plan cache treats v3 plans and v4 documents with
+/// missing or unknown layout edges as a miss (and self-heals).
+#[test]
+fn plan_cache_treats_v3_and_missing_layout_edges_as_miss() {
+    let dir = std::env::temp_dir()
+        .join(format!("tcbnn_layout_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = PlanCache::open(&dir).unwrap();
+    let planner = Planner::new(&RTX2080TI);
+    let m = mnist_mlp();
+    let fresh = cache.get_or_plan(&planner, &m, 8);
+    assert_eq!((cache.hits(), cache.misses()), (0, 1));
+    let entry = cache.entry_path(&fresh.model, 8, &fresh.gpu);
+
+    // a v3 (pre-layout) document is stale
+    let v3 = fresh.to_json().replace("\"schema\":4", "\"schema\":3");
+    std::fs::write(&entry, v3).unwrap();
+    assert!(cache.get(&fresh.model, 8, &fresh.gpu).is_none(), "v3 must miss");
+
+    // a v4 document with its layout edges stripped is unreadable
+    let no_edges = fresh
+        .to_json()
+        .replace("\"in_layout\":\"Row32\",", "")
+        .replace("\"in_layout\":\"Blocked64\",", "");
+    std::fs::write(&entry, no_edges).unwrap();
+    assert!(
+        cache.get(&fresh.model, 8, &fresh.gpu).is_none(),
+        "missing layout edges must miss"
+    );
+
+    // ... as is one naming a layout this build does not know
+    let unknown = fresh.to_json().replace("\"Row32\"", "\"Row128\"");
+    std::fs::write(&entry, unknown).unwrap();
+    assert!(cache.get(&fresh.model, 8, &fresh.gpu).is_none());
+
+    // and get_or_plan self-heals the entry back to the v4 plan
+    let healed = cache.get_or_plan(&planner, &m, 8);
+    assert_eq!(healed, fresh);
+    assert!(cache.get(&fresh.model, 8, &fresh.gpu).is_some());
+}
+
+/// Acceptance: explicit repack traffic of a *served* model surfaces
+/// through coordinator `Metrics` next to the plan-cache counters.  The
+/// plan arrives through the cache (`PlanPolicy::Cached`), which is
+/// exactly how a foreign plan with explicit edges reaches a server.
+#[test]
+fn served_repack_traffic_surfaces_through_metrics() {
+    let m = mnist_mlp();
+    let mut rng = Rng::new(47);
+    let weights = random_weights(&m, &mut rng);
+    let planner = Planner::new(&RTX2080TI).with_layout_search(false);
+    let dir = std::env::temp_dir()
+        .join(format!("tcbnn_layout_metrics_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = PlanCache::open(&dir).unwrap();
+    // seed the cache with a plan that forces one explicit edge: the
+    // classifier runs fastpath and wants its native Blocked64 form
+    let mut plan = planner.plan_fixed(&m, 8, Scheme::Sbnn32);
+    let last = plan.layers.len() - 1;
+    plan.layers[last].scheme = Scheme::Fastpath;
+    plan.layers[last].in_layout = LayoutKind::Blocked64;
+    cache.put(&plan).unwrap();
+
+    let mut em = EngineModel::builder(&planner, &m, &weights)
+        .buckets(vec![8])
+        .policy(PlanPolicy::Cached)
+        .cache(&cache)
+        .build()
+        .unwrap();
+    assert_eq!(em.metrics.plan_cache_hits(), 1, "the doctored plan must hit");
+    assert_eq!(em.plan().layers[last].in_layout, LayoutKind::Blocked64);
+
+    let x: Vec<f32> = (0..8 * 784).map(|_| rng.next_f32() - 0.5).collect();
+    let want = {
+        let reference = forward(&m, &weights, &x, 8);
+        let out = em.run_batch(&x, 8).unwrap();
+        assert_eq!(out, reference, "served outputs stay bit-identical");
+        out
+    };
+    let stats = em.metrics.repack_stats();
+    assert_eq!(stats.len(), 1, "{stats:?}");
+    assert_eq!(stats[0].0, "FASTPATH");
+    assert_eq!(stats[0].1, 1);
+    assert!(stats[0].2 > 0);
+    let report = em.metrics.report();
+    assert!(report.contains("plan_cache=1h/0m"), "{report}");
+    assert!(report.contains("repack=1ops/"), "{report}");
+    // counters keep accumulating across batches
+    assert_eq!(em.run_batch(&x, 8).unwrap(), want);
+    assert_eq!(em.metrics.repack_stats()[0].1, 2);
+}

@@ -205,8 +205,13 @@ fn calibration_corrects_a_misranked_backend() {
             && measurements.iter().any(|x| x.scheme == Scheme::Sbnn64),
         "both synthetic backends are host backends and must be measured"
     );
-    let profile =
-        fit_profile(HostFingerprint::detect_with_cores(&reg, cfg.threads), &measurements);
+    // (no repack measurements needed here — the scheme ranking is what
+    // this test exercises; repack fitting is covered elsewhere)
+    let profile = fit_profile(
+        HostFingerprint::detect_with_cores(&reg, cfg.threads),
+        &measurements,
+        &[],
+    );
     let liar_coeffs = profile.coeffs(Scheme::Sbnn32).expect("liar fitted");
     let honest_coeffs = profile.coeffs(Scheme::Sbnn64).expect("honest fitted");
     // the spin shows up as a huge fitted dispatch constant
@@ -273,6 +278,7 @@ fn live_feedback_replans_onto_the_faster_backend() {
                 },
             ),
         ],
+        repacks: Vec::new(),
     });
     let live = Arc::new(LiveCosts::new());
     let planner = Planner::with_registry(&RTX2080TI, Arc::clone(&reg))
@@ -337,6 +343,7 @@ fn plan_cache_invalidates_across_cost_profiles() {
     let profile = Arc::new(fit_profile(
         HostFingerprint::detect_with_cores(&reg, cfg.threads),
         &microbench::run(&reg, &cfg),
+        &microbench::run_repacks(&cfg),
     ));
     let calibrated = Planner::with_registry(&RTX2080TI, Arc::clone(&reg))
         .with_cost_source(CostSource::Calibrated(Arc::clone(&profile)));
