@@ -4,11 +4,18 @@
 //!
 //!   cargo run --release --example serve_bnn
 //!   cargo run --release --example serve_bnn -- --requests 4096 --cache plan_cache
+//!   cargo run --release --example serve_bnn -- --obs-dump obs-snapshot
 //!
 //! Flow: Planner (Turing cost model, per-layer scheme selection)
 //!   -> persistent JSON plan cache -> arena executor (zero per-request
 //!   allocation) -> EngineModel (BatchModel) -> InferenceServer
 //!   (dynamic batcher) -> metrics.
+//!
+//! `--obs-dump STEM` writes `STEM.json` + `STEM.prom` observability
+//! snapshots on shutdown (see docs/OBSERVABILITY.md), then re-reads the
+//! JSON and fails (nonzero exit) unless it round-trips through
+//! `engine::json` back to the identical value — the CI bench-smoke job
+//! runs this mode and archives the snapshot.
 
 use std::time::Instant;
 
@@ -24,6 +31,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let requests = args.get_usize("requests", 2048);
     let cache_dir = args.get_or("cache", "plan_cache").to_string();
+    let obs_dump = args.get("obs-dump").map(std::path::PathBuf::from);
 
     // ---- plan (or load the cached plan) for the Table-5 MNIST MLP ----
     let model = mnist_mlp();
@@ -64,7 +72,8 @@ fn main() -> anyhow::Result<()> {
     );
     let engine_metrics = em.metrics_handle();
     let mut slot = Some(em);
-    let srv = InferenceServer::start(ServerConfig::default(), move || {
+    let cfg = ServerConfig { obs_dump: obs_dump.clone(), ..ServerConfig::default() };
+    let srv = InferenceServer::start(cfg, move || {
         Ok(Box::new(slot.take().expect("factory runs once")) as Box<dyn BatchModel>)
     });
 
@@ -95,5 +104,45 @@ fn main() -> anyhow::Result<()> {
         h
     };
     println!("argmax histogram: {hist:?}");
+
+    // ---- obs_dump mode: snapshot on shutdown + round-trip check ------
+    srv.shutdown();
+    if let Some(stem) = obs_dump {
+        let json_path = format!("{}.json", stem.display());
+        let prom_path = format!("{}.prom", stem.display());
+        let raw = std::fs::read_to_string(&json_path)
+            .map_err(|e| anyhow::anyhow!("read {json_path}: {e}"))?;
+        let value = tcbnn::engine::json::Value::parse(&raw)
+            .map_err(|e| anyhow::anyhow!("parse {json_path}: {e}"))?;
+        let snap = tcbnn::obs::Snapshot::from_json(&value)
+            .map_err(|e| anyhow::anyhow!("decode {json_path}: {e}"))?;
+        anyhow::ensure!(
+            snap.to_json() == value,
+            "obs snapshot does not round-trip through engine::json"
+        );
+        anyhow::ensure!(
+            snap.requests == requests as u64,
+            "snapshot counted {} requests, served {requests}",
+            snap.requests
+        );
+        println!(
+            "\nobs snapshot: {json_path} + {prom_path} \
+             ({} traces kept, {} dropped; {} layers attributed)",
+            snap.traces_pushed.min(snap.traces_capacity),
+            snap.traces_dropped,
+            snap.layers.len()
+        );
+        for l in &snap.layers {
+            println!(
+                "  L{} {:<10} {:<8} calls={} secs={:.6} drift={:.2}x",
+                l.index,
+                l.tag,
+                l.scheme,
+                l.calls,
+                l.secs,
+                l.drift()
+            );
+        }
+    }
     Ok(())
 }

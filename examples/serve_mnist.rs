@@ -46,7 +46,11 @@ fn main() -> anyhow::Result<()> {
     // ---- start the serving stack ---------------------------------------
     let dir2 = dir.clone();
     let srv = InferenceServer::start(
-        ServerConfig { max_wait: Duration::from_millis(1), queue_capacity: 16384 },
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 16384,
+            ..Default::default()
+        },
         move || Ok(Box::new(MlpModel::load(&dir2)?) as Box<dyn BatchModel>),
     );
 

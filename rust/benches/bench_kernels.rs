@@ -19,7 +19,14 @@
 //! the best scalar scheme for kernel shapes).  The per-scheme section
 //! runs one fixed plan per registered backend; the run aborts (failing
 //! `bench-smoke`) if the emitted scheme list does not match
-//! `BackendRegistry::names()`.  See docs/BENCH.md.
+//! `BackendRegistry::names()`.
+//!
+//! Each fixed-plan cell also records the simulator-vs-execution
+//! `cost_gap`: the plan's predicted total seconds next to the measured
+//! p50, plus a symmetric accuracy ratio `min(pred/meas, meas/pred)` in
+//! (0, 1].  Host (calibratable) schemes gate that accuracy through
+//! `benches/baseline.json` — a cost-model regression in EITHER
+//! direction shrinks the ratio and fails CI.  See docs/BENCH.md.
 
 use tcbnn::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
 use tcbnn::engine::json::Value;
@@ -142,6 +149,10 @@ fn main() {
 
     let mut entries: Vec<Entry> = Vec::new();
     let mut ratios: Vec<(String, f64)> = Vec::new();
+    // simulated-vs-executed gap per fixed-plan cell:
+    // (model, scheme, batch, predicted total secs, measured p50 secs,
+    // symmetric accuracy in (0, 1])
+    let mut cost_gaps: Vec<(String, String, usize, f64, f64, f64)> = Vec::new();
 
     // ---- model x scheme x batch: executed img/s on this machine ----
     for model in [mnist_mlp(), cifar_lite()] {
@@ -204,14 +215,14 @@ fn main() {
             // check below
             let mut fast_fps = 0.0f64;
             for scheme in registry.schemes() {
-                let mut exec = EngineExecutor::new(
-                    model.clone(),
-                    &weights,
-                    planner.plan_fixed(&model, batch, scheme),
-                )
-                .unwrap_or_else(|e| {
-                    panic!("{} executor for {}: {e}", scheme.name(), model.name)
-                });
+                let plan = planner.plan_fixed(&model, batch, scheme);
+                // capture the simulator's prediction before the plan
+                // moves into the executor (cost_gap section below)
+                let predicted_s = plan.total_secs;
+                let mut exec = EngineExecutor::new(model.clone(), &weights, plan)
+                    .unwrap_or_else(|e| {
+                        panic!("{} executor for {}: {e}", scheme.name(), model.name)
+                    });
                 let r = b.bench(
                     &format!("scheme/{}/{}/b{batch}", model.name, scheme.name()),
                     batch as f64,
@@ -232,6 +243,39 @@ fn main() {
                     &r,
                     bpi,
                 ));
+                // ROADMAP (d): simulated vs executed, per scheme.  The
+                // accuracy is symmetric — min(pred/meas, meas/pred) —
+                // so drifting slow OR fast both shrink it below 1.
+                let measured_s = r.summary.p50;
+                let accuracy = if predicted_s > 0.0 && measured_s > 0.0 {
+                    (predicted_s / measured_s).min(measured_s / predicted_s)
+                } else {
+                    0.0
+                };
+                cost_gaps.push((
+                    model.name.to_string(),
+                    scheme.name().to_string(),
+                    batch,
+                    predicted_s,
+                    measured_s,
+                    accuracy,
+                ));
+                // only host backends predict THIS machine (GPU schemes
+                // predict a simulated 2080 Ti — their gap is
+                // informational, not gateable)
+                if registry
+                    .get(scheme)
+                    .is_some_and(tcbnn::tuner::microbench::is_host_backend)
+                {
+                    ratios.push((
+                        format!(
+                            "cost_gap/{}/b{batch}/{}_accuracy",
+                            model.name,
+                            scheme.name()
+                        ),
+                        accuracy,
+                    ));
+                }
             }
 
             match naive_fps {
@@ -436,6 +480,15 @@ fn main() {
             e.lat_p99_s * 1e6
         );
     }
+    println!("\ncost gap (simulated vs executed, per fixed-scheme plan):");
+    for (model, scheme, batch, pred, meas, acc) in &cost_gaps {
+        println!(
+            "  {model:<12} {scheme:<10} b{batch:<4} pred {:>9.1} us  \
+             p50 {:>9.1} us  accuracy {acc:.3}",
+            pred * 1e6,
+            meas * 1e6
+        );
+    }
     println!("\nratios (current run):");
     for (n, v) in &ratios {
         println!("  {n:<58} {v:.2}x");
@@ -446,7 +499,7 @@ fn main() {
     );
 
     let doc = Value::Obj(vec![
-        ("schema".to_string(), Value::Num(3.0)),
+        ("schema".to_string(), Value::Num(4.0)),
         (
             "mode".to_string(),
             Value::Str(if quick { "quick" } else { "full" }.to_string()),
@@ -493,6 +546,24 @@ fn main() {
                         Value::Obj(vec![
                             ("pair".to_string(), Value::Str(pair.clone())),
                             ("gb_s".to_string(), Value::Num(*gbs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "cost_gap".to_string(),
+            Value::Arr(
+                cost_gaps
+                    .iter()
+                    .map(|(model, scheme, batch, pred, meas, acc)| {
+                        Value::Obj(vec![
+                            ("model".to_string(), Value::Str(model.clone())),
+                            ("scheme".to_string(), Value::Str(scheme.clone())),
+                            ("batch".to_string(), Value::Num(*batch as f64)),
+                            ("predicted_s".to_string(), Value::Num(*pred)),
+                            ("measured_p50_s".to_string(), Value::Num(*meas)),
+                            ("accuracy".to_string(), Value::Num(*acc)),
                         ])
                     })
                     .collect(),

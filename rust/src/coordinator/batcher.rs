@@ -23,6 +23,9 @@ pub struct Batch {
     pub rows: usize,
     /// rows after padding to the bucket size
     pub padded: usize,
+    /// how long the batch's oldest request sat queued before formation
+    /// (the queue-wait span in the batch's `obs::trace`)
+    pub oldest_wait: Duration,
 }
 
 /// Batching policy.
@@ -155,7 +158,7 @@ impl Batcher {
                 data[last_row_start..last_row_start + self.cfg.row_elems].to_vec();
             data.extend_from_slice(&row);
         }
-        Some(Batch { ids, data, rows: take, padded: bucket })
+        Some(Batch { ids, data, rows: take, padded: bucket, oldest_wait })
     }
 }
 
@@ -203,6 +206,7 @@ mod tests {
         let batch = b.next_batch(later).expect("deadline flush");
         assert_eq!(batch.rows, 3);
         assert_eq!(batch.padded, 8, "padded to the smallest bucket");
+        assert_eq!(batch.oldest_wait, Duration::from_millis(2), "queue wait recorded");
         // padding rows replicate the last real row
         assert_eq!(batch.data.len(), 8 * 4);
         assert_eq!(&batch.data[3 * 4..4 * 4], &batch.data[7 * 4..8 * 4]);

@@ -1,19 +1,39 @@
-//! Serving metrics: latency histogram + throughput counters.
+//! Serving metrics: bounded latency histogram + throughput counters
+//! + the obs snapshot the report/JSON/Prometheus renderings share.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::obs::export::{LayerAttr, RepackEdge, Snapshot};
+use crate::obs::hist::LogHistogram;
+use crate::obs::trace::TraceRing;
 use crate::util::stats::Summary;
 
-/// Thread-safe metrics sink.
-#[derive(Default)]
+/// Batch traces retained for inspection (ring capacity; older traces
+/// are evicted and counted, never accumulated).
+const TRACE_CAPACITY: usize = 256;
+
+/// Thread-safe metrics sink.  Memory is bounded regardless of request
+/// count: latencies land in a fixed-footprint [`LogHistogram`], traces
+/// in a fixed-capacity [`TraceRing`], and everything else is counters.
 pub struct Metrics {
     inner: Mutex<Inner>,
+    hist: LogHistogram,
+    traces: TraceRing,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            inner: Mutex::new(Inner::default()),
+            hist: LogHistogram::new(),
+            traces: TraceRing::new(TRACE_CAPACITY),
+        }
+    }
 }
 
 #[derive(Default)]
 struct Inner {
-    latencies: Vec<f64>,
     completed: u64,
     batches: u64,
     padded_rows: u64,
@@ -36,6 +56,12 @@ struct Inner {
     /// latest cumulative explicit layout-repack counters from the
     /// serving executor: (consuming scheme name, ops, streamed bytes)
     repacks: Vec<(String, u64, u64)>,
+    /// latest cumulative per-layer attribution from the serving
+    /// executor (calls, measured secs, predicted secs per plan layer)
+    layers: Vec<LayerAttr>,
+    /// latest cumulative per-edge repack attribution from the serving
+    /// executor
+    repack_edges: Vec<RepackEdge>,
 }
 
 impl Metrics {
@@ -44,6 +70,9 @@ impl Metrics {
     }
 
     pub fn record_batch(&self, real_rows: usize, padded_rows: usize, latencies_s: &[f64]) {
+        for &lat in latencies_s {
+            self.hist.record(lat);
+        }
         let mut m = self.inner.lock().unwrap();
         if m.started.is_none() {
             m.started = Some(Instant::now());
@@ -53,7 +82,6 @@ impl Metrics {
         m.real_rows += real_rows as u64;
         m.padded_rows += padded_rows as u64;
         m.completed += latencies_s.len() as u64;
-        m.latencies.extend_from_slice(latencies_s);
     }
 
     /// Record one engine batch execution: `rows` images in `secs` of
@@ -131,8 +159,46 @@ impl Metrics {
         self.inner.lock().unwrap().repacks.clone()
     }
 
+    /// Publish the serving executor's cumulative per-layer attribution
+    /// (latest snapshot wins — the counters accumulate on the executor).
+    pub fn set_layer_attribution(&self, layers: Vec<LayerAttr>) {
+        self.inner.lock().unwrap().layers = layers;
+    }
+
+    /// Per-plan-layer cumulative (calls, measured secs, predicted
+    /// secs) — the per-layer drift feed.
+    pub fn layer_attribution(&self) -> Vec<LayerAttr> {
+        self.inner.lock().unwrap().layers.clone()
+    }
+
+    /// Publish the serving executor's cumulative per-edge repack
+    /// attribution (latest snapshot wins).
+    pub fn set_repack_edges(&self, edges: Vec<RepackEdge>) {
+        self.inner.lock().unwrap().repack_edges = edges;
+    }
+
+    /// Explicit repack traffic per plan edge (layer, src→dst layouts).
+    pub fn repack_edges(&self) -> Vec<RepackEdge> {
+        self.inner.lock().unwrap().repack_edges.clone()
+    }
+
+    /// The batch-trace ring (push from the serving loop, inspect from
+    /// tests/tools).
+    pub fn traces(&self) -> &TraceRing {
+        &self.traces
+    }
+
+    /// Latency summary from the bounded histogram — same `Summary`
+    /// shape the old Vec-backed implementation returned.  n, mean,
+    /// min, max are exact; percentiles are bucket-interpolated (~9%).
     pub fn latency_summary(&self) -> Summary {
-        Summary::from(&self.inner.lock().unwrap().latencies)
+        self.hist.summary()
+    }
+
+    /// The latency store's memory footprint — constant by construction
+    /// (see `obs::hist`), whatever the request count.
+    pub fn hist_footprint_bytes(&self) -> usize {
+        self.hist.footprint_bytes()
     }
 
     /// Completed requests / wall time between first and last batch.
@@ -164,55 +230,49 @@ impl Metrics {
         self.inner.lock().unwrap().batches
     }
 
+    /// Materialize everything into an [`obs::export::Snapshot`] — the
+    /// single struct the human report, the JSON document, and the
+    /// Prometheus exposition all render from.
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.inner.lock().unwrap();
+        // derived quantities computed inline (the accessor methods
+        // would re-take the non-reentrant lock)
+        let throughput_rps = match (m.started, m.finished) {
+            (Some(s), Some(f)) if f > s => {
+                m.completed as f64 / (f - s).as_secs_f64()
+            }
+            _ => 0.0,
+        };
+        let padding_frac = if m.padded_rows == 0 {
+            0.0
+        } else {
+            1.0 - m.real_rows as f64 / m.padded_rows as f64
+        };
+        Snapshot {
+            requests: m.completed,
+            batches: m.batches,
+            throughput_rps,
+            padding_frac,
+            latency: self.hist.summary(),
+            latency_buckets: self.hist.nonzero_buckets(),
+            engine_rows: m.engine_rows,
+            engine_busy_s: m.engine_busy_s,
+            plan_cache_hits: m.plan_cache_hits,
+            plan_cache_misses: m.plan_cache_misses,
+            replans: m.replans,
+            cost_drift: m.cost_drift.clone(),
+            repacks_by_scheme: m.repacks.clone(),
+            repack_edges: m.repack_edges.clone(),
+            layers: m.layers.clone(),
+            traces_pushed: self.traces.pushed(),
+            traces_dropped: self.traces.dropped(),
+            traces_capacity: self.traces.capacity() as u64,
+        }
+    }
+
+    /// The human one-liner — one rendering of [`Metrics::snapshot`].
     pub fn report(&self) -> String {
-        let s = self.latency_summary();
-        let mut out = format!(
-            "requests={} batches={} p50={:.3}ms p90={:.3}ms p99={:.3}ms \
-             mean={:.3}ms throughput={:.0} req/s padding={:.1}%",
-            self.completed(),
-            self.batches(),
-            s.p50 * 1e3,
-            s.p90 * 1e3,
-            s.p99 * 1e3,
-            s.mean * 1e3,
-            self.throughput_fps(),
-            self.padding_overhead() * 100.0
-        );
-        if self.engine_rows() > 0 {
-            out.push_str(&format!(
-                " engine={:.0} img/s",
-                self.engine_images_per_sec()
-            ));
-        }
-        let (h, mi) = (self.plan_cache_hits(), self.plan_cache_misses());
-        if h + mi > 0 {
-            out.push_str(&format!(" plan_cache={h}h/{mi}m"));
-        }
-        // explicit layout-repack traffic, totalled across schemes
-        let repacks = self.repack_stats();
-        let (ops, bytes) = repacks
-            .iter()
-            .fold((0u64, 0u64), |(o, b), (_, ro, rb)| (o + ro, b + rb));
-        if ops > 0 {
-            out.push_str(&format!(" repack={ops}ops/{bytes}B"));
-        }
-        let replans = self.replans();
-        if replans > 0 {
-            out.push_str(&format!(" replans={replans}"));
-        }
-        // the worst live drift (ratio furthest from 1x in either
-        // direction) is the one worth a glance
-        if let Some((name, ratio, _)) = self
-            .cost_drift()
-            .into_iter()
-            .max_by(|a, b| {
-                let d = |r: f64| r.max(1.0 / r);
-                d(a.1).partial_cmp(&d(b.1)).unwrap()
-            })
-        {
-            out.push_str(&format!(" drift[{name}]={ratio:.2}x"));
-        }
-        out
+        self.snapshot().render_report()
     }
 }
 
@@ -228,7 +288,9 @@ mod tests {
         assert_eq!(m.completed(), 11);
         assert_eq!(m.batches(), 2);
         let s = m.latency_summary();
-        assert!(s.p50 >= 0.001 && s.p50 <= 0.002);
+        // histogram percentiles: exact to within bucket resolution
+        assert!((s.p50 - 0.001).abs() <= 0.001 * 0.1, "p50 {}", s.p50);
+        assert!((s.p99 - 0.002).abs() <= 0.002 * 0.1, "p99 {}", s.p99);
         let pad = m.padding_overhead();
         assert!((pad - (1.0 - 11.0 / 16.0)).abs() < 1e-9);
         assert!(m.report().contains("requests=11"));
@@ -301,5 +363,35 @@ mod tests {
         let fps = m.engine_images_per_sec();
         assert!((fps - 40.0 / 0.005).abs() < 1e-6, "fps {fps}");
         assert!(m.report().contains("engine="));
+    }
+
+    #[test]
+    fn snapshot_carries_attribution_and_report_matches() {
+        let m = Metrics::new();
+        m.record_batch(4, 4, &[0.001; 4]);
+        m.record_engine_batch(4, 0.002);
+        m.set_layer_attribution(vec![LayerAttr {
+            index: 0,
+            tag: "1024FC".to_string(),
+            scheme: "FASTPATH".to_string(),
+            calls: 1,
+            secs: 0.002,
+            predicted_s: 0.001,
+        }]);
+        m.set_repack_edges(vec![RepackEdge {
+            layer: 1,
+            src: "Row32".to_string(),
+            dst: "Blocked64".to_string(),
+            ops: 1,
+            bytes: 512,
+            secs: 1e-6,
+        }]);
+        let snap = m.snapshot();
+        assert_eq!(snap.requests, 4);
+        assert_eq!(snap.layers.len(), 1);
+        assert_eq!(snap.repack_edges[0].bytes, 512);
+        // report() is exactly the snapshot's rendering
+        assert_eq!(m.report(), m.snapshot().render_report());
+        assert!(m.report().contains("layer_drift[1024FC]=2.00x"), "{}", m.report());
     }
 }

@@ -14,6 +14,8 @@ use anyhow::{Context, Result};
 
 use super::batcher::{Batcher, BatcherConfig, Request};
 use super::metrics::Metrics;
+use crate::obs::export::Snapshot;
+use crate::obs::trace::{BatchTrace, Span};
 
 /// A batch-executing model.  Implementations: the PJRT MLP (serve_mnist)
 /// and the in-process mock used by coordinator tests.
@@ -25,6 +27,17 @@ pub trait BatchModel {
     fn out_elems(&self) -> usize;
     /// Batch sizes this model was compiled for.
     fn buckets(&self) -> Vec<usize>;
+    /// Per-layer (and repack) spans for the most recent `run_batch`,
+    /// for the batch's `obs::trace`.  Default: none (opaque models).
+    fn layer_spans(&self) -> Vec<Span> {
+        Vec::new()
+    }
+    /// The model's own engine-side telemetry snapshot (per-layer
+    /// attribution, plan-cache counters, drift), grafted into the
+    /// server snapshot at `obs_dump` time.  Default: none.
+    fn obs_snapshot(&self) -> Option<Snapshot> {
+        None
+    }
 }
 
 /// One response.
@@ -41,11 +54,19 @@ pub struct Response {
 pub struct ServerConfig {
     pub max_wait: Duration,
     pub queue_capacity: usize,
+    /// When set, the worker writes the final telemetry snapshot to
+    /// `<stem>.json` (engine::json document) and `<stem>.prom`
+    /// (Prometheus text) on shutdown.
+    pub obs_dump: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_wait: Duration::from_millis(2), queue_capacity: 8192 }
+        ServerConfig {
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 8192,
+            obs_dump: None,
+        }
     }
 }
 
@@ -214,7 +235,10 @@ fn worker_loop<F>(
         } else {
             now
         };
+        let t_asm = Instant::now();
         if let Some(batch) = batcher.next_batch(deadline_now) {
+            // assembly span: pops, input concatenation, tail padding
+            let assemble_s = t_asm.elapsed().as_secs_f64();
             let logits = model
                 .run_batch(&batch.data, batch.padded)
                 .context("batch execution")
@@ -231,6 +255,19 @@ fn worker_loop<F>(
                 })
                 .collect();
             metrics.record_batch(batch.rows, batch.padded, &lats);
+            // trace: queue wait + assembly + the model's per-layer spans
+            let mut spans = Vec::with_capacity(2);
+            spans.push(Span::queue(batch.oldest_wait.as_secs_f64()));
+            spans.push(Span::assemble(
+                assemble_s,
+                (batch.data.len() * std::mem::size_of::<f32>()) as u64,
+            ));
+            spans.extend(model.layer_spans());
+            metrics.traces().push(BatchTrace {
+                seq: metrics.batches(),
+                ids: batch.ids.clone(),
+                spans,
+            });
             for (row, id) in batch.ids.iter().enumerate() {
                 let lat = Duration::from_secs_f64(lats[row]);
                 if let Some(tx) = waiters.remove(id) {
@@ -245,8 +282,35 @@ fn worker_loop<F>(
                 }
             }
         } else if shutting_down && batcher.is_empty() {
+            if let Some(stem) = &cfg.obs_dump {
+                dump_obs(stem, model.as_ref(), &metrics);
+            }
             return;
         }
+    }
+}
+
+/// Write the final telemetry snapshot next to `stem`: `<stem>.json`
+/// (an `engine::json` document that round-trips through
+/// `Snapshot::from_json`) and `<stem>.prom` (Prometheus text).  The
+/// server-side snapshot is grafted with the model's own engine-side
+/// snapshot when it has one (per-layer drift, repack edges, ...).
+fn dump_obs(stem: &std::path::Path, model: &dyn BatchModel, metrics: &Metrics) {
+    let mut snap = metrics.snapshot();
+    if let Some(eng) = model.obs_snapshot() {
+        snap.absorb_engine(&eng);
+    }
+    // format! instead of Path::with_extension: stems with dots in the
+    // final component would lose them
+    let json_path = format!("{}.json", stem.display());
+    let prom_path = format!("{}.prom", stem.display());
+    let mut doc = snap.to_json().to_string();
+    doc.push('\n');
+    if let Err(e) = std::fs::write(&json_path, doc) {
+        eprintln!("obs_dump: failed to write {json_path}: {e}");
+    }
+    if let Err(e) = std::fs::write(&prom_path, snap.to_prometheus()) {
+        eprintln!("obs_dump: failed to write {prom_path}: {e}");
     }
 }
 
@@ -344,7 +408,11 @@ mod tests {
         // its waiter, so the client blocked forever.  Now the response
         // sender drops and the client sees a closed channel.
         let srv = InferenceServer::start(
-            ServerConfig { max_wait: Duration::from_millis(2), queue_capacity: 8 },
+            ServerConfig {
+                max_wait: Duration::from_millis(2),
+                queue_capacity: 8,
+                ..Default::default()
+            },
             || {
                 Ok(Box::new(MockModel {
                     row_elems: 4,
@@ -367,6 +435,44 @@ mod tests {
         assert_eq!(served + rejected, 60);
         assert!(served >= 8, "some requests must be served (got {served})");
         assert_eq!(srv.metrics.completed(), served as u64);
+    }
+
+    #[test]
+    fn traces_batches_and_dumps_snapshot_on_shutdown() {
+        let stem = std::env::temp_dir()
+            .join(format!("tcbnn-obs-test-{}", std::process::id()));
+        let srv = InferenceServer::start(
+            ServerConfig { obs_dump: Some(stem.clone()), ..Default::default() },
+            || {
+                Ok(Box::new(MockModel {
+                    row_elems: 4,
+                    out_elems: 3,
+                    delay: Duration::ZERO,
+                }) as Box<dyn BatchModel>)
+            },
+        );
+        let resps = srv.submit_all((0..8).map(|i| vec![i as f32; 4]).collect());
+        assert_eq!(resps.len(), 8);
+        assert!(srv.metrics.traces().pushed() >= 1, "batch was traced");
+        let t = srv.metrics.traces().find_request(0).expect("request 0 traced");
+        use crate::obs::trace::SpanKind;
+        assert_eq!(t.spans[0].kind, SpanKind::Queue);
+        assert_eq!(t.spans[1].kind, SpanKind::Assemble);
+        assert!(t.spans[1].bytes > 0, "assembly bytes recorded");
+        srv.shutdown();
+        // shutdown wrote <stem>.json + <stem>.prom; JSON parses and
+        // round-trips through the snapshot type
+        let json_path = format!("{}.json", stem.display());
+        let prom_path = format!("{}.prom", stem.display());
+        let text = std::fs::read_to_string(&json_path).expect("json dumped");
+        let parsed = crate::engine::json::Value::parse(&text).expect("valid JSON");
+        let snap = Snapshot::from_json(&parsed).expect("snapshot shape");
+        assert_eq!(snap.requests, 8);
+        assert!(snap.traces_pushed >= 1);
+        let prom = std::fs::read_to_string(&prom_path).expect("prom dumped");
+        assert!(prom.contains("tcbnn_requests_total 8"), "{prom}");
+        let _ = std::fs::remove_file(&json_path);
+        let _ = std::fs::remove_file(&prom_path);
     }
 
     #[test]

@@ -430,6 +430,22 @@ impl BatchModel for EngineModel {
                 .map(|(name, ops, bytes)| (name.to_string(), ops, bytes))
                 .collect(),
         );
+        // ...and the per-layer / per-edge attribution for obs snapshots
+        self.metrics.set_layer_attribution(self.exec.layer_attribution());
+        self.metrics.set_repack_edges(
+            self.exec
+                .repack_edges()
+                .iter()
+                .map(|e| crate::obs::RepackEdge {
+                    layer: e.layer,
+                    src: e.src.to_string(),
+                    dst: e.dst.to_string(),
+                    ops: e.ops,
+                    bytes: e.bytes,
+                    secs: e.secs,
+                })
+                .collect(),
+        );
         self.maybe_replan();
         Ok(out)
     }
@@ -444,6 +460,14 @@ impl BatchModel for EngineModel {
 
     fn buckets(&self) -> Vec<usize> {
         self.buckets.clone()
+    }
+
+    fn layer_spans(&self) -> Vec<crate::obs::Span> {
+        self.exec.last_pass_spans()
+    }
+
+    fn obs_snapshot(&self) -> Option<crate::obs::Snapshot> {
+        Some(self.metrics.snapshot())
     }
 }
 
@@ -699,6 +723,44 @@ mod tests {
         let cache = super::PlanCache::open(&dir).unwrap();
         assert!(em.shutdown(&cache).unwrap().is_none());
         assert!(!cache.profile_path().exists());
+    }
+
+    #[test]
+    fn run_batch_publishes_layer_attribution_and_spans() {
+        let m = mnist_mlp();
+        let mut rng = Rng::new(97);
+        let w = random_weights(&m, &mut rng);
+        let planner = Planner::new(&RTX2080TI);
+        let mut em = EngineModel::builder(&planner, &m, &w)
+            .buckets(vec![8])
+            .build()
+            .unwrap();
+        let x: Vec<f32> = (0..8 * 784).map(|_| rng.next_f32() - 0.5).collect();
+        let _ = em.run_batch(&x, 8).unwrap();
+        let attr = em.metrics.layer_attribution();
+        assert_eq!(attr.len(), m.layers.len(), "one entry per plan layer");
+        assert!(attr.iter().all(|a| a.calls == 1));
+        // the model's spans mirror the plan (one Layer span per layer)
+        use crate::obs::SpanKind;
+        let spans = em.layer_spans();
+        let n_layers =
+            spans.iter().filter(|s| s.kind == SpanKind::Layer).count();
+        assert_eq!(n_layers, m.layers.len());
+        // layer span seconds sum to the engine busy time within
+        // tolerance (the pass is the busy time minus dispatch overhead)
+        let span_s: f64 = spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Layer)
+            .map(|s| s.secs)
+            .sum();
+        let snap = em.obs_snapshot().expect("engine model snapshots");
+        assert!(snap.engine_busy_s > 0.0);
+        assert!(
+            span_s <= snap.engine_busy_s * 1.05,
+            "layer spans ({span_s}) cannot exceed busy time ({})",
+            snap.engine_busy_s
+        );
+        assert_eq!(snap.layers.len(), m.layers.len(), "snapshot carries attribution");
     }
 
     #[test]

@@ -36,6 +36,15 @@
 //! surfaced through coordinator `Metrics`.  Layout never changes a
 //! bit: the u64 packing is exactly the `bitops::pack64` pairing of the
 //! u32 words, asserted end to end in `rust/tests/layout_equivalence.rs`.
+//!
+//! Every layer is wall-timed on every pass — one timing source with
+//! two consumers: the optional `tuner::LiveCosts` sink (per-scheme
+//! EWMA driving re-planning) and the always-on per-layer attribution
+//! ([`EngineExecutor::layer_attribution`]: cumulative calls, measured
+//! seconds, predicted seconds per plan layer) plus per-edge repack
+//! attribution ([`EngineExecutor::repack_edges`]) that `obs::export`
+//! snapshots report.  [`EngineExecutor::last_pass_spans`] renders the
+//! most recent pass as `obs::trace` spans for the serving trace ring.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -49,12 +58,25 @@ use crate::layout::{repack, LayoutKind};
 use crate::nn::forward::{LayerWeights, ModelWeights};
 use crate::nn::layer::LayerSpec;
 use crate::nn::ModelDef;
-use crate::nn::Scheme;
 use crate::tuner::LiveCosts;
 use crate::util::threadpool::scoped_chunks;
 
 use super::arena::Arena;
 use super::plan::ModelPlan;
+
+/// Cumulative explicit repack traffic on one plan edge, keyed by the
+/// consuming layer's index and the `src -> dst` layout pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RepackEdgeStat {
+    /// index of the consuming plan layer
+    pub layer: usize,
+    pub src: LayoutKind,
+    pub dst: LayoutKind,
+    pub ops: u64,
+    pub bytes: u64,
+    /// wall seconds spent inside the repack converters on this edge
+    pub secs: f64,
+}
 
 /// Execution-ready per-layer state: structural weights for the
 /// scheme-independent layers, opaque backend handles for the binarized
@@ -114,8 +136,21 @@ pub struct EngineExecutor {
     /// (`CostSource::prior_layer_secs`), or the EWMA feeds on itself.
     latency_baselines: Option<Vec<f64>>,
     /// cumulative explicit repack ops materialized on layout edges,
-    /// keyed by the consuming layer's scheme: (scheme, ops, bytes)
-    repacks: Vec<(Scheme, u64, u64)>,
+    /// keyed by (consuming layer, src layout, dst layout)
+    repack_edges: Vec<RepackEdgeStat>,
+    /// per-layer cumulative attribution: (calls, measured secs,
+    /// predicted secs scaled to each executed batch)
+    layer_stats: Vec<(u64, f64, f64)>,
+    /// per-layer wall seconds of the most recent pass
+    last_layer_secs: Vec<f64>,
+    /// per-layer output activation bytes per row (f32 logits for the
+    /// classifier head, packed bits otherwise) — sized at build time
+    layer_row_bytes: Vec<u64>,
+    /// rows of the most recent pass
+    last_batch: usize,
+    /// explicit repacks of the most recent pass:
+    /// (layer, src, dst, bytes, secs)
+    last_repacks: Vec<(usize, LayoutKind, LayoutKind, u64, f64)>,
 }
 
 impl EngineExecutor {
@@ -167,6 +202,19 @@ impl EngineExecutor {
         let arena = Arena::for_model(&model, batch_cap)
             .with_scratch_words(scratch_words)
             .with_flat64_words(plan_flat64_words(&model, &plan, batch_cap));
+        let n_layers = model.layers.len();
+        // per-layer output payload per row, for trace span bytes: the
+        // classifier emits f32 logits, everything else packed bits
+        let mut layer_row_bytes = Vec::with_capacity(n_layers);
+        let mut dims = model.input;
+        for (li, l) in model.layers.iter().enumerate() {
+            dims = dims.after(l);
+            layer_row_bytes.push(if li + 1 == n_layers {
+                (dims.flat() * std::mem::size_of::<f32>()) as u64
+            } else {
+                dims.flat().div_ceil(8) as u64
+            });
+        }
         Ok(EngineExecutor {
             model,
             plan,
@@ -176,7 +224,12 @@ impl EngineExecutor {
             threads: crate::util::threadpool::default_threads(),
             latency_sink: None,
             latency_baselines: None,
-            repacks: Vec::new(),
+            repack_edges: Vec::new(),
+            layer_stats: vec![(0, 0.0, 0.0); n_layers],
+            last_layer_secs: vec![0.0; n_layers],
+            layer_row_bytes,
+            last_batch: 0,
+            last_repacks: Vec::new(),
         })
     }
 
@@ -237,9 +290,74 @@ impl EngineExecutor {
     /// Cumulative explicit repack ops this executor has materialized on
     /// planned layout edges: `(consuming layer's scheme name, ops,
     /// streamed bytes)`.  Zero-cost chained edges (layouts already
-    /// agreeing) are not counted — nothing moved.
+    /// agreeing) are not counted — nothing moved.  Aggregated by scheme
+    /// from the per-edge stats ([`EngineExecutor::repack_edges`]).
     pub fn repack_stats(&self) -> Vec<(&'static str, u64, u64)> {
-        self.repacks.iter().map(|(s, c, b)| (s.name(), *c, *b)).collect()
+        let mut out: Vec<(&'static str, u64, u64)> = Vec::new();
+        for e in &self.repack_edges {
+            let name = self.plan.layers[e.layer].scheme.name();
+            match out.iter_mut().find(|(n, _, _)| *n == name) {
+                Some((_, ops, bytes)) => {
+                    *ops += e.ops;
+                    *bytes += e.bytes;
+                }
+                None => out.push((name, e.ops, e.bytes)),
+            }
+        }
+        out
+    }
+
+    /// Cumulative explicit repack traffic per plan edge — the per-edge
+    /// attribution `obs::export` snapshots carry.
+    pub fn repack_edges(&self) -> &[RepackEdgeStat] {
+        &self.repack_edges
+    }
+
+    /// Cumulative per-layer attribution: how often each plan layer ran,
+    /// measured wall seconds, and the plan's predicted seconds scaled
+    /// to each executed batch — the per-layer drift feed.
+    pub fn layer_attribution(&self) -> Vec<crate::obs::LayerAttr> {
+        self.plan
+            .layers
+            .iter()
+            .zip(&self.layer_stats)
+            .map(|(lp, &(calls, secs, predicted_s))| crate::obs::LayerAttr {
+                index: lp.index,
+                tag: lp.tag.clone(),
+                scheme: lp.scheme.name().to_string(),
+                calls,
+                secs,
+                predicted_s,
+            })
+            .collect()
+    }
+
+    /// The most recent pass rendered as `obs::trace` spans: one `Layer`
+    /// span per plan layer ("L<i>/<tag>/<scheme>", measured seconds,
+    /// output activation bytes), with a `Repack` span interleaved
+    /// before each consuming layer that materialized an explicit
+    /// layout conversion.  Empty layer timings (never ran) render as
+    /// zero-second spans.
+    pub fn last_pass_spans(&self) -> Vec<crate::obs::Span> {
+        let mut spans =
+            Vec::with_capacity(self.plan.layers.len() + self.last_repacks.len());
+        for (li, lp) in self.plan.layers.iter().enumerate() {
+            for &(rl, rsrc, rdst, bytes, secs) in &self.last_repacks {
+                if rl == li {
+                    spans.push(crate::obs::Span::repack(
+                        format!("L{li}/{rsrc}->{rdst}"),
+                        secs,
+                        bytes,
+                    ));
+                }
+            }
+            spans.push(crate::obs::Span::layer(
+                format!("L{li}/{}/{}", lp.tag, lp.scheme.name()),
+                self.last_layer_secs[li],
+                self.layer_row_bytes[li] * self.last_batch as u64,
+            ));
+        }
+        spans
     }
 
     /// Run `batch` rows of fp32 input (NHWC for conv models, flat rows
@@ -255,21 +373,18 @@ impl EngineExecutor {
         let mut cur_in_a = true;
         let threads = self.threads;
         let n_layers = self.model.layers.len();
+        self.last_batch = batch;
         // explicit repack ops materialized this pass (merged into the
-        // cumulative per-scheme counters after the layer loop, when the
-        // arena borrows have ended)
-        let mut repack_log: Vec<(Scheme, u64)> = Vec::new();
+        // cumulative per-edge counters after the layer loop, when the
+        // arena borrows have ended): (layer, src, dst, bytes, secs)
+        let mut repack_log: Vec<(usize, LayoutKind, LayoutKind, u64, f64)> =
+            Vec::new();
         for li in 0..n_layers {
             let layer = self.model.layers[li].clone();
-            // live-feedback timing covers only backend-dispatched layers
-            let timed = self.latency_sink.is_some()
-                && matches!(
-                    layer,
-                    LayerSpec::BinConv { .. }
-                        | LayerSpec::BinFc { .. }
-                        | LayerSpec::FinalFc { .. }
-                );
-            let t0 = if timed { Some(Instant::now()) } else { None };
+            // every layer is wall-timed: the per-layer attribution is
+            // always on, the live-feedback sink (below) consumes the
+            // same measurement for backend-dispatched layers
+            let t0 = Instant::now();
             let plan_scheme = self.plan.layers[li].scheme;
             let baseline_secs = self
                 .latency_baselines
@@ -413,7 +528,7 @@ impl EngineExecutor {
                     // 1. materialize the input in the planned layout and
                     //    run the backend dot pass into the i32 staging
                     let scratch = fc.scratch_words(batch);
-                    if let Some(bytes) = fc_input_and_dot(
+                    if let Some((rs, rd, bytes, secs)) = fc_input_and_dot(
                         fc.as_ref(),
                         in_l,
                         repr,
@@ -428,7 +543,7 @@ impl EngineExecutor {
                         t,
                         threads,
                     ) {
-                        repack_log.push((plan_scheme, bytes));
+                        repack_log.push((li, rs, rd, bytes, secs));
                     }
                     // 2. threshold-pack into the planned output layout —
                     //    the same comparison rule either way, so the bits
@@ -464,7 +579,7 @@ impl EngineExecutor {
                     let wpl_in = d_in.div_ceil(32);
                     let t = par_threads(threads, batch * d_out * wpl_in / 8);
                     let scratch = fc.scratch_words(batch);
-                    if let Some(bytes) = fc_input_and_dot(
+                    if let Some((rs, rd, bytes, secs)) = fc_input_and_dot(
                         fc.as_ref(),
                         in_l,
                         repr,
@@ -479,7 +594,7 @@ impl EngineExecutor {
                         t,
                         threads,
                     ) {
-                        repack_log.push((plan_scheme, bytes));
+                        repack_log.push((li, rs, rd, bytes, secs));
                     }
                     let seg = &ints[..batch * d_out];
                     scoped_chunks(&mut logits[..batch * d_out], *d_out, t, |ni, row| {
@@ -491,21 +606,56 @@ impl EngineExecutor {
                 }
                 _ => panic!("layer/weight kind mismatch at layer {li}"),
             }
-            if let (Some(t0), Some(sink)) = (t0, self.latency_sink.as_deref()) {
-                // baselines are at batch capacity; scale linearly to the
-                // executing batch (exact for the word-ops term, within
-                // EWMA tolerance for the fixed dispatch term)
-                let predicted = baseline_secs * batch as f64 / self.batch_cap as f64;
-                sink.record(plan_scheme, predicted, t0.elapsed().as_secs_f64());
-            }
-        }
-        for (scheme, bytes) in repack_log {
-            match self.repacks.iter_mut().find(|(s, _, _)| *s == scheme) {
-                Some((_, ops, total)) => {
-                    *ops += 1;
-                    *total += bytes;
+            let dt = t0.elapsed().as_secs_f64();
+            // live-feedback recording covers only backend-dispatched
+            // layers (scheme-independent ones never drive a choice)
+            if let Some(sink) = self.latency_sink.as_deref() {
+                if matches!(
+                    layer,
+                    LayerSpec::BinConv { .. }
+                        | LayerSpec::BinFc { .. }
+                        | LayerSpec::FinalFc { .. }
+                ) {
+                    // baselines are at batch capacity; scale linearly to
+                    // the executing batch (exact for the word-ops term,
+                    // within EWMA tolerance for the fixed dispatch term)
+                    let predicted =
+                        baseline_secs * batch as f64 / self.batch_cap as f64;
+                    sink.record(plan_scheme, predicted, dt);
                 }
-                None => self.repacks.push((scheme, 1, bytes)),
+            }
+            // per-layer attribution is always on; predicted seconds use
+            // the plan's own secs (never the live-overridden baselines,
+            // so drift reads measured-vs-plan)
+            let plan_predicted =
+                self.plan.layers[li].secs * batch as f64 / self.batch_cap as f64;
+            let ls = &mut self.layer_stats[li];
+            ls.0 += 1;
+            ls.1 += dt;
+            ls.2 += plan_predicted;
+            self.last_layer_secs[li] = dt;
+        }
+        self.last_repacks.clear();
+        for (li, rsrc, rdst, bytes, secs) in repack_log {
+            self.last_repacks.push((li, rsrc, rdst, bytes, secs));
+            match self
+                .repack_edges
+                .iter_mut()
+                .find(|e| e.layer == li && e.src == rsrc && e.dst == rdst)
+            {
+                Some(e) => {
+                    e.ops += 1;
+                    e.bytes += bytes;
+                    e.secs += secs;
+                }
+                None => self.repack_edges.push(RepackEdgeStat {
+                    layer: li,
+                    src: rsrc,
+                    dst: rdst,
+                    ops: 1,
+                    bytes,
+                    secs,
+                }),
             }
         }
         let classes = self.model.classes;
@@ -525,9 +675,10 @@ fn par_threads(threads: usize, work_words: usize) -> usize {
 /// The shared FC/classifier input ladder: materialize the planned
 /// input layout (zero-cost chained edge, explicit repack through the
 /// pre-sized `flat64` buffer, or a plain flatten) and run the
-/// backend's dot pass into `ints`.  Returns the streamed bytes of an
-/// explicit repack op when one was materialized (the caller counts it
-/// against the consuming layer's scheme).
+/// backend's dot pass into `ints`.  Returns `(src layout, dst layout,
+/// streamed bytes, converter wall seconds)` when an explicit repack
+/// op was materialized (the caller attributes it to the consuming
+/// layer's edge).
 #[allow(clippy::too_many_arguments)]
 fn fc_input_and_dot(
     fc: &dyn PreparedFc,
@@ -543,7 +694,7 @@ fn fc_input_and_dot(
     ints: &mut [i32],
     t: usize,
     threads: usize,
-) -> Option<u64> {
+) -> Option<(LayoutKind, LayoutKind, u64, f64)> {
     let wpl_in = d_in.div_ceil(32);
     let w64_in = d_in.div_ceil(64);
     let edge_bytes = (batch * (wpl_in * 4 + w64_in * 8)) as u64;
@@ -560,23 +711,35 @@ fn fc_input_and_dot(
                 // rows the previous layer left in `src` — no staging
                 // copy through `dst`
                 assert_eq!(feat, d_in, "fc input width");
+                let t_rp = Instant::now();
                 repack::rows32_to_rows64(
                     &src[..batch * wpl_in],
                     wpl_in,
                     &mut flat64[..batch * w64_in],
                 );
-                repacked = Some(edge_bytes);
+                repacked = Some((
+                    LayoutKind::Row32,
+                    LayoutKind::Blocked64,
+                    edge_bytes,
+                    t_rp.elapsed().as_secs_f64(),
+                ));
             }
             _ => {
                 let feat = flatten_into(input, repr, batch, src, dst, d_in, threads);
                 assert_eq!(feat, d_in, "fc input width");
                 // explicit planned repack op, through the flat64 buffer
+                let t_rp = Instant::now();
                 repack::rows32_to_rows64(
                     &dst[..batch * wpl_in],
                     wpl_in,
                     &mut flat64[..batch * w64_in],
                 );
-                repacked = Some(edge_bytes);
+                repacked = Some((
+                    LayoutKind::Row32,
+                    LayoutKind::Blocked64,
+                    edge_bytes,
+                    t_rp.elapsed().as_secs_f64(),
+                ));
             }
         }
         let mut ctx = ExecCtx { words64: scratch, threads: t };
@@ -586,12 +749,18 @@ fn fc_input_and_dot(
             // explicit back-conversion for a Row32-native consumer of
             // a Blocked64 activation
             assert_eq!(feat, d_in, "fc input width");
+            let t_rp = Instant::now();
             repack::rows64_to_rows32(
                 &flat64[..batch * w64_in],
                 wpl_in,
                 &mut dst[..batch * wpl_in],
             );
-            repacked = Some(edge_bytes);
+            repacked = Some((
+                LayoutKind::Blocked64,
+                LayoutKind::Row32,
+                edge_bytes,
+                t_rp.elapsed().as_secs_f64(),
+            ));
         } else {
             let feat = flatten_into(input, repr, batch, src, dst, d_in, threads);
             assert_eq!(feat, d_in, "fc input width");
@@ -1302,6 +1471,75 @@ mod tests {
         // the recorded schemes are exactly the plan's backend-layer ones
         for lp in &exec.plan().layers[1..] {
             assert!(sink.samples(lp.scheme) > 0, "{:?}", lp.scheme);
+        }
+    }
+
+    #[test]
+    fn layer_attribution_and_spans_cover_the_plan() {
+        let m = conv_model();
+        let batch = 8;
+        let (mut exec, _weights) = build(m.clone(), 51, batch);
+        let mut rng = Rng::new(52);
+        let x: Vec<f32> =
+            (0..batch * m.input.flat()).map(|_| rng.next_f32() - 0.5).collect();
+        let _ = exec.forward(&x, batch);
+        let attr = exec.layer_attribution();
+        assert_eq!(attr.len(), m.layers.len(), "one entry per plan layer");
+        assert!(attr.iter().all(|a| a.calls == 1));
+        assert!(attr.iter().all(|a| a.secs >= 0.0 && a.predicted_s >= 0.0));
+        assert!(attr.iter().map(|a| a.predicted_s).sum::<f64>() > 0.0);
+        let spans = exec.last_pass_spans();
+        use crate::obs::SpanKind;
+        let layer_spans: Vec<_> =
+            spans.iter().filter(|s| s.kind == SpanKind::Layer).collect();
+        assert_eq!(layer_spans.len(), m.layers.len());
+        assert!(layer_spans[0].label.contains("C3"), "{}", layer_spans[0].label);
+        assert!(layer_spans.iter().all(|s| s.bytes > 0), "payload bytes set");
+        // single pass: span seconds equal the cumulative attribution
+        let span_total: f64 = layer_spans.iter().map(|s| s.secs).sum();
+        let attr_total: f64 = attr.iter().map(|a| a.secs).sum();
+        assert!((span_total - attr_total).abs() < 1e-12);
+        // attribution accumulates across passes
+        let _ = exec.forward(&x, batch);
+        assert!(exec.layer_attribution().iter().all(|a| a.calls == 2));
+    }
+
+    #[test]
+    fn repack_edges_attribute_layer_and_layout_pair() {
+        let m = crate::nn::model::mnist_mlp();
+        let batch = 8;
+        let mut rng = Rng::new(61);
+        let weights = random_weights(&m, &mut rng);
+        let plan =
+            Planner::new(&RTX2080TI).plan_fixed(&m, batch, Scheme::Fastpath);
+        let mut exec = EngineExecutor::new(m.clone(), &weights, plan).unwrap();
+        let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32() - 0.5).collect();
+        let _ = exec.forward(&x, batch);
+        // per-scheme aggregation is exactly the per-edge stats summed
+        let edges = exec.repack_edges().to_vec();
+        let stats = exec.repack_stats();
+        let edge_ops: u64 = edges.iter().map(|e| e.ops).sum();
+        let edge_bytes: u64 = edges.iter().map(|e| e.bytes).sum();
+        let stat_ops: u64 = stats.iter().map(|(_, o, _)| o).sum();
+        let stat_bytes: u64 = stats.iter().map(|(_, _, b)| b).sum();
+        assert_eq!(edge_ops, stat_ops);
+        assert_eq!(edge_bytes, stat_bytes);
+        for e in &edges {
+            assert!(e.layer < exec.plan().layers.len());
+            assert_ne!(e.src, e.dst, "a repack moves between layouts");
+            assert!(e.bytes > 0 && e.secs >= 0.0);
+        }
+        // edges accumulate pass over pass, and the trace interleaves a
+        // Repack span before each consuming layer
+        if !edges.is_empty() {
+            let spans = exec.last_pass_spans();
+            use crate::obs::SpanKind;
+            let n_repack =
+                spans.iter().filter(|s| s.kind == SpanKind::Repack).count();
+            assert_eq!(n_repack as u64, edge_ops);
+            let _ = exec.forward(&x, batch);
+            let after: u64 = exec.repack_edges().iter().map(|e| e.ops).sum();
+            assert_eq!(after, 2 * edge_ops);
         }
     }
 

@@ -71,6 +71,16 @@
 //! prediction).  Run `cargo run --release --bin tuner -- --quick`; the
 //! CI `tuner-smoke` job gates on it.
 //!
+//! The `obs` module is the telemetry layer the stack reports into:
+//! a bounded log-scale latency histogram (replacing unbounded
+//! per-request latency storage in `coordinator::Metrics`), per-batch
+//! span traces (queue wait → batch assembly → per-layer execution
+//! with explicit repack ops) in a fixed-capacity ring, and a
+//! `Snapshot` exporter that renders the same struct as the human
+//! report line, a round-trippable `engine::json` document, and
+//! Prometheus text — with per-*layer* drift and per-*edge* repack
+//! attribution from the executor.  See `docs/OBSERVABILITY.md`.
+//!
 //! See DESIGN.md for the system inventory and the per-table/figure
 //! experiment index, and EXPERIMENTS.md for paper-vs-measured results.
 
@@ -81,6 +91,7 @@ pub mod figures;
 pub mod kernels;
 pub mod layout;
 pub mod nn;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod tuner;

@@ -1,0 +1,644 @@
+//! The telemetry snapshot: one struct, three renderings.
+//!
+//! `coordinator::Metrics::snapshot()` materializes everything the
+//! serving stack knows — request counters, the bounded latency
+//! histogram, engine busy time, plan-cache counters, per-scheme cost
+//! drift, per-*layer* attribution (calls, measured vs predicted
+//! seconds), and per-*edge* layout-repack traffic — into a
+//! [`Snapshot`].  From there:
+//!
+//! * [`Snapshot::render_report`] — the human one-liner
+//!   (`Metrics::report()` delegates here),
+//! * [`Snapshot::to_json`] / [`Snapshot::from_json`] — a
+//!   round-trippable `engine::json` document,
+//! * [`Snapshot::to_prometheus`] — text exposition format.
+//!
+//! All three read the same struct fields, and the scalar families are
+//! enumerated once in [`Snapshot::scalars`] — the field-parity test in
+//! `rust/tests/obs_integration.rs` walks that list against every
+//! rendering, so a counter added to one face cannot silently miss the
+//! others.
+
+use crate::engine::json::Value;
+use crate::util::stats::Summary;
+
+/// Snapshot JSON schema version (bump on breaking shape changes).
+pub const OBS_SCHEMA: u64 = 1;
+
+/// Cumulative per-layer attribution from the arena executor: how often
+/// the layer ran, measured wall seconds, and the plan's predicted
+/// seconds scaled to each executed batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerAttr {
+    pub index: usize,
+    /// display tag ("1024FC", "128C3p", ...)
+    pub tag: String,
+    /// scheme name the plan selected for this layer
+    pub scheme: String,
+    pub calls: u64,
+    pub secs: f64,
+    pub predicted_s: f64,
+}
+
+impl LayerAttr {
+    /// Measured/predicted ratio (1.0 when there is nothing to compare).
+    pub fn drift(&self) -> f64 {
+        if self.predicted_s > 0.0 && self.secs > 0.0 {
+            self.secs / self.predicted_s
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Cumulative explicit layout-repack traffic on one plan edge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RepackEdge {
+    /// consuming layer's index into the plan
+    pub layer: usize,
+    pub src: String,
+    pub dst: String,
+    pub ops: u64,
+    pub bytes: u64,
+    pub secs: f64,
+}
+
+/// Everything the serving stack reports, in one structure.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    /// end-to-end request throughput (first-to-last batch wall time)
+    pub throughput_rps: f64,
+    /// fraction of executed rows that were batch padding
+    pub padding_frac: f64,
+    /// request latency distribution (histogram-derived percentiles)
+    pub latency: Summary,
+    /// non-empty histogram buckets: (lo_s, hi_s, count)
+    pub latency_buckets: Vec<(f64, f64, u64)>,
+    pub engine_rows: u64,
+    pub engine_busy_s: f64,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+    pub replans: u64,
+    /// per-scheme live EWMA: (scheme, measured/predicted, samples)
+    pub cost_drift: Vec<(String, f64, u64)>,
+    /// per-scheme explicit repack totals: (scheme, ops, bytes)
+    pub repacks_by_scheme: Vec<(String, u64, u64)>,
+    pub repack_edges: Vec<RepackEdge>,
+    pub layers: Vec<LayerAttr>,
+    pub traces_pushed: u64,
+    pub traces_dropped: u64,
+    pub traces_capacity: u64,
+}
+
+impl Snapshot {
+    /// Engine executor throughput (images per busy-second).
+    pub fn engine_img_s(&self) -> f64 {
+        if self.engine_busy_s > 0.0 {
+            self.engine_rows as f64 / self.engine_busy_s
+        } else {
+            0.0
+        }
+    }
+
+    /// The scalar families every rendering must carry — the single
+    /// enumeration the field-parity test walks.
+    pub fn scalars(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("requests_total", self.requests as f64),
+            ("batches_total", self.batches as f64),
+            ("throughput_requests_per_second", self.throughput_rps),
+            ("padding_fraction", self.padding_frac),
+            ("latency_p50_seconds", self.latency.p50),
+            ("latency_p90_seconds", self.latency.p90),
+            ("latency_p99_seconds", self.latency.p99),
+            ("latency_mean_seconds", self.latency.mean),
+            ("engine_rows_total", self.engine_rows as f64),
+            ("engine_busy_seconds_total", self.engine_busy_s),
+            ("engine_images_per_second", self.engine_img_s()),
+            ("plan_cache_hits_total", self.plan_cache_hits as f64),
+            ("plan_cache_misses_total", self.plan_cache_misses as f64),
+            ("replans_total", self.replans as f64),
+            ("traces_pushed_total", self.traces_pushed as f64),
+            ("traces_dropped_total", self.traces_dropped as f64),
+        ]
+    }
+
+    /// Graft an engine-side snapshot (the served `EngineModel`'s own
+    /// `Metrics`) into this server-side snapshot: the server knows
+    /// requests/batches/latency/traces, the engine knows busy time,
+    /// plan-cache counters, drift, and the per-layer / per-edge
+    /// attribution.
+    pub fn absorb_engine(&mut self, eng: &Snapshot) {
+        self.engine_rows = eng.engine_rows;
+        self.engine_busy_s = eng.engine_busy_s;
+        self.plan_cache_hits = eng.plan_cache_hits;
+        self.plan_cache_misses = eng.plan_cache_misses;
+        self.replans = eng.replans;
+        self.cost_drift = eng.cost_drift.clone();
+        self.repacks_by_scheme = eng.repacks_by_scheme.clone();
+        self.repack_edges = eng.repack_edges.clone();
+        self.layers = eng.layers.clone();
+    }
+
+    /// The human one-line report (`Metrics::report()` renders this).
+    pub fn render_report(&self) -> String {
+        let s = &self.latency;
+        let mut out = format!(
+            "requests={} batches={} p50={:.3}ms p90={:.3}ms p99={:.3}ms \
+             mean={:.3}ms throughput={:.0} req/s padding={:.1}%",
+            self.requests,
+            self.batches,
+            s.p50 * 1e3,
+            s.p90 * 1e3,
+            s.p99 * 1e3,
+            s.mean * 1e3,
+            self.throughput_rps,
+            self.padding_frac * 100.0
+        );
+        if self.engine_rows > 0 {
+            out.push_str(&format!(" engine={:.0} img/s", self.engine_img_s()));
+        }
+        let (h, mi) = (self.plan_cache_hits, self.plan_cache_misses);
+        if h + mi > 0 {
+            out.push_str(&format!(" plan_cache={h}h/{mi}m"));
+        }
+        // explicit layout-repack traffic, totalled across schemes
+        let (ops, bytes) = self
+            .repacks_by_scheme
+            .iter()
+            .fold((0u64, 0u64), |(o, b), (_, ro, rb)| (o + ro, b + rb));
+        if ops > 0 {
+            out.push_str(&format!(" repack={ops}ops/{bytes}B"));
+        }
+        if self.replans > 0 {
+            out.push_str(&format!(" replans={}", self.replans));
+        }
+        // the worst live drift (ratio furthest from 1x in either
+        // direction) is the one worth a glance
+        let sym = |r: f64| if r > 0.0 { r.max(1.0 / r) } else { 1.0 };
+        if let Some((name, ratio, _)) = self
+            .cost_drift
+            .iter()
+            .max_by(|a, b| sym(a.1).partial_cmp(&sym(b.1)).unwrap())
+        {
+            out.push_str(&format!(" drift[{name}]={ratio:.2}x"));
+        }
+        // ...and the worst per-LAYER drift, which locates it
+        if let Some(l) = self
+            .layers
+            .iter()
+            .filter(|l| l.calls > 0)
+            .max_by(|a, b| sym(a.drift()).partial_cmp(&sym(b.drift())).unwrap())
+        {
+            out.push_str(&format!(" layer_drift[{}]={:.2}x", l.tag, l.drift()));
+        }
+        out
+    }
+
+    /// Serialize via `engine::json` — round-trips exactly through
+    /// [`Snapshot::from_json`] (f64 Display is shortest-roundtrip).
+    pub fn to_json(&self) -> Value {
+        let num = Value::Num;
+        let st = |s: &str| Value::Str(s.to_string());
+        Value::Obj(vec![
+            ("schema".to_string(), num(OBS_SCHEMA as f64)),
+            ("requests".to_string(), num(self.requests as f64)),
+            ("batches".to_string(), num(self.batches as f64)),
+            ("throughput_rps".to_string(), num(self.throughput_rps)),
+            ("padding_frac".to_string(), num(self.padding_frac)),
+            (
+                "latency".to_string(),
+                Value::Obj(vec![
+                    ("n".to_string(), num(self.latency.n as f64)),
+                    ("mean_s".to_string(), num(self.latency.mean)),
+                    ("stddev_s".to_string(), num(self.latency.stddev)),
+                    ("min_s".to_string(), num(self.latency.min)),
+                    ("max_s".to_string(), num(self.latency.max)),
+                    ("p50_s".to_string(), num(self.latency.p50)),
+                    ("p90_s".to_string(), num(self.latency.p90)),
+                    ("p95_s".to_string(), num(self.latency.p95)),
+                    ("p99_s".to_string(), num(self.latency.p99)),
+                ]),
+            ),
+            (
+                "latency_buckets".to_string(),
+                Value::Arr(
+                    self.latency_buckets
+                        .iter()
+                        .map(|(lo, hi, c)| {
+                            Value::Obj(vec![
+                                ("lo_s".to_string(), num(*lo)),
+                                ("hi_s".to_string(), num(*hi)),
+                                ("count".to_string(), num(*c as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "engine".to_string(),
+                Value::Obj(vec![
+                    ("rows".to_string(), num(self.engine_rows as f64)),
+                    ("busy_s".to_string(), num(self.engine_busy_s)),
+                    ("img_s".to_string(), num(self.engine_img_s())),
+                ]),
+            ),
+            (
+                "plan_cache".to_string(),
+                Value::Obj(vec![
+                    ("hits".to_string(), num(self.plan_cache_hits as f64)),
+                    ("misses".to_string(), num(self.plan_cache_misses as f64)),
+                ]),
+            ),
+            ("replans".to_string(), num(self.replans as f64)),
+            (
+                "cost_drift".to_string(),
+                Value::Arr(
+                    self.cost_drift
+                        .iter()
+                        .map(|(name, ratio, samples)| {
+                            Value::Obj(vec![
+                                ("scheme".to_string(), st(name)),
+                                ("ratio".to_string(), num(*ratio)),
+                                ("samples".to_string(), num(*samples as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "repacks".to_string(),
+                Value::Arr(
+                    self.repacks_by_scheme
+                        .iter()
+                        .map(|(name, ops, bytes)| {
+                            Value::Obj(vec![
+                                ("scheme".to_string(), st(name)),
+                                ("ops".to_string(), num(*ops as f64)),
+                                ("bytes".to_string(), num(*bytes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "repack_edges".to_string(),
+                Value::Arr(
+                    self.repack_edges
+                        .iter()
+                        .map(|e| {
+                            Value::Obj(vec![
+                                ("layer".to_string(), num(e.layer as f64)),
+                                ("src".to_string(), st(&e.src)),
+                                ("dst".to_string(), st(&e.dst)),
+                                ("ops".to_string(), num(e.ops as f64)),
+                                ("bytes".to_string(), num(e.bytes as f64)),
+                                ("secs".to_string(), num(e.secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "layers".to_string(),
+                Value::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            Value::Obj(vec![
+                                ("index".to_string(), num(l.index as f64)),
+                                ("tag".to_string(), st(&l.tag)),
+                                ("scheme".to_string(), st(&l.scheme)),
+                                ("calls".to_string(), num(l.calls as f64)),
+                                ("secs".to_string(), num(l.secs)),
+                                ("predicted_s".to_string(), num(l.predicted_s)),
+                                // derived, for readers; ignored on parse
+                                ("drift".to_string(), num(l.drift())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "traces".to_string(),
+                Value::Obj(vec![
+                    ("pushed".to_string(), num(self.traces_pushed as f64)),
+                    ("dropped".to_string(), num(self.traces_dropped as f64)),
+                    ("capacity".to_string(), num(self.traces_capacity as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Parse a snapshot previously emitted by [`Snapshot::to_json`].
+    pub fn from_json(v: &Value) -> Result<Snapshot, String> {
+        let schema = req_u64(v, "schema")?;
+        if schema != OBS_SCHEMA {
+            return Err(format!("obs snapshot schema {schema}, want {OBS_SCHEMA}"));
+        }
+        let lat = v.get("latency").ok_or("missing latency")?;
+        let latency = Summary::from_quantiles(
+            req_u64(lat, "n")? as usize,
+            req_f64(lat, "mean_s")?,
+            req_f64(lat, "stddev_s")?,
+            req_f64(lat, "min_s")?,
+            req_f64(lat, "max_s")?,
+            req_f64(lat, "p50_s")?,
+            req_f64(lat, "p90_s")?,
+            req_f64(lat, "p95_s")?,
+            req_f64(lat, "p99_s")?,
+        );
+        let eng = v.get("engine").ok_or("missing engine")?;
+        let cache = v.get("plan_cache").ok_or("missing plan_cache")?;
+        let traces = v.get("traces").ok_or("missing traces")?;
+        Ok(Snapshot {
+            requests: req_u64(v, "requests")?,
+            batches: req_u64(v, "batches")?,
+            throughput_rps: req_f64(v, "throughput_rps")?,
+            padding_frac: req_f64(v, "padding_frac")?,
+            latency,
+            latency_buckets: arr(v, "latency_buckets")?
+                .iter()
+                .map(|b| {
+                    Ok((req_f64(b, "lo_s")?, req_f64(b, "hi_s")?, req_u64(b, "count")?))
+                })
+                .collect::<Result<_, String>>()?,
+            engine_rows: req_u64(eng, "rows")?,
+            engine_busy_s: req_f64(eng, "busy_s")?,
+            plan_cache_hits: req_u64(cache, "hits")?,
+            plan_cache_misses: req_u64(cache, "misses")?,
+            replans: req_u64(v, "replans")?,
+            cost_drift: arr(v, "cost_drift")?
+                .iter()
+                .map(|d| {
+                    Ok((
+                        req_str(d, "scheme")?,
+                        req_f64(d, "ratio")?,
+                        req_u64(d, "samples")?,
+                    ))
+                })
+                .collect::<Result<_, String>>()?,
+            repacks_by_scheme: arr(v, "repacks")?
+                .iter()
+                .map(|r| {
+                    Ok((req_str(r, "scheme")?, req_u64(r, "ops")?, req_u64(r, "bytes")?))
+                })
+                .collect::<Result<_, String>>()?,
+            repack_edges: arr(v, "repack_edges")?
+                .iter()
+                .map(|e| {
+                    Ok(RepackEdge {
+                        layer: req_u64(e, "layer")? as usize,
+                        src: req_str(e, "src")?,
+                        dst: req_str(e, "dst")?,
+                        ops: req_u64(e, "ops")?,
+                        bytes: req_u64(e, "bytes")?,
+                        secs: req_f64(e, "secs")?,
+                    })
+                })
+                .collect::<Result<_, String>>()?,
+            layers: arr(v, "layers")?
+                .iter()
+                .map(|l| {
+                    Ok(LayerAttr {
+                        index: req_u64(l, "index")? as usize,
+                        tag: req_str(l, "tag")?,
+                        scheme: req_str(l, "scheme")?,
+                        calls: req_u64(l, "calls")?,
+                        secs: req_f64(l, "secs")?,
+                        predicted_s: req_f64(l, "predicted_s")?,
+                    })
+                })
+                .collect::<Result<_, String>>()?,
+            traces_pushed: req_u64(traces, "pushed")?,
+            traces_dropped: req_u64(traces, "dropped")?,
+            traces_capacity: req_u64(traces, "capacity")?,
+        })
+    }
+
+    /// Prometheus text exposition.  Scalar families come straight from
+    /// [`Snapshot::scalars`]; the labeled families (per scheme, per
+    /// layer, per repack edge) and the latency histogram follow.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, value) in self.scalars() {
+            let kind =
+                if name.ends_with("_total") { "counter" } else { "gauge" };
+            out.push_str(&format!("# TYPE tcbnn_{name} {kind}\n"));
+            out.push_str(&format!("tcbnn_{name} {value}\n"));
+        }
+        // request-latency histogram: cumulative counts over the
+        // non-empty buckets' upper bounds, then the canonical +Inf
+        out.push_str("# TYPE tcbnn_request_latency_seconds histogram\n");
+        let mut cum = 0u64;
+        for (_, hi, c) in &self.latency_buckets {
+            cum += c;
+            out.push_str(&format!(
+                "tcbnn_request_latency_seconds_bucket{{le=\"{hi}\"}} {cum}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "tcbnn_request_latency_seconds_bucket{{le=\"+Inf\"}} {}\n",
+            self.latency.n
+        ));
+        out.push_str(&format!(
+            "tcbnn_request_latency_seconds_sum {}\n",
+            self.latency.mean * self.latency.n as f64
+        ));
+        out.push_str(&format!(
+            "tcbnn_request_latency_seconds_count {}\n",
+            self.latency.n
+        ));
+        for (scheme, ratio, samples) in &self.cost_drift {
+            out.push_str(&format!(
+                "tcbnn_cost_drift_ratio{{scheme=\"{scheme}\"}} {ratio}\n"
+            ));
+            out.push_str(&format!(
+                "tcbnn_cost_drift_samples{{scheme=\"{scheme}\"}} {samples}\n"
+            ));
+        }
+        for (scheme, ops, bytes) in &self.repacks_by_scheme {
+            out.push_str(&format!(
+                "tcbnn_repack_ops_total{{scheme=\"{scheme}\"}} {ops}\n"
+            ));
+            out.push_str(&format!(
+                "tcbnn_repack_bytes_total{{scheme=\"{scheme}\"}} {bytes}\n"
+            ));
+        }
+        for e in &self.repack_edges {
+            let lbl = format!(
+                "{{layer=\"{}\",src=\"{}\",dst=\"{}\"}}",
+                e.layer, e.src, e.dst
+            );
+            out.push_str(&format!("tcbnn_repack_edge_ops_total{lbl} {}\n", e.ops));
+            out.push_str(&format!("tcbnn_repack_edge_bytes_total{lbl} {}\n", e.bytes));
+            out.push_str(&format!("tcbnn_repack_edge_seconds_total{lbl} {}\n", e.secs));
+        }
+        for l in &self.layers {
+            let lbl = format!(
+                "{{layer=\"{}\",tag=\"{}\",scheme=\"{}\"}}",
+                l.index, l.tag, l.scheme
+            );
+            out.push_str(&format!("tcbnn_layer_calls_total{lbl} {}\n", l.calls));
+            out.push_str(&format!("tcbnn_layer_seconds_total{lbl} {}\n", l.secs));
+            out.push_str(&format!(
+                "tcbnn_layer_predicted_seconds_total{lbl} {}\n",
+                l.predicted_s
+            ));
+            out.push_str(&format!("tcbnn_layer_drift_ratio{lbl} {}\n", l.drift()));
+        }
+        out
+    }
+}
+
+fn req_f64(v: &Value, key: &str) -> Result<f64, String> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .ok_or_else(|| format!("missing/non-numeric field {key:?}"))
+}
+
+fn req_u64(v: &Value, key: &str) -> Result<u64, String> {
+    let x = req_f64(v, key)?;
+    if x >= 0.0 && x.fract() == 0.0 {
+        Ok(x as u64)
+    } else {
+        Err(format!("field {key:?} is not a non-negative integer: {x}"))
+    }
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing/non-string field {key:?}"))
+}
+
+fn arr<'a>(v: &'a Value, key: &str) -> Result<&'a [Value], String> {
+    v.get(key)
+        .and_then(Value::as_arr)
+        .ok_or_else(|| format!("missing/non-array field {key:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Snapshot {
+        Snapshot {
+            requests: 11,
+            batches: 2,
+            throughput_rps: 1234.5,
+            padding_frac: 0.3125,
+            latency: Summary::from_quantiles(
+                11, 1.27e-3, 4.0e-4, 1e-3, 2e-3, 1.02e-3, 1.9e-3, 1.95e-3, 2e-3,
+            ),
+            latency_buckets: vec![(0.96e-3, 1.05e-3, 8), (1.92e-3, 2.1e-3, 3)],
+            engine_rows: 16,
+            engine_busy_s: 0.004,
+            plan_cache_hits: 3,
+            plan_cache_misses: 5,
+            replans: 1,
+            cost_drift: vec![("FASTPATH".to_string(), 1.1, 12)],
+            repacks_by_scheme: vec![("FASTPATH".to_string(), 3, 12288)],
+            repack_edges: vec![RepackEdge {
+                layer: 3,
+                src: "Blocked64".to_string(),
+                dst: "Row32".to_string(),
+                ops: 3,
+                bytes: 12288,
+                secs: 1.5e-5,
+            }],
+            layers: vec![LayerAttr {
+                index: 0,
+                tag: "1024FC".to_string(),
+                scheme: "FASTPATH".to_string(),
+                calls: 2,
+                secs: 0.003,
+                predicted_s: 0.001,
+            }],
+            traces_pushed: 2,
+            traces_dropped: 0,
+            traces_capacity: 256,
+        }
+    }
+
+    #[test]
+    fn json_round_trips_exactly() {
+        let snap = sample();
+        let doc = snap.to_json();
+        let text = doc.to_string();
+        let parsed = Value::parse(&text).expect("valid JSON");
+        assert_eq!(parsed, doc, "engine::json round-trip");
+        let back = Snapshot::from_json(&parsed).expect("parses back");
+        assert_eq!(back, snap, "struct round-trip");
+        // the attribution payloads survive the trip
+        assert_eq!(back.layers[0].tag, "1024FC");
+        assert_eq!(back.repack_edges[0].bytes, 12288);
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_schema() {
+        let mut snap = sample().to_json();
+        if let Value::Obj(fields) = &mut snap {
+            fields[0].1 = Value::Num(99.0);
+        }
+        assert!(Snapshot::from_json(&snap).is_err());
+    }
+
+    #[test]
+    fn report_keeps_the_documented_line_format() {
+        let r = sample().render_report();
+        assert!(r.contains("requests=11"), "{r}");
+        assert!(r.contains("batches=2"), "{r}");
+        assert!(r.contains("p50=1.020ms"), "{r}");
+        assert!(r.contains("padding=31.2%"), "{r}");
+        assert!(r.contains("engine=4000 img/s"), "{r}");
+        assert!(r.contains("plan_cache=3h/5m"), "{r}");
+        assert!(r.contains("repack=3ops/12288B"), "{r}");
+        assert!(r.contains("replans=1"), "{r}");
+        assert!(r.contains("drift[FASTPATH]=1.10x"), "{r}");
+        assert!(r.contains("layer_drift[1024FC]=3.00x"), "{r}");
+    }
+
+    #[test]
+    fn prometheus_exposes_every_scalar_family() {
+        let snap = sample();
+        let prom = snap.to_prometheus();
+        for (name, value) in snap.scalars() {
+            let line = format!("tcbnn_{name} {value}");
+            assert!(prom.contains(&line), "missing {line:?} in:\n{prom}");
+        }
+        assert!(prom.contains("tcbnn_request_latency_seconds_bucket{le=\"+Inf\"} 11"));
+        assert!(prom.contains(
+            "tcbnn_layer_seconds_total{layer=\"0\",tag=\"1024FC\",scheme=\"FASTPATH\"}"
+        ));
+        assert!(prom.contains(
+            "tcbnn_repack_edge_bytes_total{layer=\"3\",src=\"Blocked64\",dst=\"Row32\"} 12288"
+        ));
+    }
+
+    #[test]
+    fn absorb_engine_grafts_engine_side_fields() {
+        let eng = sample();
+        let mut srv = Snapshot { requests: 100, batches: 9, ..Default::default() };
+        srv.absorb_engine(&eng);
+        assert_eq!(srv.requests, 100, "server counters kept");
+        assert_eq!(srv.engine_rows, 16, "engine counters grafted");
+        assert_eq!(srv.layers.len(), 1);
+        assert_eq!(srv.repack_edges.len(), 1);
+        assert_eq!(srv.plan_cache_hits, 3);
+    }
+
+    #[test]
+    fn empty_snapshot_is_serializable_and_sane() {
+        let snap = Snapshot::default();
+        assert_eq!(snap.engine_img_s(), 0.0);
+        let text = snap.to_json().to_string();
+        let back = Snapshot::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, snap);
+        assert!(snap.render_report().contains("requests=0"));
+        assert!(!snap.render_report().contains("engine="));
+    }
+}

@@ -1,0 +1,306 @@
+//! `LogHistogram`: a fixed-bucket log-scale latency histogram.
+//!
+//! The serving metrics used to keep every request latency in a
+//! `Vec<f64>` — unbounded growth under the north-star's "millions of
+//! users" load.  This histogram replaces it with a *constant-size*
+//! structure: `SUB_BUCKETS` buckets per power-of-two octave over a
+//! nanosecond domain, each an `AtomicU64` counter.  Recording is
+//! lock-free (relaxed atomics — per-bucket counts and the total are
+//! exact under concurrency because `fetch_add` never loses an
+//! increment), quantiles interpolate inside the landing bucket (so
+//! p50/p90/p99 are exact to within one bucket's width, ~9% relative
+//! with 8 sub-buckets per octave), and two histograms with the same
+//! geometry merge by bucket-wise addition.
+//!
+//! Domain: [1ns, 2^OCTAVES ns ≈ 18 minutes).  Anything slower clamps
+//! into the last bucket; the reported max is still exact because
+//! min/max are tracked separately in integer nanoseconds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::stats::Summary;
+
+/// Sub-buckets per power-of-two octave.  8 gives a bucket width of
+/// 2^(1/8) ≈ 1.09x — quantiles exact to within ~9%.
+const SUB_BUCKETS: usize = 8;
+/// Powers of two covered: 2^40 ns ≈ 1100 s.
+const OCTAVES: usize = 40;
+const N_BUCKETS: usize = SUB_BUCKETS * OCTAVES;
+
+/// Fixed-footprint concurrent latency histogram (seconds in,
+/// log-spaced nanosecond buckets inside).
+pub struct LogHistogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    /// exact integer total (each sample rounded to whole nanoseconds),
+    /// so the mean survives concurrency without torn f64 adds
+    sum_ns: AtomicU64,
+    /// f64 bits of the sum of squared seconds (CAS loop; feeds stddev
+    /// only, where a torn retry costs nothing)
+    sumsq_s2: AtomicU64,
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            sumsq_s2: AtomicU64::new(0f64.to_bits()),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency in seconds.  Non-finite and negative samples
+    /// are dropped; zero clamps to 1ns (the first bucket).
+    pub fn record(&self, secs: f64) {
+        if !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        let ns = (secs * 1e9).round().max(1.0) as u64; // saturates at u64::MAX
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        let sq = secs * secs;
+        let mut cur = self.sumsq_s2.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + sq).to_bits();
+            match self.sumsq_s2.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact total of the recorded samples in seconds (integer
+    /// nanosecond accumulation — no float-order nondeterminism).
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn min_secs(&self) -> f64 {
+        match self.min_ns.load(Ordering::Relaxed) {
+            u64::MAX => 0.0,
+            ns => ns as f64 / 1e9,
+        }
+    }
+
+    pub fn max_secs(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// The q-quantile (q in [0, 1]) in seconds, interpolated inside
+    /// the landing bucket and clamped to the exact observed [min, max].
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 >= target {
+                let (lo, hi) = bucket_bounds_secs(i);
+                let frac = (target - cum as f64) / c as f64;
+                let v = lo + (hi - lo) * frac;
+                return v.clamp(self.min_secs(), self.max_secs());
+            }
+            cum += c;
+        }
+        self.max_secs()
+    }
+
+    /// `Summary` over the recorded distribution — same shape the old
+    /// Vec-backed `latency_summary()` returned, so callers don't churn.
+    /// Percentiles are bucket-interpolated (~9% resolution); n, mean,
+    /// min, and max are exact.
+    pub fn summary(&self) -> Summary {
+        let n = self.count();
+        if n == 0 {
+            return Summary::default();
+        }
+        let mean = self.sum_secs() / n as f64;
+        let sumsq = f64::from_bits(self.sumsq_s2.load(Ordering::Relaxed));
+        let var = (sumsq / n as f64 - mean * mean).max(0.0);
+        Summary::from_quantiles(
+            n as usize,
+            mean,
+            var.sqrt(),
+            self.min_secs(),
+            self.max_secs(),
+            self.quantile(0.50),
+            self.quantile(0.90),
+            self.quantile(0.95),
+            self.quantile(0.99),
+        )
+    }
+
+    /// Bucket-wise merge of another histogram into this one (same
+    /// fixed geometry by construction).
+    pub fn merge(&self, other: &LogHistogram) {
+        for (b, o) in self.buckets.iter().zip(&other.buckets) {
+            let c = o.load(Ordering::Relaxed);
+            if c > 0 {
+                b.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min_ns
+            .fetch_min(other.min_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns
+            .fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        let osq = f64::from_bits(other.sumsq_s2.load(Ordering::Relaxed));
+        let mut cur = self.sumsq_s2.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + osq).to_bits();
+            match self.sumsq_s2.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// The non-empty buckets as `(lo_secs, hi_secs, count)` — what the
+    /// exporter serializes (bounded: at most `N_BUCKETS` rows).
+    pub fn nonzero_buckets(&self) -> Vec<(f64, f64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Ordering::Relaxed);
+                (c > 0).then(|| {
+                    let (lo, hi) = bucket_bounds_secs(i);
+                    (lo, hi, c)
+                })
+            })
+            .collect()
+    }
+
+    /// The structure's memory footprint — a compile-time constant,
+    /// which is the whole point: recording never grows it.
+    pub fn footprint_bytes(&self) -> usize {
+        std::mem::size_of::<LogHistogram>()
+    }
+}
+
+/// Bucket index of a (non-zero) nanosecond value: `SUB_BUCKETS` even
+/// subdivisions of each power-of-two octave, clamped into range.
+fn bucket_index(ns: u64) -> usize {
+    let idx = ((ns as f64).log2() * SUB_BUCKETS as f64).floor() as usize;
+    idx.min(N_BUCKETS - 1)
+}
+
+/// `[lo, hi)` of bucket `i`, in seconds.
+fn bucket_bounds_secs(i: usize) -> (f64, f64) {
+    let lo = 2f64.powf(i as f64 / SUB_BUCKETS as f64) / 1e9;
+    let hi = 2f64.powf((i + 1) as f64 / SUB_BUCKETS as f64) / 1e9;
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_resolution_is_one_eighth_octave() {
+        // consecutive bucket bounds differ by 2^(1/8)
+        let (lo, hi) = bucket_bounds_secs(160);
+        assert!((hi / lo - 2f64.powf(0.125)).abs() < 1e-12);
+        // 1ms lands where log2(1e6)*8 floors
+        assert_eq!(bucket_index(1_000_000), 159);
+        // out-of-range clamps instead of indexing out of bounds
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn summary_matches_exact_stats_within_resolution() {
+        let h = LogHistogram::new();
+        for _ in 0..8 {
+            h.record(0.001);
+        }
+        for _ in 0..3 {
+            h.record(0.002);
+        }
+        let s = h.summary();
+        assert_eq!(s.n, 11);
+        assert!((s.mean - 14e-3 / 11.0).abs() < 1e-12, "mean exact: {}", s.mean);
+        assert_eq!(s.min, 0.001);
+        assert_eq!(s.max, 0.002);
+        // percentiles are bucket-resolution (~9%) approximations
+        assert!((s.p50 - 0.001).abs() < 0.001 * 0.1, "p50 {}", s.p50);
+        assert!((s.p99 - 0.002).abs() < 0.002 * 0.1, "p99 {}", s.p99);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99);
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs_are_sane() {
+        let h = LogHistogram::new();
+        assert_eq!(h.summary().n, 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(-1.0);
+        assert_eq!(h.count(), 0);
+        h.record(0.0); // clamps to the 1ns bucket
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.nonzero_buckets().len(), 1);
+    }
+
+    #[test]
+    fn footprint_is_constant_under_load() {
+        let h = LogHistogram::new();
+        let before = h.footprint_bytes();
+        for i in 0..10_000 {
+            h.record(1e-6 * (1 + i % 1000) as f64);
+        }
+        assert_eq!(h.footprint_bytes(), before);
+        assert!(before < 8192, "bounded: {before} bytes");
+        assert_eq!(h.count(), 10_000);
+    }
+
+    #[test]
+    fn merge_adds_bucketwise() {
+        let a = LogHistogram::new();
+        let b = LogHistogram::new();
+        a.record(0.001);
+        b.record(0.004);
+        b.record(0.002);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.min_secs(), 0.001);
+        assert_eq!(a.max_secs(), 0.004);
+        assert!((a.sum_secs() - 0.007).abs() < 1e-12);
+        assert_eq!(a.nonzero_buckets().iter().map(|(_, _, c)| c).sum::<u64>(), 3);
+    }
+}

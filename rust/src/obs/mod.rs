@@ -1,0 +1,27 @@
+//! Observability: bounded telemetry for the serving stack.
+//!
+//! Three pieces, one contract — *fixed memory under unbounded load*:
+//!
+//! * [`hist`] — a lock-free log-scale latency histogram
+//!   ([`LogHistogram`]) that replaces the old unbounded per-request
+//!   latency `Vec` inside `coordinator::Metrics`.
+//! * [`trace`] — per-batch span recording ([`BatchTrace`] in a
+//!   [`TraceRing`]): queue wait, batch assembly, one span per plan
+//!   layer, explicit repack ops interleaved.
+//! * [`export`] — the [`Snapshot`] struct that the human report, the
+//!   JSON document, and the Prometheus text exposition all render
+//!   from, carrying per-layer drift ([`LayerAttr`]) and per-edge
+//!   repack attribution ([`RepackEdge`]).
+//!
+//! The timing source is single: `engine::executor` times each layer
+//! once and feeds both `tuner::live::LiveCosts` (for re-planning) and
+//! the per-layer attribution here (for reporting).  See
+//! `docs/OBSERVABILITY.md`.
+
+pub mod export;
+pub mod hist;
+pub mod trace;
+
+pub use export::{LayerAttr, RepackEdge, Snapshot, OBS_SCHEMA};
+pub use hist::LogHistogram;
+pub use trace::{BatchTrace, Span, SpanKind, TraceRing};

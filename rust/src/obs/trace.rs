@@ -1,0 +1,223 @@
+//! Span recording for served batches: where did a request's time go?
+//!
+//! Each executed batch leaves one [`BatchTrace`] — the request ids it
+//! carried plus an ordered span list: queue wait (oldest request),
+//! batch assembly, then one span per plan layer (scheme, shape tag,
+//! measured seconds, activation bytes) with explicit layout-repack
+//! ops interleaved before their consuming layer.  Repack time is
+//! *contained* in the consuming layer's span (the conversion runs
+//! inside its timed region), so summing only the `Layer` spans covers
+//! the whole forward pass without double counting.
+//!
+//! Traces live in a fixed-capacity ring: pushing over capacity evicts
+//! the oldest trace and counts the drop.  The ring never grows — the
+//! same bounded-memory contract as `obs::hist`.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// What a span measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// time the batch's oldest request spent queued before formation
+    Queue,
+    /// batch formation: pops, input concatenation, tail padding
+    Assemble,
+    /// one plan layer's execution (repack time included when an
+    /// explicit edge feeds it)
+    Layer,
+    /// an explicit layout-repack op (nested inside its consuming
+    /// layer's span — informational, not additive with `Layer`)
+    Repack,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Queue => "queue",
+            SpanKind::Assemble => "assemble",
+            SpanKind::Layer => "layer",
+            SpanKind::Repack => "repack",
+        }
+    }
+}
+
+/// One timed region of a batch's lifetime.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// `Layer`: "L<i>/<tag>/<scheme>"; `Repack`: "L<i>/<src>-><dst>"
+    pub label: String,
+    pub secs: f64,
+    /// bytes the span touched (activation payload for layers, streamed
+    /// bytes for repacks, input floats for assembly; 0 for queue wait)
+    pub bytes: u64,
+}
+
+impl Span {
+    pub fn queue(secs: f64) -> Span {
+        Span { kind: SpanKind::Queue, label: "queue-wait".to_string(), secs, bytes: 0 }
+    }
+
+    pub fn assemble(secs: f64, bytes: u64) -> Span {
+        Span {
+            kind: SpanKind::Assemble,
+            label: "batch-assembly".to_string(),
+            secs,
+            bytes,
+        }
+    }
+
+    pub fn layer(label: String, secs: f64, bytes: u64) -> Span {
+        Span { kind: SpanKind::Layer, label, secs, bytes }
+    }
+
+    pub fn repack(label: String, secs: f64, bytes: u64) -> Span {
+        Span { kind: SpanKind::Repack, label, secs, bytes }
+    }
+}
+
+/// One served batch's trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchTrace {
+    /// batch sequence number (the server's batch counter at record time)
+    pub seq: u64,
+    /// request ids the batch carried (padding rows have no id)
+    pub ids: Vec<u64>,
+    /// ordered spans: queue, assemble, then layers with repacks
+    /// interleaved
+    pub spans: Vec<Span>,
+}
+
+impl BatchTrace {
+    /// Seconds covered by `Layer` spans (the forward pass; repack
+    /// spans are nested inside layers and intentionally not added).
+    pub fn layer_secs(&self) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Layer)
+            .map(|s| s.secs)
+            .sum()
+    }
+}
+
+/// Fixed-capacity trace ring with drop counting.
+pub struct TraceRing {
+    inner: Mutex<RingInner>,
+    capacity: usize,
+}
+
+struct RingInner {
+    buf: VecDeque<BatchTrace>,
+    pushed: u64,
+    dropped: u64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        assert!(capacity > 0, "trace ring needs at least one slot");
+        TraceRing {
+            inner: Mutex::new(RingInner {
+                buf: VecDeque::with_capacity(capacity),
+                pushed: 0,
+                dropped: 0,
+            }),
+            capacity,
+        }
+    }
+
+    /// Record one batch trace; evicts (and counts) the oldest when
+    /// full.  The ring never grows past its capacity.
+    pub fn push(&self, trace: BatchTrace) {
+        let mut r = self.inner.lock().unwrap();
+        if r.buf.len() == self.capacity {
+            r.buf.pop_front();
+            r.dropped += 1;
+        }
+        r.buf.push_back(trace);
+        r.pushed += 1;
+    }
+
+    /// Total traces ever pushed.
+    pub fn pushed(&self) -> u64 {
+        self.inner.lock().unwrap().pushed
+    }
+
+    /// Traces evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy out the retained traces, oldest first.
+    pub fn snapshot(&self) -> Vec<BatchTrace> {
+        self.inner.lock().unwrap().buf.iter().cloned().collect()
+    }
+
+    /// The retained trace that served request `id`, if it has not been
+    /// evicted.
+    pub fn find_request(&self, id: u64) -> Option<BatchTrace> {
+        self.inner
+            .lock()
+            .unwrap()
+            .buf
+            .iter()
+            .rev()
+            .find(|t| t.ids.contains(&id))
+            .cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(seq: u64) -> BatchTrace {
+        BatchTrace {
+            seq,
+            ids: vec![seq * 10, seq * 10 + 1],
+            spans: vec![Span::queue(1e-6), Span::layer("L0/t/F".into(), 2e-6, 64)],
+        }
+    }
+
+    #[test]
+    fn push_and_find() {
+        let r = TraceRing::new(4);
+        assert!(r.is_empty());
+        r.push(trace(1));
+        r.push(trace(2));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.pushed(), 2);
+        assert_eq!(r.dropped(), 0);
+        let t = r.find_request(21).expect("request 21 traced");
+        assert_eq!(t.seq, 2);
+        assert!(r.find_request(99).is_none());
+        assert!((t.layer_secs() - 2e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn overflow_evicts_oldest_and_counts_drops() {
+        let r = TraceRing::new(3);
+        for seq in 0..5 {
+            r.push(trace(seq));
+        }
+        assert_eq!(r.len(), 3, "never over capacity");
+        assert_eq!(r.pushed(), 5);
+        assert_eq!(r.dropped(), 2);
+        let kept: Vec<u64> = r.snapshot().iter().map(|t| t.seq).collect();
+        assert_eq!(kept, vec![2, 3, 4], "oldest evicted first");
+        assert!(r.find_request(0).is_none(), "evicted trace unfindable");
+        assert!(r.find_request(40).is_some());
+    }
+}

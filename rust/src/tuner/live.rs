@@ -14,6 +14,15 @@
 //! updated with a compare-exchange loop.  A torn EWMA update under
 //! contention costs at most one lost sample — irrelevant to a smoothed
 //! drift estimate — and no executor thread ever blocks.
+//!
+//! There is exactly ONE timing source feeding this sink: the
+//! executor's per-layer wall clock in `engine::executor` (`forward`
+//! times every layer once).  The same measurement has two consumers —
+//! this EWMA (per-scheme, against the ratio-free prior, for
+//! re-planning) and the `obs` attribution (per-layer cumulative
+//! seconds vs the plan's predictions, for `obs::export::Snapshot`).
+//! Neither re-times anything, so the two views can never disagree
+//! about what the hardware did.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -1,7 +1,7 @@
 //! Summary statistics over latency/throughput samples.
 
 /// Summary of a sample set (durations in seconds or any unit).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Summary {
     pub n: usize,
     pub mean: f64,
@@ -35,6 +35,24 @@ impl Summary {
             p95: percentile_sorted(&s, 95.0),
             p99: percentile_sorted(&s, 99.0),
         }
+    }
+
+    /// Assemble a `Summary` from already-computed statistics, for
+    /// sources that never hold the raw samples (`obs::hist`'s bounded
+    /// histogram, deserialized snapshots).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_quantiles(
+        n: usize,
+        mean: f64,
+        stddev: f64,
+        min: f64,
+        max: f64,
+        p50: f64,
+        p90: f64,
+        p95: f64,
+        p99: f64,
+    ) -> Summary {
+        Summary { n, mean, stddev, min, max, p50, p90, p95, p99 }
     }
 }
 
@@ -101,6 +119,15 @@ mod tests {
         let s = [0.0, 10.0];
         assert!((percentile_sorted(&s, 50.0) - 5.0).abs() < 1e-12);
         assert!((percentile_sorted(&s, 90.0) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_quantiles_round_trips_fields() {
+        let a = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let b = Summary::from_quantiles(
+            a.n, a.mean, a.stddev, a.min, a.max, a.p50, a.p90, a.p95, a.p99,
+        );
+        assert_eq!(a, b);
     }
 
     #[test]

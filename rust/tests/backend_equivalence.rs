@@ -325,7 +325,11 @@ fn toy_backend_served_through_coordinator() {
     let calls_before = TOY_KERNEL_CALLS.load(Ordering::SeqCst);
     let m2 = m.clone();
     let srv = InferenceServer::start(
-        ServerConfig { max_wait: Duration::from_millis(1), queue_capacity: 4096 },
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 4096,
+            ..Default::default()
+        },
         move || {
             let planner = Planner::with_registry(&RTX2080TI, toy_registry());
             // Search policy: the toy's free cost face must win the plan

@@ -57,7 +57,11 @@ fn pjrt_mlp_served_end_to_end() {
 
     let dir2 = dir.clone();
     let srv = InferenceServer::start(
-        ServerConfig { max_wait: Duration::from_millis(1), queue_capacity: 4096 },
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 4096,
+            ..Default::default()
+        },
         move || Ok(Box::new(MlpModel::load(&dir2)?) as Box<dyn BatchModel>),
     );
     let inputs: Vec<Vec<f32>> =

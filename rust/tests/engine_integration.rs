@@ -213,7 +213,11 @@ fn table5_model_served_through_coordinator() {
     // now through the full serving stack
     let m2 = m.clone();
     let srv = InferenceServer::start(
-        ServerConfig { max_wait: Duration::from_millis(1), queue_capacity: 4096 },
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 4096,
+            ..Default::default()
+        },
         move || {
             let planner = Planner::new(&RTX2080TI);
             Ok(Box::new(

@@ -1,0 +1,256 @@
+//! End-to-end observability tests (PR 6 acceptance):
+//!
+//! * serving metrics hold constant memory under 1M recorded latencies,
+//! * concurrent histogram recording keeps exact totals,
+//! * the trace ring drops oldest-first and counts every eviction,
+//! * an engine-backed served request leaves a queue -> assemble ->
+//!   per-layer trace whose Layer-span count matches the plan and whose
+//!   Layer seconds sum (within tolerance) to the engine's busy time,
+//! * the shutdown obs dump round-trips through `engine::json` carrying
+//!   per-layer drift and per-edge repack attribution,
+//! * the human report, JSON, and Prometheus renderings are three views
+//!   of one `Snapshot` (field parity over `Snapshot::scalars`).
+
+use std::sync::Arc;
+
+use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
+use tcbnn::coordinator::Metrics;
+use tcbnn::engine::json::Value;
+use tcbnn::engine::{EngineModel, Planner};
+use tcbnn::nn::forward::random_weights;
+use tcbnn::nn::model::mnist_mlp;
+use tcbnn::obs::{
+    BatchTrace, LayerAttr, LogHistogram, RepackEdge, Snapshot, Span, SpanKind, TraceRing,
+};
+use tcbnn::sim::RTX2080TI;
+use tcbnn::util::Rng;
+
+#[test]
+fn metrics_memory_is_bounded_for_a_million_latencies() {
+    let m = Metrics::new();
+    let before = m.hist_footprint_bytes();
+    // 8 distinct latencies per batch, 125k batches = 1M samples
+    let lats = [8e-4f64, 9e-4, 1.0e-3, 1.1e-3, 1.2e-3, 1.3e-3, 1.6e-3, 3.1e-3];
+    for _ in 0..125_000 {
+        m.record_batch(8, 8, &lats);
+    }
+    assert_eq!(m.completed(), 1_000_000);
+    assert_eq!(
+        m.hist_footprint_bytes(),
+        before,
+        "latency store must not grow with request count"
+    );
+    assert!(before < 8192, "bounded store: {before} bytes");
+    let s = m.latency_summary();
+    assert_eq!(s.n, 1_000_000);
+    // n/mean/min/max are exact; percentiles are bucket-resolution
+    assert!((s.min - 8e-4).abs() < 1e-12, "min {}", s.min);
+    assert!((s.max - 3.1e-3).abs() < 1e-12, "max {}", s.max);
+    let true_mean = lats.iter().sum::<f64>() / 8.0;
+    assert!((s.mean - true_mean).abs() < 1e-9, "mean {}", s.mean);
+    // the true median sits between 1.1ms and 1.2ms; allow ~9% bucket
+    // resolution on either side
+    assert!(s.p50 >= 1.0e-3 && s.p50 <= 1.35e-3, "p50 {}", s.p50);
+    assert!(s.p50 <= s.p90 && s.p90 <= s.p99);
+}
+
+#[test]
+fn concurrent_histogram_recording_keeps_exact_totals() {
+    let h = LogHistogram::new();
+    let threads = 8u64;
+    let per = 10_000u64;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let h = &h;
+            s.spawn(move || {
+                // thread t records (t+1) milliseconds — whole-ns values,
+                // so the integer sum is exact under any interleaving
+                let secs = 1e-3 * (t + 1) as f64;
+                for _ in 0..per {
+                    h.record(secs);
+                }
+            });
+        }
+    });
+    assert_eq!(h.count(), threads * per, "no increment lost");
+    let want = per as f64 * 36.0 * 1e-3; // per * (1+..+8) ms
+    assert!(
+        (h.sum_secs() - want).abs() < 1e-9,
+        "sum {} vs {want}",
+        h.sum_secs()
+    );
+    let bucketed: u64 = h.nonzero_buckets().iter().map(|(_, _, c)| c).sum();
+    assert_eq!(bucketed, threads * per, "every sample bucketed");
+    assert_eq!(h.summary().n as u64, threads * per);
+}
+
+#[test]
+fn trace_ring_overflow_drops_oldest_and_counts() {
+    let ring = TraceRing::new(4);
+    for seq in 0..10u64 {
+        ring.push(BatchTrace {
+            seq,
+            ids: vec![seq],
+            spans: vec![Span::queue(1e-6)],
+        });
+    }
+    assert_eq!(ring.pushed(), 10);
+    assert_eq!(ring.dropped(), 6, "every eviction counted");
+    assert_eq!(ring.len(), 4, "never over capacity");
+    let kept: Vec<u64> = ring.snapshot().iter().map(|t| t.seq).collect();
+    assert_eq!(kept, vec![6, 7, 8, 9], "oldest evicted first");
+    assert!(ring.find_request(0).is_none(), "evicted trace unfindable");
+    assert!(ring.find_request(9).is_some());
+}
+
+#[test]
+fn served_engine_requests_trace_queue_assembly_and_every_plan_layer() {
+    let model = mnist_mlp();
+    let n_layers = model.layers.len();
+    let planner = Planner::new(&RTX2080TI);
+    let mut rng = Rng::new(2024);
+    let weights = random_weights(&model, &mut rng);
+    let em = EngineModel::builder(&planner, &model, &weights)
+        .buckets(vec![8])
+        .build()
+        .unwrap();
+    let engine_metrics = em.metrics_handle();
+    let stem = std::env::temp_dir()
+        .join(format!("tcbnn-obs-e2e-{}", std::process::id()));
+    let mut slot = Some(em);
+    let srv = InferenceServer::start(
+        ServerConfig { obs_dump: Some(stem.clone()), ..Default::default() },
+        move || Ok(Box::new(slot.take().unwrap()) as Box<dyn BatchModel>),
+    );
+    let server_metrics = Arc::clone(&srv.metrics);
+    let inputs: Vec<Vec<f32>> = (0..16)
+        .map(|_| (0..784).map(|_| rng.next_f32() - 0.5).collect())
+        .collect();
+    let resps = srv.submit_all(inputs);
+    assert_eq!(resps.len(), 16);
+
+    // the batch trace: queue wait, assembly, then one span per layer
+    let trace = server_metrics
+        .traces()
+        .find_request(0)
+        .expect("request 0 traced");
+    assert_eq!(trace.spans[0].kind, SpanKind::Queue);
+    assert_eq!(trace.spans[1].kind, SpanKind::Assemble);
+    assert!(trace.spans[1].bytes > 0, "assembly bytes recorded");
+    let layer_spans: Vec<&Span> = trace
+        .spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Layer)
+        .collect();
+    assert_eq!(layer_spans.len(), n_layers, "one Layer span per plan layer");
+    assert!(layer_spans.iter().all(|s| s.secs >= 0.0 && s.bytes > 0));
+    assert!(
+        layer_spans[0].label.contains("L0/"),
+        "layer labels locate the plan: {}",
+        layer_spans[0].label
+    );
+
+    // layer spans across all batches sum (within tolerance) to the
+    // engine's busy time: the pass IS the busy time minus dispatch
+    // overhead around the arena forward
+    let total_layer_s: f64 = server_metrics
+        .traces()
+        .snapshot()
+        .iter()
+        .map(|t| t.layer_secs())
+        .sum();
+    let busy = engine_metrics.snapshot().engine_busy_s;
+    assert!(busy > 0.0);
+    assert!(total_layer_s > 0.0);
+    assert!(
+        total_layer_s <= busy * 1.05,
+        "layer spans ({total_layer_s}s) cannot exceed busy time ({busy}s)"
+    );
+    assert!(
+        total_layer_s >= busy * 0.1,
+        "layer spans ({total_layer_s}s) must account for the bulk of \
+         busy time ({busy}s)"
+    );
+
+    // shutdown writes the obs dump; it must round-trip with the
+    // engine-side attribution grafted in
+    srv.shutdown();
+    let json_path = format!("{}.json", stem.display());
+    let prom_path = format!("{}.prom", stem.display());
+    let text = std::fs::read_to_string(&json_path).expect("obs dump written");
+    let parsed = Value::parse(&text).expect("valid engine::json");
+    let snap = Snapshot::from_json(&parsed).expect("snapshot shape");
+    assert_eq!(snap.to_json(), parsed, "dump round-trips exactly");
+    assert_eq!(snap.requests, 16);
+    assert_eq!(snap.layers.len(), n_layers, "per-layer attribution grafted");
+    assert!(
+        snap.layers.iter().all(|l| l.calls == snap.batches),
+        "every batch ran every layer: {:?} vs {} batches",
+        snap.layers.iter().map(|l| l.calls).collect::<Vec<_>>(),
+        snap.batches
+    );
+    assert!(snap.layers.iter().all(|l| l.drift() > 0.0));
+    assert_eq!(snap.traces_pushed, snap.batches);
+    let prom = std::fs::read_to_string(&prom_path).expect("prom written");
+    assert!(prom.contains("tcbnn_requests_total 16"), "{prom}");
+    assert!(prom.contains("tcbnn_layer_seconds_total{layer=\"0\""), "{prom}");
+    let _ = std::fs::remove_file(&json_path);
+    let _ = std::fs::remove_file(&prom_path);
+}
+
+#[test]
+fn report_json_and_prometheus_are_three_renderings_of_one_snapshot() {
+    let m = Metrics::new();
+    m.record_batch(8, 8, &[1e-3; 8]);
+    m.record_batch(3, 8, &[2e-3; 3]);
+    m.record_engine_batch(16, 0.004);
+    m.record_plan_cache(1, 2);
+    m.record_replan();
+    m.set_cost_drift(vec![("FASTPATH".to_string(), 1.5, 3)]);
+    m.set_repacks(vec![("FASTPATH".to_string(), 2, 4096)]);
+    m.set_layer_attribution(vec![LayerAttr {
+        index: 0,
+        tag: "1024FC".to_string(),
+        scheme: "FASTPATH".to_string(),
+        calls: 2,
+        secs: 0.003,
+        predicted_s: 0.001,
+    }]);
+    m.set_repack_edges(vec![RepackEdge {
+        layer: 1,
+        src: "Row32".to_string(),
+        dst: "Blocked64".to_string(),
+        ops: 2,
+        bytes: 4096,
+        secs: 2e-6,
+    }]);
+    m.traces().push(BatchTrace {
+        seq: 1,
+        ids: vec![0],
+        spans: vec![Span::queue(1e-5)],
+    });
+    let snap = m.snapshot();
+
+    // rendering 1: the human report is exactly the snapshot's rendering
+    assert_eq!(m.report(), snap.render_report());
+
+    // rendering 2: JSON carries every field (struct-level round trip)
+    let back = Snapshot::from_json(&snap.to_json()).expect("parses back");
+    assert_eq!(back, snap, "JSON loses no field");
+
+    // rendering 3: Prometheus carries every scalar family with the
+    // same value the snapshot holds
+    let prom = snap.to_prometheus();
+    for (name, value) in snap.scalars() {
+        let line = format!("tcbnn_{name} {value}");
+        assert!(prom.contains(&line), "prometheus missing {line:?}\n{prom}");
+    }
+    // ...and the labeled attribution families
+    assert!(prom.contains(
+        "tcbnn_layer_drift_ratio{layer=\"0\",tag=\"1024FC\",scheme=\"FASTPATH\"} 3"
+    ));
+    assert!(prom.contains(
+        "tcbnn_repack_edge_bytes_total{layer=\"1\",src=\"Row32\",dst=\"Blocked64\"} 4096"
+    ));
+    assert!(prom.contains("tcbnn_cost_drift_ratio{scheme=\"FASTPATH\"} 1.5"));
+}
