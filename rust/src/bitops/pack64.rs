@@ -70,6 +70,30 @@ pub fn pm1_dot64(a: &[u64], b: &[u64], n: usize) -> i32 {
     n as i32 - 2 * xor_popc64(a, b) as i32
 }
 
+/// Split two equal-length packed lines into `L`-word lane pairs plus
+/// their scalar remainders — the access shape every SIMD popcount
+/// kernel consumes (L=4 for 256-bit unrolls, 8 for AVX-512, 16 for the
+/// NEON 8-vector block).  Returning fixed-size array refs lets the
+/// vector kernels index lanes without bounds checks.
+#[inline]
+pub fn lane_pairs<'a, const L: usize>(
+    a: &'a [u64],
+    b: &'a [u64],
+) -> (
+    impl Iterator<Item = (&'a [u64; L], &'a [u64; L])>,
+    &'a [u64],
+    &'a [u64],
+) {
+    debug_assert_eq!(a.len(), b.len());
+    let ca = a.chunks_exact(L);
+    let cb = b.chunks_exact(L);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    let it = ca.zip(cb).map(|(x, y)| -> (&'a [u64; L], &'a [u64; L]) {
+        (x.try_into().expect("exact chunk"), y.try_into().expect("exact chunk"))
+    });
+    (it, ra, rb)
+}
+
 /// A bit matrix with lines repacked into u64 words — the fastpath
 /// operand form.  `rows`/`cols`/`layout` carry the same meaning as in
 /// [`BitMatrix`]; only the word size of a packed line changes.
@@ -174,6 +198,44 @@ mod tests {
             repack64_into(&pb, &mut b64);
             assert_eq!(pm1_dot64(&a64, &b64, n), pack::pm1_dot(&pa, &pb, n));
         });
+    }
+
+    #[test]
+    fn lane_pairs_tile_the_lines_exactly() {
+        run_cases(66, 60, |rng| {
+            let n = 1 + rng.gen_range(100);
+            let a: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            // popcount composed from L-word lanes + remainder must match
+            // the flat kernel for every lane width the SIMD paths use
+            fn via_lanes<const L: usize>(a: &[u64], b: &[u64]) -> u32 {
+                let (lanes, ra, rb) = lane_pairs::<L>(a, b);
+                let mut acc = 0u32;
+                for (x, y) in lanes {
+                    for l in 0..L {
+                        acc += (x[l] ^ y[l]).count_ones();
+                    }
+                }
+                for (x, y) in ra.iter().zip(rb) {
+                    acc += (x ^ y).count_ones();
+                }
+                acc
+            }
+            let want = xor_popc64(&a, &b);
+            assert_eq!(via_lanes::<4>(&a, &b), want);
+            assert_eq!(via_lanes::<8>(&a, &b), want);
+            assert_eq!(via_lanes::<16>(&a, &b), want);
+        });
+    }
+
+    #[test]
+    fn lane_pairs_remainder_covers_short_lines() {
+        let a = [1u64, 2, 3];
+        let b = [3u64, 2, 1];
+        let (mut lanes, ra, rb) = lane_pairs::<4>(&a, &b);
+        assert!(lanes.next().is_none());
+        assert_eq!(ra, &a);
+        assert_eq!(rb, &b);
     }
 
     #[test]

@@ -169,9 +169,9 @@ pub fn tables_6_7(gpu: &GpuModel) -> Table {
         header.push(format!("{}_fps", m.name));
     }
     let mut t = Table::new(title, &header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
-    // paper rows only: FASTPATH is the host backend, not a GPU scheme,
-    // so it has no place in a Tables-6/7 reproduction
-    for s in Scheme::all().into_iter().filter(|s| *s != Scheme::Fastpath) {
+    // paper rows only: FASTPATH and SIMD are host backends, not GPU
+    // schemes, so they have no place in a Tables-6/7 reproduction
+    for s in Scheme::all().into_iter().filter(|s| !s.is_host()) {
         let mut row = vec![s.name().to_string()];
         for m in all_models() {
             let lat = model_cost(&m, 8, gpu, s, ResidualMode::Full, true);

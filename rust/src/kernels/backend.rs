@@ -338,7 +338,7 @@ mod tests {
     }
 
     #[test]
-    fn layout_face_defaults_to_row32_except_fastpath_fc() {
+    fn layout_face_defaults_to_row32_except_host_fc() {
         let fc = LayerSpec::BinFc { d_in: 512, d_out: 512 };
         let conv = LayerSpec::BinConv {
             c: 64,
@@ -350,7 +350,7 @@ mod tests {
             residual: false,
         };
         for b in BackendRegistry::builtin().backends() {
-            let want_fc = if b.scheme() == Scheme::Fastpath {
+            let want_fc = if b.scheme().is_host() {
                 LayoutKind::Blocked64
             } else {
                 LayoutKind::Row32

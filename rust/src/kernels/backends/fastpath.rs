@@ -130,8 +130,28 @@ impl PreparedConv for FastpathConv {
     }
 }
 
-/// Host-model seconds for one layer under the fastpath.
-fn fastpath_layer_secs(
+/// Rate constants of an analytic host cost model.
+///
+/// The fastpath and SIMD backends share **one model shape** — the
+/// curve `secs = fp/F + words/W + stream/B + DISPATCH` that
+/// `tuner::features::layer_features` mirrors — and differ only in
+/// these coefficients, so the tuner fits either backend with the same
+/// regressors.
+pub(crate) struct HostRates {
+    /// u64 XOR+POPC+accumulate word ops per second (all cores).
+    pub word_ops_per_sec: f64,
+    /// f32 multiply-accumulates per second (the first BWN layer).
+    pub fp_ops_per_sec: f64,
+    /// streamed bytes per second (packing, pooling, residual traffic).
+    pub bytes_per_sec: f64,
+    /// scoped fork/join + repack latency per parallel section.
+    pub dispatch_secs: f64,
+}
+
+/// Host-model seconds for one layer under `rates` (shared by every
+/// analytic host backend).
+pub(crate) fn analytic_host_secs(
+    rates: &HostRates,
     layer: &LayerSpec,
     dims: Dims,
     batch: usize,
@@ -145,11 +165,11 @@ fn fastpath_layer_secs(
         LayerSpec::FirstConv { c, o, k, stride, pad } => {
             let ohw = out_hw(k, stride, pad);
             let fp = (ohw * ohw * batch * o * k * k * c) as f64;
-            fp / host::FP_OPS_PER_SEC + host::DISPATCH_SECS
+            fp / rates.fp_ops_per_sec + rates.dispatch_secs
         }
         LayerSpec::BinConv { o, k, stride, pad, residual: is_res, .. } => {
-            // filters beyond the fastpath tap limit cannot run there:
-            // cost them infinite so no plan ever selects the scheme
+            // filters beyond the host tap limit cannot run here: cost
+            // them infinite so no plan ever selects the scheme
             if k * k > fastpath::bconv::MAX_TAPS {
                 return f64::INFINITY;
             }
@@ -158,9 +178,9 @@ fn fastpath_layer_secs(
             let words = (ohw * ohw * batch * o * k * k * c.div_ceil(64)) as f64;
             // im2row build + output repack are streamed bytes
             let stream = (ohw * ohw * batch * (k * k * c.div_ceil(8) + o)) as f64;
-            let mut secs = words / host::WORD_OPS_PER_SEC
-                + stream / host::BYTES_PER_SEC
-                + host::DISPATCH_SECS;
+            let mut secs = words / rates.word_ops_per_sec
+                + stream / rates.bytes_per_sec
+                + rates.dispatch_secs;
             if is_res && model_has_residuals && residual != ResidualMode::None {
                 let out_dims = dims.after(layer);
                 // fp16 residual save/fetch, same accounting as the GPU path
@@ -170,20 +190,37 @@ fn fastpath_layer_secs(
                     ResidualMode::None => 0,
                 };
                 secs += (out_dims.flat() * batch * 2 * xfers) as f64
-                    / host::BYTES_PER_SEC;
+                    / rates.bytes_per_sec;
             }
             secs
         }
         LayerSpec::BinFc { d_in, d_out } | LayerSpec::FinalFc { d_in, d_out } => {
             let words = (batch * d_out * d_in.div_ceil(64)) as f64;
-            words / host::WORD_OPS_PER_SEC + host::DISPATCH_SECS
+            words / rates.word_ops_per_sec + rates.dispatch_secs
         }
         LayerSpec::Pool => {
             // 4 packed loads + 1 store per output word
             let bytes = (dims.flat() * batch).div_ceil(8) as f64;
-            bytes * 5.0 / host::BYTES_PER_SEC + host::DISPATCH_SECS
+            bytes * 5.0 / rates.bytes_per_sec + rates.dispatch_secs
         }
     }
+}
+
+/// Host-model seconds for one layer under the fastpath.
+fn fastpath_layer_secs(
+    layer: &LayerSpec,
+    dims: Dims,
+    batch: usize,
+    residual: ResidualMode,
+    model_has_residuals: bool,
+) -> f64 {
+    let rates = HostRates {
+        word_ops_per_sec: host::WORD_OPS_PER_SEC,
+        fp_ops_per_sec: host::FP_OPS_PER_SEC,
+        bytes_per_sec: host::BYTES_PER_SEC,
+        dispatch_secs: host::DISPATCH_SECS,
+    };
+    analytic_host_secs(&rates, layer, dims, batch, residual, model_has_residuals)
 }
 
 impl KernelBackend for FastpathBackend {

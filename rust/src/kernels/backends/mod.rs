@@ -16,6 +16,10 @@
 //!   (`kernels::fastpath`): u64-repacked prepared weights, bit-im2row
 //!   conv lowering, and an analytic host cost model instead of GPU
 //!   traces.
+//! * [`simd`] — the explicit-SIMD host backend (`kernels::simd`):
+//!   the fastpath's blocking and lowering with the inner popcount
+//!   dispatched through a runtime-detected `PopcountEngine`
+//!   (AVX2 popcnt / AVX-512 vpopcntdq / NEON cnt / portable).
 //!
 //! The free functions here assemble per-layer traces from a backend's
 //! conv/FC cores: the scheme-independent pieces (first-layer BWN
@@ -28,6 +32,7 @@ pub mod btc;
 pub mod fastpath;
 pub mod scalar;
 pub mod sbnn;
+pub mod simd;
 
 use crate::kernels::backend::KernelBackend;
 use crate::nn::cost::ResidualMode;
@@ -44,6 +49,7 @@ pub fn builtin() -> Vec<Box<dyn KernelBackend>> {
         Box::new(btc::BtcBackend::new(false)),
         Box::new(btc::BtcBackend::new(true)),
         Box::new(fastpath::FastpathBackend),
+        Box::new(simd::SimdBackend::detect()),
     ]
 }
 

@@ -1,0 +1,296 @@
+//! The explicit-SIMD host backend (`Scheme::Simd`): same prepared
+//! weight forms, cache blocking, and bit-im2row lowering as the
+//! fastpath, with the KC-word inner product dispatched through a
+//! [`PopcountEngine`] selected once at registry construction (runtime
+//! feature detection, `TCBNN_SIMD` override).  The cost face is the
+//! shared analytic host curve with engine-dependent word throughput,
+//! so the planner and tuner treat the engine choice as a calibratable
+//! coefficient, not a different model.
+
+use anyhow::{ensure, Result};
+
+use crate::bitops::pack64::{self, BitMatrix64};
+use crate::bitops::{BitMatrix, BitTensor4};
+use crate::kernels::backend::{ExecCtx, KernelBackend, PreparedConv, PreparedFc};
+use crate::kernels::backends::fastpath::{analytic_host_secs, host as fastpath_host, HostRates};
+use crate::kernels::bconv::BconvProblem;
+use crate::kernels::fastpath::{self, FastConvFilter};
+use crate::kernels::simd::PopcountEngine;
+use crate::layout::LayoutKind;
+use crate::nn::cost::{ResidualMode, Scheme};
+use crate::nn::layer::{Dims, LayerSpec};
+use crate::sim::{Engine, KernelTrace};
+
+/// Calibrated host constants for the SIMD cost model.  FP, byte, and
+/// dispatch rates are the fastpath's (same cores, same im2row and
+/// streaming code); only the popcount word rate depends on the engine.
+/// Seeds are conservative per-engine estimates — the tuner's
+/// calibration run replaces them with fitted per-host values.
+pub mod host {
+    use crate::kernels::simd::PopcountEngine;
+
+    /// Portable u64 `count_ones` through the generic (untiled) blocked
+    /// path: slightly below the fastpath's 4x4-tiled 6.0e9.
+    pub const PORTABLE_WORD_OPS_PER_SEC: f64 = 5.0e9;
+    /// Hardware scalar `popcnt`, 4-word unroll.
+    pub const AVX2_WORD_OPS_PER_SEC: f64 = 1.4e10;
+    /// `vpopcntdq`, 8 words per instruction.
+    pub const AVX512_WORD_OPS_PER_SEC: f64 = 2.8e10;
+    /// NEON `cnt` + horizontal add, 16-word blocks.
+    pub const NEON_WORD_OPS_PER_SEC: f64 = 1.1e10;
+
+    /// Seed word throughput for `engine`.
+    pub fn word_ops_per_sec(engine: PopcountEngine) -> f64 {
+        match engine {
+            PopcountEngine::Portable => PORTABLE_WORD_OPS_PER_SEC,
+            PopcountEngine::Avx2 => AVX2_WORD_OPS_PER_SEC,
+            PopcountEngine::Avx512 => AVX512_WORD_OPS_PER_SEC,
+            PopcountEngine::Neon => NEON_WORD_OPS_PER_SEC,
+        }
+    }
+}
+
+/// The explicit-SIMD host backend.
+pub struct SimdBackend {
+    engine: PopcountEngine,
+}
+
+impl SimdBackend {
+    /// Backend with the engine runtime detection (+ `TCBNN_SIMD`
+    /// override) selects — what `BackendRegistry::builtin` registers.
+    pub fn detect() -> SimdBackend {
+        SimdBackend { engine: PopcountEngine::detect() }
+    }
+
+    /// Backend pinned to a specific engine.  The caller must only pass
+    /// an [`available`](PopcountEngine::is_available) engine
+    /// (asserted), which equivalence tests iterate explicitly.
+    pub fn with_engine(engine: PopcountEngine) -> SimdBackend {
+        assert!(engine.is_available(), "engine {} not available on this host", engine.name());
+        SimdBackend { engine }
+    }
+
+    /// The engine this backend dispatches through.
+    pub fn engine(&self) -> PopcountEngine {
+        self.engine
+    }
+}
+
+/// FC weights repacked to u64 lines once, off the request path — the
+/// same prepared form as the fastpath; only the dot kernel differs.
+struct SimdFc {
+    w64: BitMatrix64,
+    engine: PopcountEngine,
+}
+
+impl SimdFc {
+    fn dot_lines(&self, rows: &[u64], batch: usize, ints: &mut [i32], threads: usize) {
+        let engine = self.engine;
+        let dot = move |x: &[u64], y: &[u64]| engine.xor_popc(x, y);
+        fastpath::bmm::dot_lines_with(
+            rows,
+            &self.w64.data,
+            self.w64.words_per_line,
+            batch,
+            self.w64.rows,
+            self.w64.cols,
+            ints,
+            threads,
+            &dot,
+        );
+    }
+}
+
+impl PreparedFc for SimdFc {
+    fn scratch_words(&self, batch: usize) -> usize {
+        batch * self.w64.words_per_line
+    }
+
+    /// Native operand form: u64 lines (shared with the fastpath, so
+    /// planned `Blocked64` edges chain across the two host schemes).
+    fn input_layout(&self) -> LayoutKind {
+        LayoutKind::Blocked64
+    }
+
+    fn supports_input_layout(&self, layout: LayoutKind) -> bool {
+        matches!(layout, LayoutKind::Row32 | LayoutKind::Blocked64)
+    }
+
+    fn bmm(&self, src: &[u32], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let wpl_in = self.w64.cols.div_ceil(32);
+        let w64in = self.w64.words_per_line;
+        debug_assert_eq!(pack64::words64(wpl_in), w64in, "weight repack width");
+        assert!(src.len() >= batch * wpl_in, "input row buffer size");
+        assert_eq!(ints.len(), batch * self.w64.rows, "dot staging size");
+        let rows = &mut ctx.words64[..batch * w64in];
+        for (ni, row) in rows.chunks_exact_mut(w64in).enumerate() {
+            pack64::repack64_into(&src[ni * wpl_in..(ni + 1) * wpl_in], row);
+        }
+        self.dot_lines(rows, batch, ints, ctx.threads);
+    }
+
+    fn bmm64(&self, src64: &[u64], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let w64in = self.w64.words_per_line;
+        assert!(src64.len() >= batch * w64in, "u64 input row buffer size");
+        assert_eq!(ints.len(), batch * self.w64.rows, "dot staging size");
+        self.dot_lines(&src64[..batch * w64in], batch, ints, ctx.threads);
+    }
+}
+
+/// Conv filter in the fastpath's prepared u64 form; the lowering and
+/// correction are shared, the BMM dot kernel is the engine's.
+struct SimdConv {
+    f: FastConvFilter,
+    engine: PopcountEngine,
+}
+
+impl PreparedConv for SimdConv {
+    fn scratch_words(&self, p: BconvProblem) -> usize {
+        fastpath::bconv::rows(p) * self.f.row_words
+    }
+
+    fn bconv(&self, src: &[u32], p: BconvProblem, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let need = fastpath::bconv::rows(p) * self.f.row_words;
+        let engine = self.engine;
+        let dot = move |x: &[u64], y: &[u64]| engine.xor_popc(x, y);
+        fastpath::bconv::bconv_into_with(
+            src,
+            p,
+            &self.f,
+            &mut ctx.words64[..need],
+            ints,
+            ctx.threads,
+            &dot,
+        );
+    }
+}
+
+impl KernelBackend for SimdBackend {
+    fn scheme(&self) -> Scheme {
+        Scheme::Simd
+    }
+
+    /// Same layout faces as the fastpath: FC layers natively consume
+    /// and emit `Blocked64`, so the (scheme, layout) DP chains
+    /// consecutive host FC layers with no repack edges — including
+    /// mixed fastpath/SIMD chains.
+    fn preferred_input_layout(&self, layer: &LayerSpec) -> LayoutKind {
+        match layer {
+            LayerSpec::BinFc { .. } | LayerSpec::FinalFc { .. } => LayoutKind::Blocked64,
+            _ => LayoutKind::Row32,
+        }
+    }
+
+    fn output_layout(&self, layer: &LayerSpec) -> LayoutKind {
+        match layer {
+            LayerSpec::BinFc { .. } => LayoutKind::Blocked64,
+            _ => LayoutKind::Row32,
+        }
+    }
+
+    fn prepare_fc(&self, w: &BitMatrix) -> Result<Box<dyn PreparedFc>> {
+        Ok(Box::new(SimdFc { w64: BitMatrix64::from_bitmatrix(w), engine: self.engine }))
+    }
+
+    fn prepare_conv(
+        &self,
+        filter: &BitTensor4,
+        p: BconvProblem,
+    ) -> Result<Box<dyn PreparedConv>> {
+        ensure!(
+            p.k * p.k <= fastpath::bconv::MAX_TAPS,
+            "{}x{} filter exceeds the host tap limit ({} taps)",
+            p.k,
+            p.k,
+            fastpath::bconv::MAX_TAPS
+        );
+        Ok(Box::new(SimdConv { f: FastConvFilter::prepare(filter), engine: self.engine }))
+    }
+
+    /// Host backend: no GPU trace face.
+    fn layer_traces(
+        &self,
+        _layer: &LayerSpec,
+        _dims: Dims,
+        _batch: usize,
+        _residual: ResidualMode,
+        _model_has_residuals: bool,
+    ) -> Vec<KernelTrace> {
+        Vec::new()
+    }
+
+    fn layer_secs(
+        &self,
+        _engine: &Engine,
+        layer: &LayerSpec,
+        dims: Dims,
+        batch: usize,
+        residual: ResidualMode,
+        model_has_residuals: bool,
+    ) -> f64 {
+        let rates = HostRates {
+            word_ops_per_sec: host::word_ops_per_sec(self.engine),
+            fp_ops_per_sec: fastpath_host::FP_OPS_PER_SEC,
+            bytes_per_sec: fastpath_host::BYTES_PER_SEC,
+            dispatch_secs: fastpath_host::DISPATCH_SECS,
+        };
+        analytic_host_secs(&rates, layer, dims, batch, residual, model_has_residuals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_respects_the_available_contract() {
+        let b = SimdBackend::detect();
+        assert!(b.engine().is_available());
+        assert_eq!(b.scheme(), Scheme::Simd);
+    }
+
+    #[test]
+    fn with_engine_pins_and_every_available_engine_constructs() {
+        for e in PopcountEngine::available() {
+            assert_eq!(SimdBackend::with_engine(e).engine(), e);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not available")]
+    fn with_engine_rejects_unavailable_engines() {
+        // at least one of the vector engines is foreign on any host
+        let foreign = [PopcountEngine::Avx512, PopcountEngine::Neon]
+            .into_iter()
+            .find(|e| !e.is_available())
+            .expect("some engine must be unavailable");
+        let _ = SimdBackend::with_engine(foreign);
+    }
+
+    #[test]
+    fn cost_face_scales_with_the_engine_word_rate() {
+        use crate::sim::RTX2080TI;
+        let eng = Engine::new(&RTX2080TI);
+        let layer = LayerSpec::BinFc { d_in: 4096, d_out: 4096 };
+        let dims = Dims { hw: 1, feat: 4096 };
+        let portable = SimdBackend::with_engine(PopcountEngine::Portable).layer_secs(
+            &eng,
+            &layer,
+            dims,
+            8,
+            ResidualMode::None,
+            false,
+        );
+        let auto = SimdBackend::detect().layer_secs(
+            &eng,
+            &layer,
+            dims,
+            8,
+            ResidualMode::None,
+            false,
+        );
+        assert!(portable.is_finite() && portable > 0.0);
+        // a wider engine can only be modeled faster-or-equal
+        assert!(auto <= portable, "auto {auto} vs portable {portable}");
+    }
+}

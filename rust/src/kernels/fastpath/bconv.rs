@@ -23,7 +23,7 @@
 use crate::bitops::pack64::{self, words64};
 use crate::bitops::{BitTensor4, TensorLayout};
 use crate::kernels::bconv::BconvProblem;
-use crate::util::threadpool::scoped_chunks;
+use crate::util::threadpool::{scoped_chunks, scoped_chunks_numa, NumaTopology};
 
 use super::bmm;
 
@@ -94,7 +94,9 @@ pub fn im2row_into(src: &[u32], p: BconvProblem, a64: &mut [u64], threads: usize
     let ohw = p.out_hw();
     assert!(src.len() >= p.hw * p.hw * p.n * wi, "input buffer size");
     assert_eq!(a64.len(), ohw * ohw * p.n * rw, "im2row buffer size");
-    scoped_chunks(a64, p.n * rw, threads, |pix, lines| {
+    // NUMA-sharded so each node's workers first-touch (and later
+    // stream, via the matching popc band split) their own row range.
+    scoped_chunks_numa(a64, p.n * rw, threads, NumaTopology::global(), |pix, lines| {
         let (op, oq) = (pix / ohw, pix % ohw);
         for r in 0..p.k {
             for s in 0..p.k {
@@ -141,7 +143,40 @@ pub fn bconv_into(
     assert_eq!(out.len(), m * p.o, "output buffer size");
     im2row_into(src, p, a64, threads);
     bmm::popc_lines(a64, &f.data, f.row_words, m, p.o, out, threads);
-    // restore the exclude-amended Eq 2 per output pixel
+    amend_excluded(out, p, f, threads);
+}
+
+/// [`bconv_into`] with the BMM inner product dispatched through a
+/// caller-supplied dot kernel (the SIMD backend's `PopcountEngine`):
+/// same bit-im2row lowering, same exclude-amended correction,
+/// bit-identical output for any exact-popcount `dot`.
+pub fn bconv_into_with<D>(
+    src: &[u32],
+    p: BconvProblem,
+    f: &FastConvFilter,
+    a64: &mut [u64],
+    out: &mut [i32],
+    threads: usize,
+    dot: &D,
+) where
+    D: Fn(&[u64], &[u64]) -> u32 + Sync,
+{
+    assert_eq!(f.c, p.c, "filter channels");
+    assert_eq!(f.k, p.k, "filter extent");
+    assert_eq!(f.o, p.o, "output channels");
+    assert!(p.k * p.k <= MAX_TAPS, "filter extent over fastpath limit");
+    let ohw = p.out_hw();
+    let m = ohw * ohw * p.n;
+    assert_eq!(out.len(), m * p.o, "output buffer size");
+    im2row_into(src, p, a64, threads);
+    bmm::popc_lines_with(a64, &f.data, f.row_words, m, p.o, out, threads, dot);
+    amend_excluded(out, p, f, threads);
+}
+
+/// Restore the exclude-amended Eq 2 per output pixel after the raw
+/// popcount BMM (shared by the fastpath and SIMD backends).
+fn amend_excluded(out: &mut [i32], p: BconvProblem, f: &FastConvFilter, threads: usize) {
+    let ohw = p.out_hw();
     let taps = p.k * p.k;
     scoped_chunks(out, p.n * p.o, threads, |pix, seg| {
         let (op, oq) = (pix / ohw, pix % ohw);

@@ -17,6 +17,7 @@
 
 use crate::bitops::pack64::{xor_popc64, BitMatrix64};
 use crate::bitops::{BitMatrix, Layout};
+use crate::util::threadpool::{scoped_bands_numa, NumaTopology};
 
 /// Output-row block (A panel height).
 pub const MC: usize = 64;
@@ -150,29 +151,132 @@ pub fn popc_lines(
     // One contiguous multi-row band per worker (multiple of 4 rows so
     // the 4x4 tile path stays hot), handed to popc_band whole: the MC
     // loop tiles inside the band and the B panel streams once per band,
-    // not once per 4 rows.  The up-to-3 leftover rows of a
-    // non-multiple-of-4 m run scalar at the end.
+    // not once per 4 rows.  Bands are split NUMA-node-proportionally
+    // (scoped_bands_numa; flat split on single-node hosts) so each
+    // node's workers stream the A rows they first-touched.  The up-to-3
+    // leftover rows of a non-multiple-of-4 m run scalar at the end.
     let m4 = m / 4 * 4;
     if m4 > 0 {
         let groups = m4 / 4;
         let t = threads.max(1).min(groups);
-        let band_rows = groups.div_ceil(t) * 4;
         if t <= 1 {
             popc_band(&a[..m4 * wk], b, wk, m4, n, &mut out[..m4 * n]);
         } else {
-            std::thread::scope(|s| {
-                for (bi, band) in out[..m4 * n].chunks_mut(band_rows * n).enumerate()
-                {
-                    let rows = band.len() / n;
-                    let r0 = bi * band_rows;
-                    let a_band = &a[r0 * wk..(r0 + rows) * wk];
-                    s.spawn(move || popc_band(a_band, b, wk, rows, n, band));
-                }
+            scoped_bands_numa(&mut out[..m4 * n], 4 * n, t, NumaTopology::global(), |g0, band| {
+                let rows = band.len() / n;
+                let r0 = g0 * 4;
+                popc_band(&a[r0 * wk..(r0 + rows) * wk], b, wk, rows, n, band);
             });
         }
     }
     if m4 < m {
         popc_band(&a[m4 * wk..], b, wk, m - m4, n, &mut out[m4 * n..]);
+    }
+}
+
+/// [`popc_block`] with the line inner product delegated to a caller
+/// supplied dot kernel: plain row x column loops over the K block, no
+/// 4x4 word interleave — the SIMD engines unroll lanes *inside* `dot`,
+/// so interleaving words across lines here would only defeat them.
+#[allow(clippy::too_many_arguments)]
+fn popc_block_with<D>(
+    a: &[u64],
+    b: &[u64],
+    wk: usize,
+    (i0, ib): (usize, usize),
+    (j0, jb): (usize, usize),
+    (k0, kb): (usize, usize),
+    n: usize,
+    out: &mut [i32],
+    dot: &D,
+) where
+    D: Fn(&[u64], &[u64]) -> u32,
+{
+    for i in i0..ib {
+        let ar = &a[i * wk + k0..i * wk + kb];
+        for j in j0..jb {
+            let bj = &b[j * wk + k0..j * wk + kb];
+            out[i * n + j] += dot(ar, bj) as i32;
+        }
+    }
+}
+
+/// [`popc_band`] with a caller-supplied dot kernel: the same
+/// MC x NC x KC cache-blocked walk over one band.
+fn popc_band_with<D>(a: &[u64], b: &[u64], wk: usize, mb: usize, n: usize, out: &mut [i32], dot: &D)
+where
+    D: Fn(&[u64], &[u64]) -> u32,
+{
+    debug_assert_eq!(a.len(), mb * wk);
+    debug_assert_eq!(b.len(), n * wk);
+    debug_assert_eq!(out.len(), mb * n);
+    for i0 in (0..mb).step_by(MC) {
+        let ib = (i0 + MC).min(mb);
+        for j0 in (0..n).step_by(NC) {
+            let jb = (j0 + NC).min(n);
+            for k0 in (0..wk).step_by(KC) {
+                let kb = (k0 + KC).min(wk);
+                popc_block_with(a, b, wk, (i0, ib), (j0, jb), (k0, kb), n, out, dot);
+            }
+        }
+    }
+}
+
+/// [`popc_lines`] with the KC-word inner product dispatched through a
+/// caller-supplied dot kernel (the SIMD backend's `PopcountEngine`):
+/// same blocking, same NUMA-sharded row bands, bit-identical output
+/// for any exact-popcount `dot`.
+#[allow(clippy::too_many_arguments)]
+pub fn popc_lines_with<D>(
+    a: &[u64],
+    b: &[u64],
+    wk: usize,
+    m: usize,
+    n: usize,
+    out: &mut [i32],
+    threads: usize,
+    dot: &D,
+) where
+    D: Fn(&[u64], &[u64]) -> u32 + Sync,
+{
+    assert_eq!(a.len(), m * wk, "A line buffer size");
+    assert_eq!(b.len(), n * wk, "B line buffer size");
+    assert_eq!(out.len(), m * n, "output size");
+    out.fill(0);
+    if m == 0 || n == 0 || wk == 0 {
+        return;
+    }
+    let t = threads.max(1).min(m);
+    if t <= 1 {
+        popc_band_with(a, b, wk, m, n, out, dot);
+    } else {
+        scoped_bands_numa(out, n, t, NumaTopology::global(), |r0, band| {
+            let rows = band.len() / n;
+            popc_band_with(&a[r0 * wk..(r0 + rows) * wk], b, wk, rows, n, band, dot);
+        });
+    }
+}
+
+/// [`dot_lines`] with a caller-supplied dot kernel: Eq-2 transform of
+/// [`popc_lines_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn dot_lines_with<D>(
+    a: &[u64],
+    b: &[u64],
+    wk: usize,
+    m: usize,
+    n: usize,
+    k_bits: usize,
+    out: &mut [i32],
+    threads: usize,
+    dot: &D,
+) where
+    D: Fn(&[u64], &[u64]) -> u32 + Sync,
+{
+    popc_lines_with(a, b, wk, m, n, out, threads, dot);
+    let k = k_bits as i32;
+    for v in out.iter_mut() {
+        *v = k - 2 * *v;
     }
 }
 
@@ -283,5 +387,27 @@ mod tests {
             let b = BitMatrix::random(k, n, Layout::ColMajor, &mut rng);
             assert_eq!(bmm(&a, &b, 3), naive_ref(&a, &b), "{m}x{n}x{k}");
         }
+    }
+
+    #[test]
+    fn generic_dot_path_matches_tiled_path() {
+        // popc_lines_with must agree with popc_lines for any exact dot
+        // kernel; with xor_popc64 plugged in the two differ only in
+        // blocking order, which exact popcounts cannot observe.
+        run_cases(75, 25, |rng| {
+            let m = 1 + rng.gen_range(70);
+            let n = 1 + rng.gen_range(70);
+            let k = 1 + rng.gen_range(400);
+            let a = BitMatrix64::from_bitmatrix(&BitMatrix::random(m, k, Layout::RowMajor, rng));
+            let b = BitMatrix64::from_bitmatrix(&BitMatrix::random(k, n, Layout::ColMajor, rng));
+            let wk = a.words_per_line;
+            let mut tiled = vec![0i32; m * n];
+            popc_lines(&a.data, &b.data, wk, m, n, &mut tiled, 2);
+            for threads in [1, 3] {
+                let mut generic = vec![0i32; m * n];
+                popc_lines_with(&a.data, &b.data, wk, m, n, &mut generic, threads, &xor_popc64);
+                assert_eq!(generic, tiled, "{m}x{n}x{k} t{threads}");
+            }
+        });
     }
 }

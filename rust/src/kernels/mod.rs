@@ -30,6 +30,7 @@ pub mod backends;
 pub mod bconv;
 pub mod bmm;
 pub mod fastpath;
+pub mod simd;
 
 /// Which of the paper's two benchmark protocols a trace models.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -1,0 +1,318 @@
+//! Explicit-SIMD popcount host kernels (`Scheme::Simd`).
+//!
+//! The paper's thesis is that bit-level parallelism pays only when the
+//! kernel is co-designed for the hardware's widest bit operation; on
+//! the host that operation is the vector (or at least hardware-scalar)
+//! popcount.  This module provides the inner line kernels behind a
+//! [`PopcountEngine`] chosen **once** at registry construction by
+//! runtime feature detection:
+//!
+//! * `Avx512` — `vpopcntdq`: 8 u64 popcounts per instruction
+//!   (`avx512f` + `avx512vpopcntdq`);
+//! * `Avx2` — hardware scalar `popcnt` unrolled over 4-word lanes
+//!   (AVX2 itself has no vector popcount; the detection requires
+//!   `avx2 && popcnt` to mark a wide modern core);
+//! * `Neon` — `cnt` byte-popcount + widening horizontal add on
+//!   aarch64;
+//! * `Portable` — delegates to [`xor_popc64`]'s autovectorizable u64
+//!   unroll, available on every host (and under miri), keeping the
+//!   backend registerable and bit-exact-testable anywhere.
+//!
+//! Selection order: `TCBNN_SIMD=portable|avx2|avx512|neon` forces an
+//! engine **if it is available on this host** (an unavailable or
+//! unknown value falls back to detection — which is how the CI matrix
+//! forces `avx512` on runners that may not have it); otherwise the
+//! widest available engine wins.  All engines compute the same exact
+//! integer popcount, so every dispatch path is bit-identical — CI runs
+//! the full test suite once per forced engine to prove it.
+//!
+//! The blocked BMM/BConv structure (MC/NC/KC cache blocking, bit-
+//! im2row lowering, NUMA-sharded row bands) is shared with the
+//! fastpath via `fastpath::bmm::popc_lines_with` /
+//! `fastpath::bconv::bconv_into_with`; only the KC-word inner product
+//! changes.
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+use crate::bitops::pack64::{xor_popc64, BitMatrix64};
+use crate::bitops::{BitMatrix, BitTensor4, TensorLayout};
+use crate::kernels::bconv::BconvProblem;
+use crate::kernels::fastpath::bconv::{self, FastConvFilter};
+use crate::kernels::fastpath::bmm;
+
+/// The environment variable that forces an engine (`portable`, `avx2`,
+/// `avx512`, `neon`); unknown or unavailable values fall back to
+/// detection.
+pub const ENGINE_ENV: &str = "TCBNN_SIMD";
+
+/// One popcount inner-kernel implementation.
+///
+/// All variants exist on every architecture so names always parse; an
+/// engine may only be *executed* where [`is_available`] holds — the
+/// dispatcher falls back to the portable kernel for foreign variants,
+/// and `xor_popc` debug-asserts availability.
+///
+/// [`is_available`]: PopcountEngine::is_available
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PopcountEngine {
+    /// Autovectorized u64 `count_ones` (always available).
+    Portable,
+    /// x86-64 hardware `popcnt` over 4-word lanes.
+    Avx2,
+    /// x86-64 `vpopcntdq` over 8-word vectors.
+    Avx512,
+    /// aarch64 `cnt` + widening horizontal add.
+    Neon,
+}
+
+impl PopcountEngine {
+    /// Every variant, in preference order (widest first).
+    pub fn all() -> [PopcountEngine; 4] {
+        [
+            PopcountEngine::Avx512,
+            PopcountEngine::Avx2,
+            PopcountEngine::Neon,
+            PopcountEngine::Portable,
+        ]
+    }
+
+    /// Stable lowercase name (the `TCBNN_SIMD` vocabulary).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PopcountEngine::Portable => "portable",
+            PopcountEngine::Avx2 => "avx2",
+            PopcountEngine::Avx512 => "avx512",
+            PopcountEngine::Neon => "neon",
+        }
+    }
+
+    /// Inverse of [`name`](PopcountEngine::name), case-insensitive.
+    pub fn from_name(s: &str) -> Option<PopcountEngine> {
+        PopcountEngine::all().into_iter().find(|e| e.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Whether this engine can execute on the current host.
+    pub fn is_available(&self) -> bool {
+        match self {
+            PopcountEngine::Portable => true,
+            #[cfg(all(target_arch = "x86_64", not(miri)))]
+            PopcountEngine::Avx2 => {
+                std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("popcnt")
+            }
+            #[cfg(all(target_arch = "x86_64", not(miri)))]
+            PopcountEngine::Avx512 => {
+                std::arch::is_x86_feature_detected!("avx512f")
+                    && std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+            }
+            #[cfg(all(target_arch = "aarch64", not(miri)))]
+            PopcountEngine::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Every engine executable on this host (always contains
+    /// `Portable`), in preference order.
+    pub fn available() -> Vec<PopcountEngine> {
+        PopcountEngine::all().into_iter().filter(|e| e.is_available()).collect()
+    }
+
+    /// The widest available engine.
+    pub fn auto() -> PopcountEngine {
+        PopcountEngine::all()
+            .into_iter()
+            .find(|e| e.is_available())
+            .unwrap_or(PopcountEngine::Portable)
+    }
+
+    /// Engine selection with an optional override (the `TCBNN_SIMD`
+    /// contract, factored out of env access for testability): a
+    /// recognized **and available** engine name wins; anything else
+    /// falls back to [`auto`](PopcountEngine::auto).
+    pub fn select(overridden: Option<&str>) -> PopcountEngine {
+        match overridden.and_then(PopcountEngine::from_name) {
+            Some(e) if e.is_available() => e,
+            _ => PopcountEngine::auto(),
+        }
+    }
+
+    /// One-shot detection honoring `TCBNN_SIMD` — what
+    /// `SimdBackend::detect()` calls at registry construction.
+    pub fn detect() -> PopcountEngine {
+        PopcountEngine::select(std::env::var(ENGINE_ENV).ok().as_deref())
+    }
+
+    /// `popc(a ^ b)` over two equal-length packed lines, dispatched to
+    /// this engine's kernel.  Exact for every engine; foreign variants
+    /// (and anything under miri) run the portable kernel.
+    #[inline]
+    pub fn xor_popc(&self, a: &[u64], b: &[u64]) -> u32 {
+        debug_assert!(self.is_available(), "dispatching unavailable engine {self:?}");
+        match self {
+            #[cfg(all(target_arch = "x86_64", not(miri)))]
+            // SAFETY: is_available() checked the exact CPU features the
+            // target_feature attributes of these kernels require; the
+            // debug_assert above (and construction via detect/select/
+            // available) keeps unavailable variants out of here.
+            PopcountEngine::Avx2 => unsafe { x86::xor_popc_popcnt4(a, b) },
+            #[cfg(all(target_arch = "x86_64", not(miri)))]
+            // SAFETY: as above (avx512f + avx512vpopcntdq detected).
+            PopcountEngine::Avx512 => unsafe { x86::xor_popc_vpopcntdq(a, b) },
+            #[cfg(all(target_arch = "aarch64", not(miri)))]
+            // SAFETY: as above (neon detected).
+            PopcountEngine::Neon => unsafe { neon::xor_popc_neon(a, b) },
+            #[allow(unreachable_patterns)]
+            _ => xor_popc64(a, b),
+        }
+    }
+}
+
+/// Allocating Eq-2 BMM through `engine` (the `fastpath::bmm::bmm`
+/// convention: `a` row-major, `b` column-major); benches and tests.
+pub fn bmm(a: &BitMatrix, b: &BitMatrix, threads: usize, engine: PopcountEngine) -> Vec<i32> {
+    let a64 = BitMatrix64::from_bitmatrix(a);
+    let b64 = BitMatrix64::from_bitmatrix(b);
+    assert_eq!(a.cols, b.rows, "inner dimensions");
+    assert_eq!(a64.words_per_line, b64.words_per_line, "operands must pack the same K width");
+    let mut out = vec![0i32; a.rows * b.cols];
+    let dot = move |x: &[u64], y: &[u64]| engine.xor_popc(x, y);
+    bmm::dot_lines_with(
+        &a64.data,
+        &b64.data,
+        a64.words_per_line,
+        a.rows,
+        b.cols,
+        a.cols,
+        &mut out,
+        threads,
+        &dot,
+    );
+    out
+}
+
+/// Allocating BConv through `engine` (the `fastpath::bconv::bconv`
+/// convention); benches and tests.
+pub fn bconv(
+    input: &BitTensor4,
+    filter: &BitTensor4,
+    p: BconvProblem,
+    threads: usize,
+    engine: PopcountEngine,
+) -> Vec<i32> {
+    assert_eq!(input.layout, TensorLayout::Hwnc);
+    assert_eq!(input.dims, [p.hw, p.hw, p.n, p.c], "input dims");
+    let f = FastConvFilter::prepare(filter);
+    let mut a64 = vec![0u64; bconv::rows(p) * bconv::row_words(p)];
+    let mut out = vec![0i32; bconv::rows(p) * p.o];
+    let dot = move |x: &[u64], y: &[u64]| engine.xor_popc(x, y);
+    bconv::bconv_into_with(&input.data, p, &f, &mut a64, &mut out, threads, &dot);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::Layout;
+    use crate::util::proptest::run_cases;
+    use crate::util::Rng;
+
+    #[test]
+    fn names_round_trip_and_parse_case_insensitively() {
+        for e in PopcountEngine::all() {
+            assert_eq!(PopcountEngine::from_name(e.name()), Some(e));
+            assert_eq!(PopcountEngine::from_name(&e.name().to_uppercase()), Some(e));
+        }
+        assert_eq!(PopcountEngine::from_name("sse9"), None);
+    }
+
+    #[test]
+    fn portable_is_always_available_and_listed_last() {
+        assert!(PopcountEngine::Portable.is_available());
+        let avail = PopcountEngine::available();
+        assert!(!avail.is_empty());
+        assert_eq!(*avail.last().unwrap(), PopcountEngine::Portable);
+        // auto() is the head of the availability list
+        assert_eq!(PopcountEngine::auto(), avail[0]);
+        for e in avail {
+            assert!(e.is_available());
+        }
+    }
+
+    #[test]
+    fn select_honors_available_overrides_and_ignores_the_rest() {
+        // an explicitly requested, available engine wins
+        assert_eq!(PopcountEngine::select(Some("portable")), PopcountEngine::Portable);
+        for e in PopcountEngine::available() {
+            assert_eq!(PopcountEngine::select(Some(e.name())), e);
+        }
+        // unknown names and absent overrides detect
+        assert_eq!(PopcountEngine::select(Some("bogus")), PopcountEngine::auto());
+        assert_eq!(PopcountEngine::select(None), PopcountEngine::auto());
+        // an unavailable engine name must fall back, not panic: at
+        // least one of avx512/neon is foreign on any single host
+        for name in ["avx512", "neon", "avx2"] {
+            let chosen = PopcountEngine::select(Some(name));
+            assert!(chosen.is_available());
+        }
+    }
+
+    #[test]
+    fn every_available_engine_matches_the_portable_popcount() {
+        run_cases(81, 60, |rng| {
+            let n = 1 + rng.gen_range(200);
+            let a: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let want = xor_popc64(&a, &b);
+            for e in PopcountEngine::available() {
+                assert_eq!(e.xor_popc(&a, &b), want, "engine {} at {n} words", e.name());
+            }
+        });
+    }
+
+    #[test]
+    fn engines_agree_on_lane_boundary_lengths() {
+        // exact multiples of every lane width, plus off-by-one each way
+        let mut rng = Rng::new(82);
+        for n in [1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 64, 127, 256] {
+            let a: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let want = xor_popc64(&a, &b);
+            for e in PopcountEngine::available() {
+                assert_eq!(e.xor_popc(&a, &b), want, "engine {} at {n} words", e.name());
+            }
+        }
+    }
+
+    #[test]
+    fn engine_bmm_matches_the_naive_reference() {
+        use crate::kernels::bmm::naive_ref;
+        run_cases(83, 15, |rng| {
+            let m = 1 + rng.gen_range(40);
+            let n = 1 + rng.gen_range(40);
+            let k = 1 + rng.gen_range(300);
+            let a = BitMatrix::random(m, k, Layout::RowMajor, rng);
+            let b = BitMatrix::random(k, n, Layout::ColMajor, rng);
+            let want = naive_ref(&a, &b);
+            for e in PopcountEngine::available() {
+                assert_eq!(bmm(&a, &b, 2, e), want, "engine {} {m}x{n}x{k}", e.name());
+            }
+        });
+    }
+
+    #[test]
+    fn engine_bconv_matches_the_fastpath() {
+        use crate::kernels::fastpath;
+        let mut rng = Rng::new(84);
+        let p = BconvProblem { hw: 8, n: 3, c: 33, o: 5, k: 3, stride: 1, pad: 1 };
+        let input = BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, &mut rng);
+        let filter = BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, &mut rng);
+        let want = fastpath::bconv::bconv(&input, &filter, p, 2);
+        for e in PopcountEngine::available() {
+            assert_eq!(bconv(&input, &filter, p, 2, e), want, "engine {}", e.name());
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! aarch64 NEON popcount inner kernel (the `Neon` engine).
+//!
+//! NEON's popcount primitive is `cnt` (per-*byte* counts), so the
+//! kernel XORs 128-bit vectors, byte-popcounts them, and accumulates
+//! the byte counts across an 8-vector block before one widening
+//! horizontal add: each u8 lane sums at most 8 counts of <= 8, i.e.
+//! <= 64, so the lanes cannot wrap before `vaddlvq_u8` widens them.
+
+use crate::bitops::pack64::lane_pairs;
+use core::arch::aarch64::*;
+
+/// `popc(a ^ b)` via `cnt` + widening horizontal add, in blocks of
+/// 8 q-registers (16 u64 words), scalar remainder.
+///
+/// # Safety
+///
+/// The caller must have verified the `neon` CPU feature via
+/// `is_aarch64_feature_detected!` (NEON is architecturally mandatory
+/// on aarch64, but the uniform dispatch contract checks anyway).
+#[target_feature(enable = "neon")]
+pub unsafe fn xor_popc_neon(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let (lanes, ra, rb) = lane_pairs::<16>(a, b);
+    let mut acc = 0u32;
+    for (x, y) in lanes {
+        let mut bytes = vdupq_n_u8(0);
+        for v in 0..8 {
+            let vx = vld1q_u64(x.as_ptr().add(2 * v));
+            let vy = vld1q_u64(y.as_ptr().add(2 * v));
+            let xo = veorq_u64(vx, vy);
+            bytes = vaddq_u8(bytes, vcntq_u8(vreinterpretq_u8_u64(xo)));
+        }
+        acc += vaddlvq_u8(bytes) as u32;
+    }
+    for (x, y) in ra.iter().zip(rb) {
+        acc += (x ^ y).count_ones();
+    }
+    acc
+}

@@ -41,12 +41,18 @@
 //! `coordinator::server` so any Table-5 model is servable end to end.
 //! See `docs/ENGINE.md`.
 //!
-//! The seventh scheme, `nn::cost::Scheme::Fastpath`, is the blocked
-//! u64 XNOR-popcount **host** backend (`kernels::fastpath`, operands
-//! repacked via `bitops::pack64`): bit-identical to the naive
-//! references, >= 2x the scalar schemes on ResNet-18 shapes, and
-//! regression-gated in CI by `cargo bench --bench bench_kernels`
-//! against `benches/baseline.json` (see `docs/BENCH.md`).
+//! Two schemes run on the serving **host** rather than the modeled
+//! GPU: `nn::cost::Scheme::Fastpath`, the blocked u64 XNOR-popcount
+//! backend (`kernels::fastpath`, operands repacked via
+//! `bitops::pack64`), and `nn::cost::Scheme::Simd`, the same blocking
+//! with the inner popcount dispatched through a runtime-detected
+//! `PopcountEngine` (AVX-512 `vpopcntdq` / x86 `popcnt` / NEON `cnt` /
+//! portable; `kernels::simd`, forcible via `TCBNN_SIMD`), with
+//! NUMA-sharded row bands from `util::threadpool`.  Both are
+//! bit-identical to the naive references, >= 2x the scalar schemes on
+//! ResNet-18 shapes, and regression-gated in CI by `cargo bench
+//! --bench bench_kernels` against `benches/baseline.json` (see
+//! `docs/BENCH.md`).
 //!
 //! The `layout` module makes the paper's data-format co-design a
 //! planned quantity: `LayoutKind` (`Row32` | `Blocked64` | `Fsb` |

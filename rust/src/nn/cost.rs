@@ -38,6 +38,10 @@ pub enum Scheme {
     /// host blocked-u64 XNOR-popcount backend (`kernels::fastpath`) —
     /// no GPU traces; costed by the backend's analytic host model
     Fastpath,
+    /// host explicit-SIMD popcount backend (`kernels::simd`) — the
+    /// fastpath's blocking with the inner product dispatched through a
+    /// runtime-detected `PopcountEngine`; analytic host cost model
+    Simd,
 }
 
 impl Scheme {
@@ -50,10 +54,11 @@ impl Scheme {
             Scheme::Btc => "BTC",
             Scheme::BtcFmt => "BTC-FMT",
             Scheme::Fastpath => "FASTPATH",
+            Scheme::Simd => "SIMD",
         }
     }
 
-    pub fn all() -> [Scheme; 7] {
+    pub fn all() -> [Scheme; 8] {
         [
             Scheme::Sbnn32,
             Scheme::Sbnn32Fine,
@@ -62,7 +67,14 @@ impl Scheme {
             Scheme::Btc,
             Scheme::BtcFmt,
             Scheme::Fastpath,
+            Scheme::Simd,
         ]
+    }
+
+    /// Whether this scheme executes on the serving host's cores (no
+    /// GPU trace face; analytic/calibrated host cost model).
+    pub fn is_host(&self) -> bool {
+        matches!(self, Scheme::Fastpath | Scheme::Simd)
     }
 
     /// Inverse of `name` (used by the engine's plan serialization and
@@ -247,55 +259,39 @@ mod tests {
 
     #[test]
     fn fastpath_costs_finite_and_batch_scalable() {
-        // the host scheme has no GPU traces but must still produce
+        // the host schemes have no GPU traces but must still produce
         // sane, monotone costs for every Table-5 model
         for m in model::all_models() {
-            let lat =
-                model_cost(&m, 8, &RTX2080TI, Scheme::Fastpath, ResidualMode::Full, true);
-            assert!(
-                lat.total_secs.is_finite() && lat.total_secs > 0.0,
-                "{}",
-                m.name
-            );
-            let tp = model_cost(
-                &m,
-                128,
-                &RTX2080TI,
-                Scheme::Fastpath,
-                ResidualMode::Full,
-                true,
-            );
-            assert!(
-                tp.throughput_fps() > lat.throughput_fps(),
-                "{}: fastpath fps must grow with batch",
-                m.name
-            );
-        }
-        for s in Scheme::all() {
-            if s != Scheme::Fastpath {
+            for s in Scheme::all().into_iter().filter(Scheme::is_host) {
+                let lat = model_cost(&m, 8, &RTX2080TI, s, ResidualMode::Full, true);
                 assert!(
-                    !layer_traces(
-                        s,
-                        &LayerSpec::BinFc { d_in: 1024, d_out: 1024 },
-                        crate::nn::layer::Dims { hw: 0, feat: 1024 },
-                        8,
-                        ResidualMode::Full,
-                        false,
-                    )
-                    .is_empty()
+                    lat.total_secs.is_finite() && lat.total_secs > 0.0,
+                    "{} {}",
+                    m.name,
+                    s.name()
+                );
+                let tp = model_cost(&m, 128, &RTX2080TI, s, ResidualMode::Full, true);
+                assert!(
+                    tp.throughput_fps() > lat.throughput_fps(),
+                    "{} {}: host fps must grow with batch",
+                    m.name,
+                    s.name()
                 );
             }
         }
-        // fastpath has no GPU kernel traces by construction
-        assert!(layer_traces(
-            Scheme::Fastpath,
-            &LayerSpec::BinFc { d_in: 1024, d_out: 1024 },
-            crate::nn::layer::Dims { hw: 0, feat: 1024 },
-            8,
-            ResidualMode::Full,
-            false,
-        )
-        .is_empty());
+        for s in Scheme::all() {
+            let traces = layer_traces(
+                s,
+                &LayerSpec::BinFc { d_in: 1024, d_out: 1024 },
+                crate::nn::layer::Dims { hw: 0, feat: 1024 },
+                8,
+                ResidualMode::Full,
+                false,
+            );
+            // GPU schemes have kernel traces; host schemes (fastpath,
+            // SIMD) have none by construction
+            assert_eq!(traces.is_empty(), s.is_host(), "{}", s.name());
+        }
     }
 
     #[test]

@@ -31,7 +31,7 @@ use crate::nn::cost::Scheme;
 /// One slot per `Scheme` variant (fixed: registries key backends by
 /// scheme, and `register` replaces in place, so the universe of keys is
 /// `Scheme::all()`).
-const N_SCHEMES: usize = 7;
+const N_SCHEMES: usize = 8;
 
 /// Lock-free per-scheme EWMA of measured-over-predicted cost ratios.
 #[derive(Debug)]

@@ -331,19 +331,14 @@ mod tests {
     use super::*;
 
     #[test]
-    fn only_the_fastpath_is_a_host_backend_among_builtins() {
+    fn exactly_the_host_schemes_probe_as_host_backends() {
         for b in BackendRegistry::global().backends() {
-            assert_eq!(
-                is_host_backend(b),
-                b.scheme() == Scheme::Fastpath,
-                "{}",
-                b.name()
-            );
+            assert_eq!(is_host_backend(b), b.scheme().is_host(), "{}", b.name());
         }
     }
 
     #[test]
-    fn quick_run_measures_the_fastpath_grid() {
+    fn quick_run_measures_every_host_backend_grid() {
         let cfg = MicrobenchConfig {
             quick: true,
             seed: 7,
@@ -351,18 +346,24 @@ mod tests {
             threads: 1,
         };
         let ms = run(BackendRegistry::global(), &cfg);
-        // fastpath supports every grid shape: full quick grid measured
-        let want = fc_grid(true).len() + conv_grid(true).len();
+        // every host backend (fastpath + SIMD) supports every grid
+        // shape: full quick grid measured per host scheme
+        let hosts: Vec<Scheme> =
+            Scheme::all().into_iter().filter(Scheme::is_host).collect();
+        let want = hosts.len() * (fc_grid(true).len() + conv_grid(true).len());
         assert_eq!(ms.len(), want);
         for m in &ms {
-            assert_eq!(m.scheme, Scheme::Fastpath);
+            assert!(m.scheme.is_host(), "{m:?}");
             assert!(m.secs.is_finite() && m.secs > 0.0, "{m:?}");
             let row = m.fit_row();
             assert!(row.features.word_ops > 0.0);
         }
-        // both kernel kinds present
+        // both kernel kinds and both host schemes present
         assert!(ms.iter().any(|m| m.kind == "bmm"));
         assert!(ms.iter().any(|m| m.kind == "bconv"));
+        for s in hosts {
+            assert!(ms.iter().any(|m| m.scheme == s), "{} missing", s.name());
+        }
     }
 
     #[test]

@@ -1,10 +1,23 @@
 //! Fixed-size thread pool over std::sync::mpsc (tokio is unavailable
 //! offline; the coordinator's event loop is thread-based, which is also
 //! closer to the one-worker-per-GPU process topology of the paper's BENN
-//! deployment).
+//! deployment), plus the NUMA-aware scoped-parallelism primitives the
+//! host kernels dispatch through.
+//!
+//! NUMA sharding: on a multi-socket host, a worker streaming an operand
+//! band that lives on the other socket's memory pays the interconnect
+//! on every cache miss.  [`NumaTopology`] probes the node -> cpu map
+//! from sysfs (single-node fallback everywhere else), and
+//! [`scoped_chunks_numa`] / [`scoped_bands_numa`] split the work
+//! proportionally to each node's CPU count, pinning every worker to its
+//! node's cpuset (best-effort `sched_setaffinity` — the dependency tree
+//! has no libc, so the syscall is issued directly) so the bands a node
+//! first-touches are the bands its workers keep streaming.  On a
+//! single-node topology both helpers degrade to exactly the
+//! [`scoped_chunks`] banding with no pinning at all.
 
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -116,6 +129,329 @@ where
     });
 }
 
+/// One NUMA node: its id and the CPUs local to it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NumaNode {
+    pub id: usize,
+    pub cpus: Vec<usize>,
+}
+
+/// The host's NUMA node -> CPU map.
+///
+/// Probed once from sysfs on Linux (`/sys/devices/system/node/node*/
+/// cpulist`); everywhere else — and on probe failure — it degrades to a
+/// single node holding `available_parallelism` CPUs, under which the
+/// NUMA-aware helpers below behave exactly like their flat
+/// counterparts.
+#[derive(Clone, Debug)]
+pub struct NumaTopology {
+    nodes: Vec<NumaNode>,
+}
+
+impl NumaTopology {
+    /// The probed topology of this host, cached for the process
+    /// lifetime (topology cannot change under a running process).
+    pub fn global() -> &'static NumaTopology {
+        static TOPO: OnceLock<NumaTopology> = OnceLock::new();
+        TOPO.get_or_init(NumaTopology::probe)
+    }
+
+    /// Probe sysfs, falling back to a single synthetic node.
+    pub fn probe() -> NumaTopology {
+        NumaTopology::probe_sysfs().unwrap_or_else(NumaTopology::single_node)
+    }
+
+    /// A synthetic one-node topology covering `available_parallelism`
+    /// CPUs — the portable fallback, and the neutral element of the
+    /// NUMA helpers (no pinning, flat banding).
+    pub fn single_node() -> NumaTopology {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        NumaTopology { nodes: vec![NumaNode { id: 0, cpus: (0..n).collect() }] }
+    }
+
+    /// Build a topology from explicit per-node CPU lists (tests and
+    /// experiments; empty node lists are dropped, an empty input yields
+    /// the single-node fallback).
+    pub fn from_nodes(cpu_lists: Vec<Vec<usize>>) -> NumaTopology {
+        let nodes: Vec<NumaNode> = cpu_lists
+            .into_iter()
+            .enumerate()
+            .filter(|(_, cpus)| !cpus.is_empty())
+            .map(|(id, cpus)| NumaNode { id, cpus })
+            .collect();
+        if nodes.is_empty() {
+            NumaTopology::single_node()
+        } else {
+            NumaTopology { nodes }
+        }
+    }
+
+    pub fn nodes(&self) -> &[NumaNode] {
+        &self.nodes
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn total_cpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).sum()
+    }
+
+    fn probe_sysfs() -> Option<NumaTopology> {
+        if !cfg!(target_os = "linux") {
+            return None;
+        }
+        let mut nodes = Vec::new();
+        // Node ids are dense in practice but need not be; scan a sane
+        // range rather than parsing the directory listing's names.
+        for id in 0..256 {
+            let path = format!("/sys/devices/system/node/node{id}/cpulist");
+            match std::fs::read_to_string(&path) {
+                Ok(list) => {
+                    let cpus = parse_cpulist(list.trim())?;
+                    if !cpus.is_empty() {
+                        nodes.push(NumaNode { id, cpus });
+                    }
+                }
+                Err(_) => {
+                    if id > 0 {
+                        break; // past the last node
+                    }
+                    return None; // no node0 => no sysfs NUMA info
+                }
+            }
+        }
+        if nodes.is_empty() {
+            None
+        } else {
+            Some(NumaTopology { nodes })
+        }
+    }
+}
+
+/// Parse a sysfs cpulist string like `"0-3,8-11,16"` into CPU indices.
+fn parse_cpulist(s: &str) -> Option<Vec<usize>> {
+    let mut cpus = Vec::new();
+    if s.is_empty() {
+        return Some(cpus); // memory-only node
+    }
+    for part in s.split(',') {
+        let part = part.trim();
+        match part.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize = lo.trim().parse().ok()?;
+                let hi: usize = hi.trim().parse().ok()?;
+                if hi < lo || hi - lo > 4096 {
+                    return None;
+                }
+                cpus.extend(lo..=hi);
+            }
+            None => cpus.push(part.parse().ok()?),
+        }
+    }
+    Some(cpus)
+}
+
+/// One contiguous span of work units assigned to a NUMA node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct NumaSpan {
+    /// First work-unit index of the span.
+    start: usize,
+    /// Units in the span.
+    len: usize,
+    /// Index into `topo.nodes()` whose CPUs serve this span.
+    node: usize,
+    /// Worker threads for this span.
+    workers: usize,
+}
+
+/// Split `units` work units into per-node contiguous spans proportional
+/// to each node's CPU share, with `threads` total workers distributed
+/// the same way.  Every span is non-empty and the spans tile
+/// `0..units` exactly.
+fn plan_numa_spans(units: usize, threads: usize, topo: &NumaTopology) -> Vec<NumaSpan> {
+    let total_cpus = topo.total_cpus().max(1);
+    let threads = threads.max(1);
+    let mut spans = Vec::with_capacity(topo.n_nodes());
+    let mut acc_cpus = 0usize;
+    let mut start = 0usize;
+    for (ni, node) in topo.nodes().iter().enumerate() {
+        acc_cpus += node.cpus.len();
+        // cumulative proportional cut: rounding never loses units
+        let end = units * acc_cpus / total_cpus;
+        let len = end - start;
+        if len == 0 {
+            continue;
+        }
+        let workers = ((threads * node.cpus.len()).div_ceil(total_cpus)).max(1).min(len);
+        spans.push(NumaSpan { start, len, node: ni, workers });
+        start = end;
+    }
+    // Guard against an all-zero-CPU pathology leaving a tail.
+    if start < units {
+        match spans.last_mut() {
+            Some(s) => s.len += units - start,
+            None => spans.push(NumaSpan {
+                start: 0,
+                len: units,
+                node: 0,
+                workers: threads.min(units).max(1),
+            }),
+        }
+    }
+    spans
+}
+
+/// Pin the calling thread to `cpus` (best-effort; failures and
+/// unsupported platforms are silently ignored — pinning is a locality
+/// hint, never a correctness requirement).
+#[allow(unused_variables)]
+fn pin_current_thread(cpus: &[usize]) {
+    #[cfg(all(
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64"),
+        not(miri)
+    ))]
+    {
+        // No libc in the dependency tree: issue sched_setaffinity(2)
+        // directly.  1024-bit mask matches the kernel's default cpuset
+        // width; out-of-range CPUs are skipped.
+        let mut mask = [0u64; 16];
+        let mut any = false;
+        for &c in cpus {
+            if c < 1024 {
+                mask[c / 64] |= 1u64 << (c % 64);
+                any = true;
+            }
+        }
+        if !any {
+            return;
+        }
+        unsafe {
+            let pid: usize = 0; // current thread
+            let size = std::mem::size_of_val(&mask);
+            let ptr = mask.as_ptr();
+            let _ret: usize;
+            #[cfg(target_arch = "x86_64")]
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") 203usize => _ret, // __NR_sched_setaffinity
+                in("rdi") pid,
+                in("rsi") size,
+                in("rdx") ptr,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack)
+            );
+            #[cfg(target_arch = "aarch64")]
+            std::arch::asm!(
+                "svc 0",
+                in("x8") 122usize, // __NR_sched_setaffinity
+                inlateout("x0") pid => _ret,
+                in("x1") size,
+                in("x2") ptr,
+                options(nostack)
+            );
+        }
+    }
+}
+
+/// NUMA-aware [`scoped_chunks`]: identical contract and identical
+/// chunk-index -> data mapping, but chunks are banded per NUMA node in
+/// proportion to CPU counts and each worker is pinned to its node's
+/// cpuset before touching its band.  On a single-node topology this is
+/// `scoped_chunks` with no pinning.
+pub fn scoped_chunks_numa<T, F>(
+    data: &mut [T],
+    chunk: usize,
+    threads: usize,
+    topo: &NumaTopology,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    assert_eq!(data.len() % chunk, 0, "data must split into whole chunks");
+    let n_chunks = data.len() / chunk;
+    let threads = threads.max(1).min(n_chunks.max(1));
+    if threads <= 1 || topo.n_nodes() <= 1 {
+        scoped_chunks(data, chunk, threads, f);
+        return;
+    }
+    let spans = plan_numa_spans(n_chunks, threads, topo);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        for span in &spans {
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(span.len * chunk);
+            rest = tail;
+            let band = span.len.div_ceil(span.workers) * chunk;
+            for (b, band_slice) in mine.chunks_mut(band).enumerate() {
+                let f = &f;
+                let cpus = &topo.nodes()[span.node].cpus;
+                let first = span.start + b * (band / chunk);
+                s.spawn(move || {
+                    pin_current_thread(cpus);
+                    for (j, c) in band_slice.chunks_mut(chunk).enumerate() {
+                        f(first + j, c);
+                    }
+                });
+            }
+        }
+    });
+}
+
+/// NUMA-aware banded dispatch: split `data` (whose length is a multiple
+/// of `unit`) into one contiguous multi-unit band per worker, node-
+/// proportionally, and call `f(first_unit_index, band)` once per band
+/// from a worker pinned to the band's node.
+///
+/// This is the BMM row-band shape: the callee walks its whole band with
+/// its own cache blocking, so handing out single chunks (as
+/// `scoped_chunks_numa` does) would defeat the B-panel reuse across
+/// rows.
+pub fn scoped_bands_numa<T, F>(
+    data: &mut [T],
+    unit: usize,
+    threads: usize,
+    topo: &NumaTopology,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(unit > 0, "unit size must be positive");
+    assert_eq!(data.len() % unit, 0, "data must split into whole units");
+    let n_units = data.len() / unit;
+    let threads = threads.max(1).min(n_units.max(1));
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let spans = plan_numa_spans(n_units, threads, topo);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        for span in &spans {
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(span.len * unit);
+            rest = tail;
+            let band_units = span.len.div_ceil(span.workers);
+            for (b, band_slice) in mine.chunks_mut(band_units * unit).enumerate() {
+                let f = &f;
+                let cpus = &topo.nodes()[span.node].cpus;
+                let pin = topo.n_nodes() > 1;
+                let first = span.start + b * band_units;
+                s.spawn(move || {
+                    if pin {
+                        pin_current_thread(cpus);
+                    }
+                    f(first, band_slice);
+                });
+            }
+        }
+    });
+}
+
 /// Default worker count for scoped parallel sections: the machine's
 /// available parallelism, capped to keep thread-spawn overhead sane.
 pub fn default_threads() -> usize {
@@ -207,5 +543,136 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(10)));
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn parse_cpulist_handles_ranges_and_singletons() {
+        assert_eq!(parse_cpulist("0-3,8-11,16"), Some(vec![0, 1, 2, 3, 8, 9, 10, 11, 16]));
+        assert_eq!(parse_cpulist("5"), Some(vec![5]));
+        assert_eq!(parse_cpulist(""), Some(vec![]));
+        assert_eq!(parse_cpulist("3-1"), None);
+        assert_eq!(parse_cpulist("a-b"), None);
+    }
+
+    #[test]
+    fn probe_always_yields_a_usable_topology() {
+        let topo = NumaTopology::probe();
+        assert!(topo.n_nodes() >= 1);
+        assert!(topo.total_cpus() >= 1);
+        // global() is the same probe, cached
+        assert!(NumaTopology::global().n_nodes() >= 1);
+    }
+
+    #[test]
+    fn from_nodes_drops_empty_lists_and_falls_back() {
+        let t = NumaTopology::from_nodes(vec![vec![0, 1], vec![], vec![2]]);
+        assert_eq!(t.n_nodes(), 2);
+        assert_eq!(t.total_cpus(), 3);
+        assert!(NumaTopology::from_nodes(vec![]).n_nodes() >= 1);
+    }
+
+    #[test]
+    fn numa_spans_tile_the_unit_range_proportionally() {
+        let topo = NumaTopology::from_nodes(vec![vec![0, 1, 2], vec![3]]);
+        let spans = plan_numa_spans(16, 4, &topo);
+        // spans tile 0..16 exactly, in order
+        let mut next = 0;
+        for s in &spans {
+            assert_eq!(s.start, next);
+            assert!(s.len > 0);
+            assert!(s.workers >= 1 && s.workers <= s.len);
+            next += s.len;
+        }
+        assert_eq!(next, 16);
+        // 3:1 CPU split -> 12:4 unit split
+        assert_eq!(spans[0].len, 12);
+        assert_eq!(spans[1].len, 4);
+    }
+
+    #[test]
+    fn numa_spans_survive_fewer_units_than_nodes() {
+        let topo = NumaTopology::from_nodes(vec![vec![0], vec![1], vec![2], vec![3]]);
+        let spans = plan_numa_spans(2, 4, &topo);
+        let total: usize = spans.iter().map(|s| s.len).sum();
+        assert_eq!(total, 2);
+        for s in &spans {
+            assert!(s.workers >= 1);
+        }
+    }
+
+    /// Satellite contract: on a single-node topology, scoped_chunks_numa
+    /// is byte-identical to scoped_chunks (same index -> chunk mapping,
+    /// same coverage).
+    #[test]
+    fn scoped_chunks_numa_matches_scoped_chunks_on_single_node() {
+        fn fill(i: usize, c: &mut [u64]) {
+            for (j, v) in c.iter_mut().enumerate() {
+                *v = (i * 1000 + j) as u64;
+            }
+        }
+        let mut flat = vec![0u64; 24 * 7];
+        scoped_chunks(&mut flat, 7, 3, fill);
+        let single = NumaTopology::single_node();
+        let mut numa = vec![0u64; 24 * 7];
+        scoped_chunks_numa(&mut numa, 7, 3, &single, fill);
+        assert_eq!(flat, numa);
+    }
+
+    #[test]
+    fn scoped_chunks_numa_matches_on_synthetic_multi_node() {
+        // Pinning to fake CPUs is best-effort and may silently fail on
+        // the runner; the index -> chunk mapping must hold regardless.
+        let topo = NumaTopology::from_nodes(vec![vec![0, 1], vec![2, 3]]);
+        let mut flat = vec![0u32; 30 * 4];
+        scoped_chunks(&mut flat, 4, 4, |i, c| c.fill(i as u32 + 1));
+        let mut numa = vec![0u32; 30 * 4];
+        scoped_chunks_numa(&mut numa, 4, 4, &topo, |i, c| c.fill(i as u32 + 1));
+        assert_eq!(flat, numa);
+    }
+
+    #[test]
+    fn scoped_bands_numa_covers_every_unit_once() {
+        for topo in [
+            NumaTopology::single_node(),
+            NumaTopology::from_nodes(vec![vec![0, 1, 2], vec![3, 4]]),
+        ] {
+            let mut data = vec![0u32; 20 * 3];
+            scoped_bands_numa(&mut data, 3, 4, &topo, |first, band| {
+                assert_eq!(band.len() % 3, 0);
+                for (u, unit) in band.chunks_mut(3).enumerate() {
+                    unit.fill((first + u) as u32 + 1);
+                }
+            });
+            for u in 0..20 {
+                assert!(
+                    data[u * 3..(u + 1) * 3].iter().all(|&v| v == u as u32 + 1),
+                    "unit {u} miswritten under {topo:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scoped_bands_numa_serial_path_hands_out_one_band() {
+        let mut data = vec![0u8; 12];
+        let single = NumaTopology::single_node();
+        scoped_bands_numa(&mut data, 4, 1, &single, |first, band| {
+            assert_eq!(first, 0);
+            assert_eq!(band.len(), 12);
+            band.fill(9);
+        });
+        assert!(data.iter().all(|&v| v == 9));
+    }
+
+    #[test]
+    fn pin_current_thread_is_best_effort_and_harmless() {
+        // Real CPUs, an out-of-range CPU, and an empty set must all be
+        // absorbed without panicking or poisoning the thread.
+        pin_current_thread(&[0]);
+        pin_current_thread(&[100_000]);
+        pin_current_thread(&[]);
+        // restore a permissive mask so later tests are not confined
+        let all: Vec<usize> = (0..NumaTopology::global().total_cpus().max(1)).collect();
+        pin_current_thread(&all);
     }
 }

@@ -7,7 +7,12 @@
 //!    per-scheme test copies that used to live in
 //!    `kernels_equivalence.rs` / `fastpath_equivalence.rs`: a new
 //!    backend is covered the moment it registers.
-//! 2. **Registry extension proof** — a toy backend defined HERE, in a
+//! 2. **SIMD engine sweep** — the registered `Scheme::Simd` backend
+//!    runs whatever engine detection picked, so the registry pass
+//!    alone can't prove the *other* dispatch paths; the sweep pins a
+//!    `SimdBackend` to every `PopcountEngine::available()` and reruns
+//!    the odd/1xN/Nx1 + bconv shapes per engine.
+//! 3. **Registry extension proof** — a toy backend defined HERE, in a
 //!    test crate, is registered over the builtin set and served end to
 //!    end (planner -> executor -> coordinator) without touching any
 //!    `match` on `Scheme` in `nn::forward`, `nn::cost`, or
@@ -26,7 +31,9 @@ use tcbnn::kernels::backend::{
     BackendRegistry, ExecCtx, KernelBackend, PreparedConv, PreparedFc,
 };
 use tcbnn::kernels::backends::scalar::{ScalarConv, ScalarFc};
+use tcbnn::kernels::backends::simd::SimdBackend;
 use tcbnn::kernels::bconv::{self, BconvProblem};
+use tcbnn::kernels::simd::PopcountEngine;
 use tcbnn::nn::forward::{forward, forward_with, random_weights};
 use tcbnn::nn::layer::{Dims, LayerSpec};
 use tcbnn::nn::model::mnist_mlp;
@@ -139,6 +146,108 @@ fn every_backend_bconv_matches_exclude_amended_ref_at_odd_shapes() {
             let mut ctx = ExecCtx { words64: &mut scratch, threads: 2 };
             conv.bconv(&input.data, p, &mut ints, &mut ctx);
             assert_eq!(ints, want, "{} at {p:?}", b.name());
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// SIMD engine sweep: every available dispatch path, not just detection
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_simd_engine_fc_matches_naive_eq2_at_odd_shapes() {
+    let backends: Vec<SimdBackend> =
+        PopcountEngine::available().into_iter().map(SimdBackend::with_engine).collect();
+    run_cases(504, 20, |rng| {
+        let batch = 1 + rng.gen_range(20);
+        let d_out = 1 + rng.gen_range(40);
+        let d_in = off64(rng, 300);
+        let a = BitMatrix::random(batch, d_in, Layout::RowMajor, rng);
+        let w = BitMatrix::random(d_out, d_in, Layout::RowMajor, rng);
+        let want = naive_fc(&a, &w);
+        for b in &backends {
+            assert_eq!(
+                run_fc_backend(b, &a, &w),
+                want,
+                "engine {} at {batch}x{d_out}x{d_in}",
+                b.engine().name()
+            );
+        }
+    });
+}
+
+#[test]
+fn every_simd_engine_fc_single_row_and_single_column() {
+    let backends: Vec<SimdBackend> =
+        PopcountEngine::available().into_iter().map(SimdBackend::with_engine).collect();
+    run_cases(505, 10, |rng| {
+        let n = 1 + rng.gen_range(120);
+        let k = off64(rng, 260);
+        for (rows, cols) in [(1, n), (n, 1)] {
+            let a = BitMatrix::random(rows, k, Layout::RowMajor, rng);
+            let w = BitMatrix::random(cols, k, Layout::RowMajor, rng);
+            let want = naive_fc(&a, &w);
+            for b in &backends {
+                assert_eq!(
+                    run_fc_backend(b, &a, &w),
+                    want,
+                    "engine {} {rows}x{cols}x{k}",
+                    b.engine().name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn every_simd_engine_bconv_matches_exclude_amended_ref() {
+    let backends: Vec<SimdBackend> =
+        PopcountEngine::available().into_iter().map(SimdBackend::with_engine).collect();
+    run_cases(506, 10, |rng| {
+        let p = BconvProblem {
+            hw: 3 + rng.gen_range(6),
+            n: 1 + rng.gen_range(8),
+            c: off64(rng, 140),
+            o: 1 + rng.gen_range(24),
+            k: 3,
+            stride: 1 + rng.gen_range(2),
+            pad: rng.gen_range(2),
+        };
+        let input = BitTensor4::random([p.hw, p.hw, p.n, p.c], TensorLayout::Hwnc, rng);
+        let filter = BitTensor4::random([p.k, p.k, p.o, p.c], TensorLayout::Kkoc, rng);
+        let want = bconv::naive_ref(&input, &filter, p);
+        for b in &backends {
+            let conv = b.prepare_conv(&filter, p).expect("prepare_conv");
+            let mut scratch = vec![0u64; conv.scratch_words(p)];
+            let mut ints = vec![0i32; p.out_elems()];
+            let mut ctx = ExecCtx { words64: &mut scratch, threads: 2 };
+            conv.bconv(&input.data, p, &mut ints, &mut ctx);
+            assert_eq!(ints, want, "engine {} at {p:?}", b.engine().name());
+        }
+    });
+}
+
+#[test]
+fn simd_bmm64_native_layout_path_matches_the_repack_path() {
+    // the planner chains Blocked64 edges into bmm64; it must agree
+    // with the Row32 bmm path for every engine
+    let backends: Vec<SimdBackend> =
+        PopcountEngine::available().into_iter().map(SimdBackend::with_engine).collect();
+    run_cases(507, 10, |rng| {
+        let batch = 1 + rng.gen_range(16);
+        let d_out = 1 + rng.gen_range(40);
+        let d_in = off64(rng, 300);
+        let a = BitMatrix::random(batch, d_in, Layout::RowMajor, rng);
+        let w = BitMatrix::random(d_out, d_in, Layout::RowMajor, rng);
+        let a64 = tcbnn::bitops::pack64::BitMatrix64::from_bitmatrix(&a);
+        for b in &backends {
+            let fc = b.prepare_fc(&w).expect("prepare_fc");
+            let via_row32 = run_fc_backend(b, &a, &w);
+            let mut scratch = vec![0u64; fc.scratch_words(batch)];
+            let mut ints = vec![0i32; batch * d_out];
+            let mut ctx = ExecCtx { words64: &mut scratch, threads: 2 };
+            fc.bmm64(&a64.data, batch, &mut ints, &mut ctx);
+            assert_eq!(ints, via_row32, "engine {}", b.engine().name());
         }
     });
 }
