@@ -16,19 +16,35 @@
 //! JSON and fails (nonzero exit) unless it round-trips through
 //! `engine::json` back to the identical value — the CI bench-smoke job
 //! runs this mode and archives the snapshot.
+//!
+//! `--fleet` switches to the serve::Fleet demo (the CI serve-smoke
+//! job): two engine-backed models x 2 replica shards sharing one
+//! pre-warmed plan cache, one model under a latency SLO, steady
+//! traffic plus an injected burst that token-bucket admission must
+//! shed.  Fails (nonzero exit) unless the burst shed, every accepted
+//! request was answered, no routing error occurred, and — with
+//! `--obs-dump STEM` — each model's `STEM-<model>.json`/`.prom`
+//! snapshot round-trips.  See docs/SERVING.md.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
 use tcbnn::engine::{EngineModel, PlanCache, PlanPolicy, Planner};
 use tcbnn::nn::forward::random_weights;
 use tcbnn::nn::model::mnist_mlp;
+use tcbnn::serve::{
+    plan_predictor, AdmissionConfig, Fleet, FleetError, FleetModelConfig,
+    SloConfig,
+};
 use tcbnn::sim::RTX2080TI;
 use tcbnn::util::cli::Args;
 use tcbnn::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    if args.flag("fleet") {
+        return run_fleet(&args);
+    }
     let requests = args.get_usize("requests", 2048);
     let cache_dir = args.get_or("cache", "plan_cache").to_string();
     let obs_dump = args.get("obs-dump").map(std::path::PathBuf::from);
@@ -145,4 +161,215 @@ fn main() -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// `--fleet`: the serve::Fleet smoke flow (CI serve-smoke job).
+///
+/// Two engine-backed models x 2 replica shards share one pre-warmed
+/// plan cache; `mnist` sits behind a token bucket, `mnist-slo` behind
+/// a p99 deadline placed between the predicted t(8) and t(32) so the
+/// SLO sizer must cut the 32-bucket.  Steady paced traffic is followed
+/// by an injected burst that must shed; every accepted request must be
+/// answered and no routing error may occur.
+fn run_fleet(args: &Args) -> anyhow::Result<()> {
+    let requests = args.get_usize("requests", 512);
+    let burst = args.get_usize("burst", 256);
+    let cache_dir = args.get_or("cache", "plan_cache").to_string();
+    let obs_dump = args.get("obs-dump").map(|s| s.to_string());
+
+    let model = mnist_mlp();
+    let planner = Planner::new(&RTX2080TI);
+    let buckets = vec![8usize, 32];
+
+    // pre-warm the shared plan cache before any shard spawns, so every
+    // replica's Cached build is a read-only hit (no concurrent
+    // same-file cache writes across worker threads)
+    let cache = PlanCache::open(&cache_dir)?;
+    for &b in &buckets {
+        cache.get_or_plan(&planner, &model, b);
+    }
+    println!(
+        "plan cache pre-warmed at b{buckets:?}: {} hit / {} miss ({cache_dir}/)",
+        cache.hits(),
+        cache.misses()
+    );
+
+    // a deadline strictly between t(8) and t(32): admissible = {8}
+    let t8 = planner.predict_secs(&model, 8);
+    let t32 = planner.predict_secs(&model, 32);
+    let deadline = Duration::from_secs_f64((t8 + t32) / 2.0);
+    println!(
+        "predicted service: t(8)={:.3}ms t(32)={:.3}ms -> SLO deadline {:.3}ms",
+        t8 * 1e3,
+        t32 * 1e3,
+        deadline.as_secs_f64() * 1e3
+    );
+
+    let factory = |seed: u64| {
+        let planner = planner.clone();
+        let model = model.clone();
+        let cache_dir = cache_dir.clone();
+        let buckets = buckets.clone();
+        move || {
+            let weights = random_weights(&model, &mut Rng::new(seed));
+            let cache = PlanCache::open(&cache_dir)?;
+            let em = EngineModel::builder(&planner, &model, &weights)
+                .buckets(buckets.clone())
+                .policy(PlanPolicy::Cached)
+                .cache(&cache)
+                .build()?;
+            Ok(Box::new(em) as Box<dyn BatchModel>)
+        }
+    };
+    let mut fleet = Fleet::new();
+    fleet.register(
+        "mnist",
+        FleetModelConfig {
+            shards: 2,
+            admission: AdmissionConfig {
+                rate: Some(1500.0),
+                burst: 64.0,
+                max_queue_depth: 8192,
+            },
+            ..Default::default()
+        },
+        factory(1234),
+    );
+    fleet.register(
+        "mnist-slo",
+        FleetModelConfig {
+            shards: 2,
+            slo: Some(SloConfig { p99_deadline: deadline }),
+            predictor: Some(plan_predictor(&planner, &model)),
+            ..Default::default()
+        },
+        factory(4321),
+    );
+
+    let mut rng = Rng::new(99);
+    let mut input =
+        || -> Vec<f32> { (0..784).map(|_| rng.next_f32() - 0.5).collect() };
+    let mut pending = Vec::new();
+    let mut sheds_seen = 0u64;
+    let mut route_errors = 0u64;
+
+    // steady phase: paced under the token-bucket rate, alternating
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let name = if i % 2 == 0 { "mnist" } else { "mnist-slo" };
+        fleet_submit(
+            &fleet, name, input(), &mut pending, &mut sheds_seen,
+            &mut route_errors,
+        );
+        if i % 8 == 7 {
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    }
+    let steady_sheds = sheds_seen;
+    // injected burst: well past the bucket's 64-token allowance, all at
+    // once -> admission must shed most of it
+    for _ in 0..burst {
+        fleet_submit(
+            &fleet, "mnist", input(), &mut pending, &mut sheds_seen,
+            &mut route_errors,
+        );
+    }
+    let accepted = pending.len();
+    let mut answered = 0usize;
+    for rx in pending {
+        rx.recv_timeout(Duration::from_secs(120))
+            .map_err(|e| anyhow::anyhow!("accepted request lost: {e}"))?;
+        answered += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\nfleet served {answered}/{} submitted in {:.1} ms \
+         ({steady_sheds} steady + {} burst sheds)",
+        requests + burst,
+        dt * 1e3,
+        sheds_seen - steady_sheds
+    );
+    for name in fleet.model_names() {
+        println!(
+            "  {name}: {} (steals={} slo_restricted={:?})",
+            fleet.metrics(&name).unwrap().report(),
+            fleet.steals(&name).unwrap(),
+            fleet.slo_restricted(&name).unwrap()
+        );
+    }
+
+    // the serve-smoke contract
+    anyhow::ensure!(route_errors == 0, "{route_errors} routing errors");
+    anyhow::ensure!(answered == accepted, "lost waiters");
+    anyhow::ensure!(
+        sheds_seen > 0,
+        "the injected {burst}-burst must shed against a 64-token bucket"
+    );
+    let fleet_sheds = fleet.sheds("mnist").unwrap() + fleet.sheds("mnist-slo").unwrap();
+    anyhow::ensure!(
+        fleet_sheds == sheds_seen,
+        "fleet counted {fleet_sheds} sheds, callers saw {sheds_seen}"
+    );
+    anyhow::ensure!(
+        fleet.slo_restricted("mnist-slo") == Some(true),
+        "SLO sizer failed to cut the 32-bucket (t8={t8:.6}s t32={t32:.6}s)"
+    );
+    let slo_snap = fleet.snapshot("mnist-slo").expect("registered");
+    anyhow::ensure!(
+        slo_snap.max_batch_rows == 8,
+        "SLO model formed a {}-row batch past the deadline",
+        slo_snap.max_batch_rows
+    );
+
+    // per-model obs artifacts + round-trip check (CI uploads these)
+    if let Some(stem) = &obs_dump {
+        for name in fleet.model_names() {
+            let snap = fleet.snapshot(&name).expect("registered");
+            let json_path = format!("{stem}-{name}.json");
+            let prom_path = format!("{stem}-{name}.prom");
+            let mut doc = snap.to_json().to_string();
+            doc.push('\n');
+            std::fs::write(&json_path, &doc)?;
+            std::fs::write(&prom_path, snap.to_prometheus())?;
+            let value = tcbnn::engine::json::Value::parse(&doc)
+                .map_err(|e| anyhow::anyhow!("parse {json_path}: {e}"))?;
+            let back = tcbnn::obs::Snapshot::from_json(&value)
+                .map_err(|e| anyhow::anyhow!("decode {json_path}: {e}"))?;
+            anyhow::ensure!(
+                back.to_json() == snap.to_json(),
+                "fleet obs snapshot round-trip failed for {name}"
+            );
+            println!(
+                "obs snapshot: {json_path} + {prom_path} \
+                 (sheds={} steals={} slo_hit={:.1}%)",
+                snap.sheds,
+                snap.steals,
+                snap.slo_hit_rate() * 100.0
+            );
+        }
+    }
+    fleet.shutdown();
+    println!("fleet smoke OK");
+    Ok(())
+}
+
+/// Submit one request, classifying the outcome: accepted (waiter
+/// kept), shed by admission (expected under the burst), or a routing
+/// error (must never happen in the smoke flow).
+fn fleet_submit(
+    fleet: &Fleet,
+    name: &str,
+    x: Vec<f32>,
+    pending: &mut Vec<std::sync::mpsc::Receiver<tcbnn::coordinator::server::Response>>,
+    sheds: &mut u64,
+    errs: &mut u64,
+) {
+    match fleet.submit(name, x) {
+        Ok(rx) => pending.push(rx),
+        Err(FleetError::Overloaded(_)) => *sheds += 1,
+        Err(e) => {
+            eprintln!("unexpected routing error: {e}");
+            *errs += 1;
+        }
+    }
 }

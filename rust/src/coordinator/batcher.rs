@@ -54,6 +54,27 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Pick the bucket for `n` ready requests: the largest bucket that is
+/// fully filled, or — when flushing stragglers — the smallest bucket
+/// that fits them.  `buckets` must be ascending.  This is the single
+/// bucket-selection rule shared by the [`Batcher`] and the fleet's
+/// per-shard queues (`serve::queue`), so both paths pad identically.
+pub fn bucket_for(buckets: &[usize], n: usize, flush: bool) -> Option<usize> {
+    let full = buckets.iter().rev().find(|&&b| n >= b).copied();
+    if full.is_some() {
+        return full;
+    }
+    if flush && n > 0 {
+        // smallest bucket that fits the stragglers
+        return buckets
+            .iter()
+            .find(|&&b| b >= n)
+            .copied()
+            .or_else(|| buckets.last().copied());
+    }
+    None
+}
+
 /// FIFO dynamic batcher.
 pub struct Batcher {
     cfg: BatcherConfig,
@@ -91,27 +112,7 @@ impl Batcher {
     /// Pick the bucket for `n` ready requests: the largest bucket that
     /// is fully filled, or the smallest bucket when flushing a tail.
     fn bucket_for(&self, n: usize, flush: bool) -> Option<usize> {
-        let full = self
-            .cfg
-            .buckets
-            .iter()
-            .rev()
-            .find(|&&b| n >= b)
-            .copied();
-        if full.is_some() {
-            return full;
-        }
-        if flush && n > 0 {
-            // smallest bucket that fits the stragglers
-            return self
-                .cfg
-                .buckets
-                .iter()
-                .find(|&&b| b >= n)
-                .copied()
-                .or_else(|| self.cfg.buckets.last().copied());
-        }
-        None
+        bucket_for(&self.cfg.buckets, n, flush)
     }
 
     /// Would `next_batch(now)` produce a batch?  Used by the server

@@ -38,6 +38,10 @@ struct Inner {
     batches: u64,
     padded_rows: u64,
     real_rows: u64,
+    /// largest padded batch executed — the observable the SLO batch
+    /// sizer moves (an SLO-restricted model never reaches the largest
+    /// fixed bucket; see `serve::slo`)
+    max_batch_rows: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
     /// rows executed by an engine-backed model (padding included)
@@ -81,7 +85,13 @@ impl Metrics {
         m.batches += 1;
         m.real_rows += real_rows as u64;
         m.padded_rows += padded_rows as u64;
+        m.max_batch_rows = m.max_batch_rows.max(padded_rows as u64);
         m.completed += latencies_s.len() as u64;
+    }
+
+    /// Largest padded batch executed so far (0 before the first batch).
+    pub fn max_batch_rows(&self) -> u64 {
+        self.inner.lock().unwrap().max_batch_rows
     }
 
     /// Record one engine batch execution: `rows` images in `secs` of
@@ -253,6 +263,7 @@ impl Metrics {
             batches: m.batches,
             throughput_rps,
             padding_frac,
+            max_batch_rows: m.max_batch_rows,
             latency: self.hist.summary(),
             latency_buckets: self.hist.nonzero_buckets(),
             engine_rows: m.engine_rows,
@@ -267,6 +278,14 @@ impl Metrics {
             traces_pushed: self.traces.pushed(),
             traces_dropped: self.traces.dropped(),
             traces_capacity: self.traces.capacity() as u64,
+            // fleet-level counters (sheds, steals, SLO hit-rate,
+            // per-shard attribution) are owned by `serve::Fleet`, which
+            // grafts them onto this snapshot in `Fleet::snapshot`
+            sheds: 0,
+            steals: 0,
+            slo_hits: 0,
+            slo_misses: 0,
+            shards: Vec::new(),
         }
     }
 
@@ -287,6 +306,7 @@ mod tests {
         m.record_batch(3, 8, &[0.002; 3]);
         assert_eq!(m.completed(), 11);
         assert_eq!(m.batches(), 2);
+        assert_eq!(m.max_batch_rows(), 8);
         let s = m.latency_summary();
         // histogram percentiles: exact to within bucket resolution
         assert!((s.p50 - 0.001).abs() <= 0.001 * 0.1, "p50 {}", s.p50);
@@ -294,6 +314,8 @@ mod tests {
         let pad = m.padding_overhead();
         assert!((pad - (1.0 - 11.0 / 16.0)).abs() < 1e-9);
         assert!(m.report().contains("requests=11"));
+        m.record_batch(32, 32, &[0.001; 32]);
+        assert_eq!(m.max_batch_rows(), 32, "max tracks the largest padded batch");
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //! `benn` adds the §7.6 multi-GPU BENN ensemble: one worker per "GPU",
 //! outputs merged through modeled NCCL/PCIe (scale-up) or MPI/IB
 //! (scale-out) collectives.
+//!
+//! The `serve` module (crate root) layers fleet serving on top of this
+//! stack: multiple named models, replica shards with work stealing,
+//! token-bucket admission control, and latency-SLO-aware batch sizing.
+//! See `docs/SERVING.md`.
 
 pub mod batcher;
 pub mod benn;
@@ -22,5 +27,5 @@ pub mod server;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use metrics::Metrics;
-pub use router::{Policy, Router};
+pub use router::{Policy, RouteError, Router};
 pub use server::{InferenceServer, ServerConfig};

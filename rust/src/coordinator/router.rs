@@ -10,9 +10,43 @@
 use std::collections::HashMap;
 use std::sync::mpsc::Receiver;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::server::{BatchModel, InferenceServer, Response, ServerConfig};
+
+/// Why a submit could not be routed.  Typed (not a stringly
+/// `anyhow::Error`) so callers — the fleet layer above, HTTP fronts,
+/// tests — can distinguish a client mistake (unknown model name) from
+/// a server lifecycle state (worker gone) without parsing messages.
+/// Interops with `anyhow::Result` call sites via `?` (it implements
+/// `std::error::Error`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RouteError {
+    /// No model registered under the requested name.
+    UnknownModel {
+        requested: String,
+        /// registered names, sorted — the "did you mean" payload
+        registered: Vec<String>,
+    },
+    /// The model exists but its worker has shut down (or died), so the
+    /// request channel is closed.
+    Shutdown { model: String },
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownModel { requested, registered } => {
+                write!(f, "unknown model {requested:?} (registered: {registered:?})")
+            }
+            RouteError::Shutdown { model } => {
+                write!(f, "model {model:?} is shut down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
 
 /// Routing policy when a model has several replicas.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -85,13 +119,23 @@ impl Router {
         }
     }
 
-    /// Route one request; returns the response channel.
-    pub fn submit(&self, model: &str, input: Vec<f32>) -> Result<Receiver<Response>> {
+    /// Route one request; returns the response channel, or a typed
+    /// [`RouteError`] (unknown model vs worker shut down).
+    pub fn submit(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+    ) -> Result<Receiver<Response>, RouteError> {
         let Some(e) = self.models.get(model) else {
-            bail!("unknown model {model:?} (registered: {:?})", self.model_names());
+            return Err(RouteError::UnknownModel {
+                requested: model.to_string(),
+                registered: self.model_names(),
+            });
         };
         let idx = self.pick(e);
-        Ok(e.replicas[idx].submit(input))
+        e.replicas[idx]
+            .try_submit(input)
+            .ok_or_else(|| RouteError::Shutdown { model: model.to_string() })
     }
 
     /// Aggregate completed-request count across all models/replicas.
@@ -147,9 +191,49 @@ mod tests {
     }
 
     #[test]
-    fn unknown_model_rejected() {
-        let r = Router::new(Policy::RoundRobin);
-        assert!(r.submit("nope", vec![]).is_err());
+    fn unknown_model_rejected_with_typed_error() {
+        let mut r = Router::new(Policy::RoundRobin);
+        r.register("real", 1, ServerConfig::default(), mock_factory(2));
+        match r.submit("nope", vec![]) {
+            Err(RouteError::UnknownModel { requested, registered }) => {
+                assert_eq!(requested, "nope");
+                assert_eq!(registered, vec!["real".to_string()]);
+            }
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+        // the error interops with anyhow call sites via `?`
+        let as_anyhow: anyhow::Result<()> = (|| {
+            r.submit("nope", vec![])?;
+            Ok(())
+        })();
+        assert!(as_anyhow.unwrap_err().to_string().contains("unknown model"));
+    }
+
+    #[test]
+    fn dead_worker_reports_shutdown() {
+        let mut r = Router::new(Policy::RoundRobin);
+        // a failing factory ends the worker cleanly; the closed request
+        // channel then surfaces as the typed Shutdown variant
+        r.register(
+            "dying",
+            1,
+            ServerConfig::default(),
+            || -> Result<Box<dyn BatchModel>> { Err(anyhow::anyhow!("boom")) },
+        );
+        // submits race the worker's exit, so poll until the channel closes
+        let mut saw_shutdown = false;
+        for _ in 0..500 {
+            match r.submit("dying", vec![0.0; 4]) {
+                Err(RouteError::Shutdown { model }) => {
+                    assert_eq!(model, "dying");
+                    saw_shutdown = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected error {e:?}"),
+                Ok(_) => std::thread::sleep(Duration::from_millis(2)),
+            }
+        }
+        assert!(saw_shutdown, "worker death never surfaced as Shutdown");
     }
 
     #[test]

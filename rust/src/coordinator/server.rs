@@ -105,15 +105,28 @@ impl InferenceServer {
         }
     }
 
-    /// Submit one request; returns the channel the response arrives on.
-    pub fn submit(&self, input: Vec<f32>) -> Receiver<Response> {
+    /// Submit one request; `None` when the worker is gone (shut down,
+    /// or its factory failed), so callers can surface a typed error
+    /// (`router::RouteError::Shutdown`) instead of a channel that
+    /// silently never fires.
+    pub fn try_submit(&self, input: Vec<f32>) -> Option<Receiver<Response>> {
         let (rtx, rrx) = channel();
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let req = Request { id, input, enqueued: Instant::now() };
-        let _ = self.tx.send(Msg::Infer(req, rtx));
-        rrx
+        match self.tx.send(Msg::Infer(req, rtx)) {
+            Ok(()) => Some(rrx),
+            Err(_) => None,
+        }
+    }
+
+    /// Submit one request; returns the channel the response arrives on.
+    /// When the worker is gone the channel is already closed (the old
+    /// behavior); use [`InferenceServer::try_submit`] to detect that
+    /// case explicitly.
+    pub fn submit(&self, input: Vec<f32>) -> Receiver<Response> {
+        self.try_submit(input).unwrap_or_else(|| channel().1)
     }
 
     /// Submit many inputs and wait for all responses (closed loop).
@@ -151,7 +164,16 @@ fn worker_loop<F>(
 ) where
     F: FnOnce() -> Result<Box<dyn BatchModel>>,
 {
-    let mut model = factory().expect("model factory");
+    // a failed factory ends the worker cleanly: the request channel
+    // closes, so submits surface as `try_submit() == None` (typed
+    // `RouteError::Shutdown` at the router) instead of a panic
+    let mut model = match factory() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("tcbnn-server: model factory failed, worker exiting: {e:#}");
+            return;
+        }
+    };
     let bcfg = BatcherConfig {
         buckets: model.buckets(),
         max_wait: cfg.max_wait,

@@ -189,6 +189,17 @@ impl Planner {
         self.plan_with(model, batch, None)
     }
 
+    /// Predicted end-to-end seconds of one `batch`-row pass under this
+    /// planner's cost source — the feed for SLO-aware batch sizing
+    /// (`serve::slo`).  Because the prediction goes through
+    /// [`Planner::plan`], it automatically inherits whatever the source
+    /// knows: `Live` blends the executor's measured EWMA, `Calibrated`
+    /// uses the fitted host profile, `Analytic` is the model-based
+    /// fallback.
+    pub fn predict_secs(&self, model: &ModelDef, batch: usize) -> f64 {
+        self.plan(model, batch).total_secs
+    }
+
     /// Plan with every layer pinned to `scheme` (the layout DP still
     /// runs within that scheme).  This is how a host without a Turing
     /// GPU serves the blocked-u64 backend:

@@ -77,6 +77,15 @@
 //! prediction).  Run `cargo run --release --bin tuner -- --quick`; the
 //! CI `tuner-smoke` job gates on it.
 //!
+//! The `serve` module scales the coordinator out to a multi-model
+//! **fleet**: each named model runs N replica shards (sharing one plan
+//! cache/calibration profile) with work stealing between siblings,
+//! behind token-bucket + queue-depth admission control that sheds load
+//! with an explicit `Overloaded` error instead of unbounded queues,
+//! and — when a p99 deadline is configured — SLO-aware batch sizing
+//! that restricts the bucket list to sizes whose planner-predicted
+//! service time meets the deadline.  See `docs/SERVING.md`.
+//!
 //! The `obs` module is the telemetry layer the stack reports into:
 //! a bounded log-scale latency histogram (replacing unbounded
 //! per-request latency storage in `coordinator::Metrics`), per-batch
@@ -99,6 +108,7 @@ pub mod layout;
 pub mod nn;
 pub mod obs;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tuner;
 pub mod util;

@@ -23,7 +23,9 @@ use crate::engine::json::Value;
 use crate::util::stats::Summary;
 
 /// Snapshot JSON schema version (bump on breaking shape changes).
-pub const OBS_SCHEMA: u64 = 1;
+/// v2 added the fleet-serving fields: `max_batch_rows`, `sheds`,
+/// `steals`, the SLO hit/miss counters, and per-shard attribution.
+pub const OBS_SCHEMA: u64 = 2;
 
 /// Cumulative per-layer attribution from the arena executor: how often
 /// the layer ran, measured wall seconds, and the plan's predicted
@@ -63,6 +65,18 @@ pub struct RepackEdge {
     pub secs: f64,
 }
 
+/// Per-shard attribution from a `serve::Fleet` model: which replica
+/// did the work, and how much of it arrived by stealing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardAttr {
+    pub shard: usize,
+    /// requests this shard executed (its own plus stolen ones)
+    pub requests: u64,
+    pub batches: u64,
+    /// steal operations this shard performed against loaded siblings
+    pub steals: u64,
+}
+
 /// Everything the serving stack reports, in one structure.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Snapshot {
@@ -90,6 +104,18 @@ pub struct Snapshot {
     pub traces_pushed: u64,
     pub traces_dropped: u64,
     pub traces_capacity: u64,
+    /// largest padded batch executed (the SLO batch sizer's observable)
+    pub max_batch_rows: u64,
+    /// requests rejected by admission control (rate limit + queue depth)
+    pub sheds: u64,
+    /// work-steal operations across the model's replica shards
+    pub steals: u64,
+    /// accepted requests that met the configured p99 deadline
+    pub slo_hits: u64,
+    /// accepted requests that missed it
+    pub slo_misses: u64,
+    /// per-shard attribution (empty outside fleet serving)
+    pub shards: Vec<ShardAttr>,
 }
 
 impl Snapshot {
@@ -122,7 +148,22 @@ impl Snapshot {
             ("replans_total", self.replans as f64),
             ("traces_pushed_total", self.traces_pushed as f64),
             ("traces_dropped_total", self.traces_dropped as f64),
+            ("max_batch_rows", self.max_batch_rows as f64),
+            ("sheds_total", self.sheds as f64),
+            ("steals_total", self.steals as f64),
+            ("slo_hits_total", self.slo_hits as f64),
+            ("slo_misses_total", self.slo_misses as f64),
         ]
+    }
+
+    /// SLO hit fraction over accepted requests (1.0 when no SLO data).
+    pub fn slo_hit_rate(&self) -> f64 {
+        let total = self.slo_hits + self.slo_misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.slo_hits as f64 / total as f64
+        }
     }
 
     /// Graft an engine-side snapshot (the served `EngineModel`'s own
@@ -174,6 +215,15 @@ impl Snapshot {
         }
         if self.replans > 0 {
             out.push_str(&format!(" replans={}", self.replans));
+        }
+        if self.sheds > 0 {
+            out.push_str(&format!(" sheds={}", self.sheds));
+        }
+        if self.steals > 0 {
+            out.push_str(&format!(" steals={}", self.steals));
+        }
+        if self.slo_hits + self.slo_misses > 0 {
+            out.push_str(&format!(" slo_hit={:.1}%", self.slo_hit_rate() * 100.0));
         }
         // the worst live drift (ratio furthest from 1x in either
         // direction) is the one worth a glance
@@ -329,6 +379,32 @@ impl Snapshot {
                     ("capacity".to_string(), num(self.traces_capacity as f64)),
                 ]),
             ),
+            ("max_batch_rows".to_string(), num(self.max_batch_rows as f64)),
+            (
+                "fleet".to_string(),
+                Value::Obj(vec![
+                    ("sheds".to_string(), num(self.sheds as f64)),
+                    ("steals".to_string(), num(self.steals as f64)),
+                    ("slo_hits".to_string(), num(self.slo_hits as f64)),
+                    ("slo_misses".to_string(), num(self.slo_misses as f64)),
+                ]),
+            ),
+            (
+                "shards".to_string(),
+                Value::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| {
+                            Value::Obj(vec![
+                                ("shard".to_string(), num(s.shard as f64)),
+                                ("requests".to_string(), num(s.requests as f64)),
+                                ("batches".to_string(), num(s.batches as f64)),
+                                ("steals".to_string(), num(s.steals as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -353,6 +429,7 @@ impl Snapshot {
         let eng = v.get("engine").ok_or("missing engine")?;
         let cache = v.get("plan_cache").ok_or("missing plan_cache")?;
         let traces = v.get("traces").ok_or("missing traces")?;
+        let fleet = v.get("fleet").ok_or("missing fleet")?;
         Ok(Snapshot {
             requests: req_u64(v, "requests")?,
             batches: req_u64(v, "batches")?,
@@ -415,6 +492,22 @@ impl Snapshot {
             traces_pushed: req_u64(traces, "pushed")?,
             traces_dropped: req_u64(traces, "dropped")?,
             traces_capacity: req_u64(traces, "capacity")?,
+            max_batch_rows: req_u64(v, "max_batch_rows")?,
+            sheds: req_u64(fleet, "sheds")?,
+            steals: req_u64(fleet, "steals")?,
+            slo_hits: req_u64(fleet, "slo_hits")?,
+            slo_misses: req_u64(fleet, "slo_misses")?,
+            shards: arr(v, "shards")?
+                .iter()
+                .map(|s| {
+                    Ok(ShardAttr {
+                        shard: req_u64(s, "shard")? as usize,
+                        requests: req_u64(s, "requests")?,
+                        batches: req_u64(s, "batches")?,
+                        steals: req_u64(s, "steals")?,
+                    })
+                })
+                .collect::<Result<_, String>>()?,
         })
     }
 
@@ -475,6 +568,12 @@ impl Snapshot {
             out.push_str(&format!("tcbnn_repack_edge_ops_total{lbl} {}\n", e.ops));
             out.push_str(&format!("tcbnn_repack_edge_bytes_total{lbl} {}\n", e.bytes));
             out.push_str(&format!("tcbnn_repack_edge_seconds_total{lbl} {}\n", e.secs));
+        }
+        for s in &self.shards {
+            let lbl = format!("{{shard=\"{}\"}}", s.shard);
+            out.push_str(&format!("tcbnn_shard_requests_total{lbl} {}\n", s.requests));
+            out.push_str(&format!("tcbnn_shard_batches_total{lbl} {}\n", s.batches));
+            out.push_str(&format!("tcbnn_shard_steals_total{lbl} {}\n", s.steals));
         }
         for l in &self.layers {
             let lbl = format!(
@@ -561,6 +660,15 @@ mod tests {
             traces_pushed: 2,
             traces_dropped: 0,
             traces_capacity: 256,
+            max_batch_rows: 8,
+            sheds: 7,
+            steals: 2,
+            slo_hits: 9,
+            slo_misses: 2,
+            shards: vec![
+                ShardAttr { shard: 0, requests: 6, batches: 1, steals: 2 },
+                ShardAttr { shard: 1, requests: 5, batches: 1, steals: 0 },
+            ],
         }
     }
 
@@ -598,6 +706,9 @@ mod tests {
         assert!(r.contains("plan_cache=3h/5m"), "{r}");
         assert!(r.contains("repack=3ops/12288B"), "{r}");
         assert!(r.contains("replans=1"), "{r}");
+        assert!(r.contains("sheds=7"), "{r}");
+        assert!(r.contains("steals=2"), "{r}");
+        assert!(r.contains("slo_hit=81.8%"), "{r}");
         assert!(r.contains("drift[FASTPATH]=1.10x"), "{r}");
         assert!(r.contains("layer_drift[1024FC]=3.00x"), "{r}");
     }
@@ -617,6 +728,8 @@ mod tests {
         assert!(prom.contains(
             "tcbnn_repack_edge_bytes_total{layer=\"3\",src=\"Blocked64\",dst=\"Row32\"} 12288"
         ));
+        assert!(prom.contains("tcbnn_shard_requests_total{shard=\"0\"} 6"));
+        assert!(prom.contains("tcbnn_shard_steals_total{shard=\"0\"} 2"));
     }
 
     #[test]

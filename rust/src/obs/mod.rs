@@ -22,6 +22,6 @@ pub mod export;
 pub mod hist;
 pub mod trace;
 
-pub use export::{LayerAttr, RepackEdge, Snapshot, OBS_SCHEMA};
+pub use export::{LayerAttr, RepackEdge, ShardAttr, Snapshot, OBS_SCHEMA};
 pub use hist::LogHistogram;
 pub use trace::{BatchTrace, Span, SpanKind, TraceRing};

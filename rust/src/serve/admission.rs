@@ -1,0 +1,172 @@
+//! Admission control for the fleet: a token bucket (sustained-rate
+//! limit with burst allowance) plus queue-depth load shedding.
+//!
+//! Both checks happen synchronously on the submit path, *before* the
+//! request is enqueued — a rejected request is never queued, so there
+//! is no waiter to leak: the caller gets an explicit
+//! [`Overload`] back instead of a channel that never fires (or a queue
+//! that grows without bound).  Depth is checked first so a full fleet
+//! does not also burn rate tokens on requests it cannot take.
+//!
+//! Time is injected (`Instant` parameter) rather than read internally,
+//! so tests drive the bucket deterministically.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Why a request was shed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Overload {
+    /// the token bucket is empty: sustained arrival rate exceeds the
+    /// configured requests/sec
+    RateLimited,
+    /// total queued depth across the model's shards is at the limit
+    QueueFull,
+}
+
+impl std::fmt::Display for Overload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Overload::RateLimited => write!(f, "rate limited (token bucket empty)"),
+            Overload::QueueFull => write!(f, "queue depth limit reached"),
+        }
+    }
+}
+
+impl std::error::Error for Overload {}
+
+/// Admission policy for one fleet model.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// sustained admitted requests/sec; `None` disables rate limiting
+    pub rate: Option<f64>,
+    /// bucket capacity: how large an instantaneous burst is admitted
+    /// beyond the sustained rate (clamped to >= 1 token when rate set)
+    pub burst: f64,
+    /// max total queued requests across the model's shards
+    pub max_queue_depth: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { rate: None, burst: 64.0, max_queue_depth: 8192 }
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// One model's admission state (shared by every submit).
+pub struct Admission {
+    cfg: AdmissionConfig,
+    bucket: Mutex<Option<Bucket>>,
+}
+
+impl Admission {
+    /// The bucket starts full: the first burst up to `burst` is always
+    /// admitted.
+    pub fn new(cfg: AdmissionConfig) -> Admission {
+        Admission { cfg, bucket: Mutex::new(None) }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Admit one request or say why not.  `queue_depth` is the caller's
+    /// current total queued count; `now` is injectable for tests.
+    pub fn try_admit(&self, queue_depth: usize, now: Instant) -> Result<(), Overload> {
+        if queue_depth >= self.cfg.max_queue_depth {
+            return Err(Overload::QueueFull);
+        }
+        let Some(rate) = self.cfg.rate else {
+            return Ok(());
+        };
+        let cap = self.cfg.burst.max(1.0);
+        let mut guard = self.bucket.lock().unwrap();
+        let b = guard.get_or_insert_with(|| Bucket { tokens: cap, last: now });
+        // refill since the last admit attempt, capped at the burst size
+        let dt = now.saturating_duration_since(b.last).as_secs_f64();
+        b.tokens = (b.tokens + dt * rate).min(cap);
+        b.last = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err(Overload::RateLimited)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn unlimited_when_no_rate_and_room_in_queue() {
+        let a = Admission::new(AdmissionConfig::default());
+        let t0 = Instant::now();
+        for _ in 0..10_000 {
+            assert_eq!(a.try_admit(0, t0), Ok(()));
+        }
+    }
+
+    #[test]
+    fn queue_depth_sheds_before_spending_tokens() {
+        let a = Admission::new(AdmissionConfig {
+            rate: Some(100.0),
+            burst: 2.0,
+            max_queue_depth: 4,
+        });
+        let t0 = Instant::now();
+        assert_eq!(a.try_admit(4, t0), Err(Overload::QueueFull));
+        assert_eq!(a.try_admit(5, t0), Err(Overload::QueueFull));
+        // the full-queue rejections above must not have consumed
+        // tokens: the whole burst allowance is still there
+        assert_eq!(a.try_admit(0, t0), Ok(()));
+        assert_eq!(a.try_admit(0, t0), Ok(()));
+        assert_eq!(a.try_admit(0, t0), Err(Overload::RateLimited));
+    }
+
+    #[test]
+    fn token_bucket_admits_burst_then_refills_at_rate() {
+        let a = Admission::new(AdmissionConfig {
+            rate: Some(10.0), // one token per 100ms
+            burst: 3.0,
+            max_queue_depth: usize::MAX,
+        });
+        let t0 = Instant::now();
+        // initial burst: exactly `burst` tokens
+        for _ in 0..3 {
+            assert_eq!(a.try_admit(0, t0), Ok(()));
+        }
+        assert_eq!(a.try_admit(0, t0), Err(Overload::RateLimited));
+        // 250ms later: 2.5 tokens refilled -> 2 admits
+        let t1 = t0 + Duration::from_millis(250);
+        assert_eq!(a.try_admit(0, t1), Ok(()));
+        assert_eq!(a.try_admit(0, t1), Ok(()));
+        assert_eq!(a.try_admit(0, t1), Err(Overload::RateLimited));
+        // a long quiet period refills to the cap, not beyond
+        let t2 = t1 + Duration::from_secs(3600);
+        for _ in 0..3 {
+            assert_eq!(a.try_admit(0, t2), Ok(()));
+        }
+        assert_eq!(a.try_admit(0, t2), Err(Overload::RateLimited));
+    }
+
+    #[test]
+    fn burst_below_one_still_admits_at_rate() {
+        let a = Admission::new(AdmissionConfig {
+            rate: Some(10.0),
+            burst: 0.0, // clamped to 1 token
+            max_queue_depth: usize::MAX,
+        });
+        let t0 = Instant::now();
+        assert_eq!(a.try_admit(0, t0), Ok(()));
+        assert_eq!(a.try_admit(0, t0), Err(Overload::RateLimited));
+        assert_eq!(a.try_admit(0, t0 + Duration::from_millis(150)), Ok(()));
+    }
+}

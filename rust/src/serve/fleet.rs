@@ -1,0 +1,715 @@
+//! The `Fleet`: N named models, each served by a pool of replica
+//! shards with work stealing, behind admission control and SLO-aware
+//! batch sizing.  See `docs/SERVING.md` for the architecture.
+//!
+//! Each registered model owns `shards` worker threads.  A worker
+//! builds its own model instance via the registration factory (so
+//! `EngineModel` replicas can share one `PlanCache`/calibration
+//! profile but keep private arenas), then loops: form a batch from its
+//! own queue; else steal the oldest queued requests from the deepest
+//! sibling; else sleep until the flush deadline or a submit wakes it.
+//!
+//! The submit path is synchronous about rejection: admission control
+//! (token bucket + total queue depth) runs *before* anything is
+//! enqueued, so a shed request returns [`FleetError::Overloaded`] and
+//! never leaves a waiter behind.  Accepted requests carry their
+//! response sender with them through the queues — a steal moves the
+//! waiter along with the work.
+//!
+//! Lost-wakeup safety: `submit` pushes, then notifies under the wake
+//! lock; a worker about to sleep holds that lock and re-probes the
+//! queue depth mirrors first.  A bounded sleep (the flush deadline,
+//! capped at 10ms) backstops everything else.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::RouteError;
+use crate::coordinator::server::{BatchModel, Response};
+use crate::obs::export::{ShardAttr, Snapshot};
+use crate::obs::trace::{BatchTrace, Span};
+
+use super::admission::{Admission, AdmissionConfig, Overload};
+use super::queue::{FleetReq, Formed, ShardQueue};
+use super::slo::{BatchSecsPredictor, BatchSizer, SloConfig};
+
+/// Idle poll bound: the longest a worker sleeps without re-scanning
+/// for steal opportunities (also the lost-wakeup backstop).
+const IDLE_POLL: Duration = Duration::from_millis(10);
+
+/// Batches between a worker's engine-snapshot publications (the
+/// per-shard `obs_snapshot` graft is also refreshed on exit).
+const ENGINE_PUBLISH_EVERY: u64 = 8;
+
+/// Why a fleet submit failed.  Routing failures reuse the
+/// coordinator's typed [`RouteError`]; overload is the admission
+/// layer's explicit rejection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FleetError {
+    Route(RouteError),
+    Overloaded(Overload),
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::Route(e) => write!(f, "{e}"),
+            FleetError::Overloaded(o) => write!(f, "overloaded: {o}"),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+impl From<RouteError> for FleetError {
+    fn from(e: RouteError) -> FleetError {
+        FleetError::Route(e)
+    }
+}
+
+/// Per-model serving configuration.
+#[derive(Clone)]
+pub struct FleetModelConfig {
+    /// replica shards (worker threads), >= 1
+    pub shards: usize,
+    /// max time a straggler may wait before a partial batch flushes
+    pub max_wait: Duration,
+    pub admission: AdmissionConfig,
+    /// when set (together with `predictor`), batch sizing is
+    /// SLO-restricted; see `serve::slo`
+    pub slo: Option<SloConfig>,
+    /// predicted service seconds per bucket (e.g.
+    /// [`super::slo::plan_predictor`]); absent -> fixed buckets
+    pub predictor: Option<BatchSecsPredictor>,
+}
+
+impl Default for FleetModelConfig {
+    fn default() -> Self {
+        FleetModelConfig {
+            shards: 2,
+            max_wait: Duration::from_millis(2),
+            admission: AdmissionConfig::default(),
+            slo: None,
+            predictor: None,
+        }
+    }
+}
+
+/// Per-shard counters + the shard's latest engine-side snapshot.
+struct ShardStats {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    steals: AtomicU64,
+    engine: Mutex<Option<Snapshot>>,
+}
+
+impl ShardStats {
+    fn new() -> ShardStats {
+        ShardStats {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            engine: Mutex::new(None),
+        }
+    }
+}
+
+/// Everything one model's submit path and workers share.
+struct ModelShared {
+    name: String,
+    max_wait: Duration,
+    queues: Vec<ShardQueue>,
+    stats: Vec<ShardStats>,
+    metrics: Arc<Metrics>,
+    admission: Admission,
+    sheds: AtomicU64,
+    slo_hits: AtomicU64,
+    slo_misses: AtomicU64,
+    slo: Option<SloConfig>,
+    predictor: Option<BatchSecsPredictor>,
+    /// set by shard 0 once its sizer is built (observability + tests)
+    sizer_restricted: AtomicBool,
+    next_id: AtomicU64,
+    rr: AtomicUsize,
+    shutdown: AtomicBool,
+    wake: Mutex<()>,
+    cv: Condvar,
+}
+
+impl ModelShared {
+    fn total_depth(&self) -> usize {
+        self.queues.iter().map(|q| q.depth()).sum()
+    }
+
+    /// Wake every worker.  Taking the wake lock orders this after the
+    /// caller's queue push: a worker about to sleep holds the lock and
+    /// re-probes the depth mirrors first, so a push either lands before
+    /// that probe or its notify lands after the worker starts waiting —
+    /// never between (no lost wakeup).
+    fn notify(&self) {
+        let _g = self.wake.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// Is there anything a worker could act on right now?  Cheap
+    /// (atomic depth probes only) — called under the wake lock before
+    /// sleeping.  Own stragglers below a bucket are deliberately not a
+    /// wake reason: they only become actionable at the flush deadline,
+    /// which bounds the sleep instead.
+    fn has_work(&self, shard: usize, min_bucket: usize) -> bool {
+        if self.shutdown.load(Ordering::Acquire) {
+            return true;
+        }
+        if self.queues[shard].depth() >= min_bucket {
+            return true; // a full bucket landed at home since the scan
+        }
+        self.queues
+            .iter()
+            .enumerate()
+            .any(|(i, q)| i != shard && q.depth() >= min_bucket)
+    }
+}
+
+/// The fleet router: owns every model's shards; submit by name.
+pub struct Fleet {
+    models: HashMap<String, Arc<ModelShared>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Default for Fleet {
+    fn default() -> Self {
+        Fleet::new()
+    }
+}
+
+impl Fleet {
+    pub fn new() -> Fleet {
+        Fleet { models: HashMap::new(), workers: Vec::new() }
+    }
+
+    /// Register a model under `name` with `cfg.shards` replicas.  The
+    /// factory runs once inside each shard's worker thread; replicas
+    /// meant to share a plan cache should close over one (pre-warmed)
+    /// `PlanCache`.
+    pub fn register<F>(&mut self, name: &str, cfg: FleetModelConfig, factory: F)
+    where
+        F: Fn() -> Result<Box<dyn BatchModel>> + Send + Sync + Clone + 'static,
+    {
+        assert!(cfg.shards > 0, "a model needs at least one shard");
+        assert!(
+            !self.models.contains_key(name),
+            "model {name:?} already registered"
+        );
+        let shared = Arc::new(ModelShared {
+            name: name.to_string(),
+            max_wait: cfg.max_wait,
+            queues: (0..cfg.shards).map(|_| ShardQueue::new()).collect(),
+            stats: (0..cfg.shards).map(|_| ShardStats::new()).collect(),
+            metrics: Arc::new(Metrics::new()),
+            admission: Admission::new(cfg.admission),
+            sheds: AtomicU64::new(0),
+            slo_hits: AtomicU64::new(0),
+            slo_misses: AtomicU64::new(0),
+            slo: cfg.slo,
+            predictor: cfg.predictor,
+            sizer_restricted: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            rr: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            wake: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        for shard in 0..cfg.shards {
+            let sh = Arc::clone(&shared);
+            let f = factory.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("tcbnn-fleet-{name}-{shard}"))
+                .spawn(move || worker_loop(sh, shard, f))
+                .expect("spawn fleet worker");
+            self.workers.push(handle);
+        }
+        self.models.insert(name.to_string(), shared);
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Submit one request.  Synchronous rejection: a returned `Err` was
+    /// never enqueued (no leaked waiter); an `Ok` receiver is answered
+    /// by whichever shard executes the request (possibly after a
+    /// steal), or disconnects if the fleet is torn down around it.
+    pub fn submit(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+    ) -> Result<Receiver<Response>, FleetError> {
+        let Some(m) = self.models.get(model) else {
+            return Err(RouteError::UnknownModel {
+                requested: model.to_string(),
+                registered: self.model_names(),
+            }
+            .into());
+        };
+        if m.shutdown.load(Ordering::Acquire) {
+            return Err(RouteError::Shutdown { model: model.to_string() }.into());
+        }
+        if let Err(o) = m.admission.try_admit(m.total_depth(), Instant::now()) {
+            m.sheds.fetch_add(1, Ordering::Relaxed);
+            return Err(FleetError::Overloaded(o));
+        }
+        let (rtx, rrx) = channel();
+        let id = m.next_id.fetch_add(1, Ordering::Relaxed);
+        let shard = m.rr.fetch_add(1, Ordering::Relaxed) % m.queues.len();
+        m.queues[shard].push(FleetReq {
+            id,
+            input,
+            enqueued: Instant::now(),
+            tx: rtx,
+        });
+        m.notify();
+        Ok(rrx)
+    }
+
+    /// The model's fleet-level metrics sink (request latencies,
+    /// batches, traces).
+    pub fn metrics(&self, model: &str) -> Option<Arc<Metrics>> {
+        self.models.get(model).map(|m| Arc::clone(&m.metrics))
+    }
+
+    /// Requests shed by admission control.
+    pub fn sheds(&self, model: &str) -> Option<u64> {
+        self.models.get(model).map(|m| m.sheds.load(Ordering::Relaxed))
+    }
+
+    /// Steal operations across the model's shards.
+    pub fn steals(&self, model: &str) -> Option<u64> {
+        self.models.get(model).map(|m| {
+            m.stats.iter().map(|s| s.steals.load(Ordering::Relaxed)).sum()
+        })
+    }
+
+    /// `(hits, misses)` against the configured p99 deadline.
+    pub fn slo_counts(&self, model: &str) -> Option<(u64, u64)> {
+        self.models.get(model).map(|m| {
+            (
+                m.slo_hits.load(Ordering::Relaxed),
+                m.slo_misses.load(Ordering::Relaxed),
+            )
+        })
+    }
+
+    /// Whether the model's SLO actually restricted its bucket list
+    /// (false until shard 0 has built its sizer).
+    pub fn slo_restricted(&self, model: &str) -> Option<bool> {
+        self.models
+            .get(model)
+            .map(|m| m.sizer_restricted.load(Ordering::Acquire))
+    }
+
+    /// One model's full telemetry snapshot: the fleet `Metrics`
+    /// rendering plus sheds/steals/SLO counters, per-shard attribution,
+    /// and the engine-side graft (throughput counters summed across
+    /// shard replicas; per-layer attribution from the busiest shard).
+    pub fn snapshot(&self, model: &str) -> Option<Snapshot> {
+        let m = self.models.get(model)?;
+        let mut snap = m.metrics.snapshot();
+        snap.sheds = m.sheds.load(Ordering::Relaxed);
+        snap.steals = m
+            .stats
+            .iter()
+            .map(|s| s.steals.load(Ordering::Relaxed))
+            .sum();
+        snap.slo_hits = m.slo_hits.load(Ordering::Relaxed);
+        snap.slo_misses = m.slo_misses.load(Ordering::Relaxed);
+        snap.shards = m
+            .stats
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ShardAttr {
+                shard: i,
+                requests: s.requests.load(Ordering::Relaxed),
+                batches: s.batches.load(Ordering::Relaxed),
+                steals: s.steals.load(Ordering::Relaxed),
+            })
+            .collect();
+        let engines: Vec<Snapshot> = m
+            .stats
+            .iter()
+            .filter_map(|s| s.engine.lock().unwrap().clone())
+            .collect();
+        if let Some(busiest) = engines
+            .iter()
+            .max_by(|a, b| a.engine_busy_s.partial_cmp(&b.engine_busy_s).unwrap())
+        {
+            // attribution (layers, drift, plan-cache counters) from the
+            // busiest replica; pure throughput counters summed
+            snap.absorb_engine(busiest);
+            snap.engine_rows = engines.iter().map(|e| e.engine_rows).sum();
+            snap.engine_busy_s = engines.iter().map(|e| e.engine_busy_s).sum();
+            snap.replans = engines.iter().map(|e| e.replans).sum();
+        }
+        Some(snap)
+    }
+
+    /// Per-model report lines (name-sorted).
+    pub fn report(&self) -> String {
+        self.model_names()
+            .into_iter()
+            .map(|name| {
+                let snap = self.snapshot(&name).expect("registered");
+                format!("{name}: {}", snap.render_report())
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Flag every model as shutting down and wake all workers.  After
+    /// this, `submit` returns `RouteError::Shutdown`; workers flush
+    /// their remaining queues and exit.  (`shutdown` joins them.)
+    pub fn begin_shutdown(&self) {
+        for m in self.models.values() {
+            m.shutdown.store(true, Ordering::Release);
+            m.notify();
+        }
+    }
+
+    /// Drain and stop: queued requests are flushed (their waiters get
+    /// responses), then workers exit and are joined.
+    pub fn shutdown(mut self) {
+        self.begin_shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.begin_shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop<F>(shared: Arc<ModelShared>, shard: usize, factory: F)
+where
+    F: Fn() -> Result<Box<dyn BatchModel>>,
+{
+    // a failed factory ends this shard cleanly; siblings keep serving
+    // (and can steal this shard's queue), mirroring the coordinator
+    // worker's behavior
+    let mut model = match factory() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!(
+                "tcbnn-fleet-{}-{shard}: model factory failed, shard exiting: {e:#}",
+                shared.name
+            );
+            return;
+        }
+    };
+    let row_elems = model.row_elems();
+    let out_elems = model.out_elems();
+    let sizer = BatchSizer::for_model(
+        model.buckets(),
+        shared.slo,
+        shared.predictor.as_ref(),
+    );
+    if shard == 0 {
+        shared
+            .sizer_restricted
+            .store(sizer.restricted(), Ordering::Release);
+    }
+    let mut batches_run = 0u64;
+    loop {
+        let shutting = shared.shutdown.load(Ordering::Acquire);
+        let now = Instant::now();
+        // 1. form from the own queue (forced flush while draining)
+        if let Some(formed) = shared.queues[shard].try_form(
+            sizer.buckets(),
+            row_elems,
+            shared.max_wait,
+            now,
+            shutting,
+        ) {
+            run_batch(&shared, shard, model.as_mut(), formed, out_elems);
+            batches_run += 1;
+            if batches_run % ENGINE_PUBLISH_EVERY == 0 {
+                publish_engine(&shared, shard, model.as_ref());
+            }
+            continue;
+        }
+        // 2. nothing formable at home: steal the deepest sibling's
+        //    oldest requests (up to one admissible batch's worth).
+        //    During shutdown each shard drains only its own queue.
+        if !shutting && steal_from_sibling(&shared, shard, &sizer) {
+            shared.stats[shard].steals.fetch_add(1, Ordering::Relaxed);
+            continue; // the stolen work is now formable at home
+        }
+        if shutting {
+            // own queue fully drained (forced flush forms any tail)
+            publish_engine(&shared, shard, model.as_ref());
+            return;
+        }
+        // 3. sleep until the flush deadline / a submit's wake, capped
+        //    by the idle poll (which also bounds steal-scan latency)
+        let wait = shared.queues[shard]
+            .time_until_flush(shared.max_wait, Instant::now())
+            .unwrap_or(IDLE_POLL)
+            .min(IDLE_POLL)
+            .max(Duration::from_micros(100));
+        let guard = shared.wake.lock().unwrap();
+        // no lost wakeup: submit notifies under this lock after its
+        // push, so anything that arrived since our scan is visible to
+        // this re-probe, or its notify lands after we start waiting
+        if shared.has_work(shard, sizer.min_bucket()) {
+            drop(guard);
+            continue;
+        }
+        let _ = shared.cv.wait_timeout(guard, wait).unwrap();
+    }
+}
+
+/// Move up to one batch's worth of the deepest sibling's oldest
+/// requests into `shard`'s queue.  Only called when `shard` cannot
+/// form a batch, so a successful steal is immediately consumed (no
+/// ping-pong: the minimum steal is a formable bucket's worth or the
+/// victim's whole backlog).
+fn steal_from_sibling(
+    shared: &ModelShared,
+    shard: usize,
+    sizer: &BatchSizer,
+) -> bool {
+    let Some((victim, depth)) = shared
+        .queues
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != shard)
+        .map(|(i, q)| (i, q.depth()))
+        .max_by_key(|&(_, d)| d)
+    else {
+        return false; // single shard: nobody to steal from
+    };
+    if depth < sizer.min_bucket() {
+        return false;
+    }
+    let stolen = shared.queues[victim].pop_front_n(sizer.max_bucket().min(depth));
+    if stolen.is_empty() {
+        return false; // raced another thief
+    }
+    for r in stolen {
+        shared.queues[shard].push(r);
+    }
+    true
+}
+
+/// Execute one formed batch and answer its waiters.
+fn run_batch(
+    shared: &ModelShared,
+    shard: usize,
+    model: &mut dyn BatchModel,
+    formed: Formed,
+    out_elems: usize,
+) {
+    let Formed { reqs, data, padded, oldest_wait } = formed;
+    let logits = model.run_batch(&data, padded).expect("fleet model run");
+    let done = Instant::now();
+    let lats: Vec<f64> = reqs
+        .iter()
+        .map(|r| done.duration_since(r.enqueued).as_secs_f64())
+        .collect();
+    shared.metrics.record_batch(reqs.len(), padded, &lats);
+    let mut spans = Vec::with_capacity(1 + 4);
+    spans.push(Span::queue(oldest_wait.as_secs_f64()));
+    spans.extend(model.layer_spans());
+    shared.metrics.traces().push(BatchTrace {
+        seq: shared.metrics.batches(),
+        ids: reqs.iter().map(|r| r.id).collect(),
+        spans,
+    });
+    if let Some(slo) = shared.slo {
+        let d = slo.p99_deadline.as_secs_f64();
+        for &l in &lats {
+            if l <= d {
+                shared.slo_hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                shared.slo_misses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    let st = &shared.stats[shard];
+    st.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+    st.batches.fetch_add(1, Ordering::Relaxed);
+    for (row, req) in reqs.into_iter().enumerate() {
+        let l = logits[row * out_elems..(row + 1) * out_elems].to_vec();
+        let argmax = l
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        // a receiver the client dropped is fine — send errors ignored
+        let _ = req.tx.send(Response {
+            id: req.id,
+            logits: l,
+            argmax,
+            latency: Duration::from_secs_f64(lats[row]),
+        });
+    }
+}
+
+/// Refresh this shard's engine-side snapshot slot (None for models
+/// without engine telemetry, e.g. mocks).
+fn publish_engine(shared: &ModelShared, shard: usize, model: &dyn BatchModel) {
+    *shared.stats[shard].engine.lock().unwrap() = model.obs_snapshot();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::MockModel;
+
+    fn mock_factory(
+        delay: Duration,
+    ) -> impl Fn() -> Result<Box<dyn BatchModel>> + Send + Sync + Clone + 'static {
+        move || {
+            Ok(Box::new(MockModel { row_elems: 4, out_elems: 3, delay })
+                as Box<dyn BatchModel>)
+        }
+    }
+
+    #[test]
+    fn serves_and_answers_every_accepted_request() {
+        let mut fleet = Fleet::new();
+        fleet.register("m", FleetModelConfig::default(), mock_factory(Duration::ZERO));
+        let rxs: Vec<_> = (0..100)
+            .map(|i| fleet.submit("m", vec![i as f32; 4]).expect("admitted"))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(30)).expect("answered");
+            assert_eq!(r.logits[0], (i * 4) as f32, "request {i} got its own answer");
+        }
+        assert_eq!(fleet.metrics("m").unwrap().completed(), 100);
+        assert_eq!(fleet.sheds("m"), Some(0));
+    }
+
+    #[test]
+    fn unknown_and_shutdown_are_typed() {
+        let mut fleet = Fleet::new();
+        fleet.register("m", FleetModelConfig::default(), mock_factory(Duration::ZERO));
+        match fleet.submit("nope", vec![]) {
+            Err(FleetError::Route(RouteError::UnknownModel { requested, registered })) => {
+                assert_eq!(requested, "nope");
+                assert_eq!(registered, vec!["m".to_string()]);
+            }
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+        fleet.begin_shutdown();
+        match fleet.submit("m", vec![0.0; 4]) {
+            Err(FleetError::Route(RouteError::Shutdown { model })) => {
+                assert_eq!(model, "m");
+            }
+            other => panic!("expected Shutdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_flushes_pending_waiters() {
+        let mut fleet = Fleet::new();
+        fleet.register("m", FleetModelConfig::default(), mock_factory(Duration::ZERO));
+        // 3 stragglers (below the smallest bucket): only the shutdown
+        // drain's forced flush can answer them
+        let rxs: Vec<_> = (0..3)
+            .map(|i| fleet.submit("m", vec![i as f32; 4]).unwrap())
+            .collect();
+        fleet.shutdown();
+        for rx in rxs {
+            rx.recv().expect("flushed on shutdown, not leaked");
+        }
+    }
+
+    #[test]
+    fn idle_shard_steals_from_a_loaded_sibling() {
+        let mut fleet = Fleet::new();
+        fleet.register(
+            "m",
+            FleetModelConfig { shards: 2, ..Default::default() },
+            // slow batches so the loaded shard stays loaded while the
+            // idle one wakes up
+            mock_factory(Duration::from_millis(20)),
+        );
+        // bypass round-robin dispatch: pile every request onto shard 0
+        let shared = Arc::clone(&fleet.models["m"]);
+        let rxs: Vec<_> = (0..64)
+            .map(|i| {
+                let (tx, rx) = channel();
+                shared.queues[0].push(FleetReq {
+                    id: i,
+                    input: vec![i as f32; 4],
+                    enqueued: Instant::now(),
+                    tx,
+                });
+                rx
+            })
+            .collect();
+        shared.notify();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).expect("answered");
+        }
+        assert!(
+            fleet.steals("m").unwrap() >= 1,
+            "shard 1 must have stolen from shard 0's 64-deep queue"
+        );
+        // both shards did real work
+        let snap = fleet.snapshot("m").unwrap();
+        assert_eq!(snap.shards.len(), 2);
+        assert!(snap.shards.iter().all(|s| s.requests > 0), "{:?}", snap.shards);
+        assert_eq!(snap.steals, fleet.steals("m").unwrap());
+        assert_eq!(snap.requests, 64);
+    }
+
+    #[test]
+    fn depth_overload_sheds_synchronously() {
+        let mut fleet = Fleet::new();
+        fleet.register(
+            "m",
+            FleetModelConfig {
+                shards: 1,
+                admission: AdmissionConfig {
+                    rate: None,
+                    burst: 0.0,
+                    max_queue_depth: 8,
+                },
+                ..Default::default()
+            },
+            // slow enough that the queue genuinely backs up
+            mock_factory(Duration::from_millis(50)),
+        );
+        let mut accepted = Vec::new();
+        let mut shed = 0u64;
+        for i in 0..200 {
+            match fleet.submit("m", vec![i as f32; 4]) {
+                Ok(rx) => accepted.push(rx),
+                Err(FleetError::Overloaded(Overload::QueueFull)) => shed += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(shed > 0, "depth limit must shed under this burst");
+        assert_eq!(fleet.sheds("m"), Some(shed));
+        // zero lost waiters: every accepted request is answered
+        for rx in accepted {
+            rx.recv_timeout(Duration::from_secs(60)).expect("accepted => answered");
+        }
+    }
+}

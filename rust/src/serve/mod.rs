@@ -1,0 +1,32 @@
+//! Multi-model serving fleet, layered above `coordinator`.
+//!
+//! The coordinator serves one model with one worker.  This module
+//! scales that out along three axes the single-model server cannot:
+//!
+//! * **Sharding + work stealing** ([`fleet`]): each named model gets N
+//!   replica shards; an idle replica steals queued batches from a
+//!   loaded sibling, so one hot shard cannot strand latency while
+//!   others sit idle.  Replicas built from one factory share a
+//!   `PlanCache`/calibration profile.
+//! * **Admission control** ([`admission`]): a token bucket (sustained
+//!   rate + burst) and a queue-depth cap shed load *synchronously* on
+//!   the submit path — a rejected request gets an explicit
+//!   [`Overload`] and is never enqueued, so no waiter leaks.
+//! * **SLO-aware batch sizing** ([`slo`]): given a p99 deadline, batch
+//!   formation is restricted to the largest buckets whose predicted
+//!   service time (the planner's Live/Calibrated/Analytic cost source)
+//!   still meets the deadline, replacing the fixed bucket list.
+//!
+//! Telemetry flows through the same `obs::Snapshot` as the rest of the
+//! stack, extended with per-model sheds/steals/SLO counters and
+//! per-shard attribution ([`crate::obs::ShardAttr`]).  See
+//! `docs/SERVING.md`.
+
+pub mod admission;
+pub mod fleet;
+pub(crate) mod queue;
+pub mod slo;
+
+pub use admission::{Admission, AdmissionConfig, Overload};
+pub use fleet::{Fleet, FleetError, FleetModelConfig};
+pub use slo::{plan_predictor, BatchSecsPredictor, BatchSizer, SloConfig};

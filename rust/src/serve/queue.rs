@@ -1,0 +1,200 @@
+//! Per-shard work queues for the fleet: a mutex-guarded FIFO whose
+//! depth is mirrored in an atomic, so the submit path (shed checks,
+//! shard choice) and the steal path (victim selection) can probe load
+//! without taking any queue lock.
+//!
+//! Unlike `coordinator::Batcher`, each queued request carries its own
+//! response sender: stealing moves the *waiter* together with the
+//! work, so a request answered by a sibling shard still reaches its
+//! client.  Batch formation reuses the coordinator's single
+//! bucket-selection rule (`coordinator::batcher::bucket_for`), so the
+//! fleet pads exactly like the single-model server.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::bucket_for;
+use crate::coordinator::server::Response;
+
+/// One queued fleet request: input plus its response channel (the
+/// waiter travels with the work across steals).
+pub(crate) struct FleetReq {
+    pub id: u64,
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+    pub tx: Sender<Response>,
+}
+
+/// A formed batch: requests popped in FIFO order, inputs concatenated
+/// and tail-padded to `padded` rows with copies of the last real row.
+pub(crate) struct Formed {
+    pub reqs: Vec<FleetReq>,
+    pub data: Vec<f32>,
+    pub padded: usize,
+    pub oldest_wait: Duration,
+}
+
+/// A shard's FIFO with a lock-free depth mirror.
+pub(crate) struct ShardQueue {
+    q: Mutex<VecDeque<FleetReq>>,
+    depth: AtomicUsize,
+}
+
+impl ShardQueue {
+    pub fn new() -> ShardQueue {
+        ShardQueue { q: Mutex::new(VecDeque::new()), depth: AtomicUsize::new(0) }
+    }
+
+    /// Queued requests (approximate under concurrency; exact when the
+    /// queue is quiescent).  Never counts in-flight batches.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    pub fn push(&self, req: FleetReq) {
+        let mut q = self.q.lock().unwrap();
+        q.push_back(req);
+        self.depth.store(q.len(), Ordering::Release);
+    }
+
+    /// Pop up to `take` requests from the FRONT (the oldest — stealing
+    /// these preserves latency order rather than scrambling it).
+    pub fn pop_front_n(&self, take: usize) -> Vec<FleetReq> {
+        let mut q = self.q.lock().unwrap();
+        let n = take.min(q.len());
+        let out: Vec<FleetReq> = q.drain(..n).collect();
+        self.depth.store(q.len(), Ordering::Release);
+        out
+    }
+
+    /// Time until the oldest waiter's partial-flush deadline (zero when
+    /// already due; `None` when empty) — mirrors
+    /// `Batcher::time_until_flush`.
+    pub fn time_until_flush(&self, max_wait: Duration, now: Instant) -> Option<Duration> {
+        let q = self.q.lock().unwrap();
+        let front = q.front()?;
+        Some((front.enqueued + max_wait).saturating_duration_since(now))
+    }
+
+    /// Form the next batch under the admissible `buckets` if policy
+    /// allows: a fully-filled bucket forms immediately; stragglers form
+    /// once the oldest has waited `max_wait` (or `force_flush`, used on
+    /// shutdown drain).
+    pub fn try_form(
+        &self,
+        buckets: &[usize],
+        row_elems: usize,
+        max_wait: Duration,
+        now: Instant,
+        force_flush: bool,
+    ) -> Option<Formed> {
+        let mut q = self.q.lock().unwrap();
+        let n = q.len();
+        if n == 0 {
+            return None;
+        }
+        let oldest_wait = now.duration_since(q.front().unwrap().enqueued);
+        let flush = force_flush || oldest_wait >= max_wait;
+        let bucket = bucket_for(buckets, n, flush)?;
+        let take = bucket.min(n);
+        let mut reqs = Vec::with_capacity(take);
+        let mut data = Vec::with_capacity(bucket * row_elems);
+        for _ in 0..take {
+            let r = q.pop_front().unwrap();
+            debug_assert_eq!(r.input.len(), row_elems, "input width mismatch");
+            data.extend_from_slice(&r.input);
+            reqs.push(r);
+        }
+        self.depth.store(q.len(), Ordering::Release);
+        drop(q);
+        // pad the tail with copies of the last real row (same rule as
+        // Batcher::next_batch; padded results are discarded)
+        let last = (take - 1) * row_elems;
+        for _ in take..bucket {
+            let row: Vec<f32> = data[last..last + row_elems].to_vec();
+            data.extend_from_slice(&row);
+        }
+        Some(Formed { reqs, data, padded: bucket, oldest_wait })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, t: Instant) -> (FleetReq, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = channel();
+        (FleetReq { id, input: vec![id as f32; 4], enqueued: t, tx }, rx)
+    }
+
+    #[test]
+    fn depth_mirrors_queue_length() {
+        let q = ShardQueue::new();
+        let t0 = Instant::now();
+        assert_eq!(q.depth(), 0);
+        for i in 0..5 {
+            q.push(req(i, t0).0);
+        }
+        assert_eq!(q.depth(), 5);
+        let stolen = q.pop_front_n(3);
+        assert_eq!(stolen.len(), 3);
+        assert_eq!(stolen[0].id, 0, "steals take the oldest first");
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.pop_front_n(10).len(), 2, "over-ask drains what exists");
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn forms_like_the_coordinator_batcher() {
+        let q = ShardQueue::new();
+        let t0 = Instant::now();
+        let wait = Duration::from_millis(1);
+        for i in 0..3 {
+            q.push(req(i, t0).0);
+        }
+        // 3 stragglers, not yet due: no batch
+        assert!(q.try_form(&[8, 32], 4, wait, t0, false).is_none());
+        assert_eq!(q.time_until_flush(wait, t0), Some(wait));
+        // due: flush into the smallest bucket, tail padded from row 2
+        let later = t0 + Duration::from_millis(2);
+        let f = q.try_form(&[8, 32], 4, wait, later, false).expect("flush");
+        assert_eq!(f.reqs.len(), 3);
+        assert_eq!(f.padded, 8);
+        assert_eq!(f.oldest_wait, Duration::from_millis(2));
+        assert_eq!(f.data.len(), 8 * 4);
+        assert_eq!(&f.data[2 * 4..3 * 4], &f.data[7 * 4..8 * 4]);
+        assert_eq!(q.depth(), 0);
+        assert_eq!(q.time_until_flush(wait, later), None);
+    }
+
+    #[test]
+    fn full_bucket_forms_without_waiting_and_prefers_largest() {
+        let q = ShardQueue::new();
+        let t0 = Instant::now();
+        for i in 0..40 {
+            q.push(req(i, t0).0);
+        }
+        let f = q
+            .try_form(&[8, 32], 4, Duration::from_secs(1), t0, false)
+            .expect("full bucket forms immediately");
+        assert_eq!(f.padded, 32);
+        assert_eq!(f.reqs.len(), 32);
+        assert_eq!(q.depth(), 8);
+    }
+
+    #[test]
+    fn force_flush_drains_stragglers_immediately() {
+        let q = ShardQueue::new();
+        let t0 = Instant::now();
+        q.push(req(0, t0).0);
+        let f = q
+            .try_form(&[8, 32], 4, Duration::from_secs(1), t0, true)
+            .expect("shutdown drain ignores the wait");
+        assert_eq!(f.reqs.len(), 1);
+        assert_eq!(f.padded, 8);
+    }
+}

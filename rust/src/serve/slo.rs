@@ -1,0 +1,241 @@
+//! Latency-SLO-aware batch sizing.
+//!
+//! The fixed-bucket batcher always prefers the largest fully-filled
+//! bucket — throughput-optimal, but under a latency SLO the largest
+//! bucket may be the wrong choice: a request that joins a 128-row
+//! batch pays that batch's full service time.  Given a p99 deadline
+//! `D` and a predictor `t(b)` for the service time of a `b`-row batch,
+//! the admissible buckets are
+//!
+//! ```text
+//!   A = { b in buckets : t(b) <= D }
+//! ```
+//!
+//! and the sizer hands the batch-formation rule `A` instead of the full
+//! bucket list — so the chosen size is still "largest fully-filled
+//! admissible bucket", i.e. *maximal subject to predicted time meeting
+//! the deadline*.  Two degradations keep the fleet serving:
+//!
+//! * no bucket meets the deadline -> serve the smallest bucket anyway
+//!   (an impossible SLO must not halt traffic; misses are counted in
+//!   the SLO hit-rate instead);
+//! * no predictor / predictor abstains -> the full fixed bucket list
+//!   (exactly the pre-SLO behavior).
+//!
+//! The predictor is typically [`plan_predictor`]: `Planner::predict_secs`
+//! under the planner's cost source, so Live/Calibrated profiles feed
+//! batch sizing automatically and Analytic is the fallback.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::engine::Planner;
+use crate::nn::ModelDef;
+
+/// Latency objective for one fleet model.
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// target p99 end-to-end deadline for accepted requests
+    pub p99_deadline: Duration,
+}
+
+/// Predicted service seconds for a batch of the given row count.
+/// `None` means "no data for this bucket" and degrades the sizer to
+/// fixed buckets.
+pub type BatchSecsPredictor = Arc<dyn Fn(usize) -> Option<f64> + Send + Sync>;
+
+/// Predictor backed by a planner: predicted whole-model seconds at
+/// each bucket, inheriting the planner's cost source (Live /
+/// Calibrated / Analytic).
+pub fn plan_predictor(planner: &Planner, model: &ModelDef) -> BatchSecsPredictor {
+    let planner = planner.clone();
+    let model = model.clone();
+    Arc::new(move |batch| Some(planner.predict_secs(&model, batch)))
+}
+
+/// The per-shard batch-sizing decision, computed once at worker start
+/// (buckets and cost profiles are fixed per model instance).
+#[derive(Clone, Debug)]
+pub struct BatchSizer {
+    admissible: Vec<usize>,
+    restricted: bool,
+}
+
+impl BatchSizer {
+    /// No SLO: the full fixed bucket list.
+    pub fn fixed(buckets: Vec<usize>) -> BatchSizer {
+        assert!(!buckets.is_empty(), "need at least one bucket");
+        BatchSizer { admissible: buckets, restricted: false }
+    }
+
+    /// SLO-restricted sizing over `buckets` (ascending).  `predicted`
+    /// holds the per-bucket service-time predictions, parallel to
+    /// `buckets`; any `None` degrades to the fixed list.
+    pub fn with_slo(
+        buckets: Vec<usize>,
+        predicted: &[Option<f64>],
+        deadline: Duration,
+    ) -> BatchSizer {
+        assert_eq!(buckets.len(), predicted.len());
+        let Some(preds) = predicted.iter().copied().collect::<Option<Vec<f64>>>()
+        else {
+            // no cost profile for some bucket: fixed-bucket behavior
+            return BatchSizer::fixed(buckets);
+        };
+        let d = deadline.as_secs_f64();
+        let admissible: Vec<usize> = buckets
+            .iter()
+            .zip(&preds)
+            .filter(|(_, &t)| t <= d)
+            .map(|(&b, _)| b)
+            .collect();
+        if admissible.is_empty() {
+            // impossible deadline: keep serving at the smallest bucket
+            return BatchSizer { admissible: vec![buckets[0]], restricted: true };
+        }
+        let restricted = admissible.len() != buckets.len();
+        BatchSizer { admissible, restricted }
+    }
+
+    /// Build the sizer a fleet worker uses: SLO + predictor when both
+    /// are configured, fixed buckets otherwise.
+    pub fn for_model(
+        buckets: Vec<usize>,
+        slo: Option<SloConfig>,
+        predictor: Option<&BatchSecsPredictor>,
+    ) -> BatchSizer {
+        match (slo, predictor) {
+            (Some(slo), Some(pred)) => {
+                let preds: Vec<Option<f64>> =
+                    buckets.iter().map(|&b| pred(b)).collect();
+                BatchSizer::with_slo(buckets, &preds, slo.p99_deadline)
+            }
+            _ => BatchSizer::fixed(buckets),
+        }
+    }
+
+    /// The bucket list batch formation may use (ascending, non-empty).
+    pub fn buckets(&self) -> &[usize] {
+        &self.admissible
+    }
+
+    /// Largest admissible bucket (steal size cap).
+    pub fn max_bucket(&self) -> usize {
+        *self.admissible.last().unwrap()
+    }
+
+    /// Smallest admissible bucket (minimum worthwhile steal).
+    pub fn min_bucket(&self) -> usize {
+        self.admissible[0]
+    }
+
+    /// Whether the SLO actually cut buckets off the fixed list.
+    pub fn restricted(&self) -> bool {
+        self.restricted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_cases;
+
+    const BUCKETS: [usize; 3] = [8, 32, 128];
+
+    /// synthetic monotone cost: 1ms per 8 rows
+    fn pred(b: usize) -> Option<f64> {
+        Some(b as f64 / 8.0 * 1e-3)
+    }
+
+    #[test]
+    fn deadline_cuts_the_largest_buckets() {
+        let preds: Vec<_> = BUCKETS.iter().map(|&b| pred(b)).collect();
+        // 5ms deadline: t(8)=1ms, t(32)=4ms admissible; t(128)=16ms not
+        let s = BatchSizer::with_slo(
+            BUCKETS.to_vec(),
+            &preds,
+            Duration::from_millis(5),
+        );
+        assert_eq!(s.buckets(), &[8, 32]);
+        assert!(s.restricted());
+        assert_eq!(s.max_bucket(), 32);
+    }
+
+    #[test]
+    fn generous_deadline_keeps_all_buckets() {
+        let preds: Vec<_> = BUCKETS.iter().map(|&b| pred(b)).collect();
+        let s = BatchSizer::with_slo(
+            BUCKETS.to_vec(),
+            &preds,
+            Duration::from_secs(1),
+        );
+        assert_eq!(s.buckets(), &BUCKETS);
+        assert!(!s.restricted(), "nothing was cut");
+    }
+
+    #[test]
+    fn impossible_deadline_degrades_to_smallest_bucket() {
+        let preds: Vec<_> = BUCKETS.iter().map(|&b| pred(b)).collect();
+        let s = BatchSizer::with_slo(
+            BUCKETS.to_vec(),
+            &preds,
+            Duration::from_micros(10),
+        );
+        assert_eq!(s.buckets(), &[8], "still serves, counts misses");
+        assert!(s.restricted());
+    }
+
+    #[test]
+    fn missing_predictions_degrade_to_fixed_buckets() {
+        let preds = vec![Some(1e-3), None, Some(16e-3)];
+        let s = BatchSizer::with_slo(
+            BUCKETS.to_vec(),
+            &preds,
+            Duration::from_millis(5),
+        );
+        assert_eq!(s.buckets(), &BUCKETS);
+        assert!(!s.restricted());
+        // ...and so does an absent predictor entirely
+        let s = BatchSizer::for_model(BUCKETS.to_vec(), Some(SloConfig {
+            p99_deadline: Duration::from_millis(5),
+        }), None);
+        assert_eq!(s.buckets(), &BUCKETS);
+    }
+
+    #[test]
+    fn chosen_size_is_maximal_subject_to_deadline_property() {
+        // grid of random deadlines over a random monotone cost curve:
+        // the sizer's max bucket must be the largest bucket whose
+        // predicted time fits, whenever any bucket fits at all
+        run_cases(1789, 200, |rng| {
+            let base = 1e-4 * (1.0 + rng.gen_range(50) as f64 / 10.0);
+            let costs: Vec<f64> =
+                BUCKETS.iter().map(|&b| base * b as f64).collect();
+            let preds: Vec<Option<f64>> = costs.iter().map(|&c| Some(c)).collect();
+            let deadline_s = 1e-4 * (1 + rng.gen_range(20_000)) as f64;
+            let s = BatchSizer::with_slo(
+                BUCKETS.to_vec(),
+                &preds,
+                Duration::from_secs_f64(deadline_s),
+            );
+            let fits: Vec<usize> = BUCKETS
+                .iter()
+                .zip(&costs)
+                .filter(|(_, &c)| c <= deadline_s)
+                .map(|(&b, _)| b)
+                .collect();
+            match fits.last() {
+                // maximality: exactly the largest bucket that fits
+                Some(&best) => {
+                    assert_eq!(s.max_bucket(), best);
+                    assert_eq!(s.buckets(), &fits[..], "admissible set is the fit set");
+                }
+                // nothing fits: smallest bucket, flagged restricted
+                None => {
+                    assert_eq!(s.buckets(), &[BUCKETS[0]]);
+                    assert!(s.restricted());
+                }
+            }
+        });
+    }
+}

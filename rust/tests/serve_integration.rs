@@ -1,0 +1,331 @@
+//! End-to-end tests for the `serve::Fleet` layer: a million-request
+//! bursty traffic replay over a 2-model/3-shard fleet (zero lost
+//! waiters, bounded memory, sheds under overload, work stealing),
+//! bit-identical outputs against a directly-driven `EngineModel`,
+//! SLO-restricted batch sizing vs the fixed-bucket path, and the typed
+//! error surface.
+//!
+//! Everything runs on host backends (MockModel / Fastpath+SIMD engine
+//! models) — no GPU, no network.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tcbnn::coordinator::server::{BatchModel, MockModel, Response};
+use tcbnn::coordinator::{Metrics, RouteError};
+use tcbnn::engine::{EngineModel, Planner};
+use tcbnn::nn::forward::random_weights;
+use tcbnn::nn::model::mnist_mlp;
+use tcbnn::serve::{
+    AdmissionConfig, Fleet, FleetError, FleetModelConfig, SloConfig,
+};
+use tcbnn::sim::RTX2080TI;
+use tcbnn::util::Rng;
+
+fn mock_factory(
+    delay: Duration,
+) -> impl Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + Clone + 'static
+{
+    move || {
+        Ok(Box::new(MockModel { row_elems: 4, out_elems: 3, delay })
+            as Box<dyn BatchModel>)
+    }
+}
+
+/// The replay: one million open-loop requests in bursts of 8192,
+/// every 8th burst aimed at a deliberately slow, depth-capped model.
+///
+/// Asserts the satellite's full contract:
+/// * accounting closes: accepted + shed == 1_000_000, and the fleet's
+///   own shed counters agree with the errors the callers saw;
+/// * zero lost waiters: every accepted receiver yields a response (a
+///   shed request returns `Err` synchronously and was never enqueued);
+/// * the overloaded model sheds (queue-depth cap under 8192-bursts
+///   that far exceed its ~160k req/s service rate);
+/// * work stealing engaged at least once across the fleet;
+/// * responses are correct (MockModel computes logit0 = sum(input));
+/// * memory stays bounded: latency storage is the same fixed-footprint
+///   histogram as a fresh `Metrics`, regardless of request count;
+/// * p99 of accepted requests is finite and sane.
+#[test]
+fn million_request_replay_sheds_steals_and_loses_no_waiter() {
+    const TOTAL: u64 = 1_000_000;
+    const BURST: u64 = 8192;
+    const PENDING_CAP: usize = 65_536;
+
+    let mut fleet = Fleet::new();
+    fleet.register(
+        "fast",
+        FleetModelConfig {
+            shards: 3,
+            max_wait: Duration::from_millis(1),
+            admission: AdmissionConfig {
+                rate: None,
+                burst: 64.0,
+                max_queue_depth: 1 << 20, // never the shedding model
+            },
+            ..Default::default()
+        },
+        mock_factory(Duration::ZERO),
+    );
+    fleet.register(
+        "slow",
+        FleetModelConfig {
+            shards: 3,
+            max_wait: Duration::from_millis(1),
+            admission: AdmissionConfig {
+                rate: None,
+                burst: 64.0,
+                max_queue_depth: 4096,
+            },
+            ..Default::default()
+        },
+        mock_factory(Duration::from_micros(200)),
+    );
+
+    let mut pending: VecDeque<(f32, Receiver<Response>)> = VecDeque::new();
+    let mut accepted = 0u64;
+    let mut shed_seen = 0u64;
+    let mut answered = 0u64;
+    let mut drain = |pending: &mut VecDeque<(f32, Receiver<Response>)>,
+                     upto: usize,
+                     answered: &mut u64| {
+        while pending.len() > upto {
+            let (want, rx) = pending.pop_front().unwrap();
+            let r = rx
+                .recv_timeout(Duration::from_secs(60))
+                .expect("accepted request must be answered (no lost waiter)");
+            assert_eq!(r.logits[0], want, "request answered with its own result");
+            *answered += 1;
+        }
+    };
+
+    for i in 0..TOTAL {
+        // bursty open loop: blocks of 8192, every 8th block goes to the
+        // slow model (4x+ beyond its service rate -> guaranteed sheds)
+        let model = if (i / BURST) % 8 == 7 { "slow" } else { "fast" };
+        let tag = (i % 997) as f32;
+        // MockModel: logits[0] = sum(input) = tag + 3
+        match fleet.submit(model, vec![tag, 1.0, 1.0, 1.0]) {
+            Ok(rx) => {
+                accepted += 1;
+                pending.push_back((tag + 3.0, rx));
+            }
+            Err(FleetError::Overloaded(_)) => shed_seen += 1,
+            Err(e) => panic!("only overload may reject here, got {e}"),
+        }
+        // bound client-side memory without closing the loop per request
+        if pending.len() > PENDING_CAP {
+            drain(&mut pending, PENDING_CAP / 2, &mut answered);
+        }
+    }
+    drain(&mut pending, 0, &mut answered);
+
+    // accounting closes exactly
+    assert_eq!(accepted + shed_seen, TOTAL);
+    assert_eq!(answered, accepted, "every accepted waiter was answered");
+    let fleet_sheds =
+        fleet.sheds("fast").unwrap() + fleet.sheds("slow").unwrap();
+    assert_eq!(fleet_sheds, shed_seen, "fleet counters match caller errors");
+    assert!(
+        fleet.sheds("slow").unwrap() > 0,
+        "depth-capped model must shed under 8192-bursts"
+    );
+    assert_eq!(fleet.sheds("fast").unwrap(), 0, "uncapped model never sheds");
+
+    // the fleet completed exactly the accepted requests
+    let fast = fleet.metrics("fast").unwrap();
+    let slow = fleet.metrics("slow").unwrap();
+    assert_eq!(fast.completed() + slow.completed(), accepted);
+
+    // work stealing engaged somewhere across 1M bursty requests
+    let steals = fleet.steals("fast").unwrap() + fleet.steals("slow").unwrap();
+    assert!(steals >= 1, "expected at least one steal, got {steals}");
+
+    // bounded memory: latency storage is a fixed-footprint histogram —
+    // identical to a Metrics that served nothing
+    let fresh = Metrics::new().hist_footprint_bytes();
+    assert_eq!(fast.hist_footprint_bytes(), fresh);
+    assert_eq!(slow.hist_footprint_bytes(), fresh);
+
+    // p99 of accepted requests is finite and sane
+    for m in [&fast, &slow] {
+        let s = m.latency_summary();
+        assert!(s.p99.is_finite() && s.p99 > 0.0, "p99 {}", s.p99);
+        assert!(s.p99 < 60.0, "p99 {} runaway", s.p99);
+    }
+
+    // per-shard attribution: 3 shards each, every counter consistent
+    for name in ["fast", "slow"] {
+        let snap = fleet.snapshot(name).unwrap();
+        assert_eq!(snap.shards.len(), 3);
+        let shard_reqs: u64 = snap.shards.iter().map(|s| s.requests).sum();
+        assert_eq!(shard_reqs, snap.requests, "{name}: shard attribution sums");
+        assert_eq!(
+            snap.steals,
+            snap.shards.iter().map(|s| s.steals).sum::<u64>()
+        );
+    }
+    fleet.shutdown();
+}
+
+/// A 2-shard fleet over the real engine (mnist_mlp on host backends)
+/// answers every request with logits bit-identical to a single
+/// `EngineModel` driven directly — sharding, stealing, and batch
+/// regrouping must not change a single bit.
+#[test]
+fn fleet_outputs_bit_identical_to_direct_engine_model() {
+    const N: usize = 96;
+    let model = mnist_mlp();
+    let weights = random_weights(&model, &mut Rng::new(42));
+    let planner = Planner::new(&RTX2080TI);
+    let row = model.input.flat();
+
+    let mut rng = Rng::new(7);
+    let inputs: Vec<Vec<f32>> =
+        (0..N).map(|_| (0..row).map(|_| rng.next_f32() - 0.5).collect()).collect();
+
+    // reference: one engine model, fixed batch-8 chunks
+    let mut reference = EngineModel::builder(&planner, &model, &weights)
+        .buckets(vec![8, 32])
+        .build()
+        .expect("reference engine model");
+    let out_elems = reference.out_elems();
+    let mut want: Vec<Vec<f32>> = Vec::with_capacity(N);
+    for chunk in inputs.chunks(8) {
+        let data: Vec<f32> = chunk.concat();
+        let out = reference.run_batch(&data, chunk.len()).unwrap();
+        for r in 0..chunk.len() {
+            want.push(out[r * out_elems..(r + 1) * out_elems].to_vec());
+        }
+    }
+
+    // fleet: 2 shards built from one factory (shared planner costs)
+    let mut fleet = Fleet::new();
+    let factory = {
+        let (planner, model, weights) =
+            (planner.clone(), model.clone(), weights.clone());
+        move || {
+            let em = EngineModel::builder(&planner, &model, &weights)
+                .buckets(vec![8, 32])
+                .build()?;
+            Ok(Box::new(em) as Box<dyn BatchModel>)
+        }
+    };
+    fleet.register(
+        "mnist",
+        FleetModelConfig { shards: 2, ..Default::default() },
+        factory,
+    );
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|x| fleet.submit("mnist", x.clone()).expect("admitted"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("answered");
+        assert_eq!(r.id, i as u64, "fleet ids follow submission order");
+        assert_eq!(
+            r.logits, want[i],
+            "request {i}: fleet logits must be bit-identical to direct"
+        );
+    }
+    fleet.shutdown();
+}
+
+/// SLO-aware sizing: with a 10ms deadline and a predictor that prices
+/// a 32-row batch at 32ms, the fleet must never form a 32-row batch —
+/// while the fixed-bucket model under the same load happily does.
+/// (The sizer's maximality property itself is covered by the unit
+/// property test in `serve::slo`.)
+#[test]
+fn slo_sizing_restricts_buckets_and_fixed_path_does_not() {
+    const N: usize = 300;
+    let mut fleet = Fleet::new();
+    // synthetic monotone cost curve: 1ms per row -> t(8)=8ms <= 10ms,
+    // t(32)=32ms > 10ms, so only the 8-bucket is admissible
+    fleet.register(
+        "slo",
+        FleetModelConfig {
+            shards: 2,
+            slo: Some(SloConfig { p99_deadline: Duration::from_millis(10) }),
+            predictor: Some(Arc::new(|b| Some(b as f64 * 1e-3))),
+            ..Default::default()
+        },
+        mock_factory(Duration::ZERO),
+    );
+    // same buckets, no SLO, slow enough that queues reach 32
+    fleet.register(
+        "fixed",
+        FleetModelConfig { shards: 2, ..Default::default() },
+        mock_factory(Duration::from_millis(1)),
+    );
+
+    let rxs: Vec<_> = (0..N)
+        .flat_map(|i| {
+            ["slo", "fixed"].map(|m| {
+                fleet.submit(m, vec![i as f32; 4]).expect("admitted")
+            })
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("answered");
+    }
+
+    assert_eq!(fleet.slo_restricted("slo"), Some(true));
+    assert_eq!(fleet.slo_restricted("fixed"), Some(false));
+    let slo_snap = fleet.snapshot("slo").unwrap();
+    let fixed_snap = fleet.snapshot("fixed").unwrap();
+    assert_eq!(
+        slo_snap.max_batch_rows, 8,
+        "SLO model must never exceed the admissible 8-bucket"
+    );
+    assert_eq!(
+        fixed_snap.max_batch_rows, 32,
+        "fixed model forms full 32-buckets under the same load"
+    );
+    // every accepted request was judged against the deadline
+    assert_eq!(slo_snap.slo_hits + slo_snap.slo_misses, N as u64);
+    // no SLO configured -> no judgments, hit-rate degrades to 1.0
+    assert_eq!(fixed_snap.slo_hits + fixed_snap.slo_misses, 0);
+    assert_eq!(fixed_snap.slo_hit_rate(), 1.0);
+    fleet.shutdown();
+}
+
+/// The typed error surface: unknown model and shutdown reuse the
+/// coordinator's `RouteError`, overload is its own variant, and all of
+/// it converts into `anyhow::Result` via `?`.
+#[test]
+fn typed_errors_for_unknown_model_and_shutdown() {
+    let mut fleet = Fleet::new();
+    fleet.register(
+        "real",
+        FleetModelConfig { shards: 1, ..Default::default() },
+        mock_factory(Duration::ZERO),
+    );
+    match fleet.submit("nope", vec![0.0; 4]) {
+        Err(FleetError::Route(RouteError::UnknownModel { requested, registered })) => {
+            assert_eq!(requested, "nope");
+            assert_eq!(registered, vec!["real".to_string()]);
+        }
+        other => panic!("expected UnknownModel, got {:?}", other.map(|_| ())),
+    }
+
+    // anyhow interop: the typed error flows through `?`
+    fn try_submit_anyhow(fleet: &Fleet, model: &str) -> anyhow::Result<()> {
+        let _rx = fleet.submit(model, vec![0.0; 4])?;
+        Ok(())
+    }
+    let err = try_submit_anyhow(&fleet, "nope").unwrap_err();
+    assert!(err.to_string().contains("unknown model"), "{err}");
+
+    fleet.begin_shutdown();
+    match fleet.submit("real", vec![0.0; 4]) {
+        Err(FleetError::Route(RouteError::Shutdown { model })) => {
+            assert_eq!(model, "real");
+        }
+        other => panic!("expected Shutdown, got {:?}", other.map(|_| ())),
+    }
+    fleet.shutdown();
+}
