@@ -25,16 +25,31 @@
 //! request was answered, no routing error occurred, and — with
 //! `--obs-dump STEM` — each model's `STEM-<model>.json`/`.prom`
 //! snapshot round-trips.  See docs/SERVING.md.
+//!
+//! Fleet-mode observability flags (see docs/OBSERVABILITY.md):
+//!
+//! * `--listen ADDR` (e.g. `127.0.0.1:0`) starts the live scrape
+//!   server (`/metrics`, `/snapshot.json`, `/healthz`) and the shard
+//!   health watchdog, then self-scrapes both endpoints and fails
+//!   unless `/metrics` shows a live windowed request rate and
+//!   `/healthz` reports every shard up;
+//! * `--addr-file PATH` writes the bound address (useful with port 0);
+//! * `--trace-log PATH` + `--trace-sample N` write the sampled JSONL
+//!   request-trace log (1-in-N, default 16);
+//! * `--hold-ms N` keeps serving light traffic for N ms before
+//!   shutdown so an external scraper (the CI curl) sees live windows.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
 use tcbnn::engine::{EngineModel, PlanCache, PlanPolicy, Planner};
 use tcbnn::nn::forward::random_weights;
 use tcbnn::nn::model::mnist_mlp;
+use tcbnn::obs::{http_get, ScrapeServer, ScrapeSource, TraceWriter};
 use tcbnn::serve::{
     plan_predictor, AdmissionConfig, Fleet, FleetError, FleetModelConfig,
-    SloConfig,
+    SloConfig, WatchdogConfig,
 };
 use tcbnn::sim::RTX2080TI;
 use tcbnn::util::cli::Args;
@@ -176,6 +191,16 @@ fn run_fleet(args: &Args) -> anyhow::Result<()> {
     let burst = args.get_usize("burst", 256);
     let cache_dir = args.get_or("cache", "plan_cache").to_string();
     let obs_dump = args.get("obs-dump").map(|s| s.to_string());
+    let listen = args.get("listen").map(|s| s.to_string());
+    let addr_file = args.get("addr-file").map(|s| s.to_string());
+    let trace_log = args.get("trace-log").map(|s| s.to_string());
+    let trace_sample = args.get_usize("trace-sample", 16) as u64;
+    let hold_ms = args.get_usize("hold-ms", 0) as u64;
+
+    let trace = match &trace_log {
+        Some(path) => Some(Arc::new(TraceWriter::create(path, trace_sample)?)),
+        None => None,
+    };
 
     let model = mnist_mlp();
     let planner = Planner::new(&RTX2080TI);
@@ -231,6 +256,7 @@ fn run_fleet(args: &Args) -> anyhow::Result<()> {
                 burst: 64.0,
                 max_queue_depth: 8192,
             },
+            trace: trace.clone(),
             ..Default::default()
         },
         factory(1234),
@@ -241,10 +267,33 @@ fn run_fleet(args: &Args) -> anyhow::Result<()> {
             shards: 2,
             slo: Some(SloConfig { p99_deadline: deadline }),
             predictor: Some(plan_predictor(&planner, &model)),
+            trace: trace.clone(),
             ..Default::default()
         },
         factory(4321),
     );
+    let fleet = Arc::new(fleet);
+
+    // live observability plane: health watchdog + HTTP scrape server
+    let scrape = match &listen {
+        Some(addr) => {
+            fleet.start_watchdog(WatchdogConfig::default());
+            let srv = ScrapeServer::start(
+                addr,
+                Arc::clone(&fleet) as Arc<dyn ScrapeSource>,
+            )?;
+            let bound = srv.local_addr();
+            println!(
+                "scrape server on http://{bound} \
+                 (/metrics /snapshot.json /healthz)"
+            );
+            if let Some(path) = &addr_file {
+                std::fs::write(path, bound.to_string())?;
+            }
+            Some(srv)
+        }
+        None => None,
+    };
 
     let mut rng = Rng::new(99);
     let mut input =
@@ -321,6 +370,63 @@ fn run_fleet(args: &Args) -> anyhow::Result<()> {
         slo_snap.max_batch_rows
     );
 
+    // live-scrape contract: with traffic just served, /metrics must
+    // expose a nonzero windowed rate and /healthz must be all-up
+    if let Some(srv) = &scrape {
+        let addr = srv.local_addr();
+        let (code, metrics) = http_get(addr, "/metrics")?;
+        anyhow::ensure!(code == 200, "/metrics returned {code}");
+        anyhow::ensure!(
+            metrics.contains("tcbnn_requests_total{model=\"mnist\"}"),
+            "/metrics lacks the model-labeled cumulative counter"
+        );
+        let rps = prom_sample(
+            &metrics,
+            "tcbnn_window_requests_per_second{model=\"mnist\",window=\"10s\"}",
+        )
+        .ok_or_else(|| anyhow::anyhow!("/metrics lacks the windowed rate"))?;
+        anyhow::ensure!(
+            rps > 0.0,
+            "10s windowed rate is {rps} right after serving traffic"
+        );
+        let (code, health) = http_get(addr, "/healthz")?;
+        anyhow::ensure!(
+            code == 200 && health.contains("\"healthy\":true"),
+            "/healthz not all-up: {code} {health}"
+        );
+        let (code, doc) = http_get(addr, "/snapshot.json")?;
+        anyhow::ensure!(code == 200, "/snapshot.json returned {code}");
+        let v = tcbnn::engine::json::Value::parse(&doc)
+            .map_err(|e| anyhow::anyhow!("parse /snapshot.json: {e}"))?;
+        anyhow::ensure!(
+            v.get("schema").and_then(|s| s.as_usize())
+                == Some(tcbnn::obs::OBS_SCHEMA as usize),
+            "/snapshot.json schema mismatch"
+        );
+        println!(
+            "self-scrape OK: windowed rate {rps:.0} req/s, all shards up"
+        );
+    }
+
+    // hold phase: keep light traffic flowing so an external scraper
+    // (the CI curl loop) observes live windows before shutdown
+    if hold_ms > 0 {
+        println!("holding {hold_ms} ms of light traffic for external scrapes");
+        let until = Instant::now() + Duration::from_millis(hold_ms);
+        let mut held = Vec::new();
+        while Instant::now() < until {
+            fleet_submit(
+                &fleet, "mnist", input(), &mut held, &mut sheds_seen,
+                &mut route_errors,
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        for rx in held {
+            rx.recv_timeout(Duration::from_secs(120))
+                .map_err(|e| anyhow::anyhow!("hold-phase request lost: {e}"))?;
+        }
+    }
+
     // per-model obs artifacts + round-trip check (CI uploads these)
     if let Some(stem) = &obs_dump {
         for name in fleet.model_names() {
@@ -348,9 +454,37 @@ fn run_fleet(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
-    fleet.shutdown();
+    if let Some(tw) = &trace {
+        tw.flush();
+        anyhow::ensure!(
+            tw.written() > 0,
+            "trace log sampled nothing across {} requests",
+            tw.seen()
+        );
+        println!(
+            "trace log: {} requests offered, {} lines written (1-in-{})",
+            tw.seen(),
+            tw.written(),
+            tw.sample_every()
+        );
+    }
+    drop(scrape); // stop accepting before the fleet drains
+    fleet.begin_shutdown();
+    drop(fleet); // last Arc: joins the workers
+    if let Some(tw) = &trace {
+        tw.flush(); // shutdown drain may have written more lines
+    }
     println!("fleet smoke OK");
     Ok(())
+}
+
+/// Find the value of one exposition line by its exact
+/// `name{labels}` prefix.
+fn prom_sample(body: &str, name_and_labels: &str) -> Option<f64> {
+    body.lines().find_map(|l| {
+        let rest = l.strip_prefix(name_and_labels)?;
+        rest.trim().parse().ok()
+    })
 }
 
 /// Submit one request, classifying the outcome: accepted (waiter

@@ -7,6 +7,7 @@ use std::time::Instant;
 use crate::obs::export::{LayerAttr, RepackEdge, Snapshot};
 use crate::obs::hist::LogHistogram;
 use crate::obs::trace::TraceRing;
+use crate::obs::window::{WindowStats, Windows};
 use crate::util::stats::Summary;
 
 /// Batch traces retained for inspection (ring capacity; older traces
@@ -20,6 +21,7 @@ pub struct Metrics {
     inner: Mutex<Inner>,
     hist: LogHistogram,
     traces: TraceRing,
+    windows: Windows,
 }
 
 impl Default for Metrics {
@@ -28,6 +30,7 @@ impl Default for Metrics {
             inner: Mutex::new(Inner::default()),
             hist: LogHistogram::new(),
             traces: TraceRing::new(TRACE_CAPACITY),
+            windows: Windows::new(),
         }
     }
 }
@@ -77,6 +80,7 @@ impl Metrics {
         for &lat in latencies_s {
             self.hist.record(lat);
         }
+        self.windows.record_requests(latencies_s);
         let mut m = self.inner.lock().unwrap();
         if m.started.is_none() {
             m.started = Some(Instant::now());
@@ -198,6 +202,24 @@ impl Metrics {
         &self.traces
     }
 
+    /// Count one admission shed in the rolling windows.  The cumulative
+    /// shed counter is owned by `serve::Fleet` (which grafts it onto
+    /// the snapshot); this feeds the 10s/60s shed-rate families.
+    pub fn record_shed(&self) {
+        self.windows.record_shed();
+    }
+
+    /// Count one SLO verdict (hit/miss) in the rolling windows.  Like
+    /// sheds, the cumulative counters stay on `serve::Fleet`.
+    pub fn record_slo(&self, hit: bool) {
+        self.windows.record_slo(hit);
+    }
+
+    /// Rolling-window stats over the standard report windows (10s/60s).
+    pub fn window_stats(&self) -> Vec<WindowStats> {
+        self.windows.stats_all()
+    }
+
     /// Latency summary from the bounded histogram — same `Summary`
     /// shape the old Vec-backed implementation returned.  n, mean,
     /// min, max are exact; percentiles are bucket-interpolated (~9%).
@@ -286,6 +308,10 @@ impl Metrics {
             slo_hits: 0,
             slo_misses: 0,
             shards: Vec::new(),
+            windows: self.windows.stats_all(),
+            // shard health is produced by `serve::health::Watchdog`,
+            // grafted by `Fleet::snapshot` alongside the fleet counters
+            health: Vec::new(),
         }
     }
 
@@ -374,6 +400,27 @@ mod tests {
         // latest snapshot wins (counters are cumulative on the executor)
         m.set_repacks(vec![("FASTPATH".to_string(), 5, 20480)]);
         assert_eq!(m.repack_stats(), vec![("FASTPATH".to_string(), 5, 20480)]);
+    }
+
+    #[test]
+    fn snapshot_carries_rolling_window_stats() {
+        let m = Metrics::new();
+        m.record_batch(4, 4, &[1e-3; 4]);
+        m.record_shed();
+        m.record_slo(true);
+        m.record_slo(false);
+        let snap = m.snapshot();
+        assert_eq!(snap.windows.len(), 2, "one entry per report window");
+        let w10 = &snap.windows[0];
+        assert_eq!(w10.label(), "10s");
+        assert_eq!(w10.requests, 4);
+        assert_eq!(w10.sheds, 1);
+        assert_eq!((w10.slo_hits, w10.slo_misses), (1, 1));
+        assert!(w10.rps > 0.0, "fresh traffic has a nonzero windowed rate");
+        assert!((w10.p99_s - 1e-3).abs() <= 1e-3 * 0.1, "p99 {}", w10.p99_s);
+        // cumulative fleet counters stay zero here: Fleet grafts them
+        assert_eq!(snap.sheds, 0);
+        assert!(snap.health.is_empty());
     }
 
     #[test]

@@ -38,6 +38,13 @@ pub trait BatchModel {
     fn obs_snapshot(&self) -> Option<Snapshot> {
         None
     }
+    /// Cumulative live-feedback re-plans this model has performed.
+    /// `serve::Fleet` workers watch this counter and re-derive their
+    /// SLO-admissible batch sizes when it moves (a re-plan changes the
+    /// cost model the `BatchSizer` predicted from).  Default: never.
+    fn replans(&self) -> u64 {
+        0
+    }
 }
 
 /// One response.

@@ -469,6 +469,10 @@ impl BatchModel for EngineModel {
     fn obs_snapshot(&self) -> Option<crate::obs::Snapshot> {
         Some(self.metrics.snapshot())
     }
+
+    fn replans(&self) -> u64 {
+        self.metrics.replans()
+    }
 }
 
 #[cfg(test)]

@@ -20,12 +20,20 @@
 //! others.
 
 use crate::engine::json::Value;
+use crate::obs::window::WindowStats;
 use crate::util::stats::Summary;
 
 /// Snapshot JSON schema version (bump on breaking shape changes).
 /// v2 added the fleet-serving fields: `max_batch_rows`, `sheds`,
 /// `steals`, the SLO hit/miss counters, and per-shard attribution.
-pub const OBS_SCHEMA: u64 = 2;
+/// v3 added the live-observability fields: rolling-window stats
+/// (`windows`) and per-shard watchdog health (`health`).
+/// [`Snapshot::from_json`] still accepts v2 documents (the new fields
+/// default to empty).
+pub const OBS_SCHEMA: u64 = 3;
+
+/// Oldest schema [`Snapshot::from_json`] accepts.
+pub const MIN_OBS_SCHEMA: u64 = 2;
 
 /// Cumulative per-layer attribution from the arena executor: how often
 /// the layer ran, measured wall seconds, and the plan's predicted
@@ -77,6 +85,31 @@ pub struct ShardAttr {
     pub steals: u64,
 }
 
+/// Per-shard watchdog health as the snapshot carries it.  The state is
+/// a plain string ("healthy" / "degraded" / "stalled") so `obs` stays
+/// independent of `serve::health`'s richer enum — the watchdog lowers
+/// its classification into this shape when grafting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardHealthAttr {
+    pub shard: usize,
+    /// "healthy" | "degraded" | "stalled"
+    pub state: String,
+    /// classifier's reason, empty when healthy
+    pub reason: String,
+    /// seconds since the shard's worker last completed a batch (or
+    /// touched its heartbeat); 0 when it has not started serving yet
+    pub last_batch_age_s: f64,
+    /// shard queue depth at probe time
+    pub queue_depth: u64,
+}
+
+impl ShardHealthAttr {
+    /// Up = able to make progress (anything but stalled).
+    pub fn is_up(&self) -> bool {
+        self.state != "stalled"
+    }
+}
+
 /// Everything the serving stack reports, in one structure.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Snapshot {
@@ -116,6 +149,11 @@ pub struct Snapshot {
     pub slo_misses: u64,
     /// per-shard attribution (empty outside fleet serving)
     pub shards: Vec<ShardAttr>,
+    /// rolling-window stats (10s/60s by default; empty before v3 and
+    /// in contexts with no windowed recording)
+    pub windows: Vec<WindowStats>,
+    /// per-shard watchdog health (empty when no watchdog runs)
+    pub health: Vec<ShardHealthAttr>,
 }
 
 impl Snapshot {
@@ -140,6 +178,11 @@ impl Snapshot {
             ("latency_p90_seconds", self.latency.p90),
             ("latency_p99_seconds", self.latency.p99),
             ("latency_mean_seconds", self.latency.mean),
+            // min/max render 0 for a zero-request snapshot (the
+            // histogram maps its empty-state sentinel to 0, never
+            // exposing it) — regression-locked in obs::hist tests
+            ("latency_min_seconds", self.latency.min),
+            ("latency_max_seconds", self.latency.max),
             ("engine_rows_total", self.engine_rows as f64),
             ("engine_busy_seconds_total", self.engine_busy_s),
             ("engine_images_per_second", self.engine_img_s()),
@@ -224,6 +267,20 @@ impl Snapshot {
         }
         if self.slo_hits + self.slo_misses > 0 {
             out.push_str(&format!(" slo_hit={:.1}%", self.slo_hit_rate() * 100.0));
+        }
+        // the shortest rolling window is the "what is it doing NOW" view
+        if let Some(w) = self.windows.first() {
+            out.push_str(&format!(
+                " rps[{}]={:.0} p99[{}]={:.3}ms",
+                w.label(),
+                w.rps,
+                w.label(),
+                w.p99_s * 1e3
+            ));
+        }
+        let stalled = self.health.iter().filter(|h| !h.is_up()).count();
+        if stalled > 0 {
+            out.push_str(&format!(" stalled_shards={stalled}"));
         }
         // the worst live drift (ratio furthest from 1x in either
         // direction) is the one worth a glance
@@ -405,14 +462,64 @@ impl Snapshot {
                         .collect(),
                 ),
             ),
+            (
+                "windows".to_string(),
+                Value::Arr(
+                    self.windows
+                        .iter()
+                        .map(|w| {
+                            Value::Obj(vec![
+                                ("window_s".to_string(), num(w.window_s)),
+                                ("requests".to_string(), num(w.requests as f64)),
+                                ("sheds".to_string(), num(w.sheds as f64)),
+                                ("slo_hits".to_string(), num(w.slo_hits as f64)),
+                                (
+                                    "slo_misses".to_string(),
+                                    num(w.slo_misses as f64),
+                                ),
+                                ("rps".to_string(), num(w.rps)),
+                                ("shed_rps".to_string(), num(w.shed_rps)),
+                                ("p50_s".to_string(), num(w.p50_s)),
+                                ("p99_s".to_string(), num(w.p99_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "health".to_string(),
+                Value::Arr(
+                    self.health
+                        .iter()
+                        .map(|h| {
+                            Value::Obj(vec![
+                                ("shard".to_string(), num(h.shard as f64)),
+                                ("state".to_string(), st(&h.state)),
+                                ("reason".to_string(), st(&h.reason)),
+                                (
+                                    "last_batch_age_s".to_string(),
+                                    num(h.last_batch_age_s),
+                                ),
+                                (
+                                    "queue_depth".to_string(),
+                                    num(h.queue_depth as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 
     /// Parse a snapshot previously emitted by [`Snapshot::to_json`].
     pub fn from_json(v: &Value) -> Result<Snapshot, String> {
         let schema = req_u64(v, "schema")?;
-        if schema != OBS_SCHEMA {
-            return Err(format!("obs snapshot schema {schema}, want {OBS_SCHEMA}"));
+        if !(MIN_OBS_SCHEMA..=OBS_SCHEMA).contains(&schema) {
+            return Err(format!(
+                "obs snapshot schema {schema}, want \
+                 {MIN_OBS_SCHEMA}..={OBS_SCHEMA}"
+            ));
         }
         let lat = v.get("latency").ok_or("missing latency")?;
         let latency = Summary::from_quantiles(
@@ -508,88 +615,438 @@ impl Snapshot {
                     })
                 })
                 .collect::<Result<_, String>>()?,
+            // v3 fields: absent in v2 documents -> empty
+            windows: arr_opt(v, "windows")?
+                .iter()
+                .map(|w| {
+                    Ok(WindowStats {
+                        window_s: req_f64(w, "window_s")?,
+                        requests: req_u64(w, "requests")?,
+                        sheds: req_u64(w, "sheds")?,
+                        slo_hits: req_u64(w, "slo_hits")?,
+                        slo_misses: req_u64(w, "slo_misses")?,
+                        rps: req_f64(w, "rps")?,
+                        shed_rps: req_f64(w, "shed_rps")?,
+                        p50_s: req_f64(w, "p50_s")?,
+                        p99_s: req_f64(w, "p99_s")?,
+                    })
+                })
+                .collect::<Result<_, String>>()?,
+            health: arr_opt(v, "health")?
+                .iter()
+                .map(|h| {
+                    Ok(ShardHealthAttr {
+                        shard: req_u64(h, "shard")? as usize,
+                        state: req_str(h, "state")?,
+                        reason: req_str(h, "reason")?,
+                        last_batch_age_s: req_f64(h, "last_batch_age_s")?,
+                        queue_depth: req_u64(h, "queue_depth")?,
+                    })
+                })
+                .collect::<Result<_, String>>()?,
         })
     }
 
-    /// Prometheus text exposition.  Scalar families come straight from
-    /// [`Snapshot::scalars`]; the labeled families (per scheme, per
-    /// layer, per repack edge) and the latency histogram follow.
+    /// Prometheus text exposition for this one snapshot (no `model`
+    /// label).  Multi-model endpoints render through
+    /// [`render_prometheus_fleet`], which prepends `model="..."` to
+    /// every sample while keeping each family's samples contiguous —
+    /// the exposition format forbids repeating a family block.
     pub fn to_prometheus(&self) -> String {
-        let mut out = String::new();
-        for (name, value) in self.scalars() {
-            let kind =
-                if name.ends_with("_total") { "counter" } else { "gauge" };
-            out.push_str(&format!("# TYPE tcbnn_{name} {kind}\n"));
-            out.push_str(&format!("tcbnn_{name} {value}\n"));
+        render_prometheus(&[(None, self)])
+    }
+}
+
+/// Render several named snapshots (one per served model) into one
+/// Prometheus exposition — what a fleet's `/metrics` endpoint serves.
+/// Every sample carries a `model` label; `# HELP`/`# TYPE` headers
+/// appear once per family.
+pub fn render_prometheus_fleet(models: &[(String, Snapshot)]) -> String {
+    let refs: Vec<(Option<&str>, &Snapshot)> =
+        models.iter().map(|(n, s)| (Some(n.as_str()), s)).collect();
+    render_prometheus(&refs)
+}
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote, and newline.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
         }
-        // request-latency histogram: cumulative counts over the
-        // non-empty buckets' upper bounds, then the canonical +Inf
-        out.push_str("# TYPE tcbnn_request_latency_seconds histogram\n");
+    }
+    out
+}
+
+/// `{model="...",k="v",...}` — empty string when there are no labels.
+fn label_set(model: Option<&str>, extra: &[(&str, String)]) -> String {
+    let mut pairs: Vec<String> = Vec::new();
+    if let Some(m) = model {
+        pairs.push(format!("model=\"{}\"", esc(m)));
+    }
+    for (k, v) in extra {
+        pairs.push(format!("{k}=\"{}\"", esc(v)));
+    }
+    if pairs.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", pairs.join(","))
+    }
+}
+
+/// One-line help text per family (the `# HELP` line — terse on
+/// purpose; docs/OBSERVABILITY.md is the real documentation).
+fn family_help(name: &str) -> &'static str {
+    match name {
+        "requests_total" => "Requests completed since start",
+        "batches_total" => "Batches executed since start",
+        "throughput_requests_per_second" => "Cumulative request throughput",
+        "padding_fraction" => "Fraction of executed rows that were padding",
+        "latency_p50_seconds" => "Cumulative latency p50",
+        "latency_p90_seconds" => "Cumulative latency p90",
+        "latency_p99_seconds" => "Cumulative latency p99",
+        "latency_mean_seconds" => "Cumulative latency mean",
+        "latency_min_seconds" => "Fastest request (0 when none served)",
+        "latency_max_seconds" => "Slowest request (0 when none served)",
+        "engine_rows_total" => "Rows the engine executed",
+        "engine_busy_seconds_total" => "Engine busy time",
+        "engine_images_per_second" => "Engine throughput over busy time",
+        "plan_cache_hits_total" => "Plan cache hits",
+        "plan_cache_misses_total" => "Plan cache misses",
+        "replans_total" => "Live drift-triggered executor rebuilds",
+        "traces_pushed_total" => "Batch traces pushed into the ring",
+        "traces_dropped_total" => "Batch traces evicted from the ring",
+        "max_batch_rows" => "Largest padded batch executed",
+        "sheds_total" => "Requests rejected by admission control",
+        "steals_total" => "Work-steal operations between shards",
+        "slo_hits_total" => "Requests that met the SLO deadline",
+        "slo_misses_total" => "Requests that missed the SLO deadline",
+        "window_requests" => "Requests completed in the window",
+        "window_requests_per_second" => "Windowed request throughput",
+        "window_sheds" => "Admission sheds in the window",
+        "window_sheds_per_second" => "Windowed shed rate",
+        "window_latency_p50_seconds" => "Windowed latency p50",
+        "window_latency_p99_seconds" => "Windowed latency p99",
+        "window_slo_miss_rate" => "SLO miss fraction over the window",
+        "request_latency_seconds" => "Request latency distribution",
+        "cost_drift_ratio" => "Per-scheme measured/predicted cost ratio",
+        "cost_drift_samples" => "Samples behind the drift ratio",
+        "repack_ops_total" => "Explicit layout repacks per scheme",
+        "repack_bytes_total" => "Bytes repacked per scheme",
+        "repack_edge_ops_total" => "Repacks on one plan edge",
+        "repack_edge_bytes_total" => "Bytes repacked on one plan edge",
+        "repack_edge_seconds_total" => "Seconds spent repacking one edge",
+        "shard_requests_total" => "Requests executed by the shard",
+        "shard_batches_total" => "Batches executed by the shard",
+        "shard_steals_total" => "Steals the shard performed",
+        "layer_calls_total" => "Times the layer ran",
+        "layer_seconds_total" => "Measured seconds in the layer",
+        "layer_predicted_seconds_total" => "Plan-predicted seconds",
+        "layer_drift_ratio" => "Layer measured/predicted ratio",
+        "shard_up" => "1 unless the watchdog classifies the shard stalled",
+        "shard_health_state" => "Watchdog classification (state label)",
+        "shard_last_batch_age_seconds" => "Seconds since the shard's last batch",
+        "shard_queue_depth" => "Shard queue depth at probe time",
+        _ => "tcbnn serving metric",
+    }
+}
+
+/// The family-major renderer behind [`Snapshot::to_prometheus`] and
+/// [`render_prometheus_fleet`].
+fn render_prometheus(models: &[(Option<&str>, &Snapshot)]) -> String {
+    let mut out = String::new();
+    let Some((_, first)) = models.first() else { return out };
+    let header = |out: &mut String, name: &str, kind: &str| {
+        out.push_str(&format!("# HELP tcbnn_{name} {}\n", family_help(name)));
+        out.push_str(&format!("# TYPE tcbnn_{name} {kind}\n"));
+    };
+    // scalar families come straight from `Snapshot::scalars` — the
+    // field-parity test's single enumeration
+    for (i, (name, _)) in first.scalars().iter().enumerate() {
+        let kind = if name.ends_with("_total") { "counter" } else { "gauge" };
+        header(&mut out, name, kind);
+        for (model, snap) in models {
+            let (_, value) = snap.scalars()[i];
+            out.push_str(&format!(
+                "tcbnn_{name}{} {value}\n",
+                label_set(*model, &[])
+            ));
+        }
+    }
+    // rolling windows, one sample per (model, window)
+    type WinGet = fn(&WindowStats) -> f64;
+    let window_fams: [(&str, WinGet); 7] = [
+        ("window_requests", |w| w.requests as f64),
+        ("window_requests_per_second", |w| w.rps),
+        ("window_sheds", |w| w.sheds as f64),
+        ("window_sheds_per_second", |w| w.shed_rps),
+        ("window_latency_p50_seconds", |w| w.p50_s),
+        ("window_latency_p99_seconds", |w| w.p99_s),
+        ("window_slo_miss_rate", |w| w.slo_miss_rate()),
+    ];
+    if models.iter().any(|(_, s)| !s.windows.is_empty()) {
+        for (name, get) in window_fams {
+            header(&mut out, name, "gauge");
+            for (model, snap) in models {
+                for w in &snap.windows {
+                    out.push_str(&format!(
+                        "tcbnn_{name}{} {}\n",
+                        label_set(*model, &[("window", w.label())]),
+                        get(w)
+                    ));
+                }
+            }
+        }
+    }
+    // request-latency histogram: cumulative counts over the non-empty
+    // buckets' upper bounds, then the canonical +Inf
+    header(&mut out, "request_latency_seconds", "histogram");
+    for (model, snap) in models {
         let mut cum = 0u64;
-        for (_, hi, c) in &self.latency_buckets {
+        for (_, hi, c) in &snap.latency_buckets {
             cum += c;
             out.push_str(&format!(
-                "tcbnn_request_latency_seconds_bucket{{le=\"{hi}\"}} {cum}\n"
+                "tcbnn_request_latency_seconds_bucket{} {cum}\n",
+                label_set(*model, &[("le", hi.to_string())])
             ));
         }
         out.push_str(&format!(
-            "tcbnn_request_latency_seconds_bucket{{le=\"+Inf\"}} {}\n",
-            self.latency.n
+            "tcbnn_request_latency_seconds_bucket{} {}\n",
+            label_set(*model, &[("le", "+Inf".to_string())]),
+            snap.latency.n
         ));
         out.push_str(&format!(
-            "tcbnn_request_latency_seconds_sum {}\n",
-            self.latency.mean * self.latency.n as f64
+            "tcbnn_request_latency_seconds_sum{} {}\n",
+            label_set(*model, &[]),
+            snap.latency.mean * snap.latency.n as f64
         ));
         out.push_str(&format!(
-            "tcbnn_request_latency_seconds_count {}\n",
-            self.latency.n
+            "tcbnn_request_latency_seconds_count{} {}\n",
+            label_set(*model, &[]),
+            snap.latency.n
         ));
-        for (scheme, ratio, samples) in &self.cost_drift {
-            out.push_str(&format!(
-                "tcbnn_cost_drift_ratio{{scheme=\"{scheme}\"}} {ratio}\n"
-            ));
-            out.push_str(&format!(
-                "tcbnn_cost_drift_samples{{scheme=\"{scheme}\"}} {samples}\n"
-            ));
-        }
-        for (scheme, ops, bytes) in &self.repacks_by_scheme {
-            out.push_str(&format!(
-                "tcbnn_repack_ops_total{{scheme=\"{scheme}\"}} {ops}\n"
-            ));
-            out.push_str(&format!(
-                "tcbnn_repack_bytes_total{{scheme=\"{scheme}\"}} {bytes}\n"
-            ));
-        }
-        for e in &self.repack_edges {
-            let lbl = format!(
-                "{{layer=\"{}\",src=\"{}\",dst=\"{}\"}}",
-                e.layer, e.src, e.dst
-            );
-            out.push_str(&format!("tcbnn_repack_edge_ops_total{lbl} {}\n", e.ops));
-            out.push_str(&format!("tcbnn_repack_edge_bytes_total{lbl} {}\n", e.bytes));
-            out.push_str(&format!("tcbnn_repack_edge_seconds_total{lbl} {}\n", e.secs));
-        }
-        for s in &self.shards {
-            let lbl = format!("{{shard=\"{}\"}}", s.shard);
-            out.push_str(&format!("tcbnn_shard_requests_total{lbl} {}\n", s.requests));
-            out.push_str(&format!("tcbnn_shard_batches_total{lbl} {}\n", s.batches));
-            out.push_str(&format!("tcbnn_shard_steals_total{lbl} {}\n", s.steals));
-        }
-        for l in &self.layers {
-            let lbl = format!(
-                "{{layer=\"{}\",tag=\"{}\",scheme=\"{}\"}}",
-                l.index, l.tag, l.scheme
-            );
-            out.push_str(&format!("tcbnn_layer_calls_total{lbl} {}\n", l.calls));
-            out.push_str(&format!("tcbnn_layer_seconds_total{lbl} {}\n", l.secs));
-            out.push_str(&format!(
-                "tcbnn_layer_predicted_seconds_total{lbl} {}\n",
-                l.predicted_s
-            ));
-            out.push_str(&format!("tcbnn_layer_drift_ratio{lbl} {}\n", l.drift()));
-        }
-        out
     }
+    // labeled attribution families — headers only when some model has
+    // samples (an empty family block is legal but noise)
+    if models.iter().any(|(_, s)| !s.cost_drift.is_empty()) {
+        header(&mut out, "cost_drift_ratio", "gauge");
+        for (model, snap) in models {
+            for (scheme, ratio, _) in &snap.cost_drift {
+                out.push_str(&format!(
+                    "tcbnn_cost_drift_ratio{} {ratio}\n",
+                    label_set(*model, &[("scheme", scheme.clone())])
+                ));
+            }
+        }
+        header(&mut out, "cost_drift_samples", "gauge");
+        for (model, snap) in models {
+            for (scheme, _, samples) in &snap.cost_drift {
+                out.push_str(&format!(
+                    "tcbnn_cost_drift_samples{} {samples}\n",
+                    label_set(*model, &[("scheme", scheme.clone())])
+                ));
+            }
+        }
+    }
+    if models.iter().any(|(_, s)| !s.repacks_by_scheme.is_empty()) {
+        header(&mut out, "repack_ops_total", "counter");
+        for (model, snap) in models {
+            for (scheme, ops, _) in &snap.repacks_by_scheme {
+                out.push_str(&format!(
+                    "tcbnn_repack_ops_total{} {ops}\n",
+                    label_set(*model, &[("scheme", scheme.clone())])
+                ));
+            }
+        }
+        header(&mut out, "repack_bytes_total", "counter");
+        for (model, snap) in models {
+            for (scheme, _, bytes) in &snap.repacks_by_scheme {
+                out.push_str(&format!(
+                    "tcbnn_repack_bytes_total{} {bytes}\n",
+                    label_set(*model, &[("scheme", scheme.clone())])
+                ));
+            }
+        }
+    }
+    if models.iter().any(|(_, s)| !s.repack_edges.is_empty()) {
+        let edge_labels = |e: &RepackEdge, model: Option<&str>| {
+            label_set(
+                model,
+                &[
+                    ("layer", e.layer.to_string()),
+                    ("src", e.src.clone()),
+                    ("dst", e.dst.clone()),
+                ],
+            )
+        };
+        header(&mut out, "repack_edge_ops_total", "counter");
+        for (model, snap) in models {
+            for e in &snap.repack_edges {
+                out.push_str(&format!(
+                    "tcbnn_repack_edge_ops_total{} {}\n",
+                    edge_labels(e, *model),
+                    e.ops
+                ));
+            }
+        }
+        header(&mut out, "repack_edge_bytes_total", "counter");
+        for (model, snap) in models {
+            for e in &snap.repack_edges {
+                out.push_str(&format!(
+                    "tcbnn_repack_edge_bytes_total{} {}\n",
+                    edge_labels(e, *model),
+                    e.bytes
+                ));
+            }
+        }
+        header(&mut out, "repack_edge_seconds_total", "counter");
+        for (model, snap) in models {
+            for e in &snap.repack_edges {
+                out.push_str(&format!(
+                    "tcbnn_repack_edge_seconds_total{} {}\n",
+                    edge_labels(e, *model),
+                    e.secs
+                ));
+            }
+        }
+    }
+    if models.iter().any(|(_, s)| !s.shards.is_empty()) {
+        header(&mut out, "shard_requests_total", "counter");
+        for (model, snap) in models {
+            for s in &snap.shards {
+                out.push_str(&format!(
+                    "tcbnn_shard_requests_total{} {}\n",
+                    label_set(*model, &[("shard", s.shard.to_string())]),
+                    s.requests
+                ));
+            }
+        }
+        header(&mut out, "shard_batches_total", "counter");
+        for (model, snap) in models {
+            for s in &snap.shards {
+                out.push_str(&format!(
+                    "tcbnn_shard_batches_total{} {}\n",
+                    label_set(*model, &[("shard", s.shard.to_string())]),
+                    s.batches
+                ));
+            }
+        }
+        header(&mut out, "shard_steals_total", "counter");
+        for (model, snap) in models {
+            for s in &snap.shards {
+                out.push_str(&format!(
+                    "tcbnn_shard_steals_total{} {}\n",
+                    label_set(*model, &[("shard", s.shard.to_string())]),
+                    s.steals
+                ));
+            }
+        }
+    }
+    if models.iter().any(|(_, s)| !s.layers.is_empty()) {
+        let layer_labels = |l: &LayerAttr, model: Option<&str>| {
+            label_set(
+                model,
+                &[
+                    ("layer", l.index.to_string()),
+                    ("tag", l.tag.clone()),
+                    ("scheme", l.scheme.clone()),
+                ],
+            )
+        };
+        header(&mut out, "layer_calls_total", "counter");
+        for (model, snap) in models {
+            for l in &snap.layers {
+                out.push_str(&format!(
+                    "tcbnn_layer_calls_total{} {}\n",
+                    layer_labels(l, *model),
+                    l.calls
+                ));
+            }
+        }
+        header(&mut out, "layer_seconds_total", "counter");
+        for (model, snap) in models {
+            for l in &snap.layers {
+                out.push_str(&format!(
+                    "tcbnn_layer_seconds_total{} {}\n",
+                    layer_labels(l, *model),
+                    l.secs
+                ));
+            }
+        }
+        header(&mut out, "layer_predicted_seconds_total", "counter");
+        for (model, snap) in models {
+            for l in &snap.layers {
+                out.push_str(&format!(
+                    "tcbnn_layer_predicted_seconds_total{} {}\n",
+                    layer_labels(l, *model),
+                    l.predicted_s
+                ));
+            }
+        }
+        header(&mut out, "layer_drift_ratio", "gauge");
+        for (model, snap) in models {
+            for l in &snap.layers {
+                out.push_str(&format!(
+                    "tcbnn_layer_drift_ratio{} {}\n",
+                    layer_labels(l, *model),
+                    l.drift()
+                ));
+            }
+        }
+    }
+    if models.iter().any(|(_, s)| !s.health.is_empty()) {
+        header(&mut out, "shard_up", "gauge");
+        for (model, snap) in models {
+            for h in &snap.health {
+                out.push_str(&format!(
+                    "tcbnn_shard_up{} {}\n",
+                    label_set(*model, &[("shard", h.shard.to_string())]),
+                    if h.is_up() { 1 } else { 0 }
+                ));
+            }
+        }
+        header(&mut out, "shard_health_state", "gauge");
+        for (model, snap) in models {
+            for h in &snap.health {
+                out.push_str(&format!(
+                    "tcbnn_shard_health_state{} 1\n",
+                    label_set(
+                        *model,
+                        &[
+                            ("shard", h.shard.to_string()),
+                            ("state", h.state.clone()),
+                            ("reason", h.reason.clone()),
+                        ]
+                    )
+                ));
+            }
+        }
+        header(&mut out, "shard_last_batch_age_seconds", "gauge");
+        for (model, snap) in models {
+            for h in &snap.health {
+                out.push_str(&format!(
+                    "tcbnn_shard_last_batch_age_seconds{} {}\n",
+                    label_set(*model, &[("shard", h.shard.to_string())]),
+                    h.last_batch_age_s
+                ));
+            }
+        }
+        header(&mut out, "shard_queue_depth", "gauge");
+        for (model, snap) in models {
+            for h in &snap.health {
+                out.push_str(&format!(
+                    "tcbnn_shard_queue_depth{} {}\n",
+                    label_set(*model, &[("shard", h.shard.to_string())]),
+                    h.queue_depth
+                ));
+            }
+        }
+    }
+    out
 }
 
 fn req_f64(v: &Value, key: &str) -> Result<f64, String> {
@@ -618,6 +1075,17 @@ fn arr<'a>(v: &'a Value, key: &str) -> Result<&'a [Value], String> {
     v.get(key)
         .and_then(Value::as_arr)
         .ok_or_else(|| format!("missing/non-array field {key:?}"))
+}
+
+/// Like [`arr`] but an absent key reads as an empty array — for fields
+/// added after `MIN_OBS_SCHEMA` (v2 documents lack `windows`/`health`).
+fn arr_opt<'a>(v: &'a Value, key: &str) -> Result<&'a [Value], String> {
+    match v.get(key) {
+        None => Ok(&[]),
+        Some(x) => x
+            .as_arr()
+            .ok_or_else(|| format!("non-array field {key:?}")),
+    }
 }
 
 #[cfg(test)]
@@ -668,6 +1136,33 @@ mod tests {
             shards: vec![
                 ShardAttr { shard: 0, requests: 6, batches: 1, steals: 2 },
                 ShardAttr { shard: 1, requests: 5, batches: 1, steals: 0 },
+            ],
+            windows: vec![WindowStats {
+                window_s: 10.0,
+                requests: 4,
+                sheds: 1,
+                slo_hits: 3,
+                slo_misses: 1,
+                rps: 0.4,
+                shed_rps: 0.1,
+                p50_s: 1.0e-3,
+                p99_s: 2.0e-3,
+            }],
+            health: vec![
+                ShardHealthAttr {
+                    shard: 0,
+                    state: "healthy".to_string(),
+                    reason: String::new(),
+                    last_batch_age_s: 0.5,
+                    queue_depth: 2,
+                },
+                ShardHealthAttr {
+                    shard: 1,
+                    state: "stalled".to_string(),
+                    reason: "no heartbeat for 1.2s".to_string(),
+                    last_batch_age_s: 1.2,
+                    queue_depth: 7,
+                },
             ],
         }
     }
@@ -733,6 +1228,86 @@ mod tests {
     }
 
     #[test]
+    fn from_json_accepts_v2_documents() {
+        // a PR-8 era dump: schema 2, no windows/health keys
+        let mut doc = sample().to_json();
+        if let Value::Obj(fields) = &mut doc {
+            fields[0].1 = Value::Num(2.0);
+            fields.retain(|(k, _)| k != "windows" && k != "health");
+        }
+        let snap = Snapshot::from_json(&doc).expect("v2 still parses");
+        assert_eq!(snap.requests, 11);
+        assert!(snap.windows.is_empty(), "v3 fields default empty");
+        assert!(snap.health.is_empty());
+    }
+
+    #[test]
+    fn prometheus_has_help_and_renders_window_and_health_families() {
+        let prom = sample().to_prometheus();
+        assert!(prom.contains("# HELP tcbnn_requests_total "), "{prom}");
+        assert!(prom.contains("# TYPE tcbnn_requests_total counter"));
+        assert!(prom.contains("# HELP tcbnn_window_requests_per_second "));
+        assert!(
+            prom.contains("tcbnn_window_requests_per_second{window=\"10s\"} 0.4"),
+            "{prom}"
+        );
+        assert!(prom
+            .contains("tcbnn_window_latency_p99_seconds{window=\"10s\"} 0.002"));
+        assert!(prom.contains("tcbnn_window_slo_miss_rate{window=\"10s\"} 0.25"));
+        assert!(prom.contains("tcbnn_shard_up{shard=\"0\"} 1"));
+        assert!(prom.contains("tcbnn_shard_up{shard=\"1\"} 0"));
+        assert!(prom.contains(
+            "tcbnn_shard_health_state{shard=\"1\",state=\"stalled\",\
+             reason=\"no heartbeat for 1.2s\"} 1"
+        ));
+        assert!(prom.contains("tcbnn_shard_queue_depth{shard=\"1\"} 7"));
+        // satellite: min/max are scalar families now
+        assert!(prom.contains("tcbnn_latency_min_seconds 0.001"));
+        assert!(prom.contains("tcbnn_latency_max_seconds 0.002"));
+    }
+
+    #[test]
+    fn prometheus_escapes_label_values() {
+        let snap = Snapshot {
+            cost_drift: vec![("BAD\"NAME\\".to_string(), 1.0, 1)],
+            ..Default::default()
+        };
+        let prom = snap.to_prometheus();
+        assert!(
+            prom.contains("tcbnn_cost_drift_ratio{scheme=\"BAD\\\"NAME\\\\\"} 1"),
+            "{prom}"
+        );
+    }
+
+    #[test]
+    fn fleet_rendering_is_family_major_with_model_labels() {
+        let a = sample();
+        let b = Snapshot { requests: 3, ..Default::default() };
+        let prom = render_prometheus_fleet(&[
+            ("mnist".to_string(), a),
+            ("cifar".to_string(), b),
+        ]);
+        assert!(prom.contains("tcbnn_requests_total{model=\"mnist\"} 11"));
+        assert!(prom.contains("tcbnn_requests_total{model=\"cifar\"} 3"));
+        // one header per family even with two models, and the family's
+        // samples directly follow it (exposition forbids re-opening a
+        // family block)
+        assert_eq!(
+            prom.matches("# TYPE tcbnn_requests_total counter").count(),
+            1
+        );
+        let idx = prom.find("# TYPE tcbnn_requests_total counter").unwrap();
+        let lines: Vec<&str> = prom[idx..].lines().take(3).collect();
+        assert!(lines[1].starts_with("tcbnn_requests_total{model=\"mnist\"}"));
+        assert!(lines[2].starts_with("tcbnn_requests_total{model=\"cifar\"}"));
+        // labeled families compose the model label with their own
+        assert!(prom.contains(
+            "tcbnn_layer_seconds_total{model=\"mnist\",layer=\"0\",\
+             tag=\"1024FC\",scheme=\"FASTPATH\"}"
+        ));
+    }
+
+    #[test]
     fn absorb_engine_grafts_engine_side_fields() {
         let eng = sample();
         let mut srv = Snapshot { requests: 100, batches: 9, ..Default::default() };
@@ -753,5 +1328,15 @@ mod tests {
         assert_eq!(back, snap);
         assert!(snap.render_report().contains("requests=0"));
         assert!(!snap.render_report().contains("engine="));
+        // satellite regression: a zero-request snapshot renders 0 for
+        // min/max in every face — never the histogram's init sentinel
+        assert_eq!(snap.latency.min, 0.0);
+        assert_eq!(snap.latency.max, 0.0);
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("tcbnn_latency_min_seconds 0\n"), "{prom}");
+        assert!(prom.contains("tcbnn_latency_max_seconds 0\n"), "{prom}");
+        let json = snap.to_json().to_string();
+        assert!(json.contains("\"min_s\":0"), "{json}");
+        assert!(json.contains("\"max_s\":0"), "{json}");
     }
 }

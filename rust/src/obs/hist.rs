@@ -191,6 +191,24 @@ impl LogHistogram {
         }
     }
 
+    /// Clear every bucket and restore the empty-histogram sentinels
+    /// (`min_ns = u64::MAX`, which `min_secs` maps to 0, and
+    /// `max_ns = 0`) — so a reused window epoch reports `0` min/max,
+    /// never a stale value or a leaked sentinel.  Not atomic with
+    /// respect to concurrent `record`s: a racing sample may land
+    /// before or after the wipe, which windowed telemetry tolerates
+    /// (it lands in this epoch or is dropped — never double-counted).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.sumsq_s2.store(0f64.to_bits(), Ordering::Relaxed);
+        self.min_ns.store(u64::MAX, Ordering::Relaxed);
+        self.max_ns.store(0, Ordering::Relaxed);
+    }
+
     /// The non-empty buckets as `(lo_secs, hi_secs, count)` — what the
     /// exporter serializes (bounded: at most `N_BUCKETS` rows).
     pub fn nonzero_buckets(&self) -> Vec<(f64, f64, u64)> {
@@ -287,6 +305,51 @@ mod tests {
         assert_eq!(h.footprint_bytes(), before);
         assert!(before < 8192, "bounded: {before} bytes");
         assert_eq!(h.count(), 10_000);
+    }
+
+    #[test]
+    fn empty_histogram_never_leaks_min_max_sentinels() {
+        // satellite regression: a model that served zero requests must
+        // render min/max as 0, not the u64::MAX init sentinel
+        let h = LogHistogram::new();
+        assert_eq!(h.min_secs(), 0.0, "empty min renders 0, not sentinel");
+        assert_eq!(h.max_secs(), 0.0);
+        let s = h.summary();
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 0.0);
+        assert_eq!(s.p99, 0.0);
+        // ...and a reset must restore exactly that state, not leave a
+        // stale min/max or a zeroed min sentinel
+        h.record(0.004);
+        h.record(0.001);
+        assert_eq!(h.min_secs(), 0.001);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum_secs(), 0.0);
+        assert_eq!(h.min_secs(), 0.0, "reset restores the empty-min path");
+        assert_eq!(h.max_secs(), 0.0);
+        assert!(h.nonzero_buckets().is_empty());
+        assert_eq!(h.summary(), crate::util::stats::Summary::default());
+        // recording after reset behaves like a fresh histogram (the
+        // min sentinel was restored, so the first sample sets min)
+        h.record(0.002);
+        assert_eq!(h.min_secs(), 0.002);
+        assert_eq!(h.max_secs(), 0.002);
+    }
+
+    #[test]
+    fn merging_an_empty_histogram_does_not_disturb_min_max() {
+        let a = LogHistogram::new();
+        let empty = LogHistogram::new();
+        a.record(0.003);
+        a.merge(&empty);
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.min_secs(), 0.003, "empty-merge leaves min alone");
+        assert_eq!(a.max_secs(), 0.003);
+        // merging INTO an empty histogram adopts the source's min/max
+        empty.merge(&a);
+        assert_eq!(empty.min_secs(), 0.003);
+        assert_eq!(empty.max_secs(), 0.003);
     }
 
     #[test]

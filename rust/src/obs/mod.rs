@@ -1,17 +1,28 @@
 //! Observability: bounded telemetry for the serving stack.
 //!
-//! Three pieces, one contract — *fixed memory under unbounded load*:
+//! Six pieces, one contract — *fixed memory under unbounded load*:
 //!
 //! * [`hist`] — a lock-free log-scale latency histogram
 //!   ([`LogHistogram`]) that replaces the old unbounded per-request
 //!   latency `Vec` inside `coordinator::Metrics`.
 //! * [`trace`] — per-batch span recording ([`BatchTrace`] in a
-//!   [`TraceRing`]): queue wait, batch assembly, one span per plan
-//!   layer, explicit repack ops interleaved.
+//!   [`TraceRing`]): queue wait, steal migrations, batch assembly,
+//!   the forward call, one span per plan layer, explicit repack ops
+//!   interleaved.
+//! * [`window`] — rolling-window telemetry ([`Windows`]): per-epoch
+//!   counter/histogram rings merged on read, so `/metrics` reports
+//!   10s/60s rates and quantiles alongside the cumulative totals.
+//! * [`tracelog`] — a sampled JSONL request-trace log
+//!   ([`TraceWriter`]): one line per sampled request decomposing its
+//!   end-to-end time into queue / steal / assemble / execute.
+//! * [`scrape`] — the dependency-free `/metrics` + `/snapshot.json` +
+//!   `/healthz` HTTP endpoint ([`ScrapeServer`]) over any
+//!   [`ScrapeSource`] (`serve::Fleet` implements it).
 //! * [`export`] — the [`Snapshot`] struct that the human report, the
 //!   JSON document, and the Prometheus text exposition all render
-//!   from, carrying per-layer drift ([`LayerAttr`]) and per-edge
-//!   repack attribution ([`RepackEdge`]).
+//!   from, carrying per-layer drift ([`LayerAttr`]), per-edge repack
+//!   attribution ([`RepackEdge`]), rolling-window stats
+//!   ([`WindowStats`]), and watchdog health ([`ShardHealthAttr`]).
 //!
 //! The timing source is single: `engine::executor` times each layer
 //! once and feeds both `tuner::live::LiveCosts` (for re-planning) and
@@ -20,8 +31,17 @@
 
 pub mod export;
 pub mod hist;
+pub mod scrape;
 pub mod trace;
+pub mod tracelog;
+pub mod window;
 
-pub use export::{LayerAttr, RepackEdge, ShardAttr, Snapshot, OBS_SCHEMA};
+pub use export::{
+    render_prometheus_fleet, LayerAttr, RepackEdge, ShardAttr, ShardHealthAttr,
+    Snapshot, MIN_OBS_SCHEMA, OBS_SCHEMA,
+};
 pub use hist::LogHistogram;
+pub use scrape::{http_get, ScrapeServer, ScrapeSource};
 pub use trace::{BatchTrace, Span, SpanKind, TraceRing};
+pub use tracelog::{RequestTrace, TraceWriter};
+pub use window::{WindowStats, WindowedCounter, WindowedHistogram, Windows};

@@ -1,0 +1,415 @@
+//! `/metrics` scrape server: a dependency-free blocking HTTP/1.1
+//! endpoint over `std::net::TcpListener` — the same spirit as the
+//! hand-rolled `engine::json` (no hyper offline, and none needed for
+//! a scrape endpoint serving one short response per connection).
+//!
+//! Routes:
+//!
+//! * `GET /metrics` — Prometheus text exposition
+//!   ([`render_prometheus_fleet`] over the source's live snapshots,
+//!   `model` label per served model),
+//! * `GET /snapshot.json` — the same snapshots as one JSON document
+//!   (`{"schema":N,"models":[{"name":...,"snapshot":{...}}]}`),
+//! * `GET /healthz` — 200 when every shard can make progress, 503
+//!   when any shard's watchdog state is `stalled`, with a JSON body
+//!   naming the offender.
+//!
+//! The protocol surface is deliberately tiny: one request per
+//! connection (`Connection: close`), request line + headers read with
+//! a 2s timeout and an 8KB cap, anything but `GET` answered 405.
+//! Scrapers (Prometheus, curl, the integration test's raw-socket
+//! client) need nothing more.
+//!
+//! The server pulls fresh data per request through [`ScrapeSource`] —
+//! implemented by `serve::Fleet` (live per-model snapshots with
+//! watchdog health grafted in) and trivially by any test double.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::engine::json::Value;
+use crate::obs::export::{render_prometheus_fleet, Snapshot, OBS_SCHEMA};
+
+/// What the scrape server serves: the current snapshot of every model
+/// the process runs, freshly assembled per request.
+pub trait ScrapeSource: Send + Sync {
+    fn snapshots(&self) -> Vec<(String, Snapshot)>;
+}
+
+/// The running scrape server; dropping it (or calling
+/// [`ScrapeServer::shutdown`]) stops the accept loop.
+pub struct ScrapeServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ScrapeServer {
+    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and
+    /// start the accept loop on a background thread.
+    pub fn start(
+        addr: &str,
+        source: Arc<dyn ScrapeSource>,
+    ) -> std::io::Result<ScrapeServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("tcbnn-scrape".to_string())
+            .spawn(move || accept_loop(listener, source, stop2))?;
+        Ok(ScrapeServer { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // unblock the accept() by connecting to ourselves; the loop
+        // re-checks the stop flag before serving
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ScrapeServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    source: Arc<dyn ScrapeSource>,
+    stop: Arc<AtomicBool>,
+) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            // serve inline: a scrape endpoint's request rate is the
+            // scrape interval — no connection concurrency needed, and
+            // a slow reader is bounded by the write timeout
+            Ok(s) => handle_conn(s, source.as_ref()),
+            Err(_) => continue,
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, source: &dyn ScrapeSource) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let Some((method, path)) = read_request(&mut stream) else {
+        respond(&mut stream, 400, "Bad Request", "text/plain", "bad request\n");
+        return;
+    };
+    if method != "GET" {
+        respond(
+            &mut stream,
+            405,
+            "Method Not Allowed",
+            "text/plain",
+            "only GET is served\n",
+        );
+        return;
+    }
+    // strip any query string — scrape paths take no parameters
+    let path = path.split('?').next().unwrap_or("");
+    match path {
+        "/metrics" => {
+            let body = render_prometheus_fleet(&source.snapshots());
+            respond(
+                &mut stream,
+                200,
+                "OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                &body,
+            );
+        }
+        "/snapshot.json" => {
+            let body = snapshot_document(&source.snapshots()).to_string();
+            respond(&mut stream, 200, "OK", "application/json", &body);
+        }
+        "/healthz" => {
+            let snaps = source.snapshots();
+            let (healthy, body) = health_document(&snaps);
+            let (code, reason) =
+                if healthy { (200, "OK") } else { (503, "Service Unavailable") };
+            respond(&mut stream, code, reason, "application/json", &body.to_string());
+        }
+        _ => respond(&mut stream, 404, "Not Found", "text/plain", "not found\n"),
+    }
+}
+
+/// Read the request head (request line + headers, up to 8KB) and
+/// return `(method, path)`.
+fn read_request(stream: &mut TcpStream) -> Option<(String, String)> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = stream.read(&mut chunk).ok()?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() >= 8192 {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let mut parts = head.lines().next()?.split_whitespace();
+    let method = parts.next()?.to_string();
+    let path = parts.next()?.to_string();
+    Some((method, path))
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    code: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+) {
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+/// The `/snapshot.json` document.
+fn snapshot_document(snaps: &[(String, Snapshot)]) -> Value {
+    Value::Obj(vec![
+        ("schema".to_string(), Value::Num(OBS_SCHEMA as f64)),
+        (
+            "models".to_string(),
+            Value::Arr(
+                snaps
+                    .iter()
+                    .map(|(name, s)| {
+                        Value::Obj(vec![
+                            ("name".to_string(), Value::Str(name.clone())),
+                            ("snapshot".to_string(), s.to_json()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// The `/healthz` verdict + document: healthy iff no shard of any
+/// model reports a `stalled` watchdog state.  Models without health
+/// data (no watchdog running) count as healthy — absence of a monitor
+/// is not an outage.
+fn health_document(snaps: &[(String, Snapshot)]) -> (bool, Value) {
+    let healthy =
+        snaps.iter().all(|(_, s)| s.health.iter().all(|h| h.is_up()));
+    let doc = Value::Obj(vec![
+        ("healthy".to_string(), Value::Bool(healthy)),
+        (
+            "models".to_string(),
+            Value::Arr(
+                snaps
+                    .iter()
+                    .map(|(name, s)| {
+                        Value::Obj(vec![
+                            ("name".to_string(), Value::Str(name.clone())),
+                            (
+                                "shards".to_string(),
+                                Value::Arr(
+                                    s.health
+                                        .iter()
+                                        .map(|h| {
+                                            Value::Obj(vec![
+                                                (
+                                                    "shard".to_string(),
+                                                    Value::Num(h.shard as f64),
+                                                ),
+                                                (
+                                                    "state".to_string(),
+                                                    Value::Str(h.state.clone()),
+                                                ),
+                                                (
+                                                    "reason".to_string(),
+                                                    Value::Str(h.reason.clone()),
+                                                ),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    (healthy, doc)
+}
+
+/// Minimal blocking HTTP GET for demos and tests (the integration
+/// test scrapes with it — no external HTTP crate offline).  Returns
+/// `(status_code, body)`.
+pub fn http_get(addr: SocketAddr, path: &str) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    write!(
+        stream,
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+    )?;
+    stream.flush()?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let status = raw
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "malformed status line",
+            )
+        })?;
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::ShardHealthAttr;
+    use std::sync::Mutex;
+
+    struct MockSource {
+        snaps: Mutex<Vec<(String, Snapshot)>>,
+    }
+
+    impl ScrapeSource for MockSource {
+        fn snapshots(&self) -> Vec<(String, Snapshot)> {
+            self.snaps.lock().unwrap().clone()
+        }
+    }
+
+    fn healthy_source() -> Arc<MockSource> {
+        let snap = Snapshot {
+            requests: 8,
+            health: vec![ShardHealthAttr {
+                shard: 0,
+                state: "healthy".to_string(),
+                reason: String::new(),
+                last_batch_age_s: 0.01,
+                queue_depth: 0,
+            }],
+            ..Default::default()
+        };
+        Arc::new(MockSource {
+            snaps: Mutex::new(vec![("mnist".to_string(), snap)]),
+        })
+    }
+
+    #[test]
+    fn serves_metrics_snapshot_and_healthz() {
+        let source = healthy_source();
+        let srv =
+            ScrapeServer::start("127.0.0.1:0", source.clone()).expect("bind");
+        let addr = srv.local_addr();
+
+        let (code, body) = http_get(addr, "/metrics").unwrap();
+        assert_eq!(code, 200);
+        assert!(
+            body.contains("tcbnn_requests_total{model=\"mnist\"} 8"),
+            "{body}"
+        );
+        assert!(body.contains("# TYPE tcbnn_requests_total counter"));
+
+        let (code, body) = http_get(addr, "/snapshot.json").unwrap();
+        assert_eq!(code, 200);
+        let doc = Value::parse(&body).expect("valid JSON");
+        assert_eq!(
+            doc.get("schema").and_then(Value::as_usize),
+            Some(OBS_SCHEMA as usize)
+        );
+        let models = doc.get("models").and_then(Value::as_arr).unwrap();
+        assert_eq!(models.len(), 1);
+        let snap = models[0].get("snapshot").expect("snapshot key");
+        let parsed = Snapshot::from_json(snap).expect("snapshot shape");
+        assert_eq!(parsed.requests, 8);
+
+        let (code, body) = http_get(addr, "/healthz").unwrap();
+        assert_eq!(code, 200, "{body}");
+        let doc = Value::parse(&body).unwrap();
+        assert_eq!(doc.get("healthy"), Some(&Value::Bool(true)));
+
+        let (code, _) = http_get(addr, "/nope").unwrap();
+        assert_eq!(code, 404);
+
+        srv.shutdown();
+    }
+
+    #[test]
+    fn healthz_flips_503_when_a_shard_stalls() {
+        let source = healthy_source();
+        let srv =
+            ScrapeServer::start("127.0.0.1:0", source.clone()).expect("bind");
+        let addr = srv.local_addr();
+        let (code, _) = http_get(addr, "/healthz").unwrap();
+        assert_eq!(code, 200);
+        // the source's next snapshot reports the shard stalled
+        source.snaps.lock().unwrap()[0].1.health[0] = ShardHealthAttr {
+            shard: 0,
+            state: "stalled".to_string(),
+            reason: "worker exited".to_string(),
+            last_batch_age_s: 3.0,
+            queue_depth: 9,
+        };
+        let (code, body) = http_get(addr, "/healthz").unwrap();
+        assert_eq!(code, 503, "{body}");
+        assert!(body.contains("\"state\":\"stalled\""), "{body}");
+        assert!(body.contains("worker exited"), "{body}");
+        // /metrics still serves during the outage (that's the point)
+        let (code, body) = http_get(addr, "/metrics").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("tcbnn_shard_up{model=\"mnist\",shard=\"0\"} 0"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn non_get_is_405_and_shutdown_unblocks() {
+        let source = healthy_source();
+        let srv = ScrapeServer::start("127.0.0.1:0", source).expect("bind");
+        let addr = srv.local_addr();
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 405"), "{resp}");
+        // shutdown returns promptly even with no pending connection
+        srv.shutdown();
+    }
+}

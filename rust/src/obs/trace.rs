@@ -21,8 +21,15 @@ use std::sync::Mutex;
 pub enum SpanKind {
     /// time the batch's oldest request spent queued before formation
     Queue,
+    /// a request migrated between sibling shards by work stealing;
+    /// `secs` is its wait at steal time (informational — contained in
+    /// the batch's queue wait, not additive with `Queue`)
+    Steal,
     /// batch formation: pops, input concatenation, tail padding
     Assemble,
+    /// the model's whole forward call for the batch (wraps the `Layer`
+    /// spans; informational, not additive with them)
+    Execute,
     /// one plan layer's execution (repack time included when an
     /// explicit edge feeds it)
     Layer,
@@ -35,7 +42,9 @@ impl SpanKind {
     pub fn name(&self) -> &'static str {
         match self {
             SpanKind::Queue => "queue",
+            SpanKind::Steal => "steal",
             SpanKind::Assemble => "assemble",
+            SpanKind::Execute => "execute",
             SpanKind::Layer => "layer",
             SpanKind::Repack => "repack",
         }
@@ -59,6 +68,12 @@ impl Span {
         Span { kind: SpanKind::Queue, label: "queue-wait".to_string(), secs, bytes: 0 }
     }
 
+    /// A request stolen from a sibling shard; `label` names the donor
+    /// (e.g. "steal<-shard1"), `secs` is the request's wait so far.
+    pub fn steal(label: String, secs: f64) -> Span {
+        Span { kind: SpanKind::Steal, label, secs, bytes: 0 }
+    }
+
     pub fn assemble(secs: f64, bytes: u64) -> Span {
         Span {
             kind: SpanKind::Assemble,
@@ -74,6 +89,16 @@ impl Span {
 
     pub fn repack(label: String, secs: f64, bytes: u64) -> Span {
         Span { kind: SpanKind::Repack, label, secs, bytes }
+    }
+
+    /// The whole forward call; `bytes` is the batch's input payload.
+    pub fn execute(secs: f64, bytes: u64) -> Span {
+        Span {
+            kind: SpanKind::Execute,
+            label: "model-execute".to_string(),
+            secs,
+            bytes,
+        }
     }
 }
 

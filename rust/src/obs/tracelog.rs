@@ -1,0 +1,210 @@
+//! Sampled request-scoped trace log: one JSON line per sampled
+//! request, written as the fleet serves.
+//!
+//! The [`TraceRing`](crate::obs::TraceRing) keeps the newest N *batch*
+//! traces in memory; this module complements it with a durable,
+//! *request*-scoped view — where did request 48291's 9ms go: queue,
+//! steal migration, batch assembly, or the forward pass?  Lines are
+//! sampled 1-in-N (the first request is always sampled, so short runs
+//! still produce a file) and rendered through `engine::json`, so the
+//! schema is exactly what `Value::parse` reads back:
+//!
+//! ```json
+//! {"model":"mnist","req":7,"shard":1,"batch_seq":3,"rows":6,
+//!  "padded":8,"queue_s":0.0011,"steals":1,"assemble_s":0.00002,
+//!  "execute_s":0.0019,"e2e_s":0.0032}
+//! ```
+//!
+//! All fields are finite numbers or strings — the writer clamps
+//! non-finite durations to 0 rather than emit invalid JSON.  Writing
+//! happens on the worker thread after the batch's waiters are
+//! answered, buffered through a `BufWriter` behind one mutex; at the
+//! default 1-in-16 sampling the lock is off the per-request path
+//! entirely for 15 of 16 requests (the sample counter is atomic).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::engine::json::Value;
+
+/// One sampled request's timing decomposition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestTrace {
+    /// served model name
+    pub model: String,
+    /// request id (minted at `Fleet::submit`)
+    pub req: u64,
+    /// shard whose worker executed the batch
+    pub shard: usize,
+    /// the executing worker's batch sequence number
+    pub batch_seq: u64,
+    /// real rows in the batch / padded bucket size
+    pub rows: usize,
+    pub padded: usize,
+    /// this request's own queue wait (enqueue -> batch formation)
+    pub queue_s: f64,
+    /// times the request migrated between sibling shards
+    pub steals: u64,
+    /// batch assembly (copy + padding) — shared by the whole batch
+    pub assemble_s: f64,
+    /// the model's forward call — shared by the whole batch
+    pub execute_s: f64,
+    /// end-to-end: enqueue -> response sent
+    pub e2e_s: f64,
+}
+
+impl RequestTrace {
+    fn to_json(&self) -> Value {
+        let f = |x: f64| Value::Num(if x.is_finite() { x } else { 0.0 });
+        Value::Obj(vec![
+            ("model".to_string(), Value::Str(self.model.clone())),
+            ("req".to_string(), Value::Num(self.req as f64)),
+            ("shard".to_string(), Value::Num(self.shard as f64)),
+            ("batch_seq".to_string(), Value::Num(self.batch_seq as f64)),
+            ("rows".to_string(), Value::Num(self.rows as f64)),
+            ("padded".to_string(), Value::Num(self.padded as f64)),
+            ("queue_s".to_string(), f(self.queue_s)),
+            ("steals".to_string(), Value::Num(self.steals as f64)),
+            ("assemble_s".to_string(), f(self.assemble_s)),
+            ("execute_s".to_string(), f(self.execute_s)),
+            ("e2e_s".to_string(), f(self.e2e_s)),
+        ])
+    }
+}
+
+/// Sampled JSONL writer (see module docs).
+pub struct TraceWriter {
+    out: Mutex<BufWriter<File>>,
+    sample_every: u64,
+    seen: AtomicU64,
+    written: AtomicU64,
+}
+
+impl TraceWriter {
+    /// Open `path` for writing (truncates), sampling 1 request in
+    /// `sample_every` (clamped to at least 1 = every request).
+    pub fn create<P: AsRef<Path>>(
+        path: P,
+        sample_every: u64,
+    ) -> std::io::Result<TraceWriter> {
+        let file = File::create(path)?;
+        Ok(TraceWriter {
+            out: Mutex::new(BufWriter::new(file)),
+            sample_every: sample_every.max(1),
+            seen: AtomicU64::new(0),
+            written: AtomicU64::new(0),
+        })
+    }
+
+    /// Offer one request trace; writes it when the sampler selects it
+    /// (request 1, N+1, 2N+1, ... of those offered).  Write errors are
+    /// swallowed — tracing must never take down serving.
+    pub fn observe(&self, t: &RequestTrace) {
+        let n = self.seen.fetch_add(1, Ordering::Relaxed);
+        if n % self.sample_every != 0 {
+            return;
+        }
+        let line = t.to_json().to_string();
+        let mut out = self.out.lock().unwrap();
+        if writeln!(out, "{line}").is_ok() {
+            self.written.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Requests offered to the sampler.
+    pub fn seen(&self) -> u64 {
+        self.seen.load(Ordering::Relaxed)
+    }
+
+    /// Lines actually written.
+    pub fn written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every
+    }
+
+    /// Flush buffered lines to disk (also happens on drop).
+    pub fn flush(&self) {
+        let _ = self.out.lock().unwrap().flush();
+    }
+}
+
+impl Drop for TraceWriter {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(req: u64) -> RequestTrace {
+        RequestTrace {
+            model: "m".to_string(),
+            req,
+            shard: 1,
+            batch_seq: 3,
+            rows: 6,
+            padded: 8,
+            queue_s: 1.1e-3,
+            steals: 1,
+            assemble_s: 2e-5,
+            execute_s: 1.9e-3,
+            e2e_s: 3.2e-3,
+        }
+    }
+
+    #[test]
+    fn writes_sampled_jsonl_that_round_trips() {
+        let path = std::env::temp_dir()
+            .join(format!("tcbnn-tracelog-{}.jsonl", std::process::id()));
+        let w = TraceWriter::create(&path, 4).unwrap();
+        for req in 0..10 {
+            w.observe(&trace(req));
+        }
+        assert_eq!(w.seen(), 10);
+        assert_eq!(w.written(), 3, "1-in-4 of 10: requests 0, 4, 8");
+        w.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for (i, line) in lines.iter().enumerate() {
+            let v = Value::parse(line).expect("valid engine::json");
+            assert_eq!(v.get("req").and_then(Value::as_usize), Some(i * 4));
+            assert_eq!(v.get("model").and_then(Value::as_str), Some("m"));
+            for key in [
+                "shard", "batch_seq", "rows", "padded", "queue_s", "steals",
+                "assemble_s", "execute_s", "e2e_s",
+            ] {
+                assert!(
+                    v.get(key).and_then(Value::as_f64).is_some(),
+                    "line {i} missing {key}: {line}"
+                );
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn non_finite_durations_clamp_to_zero() {
+        let path = std::env::temp_dir()
+            .join(format!("tcbnn-tracelog-nan-{}.jsonl", std::process::id()));
+        let w = TraceWriter::create(&path, 1).unwrap();
+        let mut t = trace(0);
+        t.queue_s = f64::NAN;
+        t.execute_s = f64::INFINITY;
+        w.observe(&t);
+        w.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Value::parse(text.trim()).expect("still valid JSON");
+        assert_eq!(v.get("queue_s").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(v.get("execute_s").and_then(Value::as_f64), Some(0.0));
+        let _ = std::fs::remove_file(&path);
+    }
+}

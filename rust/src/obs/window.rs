@@ -1,0 +1,541 @@
+//! Rolling-window telemetry: rates and quantiles over the *last N
+//! seconds*, not since process start.
+//!
+//! The cumulative counters in `coordinator::Metrics` answer "what has
+//! this process done since boot" — useless for operating a running
+//! fleet, where the question is "what is it doing *now*".  This module
+//! adds windowed views with the same bounded-memory contract as the
+//! rest of `obs`:
+//!
+//! * [`WindowedCounter`] — a ring of per-epoch counters rotated by a
+//!   coarse clock tick.  Recording is two relaxed atomic ops on the
+//!   hot path; rotation (once per epoch) takes a tiny mutex.
+//! * [`WindowedHistogram`] — the same ring with a full
+//!   [`LogHistogram`] per epoch, merged on read into one histogram
+//!   covering the window.  Constant memory: `SLOTS` histograms,
+//!   ~`SLOTS * 3KB`, forever.
+//! * [`Windows`] — the bundle `coordinator::Metrics` embeds: request /
+//!   shed / SLO counters plus a latency histogram, summarized into
+//!   [`WindowStats`] rows (one per reporting window, 10s and 60s by
+//!   default) that `Snapshot` carries and `/metrics` exposes.
+//!
+//! Epoch geometry: 2-second epochs, 33 slots — enough to serve a 60s
+//! window (30 full epochs + the current partial one) with margin.  A
+//! slot is reused only after its epoch has aged out of every window,
+//! so merged reads never mix a stale epoch into a fresh one: each slot
+//! stores the epoch id it belongs to and readers filter by it.
+//!
+//! All record/read methods take an explicit `now: Instant` (`*_at`
+//! variants) so tests can drive the clock deterministically; the
+//! convenience wrappers use `Instant::now()`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::obs::hist::LogHistogram;
+
+/// Epoch length: the rotation tick.  Coarse on purpose — rotation is
+/// the only synchronized step.
+pub const EPOCH: Duration = Duration::from_secs(2);
+/// Ring slots: 60s window = 30 full epochs + the current partial one,
+/// plus margin so an in-progress rotation never clobbers a slot a
+/// reader still needs.
+pub const SLOTS: usize = 33;
+/// The reporting windows `Windows::stats_all` summarizes (and
+/// `/metrics` exposes as the `window` label).
+pub const REPORT_WINDOWS: [Duration; 2] =
+    [Duration::from_secs(10), Duration::from_secs(60)];
+
+/// Maps instants onto epoch ids (monotone, starts at 0).
+#[derive(Clone, Copy, Debug)]
+struct Clock {
+    start: Instant,
+    epoch: Duration,
+}
+
+impl Clock {
+    fn epoch_id(&self, now: Instant) -> u64 {
+        let dt = now.saturating_duration_since(self.start);
+        (dt.as_nanos() / self.epoch.as_nanos().max(1)) as u64
+    }
+
+    /// Epochs a window spans, counting the current partial epoch.
+    fn window_epochs(&self, window: Duration) -> u64 {
+        let e = self.epoch.as_nanos().max(1);
+        let w = window.as_nanos();
+        (((w + e - 1) / e) as u64).max(1)
+    }
+
+    /// The denominator for a windowed rate: the window, clamped to the
+    /// time actually elapsed (so an early scrape is not understated),
+    /// floored at 1ms (so a scrape right after start is not a division
+    /// by ~zero).
+    fn rate_denom(&self, window: Duration, now: Instant) -> f64 {
+        let elapsed = now.saturating_duration_since(self.start);
+        window.min(elapsed).max(Duration::from_millis(1)).as_secs_f64()
+    }
+}
+
+struct CounterSlot {
+    /// epoch id this slot's count belongs to
+    epoch: AtomicU64,
+    count: AtomicU64,
+}
+
+/// A windowed event counter: `record` on the hot path, `count(window)`
+/// / `rate(window)` on the scrape path.
+pub struct WindowedCounter {
+    clock: Clock,
+    slots: Vec<CounterSlot>,
+    /// serializes slot rotation (cold: once per epoch per slot)
+    rotate: Mutex<()>,
+    /// cumulative total (all epochs ever) — lets one counter serve
+    /// both the windowed and the lifetime view
+    total: AtomicU64,
+}
+
+impl WindowedCounter {
+    pub fn new() -> WindowedCounter {
+        WindowedCounter::with_geometry(Instant::now(), EPOCH, SLOTS)
+    }
+
+    /// Test constructor: explicit start / epoch / slot count.
+    pub fn with_geometry(
+        start: Instant,
+        epoch: Duration,
+        slots: usize,
+    ) -> WindowedCounter {
+        assert!(slots >= 2, "windowed counter needs at least two slots");
+        WindowedCounter {
+            clock: Clock { start, epoch },
+            slots: (0..slots)
+                .map(|_| CounterSlot {
+                    // sentinel: no slot pre-claims epoch 0 except slot 0,
+                    // whose count starts at 0 anyway
+                    epoch: AtomicU64::new(u64::MAX),
+                    count: AtomicU64::new(0),
+                })
+                .collect(),
+            rotate: Mutex::new(()),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.add_at(n, Instant::now());
+    }
+
+    pub fn add_at(&self, n: u64, now: Instant) {
+        let e = self.clock.epoch_id(now);
+        let slot = &self.slots[(e % self.slots.len() as u64) as usize];
+        if slot.epoch.load(Ordering::Acquire) != e {
+            // cold path: claim the slot for this epoch under the lock
+            let _g = self.rotate.lock().unwrap();
+            if slot.epoch.load(Ordering::Acquire) != e {
+                slot.count.store(0, Ordering::Relaxed);
+                slot.epoch.store(e, Ordering::Release);
+            }
+        }
+        slot.count.fetch_add(n, Ordering::Relaxed);
+        self.total.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Lifetime total across every epoch ever recorded.
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn count(&self, window: Duration) -> u64 {
+        self.count_at(window, Instant::now())
+    }
+
+    /// Events recorded in the last `window` (epoch-granular: includes
+    /// the current partial epoch and the full epochs before it).
+    pub fn count_at(&self, window: Duration, now: Instant) -> u64 {
+        let e_now = self.clock.epoch_id(now);
+        let k = self.clock.window_epochs(window);
+        let oldest = e_now.saturating_sub(k.saturating_sub(1));
+        self.slots
+            .iter()
+            .filter(|s| {
+                let se = s.epoch.load(Ordering::Acquire);
+                se != u64::MAX && se >= oldest && se <= e_now
+            })
+            .map(|s| s.count.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    pub fn rate(&self, window: Duration) -> f64 {
+        self.rate_at(window, Instant::now())
+    }
+
+    /// Events per second over the last `window` (denominator clamps to
+    /// the elapsed time so early reads are not understated).
+    pub fn rate_at(&self, window: Duration, now: Instant) -> f64 {
+        self.count_at(window, now) as f64 / self.clock.rate_denom(window, now)
+    }
+}
+
+impl Default for WindowedCounter {
+    fn default() -> Self {
+        WindowedCounter::new()
+    }
+}
+
+struct HistSlot {
+    epoch: AtomicU64,
+    hist: LogHistogram,
+}
+
+/// A windowed latency histogram: per-epoch [`LogHistogram`]s, merged
+/// on read into one histogram covering the window.
+pub struct WindowedHistogram {
+    clock: Clock,
+    slots: Vec<HistSlot>,
+    rotate: Mutex<()>,
+}
+
+impl WindowedHistogram {
+    pub fn new() -> WindowedHistogram {
+        WindowedHistogram::with_geometry(Instant::now(), EPOCH, SLOTS)
+    }
+
+    pub fn with_geometry(
+        start: Instant,
+        epoch: Duration,
+        slots: usize,
+    ) -> WindowedHistogram {
+        assert!(slots >= 2, "windowed histogram needs at least two slots");
+        WindowedHistogram {
+            clock: Clock { start, epoch },
+            slots: (0..slots)
+                .map(|_| HistSlot {
+                    epoch: AtomicU64::new(u64::MAX),
+                    hist: LogHistogram::new(),
+                })
+                .collect(),
+            rotate: Mutex::new(()),
+        }
+    }
+
+    pub fn record(&self, secs: f64) {
+        self.record_at(secs, Instant::now());
+    }
+
+    pub fn record_at(&self, secs: f64, now: Instant) {
+        let e = self.clock.epoch_id(now);
+        let slot = &self.slots[(e % self.slots.len() as u64) as usize];
+        if slot.epoch.load(Ordering::Acquire) != e {
+            let _g = self.rotate.lock().unwrap();
+            if slot.epoch.load(Ordering::Acquire) != e {
+                slot.hist.reset();
+                slot.epoch.store(e, Ordering::Release);
+            }
+        }
+        slot.hist.record(secs);
+    }
+
+    pub fn merged(&self, window: Duration) -> LogHistogram {
+        self.merged_at(window, Instant::now())
+    }
+
+    /// One histogram covering the last `window` — fresh each call, so
+    /// the per-epoch slots stay untouched for later reads.
+    pub fn merged_at(&self, window: Duration, now: Instant) -> LogHistogram {
+        let e_now = self.clock.epoch_id(now);
+        let k = self.clock.window_epochs(window);
+        let oldest = e_now.saturating_sub(k.saturating_sub(1));
+        let out = LogHistogram::new();
+        for s in &self.slots {
+            let se = s.epoch.load(Ordering::Acquire);
+            if se != u64::MAX && se >= oldest && se <= e_now {
+                out.merge(&s.hist);
+            }
+        }
+        out
+    }
+}
+
+impl Default for WindowedHistogram {
+    fn default() -> Self {
+        WindowedHistogram::new()
+    }
+}
+
+/// One reporting window's summary — what `Snapshot.windows` carries
+/// and `/metrics` renders with a `window="<N>s"` label.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WindowStats {
+    /// window length in seconds (the label: 10, 60)
+    pub window_s: f64,
+    /// requests completed in the window
+    pub requests: u64,
+    /// admission sheds in the window
+    pub sheds: u64,
+    /// SLO verdicts in the window
+    pub slo_hits: u64,
+    pub slo_misses: u64,
+    /// windowed rates (events / min(window, elapsed))
+    pub rps: f64,
+    pub shed_rps: f64,
+    /// windowed latency quantiles (0 when no requests landed)
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl WindowStats {
+    /// SLO miss fraction over the window's verdicts (0 when none).
+    pub fn slo_miss_rate(&self) -> f64 {
+        let n = self.slo_hits + self.slo_misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.slo_misses as f64 / n as f64
+        }
+    }
+
+    /// The `window` label value: "10s", "60s".
+    pub fn label(&self) -> String {
+        format!("{}s", self.window_s.round() as u64)
+    }
+}
+
+/// The windowed-telemetry bundle `coordinator::Metrics` embeds.
+pub struct Windows {
+    requests: WindowedCounter,
+    sheds: WindowedCounter,
+    slo_hits: WindowedCounter,
+    slo_misses: WindowedCounter,
+    latency: WindowedHistogram,
+}
+
+impl Windows {
+    pub fn new() -> Windows {
+        Windows::with_geometry(Instant::now(), EPOCH, SLOTS)
+    }
+
+    pub fn with_geometry(start: Instant, epoch: Duration, slots: usize) -> Windows {
+        Windows {
+            requests: WindowedCounter::with_geometry(start, epoch, slots),
+            sheds: WindowedCounter::with_geometry(start, epoch, slots),
+            slo_hits: WindowedCounter::with_geometry(start, epoch, slots),
+            slo_misses: WindowedCounter::with_geometry(start, epoch, slots),
+            latency: WindowedHistogram::with_geometry(start, epoch, slots),
+        }
+    }
+
+    /// `n` requests completed; each latency lands in the window's
+    /// histogram.
+    pub fn record_requests_at(&self, latencies: &[f64], now: Instant) {
+        self.requests.add_at(latencies.len() as u64, now);
+        for &l in latencies {
+            self.latency.record_at(l, now);
+        }
+    }
+
+    pub fn record_requests(&self, latencies: &[f64]) {
+        self.record_requests_at(latencies, Instant::now());
+    }
+
+    pub fn record_shed_at(&self, now: Instant) {
+        self.sheds.add_at(1, now);
+    }
+
+    pub fn record_shed(&self) {
+        self.record_shed_at(Instant::now());
+    }
+
+    pub fn record_slo_at(&self, hit: bool, now: Instant) {
+        if hit {
+            self.slo_hits.add_at(1, now);
+        } else {
+            self.slo_misses.add_at(1, now);
+        }
+    }
+
+    pub fn record_slo(&self, hit: bool) {
+        self.record_slo_at(hit, Instant::now());
+    }
+
+    /// Summarize one window.
+    pub fn stats_at(&self, window: Duration, now: Instant) -> WindowStats {
+        let merged = self.latency.merged_at(window, now);
+        WindowStats {
+            window_s: window.as_secs_f64(),
+            requests: self.requests.count_at(window, now),
+            sheds: self.sheds.count_at(window, now),
+            slo_hits: self.slo_hits.count_at(window, now),
+            slo_misses: self.slo_misses.count_at(window, now),
+            rps: self.requests.rate_at(window, now),
+            shed_rps: self.sheds.rate_at(window, now),
+            p50_s: merged.quantile(0.50),
+            p99_s: merged.quantile(0.99),
+        }
+    }
+
+    pub fn stats(&self, window: Duration) -> WindowStats {
+        self.stats_at(window, Instant::now())
+    }
+
+    /// The standard reporting windows ([`REPORT_WINDOWS`]: 10s, 60s).
+    pub fn stats_all_at(&self, now: Instant) -> Vec<WindowStats> {
+        REPORT_WINDOWS.iter().map(|w| self.stats_at(*w, now)).collect()
+    }
+
+    pub fn stats_all(&self) -> Vec<WindowStats> {
+        self.stats_all_at(Instant::now())
+    }
+}
+
+impl Default for Windows {
+    fn default() -> Self {
+        Windows::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn counter_counts_within_window_and_ages_out() {
+        let start = t0();
+        let c = WindowedCounter::with_geometry(start, Duration::from_secs(2), 33);
+        c.add_at(3, start);
+        c.add_at(2, start + Duration::from_secs(1));
+        // both land in epoch 0; a 10s window at t=1s sees all 5
+        let now = start + Duration::from_secs(1);
+        assert_eq!(c.count_at(Duration::from_secs(10), now), 5);
+        assert_eq!(c.total(), 5);
+        // 70s later the events are outside both windows...
+        let late = start + Duration::from_secs(70);
+        assert_eq!(c.count_at(Duration::from_secs(10), late), 0);
+        assert_eq!(c.count_at(Duration::from_secs(60), late), 0);
+        // ...but the lifetime total stands
+        assert_eq!(c.total(), 5);
+    }
+
+    #[test]
+    fn counter_rate_clamps_denominator_to_elapsed() {
+        let start = t0();
+        let c = WindowedCounter::with_geometry(start, Duration::from_secs(2), 33);
+        let now = start + Duration::from_secs(1);
+        c.add_at(50, now);
+        // 1s elapsed: a 10s window must not divide by 10
+        let r = c.rate_at(Duration::from_secs(10), now);
+        assert!((r - 50.0).abs() < 1e-9, "rate {r}");
+        // at t=20s the same 50 events are inside a 60s window at 50/20
+        let later = start + Duration::from_secs(20);
+        let r60 = c.rate_at(Duration::from_secs(60), later);
+        assert!((r60 - 2.5).abs() < 1e-9, "rate {r60}");
+    }
+
+    #[test]
+    fn counter_slot_reuse_resets_stale_epochs() {
+        let start = t0();
+        // tiny ring: 1s epochs, 4 slots -> slot 0 is reused at epoch 4
+        let c = WindowedCounter::with_geometry(start, Duration::from_secs(1), 4);
+        c.add_at(7, start); // epoch 0, slot 0
+        let reuse = start + Duration::from_secs(4); // epoch 4, slot 0 again
+        c.add_at(1, reuse);
+        // the stale 7 must be gone from the slot, not merged
+        assert_eq!(c.count_at(Duration::from_secs(1), reuse), 1);
+        assert_eq!(c.total(), 8, "lifetime total unaffected by reuse");
+    }
+
+    #[test]
+    fn histogram_merges_only_window_epochs() {
+        let start = t0();
+        let h =
+            WindowedHistogram::with_geometry(start, Duration::from_secs(2), 33);
+        h.record_at(1e-3, start);
+        h.record_at(2e-3, start + Duration::from_secs(1));
+        let now = start + Duration::from_secs(1);
+        let m = h.merged_at(Duration::from_secs(10), now);
+        assert_eq!(m.count(), 2);
+        assert_eq!(m.min_secs(), 1e-3);
+        assert_eq!(m.max_secs(), 2e-3);
+        // outside the window: empty merge, zero quantiles (no sentinel)
+        let late = start + Duration::from_secs(70);
+        let empty = h.merged_at(Duration::from_secs(10), late);
+        assert_eq!(empty.count(), 0);
+        assert_eq!(empty.quantile(0.99), 0.0);
+        assert_eq!(empty.min_secs(), 0.0);
+        assert_eq!(empty.max_secs(), 0.0);
+    }
+
+    #[test]
+    fn histogram_slot_reuse_resets_the_epoch_histogram() {
+        let start = t0();
+        let h = WindowedHistogram::with_geometry(start, Duration::from_secs(1), 4);
+        for _ in 0..10 {
+            h.record_at(5e-3, start);
+        }
+        let reuse = start + Duration::from_secs(4);
+        h.record_at(1e-3, reuse);
+        let m = h.merged_at(Duration::from_secs(1), reuse);
+        assert_eq!(m.count(), 1, "stale epoch data wiped on reuse");
+        assert_eq!(m.max_secs(), 1e-3);
+    }
+
+    #[test]
+    fn windows_bundle_summarizes_rates_quantiles_and_slo() {
+        let start = t0();
+        let w = Windows::with_geometry(start, Duration::from_secs(2), 33);
+        let now = start + Duration::from_secs(10);
+        w.record_requests_at(&[1e-3, 1e-3, 4e-3, 4e-3], now);
+        w.record_shed_at(now);
+        w.record_slo_at(true, now);
+        w.record_slo_at(false, now);
+        let s = w.stats_at(Duration::from_secs(10), now);
+        assert_eq!(s.window_s, 10.0);
+        assert_eq!(s.label(), "10s");
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.sheds, 1);
+        assert_eq!(s.slo_hits, 1);
+        assert_eq!(s.slo_misses, 1);
+        assert!((s.slo_miss_rate() - 0.5).abs() < 1e-12);
+        assert!((s.rps - 0.4).abs() < 1e-9, "rps {}", s.rps);
+        assert!(s.p50_s > 0.0 && s.p99_s >= s.p50_s);
+        // p99 lands near the 4ms samples (~9% bucket resolution)
+        assert!((s.p99_s - 4e-3).abs() < 4e-3 * 0.15, "p99 {}", s.p99_s);
+        let all = w.stats_all_at(now);
+        assert_eq!(all.len(), REPORT_WINDOWS.len());
+        assert_eq!(all[0].label(), "10s");
+        assert_eq!(all[1].label(), "60s");
+    }
+
+    #[test]
+    fn empty_windows_summarize_to_zeros() {
+        let w = Windows::new();
+        let s = w.stats(Duration::from_secs(10));
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.rps, 0.0);
+        assert_eq!(s.p50_s, 0.0);
+        assert_eq!(s.p99_s, 0.0);
+        assert_eq!(s.slo_miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_recording_is_exact_within_an_epoch() {
+        let start = t0();
+        let c = WindowedCounter::with_geometry(start, Duration::from_secs(60), 4);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = &c;
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.add_at(1, start);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.count_at(Duration::from_secs(60), start), 80_000);
+        assert_eq!(c.total(), 80_000);
+    }
+}

@@ -33,10 +33,16 @@ use anyhow::Result;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::RouteError;
 use crate::coordinator::server::{BatchModel, Response};
-use crate::obs::export::{ShardAttr, Snapshot};
+use crate::obs::export::{LayerAttr, RepackEdge, ShardAttr, Snapshot};
+use crate::obs::scrape::ScrapeSource;
 use crate::obs::trace::{BatchTrace, Span};
+use crate::obs::tracelog::{RequestTrace, TraceWriter};
 
 use super::admission::{Admission, AdmissionConfig, Overload};
+use super::health::{
+    classify, HealthReport, ModelHealth, ShardHealth, ShardProbe, Watchdog,
+    WatchdogConfig,
+};
 use super::queue::{FleetReq, Formed, ShardQueue};
 use super::slo::{BatchSecsPredictor, BatchSizer, SloConfig};
 
@@ -88,6 +94,9 @@ pub struct FleetModelConfig {
     /// predicted service seconds per bucket (e.g.
     /// [`super::slo::plan_predictor`]); absent -> fixed buckets
     pub predictor: Option<BatchSecsPredictor>,
+    /// sampled JSONL request-trace sink shared by this model's shards
+    /// (see `obs::tracelog`); absent -> no trace log
+    pub trace: Option<Arc<TraceWriter>>,
 }
 
 impl Default for FleetModelConfig {
@@ -98,9 +107,13 @@ impl Default for FleetModelConfig {
             admission: AdmissionConfig::default(),
             slo: None,
             predictor: None,
+            trace: None,
         }
     }
 }
+
+/// `heartbeat_ns` sentinel: the worker has not beaten yet.
+const NO_HEARTBEAT: u64 = u64::MAX;
 
 /// Per-shard counters + the shard's latest engine-side snapshot.
 struct ShardStats {
@@ -108,6 +121,12 @@ struct ShardStats {
     batches: AtomicU64,
     steals: AtomicU64,
     engine: Mutex<Option<Snapshot>>,
+    /// worker liveness for the watchdog: the thread has entered its
+    /// loop / has returned, and its last loop-top timestamp as
+    /// nanoseconds since `ModelShared::epoch` (`NO_HEARTBEAT` = never)
+    started: AtomicBool,
+    exited: AtomicBool,
+    heartbeat_ns: AtomicU64,
 }
 
 impl ShardStats {
@@ -117,7 +136,24 @@ impl ShardStats {
             batches: AtomicU64::new(0),
             steals: AtomicU64::new(0),
             engine: Mutex::new(None),
+            started: AtomicBool::new(false),
+            exited: AtomicBool::new(false),
+            heartbeat_ns: AtomicU64::new(NO_HEARTBEAT),
         }
+    }
+
+    fn beat(&self, epoch: Instant) {
+        self.heartbeat_ns
+            .store(epoch.elapsed().as_nanos() as u64, Ordering::Release);
+    }
+
+    /// Age of the last heartbeat (`None` before the first).
+    fn heartbeat_age(&self, epoch: Instant, now: Instant) -> Option<Duration> {
+        let ns = self.heartbeat_ns.load(Ordering::Acquire);
+        if ns == NO_HEARTBEAT {
+            return None;
+        }
+        Some(now.saturating_duration_since(epoch + Duration::from_nanos(ns)))
     }
 }
 
@@ -129,6 +165,10 @@ struct ModelShared {
     stats: Vec<ShardStats>,
     metrics: Arc<Metrics>,
     admission: Admission,
+    /// time origin for the heartbeat nanosecond stamps
+    epoch: Instant,
+    /// sampled request-trace sink (None: no trace log)
+    trace: Option<Arc<TraceWriter>>,
     sheds: AtomicU64,
     slo_hits: AtomicU64,
     slo_misses: AtomicU64,
@@ -181,6 +221,7 @@ impl ModelShared {
 pub struct Fleet {
     models: HashMap<String, Arc<ModelShared>>,
     workers: Vec<JoinHandle<()>>,
+    watchdog: Mutex<Option<Watchdog>>,
 }
 
 impl Default for Fleet {
@@ -191,7 +232,11 @@ impl Default for Fleet {
 
 impl Fleet {
     pub fn new() -> Fleet {
-        Fleet { models: HashMap::new(), workers: Vec::new() }
+        Fleet {
+            models: HashMap::new(),
+            workers: Vec::new(),
+            watchdog: Mutex::new(None),
+        }
     }
 
     /// Register a model under `name` with `cfg.shards` replicas.  The
@@ -214,6 +259,8 @@ impl Fleet {
             stats: (0..cfg.shards).map(|_| ShardStats::new()).collect(),
             metrics: Arc::new(Metrics::new()),
             admission: Admission::new(cfg.admission),
+            epoch: Instant::now(),
+            trace: cfg.trace,
             sheds: AtomicU64::new(0),
             slo_hits: AtomicU64::new(0),
             slo_misses: AtomicU64::new(0),
@@ -265,6 +312,7 @@ impl Fleet {
         }
         if let Err(o) = m.admission.try_admit(m.total_depth(), Instant::now()) {
             m.sheds.fetch_add(1, Ordering::Relaxed);
+            m.metrics.record_shed();
             return Err(FleetError::Overloaded(o));
         }
         let (rtx, rrx) = channel();
@@ -274,6 +322,7 @@ impl Fleet {
             id,
             input,
             enqueued: Instant::now(),
+            steals: 0,
             tx: rtx,
         });
         m.notify();
@@ -318,8 +367,9 @@ impl Fleet {
 
     /// One model's full telemetry snapshot: the fleet `Metrics`
     /// rendering plus sheds/steals/SLO counters, per-shard attribution,
-    /// and the engine-side graft (throughput counters summed across
-    /// shard replicas; per-layer attribution from the busiest shard).
+    /// the engine-side graft merged *across* shard replicas (counters
+    /// and per-layer/per-edge attribution summed, not busiest-shard
+    /// sampled), and — once the watchdog runs — per-shard health.
     pub fn snapshot(&self, model: &str) -> Option<Snapshot> {
         let m = self.models.get(model)?;
         let mut snap = m.metrics.snapshot();
@@ -347,18 +397,33 @@ impl Fleet {
             .iter()
             .filter_map(|s| s.engine.lock().unwrap().clone())
             .collect();
-        if let Some(busiest) = engines
-            .iter()
-            .max_by(|a, b| a.engine_busy_s.partial_cmp(&b.engine_busy_s).unwrap())
-        {
-            // attribution (layers, drift, plan-cache counters) from the
-            // busiest replica; pure throughput counters summed
-            snap.absorb_engine(busiest);
-            snap.engine_rows = engines.iter().map(|e| e.engine_rows).sum();
-            snap.engine_busy_s = engines.iter().map(|e| e.engine_busy_s).sum();
-            snap.replans = engines.iter().map(|e| e.replans).sum();
+        if !engines.is_empty() {
+            graft_merged_engines(&mut snap, &engines);
+        }
+        if let Some(report) = self.health_report() {
+            snap.health = report.attrs_for(model);
         }
         Some(snap)
+    }
+
+    /// Start the shard health watchdog (idempotent: a second call
+    /// replaces the first, stopping its thread).  Covers the models
+    /// registered so far — call after registration.
+    pub fn start_watchdog(&self, cfg: WatchdogConfig) {
+        let mut models: Vec<(String, Arc<ModelShared>)> = self
+            .models
+            .iter()
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect();
+        models.sort_by(|a, b| a.0.cmp(&b.0));
+        let wd = Watchdog::spawn(cfg, move |cfg| probe_fleet(&models, cfg));
+        *self.watchdog.lock().unwrap() = Some(wd);
+    }
+
+    /// The watchdog's latest board (`None` until [`Fleet::start_watchdog`];
+    /// empty report until its first probe lands).
+    pub fn health_report(&self) -> Option<HealthReport> {
+        self.watchdog.lock().unwrap().as_ref().map(Watchdog::report)
     }
 
     /// Per-model report lines (name-sorted).
@@ -375,8 +440,10 @@ impl Fleet {
 
     /// Flag every model as shutting down and wake all workers.  After
     /// this, `submit` returns `RouteError::Shutdown`; workers flush
-    /// their remaining queues and exit.  (`shutdown` joins them.)
+    /// their remaining queues and exit.  (`shutdown` joins them.)  The
+    /// watchdog stops first — a draining worker's exit is not a stall.
     pub fn begin_shutdown(&self) {
+        drop(self.watchdog.lock().unwrap().take());
         for m in self.models.values() {
             m.shutdown.store(true, Ordering::Release);
             m.notify();
@@ -408,7 +475,7 @@ where
 {
     // a failed factory ends this shard cleanly; siblings keep serving
     // (and can steal this shard's queue), mirroring the coordinator
-    // worker's behavior
+    // worker's behavior.  The watchdog reports the exit as Stalled.
     let mut model = match factory() {
         Ok(m) => m,
         Err(e) => {
@@ -416,12 +483,16 @@ where
                 "tcbnn-fleet-{}-{shard}: model factory failed, shard exiting: {e:#}",
                 shared.name
             );
+            shared.stats[shard].exited.store(true, Ordering::Release);
             return;
         }
     };
+    let st = &shared.stats[shard];
+    st.started.store(true, Ordering::Release);
+    st.beat(shared.epoch);
     let row_elems = model.row_elems();
     let out_elems = model.out_elems();
-    let sizer = BatchSizer::for_model(
+    let mut sizer = BatchSizer::for_model(
         model.buckets(),
         shared.slo,
         shared.predictor.as_ref(),
@@ -431,11 +502,21 @@ where
             .sizer_restricted
             .store(sizer.restricted(), Ordering::Release);
     }
+    // the cost model the sizer predicted from changes when the engine
+    // re-plans; re-derive the admissible set when that counter moves
+    let mut seen_replans = model.replans();
     let mut batches_run = 0u64;
+    // timing of the steal that fed the next formed batch (count, secs)
+    let mut pending_steal: Option<(usize, f64)> = None;
     loop {
+        // heartbeat every iteration: idle wakes are bounded by
+        // IDLE_POLL, so only a wedged `run_batch` (or a dead thread)
+        // lets this stamp age past the watchdog's stall threshold
+        shared.stats[shard].beat(shared.epoch);
         let shutting = shared.shutdown.load(Ordering::Acquire);
         let now = Instant::now();
         // 1. form from the own queue (forced flush while draining)
+        let t_form = Instant::now();
         if let Some(formed) = shared.queues[shard].try_form(
             sizer.buckets(),
             row_elems,
@@ -443,23 +524,51 @@ where
             now,
             shutting,
         ) {
-            run_batch(&shared, shard, model.as_mut(), formed, out_elems);
+            let assemble_s = t_form.elapsed().as_secs_f64();
+            run_batch(
+                &shared,
+                shard,
+                model.as_mut(),
+                formed,
+                out_elems,
+                assemble_s,
+                pending_steal.take(),
+            );
             batches_run += 1;
             if batches_run % ENGINE_PUBLISH_EVERY == 0 {
                 publish_engine(&shared, shard, model.as_ref());
+            }
+            let replans = model.replans();
+            if replans != seen_replans {
+                seen_replans = replans;
+                sizer = BatchSizer::for_model(
+                    model.buckets(),
+                    shared.slo,
+                    shared.predictor.as_ref(),
+                );
+                if shard == 0 {
+                    shared
+                        .sizer_restricted
+                        .store(sizer.restricted(), Ordering::Release);
+                }
             }
             continue;
         }
         // 2. nothing formable at home: steal the deepest sibling's
         //    oldest requests (up to one admissible batch's worth).
         //    During shutdown each shard drains only its own queue.
-        if !shutting && steal_from_sibling(&shared, shard, &sizer) {
-            shared.stats[shard].steals.fetch_add(1, Ordering::Relaxed);
-            continue; // the stolen work is now formable at home
+        if !shutting {
+            let t_steal = Instant::now();
+            if let Some(n) = steal_from_sibling(&shared, shard, &sizer) {
+                shared.stats[shard].steals.fetch_add(1, Ordering::Relaxed);
+                pending_steal = Some((n, t_steal.elapsed().as_secs_f64()));
+                continue; // the stolen work is now formable at home
+            }
         }
         if shutting {
             // own queue fully drained (forced flush forms any tail)
             publish_engine(&shared, shard, model.as_ref());
+            shared.stats[shard].exited.store(true, Ordering::Release);
             return;
         }
         // 3. sleep until the flush deadline / a submit's wake, capped
@@ -482,15 +591,15 @@ where
 }
 
 /// Move up to one batch's worth of the deepest sibling's oldest
-/// requests into `shard`'s queue.  Only called when `shard` cannot
-/// form a batch, so a successful steal is immediately consumed (no
-/// ping-pong: the minimum steal is a formable bucket's worth or the
-/// victim's whole backlog).
+/// requests into `shard`'s queue; returns how many migrated.  Only
+/// called when `shard` cannot form a batch, so a successful steal is
+/// immediately consumed (no ping-pong: the minimum steal is a formable
+/// bucket's worth or the victim's whole backlog).
 fn steal_from_sibling(
     shared: &ModelShared,
     shard: usize,
     sizer: &BatchSizer,
-) -> bool {
+) -> Option<usize> {
     let Some((victim, depth)) = shared
         .queues
         .iter()
@@ -499,39 +608,56 @@ fn steal_from_sibling(
         .map(|(i, q)| (i, q.depth()))
         .max_by_key(|&(_, d)| d)
     else {
-        return false; // single shard: nobody to steal from
+        return None; // single shard: nobody to steal from
     };
     if depth < sizer.min_bucket() {
-        return false;
+        return None;
     }
     let stolen = shared.queues[victim].pop_front_n(sizer.max_bucket().min(depth));
     if stolen.is_empty() {
-        return false; // raced another thief
+        return None; // raced another thief
     }
-    for r in stolen {
+    let n = stolen.len();
+    for mut r in stolen {
+        r.steals += 1; // the request migrated with its waiter
         shared.queues[shard].push(r);
     }
-    true
+    Some(n)
 }
 
-/// Execute one formed batch and answer its waiters.
+/// Execute one formed batch and answer its waiters.  `assemble_s`
+/// times the batch formation (pop + copy + pad) that produced
+/// `formed`; `steal` carries the count/duration of the sibling steal
+/// that fed it, when there was one.
 fn run_batch(
     shared: &ModelShared,
     shard: usize,
     model: &mut dyn BatchModel,
     formed: Formed,
     out_elems: usize,
+    assemble_s: f64,
+    steal: Option<(usize, f64)>,
 ) {
     let Formed { reqs, data, padded, oldest_wait } = formed;
+    let formed_at = Instant::now();
     let logits = model.run_batch(&data, padded).expect("fleet model run");
+    let execute_s = formed_at.elapsed().as_secs_f64();
     let done = Instant::now();
     let lats: Vec<f64> = reqs
         .iter()
         .map(|r| done.duration_since(r.enqueued).as_secs_f64())
         .collect();
     shared.metrics.record_batch(reqs.len(), padded, &lats);
-    let mut spans = Vec::with_capacity(1 + 4);
+    // span chain: Queue, [Steal], Assemble, Execute, then the model's
+    // per-layer spans (Execute *wraps* the layers — informational, not
+    // additive; same for Steal, contained in the queue wait)
+    let mut spans = Vec::with_capacity(4 + 4);
     spans.push(Span::queue(oldest_wait.as_secs_f64()));
+    if let Some((n, secs)) = steal {
+        spans.push(Span::steal(format!("{n} reqs migrated"), secs));
+    }
+    spans.push(Span::assemble(assemble_s, (data.len() * 4) as u64));
+    spans.push(Span::execute(execute_s, (data.len() * 4) as u64));
     spans.extend(model.layer_spans());
     shared.metrics.traces().push(BatchTrace {
         seq: shared.metrics.batches(),
@@ -541,16 +667,35 @@ fn run_batch(
     if let Some(slo) = shared.slo {
         let d = slo.p99_deadline.as_secs_f64();
         for &l in &lats {
-            if l <= d {
+            let hit = l <= d;
+            if hit {
                 shared.slo_hits.fetch_add(1, Ordering::Relaxed);
             } else {
                 shared.slo_misses.fetch_add(1, Ordering::Relaxed);
             }
+            shared.metrics.record_slo(hit);
         }
     }
     let st = &shared.stats[shard];
     st.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
-    st.batches.fetch_add(1, Ordering::Relaxed);
+    let batch_seq = st.batches.fetch_add(1, Ordering::Relaxed) + 1;
+    if let Some(tw) = &shared.trace {
+        for (row, r) in reqs.iter().enumerate() {
+            tw.observe(&RequestTrace {
+                model: shared.name.clone(),
+                req: r.id,
+                shard,
+                batch_seq,
+                rows: reqs.len(),
+                padded,
+                queue_s: formed_at.duration_since(r.enqueued).as_secs_f64(),
+                steals: r.steals,
+                assemble_s,
+                execute_s,
+                e2e_s: lats[row],
+            });
+        }
+    }
     for (row, req) in reqs.into_iter().enumerate() {
         let l = logits[row * out_elems..(row + 1) * out_elems].to_vec();
         let argmax = l
@@ -573,6 +718,164 @@ fn run_batch(
 /// without engine telemetry, e.g. mocks).
 fn publish_engine(shared: &ModelShared, shard: usize, model: &dyn BatchModel) {
     *shared.stats[shard].engine.lock().unwrap() = model.obs_snapshot();
+}
+
+/// The watchdog's probe: classify every model's shards from liveness
+/// atomics, queue probes, and the windowed SLO miss-rate.  Runs on the
+/// watchdog thread — atomic loads and depth/front peeks only.
+fn probe_fleet(
+    models: &[(String, Arc<ModelShared>)],
+    cfg: &WatchdogConfig,
+) -> HealthReport {
+    let now = Instant::now();
+    let out = models
+        .iter()
+        .map(|(name, m)| {
+            // model-level signal: windowed (shortest-window) miss-rate,
+            // only meaningful when an SLO is configured
+            let miss_rate = if m.slo.is_some() {
+                m.metrics
+                    .window_stats()
+                    .first()
+                    .map(|w| w.slo_miss_rate())
+            } else {
+                None
+            };
+            let shards = m
+                .stats
+                .iter()
+                .enumerate()
+                .map(|(i, st)| {
+                    let heartbeat_age = st.heartbeat_age(m.epoch, now);
+                    let probe = ShardProbe {
+                        started: st.started.load(Ordering::Acquire),
+                        exited: st.exited.load(Ordering::Acquire),
+                        heartbeat_age,
+                        queue_depth: m.queues[i].depth() as u64,
+                        oldest_queue_age: m.queues[i].oldest_age(now),
+                    };
+                    ShardHealth {
+                        shard: i,
+                        state: classify(&probe, miss_rate, cfg),
+                        heartbeat_age_s: heartbeat_age
+                            .map(|d| d.as_secs_f64())
+                            .unwrap_or(0.0),
+                        queue_depth: probe.queue_depth,
+                    }
+                })
+                .collect();
+            ModelHealth { model: name.clone(), shards }
+        })
+        .collect();
+    HealthReport { models: out }
+}
+
+/// Merge the shard replicas' engine-side snapshots onto the fleet
+/// snapshot.  Pure throughput counters and per-layer / per-edge /
+/// per-scheme attribution *sum* across replicas (each replica owns
+/// private executor counters); identity fields (a layer's tag/scheme)
+/// come from the replica that called that layer the most; drift ratios
+/// are sample-weighted means; plan-cache counters — cumulative on the
+/// one cache the replicas share — take the freshest (largest) view.
+fn graft_merged_engines(snap: &mut Snapshot, engines: &[Snapshot]) {
+    snap.engine_rows = engines.iter().map(|e| e.engine_rows).sum();
+    snap.engine_busy_s = engines.iter().map(|e| e.engine_busy_s).sum();
+    snap.replans = engines.iter().map(|e| e.replans).sum();
+    snap.plan_cache_hits =
+        engines.iter().map(|e| e.plan_cache_hits).max().unwrap_or(0);
+    snap.plan_cache_misses =
+        engines.iter().map(|e| e.plan_cache_misses).max().unwrap_or(0);
+
+    // (merged attribution, best single-replica call count for identity)
+    let mut layers: Vec<(LayerAttr, u64)> = Vec::new();
+    for e in engines {
+        for l in &e.layers {
+            match layers.iter_mut().find(|(x, _)| x.index == l.index) {
+                Some((x, best)) => {
+                    x.calls += l.calls;
+                    x.secs += l.secs;
+                    x.predicted_s += l.predicted_s;
+                    if l.calls > *best {
+                        *best = l.calls;
+                        x.tag = l.tag.clone();
+                        x.scheme = l.scheme.clone();
+                    }
+                }
+                None => layers.push((l.clone(), l.calls)),
+            }
+        }
+    }
+    layers.sort_by_key(|(x, _)| x.index);
+    snap.layers = layers.into_iter().map(|(x, _)| x).collect();
+
+    let mut edges: Vec<RepackEdge> = Vec::new();
+    for e in engines {
+        for r in &e.repack_edges {
+            match edges
+                .iter_mut()
+                .find(|x| x.layer == r.layer && x.src == r.src && x.dst == r.dst)
+            {
+                Some(x) => {
+                    x.ops += r.ops;
+                    x.bytes += r.bytes;
+                    x.secs += r.secs;
+                }
+                None => edges.push(r.clone()),
+            }
+        }
+    }
+    edges.sort_by(|a, b| {
+        (a.layer, &a.src, &a.dst).cmp(&(b.layer, &b.src, &b.dst))
+    });
+    snap.repack_edges = edges;
+
+    let mut repacks: Vec<(String, u64, u64)> = Vec::new();
+    for e in engines {
+        for (scheme, ops, bytes) in &e.repacks_by_scheme {
+            match repacks.iter_mut().find(|(s, _, _)| s == scheme) {
+                Some((_, o, b)) => {
+                    *o += ops;
+                    *b += bytes;
+                }
+                None => repacks.push((scheme.clone(), *ops, *bytes)),
+            }
+        }
+    }
+    repacks.sort_by(|a, b| a.0.cmp(&b.0));
+    snap.repacks_by_scheme = repacks;
+
+    let mut drift: Vec<(String, f64, u64)> = Vec::new();
+    for e in engines {
+        for (scheme, ratio, samples) in &e.cost_drift {
+            match drift.iter_mut().find(|(s, _, _)| s == scheme) {
+                Some((_, r, n)) => {
+                    let total = *n + *samples;
+                    if total > 0 {
+                        *r = (*r * *n as f64 + *ratio * *samples as f64)
+                            / total as f64;
+                    }
+                    *n = total;
+                }
+                None => drift.push((scheme.clone(), *ratio, *samples)),
+            }
+        }
+    }
+    drift.sort_by(|a, b| a.0.cmp(&b.0));
+    snap.cost_drift = drift;
+}
+
+impl ScrapeSource for Fleet {
+    /// Name-sorted per-model snapshots — `/metrics`, `/snapshot.json`
+    /// and `/healthz` all render straight off this.
+    fn snapshots(&self) -> Vec<(String, Snapshot)> {
+        self.model_names()
+            .into_iter()
+            .map(|name| {
+                let snap = self.snapshot(&name).expect("registered");
+                (name, snap)
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -658,6 +961,7 @@ mod tests {
                     id: i,
                     input: vec![i as f32; 4],
                     enqueued: Instant::now(),
+                    steals: 0,
                     tx,
                 });
                 rx
@@ -710,6 +1014,270 @@ mod tests {
         // zero lost waiters: every accepted request is answered
         for rx in accepted {
             rx.recv_timeout(Duration::from_secs(60)).expect("accepted => answered");
+        }
+    }
+
+    /// A mock whose engine-side snapshot is synthetic per-replica
+    /// attribution — exercises the cross-replica merge in
+    /// `Fleet::snapshot` without a real engine.
+    struct AttrMock {
+        inner: MockModel,
+        replica: usize,
+    }
+
+    impl BatchModel for AttrMock {
+        fn run_batch(&mut self, data: &[f32], padded: usize) -> Result<Vec<f32>> {
+            self.inner.run_batch(data, padded)
+        }
+        fn row_elems(&self) -> usize {
+            self.inner.row_elems()
+        }
+        fn out_elems(&self) -> usize {
+            self.inner.out_elems()
+        }
+        fn buckets(&self) -> Vec<usize> {
+            self.inner.buckets()
+        }
+        fn obs_snapshot(&self) -> Option<Snapshot> {
+            let mut s = Snapshot::default();
+            if self.replica == 0 {
+                s.engine_rows = 30;
+                s.engine_busy_s = 0.3;
+                s.plan_cache_hits = 5;
+                s.plan_cache_misses = 2;
+                s.replans = 1;
+                s.layers = vec![LayerAttr {
+                    index: 0,
+                    tag: "1024FC".to_string(),
+                    scheme: "FASTPATH".to_string(),
+                    calls: 3,
+                    secs: 0.3,
+                    predicted_s: 0.2,
+                }];
+                s.cost_drift = vec![("FASTPATH".to_string(), 2.0, 2)];
+                s.repacks_by_scheme = vec![("FASTPATH".to_string(), 1, 100)];
+                s.repack_edges = vec![RepackEdge {
+                    layer: 0,
+                    src: "Row32".to_string(),
+                    dst: "Blocked64".to_string(),
+                    ops: 1,
+                    bytes: 10,
+                    secs: 1e-3,
+                }];
+            } else {
+                s.engine_rows = 10;
+                s.engine_busy_s = 0.1;
+                s.plan_cache_hits = 6; // fresher view of the shared cache
+                s.plan_cache_misses = 2;
+                s.replans = 0;
+                s.layers = vec![LayerAttr {
+                    index: 0,
+                    tag: "1024FC-alt".to_string(),
+                    scheme: "SBNN-64".to_string(),
+                    calls: 1,
+                    secs: 0.1,
+                    predicted_s: 0.1,
+                }];
+                s.cost_drift = vec![("FASTPATH".to_string(), 1.0, 2)];
+                s.repacks_by_scheme = vec![("FASTPATH".to_string(), 2, 50)];
+                s.repack_edges = vec![RepackEdge {
+                    layer: 0,
+                    src: "Row32".to_string(),
+                    dst: "Blocked64".to_string(),
+                    ops: 2,
+                    bytes: 20,
+                    secs: 2e-3,
+                }];
+            }
+            Some(s)
+        }
+    }
+
+    #[test]
+    fn snapshot_merges_attribution_across_replicas() {
+        let replica = Arc::new(AtomicUsize::new(0));
+        let mut fleet = Fleet::new();
+        let r = Arc::clone(&replica);
+        fleet.register(
+            "m",
+            FleetModelConfig { shards: 2, ..Default::default() },
+            move || {
+                Ok(Box::new(AttrMock {
+                    inner: MockModel {
+                        row_elems: 4,
+                        out_elems: 3,
+                        delay: Duration::ZERO,
+                    },
+                    replica: r.fetch_add(1, Ordering::Relaxed),
+                }) as Box<dyn BatchModel>)
+            },
+        );
+        // drain + exit publishes each replica's engine snapshot
+        fleet.begin_shutdown();
+        let shared = Arc::clone(&fleet.models["m"]);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while shared
+            .stats
+            .iter()
+            .any(|s| s.engine.lock().unwrap().is_none())
+        {
+            assert!(Instant::now() < deadline, "replicas never published");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let snap = fleet.snapshot("m").unwrap();
+        // throughput counters summed across replicas
+        assert_eq!(snap.engine_rows, 40);
+        assert!((snap.engine_busy_s - 0.4).abs() < 1e-9);
+        assert_eq!(snap.replans, 1);
+        // shared plan cache: freshest (largest) counter view
+        assert_eq!(snap.plan_cache_hits, 6);
+        assert_eq!(snap.plan_cache_misses, 2);
+        // per-layer attribution merged, not busiest-shard sampled:
+        // calls/secs/predicted sum; identity from the most-called replica
+        assert_eq!(snap.layers.len(), 1);
+        let l = &snap.layers[0];
+        assert_eq!(l.calls, 4);
+        assert!((l.secs - 0.4).abs() < 1e-9);
+        assert!((l.predicted_s - 0.3).abs() < 1e-9);
+        assert_eq!(l.tag, "1024FC");
+        assert_eq!(l.scheme, "FASTPATH");
+        // drift: sample-weighted mean, samples summed
+        assert_eq!(snap.cost_drift.len(), 1);
+        let (ref scheme, ratio, n) = snap.cost_drift[0];
+        assert_eq!(scheme, "FASTPATH");
+        assert!((ratio - 1.5).abs() < 1e-9, "weighted (2.0*2 + 1.0*2)/4");
+        assert_eq!(n, 4);
+        // repack scheme totals and per-edge traffic summed
+        assert_eq!(snap.repacks_by_scheme, vec![("FASTPATH".to_string(), 3, 150)]);
+        assert_eq!(snap.repack_edges.len(), 1);
+        assert_eq!(snap.repack_edges[0].ops, 3);
+        assert_eq!(snap.repack_edges[0].bytes, 30);
+    }
+
+    #[test]
+    fn watchdog_reports_health_and_flags_an_exited_worker() {
+        let mut fleet = Fleet::new();
+        fleet.register("ok", FleetModelConfig::default(), mock_factory(Duration::ZERO));
+        fleet.register(
+            "bad",
+            FleetModelConfig { shards: 1, ..Default::default() },
+            || anyhow::bail!("no accelerator"),
+        );
+        assert!(fleet.health_report().is_none(), "no watchdog yet");
+        fleet.start_watchdog(WatchdogConfig {
+            period: Duration::from_millis(5),
+            // generous liveness thresholds: this test only drives the
+            // exited-worker path, and CI boxes deschedule threads
+            stall_after: Duration::from_secs(30),
+            max_queue_age: Duration::from_secs(30),
+            ..Default::default()
+        });
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            assert!(Instant::now() < deadline, "watchdog never saw the exit");
+            let Some(report) = fleet.health_report() else { continue };
+            if report.models.len() == 2 && !report.all_up() {
+                let bad = &report.models[0]; // name-sorted: bad, ok
+                assert_eq!(bad.model, "bad");
+                assert_eq!(bad.shards[0].state.name(), "stalled");
+                assert_eq!(bad.shards[0].state.reason(), "worker exited");
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // the health block lands on the per-model snapshot + scrape feed
+        let snap = fleet.snapshot("bad").unwrap();
+        assert_eq!(snap.health.len(), 1);
+        assert_eq!(snap.health[0].state, "stalled");
+        assert!(!snap.health[0].is_up());
+        let snaps = fleet.snapshots();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].0, "bad");
+        // shutdown stops the watchdog before workers exit: no
+        // false-stall report survives
+        fleet.begin_shutdown();
+        assert!(fleet.health_report().is_none());
+    }
+
+    /// Delegating mock with an externally-driven re-plan counter — the
+    /// satellite hook: a worker must re-derive its SLO-admissible
+    /// buckets when the model re-plans.
+    struct ReplanMock {
+        inner: MockModel,
+        replans: Arc<AtomicU64>,
+    }
+
+    impl BatchModel for ReplanMock {
+        fn run_batch(&mut self, data: &[f32], padded: usize) -> Result<Vec<f32>> {
+            self.inner.run_batch(data, padded)
+        }
+        fn row_elems(&self) -> usize {
+            self.inner.row_elems()
+        }
+        fn out_elems(&self) -> usize {
+            self.inner.out_elems()
+        }
+        fn buckets(&self) -> Vec<usize> {
+            self.inner.buckets()
+        }
+        fn replans(&self) -> u64 {
+            self.replans.load(Ordering::Acquire)
+        }
+    }
+
+    #[test]
+    fn sizer_rederives_admissible_buckets_after_a_replan() {
+        // predicted cost per row, swappable at runtime (nanoseconds)
+        let cost_ns = Arc::new(AtomicU64::new(1_000)); // 8 rows -> 8us: all fit
+        let replans = Arc::new(AtomicU64::new(0));
+        let pred_cost = Arc::clone(&cost_ns);
+        let predictor: BatchSecsPredictor = Arc::new(move |b| {
+            Some(pred_cost.load(Ordering::Acquire) as f64 * 1e-9 * b as f64)
+        });
+        let mut fleet = Fleet::new();
+        let rp = Arc::clone(&replans);
+        fleet.register(
+            "m",
+            FleetModelConfig {
+                shards: 1,
+                slo: Some(SloConfig { p99_deadline: Duration::from_millis(1) }),
+                predictor: Some(predictor),
+                ..Default::default()
+            },
+            move || {
+                Ok(Box::new(ReplanMock {
+                    inner: MockModel {
+                        row_elems: 4,
+                        out_elems: 3,
+                        delay: Duration::ZERO,
+                    },
+                    replans: Arc::clone(&rp),
+                }) as Box<dyn BatchModel>)
+            },
+        );
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while fleet.slo_restricted("m") != Some(false) {
+            assert!(Instant::now() < deadline, "worker never built its sizer");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // the cost model drifts 100x (as a live re-plan would discover):
+        // t(8)=0.8ms fits the 1ms deadline, t(32)=3.2ms no longer does
+        cost_ns.store(100_000, Ordering::Release);
+        replans.store(1, Ordering::Release);
+        // the worker re-checks after its next batch
+        let rxs: Vec<_> = (0..8)
+            .map(|i| fleet.submit("m", vec![i as f32; 4]).expect("admitted"))
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).expect("answered");
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while fleet.slo_restricted("m") != Some(true) {
+            assert!(
+                Instant::now() < deadline,
+                "sizer never re-derived after the re-plan"
+            );
+            std::thread::sleep(Duration::from_millis(2));
         }
     }
 }

@@ -1,0 +1,396 @@
+//! Shard health watchdog: a monitor thread that classifies every fleet
+//! shard as Healthy / Degraded / Stalled from cheap liveness probes.
+//!
+//! Fleet workers heartbeat (an atomic timestamp) on every loop
+//! iteration — idle workers wake at least every `IDLE_POLL` (10ms), so
+//! a heartbeat older than [`WatchdogConfig::stall_after`] means the
+//! worker is *stuck*: wedged inside the model's forward call or dead
+//! without having marked itself exited.  Classification, in priority
+//! order:
+//!
+//! 1. worker thread exited (factory failure, panic unwound) ->
+//!    [`ShardState::Stalled`] `"worker exited"`;
+//! 2. heartbeat older than `stall_after` -> `Stalled` (the probe that
+//!    catches a hung `run_batch`);
+//! 3. oldest queued request older than `max_queue_age` ->
+//!    [`ShardState::Degraded`] (work is moving, but not fast enough);
+//! 4. windowed SLO miss-rate above `max_slo_miss_rate` -> `Degraded`
+//!    (model-level signal, applied to its shards);
+//! 5. otherwise `Healthy` — including a shard whose worker has not
+//!    started yet (model factories can take seconds; startup is not a
+//!    failure).
+//!
+//! The watchdog never takes a queue's formation lock for longer than a
+//! depth/front probe and runs off the serving path entirely.  Its
+//! report feeds `/healthz` (HTTP 503 when any shard is Stalled) and the
+//! `health` block of the obs snapshot (`shard_up` etc. in
+//! `/metrics`) — see `docs/OBSERVABILITY.md`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::obs::export::ShardHealthAttr;
+
+/// Watchdog thresholds.
+#[derive(Clone, Copy, Debug)]
+pub struct WatchdogConfig {
+    /// probe interval (also bounds how fast `/healthz` reacts)
+    pub period: Duration,
+    /// heartbeat age beyond which a started, non-exited shard is Stalled
+    pub stall_after: Duration,
+    /// oldest-queued-request age beyond which a live shard is Degraded
+    pub max_queue_age: Duration,
+    /// windowed (10s) SLO miss-rate beyond which a model's live shards
+    /// are Degraded; only evaluated for models with an SLO configured
+    pub max_slo_miss_rate: f64,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig {
+            period: Duration::from_millis(100),
+            stall_after: Duration::from_millis(500),
+            max_queue_age: Duration::from_millis(250),
+            max_slo_miss_rate: 0.5,
+        }
+    }
+}
+
+/// One shard's classified state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardState {
+    Healthy,
+    /// serving, but a soft threshold is breached
+    Degraded { reason: String },
+    /// not making progress — flips `/healthz` to 503
+    Stalled { reason: String },
+}
+
+impl ShardState {
+    /// Lowercase state name — the `state` string in
+    /// [`ShardHealthAttr`] and the `shard_health_state` metric label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardState::Healthy => "healthy",
+            ShardState::Degraded { .. } => "degraded",
+            ShardState::Stalled { .. } => "stalled",
+        }
+    }
+
+    pub fn reason(&self) -> &str {
+        match self {
+            ShardState::Healthy => "",
+            ShardState::Degraded { reason } | ShardState::Stalled { reason } => {
+                reason
+            }
+        }
+    }
+
+    /// Counts toward `/healthz` 200 (everything except Stalled).
+    pub fn is_up(&self) -> bool {
+        !matches!(self, ShardState::Stalled { .. })
+    }
+}
+
+/// Raw observations the fleet takes for one shard — classification
+/// input, kept separate so [`classify`] is pure and unit-testable.
+#[derive(Clone, Debug, Default)]
+pub struct ShardProbe {
+    /// worker thread has entered its loop (factory finished)
+    pub started: bool,
+    /// worker thread has returned (factory failure or shutdown drain)
+    pub exited: bool,
+    /// time since the worker's last loop iteration (None: none yet)
+    pub heartbeat_age: Option<Duration>,
+    pub queue_depth: u64,
+    /// age of the oldest queued request (None: queue empty)
+    pub oldest_queue_age: Option<Duration>,
+}
+
+/// Classify one shard (see the module docs for the priority order).
+/// `slo_miss_rate` is the model's windowed miss-rate, `None` when the
+/// model has no SLO configured.
+pub fn classify(
+    p: &ShardProbe,
+    slo_miss_rate: Option<f64>,
+    cfg: &WatchdogConfig,
+) -> ShardState {
+    if p.exited {
+        return ShardState::Stalled { reason: "worker exited".to_string() };
+    }
+    if !p.started {
+        return ShardState::Healthy; // startup grace: factory still building
+    }
+    if let Some(age) = p.heartbeat_age {
+        if age > cfg.stall_after {
+            return ShardState::Stalled {
+                reason: format!("no heartbeat for {:.2}s", age.as_secs_f64()),
+            };
+        }
+    }
+    if let Some(age) = p.oldest_queue_age {
+        if age > cfg.max_queue_age {
+            return ShardState::Degraded {
+                reason: format!(
+                    "oldest queued request waiting {:.0}ms",
+                    age.as_secs_f64() * 1e3
+                ),
+            };
+        }
+    }
+    if let Some(rate) = slo_miss_rate {
+        if rate > cfg.max_slo_miss_rate {
+            return ShardState::Degraded {
+                reason: format!("windowed SLO miss-rate {:.0}%", rate * 100.0),
+            };
+        }
+    }
+    ShardState::Healthy
+}
+
+/// One shard's classified health plus the probe facts worth exporting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardHealth {
+    pub shard: usize,
+    pub state: ShardState,
+    /// seconds since the worker's last heartbeat (0 before the first)
+    pub heartbeat_age_s: f64,
+    pub queue_depth: u64,
+}
+
+impl ShardHealth {
+    /// Lower into the schema-stable obs representation.
+    pub fn to_attr(&self) -> ShardHealthAttr {
+        ShardHealthAttr {
+            shard: self.shard,
+            state: self.state.name().to_string(),
+            reason: self.state.reason().to_string(),
+            last_batch_age_s: self.heartbeat_age_s,
+            queue_depth: self.queue_depth,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelHealth {
+    pub model: String,
+    pub shards: Vec<ShardHealth>,
+}
+
+/// The watchdog's published board: every model's shard states as of
+/// the last probe.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HealthReport {
+    pub models: Vec<ModelHealth>,
+}
+
+impl HealthReport {
+    /// No shard anywhere is Stalled (the `/healthz` 200 condition).
+    pub fn all_up(&self) -> bool {
+        self.models
+            .iter()
+            .all(|m| m.shards.iter().all(|s| s.state.is_up()))
+    }
+
+    /// Every shard is fully Healthy (no Degraded either).
+    pub fn all_healthy(&self) -> bool {
+        self.models
+            .iter()
+            .all(|m| m.shards.iter().all(|s| s.state == ShardState::Healthy))
+    }
+
+    /// One model's shard states lowered for the obs snapshot.
+    pub fn attrs_for(&self, model: &str) -> Vec<ShardHealthAttr> {
+        self.models
+            .iter()
+            .find(|m| m.model == model)
+            .map(|m| m.shards.iter().map(ShardHealth::to_attr).collect())
+            .unwrap_or_default()
+    }
+}
+
+/// The monitor thread.  `probe` runs once per period and returns the
+/// fresh report; the fleet supplies a closure with access to its shard
+/// internals (heartbeats, queue depths), keeping this type free of any
+/// fleet dependency.
+pub struct Watchdog {
+    stop: Arc<AtomicBool>,
+    board: Arc<Mutex<HealthReport>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Watchdog {
+    pub fn spawn<F>(cfg: WatchdogConfig, probe: F) -> Watchdog
+    where
+        F: Fn(&WatchdogConfig) -> HealthReport + Send + 'static,
+    {
+        let stop = Arc::new(AtomicBool::new(false));
+        let board = Arc::new(Mutex::new(HealthReport::default()));
+        let (stop_t, board_t) = (Arc::clone(&stop), Arc::clone(&board));
+        let handle = std::thread::Builder::new()
+            .name("tcbnn-watchdog".to_string())
+            .spawn(move || {
+                while !stop_t.load(Ordering::Acquire) {
+                    *board_t.lock().unwrap() = probe(&cfg);
+                    // sleep the period in short slices so stop() joins
+                    // promptly even with a long probe interval
+                    let until = Instant::now() + cfg.period;
+                    while !stop_t.load(Ordering::Acquire) {
+                        let left = until.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            break;
+                        }
+                        std::thread::sleep(left.min(Duration::from_millis(20)));
+                    }
+                }
+            })
+            .expect("spawn watchdog");
+        Watchdog { stop, board, handle: Some(handle) }
+    }
+
+    /// The latest published report (empty until the first probe lands).
+    pub fn report(&self) -> HealthReport {
+        self.board.lock().unwrap().clone()
+    }
+
+    /// Stop and join the monitor thread (also happens on drop).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn live_probe() -> ShardProbe {
+        ShardProbe {
+            started: true,
+            exited: false,
+            heartbeat_age: Some(Duration::from_millis(5)),
+            queue_depth: 0,
+            oldest_queue_age: None,
+        }
+    }
+
+    #[test]
+    fn classification_priority_order() {
+        let cfg = WatchdogConfig::default();
+        // live, fresh heartbeat, empty queue, no SLO: healthy
+        assert_eq!(classify(&live_probe(), None, &cfg), ShardState::Healthy);
+        // not started yet: startup grace, even with no heartbeat
+        let p = ShardProbe::default();
+        assert_eq!(classify(&p, None, &cfg), ShardState::Healthy);
+        // exited wins over everything
+        let p = ShardProbe { exited: true, ..live_probe() };
+        let s = classify(&p, Some(1.0), &cfg);
+        assert_eq!(s.name(), "stalled");
+        assert_eq!(s.reason(), "worker exited");
+        assert!(!s.is_up());
+        // stale heartbeat: stalled, even when the queue is fine
+        let p = ShardProbe {
+            heartbeat_age: Some(Duration::from_secs(2)),
+            ..live_probe()
+        };
+        let s = classify(&p, None, &cfg);
+        assert_eq!(s.name(), "stalled");
+        assert!(s.reason().contains("no heartbeat"), "{}", s.reason());
+        // old queue on a live shard: degraded (still up)
+        let p = ShardProbe {
+            queue_depth: 9,
+            oldest_queue_age: Some(Duration::from_secs(1)),
+            ..live_probe()
+        };
+        let s = classify(&p, None, &cfg);
+        assert_eq!(s.name(), "degraded");
+        assert!(s.is_up());
+        // windowed SLO miss-rate: degraded only past the threshold
+        assert_eq!(classify(&live_probe(), Some(0.5), &cfg), ShardState::Healthy);
+        let s = classify(&live_probe(), Some(0.51), &cfg);
+        assert_eq!(s.name(), "degraded");
+        assert!(s.reason().contains("SLO"), "{}", s.reason());
+    }
+
+    #[test]
+    fn report_rollups_and_attr_lowering() {
+        let healthy = ShardHealth {
+            shard: 0,
+            state: ShardState::Healthy,
+            heartbeat_age_s: 0.004,
+            queue_depth: 1,
+        };
+        let stalled = ShardHealth {
+            shard: 1,
+            state: ShardState::Stalled { reason: "worker exited".to_string() },
+            heartbeat_age_s: 3.0,
+            queue_depth: 7,
+        };
+        let degraded = ShardHealth {
+            shard: 0,
+            state: ShardState::Degraded { reason: "x".to_string() },
+            heartbeat_age_s: 0.01,
+            queue_depth: 2,
+        };
+        let r = HealthReport {
+            models: vec![ModelHealth {
+                model: "m".to_string(),
+                shards: vec![healthy.clone(), stalled.clone()],
+            }],
+        };
+        assert!(!r.all_up());
+        assert!(!r.all_healthy());
+        let attrs = r.attrs_for("m");
+        assert_eq!(attrs.len(), 2);
+        assert_eq!(attrs[1].state, "stalled");
+        assert_eq!(attrs[1].reason, "worker exited");
+        assert_eq!(attrs[1].queue_depth, 7);
+        assert!(!attrs[1].is_up());
+        assert!(r.attrs_for("nope").is_empty());
+        let r = HealthReport {
+            models: vec![ModelHealth {
+                model: "m".to_string(),
+                shards: vec![healthy, degraded],
+            }],
+        };
+        assert!(r.all_up(), "degraded still serves traffic");
+        assert!(!r.all_healthy());
+    }
+
+    #[test]
+    fn watchdog_publishes_and_stops() {
+        use std::sync::atomic::AtomicU64;
+        let probes = Arc::new(AtomicU64::new(0));
+        let p = Arc::clone(&probes);
+        let cfg = WatchdogConfig {
+            period: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let mut wd = Watchdog::spawn(cfg, move |_| {
+            p.fetch_add(1, Ordering::Relaxed);
+            HealthReport {
+                models: vec![ModelHealth { model: "m".to_string(), shards: vec![] }],
+            }
+        });
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while wd.report().models.is_empty() {
+            assert!(Instant::now() < deadline, "watchdog never published");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(wd.report().models[0].model, "m");
+        wd.stop();
+        let after = probes.load(Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(probes.load(Ordering::Relaxed), after, "stopped probing");
+    }
+}

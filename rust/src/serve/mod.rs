@@ -15,18 +15,29 @@
 //! * **SLO-aware batch sizing** ([`slo`]): given a p99 deadline, batch
 //!   formation is restricted to the largest buckets whose predicted
 //!   service time (the planner's Live/Calibrated/Analytic cost source)
-//!   still meets the deadline, replacing the fixed bucket list.
+//!   still meets the deadline, replacing the fixed bucket list.  The
+//!   admissible set is re-derived whenever the engine re-plans.
+//! * **Shard health watchdog** ([`health`]): a monitor thread
+//!   classifies every shard Healthy / Degraded / Stalled from worker
+//!   heartbeats, queue age, and the windowed SLO miss-rate; the board
+//!   feeds `/healthz` and the snapshot's `health` block.
 //!
 //! Telemetry flows through the same `obs::Snapshot` as the rest of the
-//! stack, extended with per-model sheds/steals/SLO counters and
-//! per-shard attribution ([`crate::obs::ShardAttr`]).  See
-//! `docs/SERVING.md`.
+//! stack, extended with per-model sheds/steals/SLO counters, per-shard
+//! attribution ([`crate::obs::ShardAttr`]), rolling-window stats, and
+//! shard health ([`crate::obs::ShardHealthAttr`]).  The fleet is an
+//! [`crate::obs::ScrapeSource`], so `obs::ScrapeServer` exposes it
+//! live over HTTP.  See `docs/SERVING.md`.
 
 pub mod admission;
 pub mod fleet;
+pub mod health;
 pub(crate) mod queue;
 pub mod slo;
 
 pub use admission::{Admission, AdmissionConfig, Overload};
 pub use fleet::{Fleet, FleetError, FleetModelConfig};
+pub use health::{
+    HealthReport, ModelHealth, ShardHealth, ShardState, Watchdog, WatchdogConfig,
+};
 pub use slo::{plan_predictor, BatchSecsPredictor, BatchSizer, SloConfig};

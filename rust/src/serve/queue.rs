@@ -25,6 +25,9 @@ pub(crate) struct FleetReq {
     pub id: u64,
     pub input: Vec<f32>,
     pub enqueued: Instant,
+    /// shard-to-shard migrations so far (incremented by the thief;
+    /// surfaced per request in the sampled trace log)
+    pub steals: u64,
     pub tx: Sender<Response>,
 }
 
@@ -68,6 +71,13 @@ impl ShardQueue {
         let out: Vec<FleetReq> = q.drain(..n).collect();
         self.depth.store(q.len(), Ordering::Release);
         out
+    }
+
+    /// Age of the oldest queued request (`None` when empty) — the
+    /// watchdog's queue-age probe.
+    pub fn oldest_age(&self, now: Instant) -> Option<Duration> {
+        let q = self.q.lock().unwrap();
+        q.front().map(|f| now.saturating_duration_since(f.enqueued))
     }
 
     /// Time until the oldest waiter's partial-flush deadline (zero when
@@ -128,7 +138,7 @@ mod tests {
 
     fn req(id: u64, t: Instant) -> (FleetReq, std::sync::mpsc::Receiver<Response>) {
         let (tx, rx) = channel();
-        (FleetReq { id, input: vec![id as f32; 4], enqueued: t, tx }, rx)
+        (FleetReq { id, input: vec![id as f32; 4], enqueued: t, steals: 0, tx }, rx)
     }
 
     #[test]
@@ -159,6 +169,7 @@ mod tests {
         // 3 stragglers, not yet due: no batch
         assert!(q.try_form(&[8, 32], 4, wait, t0, false).is_none());
         assert_eq!(q.time_until_flush(wait, t0), Some(wait));
+        assert_eq!(q.oldest_age(t0 + wait), Some(wait));
         // due: flush into the smallest bucket, tail padded from row 2
         let later = t0 + Duration::from_millis(2);
         let f = q.try_form(&[8, 32], 4, wait, later, false).expect("flush");
@@ -169,6 +180,7 @@ mod tests {
         assert_eq!(&f.data[2 * 4..3 * 4], &f.data[7 * 4..8 * 4]);
         assert_eq!(q.depth(), 0);
         assert_eq!(q.time_until_flush(wait, later), None);
+        assert_eq!(q.oldest_age(later), None);
     }
 
     #[test]

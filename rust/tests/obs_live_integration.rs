@@ -1,0 +1,719 @@
+//! Live observability-plane tests: a running `serve::Fleet` scraped
+//! over real HTTP while it serves traffic.
+//!
+//! Covers the tentpole end to end — `/metrics` returns a
+//! strictly-well-formed Prometheus exposition with windowed *and*
+//! cumulative families, `/healthz` answers 200 while every shard is
+//! healthy and flips to 503 within one watchdog period of a shard
+//! stalling (and back once it recovers), `/snapshot.json` round-trips
+//! through `Snapshot::from_json`, and the sampled JSONL trace log
+//! decomposes every request's latency into parseable lines.
+//!
+//! The Prometheus validator below is deliberately strict (text-format
+//! grammar, label escaping, cumulative `le` buckets ending at `+Inf`,
+//! counter naming) so a renderer regression fails here before any
+//! external scraper sees it.  Everything runs on MockModel — no GPU,
+//! no network beyond loopback, no external crates.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use tcbnn::coordinator::server::{BatchModel, MockModel};
+use tcbnn::engine::json::Value;
+use tcbnn::obs::{
+    http_get, render_prometheus_fleet, LayerAttr, ScrapeServer, ScrapeSource,
+    Snapshot, TraceWriter, OBS_SCHEMA,
+};
+use tcbnn::serve::{Fleet, FleetModelConfig, WatchdogConfig};
+
+fn mock_factory(
+    delay: Duration,
+) -> impl Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + Clone + 'static
+{
+    move || {
+        Ok(Box::new(MockModel { row_elems: 4, out_elems: 3, delay })
+            as Box<dyn BatchModel>)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A strict Prometheus text-format (0.0.4) validator.
+// ---------------------------------------------------------------------------
+
+fn is_name_char(c: char, first: bool) -> bool {
+    c.is_ascii_alphabetic() || c == '_' || c == ':' || (!first && c.is_ascii_digit())
+}
+
+/// Parse one sample line `name[{k="v",...}] value` into its parts,
+/// undoing label-value escapes (`\\`, `\"`, `\n`).  Rejects anything
+/// off-grammar: bad names, bad escapes, unterminated label sets,
+/// trailing tokens (timestamps), non-numeric values.
+fn parse_sample(line: &str) -> Result<(String, Vec<(String, String)>, f64), String> {
+    let mut chars = line.chars().peekable();
+    let mut name = String::new();
+    while let Some(&c) = chars.peek() {
+        if is_name_char(c, name.is_empty()) {
+            name.push(c);
+            chars.next();
+        } else {
+            break;
+        }
+    }
+    if name.is_empty() {
+        return Err(format!("no metric name in {line:?}"));
+    }
+    let mut labels = Vec::new();
+    if chars.peek() == Some(&'{') {
+        chars.next();
+        loop {
+            let mut key = String::new();
+            while let Some(&c) = chars.peek() {
+                if is_name_char(c, key.is_empty()) {
+                    key.push(c);
+                    chars.next();
+                } else {
+                    break;
+                }
+            }
+            if key.is_empty() {
+                return Err(format!("empty label key in {line:?}"));
+            }
+            if chars.next() != Some('=') || chars.next() != Some('"') {
+                return Err(format!("label {key:?} not followed by =\" in {line:?}"));
+            }
+            let mut val = String::new();
+            loop {
+                match chars.next() {
+                    Some('\\') => match chars.next() {
+                        Some('\\') => val.push('\\'),
+                        Some('"') => val.push('"'),
+                        Some('n') => val.push('\n'),
+                        other => {
+                            return Err(format!("bad escape {other:?} in {line:?}"))
+                        }
+                    },
+                    Some('"') => break,
+                    Some(c) => val.push(c),
+                    None => {
+                        return Err(format!("unterminated label value in {line:?}"))
+                    }
+                }
+            }
+            labels.push((key, val));
+            match chars.next() {
+                Some(',') => continue,
+                Some('}') => break,
+                other => {
+                    return Err(format!(
+                        "expected ',' or '}}' after label, got {other:?} in {line:?}"
+                    ))
+                }
+            }
+        }
+    }
+    if chars.next() != Some(' ') {
+        return Err(format!("expected single space before value in {line:?}"));
+    }
+    let value: String = chars.collect();
+    if value.is_empty() || value.contains(' ') {
+        return Err(format!("expected exactly one value token in {line:?}"));
+    }
+    let v: f64 = value
+        .parse()
+        .map_err(|e| format!("non-numeric value {value:?} in {line:?}: {e}"))?;
+    Ok((name, labels, v))
+}
+
+/// Serialize a label set minus `le` — the histogram series key.
+fn series_key(labels: &[(String, String)]) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .filter(|(k, _)| k != "le")
+        .map(|(k, v)| format!("{k}={v:?}"))
+        .collect();
+    parts.sort();
+    parts.join(",")
+}
+
+/// Per-histogram-series accounting while its family block is open.
+#[derive(Default)]
+struct HistSeries {
+    buckets: Vec<(String, f64)>,
+    sum: bool,
+    count: Option<f64>,
+}
+
+/// Close out a histogram family: every series needs cumulative
+/// non-decreasing buckets ending at `le="+Inf"`, a `_sum`, and a
+/// `_count` equal to the `+Inf` bucket.
+fn finish_histogram(family: &str, series: &[(String, HistSeries)]) {
+    assert!(!series.is_empty(), "{family}: histogram family with no samples");
+    for (key, s) in series {
+        assert!(
+            !s.buckets.is_empty(),
+            "{family}{{{key}}}: histogram series without buckets"
+        );
+        let mut prev = f64::NEG_INFINITY;
+        for (le, cum) in &s.buckets {
+            assert!(
+                le.parse::<f64>().is_ok(),
+                "{family}{{{key}}}: unparseable le={le:?}"
+            );
+            assert!(
+                *cum >= prev,
+                "{family}{{{key}}}: bucket counts not cumulative at le={le}"
+            );
+            prev = *cum;
+        }
+        let (last_le, last_cum) = s.buckets.last().unwrap();
+        assert_eq!(last_le, "+Inf", "{family}{{{key}}}: buckets must end at +Inf");
+        assert!(s.sum, "{family}{{{key}}}: missing _sum");
+        assert_eq!(
+            s.count,
+            Some(*last_cum),
+            "{family}{{{key}}}: _count must equal the +Inf bucket"
+        );
+    }
+}
+
+/// Assert `body` is a strictly-well-formed exposition: every line is
+/// `# HELP`, `# TYPE`, or a sample; `# TYPE` immediately follows its
+/// `# HELP` and names each family exactly once; every sample belongs
+/// to the family block it appears under; counter families end in
+/// `_total` with non-negative values; histogram families satisfy
+/// [`finish_histogram`].  Returns the number of sample lines.
+fn validate_prometheus(body: &str) -> usize {
+    let mut seen_families: Vec<String> = Vec::new();
+    let mut cur: Option<(String, String)> = None;
+    let mut pending_help: Option<String> = None;
+    let mut hist: Vec<(String, HistSeries)> = Vec::new();
+    let mut samples = 0usize;
+
+    let close_family = |cur: &Option<(String, String)>,
+                            hist: &mut Vec<(String, HistSeries)>| {
+        if let Some((fam, kind)) = cur {
+            if kind == "histogram" {
+                finish_histogram(fam, hist);
+                hist.clear();
+            }
+        }
+    };
+
+    for line in body.lines() {
+        assert!(!line.is_empty(), "blank line in exposition");
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            assert!(pending_help.is_none(), "two HELP lines in a row at {line:?}");
+            let (name, text) =
+                rest.split_once(' ').unwrap_or_else(|| panic!("bare HELP {line:?}"));
+            assert!(!text.trim().is_empty(), "empty HELP text for {name}");
+            pending_help = Some(name.to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) =
+                rest.split_once(' ').unwrap_or_else(|| panic!("bare TYPE {line:?}"));
+            assert_eq!(
+                pending_help.take().as_deref(),
+                Some(name),
+                "TYPE for {name} must directly follow its HELP"
+            );
+            assert!(
+                ["counter", "gauge", "histogram"].contains(&kind),
+                "unknown TYPE {kind:?} for {name}"
+            );
+            assert!(
+                name.starts_with("tcbnn_"),
+                "family {name} outside the tcbnn namespace"
+            );
+            assert!(
+                !seen_families.iter().any(|f| f == name),
+                "family {name} declared twice"
+            );
+            if kind == "counter" {
+                assert!(
+                    name.ends_with("_total"),
+                    "counter family {name} must end in _total"
+                );
+            }
+            close_family(&cur, &mut hist);
+            seen_families.push(name.to_string());
+            cur = Some((name.to_string(), kind.to_string()));
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment line {line:?}");
+        assert!(pending_help.is_none(), "sample between HELP and TYPE: {line:?}");
+        let (name, labels, value) = parse_sample(line).unwrap();
+        samples += 1;
+        let (fam, kind) = cur
+            .as_ref()
+            .unwrap_or_else(|| panic!("sample {name} before any TYPE header"));
+        match kind.as_str() {
+            "histogram" => {
+                let key = series_key(&labels);
+                let idx = hist
+                    .iter()
+                    .position(|(k, _)| *k == key)
+                    .unwrap_or_else(|| {
+                        hist.push((key.clone(), HistSeries::default()));
+                        hist.len() - 1
+                    });
+                let s = &mut hist[idx].1;
+                if name == format!("{fam}_bucket") {
+                    let le = labels
+                        .iter()
+                        .find(|(k, _)| k == "le")
+                        .unwrap_or_else(|| panic!("bucket without le: {line:?}"));
+                    s.buckets.push((le.1.clone(), value));
+                } else if name == format!("{fam}_sum") {
+                    s.sum = true;
+                    assert!(value.is_finite(), "non-finite _sum: {line:?}");
+                } else if name == format!("{fam}_count") {
+                    s.count = Some(value);
+                } else {
+                    panic!("sample {name} inside histogram family {fam}");
+                }
+            }
+            _ => {
+                assert_eq!(&name, fam, "sample {name} under family {fam}");
+                assert!(value.is_finite(), "non-finite value: {line:?}");
+                if kind == "counter" {
+                    assert!(value >= 0.0, "negative counter: {line:?}");
+                }
+            }
+        }
+        // `le="+Inf"` aside, buckets are finite; +Inf only ever appears
+        // as a label value, never as a sample value in our renderer
+        assert!(value.is_finite() || kind == "histogram", "bad value {line:?}");
+    }
+    assert!(pending_help.is_none(), "trailing HELP without TYPE");
+    close_family(&cur, &mut hist);
+    assert!(!seen_families.is_empty(), "empty exposition");
+    samples
+}
+
+/// The value of the sample whose `name{labels}` prefix matches exactly.
+fn sample_value(body: &str, name_and_labels: &str) -> Option<f64> {
+    body.lines().find_map(|l| {
+        let rest = l.strip_prefix(name_and_labels)?;
+        rest.strip_prefix(' ')?.parse().ok()
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Tentpole: live fleet, real HTTP scrape, windowed + cumulative + health.
+// ---------------------------------------------------------------------------
+
+/// Serve two models, then scrape the running fleet over loopback HTTP:
+/// `/metrics` must pass the strict validator and carry cumulative
+/// counters, rolling-window gauges (10s and 60s), and watchdog health
+/// for every shard; `/healthz` answers 200 with a healthy body; and
+/// `/snapshot.json` is schema-v3 with per-model snapshots that
+/// round-trip through `Snapshot::from_json`.
+#[test]
+fn live_fleet_scrape_serves_valid_prometheus_and_snapshots() {
+    const N: usize = 200;
+    let mut fleet = Fleet::new();
+    for name in ["cifar", "mnist"] {
+        fleet.register(
+            name,
+            FleetModelConfig {
+                shards: 2,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            mock_factory(Duration::ZERO),
+        );
+    }
+    let fleet = Arc::new(fleet);
+    fleet.start_watchdog(WatchdogConfig::default());
+    let scrape =
+        ScrapeServer::start("127.0.0.1:0", Arc::clone(&fleet) as Arc<dyn ScrapeSource>)
+            .expect("bind scrape server");
+    let addr = scrape.local_addr();
+
+    let rxs: Vec<_> = (0..N)
+        .flat_map(|i| {
+            ["cifar", "mnist"].map(|m| {
+                fleet.submit(m, vec![i as f32, 1.0, 1.0, 1.0]).expect("admitted")
+            })
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("answered");
+    }
+    // the watchdog probes immediately on spawn, but don't race it:
+    // scrape only after its first report covers both models
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while fleet.health_report().map_or(true, |r| r.models.len() < 2) {
+        assert!(Instant::now() < deadline, "watchdog never published a report");
+        thread::sleep(Duration::from_millis(5));
+    }
+
+    // /metrics: strict grammar over the whole live exposition
+    let (code, metrics) = http_get(addr, "/metrics").expect("GET /metrics");
+    assert_eq!(code, 200);
+    let samples = validate_prometheus(&metrics);
+    assert!(samples > 50, "suspiciously small exposition: {samples} samples");
+
+    // cumulative counters per model
+    for m in ["cifar", "mnist"] {
+        assert_eq!(
+            sample_value(&metrics, &format!("tcbnn_requests_total{{model=\"{m}\"}}")),
+            Some(N as f64),
+            "cumulative requests for {m}"
+        );
+    }
+    // windowed gauges alongside them, both report windows, rate > 0
+    let rps_10s = sample_value(
+        &metrics,
+        "tcbnn_window_requests_per_second{model=\"mnist\",window=\"10s\"}",
+    )
+    .expect("10s windowed rate sample");
+    assert!(rps_10s > 0.0, "windowed rate must be live, got {rps_10s}");
+    assert!(
+        sample_value(
+            &metrics,
+            "tcbnn_window_requests_per_second{model=\"mnist\",window=\"60s\"}",
+        )
+        .is_some(),
+        "60s window missing"
+    );
+    assert!(
+        sample_value(
+            &metrics,
+            "tcbnn_window_requests{model=\"cifar\",window=\"10s\"}",
+        )
+        .unwrap_or(0.0)
+            > 0.0,
+        "windowed request count must be live"
+    );
+    // watchdog health grafted into the same exposition: every shard up
+    for m in ["cifar", "mnist"] {
+        for s in 0..2 {
+            assert_eq!(
+                sample_value(
+                    &metrics,
+                    &format!("tcbnn_shard_up{{model=\"{m}\",shard=\"{s}\"}}")
+                ),
+                Some(1.0),
+                "{m} shard {s} should be up"
+            );
+        }
+    }
+
+    // /healthz: all healthy -> 200 with a machine-readable body
+    let (code, health) = http_get(addr, "/healthz").expect("GET /healthz");
+    assert_eq!(code, 200, "healthy fleet must answer 200: {health}");
+    assert!(health.contains("\"healthy\":true"), "{health}");
+
+    // /snapshot.json: schema v3, name-sorted models, full round-trip
+    let (code, body) = http_get(addr, "/snapshot.json").expect("GET /snapshot.json");
+    assert_eq!(code, 200);
+    let doc = Value::parse(&body).expect("snapshot.json parses");
+    assert_eq!(
+        doc.get("schema").and_then(Value::as_usize),
+        Some(OBS_SCHEMA as usize)
+    );
+    let models = doc.get("models").and_then(Value::as_arr).expect("models array");
+    assert_eq!(models.len(), 2);
+    assert_eq!(
+        models[0].get("name").and_then(Value::as_str),
+        Some("cifar"),
+        "scrape output is name-sorted"
+    );
+    for entry in models {
+        let snap = Snapshot::from_json(entry.get("snapshot").expect("snapshot"))
+            .expect("per-model snapshot round-trips through from_json");
+        assert_eq!(snap.requests, N as u64);
+        assert_eq!(snap.windows.len(), 2, "both report windows serialized");
+        assert_eq!(snap.health.len(), 2, "watchdog health serialized per shard");
+        assert!(snap.health.iter().all(|h| h.is_up()));
+    }
+
+    scrape.shutdown();
+    fleet.begin_shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Watchdog: a stalled shard flips /healthz to 503 and recovers.
+// ---------------------------------------------------------------------------
+
+/// A MockModel whose `run_batch` spins while `gate` is set — a wedged
+/// forward call, exactly what the heartbeat watchdog must catch.
+struct StallableMock {
+    inner: MockModel,
+    gate: Arc<AtomicBool>,
+}
+
+impl BatchModel for StallableMock {
+    fn run_batch(&mut self, data: &[f32], padded: usize) -> anyhow::Result<Vec<f32>> {
+        while self.gate.load(Ordering::Acquire) {
+            thread::sleep(Duration::from_millis(1));
+        }
+        self.inner.run_batch(data, padded)
+    }
+    fn row_elems(&self) -> usize {
+        self.inner.row_elems()
+    }
+    fn out_elems(&self) -> usize {
+        self.inner.out_elems()
+    }
+    fn buckets(&self) -> Vec<usize> {
+        self.inner.buckets()
+    }
+}
+
+/// Poll `/healthz` until it answers `want` (or panic at the deadline).
+fn await_healthz(addr: std::net::SocketAddr, want: u16, why: &str) -> String {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let (code, body) = http_get(addr, "/healthz").expect("GET /healthz");
+        if code == want {
+            return body;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "healthz never reached {want} within 20s ({why}); last: {code} {body}"
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Wedge exactly one of two replicas mid-batch: `/healthz` must flip
+/// to 503 naming a stalled shard within the watchdog's reaction time,
+/// `/metrics` must stay scrapeable (with that shard's `shard_up` at 0
+/// and a stall reason in `shard_health_state`), and clearing the wedge
+/// must bring `/healthz` back to 200 with every request answered.
+#[test]
+fn stalled_shard_flips_healthz_to_503_and_recovers() {
+    let gate = Arc::new(AtomicBool::new(false));
+    let built = Arc::new(AtomicUsize::new(0));
+    let factory = {
+        let (gate, built) = (Arc::clone(&gate), Arc::clone(&built));
+        move || {
+            // only the first-built replica is gated; the sibling stays live
+            let mine = if built.fetch_add(1, Ordering::SeqCst) == 0 {
+                Arc::clone(&gate)
+            } else {
+                Arc::new(AtomicBool::new(false))
+            };
+            Ok(Box::new(StallableMock {
+                inner: MockModel {
+                    row_elems: 4,
+                    out_elems: 3,
+                    delay: Duration::ZERO,
+                },
+                gate: mine,
+            }) as Box<dyn BatchModel>)
+        }
+    };
+    let mut fleet = Fleet::new();
+    fleet.register(
+        "stall",
+        FleetModelConfig {
+            shards: 2,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+        factory,
+    );
+    let fleet = Arc::new(fleet);
+    fleet.start_watchdog(WatchdogConfig {
+        period: Duration::from_millis(25),
+        stall_after: Duration::from_millis(200),
+        // queue age and SLO must not trip: this test isolates heartbeats
+        max_queue_age: Duration::from_secs(3600),
+        max_slo_miss_rate: 2.0,
+    });
+    let scrape =
+        ScrapeServer::start("127.0.0.1:0", Arc::clone(&fleet) as Arc<dyn ScrapeSource>)
+            .expect("bind scrape server");
+    let addr = scrape.local_addr();
+
+    // warmup: both replicas built and serving -> healthy
+    let warm: Vec<_> = (0..64)
+        .map(|i| fleet.submit("stall", vec![i as f32; 4]).expect("admitted"))
+        .collect();
+    for rx in warm {
+        rx.recv_timeout(Duration::from_secs(60)).expect("answered");
+    }
+    let body = await_healthz(addr, 200, "after warmup");
+    assert!(body.contains("\"healthy\":true"), "{body}");
+
+    // wedge the gated replica inside run_batch, then keep feeding work
+    // until a batch lands on it (the live sibling may steal early
+    // rounds — submission is round-robin, so it cannot starve forever)
+    gate.store(true, Ordering::Release);
+    let mut held = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let body = loop {
+        for i in 0..8 {
+            held.push(fleet.submit("stall", vec![i as f32; 4]).expect("admitted"));
+        }
+        let (code, body) = http_get(addr, "/healthz").expect("GET /healthz");
+        if code == 503 {
+            break body;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "healthz never flipped to 503 within 20s of the stall; last: {code} {body}"
+        );
+        thread::sleep(Duration::from_millis(20));
+    };
+    assert!(body.contains("\"healthy\":false"), "{body}");
+    assert!(body.contains("stalled"), "503 body names the state: {body}");
+
+    // metrics stay scrapeable during the stall, and name the dead shard
+    let (code, metrics) = http_get(addr, "/metrics").expect("GET /metrics");
+    assert_eq!(code, 200, "metrics must stay scrapeable during a stall");
+    validate_prometheus(&metrics);
+    let downs = metrics
+        .lines()
+        .filter(|l| l.starts_with("tcbnn_shard_up{model=\"stall\"") && l.ends_with(" 0"))
+        .count();
+    assert_eq!(downs, 1, "exactly the gated shard is down");
+    assert!(
+        metrics
+            .lines()
+            .any(|l| l.starts_with("tcbnn_shard_health_state{model=\"stall\"")
+                && l.contains("state=\"stalled\"")
+                && l.contains("no heartbeat")),
+        "stall reason must be exported"
+    );
+    let report = fleet.health_report().expect("watchdog running");
+    assert!(!report.all_up());
+
+    // recovery: clear the wedge -> healthz returns to 200, no lost waiter
+    gate.store(false, Ordering::Release);
+    let body = await_healthz(addr, 200, "after clearing the stall");
+    assert!(body.contains("\"healthy\":true"), "{body}");
+    for rx in held {
+        rx.recv_timeout(Duration::from_secs(60))
+            .expect("held request answered after recovery");
+    }
+
+    scrape.shutdown();
+    fleet.begin_shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Request-scoped tracing: the sampled JSONL log.
+// ---------------------------------------------------------------------------
+
+/// With `sample_every = 1`, every request lands in the trace log as
+/// one parseable JSON line carrying the full timing decomposition
+/// (queue / steal / assemble / execute / e2e) plus batch context —
+/// and every request id appears exactly once.
+#[test]
+fn sampled_trace_log_writes_parseable_jsonl() {
+    const N: usize = 40;
+    let path = std::env::temp_dir()
+        .join(format!("tcbnn-obs-live-trace-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let trace = Arc::new(TraceWriter::create(&path, 1).expect("create trace log"));
+
+    let mut fleet = Fleet::new();
+    fleet.register(
+        "traced",
+        FleetModelConfig {
+            shards: 1,
+            max_wait: Duration::from_millis(1),
+            trace: Some(Arc::clone(&trace)),
+            ..Default::default()
+        },
+        mock_factory(Duration::ZERO),
+    );
+    let rxs: Vec<_> = (0..N)
+        .map(|i| fleet.submit("traced", vec![i as f32; 4]).expect("admitted"))
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("answered");
+    }
+    fleet.shutdown();
+    trace.flush();
+
+    assert_eq!(trace.seen(), N as u64);
+    assert_eq!(trace.written(), N as u64, "sample_every=1 keeps every request");
+    let text = std::fs::read_to_string(&path).expect("read trace log");
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), N);
+    let mut req_ids = Vec::new();
+    for line in lines {
+        let v = Value::parse(line).expect("JSONL line parses");
+        assert_eq!(v.get("model").and_then(Value::as_str), Some("traced"));
+        for key in ["req", "shard", "batch_seq", "rows", "padded", "steals"] {
+            let x = v.get(key).and_then(Value::as_f64).unwrap_or_else(|| {
+                panic!("missing integer field {key:?} in {line}")
+            });
+            assert!(x >= 0.0 && x.fract() == 0.0, "{key}={x} in {line}");
+        }
+        for key in ["queue_s", "assemble_s", "execute_s", "e2e_s"] {
+            let x = v.get(key).and_then(Value::as_f64).unwrap_or_else(|| {
+                panic!("missing timing field {key:?} in {line}")
+            });
+            assert!(x.is_finite() && x >= 0.0, "{key}={x} in {line}");
+        }
+        let rows = v.get("rows").and_then(Value::as_usize).unwrap();
+        let padded = v.get("padded").and_then(Value::as_usize).unwrap();
+        assert!(rows >= 1 && padded >= rows, "rows {rows} padded {padded}");
+        assert!(v.get("batch_seq").and_then(Value::as_usize).unwrap() >= 1);
+        req_ids.push(v.get("req").and_then(Value::as_usize).unwrap());
+    }
+    req_ids.sort_unstable();
+    assert_eq!(
+        req_ids,
+        (0..N).collect::<Vec<_>>(),
+        "every request traced exactly once"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// Renderer escaping under the strict parser.
+// ---------------------------------------------------------------------------
+
+/// Label values containing backslash, double quote, and newline must
+/// be escaped on the wire and recovered verbatim by the grammar's
+/// unescape — the exposition as a whole still validating strictly.
+#[test]
+fn renderer_escapes_labels_and_survives_the_strict_parser() {
+    let snap = Snapshot {
+        requests: 1,
+        layers: vec![LayerAttr {
+            index: 0,
+            tag: "we\"ird\\tag\nline".to_string(),
+            scheme: "FASTPATH".to_string(),
+            calls: 2,
+            secs: 0.5,
+            predicted_s: 0.25,
+        }],
+        ..Default::default()
+    };
+    let body = render_prometheus_fleet(&[("mo\"del\\one".to_string(), snap)]);
+    validate_prometheus(&body);
+    assert!(
+        body.contains(r#"model="mo\"del\\one""#),
+        "model label must be escaped on the wire:\n{body}"
+    );
+    assert!(
+        body.contains(r#"tag="we\"ird\\tag\nline""#),
+        "tag label must escape backslash, quote, and newline:\n{body}"
+    );
+    let line = body
+        .lines()
+        .find(|l| l.starts_with("tcbnn_layer_calls_total{"))
+        .expect("layer sample rendered");
+    let (name, labels, value) = parse_sample(line).expect("strict parse");
+    assert_eq!(name, "tcbnn_layer_calls_total");
+    assert_eq!(value, 2.0);
+    assert!(
+        labels.contains(&("model".to_string(), "mo\"del\\one".to_string())),
+        "unescape recovers the raw model name"
+    );
+    assert!(
+        labels.contains(&("tag".to_string(), "we\"ird\\tag\nline".to_string())),
+        "unescape recovers the raw tag"
+    );
+}
