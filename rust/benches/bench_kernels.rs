@@ -44,8 +44,8 @@ use tcbnn::kernels::fastpath;
 use tcbnn::kernels::simd::{self, PopcountEngine};
 use tcbnn::nn::forward::{forward, random_weights};
 use tcbnn::nn::layer::{Dims, LayerSpec};
-use tcbnn::nn::model::mnist_mlp;
-use tcbnn::nn::ModelDef;
+use tcbnn::nn::model::{gcn_grid, gcn_powerlaw, mnist_mlp};
+use tcbnn::nn::{ModelDef, Scheme};
 use tcbnn::sim::RTX2080TI;
 use tcbnn::util::bench::{BenchResult, Bencher};
 use tcbnn::util::cli::Args;
@@ -298,6 +298,55 @@ fn main() {
                 )),
             }
         }
+    }
+
+    // ---- GNN models: sparse schemes vs fastpath at b8 ----
+    // The adjacency-density crossover the planner models (see
+    // docs/ENGINE.md): the power-law graph is sparse enough for the
+    // SPMM/GCN-FUSED backends to win, the denser grid graph is the
+    // control.  The `model/<name>/b8/sparse_vs_fastpath` family is
+    // floor-gated by the CI gnn-smoke job via benches/baseline.json.
+    for model in [gcn_powerlaw(), gcn_grid()] {
+        let mut rng = Rng::new(seed);
+        let weights = random_weights(&model, &mut rng);
+        let bpi = bytes_per_img(&model);
+        let batch = 8usize; // one bucket keeps the GNN section cheap
+        let x: Vec<f32> = (0..batch * model.input.flat())
+            .map(|_| rng.next_f32() - 0.5)
+            .collect();
+        let mut fast_fps = 0.0f64;
+        let mut best_sparse = 0.0f64;
+        for scheme in [Scheme::Fastpath, Scheme::Spmm, Scheme::GcnFused] {
+            let plan = planner.plan_fixed(&model, batch, scheme);
+            let mut exec = EngineExecutor::new(model.clone(), &weights, plan)
+                .unwrap_or_else(|e| {
+                    panic!("{} executor for {}: {e}", scheme.name(), model.name)
+                });
+            let r = b.bench(
+                &format!("scheme/{}/{}/b{batch}", model.name, scheme.name()),
+                batch as f64,
+                || {
+                    std::hint::black_box(exec.forward(&x, batch));
+                },
+            );
+            entries.push(Entry::from_result(
+                format!("model/{}/scheme/{}/b{batch}", model.name, scheme.name()),
+                model.name,
+                scheme.name(),
+                batch,
+                &r,
+                bpi,
+            ));
+            if scheme == Scheme::Fastpath {
+                fast_fps = r.throughput();
+            } else {
+                best_sparse = best_sparse.max(r.throughput());
+            }
+        }
+        ratios.push((
+            format!("model/{}/b{batch}/sparse_vs_fastpath", model.name),
+            best_sparse / fast_fps,
+        ));
     }
 
     // the emitted per-scheme list must match the registry exactly —
@@ -736,6 +785,21 @@ fn check_baseline(path: &str, ratios: &[(String, f64)]) -> Result<usize, String>
                     );
                 }
             }
+        }
+    }
+    // run ratios with no committed floor: print the floor a
+    // --write-baseline refresh would record (0.9x headroom), so a
+    // newly added ratio family (e.g. sparse_vs_fastpath) can be seeded
+    // into benches/baseline.json deliberately instead of guessed
+    for (name, got) in ratios {
+        let in_baseline = base.iter().any(|item| {
+            item.get("name").and_then(Value::as_str) == Some(name.as_str())
+        });
+        if !in_baseline {
+            println!(
+                "  unbaselined: {name} at {got:.2}x; suggested floor {:.2}",
+                got * 0.9
+            );
         }
     }
     if failures.is_empty() {

@@ -1,0 +1,338 @@
+//! Bench: the serve/ fleet under sustained load — real `EngineModel`
+//! replicas (no mocks) replaying a large request stream through
+//! admission control and priority shedding, reporting end-to-end
+//! request throughput, engine img/s, and shed rates as JSON.
+//!
+//!   cargo bench --bench bench_serve                  # ~1M requests
+//!   cargo bench --bench bench_serve -- --quick       # CI sizing (~20k)
+//!   cargo bench --bench bench_serve -- --requests N  # explicit count
+//!   cargo bench --bench bench_serve -- --out BENCH_SERVE.json
+//!
+//! Two models share the host: `mnist` (priority 0, the latency-
+//! critical tenant, queue-depth capped so the replay genuinely sheds)
+//! and `gcn` (priority 1, the background BitGNN tenant — it yields
+//! with `Overload::LowPriority` whenever the critical backlog crosses
+//! the fleet's pressure threshold).  The submitter keeps a bounded
+//! in-flight window larger than the critical queue cap, so admission
+//! and priority shedding both fire at full submission speed.
+//!
+//! The JSON document carries, per model: submitted/served/shed counts,
+//! the shed and priority-shed split, fleet throughput (req/s), and the
+//! engine-side img/s — the numbers docs/BENCH.md's serving section
+//! quotes.  This bench is informational (no baseline gate): absolute
+//! throughput is machine-dependent, and the CI serve path is gated by
+//! serve-smoke and the sparse/GNN integration test instead.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use tcbnn::coordinator::server::{BatchModel, Response};
+use tcbnn::engine::json::Value;
+use tcbnn::engine::{EngineModel, PlanCache, PlanPolicy, Planner};
+use tcbnn::nn::forward::random_weights;
+use tcbnn::nn::model::{gcn_powerlaw, mnist_mlp};
+use tcbnn::nn::ModelDef;
+use tcbnn::obs::Snapshot;
+use tcbnn::serve::{AdmissionConfig, Fleet, FleetError, FleetModelConfig, Overload};
+use tcbnn::sim::RTX2080TI;
+use tcbnn::util::cli::Args;
+use tcbnn::util::Rng;
+
+/// Critical tenant's queue cap; the in-flight window below exceeds it
+/// so QueueFull sheds actually happen during the replay.
+const CRITICAL_QUEUE_DEPTH: usize = 512;
+
+/// Higher-priority backlog at which the background tenant yields.
+const PRIORITY_PRESSURE: usize = 256;
+
+/// Submitter-side in-flight window: receivers held before the oldest
+/// is drained.  Must exceed `CRITICAL_QUEUE_DEPTH`, or submitter
+/// backpressure would keep the queues below both shed thresholds.
+const INFLIGHT_WINDOW: usize = 4096;
+
+struct TenantStats {
+    name: &'static str,
+    submitted: u64,
+    shed_queue: u64,
+    shed_rate_limited: u64,
+    shed_priority: u64,
+}
+
+impl TenantStats {
+    fn new(name: &'static str) -> TenantStats {
+        TenantStats {
+            name,
+            submitted: 0,
+            shed_queue: 0,
+            shed_rate_limited: 0,
+            shed_priority: 0,
+        }
+    }
+
+    fn sheds(&self) -> u64 {
+        self.shed_queue + self.shed_rate_limited + self.shed_priority
+    }
+
+    fn served(&self) -> u64 {
+        self.submitted - self.sheds()
+    }
+
+    fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.sheds() as f64 / self.submitted as f64
+        }
+    }
+
+    /// The fleet's own counters must agree with the submitter's view.
+    fn assert_consistent(&self, snap: &Snapshot) {
+        assert_eq!(
+            snap.sheds,
+            self.sheds(),
+            "{}: fleet shed counter disagrees with the submitter",
+            self.name
+        );
+        assert_eq!(
+            snap.priority_sheds, self.shed_priority,
+            "{}: priority_sheds disagrees",
+            self.name
+        );
+    }
+}
+
+fn register_engine_model(
+    fleet: &mut Fleet,
+    name: &'static str,
+    model: &ModelDef,
+    cfg: FleetModelConfig,
+    buckets: Vec<usize>,
+    cache_dir: &str,
+    seed: u64,
+) {
+    let planner = Planner::new(&RTX2080TI);
+    let model = model.clone();
+    let cache_dir = cache_dir.to_string();
+    fleet.register(name, cfg, move || {
+        let weights = random_weights(&model, &mut Rng::new(seed));
+        let cache = PlanCache::open(&cache_dir)?;
+        let em = EngineModel::builder(&planner, &model, &weights)
+            .buckets(buckets.clone())
+            .policy(PlanPolicy::Cached)
+            .cache(&cache)
+            .build()?;
+        Ok(Box::new(em) as Box<dyn BatchModel>)
+    });
+}
+
+/// Block on the oldest in-flight receivers until at most `keep`
+/// remain.  Every accepted request must be answered — the fleet is
+/// only torn down after the final (keep = 0) drain, so a lost waiter
+/// here is a real bug, not a shutdown race.
+fn drain(inflight: &mut VecDeque<Receiver<Response>>, keep: usize, answered: &mut u64) {
+    while inflight.len() > keep {
+        let rx = inflight.pop_front().unwrap();
+        rx.recv_timeout(Duration::from_secs(120))
+            .expect("accepted request lost its waiter");
+        *answered += 1;
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let default_requests = if quick { 20_000 } else { 1_000_000 };
+    let total_requests = args.get_usize("requests", default_requests);
+    let out_path = args.get_or("out", "BENCH_SERVE.json").to_string();
+    let seed = args.get_usize("seed", 99) as u64;
+
+    let critical_model = mnist_mlp();
+    let background_model = gcn_powerlaw();
+    let cache_dir = std::env::temp_dir()
+        .join(format!("tcbnn_bench_serve_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let cache_dir = cache_dir.to_string_lossy().to_string();
+
+    // pre-warm the shared plan cache so every replica's Cached build is
+    // a read-only hit (no concurrent same-file writes across shards)
+    {
+        let planner = Planner::new(&RTX2080TI);
+        let cache = PlanCache::open(&cache_dir).expect("plan cache dir");
+        for &b in &[8usize, 32] {
+            cache.get_or_plan(&planner, &critical_model, b);
+        }
+        cache.get_or_plan(&planner, &background_model, 8);
+    }
+
+    let mut fleet = Fleet::new();
+    fleet.set_priority_pressure(PRIORITY_PRESSURE);
+    register_engine_model(
+        &mut fleet,
+        "mnist",
+        &critical_model,
+        FleetModelConfig {
+            shards: 2,
+            priority: 0,
+            admission: AdmissionConfig {
+                rate: None,
+                burst: 64.0,
+                max_queue_depth: CRITICAL_QUEUE_DEPTH,
+            },
+            ..Default::default()
+        },
+        vec![8, 32],
+        &cache_dir,
+        seed,
+    );
+    register_engine_model(
+        &mut fleet,
+        "gcn",
+        &background_model,
+        FleetModelConfig { shards: 1, priority: 1, ..Default::default() },
+        vec![8],
+        &cache_dir,
+        seed.wrapping_add(1),
+    );
+
+    // input templates, reused across submits (submit takes an owned
+    // Vec, so each send clones a template — no per-request RNG work)
+    let mut rng = Rng::new(seed);
+    let critical_rows: Vec<Vec<f32>> = (0..8)
+        .map(|_| {
+            (0..critical_model.input.flat())
+                .map(|_| rng.next_f32() - 0.5)
+                .collect()
+        })
+        .collect();
+    let background_rows: Vec<Vec<f32>> = (0..2)
+        .map(|_| {
+            (0..background_model.input.flat())
+                .map(|_| rng.next_f32() - 0.5)
+                .collect()
+        })
+        .collect();
+
+    let mut critical = TenantStats::new("mnist");
+    let mut background = TenantStats::new("gcn");
+    let mut inflight: VecDeque<Receiver<Response>> = VecDeque::new();
+    let mut answered = 0u64;
+
+    println!(
+        "replaying {total_requests} requests (7:1 critical:background, \
+         in-flight window {INFLIGHT_WINDOW}, critical queue cap \
+         {CRITICAL_QUEUE_DEPTH}, priority pressure {PRIORITY_PRESSURE})"
+    );
+    let t0 = Instant::now();
+    for i in 0..total_requests {
+        // 7:1 mix keeps the critical tenant saturated so both shed
+        // mechanisms stay exercised throughout the replay
+        let to_background = i % 8 == 7;
+        let (name, stats, row) = if to_background {
+            (
+                "gcn",
+                &mut background,
+                background_rows[i / 8 % background_rows.len()].clone(),
+            )
+        } else {
+            (
+                "mnist",
+                &mut critical,
+                critical_rows[i % critical_rows.len()].clone(),
+            )
+        };
+        stats.submitted += 1;
+        match fleet.submit(name, row) {
+            Ok(rx) => inflight.push_back(rx),
+            Err(FleetError::Overloaded(Overload::QueueFull)) => stats.shed_queue += 1,
+            Err(FleetError::Overloaded(Overload::RateLimited)) => {
+                stats.shed_rate_limited += 1
+            }
+            Err(FleetError::Overloaded(Overload::LowPriority)) => {
+                stats.shed_priority += 1
+            }
+            Err(e) => panic!("unexpected submit failure: {e}"),
+        }
+        drain(&mut inflight, INFLIGHT_WINDOW, &mut answered);
+    }
+    drain(&mut inflight, 0, &mut answered);
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let accepted = critical.served() + background.served();
+    assert_eq!(answered, accepted, "accepted != answered");
+
+    let snapshots: Vec<(&'static str, Snapshot)> = [&critical, &background]
+        .iter()
+        .map(|s| (s.name, fleet.snapshot(s.name).expect("registered")))
+        .collect();
+    println!(
+        "\nreplayed {total_requests} requests in {wall_s:.1}s \
+         ({:.0} submitted req/s, {answered} answered)",
+        total_requests as f64 / wall_s
+    );
+    println!(
+        "{:<8} {:>10} {:>10} {:>10} {:>10} {:>10} {:>9} {:>12}",
+        "model", "submitted", "served", "shed", "q-full", "prio", "shed%", "engine img/s"
+    );
+    for stats in [&critical, &background] {
+        let snap = &snapshots.iter().find(|(n, _)| *n == stats.name).unwrap().1;
+        stats.assert_consistent(snap);
+        println!(
+            "{:<8} {:>10} {:>10} {:>10} {:>10} {:>10} {:>8.1}% {:>12.0}",
+            stats.name,
+            stats.submitted,
+            stats.served(),
+            stats.sheds(),
+            stats.shed_queue,
+            stats.shed_priority,
+            stats.shed_rate() * 100.0,
+            snap.engine_img_s(),
+        );
+    }
+
+    let models = [&critical, &background]
+        .iter()
+        .map(|stats| {
+            let snap = &snapshots.iter().find(|(n, _)| *n == stats.name).unwrap().1;
+            Value::Obj(vec![
+                ("name".to_string(), Value::Str(stats.name.to_string())),
+                ("submitted".to_string(), Value::Num(stats.submitted as f64)),
+                ("served".to_string(), Value::Num(stats.served() as f64)),
+                ("sheds".to_string(), Value::Num(stats.sheds() as f64)),
+                (
+                    "sheds_queue_full".to_string(),
+                    Value::Num(stats.shed_queue as f64),
+                ),
+                (
+                    "sheds_priority".to_string(),
+                    Value::Num(stats.shed_priority as f64),
+                ),
+                ("shed_rate".to_string(), Value::Num(stats.shed_rate())),
+                (
+                    "throughput_rps".to_string(),
+                    Value::Num(snap.throughput_rps),
+                ),
+                ("engine_img_s".to_string(), Value::Num(snap.engine_img_s())),
+                ("latency_p99_s".to_string(), Value::Num(snap.latency.p99)),
+            ])
+        })
+        .collect();
+    let doc = Value::Obj(vec![
+        ("schema".to_string(), Value::Num(1.0)),
+        (
+            "mode".to_string(),
+            Value::Str(if quick { "quick" } else { "full" }.to_string()),
+        ),
+        ("requests".to_string(), Value::Num(total_requests as f64)),
+        ("wall_s".to_string(), Value::Num(wall_s)),
+        (
+            "submitted_rps".to_string(),
+            Value::Num(total_requests as f64 / wall_s),
+        ),
+        ("models".to_string(), Value::Arr(models)),
+    ]);
+    std::fs::write(&out_path, format!("{doc}\n")).expect("write bench JSON");
+    println!("\nwrote {out_path}");
+
+    fleet.shutdown();
+}

@@ -108,6 +108,13 @@ fn main() -> ExitCode {
             c.rel_rmse * 100.0,
             c.samples
         );
+        if c.gcn_samples > 0 {
+            println!(
+                "    sparse aggregation: {:.2} ns/stored block over {} GCN cells",
+                c.secs_per_sparse_block * 1e9,
+                c.gcn_samples
+            );
+        }
     }
     println!("\nfitted repack bandwidth per layout pair:");
     for (pair, c) in &profile.repacks {

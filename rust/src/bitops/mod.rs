@@ -13,8 +13,10 @@ pub mod bittensor;
 pub mod fsb;
 pub mod pack;
 pub mod pack64;
+pub mod sparse;
 
 pub use bitmatrix::{BitMatrix, Layout};
 pub use bittensor::{BitTensor4, TensorLayout};
 pub use fsb::FsbMatrix;
 pub use pack64::BitMatrix64;
+pub use sparse::SparseBitMatrix;

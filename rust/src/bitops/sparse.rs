@@ -1,0 +1,305 @@
+//! CSR-of-bit-lines sparse bit matrices — the BitGNN adjacency format.
+//!
+//! A [`SparseBitMatrix`] stores a `rows x cols` 0/1 matrix as CSR over
+//! 64-bit *column blocks*: block `b` of a row covers logical columns
+//! `[64*b, 64*b + 64)` and is materialized as one packed u64 bit-line
+//! (LSB-first, same bit order as [`BitMatrix64`]).  Only nonzero blocks
+//! are stored: `row_ptr[r]..row_ptr[r+1]` indexes parallel arrays
+//! `block_cols` (strictly increasing block indices within a row) and
+//! `bits` (the u64 line per stored block).  All-zero blocks are always
+//! omitted, so equal logical matrices have equal representations and
+//! `PartialEq` derives.
+//!
+//! Unlike the +/-1 dense formats, the sparse matrix is a *mask*: bit 1
+//! means "edge present", bit 0 means absent — the binary-GNN
+//! aggregation semantics (BitGNN, arXiv 2305.02522), where
+//! `out[i][f] = sum over neighbours j of h[j][f]` reduces to
+//! `2*popc(adj_row_i AND h_col_f) - degree(i)` for +/-1 features `h`.
+//! The same storage doubles as a sparse +/-1 Eq-2 operand by treating
+//! absent blocks as all -1 (bit 0) — see `sparse::spmm`.
+
+use super::bitmatrix::{BitMatrix, Layout};
+use super::pack64::{self, BitMatrix64};
+
+/// Bits per stored column block (one u64 bit-line).
+pub const BLOCK_BITS: usize = 64;
+
+/// CSR-of-bit-lines sparse bit matrix.  See the module docs for the
+/// representation invariants (sorted block columns, no zero blocks).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SparseBitMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// `rows + 1` offsets into `block_cols`/`bits`.
+    pub row_ptr: Vec<u32>,
+    /// Column-block index of each stored block (block `b` covers
+    /// columns `64*b..64*b+64`), strictly increasing within a row.
+    pub block_cols: Vec<u32>,
+    /// One packed u64 bit-line per stored block; never zero.
+    pub bits: Vec<u64>,
+}
+
+impl SparseBitMatrix {
+    /// An all-zero (edgeless) matrix.
+    pub fn empty(rows: usize, cols: usize) -> SparseBitMatrix {
+        SparseBitMatrix {
+            rows,
+            cols,
+            row_ptr: vec![0; rows + 1],
+            block_cols: Vec::new(),
+            bits: Vec::new(),
+        }
+    }
+
+    /// Column blocks per row in the equivalent dense representation.
+    #[inline]
+    pub fn blocks_per_row(&self) -> usize {
+        self.cols.div_ceil(BLOCK_BITS)
+    }
+
+    /// Number of stored (nonzero) 64-bit blocks.
+    #[inline]
+    pub fn nnz_blocks(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Number of set bits (edges).
+    pub fn nnz_bits(&self) -> usize {
+        self.bits.iter().map(|b| b.count_ones() as usize).sum()
+    }
+
+    /// Stored blocks / dense blocks — the density the planner's
+    /// sparse-vs-dense crossover is parameterized on.
+    pub fn block_density(&self) -> f64 {
+        let dense = self.rows * self.blocks_per_row();
+        if dense == 0 {
+            return 0.0;
+        }
+        self.nnz_blocks() as f64 / dense as f64
+    }
+
+    /// The stored blocks of row `r` as parallel (block index, bit-line)
+    /// slices.
+    #[inline]
+    pub fn row_blocks(&self, r: usize) -> (&[u32], &[u64]) {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        (&self.block_cols[lo..hi], &self.bits[lo..hi])
+    }
+
+    /// Set bits (out-degree) of row `r`.
+    #[inline]
+    pub fn row_degree(&self, r: usize) -> u32 {
+        let (_, bits) = self.row_blocks(r);
+        bits.iter().map(|b| b.count_ones()).sum()
+    }
+
+    /// Logical entry (r, c) — true iff the bit is stored and set.
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        let blk = (c / BLOCK_BITS) as u32;
+        let (cols, bits) = self.row_blocks(r);
+        match cols.binary_search(&blk) {
+            Ok(i) => (bits[i] >> (c % BLOCK_BITS)) & 1 == 1,
+            Err(_) => false,
+        }
+    }
+
+    /// Build from explicit (row, col) edges (duplicates allowed).
+    pub fn from_edges(
+        rows: usize,
+        cols: usize,
+        edges: impl IntoIterator<Item = (usize, usize)>,
+    ) -> SparseBitMatrix {
+        let bpr = cols.div_ceil(BLOCK_BITS);
+        // dense block grid, sparsified below — adjacency construction is
+        // a one-time setup cost, not a serving hot path
+        let mut grid = vec![0u64; rows * bpr];
+        for (r, c) in edges {
+            assert!(r < rows && c < cols, "edge ({r},{c}) out of {rows}x{cols}");
+            grid[r * bpr + c / BLOCK_BITS] |= 1u64 << (c % BLOCK_BITS);
+        }
+        Self::from_block_grid(rows, cols, &grid)
+    }
+
+    /// Exact conversion from a row-major dense `BitMatrix`.
+    pub fn from_bitmatrix(m: &BitMatrix) -> SparseBitMatrix {
+        assert_eq!(m.layout, Layout::RowMajor, "sparse conversion is row-major");
+        let bpr = m.cols.div_ceil(BLOCK_BITS);
+        let mut grid = vec![0u64; m.rows * bpr];
+        for r in 0..m.rows {
+            pack64::repack64_into(m.line(r), &mut grid[r * bpr..(r + 1) * bpr]);
+        }
+        Self::from_block_grid(m.rows, m.cols, &grid)
+    }
+
+    /// Exact conversion from a row-major `BitMatrix64` (already u64
+    /// lines: block `b` of row `r` IS word `b` of line `r`).
+    pub fn from_bitmatrix64(m: &BitMatrix64) -> SparseBitMatrix {
+        assert_eq!(m.layout, Layout::RowMajor, "sparse conversion is row-major");
+        let bpr = m.cols.div_ceil(BLOCK_BITS);
+        assert_eq!(m.words_per_line, bpr);
+        Self::from_block_grid(m.rows, m.cols, &m.data)
+    }
+
+    fn from_block_grid(rows: usize, cols: usize, grid: &[u64]) -> SparseBitMatrix {
+        let bpr = cols.div_ceil(BLOCK_BITS);
+        debug_assert_eq!(grid.len(), rows * bpr);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut block_cols = Vec::new();
+        let mut bits = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            for b in 0..bpr {
+                let line = grid[r * bpr + b];
+                if line != 0 {
+                    block_cols.push(b as u32);
+                    bits.push(line);
+                }
+            }
+            row_ptr.push(bits.len() as u32);
+        }
+        SparseBitMatrix { rows, cols, row_ptr, block_cols, bits }
+    }
+
+    /// Inverse of [`from_bitmatrix`] — exact round trip at any width.
+    pub fn to_bitmatrix(&self) -> BitMatrix {
+        let mut m = BitMatrix::zeros(self.rows, self.cols, Layout::RowMajor);
+        let wpl = m.words_per_line;
+        for r in 0..self.rows {
+            let (cols, bits) = self.row_blocks(r);
+            for (&b, &line) in cols.iter().zip(bits) {
+                let w0 = 2 * b as usize;
+                let dst = m.line_mut(r);
+                dst[w0] = line as u32;
+                if w0 + 1 < wpl {
+                    dst[w0 + 1] = (line >> 32) as u32;
+                } else {
+                    debug_assert_eq!(line >> 32, 0, "pad half set in tail block");
+                }
+            }
+        }
+        m
+    }
+
+    /// Inverse of [`from_bitmatrix64`].
+    pub fn to_bitmatrix64(&self) -> BitMatrix64 {
+        BitMatrix64::from_bitmatrix(&self.to_bitmatrix())
+    }
+
+    /// Bytes of CSR storage (row pointers + block indices + bit-lines).
+    pub fn storage_bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.block_cols.len() * 4 + self.bits.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_cases;
+    use crate::util::Rng;
+
+    #[test]
+    fn empty_matrix_has_no_blocks_and_round_trips() {
+        let s = SparseBitMatrix::empty(7, 130);
+        assert_eq!(s.nnz_blocks(), 0);
+        assert_eq!(s.nnz_bits(), 0);
+        assert_eq!(s.block_density(), 0.0);
+        assert_eq!(SparseBitMatrix::from_bitmatrix(&s.to_bitmatrix()), s);
+    }
+
+    #[test]
+    fn dense_roundtrip_at_odd_widths() {
+        run_cases(701, 80, |rng| {
+            let rows = 1 + rng.gen_range(30);
+            let cols = 1 + rng.gen_range(300);
+            let m = BitMatrix::random(rows, cols, Layout::RowMajor, rng);
+            let s = SparseBitMatrix::from_bitmatrix(&m);
+            assert_eq!(s.to_bitmatrix(), m, "{rows}x{cols}");
+            // u64 route agrees with the u32 route
+            let m64 = BitMatrix64::from_bitmatrix(&m);
+            assert_eq!(SparseBitMatrix::from_bitmatrix64(&m64), s);
+            assert_eq!(s.to_bitmatrix64(), m64);
+        });
+    }
+
+    #[test]
+    fn stored_blocks_are_sorted_nonzero_and_canonical() {
+        run_cases(702, 40, |rng| {
+            let rows = 1 + rng.gen_range(20);
+            let cols = 1 + rng.gen_range(400);
+            // sparse pattern: a few random edges
+            let n_edges = rng.gen_range(3 * rows);
+            let edges: Vec<(usize, usize)> = (0..n_edges)
+                .map(|_| (rng.gen_range(rows), rng.gen_range(cols)))
+                .collect();
+            let s = SparseBitMatrix::from_edges(rows, cols, edges.iter().copied());
+            assert!(s.bits.iter().all(|&b| b != 0), "zero block stored");
+            for r in 0..rows {
+                let (bc, _) = s.row_blocks(r);
+                assert!(bc.windows(2).all(|w| w[0] < w[1]), "row {r} unsorted");
+            }
+            for &(r, c) in &edges {
+                assert!(s.get(r, c), "edge ({r},{c}) lost");
+            }
+            // canonical: dense round-trip reproduces the same CSR
+            assert_eq!(SparseBitMatrix::from_bitmatrix(&s.to_bitmatrix()), s);
+        });
+    }
+
+    #[test]
+    fn degrees_and_density_match_dense_counts() {
+        run_cases(703, 30, |rng| {
+            let rows = 1 + rng.gen_range(20);
+            let cols = 1 + rng.gen_range(200);
+            let m = BitMatrix::random(rows, cols, Layout::RowMajor, rng);
+            let s = SparseBitMatrix::from_bitmatrix(&m);
+            let mut total = 0usize;
+            for r in 0..rows {
+                let dense: u32 =
+                    m.line(r).iter().map(|w| w.count_ones()).sum();
+                assert_eq!(s.row_degree(r), dense, "row {r}");
+                total += dense as usize;
+            }
+            assert_eq!(s.nnz_bits(), total);
+            assert!(s.block_density() <= 1.0);
+            // random dense data: essentially every block present
+            assert_eq!(
+                s.nnz_blocks() <= rows * s.blocks_per_row(),
+                true
+            );
+        });
+    }
+
+    #[test]
+    fn get_matches_dense_get() {
+        run_cases(704, 30, |rng| {
+            let rows = 1 + rng.gen_range(15);
+            let cols = 1 + rng.gen_range(250);
+            let m = BitMatrix::random(rows, cols, Layout::RowMajor, rng);
+            let s = SparseBitMatrix::from_bitmatrix(&m);
+            for _ in 0..40 {
+                let r = rng.gen_range(rows);
+                let c = rng.gen_range(cols);
+                assert_eq!(s.get(r, c), m.get(r, c), "({r},{c})");
+            }
+        });
+    }
+
+    #[test]
+    fn full_rows_store_every_block() {
+        let mut rng = Rng::new(705);
+        let mut m = BitMatrix::random(4, 130, Layout::RowMajor, &mut rng);
+        // force row 2 all-ones
+        for c in 0..130 {
+            m.set(2, c, true);
+        }
+        let s = SparseBitMatrix::from_bitmatrix(&m);
+        let (bc, bits) = s.row_blocks(2);
+        assert_eq!(bc, &[0, 1, 2]);
+        assert_eq!(bits[0], u64::MAX);
+        assert_eq!(bits[1], u64::MAX);
+        assert_eq!(bits[2], (1u64 << 2) - 1, "tail block masks to 130 bits");
+        assert_eq!(s.to_bitmatrix(), m);
+    }
+}

@@ -304,6 +304,7 @@ impl Metrics {
             // per-shard attribution) are owned by `serve::Fleet`, which
             // grafts them onto this snapshot in `Fleet::snapshot`
             sheds: 0,
+            priority_sheds: 0,
             steals: 0,
             slo_hits: 0,
             slo_misses: 0,

@@ -77,6 +77,13 @@ impl Arena {
                     max_words = max_words.max(flat_words(batch, d_in));
                     max_ints = max_ints.max(batch * d_out);
                 }
+                LayerSpec::BinGcn { nodes, d_in, d_out, .. } => {
+                    // flat node-feature rows in and out, plus the
+                    // per-node-feature Eq-2 accumulators
+                    max_words = max_words.max(flat_words(batch, nodes * d_in));
+                    max_words = max_words.max(flat_words(batch, nodes * d_out));
+                    max_ints = max_ints.max(batch * nodes * d_out);
+                }
                 LayerSpec::Pool => {
                     max_words = max_words.max(bits_words(dims.hw, batch, dims.feat));
                 }

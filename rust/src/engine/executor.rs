@@ -52,7 +52,9 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::bitops::pack;
-use crate::kernels::backend::{BackendRegistry, ExecCtx, PreparedConv, PreparedFc};
+use crate::kernels::backend::{
+    BackendRegistry, ExecCtx, PreparedConv, PreparedFc, PreparedGcn,
+};
 use crate::kernels::bconv::BconvProblem;
 use crate::layout::{repack, LayoutKind};
 use crate::nn::forward::{LayerWeights, ModelWeights};
@@ -94,6 +96,12 @@ enum PreparedLayer {
     },
     BinFc {
         fc: Box<dyn PreparedFc>,
+        thresh: Vec<f32>,
+    },
+    BinGcn {
+        /// backend-staged adjacency + combine weights — the adjacency
+        /// is staged exactly once per executor, off the request path
+        gcn: Box<dyn PreparedGcn>,
         thresh: Vec<f32>,
     },
     FinalFc {
@@ -572,6 +580,43 @@ impl EngineExecutor {
                     }
                 }
                 (
+                    LayerSpec::BinGcn { nodes, d_in, d_out, .. },
+                    PreparedLayer::BinGcn { gcn, thresh },
+                ) => {
+                    // GCN activations are flat Row32 node-feature rows
+                    // (validate_layouts rejects anything else), so the
+                    // input ladder is a plain flatten/copy into `dst`
+                    let din_total = nodes * d_in;
+                    let dout_total = nodes * d_out;
+                    let wpl_out = dout_total.div_ceil(32);
+                    let t = par_threads(threads, batch * dout_total / 8);
+                    let feat =
+                        flatten_into(input, repr, batch, src, dst, din_total, threads);
+                    assert_eq!(feat, din_total, "gcn input width");
+                    {
+                        let scratch = gcn.scratch_words(batch);
+                        let mut ctx =
+                            ExecCtx { words64: &mut words64[..scratch], threads: t };
+                        gcn.gcn(
+                            &dst[..batch * din_total.div_ceil(32)],
+                            batch,
+                            &mut ints[..batch * dout_total],
+                            &mut ctx,
+                        );
+                    }
+                    pack_gcn_ints(
+                        &ints[..batch * dout_total],
+                        &mut src[..batch * wpl_out],
+                        wpl_out,
+                        t,
+                        *d_out,
+                        dout_total,
+                        thresh,
+                    );
+                    repr = Repr::Flat { feat: dout_total };
+                    // two hops: result is back in the original buffer
+                }
+                (
                     LayerSpec::FinalFc { d_in, d_out },
                     PreparedLayer::FinalFc { fc, gamma, beta },
                 ) => {
@@ -614,6 +659,7 @@ impl EngineExecutor {
                     layer,
                     LayerSpec::BinConv { .. }
                         | LayerSpec::BinFc { .. }
+                        | LayerSpec::BinGcn { .. }
                         | LayerSpec::FinalFc { .. }
                 ) {
                     // baselines are at batch capacity; scale linearly to
@@ -779,6 +825,26 @@ fn fc_input_and_dot(
 fn validate_layouts(model: &ModelDef, plan: &ModelPlan) -> Result<()> {
     let mut prev_out = LayoutKind::Row32;
     for (li, (l, lp)) in model.layers.iter().zip(&plan.layers).enumerate() {
+        if matches!(l, LayerSpec::BinGcn { .. }) {
+            // GCN activations are flat but Row32-only: the aggregation
+            // kernels consume/emit row-packed node-feature lines, and
+            // the executor materializes no Blocked64 edge around them
+            ensure!(
+                prev_out == LayoutKind::Row32,
+                "layer {li} ({}): GCN layer cannot consume a {} activation",
+                lp.tag,
+                prev_out
+            );
+            ensure!(
+                lp.in_layout == LayoutKind::Row32 && lp.out_layout == LayoutKind::Row32,
+                "layer {li} ({}): GCN layers are Row32-only, plan says {} -> {}",
+                lp.tag,
+                lp.in_layout,
+                lp.out_layout
+            );
+            prev_out = lp.out_layout;
+            continue;
+        }
         let flat = matches!(l, LayerSpec::BinFc { .. } | LayerSpec::FinalFc { .. });
         if !flat {
             // HWNC layers can neither consume nor emit a non-Row32
@@ -936,6 +1002,27 @@ fn prepare_weights(
                 );
                 scratch_words = scratch_words.max(fc.scratch_words(batch_cap));
                 PreparedLayer::BinFc { fc, thresh: thresh.clone() }
+            }
+            (
+                LayerSpec::BinGcn { nodes, d_in, d_out, .. },
+                LayerWeights::BinGcn { adj, w, thresh },
+            ) => {
+                ensure!(
+                    w.rows == *d_out && w.cols == *d_in,
+                    "layer {li}: gcn combine weight shape {}x{}",
+                    w.rows,
+                    w.cols
+                );
+                ensure!(thresh.len() == *d_out, "layer {li}: threshold table size");
+                ensure!(
+                    dims.feat == nodes * d_in,
+                    "layer {li}: input feature walk mismatch"
+                );
+                let gcn = backend(plan.layers[li].scheme)?
+                    .prepare_gcn(adj, w)
+                    .map_err(|e| anyhow!("layer {li}: {e}"))?;
+                scratch_words = scratch_words.max(gcn.scratch_words(batch_cap));
+                PreparedLayer::BinGcn { gcn, thresh: thresh.clone() }
             }
             (
                 LayerSpec::FinalFc { d_in, d_out },
@@ -1229,6 +1316,36 @@ fn pack_fc_ints64(
     });
 }
 
+/// Threshold + pack GCN aggregates into flat packed rows.  The
+/// threshold table holds one entry per output *feature* and repeats
+/// every `d_out` columns (shared across nodes) — the same comparison
+/// `nn::forward` applies, so the bits are identical.
+fn pack_gcn_ints(
+    ints: &[i32],
+    dst: &mut [u32],
+    wpl_out: usize,
+    threads: usize,
+    d_out: usize,
+    dout_total: usize,
+    thresh: &[f32],
+) {
+    scoped_chunks(dst, wpl_out, threads, |ni, row| {
+        for (wo, out) in row.iter_mut().enumerate() {
+            let mut word = 0u32;
+            for bit in 0..32 {
+                let j = wo * 32 + bit;
+                if j >= dout_total {
+                    break;
+                }
+                if (ints[ni * dout_total + j] as f32) >= thresh[j % d_out] {
+                    word |= 1 << bit;
+                }
+            }
+            *out = word;
+        }
+    });
+}
+
 /// Threshold + repack FC dots into packed output rows — bitwise the
 /// same rule for every backend.
 fn pack_fc_ints(
@@ -1315,6 +1432,28 @@ mod tests {
         }
     }
 
+    fn gcn_model() -> ModelDef {
+        let spec = crate::sparse::AdjSpec {
+            kind: crate::sparse::AdjKind::PowerLaw,
+            degree: 3,
+            seed: 5,
+        };
+        let nodes = 32;
+        let nnz_blocks = crate::sparse::generate(spec, nodes).nnz_blocks();
+        ModelDef {
+            name: "engine-gcn-test",
+            dataset: "synthetic-graph",
+            input: Dims { hw: 0, feat: nodes * 64 },
+            classes: 4,
+            layers: vec![
+                LayerSpec::BinGcn { nodes, d_in: 64, d_out: 64, adj: spec, nnz_blocks },
+                LayerSpec::BinFc { d_in: nodes * 64, d_out: 64 },
+                LayerSpec::FinalFc { d_in: 64, d_out: 4 },
+            ],
+            residual_blocks: 0,
+        }
+    }
+
     fn build(model: ModelDef, seed: u64, batch: usize) -> (EngineExecutor, ModelWeights) {
         let mut rng = Rng::new(seed);
         let weights = random_weights(&model, &mut rng);
@@ -1366,6 +1505,37 @@ mod tests {
                 let _ = exec.forward(&x, batch);
                 assert_eq!(exec.arena_bytes(), watermark);
             }
+        }
+    }
+
+    #[test]
+    fn every_scheme_plan_matches_naive_forward_on_gcn() {
+        // the GCN layer runs under every registered scheme — the sparse
+        // backends stage block-sparse adjacency, everything else the
+        // DenseGcn default — and all of them are bit-identical to the
+        // reference forward
+        let m = gcn_model();
+        let batch = 4;
+        let mut rng = Rng::new(91);
+        let weights = random_weights(&m, &mut rng);
+        let x: Vec<f32> = (0..batch * m.input.flat())
+            .map(|_| rng.next_f32() - 0.5)
+            .collect();
+        let want = forward(&m, &weights, &x, batch);
+        for scheme in BackendRegistry::global().schemes() {
+            let plan = Planner::new(&RTX2080TI).plan_fixed(&m, batch, scheme);
+            let mut exec = EngineExecutor::new(m.clone(), &weights, plan).unwrap();
+            assert_eq!(
+                exec.forward(&x, batch),
+                &want[..],
+                "{} under {}",
+                m.name,
+                scheme.name()
+            );
+            // arena stays constant across passes (zero-allocation path)
+            let watermark = exec.arena_bytes();
+            let _ = exec.forward(&x, batch);
+            assert_eq!(exec.arena_bytes(), watermark);
         }
     }
 

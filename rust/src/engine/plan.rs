@@ -26,7 +26,13 @@ use super::json::Value;
 /// layout edges (`in_layout` / `out_layout`) and the plan lists the
 /// explicit repack ops the executor must materialize (`repacks`), so
 /// v3 plans (which never chose layouts) are detectably stale.
-pub const PLAN_SCHEMA: usize = 4;
+///
+/// v5: the sparse/GNN subsystem — plans embed a `sparsity` fingerprint
+/// (`"dense"` for models with no graph layers; otherwise the joined
+/// per-GCN-layer adjacency fingerprints, including stored-block
+/// counts), so a plan cached for one adjacency density is detectably
+/// stale once the graph changes.
+pub const PLAN_SCHEMA: usize = 5;
 
 /// One layer's planned execution: the winning scheme, the activation
 /// layout edges around it, and its simulated cost on the plan's GPU.
@@ -87,6 +93,14 @@ pub struct ModelPlan {
     /// whose id differs from the serving planner's is stale: its
     /// winners were ranked by different costs.
     pub cost_profile: String,
+    /// sparsity fingerprint of the model the plan was searched for:
+    /// `"dense"` when no layer carries a graph adjacency, otherwise
+    /// the comma-joined `sparse::layer_fingerprint` of every GCN layer
+    /// (adjacency spec tag, node count, stored-block count).  A cached
+    /// plan whose fingerprint differs from the serving model's is
+    /// stale: its sparse-vs-dense crossover was ranked for a different
+    /// density.
+    pub sparsity: String,
     pub layers: Vec<LayerPlan>,
     /// explicit layout conversions along layer edges (empty when every
     /// edge's layouts already agree)
@@ -173,6 +187,7 @@ impl ModelPlan {
                 "cost_profile".to_string(),
                 Value::Str(self.cost_profile.clone()),
             ),
+            ("sparsity".to_string(), Value::Str(self.sparsity.clone())),
             ("total_secs".to_string(), Value::Num(self.total_secs)),
             ("layers".to_string(), Value::Arr(layers)),
             ("repacks".to_string(), Value::Arr(repacks)),
@@ -299,6 +314,7 @@ impl ModelPlan {
             classes: num_field("classes")?,
             scheme_set,
             cost_profile: str_field("cost_profile")?,
+            sparsity: str_field("sparsity")?,
             layers,
             repacks,
             total_secs: v
@@ -334,6 +350,7 @@ mod tests {
             classes: 10,
             scheme_set: Scheme::all().iter().map(|s| s.name().to_string()).collect(),
             cost_profile: "analytic".to_string(),
+            sparsity: "dense".to_string(),
             layers: vec![
                 LayerPlan {
                     index: 0,
@@ -368,6 +385,11 @@ mod tests {
         let p = sample();
         let back = ModelPlan::from_json(&p.to_json()).unwrap();
         assert_eq!(back, p);
+        // a graph-model fingerprint rides the same field
+        let mut gcn = sample();
+        gcn.sparsity = "powerlaw-d6-s1:512n:960b,powerlaw-d6-s1:512n:960b".to_string();
+        let back = ModelPlan::from_json(&gcn.to_json()).unwrap();
+        assert_eq!(back.sparsity, gcn.sparsity);
     }
 
     #[test]
@@ -382,13 +404,19 @@ mod tests {
     fn rejects_other_schema_versions() {
         let text = sample()
             .to_json()
-            .replace("\"schema\":4", "\"schema\":3");
-        assert!(ModelPlan::from_json(&text).is_err(), "v3 documents are stale");
+            .replace("\"schema\":5", "\"schema\":4");
+        assert!(ModelPlan::from_json(&text).is_err(), "v4 documents are stale");
         // a pre-versioning document (no schema field at all) also fails
-        let legacy = sample().to_json().replace("\"schema\":4,", "");
+        let legacy = sample().to_json().replace("\"schema\":5,", "");
         assert!(ModelPlan::from_json(&legacy).is_err());
+        // a v4 document (no sparsity fingerprint) is unreadable even if
+        // it claims schema 5
+        let no_sparsity = sample()
+            .to_json()
+            .replace("\"sparsity\":\"dense\",", "");
+        assert!(ModelPlan::from_json(&no_sparsity).is_err());
         // a v3 document (no cost_profile-era layout edges) is unreadable:
-        // claiming schema 4 without layout fields fails the parse
+        // claiming the current schema without layout fields fails the parse
         let no_layouts = sample()
             .to_json()
             .replace("\"in_layout\":\"Row32\",", "")

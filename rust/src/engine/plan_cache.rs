@@ -144,10 +144,13 @@ impl PlanCache {
         {
             // validate against the live model definition; shape drift
             // (e.g. a renamed layer) is a MISS that falls back to fresh
-            // planning (and re-persists below, self-healing the entry)
+            // planning (and re-persists below, self-healing the entry).
+            // The sparsity fingerprint guards the graph models: a plan
+            // ranked for one adjacency density must not survive a
+            // regenerated graph whose sparse-vs-dense crossover differs.
             let tags_match = p.layers.len() == model.layers.len()
                 && p.layers.iter().zip(&model.layers).all(|(lp, l)| lp.tag == l.tag());
-            if tags_match {
+            if tags_match && p.sparsity == Planner::sparsity_fingerprint(model) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return p;
             }
@@ -246,11 +249,36 @@ mod tests {
         // rewrite the entry claiming an older document version — a v3
         // (pre-layout) plan never chose layout edges, so it must be a
         // miss even if everything else matches
-        let old = p.to_json().replace("\"schema\":4", "\"schema\":3");
+        let old = p.to_json().replace("\"schema\":5", "\"schema\":4");
         std::fs::write(cache.entry_path(&p.model, 8, &p.gpu), old).unwrap();
         assert!(cache.get(&p.model, 8, &p.gpu).is_none());
         let healed = cache.get_or_plan(&planner, &m, 8);
         assert_eq!(healed, p);
+    }
+
+    #[test]
+    fn stale_sparsity_fingerprint_is_a_miss_and_self_heals() {
+        // a GCN plan cached for one adjacency density must re-plan when
+        // the graph changes: the sparse-vs-dense crossover it ranked no
+        // longer applies
+        let cache = temp_cache("stale_sparsity");
+        let planner = Planner::new(&RTX2080TI);
+        let m = crate::nn::model::gcn_grid();
+        let fresh = cache.get_or_plan(&planner, &m, 8);
+        assert_ne!(fresh.sparsity, "dense");
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        // simulate an entry persisted for a differently-seeded graph
+        let mut stale = fresh.clone();
+        stale.sparsity = stale.sparsity.replace("-s0:", "-s9:");
+        assert_ne!(stale.sparsity, fresh.sparsity);
+        cache.put(&stale).unwrap();
+        let replanned = cache.get_or_plan(&planner, &m, 8);
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        assert_eq!(replanned, fresh, "re-plan restores the live-graph plan");
+        // the entry self-healed: next lookup is a hit again
+        let again = cache.get_or_plan(&planner, &m, 8);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(again, fresh);
     }
 
     #[test]

@@ -430,9 +430,34 @@ impl Planner {
             classes: model.classes,
             scheme_set: self.scheme_names(),
             cost_profile: self.cost.profile_id(),
+            sparsity: Planner::sparsity_fingerprint(model),
             layers,
             repacks,
             total_secs: total,
+        }
+    }
+
+    /// The sparsity fingerprint an emitted plan records: `"dense"` for
+    /// models with no graph layers, otherwise the comma-joined
+    /// adjacency fingerprint of every GCN layer.  The plan cache
+    /// compares this against the serving model, so a density change
+    /// (regenerated graph, different stored-block count) re-plans
+    /// instead of reusing a crossover ranked for the old graph.
+    pub fn sparsity_fingerprint(model: &ModelDef) -> String {
+        let parts: Vec<String> = model
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                LayerSpec::BinGcn { nodes, adj, nnz_blocks, .. } => Some(
+                    crate::sparse::layer_fingerprint(*adj, *nodes, *nnz_blocks),
+                ),
+                _ => None,
+            })
+            .collect();
+        if parts.is_empty() {
+            "dense".to_string()
+        } else {
+            parts.join(",")
         }
     }
 }
@@ -583,6 +608,34 @@ mod tests {
             plan.total_secs,
             row32.total_secs
         );
+    }
+
+    #[test]
+    fn plans_record_the_sparsity_fingerprint() {
+        let p = Planner::new(&RTX2080TI);
+        // dense models record the literal "dense"
+        assert_eq!(p.plan(&mnist_mlp(), 8).sparsity, "dense");
+        // graph models record one adjacency fingerprint per GCN layer
+        let gcn = crate::nn::model::gcn_powerlaw();
+        let plan = p.plan(&gcn, 8);
+        let parts: Vec<&str> = plan.sparsity.split(',').collect();
+        let n_gcn = gcn
+            .layers
+            .iter()
+            .filter(|l| matches!(l, LayerSpec::BinGcn { .. }))
+            .count();
+        assert_eq!(parts.len(), n_gcn);
+        for part in &parts {
+            assert!(part.starts_with("powerlaw-"), "{part}");
+            assert!(part.ends_with('b'), "{part}");
+        }
+        // the fingerprint tracks the stored-block count: a different
+        // density is a different plan key
+        let mut denser = gcn.clone();
+        if let LayerSpec::BinGcn { nnz_blocks, .. } = &mut denser.layers[0] {
+            *nnz_blocks += 1;
+        }
+        assert_ne!(p.plan(&denser, 8).sparsity, plan.sparsity);
     }
 
     #[test]

@@ -41,6 +41,13 @@ pub fn weights_to_blob(model: &ModelDef, weights: &ModelWeights) -> Result<BlobW
                 w.push_u32(&format!("l{i}_wbits"), &[m.data.len()], &m.data);
                 w.push_f32(&format!("l{i}_thresh"), &[thresh.len()], thresh);
             }
+            (LayerSpec::BinGcn { .. }, LayerWeights::BinGcn { w: m, thresh, .. }) => {
+                // the adjacency is NOT serialized: it is spec-determined
+                // (regenerated from the layer's AdjSpec on load), so the
+                // blob stays a pure weight artifact
+                w.push_u32(&format!("l{i}_wbits"), &[m.data.len()], &m.data);
+                w.push_f32(&format!("l{i}_thresh"), &[thresh.len()], thresh);
+            }
             (LayerSpec::FinalFc { .. }, LayerWeights::FinalFc { w: m, gamma, beta }) => {
                 w.push_u32(&format!("l{i}_wbits"), &[m.data.len()], &m.data);
                 w.push_f32(&format!("l{i}_gamma"), &[gamma.len()], gamma);
@@ -88,6 +95,19 @@ pub fn weights_from_blob(model: &ModelDef, blob: &Blob) -> Result<ModelWeights> 
                 let thresh = blob.as_f32(&format!("l{i}_thresh"))?;
                 ensure!(thresh.len() == d_out, "layer {i}: threshold size");
                 LayerWeights::BinFc { w: m, thresh }
+            }
+            LayerSpec::BinGcn { nodes, d_in, d_out, adj, .. } => {
+                let data = blob.as_u32(&format!("l{i}_wbits"))?;
+                let mut m = BitMatrix::zeros(d_out, d_in, Layout::RowMajor);
+                ensure!(data.len() == m.data.len(), "layer {i}: packed gcn word count");
+                m.data = data;
+                let thresh = blob.as_f32(&format!("l{i}_thresh"))?;
+                ensure!(thresh.len() == d_out, "layer {i}: threshold size");
+                LayerWeights::BinGcn {
+                    adj: std::sync::Arc::new(crate::sparse::generate(adj, nodes)),
+                    w: m,
+                    thresh,
+                }
             }
             LayerSpec::FinalFc { d_in, d_out } => {
                 let data = blob.as_u32(&format!("l{i}_wbits"))?;
@@ -154,6 +174,51 @@ mod tests {
         // loaded weights must drive an identical forward pass
         let x: Vec<f32> = (0..4 * 6 * 6 * 3).map(|_| rng.next_f32() - 0.5).collect();
         assert_eq!(forward(&m, &w, &x, 4), forward(&m, &w2, &x, 4));
+    }
+
+    #[test]
+    fn gcn_weights_roundtrip_and_regenerate_adjacency() {
+        let spec = crate::sparse::AdjSpec {
+            kind: crate::sparse::AdjKind::PowerLaw,
+            degree: 3,
+            seed: 17,
+        };
+        let nodes = 24;
+        let nnz_blocks = crate::sparse::generate(spec, nodes).nnz_blocks();
+        let m = ModelDef {
+            name: "blob-gcn",
+            dataset: "synthetic",
+            input: Dims { hw: 0, feat: nodes * 64 },
+            classes: 3,
+            layers: vec![
+                LayerSpec::BinGcn { nodes, d_in: 64, d_out: 64, adj: spec, nnz_blocks },
+                LayerSpec::FinalFc { d_in: nodes * 64, d_out: 3 },
+            ],
+            residual_blocks: 0,
+        };
+        let mut rng = Rng::new(47);
+        let w = random_weights(&m, &mut rng);
+        let base = std::env::temp_dir()
+            .join(format!("tcbnn_weights_gcn_{}", std::process::id()))
+            .join("m")
+            .to_str()
+            .unwrap()
+            .to_string();
+        weights_to_blob(&m, &w).unwrap().write(&base).unwrap();
+        let blob = Blob::load(&base).unwrap();
+        let w2 = weights_from_blob(&m, &blob).unwrap();
+        // the loaded side regenerated the adjacency from the spec —
+        // forward passes must be bit-identical
+        let x: Vec<f32> =
+            (0..2 * nodes * 64).map(|_| rng.next_f32() - 0.5).collect();
+        assert_eq!(forward(&m, &w, &x, 2), forward(&m, &w2, &x, 2));
+        match (&w.layers[0], &w2.layers[0]) {
+            (
+                LayerWeights::BinGcn { adj: a, .. },
+                LayerWeights::BinGcn { adj: b, .. },
+            ) => assert_eq!(a.as_ref(), b.as_ref(), "regenerated adjacency differs"),
+            _ => panic!("expected gcn weights"),
+        }
     }
 
     #[test]

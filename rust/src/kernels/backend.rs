@@ -38,14 +38,17 @@
 
 use std::sync::OnceLock;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use crate::bitops::{BitMatrix, BitTensor4};
+use crate::bitops::pack;
+use crate::bitops::pack64::BitMatrix64;
+use crate::bitops::{BitMatrix, BitTensor4, SparseBitMatrix};
 use crate::kernels::bconv::BconvProblem;
 use crate::layout::LayoutKind;
 use crate::nn::cost::{ResidualMode, Scheme};
 use crate::nn::layer::{Dims, LayerSpec};
 use crate::sim::{Engine, KernelTrace};
+use crate::util::threadpool::scoped_chunks;
 
 /// Per-call execution context handed to prepared layers: a slice of
 /// the caller's pre-sized u64 scratch arena and the scoped-worker
@@ -145,6 +148,105 @@ pub trait PreparedConv: Send + Sync {
     fn bconv(&self, src: &[u32], p: BconvProblem, ints: &mut [i32], ctx: &mut ExecCtx<'_>);
 }
 
+/// Opaque prepared state for one binary GCN layer: the graph adjacency
+/// staged in whatever form the backend aggregates from, plus the
+/// combine weights.  Built once per model (the arena executor stages
+/// adjacency exactly once, off the request path) by
+/// [`KernelBackend::prepare_gcn`].
+pub trait PreparedGcn: Send + Sync {
+    /// u64 scratch words needed to execute a batch of `batch` rows
+    /// (monotone in `batch`).
+    fn scratch_words(&self, batch: usize) -> usize {
+        let _ = batch;
+        0
+    }
+
+    /// One binary GCN layer over a batch (combine, binarize,
+    /// aggregate — the exact integer semantics of
+    /// `sparse::gcn_dense_reference`): `src` holds `batch` row-packed
+    /// lines of `nodes * d_in` bits; `ints[(bi*nodes + i)*d_out + f]`
+    /// receives the aggregated integer for node `i`, feature `f`.
+    /// Every backend produces bit-identical values.
+    fn gcn(&self, src: &[u32], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>);
+}
+
+/// The default [`PreparedGcn`]: adjacency densified to u64 lines,
+/// aggregation swept over *every* block.  Exact for any backend; the
+/// sparse backends override `prepare_gcn` with block-sparse staging.
+struct DenseGcn {
+    adj64: BitMatrix64,
+    deg: Vec<i32>,
+    w: BitMatrix,
+    nodes: usize,
+    d_in: usize,
+    d_out: usize,
+}
+
+impl DenseGcn {
+    fn new(adj: &SparseBitMatrix, w: &BitMatrix) -> Result<DenseGcn> {
+        ensure!(adj.rows == adj.cols, "GCN adjacency must be square");
+        ensure!(w.cols % 64 == 0, "BinGcn d_in must be a multiple of 64");
+        ensure!(w.rows % 64 == 0, "BinGcn d_out must be a multiple of 64");
+        let deg = (0..adj.rows).map(|r| adj.row_degree(r) as i32).collect();
+        Ok(DenseGcn {
+            adj64: adj.to_bitmatrix64(),
+            deg,
+            w: w.clone(),
+            nodes: adj.rows,
+            d_in: w.cols,
+            d_out: w.rows,
+        })
+    }
+}
+
+impl PreparedGcn for DenseGcn {
+    fn scratch_words(&self, _batch: usize) -> usize {
+        // the transposed binarized combine: d_out lines of `nodes` bits
+        // (items run serially, so batch does not scale the scratch)
+        self.d_out * self.nodes.div_ceil(64)
+    }
+
+    fn gcn(&self, src: &[u32], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let (nodes, d_in, d_out) = (self.nodes, self.d_in, self.d_out);
+        let wpl_row = (nodes * d_in) / 32;
+        let wpl_node = d_in / 32;
+        let words_n = nodes.div_ceil(64);
+        assert!(src.len() >= batch * wpl_row, "input row buffer size");
+        assert_eq!(ints.len(), batch * nodes * d_out, "gcn staging size");
+        let (ht, _) = ctx.words64.split_at_mut(d_out * words_n);
+        for item in 0..batch {
+            let line = &src[item * wpl_row..(item + 1) * wpl_row];
+            // combine + binarize, transposed: line f = node bits of
+            // feature f (parallel over feature lines)
+            scoped_chunks(ht, words_n, ctx.threads, |f, hline| {
+                hline.fill(0);
+                for j in 0..nodes {
+                    let a = &line[j * wpl_node..(j + 1) * wpl_node];
+                    if pack::pm1_dot(a, self.w.line(f), d_in) >= 0 {
+                        hline[j / 64] |= 1u64 << (j % 64);
+                    }
+                }
+            });
+            // aggregate: dense AND+POPC sweep over every column block
+            let dst = &mut ints[item * nodes * d_out..(item + 1) * nodes * d_out];
+            let ht = &*ht;
+            scoped_chunks(dst, d_out, ctx.threads, |i, row| {
+                let arow = self.adj64.line(i);
+                let deg = self.deg[i];
+                for (f, out) in row.iter_mut().enumerate() {
+                    let h = &ht[f * words_n..(f + 1) * words_n];
+                    let pc: u32 = arow
+                        .iter()
+                        .zip(h)
+                        .map(|(a, b)| (a & b).count_ones())
+                        .sum();
+                    *out = 2 * pc as i32 - deg;
+                }
+            });
+        }
+    }
+}
+
 /// A kernel provider for one scheme: weight preparation, bit-exact
 /// execution, and the cost/trace face the planner ranks.
 pub trait KernelBackend: Send + Sync {
@@ -194,6 +296,21 @@ pub trait KernelBackend: Send + Sync {
     /// batch).  Backends reject unsupported shapes here, at build
     /// time, instead of panicking on the first request.
     fn prepare_conv(&self, filter: &BitTensor4, p: BconvProblem) -> Result<Box<dyn PreparedConv>>;
+
+    /// Prepare one binary GCN layer: stage the adjacency mask (square,
+    /// `nodes x nodes`, self-loops expected) and the dense combine
+    /// weights (`d_out x d_in` row-major packed, dims multiples of 64)
+    /// into this backend's aggregation form.  The default stages a
+    /// dense u64 adjacency image and sweeps every block — exact for
+    /// any backend; the sparse backends override it with block-sparse
+    /// aggregation proportional to stored blocks.
+    fn prepare_gcn(
+        &self,
+        adj: &SparseBitMatrix,
+        w: &BitMatrix,
+    ) -> Result<Box<dyn PreparedGcn>> {
+        Ok(Box::new(DenseGcn::new(adj, w)?))
+    }
 
     /// The scheme's kernel traces for one layer in the fused-kernel
     /// view (no per-layer launches).  `dims` is the layer's *input*
@@ -360,6 +477,38 @@ mod tests {
             // conv activations stay Row32 everywhere
             assert_eq!(b.preferred_input_layout(&conv), LayoutKind::Row32);
         }
+    }
+
+    #[test]
+    fn default_prepare_gcn_matches_dense_reference() {
+        use crate::sparse::{self, AdjKind, AdjSpec};
+        use crate::util::Rng;
+        let mut rng = Rng::new(721);
+        let (nodes, d_in, d_out, batch) = (24usize, 64usize, 64usize, 3usize);
+        let adj =
+            sparse::generate(AdjSpec { kind: AdjKind::Grid, degree: 2, seed: 0 }, nodes);
+        let w =
+            BitMatrix::random(d_out, d_in, crate::bitops::Layout::RowMajor, &mut rng);
+        let x = BitMatrix::random(
+            batch,
+            nodes * d_in,
+            crate::bitops::Layout::RowMajor,
+            &mut rng,
+        );
+        let want = sparse::gcn_dense_reference(&adj, &w, &x);
+        // a GPU-scheme backend never overrides prepare_gcn: this
+        // exercises the DenseGcn default
+        let reg = BackendRegistry::builtin();
+        let g = reg.get(Scheme::Btc).unwrap().prepare_gcn(&adj, &w).unwrap();
+        let mut scratch = vec![0u64; g.scratch_words(batch)];
+        let mut ints = vec![0i32; batch * nodes * d_out];
+        g.gcn(
+            &x.data,
+            batch,
+            &mut ints,
+            &mut ExecCtx { words64: &mut scratch, threads: 2 },
+        );
+        assert_eq!(ints, want);
     }
 
     #[test]

@@ -198,6 +198,17 @@ pub(crate) fn analytic_host_secs(
             let words = (batch * d_out * d_in.div_ceil(64)) as f64;
             words / rates.word_ops_per_sec + rates.dispatch_secs
         }
+        LayerSpec::BinGcn { nodes, d_in, d_out, .. } => {
+            // dense host execution: per-node combine plus a dense
+            // AND+POPC aggregation sweep over every column block of
+            // every adjacency row (the DenseGcn default kernel)
+            let words = (batch * nodes * d_out * (d_in.div_ceil(64) + nodes.div_ceil(64)))
+                as f64;
+            let stream = (batch * nodes * (d_in + d_out)) as f64 / 8.0;
+            words / rates.word_ops_per_sec
+                + stream / rates.bytes_per_sec
+                + rates.dispatch_secs
+        }
         LayerSpec::Pool => {
             // 4 packed loads + 1 store per output word
             let bytes = (dims.flat() * batch).div_ceil(8) as f64;

@@ -20,6 +20,9 @@
 //!   the fastpath's blocking and lowering with the inner popcount
 //!   dispatched through a runtime-detected `PopcountEngine`
 //!   (AVX2 popcnt / AVX-512 vpopcntdq / NEON cnt / portable).
+//! * [`sparse`] — the two sparse host backends (SPMM, GCN-FUSED):
+//!   CSR-of-bit-lines operands with work proportional to stored
+//!   64-bit blocks, and the binary-GCN aggregate+combine kernels.
 //!
 //! The free functions here assemble per-layer traces from a backend's
 //! conv/FC cores: the scheme-independent pieces (first-layer BWN
@@ -33,6 +36,7 @@ pub mod fastpath;
 pub mod scalar;
 pub mod sbnn;
 pub mod simd;
+pub mod sparse;
 
 use crate::kernels::backend::KernelBackend;
 use crate::nn::cost::ResidualMode;
@@ -50,6 +54,8 @@ pub fn builtin() -> Vec<Box<dyn KernelBackend>> {
         Box::new(btc::BtcBackend::new(true)),
         Box::new(fastpath::FastpathBackend),
         Box::new(simd::SimdBackend::detect()),
+        Box::new(sparse::SparseBackend::spmm()),
+        Box::new(sparse::SparseBackend::gcn_fused()),
     ]
 }
 
@@ -156,6 +162,15 @@ pub(crate) fn assemble_gpu_traces(
             v
         }
         LayerSpec::BinFc { d_in, d_out } => fc_core(d_in, d_out),
+        LayerSpec::BinGcn { nodes, d_in, d_out, .. } => {
+            // The GPU schemes ship no sparse aggregation kernel: price
+            // the layer as the dense (nodes*d_in) x (nodes*d_out)
+            // matmul the masked aggregation would have to fall back to
+            // — finite (the planner can always produce a plan) but far
+            // above the host sparse schemes, so GCN layers plan onto
+            // the host.
+            fc_core(nodes * d_in, nodes * d_out)
+        }
         LayerSpec::FinalFc { d_in, d_out } => {
             // real-valued output: int store + bn, no output binarize
             let mut v = fc_core(d_in, round_up(d_out, 8));

@@ -1,0 +1,504 @@
+//! The sparse host backends (`Scheme::Spmm`, `Scheme::GcnFused`):
+//! CSR-of-bit-lines operands (`bitops::SparseBitMatrix`) with work
+//! proportional to *stored* 64-bit blocks instead of dense width.
+//!
+//! Two schemes share one implementation struct:
+//!
+//! * **SPMM** — the staged pipeline: FC layers run the sparse-operand
+//!   Eq-2 delta dot (`sparse::sparse_pm1_dot`, present weight blocks
+//!   only); GCN layers compute the full transposed combine image, then
+//!   aggregate each output row over its adjacency row's stored blocks.
+//! * **GCN-FUSED** — the fused GCN kernel: the combine is restricted
+//!   up front to the node blocks any adjacency row actually touches
+//!   (precomputed at prepare time — "memoized" once per layer, not per
+//!   request), so untouched node blocks never run a combine at all,
+//!   and aggregation reads the still-hot block lines.
+//!
+//! Both are bit-exact against the dense references at every sparsity.
+//! Conv layers delegate to the fastpath's prepared form (sparsity
+//! never pays on the im2row image), keeping the backends executable on
+//! every model.
+//!
+//! ## Cost face
+//!
+//! The sparse schemes are host schemes (no GPU traces).  GCN layers
+//! cost `combine_words + block_words * stored_blocks` at the detected
+//! SIMD word rate — `secs = f(nnz_blocks, rows, words)`, the
+//! sparsity-parameterized face the tuner fits a `secs_per_sparse_block`
+//! coefficient for.  Dense layers run through the shared analytic host
+//! curve with a *derated* word rate: the CSR indirection always loses
+//! to the dense fastpath there, so the planner only selects a sparse
+//! scheme where stored blocks actually shrink the work — which is
+//! exactly the density crossover `tests/sparse_integration.rs` pins.
+
+use anyhow::{ensure, Result};
+
+use crate::bitops::{pack, pack64, BitMatrix, BitTensor4, SparseBitMatrix};
+use crate::kernels::backend::{
+    ExecCtx, KernelBackend, PreparedConv, PreparedFc, PreparedGcn,
+};
+use crate::kernels::backends::fastpath::{
+    analytic_host_secs, host as fp_host, FastpathBackend, HostRates,
+};
+use crate::kernels::backends::simd::host as simd_host;
+use crate::kernels::bconv::BconvProblem;
+use crate::kernels::simd::PopcountEngine;
+use crate::layout::LayoutKind;
+use crate::nn::cost::{ResidualMode, Scheme};
+use crate::nn::layer::{Dims, LayerSpec};
+use crate::sim::{Engine, KernelTrace};
+use crate::sparse::sparse_pm1_dot;
+use crate::util::threadpool::scoped_chunks;
+
+/// Cost-model constants of the sparse schemes.
+pub mod host {
+    /// Word-unit cost of touching one stored block in the staged SPMM
+    /// aggregation: the AND+POPC itself plus the column-index load and
+    /// the gather it steers.
+    pub const SPMM_BLOCK_WORDS: f64 = 2.0;
+    /// The fused kernel's per-block cost: same indirection, but the
+    /// combine lines it reads are still cache-hot, so the constant is
+    /// modeled slightly below the staged pipeline's.
+    pub const FUSED_BLOCK_WORDS: f64 = 1.8;
+    /// Dense-layer word-rate deration: on dense operands the CSR
+    /// indirection is pure overhead, so the sparse schemes advertise
+    /// half the fastpath's dense word throughput and never win a dense
+    /// layer.
+    pub const DENSE_DERATE: f64 = 0.5;
+}
+
+/// The sparse host backend behind both schemes.
+pub struct SparseBackend {
+    fused: bool,
+    /// GCN word throughput: tracks the detected SIMD popcount engine —
+    /// the inner loop is the same XOR/AND+POPC sweep, so the sparse
+    /// and SIMD schemes are priced at a common rate and the planner's
+    /// sparse-vs-dense choice depends only on block counts.
+    word_rate: f64,
+}
+
+impl SparseBackend {
+    /// The staged sparse backend (`Scheme::Spmm`).
+    pub fn spmm() -> SparseBackend {
+        SparseBackend {
+            fused: false,
+            word_rate: simd_host::word_ops_per_sec(PopcountEngine::detect()),
+        }
+    }
+
+    /// The fused GCN backend (`Scheme::GcnFused`).
+    pub fn gcn_fused() -> SparseBackend {
+        SparseBackend {
+            fused: true,
+            word_rate: simd_host::word_ops_per_sec(PopcountEngine::detect()),
+        }
+    }
+
+    fn block_words(&self) -> f64 {
+        if self.fused {
+            host::FUSED_BLOCK_WORDS
+        } else {
+            host::SPMM_BLOCK_WORDS
+        }
+    }
+}
+
+/// FC weights sparsified to CSR block lines once, off the request
+/// path.  Absent blocks are all -1 (bit 0), so the delta dot is exact
+/// at any density; on near-dense weights it degrades gracefully to a
+/// dense sweep plus the index indirection.
+struct SparseFc {
+    w: SparseBitMatrix,
+    d_in: usize,
+    d_out: usize,
+}
+
+impl SparseFc {
+    fn dot_rows(&self, rows64: &[u64], w64in: usize, batch: usize, ints: &mut [i32], threads: usize) {
+        assert_eq!(ints.len(), batch * self.d_out, "dot staging size");
+        scoped_chunks(ints, self.d_out, threads, |ni, out_row| {
+            let x = &rows64[ni * w64in..(ni + 1) * w64in];
+            // popc(x) hoisted once per input row (the delta identity)
+            let px: u32 = x.iter().map(|v| v.count_ones()).sum();
+            for (j, out) in out_row.iter_mut().enumerate() {
+                let (bc, bb) = self.w.row_blocks(j);
+                *out = sparse_pm1_dot(self.d_in, px, x, bc, bb);
+            }
+        });
+    }
+}
+
+impl PreparedFc for SparseFc {
+    fn scratch_words(&self, batch: usize) -> usize {
+        batch * pack64::words64(self.d_in.div_ceil(32))
+    }
+
+    /// Native operand form: u64 lines, shared with the other host
+    /// schemes so `Blocked64` edges chain across them with no repack.
+    fn input_layout(&self) -> LayoutKind {
+        LayoutKind::Blocked64
+    }
+
+    fn supports_input_layout(&self, layout: LayoutKind) -> bool {
+        matches!(layout, LayoutKind::Row32 | LayoutKind::Blocked64)
+    }
+
+    fn bmm(&self, src: &[u32], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let wpl_in = self.d_in.div_ceil(32);
+        let w64in = pack64::words64(wpl_in);
+        assert!(src.len() >= batch * wpl_in, "input row buffer size");
+        let rows = &mut ctx.words64[..batch * w64in];
+        for (ni, row) in rows.chunks_exact_mut(w64in).enumerate() {
+            pack64::repack64_into(&src[ni * wpl_in..(ni + 1) * wpl_in], row);
+        }
+        self.dot_rows(rows, w64in, batch, ints, ctx.threads);
+    }
+
+    fn bmm64(&self, src64: &[u64], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let w64in = pack64::words64(self.d_in.div_ceil(32));
+        assert!(src64.len() >= batch * w64in, "u64 input row buffer size");
+        self.dot_rows(&src64[..batch * w64in], w64in, batch, ints, ctx.threads);
+    }
+}
+
+/// Shared prepared state of both sparse GCN kernels.
+struct SparseGcn {
+    adj: SparseBitMatrix,
+    /// Out-degree per node (the aggregation's Eq-2 `n`).
+    deg: Vec<i32>,
+    /// Dense combine weights, row-major u32 lines.
+    w: BitMatrix,
+    /// Sorted unique node blocks any adjacency row touches — the fused
+    /// kernel's combine domain.  With self-loops every block appears;
+    /// without them, untouched node blocks never run a combine.
+    touched: Vec<u32>,
+    nodes: usize,
+    d_in: usize,
+    d_out: usize,
+    fused: bool,
+}
+
+impl SparseGcn {
+    fn new(adj: &SparseBitMatrix, w: &BitMatrix, fused: bool) -> Result<SparseGcn> {
+        ensure!(adj.rows == adj.cols, "GCN adjacency must be square");
+        ensure!(w.cols % 64 == 0, "BinGcn d_in must be a multiple of 64");
+        ensure!(w.rows % 64 == 0, "BinGcn d_out must be a multiple of 64");
+        let deg = (0..adj.rows).map(|r| adj.row_degree(r) as i32).collect();
+        let mut touched: Vec<u32> = adj.block_cols.clone();
+        touched.sort_unstable();
+        touched.dedup();
+        Ok(SparseGcn {
+            adj: adj.clone(),
+            deg,
+            w: w.clone(),
+            touched,
+            nodes: adj.rows,
+            d_in: w.cols,
+            d_out: w.rows,
+            fused,
+        })
+    }
+}
+
+impl PreparedGcn for SparseGcn {
+    fn scratch_words(&self, _batch: usize) -> usize {
+        // transposed combine image: d_out lines of `nodes` bits (items
+        // run serially, so batch does not scale the scratch)
+        self.d_out * self.nodes.div_ceil(64)
+    }
+
+    fn gcn(&self, src: &[u32], batch: usize, ints: &mut [i32], ctx: &mut ExecCtx<'_>) {
+        let (nodes, d_in, d_out) = (self.nodes, self.d_in, self.d_out);
+        let wpl_row = (nodes * d_in) / 32;
+        let wpl_node = d_in / 32;
+        let words_n = nodes.div_ceil(64);
+        assert!(src.len() >= batch * wpl_row, "input row buffer size");
+        assert_eq!(ints.len(), batch * nodes * d_out, "gcn staging size");
+        let (ht, _) = ctx.words64.split_at_mut(d_out * words_n);
+        for item in 0..batch {
+            let line = &src[item * wpl_row..(item + 1) * wpl_row];
+            // combine + binarize into transposed node-bit lines —
+            // fused: only node blocks some adjacency row will read
+            scoped_chunks(ht, words_n, ctx.threads, |f, hline| {
+                hline.fill(0);
+                let wline = self.w.line(f);
+                if self.fused {
+                    for &b in &self.touched {
+                        let base = b as usize * 64;
+                        for j in base..(base + 64).min(nodes) {
+                            let a = &line[j * wpl_node..(j + 1) * wpl_node];
+                            if pack::pm1_dot(a, wline, d_in) >= 0 {
+                                hline[b as usize] |= 1u64 << (j - base);
+                            }
+                        }
+                    }
+                } else {
+                    for j in 0..nodes {
+                        let a = &line[j * wpl_node..(j + 1) * wpl_node];
+                        if pack::pm1_dot(a, wline, d_in) >= 0 {
+                            hline[j / 64] |= 1u64 << (j % 64);
+                        }
+                    }
+                }
+            });
+            // aggregate over stored adjacency blocks only
+            let dst = &mut ints[item * nodes * d_out..(item + 1) * nodes * d_out];
+            let ht = &*ht;
+            scoped_chunks(dst, d_out, ctx.threads, |i, row| {
+                let (bc, bb) = self.adj.row_blocks(i);
+                let deg = self.deg[i];
+                for (f, out) in row.iter_mut().enumerate() {
+                    let h = &ht[f * words_n..(f + 1) * words_n];
+                    let mut pc = 0u32;
+                    for (&b, &a) in bc.iter().zip(bb) {
+                        pc += (a & h[b as usize]).count_ones();
+                    }
+                    *out = 2 * pc as i32 - deg;
+                }
+            });
+        }
+    }
+}
+
+impl KernelBackend for SparseBackend {
+    fn scheme(&self) -> Scheme {
+        if self.fused {
+            Scheme::GcnFused
+        } else {
+            Scheme::Spmm
+        }
+    }
+
+    /// Same FC layout faces as the other host schemes: `Blocked64`
+    /// native, so host FC chains (fastpath/SIMD/sparse in any order)
+    /// carry no repack edges.  GCN and conv activations stay `Row32`.
+    fn preferred_input_layout(&self, layer: &LayerSpec) -> LayoutKind {
+        match layer {
+            LayerSpec::BinFc { .. } | LayerSpec::FinalFc { .. } => LayoutKind::Blocked64,
+            _ => LayoutKind::Row32,
+        }
+    }
+
+    fn output_layout(&self, layer: &LayerSpec) -> LayoutKind {
+        match layer {
+            LayerSpec::BinFc { .. } => LayoutKind::Blocked64,
+            _ => LayoutKind::Row32,
+        }
+    }
+
+    fn prepare_fc(&self, w: &BitMatrix) -> Result<Box<dyn PreparedFc>> {
+        Ok(Box::new(SparseFc {
+            w: SparseBitMatrix::from_bitmatrix(w),
+            d_in: w.cols,
+            d_out: w.rows,
+        }))
+    }
+
+    /// Conv layers carry no sparsity story (the im2row image is dense
+    /// by construction): delegate to the fastpath's prepared form, so
+    /// the sparse schemes stay executable — and bit-exact — on every
+    /// model.
+    fn prepare_conv(
+        &self,
+        filter: &BitTensor4,
+        p: BconvProblem,
+    ) -> Result<Box<dyn PreparedConv>> {
+        FastpathBackend.prepare_conv(filter, p)
+    }
+
+    fn prepare_gcn(
+        &self,
+        adj: &SparseBitMatrix,
+        w: &BitMatrix,
+    ) -> Result<Box<dyn PreparedGcn>> {
+        Ok(Box::new(SparseGcn::new(adj, w, self.fused)?))
+    }
+
+    /// Host backend: no GPU trace face.
+    fn layer_traces(
+        &self,
+        _layer: &LayerSpec,
+        _dims: Dims,
+        _batch: usize,
+        _residual: ResidualMode,
+        _model_has_residuals: bool,
+    ) -> Vec<KernelTrace> {
+        Vec::new()
+    }
+
+    fn layer_secs(
+        &self,
+        _engine: &Engine,
+        layer: &LayerSpec,
+        dims: Dims,
+        batch: usize,
+        residual: ResidualMode,
+        model_has_residuals: bool,
+    ) -> f64 {
+        match *layer {
+            LayerSpec::BinGcn { nodes, d_in, d_out, nnz_blocks, .. } => {
+                // the sparsity-parameterized face: combine words plus a
+                // per-stored-block aggregation term
+                let combine = (batch * nodes * d_out * d_in.div_ceil(64)) as f64;
+                let agg = self.block_words() * (batch * d_out * nnz_blocks) as f64;
+                let stream = (batch * nodes * (d_in + d_out)) as f64 / 8.0;
+                (combine + agg) / self.word_rate
+                    + stream / fp_host::BYTES_PER_SEC
+                    + fp_host::DISPATCH_SECS
+            }
+            _ => {
+                let rates = HostRates {
+                    word_ops_per_sec: host::DENSE_DERATE * fp_host::WORD_OPS_PER_SEC,
+                    fp_ops_per_sec: fp_host::FP_OPS_PER_SEC,
+                    bytes_per_sec: fp_host::BYTES_PER_SEC,
+                    dispatch_secs: fp_host::DISPATCH_SECS,
+                };
+                analytic_host_secs(&rates, layer, dims, batch, residual, model_has_residuals)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::Layout;
+    use crate::sparse::{self, AdjKind, AdjSpec};
+    use crate::util::Rng;
+
+    fn naive_fc(a: &BitMatrix, w: &BitMatrix) -> Vec<i32> {
+        let mut out = vec![0i32; a.rows * w.rows];
+        for i in 0..a.rows {
+            for j in 0..w.rows {
+                out[i * w.rows + j] = pack::pm1_dot(a.line(i), w.line(j), w.cols);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn sparse_fc_matches_naive_at_every_density() {
+        let mut rng = Rng::new(821);
+        for density_pct in [0usize, 3, 25, 60, 100] {
+            let (m, n, k) = (5, 9, 130);
+            let a = BitMatrix::random(m, k, Layout::RowMajor, &mut rng);
+            let mut w = BitMatrix::zeros(n, k, Layout::RowMajor);
+            for r in 0..n {
+                for c in 0..k {
+                    if rng.gen_range(100) < density_pct {
+                        w.set(r, c, true);
+                    }
+                }
+            }
+            let want = naive_fc(&a, &w);
+            for backend in [SparseBackend::spmm(), SparseBackend::gcn_fused()] {
+                let fc = backend.prepare_fc(&w).unwrap();
+                let mut scratch = vec![0u64; fc.scratch_words(m)];
+                let mut ints = vec![0i32; m * n];
+                fc.bmm(
+                    &a.data,
+                    m,
+                    &mut ints,
+                    &mut ExecCtx { words64: &mut scratch, threads: 2 },
+                );
+                assert_eq!(ints, want, "{} density {density_pct}%", backend.name());
+            }
+        }
+    }
+
+    #[test]
+    fn both_gcn_kernels_match_the_dense_reference() {
+        let mut rng = Rng::new(822);
+        let (nodes, d_in, d_out, batch) = (96usize, 64usize, 64usize, 2usize);
+        for spec in [
+            AdjSpec { kind: AdjKind::PowerLaw, degree: 4, seed: 5 },
+            AdjSpec { kind: AdjKind::Grid, degree: 2, seed: 0 },
+        ] {
+            let adj = sparse::generate(spec, nodes);
+            let w = BitMatrix::random(d_out, d_in, Layout::RowMajor, &mut rng);
+            let x = BitMatrix::random(batch, nodes * d_in, Layout::RowMajor, &mut rng);
+            let want = sparse::gcn_dense_reference(&adj, &w, &x);
+            for backend in [SparseBackend::spmm(), SparseBackend::gcn_fused()] {
+                let g = backend.prepare_gcn(&adj, &w).unwrap();
+                let mut scratch = vec![0u64; g.scratch_words(batch)];
+                let mut ints = vec![0i32; batch * nodes * d_out];
+                g.gcn(
+                    &x.data,
+                    batch,
+                    &mut ints,
+                    &mut ExecCtx { words64: &mut scratch, threads: 3 },
+                );
+                assert_eq!(ints, want, "{} {spec:?}", backend.name());
+            }
+        }
+    }
+
+    #[test]
+    fn cost_face_crosses_over_on_block_density() {
+        use crate::kernels::backend::BackendRegistry;
+        use crate::sim::RTX2080TI;
+        let eng = Engine::new(&RTX2080TI);
+        let reg = BackendRegistry::builtin();
+        let secs = |scheme: Scheme, l: &LayerSpec, dims: Dims| {
+            reg.get(scheme).unwrap().layer_secs(
+                &eng,
+                l,
+                dims,
+                8,
+                ResidualMode::None,
+                false,
+            )
+        };
+        // low block density: sparse schemes beat both dense host schemes
+        let pl_spec = AdjSpec { kind: AdjKind::PowerLaw, degree: 6, seed: 1 };
+        let pl = sparse::generate(pl_spec, 512);
+        let low = LayerSpec::BinGcn {
+            nodes: 512,
+            d_in: 64,
+            d_out: 64,
+            adj: pl_spec,
+            nnz_blocks: pl.nnz_blocks(),
+        };
+        let dims_low = Dims { hw: 0, feat: 512 * 64 };
+        for sparse_s in [Scheme::Spmm, Scheme::GcnFused] {
+            for dense_s in [Scheme::Fastpath, Scheme::Simd] {
+                assert!(
+                    secs(sparse_s, &low, dims_low) < secs(dense_s, &low, dims_low),
+                    "{} !< {} at low density",
+                    sparse_s.name(),
+                    dense_s.name()
+                );
+            }
+        }
+        // high block density: some dense host scheme beats both sparse
+        let gr_spec = AdjSpec { kind: AdjKind::Grid, degree: 3, seed: 0 };
+        let gr = sparse::generate(gr_spec, 128);
+        let high = LayerSpec::BinGcn {
+            nodes: 128,
+            d_in: 64,
+            d_out: 64,
+            adj: gr_spec,
+            nnz_blocks: gr.nnz_blocks(),
+        };
+        let dims_high = Dims { hw: 0, feat: 128 * 64 };
+        let best_dense = secs(Scheme::Fastpath, &high, dims_high)
+            .min(secs(Scheme::Simd, &high, dims_high));
+        for sparse_s in [Scheme::Spmm, Scheme::GcnFused] {
+            assert!(
+                best_dense < secs(sparse_s, &high, dims_high),
+                "dense !< {} at high density",
+                sparse_s.name()
+            );
+        }
+        // dense layers: the derate keeps sparse schemes strictly behind
+        // the fastpath everywhere
+        let fc = LayerSpec::BinFc { d_in: 4096, d_out: 4096 };
+        let dims_fc = Dims { hw: 0, feat: 4096 };
+        assert!(secs(Scheme::Fastpath, &fc, dims_fc) < secs(Scheme::Spmm, &fc, dims_fc));
+        assert!(
+            secs(Scheme::Fastpath, &fc, dims_fc) < secs(Scheme::GcnFused, &fc, dims_fc)
+        );
+        // and the fused constant undercuts the staged one on GCN layers
+        assert!(secs(Scheme::GcnFused, &low, dims_low) < secs(Scheme::Spmm, &low, dims_low));
+    }
+}

@@ -86,6 +86,17 @@
 //! that restricts the bucket list to sizes whose planner-predicted
 //! service time meets the deadline.  See `docs/SERVING.md`.
 //!
+//! The `sparse` module extends the bit substrate to *sparse* binary
+//! tensors and a graph workload: `bitops::SparseBitMatrix` (CSR of
+//! 64-bit column blocks) with exact dense converters, two sparse host
+//! backends (`Scheme::Spmm`, `Scheme::GcnFused`) whose cost faces are
+//! parameterized on stored-block counts, a binary GCN layer
+//! (`LayerSpec::BinGcn`) with deterministic synthetic adjacencies, and
+//! two GCN models in `nn::all_models()` — so the planner's
+//! scheme/layout DP sees a density-dependent sparse-vs-dense crossover
+//! and plans carry a sparsity fingerprint that invalidates the cache
+//! when adjacency density changes.  See `docs/ENGINE.md`.
+//!
 //! The `obs` module is the telemetry layer the stack reports into:
 //! a bounded log-scale latency histogram (replacing unbounded
 //! per-request latency storage in `coordinator::Metrics`), per-batch
@@ -110,6 +121,7 @@ pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod sparse;
 pub mod tuner;
 pub mod util;
 

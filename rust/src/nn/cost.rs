@@ -42,6 +42,13 @@ pub enum Scheme {
     /// fastpath's blocking with the inner product dispatched through a
     /// runtime-detected `PopcountEngine`; analytic host cost model
     Simd,
+    /// host sparse backend (`kernels::backends::sparse`): CSR-of-bit-
+    /// lines weights/adjacency, XNOR-popcount over *present* blocks
+    /// only; cost face parameterized on stored-block counts
+    Spmm,
+    /// host fused sparse GCN backend: aggregate+combine in one pass
+    /// with lazily-memoized per-node-block combine
+    GcnFused,
 }
 
 impl Scheme {
@@ -55,10 +62,12 @@ impl Scheme {
             Scheme::BtcFmt => "BTC-FMT",
             Scheme::Fastpath => "FASTPATH",
             Scheme::Simd => "SIMD",
+            Scheme::Spmm => "SPMM",
+            Scheme::GcnFused => "GCN-FUSED",
         }
     }
 
-    pub fn all() -> [Scheme; 8] {
+    pub fn all() -> [Scheme; 10] {
         [
             Scheme::Sbnn32,
             Scheme::Sbnn32Fine,
@@ -68,13 +77,18 @@ impl Scheme {
             Scheme::BtcFmt,
             Scheme::Fastpath,
             Scheme::Simd,
+            Scheme::Spmm,
+            Scheme::GcnFused,
         ]
     }
 
     /// Whether this scheme executes on the serving host's cores (no
     /// GPU trace face; analytic/calibrated host cost model).
     pub fn is_host(&self) -> bool {
-        matches!(self, Scheme::Fastpath | Scheme::Simd)
+        matches!(
+            self,
+            Scheme::Fastpath | Scheme::Simd | Scheme::Spmm | Scheme::GcnFused
+        )
     }
 
     /// Inverse of `name` (used by the engine's plan serialization and

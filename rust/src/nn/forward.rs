@@ -13,9 +13,12 @@
 //! global registry.  (The old `forward_fastpath` is gone; call
 //! `forward_with(.., Scheme::Fastpath)` instead.)
 
-use crate::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
+use std::sync::Arc;
+
+use crate::bitops::{BitMatrix, BitTensor4, Layout, SparseBitMatrix, TensorLayout};
 use crate::kernels::backend::{BackendRegistry, ExecCtx};
 use crate::kernels::bconv::BconvProblem;
+use crate::sparse;
 use crate::util::Rng;
 
 use super::cost::Scheme;
@@ -31,6 +34,10 @@ pub enum LayerWeights {
     BinConv { filter: BitTensor4, thresh: Vec<f32> },
     /// binarized fc: packed weight rows (d_out x d_in/32) + thresholds
     BinFc { w: BitMatrix, thresh: Vec<f32> },
+    /// binary GCN: shared adjacency (regenerated from the layer's
+    /// `AdjSpec`, so it is spec-determined, not a stored weight),
+    /// packed combine weights (d_out x d_in/32), per-feature thresholds
+    BinGcn { adj: Arc<SparseBitMatrix>, w: BitMatrix, thresh: Vec<f32> },
     /// final fc: packed weights + bn scale/shift
     FinalFc { w: BitMatrix, gamma: Vec<f32>, beta: Vec<f32> },
     Pool,
@@ -57,6 +64,11 @@ pub fn random_weights(model: &ModelDef, rng: &mut Rng) -> ModelWeights {
                 thresh: vec![0.0; o],
             },
             LayerSpec::BinFc { d_in, d_out } => LayerWeights::BinFc {
+                w: BitMatrix::random(d_out, d_in, Layout::RowMajor, rng),
+                thresh: vec![0.0; d_out],
+            },
+            LayerSpec::BinGcn { nodes, d_in, d_out, adj, .. } => LayerWeights::BinGcn {
+                adj: Arc::new(sparse::generate(adj, nodes)),
                 w: BitMatrix::random(d_out, d_in, Layout::RowMajor, rng),
                 thresh: vec![0.0; d_out],
             },
@@ -304,6 +316,29 @@ pub fn forward_with(
                 act = Some(Act::Flat(out));
             }
             (
+                LayerSpec::BinGcn { nodes, d_in, d_out, .. },
+                LayerWeights::BinGcn { adj, w, thresh },
+            ) => {
+                let flat = flat_rows(act.take(), &mut fp_input, batch, nodes * d_in);
+                assert_eq!(flat.cols, nodes * d_in);
+                let prepared = backend
+                    .prepare_gcn(adj, w)
+                    .unwrap_or_else(|e| panic!("{}: prepare gcn: {e}", scheme.name()));
+                let mut scratch = vec![0u64; prepared.scratch_words(batch)];
+                let mut v = vec![0i32; batch * nodes * d_out];
+                let mut ctx = ExecCtx { words64: &mut scratch, threads };
+                prepared.gcn(&flat.data, batch, &mut v, &mut ctx);
+                let mut out = BitMatrix::zeros(batch, nodes * d_out, Layout::RowMajor);
+                for bi in 0..batch {
+                    for j in 0..nodes * d_out {
+                        if (v[bi * nodes * d_out + j] as f32) >= thresh[j % d_out] {
+                            out.set(bi, j, true);
+                        }
+                    }
+                }
+                act = Some(Act::Flat(out));
+            }
+            (
                 LayerSpec::FinalFc { d_in, d_out },
                 LayerWeights::FinalFc { w, gamma, beta },
             ) => {
@@ -411,6 +446,43 @@ mod tests {
         // registry-uniform here too
         let reg = BackendRegistry::global();
         assert_eq!(forward_with(&m, &w, &x, batch, reg, Scheme::Fastpath), a);
+    }
+
+    #[test]
+    fn gcn_forward_is_scheme_identical() {
+        // tiny BitGNN: one hop + readout; every registered backend
+        // (including both sparse schemes) must produce identical logits
+        let spec = crate::sparse::AdjSpec {
+            kind: crate::sparse::AdjKind::PowerLaw,
+            degree: 3,
+            seed: 9,
+        };
+        let nodes = 32;
+        let nnz_blocks = crate::sparse::generate(spec, nodes).nnz_blocks();
+        let m = ModelDef {
+            name: "tiny-gcn",
+            dataset: "synthetic",
+            input: Dims { hw: 0, feat: nodes * 64 },
+            classes: 4,
+            layers: vec![
+                LayerSpec::BinGcn { nodes, d_in: 64, d_out: 64, adj: spec, nnz_blocks },
+                LayerSpec::BinFc { d_in: nodes * 64, d_out: 64 },
+                LayerSpec::FinalFc { d_in: 64, d_out: 4 },
+            ],
+            residual_blocks: 0,
+        };
+        let mut rng = Rng::new(31);
+        let w = random_weights(&m, &mut rng);
+        let batch = 3;
+        let x: Vec<f32> =
+            (0..batch * nodes * 64).map(|_| rng.next_f32() - 0.5).collect();
+        let reg = BackendRegistry::global();
+        let want = forward(&m, &w, &x, batch);
+        assert_eq!(want.len(), batch * 4);
+        assert!(want.iter().all(|v| v.is_finite()));
+        for s in reg.schemes() {
+            assert_eq!(forward_with(&m, &w, &x, batch, reg, s), want, "scheme {}", s.name());
+        }
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Layer specifications (inference view, after the §6.1 rewrites).
 
+use crate::sparse::AdjSpec;
+
 /// One layer of a BNN model, in inference form: every hidden layer
 /// consumes and produces packed bits; bn+sign pairs are a threshold
 /// (`thrd`) fused into the producing layer; max-pool is an OR fused
@@ -22,6 +24,21 @@ pub enum LayerSpec {
     },
     /// Binarized fully-connected layer (+ fused thrd).
     BinFc { d_in: usize, d_out: usize },
+    /// Binary GCN layer (BitGNN): per-node Eq-2 combine against dense
+    /// +/-1 weights (`d_in -> d_out` per node), binarize, then masked
+    /// aggregation over the graph adjacency (+ fused thrd).  The
+    /// activation is flat `nodes * d_in` bits in, `nodes * d_out` bits
+    /// out; `d_in`/`d_out` must be multiples of 64 so node rows stay
+    /// u64-aligned.  Adjacency is regenerated from `adj` wherever
+    /// weights materialize; `nnz_blocks` is its realized stored-block
+    /// count — the sparsity the cost faces and plan tags key on.
+    BinGcn {
+        nodes: usize,
+        d_in: usize,
+        d_out: usize,
+        adj: AdjSpec,
+        nnz_blocks: usize,
+    },
     /// Final FC layer: binarized weights, real-valued output + bn (§6.1:
     /// bn cannot become thrd here).
     FinalFc { d_in: usize, d_out: usize },
@@ -50,6 +67,11 @@ impl LayerSpec {
                 s
             }
             LayerSpec::BinFc { d_out, .. } => format!("{d_out}FC"),
+            LayerSpec::BinGcn { nodes, d_out, nnz_blocks, .. } => {
+                // nnz in the tag: a density change re-tags the layer,
+                // which re-fingerprints any cached plan
+                format!("{d_out}G{nodes}n{nnz_blocks}")
+            }
             LayerSpec::FinalFc { d_out, .. } => format!("{d_out}out"),
             LayerSpec::Pool => "P2".to_string(),
         }
@@ -63,6 +85,7 @@ impl LayerSpec {
             LayerSpec::BinFc { d_in, d_out } | LayerSpec::FinalFc { d_in, d_out } => {
                 d_in * d_out
             }
+            LayerSpec::BinGcn { d_in, d_out, .. } => d_in * d_out,
             LayerSpec::Pool => 0,
         }
     }
@@ -94,6 +117,9 @@ impl Dims {
             }
             LayerSpec::BinFc { d_out, .. } | LayerSpec::FinalFc { d_out, .. } => {
                 Dims { hw: 0, feat: *d_out }
+            }
+            LayerSpec::BinGcn { nodes, d_out, .. } => {
+                Dims { hw: 0, feat: nodes * d_out }
             }
             LayerSpec::Pool => Dims { hw: self.hw / 2, feat: self.feat },
         }

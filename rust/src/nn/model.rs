@@ -1,6 +1,10 @@
-//! The evaluation models (Table 5) + ResNet depth variants (Table 11).
+//! The evaluation models (Table 5) + ResNet depth variants (Table 11),
+//! plus two BitGNN graph-convolution models exercising the sparse
+//! adjacency path.
 
 use anyhow::Result;
+
+use crate::sparse::{self, AdjKind, AdjSpec};
 
 use super::layer::{Dims, LayerSpec};
 use super::parser::{parse_structure, Unit};
@@ -220,7 +224,61 @@ pub fn imagenet_resnet(depth: usize) -> ModelDef {
     .unwrap()
 }
 
-/// The six Tables-6/7 models, in column order.
+/// Build a two-layer binary GCN (BitGNN): two BinGcn hops over a fixed
+/// adjacency, a readout FC over the concatenated node features, and
+/// the classifier head.  The adjacency is generated once here to
+/// record its realized stored-block count (`nnz_blocks`) in the layer
+/// spec — the sparsity the cost faces and plan fingerprints key on.
+fn gcn_model(
+    name: &'static str,
+    dataset: &'static str,
+    nodes: usize,
+    d: usize,
+    adj: AdjSpec,
+) -> ModelDef {
+    let nnz_blocks = sparse::generate(adj, nodes).nnz_blocks();
+    let gcn = LayerSpec::BinGcn { nodes, d_in: d, d_out: d, adj, nnz_blocks };
+    ModelDef {
+        name,
+        dataset,
+        input: Dims { hw: 0, feat: nodes * d },
+        classes: 10,
+        layers: vec![
+            gcn.clone(),
+            gcn,
+            LayerSpec::BinFc { d_in: nodes * d, d_out: 128 },
+            LayerSpec::FinalFc { d_in: 128, d_out: 10 },
+        ],
+        residual_blocks: 0,
+    }
+}
+
+/// Power-law (hub-clustered) BitGNN: block-sparse adjacency where the
+/// sparse schemes win the layout DP.
+pub fn gcn_powerlaw() -> ModelDef {
+    gcn_model(
+        "GCN-PowerLaw",
+        "synthetic-graph",
+        512,
+        64,
+        AdjSpec { kind: AdjKind::PowerLaw, degree: 6, seed: 1 },
+    )
+}
+
+/// Grid-neighborhood BitGNN: block-dense adjacency where the dense
+/// host schemes win — the other side of the density crossover.
+pub fn gcn_grid() -> ModelDef {
+    gcn_model(
+        "GCN-Grid",
+        "synthetic-graph",
+        128,
+        64,
+        AdjSpec { kind: AdjKind::Grid, degree: 3, seed: 0 },
+    )
+}
+
+/// The six Tables-6/7 models, in column order, plus the two BitGNN
+/// graph models.
 pub fn all_models() -> Vec<ModelDef> {
     vec![
         mnist_mlp(),
@@ -229,6 +287,8 @@ pub fn all_models() -> Vec<ModelDef> {
         imagenet_alexnet(),
         imagenet_vgg16(),
         imagenet_resnet18(),
+        gcn_powerlaw(),
+        gcn_grid(),
     ]
 }
 
@@ -239,7 +299,7 @@ mod tests {
     #[test]
     fn six_models_build() {
         let models = all_models();
-        assert_eq!(models.len(), 6);
+        assert_eq!(models.len(), 8);
         for m in &models {
             assert!(m.layers.len() >= 4, "{} too shallow", m.name);
             assert!(
@@ -296,6 +356,41 @@ mod tests {
             .unwrap();
         // 224 / 2^5 = 7 spatial, 512 channels
         assert_eq!(fc, 7 * 7 * 512);
+    }
+
+    #[test]
+    fn gcn_models_are_well_formed() {
+        for m in [gcn_powerlaw(), gcn_grid()] {
+            let mut d = m.input;
+            let mut gcn_layers = 0usize;
+            for l in &m.layers {
+                if let LayerSpec::BinGcn { nodes, d_in, d_out, nnz_blocks, .. } = l {
+                    // realized sparsity must be recorded, node rows
+                    // must stay u64-aligned, and the incoming flat
+                    // activation must match nodes * d_in
+                    assert!(*nnz_blocks > 0, "{}", m.name);
+                    assert_eq!(d_in % 64, 0);
+                    assert_eq!(d_out % 64, 0);
+                    assert_eq!(d.feat, nodes * d_in, "{}", m.name);
+                    gcn_layers += 1;
+                }
+                d = d.after(l);
+            }
+            assert_eq!(gcn_layers, 2, "{}", m.name);
+            assert_eq!(d.feat, m.classes, "{}", m.name);
+        }
+        // the two generators sit on opposite sides of the block-density
+        // crossover: power-law stays block-sparse, grid is near-dense
+        let pl = gcn_powerlaw();
+        let gr = gcn_grid();
+        let nnz = |m: &ModelDef| match m.layers[0] {
+            LayerSpec::BinGcn { nodes, nnz_blocks, .. } => {
+                nnz_blocks as f64 / (nodes * nodes.div_ceil(64)) as f64
+            }
+            _ => unreachable!(),
+        };
+        assert!(nnz(&pl) < 0.3, "power-law block density {}", nnz(&pl));
+        assert!(nnz(&gr) > 0.6, "grid block density {}", nnz(&gr));
     }
 
     #[test]

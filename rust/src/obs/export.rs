@@ -28,9 +28,11 @@ use crate::util::stats::Summary;
 /// `steals`, the SLO hit/miss counters, and per-shard attribution.
 /// v3 added the live-observability fields: rolling-window stats
 /// (`windows`) and per-shard watchdog health (`health`).
-/// [`Snapshot::from_json`] still accepts v2 documents (the new fields
-/// default to empty).
-pub const OBS_SCHEMA: u64 = 3;
+/// v4 added `priority_sheds` (requests shed because a low-priority
+/// model yielded to shared-host pressure).
+/// [`Snapshot::from_json`] still accepts v2/v3 documents (the new
+/// fields default to empty/zero).
+pub const OBS_SCHEMA: u64 = 4;
 
 /// Oldest schema [`Snapshot::from_json`] accepts.
 pub const MIN_OBS_SCHEMA: u64 = 2;
@@ -139,8 +141,13 @@ pub struct Snapshot {
     pub traces_capacity: u64,
     /// largest padded batch executed (the SLO batch sizer's observable)
     pub max_batch_rows: u64,
-    /// requests rejected by admission control (rate limit + queue depth)
+    /// requests rejected by admission control (rate limit + queue
+    /// depth + priority shedding)
     pub sheds: u64,
+    /// the subset of `sheds` rejected because this model is
+    /// low-priority and higher-priority models on the host were backed
+    /// up (0 before v4 and for priority-0 models)
+    pub priority_sheds: u64,
     /// work-steal operations across the model's replica shards
     pub steals: u64,
     /// accepted requests that met the configured p99 deadline
@@ -193,6 +200,7 @@ impl Snapshot {
             ("traces_dropped_total", self.traces_dropped as f64),
             ("max_batch_rows", self.max_batch_rows as f64),
             ("sheds_total", self.sheds as f64),
+            ("priority_sheds_total", self.priority_sheds as f64),
             ("steals_total", self.steals as f64),
             ("slo_hits_total", self.slo_hits as f64),
             ("slo_misses_total", self.slo_misses as f64),
@@ -261,6 +269,9 @@ impl Snapshot {
         }
         if self.sheds > 0 {
             out.push_str(&format!(" sheds={}", self.sheds));
+        }
+        if self.priority_sheds > 0 {
+            out.push_str(&format!(" priority_sheds={}", self.priority_sheds));
         }
         if self.steals > 0 {
             out.push_str(&format!(" steals={}", self.steals));
@@ -441,6 +452,10 @@ impl Snapshot {
                 "fleet".to_string(),
                 Value::Obj(vec![
                     ("sheds".to_string(), num(self.sheds as f64)),
+                    (
+                        "priority_sheds".to_string(),
+                        num(self.priority_sheds as f64),
+                    ),
                     ("steals".to_string(), num(self.steals as f64)),
                     ("slo_hits".to_string(), num(self.slo_hits as f64)),
                     ("slo_misses".to_string(), num(self.slo_misses as f64)),
@@ -601,6 +616,8 @@ impl Snapshot {
             traces_capacity: req_u64(traces, "capacity")?,
             max_batch_rows: req_u64(v, "max_batch_rows")?,
             sheds: req_u64(fleet, "sheds")?,
+            // v4 field: absent in v2/v3 documents -> 0
+            priority_sheds: opt_u64(fleet, "priority_sheds")?,
             steals: req_u64(fleet, "steals")?,
             slo_hits: req_u64(fleet, "slo_hits")?,
             slo_misses: req_u64(fleet, "slo_misses")?,
@@ -722,6 +739,9 @@ fn family_help(name: &str) -> &'static str {
         "traces_dropped_total" => "Batch traces evicted from the ring",
         "max_batch_rows" => "Largest padded batch executed",
         "sheds_total" => "Requests rejected by admission control",
+        "priority_sheds_total" => {
+            "Low-priority requests shed under shared-host pressure"
+        }
         "steals_total" => "Work-steal operations between shards",
         "slo_hits_total" => "Requests that met the SLO deadline",
         "slo_misses_total" => "Requests that missed the SLO deadline",
@@ -1064,6 +1084,15 @@ fn req_u64(v: &Value, key: &str) -> Result<u64, String> {
     }
 }
 
+/// Like [`req_u64`] but an absent key reads as 0 — for counters added
+/// after `MIN_OBS_SCHEMA` (v2/v3 documents lack `priority_sheds`).
+fn opt_u64(v: &Value, key: &str) -> Result<u64, String> {
+    match v.get(key) {
+        None => Ok(0),
+        Some(_) => req_u64(v, key),
+    }
+}
+
 fn req_str(v: &Value, key: &str) -> Result<String, String> {
     v.get(key)
         .and_then(Value::as_str)
@@ -1130,6 +1159,7 @@ mod tests {
             traces_capacity: 256,
             max_batch_rows: 8,
             sheds: 7,
+            priority_sheds: 3,
             steals: 2,
             slo_hits: 9,
             slo_misses: 2,
@@ -1202,6 +1232,7 @@ mod tests {
         assert!(r.contains("repack=3ops/12288B"), "{r}");
         assert!(r.contains("replans=1"), "{r}");
         assert!(r.contains("sheds=7"), "{r}");
+        assert!(r.contains("priority_sheds=3"), "{r}");
         assert!(r.contains("steals=2"), "{r}");
         assert!(r.contains("slo_hit=81.8%"), "{r}");
         assert!(r.contains("drift[FASTPATH]=1.10x"), "{r}");
@@ -1229,16 +1260,39 @@ mod tests {
 
     #[test]
     fn from_json_accepts_v2_documents() {
-        // a PR-8 era dump: schema 2, no windows/health keys
+        // a PR-8 era dump: schema 2, no windows/health keys, and no
+        // priority_sheds counter inside the fleet object
         let mut doc = sample().to_json();
         if let Value::Obj(fields) = &mut doc {
             fields[0].1 = Value::Num(2.0);
             fields.retain(|(k, _)| k != "windows" && k != "health");
+            if let Some((_, Value::Obj(fleet))) =
+                fields.iter_mut().find(|(k, _)| k == "fleet")
+            {
+                fleet.retain(|(k, _)| k != "priority_sheds");
+            }
         }
         let snap = Snapshot::from_json(&doc).expect("v2 still parses");
         assert_eq!(snap.requests, 11);
         assert!(snap.windows.is_empty(), "v3 fields default empty");
         assert!(snap.health.is_empty());
+        assert_eq!(snap.priority_sheds, 0, "v4 counter defaults to 0");
+    }
+
+    #[test]
+    fn from_json_accepts_v3_documents_without_priority_sheds() {
+        let mut doc = sample().to_json();
+        if let Value::Obj(fields) = &mut doc {
+            fields[0].1 = Value::Num(3.0);
+            if let Some((_, Value::Obj(fleet))) =
+                fields.iter_mut().find(|(k, _)| k == "fleet")
+            {
+                fleet.retain(|(k, _)| k != "priority_sheds");
+            }
+        }
+        let snap = Snapshot::from_json(&doc).expect("v3 still parses");
+        assert_eq!(snap.sheds, 7, "other fleet counters intact");
+        assert_eq!(snap.priority_sheds, 0, "absent counter reads as 0");
     }
 
     #[test]

@@ -22,6 +22,10 @@ pub enum Overload {
     RateLimited,
     /// total queued depth across the model's shards is at the limit
     QueueFull,
+    /// the request targeted a low-priority model while higher-priority
+    /// models sharing the host were backed up; background work yields
+    /// first (see `serve::Fleet` priority shedding)
+    LowPriority,
 }
 
 impl std::fmt::Display for Overload {
@@ -29,6 +33,9 @@ impl std::fmt::Display for Overload {
         match self {
             Overload::RateLimited => write!(f, "rate limited (token bucket empty)"),
             Overload::QueueFull => write!(f, "queue depth limit reached"),
+            Overload::LowPriority => {
+                write!(f, "shed as low priority under shared-host pressure")
+            }
         }
     }
 }

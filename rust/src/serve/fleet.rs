@@ -9,10 +9,12 @@
 //! own queue; else steal the oldest queued requests from the deepest
 //! sibling; else sleep until the flush deadline or a submit wakes it.
 //!
-//! The submit path is synchronous about rejection: admission control
-//! (token bucket + total queue depth) runs *before* anything is
-//! enqueued, so a shed request returns [`FleetError::Overloaded`] and
-//! never leaves a waiter behind.  Accepted requests carry their
+//! The submit path is synchronous about rejection: priority shedding
+//! (a low-priority model yields when higher-priority backlog crosses
+//! the fleet's pressure threshold) and admission control (token bucket
+//! + total queue depth) run *before* anything is enqueued, so a shed
+//! request returns [`FleetError::Overloaded`] and never leaves a
+//! waiter behind.  Accepted requests carry their
 //! response sender with them through the queues — a steal moves the
 //! waiter along with the work.
 //!
@@ -85,6 +87,13 @@ impl From<RouteError> for FleetError {
 pub struct FleetModelConfig {
     /// replica shards (worker threads), >= 1
     pub shards: usize,
+    /// shared-host scheduling class: 0 (default) is highest priority
+    /// and never priority-shed; a model with priority N > 0 sheds new
+    /// submits ([`Overload::LowPriority`]) whenever the total backlog
+    /// across strictly-higher-priority models (priority < N) reaches
+    /// the fleet's pressure threshold — background work yields the
+    /// host to critical work first
+    pub priority: u8,
     /// max time a straggler may wait before a partial batch flushes
     pub max_wait: Duration,
     pub admission: AdmissionConfig,
@@ -103,6 +112,7 @@ impl Default for FleetModelConfig {
     fn default() -> Self {
         FleetModelConfig {
             shards: 2,
+            priority: 0,
             max_wait: Duration::from_millis(2),
             admission: AdmissionConfig::default(),
             slo: None,
@@ -160,6 +170,8 @@ impl ShardStats {
 /// Everything one model's submit path and workers share.
 struct ModelShared {
     name: String,
+    /// shared-host scheduling class (0 = highest, never priority-shed)
+    priority: u8,
     max_wait: Duration,
     queues: Vec<ShardQueue>,
     stats: Vec<ShardStats>,
@@ -170,6 +182,9 @@ struct ModelShared {
     /// sampled request-trace sink (None: no trace log)
     trace: Option<Arc<TraceWriter>>,
     sheds: AtomicU64,
+    /// subset of `sheds`: rejections because this model yielded to
+    /// higher-priority backlog
+    priority_sheds: AtomicU64,
     slo_hits: AtomicU64,
     slo_misses: AtomicU64,
     slo: Option<SloConfig>,
@@ -217,11 +232,18 @@ impl ModelShared {
     }
 }
 
+/// Default [`Fleet::set_priority_pressure`] threshold: the
+/// higher-priority backlog (total queued requests) at which
+/// lower-priority submits start shedding.
+const DEFAULT_PRIORITY_PRESSURE: usize = 64;
+
 /// The fleet router: owns every model's shards; submit by name.
 pub struct Fleet {
     models: HashMap<String, Arc<ModelShared>>,
     workers: Vec<JoinHandle<()>>,
     watchdog: Mutex<Option<Watchdog>>,
+    /// higher-priority backlog depth at which low-priority submits shed
+    priority_pressure: usize,
 }
 
 impl Default for Fleet {
@@ -236,7 +258,16 @@ impl Fleet {
             models: HashMap::new(),
             workers: Vec::new(),
             watchdog: Mutex::new(None),
+            priority_pressure: DEFAULT_PRIORITY_PRESSURE,
         }
+    }
+
+    /// Set the shared-host pressure threshold: when the total backlog
+    /// across models of priority < N reaches `depth`, submits to
+    /// priority-N models (N > 0) shed with [`Overload::LowPriority`].
+    /// Priority-0 models are never priority-shed.
+    pub fn set_priority_pressure(&mut self, depth: usize) {
+        self.priority_pressure = depth.max(1);
     }
 
     /// Register a model under `name` with `cfg.shards` replicas.  The
@@ -254,6 +285,7 @@ impl Fleet {
         );
         let shared = Arc::new(ModelShared {
             name: name.to_string(),
+            priority: cfg.priority,
             max_wait: cfg.max_wait,
             queues: (0..cfg.shards).map(|_| ShardQueue::new()).collect(),
             stats: (0..cfg.shards).map(|_| ShardStats::new()).collect(),
@@ -262,6 +294,7 @@ impl Fleet {
             epoch: Instant::now(),
             trace: cfg.trace,
             sheds: AtomicU64::new(0),
+            priority_sheds: AtomicU64::new(0),
             slo_hits: AtomicU64::new(0),
             slo_misses: AtomicU64::new(0),
             slo: cfg.slo,
@@ -310,6 +343,23 @@ impl Fleet {
         if m.shutdown.load(Ordering::Acquire) {
             return Err(RouteError::Shutdown { model: model.to_string() }.into());
         }
+        // priority shedding runs before admission: a yielding request
+        // must not burn the model's own rate tokens.  Pressure is the
+        // backlog of strictly-higher-priority models on this host.
+        if m.priority > 0 {
+            let pressure: usize = self
+                .models
+                .values()
+                .filter(|o| o.priority < m.priority)
+                .map(|o| o.total_depth())
+                .sum();
+            if pressure >= self.priority_pressure {
+                m.sheds.fetch_add(1, Ordering::Relaxed);
+                m.priority_sheds.fetch_add(1, Ordering::Relaxed);
+                m.metrics.record_shed();
+                return Err(FleetError::Overloaded(Overload::LowPriority));
+            }
+        }
         if let Err(o) = m.admission.try_admit(m.total_depth(), Instant::now()) {
             m.sheds.fetch_add(1, Ordering::Relaxed);
             m.metrics.record_shed();
@@ -335,9 +385,18 @@ impl Fleet {
         self.models.get(model).map(|m| Arc::clone(&m.metrics))
     }
 
-    /// Requests shed by admission control.
+    /// Requests shed by admission control (priority sheds included).
     pub fn sheds(&self, model: &str) -> Option<u64> {
         self.models.get(model).map(|m| m.sheds.load(Ordering::Relaxed))
+    }
+
+    /// The subset of [`Fleet::sheds`] rejected because this model is
+    /// low-priority and higher-priority backlog crossed the pressure
+    /// threshold.
+    pub fn priority_sheds(&self, model: &str) -> Option<u64> {
+        self.models
+            .get(model)
+            .map(|m| m.priority_sheds.load(Ordering::Relaxed))
     }
 
     /// Steal operations across the model's shards.
@@ -374,6 +433,7 @@ impl Fleet {
         let m = self.models.get(model)?;
         let mut snap = m.metrics.snapshot();
         snap.sheds = m.sheds.load(Ordering::Relaxed);
+        snap.priority_sheds = m.priority_sheds.load(Ordering::Relaxed);
         snap.steals = m
             .stats
             .iter()
@@ -1015,6 +1075,45 @@ mod tests {
         for rx in accepted {
             rx.recv_timeout(Duration::from_secs(60)).expect("accepted => answered");
         }
+    }
+
+    #[test]
+    fn low_priority_model_sheds_under_shared_host_pressure() {
+        let mut fleet = Fleet::new();
+        fleet.set_priority_pressure(4);
+        // the critical model's worker exits (failed factory), so every
+        // accepted request stays queued: deterministic backlog
+        fleet.register(
+            "critical",
+            FleetModelConfig { shards: 1, ..Default::default() },
+            || anyhow::bail!("no accelerator"),
+        );
+        fleet.register(
+            "background",
+            FleetModelConfig { shards: 1, priority: 1, ..Default::default() },
+            mock_factory(Duration::ZERO),
+        );
+        // no pressure yet: background serves normally
+        let rx = fleet.submit("background", vec![0.0; 4]).expect("no pressure");
+        rx.recv_timeout(Duration::from_secs(30)).expect("answered");
+        // build 4 queued requests of higher-priority backlog
+        for i in 0..4 {
+            fleet.submit("critical", vec![i as f32; 4]).expect("queued");
+        }
+        // background now yields the host...
+        match fleet.submit("background", vec![0.0; 4]) {
+            Err(FleetError::Overloaded(Overload::LowPriority)) => {}
+            other => panic!("expected LowPriority shed, got {other:?}"),
+        }
+        // ...while the critical model itself is untouched by priority
+        // shedding (priority 0 never yields)
+        fleet.submit("critical", vec![0.0; 4]).expect("priority 0 admitted");
+        assert_eq!(fleet.priority_sheds("background"), Some(1));
+        assert_eq!(fleet.sheds("background"), Some(1), "counted as a shed too");
+        assert_eq!(fleet.priority_sheds("critical"), Some(0));
+        let snap = fleet.snapshot("background").unwrap();
+        assert_eq!(snap.priority_sheds, 1);
+        assert_eq!(snap.sheds, 1);
     }
 
     /// A mock whose engine-side snapshot is synthetic per-replica

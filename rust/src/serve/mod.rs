@@ -12,6 +12,11 @@
 //!   rate + burst) and a queue-depth cap shed load *synchronously* on
 //!   the submit path — a rejected request gets an explicit
 //!   [`Overload`] and is never enqueued, so no waiter leaks.
+//!   Models carry a `priority` (0 = highest): under shared-host
+//!   pressure (summed higher-priority queue depth past
+//!   [`Fleet::set_priority_pressure`]) lower-priority submits shed
+//!   with [`Overload::LowPriority`] before they can starve a
+//!   latency-critical tenant.
 //! * **SLO-aware batch sizing** ([`slo`]): given a p99 deadline, batch
 //!   formation is restricted to the largest buckets whose predicted
 //!   service time (the planner's Live/Calibrated/Analytic cost source)

@@ -23,6 +23,10 @@ pub struct Features {
     /// streamed bytes (im2row build, output repack, pooling, residual
     /// save/fetch traffic).
     pub stream_bytes: f64,
+    /// stored 64-bit adjacency blocks touched by a sparse aggregation
+    /// (BinGcn layers only — zero everywhere else, so dense backends
+    /// fit with the column deactivated).
+    pub sparse_block_ops: f64,
 }
 
 /// Extract the cost-model features of one layer.  `dims` is the
@@ -64,7 +68,7 @@ pub fn layer_features(
                 };
                 stream_bytes += (out_dims.flat() * batch * 2 * xfers) as f64;
             }
-            Features { fp_ops: 0.0, word_ops, stream_bytes }
+            Features { fp_ops: 0.0, word_ops, stream_bytes, sparse_block_ops: 0.0 }
         }
         LayerSpec::BinFc { d_in, d_out } | LayerSpec::FinalFc { d_in, d_out } => {
             Features {
@@ -72,6 +76,15 @@ pub fn layer_features(
                 ..Features::default()
             }
         }
+        LayerSpec::BinGcn { nodes, d_in, d_out, nnz_blocks, .. } => Features {
+            // per-node combine is dense word work; the aggregation is
+            // priced per stored adjacency block, which is what lets a
+            // fitted sparse backend track density instead of nodes^2
+            word_ops: (batch * nodes * d_out * d_in.div_ceil(64)) as f64,
+            sparse_block_ops: (batch * d_out * nnz_blocks) as f64,
+            stream_bytes: (batch * nodes * (d_in + d_out)) as f64 / 8.0,
+            ..Features::default()
+        },
         LayerSpec::Pool => Features {
             // 4 packed loads + 1 store per output word
             stream_bytes: (dims.flat() * batch).div_ceil(8) as f64 * 5.0,
@@ -146,6 +159,53 @@ mod tests {
                     "{layer:?} {residual:?}: features {predicted} vs analytic {analytic}"
                 );
             }
+        }
+    }
+
+    /// GCN features must mirror the sparse backends' analytic faces:
+    /// `secs = word_ops/rate + sparse_block_ops*BLOCK_WORDS/rate +
+    /// stream/B + DISPATCH`, so a fitted sparse profile is the same
+    /// curve with measured coefficients.
+    #[test]
+    fn gcn_features_reproduce_analytic_sparse_model() {
+        use crate::kernels::backend::BackendRegistry;
+        use crate::kernels::backends::simd::host as simd_host;
+        use crate::kernels::backends::sparse::host as sp_host;
+        use crate::kernels::simd::PopcountEngine;
+        use crate::nn::Scheme;
+        use crate::sim::{Engine, RTX2080TI};
+        use crate::sparse::{AdjKind, AdjSpec};
+
+        let engine = Engine::new(&RTX2080TI);
+        let reg = BackendRegistry::global();
+        let layer = LayerSpec::BinGcn {
+            nodes: 256,
+            d_in: 64,
+            d_out: 128,
+            adj: AdjSpec { kind: AdjKind::PowerLaw, degree: 4, seed: 2 },
+            nnz_blocks: 700,
+        };
+        let dims = Dims { hw: 0, feat: 256 * 64 };
+        let f = layer_features(&layer, dims, 8, ResidualMode::None, false);
+        assert!(f.sparse_block_ops > 0.0);
+        let rate = simd_host::word_ops_per_sec(PopcountEngine::detect());
+        for (scheme, block_words) in [
+            (Scheme::Spmm, sp_host::SPMM_BLOCK_WORDS),
+            (Scheme::GcnFused, sp_host::FUSED_BLOCK_WORDS),
+        ] {
+            let predicted = (f.word_ops + f.sparse_block_ops * block_words) / rate
+                + f.stream_bytes / host::BYTES_PER_SEC
+                + host::DISPATCH_SECS;
+            let analytic = reg.get(scheme).unwrap().layer_secs(
+                &engine,
+                &layer,
+                dims,
+                8,
+                ResidualMode::None,
+                false,
+            );
+            let rel = (predicted - analytic).abs() / analytic;
+            assert!(rel < 1e-12, "{scheme:?}: {predicted} vs {analytic}");
         }
     }
 

@@ -2,14 +2,17 @@
 //! microbench measurements.
 //!
 //! Each measurement is `(Features, measured seconds)`; the model is
-//! `secs = word_ops*a + stream_bytes*b + c` (the fp coefficient is not
-//! fit — the first BWN layer is scheme-independent and never runs
-//! through a backend kernel, so it keeps the analytic seed).  The fit
-//! minimizes *relative* squared error (every row scaled by its
-//! measured seconds), so microsecond FC layers and millisecond conv
-//! layers weigh equally, and clamps coefficients to be non-negative
-//! with a tiny active-set loop: a negative rate has no physical
-//! meaning and would let the planner extrapolate below zero.
+//! `secs = word_ops*a + sparse_block_ops*d + stream_bytes*b + c` (the
+//! fp coefficient is not fit — the first BWN layer is
+//! scheme-independent and never runs through a backend kernel, so it
+//! keeps the analytic seed).  The fit minimizes *relative* squared
+//! error (every row scaled by its measured seconds), so microsecond FC
+//! layers and millisecond conv layers weigh equally, and clamps
+//! coefficients to be non-negative with a tiny active-set loop: a
+//! negative rate has no physical meaning and would let the planner
+//! extrapolate below zero.  Columns with no support in the data (e.g.
+//! `sparse_block_ops` for a dense backend that never ran a GCN
+//! microbench) are deactivated up front and fitted to exactly 0.
 
 use super::features::Features;
 use super::profile::SchemeCoeffs;
@@ -22,8 +25,9 @@ pub struct FitRow {
 }
 
 /// Fit one backend's coefficients.  Returns `None` with fewer than 3
-/// usable rows (the model has 3 free parameters) or when every row is
-/// degenerate.
+/// usable rows (the dense model has 3 free parameters; the sparse
+/// column only activates when GCN rows are present) or when every row
+/// is degenerate.
 pub fn fit_coeffs(rows: &[FitRow]) -> Option<SchemeCoeffs> {
     let rows: Vec<FitRow> = rows
         .iter()
@@ -33,13 +37,14 @@ pub fn fit_coeffs(rows: &[FitRow]) -> Option<SchemeCoeffs> {
     if rows.len() < 3 {
         return None;
     }
-    // relative-error scaling: design row [w, s, 1]/secs, target 1
-    let design: Vec<([f64; 3], f64)> = rows
+    // relative-error scaling: design row [w, blk, s, 1]/secs, target 1
+    let design: Vec<([f64; 4], f64)> = rows
         .iter()
         .map(|r| {
             (
                 [
                     r.features.word_ops / r.secs,
+                    r.features.sparse_block_ops / r.secs,
                     r.features.stream_bytes / r.secs,
                     1.0 / r.secs,
                 ],
@@ -47,10 +52,17 @@ pub fn fit_coeffs(rows: &[FitRow]) -> Option<SchemeCoeffs> {
             )
         })
         .collect();
-    let mut active = [true; 3];
-    let mut x = [0.0f64; 3];
+    // deactivate columns with no data at all (all-zero regressors):
+    // their coefficient is unidentifiable and must be exactly 0
+    let mut active = [true; 4];
+    for j in 0..4 {
+        if design.iter().all(|(row, _)| row[j] == 0.0) {
+            active[j] = false;
+        }
+    }
+    let mut x = [0.0f64; 4];
     // active-set loop: solve, drop the most negative coefficient, repeat
-    for _ in 0..3 {
+    for _ in 0..4 {
         x = solve_normal(&design, active)?;
         let mut worst = None;
         for (i, &xi) in x.iter().enumerate() {
@@ -74,24 +86,31 @@ pub fn fit_coeffs(rows: &[FitRow]) -> Option<SchemeCoeffs> {
             *xi = 0.0;
         }
     }
+    let gcn_samples = rows
+        .iter()
+        .filter(|r| r.features.sparse_block_ops > 0.0)
+        .count();
     let coeffs = SchemeCoeffs {
         secs_per_word_op: x[0],
-        secs_per_byte: x[1],
-        dispatch_secs: x[2],
+        secs_per_sparse_block: x[1],
+        secs_per_byte: x[2],
+        dispatch_secs: x[3],
         secs_per_fp_op: SchemeCoeffs::analytic().secs_per_fp_op,
         samples: rows.len(),
+        gcn_samples,
         rel_rmse: rel_rmse(&rows, x),
     };
     coeffs.is_sane().then_some(coeffs)
 }
 
-fn rel_rmse(rows: &[FitRow], x: [f64; 3]) -> f64 {
+fn rel_rmse(rows: &[FitRow], x: [f64; 4]) -> f64 {
     let sum: f64 = rows
         .iter()
         .map(|r| {
             let pred = r.features.word_ops * x[0]
-                + r.features.stream_bytes * x[1]
-                + x[2];
+                + r.features.sparse_block_ops * x[1]
+                + r.features.stream_bytes * x[2]
+                + x[3];
             let rel = (pred - r.secs) / r.secs;
             rel * rel
         })
@@ -99,17 +118,18 @@ fn rel_rmse(rows: &[FitRow], x: [f64; 3]) -> f64 {
     (sum / rows.len() as f64).sqrt()
 }
 
-/// Solve the normal equations of a 3-column weighted least-squares
+/// Solve the normal equations of a 4-column weighted least-squares
 /// problem, restricted to `active` columns (inactive columns are pinned
 /// to 0).  Columns are rescaled to unit magnitude before elimination so
 /// the wildly different feature scales (word ops ~1e6, constant ~1e5)
 /// do not wreck conditioning, and a tiny relative ridge keeps a
 /// collinear grid solvable instead of exploding.
-fn solve_normal(design: &[([f64; 3], f64)], active: [bool; 3]) -> Option<[f64; 3]> {
+fn solve_normal(design: &[([f64; 4], f64)], active: [bool; 4]) -> Option<[f64; 4]> {
+    const N: usize = 4;
     // column scales
-    let mut scale = [0.0f64; 3];
+    let mut scale = [0.0f64; N];
     for (row, _) in design {
-        for j in 0..3 {
+        for j in 0..N {
             scale[j] = scale[j].max(row[j].abs());
         }
     }
@@ -119,23 +139,27 @@ fn solve_normal(design: &[([f64; 3], f64)], active: [bool; 3]) -> Option<[f64; 3
         }
     }
     // normal matrix + rhs over scaled columns
-    let mut a = [[0.0f64; 3]; 3];
-    let mut b = [0.0f64; 3];
+    let mut a = [[0.0f64; N]; N];
+    let mut b = [0.0f64; N];
     for (row, y) in design {
-        let r = [row[0] / scale[0], row[1] / scale[1], row[2] / scale[2]];
-        for i in 0..3 {
-            for j in 0..3 {
+        let mut r = [0.0f64; N];
+        for j in 0..N {
+            r[j] = row[j] / scale[j];
+        }
+        for i in 0..N {
+            for j in 0..N {
                 a[i][j] += r[i] * r[j];
             }
             b[i] += r[i] * y;
         }
     }
-    let ridge = 1e-12 * (a[0][0] + a[1][1] + a[2][2]).max(1e-300);
+    let trace: f64 = (0..N).map(|i| a[i][i]).sum();
+    let ridge = 1e-12 * trace.max(1e-300);
     for (i, row) in a.iter_mut().enumerate() {
         row[i] += ridge;
         if !active[i] {
             // pin the column: identity row, zero rhs
-            *row = [0.0; 3];
+            *row = [0.0; N];
             row[i] = 1.0;
             b[i] = 0.0;
         }
@@ -151,8 +175,8 @@ fn solve_normal(design: &[([f64; 3], f64)], active: [bool; 3]) -> Option<[f64; 3
     }
     // Gaussian elimination with partial pivoting
     let mut x = b;
-    for col in 0..3 {
-        let (pivot, max) = (col..3)
+    for col in 0..N {
+        let (pivot, max) = (col..N)
             .map(|r| (r, a[r][col].abs()))
             .fold((col, 0.0), |acc, v| if v.1 > acc.1 { v } else { acc });
         if max <= 0.0 {
@@ -160,15 +184,15 @@ fn solve_normal(design: &[([f64; 3], f64)], active: [bool; 3]) -> Option<[f64; 3
         }
         a.swap(col, pivot);
         x.swap(col, pivot);
-        for r in (col + 1)..3 {
+        for r in (col + 1)..N {
             let f = a[r][col] / a[col][col];
-            for c in col..3 {
+            for c in col..N {
                 a[r][c] -= f * a[col][c];
             }
             x[r] -= f * x[col];
         }
     }
-    for col in (0..3).rev() {
+    for col in (0..N).rev() {
         for r in 0..col {
             let f = a[r][col] / a[col][col];
             x[r] -= f * x[col];
@@ -176,7 +200,11 @@ fn solve_normal(design: &[([f64; 3], f64)], active: [bool; 3]) -> Option<[f64; 3
         x[col] /= a[col][col];
     }
     // unscale
-    Some([x[0] / scale[0], x[1] / scale[1], x[2] / scale[2]])
+    let mut out = [0.0f64; N];
+    for j in 0..N {
+        out[j] = x[j] / scale[j];
+    }
+    Some(out)
 }
 
 #[cfg(test)]
@@ -185,7 +213,24 @@ mod tests {
 
     fn row(word: f64, bytes: f64, secs: f64) -> FitRow {
         FitRow {
-            features: Features { fp_ops: 0.0, word_ops: word, stream_bytes: bytes },
+            features: Features {
+                fp_ops: 0.0,
+                word_ops: word,
+                stream_bytes: bytes,
+                sparse_block_ops: 0.0,
+            },
+            secs,
+        }
+    }
+
+    fn gcn_row(word: f64, blocks: f64, bytes: f64, secs: f64) -> FitRow {
+        FitRow {
+            features: Features {
+                fp_ops: 0.0,
+                word_ops: word,
+                stream_bytes: bytes,
+                sparse_block_ops: blocks,
+            },
             secs,
         }
     }
@@ -210,8 +255,38 @@ mod tests {
         assert!((got.secs_per_word_op - a).abs() / a < 1e-6, "{got:?}");
         assert!((got.secs_per_byte - b).abs() / b < 1e-6, "{got:?}");
         assert!((got.dispatch_secs - c).abs() / c < 1e-6, "{got:?}");
+        // no GCN rows: the sparse column is deactivated, fitted to 0
+        assert_eq!(got.secs_per_sparse_block, 0.0);
+        assert_eq!(got.gcn_samples, 0);
         assert!(got.rel_rmse < 1e-9, "{got:?}");
         assert_eq!(got.samples, rows.len());
+    }
+
+    #[test]
+    fn recovers_sparse_block_coefficient_from_gcn_rows() {
+        // secs = w*a + blk*d + s*b + c over a mixed dense/GCN grid —
+        // exactly the row mix a sparse-backend calibration produces
+        let (a, d, b, c) = (2e-10, 4e-10, 5e-11, 3e-6);
+        let shapes = [
+            (1.6e4, 0.0, 0.0),
+            (2.6e5, 0.0, 0.0),
+            (1.2e5, 0.0, 2.1e5),
+            (2.0e5, 3.0e4, 4.0e4),
+            (8.0e5, 2.4e5, 1.6e5),
+            (3.2e6, 9.6e5, 6.4e5),
+            (6.4e6, 3.8e6, 1.3e6),
+        ];
+        let rows: Vec<FitRow> = shapes
+            .iter()
+            .map(|&(w, blk, s)| gcn_row(w, blk, s, w * a + blk * d + s * b + c))
+            .collect();
+        let got = fit_coeffs(&rows).expect("fit");
+        assert!((got.secs_per_word_op - a).abs() / a < 1e-6, "{got:?}");
+        assert!((got.secs_per_sparse_block - d).abs() / d < 1e-6, "{got:?}");
+        assert!((got.secs_per_byte - b).abs() / b < 1e-6, "{got:?}");
+        assert!((got.dispatch_secs - c).abs() / c < 1e-6, "{got:?}");
+        assert_eq!(got.gcn_samples, 4);
+        assert!(got.rel_rmse < 1e-9, "{got:?}");
     }
 
     #[test]

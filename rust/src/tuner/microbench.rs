@@ -20,11 +20,13 @@
 use crate::bitops::{BitMatrix, BitTensor4, Layout, TensorLayout};
 use crate::kernels::backend::{
     BackendRegistry, ExecCtx, KernelBackend, PreparedConv as _, PreparedFc as _,
+    PreparedGcn as _,
 };
 use crate::kernels::bconv::BconvProblem;
 use crate::layout::{repack, LayoutDesc, LayoutKind};
 use crate::nn::cost::{ResidualMode, Scheme};
 use crate::nn::layer::{Dims, LayerSpec};
+use crate::sparse::{self, AdjKind, AdjSpec};
 use crate::util::bench::Bencher;
 use crate::util::threadpool::default_threads;
 use crate::util::Rng;
@@ -87,6 +89,7 @@ impl RepackMeasurement {
                 fp_ops: 0.0,
                 word_ops: 0.0,
                 stream_bytes: self.bytes as f64,
+                sparse_block_ops: 0.0,
             },
             secs: self.secs,
         }
@@ -145,6 +148,22 @@ fn conv_grid(quick: bool) -> Vec<(usize, usize, usize)> {
     if !quick {
         g.push((14, 128, 128));
         g.push((7, 256, 256));
+    }
+    g
+}
+
+/// GCN grid: (adjacency, nodes, d_in, d_out, batch).  Spans sparse
+/// power-law and dense grid block densities so the fitted
+/// per-stored-block rate separates from the dense combine term.
+fn gcn_shapes(quick: bool) -> Vec<(AdjSpec, usize, usize, usize, usize)> {
+    let mut g = vec![
+        (AdjSpec { kind: AdjKind::PowerLaw, degree: 4, seed: 3 }, 128, 64, 64, 4),
+        (AdjSpec { kind: AdjKind::PowerLaw, degree: 6, seed: 4 }, 256, 64, 128, 8),
+        (AdjSpec { kind: AdjKind::Grid, degree: 2, seed: 0 }, 64, 64, 64, 4),
+    ];
+    if !quick {
+        g.push((AdjSpec { kind: AdjKind::Grid, degree: 3, seed: 0 }, 128, 64, 64, 8));
+        g.push((AdjSpec { kind: AdjKind::PowerLaw, degree: 8, seed: 5 }, 512, 64, 64, 8));
     }
     g
 }
@@ -241,6 +260,14 @@ pub fn run(registry: &BackendRegistry, cfg: &MicrobenchConfig) -> Vec<Measuremen
         }
         out.extend(bench_fc(backend, cfg, &b));
         out.extend(bench_conv(backend, cfg, &b));
+        // GCN shapes are measured ONLY on the sparse schemes: they are
+        // the backends whose cost face carries a per-block term, and
+        // feeding the dense backends' fits with GCN rows would poison
+        // their word rate with aggregation work their dense FC/conv
+        // faces never see.
+        if matches!(backend.scheme(), Scheme::Spmm | Scheme::GcnFused) {
+            out.extend(bench_gcn(backend, cfg, &b));
+        }
     }
     out
 }
@@ -326,6 +353,43 @@ fn bench_conv(
     out
 }
 
+fn bench_gcn(
+    backend: &dyn KernelBackend,
+    cfg: &MicrobenchConfig,
+    b: &Bencher,
+) -> Vec<Measurement> {
+    let mut rng = Rng::new(cfg.seed.wrapping_add(0x6cbb));
+    let mut out = Vec::new();
+    for (spec, nodes, d_in, d_out, batch) in gcn_shapes(cfg.quick) {
+        let adj = sparse::generate(spec, nodes);
+        let nnz_blocks = adj.nnz_blocks();
+        let w = BitMatrix::random(d_out, d_in, Layout::RowMajor, &mut rng);
+        let x = BitMatrix::random(batch, nodes * d_in, Layout::RowMajor, &mut rng);
+        let Ok(g) = backend.prepare_gcn(&adj, &w) else { continue };
+        let mut scratch = vec![0u64; g.scratch_words(batch)];
+        let mut ints = vec![0i32; batch * nodes * d_out];
+        let threads = cfg.threads;
+        let r = b.bench(
+            &format!("tuner/{}/gcn/{}-{nodes}n", backend.name(), spec.tag()),
+            1.0,
+            || {
+                let mut ctx = ExecCtx { words64: &mut scratch, threads };
+                g.gcn(&x.data, batch, &mut ints, &mut ctx);
+                std::hint::black_box(&mut ints);
+            },
+        );
+        out.push(Measurement {
+            scheme: backend.scheme(),
+            kind: "gcn",
+            layer: LayerSpec::BinGcn { nodes, d_in, d_out, adj: spec, nnz_blocks },
+            dims: Dims { hw: 0, feat: nodes * d_in },
+            batch,
+            secs: r.summary.p50,
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,11 +410,12 @@ mod tests {
             threads: 1,
         };
         let ms = run(BackendRegistry::global(), &cfg);
-        // every host backend (fastpath + SIMD) supports every grid
-        // shape: full quick grid measured per host scheme
+        // every host backend supports every dense grid shape, and the
+        // two sparse schemes additionally run the GCN grid
         let hosts: Vec<Scheme> =
             Scheme::all().into_iter().filter(Scheme::is_host).collect();
-        let want = hosts.len() * (fc_grid(true).len() + conv_grid(true).len());
+        let want = hosts.len() * (fc_grid(true).len() + conv_grid(true).len())
+            + 2 * gcn_shapes(true).len();
         assert_eq!(ms.len(), want);
         for m in &ms {
             assert!(m.scheme.is_host(), "{m:?}");
@@ -358,11 +423,18 @@ mod tests {
             let row = m.fit_row();
             assert!(row.features.word_ops > 0.0);
         }
-        // both kernel kinds and both host schemes present
+        // all three kernel kinds and every host scheme present
         assert!(ms.iter().any(|m| m.kind == "bmm"));
         assert!(ms.iter().any(|m| m.kind == "bconv"));
+        assert!(ms.iter().any(|m| m.kind == "gcn"));
         for s in hosts {
             assert!(ms.iter().any(|m| m.scheme == s), "{} missing", s.name());
+        }
+        // GCN rows appear only under the sparse schemes, and carry the
+        // sparse-block regressor the fitter needs
+        for m in ms.iter().filter(|m| m.kind == "gcn") {
+            assert!(matches!(m.scheme, Scheme::Spmm | Scheme::GcnFused), "{m:?}");
+            assert!(m.fit_row().features.sparse_block_ops > 0.0);
         }
     }
 

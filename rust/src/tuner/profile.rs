@@ -29,7 +29,11 @@ use super::fingerprint::HostFingerprint;
 /// v2: the layout co-design subsystem — profiles additionally carry
 /// fitted repack-bandwidth coefficients per layout pair (`repacks`),
 /// so calibrated planners price layout edges from measurement.
-pub const PROFILE_SCHEMA: usize = 2;
+///
+/// v3: the sparse subsystem — coefficient sets gain a fitted
+/// per-stored-adjacency-block rate (`secs_per_sparse_block`) and the
+/// GCN sample count that gates BinGcn predictions.
+pub const PROFILE_SCHEMA: usize = 3;
 
 /// Fitted cost-model coefficients of one backend: the analytic host
 /// model's parameterization (`tuner::features`) with measured values.
@@ -37,6 +41,10 @@ pub const PROFILE_SCHEMA: usize = 2;
 pub struct SchemeCoeffs {
     /// seconds per u64 XOR+POPC+accumulate word op (1 / word-ops-per-sec).
     pub secs_per_word_op: f64,
+    /// seconds per stored 64-bit adjacency block touched by a sparse
+    /// aggregation (BinGcn layers; 0 for backends never measured on
+    /// GCN shapes).
+    pub secs_per_sparse_block: f64,
     /// seconds per streamed byte (1 / bytes-per-sec).
     pub secs_per_byte: f64,
     /// fixed fork/join + repack latency per layer dispatch.
@@ -47,6 +55,11 @@ pub struct SchemeCoeffs {
     pub secs_per_fp_op: f64,
     /// microbench measurements behind the fit.
     pub samples: usize,
+    /// GCN-shape measurements behind the fit.  When 0 the sparse-block
+    /// rate is unidentified, so [`CalibrationProfile::layer_secs`]
+    /// refuses to price BinGcn layers and the caller falls back to the
+    /// backend's analytic face.
+    pub gcn_samples: usize,
     /// relative RMS error of the fit over its own measurements.
     pub rel_rmse: f64,
 }
@@ -57,10 +70,12 @@ impl SchemeCoeffs {
     pub fn analytic() -> SchemeCoeffs {
         SchemeCoeffs {
             secs_per_word_op: 1.0 / host::WORD_OPS_PER_SEC,
+            secs_per_sparse_block: 0.0,
             secs_per_byte: 1.0 / host::BYTES_PER_SEC,
             dispatch_secs: host::DISPATCH_SECS,
             secs_per_fp_op: 1.0 / host::FP_OPS_PER_SEC,
             samples: 0,
+            gcn_samples: 0,
             rel_rmse: 0.0,
         }
     }
@@ -69,6 +84,7 @@ impl SchemeCoeffs {
     pub fn predict(&self, f: super::features::Features) -> f64 {
         f.fp_ops * self.secs_per_fp_op
             + f.word_ops * self.secs_per_word_op
+            + f.sparse_block_ops * self.secs_per_sparse_block
             + f.stream_bytes * self.secs_per_byte
             + self.dispatch_secs
     }
@@ -77,6 +93,7 @@ impl SchemeCoeffs {
     pub fn is_sane(&self) -> bool {
         let nonneg = |x: f64| x.is_finite() && x >= 0.0;
         nonneg(self.secs_per_word_op)
+            && nonneg(self.secs_per_sparse_block)
             && nonneg(self.secs_per_byte)
             && nonneg(self.dispatch_secs)
             && nonneg(self.secs_per_fp_op)
@@ -116,6 +133,10 @@ impl CalibrationProfile {
 
     /// Fitted seconds of one layer under `scheme`; `None` when the
     /// scheme was not calibrated (caller falls back to analytic).
+    /// BinGcn layers additionally require the fit to have seen GCN
+    /// shapes (`gcn_samples > 0`) — otherwise the sparse-block rate is
+    /// an unidentified 0 and the prediction would claim the
+    /// aggregation is free.
     pub fn layer_secs(
         &self,
         scheme: Scheme,
@@ -125,9 +146,11 @@ impl CalibrationProfile {
         residual: ResidualMode,
         model_has_residuals: bool,
     ) -> Option<f64> {
-        self.coeffs(scheme).map(|c| {
-            c.predict(layer_features(layer, dims, batch, residual, model_has_residuals))
-        })
+        let c = self.coeffs(scheme)?;
+        if matches!(layer, LayerSpec::BinGcn { .. }) && c.gcn_samples == 0 {
+            return None;
+        }
+        Some(c.predict(layer_features(layer, dims, batch, residual, model_has_residuals)))
     }
 
     /// Fitted repack coefficients for one layout pair, if calibrated.
@@ -164,6 +187,7 @@ impl CalibrationProfile {
                 .find(|(n, r)| n == name && r.is_finite() && *r > 0.0)
             {
                 c.secs_per_word_op *= r;
+                c.secs_per_sparse_block *= r;
                 c.secs_per_byte *= r;
                 c.dispatch_secs *= r;
                 c.secs_per_fp_op *= r;
@@ -188,10 +212,15 @@ impl CalibrationProfile {
                     "secs_per_word_op".to_string(),
                     Value::Num(c.secs_per_word_op),
                 ),
+                (
+                    "secs_per_sparse_block".to_string(),
+                    Value::Num(c.secs_per_sparse_block),
+                ),
                 ("secs_per_byte".to_string(), Value::Num(c.secs_per_byte)),
                 ("dispatch_secs".to_string(), Value::Num(c.dispatch_secs)),
                 ("secs_per_fp_op".to_string(), Value::Num(c.secs_per_fp_op)),
                 ("samples".to_string(), Value::Num(c.samples as f64)),
+                ("gcn_samples".to_string(), Value::Num(c.gcn_samples as f64)),
                 ("rel_rmse".to_string(), Value::Num(c.rel_rmse)),
             ])
         };
@@ -251,6 +280,7 @@ impl CalibrationProfile {
                 };
                 let coeffs = SchemeCoeffs {
                     secs_per_word_op: num("secs_per_word_op")?,
+                    secs_per_sparse_block: num("secs_per_sparse_block")?,
                     secs_per_byte: num("secs_per_byte")?,
                     dispatch_secs: num("dispatch_secs")?,
                     secs_per_fp_op: num("secs_per_fp_op")?,
@@ -258,6 +288,10 @@ impl CalibrationProfile {
                         .get("samples")
                         .and_then(Value::as_usize)
                         .with_context(|| format!("profile {section}[{i}] samples"))?,
+                    gcn_samples: sv
+                        .get("gcn_samples")
+                        .and_then(Value::as_usize)
+                        .with_context(|| format!("profile {section}[{i}] gcn_samples"))?,
                     rel_rmse: num("rel_rmse")?,
                 };
                 ensure_sane(&name, &coeffs)?;
@@ -314,25 +348,44 @@ mod tests {
     fn sample() -> CalibrationProfile {
         CalibrationProfile {
             fingerprint: HostFingerprint::detect(BackendRegistry::global()),
-            schemes: vec![(
-                "FASTPATH".to_string(),
-                SchemeCoeffs {
-                    secs_per_word_op: 8.5e-11,
-                    secs_per_byte: 6.0e-11,
-                    dispatch_secs: 2.5e-6,
-                    secs_per_fp_op: 1.25e-10,
-                    samples: 9,
-                    rel_rmse: 0.07,
-                },
-            )],
+            schemes: vec![
+                (
+                    "FASTPATH".to_string(),
+                    SchemeCoeffs {
+                        secs_per_word_op: 8.5e-11,
+                        secs_per_sparse_block: 0.0,
+                        secs_per_byte: 6.0e-11,
+                        dispatch_secs: 2.5e-6,
+                        secs_per_fp_op: 1.25e-10,
+                        samples: 9,
+                        gcn_samples: 0,
+                        rel_rmse: 0.07,
+                    },
+                ),
+                (
+                    "SPMM".to_string(),
+                    SchemeCoeffs {
+                        secs_per_word_op: 9.5e-11,
+                        secs_per_sparse_block: 2.1e-10,
+                        secs_per_byte: 7.0e-11,
+                        dispatch_secs: 2.8e-6,
+                        secs_per_fp_op: 1.25e-10,
+                        samples: 12,
+                        gcn_samples: 5,
+                        rel_rmse: 0.09,
+                    },
+                ),
+            ],
             repacks: vec![(
                 "Row32->Blocked64".to_string(),
                 SchemeCoeffs {
                     secs_per_word_op: 0.0,
+                    secs_per_sparse_block: 0.0,
                     secs_per_byte: 9.0e-11,
                     dispatch_secs: 1.5e-6,
                     secs_per_fp_op: 0.0,
                     samples: 3,
+                    gcn_samples: 0,
                     rel_rmse: 0.02,
                 },
             )],
@@ -345,7 +398,43 @@ mod tests {
         let back = CalibrationProfile::from_json(&p.to_json()).unwrap();
         assert_eq!(back, p);
         assert_eq!(back.id(), p.id());
-        assert!(p.id().starts_with("cal2-"));
+        assert!(p.id().starts_with("cal3-"));
+    }
+
+    /// A calibrated dense backend (no GCN samples) must not price a
+    /// BinGcn layer — its sparse-block rate is an unidentified 0 — while
+    /// a sparse backend with GCN samples prices it through the fitted
+    /// per-block coefficient.
+    #[test]
+    fn gcn_predictions_gated_on_gcn_samples() {
+        use crate::nn::Scheme;
+        use crate::sparse::{AdjKind, AdjSpec};
+        let p = sample();
+        let layer = LayerSpec::BinGcn {
+            nodes: 128,
+            d_in: 64,
+            d_out: 64,
+            adj: AdjSpec { kind: AdjKind::PowerLaw, degree: 4, seed: 7 },
+            nnz_blocks: 400,
+        };
+        let dims = Dims { hw: 0, feat: 128 * 64 };
+        assert!(p
+            .layer_secs(Scheme::Fastpath, &layer, dims, 8, ResidualMode::None, false)
+            .is_none());
+        let got = p
+            .layer_secs(Scheme::Spmm, &layer, dims, 8, ResidualMode::None, false)
+            .expect("sparse scheme calibrated on GCN shapes");
+        let c = p.coeffs(Scheme::Spmm).unwrap();
+        let f = layer_features(&layer, dims, 8, ResidualMode::None, false);
+        let want = c.predict(f);
+        assert!((got - want).abs() / want < 1e-12);
+        // the sparse-block term is load-bearing in the prediction
+        assert!(f.sparse_block_ops * c.secs_per_sparse_block > 0.0);
+        // dense layers still price normally under the dense backend
+        let fc = LayerSpec::BinFc { d_in: 1024, d_out: 512 };
+        assert!(p
+            .layer_secs(Scheme::Fastpath, &fc, Dims { hw: 0, feat: 1024 }, 8, ResidualMode::None, false)
+            .is_some());
     }
 
     #[test]
@@ -427,11 +516,11 @@ mod tests {
     #[test]
     fn rejects_other_schemas_and_bad_coeffs() {
         let p = sample();
-        let old = p.to_json().replace("\"schema\":2", "\"schema\":99");
+        let old = p.to_json().replace("\"schema\":3", "\"schema\":99");
         assert!(CalibrationProfile::from_json(&old).is_err());
-        // a v1 (pre-repack) document is stale too
-        let v1 = p.to_json().replace("\"schema\":2", "\"schema\":1");
-        assert!(CalibrationProfile::from_json(&v1).is_err());
+        // a v2 (pre-sparse) document is stale too
+        let v2 = p.to_json().replace("\"schema\":3", "\"schema\":2");
+        assert!(CalibrationProfile::from_json(&v2).is_err());
         let neg = p.to_json().replace("8.5e-11", "-8.5e-11");
         assert!(CalibrationProfile::from_json(&neg).is_err());
     }

@@ -24,7 +24,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use tcbnn::bitops::{pack, BitMatrix, BitTensor4, Layout, TensorLayout};
+use tcbnn::bitops::{pack, BitMatrix, BitTensor4, Layout, SparseBitMatrix, TensorLayout};
 use tcbnn::coordinator::server::{BatchModel, InferenceServer, ServerConfig};
 use tcbnn::engine::{EngineExecutor, EngineModel, PlanPolicy, Planner};
 use tcbnn::kernels::backend::{
@@ -32,6 +32,7 @@ use tcbnn::kernels::backend::{
 };
 use tcbnn::kernels::backends::scalar::{ScalarConv, ScalarFc};
 use tcbnn::kernels::backends::simd::SimdBackend;
+use tcbnn::kernels::backends::sparse::SparseBackend;
 use tcbnn::kernels::bconv::{self, BconvProblem};
 use tcbnn::kernels::simd::PopcountEngine;
 use tcbnn::nn::forward::{forward, forward_with, random_weights};
@@ -39,6 +40,7 @@ use tcbnn::nn::layer::{Dims, LayerSpec};
 use tcbnn::nn::model::mnist_mlp;
 use tcbnn::nn::{ModelDef, ResidualMode, Scheme};
 use tcbnn::sim::{Engine, KernelTrace, RTX2080TI};
+use tcbnn::sparse::gcn_dense_reference;
 use tcbnn::util::proptest::run_cases;
 use tcbnn::util::Rng;
 
@@ -146,6 +148,117 @@ fn every_backend_bconv_matches_exclude_amended_ref_at_odd_shapes() {
             let mut ctx = ExecCtx { words64: &mut scratch, threads: 2 };
             conv.bconv(&input.data, p, &mut ints, &mut ctx);
             assert_eq!(ints, want, "{} at {p:?}", b.name());
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Sparse schemes: GCN aggregation + sparse-operand Eq-2 equivalence
+// ---------------------------------------------------------------------
+
+/// A random square adjacency with self-loops at roughly `avg_degree`
+/// out-edges per node — sweeping `avg_degree` sweeps block density
+/// across the planner's sparse-vs-dense crossover.
+fn random_adj(rng: &mut Rng, nodes: usize, avg_degree: usize) -> SparseBitMatrix {
+    let mut edges: Vec<(usize, usize)> = (0..nodes * avg_degree)
+        .map(|_| (rng.gen_range(nodes), rng.gen_range(nodes)))
+        .collect();
+    edges.extend((0..nodes).map(|i| (i, i)));
+    SparseBitMatrix::from_edges(nodes, nodes, edges)
+}
+
+#[test]
+fn every_backend_gcn_matches_dense_reference_across_sparsities() {
+    // EVERY registered backend must produce the bit-exact integer
+    // semantics of sparse::gcn_dense_reference — the sparse backends
+    // through their block-sparse override of prepare_gcn, everything
+    // else through the default dense staging
+    let reg = BackendRegistry::builtin();
+    run_cases(508, 8, |rng| {
+        let nodes = 8 + rng.gen_range(56);
+        let d_in = 64 * (1 + rng.gen_range(2));
+        let d_out = 64 * (1 + rng.gen_range(2));
+        let batch = 1 + rng.gen_range(4);
+        let avg_degree = 1 + rng.gen_range(nodes);
+        let adj = random_adj(rng, nodes, avg_degree);
+        let w = BitMatrix::random(d_out, d_in, Layout::RowMajor, rng);
+        let x = BitMatrix::random(batch, nodes * d_in, Layout::RowMajor, rng);
+        let want = gcn_dense_reference(&adj, &w, &x);
+        for b in reg.backends() {
+            let g = b.prepare_gcn(&adj, &w).expect("prepare_gcn");
+            let mut scratch = vec![0u64; g.scratch_words(batch)];
+            let mut ints = vec![0i32; batch * nodes * d_out];
+            let mut ctx = ExecCtx { words64: &mut scratch, threads: 2 };
+            g.gcn(&x.data, batch, &mut ints, &mut ctx);
+            assert_eq!(
+                ints,
+                want,
+                "{} at nodes={nodes} deg~{avg_degree} {d_in}->{d_out} b{batch}",
+                b.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn sparse_schemes_gcn_matches_reference_at_density_extremes() {
+    // the degenerate graphs: edgeless (every aggregate is exactly 0)
+    // and complete (every stored block present, tail block masked)
+    let (nodes, d, batch) = (40usize, 64usize, 2usize);
+    let mut rng = Rng::new(510);
+    let w = BitMatrix::random(d, d, Layout::RowMajor, &mut rng);
+    let x = BitMatrix::random(batch, nodes * d, Layout::RowMajor, &mut rng);
+    let empty = SparseBitMatrix::empty(nodes, nodes);
+    let full = SparseBitMatrix::from_edges(
+        nodes,
+        nodes,
+        (0..nodes).flat_map(|i| (0..nodes).map(move |j| (i, j))),
+    );
+    for adj in [&empty, &full] {
+        let want = gcn_dense_reference(adj, &w, &x);
+        if adj.nnz_blocks() == 0 {
+            assert!(want.iter().all(|&v| v == 0), "edgeless aggregate nonzero");
+        }
+        for b in [SparseBackend::spmm(), SparseBackend::gcn_fused()] {
+            let g = b.prepare_gcn(adj, &w).expect("prepare_gcn");
+            let mut scratch = vec![0u64; g.scratch_words(batch)];
+            let mut ints = vec![0i32; batch * nodes * d];
+            let mut ctx = ExecCtx { words64: &mut scratch, threads: 2 };
+            g.gcn(&x.data, batch, &mut ints, &mut ctx);
+            assert_eq!(
+                ints,
+                want,
+                "{} at density {:.2}",
+                b.name(),
+                adj.block_density()
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_backends_fc_matches_naive_eq2_at_controlled_sparsities() {
+    // the sparse schemes double as Eq-2 FC providers (absent weight
+    // blocks read as all -1); agreement must hold from near-empty to
+    // dense weight rows, at odd widths
+    run_cases(509, 15, |rng| {
+        let batch = 1 + rng.gen_range(12);
+        let d_out = 1 + rng.gen_range(40);
+        let d_in = off64(rng, 300);
+        let mut w = BitMatrix::zeros(d_out, d_in, Layout::RowMajor);
+        let ones = rng.gen_range(d_out * d_in / 4 + 1);
+        for _ in 0..ones {
+            w.set(rng.gen_range(d_out), rng.gen_range(d_in), true);
+        }
+        let a = BitMatrix::random(batch, d_in, Layout::RowMajor, rng);
+        let want = naive_fc(&a, &w);
+        for b in [SparseBackend::spmm(), SparseBackend::gcn_fused()] {
+            assert_eq!(
+                run_fc_backend(&b, &a, &w),
+                want,
+                "{} at {batch}x{d_out}x{d_in} ({ones} +1 bits)",
+                b.name()
+            );
         }
     });
 }

@@ -2,7 +2,9 @@
 //! the FSB format at awkward widths — especially non-multiple-of-32
 //! widths, where pad-bit handling is easiest to get wrong.
 
-use tcbnn::bitops::{pack, pack64, BitMatrix, BitMatrix64, FsbMatrix, Layout};
+use tcbnn::bitops::{
+    pack, pack64, BitMatrix, BitMatrix64, FsbMatrix, Layout, SparseBitMatrix,
+};
 use tcbnn::layout::repack::{convert, BitImage};
 use tcbnn::layout::LayoutKind;
 use tcbnn::util::proptest::run_cases;
@@ -206,6 +208,85 @@ fn cross_layout_conversion_is_invisible_to_eq2() {
                 "k={k} via {kind}"
             );
         }
+    });
+}
+
+#[test]
+fn sparse_csr_roundtrip_at_odd_widths() {
+    // CSR-of-bit-lines <-> dense must be exact at widths that leave a
+    // partially-filled tail block, via both the u32 and u64 routes
+    run_cases(215, 120, |rng| {
+        let rows = 1 + rng.gen_range(40);
+        let cols = odd_width(rng, 400);
+        let m = BitMatrix::random(rows, cols, Layout::RowMajor, rng);
+        let s = SparseBitMatrix::from_bitmatrix(&m);
+        assert_eq!(s.to_bitmatrix(), m, "{rows}x{cols}");
+        let m64 = BitMatrix64::from_bitmatrix(&m);
+        assert_eq!(SparseBitMatrix::from_bitmatrix64(&m64), s, "{rows}x{cols} u64");
+        assert_eq!(s.to_bitmatrix64(), m64);
+        // representation canon: no stored zero blocks, sorted block
+        // columns, and the round-tripped CSR is bit-for-bit identical
+        assert!(s.bits.iter().all(|&b| b != 0), "zero block stored");
+        for r in 0..rows {
+            let (bc, _) = s.row_blocks(r);
+            assert!(bc.windows(2).all(|w| w[0] < w[1]), "row {r} unsorted");
+        }
+        assert_eq!(SparseBitMatrix::from_bitmatrix(&s.to_bitmatrix()), s);
+    });
+}
+
+#[test]
+fn sparse_csr_handles_empty_and_full_rows() {
+    // the degenerate row shapes: an all-zero row stores no blocks, an
+    // all-ones row stores every block with a masked tail
+    run_cases(216, 80, |rng| {
+        let rows = 3 + rng.gen_range(20);
+        let cols = odd_width(rng, 300);
+        let mut m = BitMatrix::random(rows, cols, Layout::RowMajor, rng);
+        let empty_r = rng.gen_range(rows);
+        let full_r = (empty_r + 1) % rows;
+        for c in 0..cols {
+            m.set(empty_r, c, false);
+            m.set(full_r, c, true);
+        }
+        let s = SparseBitMatrix::from_bitmatrix(&m);
+        let (bc, _) = s.row_blocks(empty_r);
+        assert!(bc.is_empty(), "empty row stored blocks at {rows}x{cols}");
+        assert_eq!(s.row_degree(empty_r), 0);
+        let (bc, bits) = s.row_blocks(full_r);
+        assert_eq!(bc.len(), s.blocks_per_row(), "full row missing blocks");
+        assert_eq!(s.row_degree(full_r) as usize, cols);
+        // tail block: pad bits above `cols` must be zero
+        let rem = cols % 64;
+        if rem != 0 {
+            let tail = *bits.last().unwrap();
+            assert_eq!(tail >> rem, 0, "tail pad bits set at cols={cols}");
+        }
+        assert_eq!(s.to_bitmatrix(), m, "{rows}x{cols}");
+    });
+}
+
+#[test]
+fn sparse_csr_edges_and_density_are_consistent() {
+    // edge-list construction agrees with dense conversion, and the
+    // density/degree accounting matches a dense recount
+    run_cases(217, 60, |rng| {
+        let rows = 1 + rng.gen_range(30);
+        let cols = odd_width(rng, 300);
+        let n_edges = rng.gen_range(4 * rows + 1);
+        let edges: Vec<(usize, usize)> = (0..n_edges)
+            .map(|_| (rng.gen_range(rows), rng.gen_range(cols)))
+            .collect();
+        let s = SparseBitMatrix::from_edges(rows, cols, edges.iter().copied());
+        let mut m = BitMatrix::zeros(rows, cols, Layout::RowMajor);
+        for &(r, c) in &edges {
+            m.set(r, c, true);
+        }
+        assert_eq!(s, SparseBitMatrix::from_bitmatrix(&m), "{rows}x{cols}");
+        let total: usize = (0..rows).map(|r| s.row_degree(r) as usize).sum();
+        assert_eq!(s.nnz_bits(), total);
+        assert!(s.block_density() <= 1.0);
+        assert!(s.nnz_blocks() <= rows * s.blocks_per_row());
     });
 }
 

@@ -202,12 +202,12 @@ fn plan_cache_treats_v3_and_missing_layout_edges_as_miss() {
     assert_eq!((cache.hits(), cache.misses()), (0, 1));
     let entry = cache.entry_path(&fresh.model, 8, &fresh.gpu);
 
-    // a v3 (pre-layout) document is stale
-    let v3 = fresh.to_json().replace("\"schema\":4", "\"schema\":3");
-    std::fs::write(&entry, v3).unwrap();
-    assert!(cache.get(&fresh.model, 8, &fresh.gpu).is_none(), "v3 must miss");
+    // an older-schema (pre-sparsity) document is stale
+    let v4 = fresh.to_json().replace("\"schema\":5", "\"schema\":4");
+    std::fs::write(&entry, v4).unwrap();
+    assert!(cache.get(&fresh.model, 8, &fresh.gpu).is_none(), "v4 must miss");
 
-    // a v4 document with its layout edges stripped is unreadable
+    // a current-schema document with its layout edges stripped is unreadable
     let no_edges = fresh
         .to_json()
         .replace("\"in_layout\":\"Row32\",", "")

@@ -1,0 +1,161 @@
+//! End-to-end acceptance for the sparse/BitGNN stack: the planner's
+//! adjacency-density crossover (sparse schemes win the power-law
+//! graph, dense schemes keep the block-dense grid), bit-exact engine
+//! execution of GCN models against the reference forward, the plan
+//! schema's sparsity fingerprint, and a GCN model served through
+//! `serve::Fleet` with live windowed throughput.
+
+use std::time::Duration;
+
+use tcbnn::coordinator::server::BatchModel;
+use tcbnn::engine::{EngineExecutor, EngineModel, Planner};
+use tcbnn::nn::forward::{forward, random_weights};
+use tcbnn::nn::layer::LayerSpec;
+use tcbnn::nn::model::{gcn_grid, gcn_powerlaw, mnist_mlp};
+use tcbnn::nn::Scheme;
+use tcbnn::serve::{Fleet, FleetModelConfig};
+use tcbnn::sim::RTX2080TI;
+use tcbnn::util::Rng;
+
+#[test]
+fn planner_picks_sparse_schemes_for_the_powerlaw_graph() {
+    let planner = Planner::new(&RTX2080TI);
+    let m = gcn_powerlaw();
+    let plan = planner.plan(&m, 8);
+    let mut gcn_layers = 0;
+    for lp in &plan.layers {
+        if matches!(m.layers[lp.index], LayerSpec::BinGcn { .. }) {
+            gcn_layers += 1;
+            assert!(
+                matches!(lp.scheme, Scheme::Spmm | Scheme::GcnFused),
+                "layer {} planned {} — a power-law adjacency is sparse \
+                 enough that a sparse scheme must win the layout DP",
+                lp.tag,
+                lp.scheme.name()
+            );
+        }
+    }
+    assert_eq!(gcn_layers, 2, "GCN-PowerLaw carries two BinGcn layers");
+}
+
+#[test]
+fn planner_keeps_the_dense_path_for_the_grid_graph() {
+    let planner = Planner::new(&RTX2080TI);
+    let m = gcn_grid();
+    let plan = planner.plan(&m, 8);
+    let mut gcn_layers = 0;
+    for lp in &plan.layers {
+        if matches!(m.layers[lp.index], LayerSpec::BinGcn { .. }) {
+            gcn_layers += 1;
+            assert!(
+                !matches!(lp.scheme, Scheme::Spmm | Scheme::GcnFused),
+                "layer {} planned {} — the block-dense grid adjacency \
+                 must stay on a dense scheme",
+                lp.tag,
+                lp.scheme.name()
+            );
+        }
+    }
+    assert_eq!(gcn_layers, 2, "GCN-Grid carries two BinGcn layers");
+}
+
+#[test]
+fn gcn_engine_execution_matches_the_reference_forward() {
+    // the searched plan (sparse schemes on the power-law graph, dense
+    // on the grid) must stay bit-identical to the registry-less
+    // reference forward
+    let batch = 8;
+    for m in [gcn_powerlaw(), gcn_grid()] {
+        let mut rng = Rng::new(888);
+        let w = random_weights(&m, &mut rng);
+        let x: Vec<f32> = (0..batch * m.input.flat())
+            .map(|_| rng.next_f32() - 0.5)
+            .collect();
+        let want = forward(&m, &w, &x, batch);
+        let planner = Planner::new(&RTX2080TI);
+        let mut exec = EngineExecutor::new(m.clone(), &w, planner.plan(&m, batch))
+            .expect("engine executor");
+        assert_eq!(exec.forward(&x, batch), &want[..], "{}", m.name);
+    }
+}
+
+#[test]
+fn sparsity_fingerprints_separate_graphs_and_dense_models() {
+    // the plan schema's cache-invalidation key: dense models stamp
+    // "dense", graph models stamp their adjacency fingerprint, and
+    // different graphs never collide
+    let planner = Planner::new(&RTX2080TI);
+    let dense = planner.sparsity_fingerprint(&mnist_mlp());
+    let pl = planner.sparsity_fingerprint(&gcn_powerlaw());
+    let grid = planner.sparsity_fingerprint(&gcn_grid());
+    assert_eq!(dense, "dense");
+    assert_ne!(pl, "dense");
+    assert_ne!(grid, "dense");
+    assert_ne!(pl, grid, "distinct graphs must fingerprint differently");
+    // and the stamp lands in the searched plan itself
+    assert_eq!(planner.plan(&gcn_powerlaw(), 8).sparsity, pl);
+}
+
+#[test]
+fn gcn_model_serves_through_the_fleet_with_live_windows() {
+    let m = gcn_powerlaw();
+    let seed = 777u64;
+    let weights = random_weights(&m, &mut Rng::new(seed));
+
+    // ground truth: a direct EngineModel over the same weights
+    let planner = Planner::new(&RTX2080TI);
+    let mut reference = EngineModel::builder(&planner, &m, &weights)
+        .buckets(vec![8])
+        .build()
+        .expect("reference engine model");
+    let n = 12usize;
+    let mut rng = Rng::new(seed.wrapping_add(1));
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..m.input.flat()).map(|_| rng.next_f32() - 0.5).collect())
+        .collect();
+    let want: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| {
+            let mut padded = Vec::with_capacity(8 * m.input.flat());
+            for _ in 0..8 {
+                padded.extend_from_slice(x);
+            }
+            reference.run_batch(&padded, 8).expect("reference batch")
+                [..m.classes]
+                .to_vec()
+        })
+        .collect();
+
+    let mut fleet = Fleet::new();
+    let m2 = m.clone();
+    fleet.register(
+        "gcn",
+        FleetModelConfig { shards: 1, ..Default::default() },
+        move || {
+            let planner = Planner::new(&RTX2080TI);
+            let weights = random_weights(&m2, &mut Rng::new(seed));
+            Ok(Box::new(
+                EngineModel::builder(&planner, &m2, &weights)
+                    .buckets(vec![8])
+                    .build()?,
+            ) as Box<dyn BatchModel>)
+        },
+    );
+    let mut pending = Vec::new();
+    for x in &inputs {
+        pending.push(fleet.submit("gcn", x.clone()).expect("admitted"));
+    }
+    for (i, rx) in pending.into_iter().enumerate() {
+        let r = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("accepted GCN request answered");
+        assert_eq!(r.logits, want[i], "request {i} logits");
+    }
+    let snap = fleet.snapshot("gcn").expect("registered");
+    assert_eq!(snap.requests, n as u64);
+    assert!(
+        snap.windows.iter().any(|w| w.requests > 0 && w.rps > 0.0),
+        "no live windowed throughput right after serving GCN traffic"
+    );
+    fleet.shutdown();
+}

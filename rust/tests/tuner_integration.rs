@@ -259,10 +259,12 @@ fn live_feedback_replans_onto_the_faster_backend() {
                 "SBNN-32".to_string(),
                 SchemeCoeffs {
                     secs_per_word_op: 5e-10,
+                    secs_per_sparse_block: 0.0,
                     secs_per_byte: 0.0,
                     dispatch_secs: 1e-6,
                     secs_per_fp_op: 1e-10,
                     samples: 4,
+                    gcn_samples: 0,
                     rel_rmse: 0.0,
                 },
             ),
@@ -270,10 +272,12 @@ fn live_feedback_replans_onto_the_faster_backend() {
                 "SBNN-64".to_string(),
                 SchemeCoeffs {
                     secs_per_word_op: 1e-9,
+                    secs_per_sparse_block: 0.0,
                     secs_per_byte: 0.0,
                     dispatch_secs: 2e-6,
                     secs_per_fp_op: 1e-10,
                     samples: 4,
+                    gcn_samples: 0,
                     rel_rmse: 0.0,
                 },
             ),
